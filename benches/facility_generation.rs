@@ -1,0 +1,35 @@
+//! Facility-generation throughput: servers × hours of 250 ms trace per
+//! wall-second — the headline L3 performance number (EXPERIMENTS.md §Perf).
+
+use powertrace_sim::aggregate::Topology;
+use powertrace_sim::benchutil::{section, Bench};
+use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
+use powertrace_sim::coordinator::Generator;
+
+fn main() {
+    section("facility generation throughput");
+    let mut gen = match Generator::pjrt().or_else(|_| Generator::native()) {
+        Ok(g) => g,
+        Err(e) => {
+            println!("skipped (artifacts not built?): {e:#}");
+            return;
+        }
+    };
+    let id = gen.store.manifest.configs[0].clone();
+    let mut spec = ScenarioSpec::default_poisson(&id, 1.0);
+    spec.topology = Topology { rows: 1, racks_per_row: 3, servers_per_rack: 4 };
+    spec.server_config = ServerAssignment::Uniform(id.clone());
+    spec.workload = WorkloadSpec::Poisson { rate: 1.0 };
+    spec.horizon_s = 900.0;
+
+    let b = Bench { budget: std::time::Duration::from_secs(4), max_iters: 5 };
+    let dt = 0.25;
+    let r = b.run("facility(12 servers × 15min @250ms)", || {
+        gen.facility(&spec, dt, 0).unwrap().it_series().len()
+    });
+    let server_seconds = spec.topology.n_servers() as f64 * spec.horizon_s;
+    println!(
+        "  throughput: {:.0}x realtime per core (server-seconds generated / wall-second)",
+        server_seconds / r.mean.as_secs_f64()
+    );
+}

@@ -1,0 +1,40 @@
+//! Fig 1 / Fig 6 regeneration bench: per-server synthesis against a
+//! held-out measured trace, for ours and the LUT baseline.
+
+use powertrace_sim::benchutil::{section, Bench};
+use powertrace_sim::experiments::common::{EvalCtx, ACF_MAX_LAG};
+use powertrace_sim::metrics::fidelity;
+use powertrace_sim::util::cli::Args;
+
+fn main() {
+    section("fig1/fig6: server trace synthesis vs measured");
+    let args = Args::parse(["--backend".to_string(), "native".into()]);
+    let mut ctx = match EvalCtx::new(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("skipped (artifacts not built?): {e:#}");
+            return;
+        }
+    };
+    let id = ctx.config_ids()[0].clone();
+    let art = ctx.config(&id).unwrap();
+    let cls = ctx.classifier(&id).unwrap();
+    let measured = ctx.gen.store.load_all_measured(&id).unwrap();
+    let m = &measured[measured.len() / 2];
+
+    let b = Bench::default();
+    b.run(&format!("synth_like({id}, {} steps)", m.power_w.len()), || {
+        ctx.synth_like(&art, &cls, m, 1).unwrap()
+    });
+    b.run("lut_like(same trace)", || ctx.lut_like(&art, m, 1).unwrap());
+
+    let syn = ctx.synth_like(&art, &cls, m, 1).unwrap();
+    let f = fidelity(&m.power_w, &syn, ACF_MAX_LAG);
+    println!(
+        "  fidelity: KS {:.2} ACF R² {} NRMSE {:.2} |ΔE| {:.1}%",
+        f.ks,
+        f.acf_r2.map(|v| format!("{v:.2}")).unwrap_or("–".into()),
+        f.nrmse,
+        f.delta_energy.abs() * 100.0
+    );
+}

@@ -1,0 +1,33 @@
+//! Fig 4 regeneration bench: EM + BIC model selection over pooled measured
+//! power (the Rust states substrate).
+
+use powertrace_sim::artifacts::ArtifactStore;
+use powertrace_sim::benchutil::{section, Bench};
+use powertrace_sim::states::{select_k, EmOptions};
+use powertrace_sim::util::rng::Rng;
+
+fn main() {
+    section("fig4: GMM EM + BIC selection");
+    let store = match ArtifactStore::open_default() {
+        Ok(s) => s,
+        Err(e) => {
+            println!("skipped (artifacts not built?): {e:#}");
+            return;
+        }
+    };
+    let id = store.manifest.configs[0].clone();
+    let measured = store.load_all_measured(&id).unwrap();
+    let pooled: Vec<f32> = measured.iter().flat_map(|m| m.power_w.iter().copied()).collect();
+    println!("  pooled {} samples from {id}", pooled.len());
+
+    let b = Bench { budget: std::time::Duration::from_secs(3), max_iters: 5 };
+    let opts = EmOptions { n_init: 1, max_iters: 50, ..Default::default() };
+    b.run("select_k(1..=10)", || {
+        let mut rng = Rng::new(4);
+        let (_, curve) = select_k(&pooled, 1..=10, &opts, &mut rng).unwrap();
+        curve.best_k
+    });
+    let mut rng = Rng::new(4);
+    let (gmm, curve) = select_k(&pooled, 1..=10, &opts, &mut rng).unwrap();
+    println!("  selected K = {} (means {:?})", curve.best_k, gmm.mu.iter().map(|m| m.round()).collect::<Vec<_>>());
+}

@@ -1,0 +1,92 @@
+//! Hot-path micro-benchmarks — the instruments for the §Perf optimization
+//! pass (EXPERIMENTS.md §Perf). Measures every stage of the per-server
+//! pipeline separately plus the PJRT chunk execution.
+
+use powertrace_sim::benchutil::{section, Bench};
+use powertrace_sim::classifier::{NativeBiGru, StateClassifier};
+use powertrace_sim::classifier::native::BiGruWeights;
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::states::{fit_gmm, EmOptions};
+use powertrace_sim::surrogate::{features_from_intervals, simulate_queue, SurrogateParams};
+use powertrace_sim::synth::{sample_power, sample_states, SynthMode};
+use powertrace_sim::util::rng::Rng;
+use powertrace_sim::workload::{poisson_arrivals, LengthSampler};
+
+fn main() {
+    let b = Bench::default();
+    section("hot paths: per-server pipeline stages (10-min trace @250ms)");
+
+    let params = SurrogateParams {
+        alpha0: -2.0,
+        alpha1: 0.8,
+        sigma_ttft: 0.2,
+        mu_log_tbt: -4.0,
+        sigma_log_tbt: 0.2,
+    };
+    let lengths = LengthSampler::fixed(512, 256);
+    let mut rng = Rng::new(1);
+    let sched = poisson_arrivals(2.0, 600.0, &lengths, &mut rng);
+    let n_steps = 2400;
+
+    b.run("surrogate_queue(1200 req)", || {
+        let mut r = Rng::new(2);
+        simulate_queue(&sched, &params, 64, &mut r)
+    });
+    let mut r = Rng::new(2);
+    let intervals = simulate_queue(&sched, &params, 64, &mut r);
+    b.run("features(2400 steps)", || features_from_intervals(&intervals, n_steps, 0.25));
+    let feats = features_from_intervals(&intervals, n_steps, 0.25);
+    let x = feats.interleaved();
+
+    // Native classifier.
+    let mut wrng = Rng::new(3);
+    let n = powertrace_sim::classifier::N_PARAMS;
+    let flat: Vec<f32> = (0..n).map(|_| (wrng.normal() * 0.1) as f32).collect();
+    let native = NativeBiGru::new(BiGruWeights::new(64, 12, flat.clone()).unwrap());
+    b.run("classifier_native(2400 steps)", || native.probs(&x, n_steps).unwrap());
+
+    // Sampling.
+    let probs = native.probs(&x, n_steps).unwrap();
+    b.run("sample_states+power(2400)", || {
+        let mut r = Rng::new(4);
+        let states = sample_states(&probs, 12, &mut r);
+        let dict = powertrace_sim::states::StateDictionary {
+            pi: vec![1.0 / 12.0; 12],
+            mu: (0..12).map(|i| 100.0 + 50.0 * i as f64).collect(),
+            sigma: vec![8.0; 12],
+            phi: vec![0.0; 12],
+            y_min: 50.0,
+            y_max: 800.0,
+        };
+        sample_power(&states, &dict, SynthMode::Iid, &mut r)
+    });
+
+    // GMM EM (Fig 4 substrate).
+    let mut grng = Rng::new(5);
+    let ys: Vec<f32> = (0..10_000)
+        .map(|i| grng.normal_ms(if i % 3 == 0 { 100.0 } else { 300.0 }, 10.0) as f32)
+        .collect();
+    b.run("gmm_em_fit(k=8, 10k samples)", || {
+        let mut r = Rng::new(6);
+        fit_gmm(&ys, 8, &EmOptions { n_init: 1, max_iters: 40, ..Default::default() }, &mut r)
+            .unwrap()
+    });
+
+    // PJRT path (needs artifacts).
+    section("PJRT artifact execution");
+    match Generator::pjrt() {
+        Ok(mut gen) => {
+            let id = gen.store.manifest.configs[0].clone();
+            let art = gen.config(&id).unwrap();
+            let cls = gen.classifier(&art).unwrap();
+            b.run("classifier_pjrt(2400 steps, 512-chunks)", || {
+                cls.probs(&x, n_steps).unwrap()
+            });
+            b.run("full_server_trace_pjrt(10min)", || {
+                let mut r = Rng::new(7);
+                gen.server_trace(&art, &cls, &sched, 600.0, 0.25, &mut r).unwrap()
+            });
+        }
+        Err(e) => println!("pjrt benches skipped: {e:#}"),
+    }
+}

@@ -1,0 +1,27 @@
+//! Fig 11 regeneration bench: rack-pool generation + P95 row-power sweep
+//! (scaled down; `powertrace repro fig11` runs the full version).
+
+use powertrace_sim::benchutil::{section, Bench};
+use powertrace_sim::experiments::{common::EvalCtx, oversub};
+use powertrace_sim::util::cli::Args;
+
+fn main() {
+    section("fig11: oversubscription sweep (scaled)");
+    let args = Args::parse([
+        "--fast".to_string(),
+        "--backend".into(), "native".into(),
+        "--max-racks".into(), "10".into(),
+        "--horizon-h".into(), "0.25".into(),
+        "--limit-kw".into(), "120".into(),
+        "--dt".into(), "2".into(),
+    ]);
+    // Validate artifacts exist before timing.
+    if EvalCtx::new(&args).is_err() {
+        println!("skipped (artifacts not built?)");
+        return;
+    }
+    let b = Bench { budget: std::time::Duration::from_secs(2), max_iters: 2 };
+    b.run("oversub_sweep(10 racks × 15min @2s)", || {
+        oversub::run(&args).unwrap();
+    });
+}

@@ -1,0 +1,31 @@
+//! End-to-end bench for Table 1: held-out fidelity evaluation across all
+//! trained configurations (2 seeds in bench mode). Prints the table rows
+//! alongside the timing so the bench doubles as a regeneration harness.
+
+use powertrace_sim::benchutil::{section, Bench};
+use powertrace_sim::experiments::{common::EvalCtx, table1};
+use powertrace_sim::util::cli::Args;
+
+fn main() {
+    section("table1: held-out fidelity (all configs)");
+    let args = Args::parse(["--fast".to_string(), "--backend".into(), "native".into()]);
+    let mut ctx = match EvalCtx::new(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("skipped (artifacts not built?): {e:#}");
+            return;
+        }
+    };
+    let b = Bench { budget: std::time::Duration::from_secs(1), max_iters: 3 };
+    let mut rows = Vec::new();
+    b.run("table1_compute(all configs, 2 seeds)", || {
+        rows = table1::compute(&mut ctx).unwrap();
+        rows.len()
+    });
+    for r in &rows {
+        println!(
+            "  {:<12} KS {:.2}±{:.2}  ACF R² {:.2}±{:.2}  NRMSE {:.2}±{:.2}  |ΔE| {:.1}±{:.1}%",
+            r.model, r.ks.0, r.ks.1, r.acf_r2.0, r.acf_r2.1, r.nrmse.0, r.nrmse.1, r.de_pct.0, r.de_pct.1
+        );
+    }
+}

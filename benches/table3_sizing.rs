@@ -1,0 +1,39 @@
+//! Table 3 regeneration bench: a scaled facility study (diurnal workload)
+//! timed end-to-end, printing the sizing rows per method.
+
+use powertrace_sim::benchutil::{section, Bench};
+use powertrace_sim::experiments::{common::EvalCtx, facility};
+use powertrace_sim::util::cli::Args;
+
+fn main() {
+    section("table3: facility sizing study (scaled)");
+    let args = Args::parse([
+        "--fast".to_string(),
+        "--backend".into(), "native".into(),
+        "--servers".into(), "12".into(),
+        "--horizon-h".into(), "2".into(),
+        "--dt".into(), "2".into(),
+    ]);
+    let mut ctx = match EvalCtx::new(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("skipped (artifacts not built?): {e:#}");
+            return;
+        }
+    };
+    let b = Bench { budget: std::time::Duration::from_secs(2), max_iters: 3 };
+    b.run("facility_study(12 servers × 2h @2s)", || {
+        let study = facility::generate(&mut ctx, &args).unwrap();
+        let site = study.ours.facility_series(study.pue);
+        let st = powertrace_sim::metrics::PlanningStats::compute(&site, 2.0, 900.0);
+        println!(
+            "  ours peak {:.3} MW avg {:.3} MW PAR {:.2} ramp {:.3} MW (TDP {:.3} MW)",
+            st.peak_w / 1e6,
+            st.avg_w / 1e6,
+            st.peak_to_average,
+            st.max_ramp_w / 1e6,
+            study.tdp_w_site / 1e6
+        );
+        st.peak_w
+    });
+}

@@ -1,0 +1,70 @@
+//! Facility planning: run a small data hall under a diurnal Azure-like
+//! workload and extract the interconnection-facing quantities of the
+//! paper's Table 3 (peak, average, PAR, ramp, load factor).
+//!
+//!     cargo run --release --example facility_planning
+
+use powertrace_sim::aggregate::{resample, Topology};
+use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::metrics::PlanningStats;
+use powertrace_sim::workload::TrafficMode;
+
+fn main() -> anyhow::Result<()> {
+    let mut gen = match Generator::pjrt() {
+        Ok(g) => g,
+        Err(_) => Generator::native()?,
+    };
+
+    // A 2-row × 3-rack × 4-server hall (24 servers) for a quick run;
+    // scale `topology` up to the paper's 10×6×4 = 240 servers.
+    let mut spec = ScenarioSpec::default_poisson("llama70b_a100_tp8", 0.5);
+    spec.topology = Topology { rows: 2, racks_per_row: 3, servers_per_rack: 4 };
+    spec.server_config = ServerAssignment::Uniform("llama70b_a100_tp8".into());
+    spec.workload = WorkloadSpec::Diurnal {
+        base_rate: 0.5,
+        swing: 0.65,
+        peak_hour: 15.0,
+        burst_sigma: 0.35,
+        mode: TrafficMode::Independent,
+    };
+    spec.horizon_s = 6.0 * 3600.0; // 6 hours
+    spec.pue = 1.3;
+    spec.seed = 42;
+
+    let dt = 1.0;
+    let t0 = std::time::Instant::now();
+    let run = gen.facility(&spec, dt, 0)?;
+    let site = run.facility_series();
+    println!(
+        "generated {} servers × {:.0} h in {:.1} s",
+        spec.topology.n_servers(),
+        spec.horizon_s / 3600.0,
+        t0.elapsed().as_secs_f64()
+    );
+
+    let stats = PlanningStats::compute(&site, dt, 900.0);
+    let nameplate_mw = gen.cat.server_nameplate_w(gen.cat.config("llama70b_a100_tp8")?)
+        * spec.topology.n_servers() as f64
+        * spec.pue
+        / 1e6;
+    println!("-- interconnection view (PCC, PUE {}) --", spec.pue);
+    println!("  nameplate (TDP)     : {nameplate_mw:.3} MW");
+    println!("  peak facility power : {:.3} MW", stats.peak_w / 1e6);
+    println!("  average power       : {:.3} MW", stats.avg_w / 1e6);
+    println!("  peak-to-average     : {:.2}", stats.peak_to_average);
+    println!("  max 15-min ramp     : {:.3} MW", stats.max_ramp_w / 1e6);
+    println!("  load factor         : {:.2}", stats.load_factor);
+    println!(
+        "  nameplate overstates the interconnection need by {:.0}%",
+        (nameplate_mw * 1e6 / stats.peak_w - 1.0) * 100.0
+    );
+
+    // 15-minute load shape a utility would consume.
+    let shape = resample(&site, dt, 900.0);
+    println!("-- 15-min load shape (MW) --");
+    for (i, p) in shape.iter().enumerate() {
+        println!("  t+{:>3} min: {:.3}", i * 15, p / 1e6);
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Oversubscription: how many racks fit under a row power limit when
+//! provisioning with generated traces instead of nameplate TDP
+//! (paper §4.4 / Fig 11, scaled down for a quick run).
+//!
+//!     cargo run --release --example oversubscription
+
+use powertrace_sim::aggregate::Topology;
+use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::metrics::percentile;
+use powertrace_sim::util::rng::Rng;
+use powertrace_sim::workload::TrafficMode;
+
+fn main() -> anyhow::Result<()> {
+    let mut gen = match Generator::pjrt() {
+        Ok(g) => g,
+        Err(_) => Generator::native()?,
+    };
+    let id = "llama70b_a100_tp8";
+    let art = gen.config(id)?;
+    let cls = gen.classifier(&art)?;
+    let cfg = gen.cat.config(id)?.clone();
+
+    let limit_kw = 300.0;
+    let servers_per_rack = 4;
+    let max_racks = 40;
+    let horizon_s = 3600.0;
+    let dt = 1.0;
+
+    let rack_tdp_kw = gen.cat.server_nameplate_w(&cfg) * servers_per_rack as f64 / 1e3;
+    let nameplate_racks = (limit_kw / rack_tdp_kw).floor() as usize;
+    println!("row limit {limit_kw} kW; rack nameplate {rack_tdp_kw:.1} kW → {nameplate_racks} racks by TDP");
+
+    let mut spec = ScenarioSpec::default_poisson(id, 0.5);
+    spec.horizon_s = horizon_s;
+    spec.server_config = ServerAssignment::Uniform(id.into());
+    spec.topology = Topology { rows: 1, racks_per_row: max_racks, servers_per_rack };
+    spec.workload = WorkloadSpec::Diurnal {
+        base_rate: 0.5,
+        swing: 0.65,
+        peak_hour: 0.5, // evaluate at peak-demand hours
+        burst_sigma: 0.35,
+        mode: TrafficMode::Independent,
+    };
+
+    let n_steps = (horizon_s / dt) as usize;
+    let base_rng = Rng::new(3);
+    let mut row = vec![0.0f64; n_steps];
+    let mut max_ok = 0;
+    for rack in 0..max_racks {
+        for srv in 0..servers_per_rack {
+            let s = rack * servers_per_rack + srv;
+            let sched = gen.schedule_for(&spec, s, &base_rng)?;
+            let mut rng = base_rng.fork(s as u64);
+            let tr = gen.server_trace(&art, &cls, &sched, horizon_s, dt, &mut rng)?;
+            for (o, &p) in row.iter_mut().zip(&tr.power_w) {
+                *o += p as f64 + 1000.0; // + non-GPU IT power
+            }
+        }
+        let series: Vec<f32> = row.iter().map(|&x| (x / 1e3) as f32).collect();
+        let p95 = percentile(&series, 95.0);
+        if p95 <= limit_kw {
+            max_ok = rack + 1;
+        } else {
+            println!("rack {:>2}: P95 = {p95:.0} kW — limit exceeded, stopping", rack + 1);
+            break;
+        }
+        if (rack + 1) % 5 == 0 {
+            println!("rack {:>2}: P95 = {p95:.0} kW", rack + 1);
+        }
+    }
+    println!(
+        "trace-based provisioning fits {max_ok} racks vs {nameplate_racks} by nameplate ({}x density)",
+        max_ok as f64 / nameplate_racks.max(1) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: generate a server-level LLM-inference power trace and print
+//! planner-facing statistics.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` (trains per-configuration models once).
+
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::metrics::{acf, PlanningStats};
+use powertrace_sim::util::rng::Rng;
+use powertrace_sim::workload::{poisson_arrivals, LengthSampler};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Open the generator. `pjrt()` executes the AOT-compiled BiGRU
+    //    artifact through the XLA PJRT CPU client; `native()` is the
+    //    pure-Rust fallback with identical numerics.
+    let mut gen = match Generator::pjrt() {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("pjrt unavailable ({e:#}); using native backend");
+            Generator::native()?
+        }
+    };
+
+    // 2. Pick a serving configuration from the measured campaign.
+    let art = gen.config("llama70b_a100_tp8")?;
+    let cls = gen.classifier(&art)?;
+
+    // 3. Describe the workload: Poisson arrivals, ShareGPT-like lengths.
+    let profile = gen.cat.datasets["sharegpt"].clone();
+    let lengths = LengthSampler::from_profile(&profile, 1.0);
+    let mut rng = Rng::new(7);
+    let horizon_s = 600.0;
+    let schedule = poisson_arrivals(1.0, horizon_s, &lengths, &mut rng);
+    println!("workload: {} requests over {horizon_s} s", schedule.len());
+
+    // 4. Generate the power trace at the paper's 250 ms resolution.
+    let trace = gen.server_trace(&art, &cls, &schedule, horizon_s, 0.25, &mut rng)?;
+
+    // 5. Planner-facing stats.
+    let stats = PlanningStats::compute(&trace.power_w, 0.25, 60.0);
+    println!(
+        "server power: peak {:.0} W, avg {:.0} W, peak-to-average {:.2}, max 1-min ramp {:.0} W",
+        stats.peak_w, stats.avg_w, stats.peak_to_average, stats.max_ramp_w
+    );
+    let rho = acf(&trace.power_w, 4);
+    println!("autocorrelation ρ(1..4) = {:.2} {:.2} {:.2} {:.2}", rho[1], rho[2], rho[3], rho[4]);
+    println!(
+        "occupancy: max A_t = {:.0}, mean A_t = {:.1}",
+        trace.a.iter().cloned().fold(0.0f32, f32::max),
+        trace.a.iter().sum::<f32>() / trace.a.len() as f32
+    );
+    Ok(())
+}

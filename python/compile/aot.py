@@ -1,0 +1,225 @@
+"""AOT build orchestrator — `make artifacts` entry point.
+
+Runs the full Python build path once:
+
+1. lowers the L2 BiGRU (with the L1 Pallas GRU kernel on its scan path) to
+   HLO **text** (`bigru_fwd.hlo.txt`) and the GMM labeling kernel to
+   `gmm_label.hlo.txt` — text, not `.serialize()`: jax ≥ 0.5 emits protos
+   with 64-bit ids that xla_extension 0.5.1 rejects (see
+   /opt/xla-example/README.md);
+2. runs the synthetic measurement campaign (testbed) for every catalog
+   configuration: rates × reps Poisson traces, rep-level split;
+3. fits GMM + BIC, trains the BiGRU, calibrates the surrogate;
+4. exports per-config JSON artifacts, held-out measured test traces, and
+   the manifest.
+
+Environment knobs (used by CI/tests, not the default build):
+  POWERTRACE_FAST=1          smaller campaign + fewer train steps
+  POWERTRACE_CONFIGS=a,b     build only the named configurations
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import testbed, train
+from .catalog import load_catalog
+from .datasets import out_mult_for, poisson_schedule
+from .kernels.gmm import gmm_posterior_pallas
+from .model import HIDDEN, K_MAX, bigru_export, flat_param_count
+
+CHUNK_T = 512
+CHUNK_HALO = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_hlo(out_dir: str) -> None:
+    p_spec = jax.ShapeDtypeStruct((flat_param_count(),), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((CHUNK_T, 2), jnp.float32)
+    lowered = jax.jit(bigru_export).lower(p_spec, x_spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "bigru_fwd.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)} chars)")
+
+    def gmm_label(pi, mu, sigma, y):
+        return gmm_posterior_pallas(y, pi, mu, sigma)
+
+    k_spec = jax.ShapeDtypeStruct((K_MAX,), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((CHUNK_T,), jnp.float32)
+    lowered = jax.jit(gmm_label).lower(k_spec, k_spec, k_spec, y_spec)
+    path = os.path.join(out_dir, "gmm_label.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"[aot] wrote {path}")
+
+
+def run_campaign(cat, cfg, fast: bool, seed: int):
+    """Measured-trace campaign for one configuration (rep-major order so a
+    rep-level split covers every arrival rate)."""
+    camp = cat.campaign
+    rates = camp.rates[1::2] if fast else camp.rates
+    reps = 3 if fast else camp.reps
+    horizon = 120.0 if fast else camp.trace_seconds
+    dataset_keys = sorted(cat.datasets.keys())
+    out_mult = out_mult_for(cat, cfg)
+
+    traces, schedules, meta = [], [], []
+    for rep in range(reps):
+        for ri, rate in enumerate(rates):
+            rng = np.random.default_rng(seed * 1_000_003 + rep * 101 + ri)
+            profile = cat.datasets[dataset_keys[(rep + ri) % len(dataset_keys)]]
+            sched = poisson_schedule(rate, horizon, profile, out_mult, rng)
+            tr = testbed.simulate(cat, cfg, sched, horizon, rng)
+            traces.append(tr)
+            schedules.append(sched)
+            meta.append({"rate": rate, "rep": rep})
+    n_rates = len(rates)
+    n = len(traces)
+    test_idx = list(range(n - n_rates, n))              # last rep → test
+    val_idx = list(range(n - 2 * n_rates, n - n_rates))  # second-to-last → val
+    train_idx = [i for i in range(n) if i not in test_idx and i not in val_idx]
+    return traces, schedules, meta, train_idx, val_idx, test_idx
+
+
+def export_config(out_dir, cat, cfg, fast: bool):
+    t0 = time.time()
+    seed = abs(hash(cfg.id)) % (2**31)
+    traces, schedules, meta, train_idx, val_idx, test_idx = run_campaign(
+        cat, cfg, fast, seed
+    )
+    is_moe = cat.model_of(cfg).kind == "moe"
+    n_steps = int(os.environ.get("POWERTRACE_TRAIN_STEPS", "80" if fast else "320"))
+    result = train.train_config(
+        [t.power_w for t in traces],
+        [t.a_measured for t in traces],
+        is_moe=is_moe,
+        seed=seed,
+        n_steps=n_steps,
+        train_idx=train_idx,
+        val_idx=val_idx,
+    )
+
+    # Surrogate calibration from pooled training-trace durations.
+    pooled = {"n_in": [], "prefill_s": [], "n_out": [], "decode_s": []}
+    for i in train_idx:
+        for key in pooled:
+            pooled[key].extend(traces[i].durations[key])
+    surrogate = train.calibrate_surrogate(pooled)
+
+    # Per-config artifact JSON (format: DESIGN.md §6 / rust artifacts mod).
+    pi = result.gmm.pi / result.gmm.pi.sum()
+    phi = np.clip(result.phi, 0.0, 0.99)
+    train_mean = float(np.mean(np.concatenate([traces[i].power_w for i in train_idx])))
+    art = {
+        "config_id": cfg.id,
+        "k": int(result.k),
+        "train_power_mean_w": train_mean,
+        "states": {
+            "pi": [float(x) for x in pi],
+            "mu": [float(x) for x in result.gmm.mu],
+            "sigma": [float(max(x, 1e-3)) for x in result.gmm.sigma],
+            "phi": [float(x) for x in phi],
+            "y_min": result.y_min,
+            "y_max": result.y_max,
+        },
+        "mode": "ar1" if is_moe else "iid",
+        "surrogate": surrogate,
+        "weights": [float(x) for x in result.flat],
+        "train_meta": {
+            "val_accuracy": result.val_accuracy,
+            "final_loss": result.final_loss,
+            "bic_ks": result.bic_ks,
+            "bic_vals": result.bic_vals,
+            "n_train_traces": len(train_idx),
+            "seed": seed,
+        },
+    }
+    cfg_dir = os.path.join(out_dir, "configs")
+    os.makedirs(cfg_dir, exist_ok=True)
+    with open(os.path.join(cfg_dir, f"{cfg.id}.json"), "w") as f:
+        json.dump(art, f)
+
+    # Held-out measured test traces (+ their schedules) for Rust evaluation.
+    m_dir = os.path.join(out_dir, "measured", cfg.id)
+    os.makedirs(m_dir, exist_ok=True)
+    for i in test_idx:
+        tr, sched, mt = traces[i], schedules[i], meta[i]
+        doc = {
+            "rate": mt["rate"],
+            "rep": mt["rep"],
+            "dt_s": tr.dt_s,
+            "power_w": [round(float(x), 3) for x in tr.power_w],
+            "a": [round(float(x), 4) for x in tr.a_measured],
+            "schedule": sched,
+            "durations": {
+                "n_in": [int(x) for x in tr.durations["n_in"]],
+                "prefill_s": [round(float(x), 5) for x in tr.durations["prefill_s"]],
+                "n_out": [int(x) for x in tr.durations["n_out"]],
+                "decode_s": [round(float(x), 5) for x in tr.durations["decode_s"]],
+            },
+        }
+        name = f"r{mt['rate']:g}_rep{mt['rep']}.json"
+        with open(os.path.join(m_dir, name), "w") as f:
+            json.dump(doc, f)
+
+    print(
+        f"[aot] {cfg.id}: K={result.k} val_acc={result.val_accuracy:.3f} "
+        f"loss={result.final_loss:.4f} ({time.time() - t0:.1f}s)"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-hlo", action="store_true")
+    args = ap.parse_args()
+
+    fast = os.environ.get("POWERTRACE_FAST") == "1"
+    only = os.environ.get("POWERTRACE_CONFIGS")
+    only = set(only.split(",")) if only else None
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    cat = load_catalog()
+
+    if not args.skip_hlo:
+        export_hlo(out_dir)
+
+    config_ids = []
+    for cfg in cat.configs:
+        if only and cfg.id not in only:
+            continue
+        export_config(out_dir, cat, cfg, fast)
+        config_ids.append(cfg.id)
+
+    manifest = {
+        "chunk": {"t": CHUNK_T, "halo": CHUNK_HALO},
+        "k_max": K_MAX,
+        "hidden": HIDDEN,
+        "hlo": "bigru_fwd.hlo.txt",
+        "configs": config_ids,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {len(config_ids)} configs → {out_dir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

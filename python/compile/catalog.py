@@ -1,0 +1,135 @@
+"""Catalog loader — reads the shared `data/catalog.json` (single source of
+truth with the Rust side; see DESIGN.md §3)."""
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List
+
+
+def repo_root() -> str:
+    env = os.environ.get("POWERTRACE_ROOT")
+    if env:
+        return env
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.normpath(os.path.join(here, "..", ".."))
+
+
+@dataclass(frozen=True)
+class Gpu:
+    key: str
+    name: str
+    tdp_w: float
+    idle_w: float
+    perf: float
+
+
+@dataclass(frozen=True)
+class Model:
+    key: str
+    name: str
+    params_b: float
+    active_b: float
+    kind: str  # "dense" | "moe"
+    reasoning: bool
+
+
+@dataclass(frozen=True)
+class DatasetProfile:
+    key: str
+    in_median: float
+    in_sigma: float
+    out_median: float
+    out_sigma: float
+
+
+@dataclass(frozen=True)
+class Truth:
+    tbt0_s: float
+    kappa_dec: float
+    c_pre_s: float
+    gamma_pre: float
+    kappa_pre: float
+    a0: float
+    dec_min_frac: float
+    dec_max_frac: float
+    pre_frac: float
+    mixed_bonus_frac: float
+    noise_w: float
+    meas_noise_w: float
+    ar_phi: float
+    ar_sigma_w: float
+
+
+@dataclass(frozen=True)
+class ServerConfig:
+    id: str
+    model: str
+    gpu: str
+    tp: int
+    n_gpus_server: int
+    truth: Truth
+
+
+@dataclass(frozen=True)
+class Campaign:
+    rates: List[float]
+    reps: int
+    trace_seconds: float
+    dt_s: float
+    max_batch: int
+    reasoning_out_mult: float
+
+
+@dataclass(frozen=True)
+class Catalog:
+    gpus: Dict[str, Gpu]
+    models: Dict[str, Model]
+    datasets: Dict[str, DatasetProfile]
+    configs: List[ServerConfig]
+    campaign: Campaign
+    p_base_w: float
+    pue: float
+
+    def config(self, cid: str) -> ServerConfig:
+        for c in self.configs:
+            if c.id == cid:
+                return c
+        raise KeyError(f"unknown config '{cid}'")
+
+    def gpu_of(self, cfg: ServerConfig) -> Gpu:
+        return self.gpus[cfg.gpu]
+
+    def model_of(self, cfg: ServerConfig) -> Model:
+        return self.models[cfg.model]
+
+
+def load_catalog(path: str = None) -> Catalog:
+    if path is None:
+        path = os.path.join(repo_root(), "data", "catalog.json")
+    with open(path) as f:
+        raw = json.load(f)
+    gpus = {k: Gpu(key=k, **v) for k, v in raw["gpus"].items()}
+    models = {k: Model(key=k, **v) for k, v in raw["models"].items()}
+    datasets = {k: DatasetProfile(key=k, **v) for k, v in raw["datasets"].items()}
+    configs = [
+        ServerConfig(
+            id=c["id"],
+            model=c["model"],
+            gpu=c["gpu"],
+            tp=c["tp"],
+            n_gpus_server=c["n_gpus_server"],
+            truth=Truth(**c["truth"]),
+        )
+        for c in raw["configs"]
+    ]
+    camp = Campaign(**raw["campaign"])
+    return Catalog(
+        gpus=gpus,
+        models=models,
+        datasets=datasets,
+        configs=configs,
+        campaign=camp,
+        p_base_w=raw["site"]["p_base_w"],
+        pue=raw["site"]["pue"],
+    )

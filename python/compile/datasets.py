@@ -1,0 +1,37 @@
+"""Request-length sampling and Poisson arrival schedules for the synthetic
+measurement campaign (mirror of `rust/src/workload/`)."""
+
+import numpy as np
+
+from .catalog import Catalog, DatasetProfile, ServerConfig
+
+
+def sample_lengths(profile: DatasetProfile, out_mult: float, n: int, rng: np.random.Generator):
+    """Lognormal token lengths; (n_in, n_out) arrays of ints >= 1."""
+    n_in = np.exp(rng.normal(np.log(profile.in_median), profile.in_sigma, size=n))
+    n_out = np.exp(rng.normal(np.log(profile.out_median), profile.out_sigma, size=n)) * out_mult
+    n_in = np.clip(np.round(n_in), 1, 32_768).astype(np.int64)
+    n_out = np.clip(np.round(n_out), 1, 16_384).astype(np.int64)
+    return n_in, n_out
+
+
+def poisson_schedule(rate: float, horizon_s: float, profile: DatasetProfile,
+                     out_mult: float, rng: np.random.Generator):
+    """Poisson(rate) arrivals over [0, horizon): list of (t, n_in, n_out)."""
+    ts = []
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= horizon_s:
+            break
+        ts.append(t)
+    n = len(ts)
+    n_in, n_out = sample_lengths(profile, out_mult, n, rng)
+    return [
+        {"t": float(ts[i]), "n_in": int(n_in[i]), "n_out": int(n_out[i])}
+        for i in range(n)
+    ]
+
+
+def out_mult_for(cat: Catalog, cfg: ServerConfig) -> float:
+    return cat.campaign.reasoning_out_mult if cat.model_of(cfg).reasoning else 1.0

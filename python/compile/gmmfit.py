@@ -1,0 +1,126 @@
+"""EM fitting of 1-D Gaussian mixtures with BIC model selection
+(paper §3.2 / Fig. 4). Vectorized numpy; mirrors `rust/src/states/em.rs`
+(which is cross-checked by integration tests on planted mixtures)."""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Gmm:
+    pi: np.ndarray     # [K]
+    mu: np.ndarray     # [K] (ascending)
+    sigma: np.ndarray  # [K]
+
+    @property
+    def k(self) -> int:
+        return len(self.pi)
+
+    def log_likelihood(self, y: np.ndarray) -> float:
+        return float(np.sum(_logsumexp(self._log_joint(y), axis=1)))
+
+    def _log_joint(self, y: np.ndarray) -> np.ndarray:
+        y = y[:, None]
+        return (
+            np.log(np.maximum(self.pi, 1e-300))[None, :]
+            - 0.5 * ((y - self.mu[None, :]) / self.sigma[None, :]) ** 2
+            - np.log(self.sigma)[None, :]
+            - 0.5 * np.log(2 * np.pi)
+        )
+
+    def labels(self, y: np.ndarray) -> np.ndarray:
+        """Hard state labels by posterior maximization (paper Eq. 2)."""
+        return np.argmax(self._log_joint(y), axis=1)
+
+    def bic(self, y: np.ndarray) -> float:
+        n_params = 3 * self.k - 1
+        return n_params * np.log(len(y)) - 2.0 * self.log_likelihood(y)
+
+
+def _logsumexp(x, axis):
+    m = np.max(x, axis=axis, keepdims=True)
+    return (m + np.log(np.sum(np.exp(x - m), axis=axis, keepdims=True))).squeeze(axis)
+
+
+def fit_gmm(y: np.ndarray, k: int, rng: np.random.Generator,
+            n_init: int = 3, max_iters: int = 200, tol: float = 1e-6) -> Gmm:
+    """Fit a K-component 1-D GMM by EM with k-means++-style seeding."""
+    assert len(y) >= 10 * k, f"need >= {10*k} samples for k={k}"
+    var = float(np.var(y))
+    var_floor = max(var * 1e-4, 1e-9)
+
+    best = None
+    best_ll = -np.inf
+    for _ in range(n_init):
+        mu = _seed_means(y, k, rng)
+        pi = np.full(k, 1.0 / k)
+        sigma = np.full(k, max(np.sqrt(var / k), np.sqrt(var_floor)))
+        prev_ll = -np.inf
+        for _ in range(max_iters):
+            g = Gmm(pi=pi, mu=mu, sigma=sigma)
+            lj = g._log_joint(y)
+            m = np.max(lj, axis=1, keepdims=True)
+            r = np.exp(lj - m)
+            r /= np.sum(r, axis=1, keepdims=True)
+            nk = np.maximum(r.sum(axis=0), 1e-12)
+            pi = nk / len(y)
+            mu = (r * y[:, None]).sum(axis=0) / nk
+            v = (r * (y[:, None] - mu[None, :]) ** 2).sum(axis=0) / nk
+            sigma = np.sqrt(np.maximum(v, var_floor))
+            ll = float(np.sum(m.squeeze(1) + np.log(np.sum(np.exp(lj - m), axis=1)))) / len(y)
+            if abs(ll - prev_ll) < tol:
+                prev_ll = ll
+                break
+            prev_ll = ll
+        if prev_ll > best_ll:
+            best_ll = prev_ll
+            best = Gmm(pi=pi, mu=mu, sigma=sigma)
+    order = np.argsort(best.mu)
+    return Gmm(pi=best.pi[order], mu=best.mu[order], sigma=best.sigma[order])
+
+
+def _seed_means(y: np.ndarray, k: int, rng: np.random.Generator) -> np.ndarray:
+    means = [float(y[rng.integers(len(y))])]
+    sub = y[:: max(len(y) // 2048, 1)]
+    while len(means) < k:
+        d2 = np.min((sub[:, None] - np.asarray(means)[None, :]) ** 2, axis=1)
+        total = d2.sum()
+        if total <= 0:
+            means.append(float(sub[rng.integers(len(sub))]))
+            continue
+        means.append(float(sub[rng.choice(len(sub), p=d2 / total)]))
+    return np.asarray(sorted(means))
+
+
+def select_k(y: np.ndarray, k_range, rng: np.random.Generator,
+             plateau_frac: float = 0.02) -> Tuple[Gmm, List[int], List[float]]:
+    """Fit each K, return (best fit, ks, bics) with the paper's plateau rule
+    (smallest K within `plateau_frac` of the BIC span above the minimum)."""
+    ks, bics, fits = [], [], []
+    for k in k_range:
+        g = fit_gmm(y, k, rng)
+        ks.append(k)
+        bics.append(g.bic(y))
+        fits.append(g)
+    lo, hi = min(bics), max(bics)
+    thresh = lo + plateau_frac * max(hi - lo, 1e-12)
+    idx = next(i for i, b in enumerate(bics) if b <= thresh)
+    return fits[idx], ks, bics
+
+
+def estimate_ar1_phi(y: np.ndarray, labels: np.ndarray, gmm: Gmm) -> np.ndarray:
+    """Per-state AR(1) coefficient from consecutive same-state samples
+    (paper Eq. 9: φ_k estimated from segments in the training data)."""
+    phis = np.zeros(gmm.k)
+    for k in range(gmm.k):
+        mask = (labels[:-1] == k) & (labels[1:] == k)
+        if mask.sum() < 20:
+            continue
+        a = y[:-1][mask] - gmm.mu[k]
+        b = y[1:][mask] - gmm.mu[k]
+        denom = float(np.sqrt(np.sum(a * a) * np.sum(b * b)))
+        if denom > 1e-12:
+            phis[k] = float(np.clip(np.sum(a * b) / denom, 0.0, 0.99))
+    return phis

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: GMM posterior responsibilities (paper Eq. 2).
+
+Grid over blocks of samples; per block the kernel evaluates K Gaussian
+log-densities, applies the mixture priors, and normalizes with a stable
+softmax — one VMEM round trip per sample block. Used by the build-time
+labeling path and exported as `gmm_label.hlo.txt` for runtime sanity
+checks from Rust.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 128
+
+
+def _gmm_kernel(y_ref, pi_ref, mu_ref, sigma_ref, out_ref):
+    y = y_ref[...]          # [Nt, 1]
+    pi = pi_ref[...]        # [1, K]
+    mu = mu_ref[...]        # [1, K]
+    sigma = sigma_ref[...]  # [1, K]
+    log_prob = (
+        jnp.log(jnp.maximum(pi, 1e-30))
+        - 0.5 * ((y - mu) / sigma) ** 2
+        - jnp.log(sigma)
+    )  # [Nt, K]
+    m = jnp.max(log_prob, axis=1, keepdims=True)
+    p = jnp.exp(log_prob - m)
+    out_ref[...] = p / jnp.sum(p, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gmm_posterior_pallas(y, pi, mu, sigma):
+    """Pallas version of `ref.gmm_posterior_ref` (same signature)."""
+    n = y.shape[0]
+    k = pi.shape[0]
+    block_n = min(BLOCK_N, n)
+    grid = (pl.cdiv(n, block_n),)
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(y.reshape(n, 1), pi.reshape(1, k), mu.reshape(1, k), sigma.reshape(1, k))

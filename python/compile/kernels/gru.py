@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: fused GRU hidden-state update.
+
+The kernel fuses the recurrent matmul `h · W_hhᵀ` (the MXU work) with the
+gate nonlinearities (VPU work) so the hidden state makes one round trip
+through VMEM per step instead of three.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation / §9): the batch dimension is
+tiled through VMEM in blocks of `BLOCK_B` rows; per block the resident set
+is W_hhᵀ (64×192×4 B = 48 KiB) + h tile (≤64×64×4 B = 16 KiB) + gi tile
+(≤64×192×4 B = 48 KiB) ≈ 112 KiB ≪ 16 MiB VMEM, and the matmul is a
+[B,64]×[64,192] MXU op. `interpret=True` is mandatory here: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile (rows of h processed per grid step).
+BLOCK_B = 64
+
+
+def _gru_kernel(h_ref, gi_ref, whht_ref, bhh_ref, out_ref):
+    h = h_ref[...]          # [Bt, H]
+    gi = gi_ref[...]        # [Bt, 3H]
+    w = whht_ref[...]       # [H, 3H]
+    b = bhh_ref[...]        # [1, 3H]
+    hd = h.shape[-1]
+    gh = jnp.dot(h, w, preferred_element_type=jnp.float32) + b
+    r = jnp.reciprocal(1.0 + jnp.exp(-(gi[:, :hd] + gh[:, :hd])))
+    z = jnp.reciprocal(1.0 + jnp.exp(-(gi[:, hd:2 * hd] + gh[:, hd:2 * hd])))
+    n = jnp.tanh(gi[:, 2 * hd:] + r * gh[:, 2 * hd:])
+    out_ref[...] = (1.0 - z) * n + z * h
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gru_cell_pallas(h, gi, w_hh_t, b_hh):
+    """Pallas version of `ref.gru_cell_ref` (same signature/semantics)."""
+    bsz, hd = h.shape
+    g3 = 3 * hd
+    block_b = min(BLOCK_B, bsz)
+    grid = (pl.cdiv(bsz, block_b),)
+    return pl.pallas_call(
+        _gru_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, hd), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, g3), lambda i: (i, 0)),
+            pl.BlockSpec((hd, g3), lambda i: (0, 0)),
+            pl.BlockSpec((1, g3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hd), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(h, gi, w_hh_t, b_hh.reshape(1, g3))

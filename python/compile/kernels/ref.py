@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the L1 Pallas kernels (the correctness baseline the
+pytest + hypothesis suites compare against) and the reference cell used by
+the training loop (interpret-mode Pallas is too slow for training; the two
+paths are asserted numerically identical by tests)."""
+
+import jax.numpy as jnp
+
+
+def gru_cell_ref(h, gi, w_hh_t, b_hh):
+    """One GRU hidden-state update (torch gate order r, z, n).
+
+    h      : [B, H]   previous hidden state
+    gi     : [B, 3H]  input projection W_ih·x + b_ih (precomputed per step)
+    w_hh_t : [H, 3H]  transposed recurrent weights (MXU-friendly layout)
+    b_hh   : [3H]
+    returns h' : [B, H]
+    """
+    hd = h.shape[-1]
+    gh = jnp.dot(h, w_hh_t) + b_hh  # [B, 3H]
+    r = jnp.reciprocal(1.0 + jnp.exp(-(gi[:, :hd] + gh[:, :hd])))
+    z = jnp.reciprocal(1.0 + jnp.exp(-(gi[:, hd:2 * hd] + gh[:, hd:2 * hd])))
+    n = jnp.tanh(gi[:, 2 * hd:] + r * gh[:, 2 * hd:])
+    return (1.0 - z) * n + z * h
+
+
+def gmm_posterior_ref(y, pi, mu, sigma):
+    """GMM posterior responsibilities (paper Eq. 2 before the argmax).
+
+    y : [N]; pi, mu, sigma : [K]  →  [N, K] rows summing to 1.
+    """
+    y = y[:, None]
+    log_prob = (
+        jnp.log(jnp.maximum(pi, 1e-30))[None, :]
+        - 0.5 * ((y - mu[None, :]) / sigma[None, :]) ** 2
+        - jnp.log(sigma)[None, :]
+    )
+    m = jnp.max(log_prob, axis=1, keepdims=True)
+    p = jnp.exp(log_prob - m)
+    return p / jnp.sum(p, axis=1, keepdims=True)

@@ -1,0 +1,164 @@
+"""L2 JAX model: the BiGRU temporal state classifier (paper §3.2, Eq. 3).
+
+Operates on a single flat f32 parameter vector so the AOT-compiled HLO can
+serve every configuration with weights as a runtime input (layout in
+DESIGN.md §6; identical to `rust/src/classifier/native.rs`):
+
+    per direction (fwd, bwd): W_ih [3H,2] · b_ih [3H] · W_hh [3H,H] · b_hh [3H]
+    then W_head [K, 2H] · b_head [K]
+
+The log1p feature transform is baked into the model so callers pass raw
+`(A_t, ΔA_t)` features on both the Python and Rust sides.
+
+The per-step recurrent update is the L1 Pallas kernel
+(`kernels.gru.gru_cell_pallas`); training uses the numerically identical
+pure-jnp reference cell for speed (equivalence is pinned by tests).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gru import gru_cell_pallas
+from .kernels.ref import gru_cell_ref
+
+HIDDEN = 64
+K_MAX = 12
+
+
+def scale_features(x):
+    """Feature transform baked into the model (keep in sync with
+    `rust/src/classifier/native.rs::scale_features`): `log1p` compresses
+    the saturating tail of the occupancy→power curve while keeping
+    low-occupancy levels (idle vs A=1 vs A=2) well separated.
+
+        A_t  → log1p(A_t) / 2
+        ΔA_t → sign(ΔA_t) · log1p(|ΔA_t|) / 2
+    """
+    a = x[..., 0:1]
+    da = x[..., 1:2]
+    import jax.numpy as _jnp
+
+    fa = _jnp.log1p(_jnp.maximum(a, 0.0)) * 0.5
+    fda = _jnp.sign(da) * _jnp.log1p(_jnp.abs(da)) * 0.5
+    return _jnp.concatenate([fa, fda], axis=-1)
+
+
+def flat_param_count(h: int = HIDDEN, k: int = K_MAX) -> int:
+    return 2 * (3 * h * 2 + 3 * h + 3 * h * h + 3 * h) + k * 2 * h + k
+
+
+def unpack_params(flat, h: int = HIDDEN, k: int = K_MAX):
+    """Flat vector → pytree of weight views (transposes precomputed)."""
+    block = 3 * h * 2 + 3 * h + 3 * h * h + 3 * h
+    dirs = []
+    o = 0
+    for _ in range(2):
+        w_ih = flat[o:o + 3 * h * 2].reshape(3 * h, 2)
+        o += 3 * h * 2
+        b_ih = flat[o:o + 3 * h]
+        o += 3 * h
+        w_hh = flat[o:o + 3 * h * h].reshape(3 * h, h)
+        o += 3 * h * h
+        b_hh = flat[o:o + 3 * h]
+        o += 3 * h
+        dirs.append({"w_ih": w_ih, "b_ih": b_ih, "w_hh_t": w_hh.T, "b_hh": b_hh})
+    w_head = flat[o:o + k * 2 * h].reshape(k, 2 * h)
+    o += k * 2 * h
+    b_head = flat[o:o + k]
+    o += k
+    assert o == block * 2 + k * 2 * h + k
+    return {"dirs": dirs, "w_head": w_head, "b_head": b_head}
+
+
+def pack_params(params, h: int = HIDDEN, k: int = K_MAX):
+    """Inverse of `unpack_params` (training state → artifact vector)."""
+    parts = []
+    for d in params["dirs"]:
+        parts.append(d["w_ih"].reshape(-1))
+        parts.append(d["b_ih"])
+        parts.append(d["w_hh_t"].T.reshape(-1))
+        parts.append(d["b_hh"])
+    parts.append(params["w_head"].reshape(-1))
+    parts.append(params["b_head"])
+    flat = jnp.concatenate(parts)
+    assert flat.shape[0] == flat_param_count(h, k)
+    return flat
+
+
+def _run_direction(d, xs, cell):
+    """One GRU direction over [B, T, 2] pre-scaled features → [B, T, H].
+
+    The input projection is hoisted out of the scan as a single batched
+    matmul (L2 perf note, DESIGN.md §9) — the scan body only carries the
+    recurrent matmul, which is the Pallas kernel.
+    """
+    gi = jnp.einsum("btj,gj->btg", xs, d["w_ih"]) + d["b_ih"]  # [B,T,3H]
+    gi_t = jnp.swapaxes(gi, 0, 1)  # [T,B,3H]
+    h0 = jnp.zeros((xs.shape[0], d["w_hh_t"].shape[0]), xs.dtype)
+
+    def step(h_prev, gi_step):
+        h_next = cell(h_prev, gi_step, d["w_hh_t"], d["b_hh"])
+        return h_next, h_next
+
+    _, hs = jax.lax.scan(step, h0, gi_t)
+    return jnp.swapaxes(hs, 0, 1)  # [B,T,H]
+
+
+def bigru_probs(flat, x, use_pallas: bool = False, h: int = HIDDEN, k: int = K_MAX):
+    """Classifier forward: raw features [B, T, 2] → posteriors [B, T, K].
+
+    `use_pallas=True` routes the recurrent update through the L1 kernel
+    (export path); `False` uses the pure-jnp reference (training path).
+    """
+    cell = gru_cell_pallas if use_pallas else gru_cell_ref
+    p = unpack_params(flat, h, k)
+    xs = scale_features(x)
+    h_fwd = _run_direction(p["dirs"][0], xs, cell)
+    h_bwd = jnp.flip(_run_direction(p["dirs"][1], jnp.flip(xs, axis=1), cell), axis=1)
+    hidden = jnp.concatenate([h_fwd, h_bwd], axis=-1)  # [B,T,2H]
+    logits = jnp.einsum("bth,kh->btk", hidden, p["w_head"]) + p["b_head"]
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def bigru_logits(flat, x, use_pallas: bool = False, h: int = HIDDEN, k: int = K_MAX):
+    """Same forward but returning logits (training loss needs them)."""
+    cell = gru_cell_pallas if use_pallas else gru_cell_ref
+    p = unpack_params(flat, h, k)
+    xs = scale_features(x)
+    h_fwd = _run_direction(p["dirs"][0], xs, cell)
+    h_bwd = jnp.flip(_run_direction(p["dirs"][1], jnp.flip(xs, axis=1), cell), axis=1)
+    hidden = jnp.concatenate([h_fwd, h_bwd], axis=-1)
+    return jnp.einsum("bth,kh->btk", hidden, p["w_head"]) + p["b_head"]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bigru_export(flat, x):
+    """The AOT entry point: (flat [P], x [T,2]) → probs [T, K_MAX].
+
+    Single sequence (B=1 squeezed); the Pallas GRU kernel is on the scan
+    path so it lowers into the exported HLO.
+    """
+    return bigru_probs(flat, x[None], use_pallas=True)[0]
+
+
+def init_params(rng, h: int = HIDDEN, k: int = K_MAX):
+    """Glorot-ish init in packed form (numpy RNG for determinism)."""
+    import numpy as np
+
+    def glorot(shape, fan_in, fan_out):
+        limit = np.sqrt(6.0 / (fan_in + fan_out))
+        return rng.uniform(-limit, limit, size=shape).astype(np.float32)
+
+    parts = []
+    for _ in range(2):
+        parts.append(glorot((3 * h, 2), 2, h).reshape(-1))
+        parts.append(np.zeros(3 * h, np.float32))
+        parts.append(glorot((3 * h, h), h, h).reshape(-1))
+        parts.append(np.zeros(3 * h, np.float32))
+    parts.append(glorot((k, 2 * h), 2 * h, k).reshape(-1))
+    parts.append(np.zeros(k, np.float32))
+    flat = np.concatenate(parts)
+    assert flat.shape[0] == flat_param_count(h, k)
+    return flat

@@ -1,0 +1,164 @@
+"""Python testbed — the synthetic measurement campaign.
+
+Exact mirror of `rust/src/testbed/engine.rs` (same math, same catalog):
+a time-stepped continuous-batching engine plus the physically-motivated
+GPU power law. Used at build time to generate the "measured" traces the
+pipeline learns from; cross-consistency with the Rust mirror is enforced
+by an integration test comparing summary statistics on a fixed schedule.
+"""
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+from .catalog import Catalog, ServerConfig
+
+
+def utilization(truth, a: int, prefill_present: bool) -> float:
+    """Keep in sync with rust/src/testbed/mod.rs::utilization."""
+    if a == 0:
+        return 0.0
+    if prefill_present:
+        mix = min((a - 1.0) / 16.0, 1.0)
+        return min(truth.pre_frac + truth.mixed_bonus_frac * mix, 1.0)
+    sat = 1.0 - math.exp(-((a - 1.0) / truth.a0))
+    return truth.dec_min_frac + (truth.dec_max_frac - truth.dec_min_frac) * sat
+
+
+def server_gpu_power_w(cfg: ServerConfig, gpu, u: float) -> float:
+    p_gpu = gpu.idle_w + (gpu.tdp_w - gpu.idle_w) * u
+    return cfg.tp * p_gpu + (cfg.n_gpus_server - cfg.tp) * gpu.idle_w
+
+
+@dataclass
+class TestbedTrace:
+    dt_s: float
+    power_w: np.ndarray       # [n_windows] f32
+    a_measured: np.ndarray    # [n_windows] f32 (mean occupancy per window)
+    prefill_frac: np.ndarray  # [n_windows] f32
+    durations: Dict[str, list] = field(default_factory=dict)
+    starts: List[float] = field(default_factory=list)
+
+
+def simulate(cat: Catalog, cfg: ServerConfig, schedule, horizon_s: float,
+             rng: np.random.Generator, dt_sim: float = 0.05) -> TestbedTrace:
+    """Run the testbed for one server over a schedule of dicts
+    {"t", "n_in", "n_out"} sorted by arrival time."""
+    truth = cfg.truth
+    gpu = cat.gpu_of(cfg)
+    dt_sample = cat.campaign.dt_s
+    max_batch = cat.campaign.max_batch
+    b_cap = float(max_batch)
+    n_windows = int(round(horizon_s / dt_sample))
+    steps_per_window = max(int(round(dt_sample / dt_sim)), 1)
+
+    pending: List[int] = []
+    next_arrival = 0
+    # running request state (parallel lists)
+    r_idx: List[int] = []
+    r_n_in: List[int] = []
+    r_n_out: List[int] = []
+    r_prefill_left: List[float] = []
+    r_tokens_left: List[float] = []
+    r_started: List[float] = []
+    r_pre_done: List[float] = []  # NaN until prefill completes
+
+    starts = [float("nan")] * len(schedule)
+    durations = {"n_in": [], "prefill_s": [], "n_out": [], "decode_s": []}
+    power_w = np.zeros(n_windows, dtype=np.float32)
+    a_measured = np.zeros(n_windows, dtype=np.float32)
+    prefill_frac = np.zeros(n_windows, dtype=np.float32)
+
+    ar_state = 0.0
+    ar_innov = truth.ar_sigma_w * math.sqrt(max(1.0 - truth.ar_phi ** 2, 0.0))
+
+    t = 0.0
+    for w in range(n_windows):
+        u_sum = 0.0
+        a_sum = 0.0
+        pre_steps = 0
+        for _ in range(steps_per_window):
+            # 1. arrivals
+            while next_arrival < len(schedule) and schedule[next_arrival]["t"] <= t:
+                pending.append(next_arrival)
+                next_arrival += 1
+            # 2. admission
+            while len(r_idx) < max_batch and pending:
+                i = pending.pop(0)
+                req = schedule[i]
+                starts[i] = t
+                r_idx.append(i)
+                r_n_in.append(req["n_in"])
+                r_n_out.append(req["n_out"])
+                r_prefill_left.append(1.0)
+                r_tokens_left.append(float(req["n_out"]))
+                r_started.append(t)
+                r_pre_done.append(float("nan"))
+            # 3. progress
+            b = len(r_idx)
+            if b > 0:
+                interference = (b - 1.0) / b_cap
+                pre_slow = 1.0 + truth.kappa_pre * interference
+                dec_rate = 1.0 / (truth.tbt0_s * (1.0 + truth.kappa_dec * interference))
+                prefill_present = False
+                for j in range(b):
+                    if r_prefill_left[j] > 0.0:
+                        prefill_present = True
+                        ttft_base = truth.c_pre_s * (r_n_in[j] / 512.0) ** truth.gamma_pre
+                        r_prefill_left[j] -= dt_sim / (max(ttft_base, 1e-6) * pre_slow)
+                        if r_prefill_left[j] <= 0.0:
+                            r_pre_done[j] = t + dt_sim
+                    else:
+                        r_tokens_left[j] -= dec_rate * dt_sim
+                u_sum += utilization(truth, b, prefill_present)
+                a_sum += b
+                if prefill_present:
+                    pre_steps += 1
+                # 4. completions
+                end_t = t + dt_sim
+                keep = []
+                for j in range(b):
+                    if r_prefill_left[j] <= 0.0 and r_tokens_left[j] <= 0.0:
+                        pre_end = r_pre_done[j]
+                        if math.isnan(pre_end):
+                            pre_end = end_t
+                        durations["n_in"].append(r_n_in[j])
+                        durations["prefill_s"].append(max(pre_end - r_started[j], dt_sim))
+                        durations["n_out"].append(r_n_out[j])
+                        durations["decode_s"].append(max(end_t - pre_end, dt_sim))
+                    else:
+                        keep.append(j)
+                if len(keep) != b:
+                    r_idx = [r_idx[j] for j in keep]
+                    r_n_in = [r_n_in[j] for j in keep]
+                    r_n_out = [r_n_out[j] for j in keep]
+                    r_prefill_left = [r_prefill_left[j] for j in keep]
+                    r_tokens_left = [r_tokens_left[j] for j in keep]
+                    r_started = [r_started[j] for j in keep]
+                    r_pre_done = [r_pre_done[j] for j in keep]
+            t += dt_sim
+        # 5. sample window
+        u_avg = u_sum / steps_per_window
+        p = server_gpu_power_w(cfg, gpu, u_avg)
+        p += math.sqrt(cfg.tp) * truth.noise_w * rng.standard_normal()
+        if truth.ar_sigma_w > 0.0:
+            ar_state = truth.ar_phi * ar_state + ar_innov * rng.standard_normal()
+            if a_sum > 0.0:
+                p += ar_state * cfg.tp
+        p += truth.meas_noise_w * rng.standard_normal()
+        floor = cfg.n_gpus_server * gpu.idle_w * 0.95
+        ceil = cfg.n_gpus_server * gpu.tdp_w
+        power_w[w] = min(max(p, floor), ceil)
+        a_measured[w] = a_sum / steps_per_window
+        prefill_frac[w] = pre_steps / steps_per_window
+
+    return TestbedTrace(
+        dt_s=dt_sample,
+        power_w=power_w,
+        a_measured=a_measured,
+        prefill_frac=prefill_frac,
+        durations=durations,
+        starts=starts,
+    )

@@ -1,0 +1,207 @@
+"""Per-configuration training (paper §4.1 "Training"):
+
+1. pool the training traces' power samples, fit the GMM with BIC-selected K;
+2. hard-label every timestep (Eq. 2) and estimate per-state AR(1) φ (Eq. 9);
+3. train the BiGRU classifier on (A_t, ΔA_t) → label with windowed BPTT and
+   hand-rolled Adam (optax is unavailable offline);
+4. calibrate the throughput surrogate (Eq. 4–5) from realized durations.
+
+The trace-level split is 70/15/15 train/val/test after pooling across
+arrival rates, as in the paper; held-out test traces are exported for the
+Rust evaluation harness.
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gmmfit
+from .model import K_MAX, bigru_logits, flat_param_count, init_params
+
+
+@dataclass
+class TrainResult:
+    flat: np.ndarray          # trained weights
+    k: int
+    gmm: gmmfit.Gmm
+    phi: np.ndarray           # per-state AR(1)
+    y_min: float
+    y_max: float
+    bic_ks: List[int]
+    bic_vals: List[float]
+    val_accuracy: float
+    final_loss: float
+
+
+def features_from_a(a_measured: np.ndarray) -> np.ndarray:
+    """(A_t, ΔA_t) features [T,2] from the measured mean-occupancy series."""
+    a = np.round(a_measured).astype(np.float32)
+    da = np.diff(a, prepend=0.0).astype(np.float32)
+    return np.stack([a, da], axis=1)
+
+
+def _loss(flat, xb, yb, pb, mu_pad, p_scale, w_energy):
+    """Cross-entropy on GMM labels plus an energy-calibration term.
+
+    The auxiliary term matches the posterior-expected power `probs·mu`
+    to the measured power, normalizing the paper's headline ΔEnergy
+    metric directly (the paper selected the BiGRU for "downstream energy
+    fidelity"; with one CPU core we cannot buy calibration with longer
+    training, so we optimize for it explicitly)."""
+    logits = bigru_logits(flat, xb)  # [B,W,K_MAX] (ref cell: training path)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, yb[..., None], axis=-1)[..., 0]
+    ce = -jnp.mean(picked)
+    probs = jnp.exp(logp)
+    pred_power = probs @ mu_pad  # [B,W]
+    aux = jnp.mean(((pred_power - pb) / p_scale) ** 2)
+    return ce + w_energy * aux
+
+
+_loss_and_grad = jax.jit(jax.value_and_grad(_loss))
+
+
+def _adam_update(flat, g, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1 ** step)
+    vhat = v / (1 - b2 ** step)
+    return flat - lr * mhat / (np.sqrt(vhat) + eps), m, v
+
+
+def split_traces(n: int) -> Tuple[List[int], List[int], List[int]]:
+    """Deterministic 70/15/15 split by trace index (train/val/test)."""
+    idx = list(range(n))
+    n_test = max(1, round(0.15 * n))
+    n_val = max(1, round(0.15 * n))
+    test = idx[::-1][:n_test]            # last traces (highest rep) → test
+    val = idx[::-1][n_test:n_test + n_val]
+    train = [i for i in idx if i not in test and i not in val]
+    return train, val, test
+
+
+def _sample_batch(feats, labels, powers, window, batch, rng):
+    xb = np.zeros((batch, window, 2), np.float32)
+    yb = np.zeros((batch, window), np.int32)
+    pb = np.zeros((batch, window), np.float32)
+    for b in range(batch):
+        ti = rng.integers(len(feats))
+        f, l, p = feats[ti], labels[ti], powers[ti]
+        if len(l) <= window:
+            xb[b, : len(l)] = f
+            yb[b, : len(l)] = l
+            pb[b, : len(l)] = p
+        else:
+            s = rng.integers(len(l) - window)
+            xb[b] = f[s : s + window]
+            yb[b] = l[s : s + window]
+            pb[b] = p[s : s + window]
+    return jnp.asarray(xb), jnp.asarray(yb), jnp.asarray(pb)
+
+
+def train_config(power_traces: List[np.ndarray], a_traces: List[np.ndarray],
+                 is_moe: bool, seed: int,
+                 n_steps: int = 300, window: int = 128, batch: int = 8,
+                 lr: float = 4e-3, w_energy: float = 1.0, k_range=range(4, 13),
+                 train_idx: List[int] = None, val_idx: List[int] = None) -> TrainResult:
+    """Full §3.2 training for one configuration. Returns everything the
+    per-config artifact needs. `train_idx`/`val_idx` override the default
+    trace-level split (the campaign uses a rep-level split so every arrival
+    rate appears in each partition)."""
+    rng = np.random.default_rng(seed)
+    if train_idx is None or val_idx is None:
+        train_idx, val_idx, _ = split_traces(len(power_traces))
+
+    # --- GMM on pooled training power ---
+    pooled = np.concatenate([power_traces[i] for i in train_idx]).astype(np.float64)
+    gmm, bic_ks, bic_vals = gmmfit.select_k(pooled, k_range, rng)
+    k = gmm.k
+
+    # --- labels + features ---
+    feats = [features_from_a(a) for a in a_traces]
+    labels = [gmm.labels(p.astype(np.float64)).astype(np.int32) for p in power_traces]
+
+    # --- AR(1) φ per state (MoE only; dense uses i.i.d. sampling) ---
+    if is_moe:
+        phi = gmmfit.estimate_ar1_phi(pooled, gmm.labels(pooled), gmm)
+    else:
+        phi = np.zeros(k)
+
+    # --- BiGRU training (ref cell path) ---
+    flat = init_params(rng).astype(np.float32)
+    m = np.zeros_like(flat)
+    v = np.zeros_like(flat)
+    train_feats = [feats[i] for i in train_idx]
+    train_labels = [labels[i] for i in train_idx]
+    train_powers = [power_traces[i].astype(np.float32) for i in train_idx]
+    # Posterior-expected power uses the state means; pad unused logit slots
+    # with the top state's mean (their probability is driven to ~0 by CE).
+    mu_pad = np.full(K_MAX, gmm.mu[-1], np.float32)
+    mu_pad[:k] = gmm.mu
+    mu_pad = jnp.asarray(mu_pad)
+    p_scale = jnp.float32(max(float(pooled.mean()), 1.0))
+    final_loss = float("nan")
+    for step in range(1, n_steps + 1):
+        # Cosine decay: calibration benefits from a small final lr.
+        lr_t = lr * (0.1 + 0.9 * 0.5 * (1 + np.cos(np.pi * (step - 1) / n_steps)))
+        xb, yb, pb = _sample_batch(train_feats, train_labels, train_powers,
+                                   window, batch, rng)
+        loss, g = _loss_and_grad(jnp.asarray(flat), xb, yb, pb, mu_pad,
+                                 p_scale, jnp.float32(w_energy))
+        flat, m, v = _adam_update(flat, np.asarray(g), m, v, step, lr_t)
+        final_loss = float(loss)
+
+    # --- validation accuracy (argmax vs GMM label) ---
+    correct = 0
+    total = 0
+    for i in val_idx:
+        logits = bigru_logits(jnp.asarray(flat), jnp.asarray(feats[i][None]))
+        pred = np.argmax(np.asarray(logits[0]), axis=1)
+        correct += int((pred == labels[i]).sum())
+        total += len(labels[i])
+    val_acc = correct / max(total, 1)
+
+    return TrainResult(
+        flat=np.asarray(flat, np.float32),
+        k=k,
+        gmm=gmm,
+        phi=phi,
+        y_min=float(pooled.min()),
+        y_max=float(pooled.max()),
+        bic_ks=bic_ks,
+        bic_vals=bic_vals,
+        val_accuracy=val_acc,
+        final_loss=final_loss,
+    )
+
+
+def calibrate_surrogate(durations: Dict[str, list]) -> Dict[str, float]:
+    """OLS fit of the throughput surrogate (paper Eq. 4–5); mirror of
+    `rust/src/surrogate/calibrate.rs`."""
+    n_in = np.asarray(durations["n_in"], np.float64)
+    pre = np.asarray(durations["prefill_s"], np.float64)
+    n_out = np.asarray(durations["n_out"], np.float64)
+    dec = np.asarray(durations["decode_s"], np.float64)
+    assert len(n_in) >= 8, "need >= 8 duration samples to calibrate"
+
+    x = np.log(n_in + 1.0)
+    y = np.log(pre)
+    mx, my = x.mean(), y.mean()
+    sxx = float(np.sum((x - mx) ** 2))
+    if sxx < 1e-9:
+        alpha0, alpha1 = my, 0.0
+    else:
+        alpha1 = float(np.sum((x - mx) * (y - my)) / sxx)
+        alpha0 = my - alpha1 * mx
+    resid = y - (alpha0 + alpha1 * x)
+    log_tbt = np.log(dec / np.maximum(n_out, 1))
+    return {
+        "alpha0": float(alpha0),
+        "alpha1": float(alpha1),
+        "sigma_ttft": float(np.sqrt(np.mean(resid ** 2))),
+        "mu_log_tbt": float(np.mean(log_tbt)),
+        "sigma_log_tbt": float(np.std(log_tbt)),
+    }

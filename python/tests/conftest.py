@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests are run from the `python/` directory (`make test`); make the
+# `compile` package importable from the repo root too.
+sys.path.insert(0, os.path.normpath(os.path.join(os.path.dirname(__file__), "..")))

@@ -1,0 +1,79 @@
+"""GMM EM + BIC + AR(1) estimation tests (mirror of the Rust EM tests so
+the two implementations stay behaviorally aligned)."""
+
+import numpy as np
+import pytest
+
+from compile.gmmfit import Gmm, estimate_ar1_phi, fit_gmm, select_k
+
+
+def sample_mixture(pi, mu, sigma, n, rng):
+    k = rng.choice(len(pi), size=n, p=pi)
+    return rng.normal(np.asarray(mu)[k], np.asarray(sigma)[k])
+
+
+def test_em_recovers_planted_mixture():
+    rng = np.random.default_rng(1)
+    y = sample_mixture([0.3, 0.5, 0.2], [60, 200, 350], [5, 8, 6], 8000, rng)
+    g = fit_gmm(y, 3, rng)
+    assert np.allclose(g.mu, [60, 200, 350], atol=3)
+    assert np.allclose(g.pi, [0.3, 0.5, 0.2], atol=0.03)
+    assert np.allclose(g.sigma, [5, 8, 6], atol=1.5)
+
+
+def test_fit_output_sorted_by_mean():
+    rng = np.random.default_rng(2)
+    y = sample_mixture([0.5, 0.5], [300, 60], [10, 10], 4000, rng)
+    g = fit_gmm(y, 2, rng)
+    assert g.mu[0] < g.mu[1]
+
+
+def test_bic_selects_true_order():
+    rng = np.random.default_rng(3)
+    y = sample_mixture([0.25] * 4, [50, 150, 250, 350], [8] * 4, 12_000, rng)
+    g, ks, bics = select_k(y, range(1, 8), rng)
+    assert g.k == 4, f"bics={bics}"
+    assert bics[3] < bics[0]
+
+
+def test_labels_are_posterior_argmax():
+    g = Gmm(pi=np.array([0.5, 0.5]), mu=np.array([0.0, 10.0]), sigma=np.array([1.0, 1.0]))
+    lab = g.labels(np.array([-1.0, 4.9, 5.1, 11.0]))
+    assert list(lab) == [0, 0, 1, 1]
+
+
+def test_variance_floor_prevents_collapse():
+    rng = np.random.default_rng(4)
+    y = np.concatenate([np.full(500, 100.0), np.full(500, 200.0)])
+    g = fit_gmm(y, 2, rng)
+    assert np.all(g.sigma > 0) and np.all(np.isfinite(g.sigma))
+
+
+def test_rejects_insufficient_samples():
+    rng = np.random.default_rng(5)
+    with pytest.raises(AssertionError):
+        fit_gmm(np.ones(5), 2, rng)
+
+
+def test_ar1_phi_estimation_recovers_persistence():
+    rng = np.random.default_rng(6)
+    # One state with AR(1) noise phi=0.8, another i.i.d.
+    n = 30_000
+    phi = 0.8
+    x = np.zeros(n)
+    for t in range(1, n):
+        x[t] = phi * x[t - 1] + rng.normal() * np.sqrt(1 - phi**2)
+    y0 = 100.0 + 5.0 * x
+    y1 = 300.0 + 5.0 * rng.standard_normal(n)
+    y = np.concatenate([y0, y1])
+    labels = np.concatenate([np.zeros(n, int), np.ones(n, int)])
+    g = Gmm(pi=np.array([0.5, 0.5]), mu=np.array([100.0, 300.0]), sigma=np.array([5.0, 5.0]))
+    phis = estimate_ar1_phi(y, labels, g)
+    assert abs(phis[0] - 0.8) < 0.05, phis
+    assert abs(phis[1]) < 0.05, phis
+
+
+def test_ar1_phi_short_segments_default_zero():
+    g = Gmm(pi=np.array([1.0]), mu=np.array([0.0]), sigma=np.array([1.0]))
+    phis = estimate_ar1_phi(np.array([0.1, 0.2]), np.array([0, 0]), g)
+    assert phis[0] == 0.0

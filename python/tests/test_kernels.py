@@ -1,0 +1,110 @@
+"""L1 Pallas kernels vs pure-jnp oracles (`ref.py`).
+
+Hypothesis sweeps shapes and value ranges; assert_allclose against the
+reference implementations. Pallas runs in interpret mode (CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.gmm import gmm_posterior_pallas
+from compile.kernels.gru import gru_cell_pallas
+from compile.kernels.ref import gmm_posterior_ref, gru_cell_ref
+
+
+def _rand(rng, *shape, scale=1.0):
+    return rng.normal(0.0, scale, size=shape).astype(np.float32)
+
+
+# ----------------------------------------------------------------------------
+# GRU cell kernel
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3, 8, 64, 65, 100]),
+    h=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gru_cell_matches_ref_across_shapes(b, h, seed):
+    rng = np.random.default_rng(seed)
+    hs = _rand(rng, b, h)
+    gi = _rand(rng, b, 3 * h, scale=2.0)
+    w = _rand(rng, h, 3 * h, scale=0.3)
+    bias = _rand(rng, 3 * h)
+    out_ref = np.asarray(gru_cell_ref(jnp.asarray(hs), jnp.asarray(gi), jnp.asarray(w), jnp.asarray(bias)))
+    out_pal = np.asarray(gru_cell_pallas(jnp.asarray(hs), jnp.asarray(gi), jnp.asarray(w), jnp.asarray(bias)))
+    assert out_pal.shape == (b, h)
+    assert_allclose(out_pal, out_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_gru_cell_extreme_values_stay_bounded():
+    # Saturated gates: outputs must stay in a GRU-reachable range.
+    rng = np.random.default_rng(0)
+    hs = _rand(rng, 4, 64)
+    gi = _rand(rng, 4, 192, scale=50.0)  # saturate everything
+    w = _rand(rng, 64, 192, scale=5.0)
+    bias = _rand(rng, 192, scale=10.0)
+    out = np.asarray(gru_cell_pallas(jnp.asarray(hs), jnp.asarray(gi), jnp.asarray(w), jnp.asarray(bias)))
+    assert np.all(np.isfinite(out))
+    # h' is a convex combination of h and tanh(...) ∈ [-1, 1]
+    bound = np.maximum(np.abs(hs), 1.0) + 1e-6
+    assert np.all(np.abs(out) <= bound)
+
+
+def test_gru_cell_identity_when_update_gate_saturated():
+    # gi z-block = +inf → z = 1 → h' = h exactly.
+    h = 64
+    hs = np.random.default_rng(1).normal(size=(2, h)).astype(np.float32)
+    gi = np.zeros((2, 3 * h), np.float32)
+    gi[:, h:2 * h] = 100.0
+    w = np.zeros((h, 3 * h), np.float32)
+    bias = np.zeros(3 * h, np.float32)
+    out = np.asarray(gru_cell_pallas(jnp.asarray(hs), jnp.asarray(gi), jnp.asarray(w), jnp.asarray(bias)))
+    assert_allclose(out, hs, rtol=0, atol=1e-6)
+
+
+# ----------------------------------------------------------------------------
+# GMM posterior kernel
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 7, 128, 129, 500]),
+    k=st.sampled_from([1, 2, 5, 12]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gmm_posterior_matches_ref(n, k, seed):
+    rng = np.random.default_rng(seed)
+    y = rng.normal(200.0, 80.0, size=n).astype(np.float32)
+    mu = np.sort(rng.uniform(50, 400, size=k)).astype(np.float32)
+    sigma = rng.uniform(2, 20, size=k).astype(np.float32)
+    pi = rng.dirichlet(np.ones(k)).astype(np.float32)
+    out_ref = np.asarray(gmm_posterior_ref(jnp.asarray(y), jnp.asarray(pi), jnp.asarray(mu), jnp.asarray(sigma)))
+    out_pal = np.asarray(gmm_posterior_pallas(jnp.asarray(y), jnp.asarray(pi), jnp.asarray(mu), jnp.asarray(sigma)))
+    assert out_pal.shape == (n, k)
+    assert_allclose(out_pal, out_ref, rtol=1e-5, atol=1e-6)
+    assert_allclose(out_pal.sum(axis=1), np.ones(n), rtol=0, atol=1e-5)
+
+
+def test_gmm_posterior_picks_nearest_component():
+    y = jnp.asarray(np.array([0.0, 10.0], np.float32))
+    pi = jnp.asarray(np.array([0.5, 0.5], np.float32))
+    mu = jnp.asarray(np.array([0.0, 10.0], np.float32))
+    sigma = jnp.asarray(np.array([1.0, 1.0], np.float32))
+    post = np.asarray(gmm_posterior_pallas(y, pi, mu, sigma))
+    assert post[0, 0] > 0.999
+    assert post[1, 1] > 0.999
+
+
+def test_gmm_posterior_far_tail_is_stable():
+    # A sample 100σ from every component must not produce NaNs.
+    y = jnp.asarray(np.array([1e5], np.float32))
+    pi = jnp.asarray(np.array([0.3, 0.7], np.float32))
+    mu = jnp.asarray(np.array([100.0, 300.0], np.float32))
+    sigma = jnp.asarray(np.array([5.0, 5.0], np.float32))
+    post = np.asarray(gmm_posterior_pallas(y, pi, mu, sigma))
+    assert np.all(np.isfinite(post))
+    assert abs(post.sum() - 1.0) < 1e-5

@@ -1,0 +1,110 @@
+"""L2 model tests: pallas path == ref path, shapes, normalization,
+pack/unpack round-trip, feature transform, bidirectional context."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.model import (
+    HIDDEN,
+    K_MAX,
+    bigru_export,
+    bigru_logits,
+    bigru_probs,
+    flat_param_count,
+    init_params,
+    pack_params,
+    scale_features,
+    unpack_params,
+)
+
+
+def rand_flat(seed=0):
+    return jnp.asarray(init_params(np.random.default_rng(seed)))
+
+
+def rand_x(b, t, seed=1):
+    rng = np.random.default_rng(seed)
+    a = np.maximum.accumulate(rng.integers(-2, 3, size=(b, t)).cumsum(axis=1), axis=1)
+    a = np.maximum(a, 0).astype(np.float32)
+    da = np.diff(a, prepend=0.0, axis=1).astype(np.float32)
+    return jnp.asarray(np.stack([a, da], axis=-1))
+
+
+def test_param_count_matches_design():
+    assert flat_param_count() == 27_660  # DESIGN.md §6
+
+
+def test_pack_unpack_roundtrip():
+    flat = rand_flat(3)
+    back = pack_params(unpack_params(flat))
+    assert_allclose(np.asarray(back), np.asarray(flat), rtol=0, atol=0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.sampled_from([1, 2, 4]), t=st.sampled_from([1, 7, 33]), seed=st.integers(0, 1000))
+def test_pallas_path_matches_ref_path(b, t, seed):
+    flat = rand_flat(seed)
+    x = rand_x(b, t, seed + 1)
+    p_ref = np.asarray(bigru_probs(flat, x, use_pallas=False))
+    p_pal = np.asarray(bigru_probs(flat, x, use_pallas=True))
+    assert_allclose(p_pal, p_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_probs_normalized_and_shaped():
+    flat = rand_flat(5)
+    x = rand_x(2, 50)
+    p = np.asarray(bigru_probs(flat, x))
+    assert p.shape == (2, 50, K_MAX)
+    assert_allclose(p.sum(-1), np.ones((2, 50)), rtol=0, atol=1e-5)
+    assert np.all(p >= 0)
+
+
+def test_logits_softmax_consistency():
+    flat = rand_flat(6)
+    x = rand_x(1, 20)
+    logits = np.asarray(bigru_logits(flat, x))
+    probs = np.asarray(bigru_probs(flat, x))
+    e = np.exp(logits - logits.max(-1, keepdims=True))
+    assert_allclose(probs, e / e.sum(-1, keepdims=True), rtol=1e-5, atol=1e-6)
+
+
+def test_bidirectional_context_flows_backward():
+    flat = rand_flat(7)
+    x = np.asarray(rand_x(1, 10)).copy()
+    p1 = np.asarray(bigru_probs(flat, jnp.asarray(x)))
+    x[0, -1, 0] += 40.0
+    p2 = np.asarray(bigru_probs(flat, jnp.asarray(x)))
+    assert np.abs(p1[0, 0] - p2[0, 0]).sum() > 1e-7
+
+
+def test_scale_features_values():
+    x = jnp.asarray(np.array([[[0.0, 0.0], [1.0, 1.0], [63.0, -2.0]]], np.float32))
+    s = np.asarray(scale_features(x))[0]
+    assert_allclose(s[0], [0.0, 0.0], atol=1e-7)
+    assert_allclose(s[1], [np.log(2.0) / 2, np.log(2.0) / 2], rtol=1e-6)
+    assert_allclose(s[2], [np.log(64.0) / 2, -np.log(3.0) / 2], rtol=1e-6)
+
+
+def test_export_wrapper_single_sequence():
+    flat = rand_flat(8)
+    x = rand_x(1, 16)[0]
+    out = np.asarray(bigru_export(flat, x))
+    assert out.shape == (16, K_MAX)
+    full = np.asarray(bigru_probs(flat, x[None], use_pallas=True))[0]
+    assert_allclose(out, full, rtol=1e-6, atol=1e-7)
+
+
+def test_export_lowering_produces_hlo_text():
+    import jax
+
+    from compile.aot import to_hlo_text
+
+    p_spec = jax.ShapeDtypeStruct((flat_param_count(),), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((32, 2), jnp.float32)
+    text = to_hlo_text(jax.jit(bigru_export).lower(p_spec, x_spec))
+    assert text.startswith("HloModule")
+    assert "f32[32,2]" in text
+    assert f"f32[{flat_param_count()}]" in text

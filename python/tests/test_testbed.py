@@ -1,0 +1,86 @@
+"""Testbed invariants (mirror of rust/src/testbed tests: same catalog, same
+math — the Rust side has an integration test comparing the two engines'
+statistics on a fixed schedule)."""
+
+import numpy as np
+import pytest
+
+from compile.catalog import load_catalog
+from compile.datasets import poisson_schedule
+from compile.testbed import simulate, utilization
+
+
+@pytest.fixture(scope="module")
+def cat():
+    return load_catalog()
+
+
+def test_idle_server_draws_idle_power(cat):
+    cfg = cat.config("llama8b_a100_tp2")
+    gpu = cat.gpu_of(cfg)
+    tr = simulate(cat, cfg, [], 60.0, np.random.default_rng(1))
+    assert len(tr.power_w) == 240
+    assert abs(tr.power_w.mean() - 8 * gpu.idle_w) < 10
+    assert np.all(tr.a_measured == 0)
+
+
+def test_power_within_physical_bounds(cat):
+    for cid in ["llama70b_a100_tp8", "gptoss120b_a100_tp4"]:
+        cfg = cat.config(cid)
+        gpu = cat.gpu_of(cfg)
+        rng = np.random.default_rng(2)
+        sched = poisson_schedule(2.0, 60.0, cat.datasets["sharegpt"], 1.0, rng)
+        tr = simulate(cat, cfg, sched, 60.0, rng)
+        assert np.all(tr.power_w >= 8 * gpu.idle_w * 0.95 - 1e-3)
+        assert np.all(tr.power_w <= 8 * gpu.tdp_w + 1e-3)
+        assert np.all(tr.a_measured <= cat.campaign.max_batch)
+
+
+def test_requests_complete_and_durations_logged(cat):
+    cfg = cat.config("llama8b_a100_tp2")
+    rng = np.random.default_rng(3)
+    sched = poisson_schedule(0.5, 120.0, cat.datasets["sharegpt"], 1.0, rng)
+    tr = simulate(cat, cfg, sched, 400.0, rng)
+    assert len(tr.durations["n_in"]) == len(sched)
+    assert all(p > 0 for p in tr.durations["prefill_s"])
+    assert all(d > 0 for d in tr.durations["decode_s"])
+    assert all(np.isfinite(tr.starts))
+
+
+def test_ttft_superlinear_in_prompt_length(cat):
+    cfg = cat.config("llama8b_h100_tp1")
+    rng = np.random.default_rng(4)
+    short = simulate(cat, cfg, [{"t": 0.0, "n_in": 512, "n_out": 10}], 60.0, rng)
+    long = simulate(cat, cfg, [{"t": 0.0, "n_in": 4096, "n_out": 10}], 60.0, rng)
+    ratio = long.durations["prefill_s"][0] / short.durations["prefill_s"][0]
+    assert ratio > 8.0  # gamma 1.15 > linear (8x)
+
+
+def test_utilization_shape(cat):
+    t = cat.config("llama70b_a100_tp8").truth
+    assert utilization(t, 0, False) == 0.0
+    us = [utilization(t, a, False) for a in range(1, 64)]
+    assert all(b >= a - 1e-12 for a, b in zip(us, us[1:]))
+    assert utilization(t, 8, True) > utilization(t, 8, False)
+    assert utilization(t, 64, True) <= 1.0
+
+
+def test_moe_has_stronger_short_lag_autocorrelation(cat):
+    def lag1(cid, seed):
+        cfg = cat.config(cid)
+        rng = np.random.default_rng(seed)
+        sched = poisson_schedule(1.0, 240.0, cat.datasets["sharegpt"], 1.0, rng)
+        tr = simulate(cat, cfg, sched, 240.0, rng)
+        y = tr.power_w - tr.power_w.mean()
+        return float((y[:-1] * y[1:]).sum() / (y * y).sum())
+
+    assert lag1("gptoss120b_a100_tp4", 5) > lag1("llama8b_a100_tp2", 5) - 0.05
+
+
+def test_substep_invariance(cat):
+    # Halving dt_sim should barely change mean power (noise is per-window).
+    cfg = cat.config("llama8b_a100_tp2")
+    sched = [{"t": 1.0, "n_in": 512, "n_out": 200}, {"t": 5.0, "n_in": 256, "n_out": 100}]
+    a = simulate(cat, cfg, sched, 60.0, np.random.default_rng(6), dt_sim=0.05)
+    b = simulate(cat, cfg, sched, 60.0, np.random.default_rng(6), dt_sim=0.025)
+    assert abs(a.power_w.mean() - b.power_w.mean()) / a.power_w.mean() < 0.02

@@ -1,0 +1,97 @@
+"""Training-path tests: loss decreases, classifier beats chance on a
+separable synthetic problem, surrogate calibration recovers planted
+parameters, and split coverage."""
+
+import numpy as np
+import pytest
+
+from compile.train import (
+    calibrate_surrogate,
+    features_from_a,
+    split_traces,
+    train_config,
+)
+
+
+def synthetic_traces(n_traces=8, t_len=400, seed=0):
+    """Power is a clean function of occupancy: trivially learnable."""
+    rng = np.random.default_rng(seed)
+    powers, a_series = [], []
+    for _ in range(n_traces):
+        a = np.maximum(rng.integers(-1, 2, size=t_len).cumsum(), 0).astype(np.float32)
+        a = np.minimum(a, 8)
+        p = 100.0 + 50.0 * a + rng.normal(0, 3, t_len)
+        powers.append(p.astype(np.float32))
+        a_series.append(a)
+    return powers, a_series
+
+
+def test_train_learns_separable_problem():
+    powers, a_series = synthetic_traces()
+    res = train_config(
+        powers, a_series, is_moe=False, seed=1, n_steps=120, window=64,
+        batch=4, k_range=range(2, 7),
+    )
+    # On a clean staircase the classifier should be far above chance.
+    assert res.val_accuracy > 2.0 / res.k, f"acc={res.val_accuracy}, k={res.k}"
+    assert np.isfinite(res.final_loss)
+    assert res.k >= 2
+    assert res.y_min < res.y_max
+    assert len(res.flat) == 27_660
+
+
+def test_features_from_a():
+    f = features_from_a(np.array([0.0, 1.2, 2.7, 2.7]))
+    assert f.shape == (4, 2)
+    assert list(f[:, 0]) == [0.0, 1.0, 3.0, 3.0]
+    assert list(f[:, 1]) == [0.0, 1.0, 2.0, 0.0]
+
+
+def test_split_traces_disjoint_and_complete():
+    tr, va, te = split_traces(24)
+    all_idx = sorted(tr + va + te)
+    assert all_idx == list(range(24))
+    assert not (set(tr) & set(va)) and not (set(tr) & set(te)) and not (set(va) & set(te))
+
+
+def test_calibrate_surrogate_recovers_planted():
+    rng = np.random.default_rng(2)
+    alpha0, alpha1 = -2.5, 0.85
+    n_in = np.exp(rng.normal(5.5, 0.8, 3000)).astype(int) + 1
+    ttft = np.exp(alpha0 + alpha1 * np.log(n_in + 1.0) + rng.normal(0, 0.15, 3000))
+    n_out = np.exp(rng.normal(4.5, 0.5, 3000)).astype(int) + 1
+    tbt = np.exp(rng.normal(-4.2, 0.25, 3000))
+    d = {
+        "n_in": list(n_in),
+        "prefill_s": list(ttft),
+        "n_out": list(n_out),
+        "decode_s": list(n_out * tbt),
+    }
+    fit = calibrate_surrogate(d)
+    assert abs(fit["alpha0"] - alpha0) < 0.1
+    assert abs(fit["alpha1"] - alpha1) < 0.03
+    assert abs(fit["mu_log_tbt"] + 4.2) < 0.02
+    assert abs(fit["sigma_log_tbt"] - 0.25) < 0.02
+
+
+def test_calibrate_surrogate_rejects_tiny_samples():
+    with pytest.raises(AssertionError):
+        calibrate_surrogate({"n_in": [1], "prefill_s": [0.1], "n_out": [1], "decode_s": [0.1]})
+
+
+def test_moe_flag_estimates_phi():
+    powers, a_series = synthetic_traces(seed=3)
+    # Inject AR(1) persistence into the power noise.
+    phi = 0.8
+    for p in powers:
+        noise = np.zeros(len(p))
+        rng = np.random.default_rng(4)
+        for t in range(1, len(p)):
+            noise[t] = phi * noise[t - 1] + rng.normal() * 10 * np.sqrt(1 - phi**2)
+        p += noise.astype(np.float32)
+    res = train_config(
+        powers, a_series, is_moe=True, seed=5, n_steps=30, window=64,
+        batch=4, k_range=range(2, 5),
+    )
+    assert np.any(res.phi > 0.2), f"phi={res.phi}"
+    assert np.all((res.phi >= 0) & (res.phi < 1))

@@ -1,0 +1,277 @@
+//! Datacenter-scale aggregation (paper §3.4): data hall → rows → racks →
+//! servers, constant non-GPU IT power per server, and a constant-PUE map
+//! from IT power to facility power at the point of common coupling
+//! (Eq. 10–11).
+
+use crate::metrics::planning::resample_mean;
+use anyhow::{ensure, Result};
+
+/// Facility topology: `rows × racks_per_row × servers_per_rack` servers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub rows: usize,
+    pub racks_per_row: usize,
+    pub servers_per_rack: usize,
+}
+
+impl Topology {
+    pub fn n_servers(&self) -> usize {
+        self.rows * self.racks_per_row * self.servers_per_rack
+    }
+
+    pub fn n_racks(&self) -> usize {
+        self.rows * self.racks_per_row
+    }
+
+    /// Map a flat server index to (row, rack-in-row, server-in-rack).
+    pub fn addr(&self, server_idx: usize) -> (usize, usize, usize) {
+        assert!(server_idx < self.n_servers());
+        let per_row = self.racks_per_row * self.servers_per_rack;
+        let row = server_idx / per_row;
+        let rem = server_idx % per_row;
+        (row, rem / self.servers_per_rack, rem % self.servers_per_rack)
+    }
+
+    /// Flat rack index for a server.
+    pub fn rack_of(&self, server_idx: usize) -> usize {
+        let (row, rack, _) = self.addr(server_idx);
+        row * self.racks_per_row + rack
+    }
+}
+
+/// Streaming bottom-up aggregator: accumulates per-rack IT power so the
+/// full per-server matrix never needs to be materialized (240 servers ×
+/// 24 h × 250 ms ≈ 83 M samples stays bounded at racks × T).
+#[derive(Debug, Clone)]
+pub struct FacilityAccumulator {
+    topo: Topology,
+    n_steps: usize,
+    /// Per-server non-GPU IT power (paper: constant 1 kW).
+    p_base_w: f64,
+    /// Per-rack summed IT power (includes p_base for added servers).
+    rack_w: Vec<Vec<f64>>,
+    added: usize,
+}
+
+impl FacilityAccumulator {
+    pub fn new(topo: Topology, n_steps: usize, p_base_w: f64) -> FacilityAccumulator {
+        FacilityAccumulator {
+            topo,
+            n_steps,
+            p_base_w,
+            rack_w: vec![vec![0.0; n_steps]; topo.n_racks()],
+            added: 0,
+        }
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    pub fn servers_added(&self) -> usize {
+        self.added
+    }
+
+    /// Add one server's GPU power trace (IT power = GPU + p_base).
+    pub fn add_server(&mut self, server_idx: usize, gpu_power_w: &[f32]) -> Result<()> {
+        ensure!(
+            gpu_power_w.len() == self.n_steps,
+            "trace length {} != facility steps {}",
+            gpu_power_w.len(),
+            self.n_steps
+        );
+        let rack = self.topo.rack_of(server_idx);
+        let dst = &mut self.rack_w[rack];
+        for (d, &p) in dst.iter_mut().zip(gpu_power_w) {
+            *d += p as f64 + self.p_base_w;
+        }
+        self.added += 1;
+        Ok(())
+    }
+
+    /// Merge another accumulator (same topology) — used by parallel folds.
+    pub fn merge(&mut self, other: &FacilityAccumulator) {
+        assert_eq!(self.topo, other.topo);
+        assert_eq!(self.n_steps, other.n_steps);
+        for (a, b) in self.rack_w.iter_mut().zip(&other.rack_w) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+        self.added += other.added;
+    }
+
+    /// IT power of one rack.
+    pub fn rack_series(&self, rack_idx: usize) -> Vec<f32> {
+        self.rack_w[rack_idx].iter().map(|&x| x as f32).collect()
+    }
+
+    /// IT power of one row (sum of its racks).
+    pub fn row_series(&self, row_idx: usize) -> Vec<f32> {
+        assert!(row_idx < self.topo.rows);
+        let mut out = vec![0.0f64; self.n_steps];
+        for r in 0..self.topo.racks_per_row {
+            let rack = row_idx * self.topo.racks_per_row + r;
+            for (o, &x) in out.iter_mut().zip(&self.rack_w[rack]) {
+                *o += x;
+            }
+        }
+        out.into_iter().map(|x| x as f32).collect()
+    }
+
+    /// Total facility IT power (paper Eq. 10).
+    pub fn site_it_series(&self) -> Vec<f32> {
+        let mut out = vec![0.0f64; self.n_steps];
+        for rack in &self.rack_w {
+            for (o, &x) in out.iter_mut().zip(rack) {
+                *o += x;
+            }
+        }
+        out.into_iter().map(|x| x as f32).collect()
+    }
+
+    /// Facility power at the PCC: `PUE × P_IT(t)` (paper Eq. 11).
+    pub fn facility_series(&self, pue: f64) -> Vec<f32> {
+        self.site_it_series().into_iter().map(|x| (x as f64 * pue) as f32).collect()
+    }
+}
+
+/// Resample any aggregated series to a coarser interval (mean-preserving).
+pub fn resample(series: &[f32], dt_s: f64, interval_s: f64) -> Vec<f32> {
+    resample_mean(series, dt_s, interval_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::util::rng::Rng;
+
+    fn topo() -> Topology {
+        Topology { rows: 2, racks_per_row: 3, servers_per_rack: 4 }
+    }
+
+    #[test]
+    fn addressing_roundtrip() {
+        let t = topo();
+        assert_eq!(t.n_servers(), 24);
+        assert_eq!(t.n_racks(), 6);
+        assert_eq!(t.addr(0), (0, 0, 0));
+        assert_eq!(t.addr(3), (0, 0, 3));
+        assert_eq!(t.addr(4), (0, 1, 0));
+        assert_eq!(t.addr(12), (1, 0, 0));
+        assert_eq!(t.rack_of(12), 3);
+        assert_eq!(t.addr(23), (1, 2, 3));
+    }
+
+    #[test]
+    fn aggregation_includes_p_base() {
+        let t = topo();
+        let mut acc = FacilityAccumulator::new(t, 4, 1000.0);
+        acc.add_server(0, &[100.0f32; 4]).unwrap();
+        acc.add_server(1, &[200.0f32; 4]).unwrap();
+        // Both in rack 0: 100+1000 + 200+1000 = 2300
+        assert_eq!(acc.rack_series(0), vec![2300.0f32; 4]);
+        assert_eq!(acc.rack_series(1), vec![0.0f32; 4]);
+        assert_eq!(acc.row_series(0), vec![2300.0f32; 4]);
+        assert_eq!(acc.site_it_series(), vec![2300.0f32; 4]);
+    }
+
+    #[test]
+    fn facility_applies_pue() {
+        let t = topo();
+        let mut acc = FacilityAccumulator::new(t, 2, 0.0);
+        acc.add_server(0, &[1000.0f32; 2]).unwrap();
+        assert_eq!(acc.facility_series(1.3), vec![1300.0f32; 2]);
+        // PUE=1 is identity.
+        assert_eq!(acc.facility_series(1.0), acc.site_it_series());
+    }
+
+    #[test]
+    fn rejects_wrong_length() {
+        let mut acc = FacilityAccumulator::new(topo(), 4, 0.0);
+        assert!(acc.add_server(0, &[1.0f32; 3]).is_err());
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let t = topo();
+        let mut a = FacilityAccumulator::new(t, 3, 500.0);
+        let mut b = FacilityAccumulator::new(t, 3, 500.0);
+        a.add_server(0, &[10.0f32; 3]).unwrap();
+        b.add_server(13, &[20.0f32; 3]).unwrap();
+        a.merge(&b);
+        let mut seq = FacilityAccumulator::new(t, 3, 500.0);
+        seq.add_server(0, &[10.0f32; 3]).unwrap();
+        seq.add_server(13, &[20.0f32; 3]).unwrap();
+        assert_eq!(a.site_it_series(), seq.site_it_series());
+        assert_eq!(a.servers_added(), 2);
+    }
+
+    #[test]
+    fn prop_site_equals_sum_of_rows_and_racks() {
+        check("aggregation linearity", |rng| {
+            let t = Topology {
+                rows: 1 + rng.below(3),
+                racks_per_row: 1 + rng.below(4),
+                servers_per_rack: 1 + rng.below(4),
+            };
+            let n_steps = 5 + rng.below(20);
+            let mut acc = FacilityAccumulator::new(t, n_steps, 1000.0);
+            let mut local = Rng::new(rng.next_u64());
+            for s in 0..t.n_servers() {
+                let trace: Vec<f32> =
+                    (0..n_steps).map(|_| local.range(50.0, 3000.0) as f32).collect();
+                acc.add_server(s, &trace).unwrap();
+            }
+            let site = acc.site_it_series();
+            // Sum of rows == site
+            let mut row_sum = vec![0.0f64; n_steps];
+            for r in 0..t.rows {
+                for (o, &x) in row_sum.iter_mut().zip(&acc.row_series(r)) {
+                    *o += x as f64;
+                }
+            }
+            for (a, b) in site.iter().zip(&row_sum) {
+                assert!((*a as f64 - b).abs() < 1.0, "site vs rows");
+            }
+            // Sum of racks == site
+            let mut rack_sum = vec![0.0f64; n_steps];
+            for r in 0..t.n_racks() {
+                for (o, &x) in rack_sum.iter_mut().zip(&acc.rack_series(r)) {
+                    *o += x as f64;
+                }
+            }
+            for (a, b) in site.iter().zip(&rack_sum) {
+                assert!((*a as f64 - b).abs() < 1.0, "site vs racks");
+            }
+        });
+    }
+
+    #[test]
+    fn aggregation_reduces_cov() {
+        // The §4.5 smoothing property: CoV falls as independent servers sum.
+        use crate::metrics::coefficient_of_variation;
+        let t = Topology { rows: 1, racks_per_row: 1, servers_per_rack: 16 };
+        let mut acc = FacilityAccumulator::new(t, 2000, 0.0);
+        let mut rng = Rng::new(90);
+        let mut server_cov = 0.0;
+        for s in 0..16 {
+            let trace: Vec<f32> =
+                (0..2000).map(|_| rng.normal_ms(1000.0, 300.0).max(0.0) as f32).collect();
+            if s == 0 {
+                server_cov = coefficient_of_variation(&trace);
+            }
+            acc.add_server(s, &trace).unwrap();
+        }
+        let site_cov = coefficient_of_variation(&acc.site_it_series());
+        assert!(
+            site_cov < server_cov / 2.5,
+            "site {site_cov} vs server {server_cov} (expect ~1/4)"
+        );
+    }
+}

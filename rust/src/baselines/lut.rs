@@ -1,0 +1,185 @@
+//! Splitwise-style phase look-up-table baseline (paper §4.3).
+//!
+//! Mirrors the structure of the public Splitwise performance model: each
+//! timestep is labeled with a phase — idle, prompt (prefill-only),
+//! decode-only, or mixed — and node power is the active-GPU TDP scaled by a
+//! fixed per-phase ratio plus idle power for inactive GPUs. As in the
+//! paper, this is a *structurally matched LUT surrogate*: phase power is a
+//! constant per phase, so intermediate occupancy levels are unrepresentable
+//! — exactly the failure mode Fig. 1 / Table 2 demonstrate.
+
+use crate::catalog::{Catalog, ServerConfig};
+use crate::surrogate::ActiveInterval;
+
+/// Phase labels in the LUT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Idle,
+    Prompt,
+    Decode,
+    Mixed,
+}
+
+/// Per-phase power ratios (fraction of per-GPU TDP for the active TP
+/// group). Defaults follow the Splitwise characterization's shape:
+/// prompt ≈ 85–90% of TDP, decode ≈ 50%, mixed treated as prompt-like with
+/// a small bump.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LutRatios {
+    pub prompt: f64,
+    pub decode: f64,
+    pub mixed: f64,
+}
+
+impl Default for LutRatios {
+    fn default() -> Self {
+        LutRatios { prompt: 0.87, decode: 0.50, mixed: 0.92 }
+    }
+}
+
+/// The LUT baseline power model.
+#[derive(Debug, Clone)]
+pub struct LutBaseline {
+    pub ratios: LutRatios,
+}
+
+impl Default for LutBaseline {
+    fn default() -> Self {
+        LutBaseline { ratios: LutRatios::default() }
+    }
+}
+
+impl LutBaseline {
+    /// Label each timestep with a phase from the modeled active intervals.
+    pub fn phases(intervals: &[ActiveInterval], n_steps: usize, dt_s: f64) -> Vec<Phase> {
+        // Difference arrays over prefill spans and whole-active spans.
+        let mut pre = vec![0i32; n_steps + 1];
+        let mut act = vec![0i32; n_steps + 1];
+        let mark = |d: &mut Vec<i32>, a: f64, b: f64| {
+            let s = (a / dt_s).floor().max(0.0) as usize;
+            let e = ((b / dt_s).floor() as usize + 1).min(n_steps);
+            if s < n_steps && e > s {
+                d[s] += 1;
+                d[e] -= 1;
+            }
+        };
+        for iv in intervals {
+            mark(&mut act, iv.start_s, iv.end_s());
+            mark(&mut pre, iv.start_s, iv.start_s + iv.prefill_s);
+        }
+        let mut out = Vec::with_capacity(n_steps);
+        let (mut np, mut na) = (0i32, 0i32);
+        for t in 0..n_steps {
+            np += pre[t];
+            na += act[t];
+            out.push(match (na > 0, np > 0) {
+                (false, _) => Phase::Idle,
+                (true, false) => Phase::Decode,
+                (true, true) => {
+                    if na == np {
+                        Phase::Prompt
+                    } else {
+                        Phase::Mixed
+                    }
+                }
+            });
+        }
+        out
+    }
+
+    /// Server GPU power (W) for each timestep given the phase labels.
+    pub fn power(&self, cat: &Catalog, cfg: &ServerConfig, phases: &[Phase]) -> Vec<f32> {
+        let gpu = cat.gpu_of(cfg);
+        let inactive = (cfg.n_gpus_server - cfg.tp) as f64 * gpu.idle_w;
+        let active_tdp = cfg.tp as f64 * gpu.tdp_w;
+        let active_idle = cfg.tp as f64 * gpu.idle_w;
+        phases
+            .iter()
+            .map(|p| {
+                let w = match p {
+                    Phase::Idle => active_idle,
+                    Phase::Prompt => self.ratios.prompt * active_tdp,
+                    Phase::Decode => self.ratios.decode * active_tdp,
+                    Phase::Mixed => self.ratios.mixed * active_tdp,
+                };
+                (w + inactive) as f32
+            })
+            .collect()
+    }
+
+    /// Full pipeline: intervals → phases → power.
+    pub fn trace(
+        &self,
+        cat: &Catalog,
+        cfg: &ServerConfig,
+        intervals: &[ActiveInterval],
+        n_steps: usize,
+        dt_s: f64,
+    ) -> Vec<f32> {
+        let phases = Self::phases(intervals, n_steps, dt_s);
+        self.power(cat, cfg, &phases)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iv(start: f64, prefill: f64, decode: f64) -> ActiveInterval {
+        ActiveInterval { start_s: start, prefill_s: prefill, decode_s: decode }
+    }
+
+    #[test]
+    fn phase_labeling_sequence() {
+        // One request: prefill [1.0, 1.5), decode [1.5, 3.0).
+        let phases = LutBaseline::phases(&[iv(1.0, 0.5, 1.5)], 16, 0.25);
+        assert_eq!(phases[0], Phase::Idle);
+        assert_eq!(phases[4], Phase::Prompt); // t=1.0
+        assert_eq!(phases[7], Phase::Decode); // t=1.75
+        assert_eq!(phases[13], Phase::Idle); // after end (bin 12 inclusive)
+    }
+
+    #[test]
+    fn mixed_when_prefill_overlaps_decode() {
+        // Req A decodes while req B prefills at t=2.0.
+        let ivs = [iv(0.0, 0.25, 4.0), iv(2.0, 0.5, 1.0)];
+        let phases = LutBaseline::phases(&ivs, 20, 0.25);
+        assert_eq!(phases[8], Phase::Mixed); // t=2.0: A in decode, B in prefill
+    }
+
+    #[test]
+    fn power_levels_are_discrete() {
+        let cat = Catalog::load_default().unwrap();
+        let cfg = cat.config("llama70b_a100_tp8").unwrap();
+        let lut = LutBaseline::default();
+        let phases = vec![Phase::Idle, Phase::Prompt, Phase::Decode, Phase::Mixed];
+        let p = lut.power(&cat, cfg, &phases);
+        // TP=8 on A100: idle=440, prompt=0.87*3200, decode=0.5*3200, mixed=0.92*3200
+        assert!((p[0] as f64 - 440.0).abs() < 1e-6);
+        assert!((p[1] as f64 - 2784.0).abs() < 1e-3);
+        assert!((p[2] as f64 - 1600.0).abs() < 1e-3);
+        assert!((p[3] as f64 - 2944.0).abs() < 1e-3);
+        // Exactly 4 distinct levels ever — the LUT's structural limitation.
+        let mut distinct: Vec<f32> = p.clone();
+        distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        distinct.dedup();
+        assert_eq!(distinct.len(), 4);
+    }
+
+    #[test]
+    fn tp_subset_keeps_other_gpus_idle() {
+        let cat = Catalog::load_default().unwrap();
+        let cfg = cat.config("llama8b_a100_tp2").unwrap();
+        let lut = LutBaseline::default();
+        let p = lut.power(&cat, cfg, &[Phase::Prompt]);
+        // 2 GPUs at 0.87*400 + 6 idle at 55
+        let expect = 0.87 * 2.0 * 400.0 + 6.0 * 55.0;
+        assert!((p[0] as f64 - expect).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_intervals_is_all_idle() {
+        let phases = LutBaseline::phases(&[], 8, 0.25);
+        assert!(phases.iter().all(|&p| p == Phase::Idle));
+    }
+}

@@ -1,0 +1,70 @@
+//! Comparison baselines (paper §4.3): TDP nameplate, empirical mean power,
+//! and a Splitwise-style phase look-up-table model.
+
+pub mod lut;
+
+pub use lut::{LutBaseline, LutRatios, Phase};
+
+use crate::catalog::{Catalog, ServerConfig};
+
+/// *TDP (nameplate)*: every server draws rated TDP at all times — all 8
+/// GPUs at TDP plus the non-GPU IT base (most conservative abstraction).
+pub fn tdp_trace(cat: &Catalog, cfg: &ServerConfig, n_steps: usize) -> Vec<f32> {
+    let p = cat.server_nameplate_w(cfg) as f32;
+    vec![p; n_steps]
+}
+
+/// GPU-only TDP level (no IT base), matching how server-level fidelity
+/// metrics compare against measured GPU power.
+pub fn tdp_gpu_trace(cat: &Catalog, cfg: &ServerConfig, n_steps: usize) -> Vec<f32> {
+    let gpu = cat.gpu_of(cfg);
+    vec![(gpu.tdp_w * cfg.n_gpus_server as f64) as f32; n_steps]
+}
+
+/// *Mean power*: every server draws its empirical training-set mean at all
+/// times (`P(t) = ȳ_train`).
+pub fn mean_trace(train_mean_w: f64, n_steps: usize) -> Vec<f32> {
+    vec![train_mean_w as f32; n_steps]
+}
+
+/// Empirical mean of a set of training traces (pooled).
+pub fn pooled_mean(traces: &[Vec<f32>]) -> f64 {
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    for t in traces {
+        sum += t.iter().map(|&x| x as f64).sum::<f64>();
+        n += t.len();
+    }
+    assert!(n > 0, "pooled_mean: no samples");
+    sum / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tdp_is_nameplate_flat() {
+        let cat = Catalog::load_default().unwrap();
+        let cfg = cat.config("llama70b_a100_tp8").unwrap();
+        let t = tdp_trace(&cat, cfg, 10);
+        assert_eq!(t.len(), 10);
+        assert!(t.iter().all(|&p| p == 4200.0));
+        let g = tdp_gpu_trace(&cat, cfg, 4);
+        assert!(g.iter().all(|&p| p == 3200.0));
+    }
+
+    #[test]
+    fn mean_trace_flat() {
+        let t = mean_trace(1234.5, 3);
+        assert_eq!(t, vec![1234.5f32; 3]);
+    }
+
+    #[test]
+    fn pooled_mean_weights_by_length() {
+        let a = vec![100.0f32; 10];
+        let b = vec![200.0f32; 30];
+        let m = pooled_mean(&[a, b]);
+        assert!((m - 175.0).abs() < 1e-9);
+    }
+}

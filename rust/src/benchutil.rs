@@ -1,0 +1,103 @@
+//! Micro-benchmark harness for the `benches/` targets (criterion is
+//! unavailable offline — DESIGN.md §3).
+//!
+//! Provides warmup, adaptive iteration counts, and mean/p50/p95 reporting in
+//! a stable text format that EXPERIMENTS.md quotes. Benches are built with
+//! `harness = false` and call [`Bench::run`] per case.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters={:<5} mean={:>12?} p50={:>12?} p95={:>12?} min={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        );
+    }
+}
+
+pub struct Bench {
+    /// Target total measurement time per case.
+    pub budget: Duration,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // `cargo bench -- --fast` or POWERTRACE_BENCH_FAST=1 shrink budgets
+        // (used in CI / the final log capture).
+        let fast = std::env::var("POWERTRACE_BENCH_FAST").is_ok()
+            || std::env::args().any(|a| a == "--fast");
+        Bench {
+            budget: if fast { Duration::from_millis(300) } else { Duration::from_secs(2) },
+            max_iters: if fast { 20 } else { 200 },
+        }
+    }
+}
+
+impl Bench {
+    /// Measure `f`, which performs one logical iteration and returns a value
+    /// that is black-boxed to prevent dead-code elimination.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup: one untimed call (also forces lazy init like PJRT compile).
+        black_box(f());
+
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            samples.push(Duration::ZERO);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort();
+        let total: Duration = samples.iter().sum();
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: total / samples.len() as u32,
+            p50: sorted[sorted.len() / 2],
+            p95: sorted[((sorted.len() as f64 * 0.95) as usize).min(sorted.len() - 1)],
+            min: sorted[0],
+        };
+        result.report();
+        result
+    }
+}
+
+/// Opaque value sink (std::hint::black_box is stable since 1.66).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench { budget: Duration::from_millis(20), max_iters: 10 };
+        let r = b.run("noop", || 42u64);
+        assert!(r.iters >= 1 && r.iters <= 10);
+        assert!(r.p50 <= r.p95);
+        assert!(r.min <= r.mean * 2);
+    }
+}

@@ -1,0 +1,182 @@
+//! Fixed-shape chunked inference.
+//!
+//! The AOT-compiled HLO has a static sequence length (T = 512), so long
+//! traces are processed in overlapping windows: each window carries a halo
+//! of context on both sides (the BiGRU is bidirectional, so both edges
+//! matter) and only the interior `core = T − 2·halo` rows are kept. Short
+//! sequences are zero-padded on the right (zero features = idle, the
+//! natural boundary condition).
+
+use super::StateClassifier;
+use anyhow::{ensure, Result};
+
+/// Chunking geometry. Defaults match `artifacts/manifest.json`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkSpec {
+    /// Static sequence length of the compiled artifact.
+    pub t: usize,
+    /// Context rows discarded on each side of a window interior.
+    pub halo: usize,
+}
+
+impl Default for ChunkSpec {
+    fn default() -> Self {
+        ChunkSpec { t: 512, halo: 64 }
+    }
+}
+
+impl ChunkSpec {
+    pub fn core(&self) -> usize {
+        self.t - 2 * self.halo
+    }
+}
+
+/// A fixed-shape backend: probabilities for exactly `spec.t` timesteps.
+pub trait FixedLenClassifier {
+    fn spec(&self) -> ChunkSpec;
+    fn k_max(&self) -> usize;
+    /// `features.len() == 2 * spec.t` → probs `[spec.t, k_max]`.
+    fn probs_fixed(&self, features: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// Adapts a [`FixedLenClassifier`] to arbitrary-length sequences.
+pub struct Chunked<B: FixedLenClassifier> {
+    pub backend: B,
+}
+
+impl<B: FixedLenClassifier> Chunked<B> {
+    pub fn new(backend: B) -> Self {
+        Chunked { backend }
+    }
+}
+
+impl<B: FixedLenClassifier> StateClassifier for Chunked<B> {
+    fn k_max(&self) -> usize {
+        self.backend.k_max()
+    }
+
+    fn probs(&self, features: &[f32], t_len: usize) -> Result<Vec<f32>> {
+        ensure!(features.len() == 2 * t_len, "features length mismatch");
+        let spec = self.backend.spec();
+        ensure!(spec.core() > 0, "halo too large for chunk length");
+        let k = self.backend.k_max();
+        let core = spec.core();
+        let mut out = vec![0.0f32; t_len * k];
+        let mut window = vec![0.0f32; 2 * spec.t];
+
+        let mut out_start = 0usize;
+        while out_start < t_len {
+            // Window begins `halo` before the interior when possible. The
+            // final window is shifted left to stay fully inside the
+            // sequence (no right padding) so the backward scan starts from
+            // the true sequence end; zero padding only remains for
+            // sequences shorter than one window.
+            let mut in_start = out_start.saturating_sub(spec.halo);
+            if in_start + spec.t > t_len && t_len >= spec.t {
+                in_start = t_len - spec.t;
+            }
+            let in_end = (in_start + spec.t).min(t_len);
+            let n_in = in_end - in_start;
+            window[..2 * n_in].copy_from_slice(&features[2 * in_start..2 * in_end]);
+            window[2 * n_in..].fill(0.0); // right zero-pad (idle)
+            let probs = self.backend.probs_fixed(&window)?;
+            ensure!(probs.len() == spec.t * k, "backend returned wrong shape");
+
+            let rel = out_start - in_start; // offset of interior in window
+            let take = core.min(t_len - out_start).min(spec.t - rel);
+            out[out_start * k..(out_start + take) * k]
+                .copy_from_slice(&probs[rel * k..(rel + take) * k]);
+            out_start += take;
+        }
+        Ok(out)
+    }
+}
+
+/// Wrap a whole-sequence classifier as a fixed-length backend (used to test
+/// chunking against the native model and as the PJRT cross-check).
+pub struct FixedAdapter<C: StateClassifier> {
+    pub inner: C,
+    pub spec: ChunkSpec,
+}
+
+impl<C: StateClassifier> FixedLenClassifier for FixedAdapter<C> {
+    fn spec(&self) -> ChunkSpec {
+        self.spec
+    }
+    fn k_max(&self) -> usize {
+        self.inner.k_max()
+    }
+    fn probs_fixed(&self, features: &[f32]) -> Result<Vec<f32>> {
+        self.inner.probs(features, self.spec.t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::native::tests::{random_features, random_weights};
+    use crate::classifier::{NativeBiGru, K_MAX};
+
+    fn chunked(seed: u64, spec: ChunkSpec) -> Chunked<FixedAdapter<NativeBiGru>> {
+        Chunked::new(FixedAdapter { inner: NativeBiGru::new(random_weights(seed)), spec })
+    }
+
+    #[test]
+    fn chunked_matches_unchunked_away_from_halos() {
+        let model = NativeBiGru::new(random_weights(11));
+        let spec = ChunkSpec { t: 128, halo: 32 };
+        let ch = chunked(11, spec);
+        let t_len = 300;
+        let xs = random_features(t_len, 12);
+        let full = model.probs(&xs, t_len).unwrap();
+        let chunked_probs = ch.probs(&xs, t_len).unwrap();
+        assert_eq!(chunked_probs.len(), full.len());
+        // Differences only from truncated context at window edges; with a
+        // 32-step halo the GRU state has effectively converged (update-gate
+        // leakage halves influence roughly every step), so rows agree
+        // tightly everywhere.
+        let mut max_diff = 0.0f32;
+        for (a, b) in full.iter().zip(&chunked_probs) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+        assert!(max_diff < 5e-3, "max diff {max_diff}");
+    }
+
+    #[test]
+    fn short_sequence_single_padded_window() {
+        let spec = ChunkSpec { t: 64, halo: 16 };
+        let ch = chunked(13, spec);
+        let xs = random_features(10, 14);
+        let p = ch.probs(&xs, 10).unwrap();
+        assert_eq!(p.len(), 10 * K_MAX);
+        for row in p.chunks(K_MAX) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn exact_multiple_lengths() {
+        let spec = ChunkSpec { t: 32, halo: 8 };
+        let ch = chunked(15, spec);
+        for t_len in [16, 32, 48, 64, 100] {
+            let xs = random_features(t_len, 16);
+            let p = ch.probs(&xs, t_len).unwrap();
+            assert_eq!(p.len(), t_len * K_MAX, "t_len {t_len}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_lengths() {
+        let ch = chunked(17, ChunkSpec::default());
+        assert!(ch.probs(&[0.0; 7], 3).is_err());
+    }
+
+    #[test]
+    fn default_spec_geometry() {
+        let s = ChunkSpec::default();
+        assert_eq!(s.t, 512);
+        assert_eq!(s.halo, 64);
+        assert_eq!(s.core(), 384);
+    }
+}

@@ -1,0 +1,67 @@
+//! The temporal state classifier (paper §3.2, Eq. 3): a bidirectional GRU
+//! mapping workload features `x_t = (A_t, ΔA_t)` to per-timestep state
+//! posteriors `P(z_t = k | X)`.
+//!
+//! Two interchangeable backends:
+//! * [`native::NativeBiGru`] — pure-Rust forward pass (portable; also the
+//!   numerical cross-check for the artifact path);
+//! * [`pjrt::PjrtClassifier`] — executes the AOT-compiled XLA artifact
+//!   (`artifacts/bigru_fwd.hlo.txt`, lowered from the L2 JAX model whose
+//!   hot loop is the L1 Pallas GRU kernel) through the PJRT CPU client.
+//!
+//! Both consume the same flat parameter vector (layout in DESIGN.md §6)
+//! and the same chunking scheme ([`chunk`]) for long traces.
+
+pub mod chunk;
+pub mod native;
+pub mod pjrt;
+
+pub use chunk::{ChunkSpec, Chunked};
+pub use native::{BiGruWeights, NativeBiGru};
+pub use pjrt::PjrtClassifier;
+
+use anyhow::Result;
+
+/// Feature transform baked into the model definition on both the Python
+/// and Rust sides (keep in sync with `python/compile/model.py`):
+/// `log1p` compresses the saturating tail of the occupancy→power curve
+/// while keeping low-occupancy levels (idle vs A=1 vs A=2) separated.
+#[inline]
+pub fn scale_features(a: f32, da: f32) -> (f32, f32) {
+    let fa = a.max(0.0).ln_1p() * 0.5;
+    let fda = da.signum() * da.abs().ln_1p() * 0.5;
+    (fa, if fda.is_nan() { 0.0 } else { fda })
+}
+
+/// Hidden size used throughout (paper §4.1: H = 64).
+pub const HIDDEN: usize = 64;
+/// Maximum number of states; configs with K < K_MAX mask unused logits.
+pub const K_MAX: usize = 12;
+/// Flat parameter count for (HIDDEN, K_MAX, input=2).
+pub const N_PARAMS: usize = flat_param_count(HIDDEN, K_MAX);
+
+/// Flat parameter count: two directions of (W_ih[3H,2] + b_ih[3H] +
+/// W_hh[3H,H] + b_hh[3H]) plus the head (W[K,2H] + b[K]).
+pub const fn flat_param_count(h: usize, k: usize) -> usize {
+    2 * (3 * h * 2 + 3 * h + 3 * h * h + 3 * h) + k * 2 * h + k
+}
+
+/// A classifier backend: features `[T,2]` (raw, unscaled, interleaved) →
+/// state posteriors `[T, k_max]` row-major.
+pub trait StateClassifier {
+    fn k_max(&self) -> usize;
+    /// `features.len() == 2 * t`.
+    fn probs(&self, features: &[f32], t: usize) -> Result<Vec<f32>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_design() {
+        // DESIGN.md §6: 27,660 f32 for H=64, K=12, input 2.
+        assert_eq!(N_PARAMS, 27_660);
+        assert_eq!(flat_param_count(2, 3), 2 * (12 + 6 + 12 + 6) + 3 * 4 + 3);
+    }
+}

@@ -1,0 +1,321 @@
+//! Pure-Rust BiGRU forward pass, numerically identical (to f32 rounding)
+//! to the JAX model in `python/compile/model.py`.
+//!
+//! Gate convention (torch order r, z, n):
+//! ```text
+//! r = σ(W_ir·x + b_ir + W_hr·h + b_hr)
+//! z = σ(W_iz·x + b_iz + W_hz·h + b_hz)
+//! n = tanh(W_in·x + b_in + r ⊙ (W_hn·h + b_hn))
+//! h' = (1 − z) ⊙ n + z ⊙ h
+//! ```
+//! The head is a linear layer over the concatenated [fwd, bwd] hidden
+//! state followed by softmax over `k_max` logits.
+
+use super::{scale_features, StateClassifier};
+use anyhow::{ensure, Result};
+
+/// Flat BiGRU parameters (layout in DESIGN.md §6).
+#[derive(Debug, Clone)]
+pub struct BiGruWeights {
+    pub h: usize,
+    pub k_max: usize,
+    pub flat: Vec<f32>,
+}
+
+/// Borrowed views into one direction's parameter block.
+struct DirView<'a> {
+    w_ih: &'a [f32], // [3H, 2] row-major
+    b_ih: &'a [f32], // [3H]
+    w_hh: &'a [f32], // [3H, H] row-major
+    b_hh: &'a [f32], // [3H]
+}
+
+impl BiGruWeights {
+    pub fn new(h: usize, k_max: usize, flat: Vec<f32>) -> Result<BiGruWeights> {
+        let expect = super::flat_param_count(h, k_max);
+        ensure!(flat.len() == expect, "expected {expect} params, got {}", flat.len());
+        ensure!(flat.iter().all(|x| x.is_finite()), "non-finite weight");
+        Ok(BiGruWeights { h, k_max, flat })
+    }
+
+    fn dir(&self, d: usize) -> DirView<'_> {
+        let h = self.h;
+        let block = 3 * h * 2 + 3 * h + 3 * h * h + 3 * h;
+        let base = d * block;
+        let mut o = base;
+        let mut take = |n: usize| {
+            let s = &self.flat[o..o + n];
+            o += n;
+            s
+        };
+        DirView {
+            w_ih: take(3 * h * 2),
+            b_ih: take(3 * h),
+            w_hh: take(3 * h * h),
+            b_hh: take(3 * h),
+        }
+    }
+
+    fn head(&self) -> (&[f32], &[f32]) {
+        let h = self.h;
+        let block = 3 * h * 2 + 3 * h + 3 * h * h + 3 * h;
+        let base = 2 * block;
+        let w = &self.flat[base..base + self.k_max * 2 * h];
+        let b = &self.flat[base + self.k_max * 2 * h..];
+        (w, b)
+    }
+}
+
+/// Native backend.
+#[derive(Debug, Clone)]
+pub struct NativeBiGru {
+    pub weights: BiGruWeights,
+}
+
+impl NativeBiGru {
+    pub fn new(weights: BiGruWeights) -> NativeBiGru {
+        NativeBiGru { weights }
+    }
+
+    /// Run one direction over scaled features, writing hidden states into
+    /// `hs` (row t = h_t, length T*H). `reverse` scans right-to-left.
+    fn scan_direction(&self, xs: &[f32], t_len: usize, dir: usize, reverse: bool, hs: &mut [f32]) {
+        let h = self.weights.h;
+        let v = self.weights.dir(dir);
+        let mut hidden = vec![0.0f32; h];
+        let mut gates_i = vec![0.0f32; 3 * h];
+        let mut gates_h = vec![0.0f32; 3 * h];
+        let steps: Box<dyn Iterator<Item = usize>> = if reverse {
+            Box::new((0..t_len).rev())
+        } else {
+            Box::new(0..t_len)
+        };
+        for t in steps {
+            let x0 = xs[2 * t];
+            let x1 = xs[2 * t + 1];
+            // gates_i = W_ih · x + b_ih  (input dim fixed at 2)
+            for j in 0..3 * h {
+                gates_i[j] = v.w_ih[2 * j] * x0 + v.w_ih[2 * j + 1] * x1 + v.b_ih[j];
+            }
+            // gates_h = W_hh · h + b_hh
+            gemv_3h(v.w_hh, &hidden, v.b_hh, h, &mut gates_h);
+            for j in 0..h {
+                let r = sigmoid(gates_i[j] + gates_h[j]);
+                let z = sigmoid(gates_i[h + j] + gates_h[h + j]);
+                let n = (gates_i[2 * h + j] + r * gates_h[2 * h + j]).tanh();
+                hidden[j] = (1.0 - z) * n + z * hidden[j];
+            }
+            hs[t * h..(t + 1) * h].copy_from_slice(&hidden);
+        }
+    }
+}
+
+/// out = W[3H, H] · h + b, row-major W.
+///
+/// The inner dot product is written over `chunks_exact(8)` with independent
+/// partial sums so LLVM vectorizes it to AVX FMA lanes (H = 64 → 8 chunks);
+/// this is the hot loop of the whole generation pipeline (§Perf).
+#[inline]
+fn gemv_3h(w: &[f32], hidden: &[f32], b: &[f32], h: usize, out: &mut [f32]) {
+    for j in 0..3 * h {
+        let row = &w[j * h..(j + 1) * h];
+        out[j] = dot(row, hidden) + b[j];
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let (ca, ra) = a.split_at(a.len() - a.len() % 8);
+    let (cb, rb) = b.split_at(ca.len());
+    for (xs, ys) in ca.chunks_exact(8).zip(cb.chunks_exact(8)) {
+        for l in 0..8 {
+            acc[l] += xs[l] * ys[l];
+        }
+    }
+    let mut total: f32 = acc.iter().sum();
+    for (x, y) in ra.iter().zip(rb) {
+        total += x * y;
+    }
+    total
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl StateClassifier for NativeBiGru {
+    fn k_max(&self) -> usize {
+        self.weights.k_max
+    }
+
+    fn probs(&self, features: &[f32], t_len: usize) -> Result<Vec<f32>> {
+        ensure!(features.len() == 2 * t_len, "features length mismatch");
+        let h = self.weights.h;
+        let k = self.weights.k_max;
+        // Feature transform (matches the JAX model exactly).
+        let mut xs = vec![0.0f32; 2 * t_len];
+        for t in 0..t_len {
+            let (fa, fda) = scale_features(features[2 * t], features[2 * t + 1]);
+            xs[2 * t] = fa;
+            xs[2 * t + 1] = fda;
+        }
+        let mut h_fwd = vec![0.0f32; t_len * h];
+        let mut h_bwd = vec![0.0f32; t_len * h];
+        self.scan_direction(&xs, t_len, 0, false, &mut h_fwd);
+        self.scan_direction(&xs, t_len, 1, true, &mut h_bwd);
+
+        let (w_head, b_head) = self.weights.head();
+        let mut out = vec![0.0f32; t_len * k];
+        let mut logits = vec![0.0f32; k];
+        for t in 0..t_len {
+            let hf = &h_fwd[t * h..(t + 1) * h];
+            let hb = &h_bwd[t * h..(t + 1) * h];
+            for (j, l) in logits.iter_mut().enumerate() {
+                let row = &w_head[j * 2 * h..(j + 1) * 2 * h];
+                *l = b_head[j] + dot(&row[..h], hf) + dot(&row[h..], hb);
+            }
+            softmax_into(&logits, &mut out[t * k..(t + 1) * k]);
+        }
+        Ok(out)
+    }
+}
+
+fn softmax_into(logits: &[f32], out: &mut [f32]) {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut total = 0.0f32;
+    for (o, &l) in out.iter_mut().zip(logits) {
+        let e = (l - m).exp();
+        *o = e;
+        total += e;
+    }
+    for o in out.iter_mut() {
+        *o /= total;
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::classifier::{flat_param_count, HIDDEN, K_MAX};
+    use crate::util::rng::Rng;
+
+    /// Random weights with sensible scale for tests.
+    pub fn random_weights(seed: u64) -> BiGruWeights {
+        let mut rng = Rng::new(seed);
+        let n = flat_param_count(HIDDEN, K_MAX);
+        let flat: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.12) as f32).collect();
+        BiGruWeights::new(HIDDEN, K_MAX, flat).unwrap()
+    }
+
+    /// Random feature sequence resembling real (A, ΔA) traces.
+    pub fn random_features(t_len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut a = 0.0f32;
+        let mut out = Vec::with_capacity(2 * t_len);
+        for _ in 0..t_len {
+            let da = (rng.below(5) as i32 - 2).max(-(a as i32)) as f32;
+            a += da;
+            out.push(a);
+            out.push(da);
+        }
+        out
+    }
+
+    #[test]
+    fn output_shape_and_normalization() {
+        let model = NativeBiGru::new(random_weights(1));
+        let xs = random_features(37, 2);
+        let p = model.probs(&xs, 37).unwrap();
+        assert_eq!(p.len(), 37 * K_MAX);
+        for row in p.chunks(K_MAX) {
+            let total: f32 = row.iter().sum();
+            assert!((total - 1.0).abs() < 1e-5, "row sums to {total}");
+            assert!(row.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let model = NativeBiGru::new(random_weights(3));
+        let xs = random_features(50, 4);
+        assert_eq!(model.probs(&xs, 50).unwrap(), model.probs(&xs, 50).unwrap());
+    }
+
+    #[test]
+    fn bidirectional_context_affects_early_timesteps() {
+        // Changing only the last feature must change the first timestep's
+        // posterior (the backward pass carries it) — a pure causal model
+        // would not.
+        let model = NativeBiGru::new(random_weights(5));
+        let t_len = 8;
+        let mut xs = random_features(t_len, 6);
+        let p1 = model.probs(&xs, t_len).unwrap();
+        xs[2 * (t_len - 1)] += 40.0; // bump A at the last step
+        let p2 = model.probs(&xs, t_len).unwrap();
+        let d0: f32 = (0..K_MAX).map(|j| (p1[j] - p2[j]).abs()).sum();
+        assert!(d0 > 1e-6, "first-step posterior unchanged: {d0}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let model = NativeBiGru::new(random_weights(7));
+        assert!(model.probs(&[1.0, 2.0, 3.0], 2).is_err());
+        assert!(BiGruWeights::new(HIDDEN, K_MAX, vec![0.0; 10]).is_err());
+        let mut flat = vec![0.0f32; flat_param_count(HIDDEN, K_MAX)];
+        flat[0] = f32::NAN;
+        assert!(BiGruWeights::new(HIDDEN, K_MAX, flat).is_err());
+    }
+
+    #[test]
+    fn hand_computed_tiny_gru() {
+        // H=1, K=1 analytic check. Layout per direction:
+        // w_ih [3,2], b_ih [3], w_hh [3,1], b_hh [3]; head w [1,2], b [1].
+        let h = 1;
+        let k = 1;
+        let mut flat = Vec::new();
+        // forward dir: w_ih rows r,z,n
+        flat.extend([0.0, 0.0, 0.0, 0.0, 1.0, 0.0]); // w_ih: n gate reads x0
+        flat.extend([0.0, 0.0, 0.0]); // b_ih
+        flat.extend([0.0, 0.0, 0.0]); // w_hh
+        flat.extend([0.0, 0.0, 0.0]); // b_hh
+        // backward dir: all zeros
+        flat.extend(vec![0.0; 6 + 3 + 3 + 3]);
+        // head: w [1,2] = [1, 0], b = [0]
+        flat.extend([1.0, 0.0, 0.0]);
+        assert_eq!(flat.len(), flat_param_count(h, k));
+        let w = BiGruWeights::new(h, k, flat).unwrap();
+        let model = NativeBiGru { weights: w };
+        // Single timestep, x = (A=64, dA=0) → scaled x0 = log1p(64)/2.
+        let p = model.probs(&[64.0, 0.0], 1).unwrap();
+        // K=1 → softmax is 1.0 regardless; instead check via hidden by
+        // swapping the head to read h directly... K=1 softmax collapses, so
+        // just assert normalization here.
+        assert_eq!(p, vec![1.0]);
+    }
+
+    #[test]
+    fn gru_cell_matches_manual_two_state() {
+        // H=1, K=2: head reads h_fwd into logit 0 and 0 into logit 1 so we
+        // can recover tanh-level values through the softmax.
+        let h = 1;
+        let k = 2;
+        let mut flat = Vec::new();
+        flat.extend([0.0, 0.0, 0.0, 0.0, 1.0, 0.0]); // fwd w_ih (n reads x0)
+        flat.extend([0.0, 0.0, 0.0]);
+        flat.extend([0.0, 0.0, 0.0]);
+        flat.extend([0.0, 0.0, 0.0]);
+        flat.extend(vec![0.0; 15]); // bwd all zero
+        flat.extend([1.0, 0.0, 0.0, 0.0]); // head w [2,2]: logit0 = h_fwd
+        flat.extend([0.0, 0.0]); // head b
+        assert_eq!(flat.len(), flat_param_count(h, k));
+        let model = NativeBiGru { weights: BiGruWeights::new(h, k, flat).unwrap() };
+        let p = model.probs(&[64.0, 0.0], 1).unwrap();
+        // x0 = log1p(64)/2; h_fwd = 0.5·tanh(x0); logits = [h_fwd, 0]
+        let x0 = (65.0f32).ln() * 0.5;
+        let expected0 = 1.0 / (1.0 + (-0.5f32 * x0.tanh()).exp());
+        assert!((p[0] - expected0).abs() < 1e-5, "{} vs {expected0}", p[0]);
+    }
+}

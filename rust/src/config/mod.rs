@@ -1,0 +1,285 @@
+//! Planner-facing configuration (paper §3.1): facility topology, server
+//! configuration, workload scenario, and site-level assumptions, with JSON
+//! round-trip so scenarios are files a planner can version and share.
+
+use crate::aggregate::Topology;
+use crate::util::json::{self, Json};
+use crate::workload::TrafficMode;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Workload scenario: the request arrival process driving every server.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// Poisson arrivals at a fixed per-server rate (req/s).
+    Poisson { rate: f64 },
+    /// Bursty MMPP around a mean per-server rate.
+    Mmpp { mean_rate: f64, burstiness: f64 },
+    /// Diurnal Azure-like profile (paper §4.4).
+    Diurnal {
+        base_rate: f64,
+        swing: f64,
+        peak_hour: f64,
+        burst_sigma: f64,
+        mode: TrafficMode,
+    },
+    /// Replay a schedule from a JSON file (every server gets the same
+    /// schedule shifted by a per-server random offset).
+    Replay { path: String, offset_s: f64 },
+}
+
+/// Dataset length profile selection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Which serving configuration every server runs (homogeneous), or
+    /// per-rack assignments (heterogeneous fleets).
+    pub server_config: ServerAssignment,
+    pub topology: Topology,
+    pub workload: WorkloadSpec,
+    /// Length-profile dataset key from the catalog (e.g. "sharegpt").
+    pub dataset: String,
+    /// Trace horizon in seconds.
+    pub horizon_s: f64,
+    /// Per-server non-GPU IT power (W); paper default 1000.
+    pub p_base_w: f64,
+    /// Site PUE; paper default 1.3.
+    pub pue: f64,
+    /// RNG seed for the whole scenario.
+    pub seed: u64,
+}
+
+/// Server-to-configuration mapping.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerAssignment {
+    /// All servers run the same configuration.
+    Uniform(String),
+    /// Per-rack configuration ids, cycled over racks (heterogeneous halls,
+    /// paper §5.2 "mixed deployments").
+    PerRack(Vec<String>),
+}
+
+impl ServerAssignment {
+    /// Configuration id for a flat server index.
+    pub fn config_for(&self, topo: &Topology, server_idx: usize) -> &str {
+        match self {
+            ServerAssignment::Uniform(id) => id,
+            ServerAssignment::PerRack(ids) => {
+                let rack = topo.rack_of(server_idx);
+                &ids[rack % ids.len()]
+            }
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// A small default scenario (quickstart).
+    pub fn default_poisson(config_id: &str, rate: f64) -> ScenarioSpec {
+        ScenarioSpec {
+            server_config: ServerAssignment::Uniform(config_id.to_string()),
+            topology: Topology { rows: 1, racks_per_row: 1, servers_per_rack: 1 },
+            workload: WorkloadSpec::Poisson { rate },
+            dataset: "sharegpt".to_string(),
+            horizon_s: 600.0,
+            p_base_w: 1000.0,
+            pue: 1.3,
+            seed: 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let workload = match &self.workload {
+            WorkloadSpec::Poisson { rate } => {
+                json::obj([("kind", "poisson".into()), ("rate", (*rate).into())])
+            }
+            WorkloadSpec::Mmpp { mean_rate, burstiness } => json::obj([
+                ("kind", "mmpp".into()),
+                ("mean_rate", (*mean_rate).into()),
+                ("burstiness", (*burstiness).into()),
+            ]),
+            WorkloadSpec::Diurnal { base_rate, swing, peak_hour, burst_sigma, mode } => json::obj([
+                ("kind", "diurnal".into()),
+                ("base_rate", (*base_rate).into()),
+                ("swing", (*swing).into()),
+                ("peak_hour", (*peak_hour).into()),
+                ("burst_sigma", (*burst_sigma).into()),
+                (
+                    "mode",
+                    match mode {
+                        TrafficMode::Independent => "independent".into(),
+                        TrafficMode::SharedIntensity => "shared".into(),
+                    },
+                ),
+            ]),
+            WorkloadSpec::Replay { path, offset_s } => json::obj([
+                ("kind", "replay".into()),
+                ("path", path.as_str().into()),
+                ("offset_s", (*offset_s).into()),
+            ]),
+        };
+        let server_config = match &self.server_config {
+            ServerAssignment::Uniform(id) => Json::Str(id.clone()),
+            ServerAssignment::PerRack(ids) => {
+                Json::Arr(ids.iter().map(|s| Json::Str(s.clone())).collect())
+            }
+        };
+        json::obj([
+            ("server_config", server_config),
+            (
+                "topology",
+                json::obj([
+                    ("rows", self.topology.rows.into()),
+                    ("racks_per_row", self.topology.racks_per_row.into()),
+                    ("servers_per_rack", self.topology.servers_per_rack.into()),
+                ]),
+            ),
+            ("workload", workload),
+            ("dataset", self.dataset.as_str().into()),
+            ("horizon_s", self.horizon_s.into()),
+            ("p_base_w", self.p_base_w.into()),
+            ("pue", self.pue.into()),
+            ("seed", self.seed.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ScenarioSpec> {
+        let t = v.get("topology")?;
+        let topology = Topology {
+            rows: t.usize_field("rows")?,
+            racks_per_row: t.usize_field("racks_per_row")?,
+            servers_per_rack: t.usize_field("servers_per_rack")?,
+        };
+        if topology.n_servers() == 0 {
+            bail!("topology has zero servers");
+        }
+        let w = v.get("workload")?;
+        let workload = match w.str_field("kind")?.as_str() {
+            "poisson" => WorkloadSpec::Poisson { rate: w.f64_field("rate")? },
+            "mmpp" => WorkloadSpec::Mmpp {
+                mean_rate: w.f64_field("mean_rate")?,
+                burstiness: w.f64_field("burstiness")?,
+            },
+            "diurnal" => WorkloadSpec::Diurnal {
+                base_rate: w.f64_field("base_rate")?,
+                swing: w.f64_field("swing")?,
+                peak_hour: w.f64_field("peak_hour")?,
+                burst_sigma: w.f64_field("burst_sigma")?,
+                mode: match w.str_field("mode")?.as_str() {
+                    "independent" => TrafficMode::Independent,
+                    "shared" => TrafficMode::SharedIntensity,
+                    other => bail!("unknown traffic mode '{other}'"),
+                },
+            },
+            "replay" => WorkloadSpec::Replay {
+                path: w.str_field("path")?,
+                offset_s: w.f64_field("offset_s").unwrap_or(0.0),
+            },
+            other => bail!("unknown workload kind '{other}'"),
+        };
+        let server_config = match v.get("server_config")? {
+            Json::Str(s) => ServerAssignment::Uniform(s.clone()),
+            Json::Arr(a) => ServerAssignment::PerRack(
+                a.iter().map(|x| x.as_str().map(String::from)).collect::<Result<_, _>>()?,
+            ),
+            _ => bail!("server_config must be a string or array of strings"),
+        };
+        let spec = ScenarioSpec {
+            server_config,
+            topology,
+            workload,
+            dataset: v.str_field("dataset")?,
+            horizon_s: v.f64_field("horizon_s")?,
+            p_base_w: v.f64_field("p_base_w")?,
+            pue: v.f64_field("pue")?,
+            seed: v.f64_field("seed")? as u64,
+        };
+        if spec.horizon_s <= 0.0 {
+            bail!("horizon_s must be positive");
+        }
+        if spec.pue < 1.0 {
+            bail!("pue must be >= 1.0 (got {})", spec.pue);
+        }
+        Ok(spec)
+    }
+
+    pub fn load(path: &Path) -> Result<ScenarioSpec> {
+        let v = json::parse_file(path).map_err(anyhow::Error::from)?;
+        Self::from_json(&v).with_context(|| format!("parsing scenario {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        json::write_file(path, &self.to_json()).map_err(anyhow::Error::from)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_workload_kinds() {
+        let mut spec = ScenarioSpec::default_poisson("llama70b_a100_tp8", 0.5);
+        for wl in [
+            WorkloadSpec::Poisson { rate: 1.5 },
+            WorkloadSpec::Mmpp { mean_rate: 0.7, burstiness: 4.0 },
+            WorkloadSpec::Diurnal {
+                base_rate: 0.5,
+                swing: 0.6,
+                peak_hour: 15.0,
+                burst_sigma: 0.3,
+                mode: TrafficMode::SharedIntensity,
+            },
+            WorkloadSpec::Replay { path: "trace.json".into(), offset_s: 30.0 },
+        ] {
+            spec.workload = wl.clone();
+            let back = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn roundtrip_per_rack_assignment() {
+        let mut spec = ScenarioSpec::default_poisson("x", 1.0);
+        spec.server_config =
+            ServerAssignment::PerRack(vec!["a".into(), "b".into(), "c".into()]);
+        spec.topology = Topology { rows: 2, racks_per_row: 3, servers_per_rack: 2 };
+        let back = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn per_rack_assignment_cycles() {
+        let topo = Topology { rows: 1, racks_per_row: 4, servers_per_rack: 2 };
+        let a = ServerAssignment::PerRack(vec!["x".into(), "y".into()]);
+        assert_eq!(a.config_for(&topo, 0), "x"); // rack 0
+        assert_eq!(a.config_for(&topo, 2), "y"); // rack 1
+        assert_eq!(a.config_for(&topo, 4), "x"); // rack 2 cycles
+        let u = ServerAssignment::Uniform("z".into());
+        assert_eq!(u.config_for(&topo, 5), "z");
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let spec = ScenarioSpec::default_poisson("c", 1.0);
+        let mut j = spec.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("pue".into(), Json::Num(0.5));
+        }
+        assert!(ScenarioSpec::from_json(&j).is_err());
+
+        let mut j = spec.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("horizon_s".into(), Json::Num(-1.0));
+        }
+        assert!(ScenarioSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("powertrace_test_config");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("scenario.json");
+        let spec = ScenarioSpec::default_poisson("llama8b_a100_tp2", 0.25);
+        spec.save(&p).unwrap();
+        assert_eq!(ScenarioSpec::load(&p).unwrap(), spec);
+    }
+}

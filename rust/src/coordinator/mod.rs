@@ -1,0 +1,34 @@
+//! The generation coordinator — the L3 system that turns a planner-facing
+//! scenario into server/rack/row/facility power traces (paper Fig. 2,
+//! right half).
+//!
+//! Per server: schedule → surrogate queue → features `(A_t, ΔA_t)` →
+//! classifier posteriors → state sampling → state-conditioned power
+//! sampling → clip. Servers fan out across a thread pool and reduce into a
+//! streaming [`FacilityAccumulator`].
+
+pub mod pipeline;
+
+pub use pipeline::{Generator, ServerTrace};
+
+use crate::aggregate::FacilityAccumulator;
+use crate::config::ScenarioSpec;
+
+/// Result of a facility-scale generation run.
+pub struct FacilityResult {
+    pub scenario: ScenarioSpec,
+    pub dt_s: f64,
+    pub acc: FacilityAccumulator,
+}
+
+impl FacilityResult {
+    /// Facility power at the PCC (PUE applied).
+    pub fn facility_series(&self) -> Vec<f32> {
+        self.acc.facility_series(self.scenario.pue)
+    }
+
+    /// Facility IT power.
+    pub fn it_series(&self) -> Vec<f32> {
+        self.acc.site_it_series()
+    }
+}

@@ -1,0 +1,248 @@
+//! Generation pipeline implementation.
+
+use super::FacilityResult;
+use crate::aggregate::FacilityAccumulator;
+use crate::artifacts::{ArtifactStore, ConfigArtifact};
+use crate::catalog::Catalog;
+use crate::classifier::{
+    pjrt::{AnyClassifier, PjrtBiGru},
+    NativeBiGru, StateClassifier,
+};
+use crate::classifier::native::BiGruWeights;
+use crate::config::{ScenarioSpec, WorkloadSpec};
+use crate::runtime::{Executable, Runtime};
+use crate::surrogate::{features_from_intervals, simulate_queue};
+use crate::synth::{sample_power, sample_states};
+use crate::util::rng::Rng;
+use crate::util::threadpool::{default_workers, parallel_fold};
+use crate::workload::{
+    poisson_arrivals, replay, DiurnalProfile, LengthSampler, Mmpp, Schedule, TrafficMode,
+};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Which classifier backend the generator uses.
+pub enum Backend {
+    /// Pure-Rust BiGRU (portable, no artifacts HLO needed beyond weights).
+    Native,
+    /// AOT-compiled XLA artifact through PJRT (the production path).
+    Pjrt(Arc<Executable>),
+}
+
+/// One generated server trace plus its intermediate products (useful for
+/// figures and diagnostics).
+pub struct ServerTrace {
+    pub power_w: Vec<f32>,
+    pub a: Vec<f32>,
+    pub states: Vec<usize>,
+}
+
+/// The trace generator: catalog + artifacts + classifier backend.
+pub struct Generator {
+    pub cat: Catalog,
+    pub store: ArtifactStore,
+    backend: Backend,
+    configs: BTreeMap<String, Arc<ConfigArtifact>>,
+}
+
+impl Generator {
+    /// Open with the native classifier backend.
+    pub fn native() -> Result<Generator> {
+        let cat = Catalog::load_default()?;
+        let store = ArtifactStore::open_default()?;
+        Ok(Generator { cat, store, backend: Backend::Native, configs: BTreeMap::new() })
+    }
+
+    /// Open with the PJRT backend (compiles the HLO artifact once).
+    pub fn pjrt() -> Result<Generator> {
+        let cat = Catalog::load_default()?;
+        let store = ArtifactStore::open_default()?;
+        let rt = Runtime::cpu()?;
+        let exe = Arc::new(rt.load_hlo_text(&store.hlo_path())?);
+        Ok(Generator { cat, store, backend: Backend::Pjrt(exe), configs: BTreeMap::new() })
+    }
+
+    /// Backend selection by name ("native" | "pjrt").
+    pub fn with_backend(name: &str) -> Result<Generator> {
+        match name {
+            "native" => Self::native(),
+            "pjrt" => Self::pjrt(),
+            other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
+        }
+    }
+
+    /// Load (and cache) a configuration artifact.
+    pub fn config(&mut self, config_id: &str) -> Result<Arc<ConfigArtifact>> {
+        if let Some(a) = self.configs.get(config_id) {
+            return Ok(a.clone());
+        }
+        let a = Arc::new(self.store.load_config(config_id)?);
+        self.configs.insert(config_id.to_string(), a.clone());
+        Ok(a)
+    }
+
+    /// Build a classifier for one configuration's weights.
+    pub fn classifier(&self, art: &ConfigArtifact) -> Result<AnyClassifier> {
+        let weights = BiGruWeights::new(
+            self.store.manifest.hidden,
+            self.store.manifest.k_max,
+            art.weights.clone(),
+        )?;
+        Ok(match &self.backend {
+            Backend::Native => AnyClassifier::Native(NativeBiGru::new(weights)),
+            Backend::Pjrt(exe) => AnyClassifier::Pjrt(
+                PjrtBiGru::new(
+                    exe.clone(),
+                    art.weights.clone(),
+                    self.store.manifest.chunk,
+                    self.store.manifest.k_max,
+                )?
+                .chunked(),
+            ),
+        })
+    }
+
+    /// Generate one server's power trace from an arrival schedule
+    /// (the paper's per-server pipeline, §3.3).
+    pub fn server_trace(
+        &self,
+        art: &ConfigArtifact,
+        classifier: &AnyClassifier,
+        schedule: &Schedule,
+        horizon_s: f64,
+        dt_s: f64,
+        rng: &mut Rng,
+    ) -> Result<ServerTrace> {
+        let n_steps = (horizon_s / dt_s).round() as usize;
+        let intervals = simulate_queue(schedule, &art.surrogate, self.cat.campaign.max_batch, rng);
+        let feats = features_from_intervals(&intervals, n_steps, dt_s);
+        let probs = classifier.probs(&feats.interleaved(), n_steps)?;
+        // Keep only the live K states of this configuration (unused logits
+        // were masked at training time; renormalization happens inside the
+        // categorical draw).
+        let k_max = classifier.k_max();
+        let k = art.k;
+        let mut live = vec![0.0f32; n_steps * k];
+        for t in 0..n_steps {
+            live[t * k..(t + 1) * k].copy_from_slice(&probs[t * k_max..t * k_max + k]);
+        }
+        let states = sample_states(&live, k, rng);
+        let power_w = sample_power(&states, &art.dict, art.mode, rng);
+        Ok(ServerTrace { power_w, a: feats.a, states })
+    }
+
+    /// Build the per-server arrival schedule for a scenario.
+    pub fn schedule_for(
+        &self,
+        spec: &ScenarioSpec,
+        server_idx: usize,
+        base_rng: &Rng,
+    ) -> Result<Schedule> {
+        let profile = self
+            .cat
+            .datasets
+            .get(&spec.dataset)
+            .with_context(|| format!("unknown dataset '{}'", spec.dataset))?;
+        // Reasoning multiplier depends on the model this server runs.
+        let cfg_id = spec.server_config.config_for(&spec.topology, server_idx).to_string();
+        let cfg = self.cat.config(&cfg_id)?;
+        let out_mult = if self.cat.model_of(cfg).reasoning {
+            self.cat.campaign.reasoning_out_mult
+        } else {
+            1.0
+        };
+        let lengths = LengthSampler::from_profile(profile, out_mult);
+        let mut rng = base_rng.fork(0xA21 ^ server_idx as u64);
+        Ok(match &spec.workload {
+            WorkloadSpec::Poisson { rate } => {
+                poisson_arrivals(*rate, spec.horizon_s, &lengths, &mut rng)
+            }
+            WorkloadSpec::Mmpp { mean_rate, burstiness } => {
+                Mmpp::bursty(*mean_rate, *burstiness).arrivals(spec.horizon_s, &lengths, &mut rng)
+            }
+            WorkloadSpec::Diurnal { base_rate, swing, peak_hour, burst_sigma, mode } => {
+                let p = DiurnalProfile {
+                    base_rate: *base_rate,
+                    swing: *swing,
+                    peak_hour: *peak_hour,
+                    burst_sigma: *burst_sigma,
+                    burst_tau_s: 300.0,
+                    mode: *mode,
+                };
+                p.schedule(server_idx, spec.horizon_s, &lengths, base_rng)
+            }
+            WorkloadSpec::Replay { path, offset_s } => {
+                let base = replay::load(std::path::Path::new(path))?;
+                // Per-server random offset (paper §4.4) wrapped on horizon.
+                let off = if *offset_s > 0.0 { rng.range(0.0, *offset_s) } else { 0.0 };
+                let mut shifted: Schedule = base
+                    .iter()
+                    .map(|r| {
+                        let mut r2 = *r;
+                        r2.arrival_s = (r.arrival_s + off) % spec.horizon_s;
+                        r2
+                    })
+                    .collect();
+                shifted.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+                shifted
+            }
+        })
+    }
+
+    /// Generate a full facility run: every server in the topology, in
+    /// parallel, reduced into a streaming accumulator.
+    pub fn facility(&mut self, spec: &ScenarioSpec, dt_s: f64, workers: usize) -> Result<FacilityResult> {
+        let n = spec.topology.n_servers();
+        let n_steps = (spec.horizon_s / dt_s).round() as usize;
+        // Pre-load every config + classifier used by the assignment.
+        let mut ids: Vec<String> = Vec::new();
+        for s in 0..n {
+            let id = spec.server_config.config_for(&spec.topology, s).to_string();
+            if !ids.contains(&id) {
+                ids.push(id);
+            }
+        }
+        let mut table: BTreeMap<String, (Arc<ConfigArtifact>, AnyClassifier)> = BTreeMap::new();
+        for id in &ids {
+            let art = self.config(id)?;
+            let cls = self.classifier(&art)?;
+            table.insert(id.clone(), (art, cls));
+        }
+        let base_rng = Rng::new(spec.seed);
+        let workers = if workers == 0 { default_workers() } else { workers };
+        let errors = std::sync::Mutex::new(Vec::<String>::new());
+        let acc = parallel_fold(
+            n,
+            workers,
+            || FacilityAccumulator::new(spec.topology, n_steps, spec.p_base_w),
+            |acc, s| {
+                let result = (|| -> Result<()> {
+                    let id = spec.server_config.config_for(&spec.topology, s);
+                    let (art, cls) = &table[id];
+                    let sched = self.schedule_for(spec, s, &base_rng)?;
+                    let mut rng = base_rng.fork(0x5E21 ^ s as u64);
+                    let tr =
+                        self.server_trace(art, cls, &sched, spec.horizon_s, dt_s, &mut rng)?;
+                    acc.add_server(s, &tr.power_w)?;
+                    Ok(())
+                })();
+                if let Err(e) = result {
+                    errors.lock().unwrap().push(format!("server {s}: {e:#}"));
+                }
+            },
+            |mut a, b| {
+                a.merge(&b);
+                a
+            },
+        );
+        let errs = errors.into_inner().unwrap();
+        if !errs.is_empty() {
+            anyhow::bail!("facility generation failed: {}", errs.join("; "));
+        }
+        Ok(FacilityResult { scenario: spec.clone(), dt_s, acc })
+    }
+}
+
+// Integration tests for the full pipeline live in rust/tests/ (they need
+// `make artifacts`).

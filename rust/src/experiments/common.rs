@@ -1,0 +1,163 @@
+//! Shared experiment machinery: the evaluation context (generator +
+//! classifier cache), synthesis against held-out measured traces, the
+//! baseline traces, and CSV output.
+
+use crate::artifacts::{ConfigArtifact, MeasuredTrace};
+use crate::baselines::{lut::LutBaseline, mean_trace, tdp_gpu_trace};
+use crate::classifier::pjrt::AnyClassifier;
+use crate::coordinator::Generator;
+use crate::surrogate::{features_from_intervals, simulate_queue, ActiveInterval};
+use crate::synth::{sample_power, sample_states};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Evaluation context for experiments.
+pub struct EvalCtx {
+    pub gen: Generator,
+    classifiers: BTreeMap<String, Arc<AnyClassifier>>,
+    /// Seeds per synthetic replication (paper: 5; `--fast` uses 2).
+    pub n_seeds: usize,
+    pub out_dir: PathBuf,
+}
+
+impl EvalCtx {
+    pub fn new(args: &Args) -> Result<EvalCtx> {
+        let backend = args.str_or("backend", "pjrt");
+        let gen = match Generator::with_backend(&backend) {
+            Ok(g) => g,
+            Err(e) if backend == "pjrt" => {
+                eprintln!("note: pjrt backend unavailable ({e:#}); falling back to native");
+                Generator::native()?
+            }
+            Err(e) => return Err(e),
+        };
+        let n_seeds = if args.has("fast") { 2 } else { 5 };
+        let out_dir = crate::catalog::Catalog::repo_root().join("out");
+        Ok(EvalCtx { gen, classifiers: BTreeMap::new(), n_seeds, out_dir })
+    }
+
+    pub fn config(&mut self, id: &str) -> Result<Arc<ConfigArtifact>> {
+        self.gen.config(id)
+    }
+
+    pub fn classifier(&mut self, id: &str) -> Result<Arc<AnyClassifier>> {
+        if let Some(c) = self.classifiers.get(id) {
+            return Ok(c.clone());
+        }
+        let art = self.gen.config(id)?;
+        let c = Arc::new(self.gen.classifier(&art)?);
+        self.classifiers.insert(id.to_string(), c.clone());
+        Ok(c)
+    }
+
+    /// Artifact config ids, optionally filtered by model key prefix.
+    pub fn config_ids(&self) -> Vec<String> {
+        self.gen.store.manifest.configs.clone()
+    }
+
+    /// Surrogate intervals for a measured trace's schedule.
+    pub fn intervals_for(
+        &self,
+        art: &ConfigArtifact,
+        m: &MeasuredTrace,
+        rng: &mut Rng,
+    ) -> Vec<ActiveInterval> {
+        simulate_queue(&m.schedule, &art.surrogate, self.gen.cat.campaign.max_batch, rng)
+    }
+
+    /// Full pipeline synthesis matched to a measured trace (same schedule,
+    /// same horizon) — the paper's held-out evaluation setup.
+    pub fn synth_like(
+        &self,
+        art: &ConfigArtifact,
+        cls: &AnyClassifier,
+        m: &MeasuredTrace,
+        seed: u64,
+    ) -> Result<Vec<f32>> {
+        let n_steps = m.power_w.len();
+        let mut rng = Rng::new(seed).fork(0x51D);
+        let intervals = self.intervals_for(art, m, &mut rng);
+        let feats = features_from_intervals(&intervals, n_steps, m.dt_s);
+        let probs = crate::classifier::StateClassifier::probs(cls, &feats.interleaved(), n_steps)?;
+        let k_max = crate::classifier::StateClassifier::k_max(cls);
+        let k = art.k;
+        let mut live = vec![0.0f32; n_steps * k];
+        for t in 0..n_steps {
+            live[t * k..(t + 1) * k].copy_from_slice(&probs[t * k_max..t * k_max + k]);
+        }
+        let states = sample_states(&live, k, &mut rng);
+        Ok(sample_power(&states, &art.dict, art.mode, &mut rng))
+    }
+
+    /// LUT baseline trace matched to a measured trace.
+    pub fn lut_like(&self, art: &ConfigArtifact, m: &MeasuredTrace, seed: u64) -> Result<Vec<f32>> {
+        let cfg = self.gen.cat.config(&art.config_id)?;
+        let mut rng = Rng::new(seed).fork(0x107);
+        let intervals = self.intervals_for(art, m, &mut rng);
+        Ok(LutBaseline::default().trace(&self.gen.cat, cfg, &intervals, m.power_w.len(), m.dt_s))
+    }
+
+    /// TDP baseline (GPU-only, matching measured server GPU power).
+    pub fn tdp_like(&self, art: &ConfigArtifact, m: &MeasuredTrace) -> Result<Vec<f32>> {
+        let cfg = self.gen.cat.config(&art.config_id)?;
+        Ok(tdp_gpu_trace(&self.gen.cat, cfg, m.power_w.len()))
+    }
+
+    /// Mean-power baseline (training-set mean).
+    pub fn mean_like(&self, art: &ConfigArtifact, m: &MeasuredTrace) -> Vec<f32> {
+        mean_trace(art.train_mean_w, m.power_w.len())
+    }
+
+    /// Write columns as CSV under `out/<exp>/<name>.csv`.
+    pub fn write_csv(&self, exp: &str, name: &str, headers: &[&str], cols: &[&[f32]]) -> Result<()> {
+        assert_eq!(headers.len(), cols.len());
+        let dir = self.out_dir.join(exp);
+        std::fs::create_dir_all(&dir)?;
+        let n = cols.iter().map(|c| c.len()).max().unwrap_or(0);
+        let mut s = String::new();
+        s.push_str(&headers.join(","));
+        s.push('\n');
+        for i in 0..n {
+            for (j, c) in cols.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                if i < c.len() {
+                    s.push_str(&format!("{}", c[i]));
+                }
+            }
+            s.push('\n');
+        }
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, s)?;
+        println!("  wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// ACF comparison lag bound: 60 s of 250 ms samples (paper preserves
+/// sub-minute temporal structure).
+pub const ACF_MAX_LAG: usize = 240;
+
+/// Pearson correlation between two equal-length series.
+pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len().min(b.len()) as f64;
+    let ma = a.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let (mut cov, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        cov += (x as f64 - ma) * (y as f64 - mb);
+        va += (x as f64 - ma).powi(2);
+        vb += (y as f64 - mb).powi(2);
+    }
+    cov / (va.sqrt() * vb.sqrt()).max(1e-12)
+}
+
+/// Format "a ± b" with given precision.
+pub fn pm(mean: f64, std: f64, prec: usize) -> String {
+    format!("{mean:.prec$} ± {std:.prec$}")
+}

@@ -1,0 +1,293 @@
+//! Server-level figure reproductions (Figs 1, 3, 4, 5, 6, 7, 8, 13).
+//! Each prints the paper's headline quantities and writes the plotted
+//! series as CSV under `out/<fig>/`.
+
+use super::common::{EvalCtx, ACF_MAX_LAG};
+use crate::metrics::{self, ks::ecdf, ks_statistic};
+use crate::states::{select_k, EmOptions};
+use crate::surrogate::features_from_intervals;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+
+/// Pick the measured trace closest to an arrival rate.
+fn trace_at_rate<'a>(
+    traces: &'a [crate::artifacts::MeasuredTrace],
+    rate: f64,
+) -> &'a crate::artifacts::MeasuredTrace {
+    traces
+        .iter()
+        .min_by(|a, b| {
+            (a.rate - rate).abs().partial_cmp(&(b.rate - rate).abs()).unwrap()
+        })
+        .expect("nonempty traces")
+}
+
+fn first_available(ctx: &EvalCtx, prefs: &[&str]) -> Result<String> {
+    let ids = ctx.config_ids();
+    prefs
+        .iter()
+        .find(|p| ids.iter().any(|i| i == *p))
+        .map(|s| s.to_string())
+        .or_else(|| ids.first().cloned())
+        .context("no artifacts built")
+}
+
+use super::common::pearson;
+
+/// Fig 1: measured vs LUT vs ours for Llama-3.1 70B TP=8 on A100.
+pub fn fig1(args: &Args) -> Result<()> {
+    let mut ctx = EvalCtx::new(args)?;
+    let id = first_available(&ctx, &["llama70b_a100_tp8"])?;
+    let art = ctx.config(&id)?;
+    let cls = ctx.classifier(&id)?;
+    let traces = ctx.gen.store.load_all_measured(&id)?;
+    let m = trace_at_rate(&traces, 0.5);
+    let ours = ctx.synth_like(&art, &cls, m, 42)?;
+    let lut = ctx.lut_like(&art, m, 42)?;
+    println!("Fig 1 — server trace comparison ({id}, λ={})", m.rate);
+    let f_ours = metrics::fidelity(&m.power_w, &ours, ACF_MAX_LAG);
+    let f_lut = metrics::fidelity(&m.power_w, &lut, ACF_MAX_LAG);
+    println!("  ours: KS={:.2} NRMSE={:.2} |ΔE|={:.1}%", f_ours.ks, f_ours.nrmse, f_ours.delta_energy.abs() * 100.0);
+    println!("  LUT : KS={:.2} NRMSE={:.2} |ΔE|={:.1}%", f_lut.ks, f_lut.nrmse, f_lut.delta_energy.abs() * 100.0);
+    // Count distinct LUT levels — the structural failure the figure shows.
+    let mut levels: Vec<i64> = lut.iter().map(|&p| p.round() as i64).collect();
+    levels.sort_unstable();
+    levels.dedup();
+    println!("  LUT produces {} distinct power levels; measured spans {:.0}–{:.0} W continuously",
+        levels.len(),
+        m.power_w.iter().cloned().fold(f32::MAX, f32::min),
+        m.power_w.iter().cloned().fold(f32::MIN, f32::max));
+    ctx.write_csv("fig1", &format!("{id}_r{}", m.rate), &["measured_w", "ours_w", "lut_w"], &[&m.power_w, &ours, &lut])
+}
+
+/// Fig 3: measured GPU power and active request count co-movement
+/// (Llama-3.1 8B on H100, λ = 0.25 req/s).
+pub fn fig3(args: &Args) -> Result<()> {
+    let mut ctx = EvalCtx::new(args)?;
+    let id = first_available(&ctx, &["llama8b_h100_tp1", "llama8b_a100_tp2"])?;
+    let traces = ctx.gen.store.load_all_measured(&id)?;
+    let m = trace_at_rate(&traces, 0.25);
+    let r = pearson(&m.power_w, &m.a_measured);
+    println!("Fig 3 — power / A_t co-movement ({id}, λ={})", m.rate);
+    println!("  Pearson corr(power, A_t) = {r:.3} (paper: 'the two signals move together')");
+    anyhow::ensure!(r > 0.6, "power and A_t should co-move (got {r})");
+    ctx.write_csv("fig3", &format!("{id}_r{}", m.rate), &["power_w", "a_t"], &[&m.power_w, &m.a_measured])
+}
+
+/// Fig 4: normalized BIC vs K for four representative configurations
+/// (Rust EM substrate on held-out measured power).
+pub fn fig4(args: &Args) -> Result<()> {
+    let mut ctx = EvalCtx::new(args)?;
+    let ids = ctx.config_ids();
+    let pick: Vec<String> = ["llama8b_a100_tp2", "llama70b_a100_tp8", "r1d70b_h100_tp4", "gptoss120b_a100_tp4"]
+        .iter()
+        .filter(|p| ids.iter().any(|i| i == *p))
+        .map(|s| s.to_string())
+        .collect();
+    let pick = if pick.is_empty() { ids[..ids.len().min(4)].to_vec() } else { pick };
+    println!("Fig 4 — normalized BIC vs number of mixture components K");
+    let k_max = if args.has("fast") { 8 } else { 12 };
+    for id in &pick {
+        let measured = ctx.gen.store.load_all_measured(id)?;
+        let pooled: Vec<f32> = measured.iter().flat_map(|m| m.power_w.iter().copied()).collect();
+        let mut rng = Rng::new(4);
+        let opts = EmOptions { n_init: 1, max_iters: 60, ..Default::default() };
+        let (_, curve) = select_k(&pooled, 1..=k_max, &opts, &mut rng)?;
+        let norm = curve.normalized();
+        println!("  {id}: best K = {} ; normalized BIC = {:?}", curve.best_k,
+            norm.iter().map(|b| (b * 100.0).round() / 100.0).collect::<Vec<_>>());
+        let ks: Vec<f32> = curve.ks.iter().map(|&k| k as f32).collect();
+        let bic: Vec<f32> = norm.iter().map(|&b| b as f32).collect();
+        ctx.write_csv("fig4", id, &["k", "normalized_bic"], &[&ks, &bic])?;
+    }
+    Ok(())
+}
+
+/// Fig 5: CDFs of modeled vs measured prefill/decode durations
+/// (DeepSeek-R1-Distill 8B on H100 TP=8).
+pub fn fig5(args: &Args) -> Result<()> {
+    let mut ctx = EvalCtx::new(args)?;
+    // The paper plots R1-Distill 8B on H100 TP=8; on our testbed that
+    // config's TTFT (≈5–20 ms) sits entirely below the 50 ms engine
+    // substep, leaving only quantization in the measured durations, so we
+    // default to a configuration whose durations the substrate resolves
+    // (r1d8b on A100 TP=2) and keep the H100 one reachable via artifacts.
+    let id = first_available(&ctx, &["r1d8b_a100_tp2", "llama70b_a100_tp8", "r1d8b_h100_tp8"])?;
+    let art = ctx.config(&id)?;
+    let traces = ctx.gen.store.load_all_measured(&id)?;
+    let mut meas_pre: Vec<f32> = vec![];
+    let mut meas_dec: Vec<f32> = vec![];
+    let mut model_pre: Vec<f32> = vec![];
+    let mut model_dec: Vec<f32> = vec![];
+    let mut rng = Rng::new(5);
+    // The testbed logs durations on its 50 ms engine substep (cf. the
+    // paper's nvidia-smi-derived measurements); apply the same
+    // quantization to the surrogate draws so the CDFs are comparable.
+    let q = |x: f64| ((x / 0.05).ceil() * 0.05) as f32;
+    for m in &traces {
+        for i in 0..m.durations.len() {
+            meas_pre.push(m.durations.prefill_s[i] as f32);
+            meas_dec.push(m.durations.decode_s[i] as f32);
+            // Surrogate draws for the same request sizes.
+            model_pre.push(q(art.surrogate.sample_ttft(m.durations.n_in[i], &mut rng)));
+            model_dec.push(q(m.durations.n_out[i] as f64 * art.surrogate.sample_tbt(&mut rng)));
+        }
+    }
+    let ks_pre = ks_statistic(&meas_pre, &model_pre);
+    let ks_dec = ks_statistic(&meas_dec, &model_dec);
+    println!("Fig 5 — prefill/decode duration CDFs ({id})");
+    println!("  prefill: KS(measured, modeled) = {ks_pre:.3}  (n={})", meas_pre.len());
+    println!("  decode : KS(measured, modeled) = {ks_dec:.3}");
+    anyhow::ensure!(ks_pre < 0.35 && ks_dec < 0.35, "surrogate should match duration CDFs");
+    ctx.write_csv("fig5", &format!("{id}_durations"),
+        &["measured_prefill_s", "model_prefill_s", "measured_decode_s", "model_decode_s"],
+        &[&meas_pre, &model_pre, &meas_dec, &model_dec])
+}
+
+/// Fig 6: dense traces at three arrival rates + one MoE trace.
+pub fn fig6(args: &Args) -> Result<()> {
+    let mut ctx = EvalCtx::new(args)?;
+    let dense = first_available(&ctx, &["llama8b_a100_tp2"])?;
+    let moe = first_available(&ctx, &["gptoss120b_a100_tp4", "gptoss120b_h100_tp4"])?;
+    println!("Fig 6 — measured vs simulated server traces");
+    for (id, rates) in [(&dense, vec![0.125, 0.5, 4.0]), (&moe, vec![1.0])] {
+        let art = ctx.config(id)?;
+        let cls = ctx.classifier(id)?;
+        let traces = ctx.gen.store.load_all_measured(id)?;
+        for rate in rates {
+            let m = trace_at_rate(&traces, rate);
+            let syn = ctx.synth_like(&art, &cls, m, 6)?;
+            let f = metrics::fidelity(&m.power_w, &syn, ACF_MAX_LAG);
+            println!(
+                "  {id} λ={}: KS={:.2} ACF R²={} NRMSE={:.2} |ΔE|={:.1}%",
+                m.rate, f.ks,
+                f.acf_r2.map(|v| format!("{v:.2}")).unwrap_or("–".into()),
+                f.nrmse, f.delta_energy.abs() * 100.0
+            );
+            ctx.write_csv("fig6", &format!("{id}_r{}", m.rate), &["measured_w", "synthetic_w"], &[&m.power_w, &syn])?;
+        }
+    }
+    Ok(())
+}
+
+/// Fig 7: CDFs of synthetic vs measured power for representative configs.
+pub fn fig7(args: &Args) -> Result<()> {
+    let mut ctx = EvalCtx::new(args)?;
+    let picks = [
+        first_available(&ctx, &["r1d70b_h100_tp4", "r1d70b_a100_tp8"])?,
+        first_available(&ctx, &["llama8b_a100_tp2"])?,
+        first_available(&ctx, &["gptoss120b_a100_tp4"])?,
+    ];
+    println!("Fig 7 — synthetic vs measured power CDFs");
+    for id in &picks {
+        let art = ctx.config(id)?;
+        let cls = ctx.classifier(id)?;
+        let traces = ctx.gen.store.load_all_measured(id)?;
+        let mut meas: Vec<f32> = vec![];
+        let mut syn: Vec<f32> = vec![];
+        for m in &traces {
+            meas.extend_from_slice(&m.power_w);
+            syn.extend(ctx.synth_like(&art, &cls, m, 7)?);
+        }
+        let ks = ks_statistic(&meas, &syn);
+        println!("  {id}: KS = {ks:.3} over {} pooled samples", meas.len());
+        // Evaluate both ECDFs on a common grid for the CSV.
+        let lo = meas.iter().cloned().fold(f32::MAX, f32::min);
+        let hi = meas.iter().cloned().fold(f32::MIN, f32::max);
+        let grid: Vec<f32> = (0..200).map(|i| lo + (hi - lo) * i as f32 / 199.0).collect();
+        let c_m: Vec<f32> = ecdf(&meas, &grid).iter().map(|&x| x as f32).collect();
+        let c_s: Vec<f32> = ecdf(&syn, &grid).iter().map(|&x| x as f32).collect();
+        ctx.write_csv("fig7", id, &["power_w", "cdf_measured", "cdf_synthetic"], &[&grid, &c_m, &c_s])?;
+    }
+    Ok(())
+}
+
+/// Fig 8: 15 minutes of facility power (60 servers) by method.
+pub fn fig8(args: &Args) -> Result<()> {
+    use crate::aggregate::{FacilityAccumulator, Topology};
+    use crate::baselines::lut::LutBaseline;
+    use crate::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
+    use crate::surrogate::simulate_queue;
+
+    let mut ctx = EvalCtx::new(args)?;
+    let id = first_available(&ctx, &["llama70b_h100_tp8", "llama70b_h100_tp4"])?;
+    let art = ctx.config(&id)?;
+    let cls = ctx.classifier(&id)?;
+    let n_servers = args.usize_or("servers", 60)?;
+    let horizon = args.f64_or("horizon", 900.0)?;
+    let dt = 0.25;
+    let topo = Topology { rows: 1, racks_per_row: n_servers / 4, servers_per_rack: 4 };
+    let mut spec = ScenarioSpec::default_poisson(&id, 0.5);
+    spec.topology = topo;
+    spec.horizon_s = horizon;
+    spec.server_config = ServerAssignment::Uniform(id.clone());
+    spec.workload = WorkloadSpec::Poisson { rate: 0.5 };
+    let n_steps = (horizon / dt).round() as usize;
+    let base_rng = Rng::new(8);
+
+    let mut acc_ours = FacilityAccumulator::new(topo, n_steps, spec.p_base_w);
+    let mut acc_lut = FacilityAccumulator::new(topo, n_steps, spec.p_base_w);
+    let cfg = ctx.gen.cat.config(&id)?.clone();
+    for s in 0..topo.n_servers() {
+        let sched = ctx.gen.schedule_for(&spec, s, &base_rng)?;
+        let mut rng = base_rng.fork(0xF18 ^ s as u64);
+        let tr = ctx.gen.server_trace(&art, &cls, &sched, horizon, dt, &mut rng)?;
+        acc_ours.add_server(s, &tr.power_w)?;
+        let intervals = simulate_queue(&sched, &art.surrogate, ctx.gen.cat.campaign.max_batch, &mut rng);
+        let lut = LutBaseline::default().trace(&ctx.gen.cat, &cfg, &intervals, n_steps, dt);
+        acc_lut.add_server(s, &lut)?;
+    }
+    let pue = spec.pue;
+    let ours = acc_ours.facility_series(pue);
+    let lut = acc_lut.facility_series(pue);
+    let tdp_w = ctx.gen.cat.server_nameplate_w(&cfg) * topo.n_servers() as f64 * pue;
+    let mean_w = (art.train_mean_w + spec.p_base_w) * topo.n_servers() as f64 * pue;
+    let stats = |s: &[f32]| {
+        let st = metrics::PlanningStats::compute(s, dt, 60.0);
+        (st.peak_w / 1e3, st.avg_w / 1e3)
+    };
+    println!("Fig 8 — 15-min facility power, {n_servers} servers ({id}), kW:");
+    let (pk, av) = stats(&ours);
+    println!("  ours: peak {pk:.0} kW avg {av:.0} kW");
+    let (pk, av) = stats(&lut);
+    println!("  LUT : peak {pk:.0} kW avg {av:.0} kW");
+    println!("  Mean: flat {:.0} kW   TDP: flat {:.0} kW", mean_w / 1e3, tdp_w / 1e3);
+    let tdp_series = vec![(tdp_w / 1.0) as f32; n_steps.min(8)];
+    let _ = tdp_series;
+    ctx.write_csv("fig8", &format!("{id}_{n_servers}servers"), &["ours_w", "lut_w"], &[&ours, &lut])
+}
+
+/// Fig 13: surrogate vs measured A_t trajectories (R1-Distill 70B,
+/// two GPU generations / TP settings, three rates).
+pub fn fig13(args: &Args) -> Result<()> {
+    let mut ctx = EvalCtx::new(args)?;
+    let ids = ctx.config_ids();
+    let picks: Vec<String> = ["r1d70b_a100_tp8", "r1d70b_h100_tp4"]
+        .iter()
+        .filter(|p| ids.iter().any(|i| i == *p))
+        .map(|s| s.to_string())
+        .collect();
+    anyhow::ensure!(!picks.is_empty(), "no r1d70b artifacts");
+    println!("Fig 13 — surrogate vs measured A_t (workload-feature adherence)");
+    for id in &picks {
+        let art = ctx.config(id)?;
+        let traces = ctx.gen.store.load_all_measured(id)?;
+        for rate in [0.25, 0.5, 4.0] {
+            let m = trace_at_rate(&traces, rate);
+            let mut rng = Rng::new(13);
+            let intervals = ctx.intervals_for(&art, m, &mut rng);
+            let feats = features_from_intervals(&intervals, m.power_w.len(), m.dt_s);
+            let corr = pearson(&feats.a, &m.a_measured);
+            let mean_meas: f64 =
+                m.a_measured.iter().map(|&x| x as f64).sum::<f64>() / m.a_measured.len() as f64;
+            let mean_sur: f64 = feats.a.iter().map(|&x| x as f64).sum::<f64>() / feats.a.len() as f64;
+            println!(
+                "  {id} λ={}: corr={corr:.2} mean A meas={mean_meas:.2} vs surrogate={mean_sur:.2}",
+                m.rate
+            );
+            ctx.write_csv("fig13", &format!("{id}_r{}", m.rate), &["a_measured", "a_surrogate"], &[&m.a_measured, &feats.a])?;
+        }
+    }
+    Ok(())
+}

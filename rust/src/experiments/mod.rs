@@ -1,0 +1,57 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §5).
+//!
+//! Every experiment prints the paper's rows/series to stdout and writes
+//! machine-readable CSV/JSON under `out/<experiment>/`. Run via
+//! `powertrace repro <id>` or the corresponding bench target.
+
+pub mod common;
+pub mod facility;
+pub mod figs;
+pub mod oversub;
+pub mod table1;
+pub mod table2;
+
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig3", "fig4", "fig5", "table1", "table2", "fig6", "fig7", "fig8",
+    "fig9", "table3", "fig10", "fig11", "fig12", "fig13",
+];
+
+/// Run one experiment (or "all").
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "table1" => table1::run(args),
+        "table2" => table2::run(args),
+        "fig1" => figs::fig1(args),
+        "fig3" => figs::fig3(args),
+        "fig4" => figs::fig4(args),
+        "fig5" => figs::fig5(args),
+        "fig6" => figs::fig6(args),
+        "fig7" => figs::fig7(args),
+        "fig8" => figs::fig8(args),
+        "fig13" => figs::fig13(args),
+        // The 24-hour facility study powers Fig 9, Table 3, Fig 10 and
+        // Fig 12 from a single generation run.
+        "fig9" | "table3" | "fig10" | "fig12" | "facility" => facility::run(args),
+        "fig11" | "oversub" => oversub::run(args),
+        "all" => {
+            let mut done = std::collections::BTreeSet::new();
+            for id in ALL {
+                // facility ids share one run; only execute once
+                let canonical = match *id {
+                    "fig9" | "table3" | "fig10" | "fig12" => "facility",
+                    other => other,
+                };
+                if done.insert(canonical) {
+                    println!("\n################ {id} ################");
+                    run(canonical, args)?;
+                }
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}' (try: {}, all)", ALL.join(", ")),
+    }
+}

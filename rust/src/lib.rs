@@ -1,0 +1,51 @@
+//! # powertrace-sim
+//!
+//! A from-scratch reproduction of *"From Servers to Sites: Compositional
+//! Power Trace Generation of LLM Inference for Infrastructure Planning"*
+//! as a three-layer Rust + JAX + Pallas system (Python only at build time;
+//! this crate owns the entire generation path).
+//!
+//! The public API mirrors the paper's pipeline (Fig. 2):
+//!
+//! 1. [`workload`] — request arrival processes and length distributions;
+//! 2. [`surrogate`] — the throughput surrogate (FIFO queue, TTFT/TBT laws)
+//!    that turns an arrival schedule into workload features `(A_t, ΔA_t)`;
+//! 3. [`classifier`] — the BiGRU feature→state classifier, executed either
+//!    natively or through the AOT-compiled XLA artifact via PJRT;
+//! 4. [`states`] / [`synth`] — GMM power-state dictionaries and the
+//!    state-conditioned power samplers (i.i.d. for dense, AR(1) for MoE);
+//! 5. [`aggregate`] — server → rack → row → facility aggregation with
+//!    non-GPU IT power and PUE;
+//! 6. [`metrics`] / [`baselines`] — fidelity + planning metrics and the
+//!    TDP / mean / Splitwise-style-LUT comparison baselines;
+//! 7. [`testbed`] — the synthetic measurement substrate standing in for the
+//!    paper's Azure DGX campaign (DESIGN.md §3);
+//! 8. [`coordinator`] — the multi-server generation pipeline.
+//!
+//! See `examples/quickstart.rs` for the five-line path from a scenario to a
+//! facility load shape.
+
+pub mod util {
+    pub mod cli;
+    pub mod json;
+    pub mod rng;
+    pub mod threadpool;
+}
+
+pub mod aggregate;
+pub mod artifacts;
+pub mod baselines;
+pub mod benchutil;
+pub mod catalog;
+pub mod classifier;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod states;
+pub mod surrogate;
+pub mod synth;
+pub mod testbed;
+pub mod testutil;
+pub mod workload;

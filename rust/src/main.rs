@@ -1,0 +1,235 @@
+//! `powertrace` — the planner-facing CLI (paper §3.1).
+//!
+//! Subcommands:
+//!   generate   one server power trace from a workload scenario
+//!   facility   facility-scale run from a scenario JSON
+//!   repro      regenerate a paper table/figure (or `all`)
+//!   fit        Rust-side GMM+BIC refit on held-out measured traces
+//!   testbed    run the synthetic measurement testbed (ground truth)
+//!   info       catalog + artifact inventory
+
+use anyhow::Result;
+use powertrace_sim::catalog::Catalog;
+use powertrace_sim::config::ScenarioSpec;
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::experiments;
+use powertrace_sim::metrics::PlanningStats;
+use powertrace_sim::states::{select_k, EmOptions};
+use powertrace_sim::testbed;
+use powertrace_sim::util::cli::{usage, Args, Opt};
+use powertrace_sim::util::rng::Rng;
+use powertrace_sim::workload::{poisson_arrivals, LengthSampler};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(argv[1..].iter().cloned());
+    let result = match cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "facility" => cmd_facility(&args),
+        "repro" => cmd_repro(&args),
+        "fit" => cmd_fit(&args),
+        "testbed" => cmd_testbed(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "powertrace — compositional LLM-inference power trace generation\n\
+         \n\
+         usage: powertrace <command> [options]\n\
+         \n\
+         commands:\n\
+           generate   generate one server power trace (Poisson workload)\n\
+           facility   run a facility scenario (JSON spec) → site load shape\n\
+           repro      reproduce a paper table/figure: {} | all\n\
+           fit        fit GMM power states on held-out measured traces\n\
+           testbed    run the ground-truth measurement testbed\n\
+           info       show catalog and artifact inventory\n\
+         \n\
+         common options: --backend native|pjrt  --seed N  --fast",
+        experiments::ALL.join(" | ")
+    );
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!("{}", usage("generate", "generate one server power trace", &[
+            Opt { name: "config", help: "serving configuration id", default: Some("llama70b_a100_tp8") },
+            Opt { name: "rate", help: "Poisson arrival rate (req/s)", default: Some("0.5") },
+            Opt { name: "horizon", help: "trace length (s)", default: Some("600") },
+            Opt { name: "dataset", help: "length profile", default: Some("sharegpt") },
+            Opt { name: "seed", help: "RNG seed", default: Some("0") },
+            Opt { name: "backend", help: "classifier backend (native|pjrt)", default: Some("pjrt") },
+            Opt { name: "out", help: "CSV output path", default: None },
+        ]));
+        return Ok(());
+    }
+    let mut gen = Generator::with_backend(&args.str_or("backend", "pjrt"))?;
+    let id = args.str_or("config", "llama70b_a100_tp8");
+    let rate = args.f64_or("rate", 0.5)?;
+    let horizon = args.f64_or("horizon", 600.0)?;
+    let seed = args.u64_or("seed", 0)?;
+    let art = gen.config(&id)?;
+    let cls = gen.classifier(&art)?;
+    let profile = gen
+        .cat
+        .datasets
+        .get(&args.str_or("dataset", "sharegpt"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?
+        .clone();
+    let lengths = LengthSampler::from_profile(&profile, 1.0);
+    let mut rng = Rng::new(seed);
+    let sched = poisson_arrivals(rate, horizon, &lengths, &mut rng);
+    let tr = gen.server_trace(&art, &cls, &sched, horizon, 0.25, &mut rng)?;
+    let stats = PlanningStats::compute(&tr.power_w, 0.25, 60.0);
+    println!(
+        "generated {} samples @250ms for {id} (λ={rate}): peak {:.0} W, avg {:.0} W, PAR {:.2}",
+        tr.power_w.len(),
+        stats.peak_w,
+        stats.avg_w,
+        stats.peak_to_average
+    );
+    if let Some(out) = args.str_opt("out") {
+        let mut s = String::from("t_s,power_w,a\n");
+        for (i, (&p, &a)) in tr.power_w.iter().zip(&tr.a).enumerate() {
+            s.push_str(&format!("{},{p},{a}\n", i as f64 * 0.25));
+        }
+        std::fs::write(out, s)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_facility(args: &Args) -> Result<()> {
+    let mut gen = Generator::with_backend(&args.str_or("backend", "pjrt"))?;
+    let spec = match args.str_opt("scenario") {
+        Some(path) => ScenarioSpec::load(std::path::Path::new(path))?,
+        None => {
+            let mut s = ScenarioSpec::default_poisson("llama70b_a100_tp8", 0.5);
+            s.topology = powertrace_sim::aggregate::Topology {
+                rows: 2,
+                racks_per_row: 3,
+                servers_per_rack: 4,
+            };
+            s
+        }
+    };
+    let dt = args.f64_or("dt", 1.0)?;
+    let workers = args.usize_or("workers", 0)?;
+    let t0 = std::time::Instant::now();
+    let result = gen.facility(&spec, dt, workers)?;
+    let site = result.facility_series();
+    let stats = PlanningStats::compute(&site, dt, 900.0);
+    println!(
+        "facility: {} servers, {:.1} h, dt={dt}s → peak {:.3} MW avg {:.3} MW PAR {:.2} ({:.1}s wall)",
+        spec.topology.n_servers(),
+        spec.horizon_s / 3600.0,
+        stats.peak_w / 1e6,
+        stats.avg_w / 1e6,
+        stats.peak_to_average,
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(out) = args.str_opt("out") {
+        let resample_s = args.f64_or("resample", 900.0)?;
+        let series = powertrace_sim::aggregate::resample(&site, dt, resample_s);
+        let mut s = String::from("t_s,facility_w\n");
+        for (i, &p) in series.iter().enumerate() {
+            s.push_str(&format!("{},{p}\n", i as f64 * resample_s));
+        }
+        std::fs::write(out, s)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    experiments::run(id, args)
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let store = powertrace_sim::artifacts::ArtifactStore::open_default()?;
+    let default_id = store.manifest.configs[0].clone();
+    let id = args.str_or("config", &default_id);
+    let traces = store.load_all_measured(&id)?;
+    let pooled: Vec<f32> = traces.iter().flat_map(|m| m.power_w.iter().copied()).collect();
+    let mut rng = Rng::new(args.u64_or("seed", 0)?);
+    let kmax = args.usize_or("kmax", 12)?;
+    let (gmm, curve) = select_k(&pooled, 1..=kmax, &EmOptions::default(), &mut rng)?;
+    println!("GMM fit for {id} over {} samples:", pooled.len());
+    println!("  BIC-selected K = {}", curve.best_k);
+    for j in 0..gmm.k() {
+        println!("  state {j}: π={:.3} μ={:.1} W σ={:.1} W", gmm.pi[j], gmm.mu[j], gmm.sigma[j]);
+    }
+    Ok(())
+}
+
+fn cmd_testbed(args: &Args) -> Result<()> {
+    let cat = Catalog::load_default()?;
+    let id = args.str_or("config", "llama70b_a100_tp8");
+    let cfg = cat.config(&id)?;
+    let rate = args.f64_or("rate", 0.5)?;
+    let horizon = args.f64_or("horizon", 600.0)?;
+    let profile = cat.datasets.get("sharegpt").unwrap();
+    let lengths = LengthSampler::from_profile(profile, 1.0);
+    let mut rng = Rng::new(args.u64_or("seed", 0)?);
+    let sched = poisson_arrivals(rate, horizon, &lengths, &mut rng);
+    let opts = testbed::EngineOptions::from_catalog(&cat, horizon);
+    let tr = testbed::simulate(&cat, cfg, &sched, &opts, &mut rng);
+    let stats = PlanningStats::compute(&tr.power_w, opts.dt_sample, 60.0);
+    println!(
+        "testbed {id} λ={rate}: {} samples, peak {:.0} W avg {:.0} W, {} requests completed",
+        tr.power_w.len(),
+        stats.peak_w,
+        stats.avg_w,
+        tr.durations.len()
+    );
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    let cat = Catalog::load_default()?;
+    println!(
+        "catalog: {} GPUs, {} models, {} datasets, {} configs",
+        cat.gpus.len(),
+        cat.models.len(),
+        cat.datasets.len(),
+        cat.configs.len()
+    );
+    for c in &cat.configs {
+        let m = cat.model_of(c);
+        println!("  {:<24} {} TP={} ({:?})", c.id, cat.gpu_of(c).name, c.tp, m.kind);
+    }
+    match powertrace_sim::artifacts::ArtifactStore::open_default() {
+        Ok(store) => {
+            println!(
+                "artifacts: {} configs trained, chunk T={} halo={}, hlo={}",
+                store.manifest.configs.len(),
+                store.manifest.chunk.t,
+                store.manifest.chunk.halo,
+                store.manifest.hlo
+            );
+        }
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Autocorrelation structure metrics.
+//!
+//! The paper's `ACF R²` "measures agreement between the autocorrelation
+//! function of measured and synthetic traces" (§4.1). We compute each
+//! trace's normalized ACF up to `max_lag` and report the coefficient of
+//! determination of the synthetic ACF against the measured ACF.
+
+/// Normalized autocorrelation function ρ(0..=max_lag) of `xs`.
+/// ρ(0) = 1 by construction; a constant series yields NaN-free zeros for
+/// all positive lags by convention (variance guard).
+pub fn acf(xs: &[f32], max_lag: usize) -> Vec<f64> {
+    let n = xs.len();
+    assert!(n > 1, "acf: need at least 2 samples");
+    let max_lag = max_lag.min(n - 1);
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    let c0: f64 = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+    let mut out = Vec::with_capacity(max_lag + 1);
+    out.push(1.0);
+    if c0 <= 1e-12 {
+        out.extend(std::iter::repeat(0.0).take(max_lag));
+        return out;
+    }
+    for lag in 1..=max_lag {
+        let mut c = 0.0;
+        for t in 0..n - lag {
+            c += (xs[t] as f64 - mean) * (xs[t + lag] as f64 - mean);
+        }
+        out.push(c / n as f64 / c0);
+    }
+    out
+}
+
+/// R² of the synthetic ACF against the measured ACF over lags 1..=max_lag
+/// (lag 0 is identically 1 for both and excluded).
+///
+/// Returns `None` when the measured trace is constant (ACF undefined),
+/// matching the paper's "–" entries for constant baselines.
+pub fn acf_r2(measured: &[f32], synthetic: &[f32], max_lag: usize) -> Option<f64> {
+    let var = |xs: &[f32]| {
+        let n = xs.len() as f64;
+        let m = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+        xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / n
+    };
+    if var(synthetic) <= 1e-12 || var(measured) <= 1e-12 {
+        return None;
+    }
+    let a = acf(measured, max_lag);
+    let b = acf(synthetic, max_lag);
+    let lags = a.len().min(b.len());
+    if lags <= 1 {
+        return None;
+    }
+    let a = &a[1..lags];
+    let b = &b[1..lags];
+    let mean_a = a.iter().sum::<f64>() / a.len() as f64;
+    let ss_tot: f64 = a.iter().map(|x| (x - mean_a).powi(2)).sum();
+    let ss_res: f64 = a.iter().zip(b.iter()).map(|(x, y)| (x - y).powi(2)).sum();
+    if ss_tot <= 1e-12 {
+        // Measured ACF flat (white noise): score by residual magnitude.
+        return Some(if ss_res / a.len() as f64 <= 1e-4 { 1.0 } else { 0.0 });
+    }
+    Some(1.0 - ss_res / ss_tot)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lag0_is_one() {
+        let xs = [1.0f32, 3.0, 2.0, 5.0, 4.0];
+        let a = acf(&xs, 3);
+        assert!((a[0] - 1.0).abs() < 1e-12);
+        assert_eq!(a.len(), 4);
+    }
+
+    #[test]
+    fn white_noise_acf_near_zero() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f32> = (0..20_000).map(|_| r.normal() as f32).collect();
+        let a = acf(&xs, 10);
+        for lag in 1..=10 {
+            assert!(a[lag].abs() < 0.03, "lag {lag}: {}", a[lag]);
+        }
+    }
+
+    #[test]
+    fn ar1_acf_geometric() {
+        let mut r = Rng::new(4);
+        let phi = 0.8f64;
+        let mut x = 0.0f64;
+        let xs: Vec<f32> = (0..60_000)
+            .map(|_| {
+                x = phi * x + r.normal();
+                x as f32
+            })
+            .collect();
+        let a = acf(&xs, 5);
+        for lag in 1..=5 {
+            assert!((a[lag] - phi.powi(lag as i32)).abs() < 0.05, "lag {lag}: {}", a[lag]);
+        }
+    }
+
+    #[test]
+    fn clamps_max_lag_to_series_length() {
+        let xs = [1.0f32, 2.0, 1.0];
+        assert_eq!(acf(&xs, 100).len(), 3);
+    }
+
+    #[test]
+    fn r2_perfect_for_identical_series() {
+        let xs: Vec<f32> = (0..1000).map(|i| ((i as f32) * 0.07).sin()).collect();
+        let r2 = acf_r2(&xs, &xs, 100).unwrap();
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_none_for_constant_series() {
+        let flat = [5.0f32; 100];
+        let xs: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        assert_eq!(acf_r2(&xs, &flat, 10), None);
+        assert_eq!(acf_r2(&flat, &xs, 10), None);
+    }
+
+    #[test]
+    fn r2_low_when_structure_destroyed() {
+        // Measured: strongly periodic. Synthetic: white noise.
+        let measured: Vec<f32> = (0..4000).map(|i| ((i as f32) * 0.3).sin()).collect();
+        let mut r = Rng::new(5);
+        let synthetic: Vec<f32> = (0..4000).map(|_| r.normal() as f32).collect();
+        let r2 = acf_r2(&measured, &synthetic, 60).unwrap();
+        assert!(r2 < 0.3, "r2 {r2}");
+    }
+
+    #[test]
+    fn r2_detects_matching_ar_structure() {
+        let gen = |seed: u64, phi: f64| {
+            let mut r = Rng::new(seed);
+            let mut x = 0.0f64;
+            (0..30_000)
+                .map(|_| {
+                    x = phi * x + r.normal();
+                    x as f32
+                })
+                .collect::<Vec<f32>>()
+        };
+        let a = gen(1, 0.9);
+        let b = gen(2, 0.9);
+        let c = gen(3, 0.0);
+        assert!(acf_r2(&a, &b, 40).unwrap() > 0.95);
+        assert!(acf_r2(&a, &c, 40).unwrap() < 0.2);
+    }
+}

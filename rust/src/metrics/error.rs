@@ -1,0 +1,101 @@
+//! Pointwise and integral error metrics (paper §4.1).
+
+/// NRMSE: root-mean-square pointwise error normalized by the observed
+/// (measured) power range. Series must be time-aligned and equal length.
+pub fn nrmse(measured: &[f32], synthetic: &[f32]) -> f64 {
+    assert_eq!(measured.len(), synthetic.len(), "nrmse: length mismatch");
+    assert!(!measured.is_empty(), "nrmse: empty");
+    let n = measured.len() as f64;
+    let mse: f64 = measured
+        .iter()
+        .zip(synthetic.iter())
+        .map(|(&m, &s)| {
+            let d = m as f64 - s as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &m in measured {
+        lo = lo.min(m as f64);
+        hi = hi.max(m as f64);
+    }
+    let range = hi - lo;
+    if range <= 1e-12 {
+        return if mse.sqrt() <= 1e-12 { 0.0 } else { f64::INFINITY };
+    }
+    mse.sqrt() / range
+}
+
+/// Signed relative energy error ΔE = (E_syn − E_meas) / E_meas over the
+/// whole trace. With uniform sampling, energies reduce to sample sums.
+pub fn delta_energy(measured: &[f32], synthetic: &[f32]) -> f64 {
+    assert!(!measured.is_empty() && !synthetic.is_empty(), "delta_energy: empty");
+    let e_meas: f64 = measured.iter().map(|&x| x as f64).sum();
+    let e_syn: f64 = synthetic.iter().map(|&x| x as f64).sum::<f64>()
+        * (measured.len() as f64 / synthetic.len() as f64);
+    assert!(e_meas.abs() > 1e-12, "delta_energy: zero measured energy");
+    (e_syn - e_meas) / e_meas
+}
+
+/// Trace energy in watt-hours given the sampling interval.
+pub fn energy_wh(power_w: &[f32], dt_s: f64) -> f64 {
+    power_w.iter().map(|&p| p as f64).sum::<f64>() * dt_s / 3600.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nrmse_zero_for_identical() {
+        let xs = [100.0f32, 200.0, 150.0];
+        assert_eq!(nrmse(&xs, &xs), 0.0);
+    }
+
+    #[test]
+    fn nrmse_known_value() {
+        // measured range 100, constant offset 10 → NRMSE = 0.1
+        let m = [100.0f32, 200.0];
+        let s = [110.0f32, 210.0];
+        assert!((nrmse(&m, &s) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nrmse_constant_measured() {
+        let m = [5.0f32; 4];
+        assert_eq!(nrmse(&m, &m), 0.0);
+        assert!(nrmse(&m, &[6.0f32; 4]).is_infinite());
+    }
+
+    #[test]
+    fn delta_energy_signed() {
+        let m = [100.0f32; 10];
+        let hi = [110.0f32; 10];
+        let lo = [90.0f32; 10];
+        assert!((delta_energy(&m, &hi) - 0.1).abs() < 1e-12);
+        assert!((delta_energy(&m, &lo) + 0.1).abs() < 1e-12);
+        assert_eq!(delta_energy(&m, &m), 0.0);
+    }
+
+    #[test]
+    fn delta_energy_rescales_lengths() {
+        // Synthetic twice as long at the same level → same mean power.
+        let m = [100.0f32; 10];
+        let s = [100.0f32; 20];
+        assert!(delta_energy(&m, &s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_wh_known() {
+        // 1000 W for 3600 samples of 1 s = 1 kWh.
+        let p = vec![1000.0f32; 3600];
+        assert!((energy_wh(&p, 1.0) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nrmse_rejects_length_mismatch() {
+        nrmse(&[1.0], &[1.0, 2.0]);
+    }
+}

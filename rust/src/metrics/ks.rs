@@ -1,0 +1,103 @@
+//! Two-sample Kolmogorov–Smirnov statistic: the maximum absolute difference
+//! between the empirical CDFs of measured and synthetic power samples
+//! (paper §4.1: "KS statistic measures whether distributionally our measured
+//! and synthetic power samples match").
+
+/// D = sup_x |F_a(x) - F_b(x)| over the pooled support. O(n log n).
+pub fn ks_statistic(a: &[f32], b: &[f32]) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty(), "ks_statistic: empty sample");
+    let mut sa: Vec<f32> = a.to_vec();
+    let mut sb: Vec<f32> = b.to_vec();
+    sa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    sb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let (na, nb) = (sa.len() as f64, sb.len() as f64);
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut d: f64 = 0.0;
+    while i < sa.len() && j < sb.len() {
+        let x = sa[i].min(sb[j]);
+        while i < sa.len() && sa[i] <= x {
+            i += 1;
+        }
+        while j < sb.len() && sb[j] <= x {
+            j += 1;
+        }
+        let diff = (i as f64 / na - j as f64 / nb).abs();
+        if diff > d {
+            d = diff;
+        }
+    }
+    d
+}
+
+/// Empirical CDF evaluated at `points` (for Fig 7-style CDF exports).
+pub fn ecdf(sample: &[f32], points: &[f32]) -> Vec<f64> {
+    let mut s: Vec<f32> = sample.to_vec();
+    s.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    points
+        .iter()
+        .map(|&p| {
+            let idx = s.partition_point(|&x| x <= p);
+            idx as f64 / s.len() as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_samples_have_zero_d() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        assert!(ks_statistic(&a, &a) < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_samples_have_d_one() {
+        let a = [1.0f32, 2.0];
+        let b = [10.0f32, 11.0];
+        assert!((ks_statistic(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = [1.0f32, 5.0, 2.0, 8.0];
+        let b = [3.0f32, 4.0, 9.0];
+        assert!((ks_statistic(&a, &b) - ks_statistic(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_value_half_shifted() {
+        // a = {0,1}, b = {1,2}: CDFs differ by 0.5 on (0,1)∪(1,2).
+        let a = [0.0f32, 1.0];
+        let b = [1.0f32, 2.0];
+        assert!((ks_statistic(&a, &b) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_distribution_small_d() {
+        let mut r = Rng::new(11);
+        let a: Vec<f32> = (0..5000).map(|_| r.normal_ms(300.0, 20.0) as f32).collect();
+        let b: Vec<f32> = (0..5000).map(|_| r.normal_ms(300.0, 20.0) as f32).collect();
+        assert!(ks_statistic(&a, &b) < 0.05);
+        let c: Vec<f32> = (0..5000).map(|_| r.normal_ms(350.0, 20.0) as f32).collect();
+        assert!(ks_statistic(&a, &c) > 0.5);
+    }
+
+    #[test]
+    fn handles_ties() {
+        let a = [1.0f32, 1.0, 1.0, 2.0];
+        let b = [1.0f32, 2.0, 2.0, 2.0];
+        let d = ks_statistic(&a, &b);
+        // F_a(1)=0.75, F_b(1)=0.25 → D=0.5
+        assert!((d - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_values() {
+        let s = [1.0f32, 2.0, 3.0, 4.0];
+        let c = ecdf(&s, &[0.5, 1.0, 2.5, 4.0, 9.0]);
+        assert_eq!(c, vec![0.0, 0.25, 0.5, 1.0, 1.0]);
+    }
+}

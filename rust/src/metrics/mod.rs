@@ -1,0 +1,94 @@
+//! Trace-fidelity and planning metrics (paper §4.1 "Metrics" and Table 3).
+//!
+//! - [`ks`] — Kolmogorov–Smirnov statistic between marginal power samples.
+//! - [`acf`] — autocorrelation functions and the ACF R² agreement score.
+//! - [`error`] — NRMSE and signed relative energy error ΔE.
+//! - [`planning`] — peak / average / peak-to-average ratio / ramp rates /
+//!   load factor / coefficient of variation / percentiles.
+
+pub mod acf;
+pub mod error;
+pub mod ks;
+pub mod planning;
+
+pub use acf::{acf, acf_r2};
+pub use error::{delta_energy, nrmse};
+pub use ks::ks_statistic;
+pub use planning::{coefficient_of_variation, max_ramp, peak_to_average, percentile, PlanningStats};
+
+/// Summary of the paper's four fidelity metrics for one (measured, synthetic)
+/// trace pair (Table 1 / Table 2 row fragments).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fidelity {
+    pub ks: f64,
+    /// `None` for constant baselines (TDP/mean) where ACF is undefined —
+    /// rendered as "–" in tables, as the paper does.
+    pub acf_r2: Option<f64>,
+    pub nrmse: f64,
+    /// Signed relative energy error.
+    pub delta_energy: f64,
+}
+
+/// Compute all four fidelity metrics for a trace pair sampled at `dt_s`.
+/// `max_lag` bounds the ACF comparison (the paper preserves sub-minute
+/// temporal structure; we use 240 lags = 60 s at 250 ms).
+pub fn fidelity(measured: &[f32], synthetic: &[f32], max_lag: usize) -> Fidelity {
+    Fidelity {
+        ks: ks_statistic(measured, synthetic),
+        acf_r2: acf_r2(measured, synthetic, max_lag),
+        nrmse: nrmse(measured, synthetic),
+        delta_energy: delta_energy(measured, synthetic),
+    }
+}
+
+/// Median of a slice (interpolated for even lengths). Used for the paper's
+/// "median over 5 seeds" reporting rule.
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "median of empty slice");
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Mean and (population) standard deviation — used for Table 1's "a ± b".
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    assert!(!xs.is_empty());
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fidelity_perfect_match() {
+        let xs: Vec<f32> = (0..500).map(|i| ((i as f32) * 0.1).sin() * 50.0 + 200.0).collect();
+        let f = fidelity(&xs, &xs, 50);
+        assert!(f.ks < 1e-9);
+        assert!((f.acf_r2.unwrap() - 1.0).abs() < 1e-9);
+        assert!(f.nrmse < 1e-9);
+        assert!(f.delta_energy.abs() < 1e-9);
+    }
+}

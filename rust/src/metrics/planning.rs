@@ -1,0 +1,154 @@
+//! Planner-facing load-shape statistics (paper Table 3 and §4.5):
+//! peak, average, peak-to-average ratio, maximum ramp rate at a given
+//! interval, load factor, coefficient of variation, and percentiles.
+
+/// Summary statistics of a facility/row/rack power series.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanningStats {
+    pub peak_w: f64,
+    pub avg_w: f64,
+    pub peak_to_average: f64,
+    /// Max |ΔP| between consecutive aggregated intervals (W per interval).
+    pub max_ramp_w: f64,
+    /// avg / peak — the utility "load factor".
+    pub load_factor: f64,
+}
+
+impl PlanningStats {
+    /// Compute stats over `series` (sampled at `dt_s`), with ramps measured
+    /// on `ramp_interval_s` averages (the paper uses 15-minute ramps).
+    pub fn compute(series: &[f32], dt_s: f64, ramp_interval_s: f64) -> PlanningStats {
+        assert!(!series.is_empty(), "PlanningStats: empty series");
+        let peak = series.iter().fold(f64::NEG_INFINITY, |m, &x| m.max(x as f64));
+        let avg = series.iter().map(|&x| x as f64).sum::<f64>() / series.len() as f64;
+        let ramp = max_ramp(series, dt_s, ramp_interval_s);
+        PlanningStats {
+            peak_w: peak,
+            avg_w: avg,
+            peak_to_average: if avg.abs() > 1e-12 { peak / avg } else { f64::INFINITY },
+            max_ramp_w: ramp,
+            load_factor: if peak.abs() > 1e-12 { avg / peak } else { 0.0 },
+        }
+    }
+}
+
+/// Average `series` (at `dt_s`) into windows of `interval_s` (the last
+/// partial window is averaged over its actual length).
+pub fn resample_mean(series: &[f32], dt_s: f64, interval_s: f64) -> Vec<f32> {
+    assert!(dt_s > 0.0 && interval_s > 0.0);
+    let stride = (interval_s / dt_s).round().max(1.0) as usize;
+    series
+        .chunks(stride)
+        .map(|c| (c.iter().map(|&x| x as f64).sum::<f64>() / c.len() as f64) as f32)
+        .collect()
+}
+
+/// Maximum absolute difference between consecutive `interval_s` averages.
+pub fn max_ramp(series: &[f32], dt_s: f64, interval_s: f64) -> f64 {
+    let agg = resample_mean(series, dt_s, interval_s);
+    agg.windows(2).map(|w| (w[1] as f64 - w[0] as f64).abs()).fold(0.0, f64::max)
+}
+
+/// Peak-to-average ratio.
+pub fn peak_to_average(series: &[f32]) -> f64 {
+    PlanningStats::compute(series, 1.0, 1.0).peak_to_average
+}
+
+/// Coefficient of variation σ/μ (paper §4.5: 0.583 server → 0.127 site).
+pub fn coefficient_of_variation(series: &[f32]) -> f64 {
+    assert!(!series.is_empty());
+    let n = series.len() as f64;
+    let mean = series.iter().map(|&x| x as f64).sum::<f64>() / n;
+    if mean.abs() < 1e-12 {
+        return 0.0;
+    }
+    let var = series.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
+/// p-th percentile (0..=100) with linear interpolation.
+pub fn percentile(series: &[f32], p: f64) -> f64 {
+    assert!(!series.is_empty() && (0.0..=100.0).contains(&p));
+    let mut v: Vec<f32> = series.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo] as f64
+    } else {
+        let w = rank - lo as f64;
+        v[lo] as f64 * (1.0 - w) + v[hi] as f64 * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_flat_series() {
+        let s = PlanningStats::compute(&[100.0f32; 16], 0.25, 1.0);
+        assert_eq!(s.peak_w, 100.0);
+        assert_eq!(s.avg_w, 100.0);
+        assert_eq!(s.peak_to_average, 1.0);
+        assert_eq!(s.load_factor, 1.0);
+        assert_eq!(s.max_ramp_w, 0.0);
+    }
+
+    #[test]
+    fn stats_on_step_series() {
+        // 4 samples at 100 then 4 at 300, dt=1, ramp interval 4 s.
+        let series = [100.0f32, 100.0, 100.0, 100.0, 300.0, 300.0, 300.0, 300.0];
+        let s = PlanningStats::compute(&series, 1.0, 4.0);
+        assert_eq!(s.peak_w, 300.0);
+        assert_eq!(s.avg_w, 200.0);
+        assert!((s.peak_to_average - 1.5).abs() < 1e-12);
+        assert!((s.load_factor - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.max_ramp_w, 200.0);
+    }
+
+    #[test]
+    fn resample_means_windows() {
+        let s = [1.0f32, 3.0, 5.0, 7.0, 9.0];
+        assert_eq!(resample_mean(&s, 1.0, 2.0), vec![2.0, 6.0, 9.0]);
+        // stride of 1 is identity
+        assert_eq!(resample_mean(&s, 1.0, 1.0), s.to_vec());
+        // interval smaller than dt clamps to stride 1
+        assert_eq!(resample_mean(&s, 1.0, 0.1), s.to_vec());
+    }
+
+    #[test]
+    fn resample_preserves_total_energy_on_exact_windows() {
+        let s: Vec<f32> = (0..120).map(|i| (i % 7) as f32 * 10.0).collect();
+        let agg = resample_mean(&s, 0.25, 1.0); // windows of 4
+        let e1: f64 = s.iter().map(|&x| x as f64 * 0.25).sum();
+        let e2: f64 = agg.iter().map(|&x| x as f64 * 1.0).sum();
+        assert!((e1 - e2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cov_known_values() {
+        assert_eq!(coefficient_of_variation(&[5.0f32; 10]), 0.0);
+        let s = [0.0f32, 2.0]; // mean 1, std 1
+        assert!((coefficient_of_variation(&s) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 100.0), 5.0);
+        assert_eq!(percentile(&s, 50.0), 3.0);
+        assert!((percentile(&s, 95.0) - 4.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ramp_uses_interval_averages_not_raw_samples() {
+        // A single-sample spike shouldn't dominate a 4-sample-interval ramp.
+        let mut s = vec![100.0f32; 16];
+        s[8] = 500.0;
+        let ramp = max_ramp(&s, 1.0, 4.0);
+        assert!((ramp - 100.0).abs() < 1e-9); // window mean jumps by 100
+    }
+}

@@ -1,0 +1,222 @@
+//! PJRT runtime: loads AOT-compiled HLO **text** artifacts produced by the
+//! Python build path and executes them on the XLA CPU client.
+//!
+//! Interchange is HLO text, not serialized `HloModuleProto` — jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+//! and DESIGN.md §6).
+//!
+//! # Thread-safety
+//!
+//! The `xla` crate's client handle is an `Rc` and its executables are raw
+//! pointers — neither is `Send`. PJRT's CPU plugin itself is thread-safe,
+//! but the binding's `Rc` reference counting is not, so this module routes
+//! *every* PJRT interaction (client creation, compilation, execution,
+//! buffer→literal transfer, and drops) through one global mutex
+//! ([`pjrt_lock`]). With that invariant, sharing [`Executable`] across the
+//! coordinator's worker threads is sound, which the `unsafe impl
+//! Send/Sync` below encode. Multi-worker throughput is preserved by
+//! keeping per-call critical sections short (one chunk execution) and by
+//! the fact that most of a server's generation time is outside the
+//! classifier call (see EXPERIMENTS.md §Perf).
+
+use anyhow::{anyhow, ensure, Context, Result};
+use std::mem::ManuallyDrop;
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard};
+
+/// The single global PJRT lock. All binding calls happen while holding it.
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+fn pjrt_lock() -> MutexGuard<'static, ()> {
+    PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Wrapper over the PJRT CPU client.
+pub struct Runtime {
+    client: ManuallyDrop<xla::PjRtClient>,
+}
+
+// SAFETY: every use of `client` (and its Rc refcount) happens under
+// PJRT_LOCK, including Drop.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        let _g = pjrt_lock();
+        unsafe { ManuallyDrop::drop(&mut self.client) };
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let _g = pjrt_lock();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client: ManuallyDrop::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        let _g = pjrt_lock();
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        ensure!(path.exists(), "artifact not found: {} (run `make artifacts`)", path.display());
+        let _g = pjrt_lock();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(Executable { exe: ManuallyDrop::new(exe), name: path.display().to_string() })
+    }
+}
+
+/// A compiled executable. Inputs/outputs are f32 tensors; the lowered jax
+/// functions return a tuple (we lower with `return_tuple=True`).
+pub struct Executable {
+    exe: ManuallyDrop<xla::PjRtLoadedExecutable>,
+    name: String,
+}
+
+// SAFETY: see module docs — all PJRT calls (execute, transfers, drops) are
+// serialized by PJRT_LOCK.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Drop for Executable {
+    fn drop(&mut self) {
+        let _g = pjrt_lock();
+        unsafe { ManuallyDrop::drop(&mut self.exe) };
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs of the given shapes; returns every tuple
+    /// element flattened to `Vec<f32>`.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        // Literals are standalone host buffers (no client handle): build
+        // them outside the lock.
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let n: i64 = shape.iter().product();
+            ensure!(
+                n as usize == data.len(),
+                "{}: input length {} != shape {:?}",
+                self.name,
+                data.len(),
+                shape
+            );
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow!("{}: reshape: {e:?}", self.name))?;
+            literals.push(lit);
+        }
+        // Execute + fetch + drop device buffers under the PJRT lock.
+        let out = {
+            let _g = pjrt_lock();
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("{}: execute: {e:?}", self.name))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{}: fetch: {e:?}", self.name))?;
+            drop(result); // device buffers (hold client refs) die here
+            lit
+        };
+        let tuple = out.to_tuple().map_err(|e| anyhow!("{}: tuple: {e:?}", self.name))?;
+        tuple
+            .into_iter()
+            .map(|t| t.to_vec::<f32>().map_err(|e| anyhow!("{}: to_vec: {e:?}", self.name)))
+            .collect()
+    }
+
+    /// Execute and return only the first tuple element.
+    pub fn run_f32_first(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let mut outs = self.run_f32(inputs)?;
+        ensure!(!outs.is_empty(), "{}: empty output tuple", self.name);
+        Ok(outs.swap_remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // A tiny checked-in HLO fixture: fn(x, y) = (matmul(x, y) + 2,) over
+    // f32[2,2], generated by /opt/xla-example/gen_hlo.py. Lets runtime tests
+    // run without `make artifacts`.
+    fn fixture() -> std::path::PathBuf {
+        crate::catalog::Catalog::repo_root().join("rust/tests/data/matmul_add.hlo.txt")
+    }
+
+    #[test]
+    fn load_and_execute_fixture() {
+        let rt = Runtime::cpu().expect("cpu client");
+        assert!(!rt.platform().is_empty());
+        let exe = rt.load_hlo_text(&fixture()).expect("compile fixture");
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [1.0f32, 1.0, 1.0, 1.0];
+        let out = exe.run_f32_first(&[(&x, &[2, 2]), (&y, &[2, 2])]).expect("run");
+        assert_eq!(out, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn reexecution_is_stable() {
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&fixture()).unwrap();
+        let x = [2.0f32, 0.0, 0.0, 2.0];
+        let y = [1.0f32, 2.0, 3.0, 4.0];
+        let a = exe.run_f32_first(&[(&x, &[2, 2]), (&y, &[2, 2])]).unwrap();
+        let b = exe.run_f32_first(&[(&x, &[2, 2]), (&y, &[2, 2])]).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a, vec![4.0, 6.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn concurrent_execution_is_serialized_and_correct() {
+        let rt = Runtime::cpu().unwrap();
+        let exe = std::sync::Arc::new(rt.load_hlo_text(&fixture()).unwrap());
+        std::thread::scope(|s| {
+            for i in 0..4 {
+                let exe = exe.clone();
+                s.spawn(move || {
+                    let v = i as f32;
+                    let x = [v, 0.0, 0.0, v];
+                    let y = [1.0f32, 0.0, 0.0, 1.0];
+                    for _ in 0..5 {
+                        let out =
+                            exe.run_f32_first(&[(&x, &[2, 2]), (&y, &[2, 2])]).unwrap();
+                        assert_eq!(out, vec![v + 2.0, 2.0, 2.0, v + 2.0]);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let rt = Runtime::cpu().unwrap();
+        let err = match rt.load_hlo_text(Path::new("/nonexistent/x.hlo.txt")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&fixture()).unwrap();
+        let x = [1.0f32; 3];
+        assert!(exe.run_f32_first(&[(&x, &[2, 2]), (&x, &[2, 2])]).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! The state dictionary (paper §3.2–3.3): ordered operating states
+//! `{(μ_k, σ_k)}` for one configuration, with per-state AR(1) coefficients
+//! (MoE) and the observed clip range. This is the `states` block of the
+//! per-configuration artifact JSON.
+
+use super::gmm::Gmm1d;
+use crate::util::json::{self, Json};
+use anyhow::{ensure, Result};
+
+/// Ordered power-state dictionary for one (H, M, TP) configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StateDictionary {
+    /// Mixture weights (sorted by ascending mean power).
+    pub pi: Vec<f64>,
+    /// State mean power (W), ascending (idle → full load).
+    pub mu: Vec<f64>,
+    /// State power std (W).
+    pub sigma: Vec<f64>,
+    /// Per-state AR(1) coefficient (≈0 for dense, >0 for MoE; paper Eq. 9).
+    pub phi: Vec<f64>,
+    /// Observed power range from training data; samples are clipped here.
+    pub y_min: f64,
+    pub y_max: f64,
+}
+
+impl StateDictionary {
+    pub fn k(&self) -> usize {
+        self.mu.len()
+    }
+
+    /// Build from a fitted (sorted) GMM with uniform AR coefficient.
+    pub fn from_gmm(gmm: &Gmm1d, phi: f64, y_min: f64, y_max: f64) -> StateDictionary {
+        StateDictionary {
+            pi: gmm.pi.clone(),
+            mu: gmm.mu.clone(),
+            sigma: gmm.sigma.clone(),
+            phi: vec![phi; gmm.k()],
+            y_min,
+            y_max,
+        }
+    }
+
+    pub fn to_gmm(&self) -> Gmm1d {
+        Gmm1d::new(self.pi.clone(), self.mu.clone(), self.sigma.clone())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let k = self.k();
+        ensure!(k >= 1, "empty state dictionary");
+        ensure!(self.pi.len() == k && self.sigma.len() == k && self.phi.len() == k, "ragged fields");
+        ensure!(self.mu.windows(2).all(|w| w[0] <= w[1]), "states must be sorted by mean");
+        ensure!(self.sigma.iter().all(|&s| s > 0.0), "sigmas must be positive");
+        ensure!(self.phi.iter().all(|&p| (0.0..1.0).contains(&p)), "phi must be in [0,1)");
+        ensure!(self.y_min < self.y_max, "invalid clip range");
+        let total: f64 = self.pi.iter().sum();
+        ensure!((total - 1.0).abs() < 1e-4, "weights must sum to 1 (got {total})");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj([
+            ("pi", Json::from_f64s(&self.pi)),
+            ("mu", Json::from_f64s(&self.mu)),
+            ("sigma", Json::from_f64s(&self.sigma)),
+            ("phi", Json::from_f64s(&self.phi)),
+            ("y_min", self.y_min.into()),
+            ("y_max", self.y_max.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<StateDictionary> {
+        let d = StateDictionary {
+            pi: v.get("pi")?.f64_array()?,
+            mu: v.get("mu")?.f64_array()?,
+            sigma: v.get("sigma")?.f64_array()?,
+            phi: v.get("phi")?.f64_array()?,
+            y_min: v.f64_field("y_min")?,
+            y_max: v.f64_field("y_max")?,
+        };
+        d.validate()?;
+        Ok(d)
+    }
+
+    /// Clip a power sample to the observed range (paper §3.2: "generated
+    /// samples are clipped to the observed power range").
+    #[inline]
+    pub fn clip(&self, y: f64) -> f64 {
+        y.clamp(self.y_min, self.y_max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dict() -> StateDictionary {
+        StateDictionary {
+            pi: vec![0.6, 0.4],
+            mu: vec![100.0, 300.0],
+            sigma: vec![5.0, 10.0],
+            phi: vec![0.0, 0.8],
+            y_min: 80.0,
+            y_max: 340.0,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let d = dict();
+        let j = d.to_json();
+        let back = StateDictionary::from_json(&j).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn validation_catches_issues() {
+        let mut bad = dict();
+        bad.mu = vec![300.0, 100.0];
+        assert!(bad.validate().is_err());
+
+        let mut bad = dict();
+        bad.sigma[0] = 0.0;
+        assert!(bad.validate().is_err());
+
+        let mut bad = dict();
+        bad.phi[1] = 1.5;
+        assert!(bad.validate().is_err());
+
+        let mut bad = dict();
+        bad.pi = vec![0.5, 0.4];
+        assert!(bad.validate().is_err());
+
+        let mut bad = dict();
+        bad.y_min = 400.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn clip_bounds_samples() {
+        let d = dict();
+        assert_eq!(d.clip(50.0), 80.0);
+        assert_eq!(d.clip(500.0), 340.0);
+        assert_eq!(d.clip(200.0), 200.0);
+    }
+
+    #[test]
+    fn from_gmm_copies_parameters() {
+        let g = Gmm1d::new(vec![0.3, 0.7], vec![50.0, 250.0], vec![4.0, 9.0]);
+        let d = StateDictionary::from_gmm(&g, 0.85, 40.0, 300.0);
+        assert_eq!(d.mu, g.mu);
+        assert_eq!(d.phi, vec![0.85, 0.85]);
+        d.validate().unwrap();
+        let g2 = d.to_gmm();
+        assert_eq!(g2.mu, g.mu);
+    }
+}

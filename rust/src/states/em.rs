@@ -1,0 +1,255 @@
+//! Expectation–maximization fitting of 1-D GMMs with BIC model selection
+//! (paper §3.2 / Fig. 4). Used by the Rust `fit` path and the Fig-4 bench;
+//! the Python build path has an equivalent implementation whose outputs are
+//! cross-checked in integration tests.
+
+use super::gmm::{log_sum_exp, Gmm1d};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+#[derive(Debug, Clone, Copy)]
+pub struct EmOptions {
+    pub max_iters: usize,
+    /// Convergence threshold on mean log-likelihood improvement.
+    pub tol: f64,
+    /// Random restarts; the best log-likelihood wins.
+    pub n_init: usize,
+    /// Variance floor as a fraction of data variance (avoids collapse).
+    pub var_floor_frac: f64,
+}
+
+impl Default for EmOptions {
+    fn default() -> Self {
+        EmOptions { max_iters: 200, tol: 1e-6, n_init: 3, var_floor_frac: 1e-4 }
+    }
+}
+
+/// k-means++-style seeding: spread initial means over the data.
+fn init_means(ys: &[f32], k: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut means = Vec::with_capacity(k);
+    means.push(ys[rng.below(ys.len())] as f64);
+    while means.len() < k {
+        // Sample proportional to squared distance to the nearest mean
+        // (subsample for speed on long traces).
+        let stride = (ys.len() / 2048).max(1);
+        let mut weights: Vec<f32> = Vec::with_capacity(ys.len() / stride + 1);
+        let mut idxs: Vec<usize> = Vec::with_capacity(ys.len() / stride + 1);
+        for (i, &y) in ys.iter().enumerate().step_by(stride) {
+            let d = means
+                .iter()
+                .map(|&m| (y as f64 - m).abs())
+                .fold(f64::INFINITY, f64::min);
+            weights.push((d * d) as f32);
+            idxs.push(i);
+        }
+        let pick = rng.categorical(&weights);
+        means.push(ys[idxs[pick]] as f64);
+    }
+    means
+}
+
+/// Fit a K-component GMM to `ys` by EM.
+pub fn fit_gmm(ys: &[f32], k: usize, opts: &EmOptions, rng: &mut Rng) -> Result<Gmm1d> {
+    ensure!(k >= 1, "k must be >= 1");
+    ensure!(ys.len() >= 10 * k, "need >= {} samples for k={k}, got {}", 10 * k, ys.len());
+
+    let n = ys.len();
+    let mean = ys.iter().map(|&y| y as f64).sum::<f64>() / n as f64;
+    let var = ys.iter().map(|&y| (y as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+    let var_floor = (var * opts.var_floor_frac).max(1e-9);
+
+    let mut best: Option<(f64, Gmm1d)> = None;
+    for _init in 0..opts.n_init {
+        let mut mu = init_means(ys, k, rng);
+        mu.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut pi = vec![1.0 / k as f64; k];
+        let mut sigma = vec![(var / k as f64).sqrt().max(var_floor.sqrt()); k];
+
+        let mut prev_ll = f64::NEG_INFINITY;
+        let mut resp = vec![0.0f64; k]; // scratch
+        let mut nk = vec![0.0f64; k];
+        let mut sum_y = vec![0.0f64; k];
+        let mut sum_y2 = vec![0.0f64; k];
+        for _iter in 0..opts.max_iters {
+            // E+M fused single pass: accumulate responsibilities.
+            nk.iter_mut().for_each(|x| *x = 0.0);
+            sum_y.iter_mut().for_each(|x| *x = 0.0);
+            sum_y2.iter_mut().for_each(|x| *x = 0.0);
+            let mut ll = 0.0f64;
+            let log_pi: Vec<f64> = pi.iter().map(|&p| p.max(1e-300).ln()).collect();
+            let inv_two_var: Vec<f64> = sigma.iter().map(|&s| 0.5 / (s * s)).collect();
+            let log_sigma: Vec<f64> = sigma.iter().map(|&s| s.ln()).collect();
+            for &yf in ys {
+                let y = yf as f64;
+                for j in 0..k {
+                    let d = y - mu[j];
+                    resp[j] = log_pi[j] - d * d * inv_two_var[j] - log_sigma[j];
+                }
+                let lse = log_sum_exp(&resp);
+                ll += lse;
+                for j in 0..k {
+                    let r = (resp[j] - lse).exp();
+                    nk[j] += r;
+                    sum_y[j] += r * y;
+                    sum_y2[j] += r * y * y;
+                }
+            }
+            // M step.
+            for j in 0..k {
+                let w = nk[j].max(1e-12);
+                pi[j] = w / n as f64;
+                mu[j] = sum_y[j] / w;
+                let v = (sum_y2[j] / w - mu[j] * mu[j]).max(var_floor);
+                sigma[j] = v.sqrt();
+            }
+            // Renormalize weights (guards accumulation error).
+            let total: f64 = pi.iter().sum();
+            pi.iter_mut().for_each(|p| *p /= total);
+
+            let mean_ll = ll / n as f64;
+            if (mean_ll - prev_ll).abs() < opts.tol {
+                prev_ll = mean_ll;
+                break;
+            }
+            prev_ll = mean_ll;
+        }
+        let candidate = Gmm1d::new(pi.clone(), mu.clone(), sigma.clone());
+        let ll = prev_ll;
+        if best.as_ref().map(|(b, _)| ll > *b).unwrap_or(true) {
+            best = Some((ll, candidate));
+        }
+    }
+    Ok(best.expect("at least one init").1.sorted_by_mean().0)
+}
+
+/// BIC values across a range of K (paper Fig. 4).
+#[derive(Debug, Clone)]
+pub struct BicCurve {
+    pub ks: Vec<usize>,
+    pub bic: Vec<f64>,
+    pub best_k: usize,
+}
+
+impl BicCurve {
+    /// BIC normalized to [0,1] over the curve (as plotted in Fig. 4).
+    pub fn normalized(&self) -> Vec<f64> {
+        let lo = self.bic.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = self.bic.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-12);
+        self.bic.iter().map(|b| (b - lo) / span).collect()
+    }
+}
+
+/// Fit GMMs for each K in `k_range` and select the BIC minimizer, with the
+/// paper's "plateau" rule: prefer the smallest K within `plateau_frac` of
+/// the minimum BIC span (avoids buying components for negligible gain).
+pub fn select_k(
+    ys: &[f32],
+    k_range: std::ops::RangeInclusive<usize>,
+    opts: &EmOptions,
+    rng: &mut Rng,
+) -> Result<(Gmm1d, BicCurve)> {
+    let mut ks = Vec::new();
+    let mut bics = Vec::new();
+    let mut fits = Vec::new();
+    for k in k_range {
+        let g = fit_gmm(ys, k, opts, rng)?;
+        bics.push(g.bic(ys));
+        fits.push(g);
+        ks.push(k);
+    }
+    let lo = bics.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = bics.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let thresh = lo + 0.02 * (hi - lo).max(1e-12);
+    let best_idx = bics.iter().position(|&b| b <= thresh).expect("nonempty");
+    let curve = BicCurve { ks: ks.clone(), bic: bics, best_k: ks[best_idx] };
+    Ok((fits.swap_remove(best_idx), curve))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_mixture(g: &Gmm1d, n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let w: Vec<f32> = g.pi.iter().map(|&p| p as f32).collect();
+                let k = rng.categorical(&w);
+                rng.normal_ms(g.mu[k], g.sigma[k]) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_well_separated_mixture() {
+        let truth = Gmm1d::new(vec![0.3, 0.5, 0.2], vec![60.0, 200.0, 350.0], vec![5.0, 8.0, 6.0]);
+        let mut rng = Rng::new(60);
+        let ys = sample_mixture(&truth, 8000, &mut rng);
+        let fit = fit_gmm(&ys, 3, &EmOptions::default(), &mut rng).unwrap();
+        for j in 0..3 {
+            assert!((fit.mu[j] - truth.mu[j]).abs() < 3.0, "mu[{j}] {}", fit.mu[j]);
+            assert!((fit.pi[j] - truth.pi[j]).abs() < 0.03, "pi[{j}] {}", fit.pi[j]);
+            assert!((fit.sigma[j] - truth.sigma[j]).abs() < 1.5, "sigma[{j}] {}", fit.sigma[j]);
+        }
+    }
+
+    #[test]
+    fn single_component_matches_moments() {
+        let mut rng = Rng::new(61);
+        let ys: Vec<f32> = (0..5000).map(|_| rng.normal_ms(100.0, 10.0) as f32).collect();
+        let fit = fit_gmm(&ys, 1, &EmOptions::default(), &mut rng).unwrap();
+        assert!((fit.mu[0] - 100.0).abs() < 0.5);
+        assert!((fit.sigma[0] - 10.0).abs() < 0.3);
+        assert_eq!(fit.pi[0], 1.0);
+    }
+
+    #[test]
+    fn select_k_finds_true_order() {
+        let truth = Gmm1d::new(
+            vec![0.25, 0.25, 0.25, 0.25],
+            vec![50.0, 150.0, 250.0, 350.0],
+            vec![8.0, 8.0, 8.0, 8.0],
+        );
+        let mut rng = Rng::new(62);
+        let ys = sample_mixture(&truth, 12_000, &mut rng);
+        let (fit, curve) = select_k(&ys, 1..=7, &EmOptions::default(), &mut rng).unwrap();
+        assert_eq!(curve.best_k, 4, "bic: {:?}", curve.bic);
+        assert_eq!(fit.k(), 4);
+        // Curve should drop then plateau: BIC(4) well below BIC(1).
+        assert!(curve.bic[3] < curve.bic[0]);
+    }
+
+    #[test]
+    fn bic_curve_normalization() {
+        let c = BicCurve { ks: vec![1, 2, 3], bic: vec![100.0, 50.0, 60.0], best_k: 2 };
+        let n = c.normalized();
+        assert_eq!(n[0], 1.0);
+        assert_eq!(n[1], 0.0);
+        assert!((n[2] - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn variance_floor_prevents_collapse() {
+        // Many repeated identical values tempt sigma → 0.
+        let mut ys = vec![100.0f32; 500];
+        ys.extend(vec![200.0f32; 500]);
+        let mut rng = Rng::new(63);
+        let fit = fit_gmm(&ys, 2, &EmOptions::default(), &mut rng).unwrap();
+        assert!(fit.sigma.iter().all(|&s| s > 0.0 && s.is_finite()));
+    }
+
+    #[test]
+    fn rejects_too_few_samples() {
+        let mut rng = Rng::new(64);
+        assert!(fit_gmm(&[1.0f32; 5], 2, &EmOptions::default(), &mut rng).is_err());
+    }
+
+    #[test]
+    fn sorted_output_is_ascending() {
+        let truth = Gmm1d::new(vec![0.5, 0.5], vec![300.0, 60.0], vec![10.0, 10.0]);
+        let mut rng = Rng::new(65);
+        let ys = sample_mixture(&truth, 4000, &mut rng);
+        let fit = fit_gmm(&ys, 2, &EmOptions::default(), &mut rng).unwrap();
+        assert!(fit.mu.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

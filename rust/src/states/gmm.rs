@@ -1,0 +1,195 @@
+//! One-dimensional Gaussian mixture model (paper Eq. 1–2):
+//! `p(y) = Σ_k π_k N(y | μ_k, σ_k²)`, with hard state labels from posterior
+//! maximization `z_t = argmax_k π_k N(y_t | μ_k, σ_k²)`.
+
+const LOG_2PI: f64 = 1.8378770664093453;
+
+/// A 1-D GMM with K components.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Gmm1d {
+    pub pi: Vec<f64>,
+    pub mu: Vec<f64>,
+    pub sigma: Vec<f64>,
+}
+
+impl Gmm1d {
+    pub fn new(pi: Vec<f64>, mu: Vec<f64>, sigma: Vec<f64>) -> Gmm1d {
+        assert_eq!(pi.len(), mu.len());
+        assert_eq!(pi.len(), sigma.len());
+        assert!(!pi.is_empty());
+        assert!(sigma.iter().all(|&s| s > 0.0), "sigmas must be positive");
+        let total: f64 = pi.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6, "weights must sum to 1, got {total}");
+        Gmm1d { pi, mu, sigma }
+    }
+
+    pub fn k(&self) -> usize {
+        self.pi.len()
+    }
+
+    /// log N(y | μ_k, σ_k²)
+    #[inline]
+    pub fn log_normal(&self, y: f64, k: usize) -> f64 {
+        let z = (y - self.mu[k]) / self.sigma[k];
+        -0.5 * (z * z + LOG_2PI) - self.sigma[k].ln()
+    }
+
+    /// log p(y) via log-sum-exp over components.
+    pub fn log_likelihood(&self, y: f64) -> f64 {
+        let mut terms: Vec<f64> = Vec::with_capacity(self.k());
+        for k in 0..self.k() {
+            terms.push(self.pi[k].max(1e-300).ln() + self.log_normal(y, k));
+        }
+        log_sum_exp(&terms)
+    }
+
+    /// Total log-likelihood of a sample.
+    pub fn total_log_likelihood(&self, ys: &[f32]) -> f64 {
+        ys.iter().map(|&y| self.log_likelihood(y as f64)).sum()
+    }
+
+    /// Posterior responsibilities γ_k(y) (normalized).
+    pub fn posterior(&self, y: f64) -> Vec<f64> {
+        let logs: Vec<f64> =
+            (0..self.k()).map(|k| self.pi[k].max(1e-300).ln() + self.log_normal(y, k)).collect();
+        let lse = log_sum_exp(&logs);
+        logs.iter().map(|l| (l - lse).exp()).collect()
+    }
+
+    /// Hard label by posterior maximization (paper Eq. 2).
+    pub fn label(&self, y: f64) -> usize {
+        let mut best = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for k in 0..self.k() {
+            let v = self.pi[k].max(1e-300).ln() + self.log_normal(y, k);
+            if v > best_v {
+                best_v = v;
+                best = k;
+            }
+        }
+        best
+    }
+
+    /// Label a whole trace.
+    pub fn label_trace(&self, ys: &[f32]) -> Vec<usize> {
+        ys.iter().map(|&y| self.label(y as f64)).collect()
+    }
+
+    /// Return a copy with components sorted by ascending mean (the paper
+    /// orders states from idle to full load), along with the permutation.
+    pub fn sorted_by_mean(&self) -> (Gmm1d, Vec<usize>) {
+        let mut idx: Vec<usize> = (0..self.k()).collect();
+        idx.sort_by(|&a, &b| self.mu[a].partial_cmp(&self.mu[b]).unwrap());
+        let g = Gmm1d {
+            pi: idx.iter().map(|&i| self.pi[i]).collect(),
+            mu: idx.iter().map(|&i| self.mu[i]).collect(),
+            sigma: idx.iter().map(|&i| self.sigma[i]).collect(),
+        };
+        (g, idx)
+    }
+
+    /// Number of free parameters (for BIC): K-1 weights + K means + K vars.
+    pub fn n_params(&self) -> usize {
+        3 * self.k() - 1
+    }
+
+    /// BIC = k·ln(n) − 2·logL (lower is better).
+    pub fn bic(&self, ys: &[f32]) -> f64 {
+        let ll = self.total_log_likelihood(ys);
+        self.n_params() as f64 * (ys.len() as f64).ln() - 2.0 * ll
+    }
+}
+
+pub fn log_sum_exp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if m.is_infinite() {
+        return m;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn two_state() -> Gmm1d {
+        Gmm1d::new(vec![0.5, 0.5], vec![0.0, 10.0], vec![1.0, 1.0])
+    }
+
+    #[test]
+    fn density_integrates_to_one() {
+        let g = two_state();
+        // Riemann sum over a wide grid.
+        let mut total = 0.0;
+        let dx = 0.01;
+        let mut x = -10.0;
+        while x < 20.0 {
+            total += g.log_likelihood(x).exp() * dx;
+            x += dx;
+        }
+        assert!((total - 1.0).abs() < 1e-3, "integral {total}");
+    }
+
+    #[test]
+    fn labels_assign_to_nearest_component() {
+        let g = two_state();
+        assert_eq!(g.label(-1.0), 0);
+        assert_eq!(g.label(11.0), 1);
+        assert_eq!(g.label(4.99), 0);
+        assert_eq!(g.label(5.01), 1);
+    }
+
+    #[test]
+    fn posterior_normalizes_and_is_confident_far_from_boundary() {
+        let g = two_state();
+        let p = g.posterior(0.0);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[0] > 0.99);
+        let p = g.posterior(5.0);
+        assert!((p[0] - 0.5).abs() < 1e-9, "{p:?}");
+    }
+
+    #[test]
+    fn unequal_weights_shift_boundary() {
+        let g = Gmm1d::new(vec![0.9, 0.1], vec![0.0, 10.0], vec![1.0, 1.0]);
+        // At the midpoint the prior favors component 0.
+        assert_eq!(g.label(5.0), 0);
+    }
+
+    #[test]
+    fn sorted_by_mean_orders_states() {
+        let g = Gmm1d::new(vec![0.2, 0.5, 0.3], vec![5.0, 1.0, 3.0], vec![1.0, 1.0, 1.0]);
+        let (s, perm) = g.sorted_by_mean();
+        assert_eq!(s.mu, vec![1.0, 3.0, 5.0]);
+        assert_eq!(perm, vec![1, 2, 0]);
+        assert_eq!(s.pi, vec![0.5, 0.3, 0.2]);
+    }
+
+    #[test]
+    fn bic_prefers_true_model_order() {
+        let mut rng = Rng::new(50);
+        let truth = two_state();
+        let ys: Vec<f32> = (0..4000)
+            .map(|_| {
+                let k = if rng.f64() < 0.5 { 0 } else { 1 };
+                rng.normal_ms(truth.mu[k], truth.sigma[k]) as f32
+            })
+            .collect();
+        let one = Gmm1d::new(vec![1.0], vec![5.0], vec![5.1]);
+        assert!(truth.bic(&ys) < one.bic(&ys));
+    }
+
+    #[test]
+    fn log_sum_exp_stable() {
+        assert!((log_sum_exp(&[0.0, 0.0]) - 2f64.ln()).abs() < 1e-12);
+        assert!((log_sum_exp(&[-1000.0, -1000.0]) - (-1000.0 + 2f64.ln())).abs() < 1e-9);
+        assert_eq!(log_sum_exp(&[f64::NEG_INFINITY, -2.0]), -2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_weights() {
+        Gmm1d::new(vec![0.5, 0.6], vec![0.0, 1.0], vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Power-state modeling (paper §3.2): per-configuration Gaussian mixture
+//! models over measured 250 ms power samples, EM fitting with BIC model
+//! selection (K ∈ 8..12 typically), and the ordered state dictionary used
+//! both to label training data and to sample power at generation time.
+
+pub mod dictionary;
+pub mod em;
+pub mod gmm;
+
+pub use dictionary::StateDictionary;
+pub use em::{fit_gmm, select_k, BicCurve, EmOptions};
+pub use gmm::Gmm1d;

@@ -1,0 +1,168 @@
+//! Surrogate calibration: fit (α₀, α₁, σ_TTFT, μ_logTBT, σ_logTBT) from
+//! observed request lifetimes (paper §3.3: "estimated per configuration from
+//! measured traces, but they can also be obtained from a small benchmark
+//! sweep or supplied directly from deployment SLOs/SLAs").
+//!
+//! TTFT is fit by ordinary least squares in log–log space; TBT by the
+//! sample mean/std of log inter-token latency.
+
+use super::SurrogateParams;
+use anyhow::{ensure, Result};
+
+/// Observed per-request durations from a measured trace (or the testbed's
+/// ground-truth logs): prompt length, prefill seconds, decode seconds,
+/// output tokens.
+#[derive(Debug, Clone, Default)]
+pub struct DurationSamples {
+    pub n_in: Vec<u32>,
+    pub prefill_s: Vec<f64>,
+    pub n_out: Vec<u32>,
+    pub decode_s: Vec<f64>,
+}
+
+impl DurationSamples {
+    pub fn push(&mut self, n_in: u32, prefill_s: f64, n_out: u32, decode_s: f64) {
+        self.n_in.push(n_in);
+        self.prefill_s.push(prefill_s);
+        self.n_out.push(n_out);
+        self.decode_s.push(decode_s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_in.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_in.is_empty()
+    }
+}
+
+/// Fit surrogate parameters from duration samples.
+pub fn fit_surrogate(samples: &DurationSamples) -> Result<SurrogateParams> {
+    ensure!(samples.len() >= 8, "need at least 8 samples to calibrate, got {}", samples.len());
+    ensure!(
+        samples.prefill_s.iter().all(|&x| x > 0.0) && samples.decode_s.iter().all(|&x| x > 0.0),
+        "durations must be positive"
+    );
+
+    // --- TTFT: OLS of log(ttft) on log(n_in + 1) ---
+    let xs: Vec<f64> = samples.n_in.iter().map(|&n| ((n as f64) + 1.0).ln()).collect();
+    let ys: Vec<f64> = samples.prefill_s.iter().map(|&t| t.ln()).collect();
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let (alpha0, alpha1) = if sxx < 1e-9 {
+        // Degenerate design (constant prompt length): intercept-only model.
+        (my, 0.0)
+    } else {
+        let a1 = sxy / sxx;
+        (my - a1 * mx, a1)
+    };
+    let resid_var: f64 = xs
+        .iter()
+        .zip(&ys)
+        .map(|(x, y)| {
+            let e = y - (alpha0 + alpha1 * x);
+            e * e
+        })
+        .sum::<f64>()
+        / n;
+
+    // --- TBT: moments of log(decode_s / n_out) ---
+    let log_tbt: Vec<f64> = samples
+        .decode_s
+        .iter()
+        .zip(&samples.n_out)
+        .map(|(&d, &n_out)| (d / (n_out.max(1) as f64)).ln())
+        .collect();
+    let mu = log_tbt.iter().sum::<f64>() / n;
+    let var = log_tbt.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / n;
+
+    Ok(SurrogateParams {
+        alpha0,
+        alpha1,
+        sigma_ttft: resid_var.sqrt(),
+        mu_log_tbt: mu,
+        sigma_log_tbt: var.sqrt(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_planted_parameters() {
+        let truth = SurrogateParams {
+            alpha0: -2.5,
+            alpha1: 0.85,
+            sigma_ttft: 0.15,
+            mu_log_tbt: -4.2,
+            sigma_log_tbt: 0.25,
+        };
+        let mut rng = Rng::new(41);
+        let mut s = DurationSamples::default();
+        for _ in 0..4000 {
+            let n_in = rng.lognormal(5.5, 0.8).max(1.0) as u32;
+            let n_out = rng.lognormal(4.5, 0.5).max(1.0) as u32;
+            let ttft = truth.sample_ttft(n_in, &mut rng);
+            let tbt = truth.sample_tbt(&mut rng);
+            s.push(n_in, ttft, n_out, n_out as f64 * tbt);
+        }
+        let fit = fit_surrogate(&s).unwrap();
+        assert!((fit.alpha0 - truth.alpha0).abs() < 0.1, "alpha0 {}", fit.alpha0);
+        assert!((fit.alpha1 - truth.alpha1).abs() < 0.03, "alpha1 {}", fit.alpha1);
+        assert!((fit.sigma_ttft - truth.sigma_ttft).abs() < 0.03);
+        assert!((fit.mu_log_tbt - truth.mu_log_tbt).abs() < 0.02);
+        assert!((fit.sigma_log_tbt - truth.sigma_log_tbt).abs() < 0.02);
+    }
+
+    #[test]
+    fn fits_nonlinear_truth_reasonably() {
+        // Testbed truth is a power law with interference — the log-linear
+        // fit should still predict medians within ~30% over the data range.
+        let mut rng = Rng::new(42);
+        let mut s = DurationSamples::default();
+        for _ in 0..2000 {
+            let n_in = rng.lognormal(5.5, 0.8).max(8.0) as u32;
+            let ttft = 0.25 * ((n_in as f64) / 512.0).powf(1.15) * rng.lognormal(0.0, 0.1);
+            let n_out = 100u32;
+            s.push(n_in, ttft, n_out, n_out as f64 * 0.015 * rng.lognormal(0.0, 0.1));
+        }
+        let fit = fit_surrogate(&s).unwrap();
+        for n_in in [128u32, 512, 2048] {
+            let truth = 0.25 * ((n_in as f64) / 512.0).powf(1.15);
+            let pred = fit.median_ttft(n_in);
+            assert!(
+                (pred / truth - 1.0).abs() < 0.3,
+                "n_in={n_in}: pred {pred} vs truth {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn constant_prompt_length_degenerates_gracefully() {
+        let mut s = DurationSamples::default();
+        for _ in 0..20 {
+            s.push(512, 0.3, 100, 1.5);
+        }
+        let fit = fit_surrogate(&s).unwrap();
+        assert_eq!(fit.alpha1, 0.0);
+        assert!((fit.median_ttft(512) - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_insufficient_or_invalid() {
+        let mut s = DurationSamples::default();
+        s.push(10, 0.1, 10, 0.1);
+        assert!(fit_surrogate(&s).is_err());
+        let mut bad = DurationSamples::default();
+        for _ in 0..10 {
+            bad.push(10, -0.1, 10, 0.1);
+        }
+        assert!(fit_surrogate(&bad).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Workload features (paper §2.1): the active-request count `A_t` and its
+//! first difference `ΔA_t`, computed on the 250 ms power-sampling grid from
+//! the modeled active intervals.
+//!
+//! `A_t = |{i : t_start_i ≤ t < t_end_i}|` (Eq. 6), `ΔA_t = A_t − A_{t−1}`.
+
+use super::queue::ActiveInterval;
+
+/// Per-timestep feature series, interleaved as the classifier expects:
+/// `x_t = (A_t, ΔA_t)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureSeries {
+    /// Sampling interval (s).
+    pub dt_s: f64,
+    /// Active-request count per timestep.
+    pub a: Vec<f32>,
+    /// First difference of `a` (Δa[0] = a[0], i.e. A_{-1} = 0).
+    pub da: Vec<f32>,
+}
+
+impl FeatureSeries {
+    pub fn len(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.a.is_empty()
+    }
+
+    /// Interleave into `[T, 2]` row-major `(A_t, ΔA_t)` for the classifier.
+    pub fn interleaved(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.a.len() * 2);
+        for (&a, &da) in self.a.iter().zip(self.da.iter()) {
+            out.push(a);
+            out.push(da);
+        }
+        out
+    }
+}
+
+/// Compute `(A_t, ΔA_t)` on a grid of `n_steps` intervals of `dt_s` seconds.
+///
+/// Uses a difference-array so the cost is O(requests + timesteps) — this is
+/// on the per-server hot path for facility generation.
+pub fn features_from_intervals(
+    intervals: &[ActiveInterval],
+    n_steps: usize,
+    dt_s: f64,
+) -> FeatureSeries {
+    assert!(dt_s > 0.0);
+    let mut diff = vec![0i32; n_steps + 1];
+    for iv in intervals {
+        // A request is active from the timestep its prefill begins until the
+        // timestep its final token is generated (paper §2.1).
+        let start_bin = (iv.start_s / dt_s).floor();
+        let end_bin = (iv.end_s() / dt_s).floor();
+        if start_bin >= n_steps as f64 {
+            continue;
+        }
+        let s = start_bin.max(0.0) as usize;
+        // end bin is inclusive of the final-token timestep
+        let e = (end_bin.max(0.0) as usize + 1).min(n_steps);
+        if e > s {
+            diff[s] += 1;
+            diff[e] -= 1;
+        }
+    }
+    let mut a = Vec::with_capacity(n_steps);
+    let mut cur = 0i32;
+    for &d in diff.iter().take(n_steps) {
+        cur += d;
+        debug_assert!(cur >= 0);
+        a.push(cur as f32);
+    }
+    let mut da = Vec::with_capacity(n_steps);
+    let mut prev = 0.0f32;
+    for &x in &a {
+        da.push(x - prev);
+        prev = x;
+    }
+    FeatureSeries { dt_s, a, da }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+
+    fn iv(start: f64, prefill: f64, decode: f64) -> ActiveInterval {
+        ActiveInterval { start_s: start, prefill_s: prefill, decode_s: decode }
+    }
+
+    #[test]
+    fn single_request_occupancy() {
+        // Active on [1.0, 2.0): bins 4..=8 at dt=0.25 (end bin inclusive).
+        let f = features_from_intervals(&[iv(1.0, 0.5, 0.5)], 16, 0.25);
+        assert_eq!(f.a[3], 0.0);
+        for t in 4..=8 {
+            assert_eq!(f.a[t], 1.0, "bin {t}");
+        }
+        assert_eq!(f.a[9], 0.0);
+        // ΔA: +1 at entry bin, -1 after exit
+        assert_eq!(f.da[4], 1.0);
+        assert_eq!(f.da[9], -1.0);
+    }
+
+    #[test]
+    fn overlapping_requests_sum() {
+        let f = features_from_intervals(&[iv(0.0, 0.5, 1.0), iv(0.5, 0.5, 1.0)], 12, 0.25);
+        assert_eq!(f.a[0], 1.0);
+        assert_eq!(f.a[2], 2.0); // both active at t=0.5..1.5
+        assert!(f.a.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn requests_beyond_horizon_are_clipped() {
+        let f = features_from_intervals(&[iv(100.0, 1.0, 1.0)], 10, 0.25);
+        assert!(f.a.iter().all(|&x| x == 0.0));
+        let f = features_from_intervals(&[iv(2.0, 10.0, 10.0)], 10, 0.25);
+        assert_eq!(f.a[8], 1.0);
+        assert_eq!(f.a[9], 1.0); // clipped at horizon
+    }
+
+    #[test]
+    fn delta_telescopes_to_a() {
+        let f = features_from_intervals(
+            &[iv(0.2, 0.3, 0.8), iv(0.9, 0.2, 2.0), iv(1.5, 0.1, 0.4)],
+            20,
+            0.25,
+        );
+        let mut acc = 0.0f32;
+        for (a, da) in f.a.iter().zip(f.da.iter()) {
+            acc += da;
+            assert_eq!(acc, *a);
+        }
+    }
+
+    #[test]
+    fn interleaved_layout() {
+        let f = FeatureSeries { dt_s: 0.25, a: vec![1.0, 2.0], da: vec![1.0, 1.0] };
+        assert_eq!(f.interleaved(), vec![1.0, 1.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn prop_a_nonnegative_and_bounded_by_requests() {
+        check("A_t bounded", |rng| {
+            let n = 1 + rng.below(40);
+            let ivs: Vec<ActiveInterval> = (0..n)
+                .map(|_| iv(rng.range(0.0, 50.0), rng.range(0.01, 2.0), rng.range(0.01, 20.0)))
+                .collect();
+            let f = features_from_intervals(&ivs, 400, 0.25);
+            for &a in &f.a {
+                assert!(a >= 0.0 && a <= n as f32);
+            }
+            // sum of positive ΔA equals number of requests entering horizon
+            let entering = ivs.iter().filter(|v| v.start_s < 100.0).count() as f32;
+            let pos: f32 = f.da.iter().filter(|&&d| d > 0.0).sum();
+            assert!(pos <= entering);
+        });
+    }
+}

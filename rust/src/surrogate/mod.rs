@@ -1,0 +1,104 @@
+//! The throughput surrogate (paper §3.3): a lightweight model of continuous
+//! batching that turns a request arrival schedule into per-timestep workload
+//! features `(A_t, ΔA_t)` without coupling to a serving-system
+//! implementation.
+//!
+//! Query lifetime = prefill + decode, with
+//!   `log(TTFT) = α₀ + α₁·log(n_in + 1) + ε,  ε ~ N(0, σ_TTFT²)`  (Eq. 4)
+//!   `log(TBT) ~ N(μ_logTBT, σ_logTBT²)`                           (Eq. 5)
+//! and a FIFO queue with a fixed batch capacity (64 in the paper).
+
+pub mod calibrate;
+pub mod features;
+pub mod queue;
+
+pub use calibrate::{fit_surrogate, DurationSamples};
+pub use features::{features_from_intervals, FeatureSeries};
+pub use queue::{simulate_queue, ActiveInterval};
+
+use crate::util::rng::Rng;
+
+/// Calibrated surrogate parameters for one serving configuration
+/// (α₀, α₁, σ_TTFT, μ_logTBT, σ_logTBT — paper §3.3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SurrogateParams {
+    pub alpha0: f64,
+    pub alpha1: f64,
+    pub sigma_ttft: f64,
+    pub mu_log_tbt: f64,
+    pub sigma_log_tbt: f64,
+}
+
+impl SurrogateParams {
+    /// Sample a prefill duration (TTFT) for a prompt of `n_in` tokens.
+    pub fn sample_ttft(&self, n_in: u32, rng: &mut Rng) -> f64 {
+        let mean = self.alpha0 + self.alpha1 * ((n_in as f64) + 1.0).ln();
+        (mean + self.sigma_ttft * rng.normal()).exp()
+    }
+
+    /// Expected TTFT (median of the lognormal).
+    pub fn median_ttft(&self, n_in: u32) -> f64 {
+        (self.alpha0 + self.alpha1 * ((n_in as f64) + 1.0).ln()).exp()
+    }
+
+    /// Sample an inter-token latency (TBT).
+    pub fn sample_tbt(&self, rng: &mut Rng) -> f64 {
+        (self.mu_log_tbt + self.sigma_log_tbt * rng.normal()).exp()
+    }
+
+    /// Median TBT.
+    pub fn median_tbt(&self) -> f64 {
+        self.mu_log_tbt.exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttft_grows_with_prompt_length() {
+        let p = SurrogateParams {
+            alpha0: -3.0,
+            alpha1: 0.9,
+            sigma_ttft: 0.0,
+            mu_log_tbt: -4.0,
+            sigma_log_tbt: 0.0,
+        };
+        assert!(p.median_ttft(2048) > p.median_ttft(128));
+        // superlinear in n_in when alpha1 close to 1: ratio of TTFTs >
+        // ratio^0.8 at least
+        let r = p.median_ttft(4096) / p.median_ttft(512);
+        assert!(r > 8f64.powf(0.8), "ratio {r}");
+    }
+
+    #[test]
+    fn deterministic_when_sigma_zero() {
+        let p = SurrogateParams {
+            alpha0: -2.0,
+            alpha1: 1.0,
+            sigma_ttft: 0.0,
+            mu_log_tbt: -4.0,
+            sigma_log_tbt: 0.0,
+        };
+        let mut rng = Rng::new(5);
+        assert_eq!(p.sample_ttft(100, &mut rng), p.median_ttft(100));
+        assert_eq!(p.sample_tbt(&mut rng), p.median_tbt());
+    }
+
+    #[test]
+    fn sampling_median_matches() {
+        let p = SurrogateParams {
+            alpha0: -2.0,
+            alpha1: 0.8,
+            sigma_ttft: 0.4,
+            mu_log_tbt: -4.0,
+            sigma_log_tbt: 0.3,
+        };
+        let mut rng = Rng::new(6);
+        let mut ttfts: Vec<f64> = (0..20_001).map(|_| p.sample_ttft(256, &mut rng)).collect();
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = ttfts[ttfts.len() / 2];
+        assert!((med / p.median_ttft(256) - 1.0).abs() < 0.05, "median ratio");
+    }
+}

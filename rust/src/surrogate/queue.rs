@@ -1,0 +1,187 @@
+//! FIFO continuous-batching queue model (paper §3.3): requests are admitted
+//! in arrival order into a fixed number of batch slots; request *i* begins
+//! at `max(t_i, earliest available slot)`, incurs its TTFT, then decodes for
+//! `n_out × TBT` seconds.
+
+use super::SurrogateParams;
+use crate::util::rng::Rng;
+use crate::workload::Schedule;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One request's modeled lifetime (used for features and Fig 5 CDFs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActiveInterval {
+    /// When execution began (≥ arrival time).
+    pub start_s: f64,
+    /// Prefill duration (TTFT).
+    pub prefill_s: f64,
+    /// Decode duration (n_out × TBT).
+    pub decode_s: f64,
+}
+
+impl ActiveInterval {
+    pub fn end_s(&self) -> f64 {
+        self.start_s + self.prefill_s + self.decode_s
+    }
+}
+
+// f64 ordering wrapper for the slot heap (end times are always finite).
+#[derive(PartialEq)]
+struct F(f64);
+impl Eq for F {}
+impl PartialOrd for F {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for F {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("finite")
+    }
+}
+
+/// Simulate the FIFO queue, returning each request's [`ActiveInterval`]
+/// (parallel to `schedule`, which must be time-sorted).
+pub fn simulate_queue(
+    schedule: &Schedule,
+    params: &SurrogateParams,
+    max_batch: usize,
+    rng: &mut Rng,
+) -> Vec<ActiveInterval> {
+    assert!(max_batch > 0, "simulate_queue: max_batch must be positive");
+    // Min-heap of slot-free times; absent entries mean free-now.
+    let mut slots: BinaryHeap<Reverse<F>> = BinaryHeap::with_capacity(max_batch);
+    let mut out = Vec::with_capacity(schedule.len());
+    for req in schedule {
+        let free_at = if slots.len() < max_batch {
+            req.arrival_s
+        } else {
+            let Reverse(F(earliest)) = slots.pop().expect("nonempty");
+            earliest
+        };
+        let start = req.arrival_s.max(free_at);
+        let prefill = params.sample_ttft(req.n_in, rng);
+        let tbt = params.sample_tbt(rng);
+        let decode = req.n_out as f64 * tbt;
+        let iv = ActiveInterval { start_s: start, prefill_s: prefill, decode_s: decode };
+        slots.push(Reverse(F(iv.end_s())));
+        out.push(iv);
+    }
+    out
+}
+
+/// Batch occupancy over time derived from intervals — used by invariant
+/// tests ("queue never exceeds the batch cap").
+pub fn max_concurrency(intervals: &[ActiveInterval]) -> usize {
+    let mut events: Vec<(f64, i32)> = Vec::with_capacity(intervals.len() * 2);
+    for iv in intervals {
+        events.push((iv.start_s, 1));
+        events.push((iv.end_s(), -1));
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut cur = 0i32;
+    let mut max = 0i32;
+    for (_, d) in events {
+        cur += d;
+        max = max.max(cur);
+    }
+    max as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::workload::{poisson_arrivals, LengthSampler, Request};
+
+    fn det_params() -> SurrogateParams {
+        SurrogateParams {
+            alpha0: -2.0,
+            alpha1: 0.7,
+            sigma_ttft: 0.0,
+            mu_log_tbt: (0.01f64).ln(),
+            sigma_log_tbt: 0.0,
+        }
+    }
+
+    #[test]
+    fn uncontended_requests_start_at_arrival() {
+        let sched = vec![
+            Request { arrival_s: 0.0, n_in: 100, n_out: 10 },
+            Request { arrival_s: 100.0, n_in: 100, n_out: 10 },
+        ];
+        let mut rng = Rng::new(1);
+        let ivs = simulate_queue(&sched, &det_params(), 64, &mut rng);
+        assert_eq!(ivs[0].start_s, 0.0);
+        assert_eq!(ivs[1].start_s, 100.0);
+        // decode = 10 tokens × 0.01 s
+        assert!((ivs[0].decode_s - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_slot_serializes_requests() {
+        let sched = vec![
+            Request { arrival_s: 0.0, n_in: 100, n_out: 100 },
+            Request { arrival_s: 0.0, n_in: 100, n_out: 100 },
+            Request { arrival_s: 0.0, n_in: 100, n_out: 100 },
+        ];
+        let mut rng = Rng::new(2);
+        let ivs = simulate_queue(&sched, &det_params(), 1, &mut rng);
+        assert_eq!(ivs[0].start_s, 0.0);
+        assert!((ivs[1].start_s - ivs[0].end_s()).abs() < 1e-9);
+        assert!((ivs[2].start_s - ivs[1].end_s()).abs() < 1e-9);
+        assert_eq!(max_concurrency(&ivs), 1);
+    }
+
+    #[test]
+    fn fifo_order_is_respected() {
+        // With 2 slots and 4 simultaneous arrivals, requests 3 and 4 must
+        // start when 1 and 2 finish, in order.
+        let sched: Schedule =
+            (0..4).map(|_| Request { arrival_s: 0.0, n_in: 100, n_out: 50 }).collect();
+        let mut rng = Rng::new(3);
+        let ivs = simulate_queue(&sched, &det_params(), 2, &mut rng);
+        assert_eq!(ivs[0].start_s, 0.0);
+        assert_eq!(ivs[1].start_s, 0.0);
+        assert!(ivs[2].start_s >= ivs[0].end_s().min(ivs[1].end_s()) - 1e-9);
+        assert!(ivs[3].start_s >= ivs[2].start_s);
+    }
+
+    #[test]
+    fn prop_concurrency_never_exceeds_batch() {
+        check("queue respects batch cap", |rng| {
+            let cap = 1 + rng.below(64);
+            let rate = rng.range(0.5, 20.0);
+            let lengths = LengthSampler::fixed(256, 64);
+            let mut local = rng.clone();
+            let sched = poisson_arrivals(rate, 120.0, &lengths, &mut local);
+            if sched.is_empty() {
+                return;
+            }
+            let ivs = simulate_queue(&sched, &det_params(), cap, &mut local);
+            assert!(max_concurrency(&ivs) <= cap, "cap {cap}");
+            // starts never precede arrivals
+            for (r, iv) in sched.iter().zip(&ivs) {
+                assert!(iv.start_s >= r.arrival_s - 1e-9);
+                assert!(iv.prefill_s > 0.0 && iv.decode_s > 0.0);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_work_conserving_when_uncontended() {
+        // If concurrency stays below cap, every request starts at arrival.
+        check("work conserving", |rng| {
+            let lengths = LengthSampler::fixed(128, 16);
+            let mut local = rng.clone();
+            let sched = poisson_arrivals(0.2, 300.0, &lengths, &mut local);
+            let ivs = simulate_queue(&sched, &det_params(), 64, &mut local);
+            if max_concurrency(&ivs) < 64 {
+                for (r, iv) in sched.iter().zip(&ivs) {
+                    assert!((iv.start_s - r.arrival_s).abs() < 1e-9);
+                }
+            }
+        });
+    }
+}

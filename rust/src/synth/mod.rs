@@ -1,0 +1,188 @@
+//! Trace synthesis (paper §3.3): sample a state trajectory from classifier
+//! posteriors (Eq. 7), then sample power conditioned on the trajectory —
+//! i.i.d. Gaussian per state for dense models (Eq. 8) or per-state AR(1)
+//! for MoE models (Eq. 9) — and clip to the observed range.
+
+use crate::states::StateDictionary;
+use crate::util::rng::Rng;
+
+/// Power-sampling mode per model kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthMode {
+    /// Dense transformers: within-state variation is weakly correlated in
+    /// time → independent draws (paper Eq. 8).
+    Iid,
+    /// MoE: expert routing induces temporal persistence → AR(1) (Eq. 9).
+    Ar1,
+}
+
+/// Sample a state trajectory from per-timestep posteriors.
+///
+/// `probs` is `[T, k]` row-major (the classifier output). States are drawn
+/// categorically rather than argmaxed (paper: "rather than taking an argmax
+/// at each timestep"), which preserves ambiguity near transitions.
+pub fn sample_states(probs: &[f32], k: usize, rng: &mut Rng) -> Vec<usize> {
+    assert!(k > 0 && probs.len() % k == 0, "probs not divisible by k");
+    probs.chunks_exact(k).map(|row| rng.categorical(row)).collect()
+}
+
+/// Argmax state trajectory (used by ablations).
+pub fn argmax_states(probs: &[f32], k: usize) -> Vec<usize> {
+    assert!(k > 0 && probs.len() % k == 0);
+    probs
+        .chunks_exact(k)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Sample a power trace conditioned on a state trajectory.
+pub fn sample_power(
+    states: &[usize],
+    dict: &StateDictionary,
+    mode: SynthMode,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(states.len());
+    match mode {
+        SynthMode::Iid => {
+            for &z in states {
+                debug_assert!(z < dict.k());
+                let y = rng.normal_ms(dict.mu[z], dict.sigma[z]);
+                out.push(dict.clip(y) as f32);
+            }
+        }
+        SynthMode::Ar1 => {
+            let mut prev: Option<f64> = None;
+            for &z in states {
+                debug_assert!(z < dict.k());
+                let (mu, sigma, phi) = (dict.mu[z], dict.sigma[z], dict.phi[z]);
+                let y = match prev {
+                    None => rng.normal_ms(mu, sigma),
+                    Some(p) => {
+                        // σ_noise = σ·√(1−φ²) keeps the marginal variance σ².
+                        let noise = sigma * (1.0 - phi * phi).max(0.0).sqrt();
+                        mu + phi * (p - mu) + noise * rng.normal()
+                    }
+                };
+                let clipped = dict.clip(y);
+                prev = Some(clipped);
+                out.push(clipped as f32);
+            }
+        }
+    }
+    out
+}
+
+/// Convenience: full synthesis from posteriors.
+pub fn synthesize(
+    probs: &[f32],
+    dict: &StateDictionary,
+    mode: SynthMode,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let states = sample_states(probs, dict.k(), rng);
+    sample_power(&states, dict, mode, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::acf;
+    use crate::testutil::check;
+
+    fn dict(phi: f64) -> StateDictionary {
+        StateDictionary {
+            pi: vec![0.5, 0.5],
+            mu: vec![100.0, 300.0],
+            sigma: vec![5.0, 8.0],
+            phi: vec![phi, phi],
+            y_min: 60.0,
+            y_max: 340.0,
+        }
+    }
+
+    #[test]
+    fn sample_states_respects_degenerate_posteriors() {
+        let mut rng = Rng::new(80);
+        // T=3, K=2 with certain rows.
+        let probs = [1.0f32, 0.0, 0.0, 1.0, 1.0, 0.0];
+        assert_eq!(sample_states(&probs, 2, &mut rng), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn sample_states_frequency_matches_posterior() {
+        let mut rng = Rng::new(81);
+        let probs: Vec<f32> = std::iter::repeat([0.3f32, 0.7]).take(20_000).flatten().collect();
+        let states = sample_states(&probs, 2, &mut rng);
+        let f1 = states.iter().filter(|&&z| z == 1).count() as f64 / states.len() as f64;
+        assert!((f1 - 0.7).abs() < 0.02, "f1 {f1}");
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        let probs = [0.3f32, 0.7, 0.9, 0.1];
+        assert_eq!(argmax_states(&probs, 2), vec![1, 0]);
+    }
+
+    #[test]
+    fn iid_power_matches_state_moments() {
+        let d = dict(0.0);
+        let mut rng = Rng::new(82);
+        let states = vec![0usize; 20_000];
+        let ys = sample_power(&states, &d, SynthMode::Iid, &mut rng);
+        let mean = ys.iter().map(|&y| y as f64).sum::<f64>() / ys.len() as f64;
+        assert!((mean - 100.0).abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn ar1_preserves_marginal_but_adds_correlation() {
+        let d = dict(0.9);
+        let mut rng = Rng::new(83);
+        let states = vec![1usize; 40_000];
+        let ys = sample_power(&states, &d, SynthMode::Ar1, &mut rng);
+        let mean = ys.iter().map(|&y| y as f64).sum::<f64>() / ys.len() as f64;
+        let var = ys.iter().map(|&y| (y as f64 - mean).powi(2)).sum::<f64>() / ys.len() as f64;
+        assert!((mean - 300.0).abs() < 0.5, "mean {mean}");
+        assert!((var.sqrt() - 8.0).abs() < 0.5, "std {}", var.sqrt());
+        let rho1 = acf(&ys, 1)[1];
+        assert!((rho1 - 0.9).abs() < 0.05, "rho1 {rho1}");
+
+        // i.i.d. comparison: no lag-1 correlation.
+        let ys_iid = sample_power(&states, &dict(0.0), SynthMode::Iid, &mut rng);
+        assert!(acf(&ys_iid, 1)[1].abs() < 0.05);
+    }
+
+    #[test]
+    fn prop_samples_always_within_clip_range() {
+        check("synthesis clipped", |rng| {
+            let d = dict(rng.range(0.0, 0.99));
+            let t = 1 + rng.below(500);
+            let probs: Vec<f32> = (0..t * 2).map(|_| rng.f64() as f32).collect();
+            let mut local = rng.clone();
+            let mode = if rng.f64() < 0.5 { SynthMode::Iid } else { SynthMode::Ar1 };
+            let ys = synthesize(&probs, &d, mode, &mut local);
+            assert_eq!(ys.len(), t);
+            for &y in &ys {
+                assert!((y as f64) >= d.y_min - 1e-6 && (y as f64) <= d.y_max + 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn state_switches_move_power_level() {
+        let d = dict(0.0);
+        let mut rng = Rng::new(84);
+        let mut states = vec![0usize; 100];
+        states.extend(vec![1usize; 100]);
+        let ys = sample_power(&states, &d, SynthMode::Iid, &mut rng);
+        let first: f64 = ys[..100].iter().map(|&y| y as f64).sum::<f64>() / 100.0;
+        let second: f64 = ys[100..].iter().map(|&y| y as f64).sum::<f64>() / 100.0;
+        assert!(second - first > 150.0);
+    }
+}

@@ -1,0 +1,343 @@
+//! Time-stepped continuous-batching engine + 250 ms power sampler.
+//!
+//! Semantics (mirrored exactly by `python/compile/testbed.py`):
+//! * substeps of `dt_sim` (default 50 ms); requests admitted FIFO at substep
+//!   boundaries while occupancy < `max_batch`;
+//! * prefill progresses at rate `1 / (ttft_base · (1 + κ_pre·(b−1)/B))`
+//!   where `ttft_base = c_pre·(n_in/512)^γ` and `b` is current occupancy;
+//! * decode generates tokens at rate `1 / (tbt0 · (1 + κ_dec·(b−1)/B))`;
+//! * per 250 ms window, deterministic utilization is averaged over substeps
+//!   and noise (white GPU noise, hidden MoE AR(1), measurement noise) is
+//!   added at window granularity so results are substep-invariant.
+
+use super::{server_gpu_power_w, utilization};
+use crate::catalog::{Catalog, ServerConfig};
+use crate::surrogate::DurationSamples;
+use crate::util::rng::Rng;
+use crate::workload::Schedule;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    /// Simulation substep (s).
+    pub dt_sim: f64,
+    /// Power sampling interval (s) — the paper measures at 250 ms.
+    pub dt_sample: f64,
+    /// Batch capacity (the paper uses vLLM's default, modeled as 64).
+    pub max_batch: usize,
+    /// Trace horizon (s).
+    pub horizon_s: f64,
+}
+
+impl EngineOptions {
+    pub fn from_catalog(cat: &Catalog, horizon_s: f64) -> EngineOptions {
+        EngineOptions {
+            dt_sim: 0.05,
+            dt_sample: cat.campaign.dt_s,
+            max_batch: cat.campaign.max_batch,
+            horizon_s,
+        }
+    }
+}
+
+/// The "measured" output of one testbed run.
+#[derive(Debug, Clone)]
+pub struct TestbedTrace {
+    pub dt_s: f64,
+    /// Server power (W) per sampling window — what `nvidia-smi` would log.
+    pub power_w: Vec<f32>,
+    /// Mean batch occupancy per window (ground-truth A_t for Fig 3/13).
+    pub a_measured: Vec<f32>,
+    /// Fraction of substeps with prefill present per window.
+    pub prefill_frac: Vec<f32>,
+    /// Realized per-request durations (for calibration and Fig 5).
+    pub durations: DurationSamples,
+    /// Per-request execution start times (s).
+    pub starts: Vec<f64>,
+}
+
+struct Running {
+    idx: usize,
+    n_in: u32,
+    n_out: u32,
+    /// Prefill work remaining in [0,1].
+    prefill_left: f64,
+    /// Output tokens remaining (fractional).
+    tokens_left: f64,
+    started_at: f64,
+    prefill_done_at: Option<f64>,
+}
+
+/// Run the testbed for one server configuration over a request schedule.
+pub fn simulate(
+    cat: &Catalog,
+    cfg: &ServerConfig,
+    schedule: &Schedule,
+    opts: &EngineOptions,
+    rng: &mut Rng,
+) -> TestbedTrace {
+    let truth = &cfg.truth;
+    let gpu = cat.gpu_of(cfg);
+    let b_cap = opts.max_batch as f64;
+    let n_windows = (opts.horizon_s / opts.dt_sample).round() as usize;
+    let steps_per_window = (opts.dt_sample / opts.dt_sim).round().max(1.0) as usize;
+
+    let mut pending: VecDeque<usize> = VecDeque::new();
+    let mut next_arrival = 0usize;
+    let mut running: Vec<Running> = Vec::with_capacity(opts.max_batch);
+
+    let mut starts = vec![f64::NAN; schedule.len()];
+    let mut durations = DurationSamples::default();
+    let mut power_w = Vec::with_capacity(n_windows);
+    let mut a_measured = Vec::with_capacity(n_windows);
+    let mut prefill_frac = Vec::with_capacity(n_windows);
+
+    // Hidden MoE expert-routing noise (AR(1) at window granularity).
+    let mut ar_state = 0.0f64;
+    let ar_innov = truth.ar_sigma_w * (1.0 - truth.ar_phi * truth.ar_phi).max(0.0).sqrt();
+
+    let mut t = 0.0f64;
+    for _w in 0..n_windows {
+        let mut u_sum = 0.0f64;
+        let mut a_sum = 0.0f64;
+        let mut pre_steps = 0usize;
+        for _s in 0..steps_per_window {
+            // 1. Arrivals into the FIFO queue.
+            while next_arrival < schedule.len() && schedule[next_arrival].arrival_s <= t {
+                pending.push_back(next_arrival);
+                next_arrival += 1;
+            }
+            // 2. Admission while capacity remains.
+            while running.len() < opts.max_batch {
+                match pending.pop_front() {
+                    Some(idx) => {
+                        let req = &schedule[idx];
+                        starts[idx] = t;
+                        running.push(Running {
+                            idx,
+                            n_in: req.n_in,
+                            n_out: req.n_out,
+                            prefill_left: 1.0,
+                            tokens_left: req.n_out as f64,
+                            started_at: t,
+                            prefill_done_at: None,
+                        });
+                    }
+                    None => break,
+                }
+            }
+            // 3. Progress work at occupancy-dependent rates.
+            let b = running.len();
+            if b > 0 {
+                let interference = (b as f64 - 1.0) / b_cap;
+                let pre_slow = 1.0 + truth.kappa_pre * interference;
+                let dec_rate =
+                    1.0 / (truth.tbt0_s * (1.0 + truth.kappa_dec * interference));
+                let mut prefill_present = false;
+                for r in running.iter_mut() {
+                    if r.prefill_left > 0.0 {
+                        prefill_present = true;
+                        let ttft_base =
+                            truth.c_pre_s * ((r.n_in as f64) / 512.0).powf(truth.gamma_pre);
+                        r.prefill_left -= opts.dt_sim / (ttft_base.max(1e-6) * pre_slow);
+                        if r.prefill_left <= 0.0 {
+                            r.prefill_done_at = Some(t + opts.dt_sim);
+                        }
+                    } else {
+                        r.tokens_left -= dec_rate * opts.dt_sim;
+                    }
+                }
+                u_sum += utilization(truth, b, prefill_present);
+                a_sum += b as f64;
+                if prefill_present {
+                    pre_steps += 1;
+                }
+                // 4. Completions.
+                let end_t = t + opts.dt_sim;
+                running.retain(|r| {
+                    if r.prefill_left <= 0.0 && r.tokens_left <= 0.0 {
+                        let pre_end = r.prefill_done_at.unwrap_or(end_t);
+                        durations.push(
+                            r.n_in,
+                            (pre_end - r.started_at).max(opts.dt_sim),
+                            r.n_out,
+                            (end_t - pre_end).max(opts.dt_sim),
+                        );
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+            t += opts.dt_sim;
+        }
+        // 5. Sample the window.
+        let u_avg = u_sum / steps_per_window as f64;
+        let mut p = server_gpu_power_w(cfg, gpu, u_avg);
+        // White GPU noise (per active GPU, summed over the TP group).
+        p += (cfg.tp as f64).sqrt() * truth.noise_w * rng.normal();
+        // Hidden MoE routing noise, only while work is present.
+        if truth.ar_sigma_w > 0.0 {
+            ar_state = truth.ar_phi * ar_state + ar_innov * rng.normal();
+            if a_sum > 0.0 {
+                p += ar_state * cfg.tp as f64;
+            }
+        }
+        // Measurement noise.
+        p += truth.meas_noise_w * rng.normal();
+        // Physical floor/ceiling: an 8-GPU server cannot go below all-idle
+        // or above all-TDP.
+        let floor = cfg.n_gpus_server as f64 * gpu.idle_w * 0.95;
+        let ceil = cfg.n_gpus_server as f64 * gpu.tdp_w;
+        power_w.push(p.clamp(floor, ceil) as f32);
+        a_measured.push((a_sum / steps_per_window as f64) as f32);
+        prefill_frac.push(pre_steps as f32 / steps_per_window as f32);
+    }
+
+    TestbedTrace { dt_s: opts.dt_sample, power_w, a_measured, prefill_frac, durations, starts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::workload::{poisson_arrivals, LengthSampler, Request};
+
+    fn setup() -> (Catalog, EngineOptions) {
+        let cat = Catalog::load_default().unwrap();
+        let opts = EngineOptions::from_catalog(&cat, 120.0);
+        (cat, opts)
+    }
+
+    #[test]
+    fn idle_server_draws_idle_power() {
+        let (cat, opts) = setup();
+        let cfg = cat.config("llama8b_a100_tp2").unwrap();
+        let gpu = cat.gpu_of(cfg);
+        let mut rng = Rng::new(70);
+        let tr = simulate(&cat, cfg, &vec![], &opts, &mut rng);
+        assert_eq!(tr.power_w.len(), 480);
+        let mean: f64 = tr.power_w.iter().map(|&x| x as f64).sum::<f64>() / 480.0;
+        let idle = 8.0 * gpu.idle_w;
+        assert!((mean - idle).abs() < 10.0, "mean {mean} vs idle {idle}");
+        assert!(tr.a_measured.iter().all(|&a| a == 0.0));
+    }
+
+    #[test]
+    fn single_request_produces_prefill_spike_then_decode() {
+        let (cat, opts) = setup();
+        let cfg = cat.config("llama70b_a100_tp8").unwrap();
+        let sched = vec![Request { arrival_s: 10.0, n_in: 4096, n_out: 2000 }];
+        let mut rng = Rng::new(71);
+        let tr = simulate(&cat, cfg, &sched, &opts, &mut rng);
+        // Some window shows prefill.
+        assert!(tr.prefill_frac.iter().any(|&f| f > 0.0));
+        // Power during decode is between idle and prefill levels.
+        let peak = tr.power_w.iter().cloned().fold(f32::MIN, f32::max) as f64;
+        let gpu = cat.gpu_of(cfg);
+        assert!(peak > 8.0 * gpu.idle_w + 0.5 * 8.0 * (gpu.tdp_w - gpu.idle_w));
+        // Request completes and is logged.
+        assert_eq!(tr.durations.len(), 1);
+        assert!(tr.durations.prefill_s[0] > 0.0);
+        assert!(tr.durations.decode_s[0] > tr.durations.prefill_s[0]);
+    }
+
+    #[test]
+    fn ttft_superlinear_in_prompt_length() {
+        let (cat, opts) = setup();
+        let cfg = cat.config("llama8b_h100_tp1").unwrap();
+        let rng = Rng::new(72);
+        let run = |n_in: u32| {
+            let sched = vec![Request { arrival_s: 0.0, n_in, n_out: 10 }];
+            let tr = simulate(&cat, cfg, &sched, &opts, &mut rng.fork(n_in as u64));
+            tr.durations.prefill_s[0]
+        };
+        let short = run(512);
+        let long = run(4096);
+        // power law with gamma 1.15: ratio should exceed 8 (linear) clearly
+        assert!(long / short > 8.0, "ratio {}", long / short);
+    }
+
+    #[test]
+    fn decode_slows_with_occupancy() {
+        let (cat, mut opts) = setup();
+        opts.horizon_s = 300.0;
+        let cfg = cat.config("llama8b_a100_tp2").unwrap();
+        let mut rng = Rng::new(73);
+        // One lone request...
+        let lone = simulate(
+            &cat,
+            cfg,
+            &vec![Request { arrival_s: 0.0, n_in: 64, n_out: 200 }],
+            &opts,
+            &mut rng,
+        );
+        // ...vs the same request among 32 concurrent ones.
+        let mut busy_sched: Schedule = (0..32)
+            .map(|_| Request { arrival_s: 0.0, n_in: 64, n_out: 200 })
+            .collect();
+        busy_sched[0] = Request { arrival_s: 0.0, n_in: 64, n_out: 200 };
+        let busy = simulate(&cat, cfg, &busy_sched, &opts, &mut rng);
+        let lone_tbt = lone.durations.decode_s[0] / 200.0;
+        let busy_tbt = busy.durations.decode_s[0] / 200.0;
+        // κ_dec = 0.5 → ~1.24× slowdown at b=32 (catalog truth).
+        assert!(busy_tbt > lone_tbt * 1.15, "lone {lone_tbt} busy {busy_tbt}");
+    }
+
+    #[test]
+    fn moe_traces_have_stronger_autocorrelation() {
+        let (cat, mut opts) = setup();
+        opts.horizon_s = 480.0;
+        let lengths = LengthSampler::fixed(256, 128);
+        let run = |id: &str, seed: u64| {
+            let cfg = cat.config(id).unwrap();
+            let mut rng = Rng::new(seed);
+            let sched = poisson_arrivals(1.0, opts.horizon_s, &lengths, &mut rng);
+            let tr = simulate(&cat, cfg, &sched, &opts, &mut rng);
+            // Residual ACF at lag 1 after removing a long-window moving mean
+            // isolates within-state noise correlation.
+            crate::metrics::acf(&tr.power_w, 1)[1]
+        };
+        let dense = run("llama8b_a100_tp2", 74);
+        let moe = run("gptoss120b_a100_tp4", 74);
+        assert!(moe > dense - 0.05, "dense {dense} moe {moe}");
+    }
+
+    #[test]
+    fn prop_power_within_physical_bounds_and_batch_capped() {
+        check("testbed physical bounds", |rng| {
+            let (cat, mut opts) = setup();
+            opts.horizon_s = 60.0;
+            let cfgs = cat.config_ids();
+            let cfg = cat.config(&cfgs[rng.below(cfgs.len())]).unwrap();
+            let gpu = cat.gpu_of(cfg);
+            let rate = rng.range(0.2, 6.0);
+            let lengths = LengthSampler::fixed(128, 64);
+            let mut local = rng.clone();
+            let sched = poisson_arrivals(rate, opts.horizon_s, &lengths, &mut local);
+            let tr = simulate(&cat, cfg, &sched, &opts, &mut local);
+            let hi = cfg.n_gpus_server as f64 * gpu.tdp_w;
+            let lo = cfg.n_gpus_server as f64 * gpu.idle_w * 0.95;
+            for &p in &tr.power_w {
+                assert!((p as f64) >= lo - 1e-6 && (p as f64) <= hi + 1e-6, "p={p}");
+            }
+            for &a in &tr.a_measured {
+                assert!(a >= 0.0 && a <= opts.max_batch as f32);
+            }
+        });
+    }
+
+    #[test]
+    fn all_requests_eventually_complete_with_long_horizon() {
+        let (cat, mut opts) = setup();
+        opts.horizon_s = 600.0;
+        let cfg = cat.config("llama8b_a100_tp2").unwrap();
+        let lengths = LengthSampler::fixed(128, 32);
+        let mut rng = Rng::new(76);
+        let sched = poisson_arrivals(0.5, 300.0, &lengths, &mut rng);
+        let tr = simulate(&cat, cfg, &sched, &opts, &mut rng);
+        assert_eq!(tr.durations.len(), sched.len(), "all requests complete");
+        // Starts are recorded for every admitted request.
+        assert!(tr.starts.iter().all(|s| s.is_finite()));
+    }
+}

@@ -1,0 +1,97 @@
+//! Synthetic measurement testbed — the stand-in for the paper's Azure DGX
+//! A100/H100 + vLLM 0.10 + `nvidia-smi` campaign (DESIGN.md §3).
+//!
+//! The testbed is a time-stepped continuous-batching engine plus a
+//! physically-motivated GPU power law. It produces the "measured" traces the
+//! pipeline learns from and is deliberately *richer* than the surrogate the
+//! paper fits: TTFT follows a power law with batch interference, TBT slows
+//! with occupancy, and MoE configurations carry hidden AR(1) expert-routing
+//! power noise that is invisible to workload features — reproducing the
+//! dense/MoE fidelity split in the paper's Table 1.
+//!
+//! The Python build path (`python/compile/testbed.py`) implements the exact
+//! same math from the same `data/catalog.json`; cross-consistency is
+//! enforced by integration tests comparing summary statistics on a fixed
+//! schedule.
+
+pub mod engine;
+
+pub use engine::{simulate, EngineOptions, TestbedTrace};
+
+use crate::catalog::{Gpu, ServerConfig, TruthParams};
+
+/// Ground-truth instantaneous GPU utilization (fraction of the idle→TDP
+/// span) given batch occupancy `a` and whether prefill work is present.
+/// Shared by Rust and Python testbeds — keep in sync with
+/// `python/compile/testbed.py::utilization`.
+#[inline]
+pub fn utilization(truth: &TruthParams, a: usize, prefill_present: bool) -> f64 {
+    if a == 0 {
+        return 0.0;
+    }
+    if prefill_present {
+        let mix = ((a as f64 - 1.0) / 16.0).min(1.0);
+        (truth.pre_frac + truth.mixed_bonus_frac * mix).min(1.0)
+    } else {
+        let sat = 1.0 - (-((a as f64 - 1.0) / truth.a0)).exp();
+        truth.dec_min_frac + (truth.dec_max_frac - truth.dec_min_frac) * sat
+    }
+}
+
+/// Deterministic per-GPU power (W) before noise at utilization `u`.
+#[inline]
+pub fn gpu_power_w(gpu: &Gpu, u: f64) -> f64 {
+    gpu.idle_w + (gpu.tdp_w - gpu.idle_w) * u
+}
+
+/// Deterministic server power (W, GPUs only) for a config at utilization
+/// `u` on the active tensor-parallel group; the remaining GPUs idle.
+#[inline]
+pub fn server_gpu_power_w(cfg: &ServerConfig, gpu: &Gpu, u: f64) -> f64 {
+    cfg.tp as f64 * gpu_power_w(gpu, u) + (cfg.n_gpus_server - cfg.tp) as f64 * gpu.idle_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::Catalog;
+
+    #[test]
+    fn utilization_monotone_in_occupancy_without_prefill() {
+        let c = Catalog::load_default().unwrap();
+        let t = &c.config("llama70b_a100_tp8").unwrap().truth;
+        let mut prev = 0.0;
+        for a in 0..64 {
+            let u = utilization(t, a, false);
+            assert!(u >= prev - 1e-12, "a={a}");
+            prev = u;
+        }
+        assert_eq!(utilization(t, 0, false), 0.0);
+        // saturates below prefill level
+        assert!(utilization(t, 64, false) < t.pre_frac);
+    }
+
+    #[test]
+    fn prefill_dominates_decode() {
+        let c = Catalog::load_default().unwrap();
+        let t = &c.config("llama8b_a100_tp2").unwrap().truth;
+        for a in 1..32 {
+            assert!(utilization(t, a, true) > utilization(t, a, false), "a={a}");
+        }
+        assert!(utilization(t, 64, true) <= 1.0);
+    }
+
+    #[test]
+    fn server_power_bounds() {
+        let c = Catalog::load_default().unwrap();
+        let cfg = c.config("llama70b_h100_tp4").unwrap();
+        let gpu = c.gpu_of(cfg);
+        let idle = server_gpu_power_w(cfg, gpu, 0.0);
+        let full = server_gpu_power_w(cfg, gpu, 1.0);
+        // idle: all 8 GPUs at idle
+        assert!((idle - 8.0 * gpu.idle_w).abs() < 1e-9);
+        // full: 4 at TDP + 4 idle
+        assert!((full - (4.0 * gpu.tdp_w + 4.0 * gpu.idle_w)).abs() < 1e-9);
+        assert!(idle < full);
+    }
+}

@@ -1,0 +1,89 @@
+//! In-repo property-testing runner (proptest is unavailable offline —
+//! DESIGN.md §3).
+//!
+//! `check` runs a property over many deterministically generated random
+//! cases; on failure it reports the seed and case index so the exact case
+//! can be replayed. Generation helpers cover the domains the invariant
+//! tests need (trace lengths, rates, weights, schedules).
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (overridable with `POWERTRACE_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("POWERTRACE_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` random cases. The property receives a fresh RNG
+/// per case; assert inside it. Panics with seed/case info on failure.
+pub fn check<F: Fn(&mut Rng)>(name: &str, prop: F) {
+    check_seeded(name, 0xC0FFEE, default_cases(), prop)
+}
+
+pub fn check_seeded<F: Fn(&mut Rng)>(name: &str, seed: u64, cases: usize, prop: F) {
+    for case in 0..cases {
+        let mut rng = Rng::new(seed).fork(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed (seed={seed:#x}, case={case}): {msg}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Assertion helpers
+// ---------------------------------------------------------------------------
+
+/// Assert |a-b| <= atol + rtol*|b| elementwise.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "{ctx}: element {i}: {x} vs {y} (|diff|={} > tol={tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+pub fn assert_close(a: f64, b: f64, tol: f64, ctx: &str) {
+    assert!((a - b).abs() <= tol, "{ctx}: {a} vs {b} (tol {tol})");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("uniform in range", |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failures() {
+        check_seeded("always fails", 1, 4, |_| panic!("nope"));
+    }
+
+    #[test]
+    fn allclose_accepts_and_rejects() {
+        assert_allclose(&[1.0, 2.0], &[1.0005, 2.0], 1e-3, 0.0, "ok");
+        let r = std::panic::catch_unwind(|| {
+            assert_allclose(&[1.0], &[1.1], 1e-3, 0.0, "bad");
+        });
+        assert!(r.is_err());
+    }
+}

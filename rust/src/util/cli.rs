@@ -1,0 +1,180 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `command [subcommand] --flag value --bool-flag positional...`
+//! with typed accessors, defaults, and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags (`--name value` / `--name`), and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub flags: BTreeMap<String, String>,
+    pub bools: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Declared option for usage text.
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+impl Args {
+    /// Parse a raw argv tail. Flags may be `--k v` or `--k=v`; a flag followed
+    /// by another flag (or end of input) is treated as boolean.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let items: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < items.len() {
+            let a = &items[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    out.flags.insert(stripped.to_string(), items[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.bools.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name) || self.flags.contains_key(name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected a number, got '{s}'")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected an integer, got '{s}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected an integer, got '{s}'")),
+        }
+    }
+
+    /// Comma-separated list of floats, e.g. `--rates 0.25,0.5,1`.
+    pub fn f64_list(&self, name: &str, default: &[f64]) -> anyhow::Result<Vec<f64>> {
+        match self.str_opt(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("--{name}: bad number '{p}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Render a usage block for a subcommand.
+pub fn usage(cmd: &str, summary: &str, opts: &[Opt]) -> String {
+    let mut s = format!("usage: powertrace {cmd} [options]\n  {summary}\n\noptions:\n");
+    for o in opts {
+        let d = o.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+        s.push_str(&format!("  --{:<22} {}{}\n", o.name, o.help, d));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_flag_value_pairs() {
+        let a = parse(&["--rate", "0.5", "--out", "x.json"]);
+        assert_eq!(a.str_opt("rate"), Some("0.5"));
+        assert_eq!(a.str_or("out", "y"), "x.json");
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse(&["--rate=2.5", "--name=a b"]);
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.str_opt("name"), Some("a b"));
+    }
+
+    #[test]
+    fn boolean_flags_and_positionals() {
+        let a = parse(&["table1", "--verbose", "--seed", "7", "extra"]);
+        assert_eq!(a.positional, vec!["table1", "extra"]);
+        assert!(a.has("verbose"));
+        assert!(a.has("seed"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse(&["--fast"]);
+        assert!(a.has("fast"));
+        assert!(!a.has("slow"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.usize_or("n", 1).is_err());
+        assert!(a.f64_or("n", 1.0).is_err());
+        assert_eq!(a.usize_or("m", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn f64_list_parsing() {
+        let a = parse(&["--rates", "0.25, 0.5,1"]);
+        assert_eq!(a.f64_list("rates", &[]).unwrap(), vec![0.25, 0.5, 1.0]);
+        assert_eq!(a.f64_list("other", &[2.0]).unwrap(), vec![2.0]);
+        let bad = parse(&["--rates", "1,x"]);
+        assert!(bad.f64_list("rates", &[]).is_err());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage(
+            "generate",
+            "generate a server trace",
+            &[Opt { name: "rate", help: "arrival rate", default: Some("0.5") }],
+        );
+        assert!(u.contains("--rate"));
+        assert!(u.contains("default: 0.5"));
+    }
+}

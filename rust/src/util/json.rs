@@ -1,0 +1,722 @@
+//! Minimal, dependency-free JSON value model, parser, and emitter.
+//!
+//! The offline registry cache contains only the `xla` crate closure, so
+//! `serde_json` is unavailable (DESIGN.md §3). This module implements the
+//! subset of JSON the project needs — which is all of RFC 8259 except for
+//! `\u` surrogate-pair edge cases beyond the BMP being passed through as
+//! replacement characters. It is used for the catalog, planner-facing
+//! configs, per-configuration artifacts, and experiment outputs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Object keys are kept in a `BTreeMap` so emission is
+/// deterministic (stable diffs for generated artifacts).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+/// Parse or access error with a human-readable location/context.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JsonError {
+    pub msg: String,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json: {}", self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, JsonError> {
+    Err(JsonError { msg: msg.into() })
+}
+
+// ---------------------------------------------------------------------------
+// Accessors
+// ---------------------------------------------------------------------------
+
+impl Json {
+    pub fn as_f64(&self) -> Result<f64, JsonError> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => err(format!("expected number, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, JsonError> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 || f > u32::MAX as f64 {
+            return err(format!("expected non-negative integer, got {f}"));
+        }
+        Ok(f as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool, JsonError> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => err(format!("expected bool, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str, JsonError> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => err(format!("expected string, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json], JsonError> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            other => err(format!("expected array, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>, JsonError> {
+        match self {
+            Json::Obj(o) => Ok(o),
+            other => err(format!("expected object, got {}", other.kind())),
+        }
+    }
+
+    /// Object field access with a contextual error message.
+    pub fn get(&self, key: &str) -> Result<&Json, JsonError> {
+        match self.as_obj()?.get(key) {
+            Some(v) => Ok(v),
+            None => err(format!("missing field '{key}'")),
+        }
+    }
+
+    /// Optional field: `None` when absent or explicitly `null`.
+    pub fn get_opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(o) => match o.get(key) {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(v),
+            },
+            _ => None,
+        }
+    }
+
+    pub fn f64_field(&self, key: &str) -> Result<f64, JsonError> {
+        self.get(key)?
+            .as_f64()
+            .map_err(|e| JsonError { msg: format!("field '{key}': {}", e.msg) })
+    }
+
+    pub fn str_field(&self, key: &str) -> Result<String, JsonError> {
+        Ok(self.get(key)?.as_str()?.to_string())
+    }
+
+    pub fn usize_field(&self, key: &str) -> Result<usize, JsonError> {
+        self.get(key)?
+            .as_usize()
+            .map_err(|e| JsonError { msg: format!("field '{key}': {}", e.msg) })
+    }
+
+    /// Parse an array of numbers into `Vec<f64>`.
+    pub fn f64_array(&self) -> Result<Vec<f64>, JsonError> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    /// Parse an array of numbers into `Vec<f32>`.
+    pub fn f32_array(&self) -> Result<Vec<f32>, JsonError> {
+        Ok(self.f64_array()?.into_iter().map(|x| x as f32).collect())
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builders
+// ---------------------------------------------------------------------------
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Self {
+        Json::Num(v)
+    }
+}
+impl From<f32> for Json {
+    fn from(v: f32) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<u64> for Json {
+    fn from(v: u64) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(v: i64) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(v: bool) -> Self {
+        Json::Bool(v)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Self {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Self {
+        Json::Str(v)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(v: Vec<T>) -> Self {
+        Json::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+impl Json {
+    pub fn from_f64s(v: &[f64]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+    }
+    pub fn from_f32s(v: &[f32]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+}
+
+/// Convenience builder for objects: `obj([("a", 1.0.into()), ...])`.
+pub fn obj<I: IntoIterator<Item = (&'static str, Json)>>(fields: I) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Parser { bytes: s.as_bytes(), pos: 0 }
+    }
+
+    fn fail<T>(&self, msg: &str) -> Result<T, JsonError> {
+        // Report 1-based line/column for readability.
+        let (mut line, mut col) = (1usize, 1usize);
+        for &b in &self.bytes[..self.pos.min(self.bytes.len())] {
+            if b == b'\n' {
+                line += 1;
+                col = 1;
+            } else {
+                col += 1;
+            }
+        }
+        err(format!("{msg} at line {line} col {col}"))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.peek() {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.bump() == Some(c) {
+            Ok(())
+        } else {
+            self.pos = self.pos.saturating_sub(1);
+            self.fail(&format!("expected '{}'", c as char))
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, JsonError> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            self.fail(&format!("invalid literal (expected '{lit}')"))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth > 128 {
+            return self.fail("nesting too deep");
+        }
+        self.skip_ws();
+        match self.peek() {
+            None => self.fail("unexpected end of input"),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            Some(c) => self.fail(&format!("unexpected character '{}'", c as char)),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(out)),
+                _ => {
+                    self.pos = self.pos.saturating_sub(1);
+                    return self.fail("expected ',' or ']'");
+                }
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut out = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            if self.peek() != Some(b'"') {
+                return self.fail("expected string key");
+            }
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value(depth + 1)?;
+            out.insert(key, val);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(out)),
+                _ => {
+                    self.pos = self.pos.saturating_sub(1);
+                    return self.fail("expected ',' or '}'");
+                }
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return self.fail("unterminated string"),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        // Handle surrogate pairs for completeness.
+                        if (0xD800..0xDC00).contains(&cp) {
+                            if self.peek() == Some(b'\\') {
+                                self.pos += 1;
+                                if self.bump() != Some(b'u') {
+                                    return self.fail("expected low surrogate");
+                                }
+                                let lo = self.hex4()?;
+                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                out.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                            } else {
+                                out.push('\u{fffd}');
+                            }
+                        } else {
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                    }
+                    _ => return self.fail("invalid escape"),
+                },
+                Some(b) if b < 0x20 => return self.fail("control character in string"),
+                Some(b) => {
+                    // Re-assemble UTF-8 multibyte sequences.
+                    if b < 0x80 {
+                        out.push(b as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let len = if b >= 0xF0 {
+                            4
+                        } else if b >= 0xE0 {
+                            3
+                        } else {
+                            2
+                        };
+                        if start + len > self.bytes.len() {
+                            return self.fail("truncated utf-8");
+                        }
+                        match std::str::from_utf8(&self.bytes[start..start + len]) {
+                            Ok(s) => {
+                                out.push_str(s);
+                                self.pos = start + len;
+                            }
+                            Err(_) => return self.fail("invalid utf-8"),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = match self.bump() {
+                Some(c) => c,
+                None => return self.fail("truncated \\u escape"),
+            };
+            let d = match c {
+                b'0'..=b'9' => (c - b'0') as u32,
+                b'a'..=b'f' => (c - b'a') as u32 + 10,
+                b'A'..=b'F' => (c - b'A') as u32 + 10,
+                _ => return self.fail("invalid hex digit"),
+            };
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut saw_digit = false;
+        while let Some(b'0'..=b'9') = self.peek() {
+            self.pos += 1;
+            saw_digit = true;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while let Some(b'0'..=b'9') = self.peek() {
+                self.pos += 1;
+                saw_digit = true;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.pos += 1;
+            }
+            let mut exp_digit = false;
+            while let Some(b'0'..=b'9') = self.peek() {
+                self.pos += 1;
+                exp_digit = true;
+            }
+            if !exp_digit {
+                return self.fail("invalid exponent");
+            }
+        }
+        if !saw_digit {
+            return self.fail("invalid number");
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        match s.parse::<f64>() {
+            Ok(v) if v.is_finite() => Ok(Json::Num(v)),
+            _ => self.fail("number out of range"),
+        }
+    }
+}
+
+/// Parse a complete JSON document (trailing whitespace allowed, nothing else).
+pub fn parse(s: &str) -> Result<Json, JsonError> {
+    let mut p = Parser::new(s);
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return p.fail("trailing data");
+    }
+    Ok(v)
+}
+
+/// Read and parse a JSON file.
+pub fn parse_file(path: &std::path::Path) -> Result<Json, JsonError> {
+    let s = std::fs::read_to_string(path)
+        .map_err(|e| JsonError { msg: format!("read {}: {e}", path.display()) })?;
+    parse(&s).map_err(|e| JsonError { msg: format!("{}: {}", path.display(), e.msg) })
+}
+
+// ---------------------------------------------------------------------------
+// Emitter
+// ---------------------------------------------------------------------------
+
+fn emit_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn emit_num(out: &mut String, n: f64) {
+    if !n.is_finite() {
+        // JSON has no Inf/NaN; emit null (callers should avoid this).
+        out.push_str("null");
+    } else if n == 0.0 && n.is_sign_negative() {
+        out.push_str("-0.0"); // preserve the sign bit through round-trips
+    } else if n == n.trunc() && n.abs() < 1e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        // Shortest round-trippable representation.
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn emit_value(out: &mut String, v: &Json, indent: Option<usize>, level: usize) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(n) => emit_num(out, *n),
+        Json::Str(s) => emit_str(out, s),
+        Json::Arr(a) => {
+            if a.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            // Flat numeric arrays are emitted on one line regardless of indent.
+            let flat = indent.is_none() || a.iter().all(|x| matches!(x, Json::Num(_)));
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if !flat {
+                    newline(out, indent, level + 1);
+                }
+                emit_value(out, x, indent, level + 1);
+            }
+            if !flat {
+                newline(out, indent, level);
+            }
+            out.push(']');
+        }
+        Json::Obj(o) => {
+            if o.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, x)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline(out, indent, level + 1);
+                emit_str(out, k);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                emit_value(out, x, indent, level + 1);
+            }
+            newline(out, indent, level);
+            out.push('}');
+        }
+    }
+}
+
+fn newline(out: &mut String, indent: Option<usize>, level: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..(w * level) {
+            out.push(' ');
+        }
+    }
+}
+
+/// Emit compact JSON.
+pub fn to_string(v: &Json) -> String {
+    let mut out = String::new();
+    emit_value(&mut out, v, None, 0);
+    out
+}
+
+/// Emit pretty-printed JSON with the given indent width.
+pub fn to_string_pretty(v: &Json) -> String {
+    let mut out = String::new();
+    emit_value(&mut out, v, Some(1), 0);
+    out.push('\n');
+    out
+}
+
+/// Write pretty JSON to a file, creating parent directories.
+pub fn write_file(path: &std::path::Path, v: &Json) -> Result<(), JsonError> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .map_err(|e| JsonError { msg: format!("mkdir {}: {e}", parent.display()) })?;
+    }
+    std::fs::write(path, to_string_pretty(v))
+        .map_err(|e| JsonError { msg: format!("write {}: {e}", path.display()) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.str_field("c").unwrap(), "x");
+    }
+
+    #[test]
+    fn parses_escapes_and_unicode() {
+        let v = parse(r#""a\n\t\"\\ é 😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\n\t\"\\ é 😀");
+    }
+
+    #[test]
+    fn parses_utf8_passthrough() {
+        let v = parse("\"héllo wörld ✓\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "héllo wörld ✓");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "tru", "01x", "\"unterminated", "{\"a\":1,}",
+            "[1] trailing", "nan", "+1", "1.e", "--2", "{a:1}", "\"\\q\"",
+        ] {
+            assert!(parse(bad).is_err(), "should reject: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_deep_nesting() {
+        let s = "[".repeat(200) + &"]".repeat(200);
+        assert!(parse(&s).is_err());
+    }
+
+    #[test]
+    fn roundtrip_compact_and_pretty() {
+        let v = obj([
+            ("name", "trace".into()),
+            ("vals", Json::from_f64s(&[1.0, 2.5, -3.25e-7])),
+            ("nested", obj([("ok", true.into()), ("n", Json::Null)])),
+        ]);
+        for s in [to_string(&v), to_string_pretty(&v)] {
+            assert_eq!(parse(&s).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn roundtrip_floats_exactly() {
+        let vals = [0.1, 1.0 / 3.0, 1e-300, 1e300, -0.0, 123456789.123456];
+        let v = Json::from_f64s(&vals);
+        let back = parse(&to_string(&v)).unwrap().f64_array().unwrap();
+        for (a, b) in vals.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+        }
+    }
+
+    #[test]
+    fn integers_emit_without_decimal() {
+        assert_eq!(to_string(&Json::Num(42.0)), "42");
+        assert_eq!(to_string(&Json::Num(-1.0)), "-1");
+    }
+
+    #[test]
+    fn accessor_errors_are_contextual() {
+        let v = parse(r#"{"a": 1}"#).unwrap();
+        let e = v.get("b").unwrap_err();
+        assert!(e.msg.contains("'b'"));
+        let e = v.get("a").unwrap().as_str().unwrap_err();
+        assert!(e.msg.contains("expected string"));
+    }
+
+    #[test]
+    fn as_usize_validates() {
+        assert_eq!(parse("7").unwrap().as_usize().unwrap(), 7);
+        assert!(parse("-1").unwrap().as_usize().is_err());
+        assert!(parse("1.5").unwrap().as_usize().is_err());
+    }
+
+    #[test]
+    fn get_opt_handles_null_and_missing() {
+        let v = parse(r#"{"a": null, "b": 1}"#).unwrap();
+        assert!(v.get_opt("a").is_none());
+        assert!(v.get_opt("missing").is_none());
+        assert!(v.get_opt("b").is_some());
+    }
+
+    #[test]
+    fn f32_array_roundtrip() {
+        let v = Json::from_f32s(&[1.5f32, -2.25, 0.0]);
+        assert_eq!(v.f32_array().unwrap(), vec![1.5f32, -2.25, 0.0]);
+    }
+}

@@ -1,0 +1,304 @@
+//! Deterministic pseudo-random number generation and the distribution draws
+//! used throughout the pipeline (normal, lognormal, exponential, Poisson,
+//! categorical).
+//!
+//! Implements xoshiro256++ (Blackman & Vigna) seeded through SplitMix64, so
+//! every experiment is reproducible from a single `u64` seed and independent
+//! per-server streams can be forked cheaply.
+
+/// xoshiro256++ generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+/// SplitMix64 — used for seeding and stream derivation.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            *slot = splitmix64(&mut sm);
+        }
+        // All-zero state is invalid for xoshiro; splitmix cannot produce four
+        // zeros from any seed, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream for a labelled sub-task (e.g. one server).
+    /// Mixing the label through SplitMix64 decorrelates nearby indices.
+    pub fn fork(&self, label: u64) -> Rng {
+        let mut sm = self.s[0] ^ self.s[2] ^ label.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            *slot = splitmix64(&mut sm);
+        }
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits → [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free variant is overkill here;
+        // modulo bias is negligible for n ≪ 2^64 but we use widening multiply.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached second value).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        // Open-interval u1 to avoid ln(0).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Normal with mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Lognormal: exp(N(mu, sigma)).
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda).
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        let u = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Poisson-distributed count with the given mean (Knuth for small means,
+    /// normal approximation above 64 where the difference is negligible for
+    /// our workloads).
+    pub fn poisson(&mut self, mean: f64) -> usize {
+        if mean <= 0.0 {
+            return 0;
+        }
+        if mean > 64.0 {
+            let v = self.normal_ms(mean, mean.sqrt()).round();
+            return v.max(0.0) as usize;
+        }
+        let l = (-mean).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+            if k > 4096 {
+                return k; // numerically impossible; guard against p underflow
+            }
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f64 = weights.iter().map(|&w| w.max(0.0) as f64).sum();
+        if total <= 0.0 {
+            return 0;
+        }
+        let mut u = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w.max(0.0) as f64;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(Rng::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn fork_streams_differ_and_are_stable() {
+        let base = Rng::new(7);
+        let mut f1 = base.fork(0);
+        let mut f2 = base.fork(1);
+        let mut f1b = base.fork(0);
+        assert_eq!(f1.next_u64(), f1b.next_u64());
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.f64()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let (m, v) = stats(&xs);
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+        assert!((v - 1.0 / 12.0).abs() < 0.005, "var {v}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.normal()).collect();
+        let (m, v) = stats(&xs);
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.05, "var {v}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.exponential(2.0)).collect();
+        let (m, _) = stats(&xs);
+        assert!((m - 0.5).abs() < 0.02, "mean {m}");
+    }
+
+    #[test]
+    fn poisson_moments_small_and_large() {
+        let mut r = Rng::new(4);
+        for mean in [0.5, 4.0, 120.0] {
+            let xs: Vec<f64> = (0..20_000).map(|_| r.poisson(mean) as f64).collect();
+            let (m, v) = stats(&xs);
+            assert!((m - mean).abs() < 0.05 * mean.max(1.0), "mean {m} vs {mean}");
+            assert!((v - mean).abs() < 0.12 * mean.max(1.0), "var {v} vs {mean}");
+        }
+        assert_eq!(r.poisson(0.0), 0);
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<f64> = (0..20_001).map(|_| r.lognormal(1.0, 0.5)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[xs.len() / 2];
+        assert!((med - 1f64.exp()).abs() < 0.1, "median {med}");
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut r = Rng::new(6);
+        let w = [1.0f32, 3.0, 0.0, 6.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[2], 0);
+        let f1 = counts[1] as f64 / 40_000.0;
+        let f3 = counts[3] as f64 / 40_000.0;
+        assert!((f1 - 0.3).abs() < 0.02);
+        assert!((f3 - 0.6).abs() < 0.02);
+    }
+
+    #[test]
+    fn categorical_degenerate_weights() {
+        let mut r = Rng::new(7);
+        assert_eq!(r.categorical(&[0.0, 0.0]), 0);
+        assert_eq!(r.categorical(&[-1.0, 0.0, 2.0]), 2);
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut r = Rng::new(8);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+        let xs: Vec<f64> = (0..30_000).map(|_| r.below(10) as f64).collect();
+        let (m, _) = stats(&xs);
+        assert!((m - 4.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,143 @@
+//! Minimal scoped parallel-map used by the coordinator to fan server-trace
+//! generation across cores (tokio/rayon unavailable offline).
+//!
+//! `parallel_map` preserves input order in its output and propagates panics.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default: all cores, capped at 16
+/// (beyond that the PJRT CPU client contends with itself).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Apply `f` to `0..n` on `workers` threads, collecting results in order.
+/// Work is distributed dynamically (atomic counter) so uneven item costs —
+/// e.g. servers with different trace lengths — balance automatically.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                out.lock().unwrap()[i] = Some(v);
+            });
+        }
+    });
+    out.into_inner().unwrap().into_iter().map(|v| v.expect("worker completed")).collect()
+}
+
+/// Fold items `0..n` in parallel into per-worker accumulators, then reduce.
+/// Used for streaming facility aggregation where materializing every
+/// server trace at once would be wasteful.
+pub fn parallel_fold<A, F, R>(n: usize, workers: usize, init: impl Fn() -> A + Sync, fold: F, reduce: R) -> A
+where
+    A: Send,
+    F: Fn(&mut A, usize) + Sync,
+    R: Fn(A, A) -> A,
+{
+    let workers = workers.max(1).min(n.max(1));
+    let next = AtomicUsize::new(0);
+    let accs: Mutex<Vec<A>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut acc = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    fold(&mut acc, i);
+                }
+                accs.lock().unwrap().push(acc);
+            });
+        }
+    });
+    let mut accs = accs.into_inner().unwrap();
+    let mut total = accs.pop().unwrap_or_else(&init);
+    for a in accs {
+        total = reduce(total, a);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        assert_eq!(parallel_map(3, 64, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn fold_sums_correctly() {
+        let total = parallel_fold(
+            1000,
+            8,
+            || 0u64,
+            |acc, i| *acc += i as u64,
+            |a, b| a + b,
+        );
+        assert_eq!(total, (0..1000u64).sum());
+    }
+
+    #[test]
+    fn fold_vector_accumulators() {
+        // Sum 10 one-hot vectors elementwise — mirrors rack aggregation.
+        let total = parallel_fold(
+            10,
+            4,
+            || vec![0.0f64; 10],
+            |acc, i| acc[i] += 1.0,
+            |mut a, b| {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += y;
+                }
+                a
+            },
+        );
+        assert_eq!(total, vec![1.0; 10]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_panics() {
+        parallel_map(10, 4, |i| {
+            if i == 5 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

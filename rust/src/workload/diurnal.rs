@@ -1,0 +1,200 @@
+//! Diurnal + bursty arrival-rate profile standing in for the production
+//! Azure coding-activity trace the paper drives its facility study with
+//! (§4.4; the real single-day trace is not public — DESIGN.md §3).
+//!
+//! The profile is a two-harmonic diurnal envelope with an afternoon peak,
+//! multiplied by slowly-varying lognormal bursts. Per-server streams are
+//! produced either independently (each server gets a random temporal offset,
+//! as the paper does to decorrelate arrivals across the facility) or by
+//! thinning the shared intensity (correlated traffic).
+
+use super::{lengths::LengthSampler, thinned_arrivals, Schedule, TrafficMode};
+use crate::util::rng::Rng;
+
+/// A 24-hour arrival-rate profile λ(t) in requests/second/server.
+#[derive(Debug, Clone)]
+pub struct DiurnalProfile {
+    /// Mean per-server rate (req/s).
+    pub base_rate: f64,
+    /// Diurnal swing as a fraction of base (0..1).
+    pub swing: f64,
+    /// Hour of peak demand (local), e.g. 15.0 for an afternoon surge.
+    pub peak_hour: f64,
+    /// Burst amplitude (lognormal sigma of the multiplicative burst factor).
+    pub burst_sigma: f64,
+    /// Burst correlation time in seconds.
+    pub burst_tau_s: f64,
+    /// Traffic distribution mode across servers.
+    pub mode: TrafficMode,
+}
+
+impl Default for DiurnalProfile {
+    fn default() -> Self {
+        // Matches the qualitative shape of the paper's Fig. 9 input: clear
+        // diurnal envelope, afternoon peak, bursty small-timescale structure.
+        DiurnalProfile {
+            base_rate: 0.5,
+            swing: 0.65,
+            peak_hour: 15.0,
+            burst_sigma: 0.35,
+            burst_tau_s: 300.0,
+            mode: TrafficMode::Independent,
+        }
+    }
+}
+
+impl DiurnalProfile {
+    /// Deterministic diurnal envelope at time `t` seconds from midnight.
+    pub fn envelope(&self, t: f64) -> f64 {
+        let hours = t / 3600.0;
+        let phase = (hours - self.peak_hour) / 24.0 * std::f64::consts::TAU;
+        // Primary harmonic peaked at `peak_hour` + a weaker second harmonic
+        // that deepens the overnight trough.
+        let shape = phase.cos() + 0.25 * (2.0 * phase).cos();
+        (self.base_rate * (1.0 + self.swing * shape / 1.25)).max(0.0)
+    }
+
+    /// Sample a piecewise-constant burst factor series over the horizon:
+    /// lognormal AR(1) with correlation time `burst_tau_s`.
+    fn burst_series(&self, horizon_s: f64, rng: &mut Rng) -> Vec<f64> {
+        let n = (horizon_s / self.burst_tau_s).ceil() as usize + 1;
+        let phi: f64 = 0.7;
+        let mut x = 0.0f64;
+        (0..n)
+            .map(|_| {
+                x = phi * x + (1.0 - phi * phi).sqrt() * rng.normal();
+                (self.burst_sigma * x - 0.5 * self.burst_sigma * self.burst_sigma).exp()
+            })
+            .collect()
+    }
+
+    /// Build the schedule for one server.
+    ///
+    /// * `Independent`: the server's own burst series and a random offset of
+    ///   up to ±30 min applied to the envelope (the paper's "random temporal
+    ///   offset so that arrivals are decorrelated across the facility").
+    /// * `SharedIntensity`: all servers share the burst series derived from
+    ///   `shared_rng_label`; only the thinning randomness differs.
+    pub fn schedule(
+        &self,
+        server_idx: usize,
+        horizon_s: f64,
+        lengths: &LengthSampler,
+        base_rng: &Rng,
+    ) -> Schedule {
+        let mut rng = match self.mode {
+            TrafficMode::Independent => base_rng.fork(0x0D1E ^ server_idx as u64),
+            TrafficMode::SharedIntensity => base_rng.fork(0x0D1E_0000),
+        };
+        let bursts = self.burst_series(horizon_s, &mut rng);
+        let offset = match self.mode {
+            TrafficMode::Independent => rng.range(-1800.0, 1800.0),
+            TrafficMode::SharedIntensity => 0.0,
+        };
+        // Upper bound for thinning: envelope max × generous burst headroom.
+        let burst_max = bursts.iter().cloned().fold(0.0f64, f64::max);
+        let env_max = self.base_rate * (1.0 + self.swing);
+        let rate_max = (env_max * burst_max).max(1e-9);
+        let rate = |t: f64| {
+            let b = bursts[((t / self.burst_tau_s) as usize).min(bursts.len() - 1)];
+            self.envelope(t + offset) * b
+        };
+        // Thinning randomness must differ per server even in shared mode.
+        let mut thin_rng = base_rng.fork(0x7417 ^ server_idx as u64);
+        // Note: `rate` uses the shared/offset series; only acceptance differs.
+        let _ = &mut rng;
+        thinned_arrivals(rate, rate_max, horizon_s, lengths, &mut thin_rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::validate;
+
+    #[test]
+    fn envelope_peaks_at_peak_hour() {
+        let p = DiurnalProfile::default();
+        let at_peak = p.envelope(p.peak_hour * 3600.0);
+        for h in [0.0, 4.0, 9.0, 20.0] {
+            assert!(p.envelope(h * 3600.0) <= at_peak + 1e-9, "hour {h}");
+        }
+        // Overnight trough well below peak.
+        assert!(p.envelope(3.0 * 3600.0) < 0.6 * at_peak);
+    }
+
+    #[test]
+    fn envelope_nonnegative_over_day() {
+        let p = DiurnalProfile { swing: 1.0, ..Default::default() };
+        for i in 0..288 {
+            assert!(p.envelope(i as f64 * 300.0) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn schedules_valid_and_rate_plausible() {
+        let p = DiurnalProfile::default();
+        let lengths = LengthSampler::fixed(128, 128);
+        let rng = Rng::new(31);
+        let horizon = 86_400.0;
+        let s = p.schedule(0, horizon, &lengths, &rng);
+        validate(&s, horizon).unwrap();
+        let mean = s.len() as f64 / horizon;
+        // Long-run mean should be near base_rate (burst factor mean ≈ 1).
+        assert!((mean - p.base_rate).abs() < 0.3 * p.base_rate, "mean {mean}");
+    }
+
+    #[test]
+    fn independent_servers_are_decorrelated() {
+        let p = DiurnalProfile::default();
+        let lengths = LengthSampler::fixed(64, 64);
+        let rng = Rng::new(32);
+        let a = p.schedule(0, 7200.0, &lengths, &rng);
+        let b = p.schedule(1, 7200.0, &lengths, &rng);
+        assert_ne!(
+            a.first().map(|r| r.arrival_s.to_bits()),
+            b.first().map(|r| r.arrival_s.to_bits())
+        );
+    }
+
+    #[test]
+    fn shared_intensity_correlates_binned_counts() {
+        // Shared mode: same rate function → binned counts correlate more
+        // than independent mode with offsets.
+        let lengths = LengthSampler::fixed(64, 64);
+        let rng = Rng::new(33);
+        let correlation = |mode: TrafficMode| {
+            let p = DiurnalProfile {
+                base_rate: 2.0,
+                burst_sigma: 0.8,
+                burst_tau_s: 120.0,
+                mode,
+                ..Default::default()
+            };
+            let horizon = 14_400.0;
+            let a = p.schedule(0, horizon, &lengths, &rng);
+            let b = p.schedule(1, horizon, &lengths, &rng);
+            let nbins = 120;
+            let bin = |s: &Schedule| {
+                let mut v = vec![0f64; nbins];
+                for r in s {
+                    v[(r.arrival_s / horizon * nbins as f64) as usize] += 1.0;
+                }
+                v
+            };
+            let (xa, xb) = (bin(&a), bin(&b));
+            let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+            let (ma, mb) = (mean(&xa), mean(&xb));
+            let cov: f64 = xa.iter().zip(&xb).map(|(x, y)| (x - ma) * (y - mb)).sum();
+            let va: f64 = xa.iter().map(|x| (x - ma) * (x - ma)).sum();
+            let vb: f64 = xb.iter().map(|x| (x - mb) * (x - mb)).sum();
+            cov / (va.sqrt() * vb.sqrt())
+        };
+        let shared = correlation(TrafficMode::SharedIntensity);
+        let indep = correlation(TrafficMode::Independent);
+        assert!(
+            shared > indep + 0.1,
+            "shared {shared} should exceed independent {indep}"
+        );
+    }
+}

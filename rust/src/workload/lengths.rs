@@ -1,0 +1,116 @@
+//! Prompt/output token-length distributions.
+//!
+//! The paper draws request streams from four prompt datasets (ShareGPT,
+//! InstructCoder, AIMO-AIME, Edit-10K-Char); we model each as a lognormal
+//! length profile from `data/catalog.json` (DESIGN.md §3). Reasoning models
+//! (DeepSeek-R1-Distill, gpt-oss) multiply output lengths.
+
+use crate::catalog::DatasetProfile;
+use crate::util::rng::Rng;
+
+/// Samples `(n_in, n_out)` token counts for a request.
+#[derive(Debug, Clone)]
+pub struct LengthSampler {
+    /// mu of ln(n_in); lognormal median = exp(mu).
+    mu_in: f64,
+    sigma_in: f64,
+    mu_out: f64,
+    sigma_out: f64,
+    /// Output-length multiplier (reasoning models).
+    out_mult: f64,
+    /// Hard caps to keep the queue simulator bounded.
+    max_in: u32,
+    max_out: u32,
+}
+
+impl LengthSampler {
+    /// Build from a catalog dataset profile.
+    pub fn from_profile(p: &DatasetProfile, out_mult: f64) -> LengthSampler {
+        LengthSampler {
+            mu_in: p.in_median.ln(),
+            sigma_in: p.in_sigma,
+            mu_out: p.out_median.ln(),
+            sigma_out: p.out_sigma,
+            out_mult,
+            max_in: 32_768,
+            max_out: 16_384,
+        }
+    }
+
+    /// Degenerate sampler emitting constant lengths (tests, calibration).
+    pub fn fixed(n_in: u32, n_out: u32) -> LengthSampler {
+        LengthSampler {
+            mu_in: (n_in as f64).ln(),
+            sigma_in: 0.0,
+            mu_out: (n_out as f64).ln(),
+            sigma_out: 0.0,
+            out_mult: 1.0,
+            max_in: u32::MAX,
+            max_out: u32::MAX,
+        }
+    }
+
+    /// Draw one request's lengths (≥1 token each).
+    pub fn sample(&self, rng: &mut Rng) -> (u32, u32) {
+        let n_in = rng.lognormal(self.mu_in, self.sigma_in).round();
+        let n_out = (rng.lognormal(self.mu_out, self.sigma_out) * self.out_mult).round();
+        (
+            (n_in.max(1.0) as u32).min(self.max_in),
+            (n_out.max(1.0) as u32).min(self.max_out),
+        )
+    }
+
+    /// Median lengths (used by calibration sweeps / reporting).
+    pub fn medians(&self) -> (f64, f64) {
+        (self.mu_in.exp(), self.mu_out.exp() * self.out_mult)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::Catalog;
+
+    #[test]
+    fn fixed_sampler_is_constant() {
+        let s = LengthSampler::fixed(100, 50);
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(s.sample(&mut rng), (100, 50));
+        }
+    }
+
+    #[test]
+    fn lognormal_median_matches_profile() {
+        let c = Catalog::load_default().unwrap();
+        let p = &c.datasets["sharegpt"];
+        let s = LengthSampler::from_profile(p, 1.0);
+        let mut rng = Rng::new(2);
+        let mut ins: Vec<u32> = (0..20_001).map(|_| s.sample(&mut rng).0).collect();
+        ins.sort_unstable();
+        let med = ins[ins.len() / 2] as f64;
+        assert!((med - p.in_median).abs() / p.in_median < 0.05, "median {med} vs {}", p.in_median);
+    }
+
+    #[test]
+    fn reasoning_multiplier_scales_outputs() {
+        let c = Catalog::load_default().unwrap();
+        let p = &c.datasets["aime"];
+        let base = LengthSampler::from_profile(p, 1.0);
+        let reasoning = LengthSampler::from_profile(p, 2.0);
+        assert!((reasoning.medians().1 - 2.0 * base.medians().1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lengths_always_positive_and_capped() {
+        let c = Catalog::load_default().unwrap();
+        let p = &c.datasets["edit10k"];
+        let s = LengthSampler::from_profile(p, 2.0);
+        let mut rng = Rng::new(3);
+        for _ in 0..5000 {
+            let (a, b) = s.sample(&mut rng);
+            assert!(a >= 1 && a <= 32_768);
+            assert!(b >= 1 && b <= 16_384);
+        }
+    }
+}

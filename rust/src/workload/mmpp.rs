@@ -1,0 +1,107 @@
+//! Markov-modulated Poisson process — a bursty arrival process used in the
+//! scope/extension studies (paper §5.3 notes fidelity is validated under
+//! Poisson; MMPP lets planners stress-test burstier-than-Poisson traffic,
+//! as production traces like BurstGPT motivate).
+
+use super::{lengths::LengthSampler, Request, Schedule};
+use crate::util::rng::Rng;
+
+/// Two-state MMPP: arrivals are Poisson with rate `rates[state]`, and the
+/// hidden state switches with exponential holding times `1/switch[state]`.
+#[derive(Debug, Clone, Copy)]
+pub struct Mmpp {
+    /// Arrival rate in each hidden state (req/s).
+    pub rates: [f64; 2],
+    /// State-leave rates (1/s): expected dwell time in state i is 1/switch[i].
+    pub switch: [f64; 2],
+}
+
+impl Mmpp {
+    /// A bursty profile around a target mean rate: a quiet state at
+    /// 0.3×mean and a burst state at `burstiness`×mean, dwell times chosen
+    /// so the long-run mean is `mean_rate`.
+    pub fn bursty(mean_rate: f64, burstiness: f64) -> Mmpp {
+        assert!(burstiness > 1.0);
+        let lo = 0.3 * mean_rate;
+        let hi = burstiness * mean_rate;
+        // stationary weight on hi: w solves w*hi + (1-w)*lo = mean
+        let w = (mean_rate - lo) / (hi - lo);
+        // dwell: quiet 60 s, burst scaled by w/(1-w)
+        let quiet_dwell = 60.0;
+        let burst_dwell = quiet_dwell * w / (1.0 - w);
+        Mmpp { rates: [lo, hi], switch: [1.0 / quiet_dwell, 1.0 / burst_dwell] }
+    }
+
+    /// Long-run mean arrival rate.
+    pub fn mean_rate(&self) -> f64 {
+        // stationary distribution ∝ 1/switch
+        let d0 = 1.0 / self.switch[0];
+        let d1 = 1.0 / self.switch[1];
+        (self.rates[0] * d0 + self.rates[1] * d1) / (d0 + d1)
+    }
+
+    /// Generate arrivals over `[0, horizon_s)`.
+    pub fn arrivals(&self, horizon_s: f64, lengths: &LengthSampler, rng: &mut Rng) -> Schedule {
+        let mut out = Schedule::new();
+        let mut t = 0.0f64;
+        let mut state = if rng.f64() < 0.5 { 0 } else { 1 };
+        let mut state_end = rng.exponential(self.switch[state]);
+        loop {
+            let rate = self.rates[state];
+            let dt = if rate > 0.0 { rng.exponential(rate) } else { f64::INFINITY };
+            if t + dt < state_end.min(horizon_s) {
+                t += dt;
+                let (n_in, n_out) = lengths.sample(rng);
+                out.push(Request { arrival_s: t, n_in, n_out });
+            } else {
+                t = state_end;
+                if t >= horizon_s {
+                    break;
+                }
+                state = 1 - state;
+                state_end = t + rng.exponential(self.switch[state]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::validate;
+
+    #[test]
+    fn mean_rate_formula() {
+        let m = Mmpp { rates: [1.0, 5.0], switch: [0.1, 0.1] };
+        assert!((m.mean_rate() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bursty_profile_hits_target_mean() {
+        let m = Mmpp::bursty(1.0, 4.0);
+        assert!((m.mean_rate() - 1.0).abs() < 1e-9, "mean {}", m.mean_rate());
+        let lengths = LengthSampler::fixed(64, 64);
+        let mut rng = Rng::new(21);
+        let s = m.arrivals(100_000.0, &lengths, &mut rng);
+        let rate = s.len() as f64 / 100_000.0;
+        assert!((rate - 1.0).abs() < 0.1, "rate {rate}");
+        validate(&s, 100_000.0).unwrap();
+    }
+
+    #[test]
+    fn burstier_than_poisson() {
+        // Count arrivals in 10 s bins; MMPP variance-to-mean should exceed 1.
+        let m = Mmpp::bursty(2.0, 5.0);
+        let lengths = LengthSampler::fixed(64, 64);
+        let mut rng = Rng::new(22);
+        let s = m.arrivals(50_000.0, &lengths, &mut rng);
+        let mut bins = vec![0f64; 5000];
+        for r in &s {
+            bins[(r.arrival_s / 10.0) as usize] += 1.0;
+        }
+        let mean = bins.iter().sum::<f64>() / bins.len() as f64;
+        let var = bins.iter().map(|b| (b - mean) * (b - mean)).sum::<f64>() / bins.len() as f64;
+        assert!(var / mean > 1.5, "index of dispersion {}", var / mean);
+    }
+}

@@ -1,0 +1,167 @@
+//! Workload scenarios: request arrival processes and token-length
+//! distributions (paper §3.1 "Workload scenario" and §3.4 "Cross-server
+//! arrival structure").
+//!
+//! A scenario produces per-server [`Schedule`]s — lists of
+//! `(arrival time, n_in, n_out)` requests — either independently per server
+//! or by thinning a shared intensity so request streams are correlated
+//! across the facility.
+
+pub mod diurnal;
+pub mod lengths;
+pub mod mmpp;
+pub mod poisson;
+pub mod replay;
+
+pub use diurnal::DiurnalProfile;
+pub use lengths::LengthSampler;
+pub use mmpp::Mmpp;
+pub use poisson::poisson_arrivals;
+
+use crate::util::rng::Rng;
+
+/// One inference request in an arrival schedule (paper §3.3:
+/// `{(t_i, n_in_i, n_out_i)}`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    /// Prompt length in tokens.
+    pub n_in: u32,
+    /// Output length in tokens.
+    pub n_out: u32,
+}
+
+/// A time-sorted request schedule.
+pub type Schedule = Vec<Request>;
+
+/// Check a schedule is sorted, non-negative, and within the horizon.
+pub fn validate(schedule: &Schedule, horizon_s: f64) -> Result<(), String> {
+    let mut prev = 0.0f64;
+    for (i, r) in schedule.iter().enumerate() {
+        if r.arrival_s < prev {
+            return Err(format!("request {i}: arrivals not sorted"));
+        }
+        if r.arrival_s >= horizon_s {
+            return Err(format!("request {i}: arrival {} beyond horizon {horizon_s}", r.arrival_s));
+        }
+        if r.n_in == 0 || r.n_out == 0 {
+            return Err(format!("request {i}: zero-length prompt or output"));
+        }
+        prev = r.arrival_s;
+    }
+    Ok(())
+}
+
+/// How request streams are distributed across servers (paper §3.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficMode {
+    /// Every server draws from its own independent arrival process.
+    Independent,
+    /// Servers share a common arrival-rate function; each receives an
+    /// independently thinned stream (correlated load).
+    SharedIntensity,
+}
+
+/// An arrival process that can emit per-server schedules.
+pub trait ArrivalProcess {
+    /// Generate the schedule for server `server_idx` over `[0, horizon_s)`.
+    /// Implementations must honor [`TrafficMode`] semantics themselves.
+    fn schedule(&self, server_idx: usize, horizon_s: f64, lengths: &LengthSampler, rng: &Rng) -> Schedule;
+}
+
+/// Inhomogeneous Poisson arrivals for an arbitrary rate function via
+/// thinning (Lewis & Shedler). `rate_max` must bound `rate(t)`.
+pub fn thinned_arrivals(
+    rate: impl Fn(f64) -> f64,
+    rate_max: f64,
+    horizon_s: f64,
+    lengths: &LengthSampler,
+    rng: &mut Rng,
+) -> Schedule {
+    assert!(rate_max > 0.0, "thinned_arrivals: rate_max must be positive");
+    let mut out = Schedule::new();
+    let mut t = 0.0f64;
+    loop {
+        t += rng.exponential(rate_max);
+        if t >= horizon_s {
+            break;
+        }
+        let r = rate(t);
+        debug_assert!(r <= rate_max * (1.0 + 1e-9), "rate exceeds bound at t={t}: {r} > {rate_max}");
+        if rng.f64() * rate_max < r {
+            let (n_in, n_out) = lengths.sample(rng);
+            out.push(Request { arrival_s: t, n_in, n_out });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+
+    fn test_lengths() -> LengthSampler {
+        LengthSampler::fixed(128, 128)
+    }
+
+    #[test]
+    fn validate_catches_issues() {
+        let ok = vec![
+            Request { arrival_s: 0.5, n_in: 10, n_out: 5 },
+            Request { arrival_s: 1.0, n_in: 10, n_out: 5 },
+        ];
+        assert!(validate(&ok, 10.0).is_ok());
+        let unsorted = vec![
+            Request { arrival_s: 1.0, n_in: 10, n_out: 5 },
+            Request { arrival_s: 0.5, n_in: 10, n_out: 5 },
+        ];
+        assert!(validate(&unsorted, 10.0).is_err());
+        let beyond = vec![Request { arrival_s: 11.0, n_in: 10, n_out: 5 }];
+        assert!(validate(&beyond, 10.0).is_err());
+        let zero = vec![Request { arrival_s: 0.0, n_in: 0, n_out: 5 }];
+        assert!(validate(&zero, 10.0).is_err());
+    }
+
+    #[test]
+    fn thinning_matches_constant_rate() {
+        let mut rng = Rng::new(1);
+        let lengths = test_lengths();
+        let sched = thinned_arrivals(|_| 2.0, 2.0, 10_000.0, &lengths, &mut rng);
+        let rate = sched.len() as f64 / 10_000.0;
+        assert!((rate - 2.0).abs() < 0.1, "rate {rate}");
+        assert!(validate(&sched, 10_000.0).is_ok());
+    }
+
+    #[test]
+    fn thinning_tracks_varying_rate() {
+        let mut rng = Rng::new(2);
+        let lengths = test_lengths();
+        // rate 4 in first half, 1 in second half
+        let sched =
+            thinned_arrivals(|t| if t < 5000.0 { 4.0 } else { 1.0 }, 4.0, 10_000.0, &lengths, &mut rng);
+        let first = sched.iter().filter(|r| r.arrival_s < 5000.0).count() as f64 / 5000.0;
+        let second = sched.iter().filter(|r| r.arrival_s >= 5000.0).count() as f64 / 5000.0;
+        assert!((first - 4.0).abs() < 0.2, "first {first}");
+        assert!((second - 1.0).abs() < 0.1, "second {second}");
+    }
+
+    #[test]
+    fn prop_thinned_schedules_always_valid() {
+        check("thinned schedules valid", |rng| {
+            let horizon = rng.range(10.0, 500.0);
+            let peak = rng.range(0.1, 8.0);
+            let lengths = LengthSampler::fixed(64, 64);
+            let mut local = rng.clone();
+            let sched = thinned_arrivals(
+                |t| peak * (0.5 + 0.5 * (t * 0.01).sin().abs()),
+                peak,
+                horizon,
+                &lengths,
+                &mut local,
+            );
+            validate(&sched, horizon).expect("valid schedule");
+        });
+    }
+}

@@ -1,0 +1,63 @@
+//! Homogeneous Poisson arrivals — the paper's server-level measurement
+//! campaign uses Poisson(λ) for λ ∈ [0.125, 4] req/s (§4.1).
+
+use super::{lengths::LengthSampler, Request, Schedule};
+use crate::util::rng::Rng;
+
+/// Generate Poisson(λ) arrivals over `[0, horizon_s)`.
+pub fn poisson_arrivals(rate: f64, horizon_s: f64, lengths: &LengthSampler, rng: &mut Rng) -> Schedule {
+    assert!(rate > 0.0, "poisson_arrivals: rate must be positive");
+    assert!(horizon_s > 0.0, "poisson_arrivals: horizon must be positive");
+    let mut out = Schedule::new();
+    let mut t = 0.0f64;
+    loop {
+        t += rng.exponential(rate);
+        if t >= horizon_s {
+            break;
+        }
+        let (n_in, n_out) = lengths.sample(rng);
+        out.push(Request { arrival_s: t, n_in, n_out });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::workload::validate;
+
+    #[test]
+    fn mean_rate_matches() {
+        let lengths = LengthSampler::fixed(64, 64);
+        let mut rng = Rng::new(10);
+        let s = poisson_arrivals(0.5, 40_000.0, &lengths, &mut rng);
+        let rate = s.len() as f64 / 40_000.0;
+        assert!((rate - 0.5).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn interarrivals_are_exponential() {
+        let lengths = LengthSampler::fixed(64, 64);
+        let mut rng = Rng::new(11);
+        let s = poisson_arrivals(2.0, 20_000.0, &lengths, &mut rng);
+        let gaps: Vec<f64> = s.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        // CV of exponential is 1.
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        assert!((var.sqrt() / mean - 1.0).abs() < 0.05, "cv {}", var.sqrt() / mean);
+    }
+
+    #[test]
+    fn prop_schedules_valid() {
+        check("poisson schedules valid", |rng| {
+            let rate = rng.range(0.05, 8.0);
+            let horizon = rng.range(10.0, 1000.0);
+            let lengths = LengthSampler::fixed(32, 32);
+            let mut local = rng.clone();
+            let s = poisson_arrivals(rate, horizon, &lengths, &mut local);
+            validate(&s, horizon).expect("valid");
+        });
+    }
+}

@@ -1,0 +1,91 @@
+//! Replay arrival schedules from JSON files.
+//!
+//! This is the interface through which a *real* production trace (e.g. the
+//! Azure token-traffic trace of the paper's §4.4) would be fed to the
+//! pipeline if available: a JSON array of `{"t": s, "n_in": .., "n_out": ..}`
+//! records. The held-out measured-trace artifacts exported by the Python
+//! build path use the same representation.
+
+use super::{Request, Schedule};
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Parse a schedule from a JSON value (array of request objects).
+pub fn schedule_from_json(v: &Json) -> Result<Schedule> {
+    let mut out = Schedule::new();
+    for (i, r) in v.as_arr().map_err(anyhow::Error::from)?.iter().enumerate() {
+        let req = Request {
+            arrival_s: r.f64_field("t").with_context(|| format!("request {i}"))?,
+            n_in: r.f64_field("n_in").with_context(|| format!("request {i}"))? as u32,
+            n_out: r.f64_field("n_out").with_context(|| format!("request {i}"))? as u32,
+        };
+        out.push(req);
+    }
+    // Replayed traces may be unsorted on disk; normalize.
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    Ok(out)
+}
+
+/// Serialize a schedule to JSON (inverse of [`schedule_from_json`]).
+pub fn schedule_to_json(s: &Schedule) -> Json {
+    Json::Arr(
+        s.iter()
+            .map(|r| {
+                json::obj([
+                    ("t", r.arrival_s.into()),
+                    ("n_in", (r.n_in as f64).into()),
+                    ("n_out", (r.n_out as f64).into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Load a schedule from a JSON file.
+pub fn load(path: &Path) -> Result<Schedule> {
+    let v = json::parse_file(path).map_err(anyhow::Error::from)?;
+    schedule_from_json(&v).with_context(|| format!("parsing schedule {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let s = vec![
+            Request { arrival_s: 0.5, n_in: 100, n_out: 20 },
+            Request { arrival_s: 2.25, n_in: 64, n_out: 8 },
+        ];
+        let j = schedule_to_json(&s);
+        let back = schedule_from_json(&j).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn sorts_unsorted_input() {
+        let j = json::parse(r#"[{"t": 5, "n_in": 1, "n_out": 1}, {"t": 1, "n_in": 2, "n_out": 2}]"#)
+            .unwrap();
+        let s = schedule_from_json(&j).unwrap();
+        assert!(s[0].arrival_s < s[1].arrival_s);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let j = json::parse(r#"[{"t": 1}]"#).unwrap();
+        assert!(schedule_from_json(&j).is_err());
+        let j = json::parse(r#"{"not": "an array"}"#).unwrap();
+        assert!(schedule_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("powertrace_test_replay");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sched.json");
+        let s = vec![Request { arrival_s: 1.0, n_in: 10, n_out: 5 }];
+        json::write_file(&path, &schedule_to_json(&s)).unwrap();
+        assert_eq!(load(&path).unwrap(), s);
+    }
+}

@@ -1,0 +1,91 @@
+//! Integration: the artifacts produced by `make artifacts` satisfy every
+//! structural invariant the runtime relies on.
+
+use powertrace_sim::artifacts::ArtifactStore;
+use powertrace_sim::catalog::Catalog;
+use powertrace_sim::classifier::{flat_param_count, K_MAX};
+use powertrace_sim::workload::validate;
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open_default() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping artifact integration tests: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_is_consistent() {
+    let Some(store) = store() else { return };
+    assert_eq!(store.manifest.k_max, K_MAX);
+    assert_eq!(store.manifest.hidden, 64);
+    assert!(store.manifest.chunk.t >= 4 * store.manifest.chunk.halo);
+    assert!(!store.manifest.configs.is_empty());
+    assert!(store.hlo_path().exists(), "HLO artifact missing");
+}
+
+#[test]
+fn every_config_artifact_is_valid() {
+    let Some(store) = store() else { return };
+    let cat = Catalog::load_default().unwrap();
+    for id in &store.manifest.configs {
+        let art = store.load_config(id).expect(id);
+        assert_eq!(art.config_id, *id);
+        assert!((1..=K_MAX).contains(&art.k), "{id}: k={}", art.k);
+        art.dict.validate().expect(id);
+        assert_eq!(art.weights.len(), flat_param_count(64, K_MAX), "{id}");
+        assert!(art.weights.iter().all(|w| w.is_finite()), "{id}: non-finite weights");
+        assert!(art.train_mean_w.is_finite() && art.train_mean_w > 0.0, "{id}");
+        // Clip range within the physical envelope of the server.
+        let cfg = cat.config(id).unwrap();
+        let gpu = cat.gpu_of(cfg);
+        let ceiling = cfg.n_gpus_server as f64 * gpu.tdp_w;
+        assert!(art.dict.y_max <= ceiling + 1.0, "{id}: y_max beyond TDP ceiling");
+        assert!(art.dict.y_min >= 0.0, "{id}");
+        // Surrogate calibration is physically sane.
+        assert!(art.surrogate.alpha1 > 0.0, "{id}: TTFT must grow with prompt length");
+        assert!(art.surrogate.median_tbt() > 1e-4 && art.surrogate.median_tbt() < 1.0, "{id}");
+        // MoE configs use AR(1), dense i.i.d.
+        let is_moe = matches!(cat.model_of(cfg).kind, powertrace_sim::catalog::ModelKind::Moe);
+        match art.mode {
+            powertrace_sim::synth::SynthMode::Ar1 => assert!(is_moe, "{id}"),
+            powertrace_sim::synth::SynthMode::Iid => assert!(!is_moe, "{id}"),
+        }
+        if is_moe {
+            assert!(art.dict.phi.iter().any(|&p| p > 0.1), "{id}: MoE should have AR structure");
+        }
+    }
+}
+
+#[test]
+fn measured_traces_parse_and_are_physical() {
+    let Some(store) = store() else { return };
+    let cat = Catalog::load_default().unwrap();
+    for id in &store.manifest.configs {
+        let traces = store.load_all_measured(id).expect(id);
+        assert!(!traces.is_empty(), "{id}: no held-out traces");
+        let cfg = cat.config(id).unwrap();
+        let gpu = cat.gpu_of(cfg);
+        for m in &traces {
+            assert_eq!(m.dt_s, 0.25, "{id}");
+            assert!(!m.power_w.is_empty());
+            validate(&m.schedule, m.power_w.len() as f64 * m.dt_s + 1.0).expect(id);
+            let ceiling = (cfg.n_gpus_server as f64 * gpu.tdp_w) as f32;
+            for &p in &m.power_w {
+                assert!(p > 0.0 && p <= ceiling + 1.0, "{id}: power {p}");
+            }
+            for &a in &m.a_measured {
+                assert!((0.0..=64.0).contains(&a), "{id}: A {a}");
+            }
+            assert!(m.durations.len() <= m.schedule.len(), "{id}");
+            assert!(m.durations.len() > 0, "{id}: no completed requests");
+        }
+        // Held-out traces span multiple arrival rates (rep-level split).
+        let mut rates: Vec<f64> = traces.iter().map(|m| m.rate).collect();
+        rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rates.dedup();
+        assert!(rates.len() >= 3, "{id}: test traces should span rates, got {rates:?}");
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration: the AOT-compiled XLA artifacts executed through PJRT agree
+//! with the pure-Rust reference implementations — the cross-layer
+//! correctness contract of the three-layer architecture.
+
+use powertrace_sim::artifacts::ArtifactStore;
+use powertrace_sim::classifier::chunk::FixedLenClassifier;
+use powertrace_sim::classifier::native::BiGruWeights;
+use powertrace_sim::classifier::pjrt::PjrtBiGru;
+use powertrace_sim::classifier::{NativeBiGru, StateClassifier};
+use powertrace_sim::runtime::Runtime;
+use powertrace_sim::states::Gmm1d;
+use powertrace_sim::testutil::assert_allclose;
+use powertrace_sim::util::rng::Rng;
+use std::sync::Arc;
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open_default() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping pjrt integration tests: {e:#}");
+            None
+        }
+    }
+}
+
+fn realistic_features(t: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut a = 0i32;
+    let mut out = Vec::with_capacity(2 * t);
+    for _ in 0..t {
+        let da = rng.below(5) as i32 - 2;
+        let na = (a + da).clamp(0, 64);
+        out.push(na as f32);
+        out.push((na - a) as f32);
+        a = na;
+    }
+    out
+}
+
+#[test]
+fn pjrt_bigru_matches_native_on_trained_weights() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    let exe = Arc::new(rt.load_hlo_text(&store.hlo_path()).expect("compile bigru"));
+    let spec = store.manifest.chunk;
+
+    for id in store.manifest.configs.iter().take(3) {
+        let art = store.load_config(id).unwrap();
+        let native = NativeBiGru::new(
+            BiGruWeights::new(store.manifest.hidden, store.manifest.k_max, art.weights.clone())
+                .unwrap(),
+        );
+        let pjrt =
+            PjrtBiGru::new(exe.clone(), art.weights.clone(), spec, store.manifest.k_max).unwrap();
+
+        let x = realistic_features(spec.t, 42);
+        let p_native = native.probs(&x, spec.t).unwrap();
+        let p_pjrt = pjrt.probs_fixed(&x).unwrap();
+        assert_allclose(&p_pjrt, &p_native, 1e-4, 1e-3, &format!("{id}: pjrt vs native"));
+    }
+}
+
+#[test]
+fn chunked_pjrt_matches_native_on_long_sequence() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = Arc::new(rt.load_hlo_text(&store.hlo_path()).unwrap());
+    let id = &store.manifest.configs[0];
+    let art = store.load_config(id).unwrap();
+
+    let native = NativeBiGru::new(
+        BiGruWeights::new(store.manifest.hidden, store.manifest.k_max, art.weights.clone())
+            .unwrap(),
+    );
+    let chunked = PjrtBiGru::new(exe, art.weights.clone(), store.manifest.chunk, store.manifest.k_max)
+        .unwrap()
+        .chunked();
+
+    // 1900 steps ≈ a full held-out trace: several chunks + a shifted tail.
+    let t = 1900;
+    let x = realistic_features(t, 7);
+    let p_native = native.probs(&x, t).unwrap();
+    let p_chunked = chunked.probs(&x, t).unwrap();
+    // The trained BiGRU integrates occupancy over long windows, so halo
+    // truncation perturbs some posteriors (measured: ≤0.25 at halo=64).
+    // What the pipeline consumes is the *power expectation*; assert the
+    // bounded prob perturbation AND the immaterial energy impact
+    // (EXPERIMENTS.md §Perf documents the halo/cost tradeoff).
+    let mut max_diff = 0.0f32;
+    for (a, b) in p_native.iter().zip(&p_chunked) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 0.35, "chunked vs full max prob diff {max_diff}");
+    let k = art.k;
+    let expected_power = |probs: &[f32]| -> f64 {
+        let mut total = 0.0f64;
+        for i in 0..t {
+            let (mut p, mut z) = (0.0f64, 0.0f64);
+            for j in 0..k {
+                p += probs[i * 12 + j] as f64 * art.dict.mu[j];
+                z += probs[i * 12 + j] as f64;
+            }
+            total += p / z.max(1e-9);
+        }
+        total
+    };
+    let e_full = expected_power(&p_native);
+    let e_chunk = expected_power(&p_chunked);
+    let rel = ((e_chunk - e_full) / e_full).abs();
+    assert!(rel < 0.005, "chunking changes expected energy by {:.3}%", rel * 100.0);
+}
+
+#[test]
+fn gmm_label_artifact_matches_rust_posterior() {
+    let Some(store) = store() else { return };
+    let path = store.root.join("gmm_label.hlo.txt");
+    if !path.exists() {
+        eprintln!("gmm_label.hlo.txt not built; skipping");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(&path).unwrap();
+    let id = &store.manifest.configs[0];
+    let art = store.load_config(id).unwrap();
+    let k = art.k;
+
+    // Pad mixture params to K_MAX as the artifact expects.
+    let kmax = store.manifest.k_max;
+    let mut pi = vec![1e-12f32; kmax];
+    let mut mu = vec![0.0f32; kmax];
+    let mut sigma = vec![1.0f32; kmax];
+    for j in 0..k {
+        pi[j] = art.dict.pi[j] as f32;
+        mu[j] = art.dict.mu[j] as f32;
+        sigma[j] = art.dict.sigma[j] as f32;
+    }
+    // Park unused components far away so they get ~zero posterior.
+    for j in k..kmax {
+        mu[j] = -1e6;
+    }
+
+    let t = store.manifest.chunk.t;
+    let mut rng = Rng::new(9);
+    let y: Vec<f32> = (0..t)
+        .map(|_| {
+            let j = rng.below(k);
+            rng.normal_ms(art.dict.mu[j], art.dict.sigma[j]) as f32
+        })
+        .collect();
+    let out = exe
+        .run_f32_first(&[
+            (&pi, &[kmax as i64]),
+            (&mu, &[kmax as i64]),
+            (&sigma, &[kmax as i64]),
+            (&y, &[t as i64]),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), t * kmax);
+
+    let gmm = Gmm1d::new(art.dict.pi.clone(), art.dict.mu.clone(), art.dict.sigma.clone());
+    for (i, &yi) in y.iter().enumerate() {
+        let post = gmm.posterior(yi as f64);
+        let row = &out[i * kmax..i * kmax + k];
+        let rust_row: Vec<f32> = post.iter().map(|&p| p as f32).collect();
+        assert_allclose(row, &rust_row, 2e-4, 2e-3, &format!("sample {i}"));
+    }
+}

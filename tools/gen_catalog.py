@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Generate data/catalog.json — the single-source configuration catalog.
+
+The catalog is read by BOTH the Python build path (testbed campaign, training)
+and the Rust runtime (testbed mirror, baselines, experiments), so the
+"ground-truth" testbed parameterization lives in exactly one place.
+
+The *truth* block per configuration parameterizes the synthetic testbed that
+stands in for the paper's Azure DGX measurement campaign (DESIGN.md §3):
+latency laws (power-law TTFT, occupancy-dependent TBT) and the GPU power law
+(idle → saturating decode occupancy curve → near-TDP prefill, plus noise;
+MoE adds hidden AR(1) expert-routing noise). These deliberately differ in
+functional form from the paper's *surrogate* (log-linear TTFT, lognormal TBT)
+so that calibration is a genuine fit, as in the paper.
+"""
+import json
+import math
+import sys
+
+GPUS = {
+    "a100": {"tdp_w": 400.0, "idle_w": 55.0, "perf": 1.0, "name": "NVIDIA A100 80GB"},
+    "h100": {"tdp_w": 700.0, "idle_w": 70.0, "perf": 1.8, "name": "NVIDIA H100 80GB"},
+}
+
+# params_b: total parameters (billions); active_b: activated per token (MoE).
+MODELS = {
+    "llama8b":    {"name": "Llama-3.1 (8B)",             "params_b": 8.0,   "active_b": 8.0,   "kind": "dense", "reasoning": False},
+    "llama70b":   {"name": "Llama-3.1 (70B)",            "params_b": 70.0,  "active_b": 70.0,  "kind": "dense", "reasoning": False},
+    "llama405b":  {"name": "Llama-3.1 (405B)",           "params_b": 405.0, "active_b": 405.0, "kind": "dense", "reasoning": False},
+    "r1d8b":      {"name": "DeepSeek-R1-Distill (8B)",   "params_b": 8.0,   "active_b": 8.0,   "kind": "dense", "reasoning": True},
+    "r1d70b":     {"name": "DeepSeek-R1-Distill (70B)",  "params_b": 70.0,  "active_b": 70.0,  "kind": "dense", "reasoning": True},
+    "gptoss20b":  {"name": "gpt-oss (20B)",              "params_b": 20.0,  "active_b": 3.6,   "kind": "moe",   "reasoning": True},
+    "gptoss120b": {"name": "gpt-oss (120B)",             "params_b": 120.0, "active_b": 5.1,   "kind": "moe",   "reasoning": True},
+}
+
+# The measured campaign matrix (model, gpu, tp). Chosen to cover the paper's
+# Table 1 aggregation (every model, >=1 config; dense flagships get several)
+# plus the specific configs named in figures (Fig1 70B/TP8/A100; Fig3 8B/H100;
+# Fig5 r1d8b/H100/TP8; Fig6 8B/A100/TP2 + gptoss120b/A100/TP4; Fig13 r1d70b).
+CONFIGS = [
+    ("llama8b", "a100", 2),
+    ("llama8b", "h100", 1),
+    ("llama70b", "a100", 4),
+    ("llama70b", "a100", 8),
+    ("llama70b", "h100", 4),
+    ("llama70b", "h100", 8),
+    ("llama405b", "h100", 8),
+    ("r1d8b", "a100", 2),
+    ("r1d8b", "h100", 8),
+    ("r1d70b", "a100", 8),
+    ("r1d70b", "h100", 4),
+    ("gptoss20b", "a100", 2),
+    ("gptoss120b", "a100", 4),
+    ("gptoss120b", "h100", 4),
+]
+
+# Request length profiles standing in for the paper's four prompt datasets
+# (ShareGPT, InstructCoder, AIMO-AIME, Edit-10K-Char). Lognormal in tokens.
+DATASETS = {
+    "sharegpt":     {"in_median": 220.0,  "in_sigma": 0.9, "out_median": 180.0, "out_sigma": 0.8},
+    "instructcoder": {"in_median": 512.0, "in_sigma": 0.7, "out_median": 256.0, "out_sigma": 0.7},
+    "aime":         {"in_median": 350.0,  "in_sigma": 0.5, "out_median": 900.0, "out_sigma": 0.9},
+    "edit10k":      {"in_median": 2000.0, "in_sigma": 0.4, "out_median": 300.0, "out_sigma": 0.6},
+}
+
+
+def truth_params(model_key, gpu_key, tp):
+    m, g = MODELS[model_key], GPUS[gpu_key]
+    b = m["active_b"]
+    perf = g["perf"]
+    # --- latency laws (testbed ground truth) ---
+    # single-stream inter-token latency, seconds/token
+    tbt0 = 0.006 * (b / 8.0) ** 0.8 / (tp ** 0.85 * perf)
+    # TTFT power law: ttft = c_pre * (n_in/512)^gamma_pre  (seconds)
+    c_pre = 0.25 * (m["params_b"] / 8.0) ** 0.9 / (tp ** 0.9 * perf)
+    # --- power law (per active GPU, fractions of TDP span) ---
+    dec_max = 0.55 + 0.02 * math.log10(m["params_b"])
+    truth = {
+        "tbt0_s": round(tbt0, 6),
+        # Occupancy-interference slopes: mild, as in production serving
+        # (vLLM's continuous batching hides most batch-size latency cost);
+        # also what keeps the paper's pooled log-linear surrogate (Eq. 4-5)
+        # a faithful fit across arrival rates, matching their Fig. 5.
+        "kappa_dec": 0.5,          # TBT multiplier slope with batch occupancy
+        "c_pre_s": round(c_pre, 6),
+        "gamma_pre": 1.15,         # superlinear TTFT exponent
+        "kappa_pre": 0.25,         # prefill interference with batch occupancy
+        "a0": 10.0,                # decode occupancy saturation constant
+        "dec_min_frac": 0.35,      # utilization at A=1 (decode only)
+        "dec_max_frac": round(dec_max, 4),
+        "pre_frac": 0.88,          # prefill-present utilization level
+        "mixed_bonus_frac": 0.04,  # extra when prefill overlaps a busy batch
+        "noise_w": round(0.015 * g["tdp_w"], 3),   # white per-GPU power noise
+        "meas_noise_w": 3.0,       # nvidia-smi 250 ms sampling noise (server)
+    }
+    if m["kind"] == "moe":
+        truth["ar_phi"] = 0.85                      # hidden expert-routing noise
+        truth["ar_sigma_w"] = round(0.05 * g["tdp_w"], 3)
+    else:
+        truth["ar_phi"] = 0.0
+        truth["ar_sigma_w"] = 0.0
+    return truth
+
+
+def main(out_path):
+    configs = []
+    for model_key, gpu_key, tp in CONFIGS:
+        cid = f"{model_key}_{gpu_key}_tp{tp}"
+        configs.append({
+            "id": cid,
+            "model": model_key,
+            "gpu": gpu_key,
+            "tp": tp,
+            "n_gpus_server": 8,
+            "truth": truth_params(model_key, gpu_key, tp),
+        })
+    catalog = {
+        "version": 1,
+        "gpus": GPUS,
+        "models": MODELS,
+        "datasets": DATASETS,
+        "configs": configs,
+        "campaign": {
+            # arrival rates (req/s) as in the paper's sweep 0.125..4
+            "rates": [0.125, 0.25, 0.5, 1.0, 2.0, 4.0],
+            "reps": 4,
+            "trace_seconds": 480.0,
+            "dt_s": 0.25,
+            "max_batch": 64,
+            "reasoning_out_mult": 2.0,
+        },
+        "site": {
+            "p_base_w": 1000.0,   # non-GPU IT power per server (paper §3.4)
+            "pue": 1.3,
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(catalog, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out_path}: {len(configs)} configs")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "data/catalog.json")
