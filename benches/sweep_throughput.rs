@@ -1,0 +1,43 @@
+//! Sweep-engine throughput: scenarios per wall-second with shared
+//! per-configuration artifacts — the multi-run counterpart of the
+//! `facility_generation` bench (EXPERIMENTS.md §Perf).
+//!
+//! Also measures the shared-prepare effect directly: `Generator::prepare`
+//! on a warm cache must be effectively free, which is what lets a grid of
+//! N cells avoid N artifact loads + classifier builds.
+
+use powertrace_sim::benchutil::{section, Bench};
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::scenarios::{run_sweep, SweepGrid, SweepOptions};
+
+fn main() {
+    section("sweep: multi-scenario throughput (shared artifacts)");
+    let mut gen = match Generator::pjrt().or_else(|_| Generator::native()) {
+        Ok(g) => g,
+        Err(e) => {
+            println!("skipped (artifacts not built?): {e:#}");
+            return;
+        }
+    };
+    let ids = gen.store.manifest.configs.clone();
+    if ids.is_empty() {
+        println!("skipped (artifact manifest lists no configs)");
+        return;
+    }
+    // 8 cells × 4 servers × 2 min @250ms — small enough to iterate.
+    let grid = SweepGrid::example("bench", &ids, 120.0);
+    let n_cells = grid.n_cells();
+
+    let b = Bench { budget: std::time::Duration::from_secs(6), max_iters: 5 };
+    let opts = SweepOptions::default();
+    let r = b.run(&format!("run_sweep({n_cells} cells × 8 servers × 2min)"), || {
+        run_sweep(&mut gen, &grid, &opts).unwrap().cells.len()
+    });
+    let per_cell = r.mean.as_secs_f64() / n_cells as f64;
+    println!("  → {:.3} s/cell ({:.1} cells/s)", per_cell, 1.0 / per_cell.max(1e-9));
+
+    // Warm-cache prepare: the per-config state the sweep shares.
+    let id = ids[0].clone();
+    gen.prepare(&id).unwrap();
+    b.run("prepare(warm cache)", || gen.prepare(&id).unwrap().art.k);
+}

@@ -5,8 +5,9 @@ reference implementations. Pallas runs in interpret mode (CPU)."""
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401  (used by the compat shim's skip marks)
+
+from _hypothesis_compat import given, settings, st
 from numpy.testing import assert_allclose
 
 from compile.kernels.gmm import gmm_posterior_pallas

@@ -3,8 +3,9 @@ pack/unpack round-trip, feature transform, bidirectional context."""
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401  (used by the compat shim's skip marks)
+
+from _hypothesis_compat import given, settings, st
 from numpy.testing import assert_allclose
 
 from compile.model import (

@@ -2,6 +2,19 @@
 //! servers, constant non-GPU IT power per server, and a constant-PUE map
 //! from IT power to facility power at the point of common coupling
 //! (Eq. 10–11).
+//!
+//! Two consumers sit on top of the streaming [`FacilityAccumulator`]:
+//!
+//! * single-series accessors ([`FacilityAccumulator::rack_series`],
+//!   [`FacilityAccumulator::row_series`],
+//!   [`FacilityAccumulator::facility_series`]) for one level at a time;
+//! * the multi-resolution reduction ([`FacilityAccumulator::multi_scale`])
+//!   that derives every planner-facing scale — per-rack, per-row, and
+//!   facility series, each resampled to its own interval — in **one
+//!   streaming pass** over the per-rack buffers. This is what the sweep
+//!   engine ([`crate::scenarios`]) exports per grid cell: racks at 1 s
+//!   match in-rack PDU telemetry, rows at 15 s match busway metering, and
+//!   the facility at 5/15 min matches utility interconnection data.
 
 use crate::metrics::planning::resample_mean;
 use anyhow::{ensure, Result};
@@ -36,6 +49,17 @@ impl Topology {
     pub fn rack_of(&self, server_idx: usize) -> usize {
         let (row, rack, _) = self.addr(server_idx);
         row * self.racks_per_row + rack
+    }
+
+    /// Row index for a server.
+    pub fn row_of(&self, server_idx: usize) -> usize {
+        self.addr(server_idx).0
+    }
+
+    /// Row index of a flat rack index.
+    pub fn row_of_rack(&self, rack_idx: usize) -> usize {
+        assert!(rack_idx < self.n_racks());
+        rack_idx / self.racks_per_row
     }
 }
 
@@ -138,6 +162,85 @@ impl FacilityAccumulator {
     pub fn facility_series(&self, pue: f64) -> Vec<f32> {
         self.site_it_series().into_iter().map(|x| (x as f64 * pue) as f32).collect()
     }
+
+    /// Derive every planner-facing scale in one streaming pass over the
+    /// per-rack buffers: each rack is visited exactly once, feeding its row
+    /// accumulator and the site accumulator while its own resampled series
+    /// is emitted. Rack/row series are IT power; facility series are at the
+    /// PCC (`pue` applied, Eq. 11).
+    pub fn multi_scale(&self, dt_s: f64, pue: f64, scales: &ScaleConfig) -> MultiScale {
+        let mut rows = vec![vec![0.0f64; self.n_steps]; self.topo.rows];
+        let mut site = vec![0.0f64; self.n_steps];
+        let mut racks_w = Vec::with_capacity(self.topo.n_racks());
+        for (rack_idx, rack) in self.rack_w.iter().enumerate() {
+            let row = &mut rows[self.topo.row_of_rack(rack_idx)];
+            for (t, &x) in rack.iter().enumerate() {
+                row[t] += x;
+                site[t] += x;
+            }
+            racks_w.push(resample_mean_f64(rack, dt_s, scales.rack_interval_s, 1.0));
+        }
+        let rows_w = rows
+            .iter()
+            .map(|r| resample_mean_f64(r, dt_s, scales.row_interval_s, 1.0))
+            .collect();
+        let facility_w = scales
+            .facility_intervals_s
+            .iter()
+            .map(|&interval| resample_mean_f64(&site, dt_s, interval, pue))
+            .collect();
+        MultiScale { dt_s, pue, scales: scales.clone(), racks_w, rows_w, facility_w }
+    }
+}
+
+/// Which interval each aggregation level is exported at.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleConfig {
+    /// Rack-level export interval (default 1 s — PDU telemetry cadence).
+    pub rack_interval_s: f64,
+    /// Row-level export interval (default 15 s — busway metering cadence).
+    pub row_interval_s: f64,
+    /// Facility-level export intervals (default 5 min and 15 min — utility
+    /// settlement cadences).
+    pub facility_intervals_s: Vec<f64>,
+}
+
+impl Default for ScaleConfig {
+    fn default() -> Self {
+        ScaleConfig {
+            rack_interval_s: 1.0,
+            row_interval_s: 15.0,
+            facility_intervals_s: vec![300.0, 900.0],
+        }
+    }
+}
+
+/// Multi-resolution view of one facility run (see
+/// [`FacilityAccumulator::multi_scale`]).
+#[derive(Debug, Clone)]
+pub struct MultiScale {
+    /// Source sample interval the accumulator was filled at.
+    pub dt_s: f64,
+    /// PUE applied to the facility-level series.
+    pub pue: f64,
+    pub scales: ScaleConfig,
+    /// Per-rack IT power at `scales.rack_interval_s`.
+    pub racks_w: Vec<Vec<f32>>,
+    /// Per-row IT power at `scales.row_interval_s`.
+    pub rows_w: Vec<Vec<f32>>,
+    /// Facility PCC power, one series per `scales.facility_intervals_s`.
+    pub facility_w: Vec<Vec<f32>>,
+}
+
+/// `resample_mean` over an `f64` accumulator buffer with a final scale
+/// factor (used to apply PUE without an intermediate allocation). Window
+/// geometry is shared with the f32 path via
+/// [`resample_stride`](crate::metrics::planning::resample_stride).
+fn resample_mean_f64(series: &[f64], dt_s: f64, interval_s: f64, scale: f64) -> Vec<f32> {
+    series
+        .chunks(crate::metrics::planning::resample_stride(dt_s, interval_s))
+        .map(|c| ((c.iter().sum::<f64>() / c.len() as f64) * scale) as f32)
+        .collect()
 }
 
 /// Resample any aggregated series to a coarser interval (mean-preserving).
@@ -250,6 +353,66 @@ mod tests {
                 assert!((*a as f64 - b).abs() < 1.0, "site vs racks");
             }
         });
+    }
+
+    #[test]
+    fn row_addressing_matches_addr() {
+        let t = topo();
+        for s in 0..t.n_servers() {
+            assert_eq!(t.row_of(s), t.addr(s).0);
+            assert_eq!(t.row_of_rack(t.rack_of(s)), t.row_of(s));
+        }
+    }
+
+    #[test]
+    fn multi_scale_matches_single_series_accessors() {
+        let t = topo();
+        let n_steps = 60; // 15 s at dt=0.25
+        let dt = 0.25;
+        let mut acc = FacilityAccumulator::new(t, n_steps, 1000.0);
+        let mut rng = Rng::new(7);
+        for s in 0..t.n_servers() {
+            let trace: Vec<f32> = (0..n_steps).map(|_| rng.range(50.0, 3000.0) as f32).collect();
+            acc.add_server(s, &trace).unwrap();
+        }
+        let scales = ScaleConfig {
+            rack_interval_s: 1.0,
+            row_interval_s: 5.0,
+            facility_intervals_s: vec![5.0, 15.0],
+        };
+        let ms = acc.multi_scale(dt, 1.3, &scales);
+        assert_eq!(ms.racks_w.len(), t.n_racks());
+        assert_eq!(ms.rows_w.len(), t.rows);
+        assert_eq!(ms.facility_w.len(), 2);
+        // One pass equals resampling the per-level accessors.
+        for r in 0..t.n_racks() {
+            let expect = resample(&acc.rack_series(r), dt, 1.0);
+            crate::testutil::assert_allclose(&ms.racks_w[r], &expect, 1e-2, 1e-5, "rack");
+        }
+        for r in 0..t.rows {
+            let expect = resample(&acc.row_series(r), dt, 5.0);
+            crate::testutil::assert_allclose(&ms.rows_w[r], &expect, 1e-2, 1e-5, "row");
+        }
+        let expect = resample(&acc.facility_series(1.3), dt, 15.0);
+        crate::testutil::assert_allclose(&ms.facility_w[1], &expect, 1e-1, 1e-5, "facility");
+        // Expected lengths: 15 s of data → 15 rack points, 3 row points,
+        // 3- and 1-point facility series.
+        assert_eq!(ms.racks_w[0].len(), 15);
+        assert_eq!(ms.rows_w[0].len(), 3);
+        assert_eq!(ms.facility_w[0].len(), 3);
+        assert_eq!(ms.facility_w[1].len(), 1);
+    }
+
+    #[test]
+    fn multi_scale_applies_pue_only_to_facility() {
+        let t = Topology { rows: 1, racks_per_row: 1, servers_per_rack: 1 };
+        let mut acc = FacilityAccumulator::new(t, 4, 0.0);
+        acc.add_server(0, &[1000.0f32; 4]).unwrap();
+        let ms = acc.multi_scale(1.0, 1.5, &ScaleConfig::default());
+        assert_eq!(ms.racks_w[0], vec![1000.0f32; 4]);
+        assert_eq!(ms.rows_w[0], vec![1000.0f32]); // 4 s < 15 s window
+        assert_eq!(ms.facility_w[0], vec![1500.0f32]);
+        assert_eq!(ms.facility_w[1], vec![1500.0f32]);
     }
 
     #[test]

@@ -1,0 +1,427 @@
+//! The per-configuration artifact store — the contract between the Python
+//! build path (`python/compile/aot.py`, run once via `make artifacts`) and
+//! the Rust runtime (DESIGN.md §6).
+//!
+//! On-disk layout under `<repo>/artifacts/`:
+//!
+//! ```text
+//! artifacts/
+//!   manifest.json            chunk geometry, k_max, hidden, hlo, config ids
+//!   bigru_fwd.hlo.txt        AOT-lowered BiGRU forward pass (PJRT input)
+//!   configs/<id>.json        state dictionary + surrogate + BiGRU weights
+//!   measured/<id>/r*.json    held-out measured test traces + schedules
+//! ```
+//!
+//! Everything is JSON so artifacts stay diffable and the two sides can
+//! never disagree silently: [`ArtifactStore::load_config`] re-validates the
+//! state dictionary, the weight count, and the synthesis mode on every
+//! load.
+
+use crate::catalog::Catalog;
+use crate::classifier::{flat_param_count, ChunkSpec};
+use crate::states::StateDictionary;
+use crate::surrogate::{DurationSamples, SurrogateParams};
+use crate::synth::SynthMode;
+use crate::util::json::{self, Json};
+use crate::workload::{replay, Schedule};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The artifact manifest (`artifacts/manifest.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Configuration ids with trained artifacts, in build order.
+    pub configs: Vec<String>,
+    /// Chunking geometry of the AOT-compiled classifier.
+    pub chunk: ChunkSpec,
+    /// Maximum state count the classifier head was trained with.
+    pub k_max: usize,
+    /// BiGRU hidden size.
+    pub hidden: usize,
+    /// File name of the HLO-text artifact, relative to the store root.
+    pub hlo: String,
+}
+
+impl Manifest {
+    pub fn from_json(v: &Json) -> Result<Manifest> {
+        let chunk_v = v.get("chunk")?;
+        let chunk = ChunkSpec { t: chunk_v.usize_field("t")?, halo: chunk_v.usize_field("halo")? };
+        ensure!(chunk.t > 2 * chunk.halo, "chunk t={} too small for halo={}", chunk.t, chunk.halo);
+        let configs = v
+            .get("configs")?
+            .as_arr()
+            .map_err(anyhow::Error::from)?
+            .iter()
+            .map(|x| x.as_str().map(String::from))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Manifest {
+            configs,
+            chunk,
+            k_max: v.usize_field("k_max")?,
+            hidden: v.usize_field("hidden")?,
+            hlo: v.str_field("hlo")?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj([
+            (
+                "chunk",
+                json::obj([("t", self.chunk.t.into()), ("halo", self.chunk.halo.into())]),
+            ),
+            ("k_max", self.k_max.into()),
+            ("hidden", self.hidden.into()),
+            ("hlo", self.hlo.as_str().into()),
+            (
+                "configs",
+                Json::Arr(self.configs.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+        ])
+    }
+}
+
+/// One trained per-configuration artifact (`artifacts/configs/<id>.json`):
+/// the ordered state dictionary, the calibrated throughput surrogate, the
+/// synthesis mode, and the flat BiGRU parameter vector.
+#[derive(Debug, Clone)]
+pub struct ConfigArtifact {
+    pub config_id: String,
+    /// Number of live states (BIC-selected); logits `k..k_max` are masked.
+    pub k: usize,
+    /// Mean training-set power (W) — the "mean" baseline level.
+    pub train_mean_w: f64,
+    pub dict: StateDictionary,
+    pub mode: SynthMode,
+    pub surrogate: SurrogateParams,
+    /// Flat BiGRU parameters, `flat_param_count(hidden, k_max)` long.
+    pub weights: Vec<f32>,
+}
+
+impl ConfigArtifact {
+    /// Parse and validate against the store's manifest geometry.
+    pub fn from_json(v: &Json, manifest: &Manifest) -> Result<ConfigArtifact> {
+        let dict = StateDictionary::from_json(v.get("states")?)?;
+        let k = v.usize_field("k")?;
+        ensure!(k == dict.k(), "k={} disagrees with {} dictionary states", k, dict.k());
+        ensure!((1..=manifest.k_max).contains(&k), "k={} outside 1..={}", k, manifest.k_max);
+        let mode = match v.str_field("mode")?.as_str() {
+            "iid" => SynthMode::Iid,
+            "ar1" => SynthMode::Ar1,
+            other => bail!("unknown synthesis mode '{other}'"),
+        };
+        let s = v.get("surrogate")?;
+        let surrogate = SurrogateParams {
+            alpha0: s.f64_field("alpha0")?,
+            alpha1: s.f64_field("alpha1")?,
+            sigma_ttft: s.f64_field("sigma_ttft")?,
+            mu_log_tbt: s.f64_field("mu_log_tbt")?,
+            sigma_log_tbt: s.f64_field("sigma_log_tbt")?,
+        };
+        let weights = v.get("weights")?.f32_array().map_err(anyhow::Error::from)?;
+        let expect = flat_param_count(manifest.hidden, manifest.k_max);
+        ensure!(weights.len() == expect, "{} weights, expected {expect}", weights.len());
+        ensure!(weights.iter().all(|w| w.is_finite()), "non-finite weight");
+        let train_mean_w = v.f64_field("train_power_mean_w")?;
+        ensure!(train_mean_w.is_finite() && train_mean_w > 0.0, "bad train mean {train_mean_w}");
+        Ok(ConfigArtifact {
+            config_id: v.str_field("config_id")?,
+            k,
+            train_mean_w,
+            dict,
+            mode,
+            surrogate,
+            weights,
+        })
+    }
+}
+
+/// One held-out measured trace (`artifacts/measured/<id>/r<rate>_rep<n>.json`):
+/// the testbed's ground truth for evaluation — power samples, measured
+/// batch occupancy, the driving schedule, and completed-request durations.
+#[derive(Debug, Clone)]
+pub struct MeasuredTrace {
+    /// Poisson arrival rate (req/s) this trace was measured under.
+    pub rate: f64,
+    /// Campaign repetition index.
+    pub rep: usize,
+    /// Sample interval (paper: 250 ms).
+    pub dt_s: f64,
+    /// Measured server GPU power (W) per sample.
+    pub power_w: Vec<f32>,
+    /// Measured batch occupancy `A_t` per sample.
+    pub a_measured: Vec<f32>,
+    /// The arrival schedule that drove the measurement.
+    pub schedule: Schedule,
+    /// Per-completed-request prefill/decode durations.
+    pub durations: DurationSamples,
+}
+
+impl MeasuredTrace {
+    pub fn from_json(v: &Json) -> Result<MeasuredTrace> {
+        let d = v.get("durations")?;
+        let u32s = |key: &str| -> Result<Vec<u32>> {
+            Ok(d.get(key)?
+                .f64_array()
+                .map_err(anyhow::Error::from)?
+                .into_iter()
+                .map(|x| x as u32)
+                .collect())
+        };
+        let durations = DurationSamples {
+            n_in: u32s("n_in")?,
+            prefill_s: d.get("prefill_s")?.f64_array().map_err(anyhow::Error::from)?,
+            n_out: u32s("n_out")?,
+            decode_s: d.get("decode_s")?.f64_array().map_err(anyhow::Error::from)?,
+        };
+        ensure!(
+            durations.n_in.len() == durations.prefill_s.len()
+                && durations.n_in.len() == durations.n_out.len()
+                && durations.n_in.len() == durations.decode_s.len(),
+            "ragged duration arrays"
+        );
+        let dt_s = v.f64_field("dt_s")?;
+        ensure!(dt_s > 0.0, "dt_s must be positive");
+        Ok(MeasuredTrace {
+            rate: v.f64_field("rate")?,
+            rep: v.usize_field("rep")?,
+            dt_s,
+            power_w: v.get("power_w")?.f32_array().map_err(anyhow::Error::from)?,
+            a_measured: v.get("a")?.f32_array().map_err(anyhow::Error::from)?,
+            schedule: replay::schedule_from_json(v.get("schedule")?)?,
+            durations,
+        })
+    }
+}
+
+/// Handle to an on-disk artifact store.
+pub struct ArtifactStore {
+    /// Store root directory (contains `manifest.json`).
+    pub root: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactStore {
+    /// Open `<repo_root>/artifacts` (see [`Catalog::repo_root`]).
+    pub fn open_default() -> Result<ArtifactStore> {
+        Self::open(&Catalog::repo_root().join("artifacts"))
+    }
+
+    /// Open a store rooted at `root` (must contain `manifest.json`).
+    pub fn open(root: &Path) -> Result<ArtifactStore> {
+        let mpath = root.join("manifest.json");
+        if !mpath.exists() {
+            bail!("artifact store not found at {} (run `make artifacts`)", root.display());
+        }
+        let v = json::parse_file(&mpath).map_err(anyhow::Error::from)?;
+        let manifest = Manifest::from_json(&v)
+            .with_context(|| format!("parsing {}", mpath.display()))?;
+        Ok(ArtifactStore { root: root.to_path_buf(), manifest })
+    }
+
+    /// Path of the AOT-compiled classifier artifact.
+    pub fn hlo_path(&self) -> PathBuf {
+        self.root.join(&self.manifest.hlo)
+    }
+
+    /// Path of one configuration's artifact JSON.
+    pub fn config_path(&self, config_id: &str) -> PathBuf {
+        self.root.join("configs").join(format!("{config_id}.json"))
+    }
+
+    /// Load and validate one configuration artifact.
+    pub fn load_config(&self, config_id: &str) -> Result<ConfigArtifact> {
+        let path = self.config_path(config_id);
+        let v = json::parse_file(&path).map_err(anyhow::Error::from)?;
+        let art = ConfigArtifact::from_json(&v, &self.manifest)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        ensure!(
+            art.config_id == config_id,
+            "artifact {} claims config '{}'",
+            path.display(),
+            art.config_id
+        );
+        Ok(art)
+    }
+
+    /// Load every held-out measured trace for a configuration, in a stable
+    /// (file-name sorted) order.
+    pub fn load_all_measured(&self, config_id: &str) -> Result<Vec<MeasuredTrace>> {
+        let dir = self.root.join("measured").join(config_id);
+        let entries = std::fs::read_dir(&dir)
+            .with_context(|| format!("no measured traces at {}", dir.display()))?;
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+            .collect();
+        paths.sort();
+        let mut out = Vec::with_capacity(paths.len());
+        for p in paths {
+            let v = json::parse_file(&p).map_err(anyhow::Error::from)?;
+            out.push(
+                MeasuredTrace::from_json(&v)
+                    .with_context(|| format!("parsing {}", p.display()))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::flat_param_count;
+
+    /// Write a minimal synthetic store (small hidden/k_max so the weight
+    /// vector stays tiny) and return its root.
+    fn synth_store(tag: &str) -> PathBuf {
+        let root = std::env::temp_dir().join(format!("powertrace_test_artifacts_{tag}"));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(root.join("configs")).unwrap();
+        std::fs::create_dir_all(root.join("measured/cfg_a")).unwrap();
+
+        let manifest = Manifest {
+            configs: vec!["cfg_a".into()],
+            chunk: ChunkSpec { t: 32, halo: 4 },
+            k_max: 3,
+            hidden: 2,
+            hlo: "bigru_fwd.hlo.txt".into(),
+        };
+        json::write_file(&root.join("manifest.json"), &manifest.to_json()).unwrap();
+
+        let n_params = flat_param_count(2, 3);
+        let art = json::obj([
+            ("config_id", "cfg_a".into()),
+            ("k", 2usize.into()),
+            ("train_power_mean_w", 850.0.into()),
+            (
+                "states",
+                json::obj([
+                    ("pi", Json::from_f64s(&[0.6, 0.4])),
+                    ("mu", Json::from_f64s(&[400.0, 1800.0])),
+                    ("sigma", Json::from_f64s(&[30.0, 80.0])),
+                    ("phi", Json::from_f64s(&[0.0, 0.0])),
+                    ("y_min", 350.0.into()),
+                    ("y_max", 2000.0.into()),
+                ]),
+            ),
+            ("mode", "iid".into()),
+            (
+                "surrogate",
+                json::obj([
+                    ("alpha0", (-2.0).into()),
+                    ("alpha1", 0.8.into()),
+                    ("sigma_ttft", 0.2.into()),
+                    ("mu_log_tbt", (-4.0).into()),
+                    ("sigma_log_tbt", 0.2.into()),
+                ]),
+            ),
+            ("weights", Json::from_f32s(&vec![0.01f32; n_params])),
+        ]);
+        json::write_file(&root.join("configs/cfg_a.json"), &art).unwrap();
+
+        let m = json::obj([
+            ("rate", 0.5.into()),
+            ("rep", 3usize.into()),
+            ("dt_s", 0.25.into()),
+            ("power_w", Json::from_f64s(&[400.0, 410.0, 1800.0, 395.0])),
+            ("a", Json::from_f64s(&[0.0, 1.0, 2.0, 0.0])),
+            (
+                "schedule",
+                json::parse(r#"[{"t": 0.1, "n_in": 128, "n_out": 64}]"#).unwrap(),
+            ),
+            (
+                "durations",
+                json::obj([
+                    ("n_in", Json::from_f64s(&[128.0])),
+                    ("prefill_s", Json::from_f64s(&[0.21])),
+                    ("n_out", Json::from_f64s(&[64.0])),
+                    ("decode_s", Json::from_f64s(&[1.1])),
+                ]),
+            ),
+        ]);
+        json::write_file(&root.join("measured/cfg_a/r0.5_rep3.json"), &m).unwrap();
+        root
+    }
+
+    #[test]
+    fn open_missing_store_is_clear_error() {
+        let err = ArtifactStore::open(Path::new("/nonexistent/artifacts")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let m = Manifest {
+            configs: vec!["a".into(), "b".into()],
+            chunk: ChunkSpec { t: 512, halo: 64 },
+            k_max: 12,
+            hidden: 64,
+            hlo: "bigru_fwd.hlo.txt".into(),
+        };
+        assert_eq!(Manifest::from_json(&m.to_json()).unwrap(), m);
+    }
+
+    #[test]
+    fn loads_synthetic_store() {
+        let root = synth_store("load");
+        let store = ArtifactStore::open(&root).unwrap();
+        assert_eq!(store.manifest.configs, vec!["cfg_a".to_string()]);
+        assert_eq!(store.manifest.chunk, ChunkSpec { t: 32, halo: 4 });
+        assert!(store.hlo_path().ends_with("bigru_fwd.hlo.txt"));
+
+        let art = store.load_config("cfg_a").unwrap();
+        assert_eq!(art.config_id, "cfg_a");
+        assert_eq!(art.k, 2);
+        assert_eq!(art.mode, SynthMode::Iid);
+        assert_eq!(art.dict.k(), 2);
+        assert_eq!(art.weights.len(), flat_param_count(2, 3));
+        assert!((art.surrogate.alpha1 - 0.8).abs() < 1e-12);
+        assert!((art.train_mean_w - 850.0).abs() < 1e-12);
+
+        let measured = store.load_all_measured("cfg_a").unwrap();
+        assert_eq!(measured.len(), 1);
+        let m = &measured[0];
+        assert_eq!(m.rate, 0.5);
+        assert_eq!(m.rep, 3);
+        assert_eq!(m.dt_s, 0.25);
+        assert_eq!(m.power_w.len(), 4);
+        assert_eq!(m.a_measured.len(), 4);
+        assert_eq!(m.schedule.len(), 1);
+        assert_eq!(m.durations.len(), 1);
+        assert_eq!(m.durations.n_in[0], 128);
+    }
+
+    #[test]
+    fn rejects_weight_count_mismatch() {
+        let root = synth_store("badweights");
+        let store = ArtifactStore::open(&root).unwrap();
+        // Truncate the weight vector and re-write.
+        let p = store.config_path("cfg_a");
+        let mut v = json::parse_file(&p).unwrap();
+        if let Json::Obj(o) = &mut v {
+            o.insert("weights".into(), Json::from_f64s(&[1.0, 2.0]));
+        }
+        json::write_file(&p, &v).unwrap();
+        assert!(store.load_config("cfg_a").is_err());
+    }
+
+    #[test]
+    fn rejects_k_dictionary_mismatch() {
+        let root = synth_store("badk");
+        let store = ArtifactStore::open(&root).unwrap();
+        let p = store.config_path("cfg_a");
+        let mut v = json::parse_file(&p).unwrap();
+        if let Json::Obj(o) = &mut v {
+            o.insert("k".into(), Json::Num(3.0));
+        }
+        json::write_file(&p, &v).unwrap();
+        assert!(store.load_config("cfg_a").is_err());
+    }
+
+    #[test]
+    fn missing_measured_dir_is_error() {
+        let root = synth_store("nomeasured");
+        let store = ArtifactStore::open(&root).unwrap();
+        assert!(store.load_all_measured("cfg_missing").is_err());
+    }
+}

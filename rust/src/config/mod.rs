@@ -69,25 +69,119 @@ impl ServerAssignment {
             }
         }
     }
+
+    /// Unique configuration ids referenced by this assignment, in first-use
+    /// order (every id named, whether or not a given topology reaches it).
+    pub fn config_ids(&self) -> Vec<String> {
+        match self {
+            ServerAssignment::Uniform(id) => vec![id.clone()],
+            ServerAssignment::PerRack(ids) => {
+                let mut out: Vec<String> = Vec::new();
+                for id in ids {
+                    if !out.contains(id) {
+                        out.push(id.clone());
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Unique configuration ids actually used on `topo`, in first-use
+    /// order — a `PerRack` list longer than the rack count never reaches
+    /// its tail, so only the reachable artifact set needs loading.
+    pub fn config_ids_used(&self, topo: &Topology) -> Vec<String> {
+        match self {
+            ServerAssignment::Uniform(id) => vec![id.clone()],
+            ServerAssignment::PerRack(ids) => {
+                let mut out: Vec<String> = Vec::new();
+                for rack in 0..topo.n_racks() {
+                    let id = &ids[rack % ids.len()];
+                    if !out.contains(id) {
+                        out.push(id.clone());
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// JSON form: a string (uniform) or an array of strings (per-rack).
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServerAssignment::Uniform(id) => Json::Str(id.clone()),
+            ServerAssignment::PerRack(ids) => {
+                Json::Arr(ids.iter().map(|s| Json::Str(s.clone())).collect())
+            }
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<ServerAssignment> {
+        Ok(match v {
+            Json::Str(s) => ServerAssignment::Uniform(s.clone()),
+            Json::Arr(a) => {
+                if a.is_empty() {
+                    bail!("per-rack assignment must name at least one config");
+                }
+                ServerAssignment::PerRack(
+                    a.iter().map(|x| x.as_str().map(String::from)).collect::<Result<_, _>>()?,
+                )
+            }
+            _ => bail!("server_config must be a string or array of strings"),
+        })
+    }
 }
 
-impl ScenarioSpec {
-    /// A small default scenario (quickstart).
-    pub fn default_poisson(config_id: &str, rate: f64) -> ScenarioSpec {
-        ScenarioSpec {
-            server_config: ServerAssignment::Uniform(config_id.to_string()),
-            topology: Topology { rows: 1, racks_per_row: 1, servers_per_rack: 1 },
-            workload: WorkloadSpec::Poisson { rate },
-            dataset: "sharegpt".to_string(),
-            horizon_s: 600.0,
-            p_base_w: 1000.0,
-            pue: 1.3,
-            seed: 0,
+/// Parse a `{"rows": .., "racks_per_row": .., "servers_per_rack": ..}`
+/// object into a [`Topology`].
+pub fn topology_from_json(v: &Json) -> Result<Topology> {
+    let topo = Topology {
+        rows: v.usize_field("rows")?,
+        racks_per_row: v.usize_field("racks_per_row")?,
+        servers_per_rack: v.usize_field("servers_per_rack")?,
+    };
+    if topo.n_servers() == 0 {
+        bail!("topology has zero servers");
+    }
+    Ok(topo)
+}
+
+/// Serialize a [`Topology`] (inverse of [`topology_from_json`]).
+pub fn topology_to_json(t: &Topology) -> Json {
+    json::obj([
+        ("rows", t.rows.into()),
+        ("racks_per_row", t.racks_per_row.into()),
+        ("servers_per_rack", t.servers_per_rack.into()),
+    ])
+}
+
+impl WorkloadSpec {
+    /// Short kind tag ("poisson" | "mmpp" | "diurnal" | "replay").
+    pub fn kind(&self) -> &'static str {
+        match self {
+            WorkloadSpec::Poisson { .. } => "poisson",
+            WorkloadSpec::Mmpp { .. } => "mmpp",
+            WorkloadSpec::Diurnal { .. } => "diurnal",
+            WorkloadSpec::Replay { .. } => "replay",
+        }
+    }
+
+    /// One-line human label for tables ("poisson λ=0.5" etc.).
+    pub fn label(&self) -> String {
+        match self {
+            WorkloadSpec::Poisson { rate } => format!("poisson λ={rate}"),
+            WorkloadSpec::Mmpp { mean_rate, burstiness } => {
+                format!("mmpp λ̄={mean_rate} B={burstiness}")
+            }
+            WorkloadSpec::Diurnal { base_rate, swing, .. } => {
+                format!("diurnal λ₀={base_rate} swing={swing}")
+            }
+            WorkloadSpec::Replay { path, .. } => format!("replay {path}"),
         }
     }
 
     pub fn to_json(&self) -> Json {
-        let workload = match &self.workload {
+        match self {
             WorkloadSpec::Poisson { rate } => {
                 json::obj([("kind", "poisson".into()), ("rate", (*rate).into())])
             }
@@ -115,44 +209,11 @@ impl ScenarioSpec {
                 ("path", path.as_str().into()),
                 ("offset_s", (*offset_s).into()),
             ]),
-        };
-        let server_config = match &self.server_config {
-            ServerAssignment::Uniform(id) => Json::Str(id.clone()),
-            ServerAssignment::PerRack(ids) => {
-                Json::Arr(ids.iter().map(|s| Json::Str(s.clone())).collect())
-            }
-        };
-        json::obj([
-            ("server_config", server_config),
-            (
-                "topology",
-                json::obj([
-                    ("rows", self.topology.rows.into()),
-                    ("racks_per_row", self.topology.racks_per_row.into()),
-                    ("servers_per_rack", self.topology.servers_per_rack.into()),
-                ]),
-            ),
-            ("workload", workload),
-            ("dataset", self.dataset.as_str().into()),
-            ("horizon_s", self.horizon_s.into()),
-            ("p_base_w", self.p_base_w.into()),
-            ("pue", self.pue.into()),
-            ("seed", self.seed.into()),
-        ])
+        }
     }
 
-    pub fn from_json(v: &Json) -> Result<ScenarioSpec> {
-        let t = v.get("topology")?;
-        let topology = Topology {
-            rows: t.usize_field("rows")?,
-            racks_per_row: t.usize_field("racks_per_row")?,
-            servers_per_rack: t.usize_field("servers_per_rack")?,
-        };
-        if topology.n_servers() == 0 {
-            bail!("topology has zero servers");
-        }
-        let w = v.get("workload")?;
-        let workload = match w.str_field("kind")?.as_str() {
+    pub fn from_json(w: &Json) -> Result<WorkloadSpec> {
+        Ok(match w.str_field("kind")?.as_str() {
             "poisson" => WorkloadSpec::Poisson { rate: w.f64_field("rate")? },
             "mmpp" => WorkloadSpec::Mmpp {
                 mean_rate: w.f64_field("mean_rate")?,
@@ -174,18 +235,43 @@ impl ScenarioSpec {
                 offset_s: w.f64_field("offset_s").unwrap_or(0.0),
             },
             other => bail!("unknown workload kind '{other}'"),
-        };
-        let server_config = match v.get("server_config")? {
-            Json::Str(s) => ServerAssignment::Uniform(s.clone()),
-            Json::Arr(a) => ServerAssignment::PerRack(
-                a.iter().map(|x| x.as_str().map(String::from)).collect::<Result<_, _>>()?,
-            ),
-            _ => bail!("server_config must be a string or array of strings"),
-        };
+        })
+    }
+}
+
+impl ScenarioSpec {
+    /// A small default scenario (quickstart).
+    pub fn default_poisson(config_id: &str, rate: f64) -> ScenarioSpec {
+        ScenarioSpec {
+            server_config: ServerAssignment::Uniform(config_id.to_string()),
+            topology: Topology { rows: 1, racks_per_row: 1, servers_per_rack: 1 },
+            workload: WorkloadSpec::Poisson { rate },
+            dataset: "sharegpt".to_string(),
+            horizon_s: 600.0,
+            p_base_w: 1000.0,
+            pue: 1.3,
+            seed: 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj([
+            ("server_config", self.server_config.to_json()),
+            ("topology", topology_to_json(&self.topology)),
+            ("workload", self.workload.to_json()),
+            ("dataset", self.dataset.as_str().into()),
+            ("horizon_s", self.horizon_s.into()),
+            ("p_base_w", self.p_base_w.into()),
+            ("pue", self.pue.into()),
+            ("seed", self.seed.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ScenarioSpec> {
         let spec = ScenarioSpec {
-            server_config,
-            topology,
-            workload,
+            server_config: ServerAssignment::from_json(v.get("server_config")?)?,
+            topology: topology_from_json(v.get("topology")?)?,
+            workload: WorkloadSpec::from_json(v.get("workload")?)?,
             dataset: v.str_field("dataset")?,
             horizon_s: v.f64_field("horizon_s")?,
             p_base_w: v.f64_field("p_base_w")?,
@@ -255,6 +341,21 @@ mod tests {
         assert_eq!(a.config_for(&topo, 4), "x"); // rack 2 cycles
         let u = ServerAssignment::Uniform("z".into());
         assert_eq!(u.config_for(&topo, 5), "z");
+    }
+
+    #[test]
+    fn config_ids_used_truncates_to_reachable_racks() {
+        let topo = Topology { rows: 1, racks_per_row: 2, servers_per_rack: 2 };
+        let a = ServerAssignment::PerRack(vec!["x".into(), "y".into(), "z".into()]);
+        // Only racks 0 and 1 exist: "z" is never reachable.
+        assert_eq!(a.config_ids_used(&topo), vec!["x".to_string(), "y".to_string()]);
+        // The full referenced set still lists it.
+        assert_eq!(a.config_ids(), vec!["x".to_string(), "y".to_string(), "z".to_string()]);
+        // A short list cycles without duplicates.
+        let b = ServerAssignment::PerRack(vec!["x".into()]);
+        assert_eq!(b.config_ids_used(&topo), vec!["x".to_string()]);
+        let u = ServerAssignment::Uniform("u".into());
+        assert_eq!(u.config_ids_used(&topo), vec!["u".to_string()]);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 pub mod pipeline;
 
-pub use pipeline::{Generator, ServerTrace};
+pub use pipeline::{Generator, PreparedConfig, ServerTrace};
 
 use crate::aggregate::FacilityAccumulator;
 use crate::config::ScenarioSpec;

@@ -38,12 +38,23 @@ pub struct ServerTrace {
     pub states: Vec<usize>,
 }
 
+/// A configuration ready for generation: its artifact plus a constructed
+/// classifier. Cached on the [`Generator`] so multi-scenario drivers (the
+/// sweep engine, repeated `facility` calls) never rebuild per-config state.
+pub struct PreparedConfig {
+    pub art: Arc<ConfigArtifact>,
+    pub cls: AnyClassifier,
+}
+
 /// The trace generator: catalog + artifacts + classifier backend.
 pub struct Generator {
     pub cat: Catalog,
     pub store: ArtifactStore,
     backend: Backend,
     configs: BTreeMap<String, Arc<ConfigArtifact>>,
+    /// Per-config (artifact, classifier) pairs shared across runs; see
+    /// [`Generator::prepare`].
+    prepared: BTreeMap<String, Arc<PreparedConfig>>,
 }
 
 impl Generator {
@@ -51,7 +62,13 @@ impl Generator {
     pub fn native() -> Result<Generator> {
         let cat = Catalog::load_default()?;
         let store = ArtifactStore::open_default()?;
-        Ok(Generator { cat, store, backend: Backend::Native, configs: BTreeMap::new() })
+        Ok(Generator {
+            cat,
+            store,
+            backend: Backend::Native,
+            configs: BTreeMap::new(),
+            prepared: BTreeMap::new(),
+        })
     }
 
     /// Open with the PJRT backend (compiles the HLO artifact once).
@@ -60,7 +77,13 @@ impl Generator {
         let store = ArtifactStore::open_default()?;
         let rt = Runtime::cpu()?;
         let exe = Arc::new(rt.load_hlo_text(&store.hlo_path())?);
-        Ok(Generator { cat, store, backend: Backend::Pjrt(exe), configs: BTreeMap::new() })
+        Ok(Generator {
+            cat,
+            store,
+            backend: Backend::Pjrt(exe),
+            configs: BTreeMap::new(),
+            prepared: BTreeMap::new(),
+        })
     }
 
     /// Backend selection by name ("native" | "pjrt").
@@ -190,45 +213,98 @@ impl Generator {
         })
     }
 
+    /// Load-or-build the cached (artifact, classifier) pair for a config.
+    ///
+    /// This is the per-configuration state that used to be rebuilt inside
+    /// every `facility()` call; hoisting it onto the generator lets
+    /// multi-scenario drivers (the [`crate::scenarios`] sweep engine) share
+    /// it across an arbitrary number of runs.
+    pub fn prepare(&mut self, config_id: &str) -> Result<Arc<PreparedConfig>> {
+        if let Some(p) = self.prepared.get(config_id) {
+            return Ok(p.clone());
+        }
+        let art = self.config(config_id)?;
+        let cls = self.classifier(&art)?;
+        let p = Arc::new(PreparedConfig { art, cls });
+        self.prepared.insert(config_id.to_string(), p.clone());
+        Ok(p)
+    }
+
+    /// Prepare every configuration a scenario actually uses (a `PerRack`
+    /// list longer than the rack count never reaches its tail).
+    pub fn prepare_for(&mut self, spec: &ScenarioSpec) -> Result<()> {
+        for id in spec.server_config.config_ids_used(&spec.topology) {
+            self.prepare(&id)?;
+        }
+        Ok(())
+    }
+
+    /// Lookup an already-prepared configuration (shared, read-only).
+    pub fn get_prepared(&self, config_id: &str) -> Option<Arc<PreparedConfig>> {
+        self.prepared.get(config_id).cloned()
+    }
+
     /// Generate a full facility run: every server in the topology, in
     /// parallel, reduced into a streaming accumulator.
     pub fn facility(&mut self, spec: &ScenarioSpec, dt_s: f64, workers: usize) -> Result<FacilityResult> {
-        let n = spec.topology.n_servers();
+        self.prepare_for(spec)?;
+        self.facility_shared(spec, dt_s, workers)
+    }
+
+    /// [`Generator::facility`] against the shared prepared-config cache.
+    ///
+    /// Takes `&self` so many scenarios can run concurrently over one
+    /// generator; every configuration the scenario references must have
+    /// been [`Generator::prepare`]d first (the `&mut` wrapper
+    /// [`Generator::facility`] does this automatically).
+    ///
+    /// The result is bit-identical for a given `(spec, spec.seed)`
+    /// regardless of `workers` or thread scheduling: work is partitioned at
+    /// **rack** granularity, each rack's servers fold into that rack's
+    /// buffer in server-index order, and the final merge only combines
+    /// disjoint racks — no floating-point sum ever re-associates.
+    pub fn facility_shared(&self, spec: &ScenarioSpec, dt_s: f64, workers: usize) -> Result<FacilityResult> {
+        anyhow::ensure!(
+            dt_s.is_finite() && dt_s > 0.0,
+            "dt must be a positive number of seconds (got {dt_s})"
+        );
+        let n_racks = spec.topology.n_racks();
+        let per_rack = spec.topology.servers_per_rack;
         let n_steps = (spec.horizon_s / dt_s).round() as usize;
-        // Pre-load every config + classifier used by the assignment.
-        let mut ids: Vec<String> = Vec::new();
-        for s in 0..n {
-            let id = spec.server_config.config_for(&spec.topology, s).to_string();
-            if !ids.contains(&id) {
-                ids.push(id);
-            }
-        }
-        let mut table: BTreeMap<String, (Arc<ConfigArtifact>, AnyClassifier)> = BTreeMap::new();
-        for id in &ids {
-            let art = self.config(id)?;
-            let cls = self.classifier(&art)?;
-            table.insert(id.clone(), (art, cls));
+        anyhow::ensure!(
+            n_steps > 0,
+            "horizon {}s too short for dt {dt_s}s (zero samples)",
+            spec.horizon_s
+        );
+        let mut table: BTreeMap<String, Arc<PreparedConfig>> = BTreeMap::new();
+        for id in spec.server_config.config_ids_used(&spec.topology) {
+            let p = self.get_prepared(&id).with_context(|| {
+                format!("config '{id}' not prepared (call Generator::prepare first)")
+            })?;
+            table.insert(id, p);
         }
         let base_rng = Rng::new(spec.seed);
         let workers = if workers == 0 { default_workers() } else { workers };
         let errors = std::sync::Mutex::new(Vec::<String>::new());
         let acc = parallel_fold(
-            n,
+            n_racks,
             workers,
             || FacilityAccumulator::new(spec.topology, n_steps, spec.p_base_w),
-            |acc, s| {
-                let result = (|| -> Result<()> {
-                    let id = spec.server_config.config_for(&spec.topology, s);
-                    let (art, cls) = &table[id];
-                    let sched = self.schedule_for(spec, s, &base_rng)?;
-                    let mut rng = base_rng.fork(0x5E21 ^ s as u64);
-                    let tr =
-                        self.server_trace(art, cls, &sched, spec.horizon_s, dt_s, &mut rng)?;
-                    acc.add_server(s, &tr.power_w)?;
-                    Ok(())
-                })();
-                if let Err(e) = result {
-                    errors.lock().unwrap().push(format!("server {s}: {e:#}"));
+            |acc, rack| {
+                for s in rack * per_rack..(rack + 1) * per_rack {
+                    let result = (|| -> Result<()> {
+                        let id = spec.server_config.config_for(&spec.topology, s);
+                        let p = &table[id];
+                        let sched = self.schedule_for(spec, s, &base_rng)?;
+                        let mut rng = base_rng.fork(0x5E21 ^ s as u64);
+                        let tr = self
+                            .server_trace(&p.art, &p.cls, &sched, spec.horizon_s, dt_s, &mut rng)?;
+                        acc.add_server(s, &tr.power_w)?;
+                        Ok(())
+                    })();
+                    if let Err(e) = result {
+                        errors.lock().unwrap().push(format!("server {s}: {e:#}"));
+                    }
                 }
             },
             |mut a, b| {

@@ -15,15 +15,20 @@
 //! 4. [`states`] / [`synth`] — GMM power-state dictionaries and the
 //!    state-conditioned power samplers (i.i.d. for dense, AR(1) for MoE);
 //! 5. [`aggregate`] — server → rack → row → facility aggregation with
-//!    non-GPU IT power and PUE;
+//!    non-GPU IT power, PUE, and the multi-resolution export
+//!    ([`aggregate::MultiScale`]);
 //! 6. [`metrics`] / [`baselines`] — fidelity + planning metrics and the
 //!    TDP / mean / Splitwise-style-LUT comparison baselines;
 //! 7. [`testbed`] — the synthetic measurement substrate standing in for the
 //!    paper's Azure DGX campaign (DESIGN.md §3);
-//! 8. [`coordinator`] — the multi-server generation pipeline.
+//! 8. [`coordinator`] — the multi-server generation pipeline;
+//! 9. [`scenarios`] — the sweep engine: declarative grids of scenarios
+//!    (traffic × topology × fleet × seed) executed in parallel with shared
+//!    per-configuration artifacts.
 //!
 //! See `examples/quickstart.rs` for the five-line path from a scenario to a
-//! facility load shape.
+//! facility load shape, and `examples/sweep_grid.rs` for a whole scenario
+//! family in one call.
 
 pub mod util {
     pub mod cli;
@@ -43,6 +48,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod metrics;
 pub mod runtime;
+pub mod scenarios;
 pub mod states;
 pub mod surrogate;
 pub mod synth;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   generate   one server power trace from a workload scenario
 //!   facility   facility-scale run from a scenario JSON
+//!   sweep      expand a scenario grid and run every cell (multi-scale export)
 //!   repro      regenerate a paper table/figure (or `all`)
 //!   fit        Rust-side GMM+BIC refit on held-out measured traces
 //!   testbed    run the synthetic measurement testbed (ground truth)
@@ -14,6 +15,7 @@ use powertrace_sim::config::ScenarioSpec;
 use powertrace_sim::coordinator::Generator;
 use powertrace_sim::experiments;
 use powertrace_sim::metrics::PlanningStats;
+use powertrace_sim::scenarios::{run_sweep, SweepGrid, SweepOptions};
 use powertrace_sim::states::{select_k, EmOptions};
 use powertrace_sim::testbed;
 use powertrace_sim::util::cli::{usage, Args, Opt};
@@ -31,6 +33,7 @@ fn main() {
     let result = match cmd.as_str() {
         "generate" => cmd_generate(&args),
         "facility" => cmd_facility(&args),
+        "sweep" => cmd_sweep(&args),
         "repro" => cmd_repro(&args),
         "fit" => cmd_fit(&args),
         "testbed" => cmd_testbed(&args),
@@ -60,6 +63,8 @@ fn print_help() {
          commands:\n\
            generate   generate one server power trace (Poisson workload)\n\
            facility   run a facility scenario (JSON spec) → site load shape\n\
+           sweep      expand a scenario grid (JSON), run every cell in\n\
+                      parallel, export multi-scale series + summary\n\
            repro      reproduce a paper table/figure: {} | all\n\
            fit        fit GMM power states on held-out measured traces\n\
            testbed    run the ground-truth measurement testbed\n\
@@ -157,6 +162,67 @@ fn cmd_facility(args: &Args) -> Result<()> {
         }
         std::fs::write(out, s)?;
         println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!("{}", usage("sweep", "expand a scenario grid and run every cell", &[
+            Opt { name: "grid", help: "sweep grid JSON (see scenarios module docs)", default: None },
+            Opt { name: "dt", help: "generation sample interval (s)", default: Some("0.25") },
+            Opt { name: "ramp", help: "ramp interval (s; clamped to horizon/2)", default: Some("900") },
+            Opt { name: "out", help: "output directory for CSV/JSON export", default: None },
+            Opt { name: "workers", help: "concurrent scenarios (0 = auto)", default: Some("0") },
+            Opt { name: "server-workers", help: "threads per scenario (0 = auto)", default: Some("0") },
+            Opt { name: "horizon", help: "horizon for the built-in demo grid (s)", default: Some("600") },
+            Opt { name: "backend", help: "classifier backend (native|pjrt)", default: Some("pjrt") },
+        ]));
+        return Ok(());
+    }
+    let backend = args.str_or("backend", "pjrt");
+    let mut gen = match Generator::with_backend(&backend) {
+        Ok(g) => g,
+        Err(e) if backend == "pjrt" => {
+            eprintln!("note: pjrt backend unavailable ({e:#}); falling back to native");
+            Generator::native()?
+        }
+        Err(e) => return Err(e),
+    };
+    let grid = match args.str_opt("grid") {
+        Some(path) => SweepGrid::load(std::path::Path::new(path))?,
+        None => {
+            let horizon = args.f64_or("horizon", 600.0)?;
+            let ids = gen.store.manifest.configs.clone();
+            if ids.is_empty() {
+                anyhow::bail!("artifact manifest lists no configs; cannot build the demo grid");
+            }
+            eprintln!("note: no --grid given; running the built-in demo grid");
+            SweepGrid::example("demo", &ids, horizon)
+        }
+    };
+    let opts = SweepOptions {
+        dt_s: args.f64_or("dt", 0.25)?,
+        ramp_interval_s: args.f64_or("ramp", 900.0)?,
+        scenario_workers: args.usize_or("workers", 0)?,
+        server_workers: args.usize_or("server-workers", 0)?,
+        ..SweepOptions::default()
+    };
+    let t0 = std::time::Instant::now();
+    let report = run_sweep(&mut gen, &grid, &opts)?;
+    println!(
+        "sweep '{}': {} cells × {} servers/cell-max, dt={}s ({:.1}s wall)\n",
+        grid.name,
+        report.cells.len(),
+        grid.topologies.iter().map(|t| t.n_servers()).max().unwrap_or(0),
+        opts.dt_s,
+        t0.elapsed().as_secs_f64()
+    );
+    print!("{}", report.summary_table());
+    if let Some(out) = args.str_opt("out") {
+        let dir = std::path::Path::new(out);
+        report.write(dir)?;
+        println!("\nwrote {} cells + summary.csv under {}", report.cells.len(), dir.display());
     }
     Ok(())
 }

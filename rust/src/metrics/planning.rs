@@ -7,11 +7,15 @@
 pub struct PlanningStats {
     pub peak_w: f64,
     pub avg_w: f64,
+    /// 99th-percentile power — the paper's oversubscription operating point.
+    pub p99_w: f64,
     pub peak_to_average: f64,
     /// Max |ΔP| between consecutive aggregated intervals (W per interval).
     pub max_ramp_w: f64,
     /// avg / peak — the utility "load factor".
     pub load_factor: f64,
+    /// Coefficient of variation σ/μ (the §4.5 smoothing metric).
+    pub cv: f64,
 }
 
 impl PlanningStats {
@@ -25,20 +29,28 @@ impl PlanningStats {
         PlanningStats {
             peak_w: peak,
             avg_w: avg,
+            p99_w: percentile(series, 99.0),
             peak_to_average: if avg.abs() > 1e-12 { peak / avg } else { f64::INFINITY },
             max_ramp_w: ramp,
             load_factor: if peak.abs() > 1e-12 { avg / peak } else { 0.0 },
+            cv: coefficient_of_variation(series),
         }
     }
+}
+
+/// Samples per resampling window: `interval_s / dt_s` rounded, clamped to
+/// at least 1. The single source of truth for windowing geometry, shared
+/// by [`resample_mean`] and the aggregate module's f64 resampler.
+pub fn resample_stride(dt_s: f64, interval_s: f64) -> usize {
+    assert!(dt_s > 0.0 && interval_s > 0.0);
+    (interval_s / dt_s).round().max(1.0) as usize
 }
 
 /// Average `series` (at `dt_s`) into windows of `interval_s` (the last
 /// partial window is averaged over its actual length).
 pub fn resample_mean(series: &[f32], dt_s: f64, interval_s: f64) -> Vec<f32> {
-    assert!(dt_s > 0.0 && interval_s > 0.0);
-    let stride = (interval_s / dt_s).round().max(1.0) as usize;
     series
-        .chunks(stride)
+        .chunks(resample_stride(dt_s, interval_s))
         .map(|c| (c.iter().map(|&x| x as f64).sum::<f64>() / c.len() as f64) as f32)
         .collect()
 }
@@ -91,9 +103,11 @@ mod tests {
         let s = PlanningStats::compute(&[100.0f32; 16], 0.25, 1.0);
         assert_eq!(s.peak_w, 100.0);
         assert_eq!(s.avg_w, 100.0);
+        assert_eq!(s.p99_w, 100.0);
         assert_eq!(s.peak_to_average, 1.0);
         assert_eq!(s.load_factor, 1.0);
         assert_eq!(s.max_ramp_w, 0.0);
+        assert_eq!(s.cv, 0.0);
     }
 
     #[test]
@@ -116,6 +130,36 @@ mod tests {
         assert_eq!(resample_mean(&s, 1.0, 1.0), s.to_vec());
         // interval smaller than dt clamps to stride 1
         assert_eq!(resample_mean(&s, 1.0, 0.1), s.to_vec());
+    }
+
+    #[test]
+    fn resample_empty_series_is_empty() {
+        assert!(resample_mean(&[], 0.25, 1.0).is_empty());
+        assert_eq!(max_ramp(&[], 0.25, 1.0), 0.0);
+    }
+
+    #[test]
+    fn resample_non_divisible_interval_rounds_stride() {
+        // interval/dt = 0.3/0.25 = 1.2 → stride rounds to 1 (identity);
+        // 0.4/0.25 = 1.6 → stride 2.
+        let s = [2.0f32, 4.0, 6.0, 8.0];
+        assert_eq!(resample_mean(&s, 0.25, 0.3), s.to_vec());
+        assert_eq!(resample_mean(&s, 0.25, 0.4), vec![3.0, 7.0]);
+        // Trailing partial window is averaged over its actual length.
+        let s = [2.0f32, 4.0, 6.0];
+        assert_eq!(resample_mean(&s, 0.25, 0.5), vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn stats_p99_and_cv_track_distribution() {
+        // 99 samples at 100 W and one spike at 300 W.
+        let mut s = vec![100.0f32; 99];
+        s.push(300.0);
+        let st = PlanningStats::compute(&s, 1.0, 10.0);
+        assert_eq!(st.peak_w, 300.0);
+        assert!(st.p99_w > 100.0 && st.p99_w < 300.0, "p99 {}", st.p99_w);
+        assert!((st.cv - coefficient_of_variation(&s)).abs() < 1e-12);
+        assert!(st.cv > 0.0);
     }
 
     #[test]

@@ -1,155 +1,215 @@
 //! PJRT runtime: loads AOT-compiled HLO **text** artifacts produced by the
 //! Python build path and executes them on the XLA CPU client.
 //!
+//! The `xla` binding only exists in the offline registry cache of the
+//! artifact-build image, so the whole execution path is gated behind the
+//! `pjrt` cargo feature. Without it this module exposes the same
+//! [`Runtime`] / [`Executable`] API whose constructors return a clear
+//! error, and the coordinator falls back to the pure-Rust `native`
+//! classifier backend (identical numerics, see `classifier::native`).
+//!
 //! Interchange is HLO text, not serialized `HloModuleProto` — jax ≥ 0.5
 //! emits protos with 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
 //! and DESIGN.md §6).
 //!
-//! # Thread-safety
+//! # Thread-safety (pjrt feature)
 //!
 //! The `xla` crate's client handle is an `Rc` and its executables are raw
 //! pointers — neither is `Send`. PJRT's CPU plugin itself is thread-safe,
 //! but the binding's `Rc` reference counting is not, so this module routes
 //! *every* PJRT interaction (client creation, compilation, execution,
-//! buffer→literal transfer, and drops) through one global mutex
-//! ([`pjrt_lock`]). With that invariant, sharing [`Executable`] across the
-//! coordinator's worker threads is sound, which the `unsafe impl
-//! Send/Sync` below encode. Multi-worker throughput is preserved by
-//! keeping per-call critical sections short (one chunk execution) and by
-//! the fact that most of a server's generation time is outside the
-//! classifier call (see EXPERIMENTS.md §Perf).
+//! buffer→literal transfer, and drops) through one global mutex. With that
+//! invariant, sharing [`Executable`] across the coordinator's worker
+//! threads is sound, which the `unsafe impl Send/Sync` encode.
+//! Multi-worker throughput is preserved by keeping per-call critical
+//! sections short (one chunk execution) and by the fact that most of a
+//! server's generation time is outside the classifier call.
 
-use anyhow::{anyhow, ensure, Context, Result};
-use std::mem::ManuallyDrop;
-use std::path::Path;
-use std::sync::{Mutex, MutexGuard};
+#[cfg(feature = "pjrt")]
+mod imp {
+    use anyhow::{anyhow, ensure, Context, Result};
+    use std::mem::ManuallyDrop;
+    use std::path::Path;
+    use std::sync::{Mutex, MutexGuard};
 
-/// The single global PJRT lock. All binding calls happen while holding it.
-static PJRT_LOCK: Mutex<()> = Mutex::new(());
+    /// The single global PJRT lock. All binding calls happen while holding it.
+    static PJRT_LOCK: Mutex<()> = Mutex::new(());
 
-fn pjrt_lock() -> MutexGuard<'static, ()> {
-    PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
-}
-
-/// Wrapper over the PJRT CPU client.
-pub struct Runtime {
-    client: ManuallyDrop<xla::PjRtClient>,
-}
-
-// SAFETY: every use of `client` (and its Rc refcount) happens under
-// PJRT_LOCK, including Drop.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
-
-impl Drop for Runtime {
-    fn drop(&mut self) {
-        let _g = pjrt_lock();
-        unsafe { ManuallyDrop::drop(&mut self.client) };
-    }
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Runtime> {
-        let _g = pjrt_lock();
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime { client: ManuallyDrop::new(client) })
+    fn pjrt_lock() -> MutexGuard<'static, ()> {
+        PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
     }
 
-    pub fn platform(&self) -> String {
-        let _g = pjrt_lock();
-        self.client.platform_name()
+    /// Wrapper over the PJRT CPU client.
+    pub struct Runtime {
+        client: ManuallyDrop<xla::PjRtClient>,
     }
 
-    /// Load an HLO-text artifact and compile it for this client.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
-        ensure!(path.exists(), "artifact not found: {} (run `make artifacts`)", path.display());
-        let _g = pjrt_lock();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
-        Ok(Executable { exe: ManuallyDrop::new(exe), name: path.display().to_string() })
-    }
-}
+    // SAFETY: every use of `client` (and its Rc refcount) happens under
+    // PJRT_LOCK, including Drop.
+    unsafe impl Send for Runtime {}
+    unsafe impl Sync for Runtime {}
 
-/// A compiled executable. Inputs/outputs are f32 tensors; the lowered jax
-/// functions return a tuple (we lower with `return_tuple=True`).
-pub struct Executable {
-    exe: ManuallyDrop<xla::PjRtLoadedExecutable>,
-    name: String,
-}
-
-// SAFETY: see module docs — all PJRT calls (execute, transfers, drops) are
-// serialized by PJRT_LOCK.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
-impl Drop for Executable {
-    fn drop(&mut self) {
-        let _g = pjrt_lock();
-        unsafe { ManuallyDrop::drop(&mut self.exe) };
-    }
-}
-
-impl Executable {
-    /// Execute with f32 inputs of the given shapes; returns every tuple
-    /// element flattened to `Vec<f32>`.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        // Literals are standalone host buffers (no client handle): build
-        // them outside the lock.
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let n: i64 = shape.iter().product();
-            ensure!(
-                n as usize == data.len(),
-                "{}: input length {} != shape {:?}",
-                self.name,
-                data.len(),
-                shape
-            );
-            let lit = xla::Literal::vec1(data)
-                .reshape(shape)
-                .map_err(|e| anyhow!("{}: reshape: {e:?}", self.name))?;
-            literals.push(lit);
-        }
-        // Execute + fetch + drop device buffers under the PJRT lock.
-        let out = {
+    impl Drop for Runtime {
+        fn drop(&mut self) {
             let _g = pjrt_lock();
-            let result = self
-                .exe
-                .execute::<xla::Literal>(&literals)
-                .map_err(|e| anyhow!("{}: execute: {e:?}", self.name))?;
-            let lit = result[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("{}: fetch: {e:?}", self.name))?;
-            drop(result); // device buffers (hold client refs) die here
-            lit
-        };
-        let tuple = out.to_tuple().map_err(|e| anyhow!("{}: tuple: {e:?}", self.name))?;
-        tuple
-            .into_iter()
-            .map(|t| t.to_vec::<f32>().map_err(|e| anyhow!("{}: to_vec: {e:?}", self.name)))
-            .collect()
+            unsafe { ManuallyDrop::drop(&mut self.client) };
+        }
     }
 
-    /// Execute and return only the first tuple element.
-    pub fn run_f32_first(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
-        let mut outs = self.run_f32(inputs)?;
-        ensure!(!outs.is_empty(), "{}: empty output tuple", self.name);
-        Ok(outs.swap_remove(0))
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Runtime> {
+            let _g = pjrt_lock();
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+            Ok(Runtime { client: ManuallyDrop::new(client) })
+        }
+
+        pub fn platform(&self) -> String {
+            let _g = pjrt_lock();
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact and compile it for this client.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+            ensure!(path.exists(), "artifact not found: {} (run `make artifacts`)", path.display());
+            let _g = pjrt_lock();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+            Ok(Executable { exe: ManuallyDrop::new(exe), name: path.display().to_string() })
+        }
+    }
+
+    /// A compiled executable. Inputs/outputs are f32 tensors; the lowered jax
+    /// functions return a tuple (we lower with `return_tuple=True`).
+    pub struct Executable {
+        exe: ManuallyDrop<xla::PjRtLoadedExecutable>,
+        name: String,
+    }
+
+    // SAFETY: see module docs — all PJRT calls (execute, transfers, drops) are
+    // serialized by PJRT_LOCK.
+    unsafe impl Send for Executable {}
+    unsafe impl Sync for Executable {}
+
+    impl Drop for Executable {
+        fn drop(&mut self) {
+            let _g = pjrt_lock();
+            unsafe { ManuallyDrop::drop(&mut self.exe) };
+        }
+    }
+
+    impl Executable {
+        /// Execute with f32 inputs of the given shapes; returns every tuple
+        /// element flattened to `Vec<f32>`.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            // Literals are standalone host buffers (no client handle): build
+            // them outside the lock.
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs {
+                let n: i64 = shape.iter().product();
+                ensure!(
+                    n as usize == data.len(),
+                    "{}: input length {} != shape {:?}",
+                    self.name,
+                    data.len(),
+                    shape
+                );
+                let lit = xla::Literal::vec1(data)
+                    .reshape(shape)
+                    .map_err(|e| anyhow!("{}: reshape: {e:?}", self.name))?;
+                literals.push(lit);
+            }
+            // Execute + fetch + drop device buffers under the PJRT lock.
+            let out = {
+                let _g = pjrt_lock();
+                let result = self
+                    .exe
+                    .execute::<xla::Literal>(&literals)
+                    .map_err(|e| anyhow!("{}: execute: {e:?}", self.name))?;
+                let lit = result[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("{}: fetch: {e:?}", self.name))?;
+                drop(result); // device buffers (hold client refs) die here
+                lit
+            };
+            let tuple = out.to_tuple().map_err(|e| anyhow!("{}: tuple: {e:?}", self.name))?;
+            tuple
+                .into_iter()
+                .map(|t| t.to_vec::<f32>().map_err(|e| anyhow!("{}: to_vec: {e:?}", self.name)))
+                .collect()
+        }
+
+        /// Execute and return only the first tuple element.
+        pub fn run_f32_first(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            let mut outs = self.run_f32(inputs)?;
+            ensure!(!outs.is_empty(), "{}: empty output tuple", self.name);
+            Ok(outs.swap_remove(0))
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    const UNAVAILABLE: &str =
+        "PJRT backend unavailable: built without the `pjrt` cargo feature \
+         (rebuild with `cargo build --features pjrt` in the artifact image, \
+         or use the `native` classifier backend)";
+
+    /// Stub PJRT client: constructors fail so callers fall back to the
+    /// native backend. API mirrors the `pjrt`-feature implementation.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        /// Always fails in a `pjrt`-less build.
+        pub fn cpu() -> Result<Runtime> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn platform(&self) -> String {
+            String::from("unavailable")
+        }
+
+        /// Always fails in a `pjrt`-less build.
+        pub fn load_hlo_text(&self, _path: &Path) -> Result<Executable> {
+            bail!(UNAVAILABLE)
+        }
+    }
+
+    /// Stub executable; never constructible (see [`Runtime::load_hlo_text`]).
+    pub struct Executable {
+        _private: (),
+    }
+
+    impl Executable {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn run_f32_first(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            bail!(UNAVAILABLE)
+        }
+    }
+}
+
+pub use imp::{Executable, Runtime};
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
+    use std::path::Path;
 
     // A tiny checked-in HLO fixture: fn(x, y) = (matmul(x, y) + 2,) over
     // f32[2,2], generated by /opt/xla-example/gen_hlo.py. Lets runtime tests

@@ -1,0 +1,424 @@
+//! Sweep-grid definition, JSON round-trip, and cross-product expansion.
+//!
+//! A [`SweepGrid`] is four axes (workloads, topologies, fleets, seeds) plus
+//! shared per-cell defaults; [`SweepGrid::expand`] materializes the full
+//! cross-product as [`SweepCell`]s with stable ids and labels. Expansion is
+//! pure and deterministic — the same grid always yields the same cells in
+//! the same order — so grid cells are comparable across runs and code
+//! revisions.
+
+use crate::aggregate::Topology;
+use crate::config::{
+    topology_from_json, topology_to_json, ScenarioSpec, ServerAssignment, WorkloadSpec,
+};
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Scenario fields shared by every cell of a grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridDefaults {
+    /// Length-profile dataset key (catalog).
+    pub dataset: String,
+    /// Trace horizon per cell (s).
+    pub horizon_s: f64,
+    /// Per-server non-GPU IT power (W).
+    pub p_base_w: f64,
+    /// Site PUE.
+    pub pue: f64,
+}
+
+impl Default for GridDefaults {
+    fn default() -> Self {
+        GridDefaults { dataset: "sharegpt".to_string(), horizon_s: 600.0, p_base_w: 1000.0, pue: 1.3 }
+    }
+}
+
+/// A declarative sweep: the cross-product of four axes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepGrid {
+    pub name: String,
+    pub defaults: GridDefaults,
+    pub workloads: Vec<WorkloadSpec>,
+    pub topologies: Vec<Topology>,
+    pub fleets: Vec<ServerAssignment>,
+    pub seeds: Vec<u64>,
+}
+
+/// One expanded grid cell: a concrete scenario plus its stable identity.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    /// Stable id `w<i>-t<j>-f<k>-s<seed>` (axis indices, not values).
+    pub id: String,
+    /// Human-readable one-liner for tables.
+    pub label: String,
+    pub spec: ScenarioSpec,
+}
+
+impl SweepGrid {
+    /// Number of cells the grid expands to.
+    pub fn n_cells(&self) -> usize {
+        self.workloads.len() * self.topologies.len() * self.fleets.len() * self.seeds.len()
+    }
+
+    /// Reject empty axes and unusable defaults before any work starts.
+    pub fn validate(&self) -> Result<()> {
+        if self.workloads.is_empty() {
+            bail!("grid '{}' has no workloads", self.name);
+        }
+        if self.topologies.is_empty() {
+            bail!("grid '{}' has no topologies", self.name);
+        }
+        if self.fleets.is_empty() {
+            bail!("grid '{}' has no fleets", self.name);
+        }
+        if self.seeds.is_empty() {
+            bail!("grid '{}' has no seeds", self.name);
+        }
+        if self.config_ids().iter().any(|id| id.is_empty()) {
+            bail!("grid '{}' references an empty config id", self.name);
+        }
+        // Seeds round-trip through JSON numbers (f64): beyond 2^53 they
+        // would silently change value on save/load, breaking the
+        // grid-file-as-reproduction-recipe guarantee.
+        if self.seeds.iter().any(|&s| s > (1u64 << 53)) {
+            bail!("grid '{}': seeds must be < 2^53 to round-trip through JSON", self.name);
+        }
+        if self.defaults.horizon_s <= 0.0 {
+            bail!("grid '{}': horizon_s must be positive", self.name);
+        }
+        if self.defaults.pue < 1.0 {
+            bail!("grid '{}': pue must be >= 1.0", self.name);
+        }
+        Ok(())
+    }
+
+    /// Unique configuration ids across every fleet, in first-use order —
+    /// the artifact set shared by all cells (each id is prepared once no
+    /// matter how many cells reference it).
+    pub fn config_ids(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for fleet in &self.fleets {
+            for id in fleet.config_ids() {
+                if !out.contains(&id) {
+                    out.push(id);
+                }
+            }
+        }
+        out
+    }
+
+    /// Expand the cross-product. Nesting order (workload-major, seed-minor)
+    /// and cell ids are stable across runs.
+    pub fn expand(&self) -> Vec<SweepCell> {
+        let mut out = Vec::with_capacity(self.n_cells());
+        for (wi, workload) in self.workloads.iter().enumerate() {
+            for (ti, topology) in self.topologies.iter().enumerate() {
+                for (fi, fleet) in self.fleets.iter().enumerate() {
+                    for &seed in &self.seeds {
+                        let spec = ScenarioSpec {
+                            server_config: fleet.clone(),
+                            topology: *topology,
+                            workload: workload.clone(),
+                            dataset: self.defaults.dataset.clone(),
+                            horizon_s: self.defaults.horizon_s,
+                            p_base_w: self.defaults.p_base_w,
+                            pue: self.defaults.pue,
+                            seed,
+                        };
+                        let fleet_label = match fleet {
+                            ServerAssignment::Uniform(id) => id.clone(),
+                            ServerAssignment::PerRack(ids) => ids.join("+"),
+                        };
+                        out.push(SweepCell {
+                            id: format!("w{wi}-t{ti}-f{fi}-s{seed}"),
+                            label: format!(
+                                "{} | {}x{}x{} | {} | seed {}",
+                                workload.label(),
+                                topology.rows,
+                                topology.racks_per_row,
+                                topology.servers_per_rack,
+                                fleet_label,
+                                seed
+                            ),
+                            spec,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj([
+            ("name", self.name.as_str().into()),
+            (
+                "defaults",
+                json::obj([
+                    ("dataset", self.defaults.dataset.as_str().into()),
+                    ("horizon_s", self.defaults.horizon_s.into()),
+                    ("p_base_w", self.defaults.p_base_w.into()),
+                    ("pue", self.defaults.pue.into()),
+                ]),
+            ),
+            ("workloads", Json::Arr(self.workloads.iter().map(|w| w.to_json()).collect())),
+            ("topologies", Json::Arr(self.topologies.iter().map(topology_to_json).collect())),
+            ("fleets", Json::Arr(self.fleets.iter().map(|f| f.to_json()).collect())),
+            ("seeds", Json::Arr(self.seeds.iter().map(|&s| Json::Num(s as f64)).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SweepGrid> {
+        let mut defaults = GridDefaults::default();
+        if let Some(d) = v.get_opt("defaults") {
+            if let Some(x) = d.get_opt("dataset") {
+                defaults.dataset = x.as_str()?.to_string();
+            }
+            if let Some(x) = d.get_opt("horizon_s") {
+                defaults.horizon_s = x.as_f64()?;
+            }
+            if let Some(x) = d.get_opt("p_base_w") {
+                defaults.p_base_w = x.as_f64()?;
+            }
+            if let Some(x) = d.get_opt("pue") {
+                defaults.pue = x.as_f64()?;
+            }
+        }
+        let workloads = v
+            .get("workloads")?
+            .as_arr()
+            .map_err(anyhow::Error::from)?
+            .iter()
+            .enumerate()
+            .map(|(i, w)| WorkloadSpec::from_json(w).with_context(|| format!("workloads[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        let topologies = v
+            .get("topologies")?
+            .as_arr()
+            .map_err(anyhow::Error::from)?
+            .iter()
+            .enumerate()
+            .map(|(i, t)| topology_from_json(t).with_context(|| format!("topologies[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        let fleets = v
+            .get("fleets")?
+            .as_arr()
+            .map_err(anyhow::Error::from)?
+            .iter()
+            .enumerate()
+            .map(|(i, f)| ServerAssignment::from_json(f).with_context(|| format!("fleets[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        let seeds = v
+            .get("seeds")?
+            .f64_array()
+            .map_err(anyhow::Error::from)?
+            .into_iter()
+            .map(|s| {
+                if s < 0.0 || s.fract() != 0.0 || s > (1u64 << 53) as f64 {
+                    bail!("seeds must be integers in [0, 2^53] (got {s})");
+                }
+                Ok(s as u64)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let name = match v.get_opt("name") {
+            Some(x) => x.as_str()?.to_string(),
+            None => "sweep".to_string(),
+        };
+        let grid = SweepGrid {
+            name,
+            defaults,
+            workloads,
+            topologies,
+            fleets,
+            seeds,
+        };
+        grid.validate()?;
+        Ok(grid)
+    }
+
+    pub fn load(path: &Path) -> Result<SweepGrid> {
+        let v = json::parse_file(path).map_err(anyhow::Error::from)?;
+        Self::from_json(&v).with_context(|| format!("parsing sweep grid {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        json::write_file(path, &self.to_json()).map_err(anyhow::Error::from)
+    }
+
+    /// A small built-in demonstration grid over `config_ids`: steady vs
+    /// bursty traffic × homogeneous vs mixed fleet × two seeds = 8 cells.
+    /// Used by `powertrace sweep` when no `--grid` file is given and by
+    /// `examples/sweep_grid.rs`.
+    pub fn example(name: &str, config_ids: &[String], horizon_s: f64) -> SweepGrid {
+        let primary = config_ids.first().cloned().unwrap_or_default();
+        let mixed: Vec<String> = config_ids.iter().take(2).cloned().collect();
+        let fleets = if mixed.len() > 1 {
+            vec![ServerAssignment::Uniform(primary), ServerAssignment::PerRack(mixed)]
+        } else {
+            vec![
+                ServerAssignment::Uniform(primary.clone()),
+                ServerAssignment::Uniform(primary),
+            ]
+        };
+        SweepGrid {
+            name: name.to_string(),
+            defaults: GridDefaults { horizon_s, ..GridDefaults::default() },
+            workloads: vec![
+                WorkloadSpec::Poisson { rate: 0.5 },
+                WorkloadSpec::Mmpp { mean_rate: 0.5, burstiness: 4.0 },
+            ],
+            topologies: vec![Topology { rows: 2, racks_per_row: 2, servers_per_rack: 2 }],
+            fleets,
+            seeds: vec![0, 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> SweepGrid {
+        SweepGrid {
+            name: "t".into(),
+            defaults: GridDefaults::default(),
+            workloads: vec![
+                WorkloadSpec::Poisson { rate: 0.25 },
+                WorkloadSpec::Poisson { rate: 1.0 },
+                WorkloadSpec::Mmpp { mean_rate: 0.5, burstiness: 4.0 },
+            ],
+            topologies: vec![
+                Topology { rows: 1, racks_per_row: 2, servers_per_rack: 2 },
+                Topology { rows: 2, racks_per_row: 3, servers_per_rack: 4 },
+            ],
+            fleets: vec![
+                ServerAssignment::Uniform("a".into()),
+                ServerAssignment::PerRack(vec!["a".into(), "b".into()]),
+            ],
+            seeds: vec![0, 7],
+        }
+    }
+
+    #[test]
+    fn expansion_is_full_cross_product() {
+        let g = grid();
+        assert_eq!(g.n_cells(), 3 * 2 * 2 * 2);
+        let cells = g.expand();
+        assert_eq!(cells.len(), g.n_cells());
+        // Ids are unique.
+        let mut ids: Vec<&str> = cells.iter().map(|c| c.id.as_str()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), cells.len());
+    }
+
+    #[test]
+    fn expansion_is_deterministic() {
+        let g = grid();
+        let a = g.expand();
+        let b = g.expand();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.spec, y.spec);
+        }
+    }
+
+    #[test]
+    fn seeds_propagate_to_specs() {
+        let g = grid();
+        for cell in g.expand() {
+            let seed_tag = format!("-s{}", cell.spec.seed);
+            assert!(cell.id.ends_with(&seed_tag), "{} vs seed {}", cell.id, cell.spec.seed);
+            assert!(g.seeds.contains(&cell.spec.seed));
+        }
+    }
+
+    #[test]
+    fn config_ids_deduplicate_across_fleets() {
+        let g = grid();
+        // "a" appears in both fleets; "b" once.
+        assert_eq!(g.config_ids(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = grid();
+        let back = SweepGrid::from_json(&g.to_json()).unwrap();
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn defaults_are_optional_in_json() {
+        let v = json::parse(
+            r#"{
+              "name": "mini",
+              "workloads": [{"kind": "poisson", "rate": 1.0}],
+              "topologies": [{"rows": 1, "racks_per_row": 1, "servers_per_rack": 1}],
+              "fleets": ["cfg"],
+              "seeds": [0]
+            }"#,
+        )
+        .unwrap();
+        let g = SweepGrid::from_json(&v).unwrap();
+        assert_eq!(g.defaults, GridDefaults::default());
+        assert_eq!(g.n_cells(), 1);
+    }
+
+    #[test]
+    fn validation_rejects_empty_axes_and_bad_defaults() {
+        let mut g = grid();
+        g.seeds.clear();
+        assert!(g.validate().is_err());
+
+        let mut g = grid();
+        g.workloads.clear();
+        assert!(g.validate().is_err());
+
+        let mut g = grid();
+        g.defaults.pue = 0.9;
+        assert!(g.validate().is_err());
+
+        let mut g = grid();
+        g.defaults.horizon_s = 0.0;
+        assert!(g.validate().is_err());
+
+        let mut g = grid();
+        g.fleets = vec![ServerAssignment::Uniform(String::new())];
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn wrong_typed_name_is_an_error_not_a_default() {
+        let mut g = grid().to_json();
+        if let Json::Obj(o) = &mut g {
+            o.insert("name".into(), Json::Num(42.0));
+        }
+        assert!(SweepGrid::from_json(&g).is_err());
+        // Absent name still defaults.
+        if let Json::Obj(o) = &mut g {
+            o.remove("name");
+        }
+        assert_eq!(SweepGrid::from_json(&g).unwrap().name, "sweep");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("powertrace_test_grid");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("grid.json");
+        let g = grid();
+        g.save(&p).unwrap();
+        assert_eq!(SweepGrid::load(&p).unwrap(), g);
+    }
+
+    #[test]
+    fn example_grid_has_at_least_eight_cells() {
+        let ids = vec!["a".to_string(), "b".to_string()];
+        let g = SweepGrid::example("demo", &ids, 120.0);
+        g.validate().unwrap();
+        assert!(g.n_cells() >= 8, "{}", g.n_cells());
+        assert_eq!(g.config_ids(), ids);
+    }
+}

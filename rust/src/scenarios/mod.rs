@@ -1,0 +1,81 @@
+//! The scenario sweep engine: declarative grids of serving scenarios,
+//! expanded into concrete [`ScenarioSpec`](crate::config::ScenarioSpec)s,
+//! executed in parallel over one shared [`Generator`](crate::coordinator::Generator),
+//! and exported as multi-resolution power traces plus a planning summary.
+//!
+//! This is the paper's "generate traces for new traffic conditions and
+//! serving configurations" loop turned into infrastructure: a planner
+//! writes one JSON *grid* instead of N scenario files, and every cell of
+//! the cross-product — workload × topology × fleet × seed — becomes a
+//! deterministic, individually reproducible facility run.
+//!
+//! # Grid JSON schema
+//!
+//! ```text
+//! {
+//!   "name":       string                 — sweep name (output directory stem)
+//!   "defaults": {                        — optional; applied to every cell
+//!     "dataset":   string                  (default "sharegpt")
+//!     "horizon_s": number                  (default 600)
+//!     "p_base_w":  number                  (default 1000)
+//!     "pue":       number                  (default 1.3)
+//!   },
+//!   "workloads":  [ WorkloadSpec, ... ]  — same objects as scenario files:
+//!                                          {"kind":"poisson","rate":..},
+//!                                          {"kind":"mmpp","mean_rate":..,"burstiness":..},
+//!                                          {"kind":"diurnal", ...}, {"kind":"replay", ...}
+//!   "topologies": [ {"rows":..,"racks_per_row":..,"servers_per_rack":..}, ... ]
+//!   "fleets":     [ "config_id" | ["id_a","id_b"], ... ]
+//!                                        — a string is a homogeneous hall, an
+//!                                          array cycles configs over racks
+//!   "seeds":      [ 0, 1, ... ]          — one full replication per seed
+//! }
+//! ```
+//!
+//! Every axis must be non-empty; the grid expands to
+//! `workloads × topologies × fleets × seeds` cells in that (deterministic)
+//! nesting order, each with a stable id `w<i>-t<j>-f<k>-s<seed>`.
+//!
+//! # Example
+//!
+//! Expansion is pure (no artifacts needed), so it can be driven directly:
+//!
+//! ```
+//! use powertrace_sim::scenarios::SweepGrid;
+//! use powertrace_sim::util::json;
+//!
+//! let grid = SweepGrid::from_json(&json::parse(r#"{
+//!   "name": "rate_fleet_study",
+//!   "defaults": {"horizon_s": 300},
+//!   "workloads": [{"kind": "poisson", "rate": 0.5},
+//!                 {"kind": "mmpp", "mean_rate": 0.5, "burstiness": 4.0}],
+//!   "topologies": [{"rows": 1, "racks_per_row": 2, "servers_per_rack": 2}],
+//!   "fleets": ["llama70b_a100_tp8",
+//!              ["llama70b_a100_tp8", "gptoss120b_a100_tp4"]],
+//!   "seeds": [0, 1]
+//! }"#).unwrap()).unwrap();
+//!
+//! assert_eq!(grid.n_cells(), 8);
+//! let cells = grid.expand();
+//! assert_eq!(cells.len(), 8);
+//! assert_eq!(cells[0].id, "w0-t0-f0-s0");
+//! // Duplicate configs across fleets are loaded once.
+//! assert_eq!(grid.config_ids().len(), 2);
+//! ```
+//!
+//! Running a grid ([`run_sweep`]) prepares each referenced configuration
+//! **once** on the generator (artifact load + classifier build — see
+//! [`Generator::prepare`](crate::coordinator::Generator::prepare)), then
+//! fans cells across a thread pool with
+//! [`facility_shared`](crate::coordinator::Generator::facility_shared).
+//! Each cell yields a [`PlanningStats`](crate::metrics::PlanningStats)
+//! summary row and a [`MultiScale`](crate::aggregate::MultiScale) export —
+//! rack series at 1 s, row series at 15 s, facility series at 5/15 min by
+//! default. Cells are bit-reproducible per `(scenario, seed)`, so grid
+//! summaries can be diffed across code revisions.
+
+pub mod grid;
+pub mod runner;
+
+pub use grid::{GridDefaults, SweepCell, SweepGrid};
+pub use runner::{run_sweep, CellResult, SweepOptions, SweepReport};

@@ -1,0 +1,312 @@
+//! Sweep execution: run every grid cell through the facility pipeline in
+//! parallel over one shared [`Generator`], then summarize and export.
+//!
+//! Artifact sharing: [`run_sweep`] first [`Generator::prepare`]s each
+//! configuration some cell actually uses (artifact JSON parse + classifier
+//! construction happen exactly once per config, not per cell), then fans
+//! cells across a thread pool with
+//! [`Generator::facility_shared`] — which itself parallelizes across racks
+//! inside a cell. Outer/inner worker counts are balanced automatically
+//! unless pinned in [`SweepOptions`].
+//!
+//! Determinism: every cell's output is a pure function of its
+//! `(ScenarioSpec, seed)` (see [`Generator::facility_shared`]), and the
+//! summary CSV deliberately contains no wall-clock fields, so re-running a
+//! grid with the same seeds reproduces byte-identical summaries.
+
+use super::grid::{SweepCell, SweepGrid};
+use crate::aggregate::{MultiScale, ScaleConfig};
+use crate::coordinator::Generator;
+use crate::metrics::PlanningStats;
+use crate::util::threadpool::{default_workers, parallel_map};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// Execution knobs for one sweep run.
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Server-sample interval the pipeline generates at (paper: 250 ms).
+    pub dt_s: f64,
+    /// Ramp-measurement interval for the summary stats (paper: 15 min).
+    /// Per cell this is clamped to half the scenario horizon (and no less
+    /// than `dt_s`) so short grids still measure a ramp instead of
+    /// reporting an identically-zero one from a single window.
+    pub ramp_interval_s: f64,
+    /// Concurrent scenarios; 0 = auto (bounded by cell count and cores).
+    pub scenario_workers: usize,
+    /// Worker threads inside each scenario; 0 = auto (cores left over
+    /// after scenario-level parallelism).
+    pub server_workers: usize,
+    /// Export intervals per aggregation level.
+    pub scales: ScaleConfig,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            dt_s: 0.25,
+            ramp_interval_s: 900.0,
+            scenario_workers: 0,
+            server_workers: 0,
+            scales: ScaleConfig::default(),
+        }
+    }
+}
+
+/// One executed grid cell.
+pub struct CellResult {
+    pub cell: SweepCell,
+    /// Planning summary of the facility PCC series at the generation dt.
+    pub stats: PlanningStats,
+    /// Multi-resolution export (racks / rows / facility).
+    pub scales: MultiScale,
+    /// Wall-clock seconds this cell took (reporting only; never exported).
+    pub wall_s: f64,
+}
+
+/// A completed sweep: the grid plus every cell result, in grid order.
+pub struct SweepReport {
+    pub grid: SweepGrid,
+    pub dt_s: f64,
+    pub cells: Vec<CellResult>,
+}
+
+/// Expand and execute a grid. Cell results come back in expansion order.
+pub fn run_sweep(gen: &mut Generator, grid: &SweepGrid, opts: &SweepOptions) -> Result<SweepReport> {
+    grid.validate()?;
+    let cells = grid.expand();
+    // Shared-artifact hoist: each config some cell actually uses is
+    // prepared exactly once, no matter how many cells (or racks) use it.
+    let mut needed: Vec<String> = Vec::new();
+    for cell in &cells {
+        for id in cell.spec.server_config.config_ids_used(&cell.spec.topology) {
+            if !needed.contains(&id) {
+                needed.push(id);
+            }
+        }
+    }
+    for id in needed {
+        gen.prepare(&id).with_context(|| format!("preparing config '{id}'"))?;
+    }
+    let n = cells.len();
+    let outer = match opts.scenario_workers {
+        0 => default_workers().min(n).max(1),
+        w => w.min(n).max(1),
+    };
+    let inner = match opts.server_workers {
+        0 => (default_workers() / outer).max(1),
+        w => w,
+    };
+    let gen_ro: &Generator = gen;
+    let results: Vec<Result<CellResult>> = parallel_map(n, outer, |i| {
+        let cell = &cells[i];
+        let t0 = Instant::now();
+        let run = gen_ro
+            .facility_shared(&cell.spec, opts.dt_s, inner)
+            .with_context(|| format!("cell {}", cell.id))?;
+        let site = run.facility_series();
+        // See SweepOptions::ramp_interval_s: keep ≥ 2 windows in range.
+        let ramp_s = opts.ramp_interval_s.min(cell.spec.horizon_s / 2.0).max(opts.dt_s);
+        let stats = PlanningStats::compute(&site, opts.dt_s, ramp_s);
+        let scales = run.acc.multi_scale(opts.dt_s, cell.spec.pue, &opts.scales);
+        Ok(CellResult { cell: cell.clone(), stats, scales, wall_s: t0.elapsed().as_secs_f64() })
+    });
+    let mut out = Vec::with_capacity(n);
+    for r in results {
+        out.push(r?);
+    }
+    Ok(SweepReport { grid: grid.clone(), dt_s: opts.dt_s, cells: out })
+}
+
+impl SweepReport {
+    /// The planning summary as CSV. Deterministic per (grid, seeds): values
+    /// are emitted with Rust's shortest round-trip float formatting and no
+    /// timing columns.
+    pub fn summary_csv(&self) -> String {
+        let mut s = String::from(
+            "cell,workload,topology,fleet,servers,seed,\
+             peak_w,avg_w,p99_w,max_ramp_w,cv,peak_to_average,load_factor\n",
+        );
+        for c in &self.cells {
+            let t = c.cell.spec.topology;
+            let fleet = c.cell.spec.server_config.config_ids().join("+");
+            s.push_str(&format!(
+                "{},{},{}x{}x{},{},{},{},{},{},{},{},{},{},{}\n",
+                c.cell.id,
+                csv_field(&c.cell.spec.workload.label()),
+                t.rows,
+                t.racks_per_row,
+                t.servers_per_rack,
+                csv_field(&fleet),
+                t.n_servers(),
+                c.cell.spec.seed,
+                c.stats.peak_w,
+                c.stats.avg_w,
+                c.stats.p99_w,
+                c.stats.max_ramp_w,
+                c.stats.cv,
+                c.stats.peak_to_average,
+                c.stats.load_factor,
+            ));
+        }
+        s
+    }
+
+    /// Human-readable summary table (kW units, wall-clock included).
+    pub fn summary_table(&self) -> String {
+        let mut s = format!(
+            "{:<14} {:<44} {:>6} {:>9} {:>9} {:>9} {:>9} {:>7} {:>6} {:>7}\n",
+            "cell", "scenario", "srv", "peak kW", "avg kW", "p99 kW", "ramp kW", "CV", "PAR", "wall s"
+        );
+        for c in &self.cells {
+            s.push_str(&format!(
+                "{:<14} {:<44} {:>6} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>7.3} {:>6.2} {:>7.1}\n",
+                c.cell.id,
+                truncate(&c.cell.label, 44),
+                c.cell.spec.topology.n_servers(),
+                c.stats.peak_w / 1e3,
+                c.stats.avg_w / 1e3,
+                c.stats.p99_w / 1e3,
+                c.stats.max_ramp_w / 1e3,
+                c.stats.cv,
+                c.stats.peak_to_average,
+                c.wall_s,
+            ));
+        }
+        s
+    }
+
+    /// Write the full report under `dir`:
+    ///
+    /// ```text
+    /// <dir>/grid.json                      the grid (reproduction recipe)
+    /// <dir>/summary.csv                    one PlanningStats row per cell
+    /// <dir>/<cell>/scenario.json           the expanded ScenarioSpec
+    /// <dir>/<cell>/racks_<interval>s.csv   per-rack IT power
+    /// <dir>/<cell>/rows_<interval>s.csv    per-row IT power
+    /// <dir>/<cell>/facility_<interval>s.csv  PCC power per facility scale
+    /// ```
+    pub fn write(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        self.grid.save(&dir.join("grid.json"))?;
+        std::fs::write(dir.join("summary.csv"), self.summary_csv())?;
+        for c in &self.cells {
+            let cdir = dir.join(&c.cell.id);
+            std::fs::create_dir_all(&cdir)?;
+            c.cell.spec.save(&cdir.join("scenario.json"))?;
+            let sc = &c.scales.scales;
+            write_series_csv(
+                &cdir.join(format!("racks_{}s.csv", fmt_secs(sc.rack_interval_s))),
+                "rack",
+                sc.rack_interval_s,
+                &c.scales.racks_w,
+            )?;
+            write_series_csv(
+                &cdir.join(format!("rows_{}s.csv", fmt_secs(sc.row_interval_s))),
+                "row",
+                sc.row_interval_s,
+                &c.scales.rows_w,
+            )?;
+            for (k, &interval) in sc.facility_intervals_s.iter().enumerate() {
+                write_series_csv(
+                    &cdir.join(format!("facility_{}s.csv", fmt_secs(interval))),
+                    "facility",
+                    interval,
+                    std::slice::from_ref(&c.scales.facility_w[k]),
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// RFC-4180 quoting for free-text CSV fields (a replay workload's path
+/// may contain commas or quotes).
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// `300` for whole seconds, `0.25` otherwise (file-name friendly).
+fn fmt_secs(x: f64) -> String {
+    if x.fract() == 0.0 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+fn truncate(s: &str, max: usize) -> String {
+    if s.chars().count() <= max {
+        s.to_string()
+    } else {
+        let cut: String = s.chars().take(max.saturating_sub(1)).collect();
+        format!("{cut}…")
+    }
+}
+
+/// Columnar CSV: `t_s,<stem>_0,<stem>_1,...` with one row per interval.
+fn write_series_csv(path: &Path, stem: &str, interval_s: f64, series: &[Vec<f32>]) -> Result<()> {
+    let n = series.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut out = String::from("t_s");
+    for i in 0..series.len() {
+        out.push_str(&format!(",{stem}_{i}"));
+    }
+    out.push('\n');
+    for t in 0..n {
+        out.push_str(&fmt_secs(t as f64 * interval_s));
+        for s in series {
+            out.push(',');
+            if t < s.len() {
+                out.push_str(&format!("{}", s[t]));
+            }
+        }
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_field_quotes_only_when_needed() {
+        assert_eq!(csv_field("poisson λ=0.5"), "poisson λ=0.5");
+        assert_eq!(csv_field("replay a,b.json"), "\"replay a,b.json\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn fmt_secs_is_filename_friendly() {
+        assert_eq!(fmt_secs(300.0), "300");
+        assert_eq!(fmt_secs(1.0), "1");
+        assert_eq!(fmt_secs(0.25), "0.25");
+    }
+
+    #[test]
+    fn truncate_respects_char_boundaries() {
+        assert_eq!(truncate("short", 10), "short");
+        let t = truncate("λ̄-burstiness-very-long-label", 10);
+        assert!(t.chars().count() <= 10);
+    }
+
+    #[test]
+    fn series_csv_shape() {
+        let dir = std::env::temp_dir().join("powertrace_test_runner");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("racks.csv");
+        write_series_csv(&p, "rack", 15.0, &[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "t_s,rack_0,rack_1");
+        assert_eq!(lines[1], "0,1,2");
+        assert_eq!(lines[2], "15,3,4");
+        assert_eq!(lines.len(), 3);
+    }
+}

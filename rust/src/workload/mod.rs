@@ -6,6 +6,21 @@
 //! `(arrival time, n_in, n_out)` requests — either independently per server
 //! or by thinning a shared intensity so request streams are correlated
 //! across the facility.
+//!
+//! Four arrival-process families are available, selected by the
+//! `workload.kind` field of a scenario (or one axis entry of a sweep grid,
+//! see [`crate::scenarios`]):
+//!
+//! | kind      | model                                   | module      |
+//! |-----------|-----------------------------------------|-------------|
+//! | `poisson` | homogeneous Poisson at a fixed rate     | [`poisson`] |
+//! | `mmpp`    | 2-state Markov-modulated Poisson bursts | [`mmpp`]    |
+//! | `diurnal` | Azure-like day/night intensity + bursts | [`diurnal`] |
+//! | `replay`  | replay a recorded schedule from JSON    | [`replay`]  |
+//!
+//! All draws flow through the deterministic forked [`crate::util::rng::Rng`]
+//! streams, so any schedule is reproducible from `(scenario seed, server
+//! index)` alone.
 
 pub mod diurnal;
 pub mod lengths;

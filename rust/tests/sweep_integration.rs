@@ -1,0 +1,110 @@
+//! Integration: the sweep engine end-to-end — grid expansion feeding the
+//! facility pipeline, shared prepared configs, multi-scale export shapes,
+//! and bit-exact reproducibility of the summary across runs and worker
+//! counts.
+
+use powertrace_sim::aggregate::Topology;
+use powertrace_sim::config::{ServerAssignment, WorkloadSpec};
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::scenarios::{run_sweep, GridDefaults, SweepGrid, SweepOptions};
+
+fn generator() -> Option<Generator> {
+    match Generator::native() {
+        Ok(g) => Some(g),
+        Err(e) => {
+            eprintln!("skipping sweep integration tests: {e:#}");
+            None
+        }
+    }
+}
+
+fn small_grid(ids: &[String]) -> SweepGrid {
+    SweepGrid {
+        name: "itest".into(),
+        defaults: GridDefaults { horizon_s: 60.0, ..GridDefaults::default() },
+        workloads: vec![
+            WorkloadSpec::Poisson { rate: 0.5 },
+            WorkloadSpec::Mmpp { mean_rate: 0.5, burstiness: 4.0 },
+        ],
+        topologies: vec![Topology { rows: 1, racks_per_row: 2, servers_per_rack: 1 }],
+        fleets: vec![ServerAssignment::Uniform(ids[0].clone())],
+        seeds: vec![3, 4],
+    }
+}
+
+#[test]
+fn sweep_runs_and_exports_every_scale() {
+    let Some(mut gen) = generator() else { return };
+    let ids = gen.store.manifest.configs.clone();
+    let grid = small_grid(&ids);
+    let opts = SweepOptions { dt_s: 0.25, ..SweepOptions::default() };
+    let report = run_sweep(&mut gen, &grid, &opts).unwrap();
+    assert_eq!(report.cells.len(), 4);
+    for c in &report.cells {
+        // 60 s horizon: 2 racks @1s → 60 pts, 1 row @15s → 4 pts,
+        // facility @300s/@900s → single partial-window points.
+        assert_eq!(c.scales.racks_w.len(), 2);
+        assert_eq!(c.scales.racks_w[0].len(), 60);
+        assert_eq!(c.scales.rows_w.len(), 1);
+        assert_eq!(c.scales.rows_w[0].len(), 4);
+        assert_eq!(c.scales.facility_w.len(), 2);
+        assert_eq!(c.scales.facility_w[0].len(), 1);
+        assert!(c.stats.peak_w >= c.stats.p99_w);
+        assert!(c.stats.p99_w >= c.stats.avg_w);
+        // Facility floor: 2 servers × 1 kW base × PUE.
+        assert!(c.stats.avg_w > 2.0 * 1000.0 * 1.3);
+    }
+}
+
+#[test]
+fn sweep_summary_is_reproducible_across_runs_and_worker_counts() {
+    let Some(mut gen) = generator() else { return };
+    let ids = gen.store.manifest.configs.clone();
+    let grid = small_grid(&ids);
+    let a = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    // Different parallelism layout, fresh generator: same bytes.
+    let mut gen2 = generator().unwrap();
+    let opts2 = SweepOptions { scenario_workers: 1, server_workers: 2, ..SweepOptions::default() };
+    let b = run_sweep(&mut gen2, &grid, &opts2).unwrap();
+    assert_eq!(a.summary_csv(), b.summary_csv());
+    for (x, y) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(x.scales.racks_w, y.scales.racks_w);
+        assert_eq!(x.scales.rows_w, y.scales.rows_w);
+        assert_eq!(x.scales.facility_w, y.scales.facility_w);
+    }
+}
+
+#[test]
+fn sweep_shares_prepared_configs_across_cells() {
+    let Some(mut gen) = generator() else { return };
+    let ids = gen.store.manifest.configs.clone();
+    let grid = small_grid(&ids);
+    run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    // The one config the grid references is prepared, and re-preparing
+    // returns the same shared instance (pointer equality on the Arc).
+    let p1 = gen.get_prepared(&ids[0]).expect("prepared by the sweep");
+    let p2 = gen.prepare(&ids[0]).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&p1, &p2));
+}
+
+#[test]
+fn sweep_report_write_creates_full_tree() {
+    let Some(mut gen) = generator() else { return };
+    let ids = gen.store.manifest.configs.clone();
+    let grid = small_grid(&ids);
+    let report = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    let dir = std::env::temp_dir().join("powertrace_test_sweep_report");
+    let _ = std::fs::remove_dir_all(&dir);
+    report.write(&dir).unwrap();
+    assert!(dir.join("grid.json").exists());
+    assert!(dir.join("summary.csv").exists());
+    let cell = &report.cells[0].cell.id;
+    assert!(dir.join(cell).join("scenario.json").exists());
+    assert!(dir.join(cell).join("racks_1s.csv").exists());
+    assert!(dir.join(cell).join("rows_15s.csv").exists());
+    assert!(dir.join(cell).join("facility_300s.csv").exists());
+    assert!(dir.join(cell).join("facility_900s.csv").exists());
+    // The summary on disk matches the in-memory one (no timing columns).
+    let on_disk = std::fs::read_to_string(dir.join("summary.csv")).unwrap();
+    assert_eq!(on_disk, report.summary_csv());
+}
