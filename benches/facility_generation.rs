@@ -1,35 +1,77 @@
 //! Facility-generation throughput: servers × hours of 250 ms trace per
 //! wall-second — the headline L3 performance number (EXPERIMENTS.md §Perf).
+//!
+//! Measures the sequential per-server path (`max_batch = 1`, the
+//! pre-batching pipeline) against the rack-batched GEMM engine on the same
+//! scenario, prints the speedup, and records both as machine-readable
+//! entries in `BENCH_facility.json` so the perf trajectory is tracked
+//! across PRs. Falls back to a synthetic random-weight artifact store at
+//! production geometry (H=64, K=12) when `make artifacts` hasn't run —
+//! the compute shape is identical, so throughput numbers stay meaningful.
 
 use powertrace_sim::aggregate::Topology;
-use powertrace_sim::benchutil::{section, Bench};
+use powertrace_sim::benchutil::{section, write_bench_json, Bench, BenchEntry};
 use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
 use powertrace_sim::coordinator::Generator;
+use powertrace_sim::testutil::synth_generator;
+use std::path::Path;
+use std::time::Duration;
 
 fn main() {
-    section("facility generation throughput");
-    let mut gen = match Generator::pjrt().or_else(|_| Generator::native()) {
-        Ok(g) => g,
-        Err(e) => {
-            println!("skipped (artifacts not built?): {e:#}");
-            return;
+    section("facility generation throughput (sequential vs rack-batched)");
+    let (mut gen, id) = match Generator::pjrt().or_else(|_| Generator::native()) {
+        Ok(g) => {
+            let id = g.store.manifest.configs[0].clone();
+            (g, id)
+        }
+        Err(_) => {
+            println!("  (no artifact store; using a synthetic random-weight store, H=64 K=12)");
+            let (g, ids) = synth_generator("bench_facility", 64, 12, 1, 99)
+                .expect("synthetic artifact store");
+            let id = ids[0].clone();
+            (g, id)
         }
     };
-    let id = gen.store.manifest.configs[0].clone();
     let mut spec = ScenarioSpec::default_poisson(&id, 1.0);
-    spec.topology = Topology { rows: 1, racks_per_row: 3, servers_per_rack: 4 };
+    spec.topology = Topology { rows: 1, racks_per_row: 2, servers_per_rack: 16 };
     spec.server_config = ServerAssignment::Uniform(id.clone());
     spec.workload = WorkloadSpec::Poisson { rate: 1.0 };
     spec.horizon_s = 900.0;
+    if let Err(e) = gen.prepare_for(&spec) {
+        println!("skipped (config not preparable): {e:#}");
+        return;
+    }
 
-    let b = Bench { budget: std::time::Duration::from_secs(4), max_iters: 5 };
     let dt = 0.25;
-    let r = b.run("facility(12 servers × 15min @250ms)", || {
-        gen.facility(&spec, dt, 0).unwrap().it_series().len()
+    let n_servers = spec.topology.n_servers() as f64;
+    let server_seconds = n_servers * spec.horizon_s;
+    let b = Bench::budgeted(Duration::from_secs(4), 5);
+    let seq = b.run("facility(32 srv × 15min) sequential", || {
+        gen.facility_shared_batched(&spec, dt, 0, 1).unwrap().it_series().len()
     });
-    let server_seconds = spec.topology.n_servers() as f64 * spec.horizon_s;
+    let bat = b.run("facility(32 srv × 15min) rack-batched", || {
+        gen.facility_shared_batched(&spec, dt, 0, 0).unwrap().it_series().len()
+    });
+    let sps_seq = n_servers / seq.mean.as_secs_f64();
+    let sps_bat = n_servers / bat.mean.as_secs_f64();
     println!(
-        "  throughput: {:.0}x realtime per core (server-seconds generated / wall-second)",
-        server_seconds / r.mean.as_secs_f64()
+        "  sequential: {:.1} servers/s ({:.0}x realtime total), batched: {:.1} servers/s \
+         ({:.0}x realtime total) → speedup {:.2}x",
+        sps_seq,
+        server_seconds / seq.mean.as_secs_f64(),
+        sps_bat,
+        server_seconds / bat.mean.as_secs_f64(),
+        seq.mean.as_secs_f64() / bat.mean.as_secs_f64(),
     );
+    if let Err(e) = write_bench_json(
+        Path::new("BENCH_facility.json"),
+        &[
+            BenchEntry::from_result("facility_sequential", &seq, Some(n_servers)),
+            BenchEntry::from_result("facility_batched", &bat, Some(n_servers)),
+        ],
+    ) {
+        println!("  (BENCH_facility.json not written: {e:#})");
+    } else {
+        println!("  wrote BENCH_facility.json");
+    }
 }

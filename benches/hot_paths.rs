@@ -45,6 +45,17 @@ fn main() {
     let native = NativeBiGru::new(BiGruWeights::new(64, 12, flat.clone()).unwrap());
     b.run("classifier_native(2400 steps)", || native.probs(&x, n_steps).unwrap());
 
+    // Batched classifier: 16 lanes in lockstep (one rack) vs 16 sequential
+    // calls — the kernel-level view of the §Perf GEMV→GEMM win.
+    let lanes = 16usize;
+    let refs: Vec<&[f32]> = (0..lanes).map(|_| x.as_slice()).collect();
+    let mut arena = powertrace_sim::classifier::ScratchArena::new();
+    let mut batched_out = Vec::new();
+    b.run("classifier_native_batched(2400 × 16 lanes)", || {
+        native.probs_batch_into(&refs, n_steps, &mut arena, &mut batched_out).unwrap();
+        batched_out.len()
+    });
+
     // Sampling.
     let probs = native.probs(&x, n_steps).unwrap();
     b.run("sample_states+power(2400)", || {

@@ -4,22 +4,31 @@
 //!
 //! Also measures the shared-prepare effect directly: `Generator::prepare`
 //! on a warm cache must be effectively free, which is what lets a grid of
-//! N cells avoid N artifact loads + classifier builds.
+//! N cells avoid N artifact loads + classifier builds. Cell throughput is
+//! recorded to `BENCH_facility.json` (servers/sec across the whole grid)
+//! alongside the facility-generation entries.
 
-use powertrace_sim::benchutil::{section, Bench};
+use powertrace_sim::benchutil::{section, write_bench_json, Bench, BenchEntry};
 use powertrace_sim::coordinator::Generator;
 use powertrace_sim::scenarios::{run_sweep, SweepGrid, SweepOptions};
+use powertrace_sim::testutil::synth_generator;
+use std::path::Path;
+use std::time::Duration;
 
 fn main() {
     section("sweep: multi-scenario throughput (shared artifacts)");
-    let mut gen = match Generator::pjrt().or_else(|_| Generator::native()) {
-        Ok(g) => g,
-        Err(e) => {
-            println!("skipped (artifacts not built?): {e:#}");
-            return;
+    let (mut gen, ids) = match Generator::pjrt().or_else(|_| Generator::native()) {
+        Ok(g) => {
+            let ids = g.store.manifest.configs.clone();
+            (g, ids)
+        }
+        Err(_) => {
+            println!("  (no artifact store; using a synthetic random-weight store, H=64 K=12)");
+            let (g, ids) =
+                synth_generator("bench_sweep", 64, 12, 2, 101).expect("synthetic artifact store");
+            (g, ids)
         }
     };
-    let ids = gen.store.manifest.configs.clone();
     if ids.is_empty() {
         println!("skipped (artifact manifest lists no configs)");
         return;
@@ -27,14 +36,26 @@ fn main() {
     // 8 cells × 4 servers × 2 min @250ms — small enough to iterate.
     let grid = SweepGrid::example("bench", &ids, 120.0);
     let n_cells = grid.n_cells();
+    let total_servers: usize = grid.expand().iter().map(|c| c.spec.topology.n_servers()).sum();
 
-    let b = Bench { budget: std::time::Duration::from_secs(6), max_iters: 5 };
+    let b = Bench::budgeted(Duration::from_secs(6), 5);
     let opts = SweepOptions::default();
-    let r = b.run(&format!("run_sweep({n_cells} cells × 8 servers × 2min)"), || {
+    let r = b.run(&format!("run_sweep({n_cells} cells, {total_servers} servers)"), || {
         run_sweep(&mut gen, &grid, &opts).unwrap().cells.len()
     });
     let per_cell = r.mean.as_secs_f64() / n_cells as f64;
-    println!("  → {:.3} s/cell ({:.1} cells/s)", per_cell, 1.0 / per_cell.max(1e-9));
+    println!(
+        "  → {:.3} s/cell ({:.1} cells/s, {:.1} servers/s across the grid)",
+        per_cell,
+        1.0 / per_cell.max(1e-9),
+        total_servers as f64 / r.mean.as_secs_f64()
+    );
+    if let Err(e) = write_bench_json(
+        Path::new("BENCH_facility.json"),
+        &[BenchEntry::from_result("sweep_grid", &r, Some(total_servers as f64))],
+    ) {
+        println!("  (BENCH_facility.json not written: {e:#})");
+    }
 
     // Warm-cache prepare: the per-config state the sweep shares.
     let id = ids[0].clone();

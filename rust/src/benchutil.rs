@@ -4,7 +4,15 @@
 //! Provides warmup, adaptive iteration counts, and mean/p50/p95 reporting in
 //! a stable text format that EXPERIMENTS.md quotes. Benches are built with
 //! `harness = false` and call [`Bench::run`] per case.
+//!
+//! Throughput-tracking benches additionally emit machine-readable entries
+//! into `BENCH_facility.json` via [`write_bench_json`], so the perf
+//! trajectory (servers/sec, sequential vs batched) is comparable across
+//! PRs and CI runs.
 
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 pub struct BenchResult {
@@ -32,12 +40,15 @@ pub struct Bench {
     pub max_iters: usize,
 }
 
+/// `cargo bench -- --fast` or POWERTRACE_BENCH_FAST=1 shrink budgets
+/// (used by the CI bench-smoke job and the final log capture).
+pub fn fast_mode() -> bool {
+    std::env::var("POWERTRACE_BENCH_FAST").is_ok() || std::env::args().any(|a| a == "--fast")
+}
+
 impl Default for Bench {
     fn default() -> Self {
-        // `cargo bench -- --fast` or POWERTRACE_BENCH_FAST=1 shrink budgets
-        // (used in CI / the final log capture).
-        let fast = std::env::var("POWERTRACE_BENCH_FAST").is_ok()
-            || std::env::args().any(|a| a == "--fast");
+        let fast = fast_mode();
         Bench {
             budget: if fast { Duration::from_millis(300) } else { Duration::from_secs(2) },
             max_iters: if fast { 20 } else { 200 },
@@ -46,6 +57,18 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// A bench with an explicit full-speed budget that still collapses to a
+    /// single-iteration smoke run under [`fast_mode`] — heavyweight benches
+    /// should construct through this so `cargo bench` can't bit-rot in CI
+    /// without costing CI minutes.
+    pub fn budgeted(full_budget: Duration, max_iters: usize) -> Bench {
+        if fast_mode() {
+            Bench { budget: Duration::from_millis(200), max_iters: max_iters.min(2) }
+        } else {
+            Bench { budget: full_budget, max_iters }
+        }
+    }
+
     /// Measure `f`, which performs one logical iteration and returns a value
     /// that is black-boxed to prevent dead-code elimination.
     pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
@@ -83,6 +106,50 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One machine-readable throughput record for [`write_bench_json`].
+pub struct BenchEntry {
+    /// Stable bench-case key, e.g. `"facility_batched"`.
+    pub name: String,
+    /// Mean wall-clock seconds per iteration.
+    pub mean_s: f64,
+    /// Servers generated per wall-second, where meaningful.
+    pub servers_per_sec: Option<f64>,
+}
+
+impl BenchEntry {
+    /// Entry from a [`BenchResult`] plus the number of servers one
+    /// iteration generates.
+    pub fn from_result(name: &str, r: &BenchResult, servers_per_iter: Option<f64>) -> BenchEntry {
+        let mean_s = r.mean.as_secs_f64();
+        BenchEntry {
+            name: name.to_string(),
+            mean_s,
+            servers_per_sec: servers_per_iter.map(|n| if mean_s > 0.0 { n / mean_s } else { 0.0 }),
+        }
+    }
+}
+
+/// Merge throughput entries into a JSON report (`bench name → {mean_s,
+/// servers_per_sec}`). Existing entries from other bench binaries are
+/// preserved, so every bench target can contribute to one
+/// `BENCH_facility.json`.
+pub fn write_bench_json(path: &Path, entries: &[BenchEntry]) -> anyhow::Result<()> {
+    let mut root = match json::parse_file(path) {
+        Ok(Json::Obj(o)) => o,
+        _ => BTreeMap::new(),
+    };
+    for e in entries {
+        let mut o = BTreeMap::new();
+        o.insert("mean_s".to_string(), Json::Num(e.mean_s));
+        if let Some(sps) = e.servers_per_sec {
+            o.insert("servers_per_sec".to_string(), Json::Num(sps));
+        }
+        root.insert(e.name.clone(), Json::Obj(o));
+    }
+    json::write_file(path, &Json::Obj(root))?;
+    Ok(())
+}
+
 /// Print a bench section header.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
@@ -99,5 +166,43 @@ mod tests {
         assert!(r.iters >= 1 && r.iters <= 10);
         assert!(r.p50 <= r.p95);
         assert!(r.min <= r.mean * 2);
+    }
+
+    #[test]
+    fn bench_json_merges_entries_across_writes() {
+        let dir = std::env::temp_dir().join("powertrace_test_benchjson");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_facility.json");
+        let _ = std::fs::remove_file(&path);
+        write_bench_json(
+            &path,
+            &[BenchEntry { name: "a".into(), mean_s: 1.5, servers_per_sec: Some(8.0) }],
+        )
+        .unwrap();
+        write_bench_json(
+            &path,
+            &[BenchEntry { name: "b".into(), mean_s: 0.5, servers_per_sec: None }],
+        )
+        .unwrap();
+        let v = json::parse_file(&path).unwrap();
+        assert_eq!(v.get("a").unwrap().f64_field("mean_s").unwrap(), 1.5);
+        assert_eq!(v.get("a").unwrap().f64_field("servers_per_sec").unwrap(), 8.0);
+        assert_eq!(v.get("b").unwrap().f64_field("mean_s").unwrap(), 0.5);
+        assert!(v.get("b").unwrap().get_opt("servers_per_sec").is_none());
+    }
+
+    #[test]
+    fn entry_from_result_computes_rate() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_millis(500),
+            p50: Duration::from_millis(500),
+            p95: Duration::from_millis(500),
+            min: Duration::from_millis(500),
+        };
+        let e = BenchEntry::from_result("x", &r, Some(16.0));
+        assert!((e.mean_s - 0.5).abs() < 1e-12);
+        assert!((e.servers_per_sec.unwrap() - 32.0).abs() < 1e-9);
     }
 }

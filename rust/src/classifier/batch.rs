@@ -1,0 +1,548 @@
+//! Rack-batched BiGRU inference (§Perf — batched execution model).
+//!
+//! [`NativeBiGru::probs_batch_tiled`] scans B independent, equal-length
+//! server sequences in lockstep: each timestep's recurrent update becomes a
+//! `[3H, H] × [H, B]` GEMM whose inner loops are vectorized over the lane
+//! dimension, so every weight load is amortized across B servers instead of
+//! one. The head projection + softmax are fused into the forward sweep and
+//! emitted tile-by-tile through a sink callback, so facility generation can
+//! sample states as posteriors stream out without materializing the full
+//! `[T, B, K]` tensor.
+//!
+//! ## Bit-identity contract
+//!
+//! Batching is only admissible in the facility pipeline because it is
+//! **bit-identical** to the sequential path (the rack-granular
+//! deterministic fold relies on byte-stable per-server traces). Every lane
+//! therefore reproduces the sequential accumulation order exactly:
+//!
+//! * recurrent/head dot products keep 8 independent partial sums over
+//!   `H`-chunks of 8, folded left-to-right from 0.0, then the remainder in
+//!   order — the same schedule as the sequential `native::dot`;
+//! * gate and state updates evaluate the same scalar expressions per lane;
+//! * the head logit is `(b + dot_fwd) + dot_bwd`, as in the sequential
+//!   head loop.
+//!
+//! ## Memory: tiled backward scan
+//!
+//! A naive batched BiGRU stores `[T, H, B]` backward hidden states — 1.4 GB
+//! per worker for a 24 h × 250 ms horizon at B = 16. Instead the backward
+//! direction runs twice: a checkpoint pass that only records the carry
+//! state at tile boundaries (`[T/tile, H, B]`), then a forward pass that
+//! recomputes each tile's backward states from its checkpoint
+//! (`[tile, H, B]` resident) and immediately consumes them in the fused
+//! forward+head sweep. Recomputation costs ≤ 0.5× extra scan FLOPs and
+//! bounds scratch to O(tile · H · B); sequences within one tile skip the
+//! checkpoint pass entirely. Both tilings are bit-identical because carried
+//! states are exact.
+
+use super::native::{resize, sigmoid, softmax_into, NativeBiGru, PackedDir};
+use super::scale_features;
+use anyhow::{ensure, Result};
+
+/// Default time-tile length for the batched scan: horizons up to ~17 min at
+/// 250 ms run un-tiled; longer horizons stay cache-resident per tile.
+pub const BATCH_TILE: usize = 4096;
+
+/// Reusable scratch for classifier execution — one per worker thread.
+///
+/// Every buffer the sequential ([`NativeBiGru::probs_into`]) and batched
+/// ([`NativeBiGru::probs_batch_tiled`]) paths need lives here, so steady-
+/// state inference performs no heap allocation: buffers are `resize`d (a
+/// no-op once warm) and overwritten.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    /// Scaled features: `[T, 2]` (sequential) or `[tile, 2, B]` (batched).
+    pub(crate) xs: Vec<f32>,
+    /// Sequential per-direction hidden-state history `[T, H]`.
+    pub(crate) h_fwd: Vec<f32>,
+    pub(crate) h_bwd: Vec<f32>,
+    /// Carry state: `[H]` (sequential) or `[H, B]` lane-major (batched fwd).
+    pub(crate) hidden: Vec<f32>,
+    /// Batched backward carry `[H, B]`.
+    pub(crate) hidden_b: Vec<f32>,
+    /// Gate pre-activations: `[3H]` or `[3H, B]`.
+    pub(crate) gates_i: Vec<f32>,
+    pub(crate) gates_h: Vec<f32>,
+    /// Partial-sum slots for the batched GEMM, `[8, B]`.
+    pub(crate) acc: Vec<f32>,
+    /// Head logits: `[k_max]` (sequential) or `[k_max, B]` (batched).
+    pub(crate) logits: Vec<f32>,
+    /// Per-lane head dot products, `[B]` each.
+    pub(crate) head_f: Vec<f32>,
+    pub(crate) head_b: Vec<f32>,
+    /// One lane's gathered logits, `[k_max]`.
+    pub(crate) logits_row: Vec<f32>,
+    /// Recomputed backward states for the current tile, `[tile, H, B]`.
+    pub(crate) bwd_tile: Vec<f32>,
+    /// Backward carry at each tile boundary, `[n_tiles, H, B]`.
+    pub(crate) checkpoints: Vec<f32>,
+    /// Posterior tile handed to the sink, `[tile, B, k_max]`.
+    pub(crate) probs_tile: Vec<f32>,
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+}
+
+impl NativeBiGru {
+    /// Batched posteriors for `B = features.len()` equal-length sequences,
+    /// written as `[T, B, k_max]` (time-major, lane, then state — each
+    /// `(t, lane)` posterior row is contiguous). Bit-identical per lane to
+    /// [`StateClassifier::probs`](super::StateClassifier::probs) on that
+    /// lane's features.
+    pub fn probs_batch_into(
+        &self,
+        features: &[&[f32]],
+        t_len: usize,
+        scratch: &mut ScratchArena,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let b = features.len();
+        let k = self.weights.k_max;
+        out.clear();
+        out.resize(t_len * b * k, 0.0);
+        self.probs_batch_tiled(features, t_len, BATCH_TILE, scratch, |t0, n, tile| {
+            out[t0 * b * k..(t0 + n) * b * k].copy_from_slice(tile);
+            Ok(())
+        })
+    }
+
+    /// Streaming batched inference: posteriors are produced in time tiles of
+    /// up to `tile` steps and handed to `sink(t0, n_rows, tile_probs)` where
+    /// `tile_probs` is `[n_rows, B, k_max]` covering timesteps
+    /// `t0 .. t0 + n_rows`. Tiles arrive in increasing-time order.
+    ///
+    /// The tile length only bounds scratch memory — any `tile ≥ 1` yields
+    /// bit-identical posteriors (checkpointed carries are exact).
+    pub fn probs_batch_tiled<F>(
+        &self,
+        features: &[&[f32]],
+        t_len: usize,
+        tile: usize,
+        scratch: &mut ScratchArena,
+        mut sink: F,
+    ) -> Result<()>
+    where
+        F: FnMut(usize, usize, &[f32]) -> Result<()>,
+    {
+        let b = features.len();
+        if b == 0 || t_len == 0 {
+            return Ok(());
+        }
+        for (lane, f) in features.iter().enumerate() {
+            ensure!(
+                f.len() == 2 * t_len,
+                "lane {lane}: features length {} != 2·{t_len}",
+                f.len()
+            );
+        }
+        let pw = &self.packed;
+        let (h, k) = (pw.h, pw.k_max);
+        let tile = tile.max(1).min(t_len);
+        let n_tiles = (t_len + tile - 1) / tile;
+
+        let ScratchArena {
+            xs,
+            hidden,
+            hidden_b,
+            gates_i,
+            gates_h,
+            acc,
+            logits,
+            head_f,
+            head_b,
+            logits_row,
+            bwd_tile,
+            checkpoints,
+            probs_tile,
+            ..
+        } = scratch;
+        resize(xs, tile * 2 * b);
+        resize(hidden, h * b);
+        resize(hidden_b, h * b);
+        resize(gates_i, 3 * h * b);
+        resize(gates_h, 3 * h * b);
+        resize(acc, 8 * b);
+        resize(logits, k * b);
+        resize(head_f, b);
+        resize(head_b, b);
+        resize(logits_row, k);
+        resize(bwd_tile, tile * h * b);
+        resize(checkpoints, n_tiles * h * b);
+        resize(probs_tile, tile * b * k);
+
+        // Pass 1 (backward checkpoint sweep): scan right-to-left recording
+        // the carry entering each tile. A single-tile sequence skips the
+        // sweep — its only checkpoint is the zero initial state (set
+        // explicitly: `resize` does not promise cleared contents).
+        if n_tiles == 1 {
+            checkpoints.fill(0.0);
+        } else {
+            hidden_b.fill(0.0);
+            for ti in (0..n_tiles).rev() {
+                let t0 = ti * tile;
+                let n = (t_len - t0).min(tile);
+                checkpoints[ti * h * b..(ti + 1) * h * b].copy_from_slice(hidden_b);
+                scale_tile(features, t0, n, b, xs);
+                for rel in (0..n).rev() {
+                    let x0 = &xs[(rel * 2) * b..(rel * 2 + 1) * b];
+                    let x1 = &xs[(rel * 2 + 1) * b..(rel * 2 + 2) * b];
+                    step_lanes(&pw.dirs[1], h, b, x0, x1, gates_i, gates_h, acc, hidden_b);
+                }
+            }
+        }
+        let checkpoints = &*checkpoints;
+
+        // Pass 2: per tile (left-to-right) recompute the backward states
+        // from the checkpoint, then run the fused forward + head + softmax
+        // sweep and hand the posterior tile to the sink.
+        hidden.fill(0.0);
+        for ti in 0..n_tiles {
+            let t0 = ti * tile;
+            let n = (t_len - t0).min(tile);
+            scale_tile(features, t0, n, b, xs);
+            hidden_b.copy_from_slice(&checkpoints[ti * h * b..(ti + 1) * h * b]);
+            for rel in (0..n).rev() {
+                let x0 = &xs[(rel * 2) * b..(rel * 2 + 1) * b];
+                let x1 = &xs[(rel * 2 + 1) * b..(rel * 2 + 2) * b];
+                step_lanes(&pw.dirs[1], h, b, x0, x1, gates_i, gates_h, acc, hidden_b);
+                bwd_tile[rel * h * b..(rel + 1) * h * b].copy_from_slice(hidden_b);
+            }
+            for rel in 0..n {
+                let x0 = &xs[(rel * 2) * b..(rel * 2 + 1) * b];
+                let x1 = &xs[(rel * 2 + 1) * b..(rel * 2 + 2) * b];
+                step_lanes(&pw.dirs[0], h, b, x0, x1, gates_i, gates_h, acc, hidden);
+                let hb = &bwd_tile[rel * h * b..(rel + 1) * h * b];
+                // Fused head: logits[j, lane] = (b_j + dot_fwd) + dot_bwd.
+                for j in 0..k {
+                    let row = &pw.w_head[j * 2 * h..(j + 1) * 2 * h];
+                    dot_lanes(&row[..h], hidden, b, acc, head_f);
+                    dot_lanes(&row[h..], hb, b, acc, head_b);
+                    let bj = pw.b_head[j];
+                    let lrow = &mut logits[j * b..(j + 1) * b];
+                    for lane in 0..b {
+                        lrow[lane] = bj + head_f[lane] + head_b[lane];
+                    }
+                }
+                for lane in 0..b {
+                    for (j, l) in logits_row.iter_mut().enumerate() {
+                        *l = logits[j * b + lane];
+                    }
+                    let o = &mut probs_tile[(rel * b + lane) * k..(rel * b + lane + 1) * k];
+                    softmax_into(logits_row, o);
+                }
+            }
+            sink(t0, n, &probs_tile[..n * b * k])?;
+        }
+        Ok(())
+    }
+}
+
+/// Scale `(A, ΔA)` features for timesteps `t0 .. t0+n` into lane-major
+/// `[n, 2, B]` (row `2·rel` = x0 over lanes, row `2·rel+1` = x1).
+fn scale_tile(features: &[&[f32]], t0: usize, n: usize, b: usize, xs: &mut [f32]) {
+    for rel in 0..n {
+        let t = t0 + rel;
+        for (lane, f) in features.iter().enumerate() {
+            let (fa, fda) = scale_features(f[2 * t], f[2 * t + 1]);
+            xs[(rel * 2) * b + lane] = fa;
+            xs[(rel * 2 + 1) * b + lane] = fda;
+        }
+    }
+}
+
+/// One batched GRU step for one direction: input gates, recurrent GEMM,
+/// then the elementwise state update — all lane-major over `B`.
+#[inline]
+fn step_lanes(
+    d: &PackedDir,
+    h: usize,
+    b: usize,
+    x0: &[f32],
+    x1: &[f32],
+    gates_i: &mut [f32],
+    gates_h: &mut [f32],
+    acc: &mut [f32],
+    hid: &mut [f32],
+) {
+    // gates_i[j, lane] = (w_x0[j]·x0 + w_x1[j]·x1) + b_ih[j]
+    for j in 0..3 * h {
+        let (w0, w1, bj) = (d.w_x0[j], d.w_x1[j], d.b_ih[j]);
+        let orow = &mut gates_i[j * b..(j + 1) * b];
+        for (o, (&a0, &a1)) in orow.iter_mut().zip(x0.iter().zip(x1)) {
+            *o = w0 * a0 + w1 * a1 + bj;
+        }
+    }
+    gemm_3h_lanes(&d.w_hh, &d.b_hh, hid, h, b, acc, gates_h);
+    for j in 0..h {
+        let gi_r = &gates_i[j * b..(j + 1) * b];
+        let gi_z = &gates_i[(h + j) * b..(h + j + 1) * b];
+        let gi_n = &gates_i[(2 * h + j) * b..(2 * h + j + 1) * b];
+        let gh_r = &gates_h[j * b..(j + 1) * b];
+        let gh_z = &gates_h[(h + j) * b..(h + j + 1) * b];
+        let gh_n = &gates_h[(2 * h + j) * b..(2 * h + j + 1) * b];
+        let hrow = &mut hid[j * b..(j + 1) * b];
+        for lane in 0..b {
+            let r = sigmoid(gi_r[lane] + gh_r[lane]);
+            let z = sigmoid(gi_z[lane] + gh_z[lane]);
+            let n = (gi_n[lane] + r * gh_n[lane]).tanh();
+            hrow[lane] = (1.0 - z) * n + z * hrow[lane];
+        }
+    }
+}
+
+/// Batched `out[j, lane] = dot(W_hh[j, :], hid[:, lane]) + b[j]` — the
+/// `[3H, H] × [H, B]` GEMM. Each lane's reduction replays the exact
+/// partial-sum schedule of the sequential `native::dot` (8 slots over
+/// chunks of 8, left fold from 0.0, remainder in order), so the result is
+/// bit-identical to the sequential GEMV while every weight element is
+/// loaded once per B lanes.
+fn gemm_3h_lanes(
+    w: &[f32],
+    bias: &[f32],
+    hid: &[f32],
+    h: usize,
+    b: usize,
+    acc: &mut [f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(acc.len(), 8 * b);
+    let nchunks = h / 8;
+    for j in 0..3 * h {
+        let row = &w[j * h..(j + 1) * h];
+        acc.fill(0.0);
+        for c in 0..nchunks {
+            for l in 0..8 {
+                let kk = 8 * c + l;
+                let wv = row[kk];
+                let hrow = &hid[kk * b..(kk + 1) * b];
+                let arow = &mut acc[l * b..(l + 1) * b];
+                for (a, &x) in arow.iter_mut().zip(hrow) {
+                    *a += wv * x;
+                }
+            }
+        }
+        let out_row = &mut out[j * b..(j + 1) * b];
+        fold_acc(acc, b, out_row);
+        for kk in 8 * nchunks..h {
+            let wv = row[kk];
+            let hrow = &hid[kk * b..(kk + 1) * b];
+            for (o, &x) in out_row.iter_mut().zip(hrow) {
+                *o += wv * x;
+            }
+        }
+        let bj = bias[j];
+        for o in out_row.iter_mut() {
+            *o += bj;
+        }
+    }
+}
+
+/// Batched `out[lane] = dot(row, mat[:, lane])` with the same partial-sum
+/// schedule as `native::dot` (used for the two halves of the head
+/// projection).
+fn dot_lanes(row: &[f32], mat: &[f32], b: usize, acc: &mut [f32], out: &mut [f32]) {
+    let h = row.len();
+    let nchunks = h / 8;
+    acc.fill(0.0);
+    for c in 0..nchunks {
+        for l in 0..8 {
+            let kk = 8 * c + l;
+            let wv = row[kk];
+            let hrow = &mat[kk * b..(kk + 1) * b];
+            let arow = &mut acc[l * b..(l + 1) * b];
+            for (a, &x) in arow.iter_mut().zip(hrow) {
+                *a += wv * x;
+            }
+        }
+    }
+    fold_acc(acc, b, out);
+    for kk in 8 * nchunks..h {
+        let wv = row[kk];
+        let hrow = &mat[kk * b..(kk + 1) * b];
+        for (o, &x) in out.iter_mut().zip(hrow) {
+            *o += wv * x;
+        }
+    }
+}
+
+/// `out[lane] = 0.0 + acc[0, lane] + … + acc[7, lane]` — the lane-wise
+/// equivalent of `acc.iter().sum::<f32>()` in `native::dot` (including the
+/// 0.0 start, which matters for signed-zero bit-identity).
+#[inline]
+fn fold_acc(acc: &[f32], b: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for l in 0..8 {
+        let arow = &acc[l * b..(l + 1) * b];
+        for (o, &a) in out.iter_mut().zip(arow) {
+            *o += a;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::native::tests::{random_features, random_weights, random_weights_hk};
+    use crate::classifier::{StateClassifier, K_MAX};
+
+    fn model_hk(h: usize, k: usize, seed: u64) -> NativeBiGru {
+        NativeBiGru::new(random_weights_hk(h, k, seed))
+    }
+
+    /// Assert `probs_batch_tiled` output equals per-lane sequential `probs`
+    /// bit-for-bit.
+    fn assert_lane_parity(model: &NativeBiGru, b: usize, t_len: usize, tile: usize, seed: u64) {
+        let k = model.k_max();
+        let feats: Vec<Vec<f32>> =
+            (0..b).map(|lane| random_features(t_len, seed + 31 * lane as u64)).collect();
+        let refs: Vec<&[f32]> = feats.iter().map(|f| f.as_slice()).collect();
+        let mut scratch = ScratchArena::new();
+        let mut batched = vec![0.0f32; t_len * b * k];
+        model
+            .probs_batch_tiled(&refs, t_len, tile, &mut scratch, |t0, n, tp| {
+                batched[t0 * b * k..(t0 + n) * b * k].copy_from_slice(tp);
+                Ok(())
+            })
+            .unwrap();
+        for (lane, f) in feats.iter().enumerate() {
+            let seq = model.probs(f, t_len).unwrap();
+            for t in 0..t_len {
+                for j in 0..k {
+                    let x = batched[(t * b + lane) * k + j];
+                    let y = seq[t * k + j];
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "lane {lane} t {t} state {j}: batched {x} != sequential {y} \
+                         (B={b}, T={t_len}, tile={tile})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parity_across_batch_and_sequence_sizes() {
+        // Ragged batch widths (1, 3, 5, 8 — including non-multiples of any
+        // SIMD lane width) × short/medium sequences, un-tiled.
+        let model = model_hk(16, 5, 41);
+        for &b in &[1usize, 3, 5, 8] {
+            for &t in &[1usize, 7, 300] {
+                assert_lane_parity(&model, b, t, BATCH_TILE, 1000 + (b * 7 + t) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn parity_under_time_tiling() {
+        // tile=64 over T=300 exercises checkpoints, recompute, and a ragged
+        // final tile (300 = 4×64 + 44); tile=1 is the degenerate extreme.
+        let model = model_hk(16, 5, 42);
+        assert_lane_parity(&model, 4, 300, 64, 2000);
+        assert_lane_parity(&model, 3, 7, 1, 2001);
+    }
+
+    #[test]
+    fn parity_at_production_geometry() {
+        // Full H=64, K=12 geometry, H not a multiple-of-8 edge covered next.
+        let model = NativeBiGru::new(random_weights(43));
+        assert_lane_parity(&model, 3, 50, BATCH_TILE, 3000);
+    }
+
+    #[test]
+    fn parity_with_remainder_hidden_size() {
+        // H=13 forces the non-multiple-of-8 remainder loop in the GEMM.
+        let model = model_hk(13, 4, 44);
+        assert_lane_parity(&model, 5, 40, 16, 4000);
+    }
+
+    #[test]
+    fn trait_probs_batch_matches_tiled_path() {
+        let model = model_hk(16, 5, 45);
+        let (b, t) = (4usize, 90usize);
+        let feats: Vec<Vec<f32>> = (0..b).map(|l| random_features(t, 5000 + l as u64)).collect();
+        let refs: Vec<&[f32]> = feats.iter().map(|f| f.as_slice()).collect();
+        let via_trait = StateClassifier::probs_batch(&model, &refs, t).unwrap();
+        let mut scratch = ScratchArena::new();
+        let mut via_into = Vec::new();
+        model.probs_batch_into(&refs, t, &mut scratch, &mut via_into).unwrap();
+        assert_eq!(via_trait, via_into);
+        assert_eq!(via_trait.len(), t * b * model.k_max());
+    }
+
+    #[test]
+    fn tiles_arrive_in_order_and_cover_sequence() {
+        let model = model_hk(8, 3, 46);
+        let t_len = 100;
+        let feats = [random_features(t_len, 6000)];
+        let refs: Vec<&[f32]> = feats.iter().map(|f| f.as_slice()).collect();
+        let mut scratch = ScratchArena::new();
+        let mut next_t0 = 0usize;
+        model
+            .probs_batch_tiled(&refs, t_len, 32, &mut scratch, |t0, n, tp| {
+                assert_eq!(t0, next_t0);
+                assert_eq!(tp.len(), n * model.k_max());
+                next_t0 = t0 + n;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(next_t0, t_len);
+    }
+
+    #[test]
+    fn arena_reuse_across_tilings_stays_bit_identical() {
+        // A multi-tile call followed by a single-tile call on the SAME
+        // arena: the single-tile path must not read stale checkpoint
+        // carries left by the previous run.
+        let model = model_hk(8, 3, 49);
+        let k = model.k_max();
+        let mut scratch = ScratchArena::new();
+        let long: Vec<Vec<f32>> = (0..3).map(|l| random_features(200, 8000 + l as u64)).collect();
+        let refs_long: Vec<&[f32]> = long.iter().map(|f| f.as_slice()).collect();
+        model.probs_batch_tiled(&refs_long, 200, 32, &mut scratch, |_, _, _| Ok(())).unwrap();
+        let short: Vec<Vec<f32>> = (0..3).map(|l| random_features(20, 8100 + l as u64)).collect();
+        let refs_short: Vec<&[f32]> = short.iter().map(|f| f.as_slice()).collect();
+        let mut out = Vec::new();
+        model.probs_batch_into(&refs_short, 20, &mut scratch, &mut out).unwrap();
+        for (lane, f) in short.iter().enumerate() {
+            let seq = model.probs(f, 20).unwrap();
+            for t in 0..20 {
+                for j in 0..k {
+                    assert_eq!(
+                        out[(t * 3 + lane) * k + j].to_bits(),
+                        seq[t * k + j].to_bits(),
+                        "lane {lane} t {t} state {j} after arena reuse"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_bad_lengths() {
+        let model = model_hk(8, 3, 47);
+        let mut scratch = ScratchArena::new();
+        let mut out = vec![1.0f32; 3];
+        model.probs_batch_into(&[], 10, &mut scratch, &mut out).unwrap();
+        assert!(out.is_empty());
+        let short = vec![0.0f32; 4];
+        let refs: Vec<&[f32]> = vec![&short];
+        assert!(model.probs_batch_into(&refs, 10, &mut scratch, &mut out).is_err());
+    }
+
+    #[test]
+    fn batched_rows_are_normalized() {
+        let model = NativeBiGru::new(random_weights(48));
+        let feats: Vec<Vec<f32>> = (0..5).map(|l| random_features(20, 7000 + l)).collect();
+        let refs: Vec<&[f32]> = feats.iter().map(|f| f.as_slice()).collect();
+        let p = StateClassifier::probs_batch(&model, &refs, 20).unwrap();
+        for row in p.chunks(K_MAX) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row sums to {s}");
+        }
+    }
+}

@@ -12,10 +12,12 @@
 //! Both consume the same flat parameter vector (layout in DESIGN.md §6)
 //! and the same chunking scheme ([`chunk`]) for long traces.
 
+pub mod batch;
 pub mod chunk;
 pub mod native;
 pub mod pjrt;
 
+pub use batch::{ScratchArena, BATCH_TILE};
 pub use chunk::{ChunkSpec, Chunked};
 pub use native::{BiGruWeights, NativeBiGru};
 pub use pjrt::PjrtClassifier;
@@ -52,6 +54,41 @@ pub trait StateClassifier {
     fn k_max(&self) -> usize;
     /// `features.len() == 2 * t`.
     fn probs(&self, features: &[f32], t: usize) -> Result<Vec<f32>>;
+
+    /// Batched inference over `B = features.len()` equal-length sequences
+    /// (each `features[lane].len() == 2 * t`), returning posteriors in
+    /// lane-major rows `[T, B, k_max]`: the `(t, lane)` posterior occupies
+    /// `out[(t*B + lane)*k_max ..][..k_max]`.
+    ///
+    /// The contract (which [`native::NativeBiGru`] exploits with a real
+    /// rack-batched GEMM engine, see [`batch`]) is that the output is
+    /// **bit-identical** to calling [`StateClassifier::probs`] once per
+    /// lane; this default implementation does exactly that.
+    fn probs_batch(&self, features: &[&[f32]], t: usize) -> Result<Vec<f32>> {
+        probs_batch_via_sequential(self, features, t)
+    }
+}
+
+/// The reference batched implementation: one sequential [`StateClassifier::probs`]
+/// call per lane, interleaved into `[T, B, k_max]` lane-major rows. Used as
+/// the trait default and as the fallback for backends without a native
+/// batched engine (e.g. the fixed-shape PJRT artifact).
+pub fn probs_batch_via_sequential<C: StateClassifier + ?Sized>(
+    cls: &C,
+    features: &[&[f32]],
+    t: usize,
+) -> Result<Vec<f32>> {
+    let b = features.len();
+    let k = cls.k_max();
+    let mut out = vec![0.0f32; t * b * k];
+    for (lane, f) in features.iter().enumerate() {
+        let p = cls.probs(f, t)?;
+        for tt in 0..t {
+            out[(tt * b + lane) * k..(tt * b + lane + 1) * k]
+                .copy_from_slice(&p[tt * k..(tt + 1) * k]);
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

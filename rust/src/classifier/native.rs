@@ -10,7 +10,18 @@
 //! ```
 //! The head is a linear layer over the concatenated [fwd, bwd] hidden
 //! state followed by softmax over `k_max` logits.
+//!
+//! Two execution paths share the packed parameter blocks built once in
+//! [`NativeBiGru::new`]:
+//!
+//! * the sequential path here ([`NativeBiGru::probs_into`], one server at a
+//!   time, all scratch supplied by a reusable [`ScratchArena`]);
+//! * the rack-batched path in [`super::batch`]
+//!   ([`NativeBiGru::probs_batch_into`]) that scans B servers in lockstep
+//!   and is **bit-identical** per lane to this sequential path (see the
+//!   accumulation-order contract on the private `dot` helper).
 
+use super::batch::ScratchArena;
 use super::{scale_features, StateClassifier};
 use anyhow::{ensure, Result};
 
@@ -22,7 +33,39 @@ pub struct BiGruWeights {
     pub flat: Vec<f32>,
 }
 
-/// Borrowed views into one direction's parameter block.
+/// One direction's parameter block, repacked for the scan loops: the tiny
+/// `W_ih [3H, 2]` is transposed into its two columns (so the input-gate
+/// update is two broadcast FMAs), and the recurrent block is a contiguous
+/// row-major copy so neither path recomputes flat-vector offsets per step.
+#[derive(Debug, Clone)]
+pub(crate) struct PackedDir {
+    /// Column 0 of `W_ih` (the `A_t` feature), `[3H]`.
+    pub(crate) w_x0: Vec<f32>,
+    /// Column 1 of `W_ih` (the `ΔA_t` feature), `[3H]`.
+    pub(crate) w_x1: Vec<f32>,
+    pub(crate) b_ih: Vec<f32>,
+    /// `W_hh` row-major `[3H, H]`. Kept row-major deliberately: the
+    /// bit-identity contract fixes the dot-product accumulation order along
+    /// H (see [`dot`]), which a column-major transpose would re-associate.
+    pub(crate) w_hh: Vec<f32>,
+    pub(crate) b_hh: Vec<f32>,
+}
+
+/// All parameters repacked for execution, built once per configuration and
+/// cached (via the classifier held on `coordinator::PreparedConfig`) for
+/// every subsequent `probs` / `probs_batch` call.
+#[derive(Debug, Clone)]
+pub(crate) struct PackedWeights {
+    pub(crate) h: usize,
+    pub(crate) k_max: usize,
+    /// `[forward, backward]` direction blocks.
+    pub(crate) dirs: [PackedDir; 2],
+    /// Head weights `[k_max, 2H]` row-major (fwd half then bwd half).
+    pub(crate) w_head: Vec<f32>,
+    pub(crate) b_head: Vec<f32>,
+}
+
+/// Borrowed views into one direction's parameter block of the flat vector.
 struct DirView<'a> {
     w_ih: &'a [f32], // [3H, 2] row-major
     b_ih: &'a [f32], // [3H]
@@ -64,50 +107,128 @@ impl BiGruWeights {
         let b = &self.flat[base + self.k_max * 2 * h..];
         (w, b)
     }
+
+    fn pack(&self) -> PackedWeights {
+        let pack_dir = |v: &DirView<'_>| PackedDir {
+            w_x0: (0..3 * self.h).map(|j| v.w_ih[2 * j]).collect(),
+            w_x1: (0..3 * self.h).map(|j| v.w_ih[2 * j + 1]).collect(),
+            b_ih: v.b_ih.to_vec(),
+            w_hh: v.w_hh.to_vec(),
+            b_hh: v.b_hh.to_vec(),
+        };
+        let (w_head, b_head) = self.head();
+        PackedWeights {
+            h: self.h,
+            k_max: self.k_max,
+            dirs: [pack_dir(&self.dir(0)), pack_dir(&self.dir(1))],
+            w_head: w_head.to_vec(),
+            b_head: b_head.to_vec(),
+        }
+    }
 }
 
 /// Native backend.
 #[derive(Debug, Clone)]
 pub struct NativeBiGru {
     pub weights: BiGruWeights,
+    pub(crate) packed: PackedWeights,
 }
 
 impl NativeBiGru {
     pub fn new(weights: BiGruWeights) -> NativeBiGru {
-        NativeBiGru { weights }
+        let packed = weights.pack();
+        NativeBiGru { weights, packed }
     }
 
     /// Run one direction over scaled features, writing hidden states into
     /// `hs` (row t = h_t, length T*H). `reverse` scans right-to-left.
-    fn scan_direction(&self, xs: &[f32], t_len: usize, dir: usize, reverse: bool, hs: &mut [f32]) {
-        let h = self.weights.h;
-        let v = self.weights.dir(dir);
-        let mut hidden = vec![0.0f32; h];
-        let mut gates_i = vec![0.0f32; 3 * h];
-        let mut gates_h = vec![0.0f32; 3 * h];
-        let steps: Box<dyn Iterator<Item = usize>> = if reverse {
-            Box::new((0..t_len).rev())
-        } else {
-            Box::new(0..t_len)
-        };
-        for t in steps {
+    /// All scratch (`hidden`, `gates_i`, `gates_h`) is caller-supplied so
+    /// the scan performs zero allocations.
+    fn scan_direction(
+        &self,
+        xs: &[f32],
+        t_len: usize,
+        dir: usize,
+        reverse: bool,
+        hidden: &mut [f32],
+        gates_i: &mut [f32],
+        gates_h: &mut [f32],
+        hs: &mut [f32],
+    ) {
+        let h = self.packed.h;
+        let d = &self.packed.dirs[dir];
+        hidden.fill(0.0);
+        for i in 0..t_len {
+            let t = if reverse { t_len - 1 - i } else { i };
             let x0 = xs[2 * t];
             let x1 = xs[2 * t + 1];
             // gates_i = W_ih · x + b_ih  (input dim fixed at 2)
             for j in 0..3 * h {
-                gates_i[j] = v.w_ih[2 * j] * x0 + v.w_ih[2 * j + 1] * x1 + v.b_ih[j];
+                gates_i[j] = d.w_x0[j] * x0 + d.w_x1[j] * x1 + d.b_ih[j];
             }
             // gates_h = W_hh · h + b_hh
-            gemv_3h(v.w_hh, &hidden, v.b_hh, h, &mut gates_h);
+            gemv_3h(&d.w_hh, hidden, &d.b_hh, h, gates_h);
             for j in 0..h {
                 let r = sigmoid(gates_i[j] + gates_h[j]);
                 let z = sigmoid(gates_i[h + j] + gates_h[h + j]);
                 let n = (gates_i[2 * h + j] + r * gates_h[2 * h + j]).tanh();
                 hidden[j] = (1.0 - z) * n + z * hidden[j];
             }
-            hs[t * h..(t + 1) * h].copy_from_slice(&hidden);
+            hs[t * h..(t + 1) * h].copy_from_slice(hidden);
         }
     }
+
+    /// Sequential `probs` writing into a caller-owned output with all
+    /// intermediate buffers drawn from `scratch` — the zero-allocation form
+    /// the coordinator drives with one arena per worker thread.
+    pub fn probs_into(
+        &self,
+        features: &[f32],
+        t_len: usize,
+        scratch: &mut ScratchArena,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        ensure!(features.len() == 2 * t_len, "features length mismatch");
+        let h = self.packed.h;
+        let k = self.packed.k_max;
+        let ScratchArena { xs, h_fwd, h_bwd, hidden, gates_i, gates_h, logits, .. } = scratch;
+        resize(xs, 2 * t_len);
+        resize(h_fwd, t_len * h);
+        resize(h_bwd, t_len * h);
+        resize(hidden, h);
+        resize(gates_i, 3 * h);
+        resize(gates_h, 3 * h);
+        resize(logits, k);
+        // Feature transform (matches the JAX model exactly).
+        for t in 0..t_len {
+            let (fa, fda) = scale_features(features[2 * t], features[2 * t + 1]);
+            xs[2 * t] = fa;
+            xs[2 * t + 1] = fda;
+        }
+        self.scan_direction(xs, t_len, 0, false, hidden, gates_i, gates_h, h_fwd);
+        self.scan_direction(xs, t_len, 1, true, hidden, gates_i, gates_h, h_bwd);
+
+        let (w_head, b_head) = (&self.packed.w_head, &self.packed.b_head);
+        out.clear();
+        out.resize(t_len * k, 0.0);
+        for t in 0..t_len {
+            let hf = &h_fwd[t * h..(t + 1) * h];
+            let hb = &h_bwd[t * h..(t + 1) * h];
+            for (j, l) in logits.iter_mut().enumerate() {
+                let row = &w_head[j * 2 * h..(j + 1) * 2 * h];
+                *l = b_head[j] + dot(&row[..h], hf) + dot(&row[h..], hb);
+            }
+            softmax_into(logits, &mut out[t * k..(t + 1) * k]);
+        }
+        Ok(())
+    }
+}
+
+/// Set a scratch vector's length (contents need not be preserved).
+#[inline]
+pub(crate) fn resize(v: &mut Vec<f32>, n: usize) {
+    v.clear();
+    v.resize(n, 0.0);
 }
 
 /// out = W[3H, H] · h + b, row-major W.
@@ -123,8 +244,14 @@ fn gemv_3h(w: &[f32], hidden: &[f32], b: &[f32], h: usize, out: &mut [f32]) {
     }
 }
 
+/// Reference dot product: 8 independent partial sums over `chunks_exact(8)`
+/// folded left-to-right (starting from 0.0), then the remainder in order.
+///
+/// This accumulation order is a **contract**: the batched GEMM in
+/// [`super::batch`] reproduces it per lane so batched and sequential
+/// posteriors are bit-identical. Change one only with the other.
 #[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0.0f32; 8];
     let (ca, ra) = a.split_at(a.len() - a.len() % 8);
@@ -142,7 +269,7 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
 }
 
 #[inline]
-fn sigmoid(x: f32) -> f32 {
+pub(crate) fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
@@ -152,38 +279,21 @@ impl StateClassifier for NativeBiGru {
     }
 
     fn probs(&self, features: &[f32], t_len: usize) -> Result<Vec<f32>> {
-        ensure!(features.len() == 2 * t_len, "features length mismatch");
-        let h = self.weights.h;
-        let k = self.weights.k_max;
-        // Feature transform (matches the JAX model exactly).
-        let mut xs = vec![0.0f32; 2 * t_len];
-        for t in 0..t_len {
-            let (fa, fda) = scale_features(features[2 * t], features[2 * t + 1]);
-            xs[2 * t] = fa;
-            xs[2 * t + 1] = fda;
-        }
-        let mut h_fwd = vec![0.0f32; t_len * h];
-        let mut h_bwd = vec![0.0f32; t_len * h];
-        self.scan_direction(&xs, t_len, 0, false, &mut h_fwd);
-        self.scan_direction(&xs, t_len, 1, true, &mut h_bwd);
+        let mut scratch = ScratchArena::new();
+        let mut out = Vec::new();
+        self.probs_into(features, t_len, &mut scratch, &mut out)?;
+        Ok(out)
+    }
 
-        let (w_head, b_head) = self.weights.head();
-        let mut out = vec![0.0f32; t_len * k];
-        let mut logits = vec![0.0f32; k];
-        for t in 0..t_len {
-            let hf = &h_fwd[t * h..(t + 1) * h];
-            let hb = &h_bwd[t * h..(t + 1) * h];
-            for (j, l) in logits.iter_mut().enumerate() {
-                let row = &w_head[j * 2 * h..(j + 1) * 2 * h];
-                *l = b_head[j] + dot(&row[..h], hf) + dot(&row[h..], hb);
-            }
-            softmax_into(&logits, &mut out[t * k..(t + 1) * k]);
-        }
+    fn probs_batch(&self, features: &[&[f32]], t_len: usize) -> Result<Vec<f32>> {
+        let mut scratch = ScratchArena::new();
+        let mut out = Vec::new();
+        self.probs_batch_into(features, t_len, &mut scratch, &mut out)?;
         Ok(out)
     }
 }
 
-fn softmax_into(logits: &[f32], out: &mut [f32]) {
+pub(crate) fn softmax_into(logits: &[f32], out: &mut [f32]) {
     let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let mut total = 0.0f32;
     for (o, &l) in out.iter_mut().zip(logits) {
@@ -204,10 +314,15 @@ pub(crate) mod tests {
 
     /// Random weights with sensible scale for tests.
     pub fn random_weights(seed: u64) -> BiGruWeights {
+        random_weights_hk(HIDDEN, K_MAX, seed)
+    }
+
+    /// Random weights for an arbitrary (hidden, k_max) geometry.
+    pub fn random_weights_hk(h: usize, k_max: usize, seed: u64) -> BiGruWeights {
         let mut rng = Rng::new(seed);
-        let n = flat_param_count(HIDDEN, K_MAX);
+        let n = flat_param_count(h, k_max);
         let flat: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.12) as f32).collect();
-        BiGruWeights::new(HIDDEN, K_MAX, flat).unwrap()
+        BiGruWeights::new(h, k_max, flat).unwrap()
     }
 
     /// Random feature sequence resembling real (A, ΔA) traces.
@@ -245,6 +360,18 @@ pub(crate) mod tests {
     }
 
     #[test]
+    fn probs_into_reuses_scratch_and_matches_probs() {
+        let model = NativeBiGru::new(random_weights(21));
+        let mut scratch = ScratchArena::new();
+        let mut out = Vec::new();
+        for (t_len, seed) in [(40usize, 22u64), (7, 23), (40, 24)] {
+            let xs = random_features(t_len, seed);
+            model.probs_into(&xs, t_len, &mut scratch, &mut out).unwrap();
+            assert_eq!(out, model.probs(&xs, t_len).unwrap(), "t_len {t_len}");
+        }
+    }
+
+    #[test]
     fn bidirectional_context_affects_early_timesteps() {
         // Changing only the last feature must change the first timestep's
         // posterior (the backward pass carries it) — a pure causal model
@@ -270,6 +397,26 @@ pub(crate) mod tests {
     }
 
     #[test]
+    fn packing_preserves_parameter_blocks() {
+        let w = random_weights_hk(3, 2, 31);
+        let packed = w.pack();
+        for d in 0..2 {
+            let v = w.dir(d);
+            let p = &packed.dirs[d];
+            for j in 0..3 * w.h {
+                assert_eq!(p.w_x0[j], v.w_ih[2 * j]);
+                assert_eq!(p.w_x1[j], v.w_ih[2 * j + 1]);
+            }
+            assert_eq!(p.b_ih, v.b_ih);
+            assert_eq!(p.w_hh, v.w_hh);
+            assert_eq!(p.b_hh, v.b_hh);
+        }
+        let (wh, bh) = w.head();
+        assert_eq!(packed.w_head, wh);
+        assert_eq!(packed.b_head, bh);
+    }
+
+    #[test]
     fn hand_computed_tiny_gru() {
         // H=1, K=1 analytic check. Layout per direction:
         // w_ih [3,2], b_ih [3], w_hh [3,1], b_hh [3]; head w [1,2], b [1].
@@ -287,7 +434,7 @@ pub(crate) mod tests {
         flat.extend([1.0, 0.0, 0.0]);
         assert_eq!(flat.len(), flat_param_count(h, k));
         let w = BiGruWeights::new(h, k, flat).unwrap();
-        let model = NativeBiGru { weights: w };
+        let model = NativeBiGru::new(w);
         // Single timestep, x = (A=64, dA=0) → scaled x0 = log1p(64)/2.
         let p = model.probs(&[64.0, 0.0], 1).unwrap();
         // K=1 → softmax is 1.0 regardless; instead check via hidden by
@@ -311,7 +458,7 @@ pub(crate) mod tests {
         flat.extend([1.0, 0.0, 0.0, 0.0]); // head w [2,2]: logit0 = h_fwd
         flat.extend([0.0, 0.0]); // head b
         assert_eq!(flat.len(), flat_param_count(h, k));
-        let model = NativeBiGru { weights: BiGruWeights::new(h, k, flat).unwrap() };
+        let model = NativeBiGru::new(BiGruWeights::new(h, k, flat).unwrap());
         let p = model.probs(&[64.0, 0.0], 1).unwrap();
         // x0 = log1p(64)/2; h_fwd = 0.5·tanh(x0); logits = [h_fwd, 0]
         let x0 = (65.0f32).ln() * 0.5;

@@ -66,6 +66,20 @@ pub enum AnyClassifier {
     Pjrt(PjrtClassifier),
 }
 
+impl AnyClassifier {
+    /// The native backend, if that is what this classifier wraps. The
+    /// coordinator uses this to route rack batches through the zero-alloc
+    /// batched engine ([`super::batch`]); the PJRT artifact has a fixed
+    /// `[T, 2]` input shape, so its batched path is the sequential
+    /// fallback until a batched HLO artifact is compiled.
+    pub fn as_native(&self) -> Option<&super::NativeBiGru> {
+        match self {
+            AnyClassifier::Native(c) => Some(c),
+            AnyClassifier::Pjrt(_) => None,
+        }
+    }
+}
+
 impl StateClassifier for AnyClassifier {
     fn k_max(&self) -> usize {
         match self {
@@ -78,6 +92,13 @@ impl StateClassifier for AnyClassifier {
         match self {
             AnyClassifier::Native(c) => c.probs(features, t),
             AnyClassifier::Pjrt(c) => c.probs(features, t),
+        }
+    }
+
+    fn probs_batch(&self, features: &[&[f32]], t: usize) -> Result<Vec<f32>> {
+        match self {
+            AnyClassifier::Native(c) => c.probs_batch(features, t),
+            AnyClassifier::Pjrt(c) => super::probs_batch_via_sequential(c, features, t),
         }
     }
 }

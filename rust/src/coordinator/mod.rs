@@ -9,7 +9,7 @@
 
 pub mod pipeline;
 
-pub use pipeline::{Generator, PreparedConfig, ServerTrace};
+pub use pipeline::{Generator, PreparedConfig, ServerTrace, WorkerScratch, DEFAULT_MAX_BATCH};
 
 use crate::aggregate::FacilityAccumulator;
 use crate::config::ScenarioSpec;

@@ -1,18 +1,34 @@
 //! Generation pipeline implementation.
+//!
+//! Facility generation runs rack-by-rack. Within a rack every server shares
+//! one serving configuration ([`crate::config::ServerAssignment`] is
+//! rack-granular), so on the native backend the rack's servers are scanned
+//! through the classifier **in lockstep** as one batched call
+//! (`NativeBiGru::probs_batch_tiled`, §Perf in docs/ARCHITECTURE.md):
+//! per-timestep matrix-vector products become `[3H, H] × [H, B]` GEMMs and
+//! every weight load is amortized over the rack. Because the batched engine
+//! is bit-identical per lane to the sequential path, the rack-granular
+//! deterministic fold (see [`Generator::facility_shared`]) is preserved:
+//! batched and sequential generation produce byte-identical facility
+//! traces for a given `(spec, seed)`.
+//!
+//! All per-server scratch (classifier arena, feature buffers, sampled
+//! states, power buffer) lives in one [`WorkerScratch`] per worker thread —
+//! steady-state generation performs no per-server heap allocation.
 
 use super::FacilityResult;
 use crate::aggregate::FacilityAccumulator;
 use crate::artifacts::{ArtifactStore, ConfigArtifact};
 use crate::catalog::Catalog;
+use crate::classifier::native::BiGruWeights;
 use crate::classifier::{
     pjrt::{AnyClassifier, PjrtBiGru},
-    NativeBiGru, StateClassifier,
+    NativeBiGru, ScratchArena, StateClassifier, BATCH_TILE,
 };
-use crate::classifier::native::BiGruWeights;
 use crate::config::{ScenarioSpec, WorkloadSpec};
 use crate::runtime::{Executable, Runtime};
-use crate::surrogate::{features_from_intervals, simulate_queue};
-use crate::synth::{sample_power, sample_states};
+use crate::surrogate::{features_interleaved_into, simulate_queue};
+use crate::synth::{sample_power, sample_power_into, sample_states_lane_into, sample_states_masked_into};
 use crate::util::rng::Rng;
 use crate::util::threadpool::{default_workers, parallel_fold};
 use crate::workload::{
@@ -20,7 +36,12 @@ use crate::workload::{
 };
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+/// Default cap on servers per batched classifier call. Racks wider than
+/// this are split into consecutive sub-batches (still in server order);
+/// bounded B keeps the lane-major working set L2-resident.
+pub const DEFAULT_MAX_BATCH: usize = 32;
 
 /// Which classifier backend the generator uses.
 pub enum Backend {
@@ -41,9 +62,44 @@ pub struct ServerTrace {
 /// A configuration ready for generation: its artifact plus a constructed
 /// classifier. Cached on the [`Generator`] so multi-scenario drivers (the
 /// sweep engine, repeated `facility` calls) never rebuild per-config state.
+/// For the native backend this includes the packed/transposed parameter
+/// blocks the scan kernels execute from — built once per configuration.
 pub struct PreparedConfig {
     pub art: Arc<ConfigArtifact>,
     pub cls: AnyClassifier,
+}
+
+/// Reusable per-worker scratch for trace generation: the classifier's
+/// [`ScratchArena`] plus the pipeline-side buffers (feature rows, sampled
+/// states, power) that the pre-batching code allocated fresh per server.
+#[derive(Default)]
+pub struct WorkerScratch {
+    /// Classifier scratch (shared by sequential and batched paths).
+    pub arena: ScratchArena,
+    /// Occupancy difference-array for feature building.
+    diff: Vec<i32>,
+    /// Interleaved `[T, 2]` features for the sequential path.
+    feats: Vec<f32>,
+    /// Sequential-path posterior buffer.
+    probs: Vec<f32>,
+    /// Sequential-path state buffer.
+    states: Vec<usize>,
+    /// Per-lane interleaved features (batched path).
+    lane_feats: Vec<Vec<f32>>,
+    /// Per-lane sampled state trajectories.
+    lane_states: Vec<Vec<usize>>,
+    /// Per-lane RNG streams (queue → states → power, as sequentially).
+    lane_rngs: Vec<Rng>,
+    /// Server index of each active lane.
+    lane_servers: Vec<usize>,
+    /// Power-synthesis buffer (one server at a time).
+    power: Vec<f32>,
+}
+
+impl WorkerScratch {
+    pub fn new() -> WorkerScratch {
+        WorkerScratch::default()
+    }
 }
 
 /// The trace generator: catalog + artifacts + classifier backend.
@@ -55,6 +111,10 @@ pub struct Generator {
     /// Per-config (artifact, classifier) pairs shared across runs; see
     /// [`Generator::prepare`].
     prepared: BTreeMap<String, Arc<PreparedConfig>>,
+    /// Parsed replay schedules keyed by path. A replay scenario's base
+    /// schedule is immutable, so a 1 000-server facility performs exactly
+    /// one file read + parse per path instead of one per server.
+    replay_cache: Mutex<BTreeMap<String, Arc<Schedule>>>,
 }
 
 impl Generator {
@@ -62,13 +122,20 @@ impl Generator {
     pub fn native() -> Result<Generator> {
         let cat = Catalog::load_default()?;
         let store = ArtifactStore::open_default()?;
-        Ok(Generator {
+        Ok(Self::native_with(cat, store))
+    }
+
+    /// Native-backend generator over an explicit catalog + artifact store
+    /// (tests and benchmarks inject synthetic stores through this).
+    pub fn native_with(cat: Catalog, store: ArtifactStore) -> Generator {
+        Generator {
             cat,
             store,
             backend: Backend::Native,
             configs: BTreeMap::new(),
             prepared: BTreeMap::new(),
-        })
+            replay_cache: Mutex::new(BTreeMap::new()),
+        }
     }
 
     /// Open with the PJRT backend (compiles the HLO artifact once).
@@ -83,6 +150,7 @@ impl Generator {
             backend: Backend::Pjrt(exe),
             configs: BTreeMap::new(),
             prepared: BTreeMap::new(),
+            replay_cache: Mutex::new(BTreeMap::new()),
         })
     }
 
@@ -137,22 +205,40 @@ impl Generator {
         dt_s: f64,
         rng: &mut Rng,
     ) -> Result<ServerTrace> {
+        let mut scratch = WorkerScratch::new();
+        self.server_trace_with(art, classifier, schedule, horizon_s, dt_s, rng, &mut scratch)
+    }
+
+    /// [`Generator::server_trace`] drawing every intermediate buffer from a
+    /// reusable [`WorkerScratch`] — the zero-allocation form the facility
+    /// fold drives (only the returned trace itself is freshly allocated).
+    #[allow(clippy::too_many_arguments)]
+    pub fn server_trace_with(
+        &self,
+        art: &ConfigArtifact,
+        classifier: &AnyClassifier,
+        schedule: &Schedule,
+        horizon_s: f64,
+        dt_s: f64,
+        rng: &mut Rng,
+        scratch: &mut WorkerScratch,
+    ) -> Result<ServerTrace> {
         let n_steps = (horizon_s / dt_s).round() as usize;
         let intervals = simulate_queue(schedule, &art.surrogate, self.cat.campaign.max_batch, rng);
-        let feats = features_from_intervals(&intervals, n_steps, dt_s);
-        let probs = classifier.probs(&feats.interleaved(), n_steps)?;
-        // Keep only the live K states of this configuration (unused logits
-        // were masked at training time; renormalization happens inside the
-        // categorical draw).
-        let k_max = classifier.k_max();
-        let k = art.k;
-        let mut live = vec![0.0f32; n_steps * k];
-        for t in 0..n_steps {
-            live[t * k..(t + 1) * k].copy_from_slice(&probs[t * k_max..t * k_max + k]);
+        let WorkerScratch { arena, diff, feats, probs, states, .. } = scratch;
+        features_interleaved_into(&intervals, n_steps, dt_s, diff, feats);
+        match classifier.as_native() {
+            Some(native) => native.probs_into(feats, n_steps, arena, probs)?,
+            None => *probs = classifier.probs(feats, n_steps)?,
         }
-        let states = sample_states(&live, k, rng);
-        let power_w = sample_power(&states, &art.dict, art.mode, rng);
-        Ok(ServerTrace { power_w, a: feats.a, states })
+        // Draw only from the live K states of this configuration (unused
+        // logits were masked at training time; renormalization happens
+        // inside the categorical draw).
+        let k_max = classifier.k_max();
+        sample_states_masked_into(probs, k_max, art.k, rng, states);
+        let power_w = sample_power(states, &art.dict, art.mode, rng);
+        let a = (0..n_steps).map(|t| feats[2 * t]).collect();
+        Ok(ServerTrace { power_w, a, states: states.clone() })
     }
 
     /// Build the per-server arrival schedule for a scenario.
@@ -196,7 +282,7 @@ impl Generator {
                 p.schedule(server_idx, spec.horizon_s, &lengths, base_rng)
             }
             WorkloadSpec::Replay { path, offset_s } => {
-                let base = replay::load(std::path::Path::new(path))?;
+                let base = self.replay_base(path)?;
                 // Per-server random offset (paper §4.4) wrapped on horizon.
                 let off = if *offset_s > 0.0 { rng.range(0.0, *offset_s) } else { 0.0 };
                 let mut shifted: Schedule = base
@@ -211,6 +297,21 @@ impl Generator {
                 shifted
             }
         })
+    }
+
+    /// Load-and-cache the immutable base schedule of a replay trace. The
+    /// lock is deliberately held across the read so each path is parsed
+    /// **exactly once** no matter how many servers (or threads) replay it
+    /// — first-touch serialization is the point, and the steady-state cost
+    /// is one brief lock + `Arc` clone per `schedule_for` call.
+    fn replay_base(&self, path: &str) -> Result<Arc<Schedule>> {
+        let mut cache = self.replay_cache.lock().unwrap();
+        if let Some(s) = cache.get(path) {
+            return Ok(s.clone());
+        }
+        let s = Arc::new(replay::load(std::path::Path::new(path))?);
+        cache.insert(path.to_string(), s.clone());
+        Ok(s)
     }
 
     /// Load-or-build the cached (artifact, classifier) pair for a config.
@@ -251,19 +352,40 @@ impl Generator {
         self.facility_shared(spec, dt_s, workers)
     }
 
-    /// [`Generator::facility`] against the shared prepared-config cache.
+    /// [`Generator::facility`] against the shared prepared-config cache,
+    /// with the default rack-batching width.
+    pub fn facility_shared(&self, spec: &ScenarioSpec, dt_s: f64, workers: usize) -> Result<FacilityResult> {
+        self.facility_shared_batched(spec, dt_s, workers, DEFAULT_MAX_BATCH)
+    }
+
+    /// Facility generation over the shared prepared-config cache with an
+    /// explicit batching width.
     ///
     /// Takes `&self` so many scenarios can run concurrently over one
     /// generator; every configuration the scenario references must have
     /// been [`Generator::prepare`]d first (the `&mut` wrapper
     /// [`Generator::facility`] does this automatically).
     ///
+    /// `max_batch` caps how many of a rack's servers are scanned through
+    /// the classifier in one batched call (`0` = default). `1` forces the
+    /// sequential per-server path. **Every width produces byte-identical
+    /// output**: the batched classifier is bit-identical per lane to the
+    /// sequential one, per-server RNG streams are independent forks
+    /// consumed in the same order, and the accumulator fold below never
+    /// re-associates.
+    ///
     /// The result is bit-identical for a given `(spec, spec.seed)`
     /// regardless of `workers` or thread scheduling: work is partitioned at
     /// **rack** granularity, each rack's servers fold into that rack's
     /// buffer in server-index order, and the final merge only combines
     /// disjoint racks — no floating-point sum ever re-associates.
-    pub fn facility_shared(&self, spec: &ScenarioSpec, dt_s: f64, workers: usize) -> Result<FacilityResult> {
+    pub fn facility_shared_batched(
+        &self,
+        spec: &ScenarioSpec,
+        dt_s: f64,
+        workers: usize,
+        max_batch: usize,
+    ) -> Result<FacilityResult> {
         anyhow::ensure!(
             dt_s.is_finite() && dt_s > 0.0,
             "dt must be a positive number of seconds (got {dt_s})"
@@ -276,6 +398,7 @@ impl Generator {
             "horizon {}s too short for dt {dt_s}s (zero samples)",
             spec.horizon_s
         );
+        let max_batch = if max_batch == 0 { DEFAULT_MAX_BATCH } else { max_batch };
         let mut table: BTreeMap<String, Arc<PreparedConfig>> = BTreeMap::new();
         for id in spec.server_config.config_ids_used(&spec.topology) {
             let p = self.get_prepared(&id).with_context(|| {
@@ -285,31 +408,61 @@ impl Generator {
         }
         let base_rng = Rng::new(spec.seed);
         let workers = if workers == 0 { default_workers() } else { workers };
-        let errors = std::sync::Mutex::new(Vec::<String>::new());
-        let acc = parallel_fold(
+        let errors = Mutex::new(Vec::<String>::new());
+        let (acc, _scratch) = parallel_fold(
             n_racks,
             workers,
-            || FacilityAccumulator::new(spec.topology, n_steps, spec.p_base_w),
-            |acc, rack| {
-                for s in rack * per_rack..(rack + 1) * per_rack {
-                    let result = (|| -> Result<()> {
-                        let id = spec.server_config.config_for(&spec.topology, s);
-                        let p = &table[id];
-                        let sched = self.schedule_for(spec, s, &base_rng)?;
-                        let mut rng = base_rng.fork(0x5E21 ^ s as u64);
-                        let tr = self
-                            .server_trace(&p.art, &p.cls, &sched, spec.horizon_s, dt_s, &mut rng)?;
-                        acc.add_server(s, &tr.power_w)?;
-                        Ok(())
-                    })();
-                    if let Err(e) = result {
-                        errors.lock().unwrap().push(format!("server {s}: {e:#}"));
+            || {
+                (
+                    FacilityAccumulator::new(spec.topology, n_steps, spec.p_base_w),
+                    WorkerScratch::new(),
+                )
+            },
+            |(acc, scratch), rack| {
+                let s_begin = rack * per_rack;
+                let id = spec.server_config.config_for(&spec.topology, s_begin);
+                let p = &table[id];
+                match (p.cls.as_native(), max_batch > 1) {
+                    (Some(native), true) => {
+                        let mut s0 = s_begin;
+                        while s0 < s_begin + per_rack {
+                            let s1 = (s0 + max_batch).min(s_begin + per_rack);
+                            self.generate_batch(
+                                spec, s0, s1, n_steps, dt_s, p, native, &base_rng, scratch,
+                                acc, &errors,
+                            );
+                            s0 = s1;
+                        }
+                    }
+                    // Sequential fallback: PJRT backend (fixed-shape
+                    // artifact) or an explicit max_batch of 1.
+                    _ => {
+                        for s in s_begin..s_begin + per_rack {
+                            let result = (|| -> Result<()> {
+                                let sched = self.schedule_for(spec, s, &base_rng)?;
+                                let mut rng = base_rng.fork(0x5E21 ^ s as u64);
+                                let tr = self.server_trace_with(
+                                    &p.art,
+                                    &p.cls,
+                                    &sched,
+                                    spec.horizon_s,
+                                    dt_s,
+                                    &mut rng,
+                                    scratch,
+                                )?;
+                                acc.add_server(s, &tr.power_w)?;
+                                Ok(())
+                            })();
+                            if let Err(e) = result {
+                                errors.lock().unwrap().push(format!("server {s}: {e:#}"));
+                            }
+                        }
                     }
                 }
             },
-            |mut a, b| {
+            |(mut a, sa), (b, _sb)| {
                 a.merge(&b);
-                a
+                (a, sa)
             },
         );
         let errs = errors.into_inner().unwrap();
@@ -318,7 +471,90 @@ impl Generator {
         }
         Ok(FacilityResult { scenario: spec.clone(), dt_s, acc })
     }
+
+    /// Generate servers `s0..s1` (one rack's same-config slice) through one
+    /// batched classifier call, sampling states as posterior tiles stream
+    /// out and folding power traces in server-index order.
+    #[allow(clippy::too_many_arguments)]
+    fn generate_batch(
+        &self,
+        spec: &ScenarioSpec,
+        s0: usize,
+        s1: usize,
+        n_steps: usize,
+        dt_s: f64,
+        p: &PreparedConfig,
+        native: &NativeBiGru,
+        base_rng: &Rng,
+        scratch: &mut WorkerScratch,
+        acc: &mut FacilityAccumulator,
+        errors: &Mutex<Vec<String>>,
+    ) {
+        let WorkerScratch { arena, diff, lane_feats, lane_states, lane_rngs, lane_servers, power, .. } =
+            scratch;
+        lane_rngs.clear();
+        lane_servers.clear();
+        while lane_feats.len() < s1 - s0 {
+            lane_feats.push(Vec::new());
+            lane_states.push(Vec::new());
+        }
+        // Stage 1 — per server, in index order: workload schedule →
+        // surrogate queue → interleaved features. Each server's RNG stream
+        // is forked exactly as in the sequential path and carried to the
+        // sampling stages below.
+        for s in s0..s1 {
+            let result = (|| -> Result<()> {
+                let sched = self.schedule_for(spec, s, base_rng)?;
+                let mut rng = base_rng.fork(0x5E21 ^ s as u64);
+                let intervals =
+                    simulate_queue(&sched, &p.art.surrogate, self.cat.campaign.max_batch, &mut rng);
+                let lane = lane_servers.len();
+                features_interleaved_into(&intervals, n_steps, dt_s, diff, &mut lane_feats[lane]);
+                lane_rngs.push(rng);
+                lane_servers.push(s);
+                Ok(())
+            })();
+            if let Err(e) = result {
+                errors.lock().unwrap().push(format!("server {s}: {e:#}"));
+            }
+        }
+        let b = lane_servers.len();
+        if b == 0 {
+            return;
+        }
+        for st in lane_states[..b].iter_mut() {
+            st.clear();
+        }
+        // Stage 2 — one batched classifier scan for all lanes; states are
+        // drawn from each posterior tile as it streams out (per lane in
+        // time order, exactly the sequential draw sequence).
+        let k = p.art.k;
+        let k_max = p.cls.k_max();
+        let refs: Vec<&[f32]> = lane_feats[..b].iter().map(|f| f.as_slice()).collect();
+        let classified =
+            native.probs_batch_tiled(&refs, n_steps, BATCH_TILE, arena, |_t0, n_rows, tile| {
+                for (lane, states) in lane_states[..b].iter_mut().enumerate() {
+                    sample_states_lane_into(tile, n_rows, lane, b, k_max, k, &mut lane_rngs[lane], states);
+                }
+                Ok(())
+            });
+        if let Err(e) = classified {
+            errors
+                .lock()
+                .unwrap()
+                .push(format!("servers {s0}..{s1}: batched classifier failed: {e:#}"));
+            return;
+        }
+        // Stage 3 — per server, in index order: state-conditioned power
+        // synthesis and the deterministic rack fold.
+        for (lane, &s) in lane_servers.iter().enumerate() {
+            sample_power_into(&lane_states[lane], &p.art.dict, p.art.mode, &mut lane_rngs[lane], power);
+            if let Err(e) = acc.add_server(s, power) {
+                errors.lock().unwrap().push(format!("server {s}: {e:#}"));
+            }
+        }
+    }
 }
 
 // Integration tests for the full pipeline live in rust/tests/ (they need
-// `make artifacts`).
+// `make artifacts` or the synthetic stores from `testutil`).

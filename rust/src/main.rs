@@ -175,6 +175,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             Opt { name: "out", help: "output directory for CSV/JSON export", default: None },
             Opt { name: "workers", help: "concurrent scenarios (0 = auto)", default: Some("0") },
             Opt { name: "server-workers", help: "threads per scenario (0 = auto)", default: Some("0") },
+            Opt { name: "max-batch", help: "servers per batched classifier call (0 = auto, 1 = sequential)", default: Some("0") },
             Opt { name: "horizon", help: "horizon for the built-in demo grid (s)", default: Some("600") },
             Opt { name: "backend", help: "classifier backend (native|pjrt)", default: Some("pjrt") },
         ]));
@@ -206,6 +207,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ramp_interval_s: args.f64_or("ramp", 900.0)?,
         scenario_workers: args.usize_or("workers", 0)?,
         server_workers: args.usize_or("server-workers", 0)?,
+        max_batch: args.usize_or("max-batch", 0)?,
         ..SweepOptions::default()
     };
     let t0 = std::time::Instant::now();

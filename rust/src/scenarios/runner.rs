@@ -3,11 +3,12 @@
 //!
 //! Artifact sharing: [`run_sweep`] first [`Generator::prepare`]s each
 //! configuration some cell actually uses (artifact JSON parse + classifier
-//! construction happen exactly once per config, not per cell), then fans
-//! cells across a thread pool with
-//! [`Generator::facility_shared`] — which itself parallelizes across racks
-//! inside a cell. Outer/inner worker counts are balanced automatically
-//! unless pinned in [`SweepOptions`].
+//! construction + packed-weight build happen exactly once per config, not
+//! per cell), then fans cells across a thread pool with
+//! [`Generator::facility_shared_batched`] — which itself parallelizes
+//! across racks inside a cell and scans each rack's same-config servers
+//! through the classifier as one batched call (§Perf). Outer/inner worker
+//! counts are balanced automatically unless pinned in [`SweepOptions`].
 //!
 //! Determinism: every cell's output is a pure function of its
 //! `(ScenarioSpec, seed)` (see [`Generator::facility_shared`]), and the
@@ -38,6 +39,12 @@ pub struct SweepOptions {
     /// Worker threads inside each scenario; 0 = auto (cores left over
     /// after scenario-level parallelism).
     pub server_workers: usize,
+    /// Servers per batched classifier call inside each rack
+    /// (0 = [`crate::coordinator::DEFAULT_MAX_BATCH`], 1 = sequential).
+    /// Every width produces byte-identical cell output — see
+    /// [`Generator::facility_shared_batched`] — so this is purely a
+    /// throughput/memory knob.
+    pub max_batch: usize,
     /// Export intervals per aggregation level.
     pub scales: ScaleConfig,
 }
@@ -49,6 +56,7 @@ impl Default for SweepOptions {
             ramp_interval_s: 900.0,
             scenario_workers: 0,
             server_workers: 0,
+            max_batch: 0,
             scales: ScaleConfig::default(),
         }
     }
@@ -103,7 +111,7 @@ pub fn run_sweep(gen: &mut Generator, grid: &SweepGrid, opts: &SweepOptions) -> 
         let cell = &cells[i];
         let t0 = Instant::now();
         let run = gen_ro
-            .facility_shared(&cell.spec, opts.dt_s, inner)
+            .facility_shared_batched(&cell.spec, opts.dt_s, inner, opts.max_batch)
             .with_context(|| format!("cell {}", cell.id))?;
         let site = run.facility_series();
         // See SweepOptions::ramp_interval_s: keep ≥ 2 windows in range.

@@ -38,17 +38,12 @@ impl FeatureSeries {
     }
 }
 
-/// Compute `(A_t, ΔA_t)` on a grid of `n_steps` intervals of `dt_s` seconds.
-///
-/// Uses a difference-array so the cost is O(requests + timesteps) — this is
-/// on the per-server hot path for facility generation.
-pub fn features_from_intervals(
-    intervals: &[ActiveInterval],
-    n_steps: usize,
-    dt_s: f64,
-) -> FeatureSeries {
+/// Fill `diff` with the occupancy difference-array for `intervals` on an
+/// `n_steps × dt_s` grid (shared by both feature builders below).
+fn occupancy_diff(intervals: &[ActiveInterval], n_steps: usize, dt_s: f64, diff: &mut Vec<i32>) {
     assert!(dt_s > 0.0);
-    let mut diff = vec![0i32; n_steps + 1];
+    diff.clear();
+    diff.resize(n_steps + 1, 0);
     for iv in intervals {
         // A request is active from the timestep its prefill begins until the
         // timestep its final token is generated (paper §2.1).
@@ -65,6 +60,19 @@ pub fn features_from_intervals(
             diff[e] -= 1;
         }
     }
+}
+
+/// Compute `(A_t, ΔA_t)` on a grid of `n_steps` intervals of `dt_s` seconds.
+///
+/// Uses a difference-array so the cost is O(requests + timesteps) — this is
+/// on the per-server hot path for facility generation.
+pub fn features_from_intervals(
+    intervals: &[ActiveInterval],
+    n_steps: usize,
+    dt_s: f64,
+) -> FeatureSeries {
+    let mut diff = Vec::new();
+    occupancy_diff(intervals, n_steps, dt_s, &mut diff);
     let mut a = Vec::with_capacity(n_steps);
     let mut cur = 0i32;
     for &d in diff.iter().take(n_steps) {
@@ -79,6 +87,32 @@ pub fn features_from_intervals(
         prev = x;
     }
     FeatureSeries { dt_s, a, da }
+}
+
+/// Allocation-free variant for the batched facility pipeline: writes the
+/// classifier-ready interleaved `[T, 2]` feature rows `(A_t, ΔA_t)`
+/// directly into `out`, reusing `diff` and `out` capacity across servers.
+/// Produces exactly `features_from_intervals(..).interleaved()`.
+pub fn features_interleaved_into(
+    intervals: &[ActiveInterval],
+    n_steps: usize,
+    dt_s: f64,
+    diff: &mut Vec<i32>,
+    out: &mut Vec<f32>,
+) {
+    occupancy_diff(intervals, n_steps, dt_s, diff);
+    out.clear();
+    out.reserve(2 * n_steps);
+    let mut cur = 0i32;
+    let mut prev = 0.0f32;
+    for &d in diff.iter().take(n_steps) {
+        cur += d;
+        debug_assert!(cur >= 0);
+        let a = cur as f32;
+        out.push(a);
+        out.push(a - prev);
+        prev = a;
+    }
 }
 
 #[cfg(test)]
@@ -139,6 +173,17 @@ mod tests {
     fn interleaved_layout() {
         let f = FeatureSeries { dt_s: 0.25, a: vec![1.0, 2.0], da: vec![1.0, 1.0] };
         assert_eq!(f.interleaved(), vec![1.0, 1.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn interleaved_into_matches_reference_builder() {
+        let ivs = [iv(0.2, 0.3, 0.8), iv(0.9, 0.2, 2.0), iv(1.5, 0.1, 0.4), iv(100.0, 1.0, 1.0)];
+        let mut diff = Vec::new();
+        let mut out = vec![99.0f32; 3]; // stale contents must be discarded
+        for n_steps in [0usize, 1, 20] {
+            features_interleaved_into(&ivs, n_steps, 0.25, &mut diff, &mut out);
+            assert_eq!(out, features_from_intervals(&ivs, n_steps, 0.25).interleaved());
+        }
     }
 
     #[test]

@@ -26,6 +26,50 @@ pub fn sample_states(probs: &[f32], k: usize, rng: &mut Rng) -> Vec<usize> {
     probs.chunks_exact(k).map(|row| rng.categorical(row)).collect()
 }
 
+/// Sample a state trajectory from the first `k` (live) states of `[T,
+/// k_max]` posteriors, without materializing the masked copy. Draws are
+/// identical to copying each row's live prefix and calling
+/// [`sample_states`] (the categorical draw renormalizes internally).
+pub fn sample_states_masked_into(
+    probs: &[f32],
+    k_max: usize,
+    k: usize,
+    rng: &mut Rng,
+    out: &mut Vec<usize>,
+) {
+    assert!(k > 0 && k <= k_max && probs.len() % k_max == 0, "bad posterior shape");
+    out.clear();
+    out.reserve(probs.len() / k_max);
+    for row in probs.chunks_exact(k_max) {
+        out.push(rng.categorical(&row[..k]));
+    }
+}
+
+/// Append one lane's states from a lane-major posterior tile — the batched
+/// classifier's streaming output (`[n_rows, B, k_max]`, see
+/// `StateClassifier::probs_batch`). Reads lane `lane`'s rows in time order
+/// and draws from the first `k` live states, so per lane the draws are
+/// bit-identical to the sequential [`sample_states`] path.
+#[allow(clippy::too_many_arguments)]
+pub fn sample_states_lane_into(
+    tile_probs: &[f32],
+    n_rows: usize,
+    lane: usize,
+    b: usize,
+    k_max: usize,
+    k: usize,
+    rng: &mut Rng,
+    out: &mut Vec<usize>,
+) {
+    assert!(lane < b && k > 0 && k <= k_max, "bad lane/state geometry");
+    assert!(tile_probs.len() >= n_rows * b * k_max, "tile too short");
+    out.reserve(n_rows);
+    for r in 0..n_rows {
+        let row = &tile_probs[(r * b + lane) * k_max..(r * b + lane) * k_max + k];
+        out.push(rng.categorical(row));
+    }
+}
+
 /// Argmax state trajectory (used by ablations).
 pub fn argmax_states(probs: &[f32], k: usize) -> Vec<usize> {
     assert!(k > 0 && probs.len() % k == 0);
@@ -48,7 +92,22 @@ pub fn sample_power(
     mode: SynthMode,
     rng: &mut Rng,
 ) -> Vec<f32> {
-    let mut out = Vec::with_capacity(states.len());
+    let mut out = Vec::new();
+    sample_power_into(states, dict, mode, rng, &mut out);
+    out
+}
+
+/// [`sample_power`] into a reusable buffer (the batched facility pipeline
+/// recycles one power buffer per worker instead of allocating per server).
+pub fn sample_power_into(
+    states: &[usize],
+    dict: &StateDictionary,
+    mode: SynthMode,
+    rng: &mut Rng,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(states.len());
     match mode {
         SynthMode::Iid => {
             for &z in states {
@@ -76,7 +135,6 @@ pub fn sample_power(
             }
         }
     }
-    out
 }
 
 /// Convenience: full synthesis from posteriors.
@@ -128,6 +186,64 @@ mod tests {
     fn argmax_picks_max() {
         let probs = [0.3f32, 0.7, 0.9, 0.1];
         assert_eq!(argmax_states(&probs, 2), vec![1, 0]);
+    }
+
+    #[test]
+    fn masked_sampling_matches_live_copy_path() {
+        // The pre-batching pipeline copied each row's live prefix into a
+        // dense [T, k] buffer before sampling; drawing straight from the
+        // [T, k_max] rows must reproduce the same draws from the same seed.
+        let (k_max, k, t) = (5usize, 3usize, 400usize);
+        let mut gen = Rng::new(90);
+        let probs: Vec<f32> = (0..t * k_max).map(|_| gen.f64() as f32).collect();
+        let mut live = vec![0.0f32; t * k];
+        for i in 0..t {
+            live[i * k..(i + 1) * k].copy_from_slice(&probs[i * k_max..i * k_max + k]);
+        }
+        let mut r1 = Rng::new(91);
+        let reference = sample_states(&live, k, &mut r1);
+        let mut r2 = Rng::new(91);
+        let mut masked = Vec::new();
+        sample_states_masked_into(&probs, k_max, k, &mut r2, &mut masked);
+        assert_eq!(masked, reference);
+    }
+
+    #[test]
+    fn lane_sampling_matches_sequential_per_lane() {
+        // Lane-major tile [n, B, k_max]: per lane, tile-wise sampling must
+        // replay the sequential masked draw stream exactly.
+        let (b, k_max, k, n) = (3usize, 4usize, 2usize, 50usize);
+        let mut gen = Rng::new(92);
+        let tile: Vec<f32> = (0..n * b * k_max).map(|_| gen.f64() as f32).collect();
+        for lane in 0..b {
+            // Sequential reference: extract this lane's rows.
+            let mut rows = Vec::new();
+            for r in 0..n {
+                rows.extend_from_slice(&tile[(r * b + lane) * k_max..(r * b + lane + 1) * k_max]);
+            }
+            let mut r1 = Rng::new(93 + lane as u64);
+            let mut reference = Vec::new();
+            sample_states_masked_into(&rows, k_max, k, &mut r1, &mut reference);
+            let mut r2 = Rng::new(93 + lane as u64);
+            let mut lane_states = Vec::new();
+            // Two half-tiles to exercise streaming append.
+            let half = n / 2;
+            sample_states_lane_into(&tile[..half * b * k_max], half, lane, b, k_max, k, &mut r2, &mut lane_states);
+            sample_states_lane_into(&tile[half * b * k_max..], n - half, lane, b, k_max, k, &mut r2, &mut lane_states);
+            assert_eq!(lane_states, reference, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn sample_power_into_reuses_buffer_and_matches() {
+        let d = dict(0.6);
+        let states = vec![0usize, 1, 1, 0];
+        let mut r1 = Rng::new(94);
+        let owned = sample_power(&states, &d, SynthMode::Ar1, &mut r1);
+        let mut r2 = Rng::new(94);
+        let mut buf = vec![123.0f32; 9]; // stale contents discarded
+        sample_power_into(&states, &d, SynthMode::Ar1, &mut r2, &mut buf);
+        assert_eq!(buf, owned);
     }
 
     #[test]

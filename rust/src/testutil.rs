@@ -1,12 +1,21 @@
 //! In-repo property-testing runner (proptest is unavailable offline —
-//! DESIGN.md §3).
+//! DESIGN.md §3), plus synthetic artifact stores so integration tests and
+//! benchmarks can drive the full facility pipeline without `make
+//! artifacts`.
 //!
 //! `check` runs a property over many deterministically generated random
 //! cases; on failure it reports the seed and case index so the exact case
 //! can be replayed. Generation helpers cover the domains the invariant
 //! tests need (trace lengths, rates, weights, schedules).
 
+use crate::artifacts::ArtifactStore;
+use crate::catalog::Catalog;
+use crate::classifier::flat_param_count;
+use crate::coordinator::Generator;
+use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
+use anyhow::Result;
+use std::path::PathBuf;
 
 /// Number of cases per property (overridable with `POWERTRACE_PROP_CASES`).
 pub fn default_cases() -> usize {
@@ -60,6 +69,102 @@ pub fn assert_close(a: f64, b: f64, tol: f64, ctx: &str) {
     assert!((a - b).abs() <= tol, "{ctx}: {a} vs {b} (tol {tol})");
 }
 
+// ---------------------------------------------------------------------------
+// Synthetic artifact stores
+// ---------------------------------------------------------------------------
+
+/// Write a synthetic artifact store (random BiGRU weights, plausible state
+/// dictionaries and surrogate parameters) for the given configuration ids
+/// under a tag-unique temp directory, and return its root. The store
+/// satisfies every invariant `ArtifactStore::load_config` re-validates, so
+/// the full generation pipeline runs against it — the traces are
+/// statistically meaningless but deterministically reproducible from
+/// `seed`, which is all parity/throughput tests and benches need.
+pub fn synth_artifact_store(
+    tag: &str,
+    hidden: usize,
+    k_max: usize,
+    config_ids: &[String],
+    seed: u64,
+) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("powertrace_synth_store_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(root.join("configs")).unwrap();
+
+    let manifest = json::obj([
+        (
+            "chunk",
+            json::obj([("t", 512usize.into()), ("halo", 64usize.into())]),
+        ),
+        ("k_max", k_max.into()),
+        ("hidden", hidden.into()),
+        ("hlo", "bigru_fwd.hlo.txt".into()),
+        (
+            "configs",
+            Json::Arr(config_ids.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+    ]);
+    json::write_file(&root.join("manifest.json"), &manifest).unwrap();
+
+    let mut rng = Rng::new(seed);
+    let k = k_max.min(3);
+    for id in config_ids {
+        let n_params = flat_param_count(hidden, k_max);
+        let weights: Vec<f32> = (0..n_params).map(|_| (rng.normal() * 0.12) as f32).collect();
+        let mu: Vec<f64> = (0..k).map(|i| 300.0 + 140.0 * i as f64).collect();
+        let pi: Vec<f64> = (0..k).map(|_| 1.0 / k as f64).collect();
+        let art = json::obj([
+            ("config_id", id.as_str().into()),
+            ("k", k.into()),
+            ("train_power_mean_w", 600.0.into()),
+            (
+                "states",
+                json::obj([
+                    ("pi", Json::from_f64s(&pi)),
+                    ("mu", Json::from_f64s(&mu)),
+                    ("sigma", Json::from_f64s(&vec![20.0; k])),
+                    ("phi", Json::from_f64s(&vec![0.0; k])),
+                    ("y_min", 250.0.into()),
+                    ("y_max", (300.0 + 140.0 * k as f64 + 200.0).into()),
+                ]),
+            ),
+            ("mode", "iid".into()),
+            (
+                "surrogate",
+                json::obj([
+                    ("alpha0", (-2.0).into()),
+                    ("alpha1", 0.8.into()),
+                    ("sigma_ttft", 0.2.into()),
+                    ("mu_log_tbt", (-4.0).into()),
+                    ("sigma_log_tbt", 0.2.into()),
+                ]),
+            ),
+            ("weights", Json::from_f32s(&weights)),
+        ]);
+        json::write_file(&root.join("configs").join(format!("{id}.json")), &art).unwrap();
+    }
+    root
+}
+
+/// A native-backend [`Generator`] over a synthetic artifact store: the real
+/// repo catalog (`data/catalog.json`) paired with random per-configuration
+/// weights for its first `n_configs` configuration ids. Returns the
+/// generator and the ids it can prepare.
+pub fn synth_generator(
+    tag: &str,
+    hidden: usize,
+    k_max: usize,
+    n_configs: usize,
+    seed: u64,
+) -> Result<(Generator, Vec<String>)> {
+    let cat = Catalog::load_default()?;
+    let ids: Vec<String> = cat.config_ids().into_iter().take(n_configs.max(1)).collect();
+    anyhow::ensure!(!ids.is_empty(), "catalog lists no configurations");
+    let root = synth_artifact_store(tag, hidden, k_max, &ids, seed);
+    let store = ArtifactStore::open(&root)?;
+    Ok((Generator::native_with(cat, store), ids))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,6 +181,15 @@ mod tests {
     #[should_panic(expected = "property 'always fails'")]
     fn check_reports_failures() {
         check_seeded("always fails", 1, 4, |_| panic!("nope"));
+    }
+
+    #[test]
+    fn synth_store_loads_and_prepares() {
+        let (mut gen, ids) = synth_generator("testutil_unit", 8, 4, 2, 5).unwrap();
+        assert!(!ids.is_empty());
+        let p = gen.prepare(&ids[0]).unwrap();
+        assert!(p.art.k >= 1 && p.art.k <= 4);
+        assert!(p.cls.as_native().is_some(), "native backend expected");
     }
 
     #[test]

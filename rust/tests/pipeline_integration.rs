@@ -8,7 +8,10 @@ use powertrace_sim::coordinator::Generator;
 use powertrace_sim::experiments::common::ACF_MAX_LAG;
 use powertrace_sim::metrics::{self, fidelity};
 use powertrace_sim::testbed::{simulate, EngineOptions};
+use powertrace_sim::testutil::synth_generator;
+use powertrace_sim::util::json;
 use powertrace_sim::util::rng::Rng;
+use powertrace_sim::workload::{replay, Request};
 
 fn generator() -> Option<Generator> {
     match Generator::native() {
@@ -149,6 +152,97 @@ fn facility_coordinator_end_to_end() {
     // Determinism: same seed → identical site series.
     let run2 = gen.facility(&spec, 0.25, 1).unwrap();
     assert_eq!(run.facility_series(), run2.facility_series());
+}
+
+/// Byte-level equality of two facility runs: the IT series, the PCC
+/// series, and every per-rack buffer.
+fn assert_runs_identical(
+    a: &powertrace_sim::coordinator::FacilityResult,
+    b: &powertrace_sim::coordinator::FacilityResult,
+    ctx: &str,
+) {
+    let (ita, itb) = (a.it_series(), b.it_series());
+    assert_eq!(ita.len(), itb.len(), "{ctx}: length mismatch");
+    for (i, (x, y)) in ita.iter().zip(&itb).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: IT sample {i}: {x} vs {y}");
+    }
+    assert_eq!(a.facility_series(), b.facility_series(), "{ctx}: PCC series");
+    for rack in 0..a.scenario.topology.n_racks() {
+        assert_eq!(a.acc.rack_series(rack), b.acc.rack_series(rack), "{ctx}: rack {rack}");
+    }
+}
+
+#[test]
+fn batched_facility_is_bit_identical_to_sequential() {
+    // The acceptance invariant of the batched engine: for a fixed
+    // (spec, seed), facility output is byte-identical across the
+    // sequential path (max_batch = 1, the pre-batching pipeline), the
+    // default batched path, and a ragged sub-batch split — at any worker
+    // count. Runs against a synthetic artifact store so it needs no
+    // `make artifacts`.
+    let (mut gen, ids) = synth_generator("batch_determinism", 16, 5, 1, 7).unwrap();
+    let mut spec = ScenarioSpec::default_poisson(&ids[0], 1.0);
+    // 5 servers/rack: batch width 5 (non-multiple of any SIMD lane width),
+    // and max_batch = 3 splits it into ragged sub-batches of 3 + 2.
+    spec.topology = Topology { rows: 1, racks_per_row: 2, servers_per_rack: 5 };
+    spec.horizon_s = 120.0;
+    spec.seed = 42;
+    gen.prepare_for(&spec).unwrap();
+    let sequential = gen.facility_shared_batched(&spec, 0.25, 2, 1).unwrap();
+    let batched = gen.facility_shared_batched(&spec, 0.25, 3, 0).unwrap();
+    let split = gen.facility_shared_batched(&spec, 0.25, 1, 3).unwrap();
+    assert_eq!(sequential.acc.servers_added(), 10);
+    assert_runs_identical(&sequential, &batched, "sequential vs default-batched");
+    assert_runs_identical(&sequential, &split, "sequential vs max_batch=3");
+}
+
+#[test]
+fn batched_facility_handles_long_horizons_with_tiling() {
+    // 2400 steps (> any small tile, < BATCH_TILE) plus a worker count
+    // exceeding racks: exercises the carry/checkpoint logic end to end.
+    let (mut gen, ids) = synth_generator("batch_tiling", 8, 4, 1, 9).unwrap();
+    let mut spec = ScenarioSpec::default_poisson(&ids[0], 0.8);
+    spec.topology = Topology { rows: 1, racks_per_row: 1, servers_per_rack: 4 };
+    spec.horizon_s = 600.0;
+    spec.seed = 5;
+    gen.prepare_for(&spec).unwrap();
+    let sequential = gen.facility_shared_batched(&spec, 0.25, 1, 1).unwrap();
+    let batched = gen.facility_shared_batched(&spec, 0.25, 4, 0).unwrap();
+    assert_runs_identical(&sequential, &batched, "long-horizon batched");
+}
+
+#[test]
+fn replay_trace_loaded_exactly_once_per_path() {
+    // schedule_for must serve every server from one parsed copy of the
+    // replay file. Observable proof: after the first facility run the file
+    // can disappear from disk and generation still succeeds; a fresh
+    // generator (empty cache) fails on the same spec.
+    let (mut gen, ids) = synth_generator("replay_cache", 8, 4, 1, 11).unwrap();
+    let dir = std::env::temp_dir().join("powertrace_test_replay_cache");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("base_schedule.json");
+    let sched: Vec<Request> = (0..40)
+        .map(|i| Request { arrival_s: 1.5 * i as f64, n_in: 128, n_out: 64 })
+        .collect();
+    json::write_file(&path, &replay::schedule_to_json(&sched)).unwrap();
+
+    let mut spec = ScenarioSpec::default_poisson(&ids[0], 1.0);
+    spec.workload = WorkloadSpec::Replay { path: path.to_str().unwrap().into(), offset_s: 10.0 };
+    spec.topology = Topology { rows: 1, racks_per_row: 2, servers_per_rack: 3 };
+    spec.horizon_s = 60.0;
+    spec.seed = 3;
+    gen.prepare_for(&spec).unwrap();
+    let first = gen.facility_shared(&spec, 0.25, 2).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let second = gen.facility_shared(&spec, 0.25, 2).unwrap();
+    assert_eq!(first.facility_series(), second.facility_series());
+
+    let (mut gen2, _) = synth_generator("replay_cache_fresh", 8, 4, 1, 11).unwrap();
+    gen2.prepare_for(&spec).unwrap();
+    assert!(
+        gen2.facility_shared(&spec, 0.25, 1).is_err(),
+        "fresh generator must fail once the replay file is gone"
+    );
 }
 
 #[test]

@@ -7,6 +7,7 @@ use powertrace_sim::aggregate::Topology;
 use powertrace_sim::config::{ServerAssignment, WorkloadSpec};
 use powertrace_sim::coordinator::Generator;
 use powertrace_sim::scenarios::{run_sweep, GridDefaults, SweepGrid, SweepOptions};
+use powertrace_sim::testutil::synth_generator;
 
 fn generator() -> Option<Generator> {
     match Generator::native() {
@@ -66,6 +67,34 @@ fn sweep_summary_is_reproducible_across_runs_and_worker_counts() {
     let mut gen2 = generator().unwrap();
     let opts2 = SweepOptions { scenario_workers: 1, server_workers: 2, ..SweepOptions::default() };
     let b = run_sweep(&mut gen2, &grid, &opts2).unwrap();
+    assert_eq!(a.summary_csv(), b.summary_csv());
+    for (x, y) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(x.scales.racks_w, y.scales.racks_w);
+        assert_eq!(x.scales.rows_w, y.scales.rows_w);
+        assert_eq!(x.scales.facility_w, y.scales.facility_w);
+    }
+}
+
+#[test]
+fn sweep_batched_output_matches_sequential_bytes() {
+    // The sweep engine inherits rack batching through
+    // facility_shared_batched; per-cell exports must be byte-identical to
+    // the sequential (max_batch = 1) pipeline. Runs on a synthetic store.
+    let (mut gen, ids) = synth_generator("sweep_batch", 8, 4, 1, 17).unwrap();
+    let grid = SweepGrid {
+        name: "batch-parity".into(),
+        defaults: GridDefaults { horizon_s: 60.0, ..GridDefaults::default() },
+        workloads: vec![
+            WorkloadSpec::Poisson { rate: 0.5 },
+            WorkloadSpec::Mmpp { mean_rate: 0.5, burstiness: 4.0 },
+        ],
+        topologies: vec![Topology { rows: 1, racks_per_row: 2, servers_per_rack: 3 }],
+        fleets: vec![ServerAssignment::Uniform(ids[0].clone())],
+        seeds: vec![3, 4],
+    };
+    let seq_opts = SweepOptions { max_batch: 1, ..SweepOptions::default() };
+    let a = run_sweep(&mut gen, &grid, &seq_opts).unwrap();
+    let b = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
     assert_eq!(a.summary_csv(), b.summary_csv());
     for (x, y) in a.cells.iter().zip(&b.cells) {
         assert_eq!(x.scales.racks_w, y.scales.racks_w);
