@@ -52,22 +52,39 @@ fn main() {
     let bat = b.run("facility(32 srv × 15min) rack-batched", || {
         gen.facility_shared_batched(&spec, dt, 0, 0).unwrap().it_series().len()
     });
+    // Windowed streaming engine on the same scenario: same rack batching,
+    // bit-identical output, bounded memory — the throughput delta is the
+    // price of the extra backward prologue + per-window feature rebuilds.
+    let win = b.run("facility(32 srv × 15min) windowed(60s)", || {
+        let mut samples = 0usize;
+        gen.facility_shared_windowed(&spec, dt, 60.0, 0, 0, |acc| {
+            samples += acc.window_len();
+            Ok(())
+        })
+        .unwrap();
+        samples
+    });
     let sps_seq = n_servers / seq.mean.as_secs_f64();
     let sps_bat = n_servers / bat.mean.as_secs_f64();
+    let sps_win = n_servers / win.mean.as_secs_f64();
     println!(
         "  sequential: {:.1} servers/s ({:.0}x realtime total), batched: {:.1} servers/s \
-         ({:.0}x realtime total) → speedup {:.2}x",
+         ({:.0}x realtime total) → speedup {:.2}x; windowed streaming: {:.1} servers/s \
+         ({:.2}x of batched)",
         sps_seq,
         server_seconds / seq.mean.as_secs_f64(),
         sps_bat,
         server_seconds / bat.mean.as_secs_f64(),
         seq.mean.as_secs_f64() / bat.mean.as_secs_f64(),
+        sps_win,
+        bat.mean.as_secs_f64() / win.mean.as_secs_f64(),
     );
     if let Err(e) = write_bench_json(
         Path::new("BENCH_facility.json"),
         &[
             BenchEntry::from_result("facility_sequential", &seq, Some(n_servers)),
             BenchEntry::from_result("facility_batched", &bat, Some(n_servers)),
+            BenchEntry::from_result("facility_windowed", &win, Some(n_servers)),
         ],
     ) {
         println!("  (BENCH_facility.json not written: {e:#})");

@@ -25,7 +25,7 @@ fn main() {
     b.run("facility_study(12 servers × 2h @2s)", || {
         let study = facility::generate(&mut ctx, &args).unwrap();
         let site = study.ours.facility_series(study.pue);
-        let st = powertrace_sim::metrics::PlanningStats::compute(&site, 2.0, 900.0);
+        let st = powertrace_sim::metrics::PlanningStats::compute(&site, 2.0, 900.0).expect("stats");
         println!(
             "  ours peak {:.3} MW avg {:.3} MW PAR {:.2} ramp {:.3} MW (TDP {:.3} MW)",
             st.peak_w / 1e6,

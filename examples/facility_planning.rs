@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         t0.elapsed().as_secs_f64()
     );
 
-    let stats = PlanningStats::compute(&site, dt, 900.0);
+    let stats = PlanningStats::compute(&site, dt, 900.0)?;
     let nameplate_mw = gen.cat.server_nameplate_w(gen.cat.config("llama70b_a100_tp8")?)
         * spec.topology.n_servers() as f64
         * spec.pue
@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 15-minute load shape a utility would consume.
-    let shape = resample(&site, dt, 900.0);
+    let shape = resample(&site, dt, 900.0)?;
     println!("-- 15-min load shape (MW) --");
     for (i, p) in shape.iter().enumerate() {
         println!("  t+{:>3} min: {:.3}", i * 15, p / 1e6);

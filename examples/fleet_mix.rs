@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     let dt = 0.25;
     let run = gen.facility(&spec, dt, 0)?;
     let site = run.facility_series();
-    let stats = PlanningStats::compute(&site, dt, 60.0);
+    let stats = PlanningStats::compute(&site, dt, 60.0)?;
     println!(
         "mixed hall ({} servers: {}): peak {:.1} kW avg {:.1} kW PAR {:.2}",
         spec.topology.n_servers(),
@@ -43,13 +43,13 @@ fn main() -> anyhow::Result<()> {
     // Compare rack-level behaviour of the two technologies.
     for rack in 0..2 {
         let series = run.acc.rack_series(rack);
-        let s = PlanningStats::compute(&series, dt, 60.0);
+        let s = PlanningStats::compute(&series, dt, 60.0)?;
         let cfg = &mix[rack % mix.len()];
         println!(
             "  rack {rack} ({cfg}): peak {:.1} kW avg {:.1} kW CoV {:.3}",
             s.peak_w / 1e3,
             s.avg_w / 1e3,
-            coefficient_of_variation(&series)
+            coefficient_of_variation(&series)?
         );
     }
     println!("(MoE racks show stronger within-state power persistence — AR(1) synthesis)");

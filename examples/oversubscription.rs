@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         let series: Vec<f32> = row.iter().map(|&x| (x / 1e3) as f32).collect();
-        let p95 = percentile(&series, 95.0);
+        let p95 = percentile(&series, 95.0)?;
         if p95 <= limit_kw {
             max_ok = rack + 1;
         } else {

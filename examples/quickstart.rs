@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     let trace = gen.server_trace(&art, &cls, &schedule, horizon_s, 0.25, &mut rng)?;
 
     // 5. Planner-facing stats.
-    let stats = PlanningStats::compute(&trace.power_w, 0.25, 60.0);
+    let stats = PlanningStats::compute(&trace.power_w, 0.25, 60.0)?;
     println!(
         "server power: peak {:.0} W, avg {:.0} W, peak-to-average {:.2}, max 1-min ramp {:.0} W",
         stats.peak_w, stats.avg_w, stats.peak_to_average, stats.max_ramp_w

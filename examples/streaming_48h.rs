@@ -1,0 +1,81 @@
+//! Long-horizon streaming smoke: a 240-server synthetic fleet generated
+//! over a 48 h horizon through the windowed engine — the scenario that is
+//! simply impossible for the buffered path on CI-class memory (racks × T
+//! plus per-lane full-horizon feature/state buffers run to multiple GB).
+//! Streaming memory is O(racks × window) samples plus the compressed
+//! workload event lists; CI runs this binary under `/usr/bin/time -v` and
+//! asserts the peak RSS stays bounded.
+//!
+//!     cargo run --release --example streaming_48h -- [horizon_h] [window_s]
+//!
+//! Defaults: 48 h horizon, 1 h windows, dt 250 ms, 6×5×8 = 240 servers on
+//! a synthetic random-weight artifact store (`testutil::synth_generator`),
+//! so it runs without `make artifacts`.
+
+use powertrace_sim::aggregate::Topology;
+use powertrace_sim::config::ScenarioSpec;
+use powertrace_sim::metrics::planning::StreamingPlanningStats;
+use powertrace_sim::testutil::synth_generator;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let horizon_h: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(48.0);
+    let window_s: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3600.0);
+    let dt = 0.25;
+
+    let (mut gen, ids) = synth_generator("streaming_48h", 8, 4, 1, 7)?;
+    let mut spec = ScenarioSpec::default_poisson(&ids[0], 0.1);
+    spec.topology = Topology { rows: 6, racks_per_row: 5, servers_per_rack: 8 }; // 240 servers
+    spec.horizon_s = horizon_h * 3600.0;
+    spec.seed = 1;
+
+    let n_steps = (spec.horizon_s / dt).round() as usize;
+    println!(
+        "streaming {} servers × {horizon_h} h @ {dt}s ({n_steps} steps) in {window_s}s windows",
+        spec.topology.n_servers()
+    );
+    // Cap retained samples at 512 Ki — below the 48 h default's 691,200
+    // site samples — so the smoke actually exercises the
+    // histogram-quantile path (the thing the bound documents) while
+    // peak/mean/energy/ramp stay exact folds.
+    let mut stats = StreamingPlanningStats::with_exact_cap(dt, 900.0, 1 << 19)?;
+    let mut rows = Vec::new();
+    let mut site = Vec::new();
+    let mut pcc = Vec::new();
+    let mut n_windows = 0usize;
+    let pue = spec.pue;
+    let t0 = std::time::Instant::now();
+    gen.facility_windowed(&spec, dt, window_s, 0, 0, |acc| {
+        acc.fold_rows_site(&mut rows, &mut site);
+        pcc.clear();
+        pcc.extend(site.iter().map(|&x| ((x as f32) as f64 * pue) as f32));
+        stats.push_slice(&pcc);
+        n_windows += 1;
+        if n_windows % 8 == 0 {
+            println!(
+                "  window {n_windows}: t = {:.1} h ({:.0}s wall)",
+                (acc.window_t0() + acc.window_len()) as f64 * dt / 3600.0,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        Ok(())
+    })?;
+    let out = stats.finalize()?;
+    println!(
+        "done in {:.1}s: {n_windows} windows → peak {:.3} MW, avg {:.3} MW, p99 {:.3} MW{}, \
+         energy {:.1} MWh, 15-min ramp {:.3} MW",
+        t0.elapsed().as_secs_f64(),
+        out.stats.peak_w / 1e6,
+        out.stats.avg_w / 1e6,
+        out.stats.p99_w / 1e6,
+        if out.exact_quantiles {
+            String::new()
+        } else {
+            format!(" (±{:.1} W hist)", out.p99_error_bound_w)
+        },
+        out.stats.energy_kwh / 1e3,
+        out.stats.max_ramp_w / 1e6,
+    );
+    anyhow::ensure!(out.stats.peak_w > 0.0 && out.stats.energy_kwh > 0.0, "degenerate output");
+    Ok(())
+}

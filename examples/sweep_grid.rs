@@ -40,14 +40,15 @@ fn main() -> anyhow::Result<()> {
     // The multi-scale export: every cell carries rack-level 1 s, row-level
     // 15 s, and facility-level 5/15 min series from one streaming pass.
     let first = &report.cells[0];
+    let scales = first.scales.as_ref().expect("buffered cells carry scales");
     println!(
         "\ncell {}: {} racks @1s ({} pts), {} rows @15s ({} pts), facility @300s ({} pts)",
         first.cell.id,
-        first.scales.racks_w.len(),
-        first.scales.racks_w[0].len(),
-        first.scales.rows_w.len(),
-        first.scales.rows_w[0].len(),
-        first.scales.facility_w[0].len(),
+        scales.racks_w.len(),
+        scales.racks_w[0].len(),
+        scales.rows_w.len(),
+        scales.rows_w[0].len(),
+        scales.facility_w[0].len(),
     );
 
     let out = std::path::Path::new("out/sweep_grid");

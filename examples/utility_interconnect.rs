@@ -44,15 +44,15 @@ fn main() -> anyhow::Result<()> {
         let dt = 1.0;
         let run = gen.facility(&s, dt, 0)?;
         let site = run.facility_series();
-        let stats = PlanningStats::compute(&site, dt, 900.0);
-        let shape_15m = resample(&site, dt, 900.0);
+        let stats = PlanningStats::compute(&site, dt, 900.0)?;
+        let shape_15m = resample(&site, dt, 900.0)?;
         println!("-- {name} --");
         println!(
             "  peak {:.3} MW | P95 {:.3} MW | avg {:.3} MW | 15-min ramp {:.3} MW | load factor {:.2}",
             stats.peak_w / 1e6,
-            percentile(&site, 95.0) / 1e6,
+            percentile(&site, 95.0)? / 1e6,
             stats.avg_w / 1e6,
-            max_ramp(&site, dt, 900.0) / 1e6,
+            max_ramp(&site, dt, 900.0)? / 1e6,
             stats.load_factor,
         );
         println!("  15-min load shape points: {}", shape_15m.len());

@@ -167,8 +167,9 @@ impl FacilityAccumulator {
     /// per-rack buffers: each rack is visited exactly once, feeding its row
     /// accumulator and the site accumulator while its own resampled series
     /// is emitted. Rack/row series are IT power; facility series are at the
-    /// PCC (`pue` applied, Eq. 11).
-    pub fn multi_scale(&self, dt_s: f64, pue: f64, scales: &ScaleConfig) -> MultiScale {
+    /// PCC (`pue` applied, Eq. 11). Errors on non-positive `dt_s` or
+    /// export intervals (reachable from sweep JSON).
+    pub fn multi_scale(&self, dt_s: f64, pue: f64, scales: &ScaleConfig) -> Result<MultiScale> {
         let mut rows = vec![vec![0.0f64; self.n_steps]; self.topo.rows];
         let mut site = vec![0.0f64; self.n_steps];
         let mut racks_w = Vec::with_capacity(self.topo.n_racks());
@@ -178,18 +179,148 @@ impl FacilityAccumulator {
                 row[t] += x;
                 site[t] += x;
             }
-            racks_w.push(resample_mean_f64(rack, dt_s, scales.rack_interval_s, 1.0));
+            racks_w.push(resample_mean_f64(rack, dt_s, scales.rack_interval_s, 1.0)?);
         }
         let rows_w = rows
             .iter()
             .map(|r| resample_mean_f64(r, dt_s, scales.row_interval_s, 1.0))
-            .collect();
+            .collect::<Result<Vec<_>>>()?;
         let facility_w = scales
             .facility_intervals_s
             .iter()
             .map(|&interval| resample_mean_f64(&site, dt_s, interval, pue))
-            .collect();
-        MultiScale { dt_s, pue, scales: scales.clone(), racks_w, rows_w, facility_w }
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MultiScale { dt_s, pue, scales: scales.clone(), racks_w, rows_w, facility_w })
+    }
+}
+
+/// Bounded window accumulator for the streaming (>24 h) facility path: the
+/// same bottom-up rack fold as [`FacilityAccumulator`], but holding only
+/// the **current time window** — O(racks × window) instead of racks × T.
+///
+/// Concurrency: rack buffers sit behind per-rack mutexes so the windowed
+/// pipeline's workers (one rack per task, racks disjoint) can fold in
+/// parallel; the locks are uncontended by construction. Between windows
+/// the single-threaded sink reads via `&mut self` accessors (no locking).
+///
+/// Equivalence with the buffered path: per element, servers add in index
+/// order with the identical `gpu_w as f64 + p_base_w` expression, and
+/// [`StreamingFacilityAccumulator::fold_rows_site`] sums racks in rack
+/// order exactly as [`FacilityAccumulator::multi_scale`] does — so every
+/// derived f64 (and its f32 cast) is bit-identical to the buffered run's.
+#[derive(Debug)]
+pub struct StreamingFacilityAccumulator {
+    topo: Topology,
+    p_base_w: f64,
+    /// Capacity in timesteps of one window.
+    window: usize,
+    /// Start step and length of the current window.
+    t0: usize,
+    len: usize,
+    rack_w: Vec<std::sync::Mutex<Vec<f64>>>,
+    added: std::sync::atomic::AtomicUsize,
+}
+
+impl StreamingFacilityAccumulator {
+    pub fn new(topo: Topology, window: usize, p_base_w: f64) -> StreamingFacilityAccumulator {
+        assert!(window > 0, "streaming accumulator: zero-length window");
+        StreamingFacilityAccumulator {
+            topo,
+            p_base_w,
+            window,
+            t0: 0,
+            len: 0,
+            rack_w: (0..topo.n_racks())
+                .map(|_| std::sync::Mutex::new(vec![0.0; window]))
+                .collect(),
+            added: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    /// Start step of the current window.
+    pub fn window_t0(&self) -> usize {
+        self.t0
+    }
+
+    /// Filled length of the current window (≤ capacity for the final,
+    /// partial window of a horizon).
+    pub fn window_len(&self) -> usize {
+        self.len
+    }
+
+    /// Distinct server-window contributions folded so far (diagnostics).
+    pub fn servers_added(&self) -> usize {
+        self.added.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Reset for the window starting at `t0` covering `len` steps.
+    pub fn begin_window(&mut self, t0: usize, len: usize) {
+        assert!(len <= self.window, "window {len} exceeds capacity {}", self.window);
+        self.t0 = t0;
+        self.len = len;
+        for m in &mut self.rack_w {
+            let buf = m.get_mut().unwrap();
+            buf[..len].fill(0.0);
+        }
+    }
+
+    /// Fold one server's GPU power for window steps `offset .. offset +
+    /// gpu_power_w.len()` (offsets are window-relative). Callable from the
+    /// rack's worker while other racks fold concurrently.
+    pub fn add_server_tile(
+        &self,
+        server_idx: usize,
+        offset: usize,
+        gpu_power_w: &[f32],
+    ) -> Result<()> {
+        ensure!(
+            offset + gpu_power_w.len() <= self.len,
+            "tile {offset}+{} beyond window length {}",
+            gpu_power_w.len(),
+            self.len
+        );
+        let rack = self.topo.rack_of(server_idx);
+        let mut buf = self.rack_w[rack].lock().unwrap();
+        for (d, &p) in buf[offset..offset + gpu_power_w.len()].iter_mut().zip(gpu_power_w) {
+            *d += p as f64 + self.p_base_w;
+        }
+        if offset + gpu_power_w.len() == self.len {
+            self.added.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// The current window of one rack's IT power (single-threaded phase).
+    pub fn rack_window(&mut self, rack_idx: usize) -> &[f64] {
+        let len = self.len;
+        &self.rack_w[rack_idx].get_mut().unwrap()[..len]
+    }
+
+    /// Sum the rack windows into per-row and site windows, visiting racks
+    /// in rack order — the exact element-wise f64 addition sequence of
+    /// [`FacilityAccumulator::multi_scale`]. Buffers are resized to the
+    /// window length.
+    pub fn fold_rows_site(&mut self, rows: &mut Vec<Vec<f64>>, site: &mut Vec<f64>) {
+        let len = self.len;
+        rows.resize(self.topo.rows, Vec::new());
+        for r in rows.iter_mut() {
+            r.clear();
+            r.resize(len, 0.0);
+        }
+        site.clear();
+        site.resize(len, 0.0);
+        for rack_idx in 0..self.topo.n_racks() {
+            let row = self.topo.row_of_rack(rack_idx);
+            let buf = self.rack_w[rack_idx].get_mut().unwrap();
+            for (t, &x) in buf[..len].iter().enumerate() {
+                rows[row][t] += x;
+                site[t] += x;
+            }
+        }
     }
 }
 
@@ -235,16 +366,19 @@ pub struct MultiScale {
 /// `resample_mean` over an `f64` accumulator buffer with a final scale
 /// factor (used to apply PUE without an intermediate allocation). Window
 /// geometry is shared with the f32 path via
-/// [`resample_stride`](crate::metrics::planning::resample_stride).
-fn resample_mean_f64(series: &[f64], dt_s: f64, interval_s: f64, scale: f64) -> Vec<f32> {
-    series
-        .chunks(crate::metrics::planning::resample_stride(dt_s, interval_s))
+/// [`resample_stride`](crate::metrics::planning::resample_stride), and the
+/// emitted value expression `((sum / count) * scale) as f32` is shared
+/// with [`crate::metrics::planning::StreamingResampler`] — the streaming
+/// CSV writers are byte-identical to this path because of it.
+fn resample_mean_f64(series: &[f64], dt_s: f64, interval_s: f64, scale: f64) -> Result<Vec<f32>> {
+    Ok(series
+        .chunks(crate::metrics::planning::resample_stride(dt_s, interval_s)?)
         .map(|c| ((c.iter().sum::<f64>() / c.len() as f64) * scale) as f32)
-        .collect()
+        .collect())
 }
 
 /// Resample any aggregated series to a coarser interval (mean-preserving).
-pub fn resample(series: &[f32], dt_s: f64, interval_s: f64) -> Vec<f32> {
+pub fn resample(series: &[f32], dt_s: f64, interval_s: f64) -> Result<Vec<f32>> {
     resample_mean(series, dt_s, interval_s)
 }
 
@@ -380,20 +514,20 @@ mod tests {
             row_interval_s: 5.0,
             facility_intervals_s: vec![5.0, 15.0],
         };
-        let ms = acc.multi_scale(dt, 1.3, &scales);
+        let ms = acc.multi_scale(dt, 1.3, &scales).unwrap();
         assert_eq!(ms.racks_w.len(), t.n_racks());
         assert_eq!(ms.rows_w.len(), t.rows);
         assert_eq!(ms.facility_w.len(), 2);
         // One pass equals resampling the per-level accessors.
         for r in 0..t.n_racks() {
-            let expect = resample(&acc.rack_series(r), dt, 1.0);
+            let expect = resample(&acc.rack_series(r), dt, 1.0).unwrap();
             crate::testutil::assert_allclose(&ms.racks_w[r], &expect, 1e-2, 1e-5, "rack");
         }
         for r in 0..t.rows {
-            let expect = resample(&acc.row_series(r), dt, 5.0);
+            let expect = resample(&acc.row_series(r), dt, 5.0).unwrap();
             crate::testutil::assert_allclose(&ms.rows_w[r], &expect, 1e-2, 1e-5, "row");
         }
-        let expect = resample(&acc.facility_series(1.3), dt, 15.0);
+        let expect = resample(&acc.facility_series(1.3), dt, 15.0).unwrap();
         crate::testutil::assert_allclose(&ms.facility_w[1], &expect, 1e-1, 1e-5, "facility");
         // Expected lengths: 15 s of data → 15 rack points, 3 row points,
         // 3- and 1-point facility series.
@@ -408,11 +542,73 @@ mod tests {
         let t = Topology { rows: 1, racks_per_row: 1, servers_per_rack: 1 };
         let mut acc = FacilityAccumulator::new(t, 4, 0.0);
         acc.add_server(0, &[1000.0f32; 4]).unwrap();
-        let ms = acc.multi_scale(1.0, 1.5, &ScaleConfig::default());
+        let ms = acc.multi_scale(1.0, 1.5, &ScaleConfig::default()).unwrap();
         assert_eq!(ms.racks_w[0], vec![1000.0f32; 4]);
         assert_eq!(ms.rows_w[0], vec![1000.0f32]); // 4 s < 15 s window
         assert_eq!(ms.facility_w[0], vec![1500.0f32]);
         assert_eq!(ms.facility_w[1], vec![1500.0f32]);
+    }
+
+    #[test]
+    fn streaming_windows_reassemble_buffered_accumulator_bitwise() {
+        // Folding the same servers window-by-window (ragged final window,
+        // sub-tile pushes inside windows) must reproduce the buffered
+        // accumulator's f64 rack/row/site buffers exactly.
+        let t = topo();
+        let n_steps = 50;
+        let window = 16; // 50 = 3×16 + 2 → ragged final window
+        let mut rng = Rng::new(21);
+        let traces: Vec<Vec<f32>> = (0..t.n_servers())
+            .map(|_| (0..n_steps).map(|_| rng.range(50.0, 3000.0) as f32).collect())
+            .collect();
+        let mut buffered = FacilityAccumulator::new(t, n_steps, 1000.0);
+        for (s, tr) in traces.iter().enumerate() {
+            buffered.add_server(s, tr).unwrap();
+        }
+        let reference = buffered.multi_scale(0.25, 1.3, &ScaleConfig::default()).unwrap();
+
+        let mut acc = StreamingFacilityAccumulator::new(t, window, 1000.0);
+        let mut rows = Vec::new();
+        let mut site = Vec::new();
+        let mut got_site_f32: Vec<f32> = Vec::new();
+        let mut t0 = 0;
+        while t0 < n_steps {
+            let n = window.min(n_steps - t0);
+            acc.begin_window(t0, n);
+            for (s, tr) in traces.iter().enumerate() {
+                // Two ragged sub-tiles per window, like the scan emits.
+                let cut = (n / 3).max(1).min(n);
+                acc.add_server_tile(s, 0, &tr[t0..t0 + cut]).unwrap();
+                if cut < n {
+                    acc.add_server_tile(s, cut, &tr[t0 + cut..t0 + n]).unwrap();
+                }
+            }
+            for r in 0..t.n_racks() {
+                let win = acc.rack_window(r).to_vec();
+                let buf_rack = buffered.rack_series(r);
+                for (i, &x) in win.iter().enumerate() {
+                    assert_eq!(
+                        (x as f32).to_bits(),
+                        buf_rack[t0 + i].to_bits(),
+                        "rack {r} t {}",
+                        t0 + i
+                    );
+                }
+            }
+            acc.fold_rows_site(&mut rows, &mut site);
+            got_site_f32.extend(site.iter().map(|&x| x as f32));
+            t0 += n;
+        }
+        assert_eq!(got_site_f32, buffered.site_it_series());
+        let _ = reference; // multi_scale path exercised above
+    }
+
+    #[test]
+    fn streaming_accumulator_rejects_out_of_window_tiles() {
+        let mut acc = StreamingFacilityAccumulator::new(topo(), 8, 0.0);
+        acc.begin_window(0, 4);
+        assert!(acc.add_server_tile(0, 2, &[1.0f32; 3]).is_err());
+        assert!(acc.add_server_tile(0, 0, &[1.0f32; 4]).is_ok());
     }
 
     #[test]
@@ -427,11 +623,11 @@ mod tests {
             let trace: Vec<f32> =
                 (0..2000).map(|_| rng.normal_ms(1000.0, 300.0).max(0.0) as f32).collect();
             if s == 0 {
-                server_cov = coefficient_of_variation(&trace);
+                server_cov = coefficient_of_variation(&trace).unwrap();
             }
             acc.add_server(s, &trace).unwrap();
         }
-        let site_cov = coefficient_of_variation(&acc.site_it_series());
+        let site_cov = coefficient_of_variation(&acc.site_it_series()).unwrap();
         assert!(
             site_cov < server_cov / 2.5,
             "site {site_cov} vs server {server_cov} (expect ~1/4)"

@@ -9,6 +9,22 @@
 //! sample states as posteriors stream out without materializing the full
 //! `[T, B, K]` tensor.
 //!
+//! ## Resumable scans (streaming horizons)
+//!
+//! Since the streaming-horizon work the tiled scan is **resumable**: a
+//! [`BatchScan`] captures everything that must survive between time
+//! windows — the forward carry `[H, B]` and the backward carry recorded at
+//! each window boundary during one right-to-left prologue sweep
+//! ([`NativeBiGru::begin_batch_scan`]) — and
+//! [`NativeBiGru::scan_window`] then emits any window's posteriors on
+//! demand, in increasing-time order. Features are pulled through the
+//! [`LaneFeatures`] source trait, so callers with bounded memory (the
+//! windowed facility pipeline) can rebuild each window's features from a
+//! compressed event list instead of holding `[T, 2]` per lane.
+//! `probs_batch_tiled` is a thin driver over the same two functions
+//! (window = tile), so the one-shot and windowed paths share one
+//! arithmetic path — their bit-identity is structural, not coincidental.
+//!
 //! ## Bit-identity contract
 //!
 //! Batching is only admissible in the facility pipeline because it is
@@ -23,17 +39,19 @@
 //! * the head logit is `(b + dot_fwd) + dot_bwd`, as in the sequential
 //!   head loop.
 //!
-//! ## Memory: tiled backward scan
+//! ## Memory: checkpointed backward scan
 //!
 //! A naive batched BiGRU stores `[T, H, B]` backward hidden states — 1.4 GB
 //! per worker for a 24 h × 250 ms horizon at B = 16. Instead the backward
-//! direction runs twice: a checkpoint pass that only records the carry
-//! state at tile boundaries (`[T/tile, H, B]`), then a forward pass that
-//! recomputes each tile's backward states from its checkpoint
-//! (`[tile, H, B]` resident) and immediately consumes them in the fused
-//! forward+head sweep. Recomputation costs ≤ 0.5× extra scan FLOPs and
-//! bounds scratch to O(tile · H · B); sequences within one tile skip the
-//! checkpoint pass entirely. Both tilings are bit-identical because carried
+//! direction runs as a prologue sweep that only records the carry entering
+//! each window (`[n_windows, H, B]`, owned by the [`BatchScan`]), then each
+//! window recomputes its backward states from that checkpoint — in
+//! sub-tiles of at most [`BATCH_TILE`] steps, so scratch stays
+//! O(BATCH_TILE · H · B) even for multi-hour windows (windows wider than
+//! one sub-tile record transient sub-tile checkpoints first, costing one
+//! extra backward pass over that window). Recomputation costs ≤ 0.5× extra
+//! scan FLOPs for single-sub-tile windows (the `probs_batch_tiled` case)
+//! and ≤ 1× for wider ones. All tilings are bit-identical because carried
 //! states are exact.
 
 use super::native::{resize, sigmoid, softmax_into, NativeBiGru, PackedDir};
@@ -41,7 +59,8 @@ use super::scale_features;
 use anyhow::{ensure, Result};
 
 /// Default time-tile length for the batched scan: horizons up to ~17 min at
-/// 250 ms run un-tiled; longer horizons stay cache-resident per tile.
+/// 250 ms run un-tiled; longer horizons stay cache-resident per tile. Also
+/// the sub-tile bound inside [`NativeBiGru::scan_window`].
 pub const BATCH_TILE: usize = 4096;
 
 /// Reusable scratch for classifier execution — one per worker thread.
@@ -49,7 +68,10 @@ pub const BATCH_TILE: usize = 4096;
 /// Every buffer the sequential ([`NativeBiGru::probs_into`]) and batched
 /// ([`NativeBiGru::probs_batch_tiled`]) paths need lives here, so steady-
 /// state inference performs no heap allocation: buffers are `resize`d (a
-/// no-op once warm) and overwritten.
+/// no-op once warm) and overwritten. (The only exception is the
+/// [`BatchScan`] carry state, which must outlive the call that created it
+/// and is owned by the scan — ~`(n_windows + 1) · H · B` floats per rack
+/// batch.)
 #[derive(Debug, Default)]
 pub struct ScratchArena {
     /// Scaled features: `[T, 2]` (sequential) or `[tile, 2, B]` (batched).
@@ -57,7 +79,8 @@ pub struct ScratchArena {
     /// Sequential per-direction hidden-state history `[T, H]`.
     pub(crate) h_fwd: Vec<f32>,
     pub(crate) h_bwd: Vec<f32>,
-    /// Carry state: `[H]` (sequential) or `[H, B]` lane-major (batched fwd).
+    /// Carry state: `[H]` (sequential; the batched forward carry lives on
+    /// the [`BatchScan`]).
     pub(crate) hidden: Vec<f32>,
     /// Batched backward carry `[H, B]`.
     pub(crate) hidden_b: Vec<f32>,
@@ -73,17 +96,84 @@ pub struct ScratchArena {
     pub(crate) head_b: Vec<f32>,
     /// One lane's gathered logits, `[k_max]`.
     pub(crate) logits_row: Vec<f32>,
-    /// Recomputed backward states for the current tile, `[tile, H, B]`.
+    /// One lane's raw feature rows for the current sub-tile, `[sub, 2]`.
+    pub(crate) feat_rows: Vec<f32>,
+    /// Recomputed backward states for the current sub-tile, `[sub, H, B]`.
     pub(crate) bwd_tile: Vec<f32>,
-    /// Backward carry at each tile boundary, `[n_tiles, H, B]`.
+    /// Window-local backward carry at each sub-tile boundary,
+    /// `[n_sub, H, B]`.
     pub(crate) checkpoints: Vec<f32>,
-    /// Posterior tile handed to the sink, `[tile, B, k_max]`.
+    /// Posterior tile handed to the sink, `[sub, B, k_max]`.
     pub(crate) probs_tile: Vec<f32>,
 }
 
 impl ScratchArena {
     pub fn new() -> ScratchArena {
         ScratchArena::default()
+    }
+}
+
+/// Per-lane `(A_t, ΔA_t)` feature source for the batched scan. The scan
+/// only ever asks for sub-tile ranges (≤ [`BATCH_TILE`] steps), in
+/// right-to-left order during the prologue and left-to-right during
+/// window emission — a source may be a plain slice
+/// ([`SliceFeatures`]) or a bounded-memory reconstruction (the windowed
+/// facility pipeline rebuilds ranges from compressed occupancy events).
+///
+/// Implementations must be pure: the same `(lane, t0, n)` must always
+/// yield the same bytes, or the recomputed backward states diverge from
+/// the checkpoints and bit-identity is lost.
+pub trait LaneFeatures {
+    /// Number of lanes (batch width B).
+    fn lanes(&self) -> usize;
+    /// Write lane `lane`'s interleaved `[n, 2]` rows `(A_t, ΔA_t)` for
+    /// timesteps `t0 .. t0 + n` into `out[..2*n]`.
+    fn fill(&self, lane: usize, t0: usize, n: usize, out: &mut [f32]);
+}
+
+/// [`LaneFeatures`] over in-memory `[T, 2]` feature slices (one per lane).
+pub struct SliceFeatures<'a>(pub &'a [&'a [f32]]);
+
+impl LaneFeatures for SliceFeatures<'_> {
+    fn lanes(&self) -> usize {
+        self.0.len()
+    }
+
+    fn fill(&self, lane: usize, t0: usize, n: usize, out: &mut [f32]) {
+        out[..2 * n].copy_from_slice(&self.0[lane][2 * t0..2 * (t0 + n)]);
+    }
+}
+
+/// Resumable state of one batched scan: everything that must persist
+/// between [`NativeBiGru::scan_window`] calls. Windows are emitted in
+/// increasing-time order; the struct is cheap enough to hold per rack for
+/// an entire streaming facility run (`(n_windows + 1) · H · B` floats).
+#[derive(Debug)]
+pub struct BatchScan {
+    b: usize,
+    t_len: usize,
+    window: usize,
+    n_windows: usize,
+    next: usize,
+    /// Forward carry `[H, B]`, advanced by each emitted window.
+    hidden_fwd: Vec<f32>,
+    /// Backward carry entering each window, `[n_windows, H, B]`, recorded
+    /// by the prologue sweep.
+    checkpoints: Vec<f32>,
+}
+
+impl BatchScan {
+    /// Timestep where the next emitted window starts.
+    pub fn next_t0(&self) -> usize {
+        self.next * self.window
+    }
+
+    pub fn n_windows(&self) -> usize {
+        self.n_windows
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.next >= self.n_windows
     }
 }
 
@@ -116,7 +206,9 @@ impl NativeBiGru {
     /// `t0 .. t0 + n_rows`. Tiles arrive in increasing-time order.
     ///
     /// The tile length only bounds scratch memory — any `tile ≥ 1` yields
-    /// bit-identical posteriors (checkpointed carries are exact).
+    /// bit-identical posteriors (checkpointed carries are exact). This is a
+    /// one-shot driver over [`NativeBiGru::begin_batch_scan`] +
+    /// [`NativeBiGru::scan_window`] with `window = tile`.
     pub fn probs_batch_tiled<F>(
         &self,
         features: &[&[f32]],
@@ -128,8 +220,7 @@ impl NativeBiGru {
     where
         F: FnMut(usize, usize, &[f32]) -> Result<()>,
     {
-        let b = features.len();
-        if b == 0 || t_len == 0 {
+        if features.is_empty() || t_len == 0 {
             return Ok(());
         }
         for (lane, f) in features.iter().enumerate() {
@@ -139,14 +230,120 @@ impl NativeBiGru {
                 f.len()
             );
         }
+        let src = SliceFeatures(features);
+        let mut scan = self.begin_batch_scan(&src, t_len, tile, scratch)?;
+        while self.scan_window(&mut scan, &src, scratch, &mut sink)? > 0 {}
+        Ok(())
+    }
+
+    /// Start a resumable batched scan over `t_len` steps split into windows
+    /// of `window` steps: runs the right-to-left backward prologue (in
+    /// sub-tiles of ≤ [`BATCH_TILE`], so scratch stays bounded for any
+    /// window size), recording the backward carry entering each window.
+    /// A single-window scan skips the sweep entirely — its only checkpoint
+    /// is the zero initial state.
+    pub fn begin_batch_scan<S: LaneFeatures>(
+        &self,
+        src: &S,
+        t_len: usize,
+        window: usize,
+        scratch: &mut ScratchArena,
+    ) -> Result<BatchScan> {
+        let b = src.lanes();
+        let pw = &self.packed;
+        let h = pw.h;
+        if b == 0 || t_len == 0 {
+            return Ok(BatchScan {
+                b,
+                t_len,
+                window: window.max(1),
+                n_windows: 0,
+                next: 0,
+                hidden_fwd: Vec::new(),
+                checkpoints: Vec::new(),
+            });
+        }
+        let window = window.max(1).min(t_len);
+        let n_windows = (t_len + window - 1) / window;
+        let sub = window.min(BATCH_TILE);
+        let mut scan = BatchScan {
+            b,
+            t_len,
+            window,
+            n_windows,
+            next: 0,
+            hidden_fwd: vec![0.0; h * b],
+            checkpoints: vec![0.0; n_windows * h * b],
+        };
+        if n_windows > 1 {
+            let ScratchArena { xs, hidden_b, gates_i, gates_h, acc, feat_rows, .. } = scratch;
+            resize(xs, sub * 2 * b);
+            resize(hidden_b, h * b);
+            resize(gates_i, 3 * h * b);
+            resize(gates_h, 3 * h * b);
+            resize(acc, 8 * b);
+            resize(feat_rows, 2 * sub);
+            hidden_b.fill(0.0);
+            for wi in (0..n_windows).rev() {
+                let w0 = wi * window;
+                let wn = (t_len - w0).min(window);
+                scan.checkpoints[wi * h * b..(wi + 1) * h * b].copy_from_slice(hidden_b);
+                let n_sub = (wn + sub - 1) / sub;
+                for ti in (0..n_sub).rev() {
+                    let t0 = w0 + ti * sub;
+                    let n = (wn - ti * sub).min(sub);
+                    scale_tile_src(src, t0, n, b, feat_rows, xs);
+                    for rel in (0..n).rev() {
+                        let x0 = &xs[(rel * 2) * b..(rel * 2 + 1) * b];
+                        let x1 = &xs[(rel * 2 + 1) * b..(rel * 2 + 2) * b];
+                        step_lanes(&pw.dirs[1], h, b, x0, x1, gates_i, gates_h, acc, hidden_b);
+                    }
+                }
+            }
+        }
+        Ok(scan)
+    }
+
+    /// Emit the next window of posteriors through `sink(t0, n_rows, tile)`
+    /// (`tile` is `[n_rows, B, k_max]`; a window wider than [`BATCH_TILE`]
+    /// arrives as several consecutive sub-tiles). Returns the number of
+    /// timesteps emitted — `0` when the scan is exhausted.
+    ///
+    /// Backward states for the window are recomputed from the window's
+    /// prologue checkpoint; windows wider than one sub-tile first rerun a
+    /// window-local right-to-left sweep to place transient sub-tile
+    /// checkpoints (scratch `[n_sub, H, B]`), keeping resident backward
+    /// state at O([`BATCH_TILE`] · H · B) for any window size.
+    pub fn scan_window<S: LaneFeatures, F>(
+        &self,
+        scan: &mut BatchScan,
+        src: &S,
+        scratch: &mut ScratchArena,
+        mut sink: F,
+    ) -> Result<usize>
+    where
+        F: FnMut(usize, usize, &[f32]) -> Result<()>,
+    {
+        if scan.next >= scan.n_windows {
+            return Ok(0);
+        }
+        ensure!(
+            src.lanes() == scan.b,
+            "scan_window: source has {} lanes, scan expects {}",
+            src.lanes(),
+            scan.b
+        );
         let pw = &self.packed;
         let (h, k) = (pw.h, pw.k_max);
-        let tile = tile.max(1).min(t_len);
-        let n_tiles = (t_len + tile - 1) / tile;
+        let b = scan.b;
+        let wi = scan.next;
+        let w0 = wi * scan.window;
+        let wn = (scan.t_len - w0).min(scan.window);
+        let sub = scan.window.min(BATCH_TILE);
+        let n_sub = (wn + sub - 1) / sub;
 
         let ScratchArena {
             xs,
-            hidden,
             hidden_b,
             gates_i,
             gates_h,
@@ -155,13 +352,13 @@ impl NativeBiGru {
             head_f,
             head_b,
             logits_row,
+            feat_rows,
             bwd_tile,
             checkpoints,
             probs_tile,
             ..
         } = scratch;
-        resize(xs, tile * 2 * b);
-        resize(hidden, h * b);
+        resize(xs, sub * 2 * b);
         resize(hidden_b, h * b);
         resize(gates_i, 3 * h * b);
         resize(gates_h, 3 * h * b);
@@ -170,23 +367,22 @@ impl NativeBiGru {
         resize(head_f, b);
         resize(head_b, b);
         resize(logits_row, k);
-        resize(bwd_tile, tile * h * b);
-        resize(checkpoints, n_tiles * h * b);
-        resize(probs_tile, tile * b * k);
+        resize(feat_rows, 2 * sub);
+        resize(bwd_tile, sub * h * b);
+        resize(checkpoints, n_sub * h * b);
+        resize(probs_tile, sub * b * k);
 
-        // Pass 1 (backward checkpoint sweep): scan right-to-left recording
-        // the carry entering each tile. A single-tile sequence skips the
-        // sweep — its only checkpoint is the zero initial state (set
-        // explicitly: `resize` does not promise cleared contents).
-        if n_tiles == 1 {
-            checkpoints.fill(0.0);
+        let win_cp = &scan.checkpoints[wi * h * b..(wi + 1) * h * b];
+        if n_sub == 1 {
+            checkpoints[..h * b].copy_from_slice(win_cp);
         } else {
-            hidden_b.fill(0.0);
-            for ti in (0..n_tiles).rev() {
-                let t0 = ti * tile;
-                let n = (t_len - t0).min(tile);
+            // Window-local backward sweep: place sub-tile checkpoints.
+            hidden_b.copy_from_slice(win_cp);
+            for ti in (0..n_sub).rev() {
+                let t0 = w0 + ti * sub;
+                let n = (wn - ti * sub).min(sub);
                 checkpoints[ti * h * b..(ti + 1) * h * b].copy_from_slice(hidden_b);
-                scale_tile(features, t0, n, b, xs);
+                scale_tile_src(src, t0, n, b, feat_rows, xs);
                 for rel in (0..n).rev() {
                     let x0 = &xs[(rel * 2) * b..(rel * 2 + 1) * b];
                     let x1 = &xs[(rel * 2 + 1) * b..(rel * 2 + 2) * b];
@@ -196,14 +392,14 @@ impl NativeBiGru {
         }
         let checkpoints = &*checkpoints;
 
-        // Pass 2: per tile (left-to-right) recompute the backward states
-        // from the checkpoint, then run the fused forward + head + softmax
-        // sweep and hand the posterior tile to the sink.
-        hidden.fill(0.0);
-        for ti in 0..n_tiles {
-            let t0 = ti * tile;
-            let n = (t_len - t0).min(tile);
-            scale_tile(features, t0, n, b, xs);
+        // Per sub-tile, left-to-right: recompute the backward states from
+        // the sub-tile checkpoint, then run the fused forward + head +
+        // softmax sweep and hand the posterior tile to the sink.
+        let hidden_fwd = &mut scan.hidden_fwd;
+        for ti in 0..n_sub {
+            let t0 = w0 + ti * sub;
+            let n = (wn - ti * sub).min(sub);
+            scale_tile_src(src, t0, n, b, feat_rows, xs);
             hidden_b.copy_from_slice(&checkpoints[ti * h * b..(ti + 1) * h * b]);
             for rel in (0..n).rev() {
                 let x0 = &xs[(rel * 2) * b..(rel * 2 + 1) * b];
@@ -214,12 +410,12 @@ impl NativeBiGru {
             for rel in 0..n {
                 let x0 = &xs[(rel * 2) * b..(rel * 2 + 1) * b];
                 let x1 = &xs[(rel * 2 + 1) * b..(rel * 2 + 2) * b];
-                step_lanes(&pw.dirs[0], h, b, x0, x1, gates_i, gates_h, acc, hidden);
+                step_lanes(&pw.dirs[0], h, b, x0, x1, gates_i, gates_h, acc, hidden_fwd);
                 let hb = &bwd_tile[rel * h * b..(rel + 1) * h * b];
                 // Fused head: logits[j, lane] = (b_j + dot_fwd) + dot_bwd.
                 for j in 0..k {
                     let row = &pw.w_head[j * 2 * h..(j + 1) * 2 * h];
-                    dot_lanes(&row[..h], hidden, b, acc, head_f);
+                    dot_lanes(&row[..h], hidden_fwd, b, acc, head_f);
                     dot_lanes(&row[h..], hb, b, acc, head_b);
                     let bj = pw.b_head[j];
                     let lrow = &mut logits[j * b..(j + 1) * b];
@@ -237,17 +433,26 @@ impl NativeBiGru {
             }
             sink(t0, n, &probs_tile[..n * b * k])?;
         }
-        Ok(())
+        scan.next += 1;
+        Ok(wn)
     }
 }
 
-/// Scale `(A, ΔA)` features for timesteps `t0 .. t0+n` into lane-major
-/// `[n, 2, B]` (row `2·rel` = x0 over lanes, row `2·rel+1` = x1).
-fn scale_tile(features: &[&[f32]], t0: usize, n: usize, b: usize, xs: &mut [f32]) {
-    for rel in 0..n {
-        let t = t0 + rel;
-        for (lane, f) in features.iter().enumerate() {
-            let (fa, fda) = scale_features(f[2 * t], f[2 * t + 1]);
+/// Pull `(A, ΔA)` features for timesteps `t0 .. t0+n` from `src` and scale
+/// them into lane-major `[n, 2, B]` (row `2·rel` = x0 over lanes, row
+/// `2·rel+1` = x1). `rows` is a per-lane `[n, 2]` staging buffer.
+fn scale_tile_src<S: LaneFeatures>(
+    src: &S,
+    t0: usize,
+    n: usize,
+    b: usize,
+    rows: &mut [f32],
+    xs: &mut [f32],
+) {
+    for lane in 0..b {
+        src.fill(lane, t0, n, rows);
+        for rel in 0..n {
+            let (fa, fda) = scale_features(rows[2 * rel], rows[2 * rel + 1]);
             xs[(rel * 2) * b + lane] = fa;
             xs[(rel * 2 + 1) * b + lane] = fda;
         }
@@ -491,6 +696,81 @@ mod tests {
             })
             .unwrap();
         assert_eq!(next_t0, t_len);
+    }
+
+    #[test]
+    fn resumable_scan_matches_one_shot_bitwise() {
+        // Drive begin_batch_scan / scan_window by hand — windows that don't
+        // divide T (170 = 3×48 + 26) and an interleaved "pause" between
+        // windows — and compare against the one-shot batched output.
+        let model = model_hk(16, 5, 50);
+        let (b, t_len, window) = (3usize, 170usize, 48usize);
+        let k = model.k_max();
+        let feats: Vec<Vec<f32>> = (0..b).map(|l| random_features(t_len, 9000 + l as u64)).collect();
+        let refs: Vec<&[f32]> = feats.iter().map(|f| f.as_slice()).collect();
+        let mut scratch = ScratchArena::new();
+        let mut reference = Vec::new();
+        model.probs_batch_into(&refs, t_len, &mut scratch, &mut reference).unwrap();
+
+        let src = SliceFeatures(&refs);
+        let mut scan = model.begin_batch_scan(&src, t_len, window, &mut scratch).unwrap();
+        assert_eq!(scan.n_windows(), 4);
+        let mut got = vec![0.0f32; t_len * b * k];
+        let mut emitted = 0usize;
+        while !scan.is_done() {
+            assert_eq!(scan.next_t0(), emitted);
+            let n = model
+                .scan_window(&mut scan, &src, &mut scratch, |t0, rows, tp| {
+                    got[t0 * b * k..(t0 + rows) * b * k].copy_from_slice(tp);
+                    Ok(())
+                })
+                .unwrap();
+            assert!(n > 0);
+            emitted += n;
+            // Unrelated work on the same arena between windows must not
+            // perturb the scan (the windowed pipeline interleaves racks).
+            let other = [random_features(9, 77)];
+            let other_refs: Vec<&[f32]> = other.iter().map(|f| f.as_slice()).collect();
+            let mut tmp = Vec::new();
+            model.probs_batch_into(&other_refs, 9, &mut scratch, &mut tmp).unwrap();
+        }
+        assert_eq!(emitted, t_len);
+        assert_eq!(
+            model.scan_window(&mut scan, &src, &mut scratch, |_, _, _| Ok(())).unwrap(),
+            0
+        );
+        for (i, (x, y)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "posterior {i}");
+        }
+    }
+
+    #[test]
+    fn wide_windows_subtile_internally_and_stay_bit_identical() {
+        // A window wider than BATCH_TILE exercises the window-local
+        // checkpoint sweep (n_sub > 1). T=9000, window=5000 → sub-tiles of
+        // 4096 + 904 inside window 0, then a ragged window of 4000.
+        let model = model_hk(8, 3, 51);
+        let (b, t_len, window) = (2usize, 9000usize, 5000usize);
+        let k = model.k_max();
+        let feats: Vec<Vec<f32>> = (0..b).map(|l| random_features(t_len, 9100 + l as u64)).collect();
+        let refs: Vec<&[f32]> = feats.iter().map(|f| f.as_slice()).collect();
+        let mut scratch = ScratchArena::new();
+        let mut reference = Vec::new();
+        model.probs_batch_into(&refs, t_len, &mut scratch, &mut reference).unwrap();
+        let src = SliceFeatures(&refs);
+        let mut scan = model.begin_batch_scan(&src, t_len, window, &mut scratch).unwrap();
+        let mut got = vec![0.0f32; t_len * b * k];
+        while model
+            .scan_window(&mut scan, &src, &mut scratch, |t0, rows, tp| {
+                got[t0 * b * k..(t0 + rows) * b * k].copy_from_slice(tp);
+                Ok(())
+            })
+            .unwrap()
+            > 0
+        {}
+        for (i, (x, y)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "posterior {i}");
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod chunk;
 pub mod native;
 pub mod pjrt;
 
-pub use batch::{ScratchArena, BATCH_TILE};
+pub use batch::{BatchScan, LaneFeatures, ScratchArena, SliceFeatures, BATCH_TILE};
 pub use chunk::{ChunkSpec, Chunked};
 pub use native::{BiGruWeights, NativeBiGru};
 pub use pjrt::PjrtClassifier;

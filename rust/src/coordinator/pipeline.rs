@@ -17,26 +17,38 @@
 //! steady-state generation performs no per-server heap allocation.
 
 use super::FacilityResult;
-use crate::aggregate::FacilityAccumulator;
+use crate::aggregate::{FacilityAccumulator, StreamingFacilityAccumulator};
 use crate::artifacts::{ArtifactStore, ConfigArtifact};
 use crate::catalog::Catalog;
 use crate::classifier::native::BiGruWeights;
 use crate::classifier::{
     pjrt::{AnyClassifier, PjrtBiGru},
-    NativeBiGru, ScratchArena, StateClassifier, BATCH_TILE,
+    BatchScan, LaneFeatures, NativeBiGru, ScratchArena, StateClassifier, BATCH_TILE,
 };
 use crate::config::{ScenarioSpec, WorkloadSpec};
 use crate::runtime::{Executable, Runtime};
-use crate::surrogate::{features_interleaved_into, simulate_queue};
-use crate::synth::{sample_power, sample_power_into, sample_states_lane_into, sample_states_masked_into};
+use crate::surrogate::{features_interleaved_into, simulate_queue, OccupancyEvents};
+use crate::synth::{
+    sample_power, sample_power_into, sample_power_resume, sample_states_lane_into,
+    sample_states_masked_into,
+};
 use crate::util::rng::Rng;
 use crate::util::threadpool::{default_workers, parallel_fold};
 use crate::workload::{
     poisson_arrivals, replay, DiurnalProfile, LengthSampler, Mmpp, Schedule, TrafficMode,
 };
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Per-server RNG stream labels. After the queue simulation, each server's
+/// RNG forks into **independent** state-sampling and power-sampling
+/// streams (rather than one stream consumed states-then-power). Both the
+/// one-shot and the windowed paths draw each stream strictly in time
+/// order, which is what lets the windowed path interleave state and power
+/// sampling per window while staying bit-identical to the one-shot path.
+const RNG_STATES: u64 = 0x57A7E5;
+const RNG_POWER: u64 = 0x90A3E6;
 
 /// Default cap on servers per batched classifier call. Racks wider than
 /// this are split into consecutive sub-batches (still in server order);
@@ -82,14 +94,17 @@ pub struct WorkerScratch {
     feats: Vec<f32>,
     /// Sequential-path posterior buffer.
     probs: Vec<f32>,
-    /// Sequential-path state buffer.
+    /// State buffer: one full trajectory (sequential path) or one streamed
+    /// tile (windowed path).
     states: Vec<usize>,
     /// Per-lane interleaved features (batched path).
     lane_feats: Vec<Vec<f32>>,
     /// Per-lane sampled state trajectories.
     lane_states: Vec<Vec<usize>>,
-    /// Per-lane RNG streams (queue → states → power, as sequentially).
+    /// Per-lane state-sampling RNG streams (fork [`RNG_STATES`]).
     lane_rngs: Vec<Rng>,
+    /// Per-lane power-sampling RNG streams (fork [`RNG_POWER`]).
+    lane_prngs: Vec<Rng>,
     /// Server index of each active lane.
     lane_servers: Vec<usize>,
     /// Power-synthesis buffer (one server at a time).
@@ -113,8 +128,19 @@ pub struct Generator {
     prepared: BTreeMap<String, Arc<PreparedConfig>>,
     /// Parsed replay schedules keyed by path. A replay scenario's base
     /// schedule is immutable, so a 1 000-server facility performs exactly
-    /// one file read + parse per path instead of one per server.
-    replay_cache: Mutex<BTreeMap<String, Arc<Schedule>>>,
+    /// one file read + parse per path instead of one per server. Each path
+    /// gets its own [`ReplaySlot`] so a cold load of one path never blocks
+    /// servers replaying an already-cached other path.
+    replay_cache: Mutex<BTreeMap<String, Arc<ReplaySlot>>>,
+}
+
+/// Per-path replay-cache slot: `init` serializes the (at most one
+/// successful) parse of this path, `cell` publishes the result. The global
+/// map lock is only ever held for the slot lookup — never across file I/O.
+#[derive(Default)]
+struct ReplaySlot {
+    init: Mutex<()>,
+    cell: OnceLock<Arc<Schedule>>,
 }
 
 impl Generator {
@@ -225,6 +251,11 @@ impl Generator {
     ) -> Result<ServerTrace> {
         let n_steps = (horizon_s / dt_s).round() as usize;
         let intervals = simulate_queue(schedule, &art.surrogate, self.cat.campaign.max_batch, rng);
+        // Fork the post-queue RNG into independent state/power streams —
+        // see [`RNG_STATES`]: the windowed path interleaves the two kinds
+        // of draws per window, so they must not share a stream.
+        let mut zrng = rng.fork(RNG_STATES);
+        let mut prng = rng.fork(RNG_POWER);
         let WorkerScratch { arena, diff, feats, probs, states, .. } = scratch;
         features_interleaved_into(&intervals, n_steps, dt_s, diff, feats);
         match classifier.as_native() {
@@ -235,8 +266,8 @@ impl Generator {
         // logits were masked at training time; renormalization happens
         // inside the categorical draw).
         let k_max = classifier.k_max();
-        sample_states_masked_into(probs, k_max, art.k, rng, states);
-        let power_w = sample_power(states, &art.dict, art.mode, rng);
+        sample_states_masked_into(probs, k_max, art.k, &mut zrng, states);
+        let power_w = sample_power(states, &art.dict, art.mode, &mut prng);
         let a = (0..n_steps).map(|t| feats[2 * t]).collect();
         Ok(ServerTrace { power_w, a, states: states.clone() })
     }
@@ -299,18 +330,28 @@ impl Generator {
         })
     }
 
-    /// Load-and-cache the immutable base schedule of a replay trace. The
-    /// lock is deliberately held across the read so each path is parsed
-    /// **exactly once** no matter how many servers (or threads) replay it
-    /// — first-touch serialization is the point, and the steady-state cost
-    /// is one brief lock + `Arc` clone per `schedule_for` call.
+    /// Load-and-cache the immutable base schedule of a replay trace.
+    ///
+    /// Double-checked per-path locking: the global map lock is held only
+    /// for the slot lookup (never across file I/O), so a cold load of path
+    /// A never blocks workers replaying an already-cached path B. The
+    /// per-path `init` mutex still guarantees each path is parsed
+    /// **exactly once** on the success path (a failed parse releases the
+    /// slot for the next caller to retry — the run is aborting anyway).
     fn replay_base(&self, path: &str) -> Result<Arc<Schedule>> {
-        let mut cache = self.replay_cache.lock().unwrap();
-        if let Some(s) = cache.get(path) {
+        let slot = {
+            let mut cache = self.replay_cache.lock().unwrap();
+            cache.entry(path.to_string()).or_default().clone()
+        };
+        if let Some(s) = slot.cell.get() {
+            return Ok(s.clone());
+        }
+        let _init = slot.init.lock().unwrap();
+        if let Some(s) = slot.cell.get() {
             return Ok(s.clone());
         }
         let s = Arc::new(replay::load(std::path::Path::new(path))?);
-        cache.insert(path.to_string(), s.clone());
+        let _ = slot.cell.set(s.clone());
         Ok(s)
     }
 
@@ -490,9 +531,11 @@ impl Generator {
         acc: &mut FacilityAccumulator,
         errors: &Mutex<Vec<String>>,
     ) {
-        let WorkerScratch { arena, diff, lane_feats, lane_states, lane_rngs, lane_servers, power, .. } =
-            scratch;
+        let WorkerScratch {
+            arena, diff, lane_feats, lane_states, lane_rngs, lane_prngs, lane_servers, power, ..
+        } = scratch;
         lane_rngs.clear();
+        lane_prngs.clear();
         lane_servers.clear();
         while lane_feats.len() < s1 - s0 {
             lane_feats.push(Vec::new());
@@ -510,7 +553,8 @@ impl Generator {
                     simulate_queue(&sched, &p.art.surrogate, self.cat.campaign.max_batch, &mut rng);
                 let lane = lane_servers.len();
                 features_interleaved_into(&intervals, n_steps, dt_s, diff, &mut lane_feats[lane]);
-                lane_rngs.push(rng);
+                lane_rngs.push(rng.fork(RNG_STATES));
+                lane_prngs.push(rng.fork(RNG_POWER));
                 lane_servers.push(s);
                 Ok(())
             })();
@@ -546,14 +590,317 @@ impl Generator {
             return;
         }
         // Stage 3 — per server, in index order: state-conditioned power
-        // synthesis and the deterministic rack fold.
+        // synthesis (from the dedicated power stream) and the
+        // deterministic rack fold.
         for (lane, &s) in lane_servers.iter().enumerate() {
-            sample_power_into(&lane_states[lane], &p.art.dict, p.art.mode, &mut lane_rngs[lane], power);
+            sample_power_into(&lane_states[lane], &p.art.dict, p.art.mode, &mut lane_prngs[lane], power);
             if let Err(e) = acc.add_server(s, power) {
                 errors.lock().unwrap().push(format!("server {s}: {e:#}"));
             }
         }
     }
+    /// Windowed streaming facility generation (the >24 h path): prepares
+    /// configurations, then drives [`Generator::facility_shared_windowed`].
+    pub fn facility_windowed<F>(
+        &mut self,
+        spec: &ScenarioSpec,
+        dt_s: f64,
+        window_s: f64,
+        workers: usize,
+        max_batch: usize,
+        sink: F,
+    ) -> Result<()>
+    where
+        F: FnMut(&mut StreamingFacilityAccumulator) -> Result<()>,
+    {
+        self.prepare_for(spec)?;
+        self.facility_shared_windowed(spec, dt_s, window_s, workers, max_batch, sink)
+    }
+
+    /// Facility generation with horizon-independent memory: every rack
+    /// advances through the horizon **one `window_s` window at a time**, in
+    /// lockstep, folding into a bounded [`StreamingFacilityAccumulator`]
+    /// (O(racks × window) sample storage) that `sink` consumes after each
+    /// window barrier — incremental CSV writers, streamed planning stats.
+    ///
+    /// **Bit-identity with the buffered path.** The windowed run produces,
+    /// per rack element, the exact f64 sums of
+    /// [`Generator::facility_shared_batched`] on the same `(spec, seed)`:
+    /// the classifier windows reuse the same resumable checkpointed scan
+    /// the one-shot path drives ([`NativeBiGru::begin_batch_scan`]), the
+    /// per-window features are exact reconstructions from compressed
+    /// occupancy events, and the per-server state/power RNG streams (see
+    /// [`RNG_STATES`]) are each consumed strictly in time order in both
+    /// modes. Peak/mean/energy statistics and exported CSV bytes therefore
+    /// match the buffered export wherever both can run.
+    ///
+    /// Persistent per-rack state is O(workload events + windows·H·B) — the
+    /// compressed arrival/occupancy timeline (independent of `dt_s`) plus
+    /// the scan's window checkpoints; no per-timestep buffer survives a
+    /// window. Requires the native backend (the PJRT artifact has a fixed
+    /// one-shot shape).
+    ///
+    /// `sink` runs on the caller thread between window barriers; it reads
+    /// the accumulator's window (`window_t0()`, `window_len()`,
+    /// `rack_window(r)`, `fold_rows_site`).
+    pub fn facility_shared_windowed<F>(
+        &self,
+        spec: &ScenarioSpec,
+        dt_s: f64,
+        window_s: f64,
+        workers: usize,
+        max_batch: usize,
+        mut sink: F,
+    ) -> Result<()>
+    where
+        F: FnMut(&mut StreamingFacilityAccumulator) -> Result<()>,
+    {
+        ensure!(
+            dt_s.is_finite() && dt_s > 0.0,
+            "dt must be a positive number of seconds (got {dt_s})"
+        );
+        ensure!(
+            window_s.is_finite() && window_s > 0.0,
+            "window must be a positive number of seconds (got {window_s})"
+        );
+        let n_racks = spec.topology.n_racks();
+        let n_steps = (spec.horizon_s / dt_s).round() as usize;
+        ensure!(
+            n_steps > 0,
+            "horizon {}s too short for dt {dt_s}s (zero samples)",
+            spec.horizon_s
+        );
+        let window = ((window_s / dt_s).round() as usize).clamp(1, n_steps);
+        let max_batch = if max_batch == 0 { DEFAULT_MAX_BATCH } else { max_batch };
+        let mut table: BTreeMap<String, Arc<PreparedConfig>> = BTreeMap::new();
+        for id in spec.server_config.config_ids_used(&spec.topology) {
+            let p = self.get_prepared(&id).with_context(|| {
+                format!("config '{id}' not prepared (call Generator::prepare first)")
+            })?;
+            ensure!(
+                p.cls.as_native().is_some(),
+                "windowed streaming generation requires the native backend \
+                 (config '{id}' is prepared for PJRT)"
+            );
+            table.insert(id, p);
+        }
+        let base_rng = Rng::new(spec.seed);
+        let workers = if workers == 0 { default_workers() } else { workers };
+        let mut acc = StreamingFacilityAccumulator::new(spec.topology, window, spec.p_base_w);
+        let slots: Vec<Mutex<Option<RackStream>>> =
+            (0..n_racks).map(|_| Mutex::new(None)).collect();
+        // One warm scratch arena per worker, shared across *all* windows —
+        // per-window parallel passes borrow a free slot instead of
+        // regrowing the (multi-MB) arenas thousands of times on a
+        // week-long horizon.
+        let scratch_pool: Vec<Mutex<WorkerScratch>> =
+            (0..workers).map(|_| Mutex::new(WorkerScratch::new())).collect();
+        let errors = Mutex::new(Vec::<String>::new());
+        let n_windows = (n_steps + window - 1) / window;
+        for wi in 0..n_windows {
+            let t0 = wi * window;
+            let n = (n_steps - t0).min(window);
+            acc.begin_window(t0, n);
+            let acc_ref = &acc;
+            let errors_ref = &errors;
+            let table_ref = &table;
+            let slots_ref = &slots;
+            let base_ref = &base_rng;
+            let pool_ref = &scratch_pool;
+            parallel_fold(
+                n_racks,
+                workers,
+                || (),
+                |_, rack| {
+                    let mut scratch = lock_any_scratch(pool_ref);
+                    let scratch = &mut *scratch;
+                    let mut slot = slots_ref[rack].lock().unwrap();
+                    if wi == 0 {
+                        debug_assert!(slot.is_none());
+                        match self.build_rack_stream(
+                            spec, rack, n_steps, dt_s, window, max_batch, table_ref, base_ref,
+                            scratch,
+                        ) {
+                            Ok(rs) => *slot = Some(rs),
+                            Err(e) => {
+                                errors_ref.lock().unwrap().push(format!("rack {rack}: {e:#}"));
+                                return;
+                            }
+                        }
+                    }
+                    let Some(rs) = slot.as_mut() else { return };
+                    if let Err(e) = self.scan_rack_window(rs, scratch, acc_ref, t0, n) {
+                        errors_ref.lock().unwrap().push(format!("rack {rack}: {e:#}"));
+                        *slot = None;
+                    }
+                },
+                |a, _b| a,
+            );
+            {
+                let errs = errors.lock().unwrap();
+                if !errs.is_empty() {
+                    anyhow::bail!("windowed facility generation failed: {}", errs.join("; "));
+                }
+            }
+            sink(&mut acc)?;
+        }
+        Ok(())
+    }
+
+    /// Build one rack's resumable generation state: per server, the
+    /// workload schedule → queue simulation → **compressed** occupancy
+    /// events (the O(T) buffers are transient scratch), plus the forked
+    /// state/power RNG streams and the classifier's backward-checkpoint
+    /// prologue over the full horizon.
+    #[allow(clippy::too_many_arguments)]
+    fn build_rack_stream(
+        &self,
+        spec: &ScenarioSpec,
+        rack: usize,
+        n_steps: usize,
+        dt_s: f64,
+        window: usize,
+        max_batch: usize,
+        table: &BTreeMap<String, Arc<PreparedConfig>>,
+        base_rng: &Rng,
+        scratch: &mut WorkerScratch,
+    ) -> Result<RackStream> {
+        let per_rack = spec.topology.servers_per_rack;
+        let s_begin = rack * per_rack;
+        let id = spec.server_config.config_for(&spec.topology, s_begin);
+        let prepared = table[id].clone();
+        let native = prepared.cls.as_native().expect("checked in facility_shared_windowed");
+        let mut batches = Vec::new();
+        let mut s0 = s_begin;
+        while s0 < s_begin + per_rack {
+            let s1 = (s0 + max_batch).min(s_begin + per_rack);
+            let mut events = Vec::with_capacity(s1 - s0);
+            let mut zrngs = Vec::with_capacity(s1 - s0);
+            let mut prngs = Vec::with_capacity(s1 - s0);
+            for s in s0..s1 {
+                let sched = self
+                    .schedule_for(spec, s, base_rng)
+                    .with_context(|| format!("server {s}"))?;
+                let mut rng = base_rng.fork(0x5E21 ^ s as u64);
+                let intervals = simulate_queue(
+                    &sched,
+                    &prepared.art.surrogate,
+                    self.cat.campaign.max_batch,
+                    &mut rng,
+                );
+                events.push(OccupancyEvents::from_intervals_with(
+                    &intervals,
+                    n_steps,
+                    dt_s,
+                    &mut scratch.diff,
+                ));
+                zrngs.push(rng.fork(RNG_STATES));
+                prngs.push(rng.fork(RNG_POWER));
+            }
+            let carries = vec![None; s1 - s0];
+            let scan =
+                native.begin_batch_scan(&EventLanes(&events), n_steps, window, &mut scratch.arena)?;
+            batches.push(LaneBatch { s0, events, zrngs, prngs, carries, scan });
+            s0 = s1;
+        }
+        Ok(RackStream { prepared, batches })
+    }
+
+    /// Advance one rack by one window: emit the window's posteriors from
+    /// the resumable scan, sample each lane's states and power per
+    /// streamed sub-tile (state and power streams each consumed in time
+    /// order — the one-shot draw sequences), and fold into the window
+    /// accumulator in server order.
+    fn scan_rack_window(
+        &self,
+        rs: &mut RackStream,
+        scratch: &mut WorkerScratch,
+        acc: &StreamingFacilityAccumulator,
+        t0: usize,
+        n: usize,
+    ) -> Result<()> {
+        let RackStream { prepared, batches } = rs;
+        let native = prepared.cls.as_native().expect("native-only path");
+        let k = prepared.art.k;
+        let k_max = prepared.cls.k_max();
+        let WorkerScratch { arena, states, power, .. } = scratch;
+        for lb in batches.iter_mut() {
+            let LaneBatch { s0, events, zrngs, prngs, carries, scan } = lb;
+            let b = events.len();
+            ensure!(scan.next_t0() == t0, "rack scan out of lockstep at t0 {t0}");
+            let src = EventLanes(events);
+            let emitted = native.scan_window(scan, &src, arena, |abs_t0, rows, tile| {
+                for lane in 0..b {
+                    states.clear();
+                    sample_states_lane_into(
+                        tile, rows, lane, b, k_max, k, &mut zrngs[lane], states,
+                    );
+                    sample_power_resume(
+                        states,
+                        &prepared.art.dict,
+                        prepared.art.mode,
+                        &mut prngs[lane],
+                        &mut carries[lane],
+                        power,
+                    );
+                    acc.add_server_tile(*s0 + lane, abs_t0 - t0, power)?;
+                }
+                Ok(())
+            })?;
+            ensure!(emitted == n, "rack window emitted {emitted} steps, expected {n}");
+        }
+        Ok(())
+    }
+}
+
+/// Borrow any free scratch slot. The pool is sized to the worker count,
+/// so at most `workers` concurrent tasks compete for `workers` slots — a
+/// free one always exists modulo transient hand-off races, which the
+/// yield-and-rescan loop absorbs.
+fn lock_any_scratch(pool: &[Mutex<WorkerScratch>]) -> std::sync::MutexGuard<'_, WorkerScratch> {
+    loop {
+        for m in pool {
+            if let Ok(g) = m.try_lock() {
+                return g;
+            }
+        }
+        std::thread::yield_now();
+    }
+}
+
+/// [`LaneFeatures`] over per-lane compressed occupancy timelines — the
+/// windowed pipeline's bounded-memory feature source.
+struct EventLanes<'a>(&'a [OccupancyEvents]);
+
+impl LaneFeatures for EventLanes<'_> {
+    fn lanes(&self) -> usize {
+        self.0.len()
+    }
+
+    fn fill(&self, lane: usize, t0: usize, n: usize, out: &mut [f32]) {
+        self.0[lane].fill_interleaved(t0, n, out);
+    }
+}
+
+/// One rack's persistent streaming state: its prepared configuration plus
+/// one [`LaneBatch`] per `max_batch` sub-batch (same split as the buffered
+/// path, so the per-element fold order matches).
+struct RackStream {
+    prepared: Arc<PreparedConfig>,
+    batches: Vec<LaneBatch>,
+}
+
+/// One sub-batch of a rack mid-scan: compressed per-lane workloads, the
+/// resumable classifier scan, and each lane's sampling streams/carries.
+struct LaneBatch {
+    /// First server index of this sub-batch (lane `l` is server `s0 + l`).
+    s0: usize,
+    events: Vec<OccupancyEvents>,
+    zrngs: Vec<Rng>,
+    prngs: Vec<Rng>,
+    /// AR(1) carry per lane (None before the first sample).
+    carries: Vec<Option<f64>>,
+    scan: BatchScan,
 }
 
 // Integration tests for the full pipeline live in rust/tests/ (they need

@@ -126,9 +126,9 @@ pub fn run(args: &Args) -> Result<()> {
 
     // ---- Fig 9: 15-min site profile + 5-min arrival rate ----
     let site = study.ours.facility_series(pue);
-    let site_15m = resample(&site, dt, 900.0);
+    let site_15m = resample(&site, dt, 900.0)?;
     println!("\nFig 9 — 24 h facility profile ({} servers, PUE {pue})", study.topo.n_servers());
-    let st = PlanningStats::compute(&site, dt, 900.0);
+    let st = PlanningStats::compute(&site, dt, 900.0)?;
     println!("  site peak {:.2} MW, avg {:.2} MW (15-min series has {} points)",
         st.peak_w / 1e6, st.avg_w / 1e6, site_15m.len());
     ctx.write_csv("fig9", "site_15min", &["site_mw"], &[&site_15m.iter().map(|&x| x / 1e6).collect::<Vec<f32>>()])?;
@@ -148,7 +148,7 @@ pub fn run(args: &Args) -> Result<()> {
         "Metric", "TDP", "Mean", "LUT-Based", "Ours"
     );
     let stats: Vec<PlanningStats> =
-        methods.iter().map(|(_, s)| PlanningStats::compute(s, dt, 900.0)).collect();
+        methods.iter().map(|(_, s)| PlanningStats::compute(s, dt, 900.0)).collect::<Result<Vec<_>>>()?;
     let row = |name: &str, f: &dyn Fn(&PlanningStats) -> f64, prec: usize| {
         println!(
             "{:<26} {:>8.prec$} {:>8.prec$} {:>10.prec$} {:>8.prec$}",
@@ -182,7 +182,7 @@ pub fn run(args: &Args) -> Result<()> {
     for r in 0..study.topo.n_racks() {
         let series = study.ours.rack_series(r);
         let slice = &series[start..(start + window).min(series.len())];
-        rack_cols.push(resample(slice, dt, 300.0).iter().map(|&x| x / 1e3).collect());
+        rack_cols.push(resample(slice, dt, 300.0)?.iter().map(|&x| x / 1e3).collect());
     }
     let refs: Vec<&[f32]> = rack_cols.iter().map(|c| c.as_slice()).collect();
     let headers: Vec<String> = (0..rack_cols.len()).map(|r| format!("rack{r}_kw")).collect();
@@ -202,10 +202,10 @@ pub fn run(args: &Args) -> Result<()> {
     let server = &study.server0;
     let rack0 = study.ours.rack_series(0);
     let row0 = study.ours.row_series(0);
-    let cov_server = coefficient_of_variation(server);
-    let cov_rack = coefficient_of_variation(&rack0);
-    let cov_row = coefficient_of_variation(&row0);
-    let cov_site = coefficient_of_variation(&site);
+    let cov_server = coefficient_of_variation(server)?;
+    let cov_rack = coefficient_of_variation(&rack0)?;
+    let cov_row = coefficient_of_variation(&row0)?;
+    let cov_site = coefficient_of_variation(&site)?;
     println!("\nFig 12 — aggregation across the hierarchy (CoV cascade)");
     println!(
         "  CoV: server {cov_server:.3} → rack {cov_rack:.3} → row {cov_row:.3} → site {cov_site:.3} \
@@ -217,10 +217,10 @@ pub fn run(args: &Args) -> Result<()> {
         "hierarchy_15min",
         &["server_kw", "rack_kw", "row_kw", "site_kw"],
         &[
-            &resample(server, dt, 900.0).iter().map(|&x| x / 1e3).collect::<Vec<f32>>(),
-            &resample(&rack0, dt, 900.0).iter().map(|&x| x / 1e3).collect::<Vec<f32>>(),
-            &resample(&row0, dt, 900.0).iter().map(|&x| x / 1e3).collect::<Vec<f32>>(),
-            &resample(&site, dt, 900.0).iter().map(|&x| x / 1e3).collect::<Vec<f32>>(),
+            &resample(server, dt, 900.0)?.iter().map(|&x| x / 1e3).collect::<Vec<f32>>(),
+            &resample(&rack0, dt, 900.0)?.iter().map(|&x| x / 1e3).collect::<Vec<f32>>(),
+            &resample(&row0, dt, 900.0)?.iter().map(|&x| x / 1e3).collect::<Vec<f32>>(),
+            &resample(&site, dt, 900.0)?.iter().map(|&x| x / 1e3).collect::<Vec<f32>>(),
         ],
     )?;
     Ok(())

@@ -243,14 +243,14 @@ pub fn fig8(args: &Args) -> Result<()> {
     let lut = acc_lut.facility_series(pue);
     let tdp_w = ctx.gen.cat.server_nameplate_w(&cfg) * topo.n_servers() as f64 * pue;
     let mean_w = (art.train_mean_w + spec.p_base_w) * topo.n_servers() as f64 * pue;
-    let stats = |s: &[f32]| {
-        let st = metrics::PlanningStats::compute(s, dt, 60.0);
-        (st.peak_w / 1e3, st.avg_w / 1e3)
+    let stats = |s: &[f32]| -> anyhow::Result<(f64, f64)> {
+        let st = metrics::PlanningStats::compute(s, dt, 60.0)?;
+        Ok((st.peak_w / 1e3, st.avg_w / 1e3))
     };
     println!("Fig 8 — 15-min facility power, {n_servers} servers ({id}), kW:");
-    let (pk, av) = stats(&ours);
+    let (pk, av) = stats(&ours)?;
     println!("  ours: peak {pk:.0} kW avg {av:.0} kW");
-    let (pk, av) = stats(&lut);
+    let (pk, av) = stats(&lut)?;
     println!("  LUT : peak {pk:.0} kW avg {av:.0} kW");
     println!("  Mean: flat {:.0} kW   TDP: flat {:.0} kW", mean_w / 1e3, tdp_w / 1e3);
     let tdp_series = vec![(tdp_w / 1.0) as f32; n_steps.min(8)];

@@ -106,7 +106,7 @@ pub fn run(args: &Args) -> Result<()> {
                 *o += p;
             }
             let series: Vec<f32> = row.iter().map(|&x| (x / 1e3) as f32).collect();
-            let p95 = percentile(&series, 95.0);
+            let p95 = percentile(&series, 95.0).expect("non-empty row series");
             curve.push(p95 as f32);
             if p95 <= limit_kw {
                 max_ok = r + 1;

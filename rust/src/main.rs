@@ -9,13 +9,23 @@
 //!   testbed    run the synthetic measurement testbed (ground truth)
 //!   info       catalog + artifact inventory
 
+// Same clippy policy as the library crate root (see rust/src/lib.rs):
+// clippy is a CI gate; these style lints conflict with the CLI's
+// deliberate long-literal help tables and format-heavy reporting.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::uninlined_format_args,
+    clippy::useless_format,
+    clippy::format_push_string
+)]
+
 use anyhow::Result;
 use powertrace_sim::catalog::Catalog;
 use powertrace_sim::config::ScenarioSpec;
 use powertrace_sim::coordinator::Generator;
 use powertrace_sim::experiments;
 use powertrace_sim::metrics::PlanningStats;
-use powertrace_sim::scenarios::{run_sweep, SweepGrid, SweepOptions};
+use powertrace_sim::scenarios::{run_sweep_to, SweepGrid, SweepOptions};
 use powertrace_sim::states::{select_k, EmOptions};
 use powertrace_sim::testbed;
 use powertrace_sim::util::cli::{usage, Args, Opt};
@@ -105,7 +115,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let mut rng = Rng::new(seed);
     let sched = poisson_arrivals(rate, horizon, &lengths, &mut rng);
     let tr = gen.server_trace(&art, &cls, &sched, horizon, 0.25, &mut rng)?;
-    let stats = PlanningStats::compute(&tr.power_w, 0.25, 60.0);
+    let stats = PlanningStats::compute(&tr.power_w, 0.25, 60.0)?;
     println!(
         "generated {} samples @250ms for {id} (λ={rate}): peak {:.0} W, avg {:.0} W, PAR {:.2}",
         tr.power_w.len(),
@@ -125,6 +135,18 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_facility(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!("{}", usage("facility", "run a facility scenario → site load shape", &[
+            Opt { name: "scenario", help: "scenario JSON (default: built-in demo)", default: None },
+            Opt { name: "dt", help: "generation sample interval (s)", default: Some("1") },
+            Opt { name: "workers", help: "worker threads (0 = auto)", default: Some("0") },
+            Opt { name: "window", help: "streaming window (s; 0 = buffered). Memory stays O(racks × window) — use for >24 h horizons", default: Some("0") },
+            Opt { name: "resample", help: "--out export interval (s)", default: Some("900") },
+            Opt { name: "out", help: "CSV output path for the facility series", default: None },
+            Opt { name: "backend", help: "classifier backend (native|pjrt; streaming requires native)", default: Some("pjrt") },
+        ]));
+        return Ok(());
+    }
     let mut gen = Generator::with_backend(&args.str_or("backend", "pjrt"))?;
     let spec = match args.str_opt("scenario") {
         Some(path) => ScenarioSpec::load(std::path::Path::new(path))?,
@@ -140,22 +162,21 @@ fn cmd_facility(args: &Args) -> Result<()> {
     };
     let dt = args.f64_or("dt", 1.0)?;
     let workers = args.usize_or("workers", 0)?;
+    let window_s = args.f64_or("window", 0.0)?;
     let t0 = std::time::Instant::now();
+    if window_s > 0.0 {
+        return cmd_facility_streamed(&mut gen, &spec, dt, window_s, workers, args, t0);
+    }
     let result = gen.facility(&spec, dt, workers)?;
     let site = result.facility_series();
-    let stats = PlanningStats::compute(&site, dt, 900.0);
-    println!(
-        "facility: {} servers, {:.1} h, dt={dt}s → peak {:.3} MW avg {:.3} MW PAR {:.2} ({:.1}s wall)",
-        spec.topology.n_servers(),
-        spec.horizon_s / 3600.0,
-        stats.peak_w / 1e6,
-        stats.avg_w / 1e6,
-        stats.peak_to_average,
-        t0.elapsed().as_secs_f64()
-    );
+    // Same ramp-interval clamp as the streamed path (and the sweep
+    // engine), so --window never changes the reported stats.
+    let ramp_s = 900.0_f64.min(spec.horizon_s / 2.0).max(dt);
+    let stats = PlanningStats::compute(&site, dt, ramp_s)?;
+    print_facility_summary(&spec, dt, &stats, true, 0.0, t0.elapsed().as_secs_f64());
     if let Some(out) = args.str_opt("out") {
         let resample_s = args.f64_or("resample", 900.0)?;
-        let series = powertrace_sim::aggregate::resample(&site, dt, resample_s);
+        let series = powertrace_sim::aggregate::resample(&site, dt, resample_s)?;
         let mut s = String::from("t_s,facility_w\n");
         for (i, &p) in series.iter().enumerate() {
             s.push_str(&format!("{},{p}\n", i as f64 * resample_s));
@@ -164,6 +185,91 @@ fn cmd_facility(args: &Args) -> Result<()> {
         println!("wrote {out}");
     }
     Ok(())
+}
+
+/// `powertrace facility --window N`: windowed streaming generation — the
+/// horizon never lives in memory; stats fold per window and the optional
+/// `--out` CSV is appended incrementally.
+fn cmd_facility_streamed(
+    gen: &mut Generator,
+    spec: &ScenarioSpec,
+    dt: f64,
+    window_s: f64,
+    workers: usize,
+    args: &Args,
+    t0: std::time::Instant,
+) -> Result<()> {
+    use powertrace_sim::metrics::planning::{StreamingPlanningStats, StreamingResampler};
+    use std::io::Write as _;
+    let mut stats = StreamingPlanningStats::new(dt, 900.0_f64.min(spec.horizon_s / 2.0).max(dt))?;
+    let resample_s = args.f64_or("resample", 900.0)?;
+    let mut writer = match args.str_opt("out") {
+        Some(out) => {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(out)?);
+            f.write_all(b"t_s,facility_w\n")?;
+            Some((f, StreamingResampler::new(dt, resample_s, 1.0)?, 0usize, out.to_string()))
+        }
+        None => None,
+    };
+    let mut rows = Vec::new();
+    let mut site = Vec::new();
+    let mut pcc = Vec::new();
+    gen.facility_windowed(spec, dt, window_s, workers, 0, |acc| {
+        acc.fold_rows_site(&mut rows, &mut site);
+        pcc.clear();
+        pcc.extend(site.iter().map(|&x| ((x as f32) as f64 * spec.pue) as f32));
+        stats.push_slice(&pcc);
+        if let Some((f, r, n, _)) = writer.as_mut() {
+            for &p in &pcc {
+                if let Some(v) = r.push(p as f64) {
+                    writeln!(f, "{},{v}", *n as f64 * resample_s)?;
+                    *n += 1;
+                }
+            }
+        }
+        Ok(())
+    })?;
+    if let Some((mut f, mut r, mut n, path)) = writer {
+        if let Some((v, _)) = r.flush() {
+            writeln!(f, "{},{v}", n as f64 * resample_s)?;
+            n += 1;
+        }
+        f.flush()?;
+        println!("wrote {path} ({n} rows @{resample_s}s, appended per {window_s}s window)");
+    }
+    let out = stats.finalize()?;
+    print_facility_summary(
+        spec,
+        dt,
+        &out.stats,
+        out.exact_quantiles,
+        out.p99_error_bound_w,
+        t0.elapsed().as_secs_f64(),
+    );
+    Ok(())
+}
+
+fn print_facility_summary(
+    spec: &ScenarioSpec,
+    dt: f64,
+    stats: &PlanningStats,
+    exact: bool,
+    p99_bound_w: f64,
+    wall_s: f64,
+) {
+    println!(
+        "facility: {} servers, {:.1} h, dt={dt}s → peak {:.3} MW avg {:.3} MW p99 {:.3} MW{} \
+         energy {:.2} MWh PAR {:.2} ({:.1}s wall)",
+        spec.topology.n_servers(),
+        spec.horizon_s / 3600.0,
+        stats.peak_w / 1e6,
+        stats.avg_w / 1e6,
+        stats.p99_w / 1e6,
+        if exact { String::new() } else { format!(" (±{:.4} MW hist)", p99_bound_w / 1e6) },
+        stats.energy_kwh / 1e3,
+        stats.peak_to_average,
+        wall_s
+    );
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
@@ -176,8 +282,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             Opt { name: "workers", help: "concurrent scenarios (0 = auto)", default: Some("0") },
             Opt { name: "server-workers", help: "threads per scenario (0 = auto)", default: Some("0") },
             Opt { name: "max-batch", help: "servers per batched classifier call (0 = auto, 1 = sequential)", default: Some("0") },
+            Opt { name: "window", help: "streaming window (s; 0 = buffered). Cells generate window-by-window with O(racks × window) memory and CSVs stream into --out", default: Some("0") },
             Opt { name: "horizon", help: "horizon for the built-in demo grid (s)", default: Some("600") },
-            Opt { name: "backend", help: "classifier backend (native|pjrt)", default: Some("pjrt") },
+            Opt { name: "backend", help: "classifier backend (native|pjrt; streaming requires native)", default: Some("pjrt") },
         ]));
         return Ok(());
     }
@@ -208,10 +315,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         scenario_workers: args.usize_or("workers", 0)?,
         server_workers: args.usize_or("server-workers", 0)?,
         max_batch: args.usize_or("max-batch", 0)?,
+        window_s: args.f64_or("window", 0.0)?,
         ..SweepOptions::default()
     };
     let t0 = std::time::Instant::now();
-    let report = run_sweep(&mut gen, &grid, &opts)?;
+    let stream_dir = args.str_opt("out").map(std::path::PathBuf::from);
+    let report = run_sweep_to(&mut gen, &grid, &opts, stream_dir.as_deref())?;
     println!(
         "sweep '{}': {} cells × {} servers/cell-max, dt={}s ({:.1}s wall)\n",
         grid.name,
@@ -263,7 +372,7 @@ fn cmd_testbed(args: &Args) -> Result<()> {
     let sched = poisson_arrivals(rate, horizon, &lengths, &mut rng);
     let opts = testbed::EngineOptions::from_catalog(&cat, horizon);
     let tr = testbed::simulate(&cat, cfg, &sched, &opts, &mut rng);
-    let stats = PlanningStats::compute(&tr.power_w, opts.dt_sample, 60.0);
+    let stats = PlanningStats::compute(&tr.power_w, opts.dt_sample, 60.0)?;
     println!(
         "testbed {id} λ={rate}: {} samples, peak {:.0} W avg {:.0} W, {} requests completed",
         tr.power_w.len(),

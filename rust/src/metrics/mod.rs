@@ -14,7 +14,11 @@ pub mod planning;
 pub use acf::{acf, acf_r2};
 pub use error::{delta_energy, nrmse};
 pub use ks::ks_statistic;
-pub use planning::{coefficient_of_variation, max_ramp, peak_to_average, percentile, PlanningStats};
+pub use planning::{
+    coefficient_of_variation, max_ramp, peak_to_average, percentile, resample_mean,
+    resample_mean_with_tail, resample_stride, PlanningStats, StreamedStats, StreamingHistogram,
+    StreamingPlanningStats, StreamingResampler, EXACT_QUANTILE_CAP, QUANTILE_BINS,
+};
 
 /// Summary of the paper's four fidelity metrics for one (measured, synthetic)
 /// trace pair (Table 1 / Table 2 row fragments).

@@ -1,6 +1,19 @@
 //! Planner-facing load-shape statistics (paper Table 3 and §4.5):
-//! peak, average, peak-to-average ratio, maximum ramp rate at a given
-//! interval, load factor, coefficient of variation, and percentiles.
+//! peak, average, energy, peak-to-average ratio, maximum ramp rate at a
+//! given interval, load factor, coefficient of variation, and percentiles
+//! — plus the **streaming** variants ([`StreamingPlanningStats`],
+//! [`StreamingResampler`], [`StreamingHistogram`]) the >24 h windowed
+//! facility path folds per window without ever materializing the series.
+//!
+//! Error handling: these functions sit directly under user-supplied sweep
+//! JSON (`dt`, export intervals) and generated series that can, in
+//! degenerate scenarios, be empty — so invalid inputs are `anyhow` errors
+//! surfaced by the CLI, never panics. Non-finite (NaN) samples are
+//! **ignored** by [`percentile`] (documented policy; a NaN can never abort
+//! a multi-hour run), and sorting uses `f32::total_cmp`, which is total
+//! over every bit pattern.
+
+use anyhow::{ensure, Result};
 
 /// Summary statistics of a facility/row/rack power series.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -9,6 +22,10 @@ pub struct PlanningStats {
     pub avg_w: f64,
     /// 99th-percentile power — the paper's oversubscription operating point.
     pub p99_w: f64,
+    /// Total energy over the series, from the raw samples and the true
+    /// elapsed time (`Σ P·dt`), **not** from a resampled series — the
+    /// partial trailing resample window carries no weight bias here.
+    pub energy_kwh: f64,
     pub peak_to_average: f64,
     /// Max |ΔP| between consecutive aggregated intervals (W per interval).
     pub max_ramp_w: f64,
@@ -21,76 +38,452 @@ pub struct PlanningStats {
 impl PlanningStats {
     /// Compute stats over `series` (sampled at `dt_s`), with ramps measured
     /// on `ramp_interval_s` averages (the paper uses 15-minute ramps).
-    pub fn compute(series: &[f32], dt_s: f64, ramp_interval_s: f64) -> PlanningStats {
-        assert!(!series.is_empty(), "PlanningStats: empty series");
+    ///
+    /// Errors on an empty series or non-positive `dt_s` /
+    /// `ramp_interval_s` (both reachable from sweep JSON).
+    pub fn compute(series: &[f32], dt_s: f64, ramp_interval_s: f64) -> Result<PlanningStats> {
+        ensure!(!series.is_empty(), "planning stats: empty power series");
+        ensure!(
+            dt_s.is_finite() && dt_s > 0.0,
+            "planning stats: dt must be positive seconds (got {dt_s})"
+        );
         let peak = series.iter().fold(f64::NEG_INFINITY, |m, &x| m.max(x as f64));
-        let avg = series.iter().map(|&x| x as f64).sum::<f64>() / series.len() as f64;
-        let ramp = max_ramp(series, dt_s, ramp_interval_s);
-        PlanningStats {
+        let sum = series.iter().map(|&x| x as f64).sum::<f64>();
+        let avg = sum / series.len() as f64;
+        let ramp = max_ramp(series, dt_s, ramp_interval_s)?;
+        Ok(PlanningStats {
             peak_w: peak,
             avg_w: avg,
-            p99_w: percentile(series, 99.0),
+            p99_w: percentile(series, 99.0)?,
+            energy_kwh: sum * dt_s / 3.6e6,
             peak_to_average: if avg.abs() > 1e-12 { peak / avg } else { f64::INFINITY },
             max_ramp_w: ramp,
             load_factor: if peak.abs() > 1e-12 { avg / peak } else { 0.0 },
-            cv: coefficient_of_variation(series),
-        }
+            cv: coefficient_of_variation(series)?,
+        })
     }
 }
 
 /// Samples per resampling window: `interval_s / dt_s` rounded, clamped to
 /// at least 1. The single source of truth for windowing geometry, shared
-/// by [`resample_mean`] and the aggregate module's f64 resampler.
-pub fn resample_stride(dt_s: f64, interval_s: f64) -> usize {
-    assert!(dt_s > 0.0 && interval_s > 0.0);
-    (interval_s / dt_s).round().max(1.0) as usize
+/// by [`resample_mean`], the aggregate module's f64 resampler, and the
+/// streaming export writers. Errors on non-positive or non-finite inputs
+/// (reachable from sweep JSON `dt` / export intervals).
+pub fn resample_stride(dt_s: f64, interval_s: f64) -> Result<usize> {
+    ensure!(
+        dt_s.is_finite() && dt_s > 0.0,
+        "resample: dt must be positive seconds (got {dt_s})"
+    );
+    ensure!(
+        interval_s.is_finite() && interval_s > 0.0,
+        "resample: interval must be positive seconds (got {interval_s})"
+    );
+    Ok((interval_s / dt_s).round().max(1.0) as usize)
 }
 
-/// Average `series` (at `dt_s`) into windows of `interval_s` (the last
-/// partial window is averaged over its actual length).
-pub fn resample_mean(series: &[f32], dt_s: f64, interval_s: f64) -> Vec<f32> {
-    series
-        .chunks(resample_stride(dt_s, interval_s))
+/// Average `series` (at `dt_s`) into windows of `interval_s`. The last
+/// partial window is averaged over its **actual** length — consumers that
+/// weight resampled points by `interval_s` (energy integrals) must use
+/// [`resample_mean_with_tail`] to learn the true weight of the final point.
+pub fn resample_mean(series: &[f32], dt_s: f64, interval_s: f64) -> Result<Vec<f32>> {
+    Ok(resample_mean_with_tail(series, dt_s, interval_s)?.0)
+}
+
+/// [`resample_mean`] plus the sample count of the final window: equal to
+/// the stride when the horizon divides evenly, smaller for a partial
+/// trailing window, `0` for an empty series. Multiplying every resampled
+/// point by `interval_s` overstates tail energy unless the final point is
+/// weighted by `tail_count · dt_s` instead.
+pub fn resample_mean_with_tail(
+    series: &[f32],
+    dt_s: f64,
+    interval_s: f64,
+) -> Result<(Vec<f32>, usize)> {
+    let stride = resample_stride(dt_s, interval_s)?;
+    let out: Vec<f32> = series
+        .chunks(stride)
         .map(|c| (c.iter().map(|&x| x as f64).sum::<f64>() / c.len() as f64) as f32)
-        .collect()
+        .collect();
+    let tail = match series.len() % stride {
+        0 if series.is_empty() => 0,
+        0 => stride,
+        r => r,
+    };
+    Ok((out, tail))
 }
 
 /// Maximum absolute difference between consecutive `interval_s` averages.
-pub fn max_ramp(series: &[f32], dt_s: f64, interval_s: f64) -> f64 {
-    let agg = resample_mean(series, dt_s, interval_s);
-    agg.windows(2).map(|w| (w[1] as f64 - w[0] as f64).abs()).fold(0.0, f64::max)
+pub fn max_ramp(series: &[f32], dt_s: f64, interval_s: f64) -> Result<f64> {
+    let agg = resample_mean(series, dt_s, interval_s)?;
+    Ok(agg.windows(2).map(|w| (w[1] as f64 - w[0] as f64).abs()).fold(0.0, f64::max))
 }
 
 /// Peak-to-average ratio.
-pub fn peak_to_average(series: &[f32]) -> f64 {
-    PlanningStats::compute(series, 1.0, 1.0).peak_to_average
+pub fn peak_to_average(series: &[f32]) -> Result<f64> {
+    Ok(PlanningStats::compute(series, 1.0, 1.0)?.peak_to_average)
 }
 
 /// Coefficient of variation σ/μ (paper §4.5: 0.583 server → 0.127 site).
-pub fn coefficient_of_variation(series: &[f32]) -> f64 {
-    assert!(!series.is_empty());
+/// Errors on an empty series.
+pub fn coefficient_of_variation(series: &[f32]) -> Result<f64> {
+    ensure!(!series.is_empty(), "coefficient of variation: empty series");
     let n = series.len() as f64;
     let mean = series.iter().map(|&x| x as f64).sum::<f64>() / n;
     if mean.abs() < 1e-12 {
-        return 0.0;
+        return Ok(0.0);
     }
     let var = series.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
-    var.sqrt() / mean
+    Ok(var.sqrt() / mean)
 }
 
-/// p-th percentile (0..=100) with linear interpolation.
-pub fn percentile(series: &[f32], p: f64) -> f64 {
-    assert!(!series.is_empty() && (0.0..=100.0).contains(&p));
-    let mut v: Vec<f32> = series.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+/// p-th percentile (0..=100) with linear interpolation. NaN samples are
+/// ignored; errors if no non-NaN sample remains or `p` is out of range.
+pub fn percentile(series: &[f32], p: f64) -> Result<f64> {
+    ensure!(
+        (0.0..=100.0).contains(&p),
+        "percentile: p must be in [0, 100] (got {p})"
+    );
+    let mut v: Vec<f32> = series.iter().copied().filter(|x| !x.is_nan()).collect();
+    ensure!(
+        !v.is_empty(),
+        "percentile: no finite samples ({} NaN of {} total)",
+        series.len() - v.len(),
+        series.len()
+    );
+    v.sort_by(f32::total_cmp);
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    if lo == hi {
+    Ok(if lo == hi {
         v[lo] as f64
     } else {
         let w = rank - lo as f64;
         v[lo] as f64 * (1.0 - w) + v[hi] as f64 * w
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Streaming statistics — the >24 h windowed path
+// ---------------------------------------------------------------------------
+
+/// Incremental mean-resampler: feeds samples in series order, emits each
+/// completed `interval_s` window's mean, and carries the partial sum
+/// across arbitrary push boundaries. Emitted values are **bit-identical**
+/// to [`resample_mean`] / the aggregate module's f64 resampler on the
+/// concatenated series: chunk boundaries fall at the same stride
+/// multiples, each chunk's sum is a fresh left-to-right f64 fold from 0.0,
+/// and the emitted value is `((sum / count) * scale) as f32` — the exact
+/// expression of the batch resamplers.
+#[derive(Debug, Clone)]
+pub struct StreamingResampler {
+    stride: usize,
+    scale: f64,
+    sum: f64,
+    count: usize,
+}
+
+impl StreamingResampler {
+    /// `scale` multiplies each emitted mean (the aggregate module uses it
+    /// to apply PUE without an intermediate buffer); pass `1.0` otherwise.
+    pub fn new(dt_s: f64, interval_s: f64, scale: f64) -> Result<StreamingResampler> {
+        Ok(StreamingResampler { stride: resample_stride(dt_s, interval_s)?, scale, sum: 0.0, count: 0 })
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Feed one sample; returns the window mean when this sample completes
+    /// a window.
+    #[inline]
+    pub fn push(&mut self, x: f64) -> Option<f32> {
+        self.sum += x;
+        self.count += 1;
+        if self.count == self.stride {
+            let v = ((self.sum / self.count as f64) * self.scale) as f32;
+            self.sum = 0.0;
+            self.count = 0;
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    /// Feed a slice, appending every completed window mean to `out`.
+    pub fn push_slice(&mut self, xs: &[f64], out: &mut Vec<f32>) {
+        for &x in xs {
+            if let Some(v) = self.push(x) {
+                out.push(v);
+            }
+        }
+    }
+
+    /// Drain the trailing partial window, if any: `(mean, sample_count)`
+    /// with the mean over the **actual** count — the streaming equivalent
+    /// of [`resample_mean_with_tail`]'s final point.
+    pub fn flush(&mut self) -> Option<(f32, usize)> {
+        if self.count == 0 {
+            return None;
+        }
+        let v = ((self.sum / self.count as f64) * self.scale) as f32;
+        let n = self.count;
+        self.sum = 0.0;
+        self.count = 0;
+        Some((v, n))
+    }
+}
+
+/// Number of bins in the streaming quantile histogram. With the
+/// doubling-collapse growth rule the final bin width is at most
+/// `2·max_sample / QUANTILE_BINS`, so any quantile estimate is within
+/// half a bin of the nearest-rank sample quantile — **≤ `peak_w /
+/// QUANTILE_BINS`** absolute error (≈ 0.024 % of peak at 4096 bins); see
+/// [`StreamingHistogram::quantile`] for the interpolated-quantile caveat.
+pub const QUANTILE_BINS: usize = 4096;
+
+/// Fixed-memory streaming histogram over `[0, width·QUANTILE_BINS)`.
+///
+/// The bin width is set by the first sample (placing it mid-range) and
+/// **doubles** whenever a sample lands beyond the range, merging adjacent
+/// bin pairs — so the histogram never rescans data and its error bound
+/// (half the final bin width, see [`QUANTILE_BINS`]) is known a
+/// posteriori. Samples below zero clamp into bin 0 (facility power is
+/// non-negative); NaN samples are ignored, matching [`percentile`].
+#[derive(Debug, Clone)]
+pub struct StreamingHistogram {
+    width: f64,
+    bins: Vec<u64>,
+    count: u64,
+}
+
+impl Default for StreamingHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamingHistogram {
+    pub fn new() -> StreamingHistogram {
+        StreamingHistogram { width: 0.0, bins: vec![0; QUANTILE_BINS], count: 0 }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Half the current bin width — the absolute error bound of
+    /// [`StreamingHistogram::quantile`].
+    pub fn error_bound(&self) -> f64 {
+        0.5 * self.width
+    }
+
+    pub fn push(&mut self, x: f64) {
+        // Non-finite samples are skipped (matching `percentile`); +inf in
+        // particular would make the collapse loop below spin forever once
+        // `width` overflowed to inf.
+        if !x.is_finite() {
+            return;
+        }
+        let x = x.max(0.0);
+        if self.count == 0 {
+            // First sample lands mid-range; zero gets a tiny width that
+            // the collapse rule grows as real magnitudes arrive.
+            self.width = (2.0 * x / QUANTILE_BINS as f64).max(1e-12);
+        }
+        while x >= self.width * QUANTILE_BINS as f64 {
+            self.collapse();
+        }
+        let idx = ((x / self.width) as usize).min(QUANTILE_BINS - 1);
+        self.bins[idx] += 1;
+        self.count += 1;
+    }
+
+    /// Merge adjacent bin pairs, doubling the covered range.
+    fn collapse(&mut self) {
+        let n = QUANTILE_BINS;
+        for i in 0..n / 2 {
+            self.bins[i] = self.bins[2 * i] + self.bins[2 * i + 1];
+        }
+        for b in self.bins[n / 2..].iter_mut() {
+            *b = 0;
+        }
+        self.width *= 2.0;
+    }
+
+    /// Estimate the `q`-quantile (`q` in [0, 1]) as the midpoint of the
+    /// bin holding rank `⌊q·(n−1)⌋` — within [`error_bound`] (half a bin
+    /// width) of the **nearest-rank** sample quantile. The linearly
+    /// interpolated quantile ([`percentile`]) can additionally differ by
+    /// up to the gap to the next order statistic, which is negligible for
+    /// the dense facility series this backs. Errors when the histogram is
+    /// empty.
+    ///
+    /// [`error_bound`]: StreamingHistogram::error_bound
+    pub fn quantile(&self, q: f64) -> Result<f64> {
+        ensure!((0.0..=1.0).contains(&q), "quantile: q must be in [0, 1] (got {q})");
+        ensure!(self.count > 0, "quantile of empty histogram");
+        let target = q * (self.count - 1) as f64;
+        let mut cum = 0u64;
+        for (i, &b) in self.bins.iter().enumerate() {
+            cum += b;
+            if b > 0 && cum as f64 > target {
+                return Ok(self.width * (i as f64 + 0.5));
+            }
+        }
+        // Unreachable when count > 0; return the top of the range.
+        Ok(self.width * QUANTILE_BINS as f64)
+    }
+}
+
+/// Result of a streamed stats fold: the stats plus how the quantile was
+/// obtained.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamedStats {
+    pub stats: PlanningStats,
+    /// `true` when the series fit the exact-sample cap and every field —
+    /// including p99 and CV — is bit-identical to
+    /// [`PlanningStats::compute`] on the buffered series.
+    pub exact_quantiles: bool,
+    /// Absolute error bound on `stats.p99_w` (0 when exact).
+    pub p99_error_bound_w: f64,
+}
+
+/// Default cap on retained samples for the exact-quantile fallback:
+/// 4 Mi samples ≈ 16 MB — more than a 48 h horizon at 250 ms, so sweep
+/// summaries at paper-scale horizons are **unchanged** by streaming.
+pub const EXACT_QUANTILE_CAP: usize = 1 << 22;
+
+/// Streaming [`PlanningStats`]: peak, mean, energy, and max-ramp are exact
+/// folds (bit-identical to the buffered computation — same f64 fold order,
+/// same resample-chunk geometry); p99 and CV come from retained samples
+/// while the series fits [`EXACT_QUANTILE_CAP`], and degrade gracefully to
+/// a [`StreamingHistogram`] estimate (documented bound) and a
+/// sum-of-squares CV beyond it.
+#[derive(Debug, Clone)]
+pub struct StreamingPlanningStats {
+    dt_s: f64,
+    ramp_interval_s: f64,
+    n: u64,
+    sum: f64,
+    sumsq: f64,
+    peak: f64,
+    ramp: StreamingResampler,
+    prev_ramp: Option<f32>,
+    max_ramp: f64,
+    hist: StreamingHistogram,
+    exact: Option<Vec<f32>>,
+    exact_cap: usize,
+}
+
+impl StreamingPlanningStats {
+    pub fn new(dt_s: f64, ramp_interval_s: f64) -> Result<StreamingPlanningStats> {
+        Self::with_exact_cap(dt_s, ramp_interval_s, EXACT_QUANTILE_CAP)
+    }
+
+    /// `exact_cap = 0` forces the histogram path from the first sample
+    /// (tests use this to exercise the bound at small horizons).
+    pub fn with_exact_cap(
+        dt_s: f64,
+        ramp_interval_s: f64,
+        exact_cap: usize,
+    ) -> Result<StreamingPlanningStats> {
+        ensure!(
+            dt_s.is_finite() && dt_s > 0.0,
+            "planning stats: dt must be positive seconds (got {dt_s})"
+        );
+        Ok(StreamingPlanningStats {
+            dt_s,
+            ramp_interval_s,
+            n: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            peak: f64::NEG_INFINITY,
+            ramp: StreamingResampler::new(dt_s, ramp_interval_s, 1.0)?,
+            prev_ramp: None,
+            max_ramp: 0.0,
+            hist: StreamingHistogram::new(),
+            exact: Some(Vec::new()),
+            exact_cap,
+        })
+    }
+
+    pub fn samples_seen(&self) -> u64 {
+        self.n
+    }
+
+    #[inline]
+    fn fold_ramp_point(&mut self, v: f32) {
+        if let Some(p) = self.prev_ramp {
+            self.max_ramp = self.max_ramp.max((v as f64 - p as f64).abs());
+        }
+        self.prev_ramp = Some(v);
+    }
+
+    /// Fold one window of the (PCC, f32) series, in series order.
+    pub fn push_slice(&mut self, xs: &[f32]) {
+        for &x in xs {
+            let xf = x as f64;
+            self.peak = self.peak.max(xf);
+            self.sum += xf;
+            self.sumsq += xf * xf;
+            self.n += 1;
+            self.hist.push(xf);
+            if let Some(v) = self.ramp.push(xf) {
+                self.fold_ramp_point(v);
+            }
+        }
+        let keep = match self.exact.as_mut() {
+            Some(buf) if buf.len() + xs.len() <= self.exact_cap => {
+                buf.extend_from_slice(xs);
+                true
+            }
+            // Over the cap: drop the retained samples (the histogram has
+            // seen every sample from the start).
+            Some(_) => false,
+            None => true,
+        };
+        if !keep {
+            self.exact = None;
+        }
+    }
+
+    /// Finish the fold. Errors if no samples were pushed.
+    pub fn finalize(mut self) -> Result<StreamedStats> {
+        ensure!(self.n > 0, "planning stats: empty power series");
+        if let Some(buf) = self.exact.take() {
+            // Identical to the buffered path, bit for bit.
+            return Ok(StreamedStats {
+                stats: PlanningStats::compute(&buf, self.dt_s, self.ramp_interval_s)?,
+                exact_quantiles: true,
+                p99_error_bound_w: 0.0,
+            });
+        }
+        // The trailing partial resample window participates in the ramp,
+        // exactly as resample_mean's final chunk does.
+        if let Some((v, _count)) = self.ramp.flush() {
+            self.fold_ramp_point(v);
+        }
+        let n = self.n as f64;
+        let avg = self.sum / n;
+        let cv = if avg.abs() < 1e-12 {
+            0.0
+        } else {
+            (self.sumsq / n - avg * avg).max(0.0).sqrt() / avg
+        };
+        Ok(StreamedStats {
+            stats: PlanningStats {
+                peak_w: self.peak,
+                avg_w: avg,
+                p99_w: self.hist.quantile(0.99)?,
+                energy_kwh: self.sum * self.dt_s / 3.6e6,
+                peak_to_average: if avg.abs() > 1e-12 { self.peak / avg } else { f64::INFINITY },
+                max_ramp_w: self.max_ramp,
+                load_factor: if self.peak.abs() > 1e-12 { avg / self.peak } else { 0.0 },
+                cv,
+            },
+            exact_quantiles: false,
+            p99_error_bound_w: self.hist.error_bound(),
+        })
     }
 }
 
@@ -100,7 +493,7 @@ mod tests {
 
     #[test]
     fn stats_on_flat_series() {
-        let s = PlanningStats::compute(&[100.0f32; 16], 0.25, 1.0);
+        let s = PlanningStats::compute(&[100.0f32; 16], 0.25, 1.0).unwrap();
         assert_eq!(s.peak_w, 100.0);
         assert_eq!(s.avg_w, 100.0);
         assert_eq!(s.p99_w, 100.0);
@@ -108,13 +501,15 @@ mod tests {
         assert_eq!(s.load_factor, 1.0);
         assert_eq!(s.max_ramp_w, 0.0);
         assert_eq!(s.cv, 0.0);
+        // 16 samples × 100 W × 0.25 s = 400 J.
+        assert!((s.energy_kwh - 400.0 / 3.6e6).abs() < 1e-15);
     }
 
     #[test]
     fn stats_on_step_series() {
         // 4 samples at 100 then 4 at 300, dt=1, ramp interval 4 s.
         let series = [100.0f32, 100.0, 100.0, 100.0, 300.0, 300.0, 300.0, 300.0];
-        let s = PlanningStats::compute(&series, 1.0, 4.0);
+        let s = PlanningStats::compute(&series, 1.0, 4.0).unwrap();
         assert_eq!(s.peak_w, 300.0);
         assert_eq!(s.avg_w, 200.0);
         assert!((s.peak_to_average - 1.5).abs() < 1e-12);
@@ -125,17 +520,18 @@ mod tests {
     #[test]
     fn resample_means_windows() {
         let s = [1.0f32, 3.0, 5.0, 7.0, 9.0];
-        assert_eq!(resample_mean(&s, 1.0, 2.0), vec![2.0, 6.0, 9.0]);
+        assert_eq!(resample_mean(&s, 1.0, 2.0).unwrap(), vec![2.0, 6.0, 9.0]);
         // stride of 1 is identity
-        assert_eq!(resample_mean(&s, 1.0, 1.0), s.to_vec());
+        assert_eq!(resample_mean(&s, 1.0, 1.0).unwrap(), s.to_vec());
         // interval smaller than dt clamps to stride 1
-        assert_eq!(resample_mean(&s, 1.0, 0.1), s.to_vec());
+        assert_eq!(resample_mean(&s, 1.0, 0.1).unwrap(), s.to_vec());
     }
 
     #[test]
     fn resample_empty_series_is_empty() {
-        assert!(resample_mean(&[], 0.25, 1.0).is_empty());
-        assert_eq!(max_ramp(&[], 0.25, 1.0), 0.0);
+        assert!(resample_mean(&[], 0.25, 1.0).unwrap().is_empty());
+        assert_eq!(max_ramp(&[], 0.25, 1.0).unwrap(), 0.0);
+        assert_eq!(resample_mean_with_tail(&[], 0.25, 1.0).unwrap().1, 0);
     }
 
     #[test]
@@ -143,11 +539,62 @@ mod tests {
         // interval/dt = 0.3/0.25 = 1.2 → stride rounds to 1 (identity);
         // 0.4/0.25 = 1.6 → stride 2.
         let s = [2.0f32, 4.0, 6.0, 8.0];
-        assert_eq!(resample_mean(&s, 0.25, 0.3), s.to_vec());
-        assert_eq!(resample_mean(&s, 0.25, 0.4), vec![3.0, 7.0]);
+        assert_eq!(resample_mean(&s, 0.25, 0.3).unwrap(), s.to_vec());
+        assert_eq!(resample_mean(&s, 0.25, 0.4).unwrap(), vec![3.0, 7.0]);
         // Trailing partial window is averaged over its actual length.
         let s = [2.0f32, 4.0, 6.0];
-        assert_eq!(resample_mean(&s, 0.25, 0.5), vec![3.0, 6.0]);
+        assert_eq!(resample_mean(&s, 0.25, 0.5).unwrap(), vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn resample_with_tail_reports_partial_window_weight() {
+        let s = [2.0f32, 4.0, 6.0];
+        let (agg, tail) = resample_mean_with_tail(&s, 0.25, 0.5).unwrap();
+        assert_eq!(agg, vec![3.0, 6.0]);
+        assert_eq!(tail, 1); // last window holds one 0.25 s sample
+        let (_, tail) = resample_mean_with_tail(&[1.0f32; 8], 0.25, 0.5).unwrap();
+        assert_eq!(tail, 2); // exact division: full stride
+        // Energy with the tail weight matches the raw integral; the naive
+        // interval weighting overstates it (the satellite bug).
+        let dt = 0.25;
+        let raw_j: f64 = s.iter().map(|&x| x as f64 * dt).sum();
+        let interval = 0.5;
+        let stride = resample_stride(dt, interval).unwrap();
+        let mut corrected = 0.0f64;
+        for (i, &v) in agg.iter().enumerate() {
+            let w = if i + 1 == agg.len() { tail as f64 * dt } else { stride as f64 * dt };
+            corrected += v as f64 * w;
+        }
+        let naive: f64 = agg.iter().map(|&v| v as f64 * interval).sum();
+        assert!((corrected - raw_j).abs() < 1e-9);
+        assert!(naive > raw_j + 1e-9, "naive {naive} should overstate {raw_j}");
+    }
+
+    #[test]
+    fn invalid_inputs_error_instead_of_panicking() {
+        assert!(PlanningStats::compute(&[], 0.25, 1.0).is_err());
+        assert!(PlanningStats::compute(&[1.0], 0.0, 1.0).is_err());
+        assert!(PlanningStats::compute(&[1.0], 0.25, -5.0).is_err());
+        assert!(resample_stride(0.0, 1.0).is_err());
+        assert!(resample_stride(0.25, 0.0).is_err());
+        assert!(resample_stride(f64::NAN, 1.0).is_err());
+        assert!(resample_mean(&[1.0], 0.25, f64::INFINITY).is_err());
+        assert!(coefficient_of_variation(&[]).is_err());
+        assert!(percentile(&[], 50.0).is_err());
+        assert!(percentile(&[1.0], 101.0).is_err());
+        assert!(percentile(&[1.0], -0.5).is_err());
+        assert!(percentile(&[f32::NAN, f32::NAN], 50.0).is_err());
+        assert!(StreamingPlanningStats::new(0.0, 900.0).is_err());
+        assert!(StreamingPlanningStats::new(1.0, 900.0).unwrap().finalize().is_err());
+    }
+
+    #[test]
+    fn percentile_ignores_nan_samples() {
+        let s = [1.0f32, f32::NAN, 2.0, 3.0, f32::NAN, 4.0, 5.0];
+        assert_eq!(percentile(&s, 50.0).unwrap(), 3.0);
+        assert_eq!(percentile(&s, 100.0).unwrap(), 5.0);
+        // And the old panic path (partial_cmp unwrap) is gone.
+        assert_eq!(percentile(&[f32::NAN, 7.0], 0.0).unwrap(), 7.0);
     }
 
     #[test]
@@ -155,17 +602,17 @@ mod tests {
         // 99 samples at 100 W and one spike at 300 W.
         let mut s = vec![100.0f32; 99];
         s.push(300.0);
-        let st = PlanningStats::compute(&s, 1.0, 10.0);
+        let st = PlanningStats::compute(&s, 1.0, 10.0).unwrap();
         assert_eq!(st.peak_w, 300.0);
         assert!(st.p99_w > 100.0 && st.p99_w < 300.0, "p99 {}", st.p99_w);
-        assert!((st.cv - coefficient_of_variation(&s)).abs() < 1e-12);
+        assert!((st.cv - coefficient_of_variation(&s).unwrap()).abs() < 1e-12);
         assert!(st.cv > 0.0);
     }
 
     #[test]
     fn resample_preserves_total_energy_on_exact_windows() {
         let s: Vec<f32> = (0..120).map(|i| (i % 7) as f32 * 10.0).collect();
-        let agg = resample_mean(&s, 0.25, 1.0); // windows of 4
+        let agg = resample_mean(&s, 0.25, 1.0).unwrap(); // windows of 4
         let e1: f64 = s.iter().map(|&x| x as f64 * 0.25).sum();
         let e2: f64 = agg.iter().map(|&x| x as f64 * 1.0).sum();
         assert!((e1 - e2).abs() < 1e-6);
@@ -173,18 +620,18 @@ mod tests {
 
     #[test]
     fn cov_known_values() {
-        assert_eq!(coefficient_of_variation(&[5.0f32; 10]), 0.0);
+        assert_eq!(coefficient_of_variation(&[5.0f32; 10]).unwrap(), 0.0);
         let s = [0.0f32, 2.0]; // mean 1, std 1
-        assert!((coefficient_of_variation(&s) - 1.0).abs() < 1e-12);
+        assert!((coefficient_of_variation(&s).unwrap() - 1.0).abs() < 1e-12);
     }
 
     #[test]
     fn percentile_interpolates() {
         let s = [1.0f32, 2.0, 3.0, 4.0, 5.0];
-        assert_eq!(percentile(&s, 0.0), 1.0);
-        assert_eq!(percentile(&s, 100.0), 5.0);
-        assert_eq!(percentile(&s, 50.0), 3.0);
-        assert!((percentile(&s, 95.0) - 4.8).abs() < 1e-9);
+        assert_eq!(percentile(&s, 0.0).unwrap(), 1.0);
+        assert_eq!(percentile(&s, 100.0).unwrap(), 5.0);
+        assert_eq!(percentile(&s, 50.0).unwrap(), 3.0);
+        assert!((percentile(&s, 95.0).unwrap() - 4.8).abs() < 1e-9);
     }
 
     #[test]
@@ -192,7 +639,120 @@ mod tests {
         // A single-sample spike shouldn't dominate a 4-sample-interval ramp.
         let mut s = vec![100.0f32; 16];
         s[8] = 500.0;
-        let ramp = max_ramp(&s, 1.0, 4.0);
+        let ramp = max_ramp(&s, 1.0, 4.0).unwrap();
         assert!((ramp - 100.0).abs() < 1e-9); // window mean jumps by 100
+    }
+
+    // -- streaming --
+
+    fn wavy(n: usize) -> Vec<f32> {
+        (0..n).map(|i| 1000.0 + 400.0 * ((i as f32) * 0.13).sin() + (i % 11) as f32).collect()
+    }
+
+    #[test]
+    fn streaming_resampler_matches_batch_resampler_bitwise() {
+        let s = wavy(1003); // not a multiple of any stride below
+        for interval in [1.0, 2.5, 7.0] {
+            let reference = resample_mean(&s, 0.25, interval).unwrap();
+            let mut r = StreamingResampler::new(0.25, interval, 1.0).unwrap();
+            let mut out = Vec::new();
+            // Ragged pushes that straddle chunk boundaries.
+            for chunk in s.chunks(17) {
+                let xs: Vec<f64> = chunk.iter().map(|&x| x as f64).collect();
+                r.push_slice(&xs, &mut out);
+            }
+            if let Some((v, _)) = r.flush() {
+                out.push(v);
+            }
+            assert_eq!(out.len(), reference.len(), "interval {interval}");
+            for (i, (a, b)) in out.iter().zip(&reference).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "interval {interval} point {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_stats_exact_path_is_bit_identical() {
+        let s = wavy(5000);
+        let reference = PlanningStats::compute(&s, 0.25, 9.0).unwrap();
+        let mut st = StreamingPlanningStats::new(0.25, 9.0).unwrap();
+        for chunk in s.chunks(37) {
+            st.push_slice(chunk);
+        }
+        let out = st.finalize().unwrap();
+        assert!(out.exact_quantiles);
+        assert_eq!(out.stats, reference);
+        assert_eq!(out.p99_error_bound_w, 0.0);
+    }
+
+    #[test]
+    fn streaming_stats_histogram_path_exact_folds_and_bounded_p99() {
+        let s = wavy(5000);
+        let reference = PlanningStats::compute(&s, 0.25, 9.0).unwrap();
+        // Cap 0: histogram path from sample one.
+        let mut st = StreamingPlanningStats::with_exact_cap(0.25, 9.0, 0).unwrap();
+        for chunk in s.chunks(41) {
+            st.push_slice(chunk);
+        }
+        let out = st.finalize().unwrap();
+        assert!(!out.exact_quantiles);
+        // Exact folds: bit-identical.
+        assert_eq!(out.stats.peak_w.to_bits(), reference.peak_w.to_bits());
+        assert_eq!(out.stats.avg_w.to_bits(), reference.avg_w.to_bits());
+        assert_eq!(out.stats.energy_kwh.to_bits(), reference.energy_kwh.to_bits());
+        assert_eq!(out.stats.max_ramp_w.to_bits(), reference.max_ramp_w.to_bits());
+        // p99 within the documented bound of the nearest-rank quantile.
+        assert!(out.p99_error_bound_w > 0.0);
+        let mut sorted = s.clone();
+        sorted.sort_by(f32::total_cmp);
+        let nearest_rank = sorted[(0.99 * (sorted.len() - 1) as f64).floor() as usize] as f64;
+        assert!(
+            (out.stats.p99_w - nearest_rank).abs() <= out.p99_error_bound_w,
+            "p99 {} vs nearest-rank {} (bound {})",
+            out.stats.p99_w,
+            nearest_rank,
+            out.p99_error_bound_w
+        );
+        // And close to the interpolated quantile on dense data (the bound
+        // plus at most one order-statistic gap).
+        assert!(
+            (out.stats.p99_w - reference.p99_w).abs() <= out.p99_error_bound_w + 1.0,
+            "p99 {} vs interpolated {} (bound {})",
+            out.stats.p99_w,
+            reference.p99_w,
+            out.p99_error_bound_w
+        );
+        // The bound itself is tight: ≤ peak / QUANTILE_BINS.
+        assert!(out.p99_error_bound_w <= reference.peak_w / QUANTILE_BINS as f64 + 1e-9);
+        // CV approximation is close (not exact).
+        assert!((out.stats.cv - reference.cv).abs() < 1e-6);
+    }
+
+    #[test]
+    fn streaming_histogram_collapse_keeps_all_mass() {
+        let mut h = StreamingHistogram::new();
+        // First sample small, later samples 6 orders of magnitude larger:
+        // forces many collapses.
+        h.push(1.0);
+        for i in 0..1000 {
+            h.push(1e6 + i as f64);
+        }
+        assert_eq!(h.count(), 1001);
+        let q = h.quantile(0.5).unwrap();
+        assert!((q - 1e6).abs() < 2.0 * h.error_bound() + 1000.0, "median {q}");
+        assert!(h.error_bound() <= 2.0 * 1.001e6 / QUANTILE_BINS as f64);
+    }
+
+    #[test]
+    fn streaming_stats_cap_boundary_drops_to_histogram() {
+        let s = wavy(100);
+        let mut st = StreamingPlanningStats::with_exact_cap(1.0, 10.0, 64).unwrap();
+        st.push_slice(&s[..60]);
+        st.push_slice(&s[60..]); // 100 > 64 → spills
+        let out = st.finalize().unwrap();
+        assert!(!out.exact_quantiles);
+        let reference = PlanningStats::compute(&s, 1.0, 10.0).unwrap();
+        assert_eq!(out.stats.peak_w, reference.peak_w);
+        assert_eq!(out.stats.avg_w, reference.avg_w);
     }
 }

@@ -78,4 +78,4 @@ pub mod grid;
 pub mod runner;
 
 pub use grid::{GridDefaults, SweepCell, SweepGrid};
-pub use runner::{run_sweep, CellResult, SweepOptions, SweepReport};
+pub use runner::{run_sweep, run_sweep_to, CellResult, SweepOptions, SweepReport};

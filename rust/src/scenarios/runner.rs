@@ -10,17 +10,30 @@
 //! through the classifier as one batched call (§Perf). Outer/inner worker
 //! counts are balanced automatically unless pinned in [`SweepOptions`].
 //!
+//! Streaming (>24 h) mode: with [`SweepOptions::window_s`] set, each cell
+//! runs through [`Generator::facility_shared_windowed`] instead — horizon
+//! length no longer bounds memory. Per window, incremental RFC-4180 CSV
+//! writers ([`StreamingCsv`]) append the rack/row/facility rows that the
+//! buffered [`SweepReport::write`] would have produced (byte-identical
+//! where both paths can run: the writers share the exact resample-chunk
+//! geometry and float formatting), and a
+//! [`StreamingPlanningStats`] folds the summary — exact
+//! peak/mean/energy/ramp, p99 exact up to
+//! [`crate::metrics::planning::EXACT_QUANTILE_CAP`] samples and
+//! histogram-bounded beyond it.
+//!
 //! Determinism: every cell's output is a pure function of its
 //! `(ScenarioSpec, seed)` (see [`Generator::facility_shared`]), and the
 //! summary CSV deliberately contains no wall-clock fields, so re-running a
 //! grid with the same seeds reproduces byte-identical summaries.
 
 use super::grid::{SweepCell, SweepGrid};
-use crate::aggregate::{MultiScale, ScaleConfig};
+use crate::aggregate::{MultiScale, ScaleConfig, StreamingFacilityAccumulator};
 use crate::coordinator::Generator;
-use crate::metrics::PlanningStats;
+use crate::metrics::planning::{PlanningStats, StreamingPlanningStats, StreamingResampler};
 use crate::util::threadpool::{default_workers, parallel_map};
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
+use std::io::Write;
 use std::path::Path;
 use std::time::Instant;
 
@@ -45,6 +58,12 @@ pub struct SweepOptions {
     /// [`Generator::facility_shared_batched`] — so this is purely a
     /// throughput/memory knob.
     pub max_batch: usize,
+    /// Generation window in seconds for the streaming path
+    /// (0 = buffered one-shot). With a window set, per-cell memory is
+    /// O(racks × window) and exports stream to disk as windows complete —
+    /// pass the output directory to [`run_sweep_to`] so the writers have
+    /// somewhere to stream.
+    pub window_s: f64,
     /// Export intervals per aggregation level.
     pub scales: ScaleConfig,
 }
@@ -57,6 +76,7 @@ impl Default for SweepOptions {
             scenario_workers: 0,
             server_workers: 0,
             max_batch: 0,
+            window_s: 0.0,
             scales: ScaleConfig::default(),
         }
     }
@@ -67,8 +87,16 @@ pub struct CellResult {
     pub cell: SweepCell,
     /// Planning summary of the facility PCC series at the generation dt.
     pub stats: PlanningStats,
-    /// Multi-resolution export (racks / rows / facility).
-    pub scales: MultiScale,
+    /// Multi-resolution export (racks / rows / facility). `None` for
+    /// streamed cells — their series went straight to disk, window by
+    /// window, and were never materialized.
+    pub scales: Option<MultiScale>,
+    /// `false` when `stats.p99_w` / `stats.cv` came from the streaming
+    /// histogram (horizon exceeded the exact-sample cap); the error bound
+    /// is in [`CellResult::p99_bound_w`].
+    pub exact_quantiles: bool,
+    /// Absolute error bound on `stats.p99_w` (0 when exact).
+    pub p99_bound_w: f64,
     /// Wall-clock seconds this cell took (reporting only; never exported).
     pub wall_s: f64,
 }
@@ -80,9 +108,31 @@ pub struct SweepReport {
     pub cells: Vec<CellResult>,
 }
 
-/// Expand and execute a grid. Cell results come back in expansion order.
+/// Expand and execute a grid (buffered, or streaming when
+/// `opts.window_s > 0` — see [`run_sweep_to`] to stream CSV exports).
 pub fn run_sweep(gen: &mut Generator, grid: &SweepGrid, opts: &SweepOptions) -> Result<SweepReport> {
+    run_sweep_to(gen, grid, opts, None)
+}
+
+/// [`run_sweep`] with a streaming export directory: when
+/// `opts.window_s > 0` and `stream_dir` is given, every cell's
+/// rack/row/facility CSVs are appended window-by-window under
+/// `<stream_dir>/<cell>/` while the cell generates (byte-identical to what
+/// the buffered [`SweepReport::write`] would produce). Call
+/// [`SweepReport::write`] on the same directory afterwards to add
+/// `grid.json`, `summary.csv`, and the per-cell `scenario.json`s.
+pub fn run_sweep_to(
+    gen: &mut Generator,
+    grid: &SweepGrid,
+    opts: &SweepOptions,
+    stream_dir: Option<&Path>,
+) -> Result<SweepReport> {
     grid.validate()?;
+    ensure!(
+        opts.dt_s.is_finite() && opts.dt_s > 0.0,
+        "sweep: dt must be positive seconds (got {})",
+        opts.dt_s
+    );
     let cells = grid.expand();
     // Shared-artifact hoist: each config some cell actually uses is
     // prepared exactly once, no matter how many cells (or racks) use it.
@@ -106,25 +156,103 @@ pub fn run_sweep(gen: &mut Generator, grid: &SweepGrid, opts: &SweepOptions) -> 
         0 => (default_workers() / outer).max(1),
         w => w,
     };
+    if let Some(dir) = stream_dir {
+        std::fs::create_dir_all(dir)?;
+    }
     let gen_ro: &Generator = gen;
     let results: Vec<Result<CellResult>> = parallel_map(n, outer, |i| {
         let cell = &cells[i];
         let t0 = Instant::now();
-        let run = gen_ro
-            .facility_shared_batched(&cell.spec, opts.dt_s, inner, opts.max_batch)
-            .with_context(|| format!("cell {}", cell.id))?;
-        let site = run.facility_series();
-        // See SweepOptions::ramp_interval_s: keep ≥ 2 windows in range.
-        let ramp_s = opts.ramp_interval_s.min(cell.spec.horizon_s / 2.0).max(opts.dt_s);
-        let stats = PlanningStats::compute(&site, opts.dt_s, ramp_s);
-        let scales = run.acc.multi_scale(opts.dt_s, cell.spec.pue, &opts.scales);
-        Ok(CellResult { cell: cell.clone(), stats, scales, wall_s: t0.elapsed().as_secs_f64() })
+        let (stats, scales, exact, bound) = (|| -> Result<_> {
+            if opts.window_s > 0.0 {
+                let cdir = stream_dir.map(|d| d.join(&cell.id));
+                let (stats, exact, bound) =
+                    run_cell_streaming(gen_ro, cell, opts, inner, cdir.as_deref())?;
+                Ok((stats, None, exact, bound))
+            } else {
+                let run =
+                    gen_ro.facility_shared_batched(&cell.spec, opts.dt_s, inner, opts.max_batch)?;
+                let site = run.facility_series();
+                let ramp_s = cell_ramp_interval(opts, cell.spec.horizon_s);
+                let stats = PlanningStats::compute(&site, opts.dt_s, ramp_s)?;
+                let scales = run.acc.multi_scale(opts.dt_s, cell.spec.pue, &opts.scales)?;
+                Ok((stats, Some(scales), true, 0.0))
+            }
+        })()
+        .with_context(|| format!("cell {}", cell.id))?;
+        Ok(CellResult {
+            cell: cell.clone(),
+            stats,
+            scales,
+            exact_quantiles: exact,
+            p99_bound_w: bound,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
     });
     let mut out = Vec::with_capacity(n);
     for r in results {
         out.push(r?);
     }
     Ok(SweepReport { grid: grid.clone(), dt_s: opts.dt_s, cells: out })
+}
+
+/// See [`SweepOptions::ramp_interval_s`]: keep ≥ 2 windows in range.
+fn cell_ramp_interval(opts: &SweepOptions, horizon_s: f64) -> f64 {
+    opts.ramp_interval_s.min(horizon_s / 2.0).max(opts.dt_s)
+}
+
+/// Run one cell through the windowed streaming pipeline: fold summary
+/// stats per window and (optionally) append the multi-scale CSVs under
+/// `cdir`. Returns `(stats, exact_quantiles, p99_bound)`.
+fn run_cell_streaming(
+    gen: &Generator,
+    cell: &SweepCell,
+    opts: &SweepOptions,
+    inner_workers: usize,
+    cdir: Option<&Path>,
+) -> Result<(PlanningStats, bool, f64)> {
+    let spec = &cell.spec;
+    let ramp_s = cell_ramp_interval(opts, spec.horizon_s);
+    let mut stats = StreamingPlanningStats::new(opts.dt_s, ramp_s)?;
+    let mut writers = match cdir {
+        Some(d) => Some(CellWriters::create(
+            d,
+            spec.topology.n_racks(),
+            spec.topology.rows,
+            spec.pue,
+            opts,
+        )?),
+        None => None,
+    };
+    let mut rows_buf: Vec<Vec<f64>> = Vec::new();
+    let mut site_buf: Vec<f64> = Vec::new();
+    let mut site_pcc: Vec<f32> = Vec::new();
+    let pue = spec.pue;
+    gen.facility_shared_windowed(
+        spec,
+        opts.dt_s,
+        opts.window_s,
+        inner_workers,
+        opts.max_batch,
+        |acc| {
+            acc.fold_rows_site(&mut rows_buf, &mut site_buf);
+            // The PCC f32 series exactly as the buffered stats path builds
+            // it: site f64 → f32 (site_it_series), then ×PUE in f64 → f32
+            // (facility_series) — the double rounding is deliberate.
+            site_pcc.clear();
+            site_pcc.extend(site_buf.iter().map(|&x| ((x as f32) as f64 * pue) as f32));
+            stats.push_slice(&site_pcc);
+            if let Some(w) = writers.as_mut() {
+                w.push_window(acc, &rows_buf, &site_buf)?;
+            }
+            Ok(())
+        },
+    )?;
+    if let Some(w) = writers {
+        w.finish()?;
+    }
+    let out = stats.finalize()?;
+    Ok((out.stats, out.exact_quantiles, out.p99_error_bound_w))
 }
 
 impl SweepReport {
@@ -134,13 +262,13 @@ impl SweepReport {
     pub fn summary_csv(&self) -> String {
         let mut s = String::from(
             "cell,workload,topology,fleet,servers,seed,\
-             peak_w,avg_w,p99_w,max_ramp_w,cv,peak_to_average,load_factor\n",
+             peak_w,avg_w,p99_w,energy_kwh,max_ramp_w,cv,peak_to_average,load_factor\n",
         );
         for c in &self.cells {
             let t = c.cell.spec.topology;
             let fleet = c.cell.spec.server_config.config_ids().join("+");
             s.push_str(&format!(
-                "{},{},{}x{}x{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{}x{}x{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 c.cell.id,
                 csv_field(&c.cell.spec.workload.label()),
                 t.rows,
@@ -152,6 +280,7 @@ impl SweepReport {
                 c.stats.peak_w,
                 c.stats.avg_w,
                 c.stats.p99_w,
+                c.stats.energy_kwh,
                 c.stats.max_ramp_w,
                 c.stats.cv,
                 c.stats.peak_to_average,
@@ -164,18 +293,21 @@ impl SweepReport {
     /// Human-readable summary table (kW units, wall-clock included).
     pub fn summary_table(&self) -> String {
         let mut s = format!(
-            "{:<14} {:<44} {:>6} {:>9} {:>9} {:>9} {:>9} {:>7} {:>6} {:>7}\n",
-            "cell", "scenario", "srv", "peak kW", "avg kW", "p99 kW", "ramp kW", "CV", "PAR", "wall s"
+            "{:<14} {:<44} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7} {:>6} {:>7}\n",
+            "cell", "scenario", "srv", "peak kW", "avg kW", "p99 kW", "MWh", "ramp kW", "CV", "PAR",
+            "wall s"
         );
         for c in &self.cells {
             s.push_str(&format!(
-                "{:<14} {:<44} {:>6} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>7.3} {:>6.2} {:>7.1}\n",
+                "{:<14} {:<44} {:>6} {:>9.1} {:>9.1} {:>8.1}{} {:>9.2} {:>9.1} {:>7.3} {:>6.2} {:>7.1}\n",
                 c.cell.id,
                 truncate(&c.cell.label, 44),
                 c.cell.spec.topology.n_servers(),
                 c.stats.peak_w / 1e3,
                 c.stats.avg_w / 1e3,
                 c.stats.p99_w / 1e3,
+                if c.exact_quantiles { " " } else { "~" },
+                c.stats.energy_kwh / 1e3,
                 c.stats.max_ramp_w / 1e3,
                 c.stats.cv,
                 c.stats.peak_to_average,
@@ -195,6 +327,11 @@ impl SweepReport {
     /// <dir>/<cell>/rows_<interval>s.csv    per-row IT power
     /// <dir>/<cell>/facility_<interval>s.csv  PCC power per facility scale
     /// ```
+    ///
+    /// Cells executed in streaming mode carry no in-memory series
+    /// (`scales: None`); their series CSVs were already appended
+    /// incrementally by [`run_sweep_to`] into the same layout, so this
+    /// writes only the metadata files for them.
     pub fn write(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         self.grid.save(&dir.join("grid.json"))?;
@@ -203,28 +340,202 @@ impl SweepReport {
             let cdir = dir.join(&c.cell.id);
             std::fs::create_dir_all(&cdir)?;
             c.cell.spec.save(&cdir.join("scenario.json"))?;
-            let sc = &c.scales.scales;
+            let Some(scales) = &c.scales else { continue };
+            let sc = &scales.scales;
             write_series_csv(
                 &cdir.join(format!("racks_{}s.csv", fmt_secs(sc.rack_interval_s))),
                 "rack",
                 sc.rack_interval_s,
-                &c.scales.racks_w,
+                &scales.racks_w,
             )?;
             write_series_csv(
                 &cdir.join(format!("rows_{}s.csv", fmt_secs(sc.row_interval_s))),
                 "row",
                 sc.row_interval_s,
-                &c.scales.rows_w,
+                &scales.rows_w,
             )?;
             for (k, &interval) in sc.facility_intervals_s.iter().enumerate() {
                 write_series_csv(
                     &cdir.join(format!("facility_{}s.csv", fmt_secs(interval))),
                     "facility",
                     interval,
-                    std::slice::from_ref(&c.scales.facility_w[k]),
+                    std::slice::from_ref(&scales.facility_w[k]),
                 )?;
             }
         }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Incremental CSV writers (streaming mode)
+// ---------------------------------------------------------------------------
+
+/// One cell's set of incremental multi-scale CSV writers.
+struct CellWriters {
+    racks: StreamingCsv,
+    rows: StreamingCsv,
+    facility: Vec<StreamingCsv>,
+}
+
+impl CellWriters {
+    fn create(
+        cdir: &Path,
+        n_racks: usize,
+        n_rows: usize,
+        pue: f64,
+        opts: &SweepOptions,
+    ) -> Result<CellWriters> {
+        std::fs::create_dir_all(cdir)?;
+        let sc = &opts.scales;
+        let racks = StreamingCsv::create(
+            &cdir.join(format!("racks_{}s.csv", fmt_secs(sc.rack_interval_s))),
+            "rack",
+            n_racks,
+            opts.dt_s,
+            sc.rack_interval_s,
+            1.0,
+        )?;
+        let rows = StreamingCsv::create(
+            &cdir.join(format!("rows_{}s.csv", fmt_secs(sc.row_interval_s))),
+            "row",
+            n_rows,
+            opts.dt_s,
+            sc.row_interval_s,
+            1.0,
+        )?;
+        let facility = sc
+            .facility_intervals_s
+            .iter()
+            .map(|&interval| {
+                // PUE rides on the resampler's scale factor, exactly as the
+                // buffered `resample_mean_f64(&site, dt, interval, pue)`.
+                StreamingCsv::create(
+                    &cdir.join(format!("facility_{}s.csv", fmt_secs(interval))),
+                    "facility",
+                    1,
+                    opts.dt_s,
+                    interval,
+                    pue,
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CellWriters { racks, rows, facility })
+    }
+
+    /// Append one generation window across every writer. `rows_w`/`site_w`
+    /// are the per-row and site IT windows from
+    /// [`StreamingFacilityAccumulator::fold_rows_site`].
+    fn push_window(
+        &mut self,
+        acc: &mut StreamingFacilityAccumulator,
+        rows_w: &[Vec<f64>],
+        site_w: &[f64],
+    ) -> Result<()> {
+        for r in 0..acc.topology().n_racks() {
+            self.racks.push_col(r, acc.rack_window(r));
+        }
+        self.racks.write_ready_rows()?;
+        for (r, row) in rows_w.iter().enumerate() {
+            self.rows.push_col(r, row);
+        }
+        self.rows.write_ready_rows()?;
+        for f in self.facility.iter_mut() {
+            f.push_col(0, site_w);
+            f.write_ready_rows()?;
+        }
+        Ok(())
+    }
+
+    fn finish(self) -> Result<()> {
+        self.racks.finish()?;
+        self.rows.finish()?;
+        for f in self.facility {
+            f.finish()?;
+        }
+        Ok(())
+    }
+}
+
+/// Incremental columnar series CSV (`t_s,<stem>_0,...`): each column owns a
+/// [`StreamingResampler`], rows are appended as soon as every column has
+/// emitted a value. Byte-identical to [`write_series_csv`] on the buffered
+/// [`MultiScale`] series because the resampler reproduces
+/// `resample_mean_f64` exactly and both share [`fmt_secs`] + Rust's
+/// shortest round-trip f32 formatting.
+struct StreamingCsv {
+    out: std::io::BufWriter<std::fs::File>,
+    interval_s: f64,
+    next_row: usize,
+    cols: Vec<StreamingResampler>,
+    pending: Vec<std::collections::VecDeque<f32>>,
+    line: String,
+}
+
+impl StreamingCsv {
+    fn create(
+        path: &Path,
+        stem: &str,
+        n_cols: usize,
+        dt_s: f64,
+        interval_s: f64,
+        scale: f64,
+    ) -> Result<StreamingCsv> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut out = std::io::BufWriter::new(file);
+        out.write_all(series_csv_header(stem, n_cols).as_bytes())?;
+        let cols = (0..n_cols)
+            .map(|_| StreamingResampler::new(dt_s, interval_s, scale))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StreamingCsv {
+            out,
+            interval_s,
+            next_row: 0,
+            cols,
+            pending: (0..n_cols).map(|_| std::collections::VecDeque::new()).collect(),
+            line: String::new(),
+        })
+    }
+
+    fn push_col(&mut self, col: usize, xs: &[f64]) {
+        let (r, q) = (&mut self.cols[col], &mut self.pending[col]);
+        for &x in xs {
+            if let Some(v) = r.push(x) {
+                q.push_back(v);
+            }
+        }
+    }
+
+    fn write_ready_rows(&mut self) -> Result<()> {
+        let ready = self.pending.iter().map(|q| q.len()).min().unwrap_or(0);
+        for _ in 0..ready {
+            self.line.clear();
+            self.line.push_str(&fmt_secs(self.next_row as f64 * self.interval_s));
+            for q in self.pending.iter_mut() {
+                let v = q.pop_front().expect("ready rows counted");
+                self.line.push(',');
+                self.line.push_str(&format!("{v}"));
+            }
+            self.line.push('\n');
+            self.out.write_all(self.line.as_bytes())?;
+            self.next_row += 1;
+        }
+        Ok(())
+    }
+
+    /// Flush the trailing partial resample window of every column (the
+    /// buffered `resample_mean` emits it averaged over its actual length)
+    /// and write the final row(s).
+    fn finish(mut self) -> Result<()> {
+        for (r, q) in self.cols.iter_mut().zip(self.pending.iter_mut()) {
+            if let Some((v, _count)) = r.flush() {
+                q.push_back(v);
+            }
+        }
+        self.write_ready_rows()?;
+        debug_assert!(self.pending.iter().all(|q| q.is_empty()), "ragged columns");
+        self.out.flush()?;
         Ok(())
     }
 }
@@ -257,14 +568,21 @@ fn truncate(s: &str, max: usize) -> String {
     }
 }
 
-/// Columnar CSV: `t_s,<stem>_0,<stem>_1,...` with one row per interval.
-fn write_series_csv(path: &Path, stem: &str, interval_s: f64, series: &[Vec<f32>]) -> Result<()> {
-    let n = series.iter().map(|s| s.len()).max().unwrap_or(0);
+/// `t_s,<stem>_0,<stem>_1,...` — shared by the buffered and streaming
+/// writers so their headers can never drift apart.
+fn series_csv_header(stem: &str, n_cols: usize) -> String {
     let mut out = String::from("t_s");
-    for i in 0..series.len() {
+    for i in 0..n_cols {
         out.push_str(&format!(",{stem}_{i}"));
     }
     out.push('\n');
+    out
+}
+
+/// Columnar CSV: `t_s,<stem>_0,<stem>_1,...` with one row per interval.
+fn write_series_csv(path: &Path, stem: &str, interval_s: f64, series: &[Vec<f32>]) -> Result<()> {
+    let n = series.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut out = series_csv_header(stem, series.len());
     for t in 0..n {
         out.push_str(&fmt_secs(t as f64 * interval_s));
         for s in series {
@@ -316,5 +634,46 @@ mod tests {
         assert_eq!(lines[1], "0,1,2");
         assert_eq!(lines[2], "15,3,4");
         assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn streaming_csv_matches_buffered_writer_bytes() {
+        // Two columns of f64 data pushed in ragged windows must produce the
+        // byte-identical file to resampling whole series and using
+        // write_series_csv — including the partial trailing window.
+        let dir = std::env::temp_dir().join("powertrace_test_streaming_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (dt, interval) = (0.25, 1.5); // stride 6
+        let n = 100; // 100 = 16×6 + 4 → partial tail
+        let cols: Vec<Vec<f64>> = (0..2)
+            .map(|c| (0..n).map(|i| 1000.0 + (c * 37 + i) as f64 * 0.83).collect())
+            .collect();
+        // Buffered reference.
+        let buffered: Vec<Vec<f32>> = cols
+            .iter()
+            .map(|col| {
+                col.chunks(6)
+                    .map(|ch| (ch.iter().sum::<f64>() / ch.len() as f64) as f32)
+                    .collect()
+            })
+            .collect();
+        let pb = dir.join("buffered.csv");
+        write_series_csv(&pb, "rack", interval, &buffered).unwrap();
+        // Streaming writer fed in windows of 7.
+        let ps = dir.join("streamed.csv");
+        let mut w = StreamingCsv::create(&ps, "rack", 2, dt, interval, 1.0).unwrap();
+        let mut t0 = 0;
+        while t0 < n {
+            let wlen = 7.min(n - t0);
+            for (c, col) in cols.iter().enumerate() {
+                w.push_col(c, &col[t0..t0 + wlen]);
+            }
+            w.write_ready_rows().unwrap();
+            t0 += wlen;
+        }
+        w.finish().unwrap();
+        let a = std::fs::read(&pb).unwrap();
+        let b = std::fs::read(&ps).unwrap();
+        assert_eq!(a, b, "streamed CSV bytes differ from buffered");
     }
 }

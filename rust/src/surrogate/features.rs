@@ -115,6 +115,102 @@ pub fn features_interleaved_into(
     }
 }
 
+/// Compressed occupancy timeline: the sorted steps where `A_t` changes and
+/// its value from each step on. O(active requests) memory — independent of
+/// the sampling rate — with exact random-access reconstruction of any
+/// `(A_t, ΔA_t)` window, which is what lets the streaming facility
+/// pipeline drop its per-lane `[T, 2]` feature buffers entirely.
+///
+/// Built through the same [`occupancy_diff`] used by the full builders, so
+/// [`OccupancyEvents::fill_interleaved`] reproduces
+/// [`features_interleaved_into`]'s output bit-for-bit over any window
+/// partition (integer occupancies convert to f32 exactly).
+#[derive(Debug, Clone)]
+pub struct OccupancyEvents {
+    /// Steps where occupancy changes, strictly ascending.
+    steps: Vec<u32>,
+    /// Occupancy from `steps[i]` (inclusive) until the next change.
+    occ: Vec<i32>,
+    n_steps: usize,
+}
+
+impl OccupancyEvents {
+    /// Compress `intervals` on an `n_steps × dt_s` grid. `diff` is a
+    /// reusable scratch difference-array (transient O(n_steps); only the
+    /// compressed events are retained).
+    pub fn from_intervals_with(
+        intervals: &[ActiveInterval],
+        n_steps: usize,
+        dt_s: f64,
+        diff: &mut Vec<i32>,
+    ) -> OccupancyEvents {
+        occupancy_diff(intervals, n_steps, dt_s, diff);
+        let mut steps = Vec::new();
+        let mut occ = Vec::new();
+        let mut cur = 0i32;
+        for (t, &d) in diff.iter().take(n_steps).enumerate() {
+            if d != 0 {
+                cur += d;
+                debug_assert!(cur >= 0);
+                steps.push(t as u32);
+                occ.push(cur);
+            }
+        }
+        OccupancyEvents { steps, occ, n_steps }
+    }
+
+    pub fn from_intervals(
+        intervals: &[ActiveInterval],
+        n_steps: usize,
+        dt_s: f64,
+    ) -> OccupancyEvents {
+        let mut diff = Vec::new();
+        Self::from_intervals_with(intervals, n_steps, dt_s, &mut diff)
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    /// Number of stored change events (memory is O(this)).
+    pub fn n_events(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// `A_t` for any `t < n_steps` (0 before the first event).
+    pub fn occupancy_at(&self, t: usize) -> i32 {
+        debug_assert!(t < self.n_steps);
+        match self.steps.partition_point(|&s| (s as usize) <= t) {
+            0 => 0,
+            i => self.occ[i - 1],
+        }
+    }
+
+    /// Write interleaved `(A_t, ΔA_t)` rows for `t0 .. t0 + n` into
+    /// `out[..2n]`. `ΔA_{t0}` is taken against `A_{t0-1}` (`0` at the
+    /// series start), exactly as the full-horizon builder computes it —
+    /// filling a partition of `0..n_steps` window by window reproduces
+    /// [`features_interleaved_into`] byte-for-byte.
+    pub fn fill_interleaved(&self, t0: usize, n: usize, out: &mut [f32]) {
+        debug_assert!(t0 + n <= self.n_steps, "window {t0}+{n} beyond {}", self.n_steps);
+        // First event at or after t0; occupancy just before t0.
+        let mut j = self.steps.partition_point(|&s| (s as usize) < t0);
+        let mut cur = if j == 0 { 0 } else { self.occ[j - 1] };
+        let mut prev = if t0 == 0 { 0.0f32 } else { cur as f32 };
+        for rel in 0..n {
+            let t = t0 + rel;
+            while j < self.steps.len() && self.steps[j] as usize == t {
+                cur = self.occ[j];
+                j += 1;
+            }
+            let a = cur as f32;
+            out[2 * rel] = a;
+            out[2 * rel + 1] = a - prev;
+            prev = a;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +280,66 @@ mod tests {
             features_interleaved_into(&ivs, n_steps, 0.25, &mut diff, &mut out);
             assert_eq!(out, features_from_intervals(&ivs, n_steps, 0.25).interleaved());
         }
+    }
+
+    #[test]
+    fn events_match_full_builder_over_any_window_partition() {
+        let ivs = [iv(0.2, 0.3, 0.8), iv(0.9, 0.2, 2.0), iv(1.5, 0.1, 0.4), iv(3.0, 0.5, 1.5)];
+        let n_steps = 40;
+        let ev = OccupancyEvents::from_intervals(&ivs, n_steps, 0.25);
+        let mut diff = Vec::new();
+        let mut reference = Vec::new();
+        features_interleaved_into(&ivs, n_steps, 0.25, &mut diff, &mut reference);
+        // Window sizes that do and don't divide n_steps, plus size 1.
+        for window in [1usize, 7, 8, 40, 64] {
+            let mut got = vec![0.0f32; 2 * n_steps];
+            let mut t0 = 0;
+            while t0 < n_steps {
+                let n = window.min(n_steps - t0);
+                ev.fill_interleaved(t0, n, &mut got[2 * t0..2 * (t0 + n)]);
+                t0 += n;
+            }
+            for (i, (a, b)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "window {window} element {i}");
+            }
+        }
+        // Random access agrees with the prefix-summed series.
+        for t in 0..n_steps {
+            assert_eq!(ev.occupancy_at(t) as f32, reference[2 * t], "A_{t}");
+        }
+    }
+
+    #[test]
+    fn events_are_compact() {
+        // 3 requests → at most 6 change events, regardless of grid size.
+        let ivs = [iv(1.0, 0.5, 0.5), iv(5.0, 0.5, 0.5), iv(9.0, 0.5, 0.5)];
+        let ev = OccupancyEvents::from_intervals(&ivs, 10_000, 0.25);
+        assert!(ev.n_events() <= 6, "{} events", ev.n_events());
+        assert_eq!(ev.n_steps(), 10_000);
+    }
+
+    #[test]
+    fn prop_events_reconstruct_random_interval_sets() {
+        check("occupancy events == diff-array features", |rng| {
+            let n = 1 + rng.below(30);
+            let ivs: Vec<ActiveInterval> = (0..n)
+                .map(|_| iv(rng.range(0.0, 50.0), rng.range(0.01, 2.0), rng.range(0.01, 20.0)))
+                .collect();
+            let n_steps = 1 + rng.below(300);
+            let mut diff = Vec::new();
+            let mut reference = Vec::new();
+            features_interleaved_into(&ivs, n_steps, 0.25, &mut diff, &mut reference);
+            let ev = OccupancyEvents::from_intervals(&ivs, n_steps, 0.25);
+            let window = 1 + rng.below(n_steps);
+            let mut got = vec![0.0f32; 2 * n_steps];
+            let mut t0 = 0;
+            while t0 < n_steps {
+                let w = window.min(n_steps - t0);
+                ev.fill_interleaved(t0, w, &mut got[2 * t0..2 * (t0 + w)]);
+                t0 += w;
+            }
+            assert_eq!(got, reference);
+        });
     }
 
     #[test]

@@ -13,7 +13,9 @@ pub mod features;
 pub mod queue;
 
 pub use calibrate::{fit_surrogate, DurationSamples};
-pub use features::{features_from_intervals, features_interleaved_into, FeatureSeries};
+pub use features::{
+    features_from_intervals, features_interleaved_into, FeatureSeries, OccupancyEvents,
+};
 pub use queue::{simulate_queue, ActiveInterval};
 
 use crate::util::rng::Rng;

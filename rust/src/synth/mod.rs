@@ -106,6 +106,25 @@ pub fn sample_power_into(
     rng: &mut Rng,
     out: &mut Vec<f32>,
 ) {
+    let mut carry = None;
+    sample_power_resume(states, dict, mode, rng, &mut carry, out);
+}
+
+/// Chunk-resumable [`sample_power_into`]: `carry` threads the AR(1)
+/// previous sample across calls, so sampling a trajectory one time-window
+/// at a time (the streaming facility path) draws the **exact** sequence a
+/// single full-horizon call would — provided the same `rng` is passed in
+/// series order and `carry` starts as `None`. For [`SynthMode::Iid`] the
+/// carry is unused; it is still updated so callers can switch modes per
+/// configuration without special cases.
+pub fn sample_power_resume(
+    states: &[usize],
+    dict: &StateDictionary,
+    mode: SynthMode,
+    rng: &mut Rng,
+    carry: &mut Option<f64>,
+    out: &mut Vec<f32>,
+) {
     out.clear();
     out.reserve(states.len());
     match mode {
@@ -113,15 +132,16 @@ pub fn sample_power_into(
             for &z in states {
                 debug_assert!(z < dict.k());
                 let y = rng.normal_ms(dict.mu[z], dict.sigma[z]);
-                out.push(dict.clip(y) as f32);
+                let clipped = dict.clip(y);
+                *carry = Some(clipped);
+                out.push(clipped as f32);
             }
         }
         SynthMode::Ar1 => {
-            let mut prev: Option<f64> = None;
             for &z in states {
                 debug_assert!(z < dict.k());
                 let (mu, sigma, phi) = (dict.mu[z], dict.sigma[z], dict.phi[z]);
-                let y = match prev {
+                let y = match *carry {
                     None => rng.normal_ms(mu, sigma),
                     Some(p) => {
                         // σ_noise = σ·√(1−φ²) keeps the marginal variance σ².
@@ -130,7 +150,7 @@ pub fn sample_power_into(
                     }
                 };
                 let clipped = dict.clip(y);
-                prev = Some(clipped);
+                *carry = Some(clipped);
                 out.push(clipped as f32);
             }
         }
@@ -244,6 +264,32 @@ mod tests {
         let mut buf = vec![123.0f32; 9]; // stale contents discarded
         sample_power_into(&states, &d, SynthMode::Ar1, &mut r2, &mut buf);
         assert_eq!(buf, owned);
+    }
+
+    #[test]
+    fn resumed_chunks_match_one_shot_bitwise() {
+        // Windowed synthesis with a carried AR(1) state must replay the
+        // exact one-shot draw sequence — for both modes and for chunk
+        // sizes that don't divide the trajectory.
+        for (mode, phi) in [(SynthMode::Iid, 0.0), (SynthMode::Ar1, 0.8)] {
+            let d = dict(phi);
+            let mut gen = Rng::new(95);
+            let states: Vec<usize> = (0..257).map(|_| gen.below(2)).collect();
+            let mut r1 = Rng::new(96);
+            let reference = sample_power(&states, &d, mode, &mut r1);
+            let mut r2 = Rng::new(96);
+            let mut carry = None;
+            let mut got = Vec::new();
+            let mut buf = Vec::new();
+            for chunk in states.chunks(31) {
+                sample_power_resume(chunk, &d, mode, &mut r2, &mut carry, &mut buf);
+                got.extend_from_slice(&buf);
+            }
+            assert_eq!(got.len(), reference.len());
+            for (i, (a, b)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} sample {i}");
+            }
+        }
     }
 
     #[test]

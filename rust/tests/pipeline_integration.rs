@@ -212,6 +212,136 @@ fn batched_facility_handles_long_horizons_with_tiling() {
 }
 
 #[test]
+fn windowed_streaming_facility_is_bit_identical_to_buffered() {
+    // The streaming-engine acceptance invariant: generating window-by-
+    // window (ragged final window, ragged sub-batches, any window size)
+    // reassembles the buffered facility run bit-for-bit — per-rack series,
+    // site IT series, and the PCC f32 series the stats consume.
+    let (mut gen, ids) = synth_generator("windowed_parity", 16, 5, 1, 23).unwrap();
+    let mut spec = ScenarioSpec::default_poisson(&ids[0], 1.0);
+    spec.topology = Topology { rows: 1, racks_per_row: 2, servers_per_rack: 5 };
+    spec.horizon_s = 120.0; // 480 steps at dt=0.25
+    spec.seed = 42;
+    gen.prepare_for(&spec).unwrap();
+    let buffered = gen.facility_shared_batched(&spec, 0.25, 2, 3).unwrap();
+    let n_racks = spec.topology.n_racks();
+
+    // 7.25 s windows → 29 steps; 480 = 16×29 + 16 → ragged final window.
+    for window_s in [7.25, 120.0, 1000.0] {
+        let mut racks: Vec<Vec<f32>> = vec![Vec::new(); n_racks];
+        let mut site_f32: Vec<f32> = Vec::new();
+        let mut rows_buf = Vec::new();
+        let mut site_buf = Vec::new();
+        gen.facility_shared_windowed(&spec, 0.25, window_s, 3, 3, |acc| {
+            acc.fold_rows_site(&mut rows_buf, &mut site_buf);
+            for (r, col) in racks.iter_mut().enumerate() {
+                col.extend(acc.rack_window(r).iter().map(|&x| x as f32));
+            }
+            site_f32.extend(site_buf.iter().map(|&x| x as f32));
+            Ok(())
+        })
+        .unwrap();
+        for r in 0..n_racks {
+            let reference = buffered.acc.rack_series(r);
+            assert_eq!(racks[r].len(), reference.len(), "window {window_s}: rack {r} length");
+            for (t, (a, b)) in racks[r].iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "window {window_s}: rack {r} t {t}: {a} vs {b}"
+                );
+            }
+        }
+        let reference = buffered.it_series();
+        for (t, (a, b)) in site_f32.iter().zip(&reference).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "window {window_s}: site t {t}");
+        }
+    }
+}
+
+#[test]
+fn windowed_streaming_is_worker_and_batch_invariant() {
+    // Same streamed output for any worker count and batching width
+    // (max_batch = 1 drives the batched engine at B = 1).
+    let (mut gen, ids) = synth_generator("windowed_invariance", 8, 4, 1, 29).unwrap();
+    let mut spec = ScenarioSpec::default_poisson(&ids[0], 0.8);
+    spec.topology = Topology { rows: 2, racks_per_row: 2, servers_per_rack: 3 };
+    spec.horizon_s = 60.0;
+    spec.seed = 9;
+    gen.prepare_for(&spec).unwrap();
+    let collect = |gen: &powertrace_sim::coordinator::Generator, workers, max_batch| {
+        let mut site = Vec::new();
+        let mut rows_buf = Vec::new();
+        let mut site_buf = Vec::new();
+        gen.facility_shared_windowed(&spec, 0.25, 11.0, workers, max_batch, |acc| {
+            acc.fold_rows_site(&mut rows_buf, &mut site_buf);
+            site.extend(site_buf.iter().map(|&x| x as f32));
+            Ok(())
+        })
+        .unwrap();
+        site
+    };
+    let a = collect(&gen, 1, 0);
+    let b = collect(&gen, 4, 0);
+    let c = collect(&gen, 2, 1);
+    assert_eq!(a, b, "worker-count invariance");
+    assert_eq!(a, c, "batch-width invariance");
+}
+
+#[test]
+fn concurrent_replay_of_two_paths_parses_each_once() {
+    // The per-path replay cache: many threads replaying two different
+    // paths concurrently must all get correct schedules, and both paths
+    // must be served from cache afterwards (files deleted). The old
+    // implementation held one global lock across file I/O; this exercises
+    // the per-path double-checked locking under real contention.
+    let (mut gen, ids) = synth_generator("replay_two_paths", 8, 4, 1, 13).unwrap();
+    let dir = std::env::temp_dir().join("powertrace_test_replay_two_paths");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path_a = dir.join("sched_a.json");
+    let path_b = dir.join("sched_b.json");
+    let sched_a: Vec<Request> =
+        (0..40).map(|i| Request { arrival_s: 1.2 * i as f64, n_in: 128, n_out: 64 }).collect();
+    let sched_b: Vec<Request> =
+        (0..25).map(|i| Request { arrival_s: 2.0 * i as f64, n_in: 64, n_out: 32 }).collect();
+    json::write_file(&path_a, &replay::schedule_to_json(&sched_a)).unwrap();
+    json::write_file(&path_b, &replay::schedule_to_json(&sched_b)).unwrap();
+
+    let mk_spec = |path: &std::path::Path| {
+        let mut spec = ScenarioSpec::default_poisson(&ids[0], 1.0);
+        spec.workload =
+            WorkloadSpec::Replay { path: path.to_str().unwrap().into(), offset_s: 0.0 };
+        spec.horizon_s = 60.0;
+        spec
+    };
+    let spec_a = mk_spec(&path_a);
+    let spec_b = mk_spec(&path_b);
+    gen.prepare_for(&spec_a).unwrap();
+    let base = powertrace_sim::util::rng::Rng::new(5);
+    let gen_ref = &gen;
+    std::thread::scope(|scope| {
+        for worker in 0..8usize {
+            let (spec_a, spec_b, base) = (&spec_a, &spec_b, &base);
+            scope.spawn(move || {
+                for round in 0..16 {
+                    let s = (worker + round) % 4;
+                    let a = gen_ref.schedule_for(spec_a, s, base).unwrap();
+                    let b = gen_ref.schedule_for(spec_b, s, base).unwrap();
+                    // horizon 60 s clips nothing here; both full schedules.
+                    assert_eq!(a.len(), 40);
+                    assert_eq!(b.len(), 25);
+                }
+            });
+        }
+    });
+    // Cached: files can vanish, both paths still served.
+    std::fs::remove_file(&path_a).unwrap();
+    std::fs::remove_file(&path_b).unwrap();
+    assert_eq!(gen.schedule_for(&spec_a, 0, &base).unwrap().len(), 40);
+    assert_eq!(gen.schedule_for(&spec_b, 0, &base).unwrap().len(), 25);
+}
+
+#[test]
 fn replay_trace_loaded_exactly_once_per_path() {
     // schedule_for must serve every server from one parsed copy of the
     // replay file. Observable proof: after the first facility run the file

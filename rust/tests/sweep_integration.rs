@@ -6,7 +6,7 @@
 use powertrace_sim::aggregate::Topology;
 use powertrace_sim::config::{ServerAssignment, WorkloadSpec};
 use powertrace_sim::coordinator::Generator;
-use powertrace_sim::scenarios::{run_sweep, GridDefaults, SweepGrid, SweepOptions};
+use powertrace_sim::scenarios::{run_sweep, run_sweep_to, GridDefaults, SweepGrid, SweepOptions};
 use powertrace_sim::testutil::synth_generator;
 
 fn generator() -> Option<Generator> {
@@ -44,12 +44,13 @@ fn sweep_runs_and_exports_every_scale() {
     for c in &report.cells {
         // 60 s horizon: 2 racks @1s → 60 pts, 1 row @15s → 4 pts,
         // facility @300s/@900s → single partial-window points.
-        assert_eq!(c.scales.racks_w.len(), 2);
-        assert_eq!(c.scales.racks_w[0].len(), 60);
-        assert_eq!(c.scales.rows_w.len(), 1);
-        assert_eq!(c.scales.rows_w[0].len(), 4);
-        assert_eq!(c.scales.facility_w.len(), 2);
-        assert_eq!(c.scales.facility_w[0].len(), 1);
+        let scales = c.scales.as_ref().expect("buffered cells carry scales");
+        assert_eq!(scales.racks_w.len(), 2);
+        assert_eq!(scales.racks_w[0].len(), 60);
+        assert_eq!(scales.rows_w.len(), 1);
+        assert_eq!(scales.rows_w[0].len(), 4);
+        assert_eq!(scales.facility_w.len(), 2);
+        assert_eq!(scales.facility_w[0].len(), 1);
         assert!(c.stats.peak_w >= c.stats.p99_w);
         assert!(c.stats.p99_w >= c.stats.avg_w);
         // Facility floor: 2 servers × 1 kW base × PUE.
@@ -69,9 +70,10 @@ fn sweep_summary_is_reproducible_across_runs_and_worker_counts() {
     let b = run_sweep(&mut gen2, &grid, &opts2).unwrap();
     assert_eq!(a.summary_csv(), b.summary_csv());
     for (x, y) in a.cells.iter().zip(&b.cells) {
-        assert_eq!(x.scales.racks_w, y.scales.racks_w);
-        assert_eq!(x.scales.rows_w, y.scales.rows_w);
-        assert_eq!(x.scales.facility_w, y.scales.facility_w);
+        let (xs, ys) = (x.scales.as_ref().unwrap(), y.scales.as_ref().unwrap());
+        assert_eq!(xs.racks_w, ys.racks_w);
+        assert_eq!(xs.rows_w, ys.rows_w);
+        assert_eq!(xs.facility_w, ys.facility_w);
     }
 }
 
@@ -97,9 +99,67 @@ fn sweep_batched_output_matches_sequential_bytes() {
     let b = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
     assert_eq!(a.summary_csv(), b.summary_csv());
     for (x, y) in a.cells.iter().zip(&b.cells) {
-        assert_eq!(x.scales.racks_w, y.scales.racks_w);
-        assert_eq!(x.scales.rows_w, y.scales.rows_w);
-        assert_eq!(x.scales.facility_w, y.scales.facility_w);
+        let (xs, ys) = (x.scales.as_ref().unwrap(), y.scales.as_ref().unwrap());
+        assert_eq!(xs.racks_w, ys.racks_w);
+        assert_eq!(xs.rows_w, ys.rows_w);
+        assert_eq!(xs.facility_w, ys.facility_w);
+    }
+}
+
+#[test]
+fn streamed_sweep_export_is_byte_identical_to_buffered() {
+    // The streaming-export acceptance invariant: for a horizon both paths
+    // can hold, `run_sweep_to` with a window must leave byte-identical
+    // files on disk — summary.csv (exact-quantile fallback ⇒ identical
+    // stats), grid.json, every scenario.json, and every incremental
+    // rack/row/facility series CSV.
+    let (mut gen, ids) = synth_generator("sweep_stream_parity", 8, 4, 1, 31).unwrap();
+    let grid = SweepGrid {
+        name: "stream-parity".into(),
+        defaults: GridDefaults { horizon_s: 60.0, ..GridDefaults::default() },
+        workloads: vec![
+            WorkloadSpec::Poisson { rate: 0.5 },
+            WorkloadSpec::Mmpp { mean_rate: 0.5, burstiness: 4.0 },
+        ],
+        topologies: vec![Topology { rows: 1, racks_per_row: 2, servers_per_rack: 3 }],
+        fleets: vec![ServerAssignment::Uniform(ids[0].clone())],
+        seeds: vec![3],
+    };
+    let dir_buf = std::env::temp_dir().join("powertrace_test_stream_parity_buffered");
+    let dir_str = std::env::temp_dir().join("powertrace_test_stream_parity_streamed");
+    let _ = std::fs::remove_dir_all(&dir_buf);
+    let _ = std::fs::remove_dir_all(&dir_str);
+
+    let buffered = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    buffered.write(&dir_buf).unwrap();
+
+    // 7 s windows: 60 s / 0.25 s = 240 steps = 8×28 + 16 → ragged tail.
+    let opts = SweepOptions { window_s: 7.0, ..SweepOptions::default() };
+    let streamed = run_sweep_to(&mut gen, &grid, &opts, Some(&dir_str)).unwrap();
+    streamed.write(&dir_str).unwrap();
+
+    for (b, s) in buffered.cells.iter().zip(&streamed.cells) {
+        assert!(s.scales.is_none(), "streamed cells must not buffer series");
+        assert!(s.exact_quantiles, "60 s horizon fits the exact-quantile cap");
+        assert_eq!(b.stats, s.stats, "cell {}", b.cell.id);
+    }
+    assert_eq!(buffered.summary_csv(), streamed.summary_csv());
+
+    let mut compared = 0;
+    for c in &buffered.cells {
+        for name in ["scenario.json", "racks_1s.csv", "rows_15s.csv", "facility_300s.csv", "facility_900s.csv"] {
+            let a = std::fs::read(dir_buf.join(&c.cell.id).join(name)).unwrap();
+            let b = std::fs::read(dir_str.join(&c.cell.id).join(name))
+                .unwrap_or_else(|e| panic!("{}/{name}: {e}", c.cell.id));
+            assert_eq!(a, b, "cell {} file {name} differs", c.cell.id);
+            compared += 1;
+        }
+    }
+    assert_eq!(compared, 10);
+    for name in ["summary.csv", "grid.json"] {
+        let a = std::fs::read(dir_buf.join(name)).unwrap();
+        let b = std::fs::read(dir_str.join(name)).unwrap();
+        assert_eq!(a, b, "{name} differs");
     }
 }
 
