@@ -47,8 +47,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     gen.facility_windowed(&spec, dt, window_s, 0, 0, |acc| {
         acc.fold_rows_site(&mut rows, &mut site);
-        pcc.clear();
-        pcc.extend(site.iter().map(|&x| ((x as f32) as f64 * pue) as f32));
+        powertrace_sim::aggregate::pcc_window_into(&site, pue, &mut pcc);
         stats.push_slice(&pcc);
         n_windows += 1;
         if n_windows % 8 == 0 {

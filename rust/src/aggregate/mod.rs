@@ -15,6 +15,10 @@
 //!   engine ([`crate::scenarios`]) exports per grid cell: racks at 1 s
 //!   match in-rack PDU telemetry, rows at 15 s match busway metering, and
 //!   the facility at 5/15 min matches utility interconnection data.
+//!
+//! Above the facility sits the **site** layer: [`SiteAccumulator`] composes
+//! several facilities' PCC windows into one utility-facing site window with
+//! bounded memory — the fold the [`crate::site`] engine drives.
 
 use crate::metrics::planning::resample_mean;
 use anyhow::{ensure, Result};
@@ -324,6 +328,122 @@ impl StreamingFacilityAccumulator {
     }
 }
 
+/// Build the facility PCC f32 series from an f64 site-IT window: per
+/// sample, `((x as f32) as f64 * pue) as f32` — f64 sum → f32
+/// ([`FacilityAccumulator::site_it_series`]), then ×PUE in f64 → f32
+/// ([`FacilityAccumulator::facility_series`]). The double rounding is
+/// deliberate: it is the exact expression of the buffered path, and every
+/// streaming consumer (the sweep runner's cells, the facility CLI, the
+/// site composition engine) must build PCC through this one helper so the
+/// bit-identity invariant cannot drift between call sites.
+pub fn pcc_window_into(site_it_w: &[f64], pue: f64, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(site_it_w.iter().map(|&x| ((x as f32) as f64 * pue) as f32));
+}
+
+/// Bounded window accumulator for **multi-facility site composition** (the
+/// paper's utility-facing layer above [`FacilityAccumulator`]): holds one
+/// generation window of every facility's PCC power plus their sum —
+/// O(facilities × window) samples, never the horizon.
+///
+/// The composition contract mirrors the facility fold's determinism: the
+/// site window is the f64 sum of the facilities' f32 PCC windows taken in
+/// **facility order** ([`SiteAccumulator::fold_site`]), so the composed
+/// series is a pure function of the facility windows — independent of how
+/// many workers produced them or how the horizon was windowed. A
+/// single-facility site therefore reproduces the plain facility PCC series
+/// bit-for-bit (`f32 → f64 → f32` round-trips exactly).
+#[derive(Debug)]
+pub struct SiteAccumulator {
+    /// Capacity in timesteps of one window.
+    window: usize,
+    t0: usize,
+    len: usize,
+    /// Per-facility PCC window (facility power at each facility's PCC —
+    /// PUE already applied upstream).
+    fac_w: Vec<Vec<f32>>,
+    filled: Vec<bool>,
+    /// Site window: Σ facilities, f64, valid after `fold_site`.
+    site_w: Vec<f64>,
+}
+
+impl SiteAccumulator {
+    pub fn new(n_facilities: usize, window: usize) -> SiteAccumulator {
+        assert!(n_facilities > 0, "site accumulator: zero facilities");
+        assert!(window > 0, "site accumulator: zero-length window");
+        SiteAccumulator {
+            window,
+            t0: 0,
+            len: 0,
+            fac_w: (0..n_facilities).map(|_| vec![0.0; window]).collect(),
+            filled: vec![false; n_facilities],
+            site_w: vec![0.0; window],
+        }
+    }
+
+    pub fn n_facilities(&self) -> usize {
+        self.fac_w.len()
+    }
+
+    /// Start step of the current window.
+    pub fn window_t0(&self) -> usize {
+        self.t0
+    }
+
+    /// Filled length of the current window.
+    pub fn window_len(&self) -> usize {
+        self.len
+    }
+
+    /// Reset for the window starting at `t0` covering `len` steps.
+    pub fn begin_window(&mut self, t0: usize, len: usize) {
+        assert!(len <= self.window, "window {len} exceeds capacity {}", self.window);
+        self.t0 = t0;
+        self.len = len;
+        self.filled.fill(false);
+    }
+
+    /// Deposit one facility's PCC window (must match the window length).
+    pub fn set_facility(&mut self, facility: usize, pcc_w: &[f32]) -> Result<()> {
+        ensure!(
+            pcc_w.len() == self.len,
+            "facility {facility}: window length {} != site window {}",
+            pcc_w.len(),
+            self.len
+        );
+        ensure!(!self.filled[facility], "facility {facility}: window delivered twice");
+        self.fac_w[facility][..self.len].copy_from_slice(pcc_w);
+        self.filled[facility] = true;
+        Ok(())
+    }
+
+    /// One facility's current window (after [`SiteAccumulator::set_facility`]).
+    pub fn facility_window(&self, facility: usize) -> &[f32] {
+        &self.fac_w[facility][..self.len]
+    }
+
+    /// Sum the facility windows into the site window, visiting facilities
+    /// in index order (the deterministic composition fold). Errors if any
+    /// facility has not delivered this window.
+    pub fn fold_site(&mut self) -> Result<&[f64]> {
+        for (f, &ok) in self.filled.iter().enumerate() {
+            ensure!(ok, "facility {f}: window {} not delivered", self.t0);
+        }
+        self.site_w[..self.len].fill(0.0);
+        for fac in &self.fac_w {
+            for (s, &x) in self.site_w[..self.len].iter_mut().zip(&fac[..self.len]) {
+                *s += x as f64;
+            }
+        }
+        Ok(&self.site_w[..self.len])
+    }
+
+    /// The folded site window (valid after [`SiteAccumulator::fold_site`]).
+    pub fn site_window(&self) -> &[f64] {
+        &self.site_w[..self.len]
+    }
+}
+
 /// Which interval each aggregation level is exported at.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScaleConfig {
@@ -609,6 +729,46 @@ mod tests {
         acc.begin_window(0, 4);
         assert!(acc.add_server_tile(0, 2, &[1.0f32; 3]).is_err());
         assert!(acc.add_server_tile(0, 0, &[1.0f32; 4]).is_ok());
+    }
+
+    #[test]
+    fn site_accumulator_sums_facilities_in_order() {
+        let mut acc = SiteAccumulator::new(3, 8);
+        acc.begin_window(0, 4);
+        // Missing facilities are an error, not a silent zero.
+        assert!(acc.fold_site().is_err());
+        acc.set_facility(0, &[1.0f32; 4]).unwrap();
+        acc.set_facility(1, &[2.0f32; 4]).unwrap();
+        // Double delivery and wrong lengths are rejected.
+        assert!(acc.set_facility(1, &[2.0f32; 4]).is_err());
+        assert!(acc.set_facility(2, &[3.0f32; 3]).is_err());
+        acc.set_facility(2, &[3.0f32; 4]).unwrap();
+        assert_eq!(acc.fold_site().unwrap(), &[6.0f64; 4]);
+        assert_eq!(acc.facility_window(1), &[2.0f32; 4]);
+        // Next window resets the delivery markers and length.
+        acc.begin_window(4, 2);
+        assert!(acc.fold_site().is_err());
+        for f in 0..3 {
+            acc.set_facility(f, &[10.0f32; 2]).unwrap();
+        }
+        assert_eq!(acc.fold_site().unwrap(), &[30.0f64; 2]);
+        assert_eq!(acc.window_t0(), 4);
+        assert_eq!(acc.window_len(), 2);
+    }
+
+    #[test]
+    fn site_single_facility_roundtrips_f32_exactly() {
+        // f32 → f64 → f32 is exact: a 1-facility site reproduces the
+        // facility PCC series bit-for-bit.
+        let mut rng = Rng::new(11);
+        let win: Vec<f32> = (0..64).map(|_| rng.range(1e3, 5e6) as f32).collect();
+        let mut acc = SiteAccumulator::new(1, 64);
+        acc.begin_window(0, 64);
+        acc.set_facility(0, &win).unwrap();
+        let site: Vec<f32> = acc.fold_site().unwrap().iter().map(|&x| x as f32).collect();
+        for (a, b) in site.iter().zip(&win) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

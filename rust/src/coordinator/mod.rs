@@ -9,7 +9,9 @@
 
 pub mod pipeline;
 
-pub use pipeline::{Generator, PreparedConfig, ServerTrace, WorkerScratch, DEFAULT_MAX_BATCH};
+pub use pipeline::{
+    window_geometry, Generator, PreparedConfig, ServerTrace, WorkerScratch, DEFAULT_MAX_BATCH,
+};
 
 use crate::aggregate::FacilityAccumulator;
 use crate::config::ScenarioSpec;

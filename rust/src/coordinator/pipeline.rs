@@ -381,6 +381,21 @@ impl Generator {
         Ok(())
     }
 
+    /// [`Generator::prepare_for`] over several scenarios at once — the
+    /// multi-facility hoist the site composition engine ([`crate::site`])
+    /// shares with the sweep engine: every configuration any facility
+    /// references is prepared exactly once, and the N concurrent
+    /// facility streams then run over one shared read-only cache.
+    pub fn prepare_for_many<'a, I>(&mut self, specs: I) -> Result<()>
+    where
+        I: IntoIterator<Item = &'a ScenarioSpec>,
+    {
+        for spec in specs {
+            self.prepare_for(spec)?;
+        }
+        Ok(())
+    }
+
     /// Lookup an already-prepared configuration (shared, read-only).
     pub fn get_prepared(&self, config_id: &str) -> Option<Arc<PreparedConfig>> {
         self.prepared.get(config_id).cloned()
@@ -643,6 +658,11 @@ impl Generator {
     /// `sink` runs on the caller thread between window barriers; it reads
     /// the accumulator's window (`window_t0()`, `window_len()`,
     /// `rack_window(r)`, `fold_rows_site`).
+    ///
+    /// Takes `&self`: several windowed streams can run concurrently over
+    /// one generator (each with its own accumulator and rack state) —
+    /// the site composition engine ([`crate::site`]) drives one stream
+    /// per facility in lockstep this way.
     pub fn facility_shared_windowed<F>(
         &self,
         spec: &ScenarioSpec,
@@ -655,22 +675,8 @@ impl Generator {
     where
         F: FnMut(&mut StreamingFacilityAccumulator) -> Result<()>,
     {
-        ensure!(
-            dt_s.is_finite() && dt_s > 0.0,
-            "dt must be a positive number of seconds (got {dt_s})"
-        );
-        ensure!(
-            window_s.is_finite() && window_s > 0.0,
-            "window must be a positive number of seconds (got {window_s})"
-        );
+        let (n_steps, window, n_windows) = window_geometry(spec.horizon_s, dt_s, window_s)?;
         let n_racks = spec.topology.n_racks();
-        let n_steps = (spec.horizon_s / dt_s).round() as usize;
-        ensure!(
-            n_steps > 0,
-            "horizon {}s too short for dt {dt_s}s (zero samples)",
-            spec.horizon_s
-        );
-        let window = ((window_s / dt_s).round() as usize).clamp(1, n_steps);
         let max_batch = if max_batch == 0 { DEFAULT_MAX_BATCH } else { max_batch };
         let mut table: BTreeMap<String, Arc<PreparedConfig>> = BTreeMap::new();
         for id in spec.server_config.config_ids_used(&spec.topology) {
@@ -696,7 +702,6 @@ impl Generator {
         let scratch_pool: Vec<Mutex<WorkerScratch>> =
             (0..workers).map(|_| Mutex::new(WorkerScratch::new())).collect();
         let errors = Mutex::new(Vec::<String>::new());
-        let n_windows = (n_steps + window - 1) / window;
         for wi in 0..n_windows {
             let t0 = wi * window;
             let n = (n_steps - t0).min(window);
@@ -851,6 +856,28 @@ impl Generator {
         }
         Ok(())
     }
+}
+
+/// The streaming paths' shared window geometry: `(n_steps, window_steps,
+/// n_windows)` for a horizon sampled at `dt_s` and split into `window_s`
+/// windows (final window ragged). [`Generator::facility_shared_windowed`]
+/// and the site composition coordinator ([`crate::site`]) both derive
+/// their lockstep schedule from this one function, so they can never
+/// disagree on window boundaries. Errors on non-positive `dt_s` /
+/// `window_s` or a zero-sample horizon.
+pub fn window_geometry(horizon_s: f64, dt_s: f64, window_s: f64) -> Result<(usize, usize, usize)> {
+    ensure!(
+        dt_s.is_finite() && dt_s > 0.0,
+        "dt must be a positive number of seconds (got {dt_s})"
+    );
+    ensure!(
+        window_s.is_finite() && window_s > 0.0,
+        "window must be a positive number of seconds (got {window_s})"
+    );
+    let n_steps = (horizon_s / dt_s).round() as usize;
+    ensure!(n_steps > 0, "horizon {horizon_s}s too short for dt {dt_s}s (zero samples)");
+    let window = ((window_s / dt_s).round() as usize).clamp(1, n_steps);
+    Ok((n_steps, window, (n_steps + window - 1) / window))
 }
 
 /// Borrow any free scratch slot. The pool is sized to the worker count,

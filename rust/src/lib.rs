@@ -24,7 +24,11 @@
 //! 8. [`coordinator`] — the multi-server generation pipeline;
 //! 9. [`scenarios`] — the sweep engine: declarative grids of scenarios
 //!    (traffic × topology × fleet × seed) executed in parallel with shared
-//!    per-configuration artifacts.
+//!    per-configuration artifacts;
+//! 10. [`site`] — the site composition engine: several facilities with
+//!     phase-offset workloads driven in lockstep and summed at the utility
+//!     point of interconnection, with load-duration / coincidence /
+//!     ramp-distribution / headroom characterization.
 //!
 //! See `examples/quickstart.rs` for the five-line path from a scenario to a
 //! facility load shape, and `examples/sweep_grid.rs` for a whole scenario
@@ -71,6 +75,7 @@ pub mod experiments;
 pub mod metrics;
 pub mod runtime;
 pub mod scenarios;
+pub mod site;
 pub mod states;
 pub mod surrogate;
 pub mod synth;

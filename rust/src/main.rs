@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   generate   one server power trace from a workload scenario
 //!   facility   facility-scale run from a scenario JSON
+//!   site       compose N facilities into a utility-facing site profile
 //!   sweep      expand a scenario grid and run every cell (multi-scale export)
+//!   diff       compare two summary CSVs cell-by-cell (regression gate)
 //!   repro      regenerate a paper table/figure (or `all`)
 //!   fit        Rust-side GMM+BIC refit on held-out measured traces
 //!   testbed    run the synthetic measurement testbed (ground truth)
@@ -43,7 +45,9 @@ fn main() {
     let result = match cmd.as_str() {
         "generate" => cmd_generate(&args),
         "facility" => cmd_facility(&args),
+        "site" => cmd_site(&args),
         "sweep" => cmd_sweep(&args),
+        "diff" => cmd_diff(&args),
         "repro" => cmd_repro(&args),
         "fit" => cmd_fit(&args),
         "testbed" => cmd_testbed(&args),
@@ -73,8 +77,12 @@ fn print_help() {
          commands:\n\
            generate   generate one server power trace (Poisson workload)\n\
            facility   run a facility scenario (JSON spec) → site load shape\n\
+           site       compose N phase-offset facilities (site spec JSON) →\n\
+                      utility-facing load profile + interconnect summary\n\
            sweep      expand a scenario grid (JSON), run every cell in\n\
                       parallel, export multi-scale series + summary\n\
+           diff       compare two summary CSVs cell-by-cell; non-zero exit\n\
+                      above --tolerance (metric regression gate)\n\
            repro      reproduce a paper table/figure: {} | all\n\
            fit        fit GMM power states on held-out measured traces\n\
            testbed    run the ground-truth measurement testbed\n\
@@ -171,7 +179,7 @@ fn cmd_facility(args: &Args) -> Result<()> {
     let site = result.facility_series();
     // Same ramp-interval clamp as the streamed path (and the sweep
     // engine), so --window never changes the reported stats.
-    let ramp_s = 900.0_f64.min(spec.horizon_s / 2.0).max(dt);
+    let ramp_s = powertrace_sim::metrics::planning::clamp_ramp_interval(900.0, spec.horizon_s, dt);
     let stats = PlanningStats::compute(&site, dt, ramp_s)?;
     print_facility_summary(&spec, dt, &stats, true, 0.0, t0.elapsed().as_secs_f64());
     if let Some(out) = args.str_opt("out") {
@@ -199,9 +207,12 @@ fn cmd_facility_streamed(
     args: &Args,
     t0: std::time::Instant,
 ) -> Result<()> {
-    use powertrace_sim::metrics::planning::{StreamingPlanningStats, StreamingResampler};
+    use powertrace_sim::metrics::planning::{
+        clamp_ramp_interval, StreamingPlanningStats, StreamingResampler,
+    };
     use std::io::Write as _;
-    let mut stats = StreamingPlanningStats::new(dt, 900.0_f64.min(spec.horizon_s / 2.0).max(dt))?;
+    let mut stats =
+        StreamingPlanningStats::new(dt, clamp_ramp_interval(900.0, spec.horizon_s, dt))?;
     let resample_s = args.f64_or("resample", 900.0)?;
     let mut writer = match args.str_opt("out") {
         Some(out) => {
@@ -216,8 +227,7 @@ fn cmd_facility_streamed(
     let mut pcc = Vec::new();
     gen.facility_windowed(spec, dt, window_s, workers, 0, |acc| {
         acc.fold_rows_site(&mut rows, &mut site);
-        pcc.clear();
-        pcc.extend(site.iter().map(|&x| ((x as f32) as f64 * spec.pue) as f32));
+        powertrace_sim::aggregate::pcc_window_into(&site, spec.pue, &mut pcc);
         stats.push_slice(&pcc);
         if let Some((f, r, n, _)) = writer.as_mut() {
             for &p in &pcc {
@@ -270,6 +280,135 @@ fn print_facility_summary(
         stats.peak_to_average,
         wall_s
     );
+}
+
+fn cmd_site(args: &Args) -> Result<()> {
+    use powertrace_sim::site::{run_site, run_site_sweep, SiteGrid, SiteOptions, SiteSpec};
+    if args.has("help") {
+        println!("{}", usage("site", "compose N facilities into a utility-facing site profile", &[
+            Opt { name: "site", help: "site spec JSON (facilities + phase offsets + nameplate)", default: None },
+            Opt { name: "grid", help: "site sweep JSON (phase spreads × seeds over a base site); overrides --site", default: None },
+            Opt { name: "dt", help: "generation sample interval (s)", default: Some("1") },
+            Opt { name: "window", help: "lockstep generation window (s); memory is O(facilities × window)", default: Some("3600") },
+            Opt { name: "workers", help: "total worker budget across facilities (0 = auto)", default: Some("0") },
+            Opt { name: "max-batch", help: "servers per batched classifier call (0 = auto)", default: Some("0") },
+            Opt { name: "ramp", help: "headline ramp interval (s; clamped to horizon/2)", default: Some("900") },
+            Opt { name: "load-interval", help: "site_load.csv export interval (s)", default: Some("60") },
+            Opt { name: "out", help: "output directory (site_load.csv + site_summary.csv)", default: None },
+            Opt { name: "backend", help: "classifier backend (windowed composition requires native)", default: Some("native") },
+            Opt { name: "synth", help: "run on a synthetic random-weight artifact store (CI smokes / demos; no `make artifacts` needed)", default: None },
+            Opt { name: "synth-seed", help: "seed of the synthetic artifact store (with --synth)", default: Some("7") },
+        ]));
+        return Ok(());
+    }
+    let opts = SiteOptions {
+        dt_s: args.f64_or("dt", 1.0)?,
+        window_s: args.f64_or("window", 3600.0)?,
+        workers: args.usize_or("workers", 0)?,
+        max_batch: args.usize_or("max-batch", 0)?,
+        ramp_interval_s: args.f64_or("ramp", 900.0)?,
+        load_interval_s: args.f64_or("load-interval", 60.0)?,
+        collect_series: false,
+    };
+    let out = args.str_opt("out").map(std::path::PathBuf::from);
+    let t0 = std::time::Instant::now();
+    if let Some(gpath) = args.str_opt("grid") {
+        let grid = SiteGrid::load(std::path::Path::new(gpath))?;
+        let mut gen = site_generator(args, &grid.base.config_ids())?;
+        let results = run_site_sweep(&mut gen, &grid, &opts, out.as_deref())?;
+        println!(
+            "site sweep '{}': {} variants × {} facilities ({:.1}s wall)\n",
+            grid.name,
+            results.len(),
+            grid.base.facilities.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        for (v, r) in &results {
+            println!("-- {} ({}) --", v.id, v.label);
+            print!("{}", r.summary_table());
+        }
+        if let Some(dir) = &out {
+            println!(
+                "\nwrote site_sweep_summary.csv + {} variant dir(s) under {}",
+                results.len(),
+                dir.display()
+            );
+        }
+        return Ok(());
+    }
+    let spath = args.str_opt("site").ok_or_else(|| {
+        anyhow::anyhow!("--site <spec.json> (or --grid <sweep.json>) is required; see 'powertrace site --help'")
+    })?;
+    let spec = SiteSpec::load(std::path::Path::new(spath))?;
+    let mut gen = site_generator(args, &spec.config_ids())?;
+    let report = run_site(&mut gen, &spec, &opts, out.as_deref())?;
+    println!(
+        "site '{}': {} facilities, {} servers, {:.1} h horizon, dt={}s, {}s windows ({:.1}s wall)",
+        spec.name,
+        spec.facilities.len(),
+        spec.n_servers(),
+        spec.horizon_s() / 3600.0,
+        opts.dt_s,
+        opts.window_s,
+        t0.elapsed().as_secs_f64()
+    );
+    print!("{}", report.summary_table());
+    if let Some(dir) = &out {
+        println!("wrote site_load.csv + site_summary.csv under {}", dir.display());
+    }
+    Ok(())
+}
+
+/// Generator for `powertrace site`: the named backend, or — with
+/// `--synth` — the native backend over a synthetic random-weight artifact
+/// store covering exactly the configurations the spec references (CI
+/// smokes and demos run without `make artifacts`; traces are
+/// deterministic per seed but statistically meaningless).
+fn site_generator(args: &Args, config_ids: &[String]) -> Result<Generator> {
+    if args.has("synth") {
+        let cat = Catalog::load_default()?;
+        let root = powertrace_sim::testutil::synth_artifact_store(
+            "site_cli",
+            16,
+            6,
+            config_ids,
+            args.u64_or("synth-seed", 7)?,
+        );
+        let store = powertrace_sim::artifacts::ArtifactStore::open(&root)?;
+        Ok(Generator::native_with(cat, store))
+    } else {
+        Generator::with_backend(&args.str_or("backend", "native"))
+    }
+}
+
+fn cmd_diff(args: &Args) -> Result<()> {
+    use powertrace_sim::scenarios::diff_summary_files;
+    if args.has("help") {
+        println!("{}", usage("diff <a.csv> <b.csv>", "compare two summary CSVs cell-by-cell", &[
+            Opt { name: "tolerance", help: "max relative difference per numeric cell", default: Some("0") },
+        ]));
+        return Ok(());
+    }
+    let (a, b) = match (args.positional.first(), args.positional.get(1)) {
+        (Some(a), Some(b)) => (a, b),
+        _ => anyhow::bail!("usage: powertrace diff <a.csv> <b.csv> [--tolerance 1e-9]"),
+    };
+    let tolerance = args.f64_or("tolerance", 0.0)?;
+    let report = diff_summary_files(
+        std::path::Path::new(a),
+        std::path::Path::new(b),
+        tolerance,
+    )?;
+    if report.is_match() {
+        println!(
+            "summaries match: {} row(s), {} cell(s) within tolerance {tolerance}",
+            report.rows_compared, report.cells_compared
+        );
+        Ok(())
+    } else {
+        print!("{}", report.render());
+        std::process::exit(1);
+    }
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {

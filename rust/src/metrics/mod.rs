@@ -15,9 +15,10 @@ pub use acf::{acf, acf_r2};
 pub use error::{delta_energy, nrmse};
 pub use ks::ks_statistic;
 pub use planning::{
-    coefficient_of_variation, max_ramp, peak_to_average, percentile, resample_mean,
-    resample_mean_with_tail, resample_stride, PlanningStats, StreamedStats, StreamingHistogram,
-    StreamingPlanningStats, StreamingResampler, EXACT_QUANTILE_CAP, QUANTILE_BINS,
+    clamp_ramp_interval, coefficient_of_variation, max_ramp, peak_to_average, percentile,
+    resample_mean, resample_mean_with_tail, resample_stride, PlanningStats, RampStats,
+    StreamedStats, StreamingHistogram, StreamingPlanningStats, StreamingRamps,
+    StreamingResampler, EXACT_QUANTILE_CAP, QUANTILE_BINS,
 };
 
 /// Summary of the paper's four fidelity metrics for one (measured, synthetic)

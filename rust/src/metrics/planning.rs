@@ -2,8 +2,9 @@
 //! peak, average, energy, peak-to-average ratio, maximum ramp rate at a
 //! given interval, load factor, coefficient of variation, and percentiles
 //! — plus the **streaming** variants ([`StreamingPlanningStats`],
-//! [`StreamingResampler`], [`StreamingHistogram`]) the >24 h windowed
-//! facility path folds per window without ever materializing the series.
+//! [`StreamingResampler`], [`StreamingHistogram`], [`StreamingRamps`]) the
+//! >24 h windowed facility path and the site composition engine
+//! ([`crate::site`]) fold per window without materializing the series.
 //!
 //! Error handling: these functions sit directly under user-supplied sweep
 //! JSON (`dt`, export intervals) and generated series that can, in
@@ -62,6 +63,15 @@ impl PlanningStats {
             cv: coefficient_of_variation(series)?,
         })
     }
+}
+
+/// Clamp a requested ramp-measurement interval to a series: at most half
+/// the horizon (so at least two windows exist and the ramp is measured
+/// instead of identically zero) and at least `dt_s`. The one clamp policy
+/// shared by the sweep runner, the facility CLI, and the site composition
+/// engine — their `max_ramp_w` columns must agree on identical series.
+pub fn clamp_ramp_interval(ramp_interval_s: f64, horizon_s: f64, dt_s: f64) -> f64 {
+    ramp_interval_s.min(horizon_s / 2.0).max(dt_s)
 }
 
 /// Samples per resampling window: `interval_s / dt_s` rounded, clamped to
@@ -151,15 +161,23 @@ pub fn percentile(series: &[f32], p: f64) -> Result<f64> {
         series.len()
     );
     v.sort_by(f32::total_cmp);
+    Ok(percentile_of_sorted(&v, p))
+}
+
+/// The interpolation step of [`percentile`] over an already-sorted,
+/// NaN-free, non-empty slice — shared so batched quantile readers
+/// ([`StreamingPlanningStats::quantiles`]) sort once and stay
+/// bit-identical to per-call [`percentile`].
+fn percentile_of_sorted(v: &[f32], p: f64) -> f64 {
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    Ok(if lo == hi {
+    if lo == hi {
         v[lo] as f64
     } else {
         let w = rank - lo as f64;
         v[lo] as f64 * (1.0 - w) + v[hi] as f64 * w
-    })
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -411,6 +429,52 @@ impl StreamingPlanningStats {
         self.n
     }
 
+    /// Quantile (`q` in [0, 1]) of every sample folded so far: exact
+    /// (linearly interpolated, [`percentile`]) while the series fits the
+    /// retained-sample cap, histogram-estimated (within
+    /// [`StreamingHistogram::error_bound`]) beyond it — the same policy the
+    /// p99 in [`StreamingPlanningStats::finalize`] follows, so a
+    /// `quantile(0.99)` read always agrees with the finalized `p99_w`.
+    /// Site load-duration curves are read through this accessor.
+    pub fn quantile(&self, q: f64) -> Result<f64> {
+        ensure!((0.0..=1.0).contains(&q), "quantile: q must be in [0, 1] (got {q})");
+        match &self.exact {
+            Some(buf) => percentile(buf, q * 100.0),
+            None => self.hist.quantile(q),
+        }
+    }
+
+    /// Several quantiles in one pass: on the exact path the retained
+    /// buffer is sorted **once** and every point read from the sorted
+    /// copy — bit-identical to calling [`StreamingPlanningStats::quantile`]
+    /// per point, without re-sorting up to [`EXACT_QUANTILE_CAP`] samples
+    /// per read (the load-duration fan-out the site engine performs).
+    pub fn quantiles(&self, qs: &[f64]) -> Result<Vec<f64>> {
+        for &q in qs {
+            ensure!((0.0..=1.0).contains(&q), "quantile: q must be in [0, 1] (got {q})");
+        }
+        match &self.exact {
+            Some(buf) => {
+                let mut v: Vec<f32> = buf.iter().copied().filter(|x| !x.is_nan()).collect();
+                ensure!(
+                    !v.is_empty(),
+                    "percentile: no finite samples ({} NaN of {} total)",
+                    buf.len() - v.len(),
+                    buf.len()
+                );
+                v.sort_by(f32::total_cmp);
+                Ok(qs.iter().map(|&q| percentile_of_sorted(&v, q * 100.0)).collect())
+            }
+            None => qs.iter().map(|&q| self.hist.quantile(q)).collect(),
+        }
+    }
+
+    /// `false` once the exact-sample cap spilled to the histogram (every
+    /// [`StreamingPlanningStats::quantile`] read is then bounded, not exact).
+    pub fn quantiles_exact(&self) -> bool {
+        self.exact.is_some()
+    }
+
     #[inline]
     fn fold_ramp_point(&mut self, v: f32) {
         if let Some(p) = self.prev_ramp {
@@ -484,6 +548,100 @@ impl StreamingPlanningStats {
             exact_quantiles: false,
             p99_error_bound_w: self.hist.error_bound(),
         })
+    }
+}
+
+/// Summary of the ramp-rate distribution at one utility interval — what an
+/// interconnection study reads off the composed site profile: how fast the
+/// load moves between consecutive settlement intervals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RampStats {
+    /// Measurement interval (s): consecutive `interval_s` means.
+    pub interval_s: f64,
+    /// Max |ΔP| between consecutive interval means (W per interval).
+    pub max_w: f64,
+    /// 99th percentile of |ΔP| (W per interval); 0 when fewer than two
+    /// intervals completed.
+    pub p99_w: f64,
+    /// Number of interval-to-interval ramps measured.
+    pub n_ramps: usize,
+}
+
+/// Streaming ramp-rate distribution at one utility interval: folds the
+/// series sample-by-sample (any push partition — window boundaries never
+/// matter), resamples to `interval_s` means through the shared
+/// [`StreamingResampler`] geometry, and records every |ΔP| between
+/// consecutive means. Retained memory is the ramp list itself —
+/// O(horizon / interval), i.e. ~2 000 entries for a week at 5 min — so a
+/// full distribution (not just the max) stays exact at planning horizons.
+/// The trailing partial interval participates exactly as
+/// [`resample_mean`]'s final chunk does (via [`StreamingRamps::finalize`]).
+#[derive(Debug, Clone)]
+pub struct StreamingRamps {
+    interval_s: f64,
+    res: StreamingResampler,
+    prev: Option<f32>,
+    /// |ΔP| per completed interval pair, kept in f64: the difference of
+    /// two f32 interval means is exact in f64 but not always
+    /// f32-representable, and [`max_ramp`] keeps it in f64 — storing f32
+    /// here would break bit-identity with the buffered fold.
+    ramps: Vec<f64>,
+}
+
+impl StreamingRamps {
+    pub fn new(dt_s: f64, interval_s: f64) -> Result<StreamingRamps> {
+        Ok(StreamingRamps {
+            interval_s,
+            res: StreamingResampler::new(dt_s, interval_s, 1.0)?,
+            prev: None,
+            ramps: Vec::new(),
+        })
+    }
+
+    pub fn interval_s(&self) -> f64 {
+        self.interval_s
+    }
+
+    fn fold_point(&mut self, v: f32) {
+        if let Some(p) = self.prev {
+            self.ramps.push((v as f64 - p as f64).abs());
+        }
+        self.prev = Some(v);
+    }
+
+    /// Fold one window of the series, in series order.
+    pub fn push_slice(&mut self, xs: &[f32]) {
+        for &x in xs {
+            if let Some(v) = self.res.push(x as f64) {
+                self.fold_point(v);
+            }
+        }
+    }
+
+    /// Flush the trailing partial interval and summarize the distribution.
+    pub fn finalize(mut self) -> Result<RampStats> {
+        if let Some((v, _count)) = self.res.flush() {
+            self.fold_point(v);
+        }
+        let n_ramps = self.ramps.len();
+        let max_w = self.ramps.iter().fold(0.0f64, |m, &x| m.max(x));
+        let p99_w = if self.ramps.is_empty() {
+            0.0
+        } else {
+            // `percentile`'s linear interpolation, over the f64 ramps
+            // (ramps are differences of finite means — never NaN).
+            let mut v = self.ramps;
+            v.sort_by(f64::total_cmp);
+            let rank = 0.99 * (v.len() - 1) as f64;
+            let (lo, hi) = (rank.floor() as usize, rank.ceil() as usize);
+            if lo == hi {
+                v[lo]
+            } else {
+                let w = rank - lo as f64;
+                v[lo] * (1.0 - w) + v[hi] * w
+            }
+        };
+        Ok(RampStats { interval_s: self.interval_s, max_w, p99_w, n_ramps })
     }
 }
 
@@ -741,6 +899,62 @@ mod tests {
         let q = h.quantile(0.5).unwrap();
         assert!((q - 1e6).abs() < 2.0 * h.error_bound() + 1000.0, "median {q}");
         assert!(h.error_bound() <= 2.0 * 1.001e6 / QUANTILE_BINS as f64);
+    }
+
+    #[test]
+    fn streaming_ramps_match_max_ramp_and_survive_ragged_windows() {
+        let s = wavy(1003);
+        let (dt, interval) = (0.25, 7.0);
+        let reference = max_ramp(&s, dt, interval).unwrap();
+        // Fold in ragged windows; partition must not matter.
+        for chunk_len in [1usize, 13, 64, 1003] {
+            let mut r = StreamingRamps::new(dt, interval).unwrap();
+            for chunk in s.chunks(chunk_len) {
+                r.push_slice(chunk);
+            }
+            let out = r.finalize().unwrap();
+            assert_eq!(out.max_w.to_bits(), reference.to_bits(), "chunk {chunk_len}");
+            assert!(out.p99_w <= out.max_w);
+            assert!(out.n_ramps > 0);
+            assert_eq!(out.interval_s, interval);
+        }
+        // Degenerate: fewer than two intervals → zero ramps, zero stats.
+        let mut r = StreamingRamps::new(1.0, 100.0).unwrap();
+        r.push_slice(&[5.0; 3]);
+        let out = r.finalize().unwrap();
+        assert_eq!(out.n_ramps, 0);
+        assert_eq!(out.max_w, 0.0);
+        assert_eq!(out.p99_w, 0.0);
+    }
+
+    #[test]
+    fn streaming_quantile_accessor_tracks_both_paths() {
+        let s = wavy(2000);
+        // Exact path: agrees with `percentile` bit-for-bit.
+        let mut st = StreamingPlanningStats::new(0.25, 9.0).unwrap();
+        st.push_slice(&s);
+        assert!(st.quantiles_exact());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(
+                st.quantile(q).unwrap().to_bits(),
+                percentile(&s, q * 100.0).unwrap().to_bits(),
+                "q {q}"
+            );
+        }
+        assert!(st.quantile(1.5).is_err());
+        let p99_before = st.quantile(0.99).unwrap();
+        let fin = st.finalize().unwrap();
+        assert_eq!(fin.stats.p99_w.to_bits(), p99_before.to_bits());
+        // Histogram path: within the documented bound of nearest-rank.
+        let mut st = StreamingPlanningStats::with_exact_cap(0.25, 9.0, 0).unwrap();
+        st.push_slice(&s);
+        assert!(!st.quantiles_exact());
+        let mut sorted = s.clone();
+        sorted.sort_by(f32::total_cmp);
+        let nearest = sorted[(0.5 * (sorted.len() - 1) as f64).floor() as usize] as f64;
+        let q50 = st.quantile(0.5).unwrap();
+        let fin = st.finalize().unwrap();
+        assert!((q50 - nearest).abs() <= fin.p99_error_bound_w + 1e-9, "q50 {q50} vs {nearest}");
     }
 
     #[test]

@@ -1,0 +1,330 @@
+//! Summary-CSV regression diffing: compare two `summary.csv` /
+//! `site_summary.csv` / `site_sweep_summary.csv` revisions cell-by-cell
+//! and report per-metric deltas — the ROADMAP's "cross-cell diff tooling".
+//!
+//! Sweep and site summaries are deterministic per `(grid, seeds)` (no
+//! wall-clock columns, shortest round-trip float formatting), so two runs
+//! of the same scenario set on the same code revision must match exactly;
+//! a metric that moved is a behavioral change. `powertrace diff` turns
+//! that property into a CI gate: exit 0 when every cell agrees within
+//! `--tolerance` (relative), non-zero otherwise.
+//!
+//! Comparison model: rows are keyed by their first column (the cell /
+//! facility / variant id) so row reordering is not a difference, columns
+//! are matched by header name, and each cell is compared numerically when
+//! both sides parse as finite floats (relative error against the larger
+//! magnitude) and textually otherwise. Missing rows or columns are
+//! structural differences regardless of tolerance.
+
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One differing cell.
+#[derive(Debug, Clone)]
+pub struct CellDelta {
+    /// Row key (first-column value).
+    pub row: String,
+    /// Column (header) name.
+    pub column: String,
+    pub a: String,
+    pub b: String,
+    /// Relative difference (`f64::INFINITY` for non-numeric mismatches).
+    pub rel: f64,
+}
+
+/// Outcome of diffing two summaries.
+#[derive(Debug, Clone, Default)]
+pub struct DiffReport {
+    /// Columns present in exactly one input (header name, which side).
+    pub missing_columns: Vec<(String, char)>,
+    /// Row keys present in exactly one input (key, which side).
+    pub missing_rows: Vec<(String, char)>,
+    /// Cells whose relative difference exceeds the tolerance.
+    pub deltas: Vec<CellDelta>,
+    /// Rows compared (present in both).
+    pub rows_compared: usize,
+    /// Cells compared (shared rows × shared columns).
+    pub cells_compared: usize,
+}
+
+impl DiffReport {
+    /// `true` when the summaries agree within tolerance.
+    pub fn is_match(&self) -> bool {
+        self.missing_columns.is_empty() && self.missing_rows.is_empty() && self.deltas.is_empty()
+    }
+
+    /// Human-readable report: structural differences, per-metric worst
+    /// deltas, then every differing cell.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (col, side) in &self.missing_columns {
+            s.push_str(&format!("column '{col}' only in {side}\n"));
+        }
+        for (row, side) in &self.missing_rows {
+            s.push_str(&format!("row '{row}' only in {side}\n"));
+        }
+        // Per-metric worst relative delta — the headline a planner reads.
+        let mut worst: BTreeMap<&str, f64> = BTreeMap::new();
+        for d in &self.deltas {
+            let w = worst.entry(d.column.as_str()).or_insert(0.0);
+            *w = w.max(d.rel);
+        }
+        for (col, rel) in &worst {
+            s.push_str(&format!("metric '{col}': worst relative delta {rel:.3e}\n"));
+        }
+        for d in &self.deltas {
+            s.push_str(&format!(
+                "  {} / {}: {} -> {} (rel {:.3e})\n",
+                d.row, d.column, d.a, d.b, d.rel
+            ));
+        }
+        s.push_str(&format!(
+            "{} differing cell(s) over {} row(s) x shared columns ({} cells compared)\n",
+            self.deltas.len(),
+            self.rows_compared,
+            self.cells_compared
+        ));
+        s
+    }
+}
+
+/// Diff two summary-CSV texts. `tolerance` is the maximum allowed
+/// relative difference per numeric cell (0 = exact).
+pub fn diff_summaries(a: &str, b: &str, tolerance: f64) -> Result<DiffReport> {
+    ensure!(
+        tolerance.is_finite() && tolerance >= 0.0,
+        "diff: tolerance must be a non-negative number (got {tolerance})"
+    );
+    let ta = parse_table(a).context("first input")?;
+    let tb = parse_table(b).context("second input")?;
+    let mut report = DiffReport::default();
+    for col in &ta.header {
+        if !tb.header.contains(col) {
+            report.missing_columns.push((col.clone(), 'a'));
+        }
+    }
+    for col in &tb.header {
+        if !ta.header.contains(col) {
+            report.missing_columns.push((col.clone(), 'b'));
+        }
+    }
+    // Shared columns, in a's order, with each side's column index.
+    let shared: Vec<(String, usize, usize)> = ta
+        .header
+        .iter()
+        .enumerate()
+        .filter_map(|(ia, col)| {
+            tb.header.iter().position(|c| c == col).map(|ib| (col.clone(), ia, ib))
+        })
+        .collect();
+    for key in ta.rows.keys() {
+        if !tb.rows.contains_key(key) {
+            report.missing_rows.push((key.clone(), 'a'));
+        }
+    }
+    for key in tb.rows.keys() {
+        if !ta.rows.contains_key(key) {
+            report.missing_rows.push((key.clone(), 'b'));
+        }
+    }
+    for (key, row_a) in &ta.rows {
+        let Some(row_b) = tb.rows.get(key) else { continue };
+        report.rows_compared += 1;
+        for (col, ia, ib) in &shared {
+            let va = row_a.get(*ia).map(|s| s.as_str()).unwrap_or("");
+            let vb = row_b.get(*ib).map(|s| s.as_str()).unwrap_or("");
+            report.cells_compared += 1;
+            let rel = cell_delta(va, vb);
+            if rel > tolerance {
+                report.deltas.push(CellDelta {
+                    row: key.clone(),
+                    column: col.clone(),
+                    a: va.to_string(),
+                    b: vb.to_string(),
+                    rel,
+                });
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// [`diff_summaries`] over two files.
+pub fn diff_summary_files(a: &Path, b: &Path, tolerance: f64) -> Result<DiffReport> {
+    let ta = std::fs::read_to_string(a).with_context(|| format!("reading {}", a.display()))?;
+    let tb = std::fs::read_to_string(b).with_context(|| format!("reading {}", b.display()))?;
+    diff_summaries(&ta, &tb, tolerance)
+}
+
+/// Relative difference of one cell: 0 for identical text, numeric
+/// relative error when both sides parse as finite floats, ∞ otherwise.
+fn cell_delta(a: &str, b: &str) -> f64 {
+    if a == b {
+        return 0.0;
+    }
+    match (a.parse::<f64>(), b.parse::<f64>()) {
+        (Ok(x), Ok(y)) if x.is_finite() && y.is_finite() => {
+            let scale = x.abs().max(y.abs());
+            if scale == 0.0 {
+                0.0
+            } else {
+                (x - y).abs() / scale
+            }
+        }
+        _ => f64::INFINITY,
+    }
+}
+
+struct Table {
+    header: Vec<String>,
+    /// Row key (first column; duplicate keys get a `#<n>` suffix so every
+    /// row participates) → remaining + first fields, in file order.
+    rows: BTreeMap<String, Vec<String>>,
+}
+
+fn parse_table(text: &str) -> Result<Table> {
+    let mut lines = text.lines().filter(|l| !l.is_empty());
+    let header = parse_csv_line(lines.next().context("empty CSV (no header)")?);
+    ensure!(!header.is_empty(), "empty CSV header");
+    let mut rows = BTreeMap::new();
+    for (i, line) in lines.enumerate() {
+        let fields = parse_csv_line(line);
+        ensure!(
+            fields.len() == header.len(),
+            "row {} has {} fields, header has {}",
+            i + 2,
+            fields.len(),
+            header.len()
+        );
+        let mut key = fields[0].clone();
+        let mut n = 1;
+        while rows.contains_key(&key) {
+            n += 1;
+            key = format!("{}#{n}", fields[0]);
+        }
+        rows.insert(key, fields);
+    }
+    Ok(Table { header, rows })
+}
+
+/// Split one CSV line, honoring RFC-4180 quoting (`""` escapes a quote
+/// inside a quoted field). Fields never span lines in our summaries.
+fn parse_csv_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut field = String::new();
+    let mut quoted = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        if quoted {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    field.push('"');
+                } else {
+                    quoted = false;
+                }
+            } else {
+                field.push(c);
+            }
+        } else {
+            match c {
+                '"' => quoted = true,
+                ',' => out.push(std::mem::take(&mut field)),
+                _ => field.push(c),
+            }
+        }
+    }
+    out.push(field);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BASE: &str = "cell,peak_w,avg_w,label\n\
+                        w0,1000.5,800.25,poisson\n\
+                        w1,2000,1600,\"mmpp, bursty\"\n";
+
+    #[test]
+    fn identical_summaries_match() {
+        let r = diff_summaries(BASE, BASE, 0.0).unwrap();
+        assert!(r.is_match(), "{}", r.render());
+        assert_eq!(r.rows_compared, 2);
+        assert_eq!(r.cells_compared, 8);
+    }
+
+    #[test]
+    fn detects_an_injected_metric_change() {
+        let b = BASE.replace("800.25", "801.25");
+        let r = diff_summaries(BASE, &b, 0.0).unwrap();
+        assert!(!r.is_match());
+        assert_eq!(r.deltas.len(), 1);
+        assert_eq!(r.deltas[0].row, "w0");
+        assert_eq!(r.deltas[0].column, "avg_w");
+        assert!((r.deltas[0].rel - 1.0 / 801.25).abs() < 1e-6);
+        // ...and the same change passes under a loose tolerance.
+        assert!(diff_summaries(BASE, &b, 0.01).unwrap().is_match());
+    }
+
+    #[test]
+    fn row_reordering_is_not_a_difference() {
+        let b = "cell,peak_w,avg_w,label\n\
+                 w1,2000,1600,\"mmpp, bursty\"\n\
+                 w0,1000.5,800.25,poisson\n";
+        assert!(diff_summaries(BASE, b, 0.0).unwrap().is_match());
+    }
+
+    #[test]
+    fn numeric_formatting_differences_compare_numerically() {
+        let b = BASE.replace("2000", "2000.0").replace("1600", "1.6e3");
+        assert!(diff_summaries(BASE, &b, 0.0).unwrap().is_match());
+    }
+
+    #[test]
+    fn structural_differences_are_reported() {
+        // Missing row.
+        let b = "cell,peak_w,avg_w,label\nw0,1000.5,800.25,poisson\n";
+        let r = diff_summaries(BASE, b, 1.0).unwrap();
+        assert!(!r.is_match());
+        assert_eq!(r.missing_rows, vec![("w1".to_string(), 'a')]);
+        // Missing column.
+        let b = BASE.replace(",label", "").replace(",poisson", "").replace(",\"mmpp, bursty\"", "");
+        let r = diff_summaries(BASE, &b, 1.0).unwrap();
+        assert_eq!(r.missing_columns, vec![("label".to_string(), 'a')]);
+        // Textual change is infinite however large the tolerance.
+        let b = BASE.replace("poisson", "diurnal");
+        let r = diff_summaries(BASE, &b, 1e9).unwrap();
+        assert_eq!(r.deltas.len(), 1);
+        assert!(r.deltas[0].rel.is_infinite());
+    }
+
+    #[test]
+    fn quoted_fields_and_empty_cells_roundtrip() {
+        assert_eq!(
+            parse_csv_line("a,\"b,c\",\"say \"\"hi\"\"\",,d"),
+            vec!["a", "b,c", "say \"hi\"", "", "d"]
+        );
+        // Empty-vs-empty cells (site summary facility rows) are equal.
+        let s = "name,cf\nfac0,\nsite,0.9\n";
+        assert!(diff_summaries(s, s, 0.0).unwrap().is_match());
+    }
+
+    #[test]
+    fn duplicate_keys_all_participate() {
+        let a = "cell,x\nw0,1\nw0,2\n";
+        let b = "cell,x\nw0,1\nw0,3\n";
+        let r = diff_summaries(a, b, 0.0).unwrap();
+        assert_eq!(r.rows_compared, 2);
+        assert_eq!(r.deltas.len(), 1);
+    }
+
+    #[test]
+    fn invalid_inputs_error() {
+        assert!(diff_summaries("", "", 0.0).is_err());
+        assert!(diff_summaries("a,b\n1\n", "a,b\n1,2\n", 0.0).is_err()); // ragged row
+        assert!(diff_summaries(BASE, BASE, f64::NAN).is_err());
+        assert!(diff_summaries(BASE, BASE, -1.0).is_err());
+    }
+}

@@ -74,8 +74,20 @@
 //! default. Cells are bit-reproducible per `(scenario, seed)`, so grid
 //! summaries can be diffed across code revisions.
 
+//! # Comparing revisions
+//!
+//! Because summaries are deterministic, two revisions of the same grid can
+//! be compared cell-by-cell: [`diff::diff_summary_files`] (CLI:
+//! `powertrace diff a.csv b.csv --tolerance 1e-9`) reports per-metric
+//! deltas and exits non-zero beyond the tolerance — the metric-regression
+//! gate CI runs after every sweep/site smoke. The site composition layer
+//! ([`crate::site`]) reuses this module's streaming CSV writers for its
+//! `site_load.csv` export.
+
+pub mod diff;
 pub mod grid;
 pub mod runner;
 
+pub use diff::{diff_summaries, diff_summary_files, DiffReport};
 pub use grid::{GridDefaults, SweepCell, SweepGrid};
 pub use runner::{run_sweep, run_sweep_to, CellResult, SweepOptions, SweepReport};

@@ -196,9 +196,10 @@ pub fn run_sweep_to(
     Ok(SweepReport { grid: grid.clone(), dt_s: opts.dt_s, cells: out })
 }
 
-/// See [`SweepOptions::ramp_interval_s`]: keep ≥ 2 windows in range.
+/// See [`SweepOptions::ramp_interval_s`]: keep ≥ 2 windows in range (the
+/// shared [`clamp_ramp_interval`](crate::metrics::planning::clamp_ramp_interval) policy).
 fn cell_ramp_interval(opts: &SweepOptions, horizon_s: f64) -> f64 {
-    opts.ramp_interval_s.min(horizon_s / 2.0).max(opts.dt_s)
+    crate::metrics::planning::clamp_ramp_interval(opts.ramp_interval_s, horizon_s, opts.dt_s)
 }
 
 /// Run one cell through the windowed streaming pipeline: fold summary
@@ -237,10 +238,8 @@ fn run_cell_streaming(
         |acc| {
             acc.fold_rows_site(&mut rows_buf, &mut site_buf);
             // The PCC f32 series exactly as the buffered stats path builds
-            // it: site f64 → f32 (site_it_series), then ×PUE in f64 → f32
-            // (facility_series) — the double rounding is deliberate.
-            site_pcc.clear();
-            site_pcc.extend(site_buf.iter().map(|&x| ((x as f32) as f64 * pue) as f32));
+            // it — the shared helper owns the deliberate double rounding.
+            crate::aggregate::pcc_window_into(&site_buf, pue, &mut site_pcc);
             stats.push_slice(&site_pcc);
             if let Some(w) = writers.as_mut() {
                 w.push_window(acc, &rows_buf, &site_buf)?;
@@ -462,8 +461,10 @@ impl CellWriters {
 /// emitted a value. Byte-identical to [`write_series_csv`] on the buffered
 /// [`MultiScale`] series because the resampler reproduces
 /// `resample_mean_f64` exactly and both share [`fmt_secs`] + Rust's
-/// shortest round-trip f32 formatting.
-struct StreamingCsv {
+/// shortest round-trip f32 formatting. Crate-visible: the site composition
+/// engine ([`crate::site`]) streams `site_load.csv` through the same
+/// writer so facility and site exports can never drift in format.
+pub(crate) struct StreamingCsv {
     out: std::io::BufWriter<std::fs::File>,
     interval_s: f64,
     next_row: usize,
@@ -473,7 +474,7 @@ struct StreamingCsv {
 }
 
 impl StreamingCsv {
-    fn create(
+    pub(crate) fn create(
         path: &Path,
         stem: &str,
         n_cols: usize,
@@ -481,11 +482,31 @@ impl StreamingCsv {
         interval_s: f64,
         scale: f64,
     ) -> Result<StreamingCsv> {
+        let names: Vec<String> = (0..n_cols).map(|i| format!("{stem}_{i}")).collect();
+        Self::create_named(path, &names, dt_s, interval_s, scale)
+    }
+
+    /// [`StreamingCsv::create`] with explicit column names (the site
+    /// export's `site_w,<facility>_w` header).
+    pub(crate) fn create_named(
+        path: &Path,
+        col_names: &[String],
+        dt_s: f64,
+        interval_s: f64,
+        scale: f64,
+    ) -> Result<StreamingCsv> {
         let file = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
         let mut out = std::io::BufWriter::new(file);
-        out.write_all(series_csv_header(stem, n_cols).as_bytes())?;
-        let cols = (0..n_cols)
+        let mut header = String::from("t_s");
+        for name in col_names {
+            header.push(',');
+            header.push_str(&csv_field(name));
+        }
+        header.push('\n');
+        out.write_all(header.as_bytes())?;
+        let cols = col_names
+            .iter()
             .map(|_| StreamingResampler::new(dt_s, interval_s, scale))
             .collect::<Result<Vec<_>>>()?;
         Ok(StreamingCsv {
@@ -493,12 +514,12 @@ impl StreamingCsv {
             interval_s,
             next_row: 0,
             cols,
-            pending: (0..n_cols).map(|_| std::collections::VecDeque::new()).collect(),
+            pending: (0..col_names.len()).map(|_| std::collections::VecDeque::new()).collect(),
             line: String::new(),
         })
     }
 
-    fn push_col(&mut self, col: usize, xs: &[f64]) {
+    pub(crate) fn push_col(&mut self, col: usize, xs: &[f64]) {
         let (r, q) = (&mut self.cols[col], &mut self.pending[col]);
         for &x in xs {
             if let Some(v) = r.push(x) {
@@ -507,7 +528,19 @@ impl StreamingCsv {
         }
     }
 
-    fn write_ready_rows(&mut self) -> Result<()> {
+    /// [`StreamingCsv::push_col`] over an f32 window (each sample widened
+    /// to f64 before the resampler fold — the same expression the f64 path
+    /// would see for values that started life as f32).
+    pub(crate) fn push_col_f32(&mut self, col: usize, xs: &[f32]) {
+        let (r, q) = (&mut self.cols[col], &mut self.pending[col]);
+        for &x in xs {
+            if let Some(v) = r.push(x as f64) {
+                q.push_back(v);
+            }
+        }
+    }
+
+    pub(crate) fn write_ready_rows(&mut self) -> Result<()> {
         let ready = self.pending.iter().map(|q| q.len()).min().unwrap_or(0);
         for _ in 0..ready {
             self.line.clear();
@@ -527,7 +560,7 @@ impl StreamingCsv {
     /// Flush the trailing partial resample window of every column (the
     /// buffered `resample_mean` emits it averaged over its actual length)
     /// and write the final row(s).
-    fn finish(mut self) -> Result<()> {
+    pub(crate) fn finish(mut self) -> Result<()> {
         for (r, q) in self.cols.iter_mut().zip(self.pending.iter_mut()) {
             if let Some((v, _count)) = r.flush() {
                 q.push_back(v);
@@ -542,7 +575,7 @@ impl StreamingCsv {
 
 /// RFC-4180 quoting for free-text CSV fields (a replay workload's path
 /// may contain commas or quotes).
-fn csv_field(s: &str) -> String {
+pub(crate) fn csv_field(s: &str) -> String {
     if s.contains(',') || s.contains('"') || s.contains('\n') {
         format!("\"{}\"", s.replace('"', "\"\""))
     } else {
@@ -551,7 +584,7 @@ fn csv_field(s: &str) -> String {
 }
 
 /// `300` for whole seconds, `0.25` otherwise (file-name friendly).
-fn fmt_secs(x: f64) -> String {
+pub(crate) fn fmt_secs(x: f64) -> String {
     if x.fract() == 0.0 {
         format!("{}", x as i64)
     } else {

@@ -1,0 +1,448 @@
+//! Lockstep multi-facility composition: drive N
+//! [`facility_shared_windowed`](crate::coordinator::Generator::facility_shared_windowed)
+//! streams window-by-window, fold them into a bounded
+//! [`SiteAccumulator`], and characterize the composed utility-facing
+//! profile as it streams past.
+//!
+//! # Execution model
+//!
+//! One thread per facility runs the windowed facility engine (each with
+//! its own inner rack-parallel worker share); a bounded rendezvous channel
+//! per facility (capacity 1) delivers each completed PCC window to the
+//! coordinator, which waits for window *w* from **every** facility before
+//! folding — so the whole site advances through the horizon in lockstep
+//! and no stream can run more than two windows ahead. Peak memory is
+//! O(facilities × window) site-side plus each facility's own
+//! O(racks × window) streaming state; nothing scales with the horizon.
+//!
+//! # Determinism
+//!
+//! Every facility window is bit-identical regardless of worker count,
+//! batch width, and window size (the PR 3 invariant), and the site fold
+//! sums facilities in spec order ([`SiteAccumulator::fold_site`]) — so
+//! `site_load.csv` / `site_summary.csv` are byte-identical across worker
+//! counts and window sizes, and a single-facility site reproduces the
+//! plain facility path's PCC series exactly.
+
+use super::metrics::{
+    characterization_header, characterization_row, SeriesSummary, SiteSeriesStats,
+};
+use super::spec::SiteSpec;
+use crate::aggregate::{pcc_window_into, SiteAccumulator};
+use crate::config::ScenarioSpec;
+use crate::coordinator::{window_geometry, Generator};
+use crate::scenarios::runner::{csv_field, fmt_secs, StreamingCsv};
+use crate::util::threadpool::default_workers;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::path::Path;
+use std::sync::mpsc;
+
+/// Marker a facility thread reports when the coordinator stopped taking
+/// windows (the real failure is elsewhere; this one is filtered out).
+const ABORT_MSG: &str = "site window delivery aborted";
+
+/// Execution knobs for one site run.
+#[derive(Debug, Clone)]
+pub struct SiteOptions {
+    /// Generation sample interval (s). Sites default to 1 s: utility
+    /// characterization happens at ≥ 5 min intervals, and planning
+    /// horizons are days.
+    pub dt_s: f64,
+    /// Generation window (s); memory is O(facilities × window) site-side.
+    pub window_s: f64,
+    /// Total worker budget split across facilities (0 = auto).
+    pub workers: usize,
+    /// Servers per batched classifier call (0 = default, 1 = sequential).
+    pub max_batch: usize,
+    /// Interval for the headline `PlanningStats::max_ramp_w` (clamped to
+    /// half the horizon, like the sweep engine).
+    pub ramp_interval_s: f64,
+    /// Export interval of `site_load.csv`.
+    pub load_interval_s: f64,
+    /// Retain the full composed site series on the report (tests; O(T)).
+    pub collect_series: bool,
+}
+
+impl Default for SiteOptions {
+    fn default() -> Self {
+        SiteOptions {
+            dt_s: 1.0,
+            window_s: 3600.0,
+            workers: 0,
+            max_batch: 0,
+            ramp_interval_s: 900.0,
+            load_interval_s: 60.0,
+            collect_series: false,
+        }
+    }
+}
+
+/// One facility's slice of a completed site run.
+pub struct FacilityReport {
+    pub name: String,
+    pub phase_offset_s: f64,
+    pub servers: usize,
+    pub seed: u64,
+    pub summary: SeriesSummary,
+}
+
+/// A completed site run: per-facility and composed characterizations plus
+/// the site-level coincidence / headroom metrics.
+pub struct SiteReport {
+    pub spec: SiteSpec,
+    pub dt_s: f64,
+    pub facilities: Vec<FacilityReport>,
+    /// Characterization of the composed site series.
+    pub site: SeriesSummary,
+    /// Σ facility peaks (the non-coincident worst case), in facility order.
+    pub sum_facility_peaks_w: f64,
+    /// Site peak ÷ Σ facility peaks, in (0, 1]. Clamped at 1: the site
+    /// series is exported in f32, whose half-ulp rounding can nudge the
+    /// coincident-peak case above the f64 sum by ~1e-7 relative.
+    pub coincidence_factor: f64,
+    /// 1 / coincidence factor (≥ 1).
+    pub diversity_factor: f64,
+    /// The oversubscription baseline (spec nameplate, else Σ facility peaks).
+    pub nameplate_w: f64,
+    /// `nameplate_w − site peak`.
+    pub headroom_w: f64,
+    /// `headroom_w / nameplate_w`.
+    pub headroom_frac: f64,
+    /// The composed site PCC series ([`SiteOptions::collect_series`]).
+    pub site_series: Option<Vec<f32>>,
+}
+
+/// Run a site: compose every facility's windowed stream into the
+/// utility-facing profile. With `out_dir`, streams `site_load.csv`
+/// window-by-window and writes `site_summary.csv` + `site_spec.json` on
+/// completion. Requires the native backend (windowed generation).
+pub fn run_site(
+    gen: &mut Generator,
+    spec: &SiteSpec,
+    opts: &SiteOptions,
+    out_dir: Option<&Path>,
+) -> Result<SiteReport> {
+    spec.validate()?;
+    ensure!(
+        opts.dt_s.is_finite() && opts.dt_s > 0.0,
+        "site: dt must be positive seconds (got {})",
+        opts.dt_s
+    );
+    ensure!(
+        opts.window_s.is_finite() && opts.window_s > 0.0,
+        "site: window must be positive seconds (got {})",
+        opts.window_s
+    );
+    let shifted: Vec<ScenarioSpec> =
+        spec.facilities.iter().map(|f| f.effective_scenario()).collect();
+    gen.prepare_for_many(shifted.iter())?;
+    let gen_ro: &Generator = gen;
+
+    let n_fac = shifted.len();
+    let dt = opts.dt_s;
+    let horizon = spec.horizon_s();
+    // The exact window geometry every facility stream computes internally
+    // (one shared function — the lockstep schedule cannot drift).
+    let (n_steps, window, n_windows) = window_geometry(horizon, dt, opts.window_s)?;
+    let ramp_s = crate::metrics::planning::clamp_ramp_interval(opts.ramp_interval_s, horizon, dt);
+    let total_workers = if opts.workers == 0 { default_workers() } else { opts.workers };
+    let inner_workers = (total_workers / n_fac).max(1);
+
+    let mut site_stats = SiteSeriesStats::new(dt, ramp_s, &spec.utility_intervals_s)?;
+    let mut writer: Option<StreamingCsv> = match out_dir {
+        Some(dir) => {
+            std::fs::create_dir_all(dir)?;
+            let mut names = vec!["site_w".to_string()];
+            names.extend(spec.facilities.iter().map(|f| format!("{}_w", f.name)));
+            Some(StreamingCsv::create_named(
+                &dir.join("site_load.csv"),
+                &names,
+                dt,
+                opts.load_interval_s,
+                1.0,
+            )?)
+        }
+        None => None,
+    };
+    let mut site_series: Option<Vec<f32>> =
+        if opts.collect_series { Some(Vec::new()) } else { None };
+    let utility_intervals = &spec.utility_intervals_s;
+
+    let fac_summaries: Vec<SeriesSummary> = std::thread::scope(|sc| -> Result<Vec<SeriesSummary>> {
+        let mut handles = Vec::with_capacity(n_fac);
+        let mut rxs = Vec::with_capacity(n_fac);
+        for spec_f in shifted.iter() {
+            let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(1);
+            rxs.push(rx);
+            let pue = spec_f.pue;
+            let max_batch = opts.max_batch;
+            let window_s = opts.window_s;
+            handles.push(sc.spawn(move || -> Result<SeriesSummary> {
+                let mut fac_stats = SiteSeriesStats::new(dt, ramp_s, utility_intervals)?;
+                let mut rows_buf: Vec<Vec<f64>> = Vec::new();
+                let mut site_buf: Vec<f64> = Vec::new();
+                let mut pcc: Vec<f32> = Vec::new();
+                gen_ro.facility_shared_windowed(
+                    spec_f,
+                    dt,
+                    window_s,
+                    inner_workers,
+                    max_batch,
+                    |facc| {
+                        facc.fold_rows_site(&mut rows_buf, &mut site_buf);
+                        // The facility PCC f32 series exactly as the sweep
+                        // engine's streamed cells build it (shared helper).
+                        pcc_window_into(&site_buf, pue, &mut pcc);
+                        fac_stats.push_window(&pcc);
+                        tx.send(pcc.clone()).map_err(|_| anyhow!(ABORT_MSG))?;
+                        Ok(())
+                    },
+                )?;
+                fac_stats.finalize()
+            }));
+        }
+
+        // Coordinator: one lockstep barrier per window. Failures are
+        // recorded (never early-returned) so the channels always drop and
+        // the facility threads always join.
+        let mut acc = SiteAccumulator::new(n_fac, window);
+        let mut site_pcc: Vec<f32> = Vec::new();
+        let mut coord_err: Option<anyhow::Error> = None;
+        'windows: for wi in 0..n_windows {
+            let t0 = wi * window;
+            let len = (n_steps - t0).min(window);
+            acc.begin_window(t0, len);
+            for (f, rx) in rxs.iter().enumerate() {
+                let win = match rx.recv() {
+                    Ok(w) => w,
+                    Err(_) => {
+                        coord_err = Some(anyhow!(
+                            "facility '{}': window stream ended early",
+                            spec.facilities[f].name
+                        ));
+                        break 'windows;
+                    }
+                };
+                if let Err(e) = acc.set_facility(f, &win) {
+                    coord_err = Some(e);
+                    break 'windows;
+                }
+            }
+            match acc.fold_site() {
+                Ok(site_w) => {
+                    site_pcc.clear();
+                    site_pcc.extend(site_w.iter().map(|&x| x as f32));
+                }
+                Err(e) => {
+                    coord_err = Some(e);
+                    break 'windows;
+                }
+            }
+            site_stats.push_window(&site_pcc);
+            if let Some(series) = site_series.as_mut() {
+                series.extend_from_slice(&site_pcc);
+            }
+            if let Some(w) = writer.as_mut() {
+                w.push_col_f32(0, &site_pcc);
+                for f in 0..n_fac {
+                    w.push_col_f32(1 + f, acc.facility_window(f));
+                }
+                if let Err(e) = w.write_ready_rows() {
+                    coord_err = Some(e);
+                    break 'windows;
+                }
+            }
+        }
+        drop(rxs);
+        let mut summaries = Vec::with_capacity(n_fac);
+        let mut errors: Vec<String> = Vec::new();
+        for (f, h) in handles.into_iter().enumerate() {
+            let name = &spec.facilities[f].name;
+            match h.join() {
+                Ok(Ok(s)) => summaries.push(s),
+                Ok(Err(e)) => {
+                    let msg = format!("{e:#}");
+                    // Delivery aborts are downstream of the real failure.
+                    if !msg.contains(ABORT_MSG) {
+                        errors.push(format!("facility '{name}': {msg}"));
+                    }
+                }
+                Err(_) => errors.push(format!("facility '{name}': generation thread panicked")),
+            }
+        }
+        if !errors.is_empty() {
+            bail!("site composition failed: {}", errors.join("; "));
+        }
+        if let Some(e) = coord_err {
+            return Err(e);
+        }
+        ensure!(
+            summaries.len() == n_fac,
+            "site composition failed: {} of {n_fac} facility streams aborted",
+            n_fac - summaries.len()
+        );
+        Ok(summaries)
+    })?;
+
+    if let Some(w) = writer.take() {
+        w.finish()?;
+    }
+    let site = site_stats.finalize()?;
+    let sum_facility_peaks_w: f64 = fac_summaries.iter().map(|s| s.stats.peak_w).sum();
+    let coincidence_factor = if sum_facility_peaks_w > 0.0 {
+        (site.stats.peak_w / sum_facility_peaks_w).min(1.0)
+    } else {
+        1.0
+    };
+    let nameplate_w = spec.nameplate_w.unwrap_or(sum_facility_peaks_w);
+    let headroom_w = nameplate_w - site.stats.peak_w;
+    let report = SiteReport {
+        spec: spec.clone(),
+        dt_s: dt,
+        facilities: spec
+            .facilities
+            .iter()
+            .zip(fac_summaries)
+            .map(|(f, summary)| FacilityReport {
+                name: f.name.clone(),
+                phase_offset_s: f.phase_offset_s,
+                servers: f.scenario.topology.n_servers(),
+                seed: f.scenario.seed,
+                summary,
+            })
+            .collect(),
+        site,
+        sum_facility_peaks_w,
+        coincidence_factor,
+        diversity_factor: 1.0 / coincidence_factor,
+        nameplate_w,
+        headroom_w,
+        headroom_frac: if nameplate_w > 0.0 { headroom_w / nameplate_w } else { 0.0 },
+        site_series,
+    };
+    if let Some(dir) = out_dir {
+        std::fs::write(dir.join("site_summary.csv"), report.summary_csv())?;
+        report.spec.save(&dir.join("site_spec.json"))?;
+    }
+    Ok(report)
+}
+
+impl SiteReport {
+    /// The utility-facing summary as CSV: one row per facility plus the
+    /// composed `site` row. Site-only columns (coincidence, headroom) are
+    /// empty on facility rows. Deterministic per `(spec, seeds)`: shortest
+    /// round-trip float formatting, no timing columns.
+    pub fn summary_csv(&self) -> String {
+        let mut s = String::from(
+            "name,role,servers,seed,phase_offset_s,peak_w,avg_w,p99_w,energy_kwh,cv,load_factor,max_ramp_w",
+        );
+        characterization_header(&self.site, &mut s);
+        s.push_str(
+            ",coincidence_factor,diversity_factor,sum_facility_peaks_w,nameplate_w,headroom_w,headroom_frac\n",
+        );
+        for f in &self.facilities {
+            push_series_row(
+                &mut s,
+                &f.name,
+                "facility",
+                f.servers,
+                &format!("{}", f.seed),
+                &format!("{}", f.phase_offset_s),
+                &f.summary,
+            );
+            // Six site-only trailing columns stay empty on facility rows.
+            s.push_str(",,,,,,\n");
+        }
+        push_series_row(
+            &mut s,
+            &self.spec.name,
+            "site",
+            self.spec.n_servers(),
+            "",
+            "",
+            &self.site,
+        );
+        s.push_str(&format!(
+            ",{},{},{},{},{},{}\n",
+            self.coincidence_factor,
+            self.diversity_factor,
+            self.sum_facility_peaks_w,
+            self.nameplate_w,
+            self.headroom_w,
+            self.headroom_frac,
+        ));
+        s
+    }
+
+    /// Human-readable summary (MW units).
+    pub fn summary_table(&self) -> String {
+        let mut s = format!(
+            "{:<16} {:<9} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7}\n",
+            "name", "role", "srv", "peak MW", "avg MW", "p99 MW", "MWh", "ramp MW", "CV"
+        );
+        let mut row = |name: &str, role: &str, servers: usize, sum: &SeriesSummary| {
+            s.push_str(&format!(
+                "{:<16} {:<9} {:>6} {:>9.3} {:>9.3} {:>8.3}{} {:>9.2} {:>9.3} {:>7.3}\n",
+                name,
+                role,
+                servers,
+                sum.stats.peak_w / 1e6,
+                sum.stats.avg_w / 1e6,
+                sum.stats.p99_w / 1e6,
+                if sum.exact_quantiles { " " } else { "~" },
+                sum.stats.energy_kwh / 1e3,
+                sum.stats.max_ramp_w / 1e6,
+                sum.stats.cv,
+            ));
+        };
+        for f in &self.facilities {
+            row(&f.name, "facility", f.servers, &f.summary);
+        }
+        row(&self.spec.name, "site", self.spec.n_servers(), &self.site);
+        s.push_str(&format!(
+            "coincidence {:.4} (diversity {:.4}) | Σ facility peaks {:.3} MW | \
+             nameplate {:.3} MW → headroom {:.3} MW ({:.1}%)\n",
+            self.coincidence_factor,
+            self.diversity_factor,
+            self.sum_facility_peaks_w / 1e6,
+            self.nameplate_w / 1e6,
+            self.headroom_w / 1e6,
+            self.headroom_frac * 100.0,
+        ));
+        for r in &self.site.ramps {
+            s.push_str(&format!(
+                "site ramp @{}s: max {:.3} MW, p99 {:.3} MW over {} intervals\n",
+                fmt_secs(r.interval_s),
+                r.max_w / 1e6,
+                r.p99_w / 1e6,
+                r.n_ramps,
+            ));
+        }
+        s
+    }
+}
+
+/// Append the shared (non-site-only) prefix of one summary row — without a
+/// trailing newline, so the caller controls the site-only tail.
+fn push_series_row(
+    s: &mut String,
+    name: &str,
+    role: &str,
+    servers: usize,
+    seed: &str,
+    phase: &str,
+    sum: &SeriesSummary,
+) {
+    s.push_str(&format!(
+        "{},{role},{servers},{seed},{phase},{},{},{},{},{},{},{}",
+        csv_field(name),
+        sum.stats.peak_w,
+        sum.stats.avg_w,
+        sum.stats.p99_w,
+        sum.stats.energy_kwh,
+        sum.stats.cv,
+        sum.stats.load_factor,
+        sum.stats.max_ramp_w,
+    ));
+    characterization_row(sum, s);
+}

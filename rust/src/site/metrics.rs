@@ -1,0 +1,171 @@
+//! Utility-facing series characterization: the per-stream fold the site
+//! composition engine runs over every facility PCC series and over the
+//! composed site series — planning stats, load-duration quantiles, and
+//! ramp-rate distributions at the utility intervals, all streamed with
+//! bounded memory (see [`crate::metrics::planning`] for the underlying
+//! folds and their exactness guarantees).
+
+use crate::metrics::planning::{PlanningStats, RampStats, StreamingPlanningStats, StreamingRamps};
+use anyhow::Result;
+
+/// Load-duration quantiles reported per series: the fraction of time the
+/// load stays **below** each level (`0.99` → the level exceeded 1 % of the
+/// time — the paper's oversubscription operating point).
+pub const LOAD_DURATION_QUANTILES: [f64; 4] = [0.50, 0.90, 0.95, 0.99];
+
+/// One point of the (quantile-sampled) load-duration curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadDurationPoint {
+    /// Quantile in [0, 1] (fraction of time at or below `power_w`).
+    pub q: f64,
+    pub power_w: f64,
+}
+
+/// Finalized characterization of one PCC series.
+#[derive(Debug, Clone)]
+pub struct SeriesSummary {
+    pub stats: PlanningStats,
+    /// `true` when p99 / CV / load-duration came from retained samples
+    /// (bit-identical to the buffered computation); `false` once the
+    /// horizon spilled to the collapsing histogram.
+    pub exact_quantiles: bool,
+    /// Absolute error bound on `stats.p99_w` and the load-duration points
+    /// (0 when exact).
+    pub p99_bound_w: f64,
+    /// Load-duration curve sampled at [`LOAD_DURATION_QUANTILES`].
+    pub load_duration: Vec<LoadDurationPoint>,
+    /// Ramp-rate distribution per utility interval, in spec order.
+    pub ramps: Vec<RampStats>,
+}
+
+/// Streaming characterization fold: planning stats + one
+/// [`StreamingRamps`] per utility interval. Push the series window by
+/// window (any partition — every fold is sample-granular), then
+/// [`SiteSeriesStats::finalize`].
+pub struct SiteSeriesStats {
+    stats: StreamingPlanningStats,
+    ramps: Vec<StreamingRamps>,
+}
+
+impl SiteSeriesStats {
+    /// `ramp_interval_s` feeds `stats.max_ramp_w` (the headline
+    /// [`PlanningStats`] ramp, clamped by the caller exactly as the sweep
+    /// engine clamps it); `utility_intervals_s` get full distributions.
+    pub fn new(
+        dt_s: f64,
+        ramp_interval_s: f64,
+        utility_intervals_s: &[f64],
+    ) -> Result<SiteSeriesStats> {
+        Ok(SiteSeriesStats {
+            stats: StreamingPlanningStats::new(dt_s, ramp_interval_s)?,
+            ramps: utility_intervals_s
+                .iter()
+                .map(|&iv| StreamingRamps::new(dt_s, iv))
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    /// Fold one window of the PCC series, in series order.
+    pub fn push_window(&mut self, pcc_w: &[f32]) {
+        self.stats.push_slice(pcc_w);
+        for r in self.ramps.iter_mut() {
+            r.push_slice(pcc_w);
+        }
+    }
+
+    pub fn finalize(self) -> Result<SeriesSummary> {
+        let SiteSeriesStats { stats, ramps } = self;
+        // Load-duration quantiles read before the stats fold is consumed —
+        // batched, so the retained buffer is sorted once, and following
+        // the p99 policy (see `StreamingPlanningStats::quantiles`).
+        let load_duration = LOAD_DURATION_QUANTILES
+            .iter()
+            .zip(stats.quantiles(&LOAD_DURATION_QUANTILES)?)
+            .map(|(&q, power_w)| LoadDurationPoint { q, power_w })
+            .collect();
+        let ramps = ramps.into_iter().map(|r| r.finalize()).collect::<Result<Vec<_>>>()?;
+        let out = stats.finalize()?;
+        Ok(SeriesSummary {
+            stats: out.stats,
+            exact_quantiles: out.exact_quantiles,
+            p99_bound_w: out.p99_error_bound_w,
+            load_duration,
+            ramps,
+        })
+    }
+}
+
+/// Append one summary's load-duration + ramp **column names**
+/// (`,ld_p50_w,…,ramp_max_300s_w,ramp_p99_300s_w,…`). Shared by
+/// `site_summary.csv` and `site_sweep_summary.csv`: `powertrace diff`
+/// matches columns by header name, so the two exports must spell these
+/// identically — one emitter makes drift impossible.
+pub(crate) fn characterization_header(sum: &SeriesSummary, s: &mut String) {
+    for p in &sum.load_duration {
+        s.push_str(&format!(",ld_p{}_w", (p.q * 100.0).round() as u32));
+    }
+    for r in &sum.ramps {
+        let iv = crate::scenarios::runner::fmt_secs(r.interval_s);
+        s.push_str(&format!(",ramp_max_{iv}s_w,ramp_p99_{iv}s_w"));
+    }
+}
+
+/// Append one summary's load-duration + ramp **values**, in
+/// [`characterization_header`] column order.
+pub(crate) fn characterization_row(sum: &SeriesSummary, s: &mut String) {
+    for p in &sum.load_duration {
+        s.push_str(&format!(",{}", p.power_w));
+    }
+    for r in &sum.ramps {
+        s.push_str(&format!(",{},{}", r.max_w, r.p99_w));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::planning::{max_ramp, percentile};
+
+    fn wavy(n: usize) -> Vec<f32> {
+        (0..n).map(|i| 2000.0 + 700.0 * ((i as f32) * 0.11).sin() + (i % 13) as f32).collect()
+    }
+
+    #[test]
+    fn summary_matches_buffered_references() {
+        let s = wavy(4000);
+        let (dt, ramp_iv) = (0.25, 9.0);
+        let intervals = [3.0, 9.0];
+        let mut st = SiteSeriesStats::new(dt, ramp_iv, &intervals).unwrap();
+        for chunk in s.chunks(61) {
+            st.push_window(chunk);
+        }
+        let out = st.finalize().unwrap();
+        assert!(out.exact_quantiles);
+        assert_eq!(out.p99_bound_w, 0.0);
+        let reference = PlanningStats::compute(&s, dt, ramp_iv).unwrap();
+        assert_eq!(out.stats, reference);
+        // Load-duration points are the interpolated percentiles, and the
+        // p99 point agrees with stats.p99_w.
+        for p in &out.load_duration {
+            let want = percentile(&s, p.q * 100.0).unwrap();
+            assert_eq!(p.power_w.to_bits(), want.to_bits(), "q {}", p.q);
+        }
+        assert_eq!(out.load_duration.last().unwrap().power_w.to_bits(), out.stats.p99_w.to_bits());
+        // Monotone non-decreasing in q.
+        for w in out.load_duration.windows(2) {
+            assert!(w[0].power_w <= w[1].power_w);
+        }
+        // Per-interval ramp maxima match the buffered max_ramp.
+        for (k, &iv) in intervals.iter().enumerate() {
+            let want = max_ramp(&s, dt, iv).unwrap();
+            assert_eq!(out.ramps[k].max_w.to_bits(), want.to_bits(), "interval {iv}");
+            assert_eq!(out.ramps[k].interval_s, iv);
+        }
+    }
+
+    #[test]
+    fn empty_series_errors() {
+        let st = SiteSeriesStats::new(1.0, 60.0, &[300.0]).unwrap();
+        assert!(st.finalize().is_err());
+    }
+}

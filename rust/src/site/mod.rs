@@ -1,0 +1,41 @@
+//! The site composition engine — the paper's "from servers to **sites**"
+//! layer: several facilities, each with its own topology, serving-config
+//! mix, workload model, and timezone phase offset, driven in lockstep
+//! through the windowed facility engine and summed at the utility point of
+//! interconnection.
+//!
+//! What a capacity / interconnection study consumes is the *composed*
+//! demand shape, not per-server traces: the load-duration curve, the
+//! coincidence (diversity) factor between facility peaks, ramp-rate
+//! distributions at utility dispatch/settlement intervals, and the
+//! oversubscription headroom against an interconnection nameplate. This
+//! module computes exactly that set, streamed with bounded memory so a
+//! 10-facility × 7-day site run is routine:
+//!
+//! * [`SiteSpec`] / [`FacilitySpec`] — the planner-facing JSON
+//!   (`spec`): facilities + phase offsets + nameplate + utility intervals;
+//! * [`run_site`] — the lockstep composition engine (`compose`): one
+//!   windowed facility stream per facility, a rendezvous barrier per
+//!   window, a bounded [`SiteAccumulator`](crate::aggregate::SiteAccumulator)
+//!   fold, incremental `site_load.csv` export, and the deterministic
+//!   byte-identity guarantees the facility layers already carry;
+//! * [`SiteSeriesStats`] / [`SeriesSummary`] — the utility-facing
+//!   characterization (`metrics`), shared by facility and site series;
+//! * [`SiteGrid`] / [`run_site_sweep`] — the sweep axis (`sweep`):
+//!   phase spreads × seeds over one base site.
+//!
+//! CLI: `powertrace site --site <spec.json> --out <dir>` (and
+//! `--grid <sweep.json>` for the sweep axis); see
+//! `examples/site_interconnect.rs` for the library path.
+
+pub mod compose;
+pub mod metrics;
+pub mod spec;
+pub mod sweep;
+
+pub use compose::{run_site, FacilityReport, SiteOptions, SiteReport};
+pub use metrics::{
+    LoadDurationPoint, SeriesSummary, SiteSeriesStats, LOAD_DURATION_QUANTILES,
+};
+pub use spec::{FacilitySpec, SiteSpec, DEFAULT_UTILITY_INTERVALS_S};
+pub use sweep::{run_site_sweep, sweep_summary_csv, SiteGrid, SiteVariant};

@@ -1,0 +1,378 @@
+//! Site specification: N facilities, each a full facility scenario plus a
+//! phase offset, composed into one utility-facing load profile.
+//!
+//! A [`SiteSpec`] is the planner-facing JSON a utility interconnection
+//! study consumes — the spatial rung above
+//! [`ScenarioSpec`](crate::config::ScenarioSpec): each facility keeps its
+//! own topology, serving-config mix, workload model, PUE, and seed, and
+//! adds a **phase offset** modelling its timezone: a facility three hours
+//! west sees the same diurnal demand shape three hours later in the shared
+//! simulation clock. Offsets shift the diurnal envelope
+//! ([`FacilitySpec::effective_scenario`]); stationary workloads (Poisson,
+//! MMPP) are statistically invariant under time shift and pass through
+//! unchanged, as does replay (its per-server `offset_s` field already
+//! covers deliberate shifting).
+
+use crate::config::{ScenarioSpec, WorkloadSpec};
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Default utility ramp-measurement intervals (5 / 15 / 60 min — dispatch,
+/// settlement, and scheduling cadences).
+pub const DEFAULT_UTILITY_INTERVALS_S: [f64; 3] = [300.0, 900.0, 3600.0];
+
+/// One facility of a site: a complete facility scenario plus its phase
+/// offset in the site's shared clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FacilitySpec {
+    /// Facility name (unique within the site; becomes a CSV column).
+    pub name: String,
+    /// Phase offset in seconds: positive values shift this facility's
+    /// diurnal peak later (a facility further west).
+    pub phase_offset_s: f64,
+    pub scenario: ScenarioSpec,
+}
+
+impl FacilitySpec {
+    /// The scenario this facility actually runs: the declared scenario
+    /// with the phase offset folded into its workload. Diurnal workloads
+    /// shift their `peak_hour` by `offset / 3600` (wrapped on 24 h);
+    /// stationary and replay workloads are unchanged (see module docs).
+    pub fn effective_scenario(&self) -> ScenarioSpec {
+        let mut s = self.scenario.clone();
+        if let WorkloadSpec::Diurnal { ref mut peak_hour, .. } = s.workload {
+            *peak_hour = (*peak_hour + self.phase_offset_s / 3600.0).rem_euclid(24.0);
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj([
+            ("name", self.name.as_str().into()),
+            ("phase_offset_s", self.phase_offset_s.into()),
+            ("scenario", self.scenario.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<FacilitySpec> {
+        Ok(FacilitySpec {
+            name: v.str_field("name")?,
+            phase_offset_s: match v.get_opt("phase_offset_s") {
+                Some(x) => x.as_f64()?,
+                None => 0.0,
+            },
+            scenario: ScenarioSpec::from_json(v.get("scenario")?)?,
+        })
+    }
+}
+
+/// A site: several facilities driven in lockstep and summed at the utility
+/// point of interconnection, plus the site-level planning baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteSpec {
+    pub name: String,
+    /// Interconnection nameplate in W — the oversubscription baseline the
+    /// headroom metrics are reported against. `None` defaults to the sum
+    /// of facility peaks (headroom then measures pure diversity savings).
+    pub nameplate_w: Option<f64>,
+    /// Ramp-measurement intervals (s) for the utility-facing summary.
+    pub utility_intervals_s: Vec<f64>,
+    pub facilities: Vec<FacilitySpec>,
+}
+
+impl SiteSpec {
+    /// Shared horizon of every facility (validated equal).
+    pub fn horizon_s(&self) -> f64 {
+        self.facilities[0].scenario.horizon_s
+    }
+
+    /// Total servers across facilities.
+    pub fn n_servers(&self) -> usize {
+        self.facilities.iter().map(|f| f.scenario.topology.n_servers()).sum()
+    }
+
+    /// Unique configuration ids referenced by any facility, in first-use
+    /// order (the artifact set a synthetic store must cover).
+    pub fn config_ids(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for f in &self.facilities {
+            for id in f.scenario.server_config.config_ids() {
+                if !out.contains(&id) {
+                    out.push(id);
+                }
+            }
+        }
+        out
+    }
+
+    /// Reject sites the composition engine cannot drive in lockstep.
+    pub fn validate(&self) -> Result<()> {
+        if self.facilities.is_empty() {
+            bail!("site '{}' has no facilities", self.name);
+        }
+        let horizon = self.facilities[0].scenario.horizon_s;
+        for (i, f) in self.facilities.iter().enumerate() {
+            if f.name.is_empty() {
+                bail!("site '{}': facility {i} has an empty name", self.name);
+            }
+            // "site" is the composed series' column/row name, and the
+            // site's own name keys the summary's site row — a facility
+            // sharing either would alias them in both exports.
+            if f.name == "site" || f.name == self.name {
+                bail!(
+                    "site '{}': facility name '{}' collides with the composed-series naming",
+                    self.name,
+                    f.name
+                );
+            }
+            if !f.phase_offset_s.is_finite() {
+                bail!("site '{}': facility '{}' has a non-finite phase offset", self.name, f.name);
+            }
+            if f.scenario.horizon_s != horizon {
+                bail!(
+                    "site '{}': facility '{}' horizon {}s != '{}' horizon {}s \
+                     (lockstep composition needs one shared horizon)",
+                    self.name,
+                    f.name,
+                    f.scenario.horizon_s,
+                    self.facilities[0].name,
+                    horizon
+                );
+            }
+            for other in &self.facilities[..i] {
+                if other.name == f.name {
+                    bail!("site '{}': duplicate facility name '{}'", self.name, f.name);
+                }
+            }
+        }
+        if let Some(np) = self.nameplate_w {
+            if !(np.is_finite() && np > 0.0) {
+                bail!("site '{}': nameplate_w must be positive (got {np})", self.name);
+            }
+        }
+        if self.utility_intervals_s.is_empty() {
+            bail!("site '{}': utility_intervals_s must name at least one interval", self.name);
+        }
+        for &iv in &self.utility_intervals_s {
+            if !(iv.is_finite() && iv > 0.0) {
+                bail!("site '{}': utility interval must be positive seconds (got {iv})", self.name);
+            }
+            // The exact ramp distribution keeps O(horizon / interval)
+            // points per series (`StreamingRamps`); cap it at the planning
+            // stats' exact-sample budget so a pathological interval cannot
+            // make site memory scale with the horizon.
+            let n_points = horizon / iv;
+            if n_points > crate::metrics::planning::EXACT_QUANTILE_CAP as f64 {
+                bail!(
+                    "site '{}': utility interval {iv}s yields {:.0} ramp points over the \
+                     {horizon}s horizon (cap {}); use a coarser interval",
+                    self.name,
+                    n_points,
+                    crate::metrics::planning::EXACT_QUANTILE_CAP
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            (
+                "utility_intervals_s",
+                Json::Arr(self.utility_intervals_s.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+            (
+                "facilities",
+                Json::Arr(self.facilities.iter().map(|f| f.to_json()).collect()),
+            ),
+        ];
+        if let Some(np) = self.nameplate_w {
+            fields.insert(1, ("nameplate_w", Json::Num(np)));
+        }
+        json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<SiteSpec> {
+        let facilities = v
+            .get("facilities")?
+            .as_arr()
+            .map_err(anyhow::Error::from)?
+            .iter()
+            .enumerate()
+            .map(|(i, f)| FacilitySpec::from_json(f).with_context(|| format!("facilities[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        let spec = SiteSpec {
+            name: match v.get_opt("name") {
+                Some(x) => x.as_str()?.to_string(),
+                None => "site".to_string(),
+            },
+            nameplate_w: match v.get_opt("nameplate_w") {
+                Some(x) => Some(x.as_f64()?),
+                None => None,
+            },
+            utility_intervals_s: match v.get_opt("utility_intervals_s") {
+                Some(x) => x.f64_array().map_err(anyhow::Error::from)?,
+                None => DEFAULT_UTILITY_INTERVALS_S.to_vec(),
+            },
+            facilities,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn load(path: &Path) -> Result<SiteSpec> {
+        let v = json::parse_file(path).map_err(anyhow::Error::from)?;
+        Self::from_json(&v).with_context(|| format!("parsing site spec {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        json::write_file(path, &self.to_json()).map_err(anyhow::Error::from)
+    }
+
+    /// A demonstration site: `n_facilities` copies of `base`, facility `i`
+    /// seeded `base.seed + i` and phase-shifted `i × stagger_h` hours — a
+    /// timezone ladder (the composition-smooths-demand setup of the
+    /// related work). Used by the site example and unit tests.
+    pub fn staggered(
+        name: &str,
+        base: &ScenarioSpec,
+        n_facilities: usize,
+        stagger_h: f64,
+    ) -> SiteSpec {
+        let facilities = (0..n_facilities)
+            .map(|i| {
+                let mut scenario = base.clone();
+                scenario.seed = base.seed + i as u64;
+                FacilitySpec {
+                    name: format!("fac{i}"),
+                    phase_offset_s: i as f64 * stagger_h * 3600.0,
+                    scenario,
+                }
+            })
+            .collect();
+        SiteSpec {
+            name: name.to_string(),
+            nameplate_w: None,
+            utility_intervals_s: DEFAULT_UTILITY_INTERVALS_S.to_vec(),
+            facilities,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TrafficMode;
+
+    fn base() -> ScenarioSpec {
+        ScenarioSpec::default_poisson("cfg_a", 0.5)
+    }
+
+    fn diurnal_base() -> ScenarioSpec {
+        let mut s = base();
+        s.workload = WorkloadSpec::Diurnal {
+            base_rate: 0.5,
+            swing: 0.6,
+            peak_hour: 15.0,
+            burst_sigma: 0.3,
+            mode: TrafficMode::SharedIntensity,
+        };
+        s
+    }
+
+    #[test]
+    fn phase_offset_shifts_diurnal_peak_only() {
+        let fac = FacilitySpec {
+            name: "west".into(),
+            phase_offset_s: 3.0 * 3600.0,
+            scenario: diurnal_base(),
+        };
+        match fac.effective_scenario().workload {
+            WorkloadSpec::Diurnal { peak_hour, .. } => assert_eq!(peak_hour, 18.0),
+            other => panic!("unexpected workload {other:?}"),
+        }
+        // Wraps on 24 h.
+        let fac = FacilitySpec {
+            name: "far".into(),
+            phase_offset_s: 12.0 * 3600.0,
+            scenario: diurnal_base(),
+        };
+        match fac.effective_scenario().workload {
+            WorkloadSpec::Diurnal { peak_hour, .. } => assert_eq!(peak_hour, 3.0),
+            other => panic!("unexpected workload {other:?}"),
+        }
+        // Stationary workloads pass through untouched.
+        let fac = FacilitySpec { name: "p".into(), phase_offset_s: 7200.0, scenario: base() };
+        assert_eq!(fac.effective_scenario(), base());
+    }
+
+    #[test]
+    fn staggered_builder_and_json_roundtrip() {
+        let site = SiteSpec::staggered("tri", &diurnal_base(), 3, 4.0);
+        site.validate().unwrap();
+        assert_eq!(site.facilities.len(), 3);
+        assert_eq!(site.facilities[2].phase_offset_s, 8.0 * 3600.0);
+        assert_eq!(site.facilities[1].scenario.seed, 1);
+        assert_eq!(site.config_ids(), vec!["cfg_a".to_string()]);
+        let back = SiteSpec::from_json(&site.to_json()).unwrap();
+        assert_eq!(back, site);
+        // With a nameplate, too.
+        let mut site = site;
+        site.nameplate_w = Some(5e6);
+        let back = SiteSpec::from_json(&site.to_json()).unwrap();
+        assert_eq!(back, site);
+    }
+
+    #[test]
+    fn validation_rejects_bad_sites() {
+        let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
+        site.facilities.clear();
+        assert!(site.validate().is_err());
+
+        let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
+        site.facilities[1].scenario.horizon_s *= 2.0;
+        assert!(site.validate().is_err());
+
+        let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
+        site.facilities[1].name = site.facilities[0].name.clone();
+        assert!(site.validate().is_err());
+
+        let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
+        site.nameplate_w = Some(-1.0);
+        assert!(site.validate().is_err());
+
+        let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
+        site.utility_intervals_s = vec![300.0, 0.0];
+        assert!(site.validate().is_err());
+
+        // Pathologically fine interval vs horizon: bounded-memory cap.
+        let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
+        site.facilities.iter_mut().for_each(|f| f.scenario.horizon_s = 1e10);
+        site.utility_intervals_s = vec![1.0];
+        assert!(site.validate().is_err());
+
+        let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
+        site.facilities[0].phase_offset_s = f64::NAN;
+        assert!(site.validate().is_err());
+
+        // Reserved names: the composed column/row and the site's own name.
+        let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
+        site.facilities[1].name = "site".into();
+        assert!(site.validate().is_err());
+        let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
+        site.facilities[1].name = "s".into();
+        assert!(site.validate().is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("powertrace_test_site_spec");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("site.json");
+        let site = SiteSpec::staggered("roundtrip", &diurnal_base(), 2, 6.0);
+        site.save(&p).unwrap();
+        assert_eq!(SiteSpec::load(&p).unwrap(), site);
+    }
+}

@@ -1,0 +1,244 @@
+//! Site sweep axis: expand one base [`SiteSpec`] across phase-spread and
+//! seed axes, run every variant through the composition engine, and
+//! summarize how workload phase diversity shapes the utility-facing
+//! profile (the related-work observation that composition smooths
+//! aggregate demand, turned into a scannable axis).
+//!
+//! # Grid JSON schema
+//!
+//! ```text
+//! {
+//!   "name":            string        — sweep name
+//!   "site":            SiteSpec      — the base site (facility list, nameplate)
+//!   "phase_spreads_h": [ 0, 3, ... ] — facility i adds i × spread hours to its
+//!                                      declared phase offset (a timezone ladder)
+//!   "seeds":           [ 0, 1, ... ] — facility i runs seed `seed + i`
+//! }
+//! ```
+
+use super::compose::{run_site, SiteOptions, SiteReport};
+use super::spec::SiteSpec;
+use crate::coordinator::Generator;
+use crate::scenarios::runner::csv_field;
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A declarative site sweep: one base site × phase spreads × seeds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteGrid {
+    pub name: String,
+    pub base: SiteSpec,
+    /// Inter-facility phase stagger in hours; facility `i` adds
+    /// `i × spread × 3600` s to its declared offset.
+    pub phase_spreads_h: Vec<f64>,
+    /// Base seeds; facility `i` runs `seed + i`.
+    pub seeds: Vec<u64>,
+}
+
+/// One expanded site-sweep variant.
+#[derive(Debug, Clone)]
+pub struct SiteVariant {
+    /// Stable id `p<i>-s<seed>` (axis index, seed value).
+    pub id: String,
+    pub label: String,
+    pub spec: SiteSpec,
+}
+
+impl SiteGrid {
+    pub fn n_variants(&self) -> usize {
+        self.phase_spreads_h.len() * self.seeds.len()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.base.validate().with_context(|| format!("site sweep '{}': base site", self.name))?;
+        if self.phase_spreads_h.is_empty() {
+            bail!("site sweep '{}' has no phase spreads", self.name);
+        }
+        if self.seeds.is_empty() {
+            bail!("site sweep '{}' has no seeds", self.name);
+        }
+        if self.phase_spreads_h.iter().any(|s| !s.is_finite()) {
+            bail!("site sweep '{}': phase spreads must be finite hours", self.name);
+        }
+        if self.seeds.iter().any(|&s| s > (1u64 << 53)) {
+            bail!("site sweep '{}': seeds must be < 2^53 to round-trip through JSON", self.name);
+        }
+        Ok(())
+    }
+
+    /// Expand the cross-product, phase-major / seed-minor, with stable ids.
+    pub fn expand(&self) -> Vec<SiteVariant> {
+        let mut out = Vec::with_capacity(self.n_variants());
+        for (pi, &spread_h) in self.phase_spreads_h.iter().enumerate() {
+            for &seed in &self.seeds {
+                let mut spec = self.base.clone();
+                spec.name = format!("{}-p{pi}-s{seed}", self.base.name);
+                for (i, fac) in spec.facilities.iter_mut().enumerate() {
+                    fac.phase_offset_s += i as f64 * spread_h * 3600.0;
+                    fac.scenario.seed = seed + i as u64;
+                }
+                out.push(SiteVariant {
+                    id: format!("p{pi}-s{seed}"),
+                    label: format!("spread {spread_h}h | seed {seed}"),
+                    spec,
+                });
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj([
+            ("name", self.name.as_str().into()),
+            ("site", self.base.to_json()),
+            (
+                "phase_spreads_h",
+                Json::Arr(self.phase_spreads_h.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+            ("seeds", Json::Arr(self.seeds.iter().map(|&s| Json::Num(s as f64)).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SiteGrid> {
+        let grid = SiteGrid {
+            name: match v.get_opt("name") {
+                Some(x) => x.as_str()?.to_string(),
+                None => "site_sweep".to_string(),
+            },
+            base: SiteSpec::from_json(v.get("site")?)?,
+            phase_spreads_h: v.get("phase_spreads_h")?.f64_array().map_err(anyhow::Error::from)?,
+            seeds: v
+                .get("seeds")?
+                .f64_array()
+                .map_err(anyhow::Error::from)?
+                .into_iter()
+                .map(|s| {
+                    if s < 0.0 || s.fract() != 0.0 || s > (1u64 << 53) as f64 {
+                        bail!("seeds must be integers in [0, 2^53] (got {s})");
+                    }
+                    Ok(s as u64)
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        grid.validate()?;
+        Ok(grid)
+    }
+
+    pub fn load(path: &Path) -> Result<SiteGrid> {
+        let v = json::parse_file(path).map_err(anyhow::Error::from)?;
+        Self::from_json(&v).with_context(|| format!("parsing site sweep {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        json::write_file(path, &self.to_json()).map_err(anyhow::Error::from)
+    }
+}
+
+/// Run every variant of a site sweep (sequentially — each variant already
+/// parallelizes across facilities and racks). With `out_dir`, each variant
+/// exports under `<out_dir>/<variant_id>/` and a
+/// `site_sweep_summary.csv` collects one site row per variant.
+pub fn run_site_sweep(
+    gen: &mut Generator,
+    grid: &SiteGrid,
+    opts: &SiteOptions,
+    out_dir: Option<&Path>,
+) -> Result<Vec<(SiteVariant, SiteReport)>> {
+    grid.validate()?;
+    if let Some(dir) = out_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = Vec::with_capacity(grid.n_variants());
+    for variant in grid.expand() {
+        let vdir = out_dir.map(|d| d.join(&variant.id));
+        let report = run_site(gen, &variant.spec, opts, vdir.as_deref())
+            .with_context(|| format!("site variant {}", variant.id))?;
+        out.push((variant, report));
+    }
+    if let Some(dir) = out_dir {
+        std::fs::write(dir.join("site_sweep_summary.csv"), sweep_summary_csv(&out))?;
+        grid.save(&dir.join("site_sweep.json"))?;
+    }
+    Ok(out)
+}
+
+/// One site row per variant (same metric columns as `site_summary.csv`'s
+/// site row, keyed by variant id — `powertrace diff`-comparable).
+pub fn sweep_summary_csv(results: &[(SiteVariant, SiteReport)]) -> String {
+    let mut s = String::from(
+        "variant,site,facilities,servers,peak_w,avg_w,p99_w,energy_kwh,cv,load_factor,max_ramp_w",
+    );
+    if let Some((_, first)) = results.first() {
+        super::metrics::characterization_header(&first.site, &mut s);
+    }
+    s.push_str(",coincidence_factor,headroom_frac\n");
+    for (variant, report) in results {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{}",
+            variant.id,
+            csv_field(&report.spec.name),
+            report.facilities.len(),
+            report.spec.n_servers(),
+            report.site.stats.peak_w,
+            report.site.stats.avg_w,
+            report.site.stats.p99_w,
+            report.site.stats.energy_kwh,
+            report.site.stats.cv,
+            report.site.stats.load_factor,
+            report.site.stats.max_ramp_w,
+        ));
+        super::metrics::characterization_row(&report.site, &mut s);
+        s.push_str(&format!(",{},{}\n", report.coincidence_factor, report.headroom_frac));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioSpec;
+
+    fn grid() -> SiteGrid {
+        let base = SiteSpec::staggered("tri", &ScenarioSpec::default_poisson("cfg", 0.5), 3, 0.0);
+        SiteGrid {
+            name: "spread_study".into(),
+            base,
+            phase_spreads_h: vec![0.0, 3.0],
+            seeds: vec![0, 7],
+        }
+    }
+
+    #[test]
+    fn expansion_is_deterministic_cross_product() {
+        let g = grid();
+        assert_eq!(g.n_variants(), 4);
+        let a = g.expand();
+        let b = g.expand();
+        assert_eq!(a.len(), 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.spec, y.spec);
+        }
+        // Ids unique; phase ladder and seeds applied per facility.
+        assert_eq!(a[0].id, "p0-s0");
+        let last = &a[3]; // p1-s7, spread 3 h
+        assert_eq!(last.spec.facilities[2].phase_offset_s, 2.0 * 3.0 * 3600.0);
+        assert_eq!(last.spec.facilities[2].scenario.seed, 9);
+        last.spec.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let g = grid();
+        let back = SiteGrid::from_json(&g.to_json()).unwrap();
+        assert_eq!(back, g);
+
+        let mut g = grid();
+        g.seeds.clear();
+        assert!(g.validate().is_err());
+        let mut g = grid();
+        g.phase_spreads_h = vec![f64::INFINITY];
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! Integration: the site composition engine end-to-end — lockstep
+//! multi-facility composition over the windowed pipeline, the composition
+//! invariants (site peak vs Σ facility peaks, coincidence factor range,
+//! single-facility identity), and byte-stable exports across worker
+//! counts and window sizes.
+
+use powertrace_sim::aggregate::Topology;
+use powertrace_sim::config::{ScenarioSpec, WorkloadSpec};
+use powertrace_sim::scenarios::diff_summary_files;
+use powertrace_sim::site::{
+    run_site, run_site_sweep, FacilitySpec, SiteGrid, SiteOptions, SiteSpec,
+};
+use powertrace_sim::testutil::synth_generator;
+use powertrace_sim::workload::TrafficMode;
+
+/// A small facility scenario every test composes from: 1×2×2 = 4 servers,
+/// 60 s horizon.
+fn base_scenario(id: &str) -> ScenarioSpec {
+    let mut s = ScenarioSpec::default_poisson(id, 0.5);
+    s.topology = Topology { rows: 1, racks_per_row: 2, servers_per_rack: 2 };
+    s.horizon_s = 60.0;
+    s.seed = 5;
+    s
+}
+
+/// Site options sized for the 60 s test horizon: ragged 7 s windows,
+/// utility intervals that actually complete, 1 s load export.
+fn test_opts() -> SiteOptions {
+    SiteOptions {
+        dt_s: 0.25,
+        window_s: 7.0,
+        load_interval_s: 1.0,
+        collect_series: true,
+        ..SiteOptions::default()
+    }
+}
+
+fn small_site(id: &str, n_facilities: usize) -> SiteSpec {
+    let mut spec = SiteSpec::staggered("itest", &base_scenario(id), n_facilities, 0.0);
+    spec.utility_intervals_s = vec![15.0, 30.0];
+    spec
+}
+
+#[test]
+fn single_facility_site_reproduces_the_plain_facility_path() {
+    let (mut gen, ids) = synth_generator("site_single", 8, 4, 1, 23).unwrap();
+    let spec = small_site(&ids[0], 1);
+    let opts = test_opts();
+    let report = run_site(&mut gen, &spec, &opts, None).unwrap();
+    let site_series = report.site_series.as_ref().expect("collect_series requested");
+
+    // The buffered facility path on the identical scenario (phase 0 +
+    // Poisson ⇒ effective scenario == declared scenario).
+    let run = gen.facility(&spec.facilities[0].scenario, opts.dt_s, 0).unwrap();
+    let reference = run.facility_series();
+    assert_eq!(site_series.len(), reference.len());
+    for (t, (a, b)) in site_series.iter().zip(&reference).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "site vs facility PCC at step {t}");
+    }
+    // And the summary stats agree with the buffered computation.
+    use powertrace_sim::metrics::PlanningStats;
+    let ramp_s =
+        powertrace_sim::metrics::planning::clamp_ramp_interval(900.0, spec.horizon_s(), opts.dt_s);
+    let want = PlanningStats::compute(&reference, opts.dt_s, ramp_s).unwrap();
+    assert_eq!(report.site.stats, want);
+    assert!(report.site.exact_quantiles);
+    // One facility: the composition metrics degenerate exactly.
+    assert_eq!(report.coincidence_factor, 1.0);
+    assert_eq!(report.sum_facility_peaks_w.to_bits(), report.site.stats.peak_w.to_bits());
+}
+
+#[test]
+fn site_peak_bounded_by_sum_of_facility_peaks() {
+    let (mut gen, ids) = synth_generator("site_bound", 8, 4, 1, 29).unwrap();
+    // Three facilities, distinct seeds (the staggered builder's seed
+    // ladder), zero phase offsets.
+    let spec = small_site(&ids[0], 3);
+    let report = run_site(&mut gen, &spec, &test_opts(), None).unwrap();
+    assert_eq!(report.facilities.len(), 3);
+    let sum: f64 = report.facilities.iter().map(|f| f.summary.stats.peak_w).sum();
+    assert_eq!(sum.to_bits(), report.sum_facility_peaks_w.to_bits());
+    // The composed series is f32: allow its half-ulp (~6e-8 relative).
+    assert!(
+        report.site.stats.peak_w <= sum * (1.0 + 1e-6),
+        "site peak {} vs Σ facility peaks {sum}",
+        report.site.stats.peak_w
+    );
+    assert!(report.coincidence_factor > 0.0 && report.coincidence_factor <= 1.0);
+    assert!(report.diversity_factor >= 1.0);
+    // Default nameplate is Σ facility peaks; headroom is measured from it.
+    assert_eq!(report.nameplate_w.to_bits(), sum.to_bits());
+    assert!((report.headroom_w - (report.nameplate_w - report.site.stats.peak_w)).abs() < 1e-9);
+    // Site energy is the sum of facility energies (linearity of Σ P·dt).
+    let fac_energy: f64 = report.facilities.iter().map(|f| f.summary.stats.energy_kwh).sum();
+    assert!(
+        (report.site.stats.energy_kwh - fac_energy).abs() < 1e-6 * fac_energy.max(1.0),
+        "site {} vs Σ facilities {fac_energy}",
+        report.site.stats.energy_kwh
+    );
+}
+
+#[test]
+fn cloned_facilities_with_zero_offsets_are_fully_coincident() {
+    let (mut gen, ids) = synth_generator("site_clones", 8, 4, 1, 37).unwrap();
+    let base = base_scenario(&ids[0]);
+    let fac = |name: &str| FacilitySpec {
+        name: name.into(),
+        phase_offset_s: 0.0,
+        scenario: base.clone(),
+    };
+    let spec = SiteSpec {
+        name: "clones".into(),
+        nameplate_w: None,
+        utility_intervals_s: vec![15.0, 30.0],
+        facilities: vec![fac("a"), fac("b"), fac("c")],
+    };
+    let report = run_site(&mut gen, &spec, &test_opts(), None).unwrap();
+    // Identical facilities peak together: coincidence 1 up to the f32
+    // rounding of the composed series (half an ulp, ~6e-8 relative).
+    assert!(
+        (report.coincidence_factor - 1.0).abs() < 1e-6,
+        "coincidence {} for cloned facilities",
+        report.coincidence_factor
+    );
+    assert!(report.coincidence_factor <= 1.0);
+    // All three facility summaries are identical.
+    let p0 = report.facilities[0].summary.stats;
+    for f in &report.facilities[1..] {
+        assert_eq!(f.summary.stats, p0);
+    }
+}
+
+#[test]
+fn site_exports_byte_identical_across_workers_and_windows() {
+    let (mut gen, ids) = synth_generator("site_bytes", 8, 4, 1, 41).unwrap();
+    let spec = small_site(&ids[0], 3);
+    let layouts = [
+        (1usize, 7.0f64),  // serial facilities, ragged windows
+        (4, 13.0),         // parallel, different ragged windows
+        (2, 60.0),         // whole horizon in one window
+    ];
+    let mut dirs = Vec::new();
+    for (i, &(workers, window_s)) in layouts.iter().enumerate() {
+        let dir = std::env::temp_dir().join(format!("powertrace_test_site_bytes_{i}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = SiteOptions {
+            workers,
+            window_s,
+            collect_series: false,
+            ..test_opts()
+        };
+        run_site(&mut gen, &spec, &opts, Some(&dir)).unwrap();
+        dirs.push(dir);
+    }
+    for name in ["site_load.csv", "site_summary.csv", "site_spec.json"] {
+        let a = std::fs::read(dirs[0].join(name)).unwrap();
+        assert!(!a.is_empty());
+        for d in &dirs[1..] {
+            let b = std::fs::read(d.join(name)).unwrap();
+            assert_eq!(a, b, "{name} differs between {:?} and {:?}", dirs[0], d);
+        }
+    }
+    // site_load.csv shape: header + one row per completed 1 s interval,
+    // with site + 3 facility columns.
+    let load = std::fs::read_to_string(dirs[0].join("site_load.csv")).unwrap();
+    let lines: Vec<&str> = load.lines().collect();
+    assert_eq!(lines[0], "t_s,site_w,fac0_w,fac1_w,fac2_w");
+    assert_eq!(lines.len(), 1 + 60);
+    // Each row's site column is the sum of its facility columns.
+    for line in &lines[1..] {
+        let f: Vec<f64> = line.split(',').map(|x| x.parse().unwrap()).collect();
+        assert!((f[1] - (f[2] + f[3] + f[4])).abs() < 1e-3 * f[1].abs().max(1.0), "{line}");
+    }
+}
+
+#[test]
+fn site_summary_feeds_the_diff_gate() {
+    let (mut gen, ids) = synth_generator("site_diff", 8, 4, 1, 43).unwrap();
+    let spec = small_site(&ids[0], 2);
+    let dir = std::env::temp_dir().join("powertrace_test_site_diff");
+    let _ = std::fs::remove_dir_all(&dir);
+    run_site(&mut gen, &spec, &test_opts(), Some(&dir)).unwrap();
+    let summary = dir.join("site_summary.csv");
+    // Self-diff matches exactly.
+    let r = diff_summary_files(&summary, &summary, 0.0).unwrap();
+    assert!(r.is_match(), "{}", r.render());
+    assert_eq!(r.rows_compared, 3); // 2 facilities + the site row
+    // An injected metric change is detected.
+    let text = std::fs::read_to_string(&summary).unwrap();
+    let mut rows: Vec<String> = text.lines().map(String::from).collect();
+    let site_row = rows.last().unwrap().clone();
+    let peak_field = site_row.split(',').nth(5).unwrap().to_string();
+    let perturbed: f64 = peak_field.parse::<f64>().unwrap() * 1.001;
+    *rows.last_mut().unwrap() = site_row.replacen(&peak_field, &format!("{perturbed}"), 1);
+    let mutated = dir.join("site_summary_mutated.csv");
+    std::fs::write(&mutated, rows.join("\n") + "\n").unwrap();
+    let r = diff_summary_files(&summary, &mutated, 1e-9).unwrap();
+    assert!(!r.is_match());
+    // ...and tolerated above the injected magnitude.
+    let r = diff_summary_files(&summary, &mutated, 0.01).unwrap();
+    assert!(r.is_match(), "{}", r.render());
+}
+
+#[test]
+fn phase_offsets_change_diurnal_composition_deterministically() {
+    let (mut gen, ids) = synth_generator("site_sweep", 8, 4, 1, 47).unwrap();
+    let mut base = base_scenario(&ids[0]);
+    base.workload = WorkloadSpec::Diurnal {
+        base_rate: 0.5,
+        swing: 0.65,
+        peak_hour: 15.0,
+        burst_sigma: 0.3,
+        mode: TrafficMode::SharedIntensity,
+    };
+    let mut site = SiteSpec::staggered("diurnal", &base, 2, 0.0);
+    site.utility_intervals_s = vec![15.0, 30.0];
+    let grid = SiteGrid {
+        name: "spread".into(),
+        base: site,
+        phase_spreads_h: vec![0.0, 6.0],
+        seeds: vec![5],
+    };
+    let dir = std::env::temp_dir().join("powertrace_test_site_sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = SiteOptions { collect_series: false, ..test_opts() };
+    let results = run_site_sweep(&mut gen, &grid, &opts, Some(&dir)).unwrap();
+    assert_eq!(results.len(), 2);
+    assert!(dir.join("site_sweep_summary.csv").exists());
+    assert!(dir.join("p0-s5").join("site_load.csv").exists());
+    assert!(dir.join("p1-s5").join("site_summary.csv").exists());
+    for (_, r) in &results {
+        assert!(r.coincidence_factor > 0.0 && r.coincidence_factor <= 1.0);
+    }
+    // Re-running the sweep reproduces the summary byte-for-byte.
+    let dir2 = std::env::temp_dir().join("powertrace_test_site_sweep_rerun");
+    let _ = std::fs::remove_dir_all(&dir2);
+    run_site_sweep(&mut gen, &grid, &opts, Some(&dir2)).unwrap();
+    assert_eq!(
+        std::fs::read(dir.join("site_sweep_summary.csv")).unwrap(),
+        std::fs::read(dir2.join("site_sweep_summary.csv")).unwrap()
+    );
+}
