@@ -283,11 +283,13 @@ fn print_facility_summary(
 }
 
 fn cmd_site(args: &Args) -> Result<()> {
+    use anyhow::Context as _;
     use powertrace_sim::site::{run_site, run_site_sweep, SiteGrid, SiteOptions, SiteSpec};
     if args.has("help") {
         println!("{}", usage("site", "compose N facilities into a utility-facing site profile", &[
             Opt { name: "site", help: "site spec JSON (facilities + phase offsets + nameplate)", default: None },
             Opt { name: "grid", help: "site sweep JSON (phase spreads × seeds over a base site); overrides --site", default: None },
+            Opt { name: "overlay", help: "net-load overlay JSON: an ordered array of stages ({kind: cap|battery|pv, ...}) appended to the (base) site's site-level overlays", default: None },
             Opt { name: "dt", help: "generation sample interval (s)", default: Some("1") },
             Opt { name: "window", help: "lockstep generation window (s); memory is O(facilities × window)", default: Some("3600") },
             Opt { name: "workers", help: "total worker budget across facilities (0 = auto)", default: Some("0") },
@@ -310,10 +312,25 @@ fn cmd_site(args: &Args) -> Result<()> {
         load_interval_s: args.f64_or("load-interval", 60.0)?,
         collect_series: false,
     };
+    // `--overlay <list.json>`: ad-hoc site-level modulation — the stages
+    // append to whatever the (base) spec already declares, so a committed
+    // spec stays untouched while CI smokes and what-ifs bolt a battery or
+    // cap on from the command line.
+    let extra_overlays = match args.str_opt("overlay") {
+        Some(opath) => {
+            let v = powertrace_sim::util::json::parse_file(std::path::Path::new(opath))
+                .map_err(anyhow::Error::from)?;
+            powertrace_sim::site::OverlaySpec::list_from_json(&v)
+                .with_context(|| format!("parsing overlay list {opath}"))?
+        }
+        None => Vec::new(),
+    };
     let out = args.str_opt("out").map(std::path::PathBuf::from);
     let t0 = std::time::Instant::now();
     if let Some(gpath) = args.str_opt("grid") {
-        let grid = SiteGrid::load(std::path::Path::new(gpath))?;
+        let mut grid = SiteGrid::load(std::path::Path::new(gpath))?;
+        grid.base.overlays.extend(extra_overlays);
+        grid.validate()?;
         let mut gen = site_generator(args, &grid.base.config_ids())?;
         let results = run_site_sweep(&mut gen, &grid, &opts, out.as_deref())?;
         println!(
@@ -339,7 +356,9 @@ fn cmd_site(args: &Args) -> Result<()> {
     let spath = args.str_opt("site").ok_or_else(|| {
         anyhow::anyhow!("--site <spec.json> (or --grid <sweep.json>) is required; see 'powertrace site --help'")
     })?;
-    let spec = SiteSpec::load(std::path::Path::new(spath))?;
+    let mut spec = SiteSpec::load(std::path::Path::new(spath))?;
+    spec.overlays.extend(extra_overlays);
+    spec.validate()?;
     let mut gen = site_generator(args, &spec.config_ids())?;
     let report = run_site(&mut gen, &spec, &opts, out.as_deref())?;
     println!(

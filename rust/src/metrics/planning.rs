@@ -56,13 +56,22 @@ impl PlanningStats {
             peak_w: peak,
             avg_w: avg,
             p99_w: percentile(series, 99.0)?,
-            energy_kwh: sum * dt_s / 3.6e6,
+            energy_kwh: joules_to_kwh(sum * dt_s),
             peak_to_average: if avg.abs() > 1e-12 { peak / avg } else { f64::INFINITY },
             max_ramp_w: ramp,
             load_factor: if peak.abs() > 1e-12 { avg / peak } else { 0.0 },
             cv: coefficient_of_variation(series)?,
         })
     }
+}
+
+/// Joules → kWh (`J / 3.6e6`), the one spelling of the energy-unit
+/// conversion shared by the planning-stats folds and the net-load overlay
+/// accounting ([`crate::site::OverlaySummary`]) — their `energy_kwh` /
+/// `*_kwh` columns must agree bit-for-bit on identical integrals.
+#[inline]
+pub fn joules_to_kwh(joules: f64) -> f64 {
+    joules / 3.6e6
 }
 
 /// Clamp a requested ramp-measurement interval to a series: at most half
@@ -539,7 +548,7 @@ impl StreamingPlanningStats {
                 peak_w: self.peak,
                 avg_w: avg,
                 p99_w: self.hist.quantile(0.99)?,
-                energy_kwh: self.sum * self.dt_s / 3.6e6,
+                energy_kwh: joules_to_kwh(self.sum * self.dt_s),
                 peak_to_average: if avg.abs() > 1e-12 { self.peak / avg } else { f64::INFINITY },
                 max_ramp_w: self.max_ramp,
                 load_factor: if self.peak.abs() > 1e-12 { avg / self.peak } else { 0.0 },

@@ -23,10 +23,22 @@
 //! `site_load.csv` / `site_summary.csv` are byte-identical across worker
 //! counts and window sizes, and a single-facility site reproduces the
 //! plain facility path's PCC series exactly.
+//!
+//! # Overlays
+//!
+//! Net-load overlay chains ([`super::overlay`]) hook the stream at two
+//! points: each facility's chain transforms its PCC window inside the
+//! facility thread (before characterization, export, and the site fold —
+//! the site composes *net* facility load), and the site-level chain
+//! transforms the composed window right after the barrier fold. Both are
+//! O(1)-state sample folds, so the determinism guarantees above extend to
+//! overlaid runs; empty chains are skipped outright, keeping the
+//! overlay-free path byte-identical to PR 4.
 
 use super::metrics::{
     characterization_header, characterization_row, SeriesSummary, SiteSeriesStats,
 };
+use super::overlay::OverlayChain;
 use super::spec::SiteSpec;
 use crate::aggregate::{pcc_window_into, SiteAccumulator};
 use crate::config::ScenarioSpec;
@@ -168,10 +180,23 @@ pub fn run_site(
         if opts.collect_series { Some(Vec::new()) } else { None };
     let utility_intervals = &spec.utility_intervals_s;
 
+    // Per-facility overlay chains (facility PCC modulation — a facility
+    // nameplate cap, on-site battery/PV), built up front so spec errors
+    // surface before any thread spawns. PV stages follow the facility's
+    // timezone (`effective_overlays`).
+    let mut fac_chains: Vec<OverlayChain> = spec
+        .facilities
+        .iter()
+        .map(|f| OverlayChain::new(&f.effective_overlays(), dt))
+        .collect::<Result<Vec<_>>>()?;
+    // Site-level overlay chain (interconnection cap, site battery,
+    // utility-scale PV), applied to the composed window after the fold.
+    let mut site_chain = OverlayChain::new(&spec.overlays, dt)?;
+
     let fac_summaries: Vec<SeriesSummary> = std::thread::scope(|sc| -> Result<Vec<SeriesSummary>> {
         let mut handles = Vec::with_capacity(n_fac);
         let mut rxs = Vec::with_capacity(n_fac);
-        for spec_f in shifted.iter() {
+        for (spec_f, mut chain) in shifted.iter().zip(fac_chains.drain(..)) {
             let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(1);
             rxs.push(rx);
             let pue = spec_f.pue;
@@ -193,12 +218,24 @@ pub fn run_site(
                         // The facility PCC f32 series exactly as the sweep
                         // engine's streamed cells build it (shared helper).
                         pcc_window_into(&site_buf, pue, &mut pcc);
+                        // Facility overlays transform the window before
+                        // characterization, export, AND the site fold —
+                        // the site composes **net** facility load. An
+                        // empty chain is skipped entirely (the PR-4
+                        // byte-identity surface).
+                        if !chain.is_empty() {
+                            chain.apply_window(facc.window_t0(), &mut pcc);
+                        }
                         fac_stats.push_window(&pcc);
                         tx.send(pcc.clone()).map_err(|_| anyhow!(ABORT_MSG))?;
                         Ok(())
                     },
                 )?;
-                fac_stats.finalize()
+                let mut summary = fac_stats.finalize()?;
+                if !chain.is_empty() {
+                    summary.overlay = Some(chain.summary());
+                }
+                Ok(summary)
             }));
         }
 
@@ -237,6 +274,11 @@ pub fn run_site(
                     coord_err = Some(e);
                     break 'windows;
                 }
+            }
+            // Site-level overlays modulate the composed window before
+            // characterization and export (empty chain = skipped).
+            if !site_chain.is_empty() {
+                site_chain.apply_window(acc.window_t0(), &mut site_pcc);
             }
             site_stats.push_window(&site_pcc);
             if let Some(series) = site_series.as_mut() {
@@ -287,7 +329,10 @@ pub fn run_site(
     if let Some(w) = writer.take() {
         w.finish()?;
     }
-    let site = site_stats.finalize()?;
+    let mut site = site_stats.finalize()?;
+    if !site_chain.is_empty() {
+        site.overlay = Some(site_chain.summary());
+    }
     let sum_facility_peaks_w: f64 = fac_summaries.iter().map(|s| s.stats.peak_w).sum();
     let coincidence_factor = if sum_facility_peaks_w > 0.0 {
         (site.stats.peak_w / sum_facility_peaks_w).min(1.0)
@@ -328,15 +373,25 @@ pub fn run_site(
 }
 
 impl SiteReport {
+    /// `true` when any series of this report (a facility's or the
+    /// composed site's) was transformed by an overlay chain — the exports
+    /// then carry the overlay delta columns on every row.
+    pub fn has_overlays(&self) -> bool {
+        self.site.overlay.is_some() || self.facilities.iter().any(|f| f.summary.overlay.is_some())
+    }
+
     /// The utility-facing summary as CSV: one row per facility plus the
     /// composed `site` row. Site-only columns (coincidence, headroom) are
-    /// empty on facility rows. Deterministic per `(spec, seeds)`: shortest
-    /// round-trip float formatting, no timing columns.
+    /// empty on facility rows, as are overlay columns on overlay-free rows
+    /// (and absent entirely from overlay-free reports — the PR-4 header).
+    /// Deterministic per `(spec, seeds)`: shortest round-trip float
+    /// formatting, no timing columns.
     pub fn summary_csv(&self) -> String {
+        let with_overlay = self.has_overlays();
         let mut s = String::from(
             "name,role,servers,seed,phase_offset_s,peak_w,avg_w,p99_w,energy_kwh,cv,load_factor,max_ramp_w",
         );
-        characterization_header(&self.site, &mut s);
+        characterization_header(&self.site, with_overlay, &mut s);
         s.push_str(
             ",coincidence_factor,diversity_factor,sum_facility_peaks_w,nameplate_w,headroom_w,headroom_frac\n",
         );
@@ -349,6 +404,7 @@ impl SiteReport {
                 &format!("{}", f.seed),
                 &format!("{}", f.phase_offset_s),
                 &f.summary,
+                with_overlay,
             );
             // Six site-only trailing columns stay empty on facility rows.
             s.push_str(",,,,,,\n");
@@ -361,6 +417,7 @@ impl SiteReport {
             "",
             "",
             &self.site,
+            with_overlay,
         );
         s.push_str(&format!(
             ",{},{},{},{},{},{}\n",
@@ -418,6 +475,29 @@ impl SiteReport {
                 r.n_ramps,
             ));
         }
+        let mut overlay_line = |name: &str, sum: &SeriesSummary| {
+            if let Some(o) = &sum.overlay {
+                s.push_str(&format!(
+                    "{name} overlay: net peak {:.3} MW (raw {:.3}, shaved {:.3}) | \
+                     Δ {:.1} kWh | cap clip {:.1} kWh over {:.0} s | \
+                     battery {:.2} cycles, SoC [{:.2}, {:.2}] | PV offset {:.1} kWh\n",
+                    o.net_peak_w / 1e6,
+                    o.raw_peak_w / 1e6,
+                    o.shaved_peak_w / 1e6,
+                    o.shaved_kwh,
+                    o.cap_clipped_kwh,
+                    o.cap_violation_s,
+                    o.battery_cycles,
+                    o.soc_min_frac,
+                    o.soc_max_frac,
+                    o.pv_offset_kwh,
+                ));
+            }
+        };
+        for f in &self.facilities {
+            overlay_line(&f.name, &f.summary);
+        }
+        overlay_line("site", &self.site);
         s
     }
 }
@@ -432,6 +512,7 @@ fn push_series_row(
     seed: &str,
     phase: &str,
     sum: &SeriesSummary,
+    with_overlay: bool,
 ) {
     s.push_str(&format!(
         "{},{role},{servers},{seed},{phase},{},{},{},{},{},{},{}",
@@ -444,5 +525,5 @@ fn push_series_row(
         sum.stats.load_factor,
         sum.stats.max_ramp_w,
     ));
-    characterization_row(sum, s);
+    characterization_row(sum, with_overlay, s);
 }

@@ -5,6 +5,7 @@
 //! bounded memory (see [`crate::metrics::planning`] for the underlying
 //! folds and their exactness guarantees).
 
+use super::overlay::OverlaySummary;
 use crate::metrics::planning::{PlanningStats, RampStats, StreamingPlanningStats, StreamingRamps};
 use anyhow::Result;
 
@@ -36,6 +37,11 @@ pub struct SeriesSummary {
     pub load_duration: Vec<LoadDurationPoint>,
     /// Ramp-rate distribution per utility interval, in spec order.
     pub ramps: Vec<RampStats>,
+    /// Net-load overlay delta summary, when this series was transformed
+    /// by an overlay chain (`stats` etc. then describe the **net** load).
+    /// `None` for an overlay-free series — and the overlay columns stay
+    /// out of the CSV exports entirely unless some row carries one.
+    pub overlay: Option<OverlaySummary>,
 }
 
 /// Streaming characterization fold: planning stats + one
@@ -91,16 +97,25 @@ impl SiteSeriesStats {
             p99_bound_w: out.p99_error_bound_w,
             load_duration,
             ramps,
+            overlay: None,
         })
     }
 }
 
+/// The overlay delta columns appended when `with_overlay` is set — one
+/// spelling, shared by [`characterization_header`]'s header and the docs.
+pub(crate) const OVERLAY_COLUMNS: &str = ",net_peak_w,shaved_peak_w,shaved_kwh,cap_clipped_kwh,\
+     cap_violation_s,battery_cycles,soc_min_frac,soc_max_frac,pv_offset_kwh";
+
 /// Append one summary's load-duration + ramp **column names**
-/// (`,ld_p50_w,…,ramp_max_300s_w,ramp_p99_300s_w,…`). Shared by
-/// `site_summary.csv` and `site_sweep_summary.csv`: `powertrace diff`
+/// (`,ld_p50_w,…,ramp_max_300s_w,ramp_p99_300s_w,…`), plus the overlay
+/// delta columns when `with_overlay` (set iff *some* row of the export
+/// carries an overlay summary — the emitters must agree across all rows,
+/// and an overlay-free export keeps its exact pre-overlay header). Shared
+/// by `site_summary.csv` and `site_sweep_summary.csv`: `powertrace diff`
 /// matches columns by header name, so the two exports must spell these
 /// identically — one emitter makes drift impossible.
-pub(crate) fn characterization_header(sum: &SeriesSummary, s: &mut String) {
+pub(crate) fn characterization_header(sum: &SeriesSummary, with_overlay: bool, s: &mut String) {
     for p in &sum.load_duration {
         s.push_str(&format!(",ld_p{}_w", (p.q * 100.0).round() as u32));
     }
@@ -108,16 +123,38 @@ pub(crate) fn characterization_header(sum: &SeriesSummary, s: &mut String) {
         let iv = crate::scenarios::runner::fmt_secs(r.interval_s);
         s.push_str(&format!(",ramp_max_{iv}s_w,ramp_p99_{iv}s_w"));
     }
+    if with_overlay {
+        s.push_str(OVERLAY_COLUMNS);
+    }
 }
 
 /// Append one summary's load-duration + ramp **values**, in
-/// [`characterization_header`] column order.
-pub(crate) fn characterization_row(sum: &SeriesSummary, s: &mut String) {
+/// [`characterization_header`] column order. With `with_overlay`, rows
+/// without an overlay chain emit empty cells (empty == empty under
+/// `powertrace diff`).
+pub(crate) fn characterization_row(sum: &SeriesSummary, with_overlay: bool, s: &mut String) {
     for p in &sum.load_duration {
         s.push_str(&format!(",{}", p.power_w));
     }
     for r in &sum.ramps {
         s.push_str(&format!(",{},{}", r.max_w, r.p99_w));
+    }
+    if with_overlay {
+        match &sum.overlay {
+            Some(o) => s.push_str(&format!(
+                ",{},{},{},{},{},{},{},{},{}",
+                o.net_peak_w,
+                o.shaved_peak_w,
+                o.shaved_kwh,
+                o.cap_clipped_kwh,
+                o.cap_violation_s,
+                o.battery_cycles,
+                o.soc_min_frac,
+                o.soc_max_frac,
+                o.pv_offset_kwh
+            )),
+            None => s.push_str(",,,,,,,,,"),
+        }
     }
 }
 
@@ -167,5 +204,38 @@ mod tests {
     fn empty_series_errors() {
         let st = SiteSeriesStats::new(1.0, 60.0, &[300.0]).unwrap();
         assert!(st.finalize().is_err());
+    }
+
+    #[test]
+    fn overlay_columns_align_between_header_and_rows() {
+        let mut st = SiteSeriesStats::new(1.0, 4.0, &[2.0]).unwrap();
+        st.push_window(&wavy(64));
+        let mut sum = st.finalize().unwrap();
+        let count = |s: &str| s.matches(',').count();
+
+        // Without overlays the emitters are unchanged (no extra columns).
+        let (mut h0, mut r0) = (String::new(), String::new());
+        characterization_header(&sum, false, &mut h0);
+        characterization_row(&sum, false, &mut r0);
+        assert_eq!(count(&h0), count(&r0));
+        assert!(!h0.contains("net_peak_w"));
+
+        // With overlays: header gains the delta columns; a row without a
+        // chain pads with empty cells, a row with one fills them — both
+        // aligned with the header.
+        let (mut h1, mut r_none) = (String::new(), String::new());
+        characterization_header(&sum, true, &mut h1);
+        characterization_row(&sum, true, &mut r_none);
+        assert_eq!(count(&h1), count(&r_none));
+        assert!(h1.ends_with(OVERLAY_COLUMNS));
+        sum.overlay = Some(crate::site::overlay::OverlaySummary {
+            raw_peak_w: 10.0,
+            net_peak_w: 8.0,
+            ..Default::default()
+        });
+        let mut r_some = String::new();
+        characterization_row(&sum, true, &mut r_some);
+        assert_eq!(count(&h1), count(&r_some));
+        assert!(r_some.contains(",8,"));
     }
 }

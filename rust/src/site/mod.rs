@@ -21,15 +21,21 @@
 //!   byte-identity guarantees the facility layers already carry;
 //! * [`SiteSeriesStats`] / [`SeriesSummary`] — the utility-facing
 //!   characterization (`metrics`), shared by facility and site series;
+//! * [`OverlaySpec`] / [`OverlayChain`] — the net-load overlay pipeline
+//!   (`overlay`): power caps, battery peak-shaving, and PV offset applied
+//!   per window as the composed (or per-facility) stream passes the
+//!   barrier, with delta accounting in the summary exports;
 //! * [`SiteGrid`] / [`run_site_sweep`] — the sweep axis (`sweep`):
-//!   phase spreads × seeds over one base site.
+//!   phase spreads × seeds (× battery size × cap) over one base site.
 //!
-//! CLI: `powertrace site --site <spec.json> --out <dir>` (and
-//! `--grid <sweep.json>` for the sweep axis); see
-//! `examples/site_interconnect.rs` for the library path.
+//! CLI: `powertrace site --site <spec.json> --out <dir>` (plus
+//! `--grid <sweep.json>` for the sweep axis and `--overlay <list.json>`
+//! for ad-hoc site-level overlays); see `examples/site_interconnect.rs`
+//! and `examples/peak_shaving.rs` for the library path.
 
 pub mod compose;
 pub mod metrics;
+pub mod overlay;
 pub mod spec;
 pub mod sweep;
 
@@ -37,5 +43,6 @@ pub use compose::{run_site, FacilityReport, SiteOptions, SiteReport};
 pub use metrics::{
     LoadDurationPoint, SeriesSummary, SiteSeriesStats, LOAD_DURATION_QUANTILES,
 };
+pub use overlay::{pv_irradiance_w, OverlayChain, OverlaySpec, OverlaySummary};
 pub use spec::{FacilitySpec, SiteSpec, DEFAULT_UTILITY_INTERVALS_S};
 pub use sweep::{run_site_sweep, sweep_summary_csv, SiteGrid, SiteVariant};

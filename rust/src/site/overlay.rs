@@ -1,0 +1,857 @@
+//! Net-load overlay pipeline: transform the composed (or per-facility) PCC
+//! series — power caps, battery peak-shaving, PV offset — **as it streams**
+//! past the site barrier, before export and characterization.
+//!
+//! The paper's site-level deliverable feeds infrastructure planning:
+//! oversubscription, power modulation, and utility-facing load
+//! characterization. The composition engine (PR 4) characterizes the raw
+//! composed load; this module *modulates* it, turning the site path into a
+//! planning tool — the cap-and-shave / PV-offset net-load shapes a utility
+//! actually evaluates at an interconnection (see the related work on
+//! workload composition and whole-facility power profiles).
+//!
+//! # Stages
+//!
+//! An overlay is an **ordered list** of stages ([`OverlaySpec`]), applied
+//! left to right to every sample; order is part of the spec (a cap before
+//! a battery clips what the battery would have shaved — the stages do not
+//! commute, deliberately):
+//!
+//! * **`cap`** — hard power limit (a facility nameplate or the site
+//!   interconnection cap): samples clip to `cap_w`; clipped energy and the
+//!   violation duration (time the *input* exceeded the cap) are accounted.
+//! * **`battery`** — a threshold peak-shaver with O(1) carried state:
+//!   above `threshold_w` it discharges (bounded by `power_w` and the
+//!   stored energy), below it recharges (bounded by `power_w` and the
+//!   remaining capacity); a round-trip `efficiency` is split √η/√η across
+//!   charge and discharge. State of charge carries across windows exactly
+//!   like [`StreamingResampler`](crate::metrics::planning::StreamingResampler)
+//!   carries partial sums — the fold is sample-granular, so any window
+//!   partition of the series produces bit-identical output.
+//! * **`pv`** — a diurnal irradiance profile (cos² bell of `daylight_h`
+//!   hours peaking at `peak_hour`) subtracted to form net load. Offset is
+//!   bounded by the instantaneous load (no-export convention: surplus PV
+//!   is curtailed rather than driving the net load negative — the
+//!   quantile/histogram machinery downstream assumes non-negative PCC
+//!   power). Facility-level PV reuses the site spec's phase-shift
+//!   machinery: [`OverlaySpec::shifted`] moves `peak_hour` by the
+//!   facility's `phase_offset_s`, exactly as
+//!   [`FacilitySpec::effective_scenario`](super::spec::FacilitySpec::effective_scenario)
+//!   shifts the diurnal workload envelope.
+//!
+//! # Determinism and the identity surface
+//!
+//! Every stage is a deterministic f64 state machine advanced in series
+//! order with O(1) carried state, so — like the facility and site folds
+//! beneath it — overlay output is invariant to worker count and window
+//! size ([`OverlayChain::apply_window`] asserts window contiguity). An
+//! **empty overlay list is the identity**: the composition engine skips
+//! the chain entirely (no f32→f64→f32 round trip, no extra summary
+//! columns), so an overlay-free site run is byte-identical to the PR-4
+//! path — the bit-identity surface the site integration tests pin.
+//!
+//! # Accounting
+//!
+//! Each chain folds a delta summary alongside the transformed series
+//! ([`OverlaySummary`]): net/raw/shaved peak, the raw−net energy integral,
+//! cap clip energy + violation duration, battery equivalent full cycles
+//! and the SoC excursion, and the PV energy offset. The site engine
+//! threads it through the shared characterization emitters into
+//! `site_summary.csv` / `site_sweep_summary.csv` (columns `net_peak_w`,
+//! `shaved_kwh`, `cap_violation_s`, …) — present only when some series
+//! carries an overlay, so overlay-free exports keep their exact PR-4
+//! header.
+
+use crate::metrics::planning::joules_to_kwh;
+use crate::util::json::{self, Json};
+use anyhow::{bail, ensure, Context, Result};
+
+/// One overlay stage of a net-load pipeline (see the module docs for the
+/// semantics of each kind).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OverlaySpec {
+    /// Hard power cap (facility nameplate / interconnection limit), W.
+    Cap { cap_w: f64 },
+    /// Threshold peak-shaving battery with SoC carried across windows.
+    Battery {
+        capacity_kwh: f64,
+        /// Max charge/discharge power at the terminals, W.
+        power_w: f64,
+        /// Round-trip efficiency in (0, 1]; split √η per direction.
+        efficiency: f64,
+        /// Discharge above, recharge below, W.
+        threshold_w: f64,
+        /// Initial state of charge as a fraction of capacity, [0, 1].
+        initial_soc_frac: f64,
+    },
+    /// Diurnal PV offset: a cos² irradiance bell subtracted from load.
+    Pv {
+        /// Plant peak output, W.
+        peak_w: f64,
+        /// Hour of day the bell peaks at, [0, 24).
+        peak_hour: f64,
+        /// Width of the generation window, hours in (0, 24].
+        daylight_h: f64,
+    },
+}
+
+/// Default battery round-trip efficiency when the spec omits it.
+pub const DEFAULT_BATTERY_EFFICIENCY: f64 = 0.9;
+/// Default PV peak hour (solar noon) when the spec omits it.
+pub const DEFAULT_PV_PEAK_HOUR: f64 = 12.0;
+/// Default PV generation-window width when the spec omits it.
+pub const DEFAULT_PV_DAYLIGHT_H: f64 = 12.0;
+
+impl OverlaySpec {
+    /// Stable kind tag (the JSON `kind` field and error-message label).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            OverlaySpec::Cap { .. } => "cap",
+            OverlaySpec::Battery { .. } => "battery",
+            OverlaySpec::Pv { .. } => "pv",
+        }
+    }
+
+    /// Reject stages the overlay engine cannot run deterministically.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            OverlaySpec::Cap { cap_w } => {
+                ensure!(
+                    cap_w.is_finite() && cap_w > 0.0,
+                    "cap overlay: cap_w must be positive W (got {cap_w})"
+                );
+            }
+            OverlaySpec::Battery {
+                capacity_kwh,
+                power_w,
+                efficiency,
+                threshold_w,
+                initial_soc_frac,
+            } => {
+                ensure!(
+                    capacity_kwh.is_finite() && capacity_kwh > 0.0,
+                    "battery overlay: capacity_kwh must be positive (got {capacity_kwh})"
+                );
+                ensure!(
+                    power_w.is_finite() && power_w > 0.0,
+                    "battery overlay: power_w must be positive W (got {power_w})"
+                );
+                ensure!(
+                    efficiency.is_finite() && efficiency > 0.0 && efficiency <= 1.0,
+                    "battery overlay: efficiency must be in (0, 1] (got {efficiency})"
+                );
+                ensure!(
+                    threshold_w.is_finite() && threshold_w >= 0.0,
+                    "battery overlay: threshold_w must be non-negative W (got {threshold_w})"
+                );
+                ensure!(
+                    (0.0..=1.0).contains(&initial_soc_frac),
+                    "battery overlay: initial_soc_frac must be in [0, 1] (got {initial_soc_frac})"
+                );
+            }
+            OverlaySpec::Pv { peak_w, peak_hour, daylight_h } => {
+                ensure!(
+                    peak_w.is_finite() && peak_w > 0.0,
+                    "pv overlay: peak_w must be positive W (got {peak_w})"
+                );
+                ensure!(
+                    (0.0..24.0).contains(&peak_hour),
+                    "pv overlay: peak_hour must be in [0, 24) (got {peak_hour})"
+                );
+                ensure!(
+                    daylight_h.is_finite() && daylight_h > 0.0 && daylight_h <= 24.0,
+                    "pv overlay: daylight_h must be in (0, 24] (got {daylight_h})"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// This stage as seen from a facility with the given phase offset: PV
+    /// peaks shift with the facility's timezone (the same wrap-on-24 h
+    /// rule as the diurnal workload envelope); caps and batteries are
+    /// clock-free and pass through unchanged.
+    pub fn shifted(&self, phase_offset_s: f64) -> OverlaySpec {
+        match *self {
+            OverlaySpec::Pv { peak_w, peak_hour, daylight_h } => OverlaySpec::Pv {
+                peak_w,
+                peak_hour: (peak_hour + phase_offset_s / 3600.0).rem_euclid(24.0),
+                daylight_h,
+            },
+            ref other => other.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            OverlaySpec::Cap { cap_w } => {
+                json::obj([("kind", "cap".into()), ("cap_w", cap_w.into())])
+            }
+            OverlaySpec::Battery {
+                capacity_kwh,
+                power_w,
+                efficiency,
+                threshold_w,
+                initial_soc_frac,
+            } => {
+                json::obj([
+                    ("kind", "battery".into()),
+                    ("capacity_kwh", capacity_kwh.into()),
+                    ("power_w", power_w.into()),
+                    ("efficiency", efficiency.into()),
+                    ("threshold_w", threshold_w.into()),
+                    ("initial_soc_frac", initial_soc_frac.into()),
+                ])
+            }
+            OverlaySpec::Pv { peak_w, peak_hour, daylight_h } => json::obj([
+                ("kind", "pv".into()),
+                ("peak_w", peak_w.into()),
+                ("peak_hour", peak_hour.into()),
+                ("daylight_h", daylight_h.into()),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<OverlaySpec> {
+        let kind = v.str_field("kind").map_err(anyhow::Error::from)?;
+        let f = |key: &str, default: Option<f64>| -> Result<f64> {
+            match (v.get_opt(key), default) {
+                (Some(x), _) => x.as_f64().map_err(anyhow::Error::from),
+                (None, Some(d)) => Ok(d),
+                (None, None) => bail!("{kind} overlay: missing field '{key}'"),
+            }
+        };
+        let spec = match kind.as_str() {
+            "cap" => OverlaySpec::Cap { cap_w: f("cap_w", None)? },
+            "battery" => OverlaySpec::Battery {
+                capacity_kwh: f("capacity_kwh", None)?,
+                power_w: f("power_w", None)?,
+                efficiency: f("efficiency", Some(DEFAULT_BATTERY_EFFICIENCY))?,
+                threshold_w: f("threshold_w", None)?,
+                initial_soc_frac: f("initial_soc_frac", Some(0.0))?,
+            },
+            "pv" => OverlaySpec::Pv {
+                peak_w: f("peak_w", None)?,
+                peak_hour: f("peak_hour", Some(DEFAULT_PV_PEAK_HOUR))?,
+                daylight_h: f("daylight_h", Some(DEFAULT_PV_DAYLIGHT_H))?,
+            },
+            other => bail!("unknown overlay kind '{other}' (expected cap | battery | pv)"),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a JSON **array** of overlay stages (the `overlays` spec field
+    /// and the CLI `--overlay` file), preserving order.
+    pub fn list_from_json(v: &Json) -> Result<Vec<OverlaySpec>> {
+        v.as_arr()
+            .map_err(anyhow::Error::from)?
+            .iter()
+            .enumerate()
+            .map(|(i, o)| OverlaySpec::from_json(o).with_context(|| format!("overlays[{i}]")))
+            .collect()
+    }
+
+    /// Serialize a stage list (order-preserving inverse of
+    /// [`OverlaySpec::list_from_json`]).
+    pub fn list_to_json(list: &[OverlaySpec]) -> Json {
+        Json::Arr(list.iter().map(|o| o.to_json()).collect())
+    }
+}
+
+/// Diurnal irradiance at absolute simulation time `t_s`: a cos² bell of
+/// width `daylight_h` hours peaking at `peak_hour`, zero outside the
+/// generation window, wrapped on the 24 h day. Pure function of time —
+/// windows cannot desynchronize it.
+pub fn pv_irradiance_w(peak_w: f64, peak_hour: f64, daylight_h: f64, t_s: f64) -> f64 {
+    let h = (t_s / 3600.0).rem_euclid(24.0);
+    let mut dh = h - peak_hour;
+    if dh > 12.0 {
+        dh -= 24.0;
+    } else if dh < -12.0 {
+        dh += 24.0;
+    }
+    if dh.abs() >= daylight_h / 2.0 {
+        return 0.0;
+    }
+    let c = (std::f64::consts::PI * dh / daylight_h).cos();
+    peak_w * c * c
+}
+
+/// Runtime state of one overlay stage: the spec plus the O(1) carry and
+/// the per-stage accounting folds.
+#[derive(Debug, Clone)]
+enum Stage {
+    Cap { cap_w: f64, clipped_j: f64, violation_s: f64 },
+    Battery {
+        cap_j: f64,
+        power_w: f64,
+        /// One-way efficiency √η (round-trip η split across directions).
+        eff: f64,
+        threshold_w: f64,
+        soc_j: f64,
+        soc_min_j: f64,
+        soc_max_j: f64,
+        discharged_j: f64,
+        charged_j: f64,
+    },
+    Pv { peak_w: f64, peak_hour: f64, daylight_h: f64, offset_j: f64 },
+}
+
+impl Stage {
+    fn new(spec: &OverlaySpec) -> Stage {
+        match *spec {
+            OverlaySpec::Cap { cap_w } => Stage::Cap { cap_w, clipped_j: 0.0, violation_s: 0.0 },
+            OverlaySpec::Battery {
+                capacity_kwh,
+                power_w,
+                efficiency,
+                threshold_w,
+                initial_soc_frac,
+            } => {
+                let cap_j = capacity_kwh * 3.6e6;
+                let soc_j = initial_soc_frac * cap_j;
+                Stage::Battery {
+                    cap_j,
+                    power_w,
+                    eff: efficiency.sqrt(),
+                    threshold_w,
+                    soc_j,
+                    soc_min_j: soc_j,
+                    soc_max_j: soc_j,
+                    discharged_j: 0.0,
+                    charged_j: 0.0,
+                }
+            }
+            OverlaySpec::Pv { peak_w, peak_hour, daylight_h } => {
+                Stage::Pv { peak_w, peak_hour, daylight_h, offset_j: 0.0 }
+            }
+        }
+    }
+
+    /// Advance one sample: input power `x` (W) at absolute time `t_s`,
+    /// held for `dt` seconds; returns the stage's output power.
+    #[inline]
+    fn transform(&mut self, x: f64, t_s: f64, dt: f64) -> f64 {
+        match self {
+            Stage::Cap { cap_w, clipped_j, violation_s } => {
+                if x > *cap_w {
+                    *clipped_j += (x - *cap_w) * dt;
+                    *violation_s += dt;
+                    *cap_w
+                } else {
+                    x
+                }
+            }
+            Stage::Battery {
+                cap_j,
+                power_w,
+                eff,
+                threshold_w,
+                soc_j,
+                soc_min_j,
+                soc_max_j,
+                discharged_j,
+                charged_j,
+            } => {
+                // Float comparisons route a NaN sample through unchanged
+                // (both arms false), matching the downstream NaN policy.
+                let out = if x > *threshold_w {
+                    // Discharge toward the threshold: bounded by the power
+                    // rating and by the energy deliverable at the
+                    // terminals (stored × one-way efficiency).
+                    let want = (x - *threshold_w).min(*power_w);
+                    let avail_w = *soc_j * *eff / dt;
+                    let p = want.min(avail_w).max(0.0);
+                    *soc_j = (*soc_j - p * dt / *eff).max(0.0);
+                    *discharged_j += p * dt;
+                    x - p
+                } else if x < *threshold_w {
+                    // Recharge toward the threshold: bounded by the power
+                    // rating and the headroom left in the store (terminal
+                    // power × one-way efficiency is what gets stored).
+                    // `want ≤ threshold − x` means a charging battery can
+                    // never raise the net load above the threshold.
+                    let want = (*threshold_w - x).min(*power_w);
+                    let headroom_w = (*cap_j - *soc_j) / (dt * *eff);
+                    let p = want.min(headroom_w).max(0.0);
+                    *soc_j = (*soc_j + p * dt * *eff).min(*cap_j);
+                    *charged_j += p * dt;
+                    x + p
+                } else {
+                    x
+                };
+                *soc_min_j = soc_min_j.min(*soc_j);
+                *soc_max_j = soc_max_j.max(*soc_j);
+                out
+            }
+            Stage::Pv { peak_w, peak_hour, daylight_h, offset_j } => {
+                let pv = pv_irradiance_w(*peak_w, *peak_hour, *daylight_h, t_s);
+                // No-export convention: offset at most the instantaneous
+                // load, so net load never goes negative (module docs).
+                let used = pv.min(x).max(0.0);
+                *offset_j += used * dt;
+                x - used
+            }
+        }
+    }
+}
+
+/// Delta summary of one finished overlay chain: what the modulation did to
+/// the series, in planner units. Fields not applicable to the chain's
+/// stage mix (e.g. battery columns of a cap-only chain) are zero.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct OverlaySummary {
+    /// Peak of the raw (pre-overlay) series, W.
+    pub raw_peak_w: f64,
+    /// Peak of the net (post-overlay) series, W — tracked in f64 before
+    /// the f32 write-back, so a cap stage bounds it *exactly*.
+    pub net_peak_w: f64,
+    /// `raw_peak_w − net_peak_w`. Negative when a stage raised the net
+    /// peak — a battery whose `threshold_w` sits above the raw peak
+    /// charges toward it (net load is bounded by `max(raw, threshold)`);
+    /// size thresholds off the measured raw peak for pure shaving.
+    pub shaved_peak_w: f64,
+    /// `∫ (raw − net) dt` over the whole series, kWh. Slightly negative
+    /// values are possible for a battery-only chain (charging losses add
+    /// net energy).
+    pub shaved_kwh: f64,
+    /// Σ energy clipped by cap stages, kWh.
+    pub cap_clipped_kwh: f64,
+    /// Σ time any cap stage's *input* exceeded its cap, s.
+    pub cap_violation_s: f64,
+    /// Battery equivalent full cycles: terminal discharged energy ÷
+    /// capacity, summed over battery stages.
+    pub battery_cycles: f64,
+    /// Lowest state of charge reached, as a fraction of capacity (first
+    /// battery stage; 0 when the chain has none).
+    pub soc_min_frac: f64,
+    /// Highest state of charge reached, fraction of capacity.
+    pub soc_max_frac: f64,
+    /// Σ load energy offset by PV stages, kWh.
+    pub pv_offset_kwh: f64,
+}
+
+/// A streaming overlay pipeline over one PCC series: the ordered stages
+/// plus the chain-level accounting. Feed windows **in series order**
+/// ([`OverlayChain::apply_window`] asserts contiguity); state carries
+/// across windows, so any window partition yields bit-identical output.
+#[derive(Debug, Clone)]
+pub struct OverlayChain {
+    dt_s: f64,
+    stages: Vec<Stage>,
+    raw_peak_w: f64,
+    net_peak_w: f64,
+    shaved_j: f64,
+    samples: u64,
+    next_step: u64,
+}
+
+impl OverlayChain {
+    /// Build a chain from validated stage specs. `dt_s` is the sample
+    /// interval of the series the chain will transform.
+    pub fn new(specs: &[OverlaySpec], dt_s: f64) -> Result<OverlayChain> {
+        ensure!(
+            dt_s.is_finite() && dt_s > 0.0,
+            "overlay chain: dt must be positive seconds (got {dt_s})"
+        );
+        for (i, s) in specs.iter().enumerate() {
+            s.validate().with_context(|| format!("overlays[{i}]"))?;
+        }
+        Ok(OverlayChain {
+            dt_s,
+            stages: specs.iter().map(Stage::new).collect(),
+            raw_peak_w: f64::NEG_INFINITY,
+            net_peak_w: f64::NEG_INFINITY,
+            shaved_j: 0.0,
+            samples: 0,
+            next_step: 0,
+        })
+    }
+
+    /// `true` for a stage-free (identity) chain — callers skip the
+    /// transform entirely, preserving the PR-4 byte-identity surface.
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Samples transformed so far.
+    pub fn samples_seen(&self) -> u64 {
+        self.samples
+    }
+
+    /// Transform one window in place. `t0_step` is the absolute series
+    /// step of `window[0]` (sample *k* models time `k·dt`); windows must
+    /// arrive contiguously in series order — carried state (battery SoC)
+    /// is what makes the fold partition-invariant, and a gap would
+    /// silently desynchronize the PV clock, so it is a programming error
+    /// (assert), not an I/O error.
+    pub fn apply_window(&mut self, t0_step: usize, window: &mut [f32]) {
+        assert_eq!(
+            t0_step as u64, self.next_step,
+            "overlay chain: window starts at step {t0_step}, expected {}",
+            self.next_step
+        );
+        for (i, w) in window.iter_mut().enumerate() {
+            let t_s = (t0_step + i) as f64 * self.dt_s;
+            let raw = *w as f64;
+            let mut x = raw;
+            for st in self.stages.iter_mut() {
+                x = st.transform(x, t_s, self.dt_s);
+            }
+            self.raw_peak_w = self.raw_peak_w.max(raw);
+            self.net_peak_w = self.net_peak_w.max(x);
+            self.shaved_j += (raw - x) * self.dt_s;
+            *w = x as f32;
+        }
+        self.samples += window.len() as u64;
+        self.next_step += window.len() as u64;
+    }
+
+    /// The delta summary of everything folded so far (non-consuming — the
+    /// site engine reads it after the last window).
+    pub fn summary(&self) -> OverlaySummary {
+        // Peaks stay zero until a sample was folded (NEG_INFINITY would
+        // otherwise leak into the CSV of a zero-length series).
+        let folded = self.samples > 0;
+        let mut out = OverlaySummary {
+            raw_peak_w: if folded { self.raw_peak_w } else { 0.0 },
+            net_peak_w: if folded { self.net_peak_w } else { 0.0 },
+            shaved_peak_w: if folded { self.raw_peak_w - self.net_peak_w } else { 0.0 },
+            shaved_kwh: if folded { joules_to_kwh(self.shaved_j) } else { 0.0 },
+            ..OverlaySummary::default()
+        };
+        let mut first_battery = true;
+        for st in &self.stages {
+            match st {
+                Stage::Cap { clipped_j, violation_s, .. } => {
+                    out.cap_clipped_kwh += joules_to_kwh(*clipped_j);
+                    out.cap_violation_s += *violation_s;
+                }
+                Stage::Battery { cap_j, soc_min_j, soc_max_j, discharged_j, .. } => {
+                    out.battery_cycles += discharged_j / cap_j;
+                    // SoC excursion reported for the first battery stage
+                    // (chains rarely carry more than one).
+                    if first_battery {
+                        out.soc_min_frac = soc_min_j / cap_j;
+                        out.soc_max_frac = soc_max_j / cap_j;
+                        first_battery = false;
+                    }
+                }
+                Stage::Pv { offset_j, .. } => out.pv_offset_kwh += joules_to_kwh(*offset_j),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+
+    fn cap(cap_w: f64) -> OverlaySpec {
+        OverlaySpec::Cap { cap_w }
+    }
+
+    fn battery(capacity_kwh: f64, power_w: f64, threshold_w: f64) -> OverlaySpec {
+        OverlaySpec::Battery {
+            capacity_kwh,
+            power_w,
+            efficiency: 0.9,
+            threshold_w,
+            initial_soc_frac: 0.0,
+        }
+    }
+
+    /// Apply `specs` to `series` in one chain partitioned at `chunk`
+    /// boundaries; returns the net series and the summary.
+    fn run_chunked(
+        specs: &[OverlaySpec],
+        series: &[f32],
+        dt: f64,
+        chunk: usize,
+    ) -> (Vec<f32>, OverlaySummary) {
+        let mut chain = OverlayChain::new(specs, dt).unwrap();
+        let mut out = series.to_vec();
+        let mut t0 = 0;
+        for c in out.chunks_mut(chunk) {
+            chain.apply_window(t0, c);
+            t0 += c.len();
+        }
+        (out, chain.summary())
+    }
+
+    fn wavy(n: usize) -> Vec<f32> {
+        (0..n).map(|i| 2000.0 + 900.0 * ((i as f32) * 0.07).sin() + (i % 17) as f32).collect()
+    }
+
+    #[test]
+    fn cap_clips_and_accounts_known_values() {
+        let series = [100.0f32, 300.0, 500.0, 200.0];
+        let (net, sum) = run_chunked(&[cap(250.0)], &series, 2.0, 4);
+        assert_eq!(net, vec![100.0f32, 250.0, 250.0, 200.0]);
+        assert_eq!(sum.net_peak_w, 250.0);
+        assert_eq!(sum.raw_peak_w, 500.0);
+        assert_eq!(sum.shaved_peak_w, 250.0);
+        assert_eq!(sum.cap_violation_s, 4.0); // two samples × 2 s
+        // (50 + 250) W × 2 s = 600 J.
+        assert_eq!(sum.cap_clipped_kwh, 600.0 / 3.6e6);
+        assert_eq!(sum.shaved_kwh.to_bits(), sum.cap_clipped_kwh.to_bits());
+    }
+
+    #[test]
+    fn prop_cap_net_peak_bounded_and_shaved_equals_clip_integral() {
+        // The satellite property: for ANY cap overlay, net_peak_w ≤ cap
+        // and shaved_kwh equals the clip integral — bit-identical folds,
+        // at any window partition.
+        check("cap overlay bounds", |rng| {
+            let n = 16 + rng.below(200);
+            let dt = [0.25, 1.0, 7.5][rng.below(3)];
+            let series: Vec<f32> = (0..n).map(|_| rng.range(0.0, 5e5) as f32).collect();
+            let cap_w = rng.range(1e3, 6e5);
+            let chunk = 1 + rng.below(n);
+            let (net, sum) = run_chunked(&[cap(cap_w)], &series, dt, chunk);
+            assert!(sum.net_peak_w <= cap_w, "net peak {} vs cap {cap_w}", sum.net_peak_w);
+            // Identical accumulation order ⇒ identical bits.
+            assert_eq!(sum.shaved_kwh.to_bits(), sum.cap_clipped_kwh.to_bits());
+            // Against an independently folded reference integral: the
+            // same sum of products, so within 1 scaled ulp.
+            let clip_j: f64 =
+                series.iter().map(|&x| ((x as f64) - cap_w).max(0.0) * dt).sum::<f64>();
+            let tol = (clip_j / 3.6e6).abs() * 1e-12 + 1e-15;
+            assert!(
+                (sum.shaved_kwh - clip_j / 3.6e6).abs() <= tol,
+                "shaved {} vs clip integral {}",
+                sum.shaved_kwh,
+                clip_j / 3.6e6
+            );
+            // Output samples never exceed the cap beyond f32 rounding.
+            for &x in &net {
+                assert!(x as f64 <= cap_w * (1.0 + 1e-6), "sample {x} above cap {cap_w}");
+            }
+            // Violation duration counts input samples above the cap.
+            let above = series.iter().filter(|&&x| x as f64 > cap_w).count();
+            assert_eq!(sum.cap_violation_s, above as f64 * dt);
+        });
+    }
+
+    #[test]
+    fn battery_soc_carry_is_window_partition_invariant() {
+        // The streaming contract: any window partition — including ragged
+        // 1-sample windows — produces bit-identical net series and
+        // summaries, because SoC is carried exactly.
+        let series = wavy(401);
+        let dt = 0.5;
+        let pv = OverlaySpec::Pv { peak_w: 400.0, peak_hour: 0.01, daylight_h: 12.0 };
+        let specs = [battery(0.02, 600.0, 2300.0), cap(2700.0), pv];
+        let (reference, ref_sum) = run_chunked(&specs, &series, dt, series.len());
+        for chunk in [1usize, 7, 64, 400] {
+            let (net, sum) = run_chunked(&specs, &series, dt, chunk);
+            for (i, (a, b)) in net.iter().zip(&reference).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "chunk {chunk} sample {i}");
+            }
+            assert_eq!(sum, ref_sum, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn battery_shaves_peaks_and_respects_bounds() {
+        // A square wave: long trough to charge, then a peak to shave.
+        let mut series = vec![1000.0f32; 600];
+        for x in series[300..].iter_mut() {
+            *x = 3000.0;
+        }
+        let spec = battery(0.25, 800.0, 2000.0); // 0.25 kWh = 900 kJ
+        let (net, sum) = run_chunked(&[spec], &series, 1.0, 37);
+        // While charged energy lasts, the peak is held at the threshold.
+        assert_eq!(net[300], 2200.0); // 3000 − 800 (power-limited)
+        // The trough charges toward the threshold (power-limited).
+        assert_eq!(net[0], 1800.0); // 1000 + 800
+        assert!(sum.battery_cycles > 0.0);
+        assert!(sum.soc_min_frac >= 0.0 && sum.soc_max_frac <= 1.0);
+        assert!(sum.soc_min_frac <= sum.soc_max_frac);
+        assert!(sum.net_peak_w < sum.raw_peak_w);
+        // Net energy added is non-negative: round-trip losses mean the
+        // battery never *creates* energy.
+        assert!(sum.shaved_kwh <= 1e-12, "battery-only chain shaved {}", sum.shaved_kwh);
+    }
+
+    #[test]
+    fn battery_with_full_initial_soc_discharges_immediately() {
+        let spec = OverlaySpec::Battery {
+            capacity_kwh: 1.0,
+            power_w: 500.0,
+            efficiency: 1.0,
+            threshold_w: 900.0,
+            initial_soc_frac: 1.0,
+        };
+        let series = [1200.0f32; 4];
+        let (net, sum) = run_chunked(&[spec], &series, 1.0, 4);
+        assert_eq!(net[0], 900.0);
+        assert!(sum.battery_cycles > 0.0);
+        assert!(sum.soc_max_frac == 1.0);
+    }
+
+    #[test]
+    fn pv_offsets_by_daylight_and_never_drives_net_negative() {
+        let pv = OverlaySpec::Pv { peak_w: 2000.0, peak_hour: 12.0, daylight_h: 12.0 };
+        // One day at 1 h samples, constant 800 W load.
+        let series = [800.0f32; 24];
+        let (net, sum) = run_chunked(&[pv], &series, 3600.0, 24);
+        // Midnight: no irradiance.
+        assert_eq!(net[0], 800.0);
+        // Noon: PV (2000 W) exceeds load — net floors at 0, surplus
+        // curtailed.
+        assert_eq!(net[12], 0.0);
+        for &x in &net {
+            assert!(x >= 0.0);
+        }
+        assert!(sum.pv_offset_kwh > 0.0);
+        // Offset is bounded by the plant's irradiance integral.
+        let pv_j: f64 =
+            (0..24).map(|i| pv_irradiance_w(2000.0, 12.0, 12.0, i as f64 * 3600.0) * 3600.0).sum();
+        assert!(sum.pv_offset_kwh <= pv_j / 3.6e6 + 1e-12);
+        // The chain's raw−net integral is the PV offset (only stage); the
+        // two folds differ by at most the subtraction's rounding.
+        assert!((sum.shaved_kwh - sum.pv_offset_kwh).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pv_irradiance_shape() {
+        assert_eq!(pv_irradiance_w(1000.0, 12.0, 12.0, 12.0 * 3600.0), 1000.0);
+        assert_eq!(pv_irradiance_w(1000.0, 12.0, 12.0, 0.0), 0.0);
+        assert_eq!(pv_irradiance_w(1000.0, 12.0, 12.0, 5.9 * 3600.0), 0.0);
+        // Half-way out the bell: cos²(π/4) = 1/2.
+        let x = pv_irradiance_w(1000.0, 12.0, 12.0, 9.0 * 3600.0);
+        assert!((x - 500.0).abs() < 1e-9, "{x}");
+        // Wraps on the day boundary (peak at midnight).
+        let y = pv_irradiance_w(1000.0, 0.0, 12.0, 23.0 * 3600.0);
+        assert!(y > 0.0);
+        // Second day repeats the first.
+        assert_eq!(
+            pv_irradiance_w(1000.0, 12.0, 12.0, 9.0 * 3600.0),
+            pv_irradiance_w(1000.0, 12.0, 12.0, (24.0 + 9.0) * 3600.0)
+        );
+    }
+
+    #[test]
+    fn stage_order_matters_and_is_preserved() {
+        // Cap-then-battery ≠ battery-then-cap: the ordered list is the
+        // spec, not a set.
+        let series = [3000.0f32; 8];
+        let b = OverlaySpec::Battery {
+            capacity_kwh: 1.0,
+            power_w: 500.0,
+            efficiency: 1.0,
+            threshold_w: 2000.0,
+            initial_soc_frac: 1.0,
+        };
+        let (net_cb, sum_cb) = run_chunked(&[cap(2400.0), b.clone()], &series, 1.0, 8);
+        let (net_bc, sum_bc) = run_chunked(&[b, cap(2400.0)], &series, 1.0, 8);
+        // Cap first clips to 2400, battery shaves on to 2000.
+        assert_eq!(net_cb[0], 2000.0);
+        // Battery first shaves to 2500 (power-limited), cap clips to 2400.
+        assert_eq!(net_bc[0], 2400.0);
+        assert!(sum_cb.cap_clipped_kwh > sum_bc.cap_clipped_kwh);
+    }
+
+    #[test]
+    fn empty_chain_is_identity() {
+        let mut chain = OverlayChain::new(&[], 1.0).unwrap();
+        assert!(chain.is_empty());
+        let mut w = wavy(64);
+        let original = w.clone();
+        chain.apply_window(0, &mut w);
+        for (a, b) in w.iter().zip(&original) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let sum = chain.summary();
+        assert_eq!(sum.shaved_kwh, 0.0);
+        assert_eq!(sum.net_peak_w.to_bits(), sum.raw_peak_w.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "expected")]
+    fn non_contiguous_windows_are_rejected() {
+        let mut chain = OverlayChain::new(&[cap(100.0)], 1.0).unwrap();
+        let mut w = [50.0f32; 4];
+        chain.apply_window(0, &mut w);
+        chain.apply_window(8, &mut w); // gap: steps 4..8 skipped
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_order_and_defaults_fill() {
+        let specs = vec![
+            cap(1.5e5),
+            battery(50.0, 2e4, 1.2e5),
+            OverlaySpec::Pv { peak_w: 3e4, peak_hour: 13.5, daylight_h: 10.0 },
+        ];
+        let back = OverlaySpec::list_from_json(&OverlaySpec::list_to_json(&specs)).unwrap();
+        assert_eq!(back, specs);
+        // Optional fields default.
+        let v = json::parse(
+            r#"[{"kind":"battery","capacity_kwh":10,"power_w":1000,"threshold_w":500}]"#,
+        )
+        .unwrap();
+        match &OverlaySpec::list_from_json(&v).unwrap()[0] {
+            OverlaySpec::Battery { efficiency, initial_soc_frac, .. } => {
+                assert_eq!(*efficiency, DEFAULT_BATTERY_EFFICIENCY);
+                assert_eq!(*initial_soc_frac, 0.0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let v = json::parse(r#"[{"kind":"pv","peak_w":1000}]"#).unwrap();
+        match &OverlaySpec::list_from_json(&v).unwrap()[0] {
+            OverlaySpec::Pv { peak_hour, daylight_h, .. } => {
+                assert_eq!(*peak_hour, DEFAULT_PV_PEAK_HOUR);
+                assert_eq!(*daylight_h, DEFAULT_PV_DAYLIGHT_H);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_stages() {
+        assert!(cap(0.0).validate().is_err());
+        assert!(cap(f64::NAN).validate().is_err());
+        assert!(battery(-1.0, 100.0, 50.0).validate().is_err());
+        assert!(battery(1.0, 0.0, 50.0).validate().is_err());
+        let mut b = battery(1.0, 100.0, 50.0);
+        if let OverlaySpec::Battery { ref mut efficiency, .. } = b {
+            *efficiency = 1.5;
+        }
+        assert!(b.validate().is_err());
+        let mut b = battery(1.0, 100.0, 50.0);
+        if let OverlaySpec::Battery { ref mut initial_soc_frac, .. } = b {
+            *initial_soc_frac = 2.0;
+        }
+        assert!(b.validate().is_err());
+        assert!(OverlaySpec::Pv { peak_w: 1.0, peak_hour: 24.0, daylight_h: 12.0 }
+            .validate()
+            .is_err());
+        assert!(OverlaySpec::Pv { peak_w: 1.0, peak_hour: 0.0, daylight_h: 0.0 }
+            .validate()
+            .is_err());
+        assert!(OverlaySpec::from_json(&json::parse(r#"{"kind":"flywheel"}"#).unwrap()).is_err());
+        assert!(OverlayChain::new(&[cap(100.0)], 0.0).is_err());
+        assert!(OverlayChain::new(&[cap(-1.0)], 1.0).is_err());
+    }
+
+    #[test]
+    fn pv_shifts_with_facility_phase_like_the_diurnal_envelope() {
+        let pv = OverlaySpec::Pv { peak_w: 1e3, peak_hour: 12.0, daylight_h: 10.0 };
+        match pv.shifted(3.0 * 3600.0) {
+            OverlaySpec::Pv { peak_hour, .. } => assert_eq!(peak_hour, 15.0),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Wraps on 24 h, like FacilitySpec::effective_scenario.
+        match pv.shifted(14.0 * 3600.0) {
+            OverlaySpec::Pv { peak_hour, .. } => assert_eq!(peak_hour, 2.0),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Clock-free stages pass through.
+        let c = cap(5e5);
+        assert_eq!(c.shifted(7200.0), c);
+    }
+}

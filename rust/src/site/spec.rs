@@ -13,6 +13,7 @@
 //! unchanged, as does replay (its per-server `offset_s` field already
 //! covers deliberate shifting).
 
+use super::overlay::OverlaySpec;
 use crate::config::{ScenarioSpec, WorkloadSpec};
 use crate::util::json::{self, Json};
 use anyhow::{bail, Context, Result};
@@ -32,6 +33,11 @@ pub struct FacilitySpec {
     /// diurnal peak later (a facility further west).
     pub phase_offset_s: f64,
     pub scenario: ScenarioSpec,
+    /// Net-load overlay stages applied to this facility's PCC window
+    /// stream, in order, **before** it is summed into the site (a
+    /// facility nameplate cap, an on-site battery or PV plant). Empty =
+    /// identity — the facility stream is untouched.
+    pub overlays: Vec<OverlaySpec>,
 }
 
 impl FacilitySpec {
@@ -47,12 +53,27 @@ impl FacilitySpec {
         s
     }
 
+    /// The overlay stages this facility actually runs: the declared list
+    /// with the phase offset folded into every clock-bearing stage (PV
+    /// peaks shift with the facility's timezone — the same machinery as
+    /// [`FacilitySpec::effective_scenario`]).
+    pub fn effective_overlays(&self) -> Vec<OverlaySpec> {
+        self.overlays.iter().map(|o| o.shifted(self.phase_offset_s)).collect()
+    }
+
     pub fn to_json(&self) -> Json {
-        json::obj([
-            ("name", self.name.as_str().into()),
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
             ("phase_offset_s", self.phase_offset_s.into()),
             ("scenario", self.scenario.to_json()),
-        ])
+        ];
+        // Omitted when empty: an overlay-free spec round-trips to the
+        // exact pre-overlay JSON (the site_spec.json byte-identity
+        // surface).
+        if !self.overlays.is_empty() {
+            fields.push(("overlays", OverlaySpec::list_to_json(&self.overlays)));
+        }
+        json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<FacilitySpec> {
@@ -63,6 +84,10 @@ impl FacilitySpec {
                 None => 0.0,
             },
             scenario: ScenarioSpec::from_json(v.get("scenario")?)?,
+            overlays: match v.get_opt("overlays") {
+                Some(x) => OverlaySpec::list_from_json(x)?,
+                None => Vec::new(),
+            },
         })
     }
 }
@@ -79,6 +104,10 @@ pub struct SiteSpec {
     /// Ramp-measurement intervals (s) for the utility-facing summary.
     pub utility_intervals_s: Vec<f64>,
     pub facilities: Vec<FacilitySpec>,
+    /// Net-load overlay stages applied to the **composed** site window
+    /// stream, in order, after the facility fold (an interconnection cap,
+    /// a site battery, utility-scale PV). Empty = identity.
+    pub overlays: Vec<OverlaySpec>,
 }
 
 impl SiteSpec {
@@ -145,6 +174,14 @@ impl SiteSpec {
                     bail!("site '{}': duplicate facility name '{}'", self.name, f.name);
                 }
             }
+            for (k, o) in f.overlays.iter().enumerate() {
+                o.validate().with_context(|| {
+                    format!("site '{}': facility '{}' overlays[{k}]", self.name, f.name)
+                })?;
+            }
+        }
+        for (k, o) in self.overlays.iter().enumerate() {
+            o.validate().with_context(|| format!("site '{}': overlays[{k}]", self.name))?;
         }
         if let Some(np) = self.nameplate_w {
             if !(np.is_finite() && np > 0.0) {
@@ -191,6 +228,10 @@ impl SiteSpec {
         if let Some(np) = self.nameplate_w {
             fields.insert(1, ("nameplate_w", Json::Num(np)));
         }
+        // Omitted when empty (see FacilitySpec::to_json).
+        if !self.overlays.is_empty() {
+            fields.push(("overlays", OverlaySpec::list_to_json(&self.overlays)));
+        }
         json::obj(fields)
     }
 
@@ -217,6 +258,10 @@ impl SiteSpec {
                 None => DEFAULT_UTILITY_INTERVALS_S.to_vec(),
             },
             facilities,
+            overlays: match v.get_opt("overlays") {
+                Some(x) => OverlaySpec::list_from_json(x)?,
+                None => Vec::new(),
+            },
         };
         spec.validate()?;
         Ok(spec)
@@ -249,6 +294,7 @@ impl SiteSpec {
                     name: format!("fac{i}"),
                     phase_offset_s: i as f64 * stagger_h * 3600.0,
                     scenario,
+                    overlays: Vec::new(),
                 }
             })
             .collect();
@@ -257,6 +303,7 @@ impl SiteSpec {
             nameplate_w: None,
             utility_intervals_s: DEFAULT_UTILITY_INTERVALS_S.to_vec(),
             facilities,
+            overlays: Vec::new(),
         }
     }
 }
@@ -288,6 +335,7 @@ mod tests {
             name: "west".into(),
             phase_offset_s: 3.0 * 3600.0,
             scenario: diurnal_base(),
+            overlays: Vec::new(),
         };
         match fac.effective_scenario().workload {
             WorkloadSpec::Diurnal { peak_hour, .. } => assert_eq!(peak_hour, 18.0),
@@ -298,13 +346,19 @@ mod tests {
             name: "far".into(),
             phase_offset_s: 12.0 * 3600.0,
             scenario: diurnal_base(),
+            overlays: Vec::new(),
         };
         match fac.effective_scenario().workload {
             WorkloadSpec::Diurnal { peak_hour, .. } => assert_eq!(peak_hour, 3.0),
             other => panic!("unexpected workload {other:?}"),
         }
         // Stationary workloads pass through untouched.
-        let fac = FacilitySpec { name: "p".into(), phase_offset_s: 7200.0, scenario: base() };
+        let fac = FacilitySpec {
+            name: "p".into(),
+            phase_offset_s: 7200.0,
+            scenario: base(),
+            overlays: Vec::new(),
+        };
         assert_eq!(fac.effective_scenario(), base());
     }
 
@@ -364,6 +418,63 @@ mod tests {
         let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
         site.facilities[1].name = "s".into();
         assert!(site.validate().is_err());
+    }
+
+    #[test]
+    fn overlays_roundtrip_and_stay_out_of_overlay_free_json() {
+        use crate::site::overlay::OverlaySpec;
+        // An overlay-free spec's JSON carries no `overlays` field at all —
+        // the exact pre-overlay serialization (site_spec.json
+        // byte-identity surface).
+        let plain = SiteSpec::staggered("plain", &base(), 2, 0.0);
+        let j = plain.to_json();
+        assert!(j.get_opt("overlays").is_none());
+        assert!(j.get("facilities").unwrap().as_arr().unwrap()[0].get_opt("overlays").is_none());
+
+        // Facility- and site-level overlays round-trip in order.
+        let mut site = SiteSpec::staggered("ov", &diurnal_base(), 2, 4.0);
+        site.facilities[0].overlays = vec![OverlaySpec::Cap { cap_w: 9e4 }];
+        site.overlays = vec![
+            OverlaySpec::Battery {
+                capacity_kwh: 50.0,
+                power_w: 2e4,
+                efficiency: 0.9,
+                threshold_w: 1.2e5,
+                initial_soc_frac: 0.5,
+            },
+            OverlaySpec::Pv { peak_w: 3e4, peak_hour: 12.0, daylight_h: 12.0 },
+        ];
+        site.validate().unwrap();
+        let back = SiteSpec::from_json(&site.to_json()).unwrap();
+        assert_eq!(back, site);
+
+        // Invalid overlays are rejected by site validation, with context.
+        let mut site = SiteSpec::staggered("bad", &base(), 2, 0.0);
+        site.overlays = vec![OverlaySpec::Cap { cap_w: -5.0 }];
+        assert!(site.validate().is_err());
+        let mut site = SiteSpec::staggered("bad", &base(), 2, 0.0);
+        site.facilities[1].overlays = vec![OverlaySpec::Cap { cap_w: f64::NAN }];
+        assert!(site.validate().is_err());
+    }
+
+    #[test]
+    fn effective_overlays_shift_pv_with_the_facility_phase() {
+        use crate::site::overlay::OverlaySpec;
+        let fac = FacilitySpec {
+            name: "west".into(),
+            phase_offset_s: 6.0 * 3600.0,
+            scenario: base(),
+            overlays: vec![
+                OverlaySpec::Cap { cap_w: 1e5 },
+                OverlaySpec::Pv { peak_w: 1e4, peak_hour: 12.0, daylight_h: 12.0 },
+            ],
+        };
+        let eff = fac.effective_overlays();
+        assert_eq!(eff[0], fac.overlays[0]); // caps are clock-free
+        match eff[1] {
+            OverlaySpec::Pv { peak_hour, .. } => assert_eq!(peak_hour, 18.0),
+            ref other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

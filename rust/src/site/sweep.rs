@@ -13,10 +13,26 @@
 //!   "phase_spreads_h": [ 0, 3, ... ] — facility i adds i × spread hours to its
 //!                                      declared phase offset (a timezone ladder)
 //!   "seeds":           [ 0, 1, ... ] — facility i runs seed `seed + i`
+//!   "battery_kwh":     [ 0, 50, … ]  — optional overlay axis: site-level battery
+//!                                      capacity per variant (0 = no battery);
+//!                                      needs the `battery` template below
+//!   "cap_w":           [ 0, 1.5e5 ]  — optional overlay axis: site interconnection
+//!                                      cap per variant (0 = uncapped)
+//!   "battery":         OverlaySpec   — battery template (kind "battery") whose
+//!                                      capacity_kwh each axis point replaces
 //! }
 //! ```
+//!
+//! The overlay axes answer the sizing question the overlays exist for:
+//! *how much battery (and how tight a cap) does this site's net load
+//! tolerate?* Each variant appends its battery (then its cap — shave
+//! first, clip the residual) to the base site's **site-level** overlay
+//! list; axis value 0 appends nothing, so the baseline rides in the same
+//! sweep. Variants without the axes keep their PR-4 ids (`p<i>-s<seed>`);
+//! with them, ids extend to `p<i>-s<seed>-b<j>-c<k>`.
 
 use super::compose::{run_site, SiteOptions, SiteReport};
+use super::overlay::OverlaySpec;
 use super::spec::SiteSpec;
 use crate::coordinator::Generator;
 use crate::scenarios::runner::csv_field;
@@ -34,6 +50,14 @@ pub struct SiteGrid {
     pub phase_spreads_h: Vec<f64>,
     /// Base seeds; facility `i` runs `seed + i`.
     pub seeds: Vec<u64>,
+    /// Optional overlay axis: site-level battery capacities (kWh; 0 = no
+    /// battery). Empty = axis absent (ids keep the `p<i>-s<seed>` form).
+    pub battery_kwh: Vec<f64>,
+    /// Optional overlay axis: site interconnection caps (W; 0 = uncapped).
+    pub cap_w: Vec<f64>,
+    /// Battery template the `battery_kwh` axis instantiates (must be a
+    /// `battery` stage; its `capacity_kwh` is replaced per axis point).
+    pub battery: Option<OverlaySpec>,
 }
 
 /// One expanded site-sweep variant.
@@ -47,7 +71,10 @@ pub struct SiteVariant {
 
 impl SiteGrid {
     pub fn n_variants(&self) -> usize {
-        self.phase_spreads_h.len() * self.seeds.len()
+        self.phase_spreads_h.len()
+            * self.seeds.len()
+            * self.battery_kwh.len().max(1)
+            * self.cap_w.len().max(1)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -64,40 +91,111 @@ impl SiteGrid {
         if self.seeds.iter().any(|&s| s > (1u64 << 53)) {
             bail!("site sweep '{}': seeds must be < 2^53 to round-trip through JSON", self.name);
         }
+        if self.battery_kwh.iter().any(|b| !b.is_finite() || *b < 0.0) {
+            bail!("site sweep '{}': battery_kwh axis must be finite and non-negative", self.name);
+        }
+        if self.cap_w.iter().any(|c| !c.is_finite() || *c < 0.0) {
+            bail!("site sweep '{}': cap_w axis must be finite and non-negative", self.name);
+        }
+        match &self.battery {
+            Some(t @ OverlaySpec::Battery { .. }) => t
+                .validate()
+                .with_context(|| format!("site sweep '{}': battery template", self.name))?,
+            Some(other) => bail!(
+                "site sweep '{}': battery template must have kind 'battery' (got '{}')",
+                self.name,
+                other.kind()
+            ),
+            None if self.battery_kwh.iter().any(|&b| b > 0.0) => bail!(
+                "site sweep '{}': battery_kwh axis needs a 'battery' template spec",
+                self.name
+            ),
+            None => {}
+        }
         Ok(())
     }
 
-    /// Expand the cross-product, phase-major / seed-minor, with stable ids.
+    /// Expand the cross-product — phase-major, then seed, then battery,
+    /// then cap — with stable ids. Overlay axes append to the base site's
+    /// site-level overlay list (battery before cap: shave first, clip the
+    /// residual); an empty axis contributes neither a stage nor an id
+    /// suffix, so overlay-free grids expand exactly as before.
     pub fn expand(&self) -> Vec<SiteVariant> {
+        // An absent axis behaves as one pass-through point.
+        let b_axis: Vec<Option<(usize, f64)>> = if self.battery_kwh.is_empty() {
+            vec![None]
+        } else {
+            self.battery_kwh.iter().enumerate().map(|(i, &b)| Some((i, b))).collect()
+        };
+        let c_axis: Vec<Option<(usize, f64)>> = if self.cap_w.is_empty() {
+            vec![None]
+        } else {
+            self.cap_w.iter().enumerate().map(|(i, &c)| Some((i, c))).collect()
+        };
         let mut out = Vec::with_capacity(self.n_variants());
         for (pi, &spread_h) in self.phase_spreads_h.iter().enumerate() {
             for &seed in &self.seeds {
-                let mut spec = self.base.clone();
-                spec.name = format!("{}-p{pi}-s{seed}", self.base.name);
-                for (i, fac) in spec.facilities.iter_mut().enumerate() {
-                    fac.phase_offset_s += i as f64 * spread_h * 3600.0;
-                    fac.scenario.seed = seed + i as u64;
+                for b in &b_axis {
+                    for c in &c_axis {
+                        let mut spec = self.base.clone();
+                        for (i, fac) in spec.facilities.iter_mut().enumerate() {
+                            fac.phase_offset_s += i as f64 * spread_h * 3600.0;
+                            fac.scenario.seed = seed + i as u64;
+                        }
+                        let mut id = format!("p{pi}-s{seed}");
+                        let mut label = format!("spread {spread_h}h | seed {seed}");
+                        if let Some((bi, kwh)) = *b {
+                            id.push_str(&format!("-b{bi}"));
+                            label.push_str(&format!(" | battery {kwh} kWh"));
+                            if kwh > 0.0 {
+                                let mut stage =
+                                    self.battery.clone().expect("validated battery template");
+                                if let OverlaySpec::Battery { ref mut capacity_kwh, .. } = stage {
+                                    *capacity_kwh = kwh;
+                                }
+                                spec.overlays.push(stage);
+                            }
+                        }
+                        if let Some((ci, cap)) = *c {
+                            id.push_str(&format!("-c{ci}"));
+                            label.push_str(&format!(" | cap {cap} W"));
+                            if cap > 0.0 {
+                                spec.overlays.push(OverlaySpec::Cap { cap_w: cap });
+                            }
+                        }
+                        spec.name = format!("{}-{id}", self.base.name);
+                        out.push(SiteVariant { id, label, spec });
+                    }
                 }
-                out.push(SiteVariant {
-                    id: format!("p{pi}-s{seed}"),
-                    label: format!("spread {spread_h}h | seed {seed}"),
-                    spec,
-                });
             }
         }
         out
     }
 
     pub fn to_json(&self) -> Json {
-        json::obj([
-            ("name", self.name.as_str().into()),
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
             ("site", self.base.to_json()),
             (
                 "phase_spreads_h",
                 Json::Arr(self.phase_spreads_h.iter().map(|&x| Json::Num(x)).collect()),
             ),
             ("seeds", Json::Arr(self.seeds.iter().map(|&s| Json::Num(s as f64)).collect())),
-        ])
+        ];
+        // Overlay axes omitted when absent (pre-overlay JSON unchanged).
+        if !self.battery_kwh.is_empty() {
+            fields.push((
+                "battery_kwh",
+                Json::Arr(self.battery_kwh.iter().map(|&x| Json::Num(x)).collect()),
+            ));
+        }
+        if !self.cap_w.is_empty() {
+            fields.push(("cap_w", Json::Arr(self.cap_w.iter().map(|&x| Json::Num(x)).collect())));
+        }
+        if let Some(t) = &self.battery {
+            fields.push(("battery", t.to_json()));
+        }
+        json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<SiteGrid> {
@@ -120,6 +218,18 @@ impl SiteGrid {
                     Ok(s as u64)
                 })
                 .collect::<Result<Vec<_>>>()?,
+            battery_kwh: match v.get_opt("battery_kwh") {
+                Some(x) => x.f64_array().map_err(anyhow::Error::from)?,
+                None => Vec::new(),
+            },
+            cap_w: match v.get_opt("cap_w") {
+                Some(x) => x.f64_array().map_err(anyhow::Error::from)?,
+                None => Vec::new(),
+            },
+            battery: match v.get_opt("battery") {
+                Some(x) => Some(OverlaySpec::from_json(x).context("battery template")?),
+                None => None,
+            },
         };
         grid.validate()?;
         Ok(grid)
@@ -166,11 +276,14 @@ pub fn run_site_sweep(
 /// One site row per variant (same metric columns as `site_summary.csv`'s
 /// site row, keyed by variant id — `powertrace diff`-comparable).
 pub fn sweep_summary_csv(results: &[(SiteVariant, SiteReport)]) -> String {
+    // One decision for the whole table: overlay columns appear when any
+    // variant modulated its load (rows without a chain pad with empties).
+    let with_overlay = results.iter().any(|(_, r)| r.has_overlays());
     let mut s = String::from(
         "variant,site,facilities,servers,peak_w,avg_w,p99_w,energy_kwh,cv,load_factor,max_ramp_w",
     );
     if let Some((_, first)) = results.first() {
-        super::metrics::characterization_header(&first.site, &mut s);
+        super::metrics::characterization_header(&first.site, with_overlay, &mut s);
     }
     s.push_str(",coincidence_factor,headroom_frac\n");
     for (variant, report) in results {
@@ -188,7 +301,7 @@ pub fn sweep_summary_csv(results: &[(SiteVariant, SiteReport)]) -> String {
             report.site.stats.load_factor,
             report.site.stats.max_ramp_w,
         ));
-        super::metrics::characterization_row(&report.site, &mut s);
+        super::metrics::characterization_row(&report.site, with_overlay, &mut s);
         s.push_str(&format!(",{},{}\n", report.coincidence_factor, report.headroom_frac));
     }
     s
@@ -206,6 +319,19 @@ mod tests {
             base,
             phase_spreads_h: vec![0.0, 3.0],
             seeds: vec![0, 7],
+            battery_kwh: Vec::new(),
+            cap_w: Vec::new(),
+            battery: None,
+        }
+    }
+
+    fn battery_template() -> OverlaySpec {
+        OverlaySpec::Battery {
+            capacity_kwh: 1.0,
+            power_w: 2e4,
+            efficiency: 0.9,
+            threshold_w: 9e4,
+            initial_soc_frac: 0.0,
         }
     }
 
@@ -233,6 +359,9 @@ mod tests {
         let g = grid();
         let back = SiteGrid::from_json(&g.to_json()).unwrap();
         assert_eq!(back, g);
+        // Overlay-free grids serialize without the overlay-axis fields.
+        assert!(g.to_json().get_opt("battery_kwh").is_none());
+        assert!(g.to_json().get_opt("battery").is_none());
 
         let mut g = grid();
         g.seeds.clear();
@@ -240,5 +369,71 @@ mod tests {
         let mut g = grid();
         g.phase_spreads_h = vec![f64::INFINITY];
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn battery_cap_axes_expand_with_stable_ids_and_overlays() {
+        let mut g = grid();
+        g.phase_spreads_h = vec![0.0];
+        g.seeds = vec![5];
+        g.battery_kwh = vec![0.0, 50.0];
+        g.cap_w = vec![0.0, 1.2e5];
+        g.battery = Some(battery_template());
+        g.validate().unwrap();
+        assert_eq!(g.n_variants(), 4);
+        let v = g.expand();
+        assert_eq!(v.len(), 4);
+        let ids: Vec<&str> = v.iter().map(|x| x.id.as_str()).collect();
+        assert_eq!(ids, vec!["p0-s5-b0-c0", "p0-s5-b0-c1", "p0-s5-b1-c0", "p0-s5-b1-c1"]);
+        // Axis value 0 = stage omitted; the baseline rides along.
+        assert!(v[0].spec.overlays.is_empty());
+        assert_eq!(v[1].spec.overlays, vec![OverlaySpec::Cap { cap_w: 1.2e5 }]);
+        // Battery precedes cap (shave first, clip the residual), with the
+        // template's capacity replaced by the axis point.
+        assert_eq!(v[3].spec.overlays.len(), 2);
+        match &v[3].spec.overlays[0] {
+            OverlaySpec::Battery { capacity_kwh, power_w, .. } => {
+                assert_eq!(*capacity_kwh, 50.0);
+                assert_eq!(*power_w, 2e4);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(v[3].spec.overlays[1], OverlaySpec::Cap { cap_w: 1.2e5 });
+        for x in &v {
+            x.spec.validate().unwrap();
+            assert_eq!(x.spec.name, format!("tri-{}", x.id));
+        }
+        // Expansion is deterministic, and the grid round-trips.
+        let w = g.expand();
+        for (a, b) in v.iter().zip(&w) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.spec, b.spec);
+        }
+        assert_eq!(SiteGrid::from_json(&g.to_json()).unwrap(), g);
+    }
+
+    #[test]
+    fn overlay_axis_validation_rejects_bad_grids() {
+        // A non-zero battery axis without a template is rejected.
+        let mut g = grid();
+        g.battery_kwh = vec![10.0];
+        assert!(g.validate().is_err());
+        // A template of the wrong kind is rejected.
+        let mut g = grid();
+        g.battery_kwh = vec![10.0];
+        g.battery = Some(OverlaySpec::Cap { cap_w: 1.0 });
+        assert!(g.validate().is_err());
+        // Negative axis values are rejected.
+        let mut g = grid();
+        g.cap_w = vec![-1.0];
+        assert!(g.validate().is_err());
+        let mut g = grid();
+        g.battery_kwh = vec![f64::NAN];
+        g.battery = Some(battery_template());
+        assert!(g.validate().is_err());
+        // An all-zero battery axis needs no template.
+        let mut g = grid();
+        g.battery_kwh = vec![0.0];
+        g.validate().unwrap();
     }
 }

@@ -8,7 +8,7 @@ use powertrace_sim::aggregate::Topology;
 use powertrace_sim::config::{ScenarioSpec, WorkloadSpec};
 use powertrace_sim::scenarios::diff_summary_files;
 use powertrace_sim::site::{
-    run_site, run_site_sweep, FacilitySpec, SiteGrid, SiteOptions, SiteSpec,
+    run_site, run_site_sweep, FacilitySpec, OverlaySpec, SiteGrid, SiteOptions, SiteSpec,
 };
 use powertrace_sim::testutil::synth_generator;
 use powertrace_sim::workload::TrafficMode;
@@ -107,12 +107,14 @@ fn cloned_facilities_with_zero_offsets_are_fully_coincident() {
         name: name.into(),
         phase_offset_s: 0.0,
         scenario: base.clone(),
+        overlays: Vec::new(),
     };
     let spec = SiteSpec {
         name: "clones".into(),
         nameplate_w: None,
         utility_intervals_s: vec![15.0, 30.0],
         facilities: vec![fac("a"), fac("b"), fac("c")],
+        overlays: Vec::new(),
     };
     let report = run_site(&mut gen, &spec, &test_opts(), None).unwrap();
     // Identical facilities peak together: coincidence 1 up to the f32
@@ -219,6 +221,9 @@ fn phase_offsets_change_diurnal_composition_deterministically() {
         base: site,
         phase_spreads_h: vec![0.0, 6.0],
         seeds: vec![5],
+        battery_kwh: Vec::new(),
+        cap_w: Vec::new(),
+        battery: None,
     };
     let dir = std::env::temp_dir().join("powertrace_test_site_sweep");
     let _ = std::fs::remove_dir_all(&dir);
@@ -233,6 +238,235 @@ fn phase_offsets_change_diurnal_composition_deterministically() {
     }
     // Re-running the sweep reproduces the summary byte-for-byte.
     let dir2 = std::env::temp_dir().join("powertrace_test_site_sweep_rerun");
+    let _ = std::fs::remove_dir_all(&dir2);
+    run_site_sweep(&mut gen, &grid, &opts, Some(&dir2)).unwrap();
+    assert_eq!(
+        std::fs::read(dir.join("site_sweep_summary.csv")).unwrap(),
+        std::fs::read(dir2.join("site_sweep_summary.csv")).unwrap()
+    );
+}
+
+/// The exact pre-overlay header of `site_summary.csv` for the test sites'
+/// utility intervals (15/30 s) — the byte-identity surface an empty
+/// overlay list must preserve.
+const OVERLAY_FREE_HEADER: &str = "name,role,servers,seed,phase_offset_s,peak_w,avg_w,p99_w,\
+     energy_kwh,cv,load_factor,max_ramp_w,ld_p50_w,ld_p90_w,ld_p95_w,ld_p99_w,\
+     ramp_max_15s_w,ramp_p99_15s_w,ramp_max_30s_w,ramp_p99_30s_w,\
+     coincidence_factor,diversity_factor,sum_facility_peaks_w,nameplate_w,headroom_w,headroom_frac";
+
+#[test]
+fn empty_overlay_list_is_the_identity_surface() {
+    let (mut gen, ids) = synth_generator("site_identity_ov", 8, 4, 1, 53).unwrap();
+    let spec = small_site(&ids[0], 2);
+    // `"overlays": []` in the JSON parses to the same spec as no field at
+    // all — and the field stays out of the serialized spec.
+    use powertrace_sim::util::json::Json;
+    let mut with_field = spec.to_json();
+    if let Json::Obj(ref mut o) = with_field {
+        o.insert("overlays".into(), Json::Arr(Vec::new()));
+        let facs = match o.get_mut("facilities").unwrap() {
+            Json::Arr(a) => a,
+            other => panic!("facilities not an array: {other:?}"),
+        };
+        for f in facs {
+            if let Json::Obj(fo) = f {
+                fo.insert("overlays".into(), Json::Arr(Vec::new()));
+            }
+        }
+    }
+    let parsed = SiteSpec::from_json(&with_field).unwrap();
+    assert_eq!(parsed, spec);
+    assert!(parsed.to_json().get_opt("overlays").is_none());
+
+    // And the run takes the exact overlay-free path: pre-overlay summary
+    // header, no overlay columns, byte-identical exports from both specs.
+    let dir_a = std::env::temp_dir().join("powertrace_test_site_identity_a");
+    let dir_b = std::env::temp_dir().join("powertrace_test_site_identity_b");
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+    let opts = SiteOptions { collect_series: false, ..test_opts() };
+    run_site(&mut gen, &spec, &opts, Some(&dir_a)).unwrap();
+    run_site(&mut gen, &parsed, &opts, Some(&dir_b)).unwrap();
+    for name in ["site_load.csv", "site_summary.csv", "site_spec.json"] {
+        assert_eq!(
+            std::fs::read(dir_a.join(name)).unwrap(),
+            std::fs::read(dir_b.join(name)).unwrap(),
+            "{name}"
+        );
+    }
+    let summary = std::fs::read_to_string(dir_a.join("site_summary.csv")).unwrap();
+    assert_eq!(summary.lines().next().unwrap(), OVERLAY_FREE_HEADER);
+}
+
+#[test]
+fn cap_overlay_bounds_the_site_and_gains_delta_columns() {
+    let (mut gen, ids) = synth_generator("site_cap_ov", 8, 4, 1, 59).unwrap();
+    let mut spec = small_site(&ids[0], 3);
+    // Baseline raw peak, to place the cap where it actually clips.
+    let baseline = run_site(&mut gen, &spec, &test_opts(), None).unwrap();
+    let raw_peak = baseline.site.stats.peak_w;
+    let cap_w = 0.9 * raw_peak;
+    spec.overlays = vec![OverlaySpec::Cap { cap_w }];
+
+    let dir = std::env::temp_dir().join("powertrace_test_site_cap_ov");
+    let _ = std::fs::remove_dir_all(&dir);
+    let report = run_site(&mut gen, &spec, &test_opts(), Some(&dir)).unwrap();
+    let overlay = report.site.overlay.expect("site chain ran");
+    // The tentpole properties: exact cap bound on the f64-tracked net
+    // peak, raw peak unchanged, clip integral = shaved energy.
+    assert!(overlay.net_peak_w <= cap_w);
+    assert_eq!(overlay.raw_peak_w.to_bits(), raw_peak.to_bits());
+    assert_eq!(overlay.shaved_kwh.to_bits(), overlay.cap_clipped_kwh.to_bits());
+    assert!(overlay.cap_violation_s > 0.0);
+    // The characterized series is the net load (within f32 rounding of
+    // the cap), and the facility summaries are untouched.
+    assert!(report.site.stats.peak_w <= cap_w * (1.0 + 1e-6));
+    for (f, b) in report.facilities.iter().zip(&baseline.facilities) {
+        assert_eq!(f.summary.stats, b.summary.stats);
+        assert!(f.summary.overlay.is_none());
+    }
+    // Export: overlay columns present, empty on facility rows, filled on
+    // the site row; the summary still self-diffs cleanly.
+    let summary = std::fs::read_to_string(dir.join("site_summary.csv")).unwrap();
+    let header = summary.lines().next().unwrap();
+    assert!(header.contains(",net_peak_w,"));
+    assert!(header.contains(",shaved_kwh,"));
+    assert!(header.contains(",cap_violation_s,"));
+    let cols = |line: &str| line.matches(',').count();
+    for line in summary.lines().skip(1) {
+        assert_eq!(cols(line), cols(header), "ragged row: {line}");
+    }
+    let r = diff_summary_files(&dir.join("site_summary.csv"), &dir.join("site_summary.csv"), 0.0)
+        .unwrap();
+    assert!(r.is_match());
+    // The spec round-trips with its overlays through the exported JSON.
+    let back = SiteSpec::load(&dir.join("site_spec.json")).unwrap();
+    assert_eq!(back, spec);
+}
+
+#[test]
+fn overlaid_exports_are_byte_identical_across_workers_and_windows() {
+    // The ISSUE invariant: overlay results are independent of worker count
+    // and window size — battery SoC carries across every window layout.
+    let (mut gen, ids) = synth_generator("site_ov_bytes", 8, 4, 1, 61).unwrap();
+    let mut spec = small_site(&ids[0], 3);
+    spec.facilities[0].overlays = vec![OverlaySpec::Cap { cap_w: 2.0e4 }];
+    spec.overlays = vec![
+        OverlaySpec::Battery {
+            capacity_kwh: 0.05,
+            power_w: 5e3,
+            efficiency: 0.9,
+            threshold_w: 4.5e4,
+            initial_soc_frac: 0.5,
+        },
+        OverlaySpec::Pv { peak_w: 1e4, peak_hour: 0.005, daylight_h: 12.0 },
+    ];
+    let layouts = [(1usize, 7.0f64), (4, 13.0), (2, 60.0)];
+    let mut dirs = Vec::new();
+    for (i, &(workers, window_s)) in layouts.iter().enumerate() {
+        let dir = std::env::temp_dir().join(format!("powertrace_test_site_ov_bytes_{i}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = SiteOptions { workers, window_s, collect_series: false, ..test_opts() };
+        run_site(&mut gen, &spec, &opts, Some(&dir)).unwrap();
+        dirs.push(dir);
+    }
+    for name in ["site_load.csv", "site_summary.csv", "site_spec.json"] {
+        let a = std::fs::read(dirs[0].join(name)).unwrap();
+        assert!(!a.is_empty());
+        for d in &dirs[1..] {
+            assert_eq!(a, std::fs::read(d.join(name)).unwrap(), "{name} differs vs {d:?}");
+        }
+    }
+}
+
+#[test]
+fn facility_overlays_modulate_the_stream_the_site_composes() {
+    let (mut gen, ids) = synth_generator("site_fac_ov", 8, 4, 1, 67).unwrap();
+    let mut spec = small_site(&ids[0], 2);
+    // Cap below the facility's raw peak, so the stage actually clips.
+    let baseline = run_site(&mut gen, &spec, &test_opts(), None).unwrap();
+    let cap_w = 0.85 * baseline.facilities[0].summary.stats.peak_w;
+    spec.facilities[0].overlays = vec![OverlaySpec::Cap { cap_w }];
+    let dir = std::env::temp_dir().join("powertrace_test_site_fac_ov");
+    let _ = std::fs::remove_dir_all(&dir);
+    let report = run_site(&mut gen, &spec, &test_opts(), Some(&dir)).unwrap();
+    // The capped facility carries its own delta summary; the site row has
+    // none (no site-level chain) but the export still gains the columns.
+    let o = report.facilities[0].summary.overlay.expect("facility chain ran");
+    assert!(o.net_peak_w <= cap_w);
+    assert!(o.cap_violation_s > 0.0, "cap at 85 % of peak never clipped");
+    assert!(report.facilities[1].summary.overlay.is_none());
+    assert!(report.site.overlay.is_none());
+    assert!(report.has_overlays());
+    // site_load.csv: the site column is the sum of the *net* facility
+    // columns (the site composes post-overlay streams), and the capped
+    // facility's exported load respects its cap.
+    let load = std::fs::read_to_string(dir.join("site_load.csv")).unwrap();
+    for line in load.lines().skip(1) {
+        let f: Vec<f64> = line.split(',').map(|x| x.parse().unwrap()).collect();
+        assert!((f[1] - (f[2] + f[3])).abs() < 1e-3 * f[1].abs().max(1.0), "{line}");
+        assert!(f[2] <= cap_w * (1.0 + 1e-6), "capped facility exceeds cap: {line}");
+    }
+}
+
+#[test]
+fn battery_cap_sweep_axis_runs_and_orders_peaks() {
+    let (mut gen, ids) = synth_generator("site_ov_sweep", 8, 4, 1, 71).unwrap();
+    let mut site = small_site(&ids[0], 2);
+    site.name = "ovsweep".into();
+    // Size the axes off the measured raw peak so the stages engage: the
+    // battery shaves toward 80 %, the cap clips at 90 %.
+    let baseline = run_site(&mut gen, &site, &test_opts(), None).unwrap();
+    let raw_peak = baseline.site.stats.peak_w;
+    let cap_w = 0.9 * raw_peak;
+    let grid = SiteGrid {
+        name: "sizing".into(),
+        base: site,
+        phase_spreads_h: vec![0.0],
+        seeds: vec![5],
+        battery_kwh: vec![0.0, 0.05],
+        cap_w: vec![0.0, cap_w],
+        battery: Some(OverlaySpec::Battery {
+            capacity_kwh: 1.0,
+            power_w: 5e3,
+            efficiency: 0.9,
+            threshold_w: 0.8 * raw_peak,
+            initial_soc_frac: 0.5,
+        }),
+    };
+    let dir = std::env::temp_dir().join("powertrace_test_site_ov_sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = SiteOptions { collect_series: false, ..test_opts() };
+    let results = run_site_sweep(&mut gen, &grid, &opts, Some(&dir)).unwrap();
+    assert_eq!(results.len(), 4);
+    // b0-c0 is the untouched baseline; every overlaid variant's peak is
+    // bounded by it, and the capped variants respect their cap.
+    let peak = |id: &str| {
+        results
+            .iter()
+            .find(|(v, _)| v.id == format!("p0-s5-{id}"))
+            .map(|(_, r)| r.site.stats.peak_w)
+            .unwrap()
+    };
+    assert!(results[0].1.site.overlay.is_none());
+    // The baseline variant reproduces the pre-sweep baseline exactly.
+    assert_eq!(peak("b0-c0").to_bits(), raw_peak.to_bits());
+    // With its threshold below the raw peak, a shaving battery never
+    // raises the peak (charging is bounded by the gap to the threshold,
+    // so net load ≤ max(raw, threshold) = raw peak); the capped variants
+    // respect the cap.
+    assert!(peak("b1-c0") <= peak("b0-c0"));
+    assert!(peak("b0-c1") <= cap_w * (1.0 + 1e-6));
+    assert!(peak("b1-c1") <= cap_w * (1.0 + 1e-6));
+    // The sweep summary carries the overlay columns (some variant has a
+    // chain) with aligned rows, and reruns byte-identically.
+    let text = std::fs::read_to_string(dir.join("site_sweep_summary.csv")).unwrap();
+    let header = text.lines().next().unwrap();
+    assert!(header.contains(",net_peak_w,"));
+    for line in text.lines().skip(1) {
+        assert_eq!(line.matches(',').count(), header.matches(',').count(), "{line}");
+    }
+    let dir2 = std::env::temp_dir().join("powertrace_test_site_ov_sweep_rerun");
     let _ = std::fs::remove_dir_all(&dir2);
     run_site_sweep(&mut gen, &grid, &opts, Some(&dir2)).unwrap();
     assert_eq!(
