@@ -4,7 +4,7 @@
 
 use crate::aggregate::Topology;
 use crate::util::json::{self, Json};
-use crate::workload::TrafficMode;
+use crate::workload::{TokenLengths, TrafficMode};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
@@ -23,9 +23,14 @@ pub enum WorkloadSpec {
         burst_sigma: f64,
         mode: TrafficMode,
     },
-    /// Replay a schedule from a JSON file (every server gets the same
+    /// Replay a schedule from a JSON/CSV file (every server gets the same
     /// schedule shifted by a per-server random offset).
     Replay { path: String, offset_s: f64 },
+    /// Token-level workload: Poisson arrivals with explicitly configured
+    /// prompt/output length distributions and a batching policy
+    /// (`max_batch` 0 ⇒ the campaign default; `token_budget` 0 ⇒ no
+    /// budget). See [`crate::workload::token`].
+    Token { rate: f64, lengths: TokenLengths, max_batch: usize, token_budget: u64 },
 }
 
 /// Dataset length profile selection.
@@ -156,13 +161,14 @@ pub fn topology_to_json(t: &Topology) -> Json {
 }
 
 impl WorkloadSpec {
-    /// Short kind tag ("poisson" | "mmpp" | "diurnal" | "replay").
+    /// Short kind tag ("poisson" | "mmpp" | "diurnal" | "replay" | "token").
     pub fn kind(&self) -> &'static str {
         match self {
             WorkloadSpec::Poisson { .. } => "poisson",
             WorkloadSpec::Mmpp { .. } => "mmpp",
             WorkloadSpec::Diurnal { .. } => "diurnal",
             WorkloadSpec::Replay { .. } => "replay",
+            WorkloadSpec::Token { .. } => "token",
         }
     }
 
@@ -177,6 +183,16 @@ impl WorkloadSpec {
                 format!("diurnal λ₀={base_rate} swing={swing}")
             }
             WorkloadSpec::Replay { path, .. } => format!("replay {path}"),
+            WorkloadSpec::Token { rate, lengths, max_batch, token_budget } => {
+                let mut s = format!("token λ={rate} {}", lengths.label());
+                if *max_batch > 0 {
+                    s.push_str(&format!(" b={max_batch}"));
+                }
+                if *token_budget > 0 {
+                    s.push_str(&format!(" tb={token_budget}"));
+                }
+                s
+            }
         }
     }
 
@@ -209,6 +225,13 @@ impl WorkloadSpec {
                 ("path", path.as_str().into()),
                 ("offset_s", (*offset_s).into()),
             ]),
+            WorkloadSpec::Token { rate, lengths, max_batch, token_budget } => json::obj([
+                ("kind", "token".into()),
+                ("rate", (*rate).into()),
+                ("lengths", token_lengths_to_json(lengths)),
+                ("max_batch", (*max_batch as f64).into()),
+                ("token_budget", (*token_budget as f64).into()),
+            ]),
         }
     }
 
@@ -234,9 +257,70 @@ impl WorkloadSpec {
                 path: w.str_field("path")?,
                 offset_s: w.f64_field("offset_s").unwrap_or(0.0),
             },
+            "token" => {
+                let lengths = token_lengths_from_json(w.get("lengths")?)?;
+                lengths.validate().map_err(|e| anyhow::anyhow!(e))?;
+                WorkloadSpec::Token {
+                    rate: w.f64_field("rate")?,
+                    lengths,
+                    max_batch: w.f64_field("max_batch").unwrap_or(0.0) as usize,
+                    token_budget: w.f64_field("token_budget").unwrap_or(0.0) as u64,
+                }
+            }
             other => bail!("unknown workload kind '{other}'"),
         })
     }
+}
+
+/// JSON for a token-length distribution, tagged by `dist`.
+fn token_lengths_to_json(l: &TokenLengths) -> Json {
+    match l {
+        TokenLengths::Lognormal { in_median, in_sigma, out_median, out_sigma } => json::obj([
+            ("dist", "lognormal".into()),
+            ("in_median", (*in_median).into()),
+            ("in_sigma", (*in_sigma).into()),
+            ("out_median", (*out_median).into()),
+            ("out_sigma", (*out_sigma).into()),
+        ]),
+        TokenLengths::Pareto { in_min, in_alpha, out_min, out_alpha } => json::obj([
+            ("dist", "pareto".into()),
+            ("in_min", (*in_min).into()),
+            ("in_alpha", (*in_alpha).into()),
+            ("out_min", (*out_min).into()),
+            ("out_alpha", (*out_alpha).into()),
+        ]),
+        TokenLengths::Fixed { n_in, n_out } => json::obj([
+            ("dist", "fixed".into()),
+            ("n_in", (*n_in as f64).into()),
+            ("n_out", (*n_out as f64).into()),
+        ]),
+        TokenLengths::Empirical { path } => {
+            json::obj([("dist", "empirical".into()), ("path", path.as_str().into())])
+        }
+    }
+}
+
+fn token_lengths_from_json(v: &Json) -> Result<TokenLengths> {
+    Ok(match v.str_field("dist")?.as_str() {
+        "lognormal" => TokenLengths::Lognormal {
+            in_median: v.f64_field("in_median")?,
+            in_sigma: v.f64_field("in_sigma")?,
+            out_median: v.f64_field("out_median")?,
+            out_sigma: v.f64_field("out_sigma")?,
+        },
+        "pareto" => TokenLengths::Pareto {
+            in_min: v.f64_field("in_min")?,
+            in_alpha: v.f64_field("in_alpha")?,
+            out_min: v.f64_field("out_min")?,
+            out_alpha: v.f64_field("out_alpha")?,
+        },
+        "fixed" => TokenLengths::Fixed {
+            n_in: v.f64_field("n_in")? as u32,
+            n_out: v.f64_field("n_out")? as u32,
+        },
+        "empirical" => TokenLengths::Empirical { path: v.str_field("path")? },
+        other => bail!("unknown token length distribution '{other}'"),
+    })
 }
 
 impl ScenarioSpec {
@@ -315,6 +399,40 @@ mod tests {
                 mode: TrafficMode::SharedIntensity,
             },
             WorkloadSpec::Replay { path: "trace.json".into(), offset_s: 30.0 },
+            WorkloadSpec::Token {
+                rate: 0.8,
+                lengths: TokenLengths::Lognormal {
+                    in_median: 512.0,
+                    in_sigma: 0.9,
+                    out_median: 128.0,
+                    out_sigma: 0.7,
+                },
+                max_batch: 16,
+                token_budget: 8192,
+            },
+            WorkloadSpec::Token {
+                rate: 1.2,
+                lengths: TokenLengths::Pareto {
+                    in_min: 32.0,
+                    in_alpha: 1.8,
+                    out_min: 16.0,
+                    out_alpha: 2.2,
+                },
+                max_batch: 0,
+                token_budget: 0,
+            },
+            WorkloadSpec::Token {
+                rate: 2.0,
+                lengths: TokenLengths::Fixed { n_in: 256, n_out: 64 },
+                max_batch: 8,
+                token_budget: 0,
+            },
+            WorkloadSpec::Token {
+                rate: 0.25,
+                lengths: TokenLengths::Empirical { path: "data/traces/sample_requests.csv".into() },
+                max_batch: 0,
+                token_budget: 4096,
+            },
         ] {
             spec.workload = wl.clone();
             let back = ScenarioSpec::from_json(&spec.to_json()).unwrap();

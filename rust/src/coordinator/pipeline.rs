@@ -27,7 +27,9 @@ use crate::classifier::{
 };
 use crate::config::{ScenarioSpec, WorkloadSpec};
 use crate::runtime::{Executable, Runtime};
-use crate::surrogate::{features_interleaved_into, simulate_queue, OccupancyEvents};
+use crate::surrogate::{
+    features_interleaved_into, simulate_queue_policy, OccupancyEvents, QueuePolicy,
+};
 use crate::synth::{
     sample_power, sample_power_into, sample_power_resume, sample_states_lane_into,
     sample_states_masked_into,
@@ -35,7 +37,8 @@ use crate::synth::{
 use crate::util::rng::Rng;
 use crate::util::threadpool::{default_workers, parallel_fold};
 use crate::workload::{
-    poisson_arrivals, replay, DiurnalProfile, LengthSampler, Mmpp, Schedule, TrafficMode,
+    poisson_arrivals, replay, token_arrivals, DiurnalProfile, LengthSampler, Mmpp, Schedule,
+    TokenLengthSampler, TokenLengths, TrafficMode,
 };
 use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
@@ -249,8 +252,28 @@ impl Generator {
         rng: &mut Rng,
         scratch: &mut WorkerScratch,
     ) -> Result<ServerTrace> {
+        let policy = QueuePolicy::slots(self.cat.campaign.max_batch);
+        self.server_trace_policy(art, classifier, schedule, horizon_s, dt_s, policy, rng, scratch)
+    }
+
+    /// [`Generator::server_trace_with`] under an explicit queue batching
+    /// policy (token-level workloads override slot count / token budget;
+    /// see [`Generator::queue_policy_for`]). With the default policy this
+    /// is bit-identical to `server_trace_with`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn server_trace_policy(
+        &self,
+        art: &ConfigArtifact,
+        classifier: &AnyClassifier,
+        schedule: &Schedule,
+        horizon_s: f64,
+        dt_s: f64,
+        policy: QueuePolicy,
+        rng: &mut Rng,
+        scratch: &mut WorkerScratch,
+    ) -> Result<ServerTrace> {
         let n_steps = (horizon_s / dt_s).round() as usize;
-        let intervals = simulate_queue(schedule, &art.surrogate, self.cat.campaign.max_batch, rng);
+        let intervals = simulate_queue_policy(schedule, &art.surrogate, policy, rng);
         // Fork the post-queue RNG into independent state/power streams —
         // see [`RNG_STATES`]: the windowed path interleaves the two kinds
         // of draws per window, so they must not share a stream.
@@ -327,7 +350,43 @@ impl Generator {
                 shifted.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
                 shifted
             }
+            WorkloadSpec::Token { rate, lengths, .. } => {
+                // Empirical length distributions resample (n_in, n_out)
+                // pairs from a recorded trace; the parsed trace is shared
+                // through the same per-path cache the replay workload uses.
+                let sampler = if let TokenLengths::Empirical { path } = lengths {
+                    TokenLengthSampler::empirical(self.replay_base(path)?)
+                        .map_err(anyhow::Error::msg)?
+                } else {
+                    lengths
+                        .sampler_local()
+                        .expect("non-empirical token lengths build locally")
+                };
+                token_arrivals(*rate, spec.horizon_s, &sampler, &mut rng)
+            }
         })
+    }
+
+    /// Resolve the queue batching policy for a scenario. Token workloads
+    /// carry their own `max_batch` (0 ⇒ the campaign default) and optional
+    /// token budget; every other workload uses the campaign's fixed batch
+    /// capacity, exactly as before the token axis existed.
+    pub fn queue_policy_for(&self, spec: &ScenarioSpec) -> QueuePolicy {
+        match &spec.workload {
+            WorkloadSpec::Token { max_batch, token_budget, .. } => QueuePolicy {
+                max_batch: if *max_batch == 0 { self.cat.campaign.max_batch } else { *max_batch },
+                token_budget: if *token_budget == 0 { None } else { Some(*token_budget) },
+            },
+            _ => QueuePolicy::slots(self.cat.campaign.max_batch),
+        }
+    }
+
+    /// Number of distinct trace paths currently parsed into the shared
+    /// replay cache (replay workloads and token-empirical length
+    /// distributions both load through it). Test observability hook for
+    /// the parse-once-per-path contract.
+    pub fn cached_replay_paths(&self) -> usize {
+        self.replay_cache.lock().unwrap().len()
     }
 
     /// Load-and-cache the immutable base schedule of a replay trace.
@@ -463,6 +522,7 @@ impl Generator {
             table.insert(id, p);
         }
         let base_rng = Rng::new(spec.seed);
+        let policy = self.queue_policy_for(spec);
         let workers = if workers == 0 { default_workers() } else { workers };
         let errors = Mutex::new(Vec::<String>::new());
         let (acc, _scratch) = parallel_fold(
@@ -497,12 +557,13 @@ impl Generator {
                             let result = (|| -> Result<()> {
                                 let sched = self.schedule_for(spec, s, &base_rng)?;
                                 let mut rng = base_rng.fork(0x5E21 ^ s as u64);
-                                let tr = self.server_trace_with(
+                                let tr = self.server_trace_policy(
                                     &p.art,
                                     &p.cls,
                                     &sched,
                                     spec.horizon_s,
                                     dt_s,
+                                    policy,
                                     &mut rng,
                                     scratch,
                                 )?;
@@ -560,12 +621,12 @@ impl Generator {
         // surrogate queue → interleaved features. Each server's RNG stream
         // is forked exactly as in the sequential path and carried to the
         // sampling stages below.
+        let policy = self.queue_policy_for(spec);
         for s in s0..s1 {
             let result = (|| -> Result<()> {
                 let sched = self.schedule_for(spec, s, base_rng)?;
                 let mut rng = base_rng.fork(0x5E21 ^ s as u64);
-                let intervals =
-                    simulate_queue(&sched, &p.art.surrogate, self.cat.campaign.max_batch, &mut rng);
+                let intervals = simulate_queue_policy(&sched, &p.art.surrogate, policy, &mut rng);
                 let lane = lane_servers.len();
                 features_interleaved_into(&intervals, n_steps, dt_s, diff, &mut lane_feats[lane]);
                 lane_rngs.push(rng.fork(RNG_STATES));
@@ -782,17 +843,14 @@ impl Generator {
             let mut events = Vec::with_capacity(s1 - s0);
             let mut zrngs = Vec::with_capacity(s1 - s0);
             let mut prngs = Vec::with_capacity(s1 - s0);
+            let policy = self.queue_policy_for(spec);
             for s in s0..s1 {
                 let sched = self
                     .schedule_for(spec, s, base_rng)
                     .with_context(|| format!("server {s}"))?;
                 let mut rng = base_rng.fork(0x5E21 ^ s as u64);
-                let intervals = simulate_queue(
-                    &sched,
-                    &prepared.art.surrogate,
-                    self.cat.campaign.max_batch,
-                    &mut rng,
-                );
+                let intervals =
+                    simulate_queue_policy(&sched, &prepared.art.surrogate, policy, &mut rng);
                 events.push(OccupancyEvents::from_intervals_with(
                     &intervals,
                     n_steps,

@@ -443,20 +443,44 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             Opt { name: "window", help: "streaming window (s; 0 = buffered). Cells generate window-by-window with O(racks × window) memory and CSVs stream into --out", default: Some("0") },
             Opt { name: "horizon", help: "horizon for the built-in demo grid (s)", default: Some("600") },
             Opt { name: "backend", help: "classifier backend (native|pjrt; streaming requires native)", default: Some("pjrt") },
+            Opt { name: "synth", help: "run on a synthetic random-weight artifact store (CI smokes / demos; no `make artifacts` needed; requires --grid)", default: None },
+            Opt { name: "synth-seed", help: "seed of the synthetic artifact store (with --synth)", default: Some("7") },
         ]));
         return Ok(());
     }
-    let backend = args.str_or("backend", "pjrt");
-    let mut gen = match Generator::with_backend(&backend) {
-        Ok(g) => g,
-        Err(e) if backend == "pjrt" => {
-            eprintln!("note: pjrt backend unavailable ({e:#}); falling back to native");
-            Generator::native()?
-        }
-        Err(e) => return Err(e),
+    let loaded = match args.str_opt("grid") {
+        Some(path) => Some(SweepGrid::load(std::path::Path::new(path))?),
+        None => None,
     };
-    let grid = match args.str_opt("grid") {
-        Some(path) => SweepGrid::load(std::path::Path::new(path))?,
+    let mut gen = if args.has("synth") {
+        // Mirror `powertrace site --synth`: a deterministic random-weight
+        // store over exactly the configs the grid references.
+        let Some(grid) = loaded.as_ref() else {
+            anyhow::bail!("--synth requires --grid (the store is built from the grid's config ids)");
+        };
+        let cat = Catalog::load_default()?;
+        let root = powertrace_sim::testutil::synth_artifact_store(
+            "sweep_cli",
+            16,
+            6,
+            &grid.config_ids(),
+            args.u64_or("synth-seed", 7)?,
+        );
+        let store = powertrace_sim::artifacts::ArtifactStore::open(&root)?;
+        Generator::native_with(cat, store)
+    } else {
+        let backend = args.str_or("backend", "pjrt");
+        match Generator::with_backend(&backend) {
+            Ok(g) => g,
+            Err(e) if backend == "pjrt" => {
+                eprintln!("note: pjrt backend unavailable ({e:#}); falling back to native");
+                Generator::native()?
+            }
+            Err(e) => return Err(e),
+        }
+    };
+    let grid = match loaded {
+        Some(grid) => grid,
         None => {
             let horizon = args.f64_or("horizon", 600.0)?;
             let ids = gen.store.manifest.configs.clone();

@@ -6,6 +6,12 @@
 //! pure and deterministic — the same grid always yields the same cells in
 //! the same order — so grid cells are comparable across runs and code
 //! revisions.
+//!
+//! The workload axis accepts every [`WorkloadSpec`] kind, including
+//! token-level workloads — so length-distribution parameters (e.g. two
+//! `token` entries differing only in `lengths.in_median`) and batching
+//! parameters (`max_batch`, `token_budget`) are sweepable axes like any
+//! other workload knob.
 
 use crate::aggregate::Topology;
 use crate::config::{

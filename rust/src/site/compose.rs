@@ -39,7 +39,7 @@ use super::metrics::{
     characterization_header, characterization_row, SeriesSummary, SiteSeriesStats,
 };
 use super::overlay::OverlayChain;
-use super::spec::SiteSpec;
+use super::spec::{FacilityKind, SiteSpec, TrainingSpec};
 use crate::aggregate::{pcc_window_into, SiteAccumulator};
 use crate::config::ScenarioSpec;
 use crate::coordinator::{window_geometry, Generator};
@@ -52,6 +52,14 @@ use std::sync::mpsc;
 /// Marker a facility thread reports when the coordinator stopped taking
 /// windows (the real failure is elsewhere; this one is filtered out).
 const ABORT_MSG: &str = "site window delivery aborted";
+
+/// What one facility's window stream runs: the generated inference
+/// pipeline (phase already folded into the scenario) or the deterministic
+/// training synthesizer (phase applied at evaluation time).
+enum FacStream {
+    Inference(ScenarioSpec),
+    Training(TrainingSpec, f64),
+}
 
 /// Execution knobs for one site run.
 #[derive(Debug, Clone)]
@@ -93,8 +101,13 @@ impl Default for SiteOptions {
 pub struct FacilityReport {
     pub name: String,
     pub phase_offset_s: f64,
+    /// Server count (0 for training facilities).
     pub servers: usize,
-    pub seed: u64,
+    /// Scenario seed; `None` for training facilities (their step-function
+    /// power model is deterministic and seedless).
+    pub seed: Option<u64>,
+    /// Summary-row role: "facility" (inference) or "training".
+    pub role: &'static str,
     pub summary: SeriesSummary,
 }
 
@@ -145,12 +158,31 @@ pub fn run_site(
         "site: window must be positive seconds (got {})",
         opts.window_s
     );
-    let shifted: Vec<ScenarioSpec> =
-        spec.facilities.iter().map(|f| f.effective_scenario()).collect();
-    gen.prepare_for_many(shifted.iter())?;
+    // Each facility contributes one window stream: inference facilities
+    // run the full windowed generation engine; training facilities
+    // synthesize their deterministic step-function profile directly.
+    let streams: Vec<FacStream> = spec
+        .facilities
+        .iter()
+        .map(|f| match &f.kind {
+            FacilityKind::Inference(_) => {
+                FacStream::Inference(f.effective_scenario().expect("inference facility"))
+            }
+            FacilityKind::Training(t) => FacStream::Training(t.clone(), f.phase_offset_s),
+        })
+        .collect();
+    let inference: Vec<&ScenarioSpec> = streams
+        .iter()
+        .filter_map(|s| match s {
+            FacStream::Inference(sc) => Some(sc),
+            FacStream::Training(..) => None,
+        })
+        .collect();
+    let n_inference = inference.len();
+    gen.prepare_for_many(inference)?;
     let gen_ro: &Generator = gen;
 
-    let n_fac = shifted.len();
+    let n_fac = streams.len();
     let dt = opts.dt_s;
     let horizon = spec.horizon_s();
     // The exact window geometry every facility stream computes internally
@@ -158,7 +190,9 @@ pub fn run_site(
     let (n_steps, window, n_windows) = window_geometry(horizon, dt, opts.window_s)?;
     let ramp_s = crate::metrics::planning::clamp_ramp_interval(opts.ramp_interval_s, horizon, dt);
     let total_workers = if opts.workers == 0 { default_workers() } else { opts.workers };
-    let inner_workers = (total_workers / n_fac).max(1);
+    // Only generating (inference) streams consume the worker budget; the
+    // training synthesizer threads are O(window) loops.
+    let inner_workers = (total_workers / n_inference.max(1)).max(1);
 
     let mut site_stats = SiteSeriesStats::new(dt, ramp_s, &spec.utility_intervals_s)?;
     let mut writer: Option<StreamingCsv> = match out_dir {
@@ -196,47 +230,85 @@ pub fn run_site(
     let fac_summaries: Vec<SeriesSummary> = std::thread::scope(|sc| -> Result<Vec<SeriesSummary>> {
         let mut handles = Vec::with_capacity(n_fac);
         let mut rxs = Vec::with_capacity(n_fac);
-        for (spec_f, mut chain) in shifted.iter().zip(fac_chains.drain(..)) {
+        for (stream, mut chain) in streams.iter().zip(fac_chains.drain(..)) {
             let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(1);
             rxs.push(rx);
-            let pue = spec_f.pue;
-            let max_batch = opts.max_batch;
-            let window_s = opts.window_s;
-            handles.push(sc.spawn(move || -> Result<SeriesSummary> {
-                let mut fac_stats = SiteSeriesStats::new(dt, ramp_s, utility_intervals)?;
-                let mut rows_buf: Vec<Vec<f64>> = Vec::new();
-                let mut site_buf: Vec<f64> = Vec::new();
-                let mut pcc: Vec<f32> = Vec::new();
-                gen_ro.facility_shared_windowed(
-                    spec_f,
-                    dt,
-                    window_s,
-                    inner_workers,
-                    max_batch,
-                    |facc| {
-                        facc.fold_rows_site(&mut rows_buf, &mut site_buf);
-                        // The facility PCC f32 series exactly as the sweep
-                        // engine's streamed cells build it (shared helper).
-                        pcc_window_into(&site_buf, pue, &mut pcc);
-                        // Facility overlays transform the window before
-                        // characterization, export, AND the site fold —
-                        // the site composes **net** facility load. An
-                        // empty chain is skipped entirely (the PR-4
-                        // byte-identity surface).
+            match stream {
+                FacStream::Inference(spec_f) => {
+                    let pue = spec_f.pue;
+                    let max_batch = opts.max_batch;
+                    let window_s = opts.window_s;
+                    handles.push(sc.spawn(move || -> Result<SeriesSummary> {
+                        let mut fac_stats = SiteSeriesStats::new(dt, ramp_s, utility_intervals)?;
+                        let mut rows_buf: Vec<Vec<f64>> = Vec::new();
+                        let mut site_buf: Vec<f64> = Vec::new();
+                        let mut pcc: Vec<f32> = Vec::new();
+                        gen_ro.facility_shared_windowed(
+                            spec_f,
+                            dt,
+                            window_s,
+                            inner_workers,
+                            max_batch,
+                            |facc| {
+                                facc.fold_rows_site(&mut rows_buf, &mut site_buf);
+                                // The facility PCC f32 series exactly as the
+                                // sweep engine's streamed cells build it
+                                // (shared helper).
+                                pcc_window_into(&site_buf, pue, &mut pcc);
+                                // Facility overlays transform the window
+                                // before characterization, export, AND the
+                                // site fold — the site composes **net**
+                                // facility load. An empty chain is skipped
+                                // entirely (the PR-4 byte-identity surface).
+                                if !chain.is_empty() {
+                                    chain.apply_window(facc.window_t0(), &mut pcc);
+                                }
+                                fac_stats.push_window(&pcc);
+                                tx.send(pcc.clone()).map_err(|_| anyhow!(ABORT_MSG))?;
+                                Ok(())
+                            },
+                        )?;
+                        let mut summary = fac_stats.finalize()?;
                         if !chain.is_empty() {
-                            chain.apply_window(facc.window_t0(), &mut pcc);
+                            summary.overlay = Some(chain.summary());
                         }
-                        fac_stats.push_window(&pcc);
-                        tx.send(pcc.clone()).map_err(|_| anyhow!(ABORT_MSG))?;
-                        Ok(())
-                    },
-                )?;
-                let mut summary = fac_stats.finalize()?;
-                if !chain.is_empty() {
-                    summary.overlay = Some(chain.summary());
+                        Ok(summary)
+                    }));
                 }
-                Ok(summary)
-            }));
+                FacStream::Training(tspec, phase) => {
+                    // The training synthesizer: evaluate the step function
+                    // over each lockstep window (phase-shifted like diurnal
+                    // peaks: positive offsets move steps later), run the
+                    // same per-facility overlay chain, characterize, and
+                    // deliver — indistinguishable from a generated stream
+                    // to the coordinator.
+                    let tspec = tspec.clone();
+                    let phase = *phase;
+                    handles.push(sc.spawn(move || -> Result<SeriesSummary> {
+                        let mut fac_stats = SiteSeriesStats::new(dt, ramp_s, utility_intervals)?;
+                        let mut pcc: Vec<f32> = Vec::new();
+                        for wi in 0..n_windows {
+                            let t0 = wi * window;
+                            let len = (n_steps - t0).min(window);
+                            pcc.clear();
+                            pcc.extend(
+                                (0..len)
+                                    .map(|i| tspec.power_at((t0 + i) as f64 * dt - phase) as f32),
+                            );
+                            if !chain.is_empty() {
+                                chain.apply_window(t0, &mut pcc);
+                            }
+                            fac_stats.push_window(&pcc);
+                            tx.send(pcc.clone()).map_err(|_| anyhow!(ABORT_MSG))?;
+                        }
+                        let mut summary = fac_stats.finalize()?;
+                        if !chain.is_empty() {
+                            summary.overlay = Some(chain.summary());
+                        }
+                        Ok(summary)
+                    }));
+                }
+            }
         }
 
         // Coordinator: one lockstep barrier per window. Failures are
@@ -351,8 +423,9 @@ pub fn run_site(
             .map(|(f, summary)| FacilityReport {
                 name: f.name.clone(),
                 phase_offset_s: f.phase_offset_s,
-                servers: f.scenario.topology.n_servers(),
-                seed: f.scenario.seed,
+                servers: f.n_servers(),
+                seed: f.scenario().map(|s| s.seed),
+                role: f.role(),
                 summary,
             })
             .collect(),
@@ -396,12 +469,16 @@ impl SiteReport {
             ",coincidence_factor,diversity_factor,sum_facility_peaks_w,nameplate_w,headroom_w,headroom_frac\n",
         );
         for f in &self.facilities {
+            let seed = match f.seed {
+                Some(s) => format!("{s}"),
+                None => String::new(),
+            };
             push_series_row(
                 &mut s,
                 &f.name,
-                "facility",
+                f.role,
                 f.servers,
-                &format!("{}", f.seed),
+                &seed,
                 &format!("{}", f.phase_offset_s),
                 &f.summary,
                 with_overlay,
@@ -453,7 +530,7 @@ impl SiteReport {
             ));
         };
         for f in &self.facilities {
-            row(&f.name, "facility", f.servers, &f.summary);
+            row(&f.name, f.role, f.servers, &f.summary);
         }
         row(&self.spec.name, "site", self.spec.n_servers(), &self.site);
         s.push_str(&format!(

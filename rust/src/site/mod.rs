@@ -13,7 +13,10 @@
 //! 10-facility × 7-day site run is routine:
 //!
 //! * [`SiteSpec`] / [`FacilitySpec`] — the planner-facing JSON
-//!   (`spec`): facilities + phase offsets + nameplate + utility intervals;
+//!   (`spec`): facilities + phase offsets + nameplate + utility intervals.
+//!   A facility is either a full inference scenario or a [`TrainingSpec`]
+//!   archetype (deterministic step-function power — compute vs checkpoint
+//!   phases), so one site composes mixed inference + training classes;
 //! * [`run_site`] — the lockstep composition engine (`compose`): one
 //!   windowed facility stream per facility, a rendezvous barrier per
 //!   window, a bounded [`SiteAccumulator`](crate::aggregate::SiteAccumulator)
@@ -44,5 +47,7 @@ pub use metrics::{
     LoadDurationPoint, SeriesSummary, SiteSeriesStats, LOAD_DURATION_QUANTILES,
 };
 pub use overlay::{pv_irradiance_w, OverlayChain, OverlaySpec, OverlaySummary};
-pub use spec::{FacilitySpec, SiteSpec, DEFAULT_UTILITY_INTERVALS_S};
+pub use spec::{
+    FacilityKind, FacilitySpec, SiteSpec, TrainingSpec, DEFAULT_UTILITY_INTERVALS_S,
+};
 pub use sweep::{run_site_sweep, sweep_summary_csv, SiteGrid, SiteVariant};

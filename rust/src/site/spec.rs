@@ -23,16 +23,100 @@ use std::path::Path;
 /// settlement, and scheduling cadences).
 pub const DEFAULT_UTILITY_INTERVALS_S: [f64; 3] = [300.0, 900.0, 3600.0];
 
-/// One facility of a site: a complete facility scenario plus its phase
-/// offset in the site's shared clock.
+/// A training facility archetype: deterministic step-function power.
+///
+/// Large training jobs draw near-constant power during compute phases and
+/// drop to a base level during checkpoint/stall windows, producing a
+/// square-wave facility profile — the mixed-class smoothing setup of the
+/// related site-composition work (arxiv 2604.10769). `power_at` is a pure
+/// function of the simulation clock, so training facilities need no
+/// artifact store, seed, or server topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainingSpec {
+    /// Trace horizon (s); must match every other facility of the site.
+    pub horizon_s: f64,
+    /// Facility power during checkpoint/stall windows (W).
+    pub base_w: f64,
+    /// Extra power during compute windows (W); the step height.
+    pub amplitude_w: f64,
+    /// Step period (s): one compute + checkpoint cycle.
+    pub period_s: f64,
+    /// Fraction of each period spent at `base_w + amplitude_w`, in [0, 1].
+    pub duty: f64,
+}
+
+impl TrainingSpec {
+    /// Facility power at simulation time `t_s` (phase-shift by evaluating
+    /// at `t - phase_offset_s`: positive offsets move steps later, exactly
+    /// the diurnal peak convention).
+    pub fn power_at(&self, t_s: f64) -> f64 {
+        let phase = t_s.rem_euclid(self.period_s);
+        if phase < self.duty * self.period_s {
+            self.base_w + self.amplitude_w
+        } else {
+            self.base_w
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.horizon_s.is_finite() && self.horizon_s > 0.0) {
+            bail!("training horizon_s must be positive seconds (got {})", self.horizon_s);
+        }
+        if !(self.base_w.is_finite() && self.base_w >= 0.0) {
+            bail!("training base_w must be non-negative (got {})", self.base_w);
+        }
+        if !(self.amplitude_w.is_finite() && self.amplitude_w >= 0.0) {
+            bail!("training amplitude_w must be non-negative (got {})", self.amplitude_w);
+        }
+        if !(self.period_s.is_finite() && self.period_s > 0.0) {
+            bail!("training period_s must be positive seconds (got {})", self.period_s);
+        }
+        if !(self.duty.is_finite() && (0.0..=1.0).contains(&self.duty)) {
+            bail!("training duty must be in [0, 1] (got {})", self.duty);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj([
+            ("horizon_s", self.horizon_s.into()),
+            ("base_w", self.base_w.into()),
+            ("amplitude_w", self.amplitude_w.into()),
+            ("period_s", self.period_s.into()),
+            ("duty", self.duty.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<TrainingSpec> {
+        Ok(TrainingSpec {
+            horizon_s: v.f64_field("horizon_s")?,
+            base_w: v.f64_field("base_w")?,
+            amplitude_w: v.f64_field("amplitude_w")?,
+            period_s: v.f64_field("period_s")?,
+            duty: v.f64_field("duty")?,
+        })
+    }
+}
+
+/// What a facility runs: a full inference scenario (the generated path) or
+/// a deterministic training archetype.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FacilityKind {
+    Inference(ScenarioSpec),
+    Training(TrainingSpec),
+}
+
+/// One facility of a site: what it runs plus its phase offset in the
+/// site's shared clock.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FacilitySpec {
     /// Facility name (unique within the site; becomes a CSV column).
     pub name: String,
     /// Phase offset in seconds: positive values shift this facility's
-    /// diurnal peak later (a facility further west).
+    /// diurnal peak (or training step pattern) later (a facility further
+    /// west).
     pub phase_offset_s: f64,
-    pub scenario: ScenarioSpec,
+    pub kind: FacilityKind,
     /// Net-load overlay stages applied to this facility's PCC window
     /// stream, in order, **before** it is summed into the site (a
     /// facility nameplate cap, an on-site battery or PV plant). Empty =
@@ -41,16 +125,87 @@ pub struct FacilitySpec {
 }
 
 impl FacilitySpec {
-    /// The scenario this facility actually runs: the declared scenario
-    /// with the phase offset folded into its workload. Diurnal workloads
-    /// shift their `peak_hour` by `offset / 3600` (wrapped on 24 h);
-    /// stationary and replay workloads are unchanged (see module docs).
-    pub fn effective_scenario(&self) -> ScenarioSpec {
-        let mut s = self.scenario.clone();
+    /// An inference facility (the pre-training-archetype constructor).
+    pub fn inference(name: &str, phase_offset_s: f64, scenario: ScenarioSpec) -> FacilitySpec {
+        FacilitySpec {
+            name: name.to_string(),
+            phase_offset_s,
+            kind: FacilityKind::Inference(scenario),
+            overlays: Vec::new(),
+        }
+    }
+
+    /// A training facility.
+    pub fn training(name: &str, phase_offset_s: f64, training: TrainingSpec) -> FacilitySpec {
+        FacilitySpec {
+            name: name.to_string(),
+            phase_offset_s,
+            kind: FacilityKind::Training(training),
+            overlays: Vec::new(),
+        }
+    }
+
+    /// The inference scenario, if this facility runs one.
+    pub fn scenario(&self) -> Option<&ScenarioSpec> {
+        match &self.kind {
+            FacilityKind::Inference(s) => Some(s),
+            FacilityKind::Training(_) => None,
+        }
+    }
+
+    /// Mutable access to the inference scenario (seed ladders, tests).
+    pub fn scenario_mut(&mut self) -> Option<&mut ScenarioSpec> {
+        match &mut self.kind {
+            FacilityKind::Inference(s) => Some(s),
+            FacilityKind::Training(_) => None,
+        }
+    }
+
+    /// The training archetype, if this facility runs one.
+    pub fn training_spec(&self) -> Option<&TrainingSpec> {
+        match &self.kind {
+            FacilityKind::Training(t) => Some(t),
+            FacilityKind::Inference(_) => None,
+        }
+    }
+
+    /// This facility's trace horizon (s), whatever it runs.
+    pub fn horizon_s(&self) -> f64 {
+        match &self.kind {
+            FacilityKind::Inference(s) => s.horizon_s,
+            FacilityKind::Training(t) => t.horizon_s,
+        }
+    }
+
+    /// Server count (0 for training facilities — their power model is
+    /// facility-level).
+    pub fn n_servers(&self) -> usize {
+        match &self.kind {
+            FacilityKind::Inference(s) => s.topology.n_servers(),
+            FacilityKind::Training(_) => 0,
+        }
+    }
+
+    /// Summary-row role label ("facility" for inference — the pre-existing
+    /// label, kept for export compatibility — and "training").
+    pub fn role(&self) -> &'static str {
+        match &self.kind {
+            FacilityKind::Inference(_) => "facility",
+            FacilityKind::Training(_) => "training",
+        }
+    }
+
+    /// The scenario an inference facility actually runs (`None` for
+    /// training): the declared scenario with the phase offset folded into
+    /// its workload. Diurnal workloads shift their `peak_hour` by
+    /// `offset / 3600` (wrapped on 24 h); stationary and replay workloads
+    /// are unchanged (see module docs).
+    pub fn effective_scenario(&self) -> Option<ScenarioSpec> {
+        let mut s = self.scenario()?.clone();
         if let WorkloadSpec::Diurnal { ref mut peak_hour, .. } = s.workload {
             *peak_hour = (*peak_hour + self.phase_offset_s / 3600.0).rem_euclid(24.0);
         }
-        s
+        Some(s)
     }
 
     /// The overlay stages this facility actually runs: the declared list
@@ -65,8 +220,14 @@ impl FacilitySpec {
         let mut fields = vec![
             ("name", Json::Str(self.name.clone())),
             ("phase_offset_s", self.phase_offset_s.into()),
-            ("scenario", self.scenario.to_json()),
         ];
+        // Inference facilities keep the pre-archetype "scenario" key, so
+        // every existing site spec round-trips byte-identically; training
+        // facilities carry a "training" object instead.
+        match &self.kind {
+            FacilityKind::Inference(s) => fields.push(("scenario", s.to_json())),
+            FacilityKind::Training(t) => fields.push(("training", t.to_json())),
+        }
         // Omitted when empty: an overlay-free spec round-trips to the
         // exact pre-overlay JSON (the site_spec.json byte-identity
         // surface).
@@ -77,13 +238,21 @@ impl FacilitySpec {
     }
 
     pub fn from_json(v: &Json) -> Result<FacilitySpec> {
+        let kind = match (v.get_opt("scenario"), v.get_opt("training")) {
+            (Some(s), None) => FacilityKind::Inference(ScenarioSpec::from_json(s)?),
+            (None, Some(t)) => FacilityKind::Training(TrainingSpec::from_json(t)?),
+            (Some(_), Some(_)) => {
+                bail!("facility declares both 'scenario' and 'training' (pick one)")
+            }
+            (None, None) => bail!("facility needs a 'scenario' or 'training' object"),
+        };
         Ok(FacilitySpec {
             name: v.str_field("name")?,
             phase_offset_s: match v.get_opt("phase_offset_s") {
                 Some(x) => x.as_f64()?,
                 None => 0.0,
             },
-            scenario: ScenarioSpec::from_json(v.get("scenario")?)?,
+            kind,
             overlays: match v.get_opt("overlays") {
                 Some(x) => OverlaySpec::list_from_json(x)?,
                 None => Vec::new(),
@@ -113,20 +282,22 @@ pub struct SiteSpec {
 impl SiteSpec {
     /// Shared horizon of every facility (validated equal).
     pub fn horizon_s(&self) -> f64 {
-        self.facilities[0].scenario.horizon_s
+        self.facilities[0].horizon_s()
     }
 
-    /// Total servers across facilities.
+    /// Total servers across facilities (training facilities count 0).
     pub fn n_servers(&self) -> usize {
-        self.facilities.iter().map(|f| f.scenario.topology.n_servers()).sum()
+        self.facilities.iter().map(|f| f.n_servers()).sum()
     }
 
-    /// Unique configuration ids referenced by any facility, in first-use
-    /// order (the artifact set a synthetic store must cover).
+    /// Unique configuration ids referenced by any inference facility, in
+    /// first-use order (the artifact set a synthetic store must cover).
+    /// Training facilities reference none.
     pub fn config_ids(&self) -> Vec<String> {
         let mut out: Vec<String> = Vec::new();
         for f in &self.facilities {
-            for id in f.scenario.server_config.config_ids() {
+            let Some(scenario) = f.scenario() else { continue };
+            for id in scenario.server_config.config_ids() {
                 if !out.contains(&id) {
                     out.push(id);
                 }
@@ -140,10 +311,14 @@ impl SiteSpec {
         if self.facilities.is_empty() {
             bail!("site '{}' has no facilities", self.name);
         }
-        let horizon = self.facilities[0].scenario.horizon_s;
+        let horizon = self.facilities[0].horizon_s();
         for (i, f) in self.facilities.iter().enumerate() {
             if f.name.is_empty() {
                 bail!("site '{}': facility {i} has an empty name", self.name);
+            }
+            if let FacilityKind::Training(t) = &f.kind {
+                t.validate()
+                    .with_context(|| format!("site '{}': facility '{}'", self.name, f.name))?;
             }
             // "site" is the composed series' column/row name, and the
             // site's own name keys the summary's site row — a facility
@@ -158,13 +333,13 @@ impl SiteSpec {
             if !f.phase_offset_s.is_finite() {
                 bail!("site '{}': facility '{}' has a non-finite phase offset", self.name, f.name);
             }
-            if f.scenario.horizon_s != horizon {
+            if f.horizon_s() != horizon {
                 bail!(
                     "site '{}': facility '{}' horizon {}s != '{}' horizon {}s \
                      (lockstep composition needs one shared horizon)",
                     self.name,
                     f.name,
-                    f.scenario.horizon_s,
+                    f.horizon_s(),
                     self.facilities[0].name,
                     horizon
                 );
@@ -290,12 +465,11 @@ impl SiteSpec {
             .map(|i| {
                 let mut scenario = base.clone();
                 scenario.seed = base.seed + i as u64;
-                FacilitySpec {
-                    name: format!("fac{i}"),
-                    phase_offset_s: i as f64 * stagger_h * 3600.0,
+                FacilitySpec::inference(
+                    &format!("fac{i}"),
+                    i as f64 * stagger_h * 3600.0,
                     scenario,
-                    overlays: Vec::new(),
-                }
+                )
             })
             .collect();
         SiteSpec {
@@ -329,37 +503,109 @@ mod tests {
         s
     }
 
+    fn training_base() -> TrainingSpec {
+        TrainingSpec {
+            horizon_s: 600.0,
+            base_w: 1.0e4,
+            amplitude_w: 5.0e4,
+            period_s: 100.0,
+            duty: 0.5,
+        }
+    }
+
     #[test]
     fn phase_offset_shifts_diurnal_peak_only() {
-        let fac = FacilitySpec {
-            name: "west".into(),
-            phase_offset_s: 3.0 * 3600.0,
-            scenario: diurnal_base(),
-            overlays: Vec::new(),
-        };
-        match fac.effective_scenario().workload {
+        let fac = FacilitySpec::inference("west", 3.0 * 3600.0, diurnal_base());
+        match fac.effective_scenario().unwrap().workload {
             WorkloadSpec::Diurnal { peak_hour, .. } => assert_eq!(peak_hour, 18.0),
             other => panic!("unexpected workload {other:?}"),
         }
         // Wraps on 24 h.
-        let fac = FacilitySpec {
-            name: "far".into(),
-            phase_offset_s: 12.0 * 3600.0,
-            scenario: diurnal_base(),
-            overlays: Vec::new(),
-        };
-        match fac.effective_scenario().workload {
+        let fac = FacilitySpec::inference("far", 12.0 * 3600.0, diurnal_base());
+        match fac.effective_scenario().unwrap().workload {
             WorkloadSpec::Diurnal { peak_hour, .. } => assert_eq!(peak_hour, 3.0),
             other => panic!("unexpected workload {other:?}"),
         }
         // Stationary workloads pass through untouched.
-        let fac = FacilitySpec {
-            name: "p".into(),
-            phase_offset_s: 7200.0,
-            scenario: base(),
-            overlays: Vec::new(),
-        };
-        assert_eq!(fac.effective_scenario(), base());
+        let fac = FacilitySpec::inference("p", 7200.0, base());
+        assert_eq!(fac.effective_scenario().unwrap(), base());
+        // Training facilities have no scenario at all.
+        let fac = FacilitySpec::training("t", 0.0, training_base());
+        assert!(fac.effective_scenario().is_none());
+        assert_eq!(fac.n_servers(), 0);
+        assert_eq!(fac.role(), "training");
+        assert_eq!(fac.horizon_s(), 600.0);
+    }
+
+    #[test]
+    fn training_power_is_a_phase_shiftable_step_function() {
+        let t = training_base();
+        // duty 0.5 over a 100 s period: high for t ∈ [0, 50), low after.
+        assert_eq!(t.power_at(0.0), 6.0e4);
+        assert_eq!(t.power_at(49.9), 6.0e4);
+        assert_eq!(t.power_at(50.0), 1.0e4);
+        assert_eq!(t.power_at(99.9), 1.0e4);
+        assert_eq!(t.power_at(100.0), 6.0e4); // wraps
+        // Phase shifting like the diurnal convention: evaluating at
+        // `t - offset` moves the step pattern later by `offset`.
+        let offset = 25.0;
+        assert_eq!(t.power_at(30.0 - offset), t.power_at(5.0));
+        assert_eq!(t.power_at(0.0 - offset), 1.0e4); // rem_euclid: 75 s into the period
+        // Degenerate duties are flat lines.
+        let flat = TrainingSpec { duty: 0.0, ..training_base() };
+        assert_eq!(flat.power_at(10.0), 1.0e4);
+        let full = TrainingSpec { duty: 1.0, ..training_base() };
+        assert_eq!(full.power_at(10.0), 6.0e4);
+    }
+
+    #[test]
+    fn training_validation_rejects_bad_parameters() {
+        assert!(training_base().validate().is_ok());
+        assert!(TrainingSpec { horizon_s: 0.0, ..training_base() }.validate().is_err());
+        assert!(TrainingSpec { base_w: -1.0, ..training_base() }.validate().is_err());
+        assert!(TrainingSpec { amplitude_w: f64::NAN, ..training_base() }.validate().is_err());
+        assert!(TrainingSpec { period_s: 0.0, ..training_base() }.validate().is_err());
+        assert!(TrainingSpec { duty: 1.5, ..training_base() }.validate().is_err());
+        assert!(TrainingSpec { duty: -0.1, ..training_base() }.validate().is_err());
+        // Site validation surfaces training errors with facility context.
+        let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
+        site.facilities.push(FacilitySpec::training(
+            "train0",
+            0.0,
+            TrainingSpec { horizon_s: base().horizon_s, duty: 2.0, ..training_base() },
+        ));
+        assert!(site.validate().is_err());
+    }
+
+    #[test]
+    fn mixed_site_roundtrips_and_validates() {
+        let mut site = SiteSpec::staggered("mixed", &diurnal_base(), 2, 4.0);
+        site.facilities.push(FacilitySpec::training(
+            "train0",
+            1800.0,
+            TrainingSpec { horizon_s: diurnal_base().horizon_s, ..training_base() },
+        ));
+        site.validate().unwrap();
+        // Training facilities reference no configs and no servers.
+        assert_eq!(site.config_ids(), vec!["cfg_a".to_string()]);
+        assert_eq!(site.n_servers(), 2 * base().topology.n_servers());
+        let back = SiteSpec::from_json(&site.to_json()).unwrap();
+        assert_eq!(back, site);
+        // A facility must declare exactly one of scenario/training.
+        let neither = json::parse(r#"{"name": "x", "phase_offset_s": 0}"#).unwrap();
+        assert!(FacilitySpec::from_json(&neither).is_err());
+        let mut both = site.facilities[0].to_json();
+        if let Json::Obj(ref mut o) = both {
+            o.insert("training".into(), training_base().to_json());
+        }
+        assert!(FacilitySpec::from_json(&both).is_err());
+        // Horizon mismatch between a training facility and the inference
+        // facilities is caught like any other mismatch.
+        let mut site = site;
+        if let FacilityKind::Training(ref mut t) = site.facilities[2].kind {
+            t.horizon_s *= 2.0;
+        }
+        assert!(site.validate().is_err());
     }
 
     #[test]
@@ -368,7 +614,7 @@ mod tests {
         site.validate().unwrap();
         assert_eq!(site.facilities.len(), 3);
         assert_eq!(site.facilities[2].phase_offset_s, 8.0 * 3600.0);
-        assert_eq!(site.facilities[1].scenario.seed, 1);
+        assert_eq!(site.facilities[1].scenario().unwrap().seed, 1);
         assert_eq!(site.config_ids(), vec!["cfg_a".to_string()]);
         let back = SiteSpec::from_json(&site.to_json()).unwrap();
         assert_eq!(back, site);
@@ -386,7 +632,7 @@ mod tests {
         assert!(site.validate().is_err());
 
         let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
-        site.facilities[1].scenario.horizon_s *= 2.0;
+        site.facilities[1].scenario_mut().unwrap().horizon_s *= 2.0;
         assert!(site.validate().is_err());
 
         let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
@@ -403,7 +649,9 @@ mod tests {
 
         // Pathologically fine interval vs horizon: bounded-memory cap.
         let mut site = SiteSpec::staggered("s", &base(), 2, 0.0);
-        site.facilities.iter_mut().for_each(|f| f.scenario.horizon_s = 1e10);
+        site.facilities
+            .iter_mut()
+            .for_each(|f| f.scenario_mut().unwrap().horizon_s = 1e10);
         site.utility_intervals_s = vec![1.0];
         assert!(site.validate().is_err());
 
@@ -460,15 +708,11 @@ mod tests {
     #[test]
     fn effective_overlays_shift_pv_with_the_facility_phase() {
         use crate::site::overlay::OverlaySpec;
-        let fac = FacilitySpec {
-            name: "west".into(),
-            phase_offset_s: 6.0 * 3600.0,
-            scenario: base(),
-            overlays: vec![
-                OverlaySpec::Cap { cap_w: 1e5 },
-                OverlaySpec::Pv { peak_w: 1e4, peak_hour: 12.0, daylight_h: 12.0 },
-            ],
-        };
+        let mut fac = FacilitySpec::inference("west", 6.0 * 3600.0, base());
+        fac.overlays = vec![
+            OverlaySpec::Cap { cap_w: 1e5 },
+            OverlaySpec::Pv { peak_w: 1e4, peak_hour: 12.0, daylight_h: 12.0 },
+        ];
         let eff = fac.effective_overlays();
         assert_eq!(eff[0], fac.overlays[0]); // caps are clock-free
         match eff[1] {

@@ -140,7 +140,11 @@ impl SiteGrid {
                         let mut spec = self.base.clone();
                         for (i, fac) in spec.facilities.iter_mut().enumerate() {
                             fac.phase_offset_s += i as f64 * spread_h * 3600.0;
-                            fac.scenario.seed = seed + i as u64;
+                            // Training facilities are seedless; the seed
+                            // axis only re-seeds the generated streams.
+                            if let Some(s) = fac.scenario_mut() {
+                                s.seed = seed + i as u64;
+                            }
                         }
                         let mut id = format!("p{pi}-s{seed}");
                         let mut label = format!("spread {spread_h}h | seed {seed}");
@@ -350,7 +354,7 @@ mod tests {
         assert_eq!(a[0].id, "p0-s0");
         let last = &a[3]; // p1-s7, spread 3 h
         assert_eq!(last.spec.facilities[2].phase_offset_s, 2.0 * 3.0 * 3600.0);
-        assert_eq!(last.spec.facilities[2].scenario.seed, 9);
+        assert_eq!(last.spec.facilities[2].scenario().unwrap().seed, 9);
         last.spec.validate().unwrap();
     }
 

@@ -16,7 +16,7 @@ pub use calibrate::{fit_surrogate, DurationSamples};
 pub use features::{
     features_from_intervals, features_interleaved_into, FeatureSeries, OccupancyEvents,
 };
-pub use queue::{simulate_queue, ActiveInterval};
+pub use queue::{simulate_queue, simulate_queue_policy, ActiveInterval, QueuePolicy};
 
 use crate::util::rng::Rng;
 

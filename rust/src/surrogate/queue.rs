@@ -2,6 +2,15 @@
 //! in arrival order into a fixed number of batch slots; request *i* begins
 //! at `max(t_i, earliest available slot)`, incurs its TTFT, then decodes for
 //! `n_out × TBT` seconds.
+//!
+//! The token-level workload axis adds an optional **token budget**
+//! ([`QueuePolicy`]): admission then also requires the running batch's
+//! total token weight (`n_in + n_out` per live request, clamped to the
+//! budget) to fit, so long-prompt/long-output traffic serializes even with
+//! free slots — occupancy derives from token service demand, not just
+//! request count. Without a budget, [`simulate_queue_policy`] dispatches to
+//! the unchanged [`simulate_queue`], so every rate-driven workload keeps
+//! its bit-identical behavior.
 
 use super::SurrogateParams;
 use crate::util::rng::Rng;
@@ -66,6 +75,75 @@ pub fn simulate_queue(
         let decode = req.n_out as f64 * tbt;
         let iv = ActiveInterval { start_s: start, prefill_s: prefill, decode_s: decode };
         slots.push(Reverse(F(iv.end_s())));
+        out.push(iv);
+    }
+    out
+}
+
+/// Admission policy for the queue surrogate: a slot cap plus an optional
+/// per-batch token budget (continuous-batching token packing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueuePolicy {
+    /// Maximum concurrently running requests (batch slots).
+    pub max_batch: usize,
+    /// Maximum Σ (n_in + n_out) over running requests; `None` = unlimited.
+    pub token_budget: Option<u64>,
+}
+
+impl QueuePolicy {
+    /// The classic slot-only policy (exactly [`simulate_queue`]'s model).
+    pub fn slots(max_batch: usize) -> QueuePolicy {
+        QueuePolicy { max_batch, token_budget: None }
+    }
+}
+
+/// Simulate the FIFO queue under a [`QueuePolicy`]. With no token budget
+/// this *is* [`simulate_queue`] — same arithmetic, same RNG consumption —
+/// so rate-driven workloads are unaffected by policy threading.
+pub fn simulate_queue_policy(
+    schedule: &Schedule,
+    params: &SurrogateParams,
+    policy: QueuePolicy,
+    rng: &mut Rng,
+) -> Vec<ActiveInterval> {
+    match policy.token_budget {
+        None => simulate_queue(schedule, params, policy.max_batch, rng),
+        Some(budget) => simulate_queue_budgeted(schedule, params, policy.max_batch, budget, rng),
+    }
+}
+
+/// Token-budget variant: a min-heap of `(end time, token weight)` slots and
+/// a running `used` sum. Admission pops the earliest-ending slots (raising
+/// the start floor to their end times — FIFO order is preserved) until both
+/// the slot cap and the budget admit the request. Per-request weight is
+/// clamped to the budget so an oversized request still runs, alone.
+fn simulate_queue_budgeted(
+    schedule: &Schedule,
+    params: &SurrogateParams,
+    max_batch: usize,
+    budget: u64,
+    rng: &mut Rng,
+) -> Vec<ActiveInterval> {
+    assert!(max_batch > 0, "simulate_queue: max_batch must be positive");
+    assert!(budget > 0, "simulate_queue: token budget must be positive");
+    let mut slots: BinaryHeap<Reverse<(F, u64)>> = BinaryHeap::with_capacity(max_batch);
+    let mut used: u64 = 0;
+    let mut out = Vec::with_capacity(schedule.len());
+    for req in schedule {
+        let w = (req.n_in as u64 + req.n_out as u64).min(budget);
+        let mut free_at = req.arrival_s;
+        while slots.len() >= max_batch || used + w > budget {
+            let Reverse((F(end), tok)) = slots.pop().expect("constraints imply occupied slots");
+            used -= tok;
+            free_at = free_at.max(end);
+        }
+        let start = free_at;
+        let prefill = params.sample_ttft(req.n_in, rng);
+        let tbt = params.sample_tbt(rng);
+        let decode = req.n_out as f64 * tbt;
+        let iv = ActiveInterval { start_s: start, prefill_s: prefill, decode_s: decode };
+        slots.push(Reverse((F(iv.end_s()), w)));
+        used += w;
         out.push(iv);
     }
     out
@@ -165,6 +243,119 @@ mod tests {
             for (r, iv) in sched.iter().zip(&ivs) {
                 assert!(iv.start_s >= r.arrival_s - 1e-9);
                 assert!(iv.prefill_s > 0.0 && iv.decode_s > 0.0);
+            }
+        });
+    }
+
+    /// Token-weighted concurrency: max Σ w over instants, with each
+    /// request's weight `min(n_in + n_out, budget)`.
+    fn max_token_load(schedule: &Schedule, ivs: &[ActiveInterval], budget: u64) -> u64 {
+        let mut events: Vec<(f64, i64)> = Vec::with_capacity(ivs.len() * 2);
+        for (r, iv) in schedule.iter().zip(ivs) {
+            let w = (r.n_in as u64 + r.n_out as u64).min(budget) as i64;
+            events.push((iv.start_s, w));
+            events.push((iv.end_s(), -w));
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut cur = 0i64;
+        let mut max = 0i64;
+        for (_, d) in events {
+            cur += d;
+            max = max.max(cur);
+        }
+        max as u64
+    }
+
+    #[test]
+    fn no_budget_policy_is_bitwise_the_plain_queue() {
+        let lengths = LengthSampler::fixed(256, 64);
+        let mut rng = Rng::new(21);
+        let sched = poisson_arrivals(4.0, 200.0, &lengths, &mut rng);
+        let mut ra = Rng::new(5);
+        let mut rb = Rng::new(5);
+        let plain = simulate_queue(&sched, &det_params(), 8, &mut ra);
+        let policy = simulate_queue_policy(&sched, &det_params(), QueuePolicy::slots(8), &mut rb);
+        assert_eq!(plain.len(), policy.len());
+        for (a, b) in plain.iter().zip(&policy) {
+            assert_eq!(a.start_s.to_bits(), b.start_s.to_bits());
+            assert_eq!(a.prefill_s.to_bits(), b.prefill_s.to_bits());
+            assert_eq!(a.decode_s.to_bits(), b.decode_s.to_bits());
+        }
+        assert_eq!(ra.next_u64(), rb.next_u64());
+    }
+
+    #[test]
+    fn huge_budget_matches_the_plain_queue_bitwise() {
+        let lengths = LengthSampler::fixed(256, 64);
+        let mut rng = Rng::new(22);
+        let sched = poisson_arrivals(4.0, 200.0, &lengths, &mut rng);
+        let mut ra = Rng::new(5);
+        let mut rb = Rng::new(5);
+        let plain = simulate_queue(&sched, &det_params(), 8, &mut ra);
+        let pol = QueuePolicy { max_batch: 8, token_budget: Some(u64::MAX) };
+        let budgeted = simulate_queue_policy(&sched, &det_params(), pol, &mut rb);
+        for (a, b) in plain.iter().zip(&budgeted) {
+            assert_eq!(a.start_s.to_bits(), b.start_s.to_bits());
+        }
+        assert_eq!(ra.next_u64(), rb.next_u64());
+    }
+
+    #[test]
+    fn token_budget_serializes_wide_requests_despite_free_slots() {
+        // Two 200-token requests, budget 300: the second must wait for the
+        // first even though 8 slots are free.
+        let sched = vec![
+            Request { arrival_s: 0.0, n_in: 100, n_out: 100 },
+            Request { arrival_s: 0.0, n_in: 100, n_out: 100 },
+        ];
+        let mut rng = Rng::new(3);
+        let pol = QueuePolicy { max_batch: 8, token_budget: Some(300) };
+        let ivs = simulate_queue_policy(&sched, &det_params(), pol, &mut rng);
+        assert_eq!(ivs[0].start_s, 0.0);
+        assert!((ivs[1].start_s - ivs[0].end_s()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oversized_request_still_runs_alone() {
+        // A request wider than the whole budget is clamped to it: it runs
+        // (alone), rather than deadlocking admission.
+        let sched = vec![
+            Request { arrival_s: 0.0, n_in: 5000, n_out: 5000 },
+            Request { arrival_s: 0.0, n_in: 10, n_out: 10 },
+        ];
+        let mut rng = Rng::new(4);
+        let pol = QueuePolicy { max_batch: 8, token_budget: Some(100) };
+        let ivs = simulate_queue_policy(&sched, &det_params(), pol, &mut rng);
+        assert_eq!(ivs[0].start_s, 0.0);
+        // The small request must wait: the wide one holds the full budget.
+        assert!((ivs[1].start_s - ivs[0].end_s()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_budget_bounds_token_load_and_serves_everything() {
+        check("token budget bounds load", |rng| {
+            let cap = 1 + rng.below(16);
+            let budget = 64 + rng.below(4096) as u64;
+            let rate = rng.range(0.5, 10.0);
+            let n_in = 1 + rng.below(512) as u32;
+            let n_out = 1 + rng.below(128) as u32;
+            let lengths = LengthSampler::fixed(n_in, n_out);
+            let mut local = rng.clone();
+            let sched = poisson_arrivals(rate, 120.0, &lengths, &mut local);
+            if sched.is_empty() {
+                return;
+            }
+            let pol = QueuePolicy { max_batch: cap, token_budget: Some(budget) };
+            let ivs = simulate_queue_policy(&sched, &det_params(), pol, &mut local);
+            // Every request is served, exactly once, never dropped.
+            assert_eq!(ivs.len(), sched.len());
+            assert!(max_concurrency(&ivs) <= cap, "cap {cap}");
+            assert!(max_token_load(&sched, &ivs, budget) <= budget, "budget {budget}");
+            for (r, iv) in sched.iter().zip(&ivs) {
+                assert!(iv.start_s >= r.arrival_s - 1e-9);
+                // Service time depends only on the request, not the policy:
+                // decode = n_out × TBT exactly (σ = 0 here).
+                assert!((iv.decode_s - r.n_out as f64 * 0.01).abs() < 1e-12);
             }
         });
     }

@@ -37,6 +37,27 @@ impl LengthSampler {
         }
     }
 
+    /// Explicit lognormal profile from medians + log-space sigmas — the
+    /// token-level workload axis ([`crate::workload::token`]) configures
+    /// lengths directly instead of via a catalog dataset. Same caps and
+    /// draw order as [`LengthSampler::from_profile`].
+    pub fn lognormal(
+        in_median: f64,
+        in_sigma: f64,
+        out_median: f64,
+        out_sigma: f64,
+    ) -> LengthSampler {
+        LengthSampler {
+            mu_in: in_median.ln(),
+            sigma_in: in_sigma,
+            mu_out: out_median.ln(),
+            sigma_out: out_sigma,
+            out_mult: 1.0,
+            max_in: 32_768,
+            max_out: 16_384,
+        }
+    }
+
     /// Degenerate sampler emitting constant lengths (tests, calibration).
     pub fn fixed(n_in: u32, n_out: u32) -> LengthSampler {
         LengthSampler {

@@ -7,16 +7,17 @@
 //! or by thinning a shared intensity so request streams are correlated
 //! across the facility.
 //!
-//! Four arrival-process families are available, selected by the
+//! Five arrival-process families are available, selected by the
 //! `workload.kind` field of a scenario (or one axis entry of a sweep grid,
 //! see [`crate::scenarios`]):
 //!
-//! | kind      | model                                   | module      |
-//! |-----------|-----------------------------------------|-------------|
-//! | `poisson` | homogeneous Poisson at a fixed rate     | [`poisson`] |
-//! | `mmpp`    | 2-state Markov-modulated Poisson bursts | [`mmpp`]    |
-//! | `diurnal` | Azure-like day/night intensity + bursts | [`diurnal`] |
-//! | `replay`  | replay a recorded schedule from JSON    | [`replay`]  |
+//! | kind      | model                                    | module      |
+//! |-----------|------------------------------------------|-------------|
+//! | `poisson` | homogeneous Poisson at a fixed rate      | [`poisson`] |
+//! | `mmpp`    | 2-state Markov-modulated Poisson bursts  | [`mmpp`]    |
+//! | `diurnal` | Azure-like day/night intensity + bursts  | [`diurnal`] |
+//! | `replay`  | replay a recorded schedule (JSON or CSV) | [`replay`]  |
+//! | `token`   | token-level lengths + batching policy    | [`token`]   |
 //!
 //! All draws flow through the deterministic forked [`crate::util::rng::Rng`]
 //! streams, so any schedule is reproducible from `(scenario seed, server
@@ -27,11 +28,13 @@ pub mod lengths;
 pub mod mmpp;
 pub mod poisson;
 pub mod replay;
+pub mod token;
 
 pub use diurnal::DiurnalProfile;
 pub use lengths::LengthSampler;
 pub use mmpp::Mmpp;
 pub use poisson::poisson_arrivals;
+pub use token::{token_arrivals, total_tokens, TokenLengthSampler, TokenLengths};
 
 use crate::util::rng::Rng;
 

@@ -1,10 +1,11 @@
-//! Replay arrival schedules from JSON files.
+//! Replay arrival schedules from JSON or CSV files.
 //!
 //! This is the interface through which a *real* production trace (e.g. the
 //! Azure token-traffic trace of the paper's §4.4) would be fed to the
 //! pipeline if available: a JSON array of `{"t": s, "n_in": .., "n_out": ..}`
-//! records. The held-out measured-trace artifacts exported by the Python
-//! build path use the same representation.
+//! records, or a `t_s,n_in,n_out` CSV (the format of the checked-in
+//! `data/traces/sample_requests.csv` fixture). The held-out measured-trace
+//! artifacts exported by the Python build path use the JSON representation.
 
 use super::{Request, Schedule};
 use crate::util::json::{self, Json};
@@ -42,8 +43,51 @@ pub fn schedule_to_json(s: &Schedule) -> Json {
     )
 }
 
-/// Load a schedule from a JSON file.
+/// Parse a schedule from `t_s,n_in,n_out` CSV text (header row optional;
+/// any line whose first field does not parse as a number is skipped as a
+/// header). Rows may be unsorted on disk; the result is time-sorted.
+pub fn schedule_from_csv(text: &str) -> Result<Schedule> {
+    let mut out = Schedule::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        anyhow::ensure!(
+            fields.len() == 3,
+            "trace CSV line {}: expected 3 fields (t_s,n_in,n_out), got {}",
+            lineno + 1,
+            fields.len()
+        );
+        let Ok(t) = fields[0].parse::<f64>() else {
+            // Header row (e.g. "t_s,n_in,n_out").
+            anyhow::ensure!(lineno == 0, "trace CSV line {}: unparsable timestamp", lineno + 1);
+            continue;
+        };
+        let parse_len = |s: &str, what: &str| -> Result<u32> {
+            s.parse::<u32>()
+                .map_err(|e| anyhow::anyhow!("trace CSV line {}: bad {what}: {e}", lineno + 1))
+        };
+        out.push(Request {
+            arrival_s: t,
+            n_in: parse_len(fields[1], "n_in")?,
+            n_out: parse_len(fields[2], "n_out")?,
+        });
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    Ok(out)
+}
+
+/// Load a schedule from a JSON or (by `.csv` extension) CSV file.
 pub fn load(path: &Path) -> Result<Schedule> {
+    let is_csv = path.extension().is_some_and(|e| e.eq_ignore_ascii_case("csv"));
+    if is_csv {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        return schedule_from_csv(&text)
+            .with_context(|| format!("parsing schedule {}", path.display()));
+    }
     let v = json::parse_file(path).map_err(anyhow::Error::from)?;
     schedule_from_json(&v).with_context(|| format!("parsing schedule {}", path.display()))
 }
@@ -77,6 +121,38 @@ mod tests {
         assert!(schedule_from_json(&j).is_err());
         let j = json::parse(r#"{"not": "an array"}"#).unwrap();
         assert!(schedule_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn csv_parses_with_and_without_header() {
+        let with_header = "t_s,n_in,n_out\n0.5,100,20\n2.25,64,8\n";
+        let bare = "0.5,100,20\n2.25,64,8\n";
+        let want = vec![
+            Request { arrival_s: 0.5, n_in: 100, n_out: 20 },
+            Request { arrival_s: 2.25, n_in: 64, n_out: 8 },
+        ];
+        assert_eq!(schedule_from_csv(with_header).unwrap(), want);
+        assert_eq!(schedule_from_csv(bare).unwrap(), want);
+        // Unsorted rows normalize, like the JSON path.
+        let unsorted = "2.25,64,8\n0.5,100,20\n";
+        assert_eq!(schedule_from_csv(unsorted).unwrap(), want);
+    }
+
+    #[test]
+    fn csv_rejects_malformed_rows() {
+        assert!(schedule_from_csv("0.5,100\n").is_err());
+        assert!(schedule_from_csv("t_s,n_in,n_out\nnope,1,1\n").is_err());
+        assert!(schedule_from_csv("0.5,1.5,2\n").is_err());
+        assert!(schedule_from_csv("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn csv_file_loads_by_extension() {
+        let dir = std::env::temp_dir().join("powertrace_test_replay_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sched.csv");
+        std::fs::write(&path, "t_s,n_in,n_out\n1.0,10,5\n").unwrap();
+        assert_eq!(load(&path).unwrap(), vec![Request { arrival_s: 1.0, n_in: 10, n_out: 5 }]);
     }
 
     #[test]

@@ -1,0 +1,351 @@
+//! Token-level request workloads (TokenPowerBench-style, arxiv 2512.03024):
+//! arrivals still follow a Poisson clock, but every request carries token
+//! lengths drawn from an explicitly configured distribution — lognormal,
+//! Pareto (heavy-tailed prompts), a degenerate constant, or the empirical
+//! pairs of a recorded trace — instead of a dataset profile. Combined with
+//! the surrogate queue's token-budget packing
+//! ([`crate::surrogate::queue::QueuePolicy`]), traffic maps to
+//! prefill/decode/idle state transitions *mechanistically*: per-request
+//! service time is `TTFT(n_in) + n_out × TBT`, so occupancy is derived from
+//! token counts rather than from a scalar rate alone.
+//!
+//! Determinism contract: [`token_arrivals`] consumes its RNG in exactly the
+//! same order as [`super::poisson::poisson_arrivals`] (one exponential gap,
+//! then one length draw per request), and the `Lognormal`/`Fixed`
+//! distributions delegate to [`LengthSampler`] — so a degenerate token
+//! workload (constant lengths) reproduces the poisson path's schedule
+//! bit-for-bit from the same RNG state. The differential tests in
+//! `rust/tests/token_integration.rs` pin this equivalence.
+
+use super::lengths::LengthSampler;
+use super::{Request, Schedule};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Hard caps mirroring [`LengthSampler::from_profile`], so a heavy-tailed
+/// draw cannot stall the queue simulator.
+const MAX_IN: u32 = 32_768;
+const MAX_OUT: u32 = 16_384;
+
+/// A configurable token-length distribution (the sweepable spec; the
+/// resolved sampler is [`TokenLengthSampler`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenLengths {
+    /// Independent lognormal prompt/output lengths, parameterized by their
+    /// medians (`exp(mu)`) and log-space sigmas.
+    Lognormal { in_median: f64, in_sigma: f64, out_median: f64, out_sigma: f64 },
+    /// Independent Pareto (heavy-tailed) lengths: minimum token count and
+    /// tail index per side. Smaller `alpha` ⇒ heavier tail.
+    Pareto { in_min: f64, in_alpha: f64, out_min: f64, out_alpha: f64 },
+    /// Degenerate constant lengths (the differential-test anchor).
+    Fixed { n_in: u32, n_out: u32 },
+    /// Empirical `(n_in, n_out)` pairs resampled uniformly from a recorded
+    /// request trace (JSON schedule or `t_s,n_in,n_out` CSV — see
+    /// [`super::replay`]). Resolved by the pipeline, which caches the
+    /// parsed trace per path.
+    Empirical { path: String },
+}
+
+/// `v` is a finite number ≥ `lo` (NaN and ±inf fail).
+fn at_least(v: f64, lo: f64) -> bool {
+    v.is_finite() && v >= lo
+}
+
+impl TokenLengths {
+    /// Validate the distribution parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            TokenLengths::Lognormal { in_median, in_sigma, out_median, out_sigma } => {
+                if !at_least(*in_median, 1.0) || !at_least(*out_median, 1.0) {
+                    return Err(format!(
+                        "token lengths: medians must be >= 1, got {in_median}/{out_median}"
+                    ));
+                }
+                if !at_least(*in_sigma, 0.0) || !at_least(*out_sigma, 0.0) {
+                    return Err("token lengths: sigmas must be >= 0".into());
+                }
+            }
+            TokenLengths::Pareto { in_min, in_alpha, out_min, out_alpha } => {
+                if !at_least(*in_min, 1.0) || !at_least(*out_min, 1.0) {
+                    return Err(format!(
+                        "token lengths: minima must be >= 1, got {in_min}/{out_min}"
+                    ));
+                }
+                if !(in_alpha.is_finite() && *in_alpha > 0.0)
+                    || !(out_alpha.is_finite() && *out_alpha > 0.0)
+                {
+                    return Err("token lengths: Pareto alpha must be > 0".into());
+                }
+            }
+            TokenLengths::Fixed { n_in, n_out } => {
+                if *n_in == 0 || *n_out == 0 {
+                    return Err("token lengths: fixed lengths must be >= 1".into());
+                }
+            }
+            TokenLengths::Empirical { path } => {
+                if path.is_empty() {
+                    return Err("token lengths: empirical path is empty".into());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Short human label (sweep summaries, reports). Comma-free so summary
+    /// CSV cells need no quoting.
+    pub fn label(&self) -> String {
+        match self {
+            TokenLengths::Lognormal { in_median, in_sigma, out_median, out_sigma } => {
+                format!("ln({in_median}±{in_sigma}/{out_median}±{out_sigma})")
+            }
+            TokenLengths::Pareto { in_min, in_alpha, out_min, out_alpha } => {
+                format!("pareto({in_min}^{in_alpha}/{out_min}^{out_alpha})")
+            }
+            TokenLengths::Fixed { n_in, n_out } => format!("fixed({n_in}/{n_out})"),
+            TokenLengths::Empirical { path } => format!("empirical({path})"),
+        }
+    }
+
+    /// Resolve to a sampler without touching the filesystem. `None` for
+    /// `Empirical`, whose trace the caller loads (and caches) itself —
+    /// pair it with [`TokenLengthSampler::empirical`].
+    pub fn sampler_local(&self) -> Option<TokenLengthSampler> {
+        match self {
+            TokenLengths::Lognormal { in_median, in_sigma, out_median, out_sigma } => {
+                let ls = LengthSampler::lognormal(*in_median, *in_sigma, *out_median, *out_sigma);
+                Some(TokenLengthSampler::Delegate(ls))
+            }
+            TokenLengths::Pareto { in_min, in_alpha, out_min, out_alpha } => {
+                Some(TokenLengthSampler::Pareto {
+                    in_min: *in_min,
+                    in_alpha: *in_alpha,
+                    out_min: *out_min,
+                    out_alpha: *out_alpha,
+                })
+            }
+            TokenLengths::Fixed { n_in, n_out } => {
+                Some(TokenLengthSampler::Delegate(LengthSampler::fixed(*n_in, *n_out)))
+            }
+            TokenLengths::Empirical { .. } => None,
+        }
+    }
+}
+
+/// A resolved token-length sampler.
+///
+/// `Lognormal`/`Fixed` delegate to [`LengthSampler`] so their RNG draw
+/// count and order match the rate-driven workloads exactly (the degenerate
+/// bit-identity contract); `Pareto` and `Empirical` consume their own draw
+/// patterns (two uniforms, resp. one index draw) — fine, because only the
+/// degenerate case claims cross-path equivalence.
+#[derive(Debug, Clone)]
+pub enum TokenLengthSampler {
+    /// Lognormal or fixed lengths via the shared [`LengthSampler`].
+    Delegate(LengthSampler),
+    /// Heavy-tailed lengths via inverse-CDF Pareto draws.
+    Pareto { in_min: f64, in_alpha: f64, out_min: f64, out_alpha: f64 },
+    /// Uniform resampling of a recorded trace's `(n_in, n_out)` pairs.
+    Empirical(Arc<Schedule>),
+}
+
+impl TokenLengthSampler {
+    /// Wrap a loaded empirical trace; errors on an empty one.
+    pub fn empirical(trace: Arc<Schedule>) -> Result<TokenLengthSampler, String> {
+        if trace.is_empty() {
+            return Err("token lengths: empirical trace has no requests".into());
+        }
+        Ok(TokenLengthSampler::Empirical(trace))
+    }
+
+    /// Draw one request's `(n_in, n_out)` (≥ 1 token each, capped).
+    pub fn sample(&self, rng: &mut Rng) -> (u32, u32) {
+        match self {
+            TokenLengthSampler::Delegate(ls) => ls.sample(rng),
+            TokenLengthSampler::Pareto { in_min, in_alpha, out_min, out_alpha } => {
+                let n_in = pareto_draw(rng, *in_min, *in_alpha, MAX_IN);
+                let n_out = pareto_draw(rng, *out_min, *out_alpha, MAX_OUT);
+                (n_in, n_out)
+            }
+            TokenLengthSampler::Empirical(trace) => {
+                let r = trace[rng.below(trace.len())];
+                (r.n_in.clamp(1, MAX_IN), r.n_out.clamp(1, MAX_OUT))
+            }
+        }
+    }
+}
+
+/// Inverse-CDF Pareto draw: `x_min · u^(-1/alpha)` with `u ∈ (0, 1]`.
+fn pareto_draw(rng: &mut Rng, x_min: f64, alpha: f64, cap: u32) -> u32 {
+    let u = 1.0 - rng.f64(); // (0, 1]: keeps the power finite
+    let x = (x_min * u.powf(-1.0 / alpha)).round();
+    (x.max(1.0) as u32).min(cap)
+}
+
+/// Generate Poisson(λ) arrivals whose lengths come from a token-level
+/// distribution. The generation loop mirrors
+/// [`super::poisson::poisson_arrivals`] exactly (same RNG consumption per
+/// request), which is what makes the degenerate token workload bit-identical
+/// to the poisson path.
+pub fn token_arrivals(
+    rate: f64,
+    horizon_s: f64,
+    lengths: &TokenLengthSampler,
+    rng: &mut Rng,
+) -> Schedule {
+    assert!(rate > 0.0, "token_arrivals: rate must be positive");
+    assert!(horizon_s > 0.0, "token_arrivals: horizon must be positive");
+    let mut out = Schedule::new();
+    let mut t = 0.0f64;
+    loop {
+        t += rng.exponential(rate);
+        if t >= horizon_s {
+            break;
+        }
+        let (n_in, n_out) = lengths.sample(rng);
+        out.push(Request { arrival_s: t, n_in, n_out });
+    }
+    out
+}
+
+/// Σ (n_in + n_out) over a schedule — the conserved quantity the token
+/// property tests pin: batching policy and window partition may reshape
+/// *when* tokens are served, never *how many*.
+pub fn total_tokens(schedule: &Schedule) -> u64 {
+    schedule.iter().map(|r| r.n_in as u64 + r.n_out as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check;
+    use crate::workload::{poisson_arrivals, validate};
+
+    #[test]
+    fn degenerate_token_schedule_matches_poisson_bitwise() {
+        // The tentpole anchor at the schedule level: constant lengths via
+        // the token path == the poisson path from the same RNG state.
+        let spec = TokenLengths::Fixed { n_in: 1, n_out: 1 };
+        let sampler = spec.sampler_local().unwrap();
+        let reference = LengthSampler::fixed(1, 1);
+        for seed in [0u64, 7, 42] {
+            let mut ra = Rng::new(seed).fork(0xA21);
+            let mut rb = Rng::new(seed).fork(0xA21);
+            let a = token_arrivals(1.5, 500.0, &sampler, &mut ra);
+            let b = poisson_arrivals(1.5, 500.0, &reference, &mut rb);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+                assert_eq!((x.n_in, x.n_out), (y.n_in, y.n_out));
+            }
+            // ...and the generators left their RNGs in the same state.
+            assert_eq!(ra.next_u64(), rb.next_u64());
+        }
+    }
+
+    #[test]
+    fn lognormal_spec_matches_length_sampler_medians() {
+        let spec = TokenLengths::Lognormal {
+            in_median: 128.0,
+            in_sigma: 0.6,
+            out_median: 256.0,
+            out_sigma: 0.4,
+        };
+        let TokenLengthSampler::Delegate(ls) = spec.sampler_local().unwrap() else {
+            panic!("lognormal resolves to a delegate sampler");
+        };
+        let (mi, mo) = ls.medians();
+        assert!((mi - 128.0).abs() < 1e-9 && (mo - 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pareto_draws_are_bounded_below_and_capped() {
+        let spec = TokenLengths::Pareto {
+            in_min: 64.0,
+            in_alpha: 1.2,
+            out_min: 16.0,
+            out_alpha: 0.3, // violently heavy tail: exercises the cap
+        };
+        let sampler = spec.sampler_local().unwrap();
+        let mut rng = Rng::new(9);
+        let mut capped = 0;
+        for _ in 0..5000 {
+            let (a, b) = sampler.sample(&mut rng);
+            assert!(a >= 64 && a <= MAX_IN);
+            assert!(b >= 16 && b <= MAX_OUT);
+            if b == MAX_OUT {
+                capped += 1;
+            }
+        }
+        assert!(capped > 0, "alpha 0.3 must hit the output cap");
+    }
+
+    #[test]
+    fn empirical_resamples_only_trace_pairs() {
+        let trace = Arc::new(vec![
+            Request { arrival_s: 0.0, n_in: 10, n_out: 3 },
+            Request { arrival_s: 1.0, n_in: 70, n_out: 9 },
+        ]);
+        let sampler = TokenLengthSampler::empirical(trace).unwrap();
+        let mut rng = Rng::new(4);
+        let mut seen = [false; 2];
+        for _ in 0..200 {
+            match sampler.sample(&mut rng) {
+                (10, 3) => seen[0] = true,
+                (70, 9) => seen[1] = true,
+                other => panic!("drew a pair not in the trace: {other:?}"),
+            }
+        }
+        assert!(seen[0] && seen[1]);
+        assert!(TokenLengthSampler::empirical(Arc::new(Vec::new())).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_parameters() {
+        assert!(TokenLengths::Fixed { n_in: 0, n_out: 1 }.validate().is_err());
+        let bad_median = TokenLengths::Lognormal {
+            in_median: 0.5,
+            in_sigma: 0.1,
+            out_median: 10.0,
+            out_sigma: 0.1,
+        };
+        assert!(bad_median.validate().is_err());
+        let bad_alpha =
+            TokenLengths::Pareto { in_min: 8.0, in_alpha: 0.0, out_min: 8.0, out_alpha: 1.0 };
+        assert!(bad_alpha.validate().is_err());
+        assert!(TokenLengths::Empirical { path: String::new() }.validate().is_err());
+        assert!(TokenLengths::Fixed { n_in: 1, n_out: 1 }.validate().is_ok());
+    }
+
+    #[test]
+    fn prop_token_schedules_valid_and_conserve_totals() {
+        check("token schedules valid", |rng| {
+            let rate = rng.range(0.1, 6.0);
+            let horizon = rng.range(10.0, 400.0);
+            let spec = match rng.below(3) {
+                0 => TokenLengths::Fixed {
+                    n_in: 1 + rng.below(512) as u32,
+                    n_out: 1 + rng.below(512) as u32,
+                },
+                1 => TokenLengths::Lognormal {
+                    in_median: rng.range(4.0, 2048.0),
+                    in_sigma: rng.range(0.0, 1.5),
+                    out_median: rng.range(4.0, 1024.0),
+                    out_sigma: rng.range(0.0, 1.5),
+                },
+                _ => TokenLengths::Pareto {
+                    in_min: rng.range(1.0, 256.0),
+                    in_alpha: rng.range(0.5, 3.0),
+                    out_min: rng.range(1.0, 128.0),
+                    out_alpha: rng.range(0.5, 3.0),
+                },
+            };
+            spec.validate().expect("generated specs are valid");
+            let sampler = spec.sampler_local().unwrap();
+            let mut local = rng.clone();
+            let s = token_arrivals(rate, horizon, &sampler, &mut local);
+            validate(&s, horizon).expect("valid schedule");
+            let direct: u64 = s.iter().map(|r| r.n_in as u64 + r.n_out as u64).sum();
+            assert_eq!(total_tokens(&s), direct);
+        });
+    }
+}

@@ -8,7 +8,8 @@ use powertrace_sim::aggregate::Topology;
 use powertrace_sim::config::{ScenarioSpec, WorkloadSpec};
 use powertrace_sim::scenarios::diff_summary_files;
 use powertrace_sim::site::{
-    run_site, run_site_sweep, FacilitySpec, OverlaySpec, SiteGrid, SiteOptions, SiteSpec,
+    run_site, run_site_sweep, FacilitySpec, OverlaySpec, SiteGrid, SiteOptions, SiteReport,
+    SiteSpec, TrainingSpec,
 };
 use powertrace_sim::testutil::synth_generator;
 use powertrace_sim::workload::TrafficMode;
@@ -35,6 +36,18 @@ fn test_opts() -> SiteOptions {
     }
 }
 
+/// The training archetype every mixed-class test composes: 60 s horizon
+/// matching `base_scenario`, 20 s compute/checkpoint period, 50 % duty.
+fn training_spec() -> TrainingSpec {
+    TrainingSpec {
+        horizon_s: 60.0,
+        base_w: 1.0e4,
+        amplitude_w: 5.0e4,
+        period_s: 20.0,
+        duty: 0.5,
+    }
+}
+
 fn small_site(id: &str, n_facilities: usize) -> SiteSpec {
     let mut spec = SiteSpec::staggered("itest", &base_scenario(id), n_facilities, 0.0);
     spec.utility_intervals_s = vec![15.0, 30.0];
@@ -51,7 +64,7 @@ fn single_facility_site_reproduces_the_plain_facility_path() {
 
     // The buffered facility path on the identical scenario (phase 0 +
     // Poisson ⇒ effective scenario == declared scenario).
-    let run = gen.facility(&spec.facilities[0].scenario, opts.dt_s, 0).unwrap();
+    let run = gen.facility(spec.facilities[0].scenario().unwrap(), opts.dt_s, 0).unwrap();
     let reference = run.facility_series();
     assert_eq!(site_series.len(), reference.len());
     for (t, (a, b)) in site_series.iter().zip(&reference).enumerate() {
@@ -103,12 +116,7 @@ fn site_peak_bounded_by_sum_of_facility_peaks() {
 fn cloned_facilities_with_zero_offsets_are_fully_coincident() {
     let (mut gen, ids) = synth_generator("site_clones", 8, 4, 1, 37).unwrap();
     let base = base_scenario(&ids[0]);
-    let fac = |name: &str| FacilitySpec {
-        name: name.into(),
-        phase_offset_s: 0.0,
-        scenario: base.clone(),
-        overlays: Vec::new(),
-    };
+    let fac = |name: &str| FacilitySpec::inference(name, 0.0, base.clone());
     let spec = SiteSpec {
         name: "clones".into(),
         nameplate_w: None,
@@ -407,6 +415,136 @@ fn facility_overlays_modulate_the_stream_the_site_composes() {
         assert!((f[1] - (f[2] + f[3])).abs() < 1e-3 * f[1].abs().max(1.0), "{line}");
         assert!(f[2] <= cap_w * (1.0 + 1e-6), "capped facility exceeds cap: {line}");
     }
+}
+
+#[test]
+fn training_only_site_is_the_exact_phase_shifted_step_function() {
+    let (mut gen, _ids) = synth_generator("site_train_only", 8, 4, 1, 73).unwrap();
+    let tspec = training_spec();
+    let spec = SiteSpec {
+        name: "train_site".into(),
+        nameplate_w: None,
+        utility_intervals_s: vec![15.0, 30.0],
+        facilities: vec![FacilitySpec::training("train0", 5.0, tspec.clone())],
+        overlays: Vec::new(),
+    };
+    let opts = test_opts();
+    let dir = std::env::temp_dir().join("powertrace_test_site_train_only");
+    let _ = std::fs::remove_dir_all(&dir);
+    let report = run_site(&mut gen, &spec, &opts, Some(&dir)).unwrap();
+    // The composed series IS the step function, shifted 5 s later,
+    // bit-for-bit (the step levels are exactly representable in f32).
+    let series = report.site_series.as_ref().expect("collect_series requested");
+    assert_eq!(series.len(), 240);
+    for (i, &w) in series.iter().enumerate() {
+        let want = tspec.power_at(i as f64 * opts.dt_s - 5.0) as f32;
+        assert_eq!(w.to_bits(), want.to_bits(), "step {i}");
+    }
+    // Training rows are serverless and seedless, with their own role.
+    let f = &report.facilities[0];
+    assert_eq!(f.role, "training");
+    assert_eq!(f.servers, 0);
+    assert_eq!(f.seed, None);
+    assert_eq!(report.site.stats.peak_w, 6.0e4);
+    assert_eq!(report.coincidence_factor, 1.0);
+    let summary = std::fs::read_to_string(dir.join("site_summary.csv")).unwrap();
+    let row = summary.lines().nth(1).unwrap();
+    assert!(row.starts_with("train0,training,0,,5,"), "{row}");
+    // The spec round-trips through the exported JSON.
+    assert_eq!(SiteSpec::load(&dir.join("site_spec.json")).unwrap(), spec);
+
+    // And the synthesizer honours the lockstep byte-identity contract:
+    // exports are identical across worker counts and window sizes.
+    let mut dirs = Vec::new();
+    for (i, &(workers, window_s)) in [(1usize, 7.0f64), (4, 13.0), (2, 60.0)].iter().enumerate() {
+        let d = std::env::temp_dir().join(format!("powertrace_test_site_train_only_{i}"));
+        let _ = std::fs::remove_dir_all(&d);
+        let opts = SiteOptions { workers, window_s, collect_series: false, ..test_opts() };
+        run_site(&mut gen, &spec, &opts, Some(&d)).unwrap();
+        dirs.push(d);
+    }
+    for name in ["site_load.csv", "site_summary.csv"] {
+        let a = std::fs::read(dirs[0].join(name)).unwrap();
+        assert!(!a.is_empty());
+        for d in &dirs[1..] {
+            assert_eq!(a, std::fs::read(d.join(name)).unwrap(), "{name}");
+        }
+    }
+}
+
+#[test]
+fn mixed_site_strictly_smooths_relative_training_ramps() {
+    let (mut gen, ids) = synth_generator("site_mixed", 8, 4, 1, 79).unwrap();
+    let train_only = SiteSpec {
+        name: "train_only".into(),
+        nameplate_w: None,
+        utility_intervals_s: vec![15.0, 30.0],
+        facilities: vec![FacilitySpec::training("train0", 0.0, training_spec())],
+        overlays: Vec::new(),
+    };
+    let mut mixed = train_only.clone();
+    mixed.name = "mixed".into();
+    mixed.facilities.push(FacilitySpec::inference("inf0", 0.0, base_scenario(&ids[0])));
+    let opts = test_opts();
+    let a = run_site(&mut gen, &train_only, &opts, None).unwrap();
+    let b = run_site(&mut gen, &mixed, &opts, None).unwrap();
+    assert_eq!(b.facilities.len(), 2);
+    assert_eq!(b.facilities[1].role, "facility");
+    // The inference class adds load between the training steps, so every
+    // utility interval's ramp *relative to the average load* strictly
+    // shrinks — the mixed-class smoothing the archetype exists to study.
+    assert!(b.site.stats.avg_w > a.site.stats.avg_w);
+    assert_eq!(a.site.ramps.len(), b.site.ramps.len());
+    for (ra, rb) in a.site.ramps.iter().zip(&b.site.ramps) {
+        assert_eq!(ra.interval_s, rb.interval_s);
+        assert!(ra.max_w > 0.0, "training step never crossed an interval boundary");
+        let rel_a = ra.max_w / a.site.stats.avg_w;
+        let rel_b = rb.max_w / b.site.stats.avg_w;
+        assert!(
+            rel_b < rel_a,
+            "interval {}s: mixed relative ramp {rel_b} !< training-only {rel_a}",
+            ra.interval_s
+        );
+    }
+    // Site energy stays the sum of the class energies.
+    let fac_energy: f64 = b.facilities.iter().map(|f| f.summary.stats.energy_kwh).sum();
+    assert!((b.site.stats.energy_kwh - fac_energy).abs() < 1e-6 * fac_energy.max(1.0));
+}
+
+#[test]
+fn site_sweep_training_rows_ignore_the_seed_axis() {
+    let (mut gen, ids) = synth_generator("site_train_sweep", 8, 4, 1, 83).unwrap();
+    let mut site = small_site(&ids[0], 1);
+    site.facilities.push(FacilitySpec::training("train0", 10.0, training_spec()));
+    let grid = SiteGrid {
+        name: "mix".into(),
+        base: site,
+        phase_spreads_h: vec![0.0],
+        seeds: vec![5, 9],
+        battery_kwh: Vec::new(),
+        cap_w: Vec::new(),
+        battery: None,
+    };
+    let dir = std::env::temp_dir().join("powertrace_test_site_train_sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = SiteOptions { collect_series: false, ..test_opts() };
+    let results = run_site_sweep(&mut gen, &grid, &opts, Some(&dir)).unwrap();
+    assert_eq!(results.len(), 2);
+    let fac = |r: &SiteReport, role: &str| {
+        r.facilities.iter().find(|f| f.role == role).map(|f| f.summary.stats).unwrap()
+    };
+    // The seed axis re-seeds the generated stream but leaves the
+    // deterministic training profile untouched.
+    assert_eq!(fac(&results[0].1, "training"), fac(&results[1].1, "training"));
+    assert_ne!(fac(&results[0].1, "facility"), fac(&results[1].1, "facility"));
+    // The whole mixed sweep reruns byte-identically.
+    let dir2 = std::env::temp_dir().join("powertrace_test_site_train_sweep_rerun");
+    let _ = std::fs::remove_dir_all(&dir2);
+    run_site_sweep(&mut gen, &grid, &opts, Some(&dir2)).unwrap();
+    assert_eq!(
+        std::fs::read(dir.join("site_sweep_summary.csv")).unwrap(),
+        std::fs::read(dir2.join("site_sweep_summary.csv")).unwrap()
+    );
 }
 
 #[test]

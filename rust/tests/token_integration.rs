@@ -1,0 +1,406 @@
+//! Integration: the token-level workload axis end-to-end — the
+//! differential layer the tentpole is locked down by.
+//!
+//! * Degenerate equivalence: a token workload with constant lengths and
+//!   batch 1 produces `OccupancyEvents` bit-identical to the poisson path
+//!   at the same rate, reconstructed over every streaming window
+//!   partition.
+//! * Conservation: total served tokens equal the sum of sampled lengths
+//!   no matter how the batching policy (slot cap × token budget) reshapes
+//!   the schedule into batches.
+//! * Layout invariance: facility bytes and streamed sweep exports are
+//!   identical across window sizes {7, 13, 60} s and worker counts
+//!   {1, 2, 4}.
+//! * Replay cache: empirical length distributions and replay workloads
+//!   sharing one trace path parse it exactly once, even under concurrent
+//!   facility runs.
+
+use powertrace_sim::aggregate::Topology;
+use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
+use powertrace_sim::scenarios::{run_sweep, run_sweep_to, GridDefaults, SweepGrid, SweepOptions};
+use powertrace_sim::surrogate::features::{features_interleaved_into, OccupancyEvents};
+use powertrace_sim::surrogate::queue::max_concurrency;
+use powertrace_sim::surrogate::{
+    simulate_queue, simulate_queue_policy, QueuePolicy, SurrogateParams,
+};
+use powertrace_sim::testutil::{check, synth_generator};
+use powertrace_sim::util::rng::Rng;
+use powertrace_sim::workload::{
+    poisson_arrivals, token_arrivals, total_tokens, LengthSampler, TokenLengths,
+};
+
+/// Deterministic surrogate (σ = 0 everywhere): TTFT depends only on
+/// `n_in`, and decode time is exactly `n_out × 0.01 s` — so intervals
+/// encode the sampled token counts, which the conservation test exploits.
+fn det_params() -> SurrogateParams {
+    SurrogateParams {
+        alpha0: -2.0,
+        alpha1: 0.7,
+        sigma_ttft: 0.0,
+        mu_log_tbt: (0.01f64).ln(),
+        sigma_log_tbt: 0.0,
+    }
+}
+
+/// Reconstruct interleaved `(A_t, ΔA_t)` rows window-by-window.
+fn fill_windowed(ev: &OccupancyEvents, n_steps: usize, window: usize) -> Vec<f32> {
+    let mut got = vec![0.0f32; 2 * n_steps];
+    let mut t0 = 0;
+    while t0 < n_steps {
+        let n = window.min(n_steps - t0);
+        ev.fill_interleaved(t0, n, &mut got[2 * t0..2 * (t0 + n)]);
+        t0 += n;
+    }
+    got
+}
+
+#[test]
+fn degenerate_token_occupancy_is_bitwise_the_poisson_path() {
+    // The tentpole's differential anchor, one level above the schedule
+    // unit test: constant-length token traffic at batch 1 must flow
+    // through queue → OccupancyEvents → windowed feature rows with the
+    // exact bits of the poisson path at the same rate — including the RNG
+    // states both paths leave behind.
+    let (horizon, dt) = (600.0, 0.25);
+    let n_steps = (horizon / dt) as usize;
+    let sampler = TokenLengths::Fixed { n_in: 256, n_out: 64 }.sampler_local().unwrap();
+    let reference = LengthSampler::fixed(256, 64);
+    for seed in [1u64, 9, 33] {
+        let mut ra = Rng::new(seed).fork(0xA21);
+        let mut rb = Rng::new(seed).fork(0xA21);
+        let tok = token_arrivals(2.0, horizon, &sampler, &mut ra);
+        let poi = poisson_arrivals(2.0, horizon, &reference, &mut rb);
+        assert_eq!(tok.len(), poi.len(), "seed {seed}");
+        assert!(!tok.is_empty(), "600 s at λ=2 cannot be empty");
+        assert_eq!(ra.next_u64(), rb.next_u64(), "schedule RNG state diverged");
+
+        let mut qa = Rng::new(seed).fork(0x5E21);
+        let mut qb = Rng::new(seed).fork(0x5E21);
+        let ivs_tok = simulate_queue_policy(&tok, &det_params(), QueuePolicy::slots(1), &mut qa);
+        let ivs_poi = simulate_queue(&poi, &det_params(), 1, &mut qb);
+        assert_eq!(qa.next_u64(), qb.next_u64(), "queue RNG state diverged");
+        assert_eq!(max_concurrency(&ivs_tok), 1, "batch 1 fully serializes");
+
+        let ev_tok = OccupancyEvents::from_intervals(&ivs_tok, n_steps, dt);
+        let ev_poi = OccupancyEvents::from_intervals(&ivs_poi, n_steps, dt);
+        assert_eq!(ev_tok.n_events(), ev_poi.n_events(), "seed {seed}");
+        let mut diff = Vec::new();
+        let mut rows_poi = Vec::new();
+        features_interleaved_into(&ivs_poi, n_steps, dt, &mut diff, &mut rows_poi);
+        // The streaming windows the engine actually uses (7/13/60 s).
+        for window_s in [7.0f64, 13.0, 60.0] {
+            let window = (window_s / dt) as usize;
+            let rows_tok = fill_windowed(&ev_tok, n_steps, window);
+            for (i, (a, b)) in rows_tok.iter().zip(&rows_poi).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "window {window_s}s element {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batching_policy_conserves_total_tokens() {
+    // Batching parameters reshape *when* tokens are served, never *how
+    // many*: with the σ=0 surrogate, each interval's decode time encodes
+    // its n_out exactly, so the served totals can be reconstructed from
+    // the queue output and compared against the sampled schedule.
+    check("token totals conserved", |rng| {
+        let rate = rng.range(0.5, 6.0);
+        let spec = match rng.below(3) {
+            0 => TokenLengths::Fixed {
+                n_in: 1 + rng.below(1024) as u32,
+                n_out: 1 + rng.below(256) as u32,
+            },
+            1 => TokenLengths::Lognormal {
+                in_median: rng.range(16.0, 1024.0),
+                in_sigma: rng.range(0.0, 1.2),
+                out_median: rng.range(8.0, 256.0),
+                out_sigma: rng.range(0.0, 1.2),
+            },
+            _ => TokenLengths::Pareto {
+                in_min: rng.range(8.0, 256.0),
+                in_alpha: rng.range(0.8, 3.0),
+                out_min: rng.range(4.0, 64.0),
+                out_alpha: rng.range(0.8, 3.0),
+            },
+        };
+        let sampler = spec.sampler_local().unwrap();
+        let mut local = rng.clone();
+        let sched = token_arrivals(rate, 120.0, &sampler, &mut local);
+        if sched.is_empty() {
+            return;
+        }
+        let expected = total_tokens(&sched);
+        let budget = 256 + rng.below(8192) as u64;
+        let policies = [
+            QueuePolicy::slots(1),
+            QueuePolicy::slots(1 + rng.below(64)),
+            QueuePolicy { max_batch: 1 + rng.below(16), token_budget: Some(budget) },
+            QueuePolicy { max_batch: 64, token_budget: Some(u64::MAX) },
+        ];
+        for pol in policies {
+            let mut qrng = local.clone();
+            let ivs = simulate_queue_policy(&sched, &det_params(), pol, &mut qrng);
+            assert_eq!(ivs.len(), sched.len(), "every request is served exactly once");
+            assert!(max_concurrency(&ivs) <= pol.max_batch);
+            let served: u64 = sched
+                .iter()
+                .zip(&ivs)
+                .map(|(r, iv)| {
+                    let n_out = (iv.decode_s / 0.01).round() as u64;
+                    assert_eq!(n_out, r.n_out as u64, "decode must encode n_out");
+                    r.n_in as u64 + n_out
+                })
+                .sum();
+            assert_eq!(served, expected, "policy {pol:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_token_occupancy_reconstructs_over_any_window_partition() {
+    // The streaming-resume contract on the token path: OccupancyEvents
+    // built from a budget-packed token schedule reproduce the full-horizon
+    // feature rows bit-for-bit over an arbitrary window partition.
+    check("token occupancy windows", |rng| {
+        let spec = TokenLengths::Lognormal {
+            in_median: rng.range(32.0, 512.0),
+            in_sigma: rng.range(0.0, 1.0),
+            out_median: rng.range(16.0, 128.0),
+            out_sigma: rng.range(0.0, 1.0),
+        };
+        let sampler = spec.sampler_local().unwrap();
+        let mut local = rng.clone();
+        let sched = token_arrivals(rng.range(0.5, 4.0), 60.0, &sampler, &mut local);
+        if sched.is_empty() {
+            return;
+        }
+        let pol = QueuePolicy { max_batch: 1 + rng.below(8), token_budget: Some(1024) };
+        let ivs = simulate_queue_policy(&sched, &det_params(), pol, &mut local);
+        let n_steps = 240; // 60 s at dt 0.25
+        let ev = OccupancyEvents::from_intervals(&ivs, n_steps, 0.25);
+        let mut diff = Vec::new();
+        let mut reference = Vec::new();
+        features_interleaved_into(&ivs, n_steps, 0.25, &mut diff, &mut reference);
+        let window = 1 + rng.below(n_steps);
+        let got = fill_windowed(&ev, n_steps, window);
+        for (i, (a, b)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "window {window} element {i}");
+        }
+    });
+}
+
+fn token_scenario(id: &str) -> ScenarioSpec {
+    let mut s = ScenarioSpec::default_poisson(id, 0.5);
+    s.topology = Topology { rows: 1, racks_per_row: 2, servers_per_rack: 2 };
+    s.workload = WorkloadSpec::Token {
+        rate: 0.8,
+        lengths: TokenLengths::Lognormal {
+            in_median: 256.0,
+            in_sigma: 0.8,
+            out_median: 64.0,
+            out_sigma: 0.6,
+        },
+        max_batch: 6,
+        token_budget: 2048,
+    };
+    s.horizon_s = 60.0;
+    s.seed = 11;
+    s
+}
+
+#[test]
+fn token_facility_bytes_are_invariant_across_worker_and_batch_layouts() {
+    // The token axis inherits the facility engine's determinism contract:
+    // worker count and classifier batching width never change the bytes.
+    let (mut gen, ids) = synth_generator("token_fac", 8, 4, 1, 41).unwrap();
+    let spec = token_scenario(&ids[0]);
+    let base = gen.facility(&spec, 0.25, 1).unwrap().facility_series();
+    assert_eq!(base.len(), 240);
+    for workers in [2usize, 4] {
+        for max_batch in [1usize, 3, 0] {
+            let run = gen.facility_shared_batched(&spec, 0.25, workers, max_batch).unwrap();
+            let series = run.facility_series();
+            assert_eq!(series.len(), base.len());
+            for (i, (a, b)) in series.iter().zip(&base).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "workers {workers} max_batch {max_batch} step {i}"
+                );
+            }
+        }
+    }
+}
+
+fn token_grid(id: &str) -> SweepGrid {
+    SweepGrid {
+        name: "token-axis".into(),
+        defaults: GridDefaults { horizon_s: 60.0, ..GridDefaults::default() },
+        workloads: vec![
+            WorkloadSpec::Token {
+                rate: 0.8,
+                lengths: TokenLengths::Fixed { n_in: 200, n_out: 40 },
+                max_batch: 4,
+                token_budget: 1024,
+            },
+            WorkloadSpec::Token {
+                rate: 0.8,
+                lengths: TokenLengths::Pareto {
+                    in_min: 64.0,
+                    in_alpha: 1.4,
+                    out_min: 16.0,
+                    out_alpha: 1.8,
+                },
+                max_batch: 4,
+                token_budget: 0,
+            },
+        ],
+        topologies: vec![Topology { rows: 1, racks_per_row: 2, servers_per_rack: 2 }],
+        fleets: vec![ServerAssignment::Uniform(id.to_string())],
+        seeds: vec![3],
+    }
+}
+
+#[test]
+fn token_sweep_exports_are_byte_identical_across_windows_and_workers() {
+    // Satellite contract: the token axis sweeps end-to-end, and the
+    // streamed exports match the buffered ones byte-for-byte for every
+    // window size {7, 13, 60} s × worker count {1, 2, 4}.
+    let (mut gen, ids) = synth_generator("token_sweep", 8, 4, 1, 47).unwrap();
+    let grid = token_grid(&ids[0]);
+    let dir_buf = std::env::temp_dir().join("powertrace_test_token_sweep_buffered");
+    let _ = std::fs::remove_dir_all(&dir_buf);
+    let buffered = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    buffered.write(&dir_buf).unwrap();
+    let cell_files =
+        ["scenario.json", "racks_1s.csv", "rows_15s.csv", "facility_300s.csv", "facility_900s.csv"];
+
+    for (li, (window_s, workers)) in
+        [(7.0f64, 1usize), (7.0, 4), (13.0, 2), (60.0, 1), (60.0, 4), (13.0, 1)]
+            .into_iter()
+            .enumerate()
+    {
+        let dir = std::env::temp_dir().join(format!("powertrace_test_token_sweep_{li}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = SweepOptions {
+            window_s,
+            scenario_workers: 1,
+            server_workers: workers,
+            ..SweepOptions::default()
+        };
+        let streamed = run_sweep_to(&mut gen, &grid, &opts, Some(&dir)).unwrap();
+        streamed.write(&dir).unwrap();
+        assert_eq!(
+            buffered.summary_csv(),
+            streamed.summary_csv(),
+            "window {window_s}s workers {workers}"
+        );
+        for c in &buffered.cells {
+            for name in cell_files {
+                let a = std::fs::read(dir_buf.join(&c.cell.id).join(name)).unwrap();
+                let b = std::fs::read(dir.join(&c.cell.id).join(name))
+                    .unwrap_or_else(|e| panic!("{}/{name}: {e}", c.cell.id));
+                assert_eq!(a, b, "window {window_s}s workers {workers} cell {} {name}", c.cell.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn token_grid_json_roundtrip_preserves_the_token_axis() {
+    // The sweep-grid file format carries the token axis losslessly, so a
+    // written grid is a complete reproduction recipe for a token sweep.
+    let grid = token_grid("some_config");
+    let dir = std::env::temp_dir().join("powertrace_test_token_grid");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("grid.json");
+    grid.save(&path).unwrap();
+    let back = SweepGrid::load(&path).unwrap();
+    assert_eq!(back, grid);
+    assert_eq!(back.workloads[0].kind(), "token");
+}
+
+#[test]
+fn empirical_trace_parses_once_under_concurrent_access() {
+    // The checked-in request trace drives both workload kinds that read
+    // traces — replay and token-empirical — concurrently over one
+    // generator; the per-path cache must hold exactly one parsed trace.
+    let path = "data/traces/sample_requests.csv";
+    assert!(std::path::Path::new(path).exists(), "fixture must be checked in");
+    let (mut gen, ids) = synth_generator("token_replay", 8, 4, 1, 53).unwrap();
+    let mut tok = ScenarioSpec::default_poisson(&ids[0], 0.5);
+    tok.topology = Topology { rows: 1, racks_per_row: 1, servers_per_rack: 2 };
+    tok.workload = WorkloadSpec::Token {
+        rate: 1.0,
+        lengths: TokenLengths::Empirical { path: path.to_string() },
+        max_batch: 4,
+        token_budget: 0,
+    };
+    tok.horizon_s = 60.0;
+    tok.seed = 7;
+    let mut rep = tok.clone();
+    rep.workload = WorkloadSpec::Replay { path: path.to_string(), offset_s: 0.0 };
+
+    gen.prepare_for(&tok).unwrap();
+    assert_eq!(gen.cached_replay_paths(), 0, "prepare must not touch traces");
+
+    // Empirical lengths resample only pairs present in the fixture
+    // (columns generated as 16 + s%1500 and 8 + s%400).
+    let sched = gen.schedule_for(&tok, 0, &Rng::new(tok.seed)).unwrap();
+    assert!(!sched.is_empty());
+    for r in &sched {
+        assert!((16..=1515).contains(&r.n_in), "n_in {} outside fixture range", r.n_in);
+        assert!((8..=407).contains(&r.n_out), "n_out {} outside fixture range", r.n_out);
+    }
+    assert_eq!(gen.cached_replay_paths(), 1);
+
+    let gen = gen; // freeze: concurrent runs borrow the generator shared
+    let series: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let spec = if i % 2 == 0 { tok.clone() } else { rep.clone() };
+                let gref = &gen;
+                s.spawn(move || gref.facility_shared(&spec, 0.25, 1).unwrap().facility_series())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // Same spec ⇒ same bytes, no matter which thread parsed the trace.
+    assert_eq!(series[0], series[2], "token-empirical runs diverged");
+    assert_eq!(series[1], series[3], "replay runs diverged");
+    assert_ne!(series[0], series[1], "distinct workload kinds must differ");
+    assert_eq!(gen.cached_replay_paths(), 1, "one path ⇒ one parsed trace");
+}
+
+#[test]
+fn replay_sweep_over_the_fixture_is_deterministic() {
+    // The replay axis sweeps end-to-end off the checked-in CSV, shares
+    // the parsed trace across every cell, and reproduces its summary
+    // byte-for-byte on a rerun.
+    let path = "data/traces/sample_requests.csv";
+    let (mut gen, ids) = synth_generator("replay_sweep_t", 8, 4, 1, 59).unwrap();
+    let grid = SweepGrid {
+        name: "replay-axis".into(),
+        defaults: GridDefaults { horizon_s: 60.0, ..GridDefaults::default() },
+        workloads: vec![
+            WorkloadSpec::Replay { path: path.to_string(), offset_s: 0.0 },
+            WorkloadSpec::Replay { path: path.to_string(), offset_s: 30.0 },
+            WorkloadSpec::Token {
+                rate: 1.0,
+                lengths: TokenLengths::Empirical { path: path.to_string() },
+                max_batch: 8,
+                token_budget: 4096,
+            },
+        ],
+        topologies: vec![Topology { rows: 1, racks_per_row: 1, servers_per_rack: 2 }],
+        fleets: vec![ServerAssignment::Uniform(ids[0].clone())],
+        seeds: vec![0, 1],
+    };
+    let opts = SweepOptions { scenario_workers: 2, ..SweepOptions::default() };
+    let a = run_sweep(&mut gen, &grid, &opts).unwrap();
+    assert_eq!(a.cells.len(), 6);
+    assert_eq!(gen.cached_replay_paths(), 1, "all six cells share one parsed trace");
+    let b = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    assert_eq!(a.summary_csv(), b.summary_csv(), "replay sweep must be reproducible");
+}
