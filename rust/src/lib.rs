@@ -73,6 +73,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod metrics;
+pub mod robust;
 pub mod runtime;
 pub mod scenarios;
 pub mod site;

@@ -284,11 +284,17 @@ fn print_facility_summary(
 
 fn cmd_site(args: &Args) -> Result<()> {
     use anyhow::Context as _;
-    use powertrace_sim::site::{run_site, run_site_sweep, SiteGrid, SiteOptions, SiteSpec};
+    use powertrace_sim::robust::{RetryPolicy, RunManifest};
+    use powertrace_sim::site::{
+        run_site, run_site_sweep, SiteGrid, SiteOptions, SiteSpec, SITE_SWEEP_MANIFEST,
+    };
     if args.has("help") {
         println!("{}", usage("site", "compose N facilities into a utility-facing site profile", &[
             Opt { name: "site", help: "site spec JSON (facilities + phase offsets + nameplate)", default: None },
             Opt { name: "grid", help: "site sweep JSON (phase spreads × seeds over a base site); overrides --site", default: None },
+            Opt { name: "resume", help: "resume a checkpointed site sweep from its manifest.json (or the directory holding it); done variants are restored, pending/failed ones re-run", default: None },
+            Opt { name: "max-retries", help: "retries per failing variant before quarantine (checkpointed sweeps)", default: Some("1") },
+            Opt { name: "cell-timeout", help: "soft wall-clock budget per variant attempt (s; 0 = unlimited, checked at window boundaries)", default: Some("0") },
             Opt { name: "overlay", help: "net-load overlay JSON: an ordered array of stages ({kind: cap|battery|pv, ...}) appended to the (base) site's site-level overlays", default: None },
             Opt { name: "dt", help: "generation sample interval (s)", default: Some("1") },
             Opt { name: "window", help: "lockstep generation window (s); memory is O(facilities × window)", default: Some("3600") },
@@ -296,22 +302,13 @@ fn cmd_site(args: &Args) -> Result<()> {
             Opt { name: "max-batch", help: "servers per batched classifier call (0 = auto)", default: Some("0") },
             Opt { name: "ramp", help: "headline ramp interval (s; clamped to horizon/2)", default: Some("900") },
             Opt { name: "load-interval", help: "site_load.csv export interval (s)", default: Some("60") },
-            Opt { name: "out", help: "output directory (site_load.csv + site_summary.csv)", default: None },
+            Opt { name: "out", help: "output directory (site_load.csv + site_summary.csv; with --grid, runs checkpointed with a manifest.json for --resume)", default: None },
             Opt { name: "backend", help: "classifier backend (windowed composition requires native)", default: Some("native") },
             Opt { name: "synth", help: "run on a synthetic random-weight artifact store (CI smokes / demos; no `make artifacts` needed)", default: None },
             Opt { name: "synth-seed", help: "seed of the synthetic artifact store (with --synth)", default: Some("7") },
         ]));
         return Ok(());
     }
-    let opts = SiteOptions {
-        dt_s: args.f64_or("dt", 1.0)?,
-        window_s: args.f64_or("window", 3600.0)?,
-        workers: args.usize_or("workers", 0)?,
-        max_batch: args.usize_or("max-batch", 0)?,
-        ramp_interval_s: args.f64_or("ramp", 900.0)?,
-        load_interval_s: args.f64_or("load-interval", 60.0)?,
-        collect_series: false,
-    };
     // `--overlay <list.json>`: ad-hoc site-level modulation — the stages
     // append to whatever the (base) spec already declares, so a committed
     // spec stays untouched while CI smokes and what-ifs bolt a battery or
@@ -325,14 +322,71 @@ fn cmd_site(args: &Args) -> Result<()> {
         }
         None => Vec::new(),
     };
-    let out = args.str_opt("out").map(std::path::PathBuf::from);
+    let policy = RetryPolicy {
+        max_retries: args.usize_or("max-retries", 1)? as u32,
+        cell_timeout_s: args.f64_or("cell-timeout", 0.0)?,
+    };
     let t0 = std::time::Instant::now();
+    if let Some(rpath) = args.str_opt("resume") {
+        anyhow::ensure!(
+            args.str_opt("grid").is_none() && args.str_opt("site").is_none(),
+            "--resume and --grid/--site are mutually exclusive (the manifest records its grid)"
+        );
+        anyhow::ensure!(
+            extra_overlays.is_empty(),
+            "--resume: --overlay would alter the recorded grid; the manifest already carries \
+             the overlays the sweep was launched with"
+        );
+        let mut mp = std::path::PathBuf::from(rpath);
+        if mp.is_dir() {
+            mp = mp.join(SITE_SWEEP_MANIFEST);
+        }
+        let m = RunManifest::load(&mp)?;
+        anyhow::ensure!(
+            m.kind == "site_sweep",
+            "--resume: {} is a '{}' manifest, not a site-sweep manifest \
+             (scenario sweeps resume via 'powertrace sweep --resume')",
+            mp.display(),
+            m.kind
+        );
+        let grid = SiteGrid::from_json(&m.grid).context("--resume: manifest grid")?;
+        let dir = mp.parent().unwrap_or(std::path::Path::new(".")).to_path_buf();
+        let opts = SiteOptions {
+            dt_s: args.f64_or("dt", m.options.f64_field("dt_s").unwrap_or(1.0))?,
+            window_s: args.f64_or("window", m.options.f64_field("window_s").unwrap_or(3600.0))?,
+            workers: args.usize_or("workers", 0)?,
+            max_batch: args.usize_or("max-batch", 0)?,
+            ramp_interval_s: args
+                .f64_or("ramp", m.options.f64_field("ramp_interval_s").unwrap_or(900.0))?,
+            load_interval_s: args
+                .f64_or("load-interval", m.options.f64_field("load_interval_s").unwrap_or(60.0))?,
+            collect_series: false,
+        };
+        let mut gen = site_generator(args, &grid.base.config_ids())?;
+        return run_site_sweep_ckpt(&mut gen, &grid, &opts, &dir, &policy, t0);
+    }
+    let opts = SiteOptions {
+        dt_s: args.f64_or("dt", 1.0)?,
+        window_s: args.f64_or("window", 3600.0)?,
+        workers: args.usize_or("workers", 0)?,
+        max_batch: args.usize_or("max-batch", 0)?,
+        ramp_interval_s: args.f64_or("ramp", 900.0)?,
+        load_interval_s: args.f64_or("load-interval", 60.0)?,
+        collect_series: false,
+    };
+    let out = args.str_opt("out").map(std::path::PathBuf::from);
     if let Some(gpath) = args.str_opt("grid") {
         let mut grid = SiteGrid::load(std::path::Path::new(gpath))?;
         grid.base.overlays.extend(extra_overlays);
         grid.validate()?;
         let mut gen = site_generator(args, &grid.base.config_ids())?;
-        let results = run_site_sweep(&mut gen, &grid, &opts, out.as_deref())?;
+        // With an output directory the sweep runs checkpointed (per-variant
+        // fault isolation + manifest for --resume); summary bytes match the
+        // plain path either way.
+        if let Some(dir) = &out {
+            return run_site_sweep_ckpt(&mut gen, &grid, &opts, dir, &policy, t0);
+        }
+        let results = run_site_sweep(&mut gen, &grid, &opts, None)?;
         println!(
             "site sweep '{}': {} variants × {} facilities ({:.1}s wall)\n",
             grid.name,
@@ -343,13 +397,6 @@ fn cmd_site(args: &Args) -> Result<()> {
         for (v, r) in &results {
             println!("-- {} ({}) --", v.id, v.label);
             print!("{}", r.summary_table());
-        }
-        if let Some(dir) = &out {
-            println!(
-                "\nwrote site_sweep_summary.csv + {} variant dir(s) under {}",
-                results.len(),
-                dir.display()
-            );
         }
         return Ok(());
     }
@@ -374,6 +421,47 @@ fn cmd_site(args: &Args) -> Result<()> {
     print!("{}", report.summary_table());
     if let Some(dir) = &out {
         println!("wrote site_load.csv + site_summary.csv under {}", dir.display());
+    }
+    Ok(())
+}
+
+/// Checkpointed site-sweep execution shared by `--grid --out` and
+/// `--resume`: run (or finish) the sweep, print per-variant tables for the
+/// variants executed this run, and fail with a resume hint if any variant
+/// was quarantined.
+fn run_site_sweep_ckpt(
+    gen: &mut Generator,
+    grid: &powertrace_sim::site::SiteGrid,
+    opts: &powertrace_sim::site::SiteOptions,
+    dir: &std::path::Path,
+    policy: &powertrace_sim::robust::RetryPolicy,
+    t0: std::time::Instant,
+) -> Result<()> {
+    let outcome = powertrace_sim::site::run_site_sweep_checkpointed(gen, grid, opts, dir, policy)?;
+    println!(
+        "site sweep '{}': {} variants ({} run, {} restored, {} quarantined) × {} facilities ({:.1}s wall)\n",
+        grid.name,
+        grid.n_variants(),
+        outcome.executed.len(),
+        outcome.restored,
+        outcome.failed.len(),
+        grid.base.facilities.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    for (v, r) in &outcome.executed {
+        println!("-- {} ({}) --", v.id, v.label);
+        print!("{}", r.summary_table());
+    }
+    println!("\nwrote site_sweep_summary.csv + manifest.json under {}", dir.display());
+    if !outcome.failed.is_empty() {
+        for q in &outcome.failed {
+            eprintln!("quarantined {} after {} attempt(s): {}", q.id, q.attempts, q.reason);
+        }
+        anyhow::bail!(
+            "{} variant(s) quarantined; fix the cause and re-run with --resume {}",
+            outcome.failed.len(),
+            outcome.manifest_path.display()
+        );
     }
     Ok(())
 }
@@ -431,32 +519,68 @@ fn cmd_diff(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
+    use anyhow::Context as _;
+    use powertrace_sim::robust::{RetryPolicy, RunManifest};
+    use powertrace_sim::scenarios::{run_sweep_checkpointed, SWEEP_MANIFEST};
     if args.has("help") {
         println!("{}", usage("sweep", "expand a scenario grid and run every cell", &[
             Opt { name: "grid", help: "sweep grid JSON (see scenarios module docs)", default: None },
             Opt { name: "dt", help: "generation sample interval (s)", default: Some("0.25") },
             Opt { name: "ramp", help: "ramp interval (s; clamped to horizon/2)", default: Some("900") },
-            Opt { name: "out", help: "output directory for CSV/JSON export", default: None },
+            Opt { name: "out", help: "output directory for CSV/JSON export (runs checkpointed: a manifest.json records per-cell progress for --resume)", default: None },
+            Opt { name: "resume", help: "resume a checkpointed sweep from its manifest.json (or the directory holding it); done cells are restored, pending/failed cells re-run", default: None },
+            Opt { name: "max-retries", help: "retries per failing cell before quarantine (checkpointed runs)", default: Some("1") },
+            Opt { name: "cell-timeout", help: "soft wall-clock budget per cell attempt (s; 0 = unlimited, checked at window boundaries)", default: Some("0") },
             Opt { name: "workers", help: "concurrent scenarios (0 = auto)", default: Some("0") },
             Opt { name: "server-workers", help: "threads per scenario (0 = auto)", default: Some("0") },
             Opt { name: "max-batch", help: "servers per batched classifier call (0 = auto, 1 = sequential)", default: Some("0") },
             Opt { name: "window", help: "streaming window (s; 0 = buffered). Cells generate window-by-window with O(racks × window) memory and CSVs stream into --out", default: Some("0") },
             Opt { name: "horizon", help: "horizon for the built-in demo grid (s)", default: Some("600") },
             Opt { name: "backend", help: "classifier backend (native|pjrt; streaming requires native)", default: Some("pjrt") },
-            Opt { name: "synth", help: "run on a synthetic random-weight artifact store (CI smokes / demos; no `make artifacts` needed; requires --grid)", default: None },
+            Opt { name: "synth", help: "run on a synthetic random-weight artifact store (CI smokes / demos; no `make artifacts` needed; requires --grid or --resume)", default: None },
             Opt { name: "synth-seed", help: "seed of the synthetic artifact store (with --synth)", default: Some("7") },
         ]));
         return Ok(());
     }
-    let loaded = match args.str_opt("grid") {
-        Some(path) => Some(SweepGrid::load(std::path::Path::new(path))?),
+    // Resolve the grid (and option defaults) before building a generator:
+    // a --resume run re-reads both from the manifest, so the resumed run
+    // is byte-compatible with the interrupted one by construction.
+    let resume = match args.str_opt("resume") {
+        Some(p) => {
+            anyhow::ensure!(
+                args.str_opt("grid").is_none(),
+                "--resume and --grid are mutually exclusive (the manifest records its grid)"
+            );
+            let mut mp = std::path::PathBuf::from(p);
+            if mp.is_dir() {
+                mp = mp.join(SWEEP_MANIFEST);
+            }
+            let m = RunManifest::load(&mp)?;
+            anyhow::ensure!(
+                m.kind == "sweep",
+                "--resume: {} is a '{}' manifest, not a scenario-sweep manifest \
+                 (site sweeps resume via 'powertrace site --resume')",
+                mp.display(),
+                m.kind
+            );
+            Some((m, mp))
+        }
         None => None,
+    };
+    let loaded = match (&resume, args.str_opt("grid")) {
+        (Some((m, _)), _) => {
+            Some(SweepGrid::from_json(&m.grid).context("--resume: manifest grid")?)
+        }
+        (None, Some(path)) => Some(SweepGrid::load(std::path::Path::new(path))?),
+        (None, None) => None,
     };
     let mut gen = if args.has("synth") {
         // Mirror `powertrace site --synth`: a deterministic random-weight
         // store over exactly the configs the grid references.
         let Some(grid) = loaded.as_ref() else {
-            anyhow::bail!("--synth requires --grid (the store is built from the grid's config ids)");
+            anyhow::bail!(
+                "--synth requires --grid or --resume (the store is built from the grid's config ids)"
+            );
         };
         let cat = Catalog::load_default()?;
         let root = powertrace_sim::testutil::synth_artifact_store(
@@ -491,18 +615,65 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             SweepGrid::example("demo", &ids, horizon)
         }
     };
+    // Explicit flags still win on resume, but the manifest supplies the
+    // defaults the run was launched with (a mismatched dt/ramp is then
+    // caught by the manifest's content-hash check).
+    let (mdt, mramp, mwindow) = match &resume {
+        Some((m, _)) => (
+            m.options.f64_field("dt_s").unwrap_or(0.25),
+            m.options.f64_field("ramp_interval_s").unwrap_or(900.0),
+            m.options.f64_field("window_s").unwrap_or(0.0),
+        ),
+        None => (0.25, 900.0, 0.0),
+    };
     let opts = SweepOptions {
-        dt_s: args.f64_or("dt", 0.25)?,
-        ramp_interval_s: args.f64_or("ramp", 900.0)?,
+        dt_s: args.f64_or("dt", mdt)?,
+        ramp_interval_s: args.f64_or("ramp", mramp)?,
         scenario_workers: args.usize_or("workers", 0)?,
         server_workers: args.usize_or("server-workers", 0)?,
         max_batch: args.usize_or("max-batch", 0)?,
-        window_s: args.f64_or("window", 0.0)?,
+        window_s: args.f64_or("window", mwindow)?,
         ..SweepOptions::default()
     };
     let t0 = std::time::Instant::now();
-    let stream_dir = args.str_opt("out").map(std::path::PathBuf::from);
-    let report = run_sweep_to(&mut gen, &grid, &opts, stream_dir.as_deref())?;
+    let out_dir = match &resume {
+        Some((_, mp)) => Some(mp.parent().unwrap_or(std::path::Path::new(".")).to_path_buf()),
+        None => args.str_opt("out").map(std::path::PathBuf::from),
+    };
+    // With an output directory the sweep runs checkpointed: per-cell fault
+    // isolation + a manifest for --resume. Summary bytes are identical to
+    // the plain path (same header, same rows, grid order).
+    if let Some(dir) = &out_dir {
+        let policy = RetryPolicy {
+            max_retries: args.usize_or("max-retries", 1)? as u32,
+            cell_timeout_s: args.f64_or("cell-timeout", 0.0)?,
+        };
+        let outcome = run_sweep_checkpointed(&mut gen, &grid, &opts, dir, &policy)?;
+        println!(
+            "sweep '{}': {} cells ({} run, {} restored, {} quarantined), dt={}s ({:.1}s wall)\n",
+            grid.name,
+            grid.n_cells(),
+            outcome.report.cells.len(),
+            outcome.restored,
+            outcome.failed.len(),
+            opts.dt_s,
+            t0.elapsed().as_secs_f64()
+        );
+        print!("{}", outcome.report.summary_table());
+        println!("\nwrote summary.csv + manifest.json under {}", dir.display());
+        if !outcome.failed.is_empty() {
+            for q in &outcome.failed {
+                eprintln!("quarantined {} after {} attempt(s): {}", q.id, q.attempts, q.reason);
+            }
+            anyhow::bail!(
+                "{} cell(s) quarantined; fix the cause and re-run with --resume {}",
+                outcome.failed.len(),
+                outcome.manifest_path.display()
+            );
+        }
+        return Ok(());
+    }
+    let report = run_sweep_to(&mut gen, &grid, &opts, None)?;
     println!(
         "sweep '{}': {} cells × {} servers/cell-max, dt={}s ({:.1}s wall)\n",
         grid.name,
@@ -512,11 +683,6 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         t0.elapsed().as_secs_f64()
     );
     print!("{}", report.summary_table());
-    if let Some(out) = args.str_opt("out") {
-        let dir = std::path::Path::new(out);
-        report.write(dir)?;
-        println!("\nwrote {} cells + summary.csv under {}", report.cells.len(), dir.display());
-    }
     Ok(())
 }
 

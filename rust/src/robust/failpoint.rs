@@ -1,0 +1,194 @@
+//! Deterministic failure injection behind the `failpoints` feature.
+//!
+//! Call sites are unconditional — [`hit`] compiles to an inlined `Ok(())`
+//! when the feature is off, so the production binary carries no registry,
+//! no locking, and no branch. With `--features failpoints`, each named
+//! site consults a process-wide registry of armed specs and can inject a
+//! panic, an error, a stall, or a hard process abort — the same failure
+//! menu the crash-safety layer must survive.
+//!
+//! # Sites
+//!
+//! | site                | tag                | threaded through                  |
+//! |---------------------|--------------------|-----------------------------------|
+//! | `sweep.cell`        | cell id            | start of every cell attempt       |
+//! | `sweep.cell.window` | cell id            | each streamed generation window   |
+//! | `export.write`      | export file name   | streaming + buffered CSV writers  |
+//! | `site.variant`      | variant id         | start of every site-variant attempt |
+//! | `site.window`       | site name          | each lockstep composition window  |
+//!
+//! # Arming
+//!
+//! Programmatic (tests): [`arm`] / [`clear_all`]. Process-level (CI kill
+//! smokes): the `POWERTRACE_FAILPOINTS` environment variable, parsed on
+//! first hit — `;`-separated `site[@tag]=action[*count]` clauses where
+//! `action` is `panic` | `error` | `abort` | `sleep-<ms>`, `tag` is a
+//! substring match on the call-site tag (empty = any), and `*count`
+//! bounds the number of firings (absent = unlimited). Example:
+//!
+//! ```text
+//! POWERTRACE_FAILPOINTS='sweep.cell@w1=abort;export.write=error*1'
+//! ```
+//!
+//! Matching and counting are deterministic: specs fire in armed order,
+//! and all injection sites sit on deterministic execution paths — the
+//! n-th window of cell `w1-t0-f0-s1` is the same work on every run.
+
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn hit(_site: &str, _tag: &str) -> anyhow::Result<()> {
+    Ok(())
+}
+
+#[cfg(feature = "failpoints")]
+pub use imp::{arm, clear_all, hit, parse_specs, FailAction, FailSpec};
+
+#[cfg(feature = "failpoints")]
+mod imp {
+    use anyhow::{bail, Context, Result};
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// What an armed failpoint does when it fires.
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum FailAction {
+        /// `panic!` at the call site (exercises `catch_unwind` isolation).
+        Panic,
+        /// Return an `anyhow` error from the call site.
+        Error,
+        /// `std::process::abort()` — the CI kill-and-resume smoke.
+        Abort,
+        /// Sleep this many milliseconds (exercises the soft deadline).
+        SleepMs(u64),
+    }
+
+    /// One armed injection spec.
+    #[derive(Debug, Clone)]
+    pub struct FailSpec {
+        /// Site name, matched exactly.
+        pub site: String,
+        /// Substring the call-site tag must contain (empty = any tag).
+        pub tag: String,
+        pub action: FailAction,
+        /// Remaining firings; `None` = unlimited.
+        pub remaining: Option<u32>,
+    }
+
+    fn registry() -> MutexGuard<'static, Vec<FailSpec>> {
+        static REG: OnceLock<Mutex<Vec<FailSpec>>> = OnceLock::new();
+        let m = REG.get_or_init(|| {
+            let specs = match std::env::var("POWERTRACE_FAILPOINTS") {
+                Ok(s) => parse_specs(&s).expect("POWERTRACE_FAILPOINTS"),
+                Err(_) => Vec::new(),
+            };
+            Mutex::new(specs)
+        });
+        // A panic injected while the lock is held is impossible (the lock
+        // is released before any action runs), but a panicking *test*
+        // poisoning the mutex must not cascade into later tests.
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Arm one spec (appended after any env-armed specs).
+    pub fn arm(spec: FailSpec) {
+        registry().push(spec);
+    }
+
+    /// Disarm everything (tests call this on entry and exit).
+    pub fn clear_all() {
+        registry().clear();
+    }
+
+    /// Parse a `POWERTRACE_FAILPOINTS` value: `;`-separated
+    /// `site[@tag]=action[*count]` clauses.
+    pub fn parse_specs(s: &str) -> Result<Vec<FailSpec>> {
+        let mut out = Vec::new();
+        for part in s.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (lhs, rhs) = part
+                .split_once('=')
+                .with_context(|| format!("failpoint '{part}': expected site[@tag]=action"))?;
+            let (site, tag) = match lhs.split_once('@') {
+                Some((s, t)) => (s, t),
+                None => (lhs, ""),
+            };
+            let (act, remaining) = match rhs.split_once('*') {
+                Some((a, n)) => (
+                    a,
+                    Some(n.parse::<u32>().with_context(|| format!("failpoint '{part}': count"))?),
+                ),
+                None => (rhs, None),
+            };
+            let action = match act.strip_prefix("sleep-") {
+                Some(ms) => FailAction::SleepMs(
+                    ms.parse().with_context(|| format!("failpoint '{part}': sleep ms"))?,
+                ),
+                None => match act {
+                    "panic" => FailAction::Panic,
+                    "error" => FailAction::Error,
+                    "abort" => FailAction::Abort,
+                    other => bail!("failpoint '{part}': unknown action '{other}'"),
+                },
+            };
+            out.push(FailSpec { site: site.to_string(), tag: tag.to_string(), action, remaining });
+        }
+        Ok(out)
+    }
+
+    /// The instrumented call site: fire the first matching armed spec.
+    pub fn hit(site: &str, tag: &str) -> Result<()> {
+        let action = {
+            let mut reg = registry();
+            let mut found = None;
+            for spec in reg.iter_mut() {
+                if spec.site != site || !tag.contains(spec.tag.as_str()) {
+                    continue;
+                }
+                if spec.remaining == Some(0) {
+                    continue;
+                }
+                if let Some(n) = spec.remaining.as_mut() {
+                    *n -= 1;
+                }
+                found = Some(spec.action.clone());
+                break;
+            }
+            found
+        };
+        match action {
+            None => Ok(()),
+            Some(FailAction::SleepMs(ms)) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(())
+            }
+            Some(FailAction::Error) => bail!("failpoint '{site}' ({tag}): injected error"),
+            Some(FailAction::Panic) => panic!("failpoint '{site}' ({tag}): injected panic"),
+            Some(FailAction::Abort) => {
+                eprintln!("failpoint '{site}' ({tag}): aborting process");
+                std::process::abort();
+            }
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn parses_the_clause_grammar() {
+            let specs =
+                parse_specs("sweep.cell@w1=abort; export.write=error*1;x=sleep-250").unwrap();
+            assert_eq!(specs.len(), 3);
+            assert_eq!(specs[0].site, "sweep.cell");
+            assert_eq!(specs[0].tag, "w1");
+            assert_eq!(specs[0].action, FailAction::Abort);
+            assert_eq!(specs[0].remaining, None);
+            assert_eq!(specs[1].tag, "");
+            assert_eq!(specs[1].action, FailAction::Error);
+            assert_eq!(specs[1].remaining, Some(1));
+            assert_eq!(specs[2].action, FailAction::SleepMs(250));
+            assert!(parse_specs("nope").is_err());
+            assert!(parse_specs("a=explode").is_err());
+            assert!(parse_specs("a=error*x").is_err());
+            assert!(parse_specs("").unwrap().is_empty());
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Atomic filesystem primitives for durable exports.
+//!
+//! Every artifact a reader might consume (summary CSVs, per-cell series,
+//! manifests, spec JSON) is staged to a `.tmp` sibling and renamed into
+//! place. A rename within one directory is atomic on POSIX, so a crash
+//! mid-write leaves either the previous bytes or a `.tmp` that resume
+//! logic and readers ignore — never a truncated file with a valid header.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The staging sibling a writer targets before [`persist`]:
+/// `summary.csv` → `summary.csv.tmp`.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Atomically move a staged temp file into its final place.
+pub fn persist(tmp: &Path, path: &Path) -> Result<()> {
+    std::fs::rename(tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))
+}
+
+/// Write `bytes` to `path` atomically (stage to `<path>.tmp`, rename),
+/// creating parent directories. The `export.write` failpoint fires first,
+/// tagged with the file name, so the injection harness can fail any
+/// buffered export path on demand.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+    super::failpoint::hit("export.write", &name)?;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("mkdir {}", parent.display()))?;
+        }
+    }
+    let tmp = tmp_path(path);
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    persist(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tmp_path_appends_suffix() {
+        assert_eq!(tmp_path(Path::new("/a/b/summary.csv")), Path::new("/a/b/summary.csv.tmp"));
+        assert_eq!(tmp_path(Path::new("manifest.json")), Path::new("manifest.json.tmp"));
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("powertrace_test_fsx");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("out.csv");
+        atomic_write(&p, b"a,b\n1,2\n").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"a,b\n1,2\n");
+        assert!(!tmp_path(&p).exists(), "staging file must be renamed away");
+        // Overwrite is atomic too: the old bytes are fully replaced.
+        atomic_write(&p, b"a,b\n3,4\n").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"a,b\n3,4\n");
+    }
+}

@@ -1,0 +1,178 @@
+//! Per-cell fault isolation: bounded retries under `catch_unwind` plus a
+//! soft wall-clock budget.
+//!
+//! Cells are pure functions of `(spec, seed)`, so re-running one is
+//! byte-equivalent to the first attempt — which makes retry a sound
+//! response to *transient* failures (an exhausted file descriptor, a
+//! flaky filesystem) while a *deterministic* failure simply fails every
+//! attempt and is quarantined with its final reason. Nothing here spawns
+//! threads: isolation composes with
+//! [`parallel_map_results`](crate::util::threadpool::parallel_map_results),
+//! which already keeps one item's panic from tearing down the pool.
+
+use anyhow::{bail, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Instant;
+
+/// Retry / timeout policy for one checkpointed run.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Re-runs after the first attempt (total attempts = `1 + max_retries`).
+    pub max_retries: u32,
+    /// Soft wall-clock budget per attempt, in seconds (0 = unlimited).
+    /// Checked cooperatively at window boundaries in streaming mode;
+    /// buffered cells cannot be preempted mid-generation, so the budget
+    /// only applies where the engine yields. Off by default — wall-clock
+    /// is nondeterministic, and a loaded CI box must not quarantine
+    /// healthy cells.
+    pub cell_timeout_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 1, cell_timeout_s: 0.0 }
+    }
+}
+
+/// One attempt's soft deadline, checked cooperatively by the running cell.
+pub struct Deadline {
+    start: Instant,
+    budget_s: f64,
+}
+
+impl Deadline {
+    pub fn start(budget_s: f64) -> Deadline {
+        Deadline { start: Instant::now(), budget_s }
+    }
+
+    pub fn unbounded() -> Deadline {
+        Deadline::start(0.0)
+    }
+
+    /// `Err` once the soft budget is exhausted (never fails for budget 0).
+    pub fn check(&self) -> Result<()> {
+        if self.budget_s > 0.0 {
+            let elapsed = self.start.elapsed().as_secs_f64();
+            if elapsed > self.budget_s {
+                bail!("soft wall-clock budget exceeded ({elapsed:.2}s > {}s)", self.budget_s);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of an isolated, retried execution.
+pub enum Isolated<T> {
+    /// Some attempt succeeded; `attempts` counts every attempt ever made,
+    /// including `prior_attempts` carried over from previous runs.
+    Done { value: T, attempts: u32 },
+    /// Every attempt failed; `reason` is the last failure (an error chain
+    /// or a panic payload).
+    Failed { attempts: u32, reason: String },
+}
+
+/// Run `f` under `catch_unwind` with the policy's bounded retries. Each
+/// attempt gets a fresh [`Deadline`]; panics are captured as failure
+/// reasons instead of unwinding into the caller. `prior_attempts` seeds
+/// the cumulative attempt count (a resumed run keeps counting where the
+/// crashed run's manifest left off).
+pub fn run_isolated<T>(
+    policy: &RetryPolicy,
+    prior_attempts: u32,
+    f: impl Fn(&Deadline) -> Result<T>,
+) -> Isolated<T> {
+    let mut attempts = prior_attempts;
+    let mut reason = String::new();
+    for _ in 0..policy.max_retries.saturating_add(1) {
+        attempts += 1;
+        let deadline = Deadline::start(policy.cell_timeout_s);
+        match catch_unwind(AssertUnwindSafe(|| f(&deadline))) {
+            Ok(Ok(v)) => return Isolated::Done { value: v, attempts },
+            Ok(Err(e)) => reason = format!("{e:#}"),
+            Err(p) => {
+                reason = format!("panicked: {}", crate::util::threadpool::panic_message(&*p));
+            }
+        }
+    }
+    Isolated::Failed { attempts, reason }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn succeeds_first_attempt() {
+        match run_isolated(&RetryPolicy::default(), 0, |_| Ok(42)) {
+            Isolated::Done { value, attempts } => {
+                assert_eq!(value, 42);
+                assert_eq!(attempts, 1);
+            }
+            Isolated::Failed { .. } => panic!("expected success"),
+        }
+    }
+
+    #[test]
+    fn retries_deterministic_error_then_quarantines() {
+        let calls = AtomicU32::new(0);
+        let policy = RetryPolicy { max_retries: 2, cell_timeout_s: 0.0 };
+        match run_isolated(&policy, 0, |_| -> Result<()> {
+            calls.fetch_add(1, Ordering::Relaxed);
+            bail!("no such trace file")
+        }) {
+            Isolated::Failed { attempts, reason } => {
+                assert_eq!(attempts, 3);
+                assert!(reason.contains("no such trace file"), "{reason}");
+            }
+            Isolated::Done { .. } => panic!("expected failure"),
+        }
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn captures_panics_and_recovers_on_retry() {
+        let calls = AtomicU32::new(0);
+        let policy = RetryPolicy { max_retries: 1, cell_timeout_s: 0.0 };
+        // First attempt panics, the retry succeeds — and prior attempts
+        // from a previous run accumulate into the reported count.
+        match run_isolated(&policy, 2, |_| {
+            if calls.fetch_add(1, Ordering::Relaxed) == 0 {
+                panic!("transient");
+            }
+            Ok(7)
+        }) {
+            Isolated::Done { value, attempts } => {
+                assert_eq!(value, 7);
+                assert_eq!(attempts, 4);
+            }
+            Isolated::Failed { reason, .. } => panic!("expected recovery, got: {reason}"),
+        }
+    }
+
+    #[test]
+    fn deadline_trips_only_with_budget() {
+        let d = Deadline::unbounded();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        d.check().unwrap();
+        let d = Deadline::start(0.001);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let e = d.check().unwrap_err();
+        assert!(format!("{e}").contains("budget exceeded"));
+    }
+
+    #[test]
+    fn timeout_failures_retry_and_quarantine() {
+        let policy = RetryPolicy { max_retries: 1, cell_timeout_s: 0.001 };
+        match run_isolated(&policy, 0, |d| -> Result<()> {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            d.check()
+        }) {
+            Isolated::Failed { attempts, reason } => {
+                assert_eq!(attempts, 2);
+                assert!(reason.contains("budget exceeded"), "{reason}");
+            }
+            Isolated::Done { .. } => panic!("expected timeout"),
+        }
+    }
+}

@@ -1,0 +1,514 @@
+//! The per-run manifest: durable, atomically-rewritten progress state for
+//! checkpointed sweep execution.
+//!
+//! A manifest records everything a resumed process needs: the run kind,
+//! the full grid JSON (so `--resume <manifest>` needs no `--grid`), the
+//! launch options, a content hash binding the manifest to exactly that
+//! grid + byte-relevant options, the summary header, and one entry per
+//! cell. `done` cells carry their summary row **verbatim** plus the sizes
+//! of their export files; `failed` cells carry the cumulative attempt
+//! count and the last failure reason; everything else is `pending`.
+//!
+//! Resume correctness rests on two properties: cells are pure functions
+//! of `(spec, seed)` (re-running a non-`done` cell reproduces exactly the
+//! bytes the crashed run would have written), and `done` rows are
+//! replayed from the manifest rather than recomputed — so the assembled
+//! summary is byte-identical to an uninterrupted run by construction.
+//! [`RunManifest::reconcile_exports`] closes the remaining gap: a `done`
+//! cell whose export files are missing or mis-sized (the crash landed
+//! between the cell's exports and the manifest rewrite never happens —
+//! the manifest is written *after* the exports — but a user may delete
+//! files) is demoted back to `pending` and re-run.
+
+use super::fsx;
+use crate::util::json::{self, Json};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Schema version, bumped on incompatible manifest changes.
+pub const MANIFEST_VERSION: usize = 1;
+
+/// 64-bit FNV-1a — dependency-free, stable across platforms and runs.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The identity hash binding a manifest to one `(kind, grid, options)`
+/// triple. `identity` holds only the options that change output bytes
+/// (dt, ramp interval, export scales) — worker counts, batch widths, and
+/// window sizes are byte-invariant by contract and deliberately excluded,
+/// so a sweep can resume with a different parallel layout.
+pub fn content_hash(kind: &str, grid: &Json, identity: &Json) -> String {
+    let canonical = json::to_string(&json::obj([
+        ("kind", Json::Str(kind.to_string())),
+        ("grid", grid.clone()),
+        ("identity", identity.clone()),
+    ]));
+    format!("fnv1a:{:016x}", fnv1a64(canonical.as_bytes()))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellStatus {
+    Pending,
+    Done,
+    Failed,
+}
+
+impl CellStatus {
+    fn as_str(self) -> &'static str {
+        match self {
+            CellStatus::Pending => "pending",
+            CellStatus::Done => "done",
+            CellStatus::Failed => "failed",
+        }
+    }
+
+    fn from_str(s: &str) -> Result<CellStatus> {
+        Ok(match s {
+            "pending" => CellStatus::Pending,
+            "done" => CellStatus::Done,
+            "failed" => CellStatus::Failed,
+            other => bail!("unknown cell status '{other}'"),
+        })
+    }
+}
+
+/// One export file a `done` cell wrote, path relative to the run
+/// directory; the recorded size lets resume detect deleted or truncated
+/// artifacts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExportRecord {
+    pub path: String,
+    pub bytes: u64,
+}
+
+/// One cell's durable state.
+#[derive(Debug, Clone)]
+pub struct CellState {
+    pub status: CellStatus,
+    /// Cumulative attempts across every run of this manifest.
+    pub attempts: u32,
+    /// The summary row (with trailing newline), recorded verbatim at
+    /// completion and replayed verbatim on resume.
+    pub row: Option<String>,
+    /// Last failure reason (`failed` cells).
+    pub reason: Option<String>,
+    pub exports: Vec<ExportRecord>,
+}
+
+impl CellState {
+    fn pending() -> CellState {
+        CellState {
+            status: CellStatus::Pending,
+            attempts: 0,
+            row: None,
+            reason: None,
+            exports: Vec::new(),
+        }
+    }
+}
+
+/// The durable run manifest. See the module docs for the schema contract.
+#[derive(Debug, Clone)]
+pub struct RunManifest {
+    /// `"sweep"` or `"site_sweep"`.
+    pub kind: String,
+    /// Grid name (reporting only).
+    pub name: String,
+    /// [`content_hash`] of `(kind, grid, identity-options)`.
+    pub grid_hash: String,
+    /// The full grid JSON — resume reloads the grid from here.
+    pub grid: Json,
+    /// The options the run was launched with (resume CLI defaults).
+    pub options: Json,
+    /// The summary header line(s), recorded once at first completion.
+    pub header: Option<String>,
+    pub cells: BTreeMap<String, CellState>,
+}
+
+impl RunManifest {
+    /// A fresh all-`pending` manifest over the expanded cell ids.
+    pub fn new(
+        kind: &str,
+        name: &str,
+        grid_hash: String,
+        grid: Json,
+        options: Json,
+        ids: &[String],
+    ) -> RunManifest {
+        RunManifest {
+            kind: kind.to_string(),
+            name: name.to_string(),
+            grid_hash,
+            grid,
+            options,
+            header: None,
+            cells: ids.iter().map(|id| (id.clone(), CellState::pending())).collect(),
+        }
+    }
+
+    /// Refuse to resume against the wrong grid/options/cell set — the
+    /// summary a mismatched resume would assemble could never equal the
+    /// uninterrupted run's.
+    pub fn ensure_matches(&self, kind: &str, grid_hash: &str, ids: &[String]) -> Result<()> {
+        ensure!(self.kind == kind, "manifest is a '{}' run, not a '{kind}' run", self.kind);
+        ensure!(
+            self.grid_hash == grid_hash,
+            "manifest hash {} does not match this grid + options ({grid_hash}): \
+             the manifest was created from a different grid or with different \
+             dt/ramp/scale options",
+            self.grid_hash
+        );
+        ensure!(
+            self.cells.len() == ids.len() && ids.iter().all(|id| self.cells.contains_key(id)),
+            "manifest cell set does not match the grid expansion ({} vs {} cells)",
+            self.cells.len(),
+            ids.len()
+        );
+        Ok(())
+    }
+
+    /// Demote `done` cells whose recorded exports are missing or mis-sized
+    /// under `root` back to `pending` (they re-run on resume). Returns the
+    /// number of demoted cells.
+    pub fn reconcile_exports(&mut self, root: &Path) -> usize {
+        let mut demoted = 0;
+        for state in self.cells.values_mut() {
+            if state.status != CellStatus::Done {
+                continue;
+            }
+            let intact = state.row.is_some()
+                && state.exports.iter().all(|e| {
+                    std::fs::metadata(root.join(&e.path))
+                        .map(|m| m.len() == e.bytes)
+                        .unwrap_or(false)
+                });
+            if !intact {
+                let attempts = state.attempts;
+                *state = CellState::pending();
+                state.attempts = attempts;
+                demoted += 1;
+            }
+        }
+        demoted
+    }
+
+    pub fn is_done(&self, id: &str) -> bool {
+        self.cells.get(id).map(|c| c.status == CellStatus::Done).unwrap_or(false)
+    }
+
+    /// Cumulative attempts recorded for `id` (0 for unknown cells).
+    pub fn attempts(&self, id: &str) -> u32 {
+        self.cells.get(id).map(|c| c.attempts).unwrap_or(0)
+    }
+
+    /// The recorded summary row of a `done` cell.
+    pub fn row(&self, id: &str) -> Option<&str> {
+        self.cells.get(id).and_then(|c| match c.status {
+            CellStatus::Done => c.row.as_deref(),
+            _ => None,
+        })
+    }
+
+    pub fn done_count(&self) -> usize {
+        self.cells.values().filter(|c| c.status == CellStatus::Done).count()
+    }
+
+    pub fn mark_done(&mut self, id: &str, attempts: u32, row: String, exports: Vec<ExportRecord>) {
+        if let Some(c) = self.cells.get_mut(id) {
+            *c = CellState {
+                status: CellStatus::Done,
+                attempts,
+                row: Some(row),
+                reason: None,
+                exports,
+            };
+        }
+    }
+
+    pub fn mark_failed(&mut self, id: &str, attempts: u32, reason: String) {
+        if let Some(c) = self.cells.get_mut(id) {
+            *c = CellState {
+                status: CellStatus::Failed,
+                attempts,
+                row: None,
+                reason: Some(reason),
+                exports: Vec::new(),
+            };
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let cells: BTreeMap<String, Json> = self
+            .cells
+            .iter()
+            .map(|(id, c)| {
+                let mut fields = vec![
+                    ("status", Json::Str(c.status.as_str().to_string())),
+                    ("attempts", Json::Num(c.attempts as f64)),
+                ];
+                if let Some(row) = &c.row {
+                    fields.push(("row", Json::Str(row.clone())));
+                }
+                if let Some(reason) = &c.reason {
+                    fields.push(("reason", Json::Str(reason.clone())));
+                }
+                if !c.exports.is_empty() {
+                    fields.push((
+                        "exports",
+                        Json::Arr(
+                            c.exports
+                                .iter()
+                                .map(|e| {
+                                    json::obj([
+                                        ("path", Json::Str(e.path.clone())),
+                                        ("bytes", Json::Num(e.bytes as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
+                }
+                (id.clone(), json::obj(fields))
+            })
+            .collect();
+        let mut fields = vec![
+            ("version", Json::Num(MANIFEST_VERSION as f64)),
+            ("kind", Json::Str(self.kind.clone())),
+            ("name", Json::Str(self.name.clone())),
+            ("grid_hash", Json::Str(self.grid_hash.clone())),
+            ("grid", self.grid.clone()),
+            ("options", self.options.clone()),
+        ];
+        if let Some(h) = &self.header {
+            fields.push(("header", Json::Str(h.clone())));
+        }
+        fields.push(("cells", Json::Obj(cells)));
+        json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunManifest> {
+        let version = v.usize_field("version").map_err(anyhow::Error::from)?;
+        ensure!(
+            version == MANIFEST_VERSION,
+            "manifest version {version} unsupported (expected {MANIFEST_VERSION})"
+        );
+        let mut cells = BTreeMap::new();
+        let Json::Obj(raw) = v.get("cells").map_err(anyhow::Error::from)? else {
+            bail!("manifest 'cells' must be an object");
+        };
+        for (id, c) in raw {
+            let status =
+                CellStatus::from_str(&c.str_field("status").map_err(anyhow::Error::from)?)
+                    .with_context(|| format!("cell '{id}'"))?;
+            let attempts = match c.get_opt("attempts") {
+                Some(a) => a.as_usize().map_err(anyhow::Error::from)? as u32,
+                None => 0,
+            };
+            let row = match c.get_opt("row") {
+                Some(r) => Some(r.as_str().map_err(anyhow::Error::from)?.to_string()),
+                None => None,
+            };
+            let reason = match c.get_opt("reason") {
+                Some(r) => Some(r.as_str().map_err(anyhow::Error::from)?.to_string()),
+                None => None,
+            };
+            let mut exports = Vec::new();
+            if let Some(arr) = c.get_opt("exports") {
+                for e in arr.as_arr().map_err(anyhow::Error::from)? {
+                    exports.push(ExportRecord {
+                        path: e.str_field("path").map_err(anyhow::Error::from)?,
+                        bytes: e.f64_field("bytes").map_err(anyhow::Error::from)? as u64,
+                    });
+                }
+            }
+            if status == CellStatus::Done {
+                ensure!(row.is_some(), "done cell '{id}' is missing its summary row");
+            }
+            cells.insert(id.clone(), CellState { status, attempts, row, reason, exports });
+        }
+        Ok(RunManifest {
+            kind: v.str_field("kind").map_err(anyhow::Error::from)?,
+            name: v.str_field("name").map_err(anyhow::Error::from)?,
+            grid_hash: v.str_field("grid_hash").map_err(anyhow::Error::from)?,
+            grid: v.get("grid").map_err(anyhow::Error::from)?.clone(),
+            options: v.get("options").map_err(anyhow::Error::from)?.clone(),
+            header: match v.get_opt("header") {
+                Some(h) => Some(h.as_str().map_err(anyhow::Error::from)?.to_string()),
+                None => None,
+            },
+            cells,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<RunManifest> {
+        let v = json::parse_file(path).map_err(anyhow::Error::from)?;
+        Self::from_json(&v).with_context(|| format!("parsing manifest {}", path.display()))
+    }
+
+    /// Atomic save: pretty JSON staged to `<path>.tmp`, renamed into place
+    /// ([`json::write_file`] carries the temp-and-rename contract).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        json::write_file(path, &self.to_json())
+            .with_context(|| format!("saving manifest {}", path.display()))
+    }
+}
+
+/// Thread-safe manifest ownership for a running checkpointed sweep: every
+/// mutation rewrites the manifest on disk before the cell's worker moves
+/// on, so the durable state always covers every completed cell.
+pub struct ManifestKeeper {
+    inner: Mutex<RunManifest>,
+    path: PathBuf,
+}
+
+impl ManifestKeeper {
+    /// Take ownership and persist the initial state immediately — a crash
+    /// at any later point finds a loadable manifest on disk.
+    pub fn new(manifest: RunManifest, path: PathBuf) -> Result<ManifestKeeper> {
+        manifest.save(&path)?;
+        Ok(ManifestKeeper { inner: Mutex::new(manifest), path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read-only access (no disk write).
+    pub fn with<R>(&self, f: impl FnOnce(&RunManifest) -> R) -> R {
+        f(&self.lock())
+    }
+
+    /// Mutate and atomically persist.
+    pub fn update<R>(&self, f: impl FnOnce(&mut RunManifest) -> R) -> Result<R> {
+        let mut m = self.lock();
+        let r = f(&mut m);
+        m.save(&self.path)?;
+        Ok(r)
+    }
+
+    /// The final state (the lock is gone once the pool has joined).
+    pub fn into_inner(self) -> RunManifest {
+        self.inner.into_inner().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, RunManifest> {
+        // A worker panicking inside `f` is already caught upstream; don't
+        // let a poisoned mutex cascade into every later cell.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(ids: &[&str]) -> RunManifest {
+        let grid = json::obj([("name", Json::Str("g".into()))]);
+        let identity = json::obj([("dt_s", Json::Num(0.25))]);
+        let hash = content_hash("sweep", &grid, &identity);
+        let ids: Vec<String> = ids.iter().map(|s| s.to_string()).collect();
+        RunManifest::new("sweep", "g", hash, grid, identity, &ids)
+    }
+
+    #[test]
+    fn hash_is_stable_and_sensitive() {
+        let grid = json::obj([("name", Json::Str("g".into()))]);
+        let identity = json::obj([("dt_s", Json::Num(0.25))]);
+        let h1 = content_hash("sweep", &grid, &identity);
+        let h2 = content_hash("sweep", &grid, &identity);
+        assert_eq!(h1, h2);
+        assert!(h1.starts_with("fnv1a:"));
+        let other = json::obj([("dt_s", Json::Num(0.5))]);
+        assert_ne!(h1, content_hash("sweep", &grid, &other));
+        assert_ne!(h1, content_hash("site_sweep", &grid, &identity));
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let mut m = sample(&["a", "b", "c"]);
+        m.header = Some("cell,peak_w\n".into());
+        m.mark_done(
+            "a",
+            2,
+            "a,1.5\n".into(),
+            vec![ExportRecord { path: "a/racks_1s.csv".into(), bytes: 128 }],
+        );
+        m.mark_failed("b", 3, "panicked: boom".into());
+        let back = RunManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.kind, "sweep");
+        assert_eq!(back.grid_hash, m.grid_hash);
+        assert_eq!(back.header.as_deref(), Some("cell,peak_w\n"));
+        assert!(back.is_done("a") && !back.is_done("b") && !back.is_done("c"));
+        assert_eq!(back.row("a"), Some("a,1.5\n"));
+        assert_eq!(back.row("b"), None);
+        assert_eq!(back.attempts("b"), 3);
+        assert_eq!(back.cells["b"].reason.as_deref(), Some("panicked: boom"));
+        assert_eq!(back.cells["a"].exports, m.cells["a"].exports);
+        assert_eq!(back.done_count(), 1);
+    }
+
+    #[test]
+    fn ensure_matches_rejects_mismatches() {
+        let m = sample(&["a", "b"]);
+        let ids: Vec<String> = vec!["a".into(), "b".into()];
+        m.ensure_matches("sweep", &m.grid_hash, &ids).unwrap();
+        assert!(m.ensure_matches("site_sweep", &m.grid_hash, &ids).is_err());
+        assert!(m.ensure_matches("sweep", "fnv1a:0000000000000000", &ids).is_err());
+        let wrong: Vec<String> = vec!["a".into(), "z".into()];
+        assert!(m.ensure_matches("sweep", &m.grid_hash, &wrong).is_err());
+    }
+
+    #[test]
+    fn reconcile_demotes_missing_and_mis_sized_exports() {
+        let root = std::env::temp_dir().join("powertrace_test_manifest_reconcile");
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(root.join("a")).unwrap();
+        std::fs::write(root.join("a/out.csv"), b"12345").unwrap();
+        let mut m = sample(&["a", "b"]);
+        let rec = |p: &str| vec![ExportRecord { path: p.to_string(), bytes: 5 }];
+        m.mark_done("a", 1, "row-a\n".into(), rec("a/out.csv"));
+        m.mark_done("b", 1, "row-b\n".into(), rec("b/out.csv"));
+        assert_eq!(m.reconcile_exports(&root), 1, "b's export is missing");
+        assert!(m.is_done("a") && !m.is_done("b"));
+        // Attempts survive demotion; the row does not.
+        assert_eq!(m.attempts("b"), 1);
+        assert_eq!(m.row("b"), None);
+        // A size mismatch also demotes.
+        std::fs::write(root.join("a/out.csv"), b"123").unwrap();
+        assert_eq!(m.reconcile_exports(&root), 1);
+        assert!(!m.is_done("a"));
+    }
+
+    #[test]
+    fn save_is_atomic_and_loadable() {
+        let dir = std::env::temp_dir().join("powertrace_test_manifest_save");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("manifest.json");
+        let m = sample(&["a"]);
+        m.save(&p).unwrap();
+        assert!(!fsx::tmp_path(&p).exists(), "staging file must be renamed away");
+        let back = RunManifest::load(&p).unwrap();
+        assert_eq!(back.grid_hash, m.grid_hash);
+    }
+
+    #[test]
+    fn keeper_persists_every_update() {
+        let dir = std::env::temp_dir().join("powertrace_test_manifest_keeper");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("manifest.json");
+        let keeper = ManifestKeeper::new(sample(&["a", "b"]), p.clone()).unwrap();
+        assert_eq!(RunManifest::load(&p).unwrap().done_count(), 0);
+        keeper.update(|m| m.mark_done("a", 1, "row\n".into(), Vec::new())).unwrap();
+        assert_eq!(RunManifest::load(&p).unwrap().done_count(), 1);
+        assert_eq!(keeper.with(|m| m.attempts("a")), 1);
+        assert!(keeper.into_inner().is_done("a"));
+    }
+}

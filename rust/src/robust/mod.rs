@@ -1,0 +1,37 @@
+//! Crash-safe execution layer: run manifests, per-cell fault isolation,
+//! atomic exports, and a deterministic failpoint injection harness.
+//!
+//! Multi-day sweeps and site studies are long-running batch jobs; this
+//! module is what makes them survivable. Four pieces compose:
+//!
+//! * [`fsx`] — atomic file primitives: every durable artifact is staged
+//!   to `<name>.tmp` and renamed into place, so a crash never leaves a
+//!   plausible-looking truncated CSV or JSON file;
+//! * [`manifest`] — the per-run [`RunManifest`]: grid hash, launch
+//!   options, and per-cell status (`pending` / `done{row, exports}` /
+//!   `failed{attempts, reason}`), rewritten atomically as cells complete.
+//!   `powertrace sweep --resume <manifest>` replays `done` rows verbatim
+//!   and re-runs the rest — cells are pure functions of `(spec, seed)`,
+//!   so the final summary is byte-identical to an uninterrupted run;
+//! * [`isolate`] — [`run_isolated`]: each cell under `catch_unwind` with
+//!   a bounded retry policy and a soft wall-clock [`Deadline`], so a
+//!   poisoned cell is quarantined into the manifest instead of killing
+//!   the pool;
+//! * [`failpoint`] — named injection sites (`sweep.cell`,
+//!   `sweep.cell.window`, `export.write`, `site.variant`, `site.window`)
+//!   compiled to no-ops unless the `failpoints` feature is on, where they
+//!   can panic / error / stall / abort deterministically — the harness CI
+//!   uses to crash a sweep at every site and prove `--resume` heals it.
+//!
+//! The contract the pieces add up to (documented in
+//! `docs/ARCHITECTURE.md` §Failure model): after any crash or quarantine,
+//! re-running with `--resume` converges to the same final bytes the
+//! uninterrupted run would have produced.
+
+pub mod failpoint;
+pub mod fsx;
+pub mod isolate;
+pub mod manifest;
+
+pub use isolate::{run_isolated, Deadline, Isolated, RetryPolicy};
+pub use manifest::{CellState, CellStatus, ExportRecord, ManifestKeeper, RunManifest};

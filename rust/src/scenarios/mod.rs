@@ -90,4 +90,7 @@ pub mod runner;
 
 pub use diff::{diff_summaries, diff_summary_files, DiffReport};
 pub use grid::{GridDefaults, SweepCell, SweepGrid};
-pub use runner::{run_sweep, run_sweep_to, CellResult, SweepOptions, SweepReport};
+pub use runner::{
+    run_sweep, run_sweep_checkpointed, run_sweep_to, CellResult, QuarantinedCell, SweepOptions,
+    SweepOutcome, SweepReport, SWEEP_MANIFEST,
+};

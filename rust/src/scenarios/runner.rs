@@ -26,15 +26,29 @@
 //! `(ScenarioSpec, seed)` (see [`Generator::facility_shared`]), and the
 //! summary CSV deliberately contains no wall-clock fields, so re-running a
 //! grid with the same seeds reproduces byte-identical summaries.
+//!
+//! Crash safety: [`run_sweep_checkpointed`] wraps the same execution in the
+//! [`crate::robust`] layer — a durable [`RunManifest`] under the output
+//! directory, per-cell `catch_unwind` + retry isolation
+//! ([`RetryPolicy`]), and atomic exports. A run killed at any point (or
+//! with cells quarantined) resumes from its manifest: `done` rows replay
+//! verbatim, everything else re-runs, and cell purity makes the final
+//! `summary.csv` byte-identical to an uninterrupted run.
 
 use super::grid::{SweepCell, SweepGrid};
 use crate::aggregate::{MultiScale, ScaleConfig, StreamingFacilityAccumulator};
 use crate::coordinator::Generator;
 use crate::metrics::planning::{PlanningStats, StreamingPlanningStats, StreamingResampler};
-use crate::util::threadpool::{default_workers, parallel_map};
+use crate::robust::manifest::content_hash;
+use crate::robust::{
+    failpoint, fsx, run_isolated, CellStatus, Deadline, ExportRecord, Isolated, ManifestKeeper,
+    RetryPolicy, RunManifest,
+};
+use crate::util::json::{self, Json};
+use crate::util::threadpool::{default_workers, parallel_map_results};
 use anyhow::{ensure, Context, Result};
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Execution knobs for one sweep run.
@@ -79,6 +93,34 @@ impl Default for SweepOptions {
             window_s: 0.0,
             scales: ScaleConfig::default(),
         }
+    }
+}
+
+impl SweepOptions {
+    /// The options that determine output *bytes* — the run manifest's hash
+    /// binds to exactly these. Worker counts, batch width, and the
+    /// streaming window are byte-invariant by contract (see the module
+    /// docs) and deliberately excluded, so a resumed run may pick a
+    /// different parallel layout or switch streaming on or off.
+    pub(crate) fn identity_json(&self) -> Json {
+        let scales = json::obj([
+            ("rack_interval_s", Json::Num(self.scales.rack_interval_s)),
+            ("row_interval_s", Json::Num(self.scales.row_interval_s)),
+            ("facility_intervals_s", Json::from_f64s(&self.scales.facility_intervals_s)),
+        ]);
+        json::obj([
+            ("dt_s", Json::Num(self.dt_s)),
+            ("ramp_interval_s", Json::Num(self.ramp_interval_s)),
+            ("scales", scales),
+        ])
+    }
+
+    /// What the manifest records as launch options: the identity fields
+    /// plus the window size — `--resume` reads its defaults from here.
+    pub(crate) fn record_json(&self) -> Json {
+        let Json::Obj(mut o) = self.identity_json() else { unreachable!("identity is an object") };
+        o.insert("window_s".to_string(), Json::Num(self.window_s));
+        Json::Obj(o)
     }
 }
 
@@ -160,26 +202,23 @@ pub fn run_sweep_to(
         std::fs::create_dir_all(dir)?;
     }
     let gen_ro: &Generator = gen;
-    let results: Vec<Result<CellResult>> = parallel_map(n, outer, |i| {
+    let results: Vec<Result<CellResult>> = parallel_map_results(n, outer, |i| {
         let cell = &cells[i];
         let t0 = Instant::now();
-        let (stats, scales, exact, bound) = (|| -> Result<_> {
-            if opts.window_s > 0.0 {
-                let cdir = stream_dir.map(|d| d.join(&cell.id));
-                let (stats, exact, bound) =
-                    run_cell_streaming(gen_ro, cell, opts, inner, cdir.as_deref())?;
-                Ok((stats, None, exact, bound))
-            } else {
-                let run =
-                    gen_ro.facility_shared_batched(&cell.spec, opts.dt_s, inner, opts.max_batch)?;
-                let site = run.facility_series();
-                let ramp_s = cell_ramp_interval(opts, cell.spec.horizon_s);
-                let stats = PlanningStats::compute(&site, opts.dt_s, ramp_s)?;
-                let scales = run.acc.multi_scale(opts.dt_s, cell.spec.pue, &opts.scales)?;
-                Ok((stats, Some(scales), true, 0.0))
-            }
-        })()
-        .with_context(|| format!("cell {}", cell.id))?;
+        let (stats, scales, exact, bound) = if opts.window_s > 0.0 {
+            let cdir = stream_dir.map(|d| d.join(&cell.id));
+            let (stats, exact, bound, _paths) =
+                run_cell_streaming(gen_ro, cell, opts, inner, cdir.as_deref(), None)?;
+            (stats, None, exact, bound)
+        } else {
+            let run =
+                gen_ro.facility_shared_batched(&cell.spec, opts.dt_s, inner, opts.max_batch)?;
+            let site = run.facility_series();
+            let ramp_s = cell_ramp_interval(opts, cell.spec.horizon_s);
+            let stats = PlanningStats::compute(&site, opts.dt_s, ramp_s)?;
+            let scales = run.acc.multi_scale(opts.dt_s, cell.spec.pue, &opts.scales)?;
+            (stats, Some(scales), true, 0.0)
+        };
         Ok(CellResult {
             cell: cell.clone(),
             stats,
@@ -190,8 +229,8 @@ pub fn run_sweep_to(
         })
     });
     let mut out = Vec::with_capacity(n);
-    for r in results {
-        out.push(r?);
+    for (i, r) in results.into_iter().enumerate() {
+        out.push(r.with_context(|| format!("cell {}", cells[i].id))?);
     }
     Ok(SweepReport { grid: grid.clone(), dt_s: opts.dt_s, cells: out })
 }
@@ -204,14 +243,17 @@ fn cell_ramp_interval(opts: &SweepOptions, horizon_s: f64) -> f64 {
 
 /// Run one cell through the windowed streaming pipeline: fold summary
 /// stats per window and (optionally) append the multi-scale CSVs under
-/// `cdir`. Returns `(stats, exact_quantiles, p99_bound)`.
+/// `cdir`. With a [`Deadline`], the soft wall-clock budget is checked at
+/// every window boundary (the streaming path's cooperative yield points).
+/// Returns `(stats, exact_quantiles, p99_bound, finished export paths)`.
 fn run_cell_streaming(
     gen: &Generator,
     cell: &SweepCell,
     opts: &SweepOptions,
     inner_workers: usize,
     cdir: Option<&Path>,
-) -> Result<(PlanningStats, bool, f64)> {
+    deadline: Option<&Deadline>,
+) -> Result<(PlanningStats, bool, f64, Vec<PathBuf>)> {
     let spec = &cell.spec;
     let ramp_s = cell_ramp_interval(opts, spec.horizon_s);
     let mut stats = StreamingPlanningStats::new(opts.dt_s, ramp_s)?;
@@ -236,6 +278,10 @@ fn run_cell_streaming(
         inner_workers,
         opts.max_batch,
         |acc| {
+            failpoint::hit("sweep.cell.window", &cell.id)?;
+            if let Some(d) = deadline {
+                d.check()?;
+            }
             acc.fold_rows_site(&mut rows_buf, &mut site_buf);
             // The PCC f32 series exactly as the buffered stats path builds
             // it — the shared helper owns the deliberate double rounding.
@@ -247,11 +293,252 @@ fn run_cell_streaming(
             Ok(())
         },
     )?;
-    if let Some(w) = writers {
-        w.finish()?;
-    }
+    let paths = match writers {
+        Some(w) => w.finish()?,
+        None => Vec::new(),
+    };
     let out = stats.finalize()?;
-    Ok((out.stats, out.exact_quantiles, out.p99_error_bound_w))
+    Ok((out.stats, out.exact_quantiles, out.p99_error_bound_w, paths))
+}
+
+// ---------------------------------------------------------------------------
+// Checkpointed execution (crash-safe sweeps)
+// ---------------------------------------------------------------------------
+
+/// File name of the run manifest inside a checkpointed output directory.
+pub const SWEEP_MANIFEST: &str = "manifest.json";
+
+/// A cell that failed every attempt and was quarantined in the manifest
+/// (the rest of the sweep still completed).
+#[derive(Debug, Clone)]
+pub struct QuarantinedCell {
+    pub id: String,
+    /// Cumulative attempts across every run of the manifest.
+    pub attempts: u32,
+    /// The last failure: an error chain, a panic payload, or a deadline.
+    pub reason: String,
+}
+
+/// Result of a checkpointed (possibly resumed) sweep run.
+pub struct SweepOutcome {
+    /// Cells executed by *this* process, in grid order. Restored cells are
+    /// not re-materialized — their rows replay from the manifest into
+    /// [`SweepOutcome::summary_csv`].
+    pub report: SweepReport,
+    /// Cells restored from the manifest without re-running.
+    pub restored: usize,
+    /// Cells quarantined after exhausting the retry budget, grid order.
+    pub failed: Vec<QuarantinedCell>,
+    /// The assembled summary (all `done` cells, grid order) — exactly the
+    /// bytes written to `<dir>/summary.csv`, and byte-identical to an
+    /// uninterrupted [`run_sweep_to`] + [`SweepReport::write`] once every
+    /// cell is done.
+    pub summary_csv: String,
+    /// `<dir>/manifest.json` — pass to `--resume`.
+    pub manifest_path: PathBuf,
+}
+
+/// Crash-safe variant of [`run_sweep_to`]: execute `grid` under `dir` with
+/// a durable [`RunManifest`], per-cell fault isolation, and atomic exports.
+///
+/// * A fresh directory starts an all-`pending` manifest; a directory that
+///   already holds one **resumes** it — `done` cells are skipped and their
+///   summary rows replayed verbatim, `pending`/`failed` cells re-run. The
+///   manifest's content hash must match this grid + byte-relevant options.
+/// * Each cell runs under [`run_isolated`]: panics are caught, failures
+///   retried up to `policy.max_retries` times, and a cell that fails every
+///   attempt is quarantined (recorded `failed`) without aborting the rest.
+/// * All exports land atomically, and the manifest is atomically rewritten
+///   after every cell, so a kill at any instant leaves a resumable state.
+///
+/// Because cells are pure functions of `(spec, seed)`, the final
+/// `summary.csv` after any crash/resume sequence is byte-identical to the
+/// uninterrupted run's.
+pub fn run_sweep_checkpointed(
+    gen: &mut Generator,
+    grid: &SweepGrid,
+    opts: &SweepOptions,
+    dir: &Path,
+    policy: &RetryPolicy,
+) -> Result<SweepOutcome> {
+    grid.validate()?;
+    ensure!(
+        opts.dt_s.is_finite() && opts.dt_s > 0.0,
+        "sweep: dt must be positive seconds (got {})",
+        opts.dt_s
+    );
+    let cells = grid.expand();
+    let ids: Vec<String> = cells.iter().map(|c| c.id.clone()).collect();
+    let hash = content_hash("sweep", &grid.to_json(), &opts.identity_json());
+    std::fs::create_dir_all(dir)?;
+    let mpath = dir.join(SWEEP_MANIFEST);
+    let mut manifest = if mpath.exists() {
+        let m = RunManifest::load(&mpath)?;
+        m.ensure_matches("sweep", &hash, &ids)?;
+        m
+    } else {
+        RunManifest::new("sweep", &grid.name, hash, grid.to_json(), opts.record_json(), &ids)
+    };
+    manifest.reconcile_exports(dir);
+    manifest.header = Some(summary_header().to_string());
+    let restored = manifest.done_count();
+    let todo: Vec<usize> = (0..cells.len()).filter(|&i| !manifest.is_done(&cells[i].id)).collect();
+    // Shared-artifact hoist, restricted to configs a re-run cell needs.
+    let mut needed: Vec<String> = Vec::new();
+    for &i in &todo {
+        for id in cells[i].spec.server_config.config_ids_used(&cells[i].spec.topology) {
+            if !needed.contains(&id) {
+                needed.push(id);
+            }
+        }
+    }
+    for id in needed {
+        gen.prepare(&id).with_context(|| format!("preparing config '{id}'"))?;
+    }
+    let keeper = ManifestKeeper::new(manifest, mpath.clone())?;
+    let n = todo.len();
+    let outer = match opts.scenario_workers {
+        0 => default_workers().min(n).max(1),
+        w => w.min(n).max(1),
+    };
+    let inner = match opts.server_workers {
+        0 => (default_workers() / outer).max(1),
+        w => w,
+    };
+    let gen_ro: &Generator = gen;
+    let results = parallel_map_results(n, outer, |k| -> Result<Option<CellResult>> {
+        let cell = &cells[todo[k]];
+        let prior = keeper.with(|m| m.attempts(&cell.id));
+        match run_isolated(policy, prior, |deadline| {
+            failpoint::hit("sweep.cell", &cell.id)?;
+            run_cell_checkpointed(gen_ro, cell, opts, inner, dir, deadline)
+        }) {
+            Isolated::Done { value: (result, exports), attempts } => {
+                let row = summary_row(&result);
+                keeper.update(|m| m.mark_done(&cell.id, attempts, row, exports))?;
+                Ok(Some(result))
+            }
+            Isolated::Failed { attempts, reason } => {
+                keeper.update(|m| m.mark_failed(&cell.id, attempts, reason))?;
+                Ok(None)
+            }
+        }
+    });
+    // Only manifest-save failures (or pool bugs) surface here — cell
+    // failures were quarantined above.
+    let mut executed = Vec::new();
+    for (k, r) in results.into_iter().enumerate() {
+        if let Some(res) = r.with_context(|| format!("cell {}", cells[todo[k]].id))? {
+            executed.push(res);
+        }
+    }
+    let manifest = keeper.into_inner();
+    let mut summary = String::from(summary_header());
+    for c in &cells {
+        if let Some(row) = manifest.row(&c.id) {
+            summary.push_str(row);
+        }
+    }
+    grid.save(&dir.join("grid.json"))?;
+    fsx::atomic_write(&dir.join("summary.csv"), summary.as_bytes())?;
+    let failed: Vec<QuarantinedCell> = cells
+        .iter()
+        .filter_map(|c| {
+            let st = manifest.cells.get(&c.id)?;
+            (st.status == CellStatus::Failed).then(|| QuarantinedCell {
+                id: c.id.clone(),
+                attempts: st.attempts,
+                reason: st.reason.clone().unwrap_or_default(),
+            })
+        })
+        .collect();
+    Ok(SweepOutcome {
+        report: SweepReport { grid: grid.clone(), dt_s: opts.dt_s, cells: executed },
+        restored,
+        failed,
+        summary_csv: summary,
+        manifest_path: mpath,
+    })
+}
+
+/// One cell of a checkpointed run: generate (streaming or buffered), write
+/// every export atomically under `<root>/<cell>/`, and return the result
+/// plus the [`ExportRecord`]s the manifest needs for resume validation.
+fn run_cell_checkpointed(
+    gen: &Generator,
+    cell: &SweepCell,
+    opts: &SweepOptions,
+    inner_workers: usize,
+    root: &Path,
+    deadline: &Deadline,
+) -> Result<(CellResult, Vec<ExportRecord>)> {
+    let t0 = Instant::now();
+    let cdir = root.join(&cell.id);
+    let (stats, scales, exact, bound, mut paths) = if opts.window_s > 0.0 {
+        let (stats, exact, bound, paths) =
+            run_cell_streaming(gen, cell, opts, inner_workers, Some(&cdir), Some(deadline))?;
+        (stats, None, exact, bound, paths)
+    } else {
+        let run =
+            gen.facility_shared_batched(&cell.spec, opts.dt_s, inner_workers, opts.max_batch)?;
+        let site = run.facility_series();
+        let ramp_s = cell_ramp_interval(opts, cell.spec.horizon_s);
+        let stats = PlanningStats::compute(&site, opts.dt_s, ramp_s)?;
+        let scales = run.acc.multi_scale(opts.dt_s, cell.spec.pue, &opts.scales)?;
+        (stats, Some(scales), true, 0.0, Vec::new())
+    };
+    let result = CellResult {
+        cell: cell.clone(),
+        stats,
+        scales,
+        exact_quantiles: exact,
+        p99_bound_w: bound,
+        wall_s: t0.elapsed().as_secs_f64(),
+    };
+    paths.extend(write_cell_exports(&cdir, &result)?);
+    let mut exports = Vec::with_capacity(paths.len());
+    for p in paths {
+        let bytes = std::fs::metadata(&p)
+            .with_context(|| format!("stat export {}", p.display()))?
+            .len();
+        let rel = p.strip_prefix(root).unwrap_or(&p).to_string_lossy().replace('\\', "/");
+        exports.push(ExportRecord { path: rel, bytes });
+    }
+    Ok((result, exports))
+}
+
+/// The static sweep summary header line — shared by [`SweepReport`] and
+/// the checkpointed runner (which replays manifest rows under it).
+pub(crate) fn summary_header() -> &'static str {
+    "cell,workload,topology,fleet,servers,seed,\
+     peak_w,avg_w,p99_w,energy_kwh,max_ramp_w,cv,peak_to_average,load_factor\n"
+}
+
+/// One cell's summary row (with trailing newline) — the exact bytes
+/// [`SweepReport::summary_csv`] emits, also recorded verbatim into the run
+/// manifest so a resumed run replays rather than recomputes them.
+pub(crate) fn summary_row(c: &CellResult) -> String {
+    let t = c.cell.spec.topology;
+    let fleet = c.cell.spec.server_config.config_ids().join("+");
+    format!(
+        "{},{},{}x{}x{},{},{},{},{},{},{},{},{},{},{},{}\n",
+        c.cell.id,
+        csv_field(&c.cell.spec.workload.label()),
+        t.rows,
+        t.racks_per_row,
+        t.servers_per_rack,
+        csv_field(&fleet),
+        t.n_servers(),
+        c.cell.spec.seed,
+        c.stats.peak_w,
+        c.stats.avg_w,
+        c.stats.p99_w,
+        c.stats.energy_kwh,
+        c.stats.max_ramp_w,
+        c.stats.cv,
+        c.stats.peak_to_average,
+        c.stats.load_factor,
+    )
 }
 
 impl SweepReport {
@@ -259,32 +546,9 @@ impl SweepReport {
     /// are emitted with Rust's shortest round-trip float formatting and no
     /// timing columns.
     pub fn summary_csv(&self) -> String {
-        let mut s = String::from(
-            "cell,workload,topology,fleet,servers,seed,\
-             peak_w,avg_w,p99_w,energy_kwh,max_ramp_w,cv,peak_to_average,load_factor\n",
-        );
+        let mut s = String::from(summary_header());
         for c in &self.cells {
-            let t = c.cell.spec.topology;
-            let fleet = c.cell.spec.server_config.config_ids().join("+");
-            s.push_str(&format!(
-                "{},{},{}x{}x{},{},{},{},{},{},{},{},{},{},{},{}\n",
-                c.cell.id,
-                csv_field(&c.cell.spec.workload.label()),
-                t.rows,
-                t.racks_per_row,
-                t.servers_per_rack,
-                csv_field(&fleet),
-                t.n_servers(),
-                c.cell.spec.seed,
-                c.stats.peak_w,
-                c.stats.avg_w,
-                c.stats.p99_w,
-                c.stats.energy_kwh,
-                c.stats.max_ramp_w,
-                c.stats.cv,
-                c.stats.peak_to_average,
-                c.stats.load_factor,
-            ));
+            s.push_str(&summary_row(c));
         }
         s
     }
@@ -334,36 +598,38 @@ impl SweepReport {
     pub fn write(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         self.grid.save(&dir.join("grid.json"))?;
-        std::fs::write(dir.join("summary.csv"), self.summary_csv())?;
+        fsx::atomic_write(&dir.join("summary.csv"), self.summary_csv().as_bytes())?;
         for c in &self.cells {
-            let cdir = dir.join(&c.cell.id);
-            std::fs::create_dir_all(&cdir)?;
-            c.cell.spec.save(&cdir.join("scenario.json"))?;
-            let Some(scales) = &c.scales else { continue };
-            let sc = &scales.scales;
-            write_series_csv(
-                &cdir.join(format!("racks_{}s.csv", fmt_secs(sc.rack_interval_s))),
-                "rack",
-                sc.rack_interval_s,
-                &scales.racks_w,
-            )?;
-            write_series_csv(
-                &cdir.join(format!("rows_{}s.csv", fmt_secs(sc.row_interval_s))),
-                "row",
-                sc.row_interval_s,
-                &scales.rows_w,
-            )?;
-            for (k, &interval) in sc.facility_intervals_s.iter().enumerate() {
-                write_series_csv(
-                    &cdir.join(format!("facility_{}s.csv", fmt_secs(interval))),
-                    "facility",
-                    interval,
-                    std::slice::from_ref(&scales.facility_w[k]),
-                )?;
-            }
+            write_cell_exports(&dir.join(&c.cell.id), c)?;
         }
         Ok(())
     }
+}
+
+/// Write one cell's metadata + buffered series exports under `cdir` and
+/// return every path written (streamed series CSVs are not re-written —
+/// they were already finalized by [`CellWriters::finish`]). Every file
+/// lands atomically.
+fn write_cell_exports(cdir: &Path, c: &CellResult) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(cdir)?;
+    let mut paths = Vec::new();
+    let spec_path = cdir.join("scenario.json");
+    c.cell.spec.save(&spec_path)?;
+    paths.push(spec_path);
+    let Some(scales) = &c.scales else { return Ok(paths) };
+    let sc = &scales.scales;
+    let p = cdir.join(format!("racks_{}s.csv", fmt_secs(sc.rack_interval_s)));
+    write_series_csv(&p, "rack", sc.rack_interval_s, &scales.racks_w)?;
+    paths.push(p);
+    let p = cdir.join(format!("rows_{}s.csv", fmt_secs(sc.row_interval_s)));
+    write_series_csv(&p, "row", sc.row_interval_s, &scales.rows_w)?;
+    paths.push(p);
+    for (k, &interval) in sc.facility_intervals_s.iter().enumerate() {
+        let p = cdir.join(format!("facility_{}s.csv", fmt_secs(interval)));
+        write_series_csv(&p, "facility", interval, std::slice::from_ref(&scales.facility_w[k]))?;
+        paths.push(p);
+    }
+    Ok(paths)
 }
 
 // ---------------------------------------------------------------------------
@@ -446,13 +712,16 @@ impl CellWriters {
         Ok(())
     }
 
-    fn finish(self) -> Result<()> {
-        self.racks.finish()?;
-        self.rows.finish()?;
+    /// Finalize every writer (flush + atomic rename) and return the
+    /// finished file paths.
+    fn finish(self) -> Result<Vec<PathBuf>> {
+        let mut paths = Vec::with_capacity(2 + self.facility.len());
+        paths.push(self.racks.finish()?);
+        paths.push(self.rows.finish()?);
         for f in self.facility {
-            f.finish()?;
+            paths.push(f.finish()?);
         }
-        Ok(())
+        Ok(paths)
     }
 }
 
@@ -464,8 +733,18 @@ impl CellWriters {
 /// shortest round-trip f32 formatting. Crate-visible: the site composition
 /// engine ([`crate::site`]) streams `site_load.csv` through the same
 /// writer so facility and site exports can never drift in format.
+///
+/// Rows stream to `<name>.tmp`; only [`StreamingCsv::finish`] renames the
+/// file into its final place, so a crash mid-cell never leaves a
+/// plausible-looking partial series at the real path.
 pub(crate) struct StreamingCsv {
     out: std::io::BufWriter<std::fs::File>,
+    /// The staging path rows stream to.
+    tmp: PathBuf,
+    /// The final path [`StreamingCsv::finish`] renames to.
+    path: PathBuf,
+    /// File name — the `export.write` failpoint tag.
+    tag: String,
     interval_s: f64,
     next_row: usize,
     cols: Vec<StreamingResampler>,
@@ -495,8 +774,9 @@ impl StreamingCsv {
         interval_s: f64,
         scale: f64,
     ) -> Result<StreamingCsv> {
-        let file = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
+        let tmp = fsx::tmp_path(path);
+        let file =
+            std::fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
         let mut out = std::io::BufWriter::new(file);
         let mut header = String::from("t_s");
         for name in col_names {
@@ -509,8 +789,12 @@ impl StreamingCsv {
             .iter()
             .map(|_| StreamingResampler::new(dt_s, interval_s, scale))
             .collect::<Result<Vec<_>>>()?;
+        let tag = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
         Ok(StreamingCsv {
             out,
+            tmp,
+            path: path.to_path_buf(),
+            tag,
             interval_s,
             next_row: 0,
             cols,
@@ -541,6 +825,7 @@ impl StreamingCsv {
     }
 
     pub(crate) fn write_ready_rows(&mut self) -> Result<()> {
+        failpoint::hit("export.write", &self.tag)?;
         let ready = self.pending.iter().map(|q| q.len()).min().unwrap_or(0);
         for _ in 0..ready {
             self.line.clear();
@@ -558,9 +843,10 @@ impl StreamingCsv {
     }
 
     /// Flush the trailing partial resample window of every column (the
-    /// buffered `resample_mean` emits it averaged over its actual length)
-    /// and write the final row(s).
-    pub(crate) fn finish(mut self) -> Result<()> {
+    /// buffered `resample_mean` emits it averaged over its actual length),
+    /// write the final row(s), and atomically rename the staged file into
+    /// its final place. Returns the finished path.
+    pub(crate) fn finish(mut self) -> Result<PathBuf> {
         for (r, q) in self.cols.iter_mut().zip(self.pending.iter_mut()) {
             if let Some((v, _count)) = r.flush() {
                 q.push_back(v);
@@ -568,8 +854,16 @@ impl StreamingCsv {
         }
         self.write_ready_rows()?;
         debug_assert!(self.pending.iter().all(|q| q.is_empty()), "ragged columns");
-        self.out.flush()?;
-        Ok(())
+        let file = self
+            .out
+            .into_inner()
+            .map_err(|e| anyhow::anyhow!("flushing {}: {e}", self.tmp.display()))?;
+        // Make the rename durable, not just atomic: the bytes reach disk
+        // before the final name does.
+        let _ = file.sync_all();
+        drop(file);
+        fsx::persist(&self.tmp, &self.path)?;
+        Ok(self.path)
     }
 }
 
@@ -612,7 +906,8 @@ fn series_csv_header(stem: &str, n_cols: usize) -> String {
     out
 }
 
-/// Columnar CSV: `t_s,<stem>_0,<stem>_1,...` with one row per interval.
+/// Columnar CSV: `t_s,<stem>_0,<stem>_1,...` with one row per interval,
+/// written atomically (staged + renamed).
 fn write_series_csv(path: &Path, stem: &str, interval_s: f64, series: &[Vec<f32>]) -> Result<()> {
     let n = series.iter().map(|s| s.len()).max().unwrap_or(0);
     let mut out = series_csv_header(stem, series.len());
@@ -626,8 +921,7 @@ fn write_series_csv(path: &Path, stem: &str, interval_s: f64, series: &[Vec<f32>
         }
         out.push('\n');
     }
-    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
-    Ok(())
+    fsx::atomic_write(path, out.as_bytes())
 }
 
 #[cfg(test)]
@@ -704,9 +998,29 @@ mod tests {
             w.write_ready_rows().unwrap();
             t0 += wlen;
         }
-        w.finish().unwrap();
+        let finished = w.finish().unwrap();
+        assert_eq!(finished, ps);
         let a = std::fs::read(&pb).unwrap();
         let b = std::fs::read(&ps).unwrap();
         assert_eq!(a, b, "streamed CSV bytes differ from buffered");
+    }
+
+    #[test]
+    fn streaming_csv_is_atomic_until_finish() {
+        let dir = std::env::temp_dir().join("powertrace_test_streaming_atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("atomic.csv");
+        let _ = std::fs::remove_file(&p);
+        let mut w = StreamingCsv::create(&p, "rack", 1, 0.25, 0.5, 1.0).unwrap();
+        w.push_col(0, &[1.0, 2.0, 3.0, 4.0]);
+        w.write_ready_rows().unwrap();
+        // Rows exist only in the staging file until finish renames it.
+        assert!(!p.exists(), "final path must not appear before finish");
+        assert!(crate::robust::fsx::tmp_path(&p).exists());
+        w.finish().unwrap();
+        assert!(p.exists());
+        assert!(!crate::robust::fsx::tmp_path(&p).exists());
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "t_s,rack_0\n0,1.5\n0.5,3.5\n");
     }
 }

@@ -43,6 +43,7 @@ use super::spec::{FacilityKind, SiteSpec, TrainingSpec};
 use crate::aggregate::{pcc_window_into, SiteAccumulator};
 use crate::config::ScenarioSpec;
 use crate::coordinator::{window_geometry, Generator};
+use crate::robust::{failpoint, fsx, Deadline};
 use crate::scenarios::runner::{csv_field, fmt_secs, StreamingCsv};
 use crate::util::threadpool::default_workers;
 use anyhow::{anyhow, bail, ensure, Result};
@@ -97,6 +98,29 @@ impl Default for SiteOptions {
     }
 }
 
+impl SiteOptions {
+    /// The options that determine output *bytes* — a site-sweep manifest's
+    /// hash binds to exactly these. Workers, batch width, and window size
+    /// are byte-invariant by contract (see the module docs) and excluded.
+    pub(crate) fn identity_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        obj([
+            ("dt_s", Json::Num(self.dt_s)),
+            ("ramp_interval_s", Json::Num(self.ramp_interval_s)),
+            ("load_interval_s", Json::Num(self.load_interval_s)),
+        ])
+    }
+
+    /// What the manifest records as launch options: the identity fields
+    /// plus the window size — `--resume` reads its defaults from here.
+    pub(crate) fn record_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let Json::Obj(mut o) = self.identity_json() else { unreachable!("identity is an object") };
+        o.insert("window_s".to_string(), Json::Num(self.window_s));
+        Json::Obj(o)
+    }
+}
+
 /// One facility's slice of a completed site run.
 pub struct FacilityReport {
     pub name: String,
@@ -137,6 +161,16 @@ pub struct SiteReport {
     pub site_series: Option<Vec<f32>>,
 }
 
+/// Prepare every configuration the site's inference facilities reference
+/// (artifact load + classifier + packed-weight build, once per config) on
+/// the generator. [`run_site`] calls this itself; call it directly before
+/// fanning variants over [`run_site_prepared`] with a shared `&Generator`.
+pub fn prepare_site(gen: &mut Generator, spec: &SiteSpec) -> Result<()> {
+    let scenarios: Vec<ScenarioSpec> =
+        spec.facilities.iter().filter_map(|f| f.effective_scenario()).collect();
+    gen.prepare_for_many(scenarios.iter().collect())
+}
+
 /// Run a site: compose every facility's windowed stream into the
 /// utility-facing profile. With `out_dir`, streams `site_load.csv`
 /// window-by-window and writes `site_summary.csv` + `site_spec.json` on
@@ -146,6 +180,34 @@ pub fn run_site(
     spec: &SiteSpec,
     opts: &SiteOptions,
     out_dir: Option<&Path>,
+) -> Result<SiteReport> {
+    spec.validate()?;
+    prepare_site(gen, spec)?;
+    run_site_inner(gen, spec, opts, out_dir, None)
+}
+
+/// [`run_site`] against an already-prepared shared generator (see
+/// [`prepare_site`]): takes `&Generator`, so site-sweep variants can fan
+/// out without exclusive access. Fails inside generation if a facility
+/// references a configuration that was never prepared.
+pub fn run_site_prepared(
+    gen: &Generator,
+    spec: &SiteSpec,
+    opts: &SiteOptions,
+    out_dir: Option<&Path>,
+) -> Result<SiteReport> {
+    run_site_inner(gen, spec, opts, out_dir, None)
+}
+
+/// The composition engine behind [`run_site`] / [`run_site_prepared`].
+/// With a [`Deadline`], the soft wall-clock budget is checked at every
+/// lockstep window barrier (the site path's cooperative yield points).
+pub(crate) fn run_site_inner(
+    gen: &Generator,
+    spec: &SiteSpec,
+    opts: &SiteOptions,
+    out_dir: Option<&Path>,
+    deadline: Option<&Deadline>,
 ) -> Result<SiteReport> {
     spec.validate()?;
     ensure!(
@@ -171,15 +233,7 @@ pub fn run_site(
             FacilityKind::Training(t) => FacStream::Training(t.clone(), f.phase_offset_s),
         })
         .collect();
-    let inference: Vec<&ScenarioSpec> = streams
-        .iter()
-        .filter_map(|s| match s {
-            FacStream::Inference(sc) => Some(sc),
-            FacStream::Training(..) => None,
-        })
-        .collect();
-    let n_inference = inference.len();
-    gen.prepare_for_many(inference)?;
+    let n_inference = streams.iter().filter(|s| matches!(s, FacStream::Inference(_))).count();
     let gen_ro: &Generator = gen;
 
     let n_fac = streams.len();
@@ -318,6 +372,16 @@ pub fn run_site(
         let mut site_pcc: Vec<f32> = Vec::new();
         let mut coord_err: Option<anyhow::Error> = None;
         'windows: for wi in 0..n_windows {
+            if let Some(d) = deadline {
+                if let Err(e) = d.check() {
+                    coord_err = Some(e);
+                    break 'windows;
+                }
+            }
+            if let Err(e) = failpoint::hit("site.window", &spec.name) {
+                coord_err = Some(e);
+                break 'windows;
+            }
             let t0 = wi * window;
             let len = (n_steps - t0).min(window);
             acc.begin_window(t0, len);
@@ -439,7 +503,7 @@ pub fn run_site(
         site_series,
     };
     if let Some(dir) = out_dir {
-        std::fs::write(dir.join("site_summary.csv"), report.summary_csv())?;
+        fsx::atomic_write(&dir.join("site_summary.csv"), report.summary_csv().as_bytes())?;
         report.spec.save(&dir.join("site_spec.json"))?;
     }
     Ok(report)

@@ -29,7 +29,9 @@
 //!   per window as the composed (or per-facility) stream passes the
 //!   barrier, with delta accounting in the summary exports;
 //! * [`SiteGrid`] / [`run_site_sweep`] — the sweep axis (`sweep`):
-//!   phase spreads × seeds (× battery size × cap) over one base site.
+//!   phase spreads × seeds (× battery size × cap) over one base site,
+//!   with a crash-safe manifest-checkpointed variant
+//!   ([`run_site_sweep_checkpointed`]) that supports `--resume`.
 //!
 //! CLI: `powertrace site --site <spec.json> --out <dir>` (plus
 //! `--grid <sweep.json>` for the sweep axis and `--overlay <list.json>`
@@ -42,7 +44,9 @@ pub mod overlay;
 pub mod spec;
 pub mod sweep;
 
-pub use compose::{run_site, FacilityReport, SiteOptions, SiteReport};
+pub use compose::{
+    prepare_site, run_site, run_site_prepared, FacilityReport, SiteOptions, SiteReport,
+};
 pub use metrics::{
     LoadDurationPoint, SeriesSummary, SiteSeriesStats, LOAD_DURATION_QUANTILES,
 };
@@ -50,4 +54,7 @@ pub use overlay::{pv_irradiance_w, OverlayChain, OverlaySpec, OverlaySummary};
 pub use spec::{
     FacilityKind, FacilitySpec, SiteSpec, TrainingSpec, DEFAULT_UTILITY_INTERVALS_S,
 };
-pub use sweep::{run_site_sweep, sweep_summary_csv, SiteGrid, SiteVariant};
+pub use sweep::{
+    run_site_sweep, run_site_sweep_checkpointed, sweep_summary_csv, SiteGrid, SiteSweepOutcome,
+    SiteVariant, SITE_SWEEP_MANIFEST,
+};

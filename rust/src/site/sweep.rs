@@ -31,14 +31,22 @@
 //! sweep. Variants without the axes keep their PR-4 ids (`p<i>-s<seed>`);
 //! with them, ids extend to `p<i>-s<seed>-b<j>-c<k>`.
 
-use super::compose::{run_site, SiteOptions, SiteReport};
+use super::compose::{prepare_site, run_site_inner, run_site_prepared, SiteOptions, SiteReport};
+use super::metrics::SeriesSummary;
 use super::overlay::OverlaySpec;
 use super::spec::SiteSpec;
 use crate::coordinator::Generator;
+use crate::robust::manifest::content_hash;
+use crate::robust::{
+    failpoint, fsx, run_isolated, CellStatus, ExportRecord, Isolated, ManifestKeeper, RetryPolicy,
+    RunManifest,
+};
 use crate::scenarios::runner::csv_field;
+use crate::scenarios::QuarantinedCell;
 use crate::util::json::{self, Json};
+use crate::util::threadpool::parallel_map_results;
 use anyhow::{bail, Context, Result};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// A declarative site sweep: one base site × phase spreads × seeds.
 #[derive(Debug, Clone, PartialEq)]
@@ -249,10 +257,16 @@ impl SiteGrid {
     }
 }
 
-/// Run every variant of a site sweep (sequentially — each variant already
+/// Run every variant of a site sweep (one at a time — each variant already
 /// parallelizes across facilities and racks). With `out_dir`, each variant
 /// exports under `<out_dir>/<variant_id>/` and a
 /// `site_sweep_summary.csv` collects one site row per variant.
+///
+/// Variants run through the fault-isolating
+/// [`parallel_map_results`] path (a panicking variant surfaces as that
+/// variant's error instead of unwinding through the sweep), but this
+/// entry point still fails fast on the first bad variant. For quarantine
+/// semantics and crash-safe resume, use [`run_site_sweep_checkpointed`].
 pub fn run_site_sweep(
     gen: &mut Generator,
     grid: &SiteGrid,
@@ -263,18 +277,63 @@ pub fn run_site_sweep(
     if let Some(dir) = out_dir {
         std::fs::create_dir_all(dir)?;
     }
-    let mut out = Vec::with_capacity(grid.n_variants());
-    for variant in grid.expand() {
+    // Variants differ only in phases, seeds, and site-level overlays —
+    // never in server configurations — so preparing the base site covers
+    // every variant, and the fan-out can share a read-only generator.
+    prepare_site(gen, &grid.base)?;
+    let gen_ro: &Generator = gen;
+    let variants = grid.expand();
+    let results = parallel_map_results(variants.len(), 1, |i| {
+        let variant = &variants[i];
         let vdir = out_dir.map(|d| d.join(&variant.id));
-        let report = run_site(gen, &variant.spec, opts, vdir.as_deref())
-            .with_context(|| format!("site variant {}", variant.id))?;
+        run_site_prepared(gen_ro, &variant.spec, opts, vdir.as_deref())
+    });
+    let mut out = Vec::with_capacity(variants.len());
+    for (variant, r) in variants.into_iter().zip(results) {
+        let report = r.with_context(|| format!("site variant {}", variant.id))?;
         out.push((variant, report));
     }
     if let Some(dir) = out_dir {
-        std::fs::write(dir.join("site_sweep_summary.csv"), sweep_summary_csv(&out))?;
+        fsx::atomic_write(&dir.join("site_sweep_summary.csv"), sweep_summary_csv(&out).as_bytes())?;
         grid.save(&dir.join("site_sweep.json"))?;
     }
     Ok(out)
+}
+
+/// Header line for the site-sweep summary. `site` supplies the
+/// data-independent characterization columns (ramp intervals come from the
+/// spec, so any variant's summary yields the same header); `None` — no
+/// variant has completed — drops them, matching an empty result set.
+pub(crate) fn site_sweep_header(site: Option<&SeriesSummary>, with_overlay: bool) -> String {
+    let mut s = String::from(
+        "variant,site,facilities,servers,peak_w,avg_w,p99_w,energy_kwh,cv,load_factor,max_ramp_w",
+    );
+    if let Some(site) = site {
+        super::metrics::characterization_header(site, with_overlay, &mut s);
+    }
+    s.push_str(",coincidence_factor,headroom_frac\n");
+    s
+}
+
+/// One [`site_sweep_header`]-shaped row (trailing newline included).
+pub(crate) fn site_sweep_row(variant_id: &str, report: &SiteReport, with_overlay: bool) -> String {
+    let mut s = format!(
+        "{},{},{},{},{},{},{},{},{},{},{}",
+        variant_id,
+        csv_field(&report.spec.name),
+        report.facilities.len(),
+        report.spec.n_servers(),
+        report.site.stats.peak_w,
+        report.site.stats.avg_w,
+        report.site.stats.p99_w,
+        report.site.stats.energy_kwh,
+        report.site.stats.cv,
+        report.site.stats.load_factor,
+        report.site.stats.max_ramp_w,
+    );
+    super::metrics::characterization_row(&report.site, with_overlay, &mut s);
+    s.push_str(&format!(",{},{}\n", report.coincidence_factor, report.headroom_frac));
+    s
 }
 
 /// One site row per variant (same metric columns as `site_summary.csv`'s
@@ -283,32 +342,141 @@ pub fn sweep_summary_csv(results: &[(SiteVariant, SiteReport)]) -> String {
     // One decision for the whole table: overlay columns appear when any
     // variant modulated its load (rows without a chain pad with empties).
     let with_overlay = results.iter().any(|(_, r)| r.has_overlays());
-    let mut s = String::from(
-        "variant,site,facilities,servers,peak_w,avg_w,p99_w,energy_kwh,cv,load_factor,max_ramp_w",
-    );
-    if let Some((_, first)) = results.first() {
-        super::metrics::characterization_header(&first.site, with_overlay, &mut s);
-    }
-    s.push_str(",coincidence_factor,headroom_frac\n");
+    let mut s = site_sweep_header(results.first().map(|(_, r)| &r.site), with_overlay);
     for (variant, report) in results {
-        s.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{}",
-            variant.id,
-            csv_field(&report.spec.name),
-            report.facilities.len(),
-            report.spec.n_servers(),
-            report.site.stats.peak_w,
-            report.site.stats.avg_w,
-            report.site.stats.p99_w,
-            report.site.stats.energy_kwh,
-            report.site.stats.cv,
-            report.site.stats.load_factor,
-            report.site.stats.max_ramp_w,
-        ));
-        super::metrics::characterization_row(&report.site, with_overlay, &mut s);
-        s.push_str(&format!(",{},{}\n", report.coincidence_factor, report.headroom_frac));
+        s.push_str(&site_sweep_row(&variant.id, report, with_overlay));
     }
     s
+}
+
+/// Manifest file name inside a checkpointed site-sweep output directory.
+pub const SITE_SWEEP_MANIFEST: &str = "manifest.json";
+
+/// What [`run_site_sweep_checkpointed`] hands back.
+pub struct SiteSweepOutcome {
+    /// Variants executed *this* run, paired with their reports, in grid
+    /// order (restored variants are in the summary but not re-run).
+    pub executed: Vec<(SiteVariant, SiteReport)>,
+    /// Variants restored from the manifest without re-running.
+    pub restored: usize,
+    /// Variants that exhausted their retry budget this run.
+    pub failed: Vec<QuarantinedCell>,
+    /// The final `site_sweep_summary.csv` bytes (restored + fresh rows in
+    /// grid order — byte-identical to an uninterrupted run).
+    pub summary_csv: String,
+    pub manifest_path: PathBuf,
+}
+
+/// Crash-safe [`run_site_sweep`]: a `manifest.json` in `dir` records every
+/// variant's status and summary row, updated atomically as variants
+/// finish. On a fresh directory this runs the whole grid; pointed at a
+/// directory holding a matching manifest it skips `done` variants (after
+/// verifying their exports are intact) and re-runs the rest. A variant
+/// that panics or errors is retried per [`RetryPolicy`], then quarantined
+/// — the remaining variants still run, and the final summary carries every
+/// completed row.
+pub fn run_site_sweep_checkpointed(
+    gen: &mut Generator,
+    grid: &SiteGrid,
+    opts: &SiteOptions,
+    dir: &Path,
+    policy: &RetryPolicy,
+) -> Result<SiteSweepOutcome> {
+    grid.validate()?;
+    let variants = grid.expand();
+    let ids: Vec<String> = variants.iter().map(|v| v.id.clone()).collect();
+    let hash = content_hash("site_sweep", &grid.to_json(), &opts.identity_json());
+    std::fs::create_dir_all(dir)?;
+    let mpath = dir.join(SITE_SWEEP_MANIFEST);
+    let mut manifest = if mpath.exists() {
+        let m = RunManifest::load(&mpath)?;
+        m.ensure_matches("site_sweep", &hash, &ids)?;
+        m
+    } else {
+        RunManifest::new("site_sweep", &grid.name, hash, grid.to_json(), opts.record_json(), &ids)
+    };
+    manifest.reconcile_exports(dir);
+    let restored = manifest.done_count();
+    // Overlay columns are a static property of the expanded grid (a chain
+    // is non-empty iff its spec lists a stage), so restored rows and fresh
+    // rows agree on the table shape without re-running anything.
+    let with_overlay = variants.iter().any(|v| {
+        !v.spec.overlays.is_empty() || v.spec.facilities.iter().any(|f| !f.overlays.is_empty())
+    });
+    let todo: Vec<usize> =
+        (0..variants.len()).filter(|&i| !manifest.is_done(&variants[i].id)).collect();
+    prepare_site(gen, &grid.base)?;
+    let keeper = ManifestKeeper::new(manifest, mpath.clone())?;
+    let gen_ro: &Generator = gen;
+    let results = parallel_map_results(todo.len(), 1, |k| -> Result<Option<SiteReport>> {
+        let variant = &variants[todo[k]];
+        let prior = keeper.with(|m| m.attempts(&variant.id));
+        let vdir = dir.join(&variant.id);
+        let isolated = run_isolated(policy, prior, |deadline| {
+            failpoint::hit("site.variant", &variant.id)?;
+            run_site_inner(gen_ro, &variant.spec, opts, Some(&vdir), Some(deadline))
+        });
+        match isolated {
+            Isolated::Done { value: report, attempts } => {
+                let row = site_sweep_row(&variant.id, &report, with_overlay);
+                let exports = variant_exports(dir, &variant.id)?;
+                keeper.update(|m| {
+                    if m.header.is_none() {
+                        m.header = Some(site_sweep_header(Some(&report.site), with_overlay));
+                    }
+                    m.mark_done(&variant.id, attempts, row, exports);
+                })?;
+                Ok(Some(report))
+            }
+            Isolated::Failed { attempts, reason } => {
+                keeper.update(|m| m.mark_failed(&variant.id, attempts, reason))?;
+                Ok(None)
+            }
+        }
+    });
+    // Only manifest-IO errors surface here; variant failures are already
+    // quarantined in the manifest.
+    let mut executed = Vec::new();
+    for (k, r) in results.into_iter().enumerate() {
+        let id = &variants[todo[k]].id;
+        if let Some(report) = r.with_context(|| format!("site variant {id}"))? {
+            executed.push((variants[todo[k]].clone(), report));
+        }
+    }
+    let manifest = keeper.into_inner();
+    let mut summary =
+        manifest.header.clone().unwrap_or_else(|| site_sweep_header(None, with_overlay));
+    for v in &variants {
+        if let Some(row) = manifest.row(&v.id) {
+            summary.push_str(row);
+        }
+    }
+    grid.save(&dir.join("site_sweep.json"))?;
+    fsx::atomic_write(&dir.join("site_sweep_summary.csv"), summary.as_bytes())?;
+    let failed: Vec<QuarantinedCell> = variants
+        .iter()
+        .filter_map(|v| {
+            let st = manifest.cells.get(&v.id)?;
+            (st.status == CellStatus::Failed).then(|| QuarantinedCell {
+                id: v.id.clone(),
+                attempts: st.attempts,
+                reason: st.reason.clone().unwrap_or_default(),
+            })
+        })
+        .collect();
+    Ok(SiteSweepOutcome { executed, restored, failed, summary_csv: summary, manifest_path: mpath })
+}
+
+/// Stat the three files every completed variant directory holds, as
+/// manifest export records (relative paths, recorded sizes).
+fn variant_exports(root: &Path, id: &str) -> Result<Vec<ExportRecord>> {
+    let mut out = Vec::with_capacity(3);
+    for name in ["site_load.csv", "site_summary.csv", "site_spec.json"] {
+        let p = root.join(id).join(name);
+        let meta = std::fs::metadata(&p).with_context(|| format!("stat export {}", p.display()))?;
+        out.push(ExportRecord { path: format!("{id}/{name}"), bytes: meta.len() });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

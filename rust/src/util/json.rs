@@ -603,14 +603,22 @@ pub fn to_string_pretty(v: &Json) -> String {
     out
 }
 
-/// Write pretty JSON to a file, creating parent directories.
+/// Write pretty JSON to a file, creating parent directories. The write is
+/// atomic: bytes are staged to a `<name>.tmp` sibling and renamed into
+/// place, so a crash mid-write never leaves a truncated document behind —
+/// specs, artifacts, and the sweep run manifest all rely on this.
 pub fn write_file(path: &std::path::Path, v: &Json) -> Result<(), JsonError> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)
             .map_err(|e| JsonError { msg: format!("mkdir {}: {e}", parent.display()) })?;
     }
-    std::fs::write(path, to_string_pretty(v))
-        .map_err(|e| JsonError { msg: format!("write {}: {e}", path.display()) })
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    let tmp = path.with_file_name(name);
+    std::fs::write(&tmp, to_string_pretty(v))
+        .map_err(|e| JsonError { msg: format!("write {}: {e}", tmp.display()) })?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| JsonError { msg: format!("rename {}: {e}", path.display()) })
 }
 
 #[cfg(test)]

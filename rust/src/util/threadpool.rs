@@ -1,8 +1,14 @@
 //! Minimal scoped parallel-map used by the coordinator to fan server-trace
 //! generation across cores (tokio/rayon unavailable offline).
 //!
-//! `parallel_map` preserves input order in its output and propagates panics.
+//! `parallel_map` preserves input order in its output and propagates panics
+//! (one bad item tears down the batch — right for the tightly-coupled
+//! server fan-out inside a single cell). `parallel_map_results` is the
+//! fault-isolating variant for independent items (sweep cells): each
+//! item's panic or error lands in its own `Result` slot and every other
+//! item still completes.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -42,6 +48,36 @@ where
         }
     });
     out.into_inner().unwrap().into_iter().map(|v| v.expect("worker completed")).collect()
+}
+
+/// Render a panic payload (from `catch_unwind` / `JoinHandle::join`) as a
+/// readable message. Payloads are almost always `&str` or `String`.
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string payload>".to_string()
+    }
+}
+
+/// Like [`parallel_map`], but each item is fault-isolated: `f`'s errors are
+/// returned in place, and a panicking item is caught and surfaced as an
+/// `Err` carrying the panic message instead of unwinding through the pool.
+/// Output order matches input order. Items never see each other's failures.
+pub fn parallel_map_results<T, F>(n: usize, workers: usize, f: F) -> Vec<anyhow::Result<T>>
+where
+    T: Send,
+    F: Fn(usize) -> anyhow::Result<T> + Sync,
+{
+    let call = |i: usize| -> anyhow::Result<T> {
+        match catch_unwind(AssertUnwindSafe(|| f(i))) {
+            Ok(r) => r,
+            Err(p) => Err(anyhow::anyhow!("worker panicked: {}", panic_message(&*p))),
+        }
+    };
+    parallel_map(n, workers, call)
 }
 
 /// Fold items `0..n` in parallel into per-worker accumulators, then reduce.
@@ -139,5 +175,43 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn results_isolate_panics_and_errors_per_item() {
+        let out = parallel_map_results(10, 4, |i| {
+            if i == 3 {
+                anyhow::bail!("bad item");
+            }
+            if i == 5 {
+                panic!("boom {i}");
+            }
+            Ok(i * 10)
+        });
+        assert_eq!(out.len(), 10);
+        for (i, r) in out.iter().enumerate() {
+            match (i, r) {
+                (3, Err(e)) => assert!(format!("{e}").contains("bad item")),
+                (5, Err(e)) => {
+                    let msg = format!("{e}");
+                    assert!(msg.contains("worker panicked") && msg.contains("boom 5"), "{msg}");
+                }
+                (_, Ok(v)) => assert_eq!(*v, i * 10),
+                (_, Err(e)) => panic!("item {i} unexpectedly failed: {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn results_single_worker_catches_too() {
+        // workers == 1 runs on the caller thread; the catch must still hold.
+        let out = parallel_map_results(2, 1, |i| {
+            if i == 0 {
+                panic!("caller-thread panic");
+            }
+            Ok(i)
+        });
+        assert!(out[0].is_err());
+        assert_eq!(out[1].as_ref().unwrap(), &1);
     }
 }

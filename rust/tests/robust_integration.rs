@@ -1,0 +1,479 @@
+//! Integration: the crash-safe sweep layer end-to-end — checkpointed
+//! execution against the plain runner's bytes, manifest-driven resume
+//! from arbitrary completed prefixes, per-cell quarantine of persistent
+//! failures, and (behind `--features failpoints`) deterministic fault
+//! injection at the named sites.
+//!
+//! Armed failpoints are process-global, so every test in this binary
+//! serializes on one lock — a failpoint armed for one test must never
+//! leak into a concurrently running sweep.
+
+use powertrace_sim::aggregate::Topology;
+use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
+use powertrace_sim::robust::{CellStatus, RetryPolicy, RunManifest};
+use powertrace_sim::scenarios::{
+    run_sweep, run_sweep_checkpointed, GridDefaults, SweepGrid, SweepOptions, SWEEP_MANIFEST,
+};
+use powertrace_sim::site::{
+    run_site_sweep, run_site_sweep_checkpointed, sweep_summary_csv, SiteGrid, SiteOptions,
+    SiteSpec, SITE_SWEEP_MANIFEST,
+};
+use powertrace_sim::testutil::{check_seeded, synth_generator};
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Serialize the whole binary (see the module docs). Poisoning is
+/// harmless here — a failed test already reported its panic.
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A fresh per-test output directory under the system temp root.
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("powertrace_test_robust_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// 2 workloads × 1 topology × 1 fleet × 2 seeds = 4 cells
+/// (`w{0,1}-t0-f0-s{3,4}`), 40 s horizon — small enough that every test
+/// runs the grid several times.
+fn small_grid(id: &str) -> SweepGrid {
+    SweepGrid {
+        name: "robust-itest".into(),
+        defaults: GridDefaults { horizon_s: 40.0, ..GridDefaults::default() },
+        workloads: vec![
+            WorkloadSpec::Poisson { rate: 0.5 },
+            WorkloadSpec::Mmpp { mean_rate: 0.5, burstiness: 4.0 },
+        ],
+        topologies: vec![Topology { rows: 1, racks_per_row: 1, servers_per_rack: 2 }],
+        fleets: vec![ServerAssignment::Uniform(id.to_string())],
+        seeds: vec![3, 4],
+    }
+}
+
+/// 1 phase spread × 2 seeds = 2 variants (`p0-s0`, `p0-s7`) over a
+/// 2-facility, 40 s site.
+fn site_grid(id: &str) -> SiteGrid {
+    let mut scenario = ScenarioSpec::default_poisson(id, 0.5);
+    scenario.topology = Topology { rows: 1, racks_per_row: 1, servers_per_rack: 2 };
+    scenario.horizon_s = 40.0;
+    let mut base = SiteSpec::staggered("robust", &scenario, 2, 0.0);
+    base.utility_intervals_s = vec![15.0, 30.0];
+    SiteGrid {
+        name: "robust-site".into(),
+        base,
+        phase_spreads_h: vec![0.0],
+        seeds: vec![0, 7],
+        battery_kwh: Vec::new(),
+        cap_w: Vec::new(),
+        battery: None,
+    }
+}
+
+fn site_opts() -> SiteOptions {
+    SiteOptions { dt_s: 0.25, window_s: 7.0, load_interval_s: 1.0, ..SiteOptions::default() }
+}
+
+fn load_manifest(dir: &Path) -> RunManifest {
+    RunManifest::load(&dir.join(SWEEP_MANIFEST)).unwrap()
+}
+
+/// Rewind one cell to `pending` the way a pre-completion crash would have
+/// left it (attempts survive, the row and exports do not).
+fn demote(m: &mut RunManifest, id: &str) {
+    let c = m.cells.get_mut(id).unwrap();
+    c.status = CellStatus::Pending;
+    c.row = None;
+    c.reason = None;
+    c.exports.clear();
+}
+
+/// No `.tmp` staging file may survive a successful run, anywhere in the
+/// output tree — atomic exports either rename into place or vanish.
+fn assert_no_tmp(dir: &Path) {
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let p = entry.unwrap().path();
+        if p.is_dir() {
+            assert_no_tmp(&p);
+        } else {
+            let stale = p.extension().map(|e| e == "tmp").unwrap_or(false);
+            assert!(!stale, "stale staging file {}", p.display());
+        }
+    }
+}
+
+#[test]
+fn checkpointed_run_matches_plain_run_and_completes_manifest() {
+    let _guard = serial();
+    let (mut gen, ids) = synth_generator("robust_ckpt_full", 8, 4, 1, 11).unwrap();
+    let grid = small_grid(&ids[0]);
+    let opts = SweepOptions::default();
+    let reference = run_sweep(&mut gen, &grid, &opts).unwrap().summary_csv();
+
+    let dir = temp_dir("ckpt_full");
+    let policy = RetryPolicy::default();
+    let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+    assert_eq!(out.summary_csv, reference, "checkpointed bytes == plain runner bytes");
+    assert_eq!(out.restored, 0);
+    assert!(out.failed.is_empty());
+    assert_eq!(out.report.cells.len(), 4);
+    assert_eq!(std::fs::read_to_string(dir.join("summary.csv")).unwrap(), reference);
+    assert!(out.manifest_path.exists(), "{} must exist", out.manifest_path.display());
+
+    let m = load_manifest(&dir);
+    assert_eq!(m.kind, "sweep");
+    assert_eq!(m.done_count(), 4);
+    for (id, c) in &m.cells {
+        assert_eq!(c.attempts, 1, "cell {id}");
+        assert!(!c.exports.is_empty(), "cell {id} must record its exports");
+        for e in &c.exports {
+            let meta = std::fs::metadata(dir.join(&e.path))
+                .unwrap_or_else(|err| panic!("export {}: {err}", e.path));
+            assert_eq!(meta.len(), e.bytes, "recorded size of {}", e.path);
+        }
+    }
+    assert_no_tmp(&dir);
+}
+
+#[test]
+fn resume_reruns_demoted_cells_to_identical_bytes() {
+    let _guard = serial();
+    let (mut gen, ids) = synth_generator("robust_resume", 8, 4, 1, 19).unwrap();
+    let grid = small_grid(&ids[0]);
+    let opts = SweepOptions { window_s: 7.0, ..SweepOptions::default() };
+    let dir = temp_dir("resume");
+    let policy = RetryPolicy::default();
+    let reference =
+        run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap().summary_csv;
+
+    // Simulate a crash: one cell rewound in the manifest, one with its
+    // export directory deleted (reconcile_exports must demote it), and
+    // the assembled summary removed.
+    let mut m = load_manifest(&dir);
+    demote(&mut m, "w0-t0-f0-s3");
+    m.save(&dir.join(SWEEP_MANIFEST)).unwrap();
+    std::fs::remove_dir_all(dir.join("w0-t0-f0-s3")).unwrap();
+    std::fs::remove_dir_all(dir.join("w1-t0-f0-s4")).unwrap();
+    std::fs::remove_file(dir.join("summary.csv")).unwrap();
+
+    // Resume under a different byte-invariant layout: window size and
+    // worker counts may change freely between runs of one manifest.
+    let opts2 = SweepOptions {
+        window_s: 16.0,
+        scenario_workers: 1,
+        server_workers: 2,
+        ..SweepOptions::default()
+    };
+    let out = run_sweep_checkpointed(&mut gen, &grid, &opts2, &dir, &policy).unwrap();
+    assert_eq!(out.restored, 2);
+    assert_eq!(out.report.cells.len(), 2, "only the demoted cells re-run");
+    assert!(out.failed.is_empty());
+    assert_eq!(out.summary_csv, reference);
+    assert_eq!(std::fs::read_to_string(dir.join("summary.csv")).unwrap(), reference);
+    let m = load_manifest(&dir);
+    assert_eq!(m.attempts("w0-t0-f0-s3"), 2, "demoted cells accumulate attempts");
+    assert_eq!(m.attempts("w1-t0-f0-s4"), 2);
+    assert_eq!(m.attempts("w0-t0-f0-s4"), 1);
+    assert_eq!(m.attempts("w1-t0-f0-s3"), 1);
+    assert_no_tmp(&dir);
+}
+
+#[test]
+fn failing_cell_is_quarantined_then_resumes_clean() {
+    let _guard = serial();
+    let (mut gen, ids) = synth_generator("robust_quarantine", 8, 4, 1, 13).unwrap();
+    // A replay workload whose trace file does not exist (yet): the load
+    // happens lazily inside the cell run, so the failure is isolated to
+    // that cell and the grid as a whole keeps going.
+    let replay_path = std::env::temp_dir().join("powertrace_test_robust_replay.csv");
+    let _ = std::fs::remove_file(&replay_path);
+    let mut grid = small_grid(&ids[0]);
+    grid.workloads = vec![
+        WorkloadSpec::Poisson { rate: 0.5 },
+        WorkloadSpec::Replay { path: replay_path.to_string_lossy().into_owned(), offset_s: 0.0 },
+    ];
+    grid.seeds = vec![3];
+    let opts = SweepOptions::default();
+    let policy = RetryPolicy { max_retries: 2, cell_timeout_s: 0.0 };
+
+    let dir = temp_dir("quarantine");
+    let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+    assert_eq!(out.report.cells.len(), 1, "the healthy cell still completes");
+    assert_eq!(out.failed.len(), 1);
+    assert_eq!(out.failed[0].id, "w1-t0-f0-s3");
+    assert_eq!(out.failed[0].attempts, 3, "1 initial + 2 retries");
+    assert!(!out.failed[0].reason.is_empty());
+    assert_eq!(out.summary_csv.lines().count(), 2, "header + the one done row");
+
+    // Provide the missing trace and resume: only the quarantined cell
+    // re-runs, and the summary completes.
+    std::fs::copy("data/traces/sample_requests.csv", &replay_path).unwrap();
+    let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+    assert_eq!(out.restored, 1);
+    assert!(out.failed.is_empty());
+    let m = load_manifest(&dir);
+    assert_eq!(m.done_count(), 2);
+    assert_eq!(m.attempts("w1-t0-f0-s3"), 4, "3 failed attempts + the successful one");
+
+    // A from-scratch run with the trace present produces the same bytes.
+    let clean = temp_dir("quarantine_clean");
+    let fresh = run_sweep_checkpointed(&mut gen, &grid, &opts, &clean, &policy).unwrap();
+    assert_eq!(fresh.summary_csv, out.summary_csv);
+}
+
+#[test]
+fn prop_resume_from_any_prefix_reproduces_summary_bytes() {
+    let _guard = serial();
+    let (mut gen, ids) = synth_generator("robust_prefix", 8, 4, 1, 41).unwrap();
+    let grid = small_grid(&ids[0]);
+    let reference = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap().summary_csv();
+    let cell_ids: Vec<String> = grid.expand().iter().map(|c| c.id.clone()).collect();
+
+    let gen = std::cell::RefCell::new(gen);
+    let case_no = std::cell::Cell::new(0u32);
+    check_seeded("resume from any completed prefix", 0xBEEF, 5, |rng| {
+        let case = case_no.get();
+        case_no.set(case + 1);
+        let dir = temp_dir(&format!("prefix_{case}"));
+        let opts1 = SweepOptions {
+            window_s: if rng.f64() < 0.5 { 7.0 } else { 0.0 },
+            scenario_workers: 1 + (rng.f64() * 2.0) as usize,
+            ..SweepOptions::default()
+        };
+        let mut g = gen.borrow_mut();
+        let policy = RetryPolicy::default();
+        let out = run_sweep_checkpointed(&mut g, &grid, &opts1, &dir, &policy).unwrap();
+        assert_eq!(out.summary_csv, reference, "clean checkpointed run, case {case}");
+
+        // Rewind a random subset to pending — a crash after an arbitrary
+        // completed-cell prefix — then resume under an independently
+        // random byte-invariant layout.
+        let mut m = load_manifest(&dir);
+        let mut demoted = 0;
+        for id in &cell_ids {
+            if rng.f64() < 0.5 {
+                demote(&mut m, id);
+                let _ = std::fs::remove_dir_all(dir.join(id));
+                demoted += 1;
+            }
+        }
+        m.save(&dir.join(SWEEP_MANIFEST)).unwrap();
+        let _ = std::fs::remove_file(dir.join("summary.csv"));
+
+        let opts2 = SweepOptions {
+            window_s: if rng.f64() < 0.5 { 16.0 } else { 0.0 },
+            scenario_workers: 1 + (rng.f64() * 2.0) as usize,
+            server_workers: 1 + (rng.f64() * 2.0) as usize,
+            ..SweepOptions::default()
+        };
+        let out = run_sweep_checkpointed(&mut g, &grid, &opts2, &dir, &policy).unwrap();
+        assert_eq!(out.restored, cell_ids.len() - demoted, "case {case}");
+        assert_eq!(out.summary_csv, reference, "resumed run, case {case}");
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn site_sweep_checkpoint_and_resume_are_byte_identical() {
+    let _guard = serial();
+    let (mut gen, ids) = synth_generator("robust_site", 8, 4, 1, 23).unwrap();
+    let grid = site_grid(&ids[0]);
+    let opts = site_opts();
+    let policy = RetryPolicy::default();
+
+    let dir = temp_dir("site_ckpt");
+    let out = run_site_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+    assert_eq!(out.executed.len(), 2);
+    assert_eq!(out.restored, 0);
+    assert!(out.failed.is_empty());
+
+    // The plain (non-checkpointed) sweep writes the same bytes — summary
+    // and every per-variant export.
+    let plain_dir = temp_dir("site_plain");
+    let results = run_site_sweep(&mut gen, &grid, &opts, Some(&plain_dir)).unwrap();
+    let plain = std::fs::read_to_string(plain_dir.join("site_sweep_summary.csv")).unwrap();
+    assert_eq!(plain, sweep_summary_csv(&results));
+    assert_eq!(out.summary_csv, plain);
+    for (v, _) in &results {
+        for name in ["site_load.csv", "site_summary.csv", "site_spec.json"] {
+            let a = std::fs::read(dir.join(&v.id).join(name)).unwrap();
+            let b = std::fs::read(plain_dir.join(&v.id).join(name)).unwrap();
+            assert_eq!(a, b, "variant {} file {name}", v.id);
+        }
+    }
+
+    // Delete one variant's load export: reconcile demotes it, resume
+    // re-runs exactly that variant, and the summary bytes are unchanged.
+    std::fs::remove_file(dir.join("p0-s7").join("site_load.csv")).unwrap();
+    std::fs::remove_file(dir.join("site_sweep_summary.csv")).unwrap();
+    let out = run_site_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+    assert_eq!(out.restored, 1);
+    assert_eq!(out.executed.len(), 1);
+    assert_eq!(out.executed[0].0.id, "p0-s7");
+    assert!(out.failed.is_empty());
+    assert_eq!(out.summary_csv, plain);
+    assert_eq!(std::fs::read_to_string(dir.join("site_sweep_summary.csv")).unwrap(), plain);
+    let m = RunManifest::load(&dir.join(SITE_SWEEP_MANIFEST)).unwrap();
+    assert_eq!(m.kind, "site_sweep");
+    assert_eq!(m.done_count(), 2);
+    assert_no_tmp(&dir);
+}
+
+/// Deterministic fault injection at the named sites — compiled only with
+/// `--features failpoints` (CI runs this suite in a dedicated job).
+#[cfg(feature = "failpoints")]
+mod failpoints {
+    use super::*;
+    use powertrace_sim::robust::failpoint::{arm, clear_all, FailAction, FailSpec};
+
+    fn always(site: &str, tag: &str, action: FailAction) -> FailSpec {
+        FailSpec { site: site.into(), tag: tag.into(), action, remaining: None }
+    }
+
+    fn once(site: &str, tag: &str, action: FailAction) -> FailSpec {
+        FailSpec { site: site.into(), tag: tag.into(), action, remaining: Some(1) }
+    }
+
+    #[test]
+    fn injected_panic_quarantines_cell_and_resume_recovers() {
+        let _guard = serial();
+        clear_all();
+        let (mut gen, ids) = synth_generator("robust_fp_panic", 8, 4, 1, 29).unwrap();
+        let grid = small_grid(&ids[0]);
+        let opts = SweepOptions::default();
+        let policy = RetryPolicy { max_retries: 1, cell_timeout_s: 0.0 };
+
+        let dir = temp_dir("fp_panic");
+        arm(always("sweep.cell", "w1-t0-f0-s3", FailAction::Panic));
+        let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        clear_all();
+        assert_eq!(out.report.cells.len(), 3, "healthy cells complete despite the panic");
+        assert_eq!(out.failed.len(), 1);
+        assert_eq!(out.failed[0].id, "w1-t0-f0-s3");
+        assert_eq!(out.failed[0].attempts, 2, "1 initial + 1 retry");
+        assert!(out.failed[0].reason.contains("injected panic"), "{}", out.failed[0].reason);
+
+        // Disarmed, the resume completes and matches a clean run.
+        let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        assert_eq!(out.restored, 3);
+        assert!(out.failed.is_empty());
+        let clean = temp_dir("fp_panic_clean");
+        let fresh = run_sweep_checkpointed(&mut gen, &grid, &opts, &clean, &policy).unwrap();
+        assert_eq!(fresh.summary_csv, out.summary_csv);
+    }
+
+    #[test]
+    fn transient_panic_is_retried_to_success() {
+        let _guard = serial();
+        clear_all();
+        let (mut gen, ids) = synth_generator("robust_fp_retry", 8, 4, 1, 31).unwrap();
+        let grid = small_grid(&ids[0]);
+        let opts = SweepOptions::default();
+        let policy = RetryPolicy::default();
+        let dir = temp_dir("fp_retry");
+        arm(once("sweep.cell", "w0-t0-f0-s4", FailAction::Panic));
+        let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        clear_all();
+        assert!(out.failed.is_empty(), "one panic fits the default retry budget");
+        assert_eq!(out.report.cells.len(), 4);
+        let m = load_manifest(&dir);
+        assert_eq!(m.attempts("w0-t0-f0-s4"), 2);
+        assert_eq!(m.attempts("w0-t0-f0-s3"), 1);
+    }
+
+    #[test]
+    fn transient_export_error_retries_without_stale_tmp_files() {
+        let _guard = serial();
+        clear_all();
+        let (mut gen, ids) = synth_generator("robust_fp_export", 8, 4, 1, 37).unwrap();
+        let grid = small_grid(&ids[0]);
+        let opts = SweepOptions { window_s: 7.0, ..SweepOptions::default() };
+        let policy = RetryPolicy::default();
+
+        let clean = temp_dir("fp_export_clean");
+        let reference = run_sweep_checkpointed(&mut gen, &grid, &opts, &clean, &policy).unwrap();
+
+        // One injected write failure on the first rack-series export the
+        // pool reaches: that cell fails mid-stream and is retried.
+        let dir = temp_dir("fp_export");
+        arm(once("export.write", "racks", FailAction::Error));
+        let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        clear_all();
+        assert!(out.failed.is_empty());
+        assert_eq!(out.report.cells.len(), 4);
+        assert_eq!(out.summary_csv, reference.summary_csv);
+        let m = load_manifest(&dir);
+        let attempts: Vec<u32> = m.cells.values().map(|c| c.attempts).collect();
+        assert_eq!(attempts.iter().sum::<u32>(), 5, "exactly one cell retried: {attempts:?}");
+        assert_no_tmp(&dir);
+        // The retried cell's exports match the clean run byte-for-byte.
+        for (id, c) in &m.cells {
+            for e in &c.exports {
+                let a = std::fs::read(dir.join(&e.path)).unwrap();
+                let b = std::fs::read(clean.join(&e.path)).unwrap();
+                assert_eq!(a, b, "cell {id} export {}", e.path);
+            }
+        }
+    }
+
+    #[test]
+    fn stalled_cell_exceeds_deadline_and_is_quarantined() {
+        let _guard = serial();
+        clear_all();
+        let (mut gen, ids) = synth_generator("robust_fp_stall", 8, 4, 1, 43).unwrap();
+        let grid = small_grid(&ids[0]);
+        let opts = SweepOptions { window_s: 7.0, ..SweepOptions::default() };
+
+        // The stalled cell sleeps 1.5 s at its first window boundary and
+        // the 1 s soft budget trips at the next deadline check; healthy
+        // cells never sleep and finish far inside the budget.
+        let dir = temp_dir("fp_stall");
+        arm(always("sweep.cell.window", "w1-t0-f0-s4", FailAction::SleepMs(1500)));
+        let policy = RetryPolicy { max_retries: 0, cell_timeout_s: 1.0 };
+        let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        clear_all();
+        assert_eq!(out.report.cells.len(), 3);
+        assert_eq!(out.failed.len(), 1);
+        assert_eq!(out.failed[0].id, "w1-t0-f0-s4");
+        assert_eq!(out.failed[0].attempts, 1, "max_retries = 0: a single attempt");
+        assert!(out.failed[0].reason.contains("budget"), "{}", out.failed[0].reason);
+
+        // Disarmed, resume completes to the clean run's bytes.
+        let relaxed = RetryPolicy::default();
+        let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &relaxed).unwrap();
+        assert_eq!(out.restored, 3);
+        assert!(out.failed.is_empty());
+        let clean = temp_dir("fp_stall_clean");
+        let fresh = run_sweep_checkpointed(&mut gen, &grid, &opts, &clean, &relaxed).unwrap();
+        assert_eq!(fresh.summary_csv, out.summary_csv);
+    }
+
+    #[test]
+    fn injected_site_variant_panic_quarantines_and_resumes() {
+        let _guard = serial();
+        clear_all();
+        let (mut gen, ids) = synth_generator("robust_fp_site", 8, 4, 1, 47).unwrap();
+        let grid = site_grid(&ids[0]);
+        let opts = site_opts();
+        let policy = RetryPolicy { max_retries: 0, cell_timeout_s: 0.0 };
+
+        let dir = temp_dir("fp_site");
+        arm(always("site.variant", "p0-s7", FailAction::Panic));
+        let out = run_site_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        clear_all();
+        assert_eq!(out.executed.len(), 1, "the healthy variant completes");
+        assert_eq!(out.failed.len(), 1);
+        assert_eq!(out.failed[0].id, "p0-s7");
+        assert!(out.failed[0].reason.contains("injected panic"), "{}", out.failed[0].reason);
+
+        let out = run_site_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        assert_eq!(out.restored, 1);
+        assert!(out.failed.is_empty());
+        let clean = temp_dir("fp_site_clean");
+        let fresh = run_site_sweep_checkpointed(&mut gen, &grid, &opts, &clean, &policy).unwrap();
+        assert_eq!(fresh.summary_csv, out.summary_csv);
+    }
+}
