@@ -17,15 +17,16 @@
 //! state dictionary, the weight count, and the synthesis mode on every
 //! load.
 
-use crate::catalog::Catalog;
 use crate::classifier::{flat_param_count, ChunkSpec};
+use crate::source::{self, ArtifactSource};
 use crate::states::StateDictionary;
 use crate::surrogate::{DurationSamples, SurrogateParams};
 use crate::synth::SynthMode;
 use crate::util::json::{self, Json};
 use crate::workload::{replay, Schedule};
 use anyhow::{bail, ensure, Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+use std::sync::Arc;
 
 /// The artifact manifest (`artifacts/manifest.json`).
 #[derive(Debug, Clone, PartialEq)]
@@ -193,51 +194,68 @@ impl MeasuredTrace {
     }
 }
 
-/// Handle to an on-disk artifact store.
+/// Handle to an artifact store — any [`ArtifactSource`] holding the
+/// `manifest.json` / `configs/` / `measured/` layout. The file-backed
+/// constructors ([`ArtifactStore::open`], [`ArtifactStore::open_default`])
+/// are host-only; [`ArtifactStore::from_source`] works anywhere, including
+/// wasm, over in-memory bytes.
 pub struct ArtifactStore {
-    /// Store root directory (contains `manifest.json`).
+    /// Store root directory — meaningful for file-backed stores (HLO
+    /// artifact path, messages); empty for in-memory sources.
     pub root: PathBuf,
     pub manifest: Manifest,
+    source: Arc<dyn ArtifactSource>,
 }
 
 impl ArtifactStore {
-    /// Open `<repo_root>/artifacts` (see [`Catalog::repo_root`]).
+    /// Open `<repo_root>/artifacts` (see `Catalog::repo_root`).
+    #[cfg(feature = "host")]
     pub fn open_default() -> Result<ArtifactStore> {
-        Self::open(&Catalog::repo_root().join("artifacts"))
+        Self::open(&crate::catalog::Catalog::repo_root().join("artifacts"))
     }
 
     /// Open a store rooted at `root` (must contain `manifest.json`).
-    pub fn open(root: &Path) -> Result<ArtifactStore> {
+    #[cfg(feature = "host")]
+    pub fn open(root: &std::path::Path) -> Result<ArtifactStore> {
         let mpath = root.join("manifest.json");
         if !mpath.exists() {
             bail!("artifact store not found at {} (run `make artifacts`)", root.display());
         }
-        let v = json::parse_file(&mpath).map_err(anyhow::Error::from)?;
-        let manifest = Manifest::from_json(&v)
-            .with_context(|| format!("parsing {}", mpath.display()))?;
-        Ok(ArtifactStore { root: root.to_path_buf(), manifest })
+        let mut store = Self::from_source(Arc::new(source::FsSource::new(root)))
+            .with_context(|| format!("opening artifact store {}", root.display()))?;
+        store.root = root.to_path_buf();
+        Ok(store)
     }
 
-    /// Path of the AOT-compiled classifier artifact.
+    /// Open a store over any byte provider (the wasm/embedding entry
+    /// point): reads and validates `manifest.json` from the source root.
+    pub fn from_source(src: Arc<dyn ArtifactSource>) -> Result<ArtifactStore> {
+        let text = source::read_to_string(src.as_ref(), "manifest.json")?;
+        let v = json::parse(&text).map_err(anyhow::Error::from)?;
+        let manifest = Manifest::from_json(&v).context("parsing manifest.json")?;
+        Ok(ArtifactStore { root: PathBuf::new(), manifest, source: src })
+    }
+
+    /// Path of the AOT-compiled classifier artifact (file-backed stores).
     pub fn hlo_path(&self) -> PathBuf {
         self.root.join(&self.manifest.hlo)
     }
 
-    /// Path of one configuration's artifact JSON.
+    /// Path of one configuration's artifact JSON (file-backed stores).
     pub fn config_path(&self, config_id: &str) -> PathBuf {
         self.root.join("configs").join(format!("{config_id}.json"))
     }
 
     /// Load and validate one configuration artifact.
     pub fn load_config(&self, config_id: &str) -> Result<ConfigArtifact> {
-        let path = self.config_path(config_id);
-        let v = json::parse_file(&path).map_err(anyhow::Error::from)?;
-        let art = ConfigArtifact::from_json(&v, &self.manifest)
-            .with_context(|| format!("parsing {}", path.display()))?;
+        let path = format!("configs/{config_id}.json");
+        let text = source::read_to_string(self.source.as_ref(), &path)?;
+        let v = json::parse(&text).map_err(anyhow::Error::from)?;
+        let art =
+            ConfigArtifact::from_json(&v, &self.manifest).with_context(|| format!("parsing {path}"))?;
         ensure!(
             art.config_id == config_id,
-            "artifact {} claims config '{}'",
-            path.display(),
+            "artifact {path} claims config '{}'",
             art.config_id
         );
         Ok(art)
@@ -246,20 +264,22 @@ impl ArtifactStore {
     /// Load every held-out measured trace for a configuration, in a stable
     /// (file-name sorted) order.
     pub fn load_all_measured(&self, config_id: &str) -> Result<Vec<MeasuredTrace>> {
-        let dir = self.root.join("measured").join(config_id);
-        let entries = std::fs::read_dir(&dir)
-            .with_context(|| format!("no measured traces at {}", dir.display()))?;
-        let mut paths: Vec<PathBuf> = entries
-            .filter_map(|e| e.ok().map(|e| e.path()))
-            .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        let dir = format!("measured/{config_id}");
+        let mut names: Vec<String> = self
+            .source
+            .list(&dir)
+            .with_context(|| format!("no measured traces at {dir}"))?
+            .into_iter()
+            .filter(|n| n.ends_with(".json"))
             .collect();
-        paths.sort();
-        let mut out = Vec::with_capacity(paths.len());
-        for p in paths {
-            let v = json::parse_file(&p).map_err(anyhow::Error::from)?;
+        names.sort();
+        let mut out = Vec::with_capacity(names.len());
+        for name in names {
+            let path = format!("{dir}/{name}");
+            let text = source::read_to_string(self.source.as_ref(), &path)?;
+            let v = json::parse(&text).map_err(anyhow::Error::from)?;
             out.push(
-                MeasuredTrace::from_json(&v)
-                    .with_context(|| format!("parsing {}", p.display()))?,
+                MeasuredTrace::from_json(&v).with_context(|| format!("parsing {path}"))?,
             );
         }
         Ok(out)
@@ -270,14 +290,12 @@ impl ArtifactStore {
 mod tests {
     use super::*;
     use crate::classifier::flat_param_count;
+    use crate::source::MemSource;
 
-    /// Write a minimal synthetic store (small hidden/k_max so the weight
-    /// vector stays tiny) and return its root.
-    fn synth_store(tag: &str) -> PathBuf {
-        let root = std::env::temp_dir().join(format!("powertrace_test_artifacts_{tag}"));
-        let _ = std::fs::remove_dir_all(&root);
-        std::fs::create_dir_all(root.join("configs")).unwrap();
-        std::fs::create_dir_all(root.join("measured/cfg_a")).unwrap();
+    /// Build a minimal synthetic in-memory store (small hidden/k_max so
+    /// the weight vector stays tiny).
+    fn synth_store() -> Arc<MemSource> {
+        let src = Arc::new(MemSource::new());
 
         let manifest = Manifest {
             configs: vec!["cfg_a".into()],
@@ -286,7 +304,7 @@ mod tests {
             hidden: 2,
             hlo: "bigru_fwd.hlo.txt".into(),
         };
-        json::write_file(&root.join("manifest.json"), &manifest.to_json()).unwrap();
+        src.insert("manifest.json", json::to_string(&manifest.to_json()).into_bytes());
 
         let n_params = flat_param_count(2, 3);
         let art = json::obj([
@@ -317,7 +335,7 @@ mod tests {
             ),
             ("weights", Json::from_f32s(&vec![0.01f32; n_params])),
         ]);
-        json::write_file(&root.join("configs/cfg_a.json"), &art).unwrap();
+        src.insert("configs/cfg_a.json", json::to_string(&art).into_bytes());
 
         let m = json::obj([
             ("rate", 0.5.into()),
@@ -339,14 +357,35 @@ mod tests {
                 ]),
             ),
         ]);
-        json::write_file(&root.join("measured/cfg_a/r0.5_rep3.json"), &m).unwrap();
-        root
+        src.insert("measured/cfg_a/r0.5_rep3.json", json::to_string(&m).into_bytes());
+        src
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn open_missing_store_is_clear_error() {
-        let err = ArtifactStore::open(Path::new("/nonexistent/artifacts")).unwrap_err();
+        let err =
+            ArtifactStore::open(std::path::Path::new("/nonexistent/artifacts")).unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[cfg(feature = "host")]
+    #[test]
+    fn open_reads_a_directory_store() {
+        // `open` is a thin FsSource wrapper over `from_source`; one smoke
+        // proves the directory path still round-trips end to end.
+        let src = synth_store();
+        let root = std::env::temp_dir().join("powertrace_test_artifacts_open");
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(root.join("configs")).unwrap();
+        for path in ["manifest.json", "configs/cfg_a.json"] {
+            std::fs::write(root.join(path), src.read(path).unwrap()).unwrap();
+        }
+        let store = ArtifactStore::open(&root).unwrap();
+        assert_eq!(store.root, root);
+        assert_eq!(store.manifest.configs, vec!["cfg_a".to_string()]);
+        assert!(store.hlo_path().ends_with("bigru_fwd.hlo.txt"));
+        store.load_config("cfg_a").unwrap();
     }
 
     #[test]
@@ -363,8 +402,7 @@ mod tests {
 
     #[test]
     fn loads_synthetic_store() {
-        let root = synth_store("load");
-        let store = ArtifactStore::open(&root).unwrap();
+        let store = ArtifactStore::from_source(synth_store()).unwrap();
         assert_eq!(store.manifest.configs, vec!["cfg_a".to_string()]);
         assert_eq!(store.manifest.chunk, ChunkSpec { t: 32, halo: 4 });
         assert!(store.hlo_path().ends_with("bigru_fwd.hlo.txt"));
@@ -391,37 +429,36 @@ mod tests {
         assert_eq!(m.durations.n_in[0], 128);
     }
 
+    /// Re-insert `configs/cfg_a.json` with one field mutated.
+    fn mutate_config(src: &MemSource, field: &str, value: Json) {
+        let text = String::from_utf8(src.read("configs/cfg_a.json").unwrap()).unwrap();
+        let mut v = json::parse(&text).unwrap();
+        if let Json::Obj(o) = &mut v {
+            o.insert(field.into(), value);
+        }
+        src.insert("configs/cfg_a.json", json::to_string(&v).into_bytes());
+    }
+
     #[test]
     fn rejects_weight_count_mismatch() {
-        let root = synth_store("badweights");
-        let store = ArtifactStore::open(&root).unwrap();
-        // Truncate the weight vector and re-write.
-        let p = store.config_path("cfg_a");
-        let mut v = json::parse_file(&p).unwrap();
-        if let Json::Obj(o) = &mut v {
-            o.insert("weights".into(), Json::from_f64s(&[1.0, 2.0]));
-        }
-        json::write_file(&p, &v).unwrap();
+        let src = synth_store();
+        // Truncate the weight vector and re-insert.
+        mutate_config(&src, "weights", Json::from_f64s(&[1.0, 2.0]));
+        let store = ArtifactStore::from_source(src).unwrap();
         assert!(store.load_config("cfg_a").is_err());
     }
 
     #[test]
     fn rejects_k_dictionary_mismatch() {
-        let root = synth_store("badk");
-        let store = ArtifactStore::open(&root).unwrap();
-        let p = store.config_path("cfg_a");
-        let mut v = json::parse_file(&p).unwrap();
-        if let Json::Obj(o) = &mut v {
-            o.insert("k".into(), Json::Num(3.0));
-        }
-        json::write_file(&p, &v).unwrap();
+        let src = synth_store();
+        mutate_config(&src, "k", Json::Num(3.0));
+        let store = ArtifactStore::from_source(src).unwrap();
         assert!(store.load_config("cfg_a").is_err());
     }
 
     #[test]
     fn missing_measured_dir_is_error() {
-        let root = synth_store("nomeasured");
-        let store = ArtifactStore::open(&root).unwrap();
+        let store = ArtifactStore::from_source(synth_store()).unwrap();
         assert!(store.load_all_measured("cfg_missing").is_err());
     }
 }

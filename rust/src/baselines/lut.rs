@@ -147,6 +147,7 @@ mod tests {
         assert_eq!(phases[8], Phase::Mixed); // t=2.0: A in decode, B in prefill
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn power_levels_are_discrete() {
         let cat = Catalog::load_default().unwrap();
@@ -166,6 +167,7 @@ mod tests {
         assert_eq!(distinct.len(), 4);
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn tp_subset_keeps_other_gpus_idle() {
         let cat = Catalog::load_default().unwrap();

@@ -43,6 +43,7 @@ pub fn pooled_mean(traces: &[Vec<f32>]) -> f64 {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "host")]
     #[test]
     fn tdp_is_nameplate_flat() {
         let cat = Catalog::load_default().unwrap();

@@ -6,6 +6,7 @@ use crate::aggregate::Topology;
 use crate::util::json::{self, Json};
 use crate::workload::{TokenLengths, TrafficMode};
 use anyhow::{bail, Context, Result};
+#[cfg(feature = "host")]
 use std::path::Path;
 
 /// Workload scenario: the request arrival process driving every server.
@@ -371,11 +372,13 @@ impl ScenarioSpec {
         Ok(spec)
     }
 
+    #[cfg(feature = "host")]
     pub fn load(path: &Path) -> Result<ScenarioSpec> {
         let v = json::parse_file(path).map_err(anyhow::Error::from)?;
         Self::from_json(&v).with_context(|| format!("parsing scenario {}", path.display()))
     }
 
+    #[cfg(feature = "host")]
     pub fn save(&self, path: &Path) -> Result<()> {
         json::write_file(path, &self.to_json()).map_err(anyhow::Error::from)
     }
@@ -492,6 +495,7 @@ mod tests {
         assert!(ScenarioSpec::from_json(&j).is_err());
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join("powertrace_test_config");

@@ -26,7 +26,10 @@ use crate::classifier::{
     BatchScan, LaneFeatures, NativeBiGru, ScratchArena, StateClassifier, BATCH_TILE,
 };
 use crate::config::{ScenarioSpec, WorkloadSpec};
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::Executable;
+#[cfg(feature = "host")]
+use crate::runtime::Runtime;
+use crate::source::ArtifactSource;
 use crate::surrogate::{
     features_interleaved_into, simulate_queue_policy, OccupancyEvents, QueuePolicy,
 };
@@ -135,6 +138,12 @@ pub struct Generator {
     /// gets its own [`ReplaySlot`] so a cold load of one path never blocks
     /// servers replaying an already-cached other path.
     replay_cache: Mutex<BTreeMap<String, Arc<ReplaySlot>>>,
+    /// Byte provider for replay traces and token-empirical length
+    /// distributions. Hosts default to a filesystem passthrough (paths in
+    /// specs keep their historical meaning); core-only builds default to
+    /// an empty in-memory source — inject one via
+    /// [`Generator::set_replay_source`].
+    replay_source: Arc<dyn ArtifactSource>,
 }
 
 /// Per-path replay-cache slot: `init` serializes the (at most one
@@ -147,7 +156,21 @@ struct ReplaySlot {
 }
 
 impl Generator {
+    /// The build's default replay-trace byte provider: filesystem
+    /// passthrough on hosts, an empty in-memory source otherwise.
+    fn default_replay_source() -> Arc<dyn ArtifactSource> {
+        #[cfg(feature = "host")]
+        {
+            Arc::new(crate::source::FsSource::passthrough())
+        }
+        #[cfg(not(feature = "host"))]
+        {
+            Arc::new(crate::source::MemSource::new())
+        }
+    }
+
     /// Open with the native classifier backend.
+    #[cfg(feature = "host")]
     pub fn native() -> Result<Generator> {
         let cat = Catalog::load_default()?;
         let store = ArtifactStore::open_default()?;
@@ -155,7 +178,8 @@ impl Generator {
     }
 
     /// Native-backend generator over an explicit catalog + artifact store
-    /// (tests and benchmarks inject synthetic stores through this).
+    /// (tests, benchmarks, and embedders inject synthetic or in-memory
+    /// stores through this — it performs no I/O itself).
     pub fn native_with(cat: Catalog, store: ArtifactStore) -> Generator {
         Generator {
             cat,
@@ -164,10 +188,19 @@ impl Generator {
             configs: BTreeMap::new(),
             prepared: BTreeMap::new(),
             replay_cache: Mutex::new(BTreeMap::new()),
+            replay_source: Self::default_replay_source(),
         }
     }
 
+    /// Replace the replay-trace byte provider (and invalidate the parse
+    /// cache — cached schedules came from the previous source).
+    pub fn set_replay_source(&mut self, src: Arc<dyn ArtifactSource>) {
+        self.replay_cache.lock().unwrap().clear();
+        self.replay_source = src;
+    }
+
     /// Open with the PJRT backend (compiles the HLO artifact once).
+    #[cfg(feature = "host")]
     pub fn pjrt() -> Result<Generator> {
         let cat = Catalog::load_default()?;
         let store = ArtifactStore::open_default()?;
@@ -180,10 +213,12 @@ impl Generator {
             configs: BTreeMap::new(),
             prepared: BTreeMap::new(),
             replay_cache: Mutex::new(BTreeMap::new()),
+            replay_source: Self::default_replay_source(),
         })
     }
 
     /// Backend selection by name ("native" | "pjrt").
+    #[cfg(feature = "host")]
     pub fn with_backend(name: &str) -> Result<Generator> {
         match name {
             "native" => Self::native(),
@@ -409,7 +444,8 @@ impl Generator {
         if let Some(s) = slot.cell.get() {
             return Ok(s.clone());
         }
-        let s = Arc::new(replay::load(std::path::Path::new(path))?);
+        let bytes = self.replay_source.read(path)?;
+        let s = Arc::new(replay::from_named_bytes(path, &bytes)?);
         let _ = slot.cell.set(s.clone());
         Ok(s)
     }

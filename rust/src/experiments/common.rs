@@ -116,7 +116,6 @@ impl EvalCtx {
     pub fn write_csv(&self, exp: &str, name: &str, headers: &[&str], cols: &[&[f32]]) -> Result<()> {
         assert_eq!(headers.len(), cols.len());
         let dir = self.out_dir.join(exp);
-        std::fs::create_dir_all(&dir)?;
         let n = cols.iter().map(|c| c.len()).max().unwrap_or(0);
         let mut s = String::new();
         s.push_str(&headers.join(","));
@@ -133,7 +132,9 @@ impl EvalCtx {
             s.push('\n');
         }
         let path = dir.join(format!("{name}.csv"));
-        std::fs::write(&path, s)?;
+        // Atomic like every other durable export: stage + rename, parents
+        // created by the helper.
+        crate::robust::fsx::atomic_write(&path, s.as_bytes())?;
         println!("  wrote {}", path.display());
         Ok(())
     }

@@ -1,0 +1,477 @@
+//! `TraceSink` — the windows-out seam of the core/host split.
+//!
+//! Everything the engine *emits* (streamed series CSVs, summaries, spec
+//! snapshots) leaves through this trait, so the pure core never touches
+//! `std::fs`. The host shell provides [`DirSink`] (a directory on disk,
+//! with the crate's stage-to-`.tmp`-then-rename crash-safety discipline);
+//! embedders provide [`MemSink`] or their own impl.
+//!
+//! Paths are logical and `/`-separated, relative to the sink root (e.g.
+//! `w0-t0-f0-s0/racks_1s.csv`). Both built-in sinks share the same
+//! publish-on-close contract: bytes written through a [`TraceOut`] become
+//! visible at the logical path only when [`TraceOut::close`] succeeds, so
+//! an abandoned writer never leaves a plausible-looking partial export.
+//!
+//! [`StreamingCsv`] — the incremental columnar series writer every
+//! streamed export goes through — lives here too, generic over the sink,
+//! so the file-backed and in-memory paths share one formatting/resampling
+//! implementation and can never drift byte-wise.
+
+use crate::metrics::planning::StreamingResampler;
+use crate::robust::failpoint;
+use anyhow::Result;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// An open, append-only export stream (one logical file).
+pub trait TraceOut: Send {
+    fn append(&mut self, bytes: &[u8]) -> Result<()>;
+    /// Flush and publish. Until this succeeds the logical path must not
+    /// appear in the sink.
+    fn close(self: Box<Self>) -> Result<()>;
+}
+
+/// Byte consumer for everything the engine emits.
+pub trait TraceSink: Sync {
+    /// Open a logical path for streamed writing.
+    fn open(&self, path: &str) -> Result<Box<dyn TraceOut>>;
+    /// Write a complete logical file in one shot (atomically where the
+    /// backend supports it).
+    fn put(&self, path: &str, bytes: &[u8]) -> Result<()>;
+}
+
+/// In-memory [`TraceSink`]: logical path → bytes, published on close.
+/// The wasm/embedding exit point ("windows out"), and the test double
+/// used to prove sink-routed exports byte-equal the file-backed ones.
+#[derive(Debug, Default, Clone)]
+pub struct MemSink {
+    files: Arc<Mutex<BTreeMap<String, Vec<u8>>>>,
+}
+
+impl MemSink {
+    pub fn new() -> MemSink {
+        MemSink::default()
+    }
+
+    /// The published bytes of one logical path.
+    pub fn get(&self, path: &str) -> Option<Vec<u8>> {
+        self.files.lock().unwrap().get(path).cloned()
+    }
+
+    /// All published files, by logical path.
+    pub fn files(&self) -> BTreeMap<String, Vec<u8>> {
+        self.files.lock().unwrap().clone()
+    }
+
+    /// Published logical paths, sorted.
+    pub fn paths(&self) -> Vec<String> {
+        self.files.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+struct MemOut {
+    files: Arc<Mutex<BTreeMap<String, Vec<u8>>>>,
+    path: String,
+    buf: Vec<u8>,
+}
+
+impl TraceOut for MemOut {
+    fn append(&mut self, bytes: &[u8]) -> Result<()> {
+        self.buf.extend_from_slice(bytes);
+        Ok(())
+    }
+
+    fn close(self: Box<Self>) -> Result<()> {
+        self.files.lock().unwrap().insert(self.path, self.buf);
+        Ok(())
+    }
+}
+
+impl TraceSink for MemSink {
+    fn open(&self, path: &str) -> Result<Box<dyn TraceOut>> {
+        Ok(Box::new(MemOut {
+            files: Arc::clone(&self.files),
+            path: path.to_string(),
+            buf: Vec::new(),
+        }))
+    }
+
+    fn put(&self, path: &str, bytes: &[u8]) -> Result<()> {
+        self.files.lock().unwrap().insert(path.to_string(), bytes.to_vec());
+        Ok(())
+    }
+}
+
+/// Directory-backed [`TraceSink`]: logical paths resolve under `root`,
+/// streamed writes stage to `<name>.tmp` and rename on close (the same
+/// durability discipline [`crate::robust::fsx`] gives one-shot writes),
+/// parent directories are created on demand.
+#[cfg(feature = "host")]
+#[derive(Debug, Clone)]
+pub struct DirSink {
+    root: std::path::PathBuf,
+}
+
+#[cfg(feature = "host")]
+impl DirSink {
+    pub fn new(root: impl Into<std::path::PathBuf>) -> DirSink {
+        DirSink { root: root.into() }
+    }
+}
+
+#[cfg(feature = "host")]
+struct DirOut {
+    out: std::io::BufWriter<std::fs::File>,
+    tmp: std::path::PathBuf,
+    path: std::path::PathBuf,
+}
+
+#[cfg(feature = "host")]
+impl TraceOut for DirOut {
+    fn append(&mut self, bytes: &[u8]) -> Result<()> {
+        use std::io::Write;
+        self.out.write_all(bytes)?;
+        Ok(())
+    }
+
+    fn close(self: Box<Self>) -> Result<()> {
+        let file = self
+            .out
+            .into_inner()
+            .map_err(|e| anyhow::anyhow!("flushing {}: {e}", self.tmp.display()))?;
+        // Make the rename durable, not just atomic: the bytes reach disk
+        // before the final name does.
+        let _ = file.sync_all();
+        drop(file);
+        crate::robust::fsx::persist(&self.tmp, &self.path)
+    }
+}
+
+#[cfg(feature = "host")]
+impl TraceSink for DirSink {
+    fn open(&self, path: &str) -> Result<Box<dyn TraceOut>> {
+        use anyhow::Context;
+        let full = self.root.join(path);
+        if let Some(parent) = full.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        let tmp = crate::robust::fsx::tmp_path(&full);
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        Ok(Box::new(DirOut { out: std::io::BufWriter::new(file), tmp, path: full }))
+    }
+
+    fn put(&self, path: &str, bytes: &[u8]) -> Result<()> {
+        crate::robust::fsx::atomic_write(&self.root.join(path), bytes)
+    }
+}
+
+/// The file-name component of a logical path (failpoint tags, messages).
+pub(crate) fn path_file_name(path: &str) -> &str {
+    path.rsplit('/').next().unwrap_or(path)
+}
+
+/// Incremental columnar series CSV (`t_s,<stem>_0,...`): each column owns a
+/// [`StreamingResampler`], rows are appended as soon as every column has
+/// emitted a value. Byte-identical to [`write_series_csv`] on the buffered
+/// [`crate::aggregate::MultiScale`] series because the resampler reproduces
+/// `resample_mean_f64` exactly and both share [`fmt_secs`] + Rust's
+/// shortest round-trip f32 formatting. The sweep runner
+/// ([`crate::scenarios::runner`]) and the site composition engine
+/// ([`crate::site`]) stream every series export through this one writer so
+/// facility and site exports can never drift in format.
+///
+/// Rows stream through the sink's [`TraceOut`]; only
+/// [`StreamingCsv::finish`] publishes the logical path (for [`DirSink`]
+/// that is the historical `.tmp`-then-rename), so a crash mid-cell never
+/// leaves a plausible-looking partial series at the real path.
+pub struct StreamingCsv {
+    out: Box<dyn TraceOut>,
+    /// The logical path [`StreamingCsv::finish`] publishes.
+    path: String,
+    /// File name — the `export.write` failpoint tag.
+    tag: String,
+    interval_s: f64,
+    next_row: usize,
+    cols: Vec<StreamingResampler>,
+    pending: Vec<VecDeque<f32>>,
+    line: String,
+}
+
+impl StreamingCsv {
+    pub fn create(
+        sink: &dyn TraceSink,
+        path: &str,
+        stem: &str,
+        n_cols: usize,
+        dt_s: f64,
+        interval_s: f64,
+        scale: f64,
+    ) -> Result<StreamingCsv> {
+        let names: Vec<String> = (0..n_cols).map(|i| format!("{stem}_{i}")).collect();
+        Self::create_named(sink, path, &names, dt_s, interval_s, scale)
+    }
+
+    /// [`StreamingCsv::create`] with explicit column names (the site
+    /// export's `site_w,<facility>_w` header).
+    pub fn create_named(
+        sink: &dyn TraceSink,
+        path: &str,
+        col_names: &[String],
+        dt_s: f64,
+        interval_s: f64,
+        scale: f64,
+    ) -> Result<StreamingCsv> {
+        let mut out = sink.open(path)?;
+        let mut header = String::from("t_s");
+        for name in col_names {
+            header.push(',');
+            header.push_str(&csv_field(name));
+        }
+        header.push('\n');
+        out.append(header.as_bytes())?;
+        let cols = col_names
+            .iter()
+            .map(|_| StreamingResampler::new(dt_s, interval_s, scale))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StreamingCsv {
+            out,
+            path: path.to_string(),
+            tag: path_file_name(path).to_string(),
+            interval_s,
+            next_row: 0,
+            cols,
+            pending: (0..col_names.len()).map(|_| VecDeque::new()).collect(),
+            line: String::new(),
+        })
+    }
+
+    pub fn push_col(&mut self, col: usize, xs: &[f64]) {
+        let (r, q) = (&mut self.cols[col], &mut self.pending[col]);
+        for &x in xs {
+            if let Some(v) = r.push(x) {
+                q.push_back(v);
+            }
+        }
+    }
+
+    /// [`StreamingCsv::push_col`] over an f32 window (each sample widened
+    /// to f64 before the resampler fold — the same expression the f64 path
+    /// would see for values that started life as f32).
+    pub fn push_col_f32(&mut self, col: usize, xs: &[f32]) {
+        let (r, q) = (&mut self.cols[col], &mut self.pending[col]);
+        for &x in xs {
+            if let Some(v) = r.push(x as f64) {
+                q.push_back(v);
+            }
+        }
+    }
+
+    pub fn write_ready_rows(&mut self) -> Result<()> {
+        failpoint::hit("export.write", &self.tag)?;
+        let ready = self.pending.iter().map(|q| q.len()).min().unwrap_or(0);
+        for _ in 0..ready {
+            self.line.clear();
+            self.line.push_str(&fmt_secs(self.next_row as f64 * self.interval_s));
+            for q in self.pending.iter_mut() {
+                let v = q.pop_front().expect("ready rows counted");
+                self.line.push(',');
+                self.line.push_str(&format!("{v}"));
+            }
+            self.line.push('\n');
+            self.out.append(self.line.as_bytes())?;
+            self.next_row += 1;
+        }
+        Ok(())
+    }
+
+    /// Flush the trailing partial resample window of every column (the
+    /// buffered `resample_mean` emits it averaged over its actual length),
+    /// write the final row(s), and publish the logical path through the
+    /// sink. Returns the finished path.
+    pub fn finish(mut self) -> Result<String> {
+        for (r, q) in self.cols.iter_mut().zip(self.pending.iter_mut()) {
+            if let Some((v, _count)) = r.flush() {
+                q.push_back(v);
+            }
+        }
+        self.write_ready_rows()?;
+        debug_assert!(self.pending.iter().all(|q| q.is_empty()), "ragged columns");
+        self.out.close()?;
+        Ok(self.path)
+    }
+}
+
+/// RFC-4180 quoting for free-text CSV fields (a replay workload's path
+/// may contain commas or quotes).
+pub fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// `300` for whole seconds, `0.25` otherwise (file-name friendly).
+pub fn fmt_secs(x: f64) -> String {
+    if x.fract() == 0.0 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// `t_s,<stem>_0,<stem>_1,...` — shared by the buffered and streaming
+/// writers so their headers can never drift apart.
+pub(crate) fn series_csv_header(stem: &str, n_cols: usize) -> String {
+    let mut out = String::from("t_s");
+    for i in 0..n_cols {
+        out.push_str(&format!(",{stem}_{i}"));
+    }
+    out.push('\n');
+    out
+}
+
+/// Columnar CSV: `t_s,<stem>_0,<stem>_1,...` with one row per interval,
+/// published through the sink in one shot.
+pub(crate) fn write_series_csv(
+    sink: &dyn TraceSink,
+    path: &str,
+    stem: &str,
+    interval_s: f64,
+    series: &[Vec<f32>],
+) -> Result<()> {
+    let n = series.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut out = series_csv_header(stem, series.len());
+    for t in 0..n {
+        out.push_str(&fmt_secs(t as f64 * interval_s));
+        for s in series {
+            out.push(',');
+            if t < s.len() {
+                out.push_str(&format!("{}", s[t]));
+            }
+        }
+        out.push('\n');
+    }
+    sink.put(path, out.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_field_quotes_only_when_needed() {
+        assert_eq!(csv_field("poisson λ=0.5"), "poisson λ=0.5");
+        assert_eq!(csv_field("replay a,b.json"), "\"replay a,b.json\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn fmt_secs_is_filename_friendly() {
+        assert_eq!(fmt_secs(300.0), "300");
+        assert_eq!(fmt_secs(1.0), "1");
+        assert_eq!(fmt_secs(0.25), "0.25");
+    }
+
+    #[test]
+    fn series_csv_shape() {
+        let sink = MemSink::new();
+        write_series_csv(&sink, "racks.csv", "rack", 15.0, &[vec![1.0, 2.0], vec![3.0, 4.0]])
+            .unwrap();
+        let s = String::from_utf8(sink.get("racks.csv").unwrap()).unwrap();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "t_s,rack_0,rack_1");
+        assert_eq!(lines[1], "0,1,2");
+        assert_eq!(lines[2], "15,3,4");
+        assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn streaming_csv_matches_buffered_writer_bytes() {
+        // Two columns of f64 data pushed in ragged windows must produce the
+        // byte-identical file to resampling whole series and using
+        // write_series_csv — including the partial trailing window.
+        let sink = MemSink::new();
+        let (dt, interval) = (0.25, 1.5); // stride 6
+        let n = 100; // 100 = 16×6 + 4 → partial tail
+        let cols: Vec<Vec<f64>> = (0..2)
+            .map(|c| (0..n).map(|i| 1000.0 + (c * 37 + i) as f64 * 0.83).collect())
+            .collect();
+        // Buffered reference.
+        let buffered: Vec<Vec<f32>> = cols
+            .iter()
+            .map(|col| {
+                col.chunks(6)
+                    .map(|ch| (ch.iter().sum::<f64>() / ch.len() as f64) as f32)
+                    .collect()
+            })
+            .collect();
+        write_series_csv(&sink, "buffered.csv", "rack", interval, &buffered).unwrap();
+        // Streaming writer fed in windows of 7.
+        let mut w = StreamingCsv::create(&sink, "streamed.csv", "rack", 2, dt, interval, 1.0)
+            .unwrap();
+        let mut t0 = 0;
+        while t0 < n {
+            let wlen = 7.min(n - t0);
+            for (c, col) in cols.iter().enumerate() {
+                w.push_col(c, &col[t0..t0 + wlen]);
+            }
+            w.write_ready_rows().unwrap();
+            t0 += wlen;
+        }
+        let finished = w.finish().unwrap();
+        assert_eq!(finished, "streamed.csv");
+        let a = sink.get("buffered.csv").unwrap();
+        let b = sink.get("streamed.csv").unwrap();
+        assert_eq!(a, b, "streamed CSV bytes differ from buffered");
+    }
+
+    #[test]
+    fn mem_sink_publishes_only_on_close() {
+        let sink = MemSink::new();
+        let mut w = StreamingCsv::create(&sink, "atomic.csv", "rack", 1, 0.25, 0.5, 1.0).unwrap();
+        w.push_col(0, &[1.0, 2.0, 3.0, 4.0]);
+        w.write_ready_rows().unwrap();
+        assert!(sink.get("atomic.csv").is_none(), "path must not appear before finish");
+        w.finish().unwrap();
+        let s = String::from_utf8(sink.get("atomic.csv").unwrap()).unwrap();
+        assert_eq!(s, "t_s,rack_0\n0,1.5\n0.5,3.5\n");
+    }
+
+    #[cfg(feature = "host")]
+    #[test]
+    fn dir_sink_is_atomic_until_finish() {
+        let dir = std::env::temp_dir().join("powertrace_test_streaming_atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("atomic.csv");
+        let _ = std::fs::remove_file(&p);
+        let sink = DirSink::new(&dir);
+        let mut w = StreamingCsv::create(&sink, "atomic.csv", "rack", 1, 0.25, 0.5, 1.0).unwrap();
+        w.push_col(0, &[1.0, 2.0, 3.0, 4.0]);
+        w.write_ready_rows().unwrap();
+        // Rows exist only in the staging file until finish renames it.
+        assert!(!p.exists(), "final path must not appear before finish");
+        assert!(crate::robust::fsx::tmp_path(&p).exists());
+        w.finish().unwrap();
+        assert!(p.exists());
+        assert!(!crate::robust::fsx::tmp_path(&p).exists());
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "t_s,rack_0\n0,1.5\n0.5,3.5\n");
+    }
+
+    #[cfg(feature = "host")]
+    #[test]
+    fn dir_sink_creates_nested_parents() {
+        let dir = std::env::temp_dir().join("powertrace_test_dir_sink_nested");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sink = DirSink::new(&dir);
+        sink.put("cell-a/summary.csv", b"x\n").unwrap();
+        let mut out = sink.open("cell-b/racks.csv").unwrap();
+        out.append(b"y\n").unwrap();
+        out.close().unwrap();
+        assert_eq!(std::fs::read(dir.join("cell-a/summary.csv")).unwrap(), b"x\n");
+        assert_eq!(std::fs::read(dir.join("cell-b/racks.csv")).unwrap(), b"y\n");
+    }
+}

@@ -33,6 +33,18 @@
 //! See `examples/quickstart.rs` for the five-line path from a scenario to a
 //! facility load shape, and `examples/sweep_grid.rs` for a whole scenario
 //! family in one call.
+//!
+//! # Core/host split
+//!
+//! The crate is a pure generation core wrapped in a host shell. Everything
+//! the engine reads arrives through [`source::ArtifactSource`] (bytes in),
+//! everything it writes leaves through [`export::TraceSink`] (windows
+//! out), and thread fan-out rides the [`util::threadpool::Executor`] seam
+//! — so the core has no `std::fs`, `std::thread`, or clock dependence.
+//! The filesystem/threadpool/CLI shell sits behind the default `host`
+//! cargo feature; `--no-default-features` builds the same byte-identical
+//! engine for any target, including `wasm32-unknown-unknown`. See
+//! `docs/ARCHITECTURE.md` §"Core/host split" for the seam map.
 
 // Clippy runs as a CI gate (`cargo clippy -- -D warnings`). Correctness
 // lints stay on; the style lints below conflict with deliberate choices —
@@ -57,6 +69,7 @@
 )]
 
 pub mod util {
+    #[cfg(feature = "host")]
     pub mod cli;
     pub mod json;
     pub mod rng;
@@ -66,17 +79,21 @@ pub mod util {
 pub mod aggregate;
 pub mod artifacts;
 pub mod baselines;
+#[cfg(feature = "host")]
 pub mod benchutil;
 pub mod catalog;
 pub mod classifier;
 pub mod config;
 pub mod coordinator;
+#[cfg(feature = "host")]
 pub mod experiments;
+pub mod export;
 pub mod metrics;
 pub mod robust;
 pub mod runtime;
 pub mod scenarios;
 pub mod site;
+pub mod source;
 pub mod states;
 pub mod surrogate;
 pub mod synth;

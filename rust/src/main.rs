@@ -361,6 +361,7 @@ fn cmd_site(args: &Args) -> Result<()> {
             load_interval_s: args
                 .f64_or("load-interval", m.options.f64_field("load_interval_s").unwrap_or(60.0))?,
             collect_series: false,
+            executor: Default::default(),
         };
         let mut gen = site_generator(args, &grid.base.config_ids())?;
         return run_site_sweep_ckpt(&mut gen, &grid, &opts, &dir, &policy, t0);
@@ -373,6 +374,7 @@ fn cmd_site(args: &Args) -> Result<()> {
         ramp_interval_s: args.f64_or("ramp", 900.0)?,
         load_interval_s: args.f64_or("load-interval", 60.0)?,
         collect_series: false,
+        executor: Default::default(),
     };
     let out = args.str_opt("out").map(std::path::PathBuf::from);
     if let Some(gpath) = args.str_opt("grid") {

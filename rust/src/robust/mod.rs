@@ -29,9 +29,12 @@
 //! uninterrupted run would have produced.
 
 pub mod failpoint;
+#[cfg(feature = "host")]
 pub mod fsx;
 pub mod isolate;
+#[cfg(feature = "host")]
 pub mod manifest;
 
 pub use isolate::{run_isolated, Deadline, Isolated, RetryPolicy};
+#[cfg(feature = "host")]
 pub use manifest::{CellState, CellStatus, ExportRecord, ManifestKeeper, RunManifest};

@@ -18,6 +18,7 @@
 
 use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
+#[cfg(feature = "host")]
 use std::path::Path;
 
 /// One differing cell.
@@ -151,6 +152,7 @@ pub fn diff_summaries(a: &str, b: &str, tolerance: f64) -> Result<DiffReport> {
 }
 
 /// [`diff_summaries`] over two files.
+#[cfg(feature = "host")]
 pub fn diff_summary_files(a: &Path, b: &Path, tolerance: f64) -> Result<DiffReport> {
     let ta = std::fs::read_to_string(a).with_context(|| format!("reading {}", a.display()))?;
     let tb = std::fs::read_to_string(b).with_context(|| format!("reading {}", b.display()))?;

@@ -19,6 +19,7 @@ use crate::config::{
 };
 use crate::util::json::{self, Json};
 use anyhow::{bail, Context, Result};
+#[cfg(feature = "host")]
 use std::path::Path;
 
 /// Scenario fields shared by every cell of a grid.
@@ -243,11 +244,13 @@ impl SweepGrid {
         Ok(grid)
     }
 
+    #[cfg(feature = "host")]
     pub fn load(path: &Path) -> Result<SweepGrid> {
         let v = json::parse_file(path).map_err(anyhow::Error::from)?;
         Self::from_json(&v).with_context(|| format!("parsing sweep grid {}", path.display()))
     }
 
+    #[cfg(feature = "host")]
     pub fn save(&self, path: &Path) -> Result<()> {
         json::write_file(path, &self.to_json()).map_err(anyhow::Error::from)
     }
@@ -409,6 +412,7 @@ mod tests {
         assert_eq!(SweepGrid::from_json(&g).unwrap().name, "sweep");
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join("powertrace_test_grid");

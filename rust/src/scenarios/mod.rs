@@ -81,16 +81,19 @@
 //! `powertrace diff a.csv b.csv --tolerance 1e-9`) reports per-metric
 //! deltas and exits non-zero beyond the tolerance — the metric-regression
 //! gate CI runs after every sweep/site smoke. The site composition layer
-//! ([`crate::site`]) reuses this module's streaming CSV writers for its
-//! `site_load.csv` export.
+//! ([`crate::site`]) reuses the same streaming CSV writers (now in
+//! [`crate::export`]) for its `site_load.csv` export.
 
 pub mod diff;
 pub mod grid;
 pub mod runner;
 
-pub use diff::{diff_summaries, diff_summary_files, DiffReport};
+pub use diff::{diff_summaries, DiffReport};
+#[cfg(feature = "host")]
+pub use diff::diff_summary_files;
 pub use grid::{GridDefaults, SweepCell, SweepGrid};
+pub use runner::{run_sweep, run_sweep_sink, CellResult, SweepOptions, SweepReport};
+#[cfg(feature = "host")]
 pub use runner::{
-    run_sweep, run_sweep_checkpointed, run_sweep_to, CellResult, QuarantinedCell, SweepOptions,
-    SweepOutcome, SweepReport, SWEEP_MANIFEST,
+    run_sweep_checkpointed, run_sweep_to, QuarantinedCell, SweepOutcome, SWEEP_MANIFEST,
 };

@@ -4,11 +4,13 @@
 //! Artifact sharing: [`run_sweep`] first [`Generator::prepare`]s each
 //! configuration some cell actually uses (artifact JSON parse + classifier
 //! construction + packed-weight build happen exactly once per config, not
-//! per cell), then fans cells across a thread pool with
-//! [`Generator::facility_shared_batched`] — which itself parallelizes
+//! per cell), then fans cells across the [`Executor`]
+//! with [`Generator::facility_shared_batched`] — which itself parallelizes
 //! across racks inside a cell and scans each rack's same-config servers
 //! through the classifier as one batched call (§Perf). Outer/inner worker
-//! counts are balanced automatically unless pinned in [`SweepOptions`].
+//! counts are balanced automatically unless pinned in [`SweepOptions`];
+//! a sequential executor (the core-build default) runs every cell on the
+//! caller thread with byte-identical output.
 //!
 //! Streaming (>24 h) mode: with [`SweepOptions::window_s`] set, each cell
 //! runs through [`Generator::facility_shared_windowed`] instead — horizon
@@ -21,6 +23,12 @@
 //! peak/mean/energy/ramp, p99 exact up to
 //! [`crate::metrics::planning::EXACT_QUANTILE_CAP`] samples and
 //! histogram-bounded beyond it.
+//!
+//! Exports route through the [`TraceSink`] seam of the core/host split:
+//! [`run_sweep_sink`] / [`SweepReport::write_sink`] work against any sink
+//! (the in-memory [`crate::export::MemSink`] in embeddings and tests);
+//! the path-taking wrappers ([`run_sweep_to`], [`SweepReport::write`])
+//! bind them to a [`DirSink`] and are host-only.
 //!
 //! Determinism: every cell's output is a pure function of its
 //! `(ScenarioSpec, seed)` (see [`Generator::facility_shared`]), and the
@@ -38,18 +46,23 @@
 use super::grid::{SweepCell, SweepGrid};
 use crate::aggregate::{MultiScale, ScaleConfig, StreamingFacilityAccumulator};
 use crate::coordinator::Generator;
-use crate::metrics::planning::{PlanningStats, StreamingPlanningStats, StreamingResampler};
+#[cfg(feature = "host")]
+use crate::export::DirSink;
+use crate::export::{csv_field, fmt_secs, write_series_csv, StreamingCsv, TraceSink};
+use crate::metrics::planning::{PlanningStats, StreamingPlanningStats};
+#[cfg(feature = "host")]
 use crate::robust::manifest::content_hash;
+use crate::robust::{failpoint, Deadline};
+#[cfg(feature = "host")]
 use crate::robust::{
-    failpoint, fsx, run_isolated, CellStatus, Deadline, ExportRecord, Isolated, ManifestKeeper,
-    RetryPolicy, RunManifest,
+    fsx, run_isolated, CellStatus, ExportRecord, Isolated, ManifestKeeper, RetryPolicy,
+    RunManifest,
 };
 use crate::util::json::{self, Json};
-use crate::util::threadpool::{default_workers, parallel_map_results};
+use crate::util::threadpool::{default_workers, Executor};
 use anyhow::{ensure, Context, Result};
-use std::io::Write;
+#[cfg(feature = "host")]
 use std::path::{Path, PathBuf};
-use std::time::Instant;
 
 /// Execution knobs for one sweep run.
 #[derive(Debug, Clone)]
@@ -74,12 +87,16 @@ pub struct SweepOptions {
     pub max_batch: usize,
     /// Generation window in seconds for the streaming path
     /// (0 = buffered one-shot). With a window set, per-cell memory is
-    /// O(racks × window) and exports stream to disk as windows complete —
-    /// pass the output directory to [`run_sweep_to`] so the writers have
-    /// somewhere to stream.
+    /// O(racks × window) and exports stream through the sink as windows
+    /// complete — pass the output directory to [`run_sweep_to`] (or a
+    /// sink to [`run_sweep_sink`]) so the writers have somewhere to go.
     pub window_s: f64,
     /// Export intervals per aggregation level.
     pub scales: ScaleConfig,
+    /// How cell fan-out (and each cell's inner fan-out) runs: threaded
+    /// (host default) or sequential on the caller thread (the core-build
+    /// default). Byte-invariant like the worker counts.
+    pub executor: Executor,
 }
 
 impl Default for SweepOptions {
@@ -92,15 +109,16 @@ impl Default for SweepOptions {
             max_batch: 0,
             window_s: 0.0,
             scales: ScaleConfig::default(),
+            executor: Executor::default(),
         }
     }
 }
 
 impl SweepOptions {
     /// The options that determine output *bytes* — the run manifest's hash
-    /// binds to exactly these. Worker counts, batch width, and the
-    /// streaming window are byte-invariant by contract (see the module
-    /// docs) and deliberately excluded, so a resumed run may pick a
+    /// binds to exactly these. Worker counts, batch width, the executor,
+    /// and the streaming window are byte-invariant by contract (see the
+    /// module docs) and deliberately excluded, so a resumed run may pick a
     /// different parallel layout or switch streaming on or off.
     pub(crate) fn identity_json(&self) -> Json {
         let scales = json::obj([
@@ -124,14 +142,42 @@ impl SweepOptions {
     }
 }
 
+/// Wall-clock timer for the reporting-only `wall_s` column. Core builds
+/// have no monotonic clock (`Instant::now` aborts on wasm), so they
+/// report 0 — `wall_s` is never exported, so nothing byte-visible moves.
+struct WallTimer {
+    #[cfg(feature = "host")]
+    t0: std::time::Instant,
+}
+
+impl WallTimer {
+    fn start() -> WallTimer {
+        WallTimer {
+            #[cfg(feature = "host")]
+            t0: std::time::Instant::now(),
+        }
+    }
+
+    fn elapsed_s(&self) -> f64 {
+        #[cfg(feature = "host")]
+        {
+            self.t0.elapsed().as_secs_f64()
+        }
+        #[cfg(not(feature = "host"))]
+        {
+            0.0
+        }
+    }
+}
+
 /// One executed grid cell.
 pub struct CellResult {
     pub cell: SweepCell,
     /// Planning summary of the facility PCC series at the generation dt.
     pub stats: PlanningStats,
     /// Multi-resolution export (racks / rows / facility). `None` for
-    /// streamed cells — their series went straight to disk, window by
-    /// window, and were never materialized.
+    /// streamed cells — their series went straight through the sink,
+    /// window by window, and were never materialized.
     pub scales: Option<MultiScale>,
     /// `false` when `stats.p99_w` / `stats.cv` came from the streaming
     /// histogram (horizon exceeded the exact-sample cap); the error bound
@@ -139,7 +185,8 @@ pub struct CellResult {
     pub exact_quantiles: bool,
     /// Absolute error bound on `stats.p99_w` (0 when exact).
     pub p99_bound_w: f64,
-    /// Wall-clock seconds this cell took (reporting only; never exported).
+    /// Wall-clock seconds this cell took (reporting only; never exported;
+    /// 0 in core builds — see [`WallTimer`]).
     pub wall_s: f64,
 }
 
@@ -153,7 +200,7 @@ pub struct SweepReport {
 /// Expand and execute a grid (buffered, or streaming when
 /// `opts.window_s > 0` — see [`run_sweep_to`] to stream CSV exports).
 pub fn run_sweep(gen: &mut Generator, grid: &SweepGrid, opts: &SweepOptions) -> Result<SweepReport> {
-    run_sweep_to(gen, grid, opts, None)
+    run_sweep_sink(gen, grid, opts, None)
 }
 
 /// [`run_sweep`] with a streaming export directory: when
@@ -163,11 +210,28 @@ pub fn run_sweep(gen: &mut Generator, grid: &SweepGrid, opts: &SweepOptions) -> 
 /// the buffered [`SweepReport::write`] would produce). Call
 /// [`SweepReport::write`] on the same directory afterwards to add
 /// `grid.json`, `summary.csv`, and the per-cell `scenario.json`s.
+#[cfg(feature = "host")]
 pub fn run_sweep_to(
     gen: &mut Generator,
     grid: &SweepGrid,
     opts: &SweepOptions,
     stream_dir: Option<&Path>,
+) -> Result<SweepReport> {
+    if let Some(dir) = stream_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    let sink = stream_dir.map(DirSink::new);
+    run_sweep_sink(gen, grid, opts, sink.as_ref().map(|s| s as &dyn TraceSink))
+}
+
+/// [`run_sweep_to`] with streamed exports routed through an arbitrary
+/// [`TraceSink`] (each cell under `<cell>/` at the sink root) — the
+/// embedding entry point, available without the `host` feature.
+pub fn run_sweep_sink(
+    gen: &mut Generator,
+    grid: &SweepGrid,
+    opts: &SweepOptions,
+    stream_sink: Option<&dyn TraceSink>,
 ) -> Result<SweepReport> {
     grid.validate()?;
     ensure!(
@@ -194,21 +258,18 @@ pub fn run_sweep_to(
         0 => default_workers().min(n).max(1),
         w => w.min(n).max(1),
     };
-    let inner = match opts.server_workers {
+    let inner = opts.executor.workers(match opts.server_workers {
         0 => (default_workers() / outer).max(1),
         w => w,
-    };
-    if let Some(dir) = stream_dir {
-        std::fs::create_dir_all(dir)?;
-    }
+    });
     let gen_ro: &Generator = gen;
-    let results: Vec<Result<CellResult>> = parallel_map_results(n, outer, |i| {
+    let results: Vec<Result<CellResult>> = opts.executor.map_results(n, outer, |i| {
         let cell = &cells[i];
-        let t0 = Instant::now();
+        let timer = WallTimer::start();
         let (stats, scales, exact, bound) = if opts.window_s > 0.0 {
-            let cdir = stream_dir.map(|d| d.join(&cell.id));
+            let csink = stream_sink.map(|s| (s, cell.id.as_str()));
             let (stats, exact, bound, _paths) =
-                run_cell_streaming(gen_ro, cell, opts, inner, cdir.as_deref(), None)?;
+                run_cell_streaming(gen_ro, cell, opts, inner, csink, None)?;
             (stats, None, exact, bound)
         } else {
             let run =
@@ -225,7 +286,7 @@ pub fn run_sweep_to(
             scales,
             exact_quantiles: exact,
             p99_bound_w: bound,
-            wall_s: t0.elapsed().as_secs_f64(),
+            wall_s: timer.elapsed_s(),
         })
     });
     let mut out = Vec::with_capacity(n);
@@ -243,23 +304,25 @@ fn cell_ramp_interval(opts: &SweepOptions, horizon_s: f64) -> f64 {
 
 /// Run one cell through the windowed streaming pipeline: fold summary
 /// stats per window and (optionally) append the multi-scale CSVs under
-/// `cdir`. With a [`Deadline`], the soft wall-clock budget is checked at
-/// every window boundary (the streaming path's cooperative yield points).
-/// Returns `(stats, exact_quantiles, p99_bound, finished export paths)`.
+/// the logical cell directory of `sink`. With a [`Deadline`], the soft
+/// wall-clock budget is checked at every window boundary (the streaming
+/// path's cooperative yield points).
+/// Returns `(stats, exact_quantiles, p99_bound, finished logical paths)`.
 fn run_cell_streaming(
     gen: &Generator,
     cell: &SweepCell,
     opts: &SweepOptions,
     inner_workers: usize,
-    cdir: Option<&Path>,
+    sink: Option<(&dyn TraceSink, &str)>,
     deadline: Option<&Deadline>,
-) -> Result<(PlanningStats, bool, f64, Vec<PathBuf>)> {
+) -> Result<(PlanningStats, bool, f64, Vec<String>)> {
     let spec = &cell.spec;
     let ramp_s = cell_ramp_interval(opts, spec.horizon_s);
     let mut stats = StreamingPlanningStats::new(opts.dt_s, ramp_s)?;
-    let mut writers = match cdir {
-        Some(d) => Some(CellWriters::create(
-            d,
+    let mut writers = match sink {
+        Some((s, cdir)) => Some(CellWriters::create(
+            s,
+            cdir,
             spec.topology.n_racks(),
             spec.topology.rows,
             spec.pue,
@@ -302,14 +365,17 @@ fn run_cell_streaming(
 }
 
 // ---------------------------------------------------------------------------
-// Checkpointed execution (crash-safe sweeps)
+// Checkpointed execution (crash-safe sweeps) — host-only: the durable
+// manifest, retry deadlines, and resume validation are filesystem-bound.
 // ---------------------------------------------------------------------------
 
 /// File name of the run manifest inside a checkpointed output directory.
+#[cfg(feature = "host")]
 pub const SWEEP_MANIFEST: &str = "manifest.json";
 
 /// A cell that failed every attempt and was quarantined in the manifest
 /// (the rest of the sweep still completed).
+#[cfg(feature = "host")]
 #[derive(Debug, Clone)]
 pub struct QuarantinedCell {
     pub id: String,
@@ -320,6 +386,7 @@ pub struct QuarantinedCell {
 }
 
 /// Result of a checkpointed (possibly resumed) sweep run.
+#[cfg(feature = "host")]
 pub struct SweepOutcome {
     /// Cells executed by *this* process, in grid order. Restored cells are
     /// not re-materialized — their rows replay from the manifest into
@@ -354,6 +421,7 @@ pub struct SweepOutcome {
 /// Because cells are pure functions of `(spec, seed)`, the final
 /// `summary.csv` after any crash/resume sequence is byte-identical to the
 /// uninterrupted run's.
+#[cfg(feature = "host")]
 pub fn run_sweep_checkpointed(
     gen: &mut Generator,
     grid: &SweepGrid,
@@ -401,17 +469,18 @@ pub fn run_sweep_checkpointed(
         0 => default_workers().min(n).max(1),
         w => w.min(n).max(1),
     };
-    let inner = match opts.server_workers {
+    let inner = opts.executor.workers(match opts.server_workers {
         0 => (default_workers() / outer).max(1),
         w => w,
-    };
+    });
+    let sink = DirSink::new(dir);
     let gen_ro: &Generator = gen;
-    let results = parallel_map_results(n, outer, |k| -> Result<Option<CellResult>> {
+    let results = opts.executor.map_results(n, outer, |k| -> Result<Option<CellResult>> {
         let cell = &cells[todo[k]];
         let prior = keeper.with(|m| m.attempts(&cell.id));
         match run_isolated(policy, prior, |deadline| {
             failpoint::hit("sweep.cell", &cell.id)?;
-            run_cell_checkpointed(gen_ro, cell, opts, inner, dir, deadline)
+            run_cell_checkpointed(gen_ro, cell, opts, inner, dir, &sink, deadline)
         }) {
             Isolated::Done { value: (result, exports), attempts } => {
                 let row = summary_row(&result);
@@ -464,19 +533,26 @@ pub fn run_sweep_checkpointed(
 /// One cell of a checkpointed run: generate (streaming or buffered), write
 /// every export atomically under `<root>/<cell>/`, and return the result
 /// plus the [`ExportRecord`]s the manifest needs for resume validation.
+#[cfg(feature = "host")]
 fn run_cell_checkpointed(
     gen: &Generator,
     cell: &SweepCell,
     opts: &SweepOptions,
     inner_workers: usize,
     root: &Path,
+    sink: &DirSink,
     deadline: &Deadline,
 ) -> Result<(CellResult, Vec<ExportRecord>)> {
-    let t0 = Instant::now();
-    let cdir = root.join(&cell.id);
+    let timer = WallTimer::start();
     let (stats, scales, exact, bound, mut paths) = if opts.window_s > 0.0 {
-        let (stats, exact, bound, paths) =
-            run_cell_streaming(gen, cell, opts, inner_workers, Some(&cdir), Some(deadline))?;
+        let (stats, exact, bound, paths) = run_cell_streaming(
+            gen,
+            cell,
+            opts,
+            inner_workers,
+            Some((sink as &dyn TraceSink, cell.id.as_str())),
+            Some(deadline),
+        )?;
         (stats, None, exact, bound, paths)
     } else {
         let run =
@@ -493,16 +569,18 @@ fn run_cell_checkpointed(
         scales,
         exact_quantiles: exact,
         p99_bound_w: bound,
-        wall_s: t0.elapsed().as_secs_f64(),
+        wall_s: timer.elapsed_s(),
     };
-    paths.extend(write_cell_exports(&cdir, &result)?);
+    paths.extend(write_cell_exports(sink, &cell.id, &result)?);
     let mut exports = Vec::with_capacity(paths.len());
     for p in paths {
-        let bytes = std::fs::metadata(&p)
-            .with_context(|| format!("stat export {}", p.display()))?
+        // Logical sink paths are already `/`-separated and root-relative —
+        // exactly the manifest's export-record format.
+        let full = root.join(&p);
+        let bytes = std::fs::metadata(&full)
+            .with_context(|| format!("stat export {}", full.display()))?
             .len();
-        let rel = p.strip_prefix(root).unwrap_or(&p).to_string_lossy().replace('\\', "/");
-        exports.push(ExportRecord { path: rel, bytes });
+        exports.push(ExportRecord { path: p, bytes });
     }
     Ok((result, exports))
 }
@@ -595,38 +673,48 @@ impl SweepReport {
     /// (`scales: None`); their series CSVs were already appended
     /// incrementally by [`run_sweep_to`] into the same layout, so this
     /// writes only the metadata files for them.
+    #[cfg(feature = "host")]
     pub fn write(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
-        self.grid.save(&dir.join("grid.json"))?;
-        fsx::atomic_write(&dir.join("summary.csv"), self.summary_csv().as_bytes())?;
+        self.write_sink(&DirSink::new(dir))
+    }
+
+    /// [`SweepReport::write`] against an arbitrary [`TraceSink`] (same
+    /// logical layout at the sink root).
+    pub fn write_sink(&self, sink: &dyn TraceSink) -> Result<()> {
+        sink.put("grid.json", json::to_string_pretty(&self.grid.to_json()).as_bytes())?;
+        sink.put("summary.csv", self.summary_csv().as_bytes())?;
         for c in &self.cells {
-            write_cell_exports(&dir.join(&c.cell.id), c)?;
+            write_cell_exports(sink, &c.cell.id, c)?;
         }
         Ok(())
     }
 }
 
-/// Write one cell's metadata + buffered series exports under `cdir` and
-/// return every path written (streamed series CSVs are not re-written —
-/// they were already finalized by [`CellWriters::finish`]). Every file
-/// lands atomically.
-fn write_cell_exports(cdir: &Path, c: &CellResult) -> Result<Vec<PathBuf>> {
-    std::fs::create_dir_all(cdir)?;
+/// Write one cell's metadata + buffered series exports under the logical
+/// `cdir` and return every logical path written (streamed series CSVs are
+/// not re-written — they were already finalized by
+/// [`CellWriters::finish`]). Every file lands atomically where the sink
+/// supports it.
+fn write_cell_exports(sink: &dyn TraceSink, cdir: &str, c: &CellResult) -> Result<Vec<String>> {
     let mut paths = Vec::new();
-    let spec_path = cdir.join("scenario.json");
-    c.cell.spec.save(&spec_path)?;
+    let spec_path = format!("{cdir}/scenario.json");
+    // Byte-identical to the pre-split `ScenarioSpec::save` (same pretty
+    // printer, same trailing newline).
+    sink.put(&spec_path, json::to_string_pretty(&c.cell.spec.to_json()).as_bytes())?;
     paths.push(spec_path);
     let Some(scales) = &c.scales else { return Ok(paths) };
     let sc = &scales.scales;
-    let p = cdir.join(format!("racks_{}s.csv", fmt_secs(sc.rack_interval_s)));
-    write_series_csv(&p, "rack", sc.rack_interval_s, &scales.racks_w)?;
+    let p = format!("{cdir}/racks_{}s.csv", fmt_secs(sc.rack_interval_s));
+    write_series_csv(sink, &p, "rack", sc.rack_interval_s, &scales.racks_w)?;
     paths.push(p);
-    let p = cdir.join(format!("rows_{}s.csv", fmt_secs(sc.row_interval_s)));
-    write_series_csv(&p, "row", sc.row_interval_s, &scales.rows_w)?;
+    let p = format!("{cdir}/rows_{}s.csv", fmt_secs(sc.row_interval_s));
+    write_series_csv(sink, &p, "row", sc.row_interval_s, &scales.rows_w)?;
     paths.push(p);
     for (k, &interval) in sc.facility_intervals_s.iter().enumerate() {
-        let p = cdir.join(format!("facility_{}s.csv", fmt_secs(interval)));
-        write_series_csv(&p, "facility", interval, std::slice::from_ref(&scales.facility_w[k]))?;
+        let p = format!("{cdir}/facility_{}s.csv", fmt_secs(interval));
+        let fac = std::slice::from_ref(&scales.facility_w[k]);
+        write_series_csv(sink, &p, "facility", interval, fac)?;
         paths.push(p);
     }
     Ok(paths)
@@ -636,7 +724,8 @@ fn write_cell_exports(cdir: &Path, c: &CellResult) -> Result<Vec<PathBuf>> {
 // Incremental CSV writers (streaming mode)
 // ---------------------------------------------------------------------------
 
-/// One cell's set of incremental multi-scale CSV writers.
+/// One cell's set of incremental multi-scale CSV writers, streaming
+/// through the run's [`TraceSink`] under the cell's logical directory.
 struct CellWriters {
     racks: StreamingCsv,
     rows: StreamingCsv,
@@ -645,16 +734,17 @@ struct CellWriters {
 
 impl CellWriters {
     fn create(
-        cdir: &Path,
+        sink: &dyn TraceSink,
+        cdir: &str,
         n_racks: usize,
         n_rows: usize,
         pue: f64,
         opts: &SweepOptions,
     ) -> Result<CellWriters> {
-        std::fs::create_dir_all(cdir)?;
         let sc = &opts.scales;
         let racks = StreamingCsv::create(
-            &cdir.join(format!("racks_{}s.csv", fmt_secs(sc.rack_interval_s))),
+            sink,
+            &format!("{cdir}/racks_{}s.csv", fmt_secs(sc.rack_interval_s)),
             "rack",
             n_racks,
             opts.dt_s,
@@ -662,7 +752,8 @@ impl CellWriters {
             1.0,
         )?;
         let rows = StreamingCsv::create(
-            &cdir.join(format!("rows_{}s.csv", fmt_secs(sc.row_interval_s))),
+            sink,
+            &format!("{cdir}/rows_{}s.csv", fmt_secs(sc.row_interval_s)),
             "row",
             n_rows,
             opts.dt_s,
@@ -676,7 +767,8 @@ impl CellWriters {
                 // PUE rides on the resampler's scale factor, exactly as the
                 // buffered `resample_mean_f64(&site, dt, interval, pue)`.
                 StreamingCsv::create(
-                    &cdir.join(format!("facility_{}s.csv", fmt_secs(interval))),
+                    sink,
+                    &format!("{cdir}/facility_{}s.csv", fmt_secs(interval)),
                     "facility",
                     1,
                     opts.dt_s,
@@ -712,9 +804,9 @@ impl CellWriters {
         Ok(())
     }
 
-    /// Finalize every writer (flush + atomic rename) and return the
-    /// finished file paths.
-    fn finish(self) -> Result<Vec<PathBuf>> {
+    /// Finalize every writer (flush + publish through the sink) and return
+    /// the finished logical paths.
+    fn finish(self) -> Result<Vec<String>> {
         let mut paths = Vec::with_capacity(2 + self.facility.len());
         paths.push(self.racks.finish()?);
         paths.push(self.rows.finish()?);
@@ -722,167 +814,6 @@ impl CellWriters {
             paths.push(f.finish()?);
         }
         Ok(paths)
-    }
-}
-
-/// Incremental columnar series CSV (`t_s,<stem>_0,...`): each column owns a
-/// [`StreamingResampler`], rows are appended as soon as every column has
-/// emitted a value. Byte-identical to [`write_series_csv`] on the buffered
-/// [`MultiScale`] series because the resampler reproduces
-/// `resample_mean_f64` exactly and both share [`fmt_secs`] + Rust's
-/// shortest round-trip f32 formatting. Crate-visible: the site composition
-/// engine ([`crate::site`]) streams `site_load.csv` through the same
-/// writer so facility and site exports can never drift in format.
-///
-/// Rows stream to `<name>.tmp`; only [`StreamingCsv::finish`] renames the
-/// file into its final place, so a crash mid-cell never leaves a
-/// plausible-looking partial series at the real path.
-pub(crate) struct StreamingCsv {
-    out: std::io::BufWriter<std::fs::File>,
-    /// The staging path rows stream to.
-    tmp: PathBuf,
-    /// The final path [`StreamingCsv::finish`] renames to.
-    path: PathBuf,
-    /// File name — the `export.write` failpoint tag.
-    tag: String,
-    interval_s: f64,
-    next_row: usize,
-    cols: Vec<StreamingResampler>,
-    pending: Vec<std::collections::VecDeque<f32>>,
-    line: String,
-}
-
-impl StreamingCsv {
-    pub(crate) fn create(
-        path: &Path,
-        stem: &str,
-        n_cols: usize,
-        dt_s: f64,
-        interval_s: f64,
-        scale: f64,
-    ) -> Result<StreamingCsv> {
-        let names: Vec<String> = (0..n_cols).map(|i| format!("{stem}_{i}")).collect();
-        Self::create_named(path, &names, dt_s, interval_s, scale)
-    }
-
-    /// [`StreamingCsv::create`] with explicit column names (the site
-    /// export's `site_w,<facility>_w` header).
-    pub(crate) fn create_named(
-        path: &Path,
-        col_names: &[String],
-        dt_s: f64,
-        interval_s: f64,
-        scale: f64,
-    ) -> Result<StreamingCsv> {
-        let tmp = fsx::tmp_path(path);
-        let file =
-            std::fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
-        let mut out = std::io::BufWriter::new(file);
-        let mut header = String::from("t_s");
-        for name in col_names {
-            header.push(',');
-            header.push_str(&csv_field(name));
-        }
-        header.push('\n');
-        out.write_all(header.as_bytes())?;
-        let cols = col_names
-            .iter()
-            .map(|_| StreamingResampler::new(dt_s, interval_s, scale))
-            .collect::<Result<Vec<_>>>()?;
-        let tag = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
-        Ok(StreamingCsv {
-            out,
-            tmp,
-            path: path.to_path_buf(),
-            tag,
-            interval_s,
-            next_row: 0,
-            cols,
-            pending: (0..col_names.len()).map(|_| std::collections::VecDeque::new()).collect(),
-            line: String::new(),
-        })
-    }
-
-    pub(crate) fn push_col(&mut self, col: usize, xs: &[f64]) {
-        let (r, q) = (&mut self.cols[col], &mut self.pending[col]);
-        for &x in xs {
-            if let Some(v) = r.push(x) {
-                q.push_back(v);
-            }
-        }
-    }
-
-    /// [`StreamingCsv::push_col`] over an f32 window (each sample widened
-    /// to f64 before the resampler fold — the same expression the f64 path
-    /// would see for values that started life as f32).
-    pub(crate) fn push_col_f32(&mut self, col: usize, xs: &[f32]) {
-        let (r, q) = (&mut self.cols[col], &mut self.pending[col]);
-        for &x in xs {
-            if let Some(v) = r.push(x as f64) {
-                q.push_back(v);
-            }
-        }
-    }
-
-    pub(crate) fn write_ready_rows(&mut self) -> Result<()> {
-        failpoint::hit("export.write", &self.tag)?;
-        let ready = self.pending.iter().map(|q| q.len()).min().unwrap_or(0);
-        for _ in 0..ready {
-            self.line.clear();
-            self.line.push_str(&fmt_secs(self.next_row as f64 * self.interval_s));
-            for q in self.pending.iter_mut() {
-                let v = q.pop_front().expect("ready rows counted");
-                self.line.push(',');
-                self.line.push_str(&format!("{v}"));
-            }
-            self.line.push('\n');
-            self.out.write_all(self.line.as_bytes())?;
-            self.next_row += 1;
-        }
-        Ok(())
-    }
-
-    /// Flush the trailing partial resample window of every column (the
-    /// buffered `resample_mean` emits it averaged over its actual length),
-    /// write the final row(s), and atomically rename the staged file into
-    /// its final place. Returns the finished path.
-    pub(crate) fn finish(mut self) -> Result<PathBuf> {
-        for (r, q) in self.cols.iter_mut().zip(self.pending.iter_mut()) {
-            if let Some((v, _count)) = r.flush() {
-                q.push_back(v);
-            }
-        }
-        self.write_ready_rows()?;
-        debug_assert!(self.pending.iter().all(|q| q.is_empty()), "ragged columns");
-        let file = self
-            .out
-            .into_inner()
-            .map_err(|e| anyhow::anyhow!("flushing {}: {e}", self.tmp.display()))?;
-        // Make the rename durable, not just atomic: the bytes reach disk
-        // before the final name does.
-        let _ = file.sync_all();
-        drop(file);
-        fsx::persist(&self.tmp, &self.path)?;
-        Ok(self.path)
-    }
-}
-
-/// RFC-4180 quoting for free-text CSV fields (a replay workload's path
-/// may contain commas or quotes).
-pub(crate) fn csv_field(s: &str) -> String {
-    if s.contains(',') || s.contains('"') || s.contains('\n') {
-        format!("\"{}\"", s.replace('"', "\"\""))
-    } else {
-        s.to_string()
-    }
-}
-
-/// `300` for whole seconds, `0.25` otherwise (file-name friendly).
-pub(crate) fn fmt_secs(x: f64) -> String {
-    if x.fract() == 0.0 {
-        format!("{}", x as i64)
-    } else {
-        format!("{x}")
     }
 }
 
@@ -895,52 +826,9 @@ fn truncate(s: &str, max: usize) -> String {
     }
 }
 
-/// `t_s,<stem>_0,<stem>_1,...` — shared by the buffered and streaming
-/// writers so their headers can never drift apart.
-fn series_csv_header(stem: &str, n_cols: usize) -> String {
-    let mut out = String::from("t_s");
-    for i in 0..n_cols {
-        out.push_str(&format!(",{stem}_{i}"));
-    }
-    out.push('\n');
-    out
-}
-
-/// Columnar CSV: `t_s,<stem>_0,<stem>_1,...` with one row per interval,
-/// written atomically (staged + renamed).
-fn write_series_csv(path: &Path, stem: &str, interval_s: f64, series: &[Vec<f32>]) -> Result<()> {
-    let n = series.iter().map(|s| s.len()).max().unwrap_or(0);
-    let mut out = series_csv_header(stem, series.len());
-    for t in 0..n {
-        out.push_str(&fmt_secs(t as f64 * interval_s));
-        for s in series {
-            out.push(',');
-            if t < s.len() {
-                out.push_str(&format!("{}", s[t]));
-            }
-        }
-        out.push('\n');
-    }
-    fsx::atomic_write(path, out.as_bytes())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn csv_field_quotes_only_when_needed() {
-        assert_eq!(csv_field("poisson λ=0.5"), "poisson λ=0.5");
-        assert_eq!(csv_field("replay a,b.json"), "\"replay a,b.json\"");
-        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
-    }
-
-    #[test]
-    fn fmt_secs_is_filename_friendly() {
-        assert_eq!(fmt_secs(300.0), "300");
-        assert_eq!(fmt_secs(1.0), "1");
-        assert_eq!(fmt_secs(0.25), "0.25");
-    }
 
     #[test]
     fn truncate_respects_char_boundaries() {
@@ -950,77 +838,8 @@ mod tests {
     }
 
     #[test]
-    fn series_csv_shape() {
-        let dir = std::env::temp_dir().join("powertrace_test_runner");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("racks.csv");
-        write_series_csv(&p, "rack", 15.0, &[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
-        let s = std::fs::read_to_string(&p).unwrap();
-        let lines: Vec<&str> = s.lines().collect();
-        assert_eq!(lines[0], "t_s,rack_0,rack_1");
-        assert_eq!(lines[1], "0,1,2");
-        assert_eq!(lines[2], "15,3,4");
-        assert_eq!(lines.len(), 3);
-    }
-
-    #[test]
-    fn streaming_csv_matches_buffered_writer_bytes() {
-        // Two columns of f64 data pushed in ragged windows must produce the
-        // byte-identical file to resampling whole series and using
-        // write_series_csv — including the partial trailing window.
-        let dir = std::env::temp_dir().join("powertrace_test_streaming_csv");
-        std::fs::create_dir_all(&dir).unwrap();
-        let (dt, interval) = (0.25, 1.5); // stride 6
-        let n = 100; // 100 = 16×6 + 4 → partial tail
-        let cols: Vec<Vec<f64>> = (0..2)
-            .map(|c| (0..n).map(|i| 1000.0 + (c * 37 + i) as f64 * 0.83).collect())
-            .collect();
-        // Buffered reference.
-        let buffered: Vec<Vec<f32>> = cols
-            .iter()
-            .map(|col| {
-                col.chunks(6)
-                    .map(|ch| (ch.iter().sum::<f64>() / ch.len() as f64) as f32)
-                    .collect()
-            })
-            .collect();
-        let pb = dir.join("buffered.csv");
-        write_series_csv(&pb, "rack", interval, &buffered).unwrap();
-        // Streaming writer fed in windows of 7.
-        let ps = dir.join("streamed.csv");
-        let mut w = StreamingCsv::create(&ps, "rack", 2, dt, interval, 1.0).unwrap();
-        let mut t0 = 0;
-        while t0 < n {
-            let wlen = 7.min(n - t0);
-            for (c, col) in cols.iter().enumerate() {
-                w.push_col(c, &col[t0..t0 + wlen]);
-            }
-            w.write_ready_rows().unwrap();
-            t0 += wlen;
-        }
-        let finished = w.finish().unwrap();
-        assert_eq!(finished, ps);
-        let a = std::fs::read(&pb).unwrap();
-        let b = std::fs::read(&ps).unwrap();
-        assert_eq!(a, b, "streamed CSV bytes differ from buffered");
-    }
-
-    #[test]
-    fn streaming_csv_is_atomic_until_finish() {
-        let dir = std::env::temp_dir().join("powertrace_test_streaming_atomic");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("atomic.csv");
-        let _ = std::fs::remove_file(&p);
-        let mut w = StreamingCsv::create(&p, "rack", 1, 0.25, 0.5, 1.0).unwrap();
-        w.push_col(0, &[1.0, 2.0, 3.0, 4.0]);
-        w.write_ready_rows().unwrap();
-        // Rows exist only in the staging file until finish renames it.
-        assert!(!p.exists(), "final path must not appear before finish");
-        assert!(crate::robust::fsx::tmp_path(&p).exists());
-        w.finish().unwrap();
-        assert!(p.exists());
-        assert!(!crate::robust::fsx::tmp_path(&p).exists());
-        let s = std::fs::read_to_string(&p).unwrap();
-        assert_eq!(s, "t_s,rack_0\n0,1.5\n0.5,3.5\n");
+    fn wall_timer_is_monotone() {
+        let t = WallTimer::start();
+        assert!(t.elapsed_s() >= 0.0);
     }
 }

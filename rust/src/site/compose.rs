@@ -6,14 +6,24 @@
 //!
 //! # Execution model
 //!
-//! One thread per facility runs the windowed facility engine (each with
-//! its own inner rack-parallel worker share); a bounded rendezvous channel
-//! per facility (capacity 1) delivers each completed PCC window to the
-//! coordinator, which waits for window *w* from **every** facility before
-//! folding — so the whole site advances through the horizon in lockstep
-//! and no stream can run more than two windows ahead. Peak memory is
+//! Under the threaded executor (the host default), one thread per facility
+//! runs the windowed facility engine (each with its own inner
+//! rack-parallel worker share); a bounded rendezvous channel per facility
+//! (capacity 1) delivers each completed PCC window to the coordinator,
+//! which waits for window *w* from **every** facility before folding — so
+//! the whole site advances through the horizon in lockstep and no stream
+//! can run more than two windows ahead. Peak memory is
 //! O(facilities × window) site-side plus each facility's own
 //! O(racks × window) streaming state; nothing scales with the horizon.
+//!
+//! Under [`Executor::Sequential`] (the only option in a core-only build)
+//! there are no threads at all: each facility stream runs to completion on
+//! the caller thread in spec order, buffering its windows, and the same
+//! coordinator fold then replays them in the same lockstep order. The
+//! window production and fold code is shared with the threaded path
+//! ([`drive_facility`] / [`WindowFolder`]), so the exports are
+//! byte-identical by construction — the trade is O(facilities × horizon)
+//! peak memory for zero thread dependence.
 //!
 //! # Determinism
 //!
@@ -21,14 +31,14 @@
 //! batch width, and window size (the PR 3 invariant), and the site fold
 //! sums facilities in spec order ([`SiteAccumulator::fold_site`]) — so
 //! `site_load.csv` / `site_summary.csv` are byte-identical across worker
-//! counts and window sizes, and a single-facility site reproduces the
-//! plain facility path's PCC series exactly.
+//! counts, window sizes, and executors, and a single-facility site
+//! reproduces the plain facility path's PCC series exactly.
 //!
 //! # Overlays
 //!
 //! Net-load overlay chains ([`super::overlay`]) hook the stream at two
 //! points: each facility's chain transforms its PCC window inside the
-//! facility thread (before characterization, export, and the site fold —
+//! facility stream (before characterization, export, and the site fold —
 //! the site composes *net* facility load), and the site-level chain
 //! transforms the composed window right after the barrier fold. Both are
 //! O(1)-state sample folds, so the determinism guarantees above extend to
@@ -43,15 +53,24 @@ use super::spec::{FacilityKind, SiteSpec, TrainingSpec};
 use crate::aggregate::{pcc_window_into, SiteAccumulator};
 use crate::config::ScenarioSpec;
 use crate::coordinator::{window_geometry, Generator};
-use crate::robust::{failpoint, fsx, Deadline};
-use crate::scenarios::runner::{csv_field, fmt_secs, StreamingCsv};
-use crate::util::threadpool::default_workers;
-use anyhow::{anyhow, bail, ensure, Result};
+#[cfg(feature = "host")]
+use crate::export::DirSink;
+use crate::export::{csv_field, fmt_secs, StreamingCsv, TraceSink};
+use crate::robust::{failpoint, Deadline};
+use crate::util::json;
+use crate::util::threadpool::{default_workers, Executor};
+#[cfg(feature = "host")]
+use anyhow::bail;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::VecDeque;
+#[cfg(feature = "host")]
 use std::path::Path;
+#[cfg(feature = "host")]
 use std::sync::mpsc;
 
 /// Marker a facility thread reports when the coordinator stopped taking
 /// windows (the real failure is elsewhere; this one is filtered out).
+#[cfg(feature = "host")]
 const ABORT_MSG: &str = "site window delivery aborted";
 
 /// What one facility's window stream runs: the generated inference
@@ -82,6 +101,10 @@ pub struct SiteOptions {
     pub load_interval_s: f64,
     /// Retain the full composed site series on the report (tests; O(T)).
     pub collect_series: bool,
+    /// How facility streams run: threaded lockstep (host default) or
+    /// fully sequential on the caller thread (the core-build default; a
+    /// debugging choice on hosts). Byte-invariant — see the module docs.
+    pub executor: Executor,
 }
 
 impl Default for SiteOptions {
@@ -94,14 +117,16 @@ impl Default for SiteOptions {
             ramp_interval_s: 900.0,
             load_interval_s: 60.0,
             collect_series: false,
+            executor: Executor::default(),
         }
     }
 }
 
 impl SiteOptions {
     /// The options that determine output *bytes* — a site-sweep manifest's
-    /// hash binds to exactly these. Workers, batch width, and window size
-    /// are byte-invariant by contract (see the module docs) and excluded.
+    /// hash binds to exactly these. Workers, batch width, window size, and
+    /// the executor are byte-invariant by contract (see the module docs)
+    /// and excluded.
     pub(crate) fn identity_json(&self) -> crate::util::json::Json {
         use crate::util::json::{obj, Json};
         obj([
@@ -163,8 +188,9 @@ pub struct SiteReport {
 
 /// Prepare every configuration the site's inference facilities reference
 /// (artifact load + classifier + packed-weight build, once per config) on
-/// the generator. [`run_site`] calls this itself; call it directly before
-/// fanning variants over [`run_site_prepared`] with a shared `&Generator`.
+/// the generator. [`run_site_sink`] calls this itself; call it directly
+/// before fanning variants over [`run_site_prepared_sink`] with a shared
+/// `&Generator`.
 pub fn prepare_site(gen: &mut Generator, spec: &SiteSpec) -> Result<()> {
     let scenarios: Vec<ScenarioSpec> =
         spec.facilities.iter().filter_map(|f| f.effective_scenario()).collect();
@@ -175,38 +201,208 @@ pub fn prepare_site(gen: &mut Generator, spec: &SiteSpec) -> Result<()> {
 /// utility-facing profile. With `out_dir`, streams `site_load.csv`
 /// window-by-window and writes `site_summary.csv` + `site_spec.json` on
 /// completion. Requires the native backend (windowed generation).
+#[cfg(feature = "host")]
 pub fn run_site(
     gen: &mut Generator,
     spec: &SiteSpec,
     opts: &SiteOptions,
     out_dir: Option<&Path>,
 ) -> Result<SiteReport> {
-    spec.validate()?;
-    prepare_site(gen, spec)?;
-    run_site_inner(gen, spec, opts, out_dir, None)
+    let sink = out_dir.map(DirSink::new);
+    run_site_sink(gen, spec, opts, sink.as_ref().map(|s| s as &dyn TraceSink))
 }
 
 /// [`run_site`] against an already-prepared shared generator (see
 /// [`prepare_site`]): takes `&Generator`, so site-sweep variants can fan
 /// out without exclusive access. Fails inside generation if a facility
 /// references a configuration that was never prepared.
+#[cfg(feature = "host")]
 pub fn run_site_prepared(
     gen: &Generator,
     spec: &SiteSpec,
     opts: &SiteOptions,
     out_dir: Option<&Path>,
 ) -> Result<SiteReport> {
-    run_site_inner(gen, spec, opts, out_dir, None)
+    let sink = out_dir.map(DirSink::new);
+    run_site_prepared_sink(gen, spec, opts, sink.as_ref().map(|s| s as &dyn TraceSink))
 }
 
-/// The composition engine behind [`run_site`] / [`run_site_prepared`].
-/// With a [`Deadline`], the soft wall-clock budget is checked at every
-/// lockstep window barrier (the site path's cooperative yield points).
+/// [`run_site`] with exports routed through an arbitrary [`TraceSink`]
+/// (`site_load.csv`, `site_summary.csv`, `site_spec.json` at the sink
+/// root) — the embedding entry point, available without the `host`
+/// feature.
+pub fn run_site_sink(
+    gen: &mut Generator,
+    spec: &SiteSpec,
+    opts: &SiteOptions,
+    sink: Option<&dyn TraceSink>,
+) -> Result<SiteReport> {
+    spec.validate()?;
+    prepare_site(gen, spec)?;
+    run_site_inner(gen, spec, opts, sink, None)
+}
+
+/// [`run_site_prepared`] with exports routed through an arbitrary
+/// [`TraceSink`]; see [`run_site_sink`].
+pub fn run_site_prepared_sink(
+    gen: &Generator,
+    spec: &SiteSpec,
+    opts: &SiteOptions,
+    sink: Option<&dyn TraceSink>,
+) -> Result<SiteReport> {
+    run_site_inner(gen, spec, opts, sink, None)
+}
+
+/// Shared per-facility stream geometry — every facility stream and both
+/// executors see the same numbers.
+#[derive(Clone, Copy)]
+struct FacCtx<'a> {
+    dt: f64,
+    ramp_s: f64,
+    utility_intervals: &'a [f64],
+    n_steps: usize,
+    window: usize,
+    n_windows: usize,
+    inner_workers: usize,
+    max_batch: usize,
+    window_s: f64,
+}
+
+/// Run one facility's window stream to completion, handing each finished
+/// PCC window (overlays already applied) to `deliver` in order. Both
+/// executors drive facilities through this one function — the threaded
+/// path delivers into a rendezvous channel, the sequential path into a
+/// buffer — so a facility's window bytes cannot depend on the executor.
+fn drive_facility(
+    gen_ro: &Generator,
+    stream: &FacStream,
+    chain: &mut OverlayChain,
+    ctx: FacCtx<'_>,
+    deliver: &mut dyn FnMut(Vec<f32>) -> Result<()>,
+) -> Result<SeriesSummary> {
+    let mut fac_stats = SiteSeriesStats::new(ctx.dt, ctx.ramp_s, ctx.utility_intervals)?;
+    let mut pcc: Vec<f32> = Vec::new();
+    match stream {
+        FacStream::Inference(spec_f) => {
+            let pue = spec_f.pue;
+            let mut rows_buf: Vec<Vec<f64>> = Vec::new();
+            let mut site_buf: Vec<f64> = Vec::new();
+            gen_ro.facility_shared_windowed(
+                spec_f,
+                ctx.dt,
+                ctx.window_s,
+                ctx.inner_workers,
+                ctx.max_batch,
+                |facc| {
+                    facc.fold_rows_site(&mut rows_buf, &mut site_buf);
+                    // The facility PCC f32 series exactly as the sweep
+                    // engine's streamed cells build it (shared helper).
+                    pcc_window_into(&site_buf, pue, &mut pcc);
+                    // Facility overlays transform the window before
+                    // characterization, export, AND the site fold — the
+                    // site composes **net** facility load. An empty chain
+                    // is skipped entirely (the PR-4 byte-identity surface).
+                    if !chain.is_empty() {
+                        chain.apply_window(facc.window_t0(), &mut pcc);
+                    }
+                    fac_stats.push_window(&pcc);
+                    deliver(pcc.clone())
+                },
+            )?;
+        }
+        FacStream::Training(tspec, phase) => {
+            // The training synthesizer: evaluate the step function over
+            // each lockstep window (phase-shifted like diurnal peaks:
+            // positive offsets move steps later), run the same
+            // per-facility overlay chain, characterize, and deliver —
+            // indistinguishable from a generated stream to the
+            // coordinator.
+            let phase = *phase;
+            for wi in 0..ctx.n_windows {
+                let t0 = wi * ctx.window;
+                let len = (ctx.n_steps - t0).min(ctx.window);
+                pcc.clear();
+                pcc.extend(
+                    (0..len).map(|i| tspec.power_at((t0 + i) as f64 * ctx.dt - phase) as f32),
+                );
+                if !chain.is_empty() {
+                    chain.apply_window(t0, &mut pcc);
+                }
+                fac_stats.push_window(&pcc);
+                deliver(pcc.clone())?;
+            }
+        }
+    }
+    let mut summary = fac_stats.finalize()?;
+    if !chain.is_empty() {
+        summary.overlay = Some(chain.summary());
+    }
+    Ok(summary)
+}
+
+/// The coordinator side of one site run: the accumulator, the site
+/// overlay chain, characterization state, and the streamed export. Both
+/// executors fold every window through [`WindowFolder::fold_window`], so
+/// the composed bytes cannot depend on the executor either.
+struct WindowFolder {
+    acc: SiteAccumulator,
+    site_pcc: Vec<f32>,
+    site_chain: OverlayChain,
+    site_stats: SiteSeriesStats,
+    site_series: Option<Vec<f32>>,
+    writer: Option<StreamingCsv>,
+    n_fac: usize,
+    n_steps: usize,
+    window: usize,
+}
+
+impl WindowFolder {
+    /// One lockstep barrier: pull window `wi` from every facility (via
+    /// `recv`, in facility order), fold, overlay, characterize, export.
+    fn fold_window(
+        &mut self,
+        wi: usize,
+        recv: &mut dyn FnMut(usize) -> Result<Vec<f32>>,
+    ) -> Result<()> {
+        let t0 = wi * self.window;
+        let len = (self.n_steps - t0).min(self.window);
+        self.acc.begin_window(t0, len);
+        for f in 0..self.n_fac {
+            let win = recv(f)?;
+            self.acc.set_facility(f, &win)?;
+        }
+        let site_w = self.acc.fold_site()?;
+        self.site_pcc.clear();
+        self.site_pcc.extend(site_w.iter().map(|&x| x as f32));
+        // Site-level overlays modulate the composed window before
+        // characterization and export (empty chain = skipped).
+        if !self.site_chain.is_empty() {
+            self.site_chain.apply_window(self.acc.window_t0(), &mut self.site_pcc);
+        }
+        self.site_stats.push_window(&self.site_pcc);
+        if let Some(series) = self.site_series.as_mut() {
+            series.extend_from_slice(&self.site_pcc);
+        }
+        if let Some(w) = self.writer.as_mut() {
+            w.push_col_f32(0, &self.site_pcc);
+            for f in 0..self.n_fac {
+                w.push_col_f32(1 + f, self.acc.facility_window(f));
+            }
+            w.write_ready_rows()?;
+        }
+        Ok(())
+    }
+}
+
+/// The composition engine behind [`run_site_sink`] /
+/// [`run_site_prepared_sink`]. With a [`Deadline`], the soft wall-clock
+/// budget is checked at every lockstep window barrier (the site path's
+/// cooperative yield points).
 pub(crate) fn run_site_inner(
     gen: &Generator,
     spec: &SiteSpec,
     opts: &SiteOptions,
-    out_dir: Option<&Path>,
+    sink: Option<&dyn TraceSink>,
     deadline: Option<&Deadline>,
 ) -> Result<SiteReport> {
     spec.validate()?;
@@ -245,17 +441,29 @@ pub(crate) fn run_site_inner(
     let ramp_s = crate::metrics::planning::clamp_ramp_interval(opts.ramp_interval_s, horizon, dt);
     let total_workers = if opts.workers == 0 { default_workers() } else { opts.workers };
     // Only generating (inference) streams consume the worker budget; the
-    // training synthesizer threads are O(window) loops.
-    let inner_workers = (total_workers / n_inference.max(1)).max(1);
+    // training synthesizer streams are O(window) loops. A sequential
+    // executor forces every inner fan-out to the caller thread.
+    let inner_workers = opts.executor.workers((total_workers / n_inference.max(1)).max(1));
+    let ctx = FacCtx {
+        dt,
+        ramp_s,
+        utility_intervals: &spec.utility_intervals_s,
+        n_steps,
+        window,
+        n_windows,
+        inner_workers,
+        max_batch: opts.max_batch,
+        window_s: opts.window_s,
+    };
 
-    let mut site_stats = SiteSeriesStats::new(dt, ramp_s, &spec.utility_intervals_s)?;
-    let mut writer: Option<StreamingCsv> = match out_dir {
-        Some(dir) => {
-            std::fs::create_dir_all(dir)?;
+    let site_stats = SiteSeriesStats::new(dt, ramp_s, &spec.utility_intervals_s)?;
+    let writer: Option<StreamingCsv> = match sink {
+        Some(s) => {
             let mut names = vec!["site_w".to_string()];
             names.extend(spec.facilities.iter().map(|f| format!("{}_w", f.name)));
             Some(StreamingCsv::create_named(
-                &dir.join("site_load.csv"),
+                s,
+                "site_load.csv",
                 &names,
                 dt,
                 opts.load_interval_s,
@@ -264,13 +472,12 @@ pub(crate) fn run_site_inner(
         }
         None => None,
     };
-    let mut site_series: Option<Vec<f32>> =
+    let site_series: Option<Vec<f32>> =
         if opts.collect_series { Some(Vec::new()) } else { None };
-    let utility_intervals = &spec.utility_intervals_s;
 
     // Per-facility overlay chains (facility PCC modulation — a facility
     // nameplate cap, on-site battery/PV), built up front so spec errors
-    // surface before any thread spawns. PV stages follow the facility's
+    // surface before any stream starts. PV stages follow the facility's
     // timezone (`effective_overlays`).
     let mut fac_chains: Vec<OverlayChain> = spec
         .facilities
@@ -279,190 +486,67 @@ pub(crate) fn run_site_inner(
         .collect::<Result<Vec<_>>>()?;
     // Site-level overlay chain (interconnection cap, site battery,
     // utility-scale PV), applied to the composed window after the fold.
-    let mut site_chain = OverlayChain::new(&spec.overlays, dt)?;
+    let site_chain = OverlayChain::new(&spec.overlays, dt)?;
 
-    let fac_summaries: Vec<SeriesSummary> = std::thread::scope(|sc| -> Result<Vec<SeriesSummary>> {
-        let mut handles = Vec::with_capacity(n_fac);
-        let mut rxs = Vec::with_capacity(n_fac);
-        for (stream, mut chain) in streams.iter().zip(fac_chains.drain(..)) {
-            let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(1);
-            rxs.push(rx);
-            match stream {
-                FacStream::Inference(spec_f) => {
-                    let pue = spec_f.pue;
-                    let max_batch = opts.max_batch;
-                    let window_s = opts.window_s;
-                    handles.push(sc.spawn(move || -> Result<SeriesSummary> {
-                        let mut fac_stats = SiteSeriesStats::new(dt, ramp_s, utility_intervals)?;
-                        let mut rows_buf: Vec<Vec<f64>> = Vec::new();
-                        let mut site_buf: Vec<f64> = Vec::new();
-                        let mut pcc: Vec<f32> = Vec::new();
-                        gen_ro.facility_shared_windowed(
-                            spec_f,
-                            dt,
-                            window_s,
-                            inner_workers,
-                            max_batch,
-                            |facc| {
-                                facc.fold_rows_site(&mut rows_buf, &mut site_buf);
-                                // The facility PCC f32 series exactly as the
-                                // sweep engine's streamed cells build it
-                                // (shared helper).
-                                pcc_window_into(&site_buf, pue, &mut pcc);
-                                // Facility overlays transform the window
-                                // before characterization, export, AND the
-                                // site fold — the site composes **net**
-                                // facility load. An empty chain is skipped
-                                // entirely (the PR-4 byte-identity surface).
-                                if !chain.is_empty() {
-                                    chain.apply_window(facc.window_t0(), &mut pcc);
-                                }
-                                fac_stats.push_window(&pcc);
-                                tx.send(pcc.clone()).map_err(|_| anyhow!(ABORT_MSG))?;
-                                Ok(())
-                            },
-                        )?;
-                        let mut summary = fac_stats.finalize()?;
-                        if !chain.is_empty() {
-                            summary.overlay = Some(chain.summary());
-                        }
-                        Ok(summary)
-                    }));
-                }
-                FacStream::Training(tspec, phase) => {
-                    // The training synthesizer: evaluate the step function
-                    // over each lockstep window (phase-shifted like diurnal
-                    // peaks: positive offsets move steps later), run the
-                    // same per-facility overlay chain, characterize, and
-                    // deliver — indistinguishable from a generated stream
-                    // to the coordinator.
-                    let tspec = tspec.clone();
-                    let phase = *phase;
-                    handles.push(sc.spawn(move || -> Result<SeriesSummary> {
-                        let mut fac_stats = SiteSeriesStats::new(dt, ramp_s, utility_intervals)?;
-                        let mut pcc: Vec<f32> = Vec::new();
-                        for wi in 0..n_windows {
-                            let t0 = wi * window;
-                            let len = (n_steps - t0).min(window);
-                            pcc.clear();
-                            pcc.extend(
-                                (0..len)
-                                    .map(|i| tspec.power_at((t0 + i) as f64 * dt - phase) as f32),
-                            );
-                            if !chain.is_empty() {
-                                chain.apply_window(t0, &mut pcc);
-                            }
-                            fac_stats.push_window(&pcc);
-                            tx.send(pcc.clone()).map_err(|_| anyhow!(ABORT_MSG))?;
-                        }
-                        let mut summary = fac_stats.finalize()?;
-                        if !chain.is_empty() {
-                            summary.overlay = Some(chain.summary());
-                        }
-                        Ok(summary)
-                    }));
-                }
-            }
-        }
+    let mut folder = WindowFolder {
+        acc: SiteAccumulator::new(n_fac, window),
+        site_pcc: Vec::new(),
+        site_chain,
+        site_stats,
+        site_series,
+        writer,
+        n_fac,
+        n_steps,
+        window,
+    };
 
-        // Coordinator: one lockstep barrier per window. Failures are
-        // recorded (never early-returned) so the channels always drop and
-        // the facility threads always join.
-        let mut acc = SiteAccumulator::new(n_fac, window);
-        let mut site_pcc: Vec<f32> = Vec::new();
-        let mut coord_err: Option<anyhow::Error> = None;
-        'windows: for wi in 0..n_windows {
-            if let Some(d) = deadline {
-                if let Err(e) = d.check() {
-                    coord_err = Some(e);
-                    break 'windows;
-                }
-            }
-            if let Err(e) = failpoint::hit("site.window", &spec.name) {
-                coord_err = Some(e);
-                break 'windows;
-            }
-            let t0 = wi * window;
-            let len = (n_steps - t0).min(window);
-            acc.begin_window(t0, len);
-            for (f, rx) in rxs.iter().enumerate() {
-                let win = match rx.recv() {
-                    Ok(w) => w,
-                    Err(_) => {
-                        coord_err = Some(anyhow!(
-                            "facility '{}': window stream ended early",
-                            spec.facilities[f].name
-                        ));
-                        break 'windows;
-                    }
-                };
-                if let Err(e) = acc.set_facility(f, &win) {
-                    coord_err = Some(e);
-                    break 'windows;
-                }
-            }
-            match acc.fold_site() {
-                Ok(site_w) => {
-                    site_pcc.clear();
-                    site_pcc.extend(site_w.iter().map(|&x| x as f32));
-                }
-                Err(e) => {
-                    coord_err = Some(e);
-                    break 'windows;
-                }
-            }
-            // Site-level overlays modulate the composed window before
-            // characterization and export (empty chain = skipped).
-            if !site_chain.is_empty() {
-                site_chain.apply_window(acc.window_t0(), &mut site_pcc);
-            }
-            site_stats.push_window(&site_pcc);
-            if let Some(series) = site_series.as_mut() {
-                series.extend_from_slice(&site_pcc);
-            }
-            if let Some(w) = writer.as_mut() {
-                w.push_col_f32(0, &site_pcc);
-                for f in 0..n_fac {
-                    w.push_col_f32(1 + f, acc.facility_window(f));
-                }
-                if let Err(e) = w.write_ready_rows() {
-                    coord_err = Some(e);
-                    break 'windows;
-                }
-            }
-        }
-        drop(rxs);
+    let fac_summaries: Vec<SeriesSummary> = if opts.executor.is_sequential() {
+        // Sequential composition: run every facility stream to completion
+        // in spec order (buffering its windows), then replay the exact
+        // lockstep fold. The deadline is checked at every delivered window
+        // and every fold barrier, so long runs stay interruptible.
+        let mut buffered: Vec<VecDeque<Vec<f32>>> = Vec::with_capacity(n_fac);
         let mut summaries = Vec::with_capacity(n_fac);
-        let mut errors: Vec<String> = Vec::new();
-        for (f, h) in handles.into_iter().enumerate() {
-            let name = &spec.facilities[f].name;
-            match h.join() {
-                Ok(Ok(s)) => summaries.push(s),
-                Ok(Err(e)) => {
-                    let msg = format!("{e:#}");
-                    // Delivery aborts are downstream of the real failure.
-                    if !msg.contains(ABORT_MSG) {
-                        errors.push(format!("facility '{name}': {msg}"));
-                    }
+        for ((f, stream), mut chain) in streams.iter().enumerate().zip(fac_chains.drain(..)) {
+            let mut q = VecDeque::new();
+            let summary = drive_facility(gen_ro, stream, &mut chain, ctx, &mut |w| {
+                if let Some(d) = deadline {
+                    d.check()?;
                 }
-                Err(_) => errors.push(format!("facility '{name}': generation thread panicked")),
+                q.push_back(w);
+                Ok(())
+            })
+            .map_err(|e| {
+                anyhow!("site composition failed: facility '{}': {e:#}", spec.facilities[f].name)
+            })?;
+            buffered.push(q);
+            summaries.push(summary);
+        }
+        for wi in 0..n_windows {
+            if let Some(d) = deadline {
+                d.check()?;
             }
+            failpoint::hit("site.window", &spec.name)?;
+            folder.fold_window(wi, &mut |f| {
+                buffered[f].pop_front().ok_or_else(|| {
+                    anyhow!("facility '{}': window stream ended early", spec.facilities[f].name)
+                })
+            })?;
         }
-        if !errors.is_empty() {
-            bail!("site composition failed: {}", errors.join("; "));
+        summaries
+    } else {
+        #[cfg(feature = "host")]
+        {
+            compose_threaded(gen_ro, spec, &streams, fac_chains, ctx, &mut folder, deadline)?
         }
-        if let Some(e) = coord_err {
-            return Err(e);
+        #[cfg(not(feature = "host"))]
+        {
+            unreachable!("threaded executor requires the host feature")
         }
-        ensure!(
-            summaries.len() == n_fac,
-            "site composition failed: {} of {n_fac} facility streams aborted",
-            n_fac - summaries.len()
-        );
-        Ok(summaries)
-    })?;
+    };
 
-    if let Some(w) = writer.take() {
+    let WindowFolder { writer, site_chain, site_stats, site_series, .. } = folder;
+    if let Some(w) = writer {
         w.finish()?;
     }
     let mut site = site_stats.finalize()?;
@@ -502,11 +586,99 @@ pub(crate) fn run_site_inner(
         headroom_frac: if nameplate_w > 0.0 { headroom_w / nameplate_w } else { 0.0 },
         site_series,
     };
-    if let Some(dir) = out_dir {
-        fsx::atomic_write(&dir.join("site_summary.csv"), report.summary_csv().as_bytes())?;
-        report.spec.save(&dir.join("site_spec.json"))?;
+    if let Some(s) = sink {
+        s.put("site_summary.csv", report.summary_csv().as_bytes())?;
+        // Byte-identical to the pre-split `SiteSpec::save` (same pretty
+        // printer, same trailing newline), minus the host-only staging.
+        s.put("site_spec.json", json::to_string_pretty(&report.spec.to_json()).as_bytes())?;
     }
     Ok(report)
+}
+
+/// The threaded composition path: one thread per facility stream, a
+/// capacity-1 rendezvous channel each, and the coordinator folding at the
+/// lockstep barrier. Failures are recorded (never early-returned) so the
+/// channels always drop and the facility threads always join.
+#[cfg(feature = "host")]
+fn compose_threaded(
+    gen_ro: &Generator,
+    spec: &SiteSpec,
+    streams: &[FacStream],
+    fac_chains: Vec<OverlayChain>,
+    ctx: FacCtx<'_>,
+    folder: &mut WindowFolder,
+    deadline: Option<&Deadline>,
+) -> Result<Vec<SeriesSummary>> {
+    let n_fac = streams.len();
+    std::thread::scope(|sc| -> Result<Vec<SeriesSummary>> {
+        let mut handles = Vec::with_capacity(n_fac);
+        let mut rxs = Vec::with_capacity(n_fac);
+        for (stream, chain) in streams.iter().zip(fac_chains) {
+            let (tx, rx) = mpsc::sync_channel::<Vec<f32>>(1);
+            rxs.push(rx);
+            handles.push(sc.spawn(move || -> Result<SeriesSummary> {
+                let mut chain = chain;
+                drive_facility(gen_ro, stream, &mut chain, ctx, &mut |w| {
+                    tx.send(w).map_err(|_| anyhow!(ABORT_MSG))
+                })
+            }));
+        }
+
+        // Coordinator: one lockstep barrier per window. Failures are
+        // recorded (never early-returned) so the channels always drop and
+        // the facility threads always join.
+        let mut coord_err: Option<anyhow::Error> = None;
+        'windows: for wi in 0..ctx.n_windows {
+            if let Some(d) = deadline {
+                if let Err(e) = d.check() {
+                    coord_err = Some(e);
+                    break 'windows;
+                }
+            }
+            if let Err(e) = failpoint::hit("site.window", &spec.name) {
+                coord_err = Some(e);
+                break 'windows;
+            }
+            let folded = folder.fold_window(wi, &mut |f| {
+                rxs[f].recv().map_err(|_| {
+                    anyhow!("facility '{}': window stream ended early", spec.facilities[f].name)
+                })
+            });
+            if let Err(e) = folded {
+                coord_err = Some(e);
+                break 'windows;
+            }
+        }
+        drop(rxs);
+        let mut summaries = Vec::with_capacity(n_fac);
+        let mut errors: Vec<String> = Vec::new();
+        for (f, h) in handles.into_iter().enumerate() {
+            let name = &spec.facilities[f].name;
+            match h.join() {
+                Ok(Ok(s)) => summaries.push(s),
+                Ok(Err(e)) => {
+                    let msg = format!("{e:#}");
+                    // Delivery aborts are downstream of the real failure.
+                    if !msg.contains(ABORT_MSG) {
+                        errors.push(format!("facility '{name}': {msg}"));
+                    }
+                }
+                Err(_) => errors.push(format!("facility '{name}': generation thread panicked")),
+            }
+        }
+        if !errors.is_empty() {
+            bail!("site composition failed: {}", errors.join("; "));
+        }
+        if let Some(e) = coord_err {
+            return Err(e);
+        }
+        ensure!(
+            summaries.len() == n_fac,
+            "site composition failed: {} of {n_fac} facility streams aborted",
+            n_fac - summaries.len()
+        );
+        Ok(summaries)
+    })
 }
 
 impl SiteReport {

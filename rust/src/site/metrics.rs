@@ -120,7 +120,7 @@ pub(crate) fn characterization_header(sum: &SeriesSummary, with_overlay: bool, s
         s.push_str(&format!(",ld_p{}_w", (p.q * 100.0).round() as u32));
     }
     for r in &sum.ramps {
-        let iv = crate::scenarios::runner::fmt_secs(r.interval_s);
+        let iv = crate::export::fmt_secs(r.interval_s);
         s.push_str(&format!(",ramp_max_{iv}s_w,ramp_p99_{iv}s_w"));
     }
     if with_overlay {

@@ -45,8 +45,10 @@ pub mod spec;
 pub mod sweep;
 
 pub use compose::{
-    prepare_site, run_site, run_site_prepared, FacilityReport, SiteOptions, SiteReport,
+    prepare_site, run_site_prepared_sink, run_site_sink, FacilityReport, SiteOptions, SiteReport,
 };
+#[cfg(feature = "host")]
+pub use compose::{run_site, run_site_prepared};
 pub use metrics::{
     LoadDurationPoint, SeriesSummary, SiteSeriesStats, LOAD_DURATION_QUANTILES,
 };
@@ -54,7 +56,8 @@ pub use overlay::{pv_irradiance_w, OverlayChain, OverlaySpec, OverlaySummary};
 pub use spec::{
     FacilityKind, FacilitySpec, SiteSpec, TrainingSpec, DEFAULT_UTILITY_INTERVALS_S,
 };
+pub use sweep::{sweep_summary_csv, SiteGrid, SiteVariant};
+#[cfg(feature = "host")]
 pub use sweep::{
-    run_site_sweep, run_site_sweep_checkpointed, sweep_summary_csv, SiteGrid, SiteSweepOutcome,
-    SiteVariant, SITE_SWEEP_MANIFEST,
+    run_site_sweep, run_site_sweep_checkpointed, SiteSweepOutcome, SITE_SWEEP_MANIFEST,
 };

@@ -17,6 +17,7 @@ use super::overlay::OverlaySpec;
 use crate::config::{ScenarioSpec, WorkloadSpec};
 use crate::util::json::{self, Json};
 use anyhow::{bail, Context, Result};
+#[cfg(feature = "host")]
 use std::path::Path;
 
 /// Default utility ramp-measurement intervals (5 / 15 / 60 min — dispatch,
@@ -442,11 +443,13 @@ impl SiteSpec {
         Ok(spec)
     }
 
+    #[cfg(feature = "host")]
     pub fn load(path: &Path) -> Result<SiteSpec> {
         let v = json::parse_file(path).map_err(anyhow::Error::from)?;
         Self::from_json(&v).with_context(|| format!("parsing site spec {}", path.display()))
     }
 
+    #[cfg(feature = "host")]
     pub fn save(&self, path: &Path) -> Result<()> {
         json::write_file(path, &self.to_json()).map_err(anyhow::Error::from)
     }
@@ -721,6 +724,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join("powertrace_test_site_spec");

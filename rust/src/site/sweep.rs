@@ -31,21 +31,31 @@
 //! sweep. Variants without the axes keep their PR-4 ids (`p<i>-s<seed>`);
 //! with them, ids extend to `p<i>-s<seed>-b<j>-c<k>`.
 
-use super::compose::{prepare_site, run_site_inner, run_site_prepared, SiteOptions, SiteReport};
+#[cfg(feature = "host")]
+use super::compose::{prepare_site, run_site_inner, run_site_prepared};
+use super::compose::{SiteOptions, SiteReport};
 use super::metrics::SeriesSummary;
 use super::overlay::OverlaySpec;
 use super::spec::SiteSpec;
+#[cfg(feature = "host")]
 use crate::coordinator::Generator;
+use crate::export::csv_field;
+#[cfg(feature = "host")]
+use crate::export::{DirSink, TraceSink};
+#[cfg(feature = "host")]
 use crate::robust::manifest::content_hash;
+#[cfg(feature = "host")]
 use crate::robust::{
     failpoint, fsx, run_isolated, CellStatus, ExportRecord, Isolated, ManifestKeeper, RetryPolicy,
     RunManifest,
 };
-use crate::scenarios::runner::csv_field;
+#[cfg(feature = "host")]
 use crate::scenarios::QuarantinedCell;
 use crate::util::json::{self, Json};
+#[cfg(feature = "host")]
 use crate::util::threadpool::parallel_map_results;
 use anyhow::{bail, Context, Result};
+#[cfg(feature = "host")]
 use std::path::{Path, PathBuf};
 
 /// A declarative site sweep: one base site × phase spreads × seeds.
@@ -247,11 +257,13 @@ impl SiteGrid {
         Ok(grid)
     }
 
+    #[cfg(feature = "host")]
     pub fn load(path: &Path) -> Result<SiteGrid> {
         let v = json::parse_file(path).map_err(anyhow::Error::from)?;
         Self::from_json(&v).with_context(|| format!("parsing site sweep {}", path.display()))
     }
 
+    #[cfg(feature = "host")]
     pub fn save(&self, path: &Path) -> Result<()> {
         json::write_file(path, &self.to_json()).map_err(anyhow::Error::from)
     }
@@ -267,6 +279,7 @@ impl SiteGrid {
 /// variant's error instead of unwinding through the sweep), but this
 /// entry point still fails fast on the first bad variant. For quarantine
 /// semantics and crash-safe resume, use [`run_site_sweep_checkpointed`].
+#[cfg(feature = "host")]
 pub fn run_site_sweep(
     gen: &mut Generator,
     grid: &SiteGrid,
@@ -350,9 +363,11 @@ pub fn sweep_summary_csv(results: &[(SiteVariant, SiteReport)]) -> String {
 }
 
 /// Manifest file name inside a checkpointed site-sweep output directory.
+#[cfg(feature = "host")]
 pub const SITE_SWEEP_MANIFEST: &str = "manifest.json";
 
 /// What [`run_site_sweep_checkpointed`] hands back.
+#[cfg(feature = "host")]
 pub struct SiteSweepOutcome {
     /// Variants executed *this* run, paired with their reports, in grid
     /// order (restored variants are in the summary but not re-run).
@@ -375,6 +390,7 @@ pub struct SiteSweepOutcome {
 /// that panics or errors is retried per [`RetryPolicy`], then quarantined
 /// — the remaining variants still run, and the final summary carries every
 /// completed row.
+#[cfg(feature = "host")]
 pub fn run_site_sweep_checkpointed(
     gen: &mut Generator,
     grid: &SiteGrid,
@@ -411,10 +427,10 @@ pub fn run_site_sweep_checkpointed(
     let results = parallel_map_results(todo.len(), 1, |k| -> Result<Option<SiteReport>> {
         let variant = &variants[todo[k]];
         let prior = keeper.with(|m| m.attempts(&variant.id));
-        let vdir = dir.join(&variant.id);
+        let vsink = DirSink::new(dir.join(&variant.id));
         let isolated = run_isolated(policy, prior, |deadline| {
             failpoint::hit("site.variant", &variant.id)?;
-            run_site_inner(gen_ro, &variant.spec, opts, Some(&vdir), Some(deadline))
+            run_site_inner(gen_ro, &variant.spec, opts, Some(&vsink as &dyn TraceSink), Some(deadline))
         });
         match isolated {
             Isolated::Done { value: report, attempts } => {
@@ -469,6 +485,7 @@ pub fn run_site_sweep_checkpointed(
 
 /// Stat the three files every completed variant directory holds, as
 /// manifest export records (relative paths, recorded sizes).
+#[cfg(feature = "host")]
 fn variant_exports(root: &Path, id: &str) -> Result<Vec<ExportRecord>> {
     let mut out = Vec::with_capacity(3);
     for name in ["site_load.csv", "site_summary.csv", "site_spec.json"] {

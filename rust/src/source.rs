@@ -1,0 +1,185 @@
+//! `ArtifactSource` — the bytes-in seam of the core/host split.
+//!
+//! Everything the engine *reads* (trained artifacts, config JSON, replay
+//! traces) arrives through this trait, so the pure core never touches
+//! `std::fs`. The host shell provides [`FsSource`] (a directory on disk);
+//! embedders — wasm, services, tests — provide [`MemSource`] or their own
+//! impl over whatever byte store they have.
+//!
+//! Paths are logical, `/`-separated, and relative to the source root
+//! (e.g. `configs/llama8b_a100_tp2.json`). [`FsSource`] maps them onto
+//! its root directory; an absolute logical path passes through unchanged
+//! (`PathBuf::join` semantics), which is how replay-trace paths recorded
+//! in scenario specs keep their current meaning.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Byte provider for everything the engine reads.
+pub trait ArtifactSource: Send + Sync {
+    /// Read the full contents of a logical path.
+    fn read(&self, path: &str) -> Result<Vec<u8>>;
+    /// List the entries of a logical directory (file names only, not
+    /// full paths), in an implementation-defined order — callers sort.
+    fn list(&self, dir: &str) -> Result<Vec<String>>;
+}
+
+/// Read a logical path as UTF-8 text.
+pub fn read_to_string(src: &dyn ArtifactSource, path: &str) -> Result<String> {
+    let bytes = src.read(path)?;
+    String::from_utf8(bytes).with_context(|| format!("{path}: not valid UTF-8"))
+}
+
+/// In-memory [`ArtifactSource`]: a map of logical path → bytes. The
+/// wasm/embedding entry point ("bytes in"), and the test double.
+#[derive(Debug, Default)]
+pub struct MemSource {
+    files: Mutex<BTreeMap<String, Vec<u8>>>,
+}
+
+impl MemSource {
+    pub fn new() -> MemSource {
+        MemSource::default()
+    }
+
+    /// Insert (or replace) one logical file.
+    pub fn insert(&self, path: &str, bytes: Vec<u8>) {
+        self.files.lock().unwrap().insert(path.to_string(), bytes);
+    }
+
+    pub fn contains(&self, path: &str) -> bool {
+        self.files.lock().unwrap().contains_key(path)
+    }
+
+    pub fn len(&self) -> usize {
+        self.files.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.lock().unwrap().is_empty()
+    }
+}
+
+impl ArtifactSource for MemSource {
+    fn read(&self, path: &str) -> Result<Vec<u8>> {
+        match self.files.lock().unwrap().get(path) {
+            Some(b) => Ok(b.clone()),
+            None => bail!("{path}: not present in the in-memory artifact source"),
+        }
+    }
+
+    fn list(&self, dir: &str) -> Result<Vec<String>> {
+        let prefix = if dir.is_empty() || dir.ends_with('/') {
+            dir.to_string()
+        } else {
+            format!("{dir}/")
+        };
+        let files = self.files.lock().unwrap();
+        let mut out = Vec::new();
+        let mut dir_exists = false;
+        for key in files.keys() {
+            if let Some(rest) = key.strip_prefix(&prefix) {
+                dir_exists = true;
+                // Direct children only, mirroring a one-level read_dir.
+                if !rest.is_empty() && !rest.contains('/') {
+                    out.push(rest.to_string());
+                }
+            }
+        }
+        // A directory exists only by virtue of holding files; a prefix no
+        // key matches is "not found", like read_dir on a missing path.
+        if !dir_exists {
+            bail!("{dir}: no such directory in the in-memory artifact source");
+        }
+        Ok(out)
+    }
+}
+
+/// Filesystem-backed [`ArtifactSource`] rooted at a directory. With an
+/// empty root, logical paths resolve exactly as OS paths (relative to the
+/// process cwd, absolute passes through) — the pre-split behaviour of
+/// replay-trace loading.
+#[cfg(feature = "host")]
+#[derive(Debug, Clone)]
+pub struct FsSource {
+    root: std::path::PathBuf,
+}
+
+#[cfg(feature = "host")]
+impl FsSource {
+    pub fn new(root: impl Into<std::path::PathBuf>) -> FsSource {
+        FsSource { root: root.into() }
+    }
+
+    /// Passthrough source: logical paths ARE OS paths.
+    pub fn passthrough() -> FsSource {
+        FsSource { root: std::path::PathBuf::new() }
+    }
+
+    fn resolve(&self, path: &str) -> std::path::PathBuf {
+        // `join` with an absolute path replaces the root — deliberate:
+        // absolute replay paths in specs keep meaning the file they name.
+        self.root.join(path)
+    }
+}
+
+#[cfg(feature = "host")]
+impl ArtifactSource for FsSource {
+    fn read(&self, path: &str) -> Result<Vec<u8>> {
+        let p = self.resolve(path);
+        std::fs::read(&p).with_context(|| format!("reading {}", p.display()))
+    }
+
+    fn list(&self, dir: &str) -> Result<Vec<String>> {
+        let p = self.resolve(dir);
+        let mut out = Vec::new();
+        for entry in
+            std::fs::read_dir(&p).with_context(|| format!("listing {}", p.display()))?
+        {
+            let entry = entry?;
+            if let Some(name) = entry.file_name().to_str() {
+                out.push(name.to_string());
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_source_read_and_list() {
+        let src = MemSource::new();
+        src.insert("configs/a.json", b"{}".to_vec());
+        src.insert("configs/b.json", b"{}".to_vec());
+        src.insert("configs/sub/c.json", b"{}".to_vec());
+        src.insert("manifest.json", b"{}".to_vec());
+        assert_eq!(src.read("manifest.json").unwrap(), b"{}");
+        assert!(src.read("missing.json").is_err());
+        let mut names = src.list("configs").unwrap();
+        names.sort();
+        // One level only: sub/c.json is not a direct child of configs/.
+        assert_eq!(names, vec!["a.json", "b.json"]);
+        let root: Vec<String> = src.list("").unwrap();
+        assert_eq!(root, vec!["manifest.json"]);
+        assert!(src.list("missing_dir").is_err());
+    }
+
+    #[cfg(feature = "host")]
+    #[test]
+    fn fs_source_reads_relative_to_root() {
+        let dir = std::env::temp_dir().join("powertrace_test_fs_source");
+        std::fs::create_dir_all(dir.join("sub")).unwrap();
+        std::fs::write(dir.join("sub/x.txt"), b"hello").unwrap();
+        let src = FsSource::new(&dir);
+        assert_eq!(src.read("sub/x.txt").unwrap(), b"hello");
+        assert_eq!(src.list("sub").unwrap(), vec!["x.txt"]);
+        // Passthrough: an absolute logical path names the OS file.
+        let pass = FsSource::passthrough();
+        let abs = dir.join("sub/x.txt");
+        assert_eq!(pass.read(abs.to_str().unwrap()).unwrap(), b"hello");
+    }
+}

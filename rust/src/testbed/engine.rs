@@ -197,7 +197,7 @@ pub fn simulate(
     TestbedTrace { dt_s: opts.dt_sample, power_w, a_measured, prefill_frac, durations, starts }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "host"))]
 mod tests {
     use super::*;
     use crate::testutil::check;

@@ -56,6 +56,7 @@ mod tests {
     use super::*;
     use crate::catalog::Catalog;
 
+    #[cfg(feature = "host")]
     #[test]
     fn utilization_monotone_in_occupancy_without_prefill() {
         let c = Catalog::load_default().unwrap();
@@ -71,6 +72,7 @@ mod tests {
         assert!(utilization(t, 64, false) < t.pre_frac);
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn prefill_dominates_decode() {
         let c = Catalog::load_default().unwrap();
@@ -81,6 +83,7 @@ mod tests {
         assert!(utilization(t, 64, true) <= 1.0);
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn server_power_bounds() {
         let c = Catalog::load_default().unwrap();

@@ -8,13 +8,20 @@
 //! can be replayed. Generation helpers cover the domains the invariant
 //! tests need (trace lengths, rates, weights, schedules).
 
+#[cfg(feature = "host")]
 use crate::artifacts::ArtifactStore;
+#[cfg(feature = "host")]
 use crate::catalog::Catalog;
+#[cfg(feature = "host")]
 use crate::classifier::flat_param_count;
+#[cfg(feature = "host")]
 use crate::coordinator::Generator;
+#[cfg(feature = "host")]
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
+#[cfg(feature = "host")]
 use anyhow::Result;
+#[cfg(feature = "host")]
 use std::path::PathBuf;
 
 /// Number of cases per property (overridable with `POWERTRACE_PROP_CASES`).
@@ -80,6 +87,7 @@ pub fn assert_close(a: f64, b: f64, tol: f64, ctx: &str) {
 /// the full generation pipeline runs against it — the traces are
 /// statistically meaningless but deterministically reproducible from
 /// `seed`, which is all parity/throughput tests and benches need.
+#[cfg(feature = "host")]
 pub fn synth_artifact_store(
     tag: &str,
     hidden: usize,
@@ -150,6 +158,7 @@ pub fn synth_artifact_store(
 /// repo catalog (`data/catalog.json`) paired with random per-configuration
 /// weights for its first `n_configs` configuration ids. Returns the
 /// generator and the ids it can prepare.
+#[cfg(feature = "host")]
 pub fn synth_generator(
     tag: &str,
     hidden: usize,
@@ -183,6 +192,7 @@ mod tests {
         check_seeded("always fails", 1, 4, |_| panic!("nope"));
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn synth_store_loads_and_prepares() {
         let (mut gen, ids) = synth_generator("testutil_unit", 8, 4, 2, 5).unwrap();

@@ -486,6 +486,7 @@ pub fn parse(s: &str) -> Result<Json, JsonError> {
 }
 
 /// Read and parse a JSON file.
+#[cfg(feature = "host")]
 pub fn parse_file(path: &std::path::Path) -> Result<Json, JsonError> {
     let s = std::fs::read_to_string(path)
         .map_err(|e| JsonError { msg: format!("read {}: {e}", path.display()) })?;
@@ -607,6 +608,7 @@ pub fn to_string_pretty(v: &Json) -> String {
 /// atomic: bytes are staged to a `<name>.tmp` sibling and renamed into
 /// place, so a crash mid-write never leaves a truncated document behind —
 /// specs, artifacts, and the sweep run manifest all rely on this.
+#[cfg(feature = "host")]
 pub fn write_file(path: &std::path::Path, v: &Json) -> Result<(), JsonError> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)

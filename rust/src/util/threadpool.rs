@@ -1,5 +1,6 @@
 //! Minimal scoped parallel-map used by the coordinator to fan server-trace
-//! generation across cores (tokio/rayon unavailable offline).
+//! generation across cores (tokio/rayon unavailable offline), behind the
+//! [`Executor`] seam of the core/host split.
 //!
 //! `parallel_map` preserves input order in its output and propagates panics
 //! (one bad item tears down the batch — right for the tightly-coupled
@@ -7,20 +8,104 @@
 //! fault-isolating variant for independent items (sweep cells): each
 //! item's panic or error lands in its own `Result` slot and every other
 //! item still completes.
+//!
+//! Without the `host` feature there are no threads at all: every entry
+//! point runs items sequentially on the caller thread. That fallback is
+//! bit-identical to the threaded path by construction — results land in
+//! input order either way, and every aggregation fold in the crate is
+//! already index-ordered rather than completion-ordered.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+#[cfg(feature = "host")]
 use std::sync::atomic::{AtomicUsize, Ordering};
+#[cfg(feature = "host")]
 use std::sync::Mutex;
 
+/// How fan-out sections run: on a scoped thread pool (host) or inline on
+/// the caller thread (the only option in a core-only build, and a
+/// debugging/embedding choice on hosts). Exports are bit-identical either
+/// way; `Sequential` trades wall-clock for zero thread dependence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Executor {
+    /// Run every item on the caller thread, in index order.
+    Sequential,
+    /// Scoped worker threads with dynamic work distribution.
+    #[cfg(feature = "host")]
+    Threaded,
+}
+
+impl Default for Executor {
+    fn default() -> Executor {
+        Executor::host_default()
+    }
+}
+
+impl Executor {
+    /// The richest executor this build supports: `Threaded` with `host`,
+    /// `Sequential` otherwise.
+    pub fn host_default() -> Executor {
+        #[cfg(feature = "host")]
+        {
+            Executor::Threaded
+        }
+        #[cfg(not(feature = "host"))]
+        {
+            Executor::Sequential
+        }
+    }
+
+    pub fn is_sequential(&self) -> bool {
+        matches!(self, Executor::Sequential)
+    }
+
+    /// The worker count fan-out sections should use under this executor:
+    /// `requested` (already defaulted/clamped by the caller) when
+    /// threaded, 1 when sequential.
+    pub fn workers(&self, requested: usize) -> usize {
+        if self.is_sequential() {
+            1
+        } else {
+            requested
+        }
+    }
+
+    /// [`parallel_map`] under this executor's worker policy.
+    pub fn map<T, F>(&self, n: usize, workers: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        parallel_map(n, self.workers(workers), f)
+    }
+
+    /// [`parallel_map_results`] under this executor's worker policy.
+    pub fn map_results<T, F>(&self, n: usize, workers: usize, f: F) -> Vec<anyhow::Result<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> anyhow::Result<T> + Sync,
+    {
+        parallel_map_results(n, self.workers(workers), f)
+    }
+}
+
 /// Number of worker threads to use by default: all cores, capped at 16
-/// (beyond that the PJRT CPU client contends with itself).
+/// (beyond that the PJRT CPU client contends with itself). Core-only
+/// builds have no threads, so the default is 1.
 pub fn default_workers() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    #[cfg(feature = "host")]
+    {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    }
+    #[cfg(not(feature = "host"))]
+    {
+        1
+    }
 }
 
 /// Apply `f` to `0..n` on `workers` threads, collecting results in order.
 /// Work is distributed dynamically (atomic counter) so uneven item costs —
 /// e.g. servers with different trace lengths — balance automatically.
+/// `workers <= 1` (and every core-only build) runs on the caller thread.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -33,21 +118,28 @@ where
     if workers == 1 {
         return (0..n).map(f).collect();
     }
-    let next = AtomicUsize::new(0);
-    let out: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = f(i);
-                out.lock().unwrap()[i] = Some(v);
-            });
-        }
-    });
-    out.into_inner().unwrap().into_iter().map(|v| v.expect("worker completed")).collect()
+    #[cfg(feature = "host")]
+    {
+        let next = AtomicUsize::new(0);
+        let out: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    out.lock().unwrap()[i] = Some(v);
+                });
+            }
+        });
+        out.into_inner().unwrap().into_iter().map(|v| v.expect("worker completed")).collect()
+    }
+    #[cfg(not(feature = "host"))]
+    {
+        (0..n).map(f).collect()
+    }
 }
 
 /// Render a panic payload (from `catch_unwind` / `JoinHandle::join`) as a
@@ -82,7 +174,10 @@ where
 
 /// Fold items `0..n` in parallel into per-worker accumulators, then reduce.
 /// Used for streaming facility aggregation where materializing every
-/// server trace at once would be wasteful.
+/// server trace at once would be wasteful. A single worker (and every
+/// core-only build) folds `0..n` in order into one accumulator on the
+/// caller thread — the same fold order one spawned worker would see, so
+/// the result is bit-identical.
 pub fn parallel_fold<A, F, R>(n: usize, workers: usize, init: impl Fn() -> A + Sync, fold: F, reduce: R) -> A
 where
     A: Send,
@@ -90,29 +185,48 @@ where
     R: Fn(A, A) -> A,
 {
     let workers = workers.max(1).min(n.max(1));
-    let next = AtomicUsize::new(0);
-    let accs: Mutex<Vec<A>> = Mutex::new(Vec::new());
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| {
-                let mut acc = init();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    fold(&mut acc, i);
-                }
-                accs.lock().unwrap().push(acc);
-            });
+    if workers == 1 {
+        let mut acc = init();
+        for i in 0..n {
+            fold(&mut acc, i);
         }
-    });
-    let mut accs = accs.into_inner().unwrap();
-    let mut total = accs.pop().unwrap_or_else(&init);
-    for a in accs {
-        total = reduce(total, a);
+        return acc;
     }
-    total
+    #[cfg(feature = "host")]
+    {
+        let next = AtomicUsize::new(0);
+        let accs: Mutex<Vec<A>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let mut acc = init();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        fold(&mut acc, i);
+                    }
+                    accs.lock().unwrap().push(acc);
+                });
+            }
+        });
+        let mut accs = accs.into_inner().unwrap();
+        let mut total = accs.pop().unwrap_or_else(&init);
+        for a in accs {
+            total = reduce(total, a);
+        }
+        total
+    }
+    #[cfg(not(feature = "host"))]
+    {
+        let _ = &reduce;
+        let mut acc = init();
+        for i in 0..n {
+            fold(&mut acc, i);
+        }
+        acc
+    }
 }
 
 #[cfg(test)]
@@ -149,6 +263,12 @@ mod tests {
     }
 
     #[test]
+    fn fold_single_worker_runs_on_caller_thread() {
+        let total = parallel_fold(100, 1, || 0u64, |acc, i| *acc += i as u64, |a, b| a + b);
+        assert_eq!(total, (0..100u64).sum());
+    }
+
+    #[test]
     fn fold_vector_accumulators() {
         // Sum 10 one-hot vectors elementwise — mirrors rack aggregation.
         let total = parallel_fold(
@@ -164,6 +284,21 @@ mod tests {
             },
         );
         assert_eq!(total, vec![1.0; 10]);
+    }
+
+    #[test]
+    fn executor_worker_policy() {
+        assert_eq!(Executor::Sequential.workers(8), 1);
+        assert!(Executor::Sequential.is_sequential());
+        #[cfg(feature = "host")]
+        {
+            assert_eq!(Executor::Threaded.workers(8), 8);
+            assert_eq!(Executor::host_default(), Executor::Threaded);
+        }
+        #[cfg(not(feature = "host"))]
+        assert_eq!(Executor::host_default(), Executor::Sequential);
+        let seq = Executor::Sequential.map(5, 8, |i| i * 2);
+        assert_eq!(seq, vec![0, 2, 4, 6, 8]);
     }
 
     #[test]

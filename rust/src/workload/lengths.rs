@@ -101,6 +101,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn lognormal_median_matches_profile() {
         let c = Catalog::load_default().unwrap();
@@ -113,6 +114,7 @@ mod tests {
         assert!((med - p.in_median).abs() / p.in_median < 0.05, "median {med} vs {}", p.in_median);
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn reasoning_multiplier_scales_outputs() {
         let c = Catalog::load_default().unwrap();
@@ -122,6 +124,7 @@ mod tests {
         assert!((reasoning.medians().1 - 2.0 * base.medians().1).abs() < 1e-9);
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn lengths_always_positive_and_capped() {
         let c = Catalog::load_default().unwrap();

@@ -10,7 +10,6 @@
 use super::{Request, Schedule};
 use crate::util::json::{self, Json};
 use anyhow::{Context, Result};
-use std::path::Path;
 
 /// Parse a schedule from a JSON value (array of request objects).
 pub fn schedule_from_json(v: &Json) -> Result<Schedule> {
@@ -79,17 +78,27 @@ pub fn schedule_from_csv(text: &str) -> Result<Schedule> {
     Ok(out)
 }
 
-/// Load a schedule from a JSON or (by `.csv` extension) CSV file.
-pub fn load(path: &Path) -> Result<Schedule> {
-    let is_csv = path.extension().is_some_and(|e| e.eq_ignore_ascii_case("csv"));
+/// Parse a schedule from raw trace bytes, dispatching on the logical
+/// name's `.csv` extension (anything else parses as JSON). This is the
+/// core entry point behind [`crate::source::ArtifactSource`]-routed
+/// replay loading; [`load`] is its file-backed wrapper.
+pub fn from_named_bytes(name: &str, bytes: &[u8]) -> Result<Schedule> {
+    let text = std::str::from_utf8(bytes).with_context(|| format!("trace {name}: not UTF-8"))?;
+    let is_csv = name.rsplit('.').next().is_some_and(|e| e.eq_ignore_ascii_case("csv"))
+        && name.contains('.');
     if is_csv {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading trace {}", path.display()))?;
-        return schedule_from_csv(&text)
-            .with_context(|| format!("parsing schedule {}", path.display()));
+        return schedule_from_csv(text).with_context(|| format!("parsing schedule {name}"));
     }
-    let v = json::parse_file(path).map_err(anyhow::Error::from)?;
-    schedule_from_json(&v).with_context(|| format!("parsing schedule {}", path.display()))
+    let v = json::parse(text).map_err(anyhow::Error::from)?;
+    schedule_from_json(&v).with_context(|| format!("parsing schedule {name}"))
+}
+
+/// Load a schedule from a JSON or (by `.csv` extension) CSV file.
+#[cfg(feature = "host")]
+pub fn load(path: &std::path::Path) -> Result<Schedule> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading trace {}", path.display()))?;
+    from_named_bytes(&path.to_string_lossy(), &bytes)
 }
 
 #[cfg(test)]
@@ -147,6 +156,20 @@ mod tests {
     }
 
     #[test]
+    fn named_bytes_dispatch_on_extension() {
+        let want = vec![Request { arrival_s: 1.0, n_in: 10, n_out: 5 }];
+        let csv = b"t_s,n_in,n_out\n1.0,10,5\n";
+        assert_eq!(from_named_bytes("sched.csv", csv).unwrap(), want);
+        assert_eq!(from_named_bytes("SCHED.CSV", csv).unwrap(), want);
+        let js = br#"[{"t": 1, "n_in": 10, "n_out": 5}]"#;
+        assert_eq!(from_named_bytes("sched.json", js).unwrap(), want);
+        // No extension → JSON, matching the file path's dispatch rule.
+        assert_eq!(from_named_bytes("sched", js).unwrap(), want);
+        assert!(from_named_bytes("sched.json", &[0xff, 0xfe]).is_err());
+    }
+
+    #[cfg(feature = "host")]
+    #[test]
     fn csv_file_loads_by_extension() {
         let dir = std::env::temp_dir().join("powertrace_test_replay_csv");
         std::fs::create_dir_all(&dir).unwrap();
@@ -155,6 +178,7 @@ mod tests {
         assert_eq!(load(&path).unwrap(), vec![Request { arrival_s: 1.0, n_in: 10, n_out: 5 }]);
     }
 
+    #[cfg(feature = "host")]
     #[test]
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join("powertrace_test_replay");

@@ -1,0 +1,234 @@
+//! Integration: the core/host split — exports routed through the
+//! in-memory [`MemSink`] are byte-identical to the file-backed
+//! [`DirSink`](powertrace_sim::export::DirSink) path for a single
+//! facility cell, a full sweep, and a composed site (across worker
+//! counts and window sizes), and the sequential [`Executor`] reproduces
+//! the threaded one bit-for-bit on seeded runs.
+//!
+//! These are the contract tests for embedding: a host that buffers
+//! windows in memory (wasm, a service, a notebook) must see exactly the
+//! bytes the CLI writes to disk.
+
+use powertrace_sim::aggregate::Topology;
+use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
+use powertrace_sim::export::{MemSink, TraceSink};
+use powertrace_sim::scenarios::{
+    run_sweep_sink, run_sweep_to, GridDefaults, SweepGrid, SweepOptions,
+};
+use powertrace_sim::site::{run_site, run_site_sink, SiteOptions, SiteSpec};
+use powertrace_sim::testutil::synth_generator;
+use powertrace_sim::util::threadpool::Executor;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// Fixtures (mirroring the sweep/site integration suites)
+// ---------------------------------------------------------------------------
+
+fn small_grid(ids: &[String]) -> SweepGrid {
+    SweepGrid {
+        name: "core-host".into(),
+        defaults: GridDefaults { horizon_s: 60.0, ..GridDefaults::default() },
+        workloads: vec![
+            WorkloadSpec::Poisson { rate: 0.5 },
+            WorkloadSpec::Mmpp { mean_rate: 0.5, burstiness: 4.0 },
+        ],
+        topologies: vec![Topology { rows: 1, racks_per_row: 2, servers_per_rack: 1 }],
+        fleets: vec![ServerAssignment::Uniform(ids[0].clone())],
+        seeds: vec![3, 4],
+    }
+}
+
+/// A 1-cell grid: the "single facility run" case.
+fn one_cell_grid(ids: &[String]) -> SweepGrid {
+    SweepGrid {
+        name: "core-host-one".into(),
+        defaults: GridDefaults { horizon_s: 60.0, ..GridDefaults::default() },
+        workloads: vec![WorkloadSpec::Poisson { rate: 0.5 }],
+        topologies: vec![Topology { rows: 1, racks_per_row: 2, servers_per_rack: 1 }],
+        fleets: vec![ServerAssignment::Uniform(ids[0].clone())],
+        seeds: vec![7],
+    }
+}
+
+fn small_site(id: &str, n_facilities: usize) -> SiteSpec {
+    let mut s = ScenarioSpec::default_poisson(id, 0.5);
+    s.topology = Topology { rows: 1, racks_per_row: 2, servers_per_rack: 2 };
+    s.horizon_s = 60.0;
+    s.seed = 5;
+    let mut spec = SiteSpec::staggered("core-host", &s, n_facilities, 0.0);
+    spec.utility_intervals_s = vec![15.0, 30.0];
+    spec
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("powertrace_core_host_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Every file under `root`, keyed by `/`-separated root-relative path —
+/// the same logical-path scheme `TraceSink` uses.
+fn read_tree(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let p = entry.unwrap().path();
+            if p.is_dir() {
+                walk(root, &p, out);
+            } else {
+                let rel: Vec<String> = p
+                    .strip_prefix(root)
+                    .unwrap()
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect();
+                out.insert(rel.join("/"), std::fs::read(&p).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+type Tree = BTreeMap<String, Vec<u8>>;
+
+fn assert_trees_equal(disk: &Tree, mem: &Tree, ctx: &str) {
+    let dk: Vec<&String> = disk.keys().collect();
+    let mk: Vec<&String> = mem.keys().collect();
+    assert_eq!(dk, mk, "{ctx}: logical paths differ");
+    for (path, bytes) in disk {
+        assert_eq!(bytes, &mem[path], "{ctx}: bytes differ at {path}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MemSink vs DirSink byte identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn facility_cell_memsink_matches_dirsink_bytes() {
+    let (mut gen, ids) = synth_generator("chs_cell", 8, 4, 1, 41).unwrap();
+    let grid = one_cell_grid(&ids);
+    let opts = SweepOptions { window_s: 7.0, ..SweepOptions::default() };
+
+    let dir = temp_dir("cell");
+    let a = run_sweep_to(&mut gen, &grid, &opts, Some(&dir)).unwrap();
+    a.write(&dir).unwrap();
+
+    let mem = MemSink::new();
+    let b = run_sweep_sink(&mut gen, &grid, &opts, Some(&mem as &dyn TraceSink)).unwrap();
+    b.write_sink(&mem).unwrap();
+
+    assert_eq!(a.summary_csv(), b.summary_csv());
+    assert_trees_equal(&read_tree(&dir), &mem.files(), "facility cell");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_memsink_matches_dirsink_bytes_across_workers_and_windows() {
+    let (mut gen, ids) = synth_generator("chs_sweep", 8, 4, 1, 43).unwrap();
+    let grid = small_grid(&ids);
+    for workers in [1usize, 4] {
+        for window_s in [7.0f64, 60.0] {
+            let ctx = format!("sweep workers={workers} window={window_s}");
+            let opts = SweepOptions {
+                window_s,
+                scenario_workers: workers,
+                server_workers: workers,
+                ..SweepOptions::default()
+            };
+
+            let dir = temp_dir(&format!("sweep_w{workers}_s{window_s}"));
+            let a = run_sweep_to(&mut gen, &grid, &opts, Some(&dir)).unwrap();
+            a.write(&dir).unwrap();
+
+            let mem = MemSink::new();
+            let b = run_sweep_sink(&mut gen, &grid, &opts, Some(&mem as &dyn TraceSink)).unwrap();
+            b.write_sink(&mem).unwrap();
+
+            assert_eq!(a.summary_csv(), b.summary_csv(), "{ctx}: summary");
+            assert_trees_equal(&read_tree(&dir), &mem.files(), &ctx);
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+#[test]
+fn site_memsink_matches_dirsink_bytes_across_workers_and_windows() {
+    let (mut gen, ids) = synth_generator("chs_site", 8, 4, 1, 47).unwrap();
+    let spec = small_site(&ids[0], 2);
+    for workers in [1usize, 4] {
+        for window_s in [7.0f64, 60.0] {
+            let ctx = format!("site workers={workers} window={window_s}");
+            let opts = SiteOptions {
+                dt_s: 0.25,
+                window_s,
+                workers,
+                load_interval_s: 1.0,
+                ..SiteOptions::default()
+            };
+
+            let dir = temp_dir(&format!("site_w{workers}_s{window_s}"));
+            let a = run_site(&mut gen, &spec, &opts, Some(&dir)).unwrap();
+
+            let mem = MemSink::new();
+            let b = run_site_sink(&mut gen, &spec, &opts, Some(&mem as &dyn TraceSink)).unwrap();
+
+            assert_eq!(a.site.stats, b.site.stats, "{ctx}: site stats");
+            assert_trees_equal(&read_tree(&dir), &mem.files(), &ctx);
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sequential Executor vs threaded: bit identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sequential_executor_matches_threaded_sweep_bytes() {
+    let (mut gen, ids) = synth_generator("chs_exec", 8, 4, 1, 53).unwrap();
+    let grid = small_grid(&ids);
+    let threaded = SweepOptions {
+        window_s: 7.0,
+        scenario_workers: 4,
+        server_workers: 2,
+        ..SweepOptions::default()
+    };
+
+    let mem_t = MemSink::new();
+    let a = run_sweep_sink(&mut gen, &grid, &threaded, Some(&mem_t as &dyn TraceSink)).unwrap();
+    a.write_sink(&mem_t).unwrap();
+
+    let sequential = SweepOptions { executor: Executor::Sequential, ..threaded };
+    let mem_s = MemSink::new();
+    let b = run_sweep_sink(&mut gen, &grid, &sequential, Some(&mem_s as &dyn TraceSink)).unwrap();
+    b.write_sink(&mem_s).unwrap();
+
+    assert_eq!(a.summary_csv(), b.summary_csv());
+    assert_trees_equal(&mem_t.files(), &mem_s.files(), "sequential vs threaded sweep");
+}
+
+#[test]
+fn sequential_executor_matches_threaded_site_bytes() {
+    let (mut gen, ids) = synth_generator("chs_exec_site", 8, 4, 1, 59).unwrap();
+    let spec = small_site(&ids[0], 2);
+    let threaded = SiteOptions {
+        dt_s: 0.25,
+        window_s: 7.0,
+        workers: 4,
+        load_interval_s: 1.0,
+        ..SiteOptions::default()
+    };
+
+    let mem_t = MemSink::new();
+    let a = run_site_sink(&mut gen, &spec, &threaded, Some(&mem_t as &dyn TraceSink)).unwrap();
+
+    let sequential = SiteOptions { executor: Executor::Sequential, ..threaded };
+    let mem_s = MemSink::new();
+    let b = run_site_sink(&mut gen, &spec, &sequential, Some(&mem_s as &dyn TraceSink)).unwrap();
+
+    assert_eq!(a.site.stats, b.site.stats);
+    assert_trees_equal(&mem_t.files(), &mem_s.files(), "sequential vs threaded site");
+}
