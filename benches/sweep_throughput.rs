@@ -8,6 +8,11 @@
 //! recorded to `BENCH_facility.json` (servers/sec across the whole grid)
 //! alongside the facility-generation entries.
 
+// Deliberately still on the deprecated run_* wrappers: doubles as
+// compile-and-run coverage that they keep reaching the same engines the
+// unified `api` routes through.
+#![allow(deprecated)]
+
 use powertrace_sim::benchutil::{section, write_bench_json, Bench, BenchEntry};
 use powertrace_sim::coordinator::Generator;
 use powertrace_sim::scenarios::{run_sweep, SweepGrid, SweepOptions};

@@ -11,6 +11,11 @@
 //! Runs on a synthetic random-weight artifact store (no `make artifacts`
 //! needed). Writes the grid + summary under `out/replay_sweep/`.
 
+// Deliberately still on the deprecated run_* wrappers: doubles as
+// compile-and-run coverage that they keep reaching the same engines the
+// unified `api` routes through.
+#![allow(deprecated)]
+
 use powertrace_sim::aggregate::Topology;
 use powertrace_sim::config::{ServerAssignment, WorkloadSpec};
 use powertrace_sim::scenarios::{run_sweep, GridDefaults, SweepGrid, SweepOptions};

@@ -13,6 +13,11 @@
 //! lockstep windows, on a synthetic random-weight artifact store
 //! (`testutil::synth_generator`), so it runs without `make artifacts`.
 
+// Deliberately still on the deprecated run_* wrappers: doubles as
+// compile-and-run coverage that they keep reaching the same engines the
+// unified `api` routes through.
+#![allow(deprecated)]
+
 use powertrace_sim::aggregate::Topology;
 use powertrace_sim::config::{ScenarioSpec, WorkloadSpec};
 use powertrace_sim::site::{run_site, SiteOptions, SiteSpec};

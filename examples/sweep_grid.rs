@@ -9,6 +9,11 @@
 //! Requires `make artifacts`. Writes the grid + multi-scale series under
 //! `out/sweep_grid/`.
 
+// Deliberately still on the deprecated run_* wrappers: doubles as
+// compile-and-run coverage that they keep reaching the same engines the
+// unified `api` routes through.
+#![allow(deprecated)]
+
 use powertrace_sim::coordinator::Generator;
 use powertrace_sim::scenarios::{run_sweep, SweepGrid, SweepOptions};
 

@@ -1,0 +1,811 @@
+//! The unified run API: one request shape for everything the engine can
+//! execute.
+//!
+//! Historically each run family grew its own entry-point quartet
+//! (`run_sweep` / `run_sweep_to` / `run_sweep_sink` /
+//! `run_sweep_checkpointed`, mirrored for sites) and its own options
+//! struct. This module collapses them behind a single surface:
+//!
+//! * [`RunSpec`] — *what* to run: a kind-tagged enum over the four
+//!   existing spec types. Its JSON form
+//!   (`{"kind": "facility|sweep|site|site_sweep", "spec": {...}}`) is the
+//!   wire schema of `powertrace serve`;
+//! * [`RunOptions`] — *how* to run it: the merged
+//!   [`SweepOptions`] / [`SiteOptions`] knob set with a builder. The
+//!   PR-7 manifest-identity rule is preserved by delegation: converting
+//!   to the legacy structs ([`RunOptions::to_sweep`] /
+//!   [`RunOptions::to_site`]) reuses their `identity_json`, so existing
+//!   checkpoint manifests keep hashing identically;
+//! * [`RunRequest`] = spec + options, and [`execute`] /
+//!   [`execute_prepared`] / [`execute_checkpointed`] run it, routing every
+//!   kind through the same sink-generic `pub(crate)` engines the
+//!   deprecated wrappers use. A facility run is executed as a degenerate
+//!   one-cell sweep (same engine, same export layout, cell id
+//!   `w0-t0-f0-s<seed>`).
+//!
+//! The `*_prepared` variants take `&Generator` — the seam that lets one
+//! warm generator (artifact + classifier + packed-weight caches) serve
+//! many concurrent runs, which is what the serve layer does: prepare
+//! under a write lock, execute under read locks.
+
+use crate::config::ScenarioSpec;
+use crate::coordinator::Generator;
+use crate::export::TraceSink;
+use crate::robust::RetryPolicy;
+use crate::scenarios::grid::GridDefaults;
+use crate::scenarios::runner::{grid_config_ids_used, prepare_sweep, sweep_prepared_sink};
+#[cfg(feature = "host")]
+use crate::scenarios::runner::sweep_checkpointed_prepared;
+#[cfg(feature = "host")]
+use crate::scenarios::SweepOutcome;
+use crate::scenarios::{SweepGrid, SweepOptions, SweepReport};
+use crate::site::compose::run_site_inner;
+use crate::site::sweep::site_sweep_prepared_sink;
+#[cfg(feature = "host")]
+use crate::site::sweep::site_sweep_checkpointed_prepared;
+#[cfg(feature = "host")]
+use crate::site::SiteSweepOutcome;
+use crate::site::{
+    prepare_site, sweep_summary_csv, SiteGrid, SiteOptions, SiteReport, SiteSpec, SiteVariant,
+};
+use crate::aggregate::ScaleConfig;
+use crate::util::json::{self, Json};
+use crate::util::threadpool::Executor;
+use anyhow::{bail, Context, Result};
+#[cfg(feature = "host")]
+use std::path::Path;
+
+/// The four run families, as the wire-level kind tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunKind {
+    /// One facility scenario (a degenerate one-cell sweep).
+    Facility,
+    /// A scenario sweep grid.
+    Sweep,
+    /// One multi-facility site.
+    Site,
+    /// A site sweep grid.
+    SiteSweep,
+}
+
+impl RunKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RunKind::Facility => "facility",
+            RunKind::Sweep => "sweep",
+            RunKind::Site => "site",
+            RunKind::SiteSweep => "site_sweep",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<RunKind> {
+        Ok(match s {
+            "facility" => RunKind::Facility,
+            "sweep" => RunKind::Sweep,
+            "site" => RunKind::Site,
+            "site_sweep" => RunKind::SiteSweep,
+            other => bail!("unknown run kind '{other}' (facility|sweep|site|site_sweep)"),
+        })
+    }
+}
+
+/// *What* to run: the kind-tagged union of the four spec types. The JSON
+/// envelope `{"kind": ..., "spec": {...}}` nests each spec's existing
+/// file schema unchanged, so any scenario/grid/site file a planner
+/// already has becomes a valid request body by wrapping it.
+#[derive(Debug, Clone)]
+pub enum RunSpec {
+    Facility(ScenarioSpec),
+    Sweep(SweepGrid),
+    Site(SiteSpec),
+    SiteSweep(SiteGrid),
+}
+
+impl RunSpec {
+    pub fn kind(&self) -> RunKind {
+        match self {
+            RunSpec::Facility(_) => RunKind::Facility,
+            RunSpec::Sweep(_) => RunKind::Sweep,
+            RunSpec::Site(_) => RunKind::Site,
+            RunSpec::SiteSweep(_) => RunKind::SiteSweep,
+        }
+    }
+
+    /// Human-facing run name (specs without one report their kind).
+    pub fn name(&self) -> String {
+        match self {
+            RunSpec::Facility(_) => "facility".to_string(),
+            RunSpec::Sweep(g) => g.name.clone(),
+            RunSpec::Site(s) => s.name.clone(),
+            RunSpec::SiteSweep(g) => g.name.clone(),
+        }
+    }
+
+    /// Unique configuration ids this run actually uses, in first-use
+    /// order — the set [`prepare`] warms and a synthetic store must cover.
+    pub fn config_ids(&self) -> Vec<String> {
+        match self {
+            RunSpec::Facility(s) => s.server_config.config_ids_used(&s.topology),
+            RunSpec::Sweep(g) => grid_config_ids_used(g),
+            RunSpec::Site(s) => s.config_ids(),
+            RunSpec::SiteSweep(g) => g.base.config_ids(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            // Scenario files validate at parse time; re-check the two
+            // invariants here so programmatically-built specs get the
+            // same gate.
+            RunSpec::Facility(s) => {
+                if s.horizon_s <= 0.0 {
+                    bail!("facility: horizon_s must be positive");
+                }
+                if s.pue < 1.0 {
+                    bail!("facility: pue must be >= 1.0 (got {})", s.pue);
+                }
+                Ok(())
+            }
+            RunSpec::Sweep(g) => g.validate(),
+            RunSpec::Site(s) => s.validate(),
+            RunSpec::SiteSweep(g) => g.validate(),
+        }
+    }
+
+    /// `{"kind": ..., "spec": {...}}`.
+    pub fn to_json(&self) -> Json {
+        let spec = match self {
+            RunSpec::Facility(s) => s.to_json(),
+            RunSpec::Sweep(g) => g.to_json(),
+            RunSpec::Site(s) => s.to_json(),
+            RunSpec::SiteSweep(g) => g.to_json(),
+        };
+        json::obj([("kind", Json::Str(self.kind().as_str().to_string())), ("spec", spec)])
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunSpec> {
+        let kind = RunKind::from_str(&v.str_field("kind")?)?;
+        Self::from_kind_json(kind, v.get("spec")?)
+    }
+
+    /// Parse the bare spec object under an already-known kind.
+    pub fn from_kind_json(kind: RunKind, spec: &Json) -> Result<RunSpec> {
+        Ok(match kind {
+            RunKind::Facility => {
+                RunSpec::Facility(ScenarioSpec::from_json(spec).context("facility spec")?)
+            }
+            RunKind::Sweep => RunSpec::Sweep(SweepGrid::from_json(spec).context("sweep grid")?),
+            RunKind::Site => RunSpec::Site(SiteSpec::from_json(spec).context("site spec")?),
+            RunKind::SiteSweep => {
+                RunSpec::SiteSweep(SiteGrid::from_json(spec).context("site sweep grid")?)
+            }
+        })
+    }
+}
+
+/// The one-cell grid a facility run executes as: expansion reproduces the
+/// scenario exactly (every [`ScenarioSpec`] field is either a grid
+/// default or an axis value), with stable cell id `w0-t0-f0-s<seed>`.
+fn facility_grid(spec: &ScenarioSpec) -> SweepGrid {
+    SweepGrid {
+        name: "facility".to_string(),
+        defaults: GridDefaults {
+            dataset: spec.dataset.clone(),
+            horizon_s: spec.horizon_s,
+            p_base_w: spec.p_base_w,
+            pue: spec.pue,
+        },
+        workloads: vec![spec.workload.clone()],
+        topologies: vec![spec.topology],
+        fleets: vec![spec.server_config.clone()],
+        seeds: vec![spec.seed],
+    }
+}
+
+/// *How* to run: the merged [`SweepOptions`] + [`SiteOptions`] knob set.
+///
+/// Identity-irrelevant fields (worker counts, batch width, window size,
+/// executor, retry policy) stay out of manifest identity hashes — the
+/// conversions delegate to the legacy structs' `identity_json`, whose
+/// field sets are pinned by a unit test below.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Generation sample interval (s). Facility/sweep default 0.25 (the
+    /// paper's 250 ms); site kinds default 1.0.
+    pub dt_s: f64,
+    /// Ramp-measurement interval for summary stats (s).
+    pub ramp_interval_s: f64,
+    /// Streaming window (s). 0 = buffered for facility/sweep; site kinds
+    /// always stream and default to 3600.
+    pub window_s: f64,
+    /// Outer fan-out workers (sweep cells / site facility budget);
+    /// 0 = auto.
+    pub workers: usize,
+    /// Worker threads inside each scenario (facility/sweep only);
+    /// 0 = auto.
+    pub server_workers: usize,
+    /// Servers per batched classifier call (0 = default, 1 = sequential).
+    pub max_batch: usize,
+    /// Export intervals per aggregation level (facility/sweep only).
+    pub scales: ScaleConfig,
+    /// `site_load.csv` export interval (site kinds only).
+    pub load_interval_s: f64,
+    /// Retain the composed site series on the report (site kinds; O(T)).
+    pub collect_series: bool,
+    /// Threaded (host default) or sequential execution; byte-invariant.
+    pub executor: Executor,
+    /// Checkpointed runs: re-runs after the first attempt per cell.
+    pub max_retries: u32,
+    /// Checkpointed runs: soft per-attempt wall-clock budget (s; 0 = off).
+    pub cell_timeout_s: f64,
+}
+
+impl RunOptions {
+    /// The historical per-kind defaults: facility/sweep ran buffered at
+    /// 250 ms, sites streamed hourly windows at 1 s.
+    pub fn defaults_for(kind: RunKind) -> RunOptions {
+        let site = matches!(kind, RunKind::Site | RunKind::SiteSweep);
+        RunOptions {
+            dt_s: if site { 1.0 } else { 0.25 },
+            ramp_interval_s: 900.0,
+            window_s: if site { 3600.0 } else { 0.0 },
+            workers: 0,
+            server_workers: 0,
+            max_batch: 0,
+            scales: ScaleConfig::default(),
+            load_interval_s: 60.0,
+            collect_series: false,
+            executor: Executor::default(),
+            max_retries: 1,
+            cell_timeout_s: 0.0,
+        }
+    }
+
+    pub fn with_dt(mut self, dt_s: f64) -> Self {
+        self.dt_s = dt_s;
+        self
+    }
+
+    pub fn with_ramp_interval(mut self, s: f64) -> Self {
+        self.ramp_interval_s = s;
+        self
+    }
+
+    pub fn with_window(mut self, s: f64) -> Self {
+        self.window_s = s;
+        self
+    }
+
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    pub fn with_server_workers(mut self, n: usize) -> Self {
+        self.server_workers = n;
+        self
+    }
+
+    pub fn with_max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    pub fn with_scales(mut self, scales: ScaleConfig) -> Self {
+        self.scales = scales;
+        self
+    }
+
+    pub fn with_load_interval(mut self, s: f64) -> Self {
+        self.load_interval_s = s;
+        self
+    }
+
+    pub fn with_collect_series(mut self, yes: bool) -> Self {
+        self.collect_series = yes;
+        self
+    }
+
+    pub fn with_executor(mut self, executor: Executor) -> Self {
+        self.executor = executor;
+        self
+    }
+
+    pub fn with_max_retries(mut self, n: u32) -> Self {
+        self.max_retries = n;
+        self
+    }
+
+    pub fn with_cell_timeout(mut self, s: f64) -> Self {
+        self.cell_timeout_s = s;
+        self
+    }
+
+    /// The sweep-engine view (facility and sweep kinds).
+    pub(crate) fn to_sweep(&self) -> SweepOptions {
+        SweepOptions {
+            dt_s: self.dt_s,
+            ramp_interval_s: self.ramp_interval_s,
+            scenario_workers: self.workers,
+            server_workers: self.server_workers,
+            max_batch: self.max_batch,
+            window_s: self.window_s,
+            scales: self.scales.clone(),
+            executor: self.executor,
+        }
+    }
+
+    /// The site-engine view (site and site-sweep kinds).
+    pub(crate) fn to_site(&self) -> SiteOptions {
+        SiteOptions {
+            dt_s: self.dt_s,
+            window_s: self.window_s,
+            workers: self.workers,
+            max_batch: self.max_batch,
+            ramp_interval_s: self.ramp_interval_s,
+            load_interval_s: self.load_interval_s,
+            collect_series: self.collect_series,
+            executor: self.executor,
+        }
+    }
+
+    /// The retry policy checkpointed execution runs under.
+    pub fn retry_policy(&self) -> RetryPolicy {
+        RetryPolicy { max_retries: self.max_retries, cell_timeout_s: self.cell_timeout_s }
+    }
+
+    /// Parse the optional wire-level `options` object over the kind's
+    /// defaults. Unknown keys are rejected — a typo silently reverting a
+    /// knob to its default is the worst failure mode an options object
+    /// can have. The executor is not wire-settable (requests run on the
+    /// server's executor).
+    pub fn from_json(kind: RunKind, v: Option<&Json>) -> Result<RunOptions> {
+        let mut o = RunOptions::defaults_for(kind);
+        let Some(v) = v else { return Ok(o) };
+        let Json::Obj(map) = v else { bail!("options must be an object") };
+        for key in map.keys() {
+            match key.as_str() {
+                "dt_s" | "ramp_interval_s" | "window_s" | "workers" | "server_workers"
+                | "max_batch" | "scales" | "load_interval_s" | "collect_series"
+                | "max_retries" | "cell_timeout_s" => {}
+                other => bail!("options: unknown field '{other}'"),
+            }
+        }
+        if let Some(x) = v.get_opt("dt_s") {
+            o.dt_s = x.as_f64()?;
+        }
+        if let Some(x) = v.get_opt("ramp_interval_s") {
+            o.ramp_interval_s = x.as_f64()?;
+        }
+        if let Some(x) = v.get_opt("window_s") {
+            o.window_s = x.as_f64()?;
+        }
+        if let Some(x) = v.get_opt("workers") {
+            o.workers = x.as_usize()?;
+        }
+        if let Some(x) = v.get_opt("server_workers") {
+            o.server_workers = x.as_usize()?;
+        }
+        if let Some(x) = v.get_opt("max_batch") {
+            o.max_batch = x.as_usize()?;
+        }
+        if let Some(s) = v.get_opt("scales") {
+            if let Some(x) = s.get_opt("rack_interval_s") {
+                o.scales.rack_interval_s = x.as_f64()?;
+            }
+            if let Some(x) = s.get_opt("row_interval_s") {
+                o.scales.row_interval_s = x.as_f64()?;
+            }
+            if let Some(x) = s.get_opt("facility_intervals_s") {
+                o.scales.facility_intervals_s = x.f64_array().map_err(anyhow::Error::from)?;
+            }
+        }
+        if let Some(x) = v.get_opt("load_interval_s") {
+            o.load_interval_s = x.as_f64()?;
+        }
+        if let Some(x) = v.get_opt("collect_series") {
+            o.collect_series = x.as_bool()?;
+        }
+        if let Some(x) = v.get_opt("max_retries") {
+            o.max_retries = x.as_usize()? as u32;
+        }
+        if let Some(x) = v.get_opt("cell_timeout_s") {
+            o.cell_timeout_s = x.as_f64()?;
+        }
+        Ok(o)
+    }
+
+    /// The wire form [`RunOptions::from_json`] parses (executor omitted).
+    pub fn to_json(&self) -> Json {
+        json::obj([
+            ("dt_s", Json::Num(self.dt_s)),
+            ("ramp_interval_s", Json::Num(self.ramp_interval_s)),
+            ("window_s", Json::Num(self.window_s)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("server_workers", Json::Num(self.server_workers as f64)),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            (
+                "scales",
+                json::obj([
+                    ("rack_interval_s", Json::Num(self.scales.rack_interval_s)),
+                    ("row_interval_s", Json::Num(self.scales.row_interval_s)),
+                    ("facility_intervals_s", Json::from_f64s(&self.scales.facility_intervals_s)),
+                ]),
+            ),
+            ("load_interval_s", Json::Num(self.load_interval_s)),
+            ("collect_series", Json::Bool(self.collect_series)),
+            ("max_retries", Json::Num(self.max_retries as f64)),
+            ("cell_timeout_s", Json::Num(self.cell_timeout_s)),
+        ])
+    }
+}
+
+/// One complete run request: what + how.
+#[derive(Debug, Clone)]
+pub struct RunRequest {
+    pub spec: RunSpec,
+    pub options: RunOptions,
+}
+
+impl RunRequest {
+    /// A request with the kind's default options.
+    pub fn new(spec: RunSpec) -> RunRequest {
+        let options = RunOptions::defaults_for(spec.kind());
+        RunRequest { spec, options }
+    }
+
+    /// `{"kind": ..., "spec": {...}, "options": {...}}` — the wire body
+    /// of `POST /v1/runs`. The `options` object is optional on parse.
+    pub fn to_json(&self) -> Json {
+        let Json::Obj(mut o) = self.spec.to_json() else { unreachable!("spec is an object") };
+        o.insert("options".to_string(), self.options.to_json());
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunRequest> {
+        let kind = RunKind::from_str(&v.str_field("kind")?)?;
+        let spec = RunSpec::from_kind_json(kind, v.get("spec")?)?;
+        let options = RunOptions::from_json(kind, v.get_opt("options"))?;
+        Ok(RunRequest { spec, options })
+    }
+}
+
+/// What [`execute`] hands back, by kind.
+pub enum RunOutcome {
+    Facility(SweepReport),
+    Sweep(SweepReport),
+    Site(SiteReport),
+    SiteSweep(Vec<(SiteVariant, SiteReport)>),
+}
+
+impl RunOutcome {
+    /// The run's summary CSV (the same bytes its sink export carries).
+    pub fn summary_csv(&self) -> String {
+        match self {
+            RunOutcome::Facility(r) | RunOutcome::Sweep(r) => r.summary_csv(),
+            RunOutcome::Site(r) => r.summary_csv(),
+            RunOutcome::SiteSweep(results) => sweep_summary_csv(results),
+        }
+    }
+
+    /// Human-readable table where the kind has one (falls back to CSV for
+    /// site sweeps).
+    pub fn summary_table(&self) -> String {
+        match self {
+            RunOutcome::Facility(r) | RunOutcome::Sweep(r) => r.summary_table(),
+            RunOutcome::Site(r) => r.summary_table(),
+            RunOutcome::SiteSweep(_) => self.summary_csv(),
+        }
+    }
+}
+
+/// Warm the generator for a spec: load + classify + pack every
+/// configuration the run uses, exactly once. After this, [`execute_prepared`]
+/// needs only `&Generator` — many runs can share one warm generator.
+pub fn prepare(gen: &mut Generator, spec: &RunSpec) -> Result<()> {
+    match spec {
+        RunSpec::Facility(s) => gen.prepare_for(s),
+        RunSpec::Sweep(g) => prepare_sweep(gen, g),
+        RunSpec::Site(s) => prepare_site(gen, s),
+        RunSpec::SiteSweep(g) => prepare_site(gen, &g.base),
+    }
+}
+
+/// Validate, prepare, and execute one request. Exports (summary CSVs,
+/// spec snapshots, streamed series) route through `sink` when given; the
+/// layout matches what the historical per-kind `--out` directories held.
+pub fn execute(
+    gen: &mut Generator,
+    req: &RunRequest,
+    sink: Option<&dyn TraceSink>,
+) -> Result<RunOutcome> {
+    req.spec.validate()?;
+    prepare(gen, &req.spec)?;
+    execute_prepared(gen, req, sink)
+}
+
+/// [`execute`] over an already-[`prepare`]d shared generator.
+pub fn execute_prepared(
+    gen: &Generator,
+    req: &RunRequest,
+    sink: Option<&dyn TraceSink>,
+) -> Result<RunOutcome> {
+    req.spec.validate()?;
+    match &req.spec {
+        RunSpec::Facility(spec) => {
+            let grid = facility_grid(spec);
+            let report = sweep_prepared_sink(gen, &grid, &req.options.to_sweep(), sink)?;
+            // The one-shot files (grid.json, summary.csv, per-cell
+            // scenario.json + buffered series) complement whatever the
+            // streaming path already sent through the sink.
+            if let Some(s) = sink {
+                report.write_sink(s)?;
+            }
+            Ok(RunOutcome::Facility(report))
+        }
+        RunSpec::Sweep(grid) => {
+            let report = sweep_prepared_sink(gen, grid, &req.options.to_sweep(), sink)?;
+            if let Some(s) = sink {
+                report.write_sink(s)?;
+            }
+            Ok(RunOutcome::Sweep(report))
+        }
+        RunSpec::Site(spec) => {
+            Ok(RunOutcome::Site(run_site_inner(gen, spec, &req.options.to_site(), sink, None)?))
+        }
+        RunSpec::SiteSweep(grid) => Ok(RunOutcome::SiteSweep(site_sweep_prepared_sink(
+            gen,
+            grid,
+            &req.options.to_site(),
+            sink,
+        )?)),
+    }
+}
+
+/// What [`execute_checkpointed`] hands back, by kind.
+#[cfg(feature = "host")]
+pub enum CheckpointedOutcome {
+    Sweep(SweepOutcome),
+    SiteSweep(SiteSweepOutcome),
+}
+
+#[cfg(feature = "host")]
+impl CheckpointedOutcome {
+    /// Cells/variants restored from the manifest without re-running.
+    pub fn restored(&self) -> usize {
+        match self {
+            CheckpointedOutcome::Sweep(o) => o.restored,
+            CheckpointedOutcome::SiteSweep(o) => o.restored,
+        }
+    }
+
+    /// Cells/variants quarantined after exhausting the retry budget.
+    pub fn failed(&self) -> &[crate::scenarios::QuarantinedCell] {
+        match self {
+            CheckpointedOutcome::Sweep(o) => &o.failed,
+            CheckpointedOutcome::SiteSweep(o) => &o.failed,
+        }
+    }
+
+    /// Cells/variants left pending by a cooperative shutdown.
+    pub fn interrupted(&self) -> usize {
+        match self {
+            CheckpointedOutcome::Sweep(o) => o.interrupted,
+            CheckpointedOutcome::SiteSweep(o) => o.interrupted,
+        }
+    }
+
+    /// The final summary CSV bytes (restored + fresh rows, grid order).
+    pub fn summary_csv(&self) -> &str {
+        match self {
+            CheckpointedOutcome::Sweep(o) => &o.summary_csv,
+            CheckpointedOutcome::SiteSweep(o) => &o.summary_csv,
+        }
+    }
+
+    pub fn manifest_path(&self) -> &Path {
+        match self {
+            CheckpointedOutcome::Sweep(o) => &o.manifest_path,
+            CheckpointedOutcome::SiteSweep(o) => &o.manifest_path,
+        }
+    }
+}
+
+/// Crash-safe execution for the sweep kinds: a durable manifest under
+/// `dir`, per-cell retry/quarantine isolation
+/// ([`RunOptions::retry_policy`]), atomic exports, and `--resume`
+/// convergence to the uninterrupted run's bytes. Facility and site runs
+/// have no checkpointable cell structure and are rejected.
+#[cfg(feature = "host")]
+pub fn execute_checkpointed(
+    gen: &mut Generator,
+    req: &RunRequest,
+    dir: &Path,
+) -> Result<CheckpointedOutcome> {
+    req.spec.validate()?;
+    prepare(gen, &req.spec)?;
+    execute_checkpointed_prepared(gen, req, dir)
+}
+
+/// [`execute_checkpointed`] over an already-[`prepare`]d shared generator.
+#[cfg(feature = "host")]
+pub fn execute_checkpointed_prepared(
+    gen: &Generator,
+    req: &RunRequest,
+    dir: &Path,
+) -> Result<CheckpointedOutcome> {
+    let policy = req.options.retry_policy();
+    match &req.spec {
+        RunSpec::Sweep(grid) => Ok(CheckpointedOutcome::Sweep(sweep_checkpointed_prepared(
+            gen,
+            grid,
+            &req.options.to_sweep(),
+            dir,
+            &policy,
+        )?)),
+        RunSpec::SiteSweep(grid) => {
+            Ok(CheckpointedOutcome::SiteSweep(site_sweep_checkpointed_prepared(
+                gen,
+                grid,
+                &req.options.to_site(),
+                dir,
+                &policy,
+            )?))
+        }
+        other => bail!(
+            "checkpointed execution supports sweep and site_sweep (got '{}')",
+            other.kind().as_str()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregate::Topology;
+    use crate::config::{ServerAssignment, WorkloadSpec};
+
+    fn sweep_grid() -> SweepGrid {
+        SweepGrid {
+            name: "t".into(),
+            defaults: GridDefaults::default(),
+            workloads: vec![
+                WorkloadSpec::Poisson { rate: 0.25 },
+                WorkloadSpec::Mmpp { mean_rate: 0.5, burstiness: 4.0 },
+            ],
+            topologies: vec![Topology { rows: 1, racks_per_row: 2, servers_per_rack: 2 }],
+            fleets: vec![
+                ServerAssignment::Uniform("a".into()),
+                ServerAssignment::PerRack(vec!["a".into(), "b".into()]),
+            ],
+            seeds: vec![0, 7],
+        }
+    }
+
+    fn site_spec() -> SiteSpec {
+        SiteSpec::staggered("tri", &ScenarioSpec::default_poisson("cfg", 0.5), 3, 0.0)
+    }
+
+    fn site_grid() -> SiteGrid {
+        SiteGrid {
+            name: "spread".into(),
+            base: site_spec(),
+            phase_spreads_h: vec![0.0, 3.0],
+            seeds: vec![0, 7],
+            battery_kwh: Vec::new(),
+            cap_w: Vec::new(),
+            battery: None,
+        }
+    }
+
+    #[test]
+    fn runspec_json_roundtrips_all_four_kinds() {
+        let mut fac = ScenarioSpec::default_poisson("cfg", 0.5);
+        fac.seed = 3;
+        let specs = [
+            RunSpec::Facility(fac.clone()),
+            RunSpec::Sweep(sweep_grid()),
+            RunSpec::Site(site_spec()),
+            RunSpec::SiteSweep(site_grid()),
+        ];
+        for spec in specs {
+            let j = spec.to_json();
+            assert_eq!(j.str_field("kind").unwrap(), spec.kind().as_str());
+            let back = RunSpec::from_json(&j).unwrap();
+            assert_eq!(back.kind(), spec.kind());
+            // The nested spec objects round-trip exactly.
+            assert_eq!(json::to_string(&back.to_json()), json::to_string(&j));
+            back.validate().unwrap();
+        }
+        // Tag-level errors are crisp.
+        assert!(RunKind::from_str("mystery").is_err());
+        let j = json::parse(r#"{"kind": "sweep", "spec": {"name": "x"}}"#).unwrap();
+        assert!(RunSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn runrequest_options_parse_over_kind_defaults() {
+        // Absent options object → per-kind defaults.
+        let fac = RunOptions::from_json(RunKind::Facility, None).unwrap();
+        assert_eq!(fac.dt_s, 0.25);
+        assert_eq!(fac.window_s, 0.0);
+        let site = RunOptions::from_json(RunKind::Site, None).unwrap();
+        assert_eq!(site.dt_s, 1.0);
+        assert_eq!(site.window_s, 3600.0);
+        assert_eq!(site.load_interval_s, 60.0);
+        // Fields override defaults; the rest keep them.
+        let v = json::parse(
+            r#"{"dt_s": 0.5, "window_s": 120, "max_retries": 3,
+                "scales": {"rack_interval_s": 2.0}}"#,
+        )
+        .unwrap();
+        let o = RunOptions::from_json(RunKind::Sweep, Some(&v)).unwrap();
+        assert_eq!(o.dt_s, 0.5);
+        assert_eq!(o.window_s, 120.0);
+        assert_eq!(o.max_retries, 3);
+        assert_eq!(o.scales.rack_interval_s, 2.0);
+        assert_eq!(o.scales.row_interval_s, 15.0);
+        assert_eq!(o.ramp_interval_s, 900.0);
+        // Unknown keys are rejected, not ignored.
+        let v = json::parse(r#"{"dt": 0.5}"#).unwrap();
+        assert!(RunOptions::from_json(RunKind::Sweep, Some(&v)).is_err());
+        // And the wire form round-trips through from_json.
+        let o = RunOptions::defaults_for(RunKind::Site).with_dt(2.0).with_max_batch(4);
+        let back = RunOptions::from_json(RunKind::Site, Some(&o.to_json())).unwrap();
+        assert_eq!(back.dt_s, 2.0);
+        assert_eq!(back.max_batch, 4);
+    }
+
+    #[test]
+    fn facility_grid_expands_to_exactly_the_spec() {
+        let mut spec = ScenarioSpec::default_poisson("cfg", 0.5);
+        spec.seed = 3;
+        spec.server_config = ServerAssignment::PerRack(vec!["a".into(), "b".into()]);
+        spec.topology = Topology { rows: 1, racks_per_row: 2, servers_per_rack: 2 };
+        spec.pue = 1.4;
+        let grid = facility_grid(&spec);
+        grid.validate().unwrap();
+        let cells = grid.expand();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].id, "w0-t0-f0-s3");
+        assert_eq!(cells[0].spec, spec);
+        assert_eq!(
+            RunSpec::Facility(spec.clone()).config_ids(),
+            spec.server_config.config_ids_used(&spec.topology)
+        );
+    }
+
+    /// The PR-7 identity rule, pinned: manifest hashes bind to exactly
+    /// these fields, so execution-layout knobs can change across resumes
+    /// without invalidating a checkpoint.
+    #[test]
+    fn manifest_identity_field_sets_are_pinned() {
+        let o = RunOptions::defaults_for(RunKind::Sweep);
+        let Json::Obj(m) = o.to_sweep().identity_json() else { panic!("identity is an object") };
+        let keys: Vec<&str> = m.keys().map(String::as_str).collect();
+        assert_eq!(keys, vec!["dt_s", "ramp_interval_s", "scales"]);
+        let Json::Obj(m) = o.to_site().identity_json() else { panic!("identity is an object") };
+        let keys: Vec<&str> = m.keys().map(String::as_str).collect();
+        assert_eq!(keys, vec!["dt_s", "load_interval_s", "ramp_interval_s"]);
+        // Identity-irrelevant knobs move nothing.
+        let base = json::to_string(&o.to_sweep().identity_json());
+        let tweaked = o
+            .clone()
+            .with_workers(7)
+            .with_server_workers(3)
+            .with_max_batch(2)
+            .with_window(120.0)
+            .with_executor(Executor::Sequential)
+            .with_max_retries(9)
+            .with_cell_timeout(5.0);
+        assert_eq!(json::to_string(&tweaked.to_sweep().identity_json()), base);
+        let site_base = json::to_string(&o.to_site().identity_json());
+        assert_eq!(json::to_string(&tweaked.to_site().identity_json()), site_base);
+        // Identity-relevant knobs do move it.
+        assert_ne!(json::to_string(&o.clone().with_dt(0.5).to_sweep().identity_json()), base);
+        assert_ne!(
+            json::to_string(&o.clone().with_load_interval(300.0).to_site().identity_json()),
+            site_base
+        );
+    }
+}

@@ -496,6 +496,32 @@ impl Generator {
         self.prepared.get(config_id).cloned()
     }
 
+    /// Ids of every configuration currently prepared on this generator
+    /// (sorted — `prepared` is a BTree). The serve layer reports this in
+    /// `/healthz` and uses it to re-warm after a store refresh.
+    pub fn prepared_ids(&self) -> Vec<String> {
+        self.prepared.keys().cloned().collect()
+    }
+
+    /// Swap in a (re-opened) artifact store: drop every cached artifact,
+    /// prepared pair, and parsed replay schedule — they all came from the
+    /// old store's bytes — then re-prepare the configurations that were
+    /// prepared before, so a long-lived service stays warm across artifact
+    /// refreshes. Returns the re-prepared ids; a config that vanished from
+    /// the new store fails the refresh (and leaves the generator with
+    /// whatever subset was re-prepared — callers treat that as fatal).
+    pub fn refresh_store(&mut self, store: ArtifactStore) -> Result<Vec<String>> {
+        let warm = self.prepared_ids();
+        self.store = store;
+        self.configs.clear();
+        self.prepared.clear();
+        self.replay_cache.lock().unwrap().clear();
+        for id in &warm {
+            self.prepare(id)?;
+        }
+        Ok(warm)
+    }
+
     /// Generate a full facility run: every server in the topology, in
     /// parallel, reduced into a streaming accumulator.
     pub fn facility(&mut self, spec: &ScenarioSpec, dt_s: f64, workers: usize) -> Result<FacilityResult> {

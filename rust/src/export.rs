@@ -102,6 +102,31 @@ impl TraceSink for MemSink {
     }
 }
 
+/// [`TraceSink`] adapter that prefixes every logical path with a
+/// directory-like scope (`<scope>/<path>`) — how a sweep routes each
+/// variant's exports into its own subtree of one shared sink without the
+/// sink knowing about variants.
+pub struct ScopedSink<'a> {
+    inner: &'a dyn TraceSink,
+    prefix: String,
+}
+
+impl<'a> ScopedSink<'a> {
+    pub fn new(inner: &'a dyn TraceSink, scope: &str) -> ScopedSink<'a> {
+        ScopedSink { inner, prefix: format!("{scope}/") }
+    }
+}
+
+impl TraceSink for ScopedSink<'_> {
+    fn open(&self, path: &str) -> Result<Box<dyn TraceOut>> {
+        self.inner.open(&format!("{}{path}", self.prefix))
+    }
+
+    fn put(&self, path: &str, bytes: &[u8]) -> Result<()> {
+        self.inner.put(&format!("{}{path}", self.prefix), bytes)
+    }
+}
+
 /// Directory-backed [`TraceSink`]: logical paths resolve under `root`,
 /// streamed writes stage to `<name>.tmp` and rename on close (the same
 /// durability discipline [`crate::robust::fsx`] gives one-shot writes),
@@ -426,6 +451,17 @@ mod tests {
         let a = sink.get("buffered.csv").unwrap();
         let b = sink.get("streamed.csv").unwrap();
         assert_eq!(a, b, "streamed CSV bytes differ from buffered");
+    }
+
+    #[test]
+    fn scoped_sink_prefixes_both_write_paths() {
+        let sink = MemSink::new();
+        let scoped = ScopedSink::new(&sink, "p0-s5");
+        scoped.put("site_summary.csv", b"a\n").unwrap();
+        let mut out = scoped.open("site_load.csv").unwrap();
+        out.append(b"b\n").unwrap();
+        out.close().unwrap();
+        assert_eq!(sink.paths(), vec!["p0-s5/site_load.csv", "p0-s5/site_summary.csv"]);
     }
 
     #[test]

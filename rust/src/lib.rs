@@ -30,6 +30,14 @@
 //!     point of interconnection, with load-duration / coincidence /
 //!     ramp-distribution / headroom characterization.
 //!
+//! Every run shape above is fronted by one entry point: [`api`] defines
+//! the `RunRequest { spec, options }` envelope (kind-tagged over
+//! facility / sweep / site / site_sweep) and `execute` routes it through
+//! the shared engines. The historical per-kind `run_*` functions remain
+//! as deprecated wrappers. Behind the `serve` cargo feature, the same
+//! envelope is the wire schema of the live planning service
+//! (`powertrace serve`, module `serve`).
+//!
 //! See `examples/quickstart.rs` for the five-line path from a scenario to a
 //! facility load shape, and `examples/sweep_grid.rs` for a whole scenario
 //! family in one call.
@@ -77,6 +85,7 @@ pub mod util {
 }
 
 pub mod aggregate;
+pub mod api;
 pub mod artifacts;
 pub mod baselines;
 #[cfg(feature = "host")]
@@ -92,6 +101,8 @@ pub mod metrics;
 pub mod robust;
 pub mod runtime;
 pub mod scenarios;
+#[cfg(feature = "serve")]
+pub mod serve;
 pub mod site;
 pub mod source;
 pub mod states;

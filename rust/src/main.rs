@@ -5,6 +5,7 @@
 //!   facility   facility-scale run from a scenario JSON
 //!   site       compose N facilities into a utility-facing site profile
 //!   sweep      expand a scenario grid and run every cell (multi-scale export)
+//!   serve      live planning service: RunRequests over HTTP, NDJSON streams
 //!   diff       compare two summary CSVs cell-by-cell (regression gate)
 //!   repro      regenerate a paper table/figure (or `all`)
 //!   fit        Rust-side GMM+BIC refit on held-out measured traces
@@ -22,12 +23,13 @@
 )]
 
 use anyhow::Result;
+use powertrace_sim::api::{self, RunKind, RunOptions, RunOutcome, RunRequest, RunSpec};
 use powertrace_sim::catalog::Catalog;
 use powertrace_sim::config::ScenarioSpec;
 use powertrace_sim::coordinator::Generator;
 use powertrace_sim::experiments;
 use powertrace_sim::metrics::PlanningStats;
-use powertrace_sim::scenarios::{run_sweep_to, SweepGrid, SweepOptions};
+use powertrace_sim::scenarios::SweepGrid;
 use powertrace_sim::states::{select_k, EmOptions};
 use powertrace_sim::testbed;
 use powertrace_sim::util::cli::{usage, Args, Opt};
@@ -47,6 +49,7 @@ fn main() {
         "facility" => cmd_facility(&args),
         "site" => cmd_site(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "diff" => cmd_diff(&args),
         "repro" => cmd_repro(&args),
         "fit" => cmd_fit(&args),
@@ -81,6 +84,8 @@ fn print_help() {
                       utility-facing load profile + interconnect summary\n\
            sweep      expand a scenario grid (JSON), run every cell in\n\
                       parallel, export multi-scale series + summary\n\
+           serve      live planning service: POST RunRequest envelopes to\n\
+                      /v1/runs, stream windows back as NDJSON (feature `serve`)\n\
            diff       compare two summary CSVs cell-by-cell; non-zero exit\n\
                       above --tolerance (metric regression gate)\n\
            repro      reproduce a paper table/figure: {} | all\n\
@@ -175,18 +180,38 @@ fn cmd_facility(args: &Args) -> Result<()> {
     if window_s > 0.0 {
         return cmd_facility_streamed(&mut gen, &spec, dt, window_s, workers, args, t0);
     }
-    let result = gen.facility(&spec, dt, workers)?;
-    let site = result.facility_series();
-    // Same ramp-interval clamp as the streamed path (and the sweep
-    // engine), so --window never changes the reported stats.
-    let ramp_s = powertrace_sim::metrics::planning::clamp_ramp_interval(900.0, spec.horizon_s, dt);
-    let stats = PlanningStats::compute(&site, dt, ramp_s)?;
-    print_facility_summary(&spec, dt, &stats, true, 0.0, t0.elapsed().as_secs_f64());
+    // The buffered path is a facility RunRequest: a degenerate one-cell
+    // sweep through the same engine the server executes, with the --out
+    // export taken from the cell's multi-scale facility series.
+    let resample_s = args.f64_or("resample", 900.0)?;
+    let options = RunOptions::defaults_for(RunKind::Facility)
+        .with_dt(dt)
+        .with_server_workers(workers)
+        .with_scales(powertrace_sim::aggregate::ScaleConfig {
+            facility_intervals_s: vec![resample_s],
+            ..Default::default()
+        });
+    let req = RunRequest { spec: RunSpec::Facility(spec.clone()), options };
+    let RunOutcome::Facility(report) = api::execute(&mut gen, &req, None)? else {
+        unreachable!("facility request yields a facility outcome")
+    };
+    let cell = report
+        .cells
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("facility run produced no cell"))?;
+    print_facility_summary(
+        &spec,
+        dt,
+        &cell.stats,
+        cell.exact_quantiles,
+        cell.p99_bound_w,
+        t0.elapsed().as_secs_f64(),
+    );
     if let Some(out) = args.str_opt("out") {
-        let resample_s = args.f64_or("resample", 900.0)?;
-        let series = powertrace_sim::aggregate::resample(&site, dt, resample_s)?;
+        let scales =
+            cell.scales.as_ref().ok_or_else(|| anyhow::anyhow!("facility cell lost its series"))?;
         let mut s = String::from("t_s,facility_w\n");
-        for (i, &p) in series.iter().enumerate() {
+        for (i, &p) in scales.facility_w[0].iter().enumerate() {
             s.push_str(&format!("{},{p}\n", i as f64 * resample_s));
         }
         std::fs::write(out, s)?;
@@ -284,10 +309,8 @@ fn print_facility_summary(
 
 fn cmd_site(args: &Args) -> Result<()> {
     use anyhow::Context as _;
-    use powertrace_sim::robust::{RetryPolicy, RunManifest};
-    use powertrace_sim::site::{
-        run_site, run_site_sweep, SiteGrid, SiteOptions, SiteSpec, SITE_SWEEP_MANIFEST,
-    };
+    use powertrace_sim::robust::RunManifest;
+    use powertrace_sim::site::{SiteGrid, SiteSpec, SITE_SWEEP_MANIFEST};
     if args.has("help") {
         println!("{}", usage("site", "compose N facilities into a utility-facing site profile", &[
             Opt { name: "site", help: "site spec JSON (facilities + phase offsets + nameplate)", default: None },
@@ -322,10 +345,6 @@ fn cmd_site(args: &Args) -> Result<()> {
         }
         None => Vec::new(),
     };
-    let policy = RetryPolicy {
-        max_retries: args.usize_or("max-retries", 1)? as u32,
-        cell_timeout_s: args.f64_or("cell-timeout", 0.0)?,
-    };
     let t0 = std::time::Instant::now();
     if let Some(rpath) = args.str_opt("resume") {
         anyhow::ensure!(
@@ -351,31 +370,32 @@ fn cmd_site(args: &Args) -> Result<()> {
         );
         let grid = SiteGrid::from_json(&m.grid).context("--resume: manifest grid")?;
         let dir = mp.parent().unwrap_or(std::path::Path::new(".")).to_path_buf();
-        let opts = SiteOptions {
-            dt_s: args.f64_or("dt", m.options.f64_field("dt_s").unwrap_or(1.0))?,
-            window_s: args.f64_or("window", m.options.f64_field("window_s").unwrap_or(3600.0))?,
-            workers: args.usize_or("workers", 0)?,
-            max_batch: args.usize_or("max-batch", 0)?,
-            ramp_interval_s: args
-                .f64_or("ramp", m.options.f64_field("ramp_interval_s").unwrap_or(900.0))?,
-            load_interval_s: args
-                .f64_or("load-interval", m.options.f64_field("load_interval_s").unwrap_or(60.0))?,
-            collect_series: false,
-            executor: Default::default(),
-        };
+        let options = RunOptions::defaults_for(RunKind::SiteSweep)
+            .with_dt(args.f64_or("dt", m.options.f64_field("dt_s").unwrap_or(1.0))?)
+            .with_window(args.f64_or("window", m.options.f64_field("window_s").unwrap_or(3600.0))?)
+            .with_workers(args.usize_or("workers", 0)?)
+            .with_max_batch(args.usize_or("max-batch", 0)?)
+            .with_ramp_interval(
+                args.f64_or("ramp", m.options.f64_field("ramp_interval_s").unwrap_or(900.0))?,
+            )
+            .with_load_interval({
+                let mdefault = m.options.f64_field("load_interval_s").unwrap_or(60.0);
+                args.f64_or("load-interval", mdefault)?
+            })
+            .with_max_retries(args.usize_or("max-retries", 1)? as u32)
+            .with_cell_timeout(args.f64_or("cell-timeout", 0.0)?);
         let mut gen = site_generator(args, &grid.base.config_ids())?;
-        return run_site_sweep_ckpt(&mut gen, &grid, &opts, &dir, &policy, t0);
+        return run_site_sweep_ckpt(&mut gen, &grid, &options, &dir, t0);
     }
-    let opts = SiteOptions {
-        dt_s: args.f64_or("dt", 1.0)?,
-        window_s: args.f64_or("window", 3600.0)?,
-        workers: args.usize_or("workers", 0)?,
-        max_batch: args.usize_or("max-batch", 0)?,
-        ramp_interval_s: args.f64_or("ramp", 900.0)?,
-        load_interval_s: args.f64_or("load-interval", 60.0)?,
-        collect_series: false,
-        executor: Default::default(),
-    };
+    let options = RunOptions::defaults_for(RunKind::Site)
+        .with_dt(args.f64_or("dt", 1.0)?)
+        .with_window(args.f64_or("window", 3600.0)?)
+        .with_workers(args.usize_or("workers", 0)?)
+        .with_max_batch(args.usize_or("max-batch", 0)?)
+        .with_ramp_interval(args.f64_or("ramp", 900.0)?)
+        .with_load_interval(args.f64_or("load-interval", 60.0)?)
+        .with_max_retries(args.usize_or("max-retries", 1)? as u32)
+        .with_cell_timeout(args.f64_or("cell-timeout", 0.0)?);
     let out = args.str_opt("out").map(std::path::PathBuf::from);
     if let Some(gpath) = args.str_opt("grid") {
         let mut grid = SiteGrid::load(std::path::Path::new(gpath))?;
@@ -386,9 +406,12 @@ fn cmd_site(args: &Args) -> Result<()> {
         // fault isolation + manifest for --resume); summary bytes match the
         // plain path either way.
         if let Some(dir) = &out {
-            return run_site_sweep_ckpt(&mut gen, &grid, &opts, dir, &policy, t0);
+            return run_site_sweep_ckpt(&mut gen, &grid, &options, dir, t0);
         }
-        let results = run_site_sweep(&mut gen, &grid, &opts, None)?;
+        let req = RunRequest { spec: RunSpec::SiteSweep(grid.clone()), options };
+        let RunOutcome::SiteSweep(results) = api::execute(&mut gen, &req, None)? else {
+            unreachable!("site_sweep request yields a site_sweep outcome")
+        };
         println!(
             "site sweep '{}': {} variants × {} facilities ({:.1}s wall)\n",
             grid.name,
@@ -409,15 +432,24 @@ fn cmd_site(args: &Args) -> Result<()> {
     spec.overlays.extend(extra_overlays);
     spec.validate()?;
     let mut gen = site_generator(args, &spec.config_ids())?;
-    let report = run_site(&mut gen, &spec, &opts, out.as_deref())?;
+    let sink = out.as_ref().map(powertrace_sim::export::DirSink::new);
+    let req = RunRequest { spec: RunSpec::Site(spec.clone()), options };
+    let RunOutcome::Site(report) = api::execute(
+        &mut gen,
+        &req,
+        sink.as_ref().map(|s| s as &dyn powertrace_sim::export::TraceSink),
+    )?
+    else {
+        unreachable!("site request yields a site outcome")
+    };
     println!(
         "site '{}': {} facilities, {} servers, {:.1} h horizon, dt={}s, {}s windows ({:.1}s wall)",
         spec.name,
         spec.facilities.len(),
         spec.n_servers(),
         spec.horizon_s() / 3600.0,
-        opts.dt_s,
-        opts.window_s,
+        req.options.dt_s,
+        req.options.window_s,
         t0.elapsed().as_secs_f64()
     );
     print!("{}", report.summary_table());
@@ -434,12 +466,18 @@ fn cmd_site(args: &Args) -> Result<()> {
 fn run_site_sweep_ckpt(
     gen: &mut Generator,
     grid: &powertrace_sim::site::SiteGrid,
-    opts: &powertrace_sim::site::SiteOptions,
+    options: &RunOptions,
     dir: &std::path::Path,
-    policy: &powertrace_sim::robust::RetryPolicy,
     t0: std::time::Instant,
 ) -> Result<()> {
-    let outcome = powertrace_sim::site::run_site_sweep_checkpointed(gen, grid, opts, dir, policy)?;
+    // SIGINT/SIGTERM drain cooperatively from here on: the manifest
+    // flushes and --resume re-runs exactly the still-pending variants.
+    powertrace_sim::robust::shutdown::install_handlers();
+    let req = RunRequest { spec: RunSpec::SiteSweep(grid.clone()), options: options.clone() };
+    let api::CheckpointedOutcome::SiteSweep(outcome) = api::execute_checkpointed(gen, &req, dir)?
+    else {
+        unreachable!("site_sweep request yields a site_sweep outcome")
+    };
     println!(
         "site sweep '{}': {} variants ({} run, {} restored, {} quarantined) × {} facilities ({:.1}s wall)\n",
         grid.name,
@@ -455,6 +493,14 @@ fn run_site_sweep_ckpt(
         print!("{}", r.summary_table());
     }
     println!("\nwrote site_sweep_summary.csv + manifest.json under {}", dir.display());
+    if outcome.interrupted > 0 {
+        anyhow::bail!(
+            "interrupted: {} variant(s) still pending (manifest is consistent); \
+             finish with --resume {}",
+            outcome.interrupted,
+            outcome.manifest_path.display()
+        );
+    }
     if !outcome.failed.is_empty() {
         for q in &outcome.failed {
             eprintln!("quarantined {} after {} attempt(s): {}", q.id, q.attempts, q.reason);
@@ -522,8 +568,8 @@ fn cmd_diff(args: &Args) -> Result<()> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     use anyhow::Context as _;
-    use powertrace_sim::robust::{RetryPolicy, RunManifest};
-    use powertrace_sim::scenarios::{run_sweep_checkpointed, SWEEP_MANIFEST};
+    use powertrace_sim::robust::RunManifest;
+    use powertrace_sim::scenarios::SWEEP_MANIFEST;
     if args.has("help") {
         println!("{}", usage("sweep", "expand a scenario grid and run every cell", &[
             Opt { name: "grid", help: "sweep grid JSON (see scenarios module docs)", default: None },
@@ -628,15 +674,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ),
         None => (0.25, 900.0, 0.0),
     };
-    let opts = SweepOptions {
-        dt_s: args.f64_or("dt", mdt)?,
-        ramp_interval_s: args.f64_or("ramp", mramp)?,
-        scenario_workers: args.usize_or("workers", 0)?,
-        server_workers: args.usize_or("server-workers", 0)?,
-        max_batch: args.usize_or("max-batch", 0)?,
-        window_s: args.f64_or("window", mwindow)?,
-        ..SweepOptions::default()
-    };
+    let options = RunOptions::defaults_for(RunKind::Sweep)
+        .with_dt(args.f64_or("dt", mdt)?)
+        .with_ramp_interval(args.f64_or("ramp", mramp)?)
+        .with_workers(args.usize_or("workers", 0)?)
+        .with_server_workers(args.usize_or("server-workers", 0)?)
+        .with_max_batch(args.usize_or("max-batch", 0)?)
+        .with_window(args.f64_or("window", mwindow)?)
+        .with_max_retries(args.usize_or("max-retries", 1)? as u32)
+        .with_cell_timeout(args.f64_or("cell-timeout", 0.0)?);
     let t0 = std::time::Instant::now();
     let out_dir = match &resume {
         Some((_, mp)) => Some(mp.parent().unwrap_or(std::path::Path::new(".")).to_path_buf()),
@@ -646,11 +692,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // isolation + a manifest for --resume. Summary bytes are identical to
     // the plain path (same header, same rows, grid order).
     if let Some(dir) = &out_dir {
-        let policy = RetryPolicy {
-            max_retries: args.usize_or("max-retries", 1)? as u32,
-            cell_timeout_s: args.f64_or("cell-timeout", 0.0)?,
+        // SIGINT/SIGTERM drain cooperatively: the manifest flushes and
+        // --resume re-runs exactly the still-pending cells.
+        powertrace_sim::robust::shutdown::install_handlers();
+        let req = RunRequest { spec: RunSpec::Sweep(grid.clone()), options };
+        let api::CheckpointedOutcome::Sweep(outcome) =
+            api::execute_checkpointed(&mut gen, &req, dir)?
+        else {
+            unreachable!("sweep request yields a sweep outcome")
         };
-        let outcome = run_sweep_checkpointed(&mut gen, &grid, &opts, dir, &policy)?;
         println!(
             "sweep '{}': {} cells ({} run, {} restored, {} quarantined), dt={}s ({:.1}s wall)\n",
             grid.name,
@@ -658,11 +708,19 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             outcome.report.cells.len(),
             outcome.restored,
             outcome.failed.len(),
-            opts.dt_s,
+            req.options.dt_s,
             t0.elapsed().as_secs_f64()
         );
         print!("{}", outcome.report.summary_table());
         println!("\nwrote summary.csv + manifest.json under {}", dir.display());
+        if outcome.interrupted > 0 {
+            anyhow::bail!(
+                "interrupted: {} cell(s) still pending (manifest is consistent); \
+                 finish with --resume {}",
+                outcome.interrupted,
+                outcome.manifest_path.display()
+            );
+        }
         if !outcome.failed.is_empty() {
             for q in &outcome.failed {
                 eprintln!("quarantined {} after {} attempt(s): {}", q.id, q.attempts, q.reason);
@@ -675,13 +733,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
-    let report = run_sweep_to(&mut gen, &grid, &opts, None)?;
+    let req = RunRequest { spec: RunSpec::Sweep(grid.clone()), options };
+    let RunOutcome::Sweep(report) = api::execute(&mut gen, &req, None)? else {
+        unreachable!("sweep request yields a sweep outcome")
+    };
     println!(
         "sweep '{}': {} cells × {} servers/cell-max, dt={}s ({:.1}s wall)\n",
         grid.name,
         report.cells.len(),
         grid.topologies.iter().map(|t| t.n_servers()).max().unwrap_or(0),
-        opts.dt_s,
+        req.options.dt_s,
         t0.elapsed().as_secs_f64()
     );
     print!("{}", report.summary_table());
@@ -759,4 +820,90 @@ fn cmd_info(_args: &Args) -> Result<()> {
         Err(e) => println!("artifacts: not built ({e})"),
     }
     Ok(())
+}
+
+/// `powertrace serve` — the live planning service (feature `serve`).
+///
+/// One warm generator, HTTP in front, NDJSON out: see
+/// `rust/src/serve/mod.rs` and README §"Planning service".
+#[cfg(feature = "serve")]
+fn cmd_serve(args: &Args) -> Result<()> {
+    use powertrace_sim::serve::{ServeConfig, Server};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+    if args.has("help") {
+        println!("{}", usage("serve", "serve RunRequests over HTTP, streaming NDJSON windows", &[
+            Opt { name: "addr", help: "bind address (port 0 picks a free port)", default: Some("127.0.0.1:8791") },
+            Opt { name: "max-runs", help: "concurrent-run cap; excess requests queue", default: Some("2") },
+            Opt { name: "runs-dir", help: "run sweep kinds checkpointed under <dir>/<run-id>/", default: None },
+            Opt { name: "refresh-interval", help: "artifact-store re-check cadence in seconds (0 = off)", default: Some("0") },
+            Opt { name: "backend", help: "native | pjrt", default: Some("native") },
+            Opt { name: "synth", help: "serve from a synthetic random-weight artifact store", default: None },
+            Opt { name: "synth-configs", help: "comma-separated config ids for --synth (required with it)", default: None },
+            Opt { name: "synth-seed", help: "seed for the synthetic store", default: Some("7") },
+        ]));
+        return Ok(());
+    }
+    let cfg = ServeConfig {
+        addr: args.str_or("addr", "127.0.0.1:8791"),
+        max_concurrent_runs: args.usize_or("max-runs", 2)?,
+        runs_dir: args.str_opt("runs-dir").map(std::path::PathBuf::from),
+        refresh_interval_s: args.f64_or("refresh-interval", 0.0)?,
+    };
+    let mut gen = if args.has("synth") {
+        // Synthetic-store bytes depend on the full *ordered* config-id
+        // list (one sequential RNG spans all configs), so the serving set
+        // must be stated up front to match any batch run's bytes.
+        let ids: Vec<String> = args
+            .str_opt("synth-configs")
+            .map(|s| s.split(',').map(|c| c.trim().to_string()).filter(|c| !c.is_empty()).collect())
+            .unwrap_or_default();
+        if ids.is_empty() {
+            anyhow::bail!(
+                "--synth needs --synth-configs <id,id,...>: synthetic store bytes \
+                 depend on the full ordered config list, so it cannot be grown per request"
+            );
+        }
+        let cat = Catalog::load_default()?;
+        let root = powertrace_sim::testutil::synth_artifact_store(
+            "serve_cli",
+            16,
+            6,
+            &ids,
+            args.u64_or("synth-seed", 7)?,
+        );
+        let store = powertrace_sim::artifacts::ArtifactStore::open(&root)?;
+        let mut g = Generator::native_with(cat, store);
+        for id in &ids {
+            g.prepare(id)?;
+        }
+        g
+    } else {
+        Generator::with_backend(&args.str_or("backend", "native"))?
+    };
+    // Pre-warm everything the store already has; requests for configs
+    // outside this set still prepare on demand.
+    if !args.has("synth") {
+        let ids = gen.store.manifest.configs.clone();
+        for id in &ids {
+            gen.prepare(id)?;
+        }
+    }
+    powertrace_sim::robust::shutdown::install_handlers();
+    let server = Server::new(gen, &cfg)?;
+    let addr = server.local_addr()?;
+    println!("powertrace serve listening on http://{addr}");
+    println!("  POST /v1/runs       RunRequest {{kind, spec, options}} → NDJSON stream");
+    println!("  GET  /v1/runs/:id   run status (+ manifest counts with --runs-dir)");
+    println!("  GET  /healthz       liveness + prepared configs + active runs");
+    println!("  GET  /v1/catalog    serving configurations");
+    server.run(Arc::new(AtomicBool::new(false)))
+}
+
+#[cfg(not(feature = "serve"))]
+fn cmd_serve(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "this binary was built without the `serve` feature; \
+         rebuild with `cargo build --release --features serve`"
+    )
 }

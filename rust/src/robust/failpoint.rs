@@ -22,7 +22,8 @@
 //! Programmatic (tests): [`arm`] / [`clear_all`]. Process-level (CI kill
 //! smokes): the `POWERTRACE_FAILPOINTS` environment variable, parsed on
 //! first hit — `;`-separated `site[@tag]=action[*count]` clauses where
-//! `action` is `panic` | `error` | `abort` | `sleep-<ms>`, `tag` is a
+//! `action` is `panic` | `error` | `abort` | `sleep-<ms>` | `interrupt`
+//! (request a cooperative shutdown, as SIGINT would), `tag` is a
 //! substring match on the call-site tag (empty = any), and `*count`
 //! bounds the number of firings (absent = unlimited). Example:
 //!
@@ -59,6 +60,11 @@ mod imp {
         Abort,
         /// Sleep this many milliseconds (exercises the soft deadline).
         SleepMs(u64),
+        /// Request a cooperative shutdown
+        /// ([`crate::robust::shutdown::request`]) and continue — the
+        /// deterministic stand-in for SIGINT in interrupt-then-resume
+        /// tests.
+        Interrupt,
     }
 
     /// One armed injection spec.
@@ -125,6 +131,7 @@ mod imp {
                     "panic" => FailAction::Panic,
                     "error" => FailAction::Error,
                     "abort" => FailAction::Abort,
+                    "interrupt" => FailAction::Interrupt,
                     other => bail!("failpoint '{part}': unknown action '{other}'"),
                 },
             };
@@ -159,6 +166,10 @@ mod imp {
                 std::thread::sleep(std::time::Duration::from_millis(ms));
                 Ok(())
             }
+            Some(FailAction::Interrupt) => {
+                crate::robust::shutdown::request();
+                Ok(())
+            }
             Some(FailAction::Error) => bail!("failpoint '{site}' ({tag}): injected error"),
             Some(FailAction::Panic) => panic!("failpoint '{site}' ({tag}): injected panic"),
             Some(FailAction::Abort) => {
@@ -185,6 +196,9 @@ mod imp {
             assert_eq!(specs[1].action, FailAction::Error);
             assert_eq!(specs[1].remaining, Some(1));
             assert_eq!(specs[2].action, FailAction::SleepMs(250));
+            let specs = parse_specs("sweep.cell.window=interrupt*1").unwrap();
+            assert_eq!(specs[0].action, FailAction::Interrupt);
+            assert_eq!(specs[0].remaining, Some(1));
             assert!(parse_specs("nope").is_err());
             assert!(parse_specs("a=explode").is_err());
             assert!(parse_specs("a=error*x").is_err());

@@ -49,8 +49,12 @@ impl Deadline {
         Deadline::start(0.0)
     }
 
-    /// `Err` once the soft budget is exhausted (never fails for budget 0).
+    /// `Err` once the soft budget is exhausted (never fails for budget 0)
+    /// or once a cooperative shutdown was requested
+    /// ([`crate::robust::shutdown`]) — the deadline checks sit at exactly
+    /// the yield points an interrupt must stop at.
     pub fn check(&self) -> Result<()> {
+        crate::robust::shutdown::check()?;
         if self.budget_s > 0.0 {
             let elapsed = self.start.elapsed().as_secs_f64();
             if elapsed > self.budget_s {
@@ -93,6 +97,12 @@ pub fn run_isolated<T>(
                 reason = format!("panicked: {}", crate::util::threadpool::panic_message(&*p));
             }
         }
+        // A shutdown request is not a cell failure: retrying would only
+        // delay the exit, and the runners classify the attempt as
+        // "interrupted" (cell stays pending) rather than quarantining it.
+        if crate::robust::shutdown::requested() {
+            break;
+        }
     }
     Isolated::Failed { attempts, reason }
 }
@@ -115,6 +125,9 @@ mod tests {
 
     #[test]
     fn retries_deterministic_error_then_quarantines() {
+        // The retry loop exits early under a shutdown request; hold the
+        // flag's test lock so the shutdown round-trip test can't overlap.
+        let _serial = crate::robust::shutdown::test_serial();
         let calls = AtomicU32::new(0);
         let policy = RetryPolicy { max_retries: 2, cell_timeout_s: 0.0 };
         match run_isolated(&policy, 0, |_| -> Result<()> {
@@ -132,6 +145,7 @@ mod tests {
 
     #[test]
     fn captures_panics_and_recovers_on_retry() {
+        let _serial = crate::robust::shutdown::test_serial();
         let calls = AtomicU32::new(0);
         let policy = RetryPolicy { max_retries: 1, cell_timeout_s: 0.0 };
         // First attempt panics, the retry succeeds — and prior attempts
@@ -152,6 +166,7 @@ mod tests {
 
     #[test]
     fn deadline_trips_only_with_budget() {
+        let _serial = crate::robust::shutdown::test_serial();
         let d = Deadline::unbounded();
         std::thread::sleep(std::time::Duration::from_millis(5));
         d.check().unwrap();
@@ -163,6 +178,7 @@ mod tests {
 
     #[test]
     fn timeout_failures_retry_and_quarantine() {
+        let _serial = crate::robust::shutdown::test_serial();
         let policy = RetryPolicy { max_retries: 1, cell_timeout_s: 0.001 };
         match run_isolated(&policy, 0, |d| -> Result<()> {
             std::thread::sleep(std::time::Duration::from_millis(10));

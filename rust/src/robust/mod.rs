@@ -34,6 +34,7 @@ pub mod fsx;
 pub mod isolate;
 #[cfg(feature = "host")]
 pub mod manifest;
+pub mod shutdown;
 
 pub use isolate::{run_isolated, Deadline, Isolated, RetryPolicy};
 #[cfg(feature = "host")]

@@ -1,0 +1,138 @@
+//! Cooperative shutdown: one process-wide flag, checked at the engine's
+//! existing yield points.
+//!
+//! A SIGINT/SIGTERM during a checkpointed run must not lose work or leave
+//! an inconsistent resume state. The [`ManifestKeeper`] already rewrites
+//! the manifest atomically after every cell, so durability is never the
+//! problem — the problem is dying *mid-cell* and counting the interrupt
+//! as a failure. This module turns the signal into a request:
+//!
+//! * [`request`] (called from the signal handler, or by the
+//!   `interrupt` failpoint action) sets a global flag;
+//! * [`Deadline::check`](crate::robust::Deadline::check) — already called
+//!   at every streaming window and lockstep barrier — returns an error
+//!   carrying [`INTERRUPT_MARKER`] once the flag is set, so in-flight
+//!   cells stop at the next window boundary;
+//! * [`run_isolated`](crate::robust::run_isolated) stops retrying, and
+//!   the checkpointed runners leave interrupted cells **pending** (never
+//!   quarantined, no attempt recorded) and skip cells not yet started;
+//! * the runners report the pending count as `interrupted`, and the CLI
+//!   prints a `--resume` hint instead of a quarantine list.
+//!
+//! Everything here is a relaxed atomic — core-safe, no filesystem, no
+//! threads. [`install_handlers`] (host-only) wires SIGINT/SIGTERM to
+//! [`request`]; a second signal force-exits with status 130 for runs that
+//! are wedged somewhere without a yield point.
+//!
+//! [`ManifestKeeper`]: crate::robust::manifest::ManifestKeeper
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+/// Substring every shutdown-induced error carries — how the checkpointed
+/// runners distinguish "interrupted" from "failed" without a second error
+/// channel through `catch_unwind`.
+pub const INTERRUPT_MARKER: &str = "shutdown requested";
+
+/// `true` once a shutdown has been requested (signal, failpoint, or API).
+pub fn requested() -> bool {
+    REQUESTED.load(Ordering::Relaxed)
+}
+
+/// Request a cooperative shutdown: running cells stop at their next yield
+/// point, queued cells never start. Idempotent; async-signal-safe.
+pub fn request() {
+    REQUESTED.store(true, Ordering::Relaxed);
+}
+
+/// Clear the flag (tests; a server draining one interrupted batch run).
+pub fn reset() {
+    REQUESTED.store(false, Ordering::Relaxed);
+}
+
+/// `Err` (carrying [`INTERRUPT_MARKER`]) once shutdown was requested.
+pub fn check() -> Result<()> {
+    if requested() {
+        bail!("{INTERRUPT_MARKER}: stopping at the next safe point");
+    }
+    Ok(())
+}
+
+/// Was this failure reason produced by a shutdown request (directly or as
+/// the root of an error chain)?
+pub fn is_interrupt(reason: &str) -> bool {
+    reason.contains(INTERRUPT_MARKER)
+}
+
+/// Install SIGINT/SIGTERM handlers that call [`request`]. The second
+/// signal exits immediately with status 130 (the shell convention for
+/// death-by-SIGINT) — the escape hatch when a run is stuck somewhere
+/// without a yield point. Call once, from `main`-adjacent code only:
+/// plain (non-checkpointed) runs keep the default kill-on-^C behavior.
+#[cfg(all(feature = "host", unix))]
+pub fn install_handlers() {
+    static INSTALLED: AtomicBool = AtomicBool::new(false);
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    unsafe extern "C" fn on_signal(_signum: i32) {
+        // Only atomics and _exit in here — the handler must stay
+        // async-signal-safe.
+        if REQUESTED.swap(true, Ordering::SeqCst) {
+            _exit(130);
+        }
+    }
+    extern "C" {
+        // Raw libc bindings (the crate carries no libc dependency):
+        // `signal(2)` registers a handler, `_exit(2)` is the
+        // async-signal-safe process exit.
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        let h = on_signal as unsafe extern "C" fn(i32) as usize;
+        signal(SIGINT, h);
+        signal(SIGTERM, h);
+    }
+}
+
+#[cfg(all(feature = "host", unix))]
+extern "C" {
+    fn _exit(status: i32) -> !;
+}
+
+/// No-op on non-unix hosts: runs stay interruptible through the
+/// `interrupt` failpoint and [`request`], just not via signals.
+#[cfg(all(feature = "host", not(unix)))]
+pub fn install_handlers() {}
+
+/// Serialize unit tests that touch (or must observe a clear) global
+/// shutdown flag — the flag is process-wide, and `cargo test` threads
+/// share the process.
+#[cfg(test)]
+pub(crate) fn test_serial() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_check_reset_roundtrip() {
+        let _serial = test_serial();
+        reset();
+        assert!(!requested());
+        check().unwrap();
+        request();
+        assert!(requested());
+        let e = check().unwrap_err();
+        assert!(is_interrupt(&format!("{e:#}")));
+        reset();
+        check().unwrap();
+    }
+}

@@ -92,8 +92,13 @@ pub use diff::{diff_summaries, DiffReport};
 #[cfg(feature = "host")]
 pub use diff::diff_summary_files;
 pub use grid::{GridDefaults, SweepCell, SweepGrid};
-pub use runner::{run_sweep, run_sweep_sink, CellResult, SweepOptions, SweepReport};
+// The deprecated run_* entry points stay re-exported for source compat;
+// new code routes through `crate::api`.
+#[allow(deprecated)]
+pub use runner::{run_sweep, run_sweep_sink};
+pub use runner::{CellResult, SweepOptions, SweepReport};
+#[allow(deprecated)]
 #[cfg(feature = "host")]
-pub use runner::{
-    run_sweep_checkpointed, run_sweep_to, QuarantinedCell, SweepOutcome, SWEEP_MANIFEST,
-};
+pub use runner::{run_sweep_checkpointed, run_sweep_to};
+#[cfg(feature = "host")]
+pub use runner::{QuarantinedCell, SweepOutcome, SWEEP_MANIFEST};

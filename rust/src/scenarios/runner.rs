@@ -35,6 +35,14 @@
 //! summary CSV deliberately contains no wall-clock fields, so re-running a
 //! grid with the same seeds reproduces byte-identical summaries.
 //!
+//! Entry points: the unified [`crate::api`] layer (`RunRequest` →
+//! [`crate::api::execute`]) is the public surface — the CLI, the serve
+//! layer, and embedders all route through it. The historical `run_sweep*`
+//! functions remain as thin deprecated wrappers over the same
+//! `pub(crate)` internals ([`prepare_sweep`] + [`sweep_prepared_sink`] /
+//! [`sweep_checkpointed_prepared`]), which take a shared `&Generator` so
+//! one warm prepared-config cache can serve concurrent runs.
+//!
 //! Crash safety: [`run_sweep_checkpointed`] wraps the same execution in the
 //! [`crate::robust`] layer — a durable [`RunManifest`] under the output
 //! directory, per-cell `catch_unwind` + retry isolation
@@ -199,8 +207,14 @@ pub struct SweepReport {
 
 /// Expand and execute a grid (buffered, or streaming when
 /// `opts.window_s > 0` — see [`run_sweep_to`] to stream CSV exports).
+#[deprecated(
+    since = "0.2.0",
+    note = "route through crate::api::execute with RunSpec::Sweep (one RunRequest envelope \
+            for every run kind)"
+)]
 pub fn run_sweep(gen: &mut Generator, grid: &SweepGrid, opts: &SweepOptions) -> Result<SweepReport> {
-    run_sweep_sink(gen, grid, opts, None)
+    prepare_sweep(gen, grid)?;
+    sweep_prepared_sink(gen, grid, opts, None)
 }
 
 /// [`run_sweep`] with a streaming export directory: when
@@ -211,6 +225,10 @@ pub fn run_sweep(gen: &mut Generator, grid: &SweepGrid, opts: &SweepOptions) -> 
 /// [`SweepReport::write`] on the same directory afterwards to add
 /// `grid.json`, `summary.csv`, and the per-cell `scenario.json`s.
 #[cfg(feature = "host")]
+#[deprecated(
+    since = "0.2.0",
+    note = "route through crate::api::execute with RunSpec::Sweep and a DirSink"
+)]
 pub fn run_sweep_to(
     gen: &mut Generator,
     grid: &SweepGrid,
@@ -221,14 +239,62 @@ pub fn run_sweep_to(
         std::fs::create_dir_all(dir)?;
     }
     let sink = stream_dir.map(DirSink::new);
-    run_sweep_sink(gen, grid, opts, sink.as_ref().map(|s| s as &dyn TraceSink))
+    prepare_sweep(gen, grid)?;
+    sweep_prepared_sink(gen, grid, opts, sink.as_ref().map(|s| s as &dyn TraceSink))
 }
 
 /// [`run_sweep_to`] with streamed exports routed through an arbitrary
 /// [`TraceSink`] (each cell under `<cell>/` at the sink root) — the
 /// embedding entry point, available without the `host` feature.
+#[deprecated(
+    since = "0.2.0",
+    note = "route through crate::api::execute with RunSpec::Sweep and a TraceSink"
+)]
 pub fn run_sweep_sink(
     gen: &mut Generator,
+    grid: &SweepGrid,
+    opts: &SweepOptions,
+    stream_sink: Option<&dyn TraceSink>,
+) -> Result<SweepReport> {
+    prepare_sweep(gen, grid)?;
+    sweep_prepared_sink(gen, grid, opts, stream_sink)
+}
+
+/// The configuration ids a grid's expanded cells actually use, in
+/// first-use order (a `PerRack` fleet longer than its rack count never
+/// reaches its tail).
+pub(crate) fn grid_config_ids_used(grid: &SweepGrid) -> Vec<String> {
+    let mut needed: Vec<String> = Vec::new();
+    for cell in grid.expand() {
+        for id in cell.spec.server_config.config_ids_used(&cell.spec.topology) {
+            if !needed.contains(&id) {
+                needed.push(id);
+            }
+        }
+    }
+    needed
+}
+
+/// Validate `grid` and prepare every configuration some cell actually
+/// uses — the shared-artifact hoist: artifact JSON parse + classifier
+/// construction + packed-weight build happen exactly once per config, no
+/// matter how many cells (or racks) use it.
+pub(crate) fn prepare_sweep(gen: &mut Generator, grid: &SweepGrid) -> Result<()> {
+    grid.validate()?;
+    for id in grid_config_ids_used(grid) {
+        gen.prepare(&id).with_context(|| format!("preparing config '{id}'"))?;
+    }
+    Ok(())
+}
+
+/// The sweep engine proper, over an already-prepared shared generator
+/// (see [`prepare_sweep`]): validation + cell fan-out, no `&mut` access —
+/// the form [`crate::api::execute_prepared`] and the serve layer call so
+/// one warm prepared-config cache serves concurrent runs. Fails inside
+/// generation if a cell references a configuration that was never
+/// prepared.
+pub(crate) fn sweep_prepared_sink(
+    gen: &Generator,
     grid: &SweepGrid,
     opts: &SweepOptions,
     stream_sink: Option<&dyn TraceSink>,
@@ -240,19 +306,6 @@ pub fn run_sweep_sink(
         opts.dt_s
     );
     let cells = grid.expand();
-    // Shared-artifact hoist: each config some cell actually uses is
-    // prepared exactly once, no matter how many cells (or racks) use it.
-    let mut needed: Vec<String> = Vec::new();
-    for cell in &cells {
-        for id in cell.spec.server_config.config_ids_used(&cell.spec.topology) {
-            if !needed.contains(&id) {
-                needed.push(id);
-            }
-        }
-    }
-    for id in needed {
-        gen.prepare(&id).with_context(|| format!("preparing config '{id}'"))?;
-    }
     let n = cells.len();
     let outer = match opts.scenario_workers {
         0 => default_workers().min(n).max(1),
@@ -396,6 +449,11 @@ pub struct SweepOutcome {
     pub restored: usize,
     /// Cells quarantined after exhausting the retry budget, grid order.
     pub failed: Vec<QuarantinedCell>,
+    /// Cells still `pending` when the run stopped — nonzero only when a
+    /// cooperative shutdown ([`crate::robust::shutdown`]) interrupted the
+    /// run. Interrupted cells are never quarantined and carry no attempt
+    /// charge; `--resume` re-runs exactly these.
+    pub interrupted: usize,
     /// The assembled summary (all `done` cells, grid order) — exactly the
     /// bytes written to `<dir>/summary.csv`, and byte-identical to an
     /// uninterrupted [`run_sweep_to`] + [`SweepReport::write`] once every
@@ -422,6 +480,10 @@ pub struct SweepOutcome {
 /// `summary.csv` after any crash/resume sequence is byte-identical to the
 /// uninterrupted run's.
 #[cfg(feature = "host")]
+#[deprecated(
+    since = "0.2.0",
+    note = "route through crate::api::execute_checkpointed with RunSpec::Sweep"
+)]
 pub fn run_sweep_checkpointed(
     gen: &mut Generator,
     grid: &SweepGrid,
@@ -429,6 +491,25 @@ pub fn run_sweep_checkpointed(
     dir: &Path,
     policy: &RetryPolicy,
 ) -> Result<SweepOutcome> {
+    prepare_sweep(gen, grid)?;
+    sweep_checkpointed_prepared(gen, grid, opts, dir, policy)
+}
+
+/// [`run_sweep_checkpointed`] over an already-prepared shared generator
+/// (see [`prepare_sweep`]) — the `pub(crate)` engine behind
+/// [`crate::api::execute_checkpointed`] and the serve layer's persisted
+/// runs. Preparing the full used-config set (rather than only the configs
+/// the pending cells need) is deliberate: the superset is cheap, cached,
+/// and lets a read-only generator be shared across resumes.
+#[cfg(feature = "host")]
+pub(crate) fn sweep_checkpointed_prepared(
+    gen: &Generator,
+    grid: &SweepGrid,
+    opts: &SweepOptions,
+    dir: &Path,
+    policy: &RetryPolicy,
+) -> Result<SweepOutcome> {
+    use crate::robust::shutdown;
     grid.validate()?;
     ensure!(
         opts.dt_s.is_finite() && opts.dt_s > 0.0,
@@ -451,18 +532,6 @@ pub fn run_sweep_checkpointed(
     manifest.header = Some(summary_header().to_string());
     let restored = manifest.done_count();
     let todo: Vec<usize> = (0..cells.len()).filter(|&i| !manifest.is_done(&cells[i].id)).collect();
-    // Shared-artifact hoist, restricted to configs a re-run cell needs.
-    let mut needed: Vec<String> = Vec::new();
-    for &i in &todo {
-        for id in cells[i].spec.server_config.config_ids_used(&cells[i].spec.topology) {
-            if !needed.contains(&id) {
-                needed.push(id);
-            }
-        }
-    }
-    for id in needed {
-        gen.prepare(&id).with_context(|| format!("preparing config '{id}'"))?;
-    }
     let keeper = ManifestKeeper::new(manifest, mpath.clone())?;
     let n = todo.len();
     let outer = match opts.scenario_workers {
@@ -477,6 +546,12 @@ pub fn run_sweep_checkpointed(
     let gen_ro: &Generator = gen;
     let results = opts.executor.map_results(n, outer, |k| -> Result<Option<CellResult>> {
         let cell = &cells[todo[k]];
+        // A cell not yet started when shutdown arrives never starts: it
+        // stays `pending` in the (already durable) manifest and carries
+        // no attempt charge — `--resume` picks it up.
+        if shutdown::requested() {
+            return Ok(None);
+        }
         let prior = keeper.with(|m| m.attempts(&cell.id));
         match run_isolated(policy, prior, |deadline| {
             failpoint::hit("sweep.cell", &cell.id)?;
@@ -487,6 +562,10 @@ pub fn run_sweep_checkpointed(
                 keeper.update(|m| m.mark_done(&cell.id, attempts, row, exports))?;
                 Ok(Some(result))
             }
+            // Interrupted mid-cell (the deadline check at a window
+            // boundary surfaced the shutdown request): not a failure —
+            // the cell stays pending, uncharged, for --resume.
+            Isolated::Failed { reason, .. } if shutdown::is_interrupt(&reason) => Ok(None),
             Isolated::Failed { attempts, reason } => {
                 keeper.update(|m| m.mark_failed(&cell.id, attempts, reason))?;
                 Ok(None)
@@ -521,10 +600,17 @@ pub fn run_sweep_checkpointed(
             })
         })
         .collect();
+    let interrupted = cells
+        .iter()
+        .filter(|c| {
+            manifest.cells.get(&c.id).is_some_and(|st| st.status == CellStatus::Pending)
+        })
+        .count();
     Ok(SweepOutcome {
         report: SweepReport { grid: grid.clone(), dt_s: opts.dt_s, cells: executed },
         restored,
         failed,
+        interrupted,
         summary_csv: summary,
         manifest_path: mpath,
     })

@@ -1,0 +1,178 @@
+//! A deliberately minimal HTTP/1.1 layer: exactly what the planning
+//! service needs and nothing more.
+//!
+//! Scope: request-line + headers + `Content-Length` bodies in;
+//! fixed-length JSON responses and chunked NDJSON streams out; one
+//! request per connection (`Connection: close`). No keep-alive, no
+//! `Transfer-Encoding` request bodies, no TLS — the service fronts a
+//! trusted planning network, and the no-new-dependencies rule (see
+//! Cargo.toml) prices a real HTTP stack out. Caps: 64 KiB of headers,
+//! 16 MiB of body.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Header section cap — a request line plus a handful of headers.
+const MAX_HEAD: usize = 64 * 1024;
+/// Body cap — a site-sweep grid JSON is a few KiB; 16 MiB is generous.
+const MAX_BODY: usize = 16 * 1024 * 1024;
+
+/// One parsed request. `path` excludes any query string.
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Read and parse one request from the stream (which the caller has set
+/// blocking, with a read timeout).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    // Accumulate until the blank line that ends the header section.
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            bail!("request header section exceeds {MAX_HEAD} bytes");
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).context("reading request")?;
+        if n == 0 {
+            bail!("connection closed mid-request");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end]).context("request head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (Some(method), Some(target)) = (parts.next(), parts.next()) else {
+        bail!("malformed request line '{request_line}'");
+    };
+    let path = target.split('?').next().unwrap_or(target).to_string();
+
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        if name == "content-length" {
+            content_length = value.parse().with_context(|| format!("content-length '{value}'"))?;
+        } else if name == "transfer-encoding" {
+            bail!("transfer-encoding request bodies are not supported");
+        }
+    }
+    if content_length > MAX_BODY {
+        bail!("request body exceeds {MAX_BODY} bytes");
+    }
+
+    // The body: whatever followed the blank line, topped up to length.
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let mut chunk = [0u8; 16 * 1024];
+        let n = stream.read(&mut chunk).context("reading request body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Request { method: method.to_string(), path, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response with a JSON body.
+pub fn respond_json(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &crate::util::json::Json,
+) -> Result<()> {
+    let text = crate::util::json::to_string_pretty(body);
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        reason(status),
+        text.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(text.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Error response: `{"error": msg}`. Write failures are swallowed — the
+/// peer may already be gone, and there is nobody left to tell.
+pub fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) {
+    let body = crate::util::json::obj([(
+        "error",
+        crate::util::json::Json::Str(msg.to_string()),
+    )]);
+    let _ = respond_json(stream, status, &body);
+}
+
+/// An incremental `Transfer-Encoding: chunked` NDJSON response: one
+/// chunk per line, flushed per line so windows reach the client as the
+/// engine emits them.
+pub struct ChunkedWriter<'a> {
+    stream: &'a mut TcpStream,
+    finished: bool,
+}
+
+impl<'a> ChunkedWriter<'a> {
+    /// Send the response head; the body follows via [`Self::write_line`].
+    pub fn begin(stream: &'a mut TcpStream) -> Result<ChunkedWriter<'a>> {
+        stream.write_all(
+            b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+              Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+        )?;
+        Ok(ChunkedWriter { stream, finished: false })
+    }
+
+    /// One NDJSON line (newline appended here), as one chunk.
+    pub fn write_line(&mut self, line: &str) -> Result<()> {
+        let payload = format!("{line}\n");
+        let chunk = format!("{:x}\r\n", payload.len());
+        self.stream.write_all(chunk.as_bytes())?;
+        self.stream.write_all(payload.as_bytes())?;
+        self.stream.write_all(b"\r\n")?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Terminal zero-length chunk.
+    pub fn finish(mut self) -> Result<()> {
+        self.stream.write_all(b"0\r\n\r\n")?;
+        self.stream.flush()?;
+        self.finished = true;
+        Ok(())
+    }
+}
+
+impl Drop for ChunkedWriter<'_> {
+    fn drop(&mut self) {
+        if !self.finished {
+            // Best-effort terminator so a panicking handler still leaves
+            // the client a well-formed (if truncated) stream.
+            let _ = self.stream.write_all(b"0\r\n\r\n");
+            let _ = self.stream.flush();
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! The live planning service: `powertrace serve`.
+//!
+//! Batch studies cold-start artifact loading, classifier construction,
+//! and weight packing on every CLI invocation. This module keeps all of
+//! that warm in one long-running process and exposes the engine over
+//! HTTP, so many concurrent planning studies amortize one prepared-config
+//! cache (the ROADMAP's "Live-traffic service mode"):
+//!
+//! * **One API.** The request body of `POST /v1/runs` is exactly the
+//!   [`RunRequest`](crate::api::RunRequest) JSON envelope — the same
+//!   `{"kind", "spec", "options"}` shape the library and CLI use, over
+//!   the unchanged scenario/grid/site file schemas. Nothing is served
+//!   that cannot also be run in batch.
+//! * **Streaming, not polling.** Runs stream back incrementally as
+//!   NDJSON: one line per [`SinkEvent`](sink::SinkEvent) as the engine's
+//!   windows pass through a [`ChannelSink`](sink::ChannelSink), then a
+//!   terminal `done`/`error` line. Replaying the events reconstructs the
+//!   byte-identical [`DirSink`](crate::export::DirSink) directory of the
+//!   same request (pinned by `rust/tests/serve_integration.rs`).
+//! * **Shared warm generator.** One [`Generator`] behind an `RwLock`:
+//!   requests prepare missing configs under a short write lock, then
+//!   execute concurrently under read locks
+//!   ([`execute_prepared`](crate::api::execute_prepared) takes
+//!   `&Generator`). A [`ArtifactRefresher`](refresh::ArtifactRefresher)
+//!   swaps in retrained artifacts between runs and re-warms the cache.
+//! * **Bounded.** A counting semaphore caps concurrent runs
+//!   (`--max-runs`); excess requests queue on accept threads. SIGINT /
+//!   SIGTERM drain through [`crate::robust::shutdown`], so a served
+//!   checkpointed run leaves a consistent resumable manifest.
+//!
+//! Endpoints: `POST /v1/runs`, `GET /v1/runs/:id`, `GET /healthz`,
+//! `GET /v1/catalog` — see README §"Planning service" for the table and
+//! curl examples, and `docs/ARCHITECTURE.md` §"Service mode" for the
+//! design.
+//!
+//! Everything here is behind the `serve` cargo feature (implies `host`);
+//! the core engine stays I/O-free.
+
+pub mod http;
+pub mod refresh;
+pub mod registry;
+mod routes;
+pub mod sink;
+
+use crate::coordinator::Generator;
+use anyhow::{Context, Result};
+use refresh::ArtifactRefresher;
+use registry::RunRegistry;
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Service configuration (CLI flags map 1:1).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:8791`. Port 0 picks a free port
+    /// (tests); [`Server::local_addr`] reports the resolved one.
+    pub addr: String,
+    /// Concurrent-run cap; further requests queue.
+    pub max_concurrent_runs: usize,
+    /// When set, `sweep`/`site_sweep` requests execute *checkpointed*
+    /// into `<runs_dir>/<run-id>/` — durable manifest + exports on disk,
+    /// summary over the wire — and `GET /v1/runs/:id` folds the manifest
+    /// into the status body. When unset those kinds stream like the rest.
+    pub runs_dir: Option<PathBuf>,
+    /// Artifact-store re-check cadence; 0 disables the refresher.
+    pub refresh_interval_s: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:8791".to_string(),
+            max_concurrent_runs: 2,
+            runs_dir: None,
+            refresh_interval_s: 0.0,
+        }
+    }
+}
+
+/// Everything a connection handler needs, shared across threads.
+pub(crate) struct ServerState {
+    pub gen: Arc<RwLock<Generator>>,
+    pub registry: RunRegistry,
+    pub slots: Semaphore,
+    pub runs_dir: Option<PathBuf>,
+    pub refresh_interval_s: f64,
+    /// Present iff the refresher is running.
+    pub refresh_count: Option<Arc<ArtifactRefresher>>,
+}
+
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    refresher: Option<Arc<ArtifactRefresher>>,
+}
+
+impl Server {
+    /// Bind the listener and start the refresher (if configured). The
+    /// generator should arrive warm (configs prepared) for best first-hit
+    /// latency, but any missing config is prepared on demand per request.
+    pub fn new(gen: Generator, cfg: &ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let store_root = gen.store.root.clone();
+        let gen = Arc::new(RwLock::new(gen));
+        let refresher = if cfg.refresh_interval_s > 0.0 {
+            Some(Arc::new(ArtifactRefresher::start(
+                gen.clone(),
+                store_root,
+                cfg.refresh_interval_s,
+            )))
+        } else {
+            None
+        };
+        if let Some(dir) = &cfg.runs_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating runs dir {}", dir.display()))?;
+        }
+        let state = Arc::new(ServerState {
+            gen,
+            registry: RunRegistry::new(),
+            slots: Semaphore::new(cfg.max_concurrent_runs.max(1)),
+            runs_dir: cfg.runs_dir.clone(),
+            refresh_interval_s: cfg.refresh_interval_s,
+            refresh_count: refresher.clone(),
+        });
+        Ok(Server { listener, state, refresher })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept loop: one thread per connection, polled non-blocking so the
+    /// `stop` flag and [`crate::robust::shutdown`] drain promptly. Blocks
+    /// until stopped; connection threads are joined on the way out.
+    pub fn run(mut self, stop: Arc<AtomicBool>) -> Result<()> {
+        self.listener.set_nonblocking(true).context("nonblocking listener")?;
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        while !stop.load(Ordering::Relaxed) && !crate::robust::shutdown::requested() {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let state = self.state.clone();
+                    conns.push(std::thread::spawn(move || {
+                        routes::handle(&state, stream);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => return Err(e).context("accepting connection"),
+            }
+            conns.retain(|h| !h.is_finished());
+        }
+        // Drain: in-flight requests finish (their manifests flush), new
+        // connections are no longer accepted.
+        for h in conns {
+            let _ = h.join();
+        }
+        // The refresher stops via Drop once the last Arc (ours here,
+        // plus the one inside `state`) goes away as `self` is consumed.
+        drop(self.refresher.take());
+        Ok(())
+    }
+
+    /// Run on a background thread; the handle stops + joins on demand
+    /// (and on drop). The in-process harness tests use this.
+    pub fn spawn(self) -> Result<ServerHandle> {
+        let addr = self.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = stop.clone();
+        let handle = std::thread::spawn(move || self.run(thread_stop));
+        Ok(ServerHandle { addr, stop, handle: Some(handle) })
+    }
+}
+
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the accept loop and join it (≤ one poll interval + the
+    /// longest in-flight request).
+    pub fn stop(mut self) -> Result<()> {
+        self.shutdown()
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.stop.store(true, Ordering::Relaxed);
+        match self.handle.take() {
+            Some(h) => h.join().map_err(|_| anyhow::anyhow!("server thread panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+/// A counting semaphore (std has none): `acquire` blocks while all
+/// permits are out; the guard releases on drop, including on panic.
+pub(crate) struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    pub fn new(n: usize) -> Semaphore {
+        Semaphore { permits: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    pub fn acquire(&self) -> SlotGuard<'_> {
+        let mut permits = self.permits.lock().unwrap_or_else(|e| e.into_inner());
+        while *permits == 0 {
+            permits = self.cv.wait(permits).unwrap_or_else(|e| e.into_inner());
+        }
+        *permits -= 1;
+        SlotGuard { sem: self }
+    }
+}
+
+pub(crate) struct SlotGuard<'a> {
+    sem: &'a Semaphore,
+}
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        let mut permits = self.sem.permits.lock().unwrap_or_else(|e| e.into_inner());
+        *permits += 1;
+        self.sem.cv.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn semaphore_bounds_concurrency() {
+        use std::sync::atomic::AtomicUsize;
+        let sem = Arc::new(Semaphore::new(2));
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let (sem, live, peak) = (sem.clone(), live.clone(), peak.clone());
+            handles.push(std::thread::spawn(move || {
+                let _slot = sem.acquire();
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(10));
+                live.fetch_sub(1, Ordering::SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {}", peak.load(Ordering::SeqCst));
+    }
+}

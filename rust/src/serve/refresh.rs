@@ -1,0 +1,137 @@
+//! Background artifact refresh: pick up retrained artifacts without
+//! restarting the service or cold-starting its caches.
+//!
+//! A watcher thread fingerprints the artifact store directory every
+//! `interval_s` (manifest bytes + sorted file name/length listing — no
+//! inotify, no clock on file contents). On change it reopens the store
+//! and calls [`Generator::refresh_store`] under the server's write lock:
+//! in-flight runs finish on the old prepared configs they hold
+//! (`Arc`-shared, so nothing is pulled out from under them), the caches
+//! are cleared, and the previously-warm config set is re-prepared from
+//! the new bytes before the lock is released — the next request sees
+//! fresh artifacts and a warm cache.
+
+use crate::artifacts::ArtifactStore;
+use crate::coordinator::Generator;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+pub struct ArtifactRefresher {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    /// Completed refreshes, for `healthz`.
+    refreshes: Arc<AtomicU64>,
+}
+
+impl ArtifactRefresher {
+    /// Start the watcher. `root` is the store directory the generator
+    /// was opened on; `interval_s > 0` (callers gate the zero=off case).
+    pub fn start(
+        gen: Arc<RwLock<Generator>>,
+        root: PathBuf,
+        interval_s: f64,
+    ) -> ArtifactRefresher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let refreshes = Arc::new(AtomicU64::new(0));
+        let thread_stop = stop.clone();
+        let thread_refreshes = refreshes.clone();
+        let handle = std::thread::spawn(move || {
+            let mut last = fingerprint(&root);
+            while !sleep_interval(&thread_stop, interval_s) {
+                let now = fingerprint(&root);
+                // Unreadable store (mid-rewrite, say): keep the old
+                // fingerprint and try again next interval.
+                let Some(fp) = now else { continue };
+                if last == Some(fp) {
+                    continue;
+                }
+                match reopen(&gen, &root) {
+                    Ok(warm) => {
+                        thread_refreshes.fetch_add(1, Ordering::Relaxed);
+                        last = Some(fp);
+                        eprintln!(
+                            "serve: artifact store refreshed ({} config(s) re-prepared)",
+                            warm.len()
+                        );
+                    }
+                    Err(e) => {
+                        // Stay on the old store; retry on the next change.
+                        eprintln!("serve: artifact refresh failed: {e:#}");
+                    }
+                }
+            }
+        });
+        ArtifactRefresher { stop, handle: Some(handle), refreshes }
+    }
+
+    pub fn refresh_count(&self) -> u64 {
+        self.refreshes.load(Ordering::Relaxed)
+    }
+
+    /// Signal and join the watcher (idempotent; also runs on drop).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ArtifactRefresher {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn reopen(gen: &RwLock<Generator>, root: &Path) -> Result<Vec<String>> {
+    let store = ArtifactStore::open(root)?;
+    let mut g = gen.write().unwrap_or_else(|e| e.into_inner());
+    g.refresh_store(store)
+}
+
+/// Sleep `interval_s` in 100 ms slices; true means stop was requested.
+fn sleep_interval(stop: &AtomicBool, interval_s: f64) -> bool {
+    let deadline = Instant::now() + Duration::from_secs_f64(interval_s.max(0.1));
+    while Instant::now() < deadline {
+        if stop.load(Ordering::Relaxed) {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    stop.load(Ordering::Relaxed)
+}
+
+/// Order-independent content fingerprint of a store directory: FNV-1a
+/// over `manifest.json` bytes (which carries per-artifact hashes) plus
+/// the sorted (file name, length) listing for anything the manifest
+/// doesn't cover. `None` when the directory is unreadable.
+fn fingerprint(root: &Path) -> Option<u64> {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let manifest = std::fs::read(root.join("manifest.json")).ok()?;
+    fnv1a(&mut h, &manifest);
+    let mut entries: Vec<(String, u64)> = Vec::new();
+    for entry in std::fs::read_dir(root).ok()? {
+        let entry = entry.ok()?;
+        let meta = entry.metadata().ok()?;
+        if meta.is_file() {
+            entries.push((entry.file_name().to_string_lossy().into_owned(), meta.len()));
+        }
+    }
+    entries.sort();
+    for (name, len) in &entries {
+        fnv1a(&mut h, name.as_bytes());
+        fnv1a(&mut h, &len.to_le_bytes());
+    }
+    Some(h)
+}
+
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100000001b3);
+    }
+}

@@ -1,0 +1,122 @@
+//! The run registry: ids and lifecycle states for every request the
+//! server has accepted, backing `GET /v1/runs/:id` and the `healthz`
+//! active-run gauge.
+//!
+//! Ids are `run-<n>` with a process-lifetime counter — stable, ordered,
+//! and meaningless across restarts (durable identity belongs to the
+//! manifest machinery, keyed by content hash, not to the service).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RunState {
+    Running,
+    Done,
+    Failed(String),
+}
+
+impl RunState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RunState::Running => "running",
+            RunState::Done => "done",
+            RunState::Failed(_) => "failed",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub id: String,
+    /// Wire kind tag (`facility` | `sweep` | `site` | `site_sweep`).
+    pub kind: String,
+    /// The spec's human-facing name.
+    pub name: String,
+    pub state: RunState,
+}
+
+#[derive(Default)]
+pub struct RunRegistry {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    next: u64,
+    runs: BTreeMap<String, RunRecord>,
+}
+
+impl RunRegistry {
+    pub fn new() -> RunRegistry {
+        RunRegistry::default()
+    }
+
+    /// Register an accepted request; returns its fresh `run-<n>` id.
+    pub fn begin(&self, kind: &str, name: &str) -> String {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let id = format!("run-{}", inner.next);
+        inner.next += 1;
+        inner.runs.insert(
+            id.clone(),
+            RunRecord {
+                id: id.clone(),
+                kind: kind.to_string(),
+                name: name.to_string(),
+                state: RunState::Running,
+            },
+        );
+        id
+    }
+
+    pub fn finish(&self, id: &str) {
+        self.set(id, RunState::Done);
+    }
+
+    pub fn fail(&self, id: &str, reason: &str) {
+        self.set(id, RunState::Failed(reason.to_string()));
+    }
+
+    fn set(&self, id: &str, state: RunState) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(rec) = inner.runs.get_mut(id) {
+            rec.state = state;
+        }
+    }
+
+    pub fn get(&self, id: &str) -> Option<RunRecord> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).runs.get(id).cloned()
+    }
+
+    /// Requests currently executing.
+    pub fn active(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .runs
+            .values()
+            .filter(|r| r.state == RunState::Running)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_and_counters() {
+        let reg = RunRegistry::new();
+        let a = reg.begin("site", "tri");
+        let b = reg.begin("sweep", "grid");
+        assert_eq!(a, "run-0");
+        assert_eq!(b, "run-1");
+        assert_eq!(reg.active(), 2);
+        reg.finish(&a);
+        reg.fail(&b, "boom");
+        assert_eq!(reg.active(), 0);
+        assert_eq!(reg.get(&a).unwrap().state, RunState::Done);
+        assert_eq!(reg.get(&b).unwrap().state, RunState::Failed("boom".to_string()));
+        assert!(reg.get("run-99").is_none());
+    }
+}

@@ -1,0 +1,297 @@
+//! Request handlers: the four endpoints, all fronted by the
+//! [`RunRequest`](crate::api::RunRequest) envelope.
+//!
+//! | Endpoint            | Behavior                                          |
+//! |---------------------|---------------------------------------------------|
+//! | `POST /v1/runs`     | Execute a RunRequest; stream NDJSON sink events   |
+//! | `GET /v1/runs/:id`  | Registry state (+ manifest counts when on disk)   |
+//! | `GET /healthz`      | Liveness, prepared configs, active runs, refresh  |
+//! | `GET /v1/catalog`   | Serving configurations the store can synthesize   |
+//!
+//! Error discipline: failures before the response head is sent map to
+//! HTTP status codes (400 malformed request, 404 unknown run, 500
+//! engine error); once a stream is open, failures become a terminal
+//! `{"event":"error"}` NDJSON line — the status line is already gone.
+
+use super::sink::ChannelSink;
+use super::{http, ServerState};
+use crate::api::{self, RunKind, RunRequest};
+use crate::robust::{CellStatus, RunManifest};
+use crate::util::json::{self, Json};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+pub(crate) fn handle(state: &Arc<ServerState>, mut stream: TcpStream) {
+    // A stuck peer must not pin a connection thread forever; runs
+    // themselves stream outbound and are not subject to this timeout.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let req = match http::read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            http::respond_error(&mut stream, 400, &format!("{e:#}"));
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/runs") => post_run(state, &mut stream, &req.body),
+        ("GET", "/healthz") => healthz(state, &mut stream),
+        ("GET", "/v1/catalog") => catalog(state, &mut stream),
+        ("GET", path) if path.strip_prefix("/v1/runs/").is_some() => {
+            let id = path.strip_prefix("/v1/runs/").unwrap_or_default();
+            run_status(state, &mut stream, id);
+        }
+        ("POST" | "GET", _) => http::respond_error(&mut stream, 404, "no such endpoint"),
+        _ => http::respond_error(&mut stream, 405, "method not allowed"),
+    }
+}
+
+fn post_run(state: &Arc<ServerState>, stream: &mut TcpStream, body: &[u8]) {
+    let parsed = std::str::from_utf8(body)
+        .map_err(anyhow::Error::from)
+        .and_then(|s| json::parse(s).map_err(anyhow::Error::from))
+        .and_then(|v| RunRequest::from_json(&v))
+        .and_then(|req| {
+            req.spec.validate()?;
+            Ok(req)
+        });
+    let req = match parsed {
+        Ok(r) => r,
+        Err(e) => {
+            http::respond_error(stream, 400, &format!("invalid RunRequest: {e:#}"));
+            return;
+        }
+    };
+
+    // Bound concurrency *before* touching the generator; excess requests
+    // queue here on their connection thread.
+    let _slot = state.slots.acquire();
+    let run_id = state.registry.begin(req.spec.kind().as_str(), &req.spec.name());
+
+    // Warm any configs this request adds, under a short write lock;
+    // execution below shares the generator read-locked.
+    {
+        let mut g = state.gen.write().unwrap_or_else(|e| e.into_inner());
+        if let Err(e) = api::prepare(&mut g, &req.spec) {
+            state.registry.fail(&run_id, &format!("{e:#}"));
+            http::respond_error(stream, 500, &format!("prepare: {e:#}"));
+            return;
+        }
+    }
+
+    let checkpointed = state.runs_dir.is_some()
+        && matches!(req.spec.kind(), RunKind::Sweep | RunKind::SiteSweep);
+    if checkpointed {
+        run_checkpointed(state, stream, &req, &run_id);
+    } else {
+        run_streamed(state, stream, &req, &run_id);
+    }
+}
+
+/// The streaming path: engine windows → [`ChannelSink`] events → one
+/// NDJSON line each, then a terminal `done`/`error` line.
+fn run_streamed(state: &Arc<ServerState>, stream: &mut TcpStream, req: &RunRequest, run_id: &str) {
+    let mut out = match http::ChunkedWriter::begin(stream) {
+        Ok(w) => w,
+        Err(_) => {
+            state.registry.fail(run_id, "client disconnected before stream start");
+            return;
+        }
+    };
+    let accepted = json::obj([
+        ("event", Json::Str("accepted".to_string())),
+        ("run_id", Json::Str(run_id.to_string())),
+        ("kind", Json::Str(req.spec.kind().as_str().to_string())),
+        ("name", Json::Str(req.spec.name())),
+    ]);
+    let mut client_gone = out.write_line(&json::to_string(&accepted)).is_err();
+
+    let result = std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel();
+        let sink = ChannelSink::new(tx);
+        let worker = scope.spawn(move || {
+            let g = state.gen.read().unwrap_or_else(|e| e.into_inner());
+            api::execute_prepared(&g, req, Some(&sink))
+        });
+        // Drain until the worker drops the sink (its only sender). A
+        // write failure means the client went away: stop draining and
+        // drop the receiver, so the sink's next send errors and aborts
+        // the engine — a dead connection must not burn generator time.
+        if !client_gone {
+            for ev in rx.iter() {
+                if out.write_line(&json::to_string(&ev.to_json())).is_err() {
+                    client_gone = true;
+                    break;
+                }
+            }
+        }
+        drop(rx);
+        worker.join()
+    });
+
+    let terminal = match result {
+        Ok(Ok(_outcome)) => {
+            state.registry.finish(run_id);
+            json::obj([
+                ("event", Json::Str("done".to_string())),
+                ("run_id", Json::Str(run_id.to_string())),
+            ])
+        }
+        Ok(Err(e)) => {
+            state.registry.fail(run_id, &format!("{e:#}"));
+            json::obj([
+                ("event", Json::Str("error".to_string())),
+                ("run_id", Json::Str(run_id.to_string())),
+                ("message", Json::Str(format!("{e:#}"))),
+            ])
+        }
+        Err(_) => {
+            state.registry.fail(run_id, "run worker panicked");
+            json::obj([
+                ("event", Json::Str("error".to_string())),
+                ("run_id", Json::Str(run_id.to_string())),
+                ("message", Json::Str("run worker panicked".to_string())),
+            ])
+        }
+    };
+    if !client_gone {
+        let _ = out.write_line(&json::to_string(&terminal));
+        let _ = out.finish();
+    }
+}
+
+/// The durable path (`--runs-dir` + a sweep kind): checkpointed
+/// execution into `<runs_dir>/<run-id>/` — crash-safe manifest, atomic
+/// exports, `--resume`-able from the CLI — with the summary returned in
+/// one JSON body rather than streamed.
+fn run_checkpointed(
+    state: &Arc<ServerState>,
+    stream: &mut TcpStream,
+    req: &RunRequest,
+    run_id: &str,
+) {
+    let dir = state.runs_dir.as_ref().expect("checkpointed implies runs_dir").join(run_id);
+    let result = {
+        let g = state.gen.read().unwrap_or_else(|e| e.into_inner());
+        api::execute_checkpointed_prepared(&g, req, &dir)
+    };
+    match result {
+        Ok(outcome) => {
+            if outcome.failed().is_empty() {
+                state.registry.finish(run_id);
+            } else {
+                state.registry.fail(
+                    run_id,
+                    &format!("{} cell(s) quarantined", outcome.failed().len()),
+                );
+            }
+            let body = json::obj([
+                ("run_id", Json::Str(run_id.to_string())),
+                ("dir", Json::Str(dir.display().to_string())),
+                ("restored", Json::Num(outcome.restored() as f64)),
+                ("failed", Json::Num(outcome.failed().len() as f64)),
+                ("interrupted", Json::Num(outcome.interrupted() as f64)),
+                ("summary_csv", Json::Str(outcome.summary_csv().to_string())),
+            ]);
+            let _ = http::respond_json(stream, 200, &body);
+        }
+        Err(e) => {
+            state.registry.fail(run_id, &format!("{e:#}"));
+            http::respond_error(stream, 500, &format!("{e:#}"));
+        }
+    }
+}
+
+fn run_status(state: &Arc<ServerState>, stream: &mut TcpStream, id: &str) {
+    let Some(rec) = state.registry.get(id) else {
+        http::respond_error(stream, 404, &format!("unknown run '{id}'"));
+        return;
+    };
+    let mut fields = vec![
+        ("run_id", Json::Str(rec.id.clone())),
+        ("kind", Json::Str(rec.kind.clone())),
+        ("name", Json::Str(rec.name.clone())),
+        ("state", Json::Str(rec.state.as_str().to_string())),
+    ];
+    if let super::registry::RunState::Failed(reason) = &rec.state {
+        fields.push(("error", Json::Str(reason.clone())));
+    }
+    // Durable runs carry a PR-7 manifest: fold its cell ledger in.
+    if let Some(runs_dir) = &state.runs_dir {
+        let mpath = runs_dir.join(id).join("manifest.json");
+        if mpath.exists() {
+            match RunManifest::load(&mpath) {
+                Ok(m) => {
+                    let count = |s: CellStatus| {
+                        m.cells.values().filter(|c| c.status == s).count() as f64
+                    };
+                    fields.push((
+                        "manifest",
+                        json::obj([
+                            ("path", Json::Str(mpath.display().to_string())),
+                            ("grid_hash", Json::Str(m.grid_hash.clone())),
+                            ("done", Json::Num(count(CellStatus::Done))),
+                            ("failed", Json::Num(count(CellStatus::Failed))),
+                            ("pending", Json::Num(count(CellStatus::Pending))),
+                        ]),
+                    ));
+                }
+                Err(e) => fields.push(("manifest_error", Json::Str(format!("{e:#}")))),
+            }
+        }
+    }
+    let _ = http::respond_json(stream, 200, &json::obj(fields));
+}
+
+fn healthz(state: &Arc<ServerState>, stream: &mut TcpStream) {
+    let (prepared, store_root) = {
+        let g = state.gen.read().unwrap_or_else(|e| e.into_inner());
+        (g.prepared_ids(), g.store.root.display().to_string())
+    };
+    let refresh = match &state.refresh_count {
+        Some(r) => json::obj([
+            ("interval_s", Json::Num(state.refresh_interval_s)),
+            ("count", Json::Num(r.refresh_count() as f64)),
+        ]),
+        None => Json::Null,
+    };
+    let body = json::obj([
+        ("status", Json::Str("ok".to_string())),
+        ("store_root", Json::Str(store_root)),
+        (
+            "prepared_configs",
+            Json::Arr(prepared.into_iter().map(Json::Str).collect()),
+        ),
+        ("active_runs", Json::Num(state.registry.active() as f64)),
+        ("refresh", refresh),
+    ]);
+    let _ = http::respond_json(stream, 200, &body);
+}
+
+fn catalog(state: &Arc<ServerState>, stream: &mut TcpStream) {
+    let g = state.gen.read().unwrap_or_else(|e| e.into_inner());
+    let configs: Vec<Json> = g
+        .cat
+        .configs
+        .iter()
+        .map(|c| {
+            json::obj([
+                ("id", Json::Str(c.id.clone())),
+                ("model", Json::Str(c.model.clone())),
+                ("gpu", Json::Str(c.gpu.clone())),
+                ("tp", Json::Num(c.tp as f64)),
+                ("n_gpus_server", Json::Num(c.n_gpus_server as f64)),
+            ])
+        })
+        .collect();
+    let datasets: Vec<Json> = g.cat.datasets.keys().cloned().map(Json::Str).collect();
+    let prepared: Vec<Json> = g.prepared_ids().into_iter().map(Json::Str).collect();
+    drop(g);
+    let body = json::obj([
+        ("configs", Json::Arr(configs)),
+        ("datasets", Json::Arr(datasets)),
+        ("prepared", Json::Arr(prepared)),
+    ]);
+    let _ = http::respond_json(stream, 200, &body);
+}

@@ -1,0 +1,186 @@
+//! The streaming bridge: a [`TraceSink`] whose writes become channel
+//! events instead of files.
+//!
+//! The serve layer's byte-identity contract hangs on this adapter being
+//! *transparent*: the engine calls exactly the same `open`/`append`/
+//! `close`/`put` sequence it would against a
+//! [`DirSink`](crate::export::DirSink), and every call is forwarded as
+//! one [`SinkEvent`] carrying the same path and the same bytes. The
+//! HTTP handler drains the channel into NDJSON lines; a client that
+//! replays the events (accumulate `append`s per path, publish at
+//! `close`, take `file` verbatim) reconstructs the DirSink directory
+//! byte-for-byte — which is what `rust/tests/serve_integration.rs` pins.
+//!
+//! A send fails only when the receiver is gone (client disconnected);
+//! the error propagates up through the engine and aborts the run — a
+//! dropped connection must not keep burning generator time.
+
+use crate::export::{TraceOut, TraceSink};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+/// One sink call, reified. `data` is always the exact bytes the engine
+/// wrote (CSV/JSON text in practice).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SinkEvent {
+    /// `TraceSink::open(path)` — a streamed file begins.
+    Open { path: String },
+    /// `TraceOut::append` on an open file.
+    Append { path: String, data: Vec<u8> },
+    /// `TraceOut::close` — the streamed file is complete and published.
+    Close { path: String },
+    /// `TraceSink::put` — a complete one-shot file.
+    File { path: String, data: Vec<u8> },
+}
+
+impl SinkEvent {
+    /// The NDJSON wire form (one line per event; `data` fields carry the
+    /// engine's text exports, which are UTF-8 by construction).
+    pub fn to_json(&self) -> Json {
+        match self {
+            SinkEvent::Open { path } => json::obj([
+                ("event", Json::Str("open".to_string())),
+                ("path", Json::Str(path.clone())),
+            ]),
+            SinkEvent::Append { path, data } => json::obj([
+                ("event", Json::Str("append".to_string())),
+                ("path", Json::Str(path.clone())),
+                ("data", Json::Str(String::from_utf8_lossy(data).into_owned())),
+            ]),
+            SinkEvent::Close { path } => json::obj([
+                ("event", Json::Str("close".to_string())),
+                ("path", Json::Str(path.clone())),
+            ]),
+            SinkEvent::File { path, data } => json::obj([
+                ("event", Json::Str("file".to_string())),
+                ("path", Json::Str(path.clone())),
+                ("data", Json::Str(String::from_utf8_lossy(data).into_owned())),
+            ]),
+        }
+    }
+}
+
+/// [`TraceSink`] that forwards every write as a [`SinkEvent`].
+///
+/// The `Sender` sits behind a `Mutex` only because `TraceSink: Sync`
+/// while `mpsc::Sender` is `!Sync`; each streamed file clones its own
+/// sender at `open` time, so concurrent facility streams never contend
+/// on it mid-window.
+pub struct ChannelSink {
+    tx: Mutex<Sender<SinkEvent>>,
+}
+
+impl ChannelSink {
+    pub fn new(tx: Sender<SinkEvent>) -> ChannelSink {
+        ChannelSink { tx: Mutex::new(tx) }
+    }
+
+    fn send(&self, ev: SinkEvent) -> Result<()> {
+        let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+        tx.send(ev).map_err(|_| anyhow!("stream client disconnected"))
+    }
+}
+
+impl TraceSink for ChannelSink {
+    fn open(&self, path: &str) -> Result<Box<dyn TraceOut>> {
+        self.send(SinkEvent::Open { path: path.to_string() })?;
+        let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        Ok(Box::new(ChannelOut { path: path.to_string(), tx }))
+    }
+
+    fn put(&self, path: &str, bytes: &[u8]) -> Result<()> {
+        self.send(SinkEvent::File { path: path.to_string(), data: bytes.to_vec() })
+    }
+}
+
+struct ChannelOut {
+    path: String,
+    tx: Sender<SinkEvent>,
+}
+
+impl TraceOut for ChannelOut {
+    fn append(&mut self, bytes: &[u8]) -> Result<()> {
+        self.tx
+            .send(SinkEvent::Append { path: self.path.clone(), data: bytes.to_vec() })
+            .map_err(|_| anyhow!("stream client disconnected"))
+    }
+
+    fn close(self: Box<Self>) -> Result<()> {
+        self.tx
+            .send(SinkEvent::Close { path: self.path })
+            .map_err(|_| anyhow!("stream client disconnected"))
+    }
+}
+
+/// Replay a drained event stream into (path → published bytes) — the
+/// client-side reconstruction rule, used by tests and documented for API
+/// consumers: bytes equal what a [`DirSink`](crate::export::DirSink)
+/// run of the same request would have on disk.
+pub fn reconstruct(events: &[SinkEvent]) -> std::collections::BTreeMap<String, Vec<u8>> {
+    use std::collections::BTreeMap;
+    let mut open: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+    let mut published: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+    for ev in events {
+        match ev {
+            SinkEvent::Open { path } => {
+                open.insert(path.clone(), Vec::new());
+            }
+            SinkEvent::Append { path, data } => {
+                open.entry(path.clone()).or_default().extend_from_slice(data);
+            }
+            SinkEvent::Close { path } => {
+                if let Some(bytes) = open.remove(path) {
+                    published.insert(path.clone(), bytes);
+                }
+            }
+            SinkEvent::File { path, data } => {
+                published.insert(path.clone(), data.clone());
+            }
+        }
+    }
+    published
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::export::MemSink;
+    use std::sync::mpsc;
+
+    /// The same scripted write sequence through ChannelSink-reconstruct
+    /// and MemSink publishes identical bytes — the transparency contract
+    /// in miniature.
+    #[test]
+    fn channel_events_reconstruct_to_memsink_bytes() {
+        let script = |sink: &dyn TraceSink| -> Result<()> {
+            let mut a = sink.open("cell/series.csv")?;
+            a.append(b"t,w\n")?;
+            a.append(b"0,100\n")?;
+            a.close()?;
+            sink.put("summary.csv", b"id,peak\nc0,42\n")?;
+            let b = sink.open("cell/abandoned.csv")?;
+            drop(b); // never closed: must not publish
+            Ok(())
+        };
+
+        let mem = MemSink::new();
+        script(&mem).unwrap();
+
+        let (tx, rx) = mpsc::channel();
+        let chan = ChannelSink::new(tx);
+        script(&chan).unwrap();
+        drop(chan);
+        let events: Vec<SinkEvent> = rx.iter().collect();
+        let files = reconstruct(&events);
+
+        assert_eq!(files.keys().collect::<Vec<_>>(), mem.paths().iter().collect::<Vec<_>>());
+        for path in mem.paths() {
+            assert_eq!(files[&path], mem.get(&path).unwrap(), "bytes differ at {path}");
+        }
+        // Event stream shape: open precedes append precedes close.
+        assert_eq!(events[0], SinkEvent::Open { path: "cell/series.csv".into() });
+        assert!(matches!(events.last(), Some(SinkEvent::Open { .. })));
+    }
+}

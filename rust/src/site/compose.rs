@@ -202,14 +202,17 @@ pub fn prepare_site(gen: &mut Generator, spec: &SiteSpec) -> Result<()> {
 /// window-by-window and writes `site_summary.csv` + `site_spec.json` on
 /// completion. Requires the native backend (windowed generation).
 #[cfg(feature = "host")]
+#[deprecated(since = "0.2.0", note = "route through crate::api::execute with RunSpec::Site")]
 pub fn run_site(
     gen: &mut Generator,
     spec: &SiteSpec,
     opts: &SiteOptions,
     out_dir: Option<&Path>,
 ) -> Result<SiteReport> {
+    spec.validate()?;
+    prepare_site(gen, spec)?;
     let sink = out_dir.map(DirSink::new);
-    run_site_sink(gen, spec, opts, sink.as_ref().map(|s| s as &dyn TraceSink))
+    run_site_inner(gen, spec, opts, sink.as_ref().map(|s| s as &dyn TraceSink), None)
 }
 
 /// [`run_site`] against an already-prepared shared generator (see
@@ -217,6 +220,10 @@ pub fn run_site(
 /// out without exclusive access. Fails inside generation if a facility
 /// references a configuration that was never prepared.
 #[cfg(feature = "host")]
+#[deprecated(
+    since = "0.2.0",
+    note = "route through crate::api::execute_prepared with RunSpec::Site"
+)]
 pub fn run_site_prepared(
     gen: &Generator,
     spec: &SiteSpec,
@@ -224,13 +231,14 @@ pub fn run_site_prepared(
     out_dir: Option<&Path>,
 ) -> Result<SiteReport> {
     let sink = out_dir.map(DirSink::new);
-    run_site_prepared_sink(gen, spec, opts, sink.as_ref().map(|s| s as &dyn TraceSink))
+    run_site_inner(gen, spec, opts, sink.as_ref().map(|s| s as &dyn TraceSink), None)
 }
 
 /// [`run_site`] with exports routed through an arbitrary [`TraceSink`]
 /// (`site_load.csv`, `site_summary.csv`, `site_spec.json` at the sink
 /// root) — the embedding entry point, available without the `host`
 /// feature.
+#[deprecated(since = "0.2.0", note = "route through crate::api::execute with RunSpec::Site")]
 pub fn run_site_sink(
     gen: &mut Generator,
     spec: &SiteSpec,
@@ -242,8 +250,12 @@ pub fn run_site_sink(
     run_site_inner(gen, spec, opts, sink, None)
 }
 
-/// [`run_site_prepared`] with exports routed through an arbitrary
-/// [`TraceSink`]; see [`run_site_sink`].
+/// [`run_site`] over an already-prepared generator with exports routed
+/// through an arbitrary [`TraceSink`]; see [`run_site_sink`].
+#[deprecated(
+    since = "0.2.0",
+    note = "route through crate::api::execute_prepared with RunSpec::Site"
+)]
 pub fn run_site_prepared_sink(
     gen: &Generator,
     spec: &SiteSpec,

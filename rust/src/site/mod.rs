@@ -44,9 +44,12 @@ pub mod overlay;
 pub mod spec;
 pub mod sweep;
 
-pub use compose::{
-    prepare_site, run_site_prepared_sink, run_site_sink, FacilityReport, SiteOptions, SiteReport,
-};
+// The deprecated run_* entry points stay re-exported for source compat;
+// new code routes through `crate::api`.
+#[allow(deprecated)]
+pub use compose::{run_site_prepared_sink, run_site_sink};
+pub use compose::{prepare_site, FacilityReport, SiteOptions, SiteReport};
+#[allow(deprecated)]
 #[cfg(feature = "host")]
 pub use compose::{run_site, run_site_prepared};
 pub use metrics::{
@@ -57,7 +60,8 @@ pub use spec::{
     FacilityKind, FacilitySpec, SiteSpec, TrainingSpec, DEFAULT_UTILITY_INTERVALS_S,
 };
 pub use sweep::{sweep_summary_csv, SiteGrid, SiteVariant};
+#[allow(deprecated)]
 #[cfg(feature = "host")]
-pub use sweep::{
-    run_site_sweep, run_site_sweep_checkpointed, SiteSweepOutcome, SITE_SWEEP_MANIFEST,
-};
+pub use sweep::{run_site_sweep, run_site_sweep_checkpointed};
+#[cfg(feature = "host")]
+pub use sweep::{SiteSweepOutcome, SITE_SWEEP_MANIFEST};

@@ -32,18 +32,21 @@
 //! with them, ids extend to `p<i>-s<seed>-b<j>-c<k>`.
 
 #[cfg(feature = "host")]
-use super::compose::{prepare_site, run_site_inner, run_site_prepared};
+use super::compose::prepare_site;
+use super::compose::run_site_inner;
 use super::compose::{SiteOptions, SiteReport};
 use super::metrics::SeriesSummary;
 use super::overlay::OverlaySpec;
 use super::spec::SiteSpec;
-#[cfg(feature = "host")]
 use crate::coordinator::Generator;
 use crate::export::csv_field;
 #[cfg(feature = "host")]
-use crate::export::{DirSink, TraceSink};
+use crate::export::DirSink;
+use crate::export::{ScopedSink, TraceSink};
 #[cfg(feature = "host")]
 use crate::robust::manifest::content_hash;
+#[cfg(feature = "host")]
+use crate::robust::shutdown;
 #[cfg(feature = "host")]
 use crate::robust::{
     failpoint, fsx, run_isolated, CellStatus, ExportRecord, Isolated, ManifestKeeper, RetryPolicy,
@@ -52,7 +55,6 @@ use crate::robust::{
 #[cfg(feature = "host")]
 use crate::scenarios::QuarantinedCell;
 use crate::util::json::{self, Json};
-#[cfg(feature = "host")]
 use crate::util::threadpool::parallel_map_results;
 use anyhow::{bail, Context, Result};
 #[cfg(feature = "host")]
@@ -280,6 +282,7 @@ impl SiteGrid {
 /// entry point still fails fast on the first bad variant. For quarantine
 /// semantics and crash-safe resume, use [`run_site_sweep_checkpointed`].
 #[cfg(feature = "host")]
+#[deprecated(since = "0.2.0", note = "route through crate::api::execute with RunSpec::SiteSweep")]
 pub fn run_site_sweep(
     gen: &mut Generator,
     grid: &SiteGrid,
@@ -287,28 +290,53 @@ pub fn run_site_sweep(
     out_dir: Option<&Path>,
 ) -> Result<Vec<(SiteVariant, SiteReport)>> {
     grid.validate()?;
-    if let Some(dir) = out_dir {
-        std::fs::create_dir_all(dir)?;
-    }
     // Variants differ only in phases, seeds, and site-level overlays —
     // never in server configurations — so preparing the base site covers
     // every variant, and the fan-out can share a read-only generator.
     prepare_site(gen, &grid.base)?;
-    let gen_ro: &Generator = gen;
+    match out_dir {
+        Some(dir) => {
+            std::fs::create_dir_all(dir)?;
+            let sink = DirSink::new(dir);
+            site_sweep_prepared_sink(gen, grid, opts, Some(&sink))
+        }
+        None => site_sweep_prepared_sink(gen, grid, opts, None),
+    }
+}
+
+/// [`run_site_sweep`] over an already-prepared shared generator (see
+/// [`prepare_site`]), exports routed through an arbitrary [`TraceSink`] —
+/// the `pub(crate)` engine behind [`crate::api::execute_prepared`] and
+/// the serve layer. Each variant exports under `<variant_id>/` via a
+/// [`ScopedSink`]; `site_sweep_summary.csv` + `site_sweep.json` land at
+/// the sink root, byte-identical to the directory-backed layout.
+pub(crate) fn site_sweep_prepared_sink(
+    gen: &Generator,
+    grid: &SiteGrid,
+    opts: &SiteOptions,
+    sink: Option<&dyn TraceSink>,
+) -> Result<Vec<(SiteVariant, SiteReport)>> {
+    grid.validate()?;
     let variants = grid.expand();
     let results = parallel_map_results(variants.len(), 1, |i| {
         let variant = &variants[i];
-        let vdir = out_dir.map(|d| d.join(&variant.id));
-        run_site_prepared(gen_ro, &variant.spec, opts, vdir.as_deref())
+        let scoped = sink.map(|s| ScopedSink::new(s, &variant.id));
+        run_site_inner(
+            gen,
+            &variant.spec,
+            opts,
+            scoped.as_ref().map(|s| s as &dyn TraceSink),
+            None,
+        )
     });
     let mut out = Vec::with_capacity(variants.len());
     for (variant, r) in variants.into_iter().zip(results) {
         let report = r.with_context(|| format!("site variant {}", variant.id))?;
         out.push((variant, report));
     }
-    if let Some(dir) = out_dir {
-        fsx::atomic_write(&dir.join("site_sweep_summary.csv"), sweep_summary_csv(&out).as_bytes())?;
-        grid.save(&dir.join("site_sweep.json"))?;
+    if let Some(s) = sink {
+        s.put("site_sweep_summary.csv", sweep_summary_csv(&out).as_bytes())?;
+        s.put("site_sweep.json", json::to_string_pretty(&grid.to_json()).as_bytes())?;
     }
     Ok(out)
 }
@@ -376,6 +404,10 @@ pub struct SiteSweepOutcome {
     pub restored: usize,
     /// Variants that exhausted their retry budget this run.
     pub failed: Vec<QuarantinedCell>,
+    /// Variants still `pending` when the run stopped — nonzero only when
+    /// a cooperative shutdown ([`crate::robust::shutdown`]) interrupted
+    /// the run; `--resume` re-runs exactly these.
+    pub interrupted: usize,
     /// The final `site_sweep_summary.csv` bytes (restored + fresh rows in
     /// grid order — byte-identical to an uninterrupted run).
     pub summary_csv: String,
@@ -391,8 +423,28 @@ pub struct SiteSweepOutcome {
 /// — the remaining variants still run, and the final summary carries every
 /// completed row.
 #[cfg(feature = "host")]
+#[deprecated(
+    since = "0.2.0",
+    note = "route through crate::api::execute_checkpointed with RunSpec::SiteSweep"
+)]
 pub fn run_site_sweep_checkpointed(
     gen: &mut Generator,
+    grid: &SiteGrid,
+    opts: &SiteOptions,
+    dir: &Path,
+    policy: &RetryPolicy,
+) -> Result<SiteSweepOutcome> {
+    grid.validate()?;
+    prepare_site(gen, &grid.base)?;
+    site_sweep_checkpointed_prepared(gen, grid, opts, dir, policy)
+}
+
+/// [`run_site_sweep_checkpointed`] over an already-prepared shared
+/// generator (see [`prepare_site`]) — the `pub(crate)` engine behind
+/// [`crate::api::execute_checkpointed`].
+#[cfg(feature = "host")]
+pub(crate) fn site_sweep_checkpointed_prepared(
+    gen: &Generator,
     grid: &SiteGrid,
     opts: &SiteOptions,
     dir: &Path,
@@ -421,11 +473,15 @@ pub fn run_site_sweep_checkpointed(
     });
     let todo: Vec<usize> =
         (0..variants.len()).filter(|&i| !manifest.is_done(&variants[i].id)).collect();
-    prepare_site(gen, &grid.base)?;
     let keeper = ManifestKeeper::new(manifest, mpath.clone())?;
     let gen_ro: &Generator = gen;
     let results = parallel_map_results(todo.len(), 1, |k| -> Result<Option<SiteReport>> {
         let variant = &variants[todo[k]];
+        // Not yet started when shutdown arrived: stays `pending` in the
+        // durable manifest, no attempt charged — `--resume` picks it up.
+        if shutdown::requested() {
+            return Ok(None);
+        }
         let prior = keeper.with(|m| m.attempts(&variant.id));
         let vsink = DirSink::new(dir.join(&variant.id));
         let isolated = run_isolated(policy, prior, |deadline| {
@@ -444,6 +500,10 @@ pub fn run_site_sweep_checkpointed(
                 })?;
                 Ok(Some(report))
             }
+            // Interrupted mid-variant (the deadline check at a lockstep
+            // barrier surfaced the shutdown request): not a failure — the
+            // variant stays pending, uncharged, for --resume.
+            Isolated::Failed { reason, .. } if shutdown::is_interrupt(&reason) => Ok(None),
             Isolated::Failed { attempts, reason } => {
                 keeper.update(|m| m.mark_failed(&variant.id, attempts, reason))?;
                 Ok(None)
@@ -480,7 +540,18 @@ pub fn run_site_sweep_checkpointed(
             })
         })
         .collect();
-    Ok(SiteSweepOutcome { executed, restored, failed, summary_csv: summary, manifest_path: mpath })
+    let interrupted = variants
+        .iter()
+        .filter(|v| manifest.cells.get(&v.id).is_some_and(|st| st.status == CellStatus::Pending))
+        .count();
+    Ok(SiteSweepOutcome {
+        executed,
+        restored,
+        failed,
+        interrupted,
+        summary_csv: summary,
+        manifest_path: mpath,
+    })
 }
 
 /// Stat the three files every completed variant directory holds, as

@@ -9,6 +9,11 @@
 //! windows in memory (wasm, a service, a notebook) must see exactly the
 //! bytes the CLI writes to disk.
 
+// Deliberately still on the deprecated run_* wrappers: doubles as
+// compile-and-run coverage that they keep reaching the same engines the
+// unified `api` routes through.
+#![allow(deprecated)]
+
 use powertrace_sim::aggregate::Topology;
 use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
 use powertrace_sim::export::{MemSink, TraceSink};

@@ -8,6 +8,11 @@
 //! serializes on one lock — a failpoint armed for one test must never
 //! leak into a concurrently running sweep.
 
+// These tests deliberately stay on the deprecated run_* wrappers: they
+// double as compile-and-run coverage that the wrappers still reach the
+// same engines the unified `api` routes through.
+#![allow(deprecated)]
+
 use powertrace_sim::aggregate::Topology;
 use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
 use powertrace_sim::robust::{CellStatus, RetryPolicy, RunManifest};
@@ -449,6 +454,73 @@ mod failpoints {
         let clean = temp_dir("fp_stall_clean");
         let fresh = run_sweep_checkpointed(&mut gen, &grid, &opts, &clean, &relaxed).unwrap();
         assert_eq!(fresh.summary_csv, out.summary_csv);
+    }
+
+    /// The graceful-shutdown contract: a SIGINT stand-in fired mid-sweep
+    /// leaves interrupted cells *pending* (not quarantined, no attempt
+    /// charged) behind a consistent manifest, and `--resume` converges to
+    /// the uninterrupted run's bytes.
+    #[test]
+    fn interrupt_mid_sweep_leaves_pending_cells_and_resume_converges() {
+        use powertrace_sim::api::{
+            self, CheckpointedOutcome, RunKind, RunOptions, RunRequest, RunSpec,
+        };
+        use powertrace_sim::robust::shutdown;
+        let _guard = serial();
+        clear_all();
+        shutdown::reset();
+        let (mut gen, ids) = synth_generator("robust_fp_interrupt", 8, 4, 1, 53).unwrap();
+        let grid = small_grid(&ids[0]);
+        // Sequential cells make the interrupt point deterministic: the
+        // grid-order prefix before the armed cell completes, the rest
+        // never starts.
+        let options = RunOptions::defaults_for(RunKind::Sweep).with_window(7.0).with_workers(1);
+        let req = RunRequest { spec: RunSpec::Sweep(grid.clone()), options };
+
+        let clean = temp_dir("fp_interrupt_clean");
+        let CheckpointedOutcome::Sweep(reference) =
+            api::execute_checkpointed(&mut gen, &req, &clean).unwrap()
+        else {
+            unreachable!("sweep request yields a sweep outcome")
+        };
+        assert_eq!(reference.interrupted, 0);
+
+        // "^C" at the third cell's first window boundary.
+        let dir = temp_dir("fp_interrupt");
+        arm(once("sweep.cell.window", "w1-t0-f0-s3", FailAction::Interrupt));
+        let CheckpointedOutcome::Sweep(out) =
+            api::execute_checkpointed(&mut gen, &req, &dir).unwrap()
+        else {
+            unreachable!("sweep request yields a sweep outcome")
+        };
+        clear_all();
+        assert!(shutdown::requested(), "the failpoint stood in for the signal");
+        shutdown::reset();
+        assert_eq!(out.report.cells.len(), 2, "the pre-interrupt prefix completed");
+        assert_eq!(out.interrupted, 2, "the interrupted cell and the never-started one");
+        assert!(out.failed.is_empty(), "an interrupt is not a failure");
+        let m = load_manifest(&dir);
+        assert_eq!(m.done_count(), 2);
+        assert_eq!(m.attempts("w1-t0-f0-s3"), 0, "no attempt charged for the interrupt");
+        assert_eq!(m.attempts("w1-t0-f0-s4"), 0, "never started");
+        assert_eq!(m.attempts("w0-t0-f0-s3"), 1);
+
+        // The flushed manifest is a valid resume point: exactly the two
+        // pending cells run, and the bytes converge.
+        let CheckpointedOutcome::Sweep(resumed) =
+            api::execute_checkpointed(&mut gen, &req, &dir).unwrap()
+        else {
+            unreachable!("sweep request yields a sweep outcome")
+        };
+        assert_eq!(resumed.restored, 2);
+        assert_eq!(resumed.report.cells.len(), 2);
+        assert_eq!(resumed.interrupted, 0);
+        assert!(resumed.failed.is_empty());
+        assert_eq!(resumed.summary_csv, reference.summary_csv);
+        let m = load_manifest(&dir);
+        assert_eq!(m.done_count(), 4);
+        assert_eq!(m.attempts("w1-t0-f0-s3"), 1, "the resume attempt is the first charged");
+        assert_no_tmp(&dir);
     }
 
     #[test]

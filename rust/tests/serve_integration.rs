@@ -1,0 +1,416 @@
+//! Integration: the live planning service end-to-end, in process — a
+//! [`Server`] over a synthetic artifact store, driven by a raw
+//! `std::net` HTTP client.
+//!
+//! The load-bearing contract is byte identity: replaying a run's
+//! streamed NDJSON sink events reconstructs exactly the directory a
+//! [`DirSink`] run of the same [`RunRequest`] writes. Everything else —
+//! status/health/catalog endpoints, prepared-cache sharing across
+//! concurrent requests, checkpointed `--runs-dir` execution, request
+//! validation — is exercised around that pin.
+
+use powertrace_sim::aggregate::Topology;
+use powertrace_sim::api::{self, RunKind, RunOptions, RunRequest, RunSpec};
+use powertrace_sim::artifacts::ArtifactStore;
+use powertrace_sim::catalog::Catalog;
+use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::export::DirSink;
+use powertrace_sim::scenarios::{GridDefaults, SweepGrid};
+use powertrace_sim::serve::sink::{reconstruct, SinkEvent};
+use powertrace_sim::serve::{ServeConfig, Server};
+use powertrace_sim::site::{SiteGrid, SiteSpec};
+use powertrace_sim::testutil::synth_artifact_store;
+use powertrace_sim::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// Harness: store + generators, raw HTTP client, NDJSON decoding
+// ---------------------------------------------------------------------------
+
+/// Two generators over ONE synthetic store (bytes depend on the full
+/// ordered config list, so reference and server must share a root), plus
+/// the store root and the config ids it covers.
+fn paired_generators(tag: &str, seed: u64) -> (Generator, Generator, PathBuf, Vec<String>) {
+    let cat = Catalog::load_default().unwrap();
+    let ids: Vec<String> = cat.config_ids().into_iter().take(1).collect();
+    assert!(!ids.is_empty());
+    let root = synth_artifact_store(tag, 8, 4, &ids, seed);
+    let a = ArtifactStore::open(&root).unwrap();
+    let b = ArtifactStore::open(&root).unwrap();
+    (Generator::native_with(cat.clone(), a), Generator::native_with(cat, b), root, ids)
+}
+
+fn serve(gen: Generator, runs_dir: Option<PathBuf>) -> powertrace_sim::serve::ServerHandle {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_concurrent_runs: 2,
+        runs_dir,
+        refresh_interval_s: 0.0,
+    };
+    Server::new(gen, &cfg).unwrap().spawn().unwrap()
+}
+
+/// One request over a fresh connection; returns (status, head, body) with
+/// chunked transfer decoded. Reads to EOF — the server closes per request.
+fn send_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> (u16, String, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: test\r\n");
+    if let Some(b) = body {
+        head.push_str(&format!("Content-Length: {}\r\n", b.len()));
+    }
+    head.push_str("Connection: close\r\n\r\n");
+    stream.write_all(head.as_bytes()).unwrap();
+    if let Some(b) = body {
+        stream.write_all(b.as_bytes()).unwrap();
+    }
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let split = raw.windows(4).position(|w| w == b"\r\n\r\n").expect("header terminator");
+    let head = String::from_utf8_lossy(&raw[..split]).to_string();
+    let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut payload = raw[split + 4..].to_vec();
+    if head.to_ascii_lowercase().contains("transfer-encoding: chunked") {
+        payload = decode_chunked(&payload);
+    }
+    (status, head, payload)
+}
+
+fn decode_chunked(mut b: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let pos = b.windows(2).position(|w| w == b"\r\n").expect("chunk size line");
+        let size =
+            usize::from_str_radix(std::str::from_utf8(&b[..pos]).unwrap().trim(), 16).unwrap();
+        b = &b[pos + 2..];
+        if size == 0 {
+            break;
+        }
+        out.extend_from_slice(&b[..size]);
+        b = &b[size + 2..]; // payload + CRLF
+    }
+    out
+}
+
+fn body_json(payload: &[u8]) -> Json {
+    json::parse(std::str::from_utf8(payload).unwrap()).unwrap()
+}
+
+/// Split a decoded NDJSON stream into control lines (accepted/done/error)
+/// and replayable sink events — the documented client-side protocol.
+fn split_events(ndjson: &[u8]) -> (Vec<Json>, Vec<SinkEvent>) {
+    let text = std::str::from_utf8(ndjson).unwrap();
+    let mut control = Vec::new();
+    let mut events = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let v = json::parse(line).unwrap();
+        let path = || v.str_field("path").unwrap();
+        let data = || v.str_field("data").unwrap().into_bytes();
+        match v.str_field("event").unwrap().as_str() {
+            "open" => events.push(SinkEvent::Open { path: path() }),
+            "append" => events.push(SinkEvent::Append { path: path(), data: data() }),
+            "close" => events.push(SinkEvent::Close { path: path() }),
+            "file" => events.push(SinkEvent::File { path: path(), data: data() }),
+            _ => control.push(v),
+        }
+    }
+    (control, events)
+}
+
+fn walk_dir(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn rec(base: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let p = entry.unwrap().path();
+            if p.is_dir() {
+                rec(base, &p, out);
+            } else {
+                let rel = p.strip_prefix(base).unwrap().to_string_lossy().replace('\\', "/");
+                out.insert(rel, std::fs::read(&p).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    rec(root, root, &mut out);
+    out
+}
+
+fn assert_stream_matches_dir(payload: &[u8], dir: &Path, kind: &str) -> Vec<Json> {
+    let (control, events) = split_events(payload);
+    assert_eq!(control.first().unwrap().str_field("event").unwrap(), "accepted");
+    assert_eq!(control.first().unwrap().str_field("kind").unwrap(), kind);
+    assert_eq!(control.last().unwrap().str_field("event").unwrap(), "done", "{control:?}");
+    let streamed = reconstruct(&events);
+    let on_disk = walk_dir(dir);
+    assert_eq!(
+        streamed.keys().collect::<Vec<_>>(),
+        on_disk.keys().collect::<Vec<_>>(),
+        "file sets differ for kind {kind}"
+    );
+    for (path, bytes) in &on_disk {
+        assert_eq!(&streamed[path], bytes, "bytes differ at {path} for kind {kind}");
+    }
+    control
+}
+
+// ---------------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------------
+
+/// A 2-facility site over 1×2×2 halls and a 60 s horizon, matching the
+/// site_integration fixtures.
+fn small_site(id: &str) -> SiteSpec {
+    let mut s = ScenarioSpec::default_poisson(id, 0.5);
+    s.topology = Topology { rows: 1, racks_per_row: 2, servers_per_rack: 2 };
+    s.horizon_s = 60.0;
+    s.seed = 5;
+    let mut spec = SiteSpec::staggered("served", &s, 2, 0.0);
+    spec.utility_intervals_s = vec![15.0, 30.0];
+    spec
+}
+
+fn site_request(id: &str) -> RunRequest {
+    RunRequest {
+        spec: RunSpec::Site(small_site(id)),
+        options: RunOptions::defaults_for(RunKind::Site)
+            .with_dt(0.25)
+            .with_window(7.0)
+            .with_load_interval(1.0),
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+/// The tentpole pin: the streamed NDJSON of a site run reconstructs
+/// byte-for-byte the DirSink directory of the same RunRequest, and the
+/// windows arrive incrementally (many appends, not one blob). Rides
+/// along: status / healthz / catalog smokes against the same server.
+#[test]
+fn streamed_site_run_byte_equals_dirsink_export() {
+    let (mut gref, gsrv, _root, ids) = paired_generators("serve_site_bytes", 11);
+    let req = site_request(&ids[0]);
+    let dir = tmp_dir("powertrace_test_serve_site_ref");
+    let sink = DirSink::new(&dir);
+    api::execute(&mut gref, &req, Some(&sink)).unwrap();
+
+    let handle = serve(gsrv, None);
+    let body = json::to_string(&req.to_json());
+    let (status, head, payload) = send_request(handle.addr(), "POST", "/v1/runs", Some(&body));
+    assert_eq!(status, 200);
+    assert!(head.to_ascii_lowercase().contains("application/x-ndjson"), "{head}");
+    let control = assert_stream_matches_dir(&payload, &dir, "site");
+    let run_id = control[0].str_field("run_id").unwrap();
+
+    // Incremental streaming: site_load.csv rows arrived as multiple
+    // appends across the 7 s windows, not one buffered write.
+    let (_, events) = split_events(&payload);
+    let load_appends = events
+        .iter()
+        .filter(|e| matches!(e, SinkEvent::Append { path, .. } if path == "site_load.csv"))
+        .count();
+    assert!(load_appends > 1, "expected windowed appends, got {load_appends}");
+
+    // Status: the registry knows the finished run.
+    let (status, _, payload) =
+        send_request(handle.addr(), "GET", &format!("/v1/runs/{run_id}"), None);
+    assert_eq!(status, 200);
+    let v = body_json(&payload);
+    assert_eq!(v.str_field("state").unwrap(), "done");
+    assert_eq!(v.str_field("kind").unwrap(), "site");
+
+    // Health: the shared generator kept the request's config warm.
+    let (status, _, payload) = send_request(handle.addr(), "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    let v = body_json(&payload);
+    assert_eq!(v.str_field("status").unwrap(), "ok");
+    let prepared = v.get("prepared_configs").unwrap().as_arr().unwrap();
+    assert!(prepared.iter().any(|p| p.as_str().unwrap() == ids[0]), "{prepared:?}");
+
+    // Catalog: serving configurations are listed.
+    let (status, _, payload) = send_request(handle.addr(), "GET", "/v1/catalog", None);
+    assert_eq!(status, 200);
+    let v = body_json(&payload);
+    assert!(!v.get("configs").unwrap().as_arr().unwrap().is_empty());
+
+    handle.stop().unwrap();
+}
+
+/// The same pin for the buffered kinds: facility (a degenerate one-cell
+/// sweep) and sweep stream their one-shot exports as `file` events that
+/// replay to the DirSink bytes.
+#[test]
+fn streamed_facility_and_sweep_runs_byte_equal_dirsink_exports() {
+    let (mut gref, gsrv, _root, ids) = paired_generators("serve_fac_sweep_bytes", 13);
+
+    let mut scenario = ScenarioSpec::default_poisson(&ids[0], 0.5);
+    scenario.topology = Topology { rows: 1, racks_per_row: 2, servers_per_rack: 2 };
+    scenario.horizon_s = 60.0;
+    scenario.seed = 5;
+    let fac_req = RunRequest::new(RunSpec::Facility(scenario));
+
+    let grid = SweepGrid {
+        name: "served_grid".to_string(),
+        defaults: GridDefaults { horizon_s: 60.0, ..GridDefaults::default() },
+        workloads: vec![WorkloadSpec::Poisson { rate: 0.5 }],
+        topologies: vec![Topology { rows: 1, racks_per_row: 2, servers_per_rack: 2 }],
+        fleets: vec![ServerAssignment::Uniform(ids[0].clone())],
+        seeds: vec![5, 9],
+    };
+    let sweep_req = RunRequest::new(RunSpec::Sweep(grid));
+
+    let fac_dir = tmp_dir("powertrace_test_serve_fac_ref");
+    let sweep_dir = tmp_dir("powertrace_test_serve_sweep_ref");
+    api::execute(&mut gref, &fac_req, Some(&DirSink::new(&fac_dir))).unwrap();
+    api::execute(&mut gref, &sweep_req, Some(&DirSink::new(&sweep_dir))).unwrap();
+
+    let handle = serve(gsrv, None);
+    for (req, dir, kind) in [(&fac_req, &fac_dir, "facility"), (&sweep_req, &sweep_dir, "sweep")] {
+        let body = json::to_string(&req.to_json());
+        let (status, _, payload) = send_request(handle.addr(), "POST", "/v1/runs", Some(&body));
+        assert_eq!(status, 200, "kind {kind}");
+        assert_stream_matches_dir(&payload, dir, kind);
+    }
+    handle.stop().unwrap();
+}
+
+/// Two concurrent site requests run against one warm generator; a third
+/// request still succeeds after the artifact store is deleted from disk —
+/// proof the requests share the prepared-config cache rather than
+/// re-reading artifacts.
+#[test]
+fn concurrent_site_requests_share_the_prepared_cache() {
+    let (_gref, gsrv, root, ids) = paired_generators("serve_cache", 17);
+    let handle = serve(gsrv, None);
+    let addr = handle.addr();
+    let body = json::to_string(&site_request(&ids[0]).to_json());
+
+    let payloads: Vec<Vec<u8>> = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let body = body.clone();
+                scope.spawn(move || {
+                    let (status, _, payload) = send_request(addr, "POST", "/v1/runs", Some(&body));
+                    assert_eq!(status, 200);
+                    payload
+                })
+            })
+            .collect();
+        workers.into_iter().map(|w| w.join().unwrap()).collect()
+    });
+    let files_a = reconstruct(&split_events(&payloads[0]).1);
+    let files_b = reconstruct(&split_events(&payloads[1]).1);
+    assert_eq!(files_a, files_b, "concurrent identical requests must produce identical bytes");
+    assert!(!files_a.is_empty());
+
+    // The store is gone; only the in-memory prepared cache can serve this.
+    std::fs::remove_dir_all(&root).unwrap();
+    let (status, _, payload) = send_request(addr, "POST", "/v1/runs", Some(&body));
+    assert_eq!(status, 200);
+    let files_c = reconstruct(&split_events(&payload).1);
+    assert_eq!(files_a, files_c, "cached-config run must reproduce the first run's bytes");
+
+    handle.stop().unwrap();
+}
+
+/// Request validation happens before any stream starts: malformed bodies,
+/// unknown kinds, and invalid specs are plain HTTP errors.
+#[test]
+fn malformed_requests_are_rejected_before_streaming() {
+    let (_gref, gsrv, _root, _ids) = paired_generators("serve_400", 19);
+    let handle = serve(gsrv, None);
+    let addr = handle.addr();
+
+    let (status, _, payload) = send_request(addr, "POST", "/v1/runs", Some("not json"));
+    assert_eq!(status, 400);
+    assert!(body_json(&payload).str_field("error").is_ok());
+
+    let (status, _, _) =
+        send_request(addr, "POST", "/v1/runs", Some(r#"{"kind": "mystery", "spec": {}}"#));
+    assert_eq!(status, 400);
+
+    let (status, _, payload) =
+        send_request(addr, "POST", "/v1/runs", Some(r#"{"kind": "site", "spec": {"name": "x"}}"#));
+    assert_eq!(status, 400);
+    assert!(body_json(&payload).str_field("error").unwrap().contains("invalid RunRequest"));
+
+    // A typo'd option must not silently run with defaults.
+    let req = r#"{"kind": "site", "spec": {"name": "x"}, "options": {"dt": 1.0}}"#;
+    let (status, _, _) = send_request(addr, "POST", "/v1/runs", Some(req));
+    assert_eq!(status, 400);
+
+    let (status, _, _) = send_request(addr, "GET", "/v1/runs/ghost", None);
+    assert_eq!(status, 404);
+    let (status, _, _) = send_request(addr, "GET", "/nope", None);
+    assert_eq!(status, 404);
+    let (status, _, _) = send_request(addr, "DELETE", "/healthz", None);
+    assert_eq!(status, 405);
+
+    handle.stop().unwrap();
+}
+
+/// With `--runs-dir`, sweep kinds execute checkpointed: the summary comes
+/// back in one JSON body, the durable PR-7 manifest lands on disk under
+/// `<runs_dir>/<run-id>/`, and the status endpoint folds its cell ledger.
+#[test]
+fn runs_dir_executes_sweep_kinds_checkpointed_with_manifest_status() {
+    let (_gref, gsrv, _root, ids) = paired_generators("serve_runsdir", 23);
+    let runs_dir = tmp_dir("powertrace_test_serve_runsdir");
+    let handle = serve(gsrv, Some(runs_dir.clone()));
+
+    let grid = SiteGrid {
+        name: "served_site_sweep".to_string(),
+        base: small_site(&ids[0]),
+        phase_spreads_h: vec![0.0],
+        seeds: vec![5],
+        battery_kwh: Vec::new(),
+        cap_w: Vec::new(),
+        battery: None,
+    };
+    let req = RunRequest {
+        spec: RunSpec::SiteSweep(grid),
+        options: RunOptions::defaults_for(RunKind::SiteSweep)
+            .with_dt(0.25)
+            .with_window(7.0)
+            .with_load_interval(1.0),
+    };
+    let body = json::to_string(&req.to_json());
+    let (status, head, payload) = send_request(handle.addr(), "POST", "/v1/runs", Some(&body));
+    assert_eq!(status, 200);
+    assert!(!head.to_ascii_lowercase().contains("chunked"), "checkpointed runs do not stream");
+    let v = body_json(&payload);
+    let run_id = v.str_field("run_id").unwrap();
+    assert_eq!(v.get("failed").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(v.get("interrupted").unwrap().as_usize().unwrap(), 0);
+    assert!(v.str_field("summary_csv").unwrap().lines().count() >= 2);
+
+    let run_dir = runs_dir.join(&run_id);
+    assert!(run_dir.join("manifest.json").exists());
+    assert!(run_dir.join("site_sweep_summary.csv").exists());
+
+    let (status, _, payload) =
+        send_request(handle.addr(), "GET", &format!("/v1/runs/{run_id}"), None);
+    assert_eq!(status, 200);
+    let v = body_json(&payload);
+    assert_eq!(v.str_field("state").unwrap(), "done");
+    let m = v.get("manifest").unwrap();
+    assert_eq!(m.get("done").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(m.get("pending").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(m.get("failed").unwrap().as_usize().unwrap(), 0);
+
+    handle.stop().unwrap();
+}

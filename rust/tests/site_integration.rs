@@ -4,6 +4,11 @@
 //! single-facility identity), and byte-stable exports across worker
 //! counts and window sizes.
 
+// Deliberately still on the deprecated run_* wrappers: doubles as
+// compile-and-run coverage that they keep reaching the same engines the
+// unified `api` routes through.
+#![allow(deprecated)]
+
 use powertrace_sim::aggregate::Topology;
 use powertrace_sim::config::{ScenarioSpec, WorkloadSpec};
 use powertrace_sim::scenarios::diff_summary_files;

@@ -3,6 +3,11 @@
 //! and bit-exact reproducibility of the summary across runs and worker
 //! counts.
 
+// Deliberately still on the deprecated run_* wrappers: doubles as
+// compile-and-run coverage that they keep reaching the same engines the
+// unified `api` routes through.
+#![allow(deprecated)]
+
 use powertrace_sim::aggregate::Topology;
 use powertrace_sim::config::{ServerAssignment, WorkloadSpec};
 use powertrace_sim::coordinator::Generator;

@@ -15,6 +15,11 @@
 //!   sharing one trace path parse it exactly once, even under concurrent
 //!   facility runs.
 
+// Deliberately still on the deprecated run_* wrappers: doubles as
+// compile-and-run coverage that they keep reaching the same engines the
+// unified `api` routes through.
+#![allow(deprecated)]
+
 use powertrace_sim::aggregate::Topology;
 use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
 use powertrace_sim::scenarios::{run_sweep, run_sweep_to, GridDefaults, SweepGrid, SweepOptions};
