@@ -79,12 +79,17 @@ fn main() {
         sps_win,
         bat.mean.as_secs_f64() / win.mean.as_secs_f64(),
     );
+    // With `--features simd` the batched engine dispatches to the f32x8
+    // kernels; suffix the entry names so a scalar run and a SIMD run of
+    // the same binary merge into one BENCH_facility.json side by side
+    // (write_bench_json merges by name).
+    let sfx = if cfg!(feature = "simd") { "_simd" } else { "" };
     if let Err(e) = write_bench_json(
         Path::new("BENCH_facility.json"),
         &[
-            BenchEntry::from_result("facility_sequential", &seq, Some(n_servers)),
-            BenchEntry::from_result("facility_batched", &bat, Some(n_servers)),
-            BenchEntry::from_result("facility_windowed", &win, Some(n_servers)),
+            BenchEntry::from_result(&format!("facility_sequential{sfx}"), &seq, Some(n_servers)),
+            BenchEntry::from_result(&format!("facility_batched{sfx}"), &bat, Some(n_servers)),
+            BenchEntry::from_result(&format!("facility_windowed{sfx}"), &win, Some(n_servers)),
         ],
     ) {
         println!("  (BENCH_facility.json not written: {e:#})");

@@ -8,14 +8,10 @@
 //! recorded to `BENCH_facility.json` (servers/sec across the whole grid)
 //! alongside the facility-generation entries.
 
-// Deliberately still on the deprecated run_* wrappers: doubles as
-// compile-and-run coverage that they keep reaching the same engines the
-// unified `api` routes through.
-#![allow(deprecated)]
-
+use powertrace_sim::api::{self, RunOutcome, RunRequest, RunSpec};
 use powertrace_sim::benchutil::{section, write_bench_json, Bench, BenchEntry};
 use powertrace_sim::coordinator::Generator;
-use powertrace_sim::scenarios::{run_sweep, SweepGrid, SweepOptions};
+use powertrace_sim::scenarios::SweepGrid;
 use powertrace_sim::testutil::synth_generator;
 use std::path::Path;
 use std::time::Duration;
@@ -44,9 +40,12 @@ fn main() {
     let total_servers: usize = grid.expand().iter().map(|c| c.spec.topology.n_servers()).sum();
 
     let b = Bench::budgeted(Duration::from_secs(6), 5);
-    let opts = SweepOptions::default();
-    let r = b.run(&format!("run_sweep({n_cells} cells, {total_servers} servers)"), || {
-        run_sweep(&mut gen, &grid, &opts).unwrap().cells.len()
+    let req = RunRequest::new(RunSpec::Sweep(grid.clone()));
+    let r = b.run(&format!("api::execute({n_cells} cells, {total_servers} servers)"), || {
+        match api::execute(&mut gen, &req, None).unwrap() {
+            RunOutcome::Sweep(report) => report.cells.len(),
+            _ => unreachable!(),
+        }
     });
     let per_cell = r.mean.as_secs_f64() / n_cells as f64;
     println!(
@@ -55,9 +54,12 @@ fn main() {
         1.0 / per_cell.max(1e-9),
         total_servers as f64 / r.mean.as_secs_f64()
     );
+    // Keep scalar and `--features simd` runs as separate entries so one
+    // BENCH_facility.json can carry the before/after pair.
+    let entry_name = if cfg!(feature = "simd") { "sweep_grid_simd" } else { "sweep_grid" };
     if let Err(e) = write_bench_json(
         Path::new("BENCH_facility.json"),
-        &[BenchEntry::from_result("sweep_grid", &r, Some(total_servers as f64))],
+        &[BenchEntry::from_result(entry_name, &r, Some(total_servers as f64))],
     ) {
         println!("  (BENCH_facility.json not written: {e:#})");
     }

@@ -12,14 +12,11 @@
 //! Defaults: 4 h horizon, dt 1 s, 15 min lockstep windows, on a synthetic
 //! random-weight artifact store, so it runs without `make artifacts`.
 
-// Deliberately still on the deprecated run_* wrappers: doubles as
-// compile-and-run coverage that they keep reaching the same engines the
-// unified `api` routes through.
-#![allow(deprecated)]
-
 use powertrace_sim::aggregate::Topology;
+use powertrace_sim::api::{self, RunKind, RunOptions, RunOutcome, RunRequest, RunSpec};
 use powertrace_sim::config::{ScenarioSpec, WorkloadSpec};
-use powertrace_sim::site::{run_site, FacilitySpec, SiteOptions, SiteSpec, TrainingSpec};
+use powertrace_sim::export::DirSink;
+use powertrace_sim::site::{FacilitySpec, SiteSpec, TrainingSpec};
 use powertrace_sim::testutil::synth_generator;
 use powertrace_sim::workload::TokenLengths;
 
@@ -69,8 +66,14 @@ fn main() -> anyhow::Result<()> {
     };
 
     let out_dir = std::env::temp_dir().join("powertrace_mixed_site");
-    let opts = SiteOptions { dt_s: 1.0, window_s: 900.0, ..SiteOptions::default() };
-    let report = run_site(&mut gen, &spec, &opts, Some(&out_dir))?;
+    let req = RunRequest {
+        spec: RunSpec::Site(spec.clone()),
+        options: RunOptions::defaults_for(RunKind::Site).with_dt(1.0).with_window(900.0),
+    };
+    let sink = DirSink::new(&out_dir);
+    let RunOutcome::Site(report) = api::execute(&mut gen, &req, Some(&sink))? else {
+        unreachable!()
+    };
 
     println!(
         "site '{}': token-workload inference ({} servers) + training archetype, {horizon_h} h\n",

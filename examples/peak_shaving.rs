@@ -13,14 +13,11 @@
 //! lockstep windows, on a synthetic random-weight artifact store
 //! (`testutil::synth_generator`), so it runs without `make artifacts`.
 
-// Deliberately still on the deprecated run_* wrappers: doubles as
-// compile-and-run coverage that they keep reaching the same engines the
-// unified `api` routes through.
-#![allow(deprecated)]
-
 use powertrace_sim::aggregate::Topology;
+use powertrace_sim::api::{self, RunKind, RunOptions, RunOutcome, RunRequest, RunSpec};
 use powertrace_sim::config::{ScenarioSpec, WorkloadSpec};
-use powertrace_sim::site::{run_site, OverlaySpec, SiteOptions, SiteSpec};
+use powertrace_sim::export::DirSink;
+use powertrace_sim::site::{OverlaySpec, SiteSpec};
 use powertrace_sim::testutil::synth_generator;
 use powertrace_sim::workload::TrafficMode;
 
@@ -43,10 +40,11 @@ fn main() -> anyhow::Result<()> {
     base.seed = 3;
 
     let spec = SiteSpec::staggered("shaved_site", &base, n_facilities, 4.0);
-    let opts = SiteOptions { dt_s: 1.0, window_s: 3600.0, ..SiteOptions::default() };
+    let options = RunOptions::defaults_for(RunKind::Site).with_dt(1.0).with_window(3600.0);
 
     // Baseline: the raw composed profile (PR-4 path, overlay-free).
-    let baseline = run_site(&mut gen, &spec, &opts, None)?;
+    let req = RunRequest { spec: RunSpec::Site(spec.clone()), options: options.clone() };
+    let RunOutcome::Site(baseline) = api::execute(&mut gen, &req, None)? else { unreachable!() };
     let raw_peak = baseline.site.stats.peak_w;
 
     // Overlay run: battery shaves toward 85 % of the raw peak, the cap
@@ -68,7 +66,11 @@ fn main() -> anyhow::Result<()> {
         OverlaySpec::Pv { peak_w: 0.25 * raw_peak, peak_hour: 13.0, daylight_h: 12.0 },
     ];
     let out_dir = std::env::temp_dir().join("powertrace_peak_shaving");
-    let report = run_site(&mut gen, &shaved, &opts, Some(&out_dir))?;
+    let req = RunRequest { spec: RunSpec::Site(shaved), options };
+    let sink = DirSink::new(&out_dir);
+    let RunOutcome::Site(report) = api::execute(&mut gen, &req, Some(&sink))? else {
+        unreachable!()
+    };
     let overlay = report.site.overlay.expect("overlay chain ran");
 
     println!(

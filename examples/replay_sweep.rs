@@ -11,14 +11,10 @@
 //! Runs on a synthetic random-weight artifact store (no `make artifacts`
 //! needed). Writes the grid + summary under `out/replay_sweep/`.
 
-// Deliberately still on the deprecated run_* wrappers: doubles as
-// compile-and-run coverage that they keep reaching the same engines the
-// unified `api` routes through.
-#![allow(deprecated)]
-
 use powertrace_sim::aggregate::Topology;
+use powertrace_sim::api::{self, RunOutcome, RunRequest, RunSpec};
 use powertrace_sim::config::{ServerAssignment, WorkloadSpec};
-use powertrace_sim::scenarios::{run_sweep, GridDefaults, SweepGrid, SweepOptions};
+use powertrace_sim::scenarios::{GridDefaults, SweepGrid};
 use powertrace_sim::testutil::synth_generator;
 use powertrace_sim::workload::TokenLengths;
 
@@ -51,7 +47,8 @@ fn main() -> anyhow::Result<()> {
     };
     println!("grid '{}': {} cells off one recorded trace\n", grid.name, grid.n_cells());
 
-    let report = run_sweep(&mut gen, &grid, &SweepOptions::default())?;
+    let req = RunRequest::new(RunSpec::Sweep(grid.clone()));
+    let RunOutcome::Sweep(report) = api::execute(&mut gen, &req, None)? else { unreachable!() };
     print!("{}", report.summary_table());
 
     let out = std::path::Path::new("out/replay_sweep");

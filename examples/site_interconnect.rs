@@ -13,14 +13,11 @@
 //! lockstep windows, on a synthetic random-weight artifact store
 //! (`testutil::synth_generator`), so it runs without `make artifacts`.
 
-// Deliberately still on the deprecated run_* wrappers: doubles as
-// compile-and-run coverage that they keep reaching the same engines the
-// unified `api` routes through.
-#![allow(deprecated)]
-
 use powertrace_sim::aggregate::Topology;
+use powertrace_sim::api::{self, RunKind, RunOptions, RunOutcome, RunRequest, RunSpec};
 use powertrace_sim::config::{ScenarioSpec, WorkloadSpec};
-use powertrace_sim::site::{run_site, SiteOptions, SiteSpec};
+use powertrace_sim::export::DirSink;
+use powertrace_sim::site::SiteSpec;
 use powertrace_sim::testutil::synth_generator;
 use powertrace_sim::workload::TrafficMode;
 
@@ -48,15 +45,21 @@ fn main() -> anyhow::Result<()> {
     spec.nameplate_w = Some(n_facilities as f64 * 80e3);
 
     let out_dir = std::env::temp_dir().join("powertrace_site_interconnect");
-    let opts = SiteOptions { dt_s: 1.0, window_s: 3600.0, ..SiteOptions::default() };
-    let report = run_site(&mut gen, &spec, &opts, Some(&out_dir))?;
+    let req = RunRequest {
+        spec: RunSpec::Site(spec.clone()),
+        options: RunOptions::defaults_for(RunKind::Site).with_dt(1.0).with_window(3600.0),
+    };
+    let sink = DirSink::new(&out_dir);
+    let RunOutcome::Site(report) = api::execute(&mut gen, &req, Some(&sink))? else {
+        unreachable!()
+    };
 
     println!(
         "site '{}': {} facilities staggered {stagger_h} h, {} servers, 24 h @ {}s\n",
         spec.name,
         n_facilities,
         spec.n_servers(),
-        opts.dt_s
+        req.options.dt_s
     );
     print!("{}", report.summary_table());
     println!(

@@ -9,13 +9,9 @@
 //! Requires `make artifacts`. Writes the grid + multi-scale series under
 //! `out/sweep_grid/`.
 
-// Deliberately still on the deprecated run_* wrappers: doubles as
-// compile-and-run coverage that they keep reaching the same engines the
-// unified `api` routes through.
-#![allow(deprecated)]
-
+use powertrace_sim::api::{self, RunOutcome, RunRequest, RunSpec};
 use powertrace_sim::coordinator::Generator;
-use powertrace_sim::scenarios::{run_sweep, SweepGrid, SweepOptions};
+use powertrace_sim::scenarios::SweepGrid;
 
 fn main() -> anyhow::Result<()> {
     let mut gen = match Generator::pjrt() {
@@ -39,7 +35,8 @@ fn main() -> anyhow::Result<()> {
         grid.config_ids().len()
     );
 
-    let report = run_sweep(&mut gen, &grid, &SweepOptions::default())?;
+    let req = RunRequest::new(RunSpec::Sweep(grid.clone()));
+    let RunOutcome::Sweep(report) = api::execute(&mut gen, &req, None)? else { unreachable!() };
     print!("{}", report.summary_table());
 
     // The multi-scale export: every cell carries rack-level 1 s, row-level

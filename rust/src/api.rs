@@ -51,7 +51,7 @@ use crate::site::{
 use crate::aggregate::ScaleConfig;
 use crate::util::json::{self, Json};
 use crate::util::threadpool::Executor;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 #[cfg(feature = "host")]
 use std::path::Path;
 
@@ -238,6 +238,13 @@ pub struct RunOptions {
     pub max_retries: u32,
     /// Checkpointed runs: soft per-attempt wall-clock budget (s; 0 = off).
     pub cell_timeout_s: f64,
+    /// Sweep kinds only: run just the cells/variants shard `i/N` owns (a
+    /// deterministic partition by stable cell id — see [`crate::shard`]).
+    /// Wire-settable (`"shard": "i/N"`), recorded in run manifests, and —
+    /// like the worker knobs — excluded from manifest identity hashes, so
+    /// every shard of a grid and `powertrace merge`'s assembled result
+    /// share one content hash.
+    pub shard: Option<crate::shard::Shard>,
 }
 
 impl RunOptions {
@@ -258,6 +265,7 @@ impl RunOptions {
             executor: Executor::default(),
             max_retries: 1,
             cell_timeout_s: 0.0,
+            shard: None,
         }
     }
 
@@ -321,6 +329,11 @@ impl RunOptions {
         self
     }
 
+    pub fn with_shard(mut self, shard: Option<crate::shard::Shard>) -> Self {
+        self.shard = shard;
+        self
+    }
+
     /// The sweep-engine view (facility and sweep kinds).
     pub(crate) fn to_sweep(&self) -> SweepOptions {
         SweepOptions {
@@ -332,6 +345,7 @@ impl RunOptions {
             window_s: self.window_s,
             scales: self.scales.clone(),
             executor: self.executor,
+            shard: self.shard,
         }
     }
 
@@ -346,6 +360,7 @@ impl RunOptions {
             load_interval_s: self.load_interval_s,
             collect_series: self.collect_series,
             executor: self.executor,
+            shard: self.shard,
         }
     }
 
@@ -355,30 +370,61 @@ impl RunOptions {
     }
 
     /// Parse the optional wire-level `options` object over the kind's
-    /// defaults. Unknown keys are rejected — a typo silently reverting a
-    /// knob to its default is the worst failure mode an options object
-    /// can have. The executor is not wire-settable (requests run on the
-    /// server's executor).
+    /// defaults. Rejections are kind-aware and name the offending field:
+    /// unknown keys are rejected (a typo silently reverting a knob to its
+    /// default is the worst failure mode an options object can have), and
+    /// so are knobs that exist but don't apply to this kind — e.g.
+    /// `load_interval_s` on a `sweep` request. The executor is not
+    /// wire-settable (requests run on the server's executor).
     pub fn from_json(kind: RunKind, v: Option<&Json>) -> Result<RunOptions> {
         let mut o = RunOptions::defaults_for(kind);
         let Some(v) = v else { return Ok(o) };
         let Json::Obj(map) = v else { bail!("options must be an object") };
+        let site = matches!(kind, RunKind::Site | RunKind::SiteSweep);
+        let sharded = matches!(kind, RunKind::Sweep | RunKind::SiteSweep);
         for key in map.keys() {
-            match key.as_str() {
-                "dt_s" | "ramp_interval_s" | "window_s" | "workers" | "server_workers"
-                | "max_batch" | "scales" | "load_interval_s" | "collect_series"
-                | "max_retries" | "cell_timeout_s" => {}
-                other => bail!("options: unknown field '{other}'"),
+            let applies = match key.as_str() {
+                // Every kind.
+                "dt_s" | "ramp_interval_s" | "window_s" | "workers" | "max_batch"
+                | "max_retries" | "cell_timeout_s" => true,
+                // Facility/sweep engine knobs.
+                "server_workers" | "scales" => !site,
+                // Site composition knobs.
+                "load_interval_s" | "collect_series" => site,
+                // Only grid kinds have a cell list to partition.
+                "shard" => sharded,
+                other => bail!("options: unknown field '{other}' for kind '{}'", kind.as_str()),
+            };
+            if !applies {
+                bail!("options: field '{key}' does not apply to kind '{}'", kind.as_str());
             }
         }
         if let Some(x) = v.get_opt("dt_s") {
             o.dt_s = x.as_f64()?;
+            ensure!(
+                o.dt_s.is_finite() && o.dt_s > 0.0,
+                "options: field 'dt_s' on kind '{}' must be positive seconds (got {})",
+                kind.as_str(),
+                o.dt_s
+            );
         }
         if let Some(x) = v.get_opt("ramp_interval_s") {
             o.ramp_interval_s = x.as_f64()?;
+            ensure!(
+                o.ramp_interval_s.is_finite() && o.ramp_interval_s > 0.0,
+                "options: field 'ramp_interval_s' on kind '{}' must be positive seconds (got {})",
+                kind.as_str(),
+                o.ramp_interval_s
+            );
         }
         if let Some(x) = v.get_opt("window_s") {
             o.window_s = x.as_f64()?;
+            ensure!(
+                o.window_s.is_finite() && o.window_s >= 0.0,
+                "options: field 'window_s' on kind '{}' must be >= 0 seconds (got {})",
+                kind.as_str(),
+                o.window_s
+            );
         }
         if let Some(x) = v.get_opt("workers") {
             o.workers = x.as_usize()?;
@@ -402,6 +448,12 @@ impl RunOptions {
         }
         if let Some(x) = v.get_opt("load_interval_s") {
             o.load_interval_s = x.as_f64()?;
+            ensure!(
+                o.load_interval_s.is_finite() && o.load_interval_s > 0.0,
+                "options: field 'load_interval_s' on kind '{}' must be positive seconds (got {})",
+                kind.as_str(),
+                o.load_interval_s
+            );
         }
         if let Some(x) = v.get_opt("collect_series") {
             o.collect_series = x.as_bool()?;
@@ -411,32 +463,57 @@ impl RunOptions {
         }
         if let Some(x) = v.get_opt("cell_timeout_s") {
             o.cell_timeout_s = x.as_f64()?;
+            ensure!(
+                o.cell_timeout_s.is_finite() && o.cell_timeout_s >= 0.0,
+                "options: field 'cell_timeout_s' on kind '{}' must be >= 0 seconds (got {})",
+                kind.as_str(),
+                o.cell_timeout_s
+            );
+        }
+        if let Some(x) = v.get_opt("shard") {
+            let s = x.as_str()?;
+            o.shard = Some(crate::shard::Shard::parse(s).with_context(|| {
+                format!("options: field 'shard' on kind '{}'", kind.as_str())
+            })?);
         }
         Ok(o)
     }
 
-    /// The wire form [`RunOptions::from_json`] parses (executor omitted).
-    pub fn to_json(&self) -> Json {
-        json::obj([
+    /// The wire form [`RunOptions::from_json`] parses for `kind` —
+    /// kind-aware like the parser, so only the fields that apply to the
+    /// kind are emitted and the round trip through `from_json` is exact
+    /// (executor omitted; it is not wire-settable).
+    pub fn to_json(&self, kind: RunKind) -> Json {
+        let site = matches!(kind, RunKind::Site | RunKind::SiteSweep);
+        let mut fields = vec![
             ("dt_s", Json::Num(self.dt_s)),
             ("ramp_interval_s", Json::Num(self.ramp_interval_s)),
             ("window_s", Json::Num(self.window_s)),
             ("workers", Json::Num(self.workers as f64)),
-            ("server_workers", Json::Num(self.server_workers as f64)),
             ("max_batch", Json::Num(self.max_batch as f64)),
-            (
+            ("max_retries", Json::Num(self.max_retries as f64)),
+            ("cell_timeout_s", Json::Num(self.cell_timeout_s)),
+        ];
+        if site {
+            fields.push(("load_interval_s", Json::Num(self.load_interval_s)));
+            fields.push(("collect_series", Json::Bool(self.collect_series)));
+        } else {
+            fields.push(("server_workers", Json::Num(self.server_workers as f64)));
+            fields.push((
                 "scales",
                 json::obj([
                     ("rack_interval_s", Json::Num(self.scales.rack_interval_s)),
                     ("row_interval_s", Json::Num(self.scales.row_interval_s)),
                     ("facility_intervals_s", Json::from_f64s(&self.scales.facility_intervals_s)),
                 ]),
-            ),
-            ("load_interval_s", Json::Num(self.load_interval_s)),
-            ("collect_series", Json::Bool(self.collect_series)),
-            ("max_retries", Json::Num(self.max_retries as f64)),
-            ("cell_timeout_s", Json::Num(self.cell_timeout_s)),
-        ])
+            ));
+        }
+        if matches!(kind, RunKind::Sweep | RunKind::SiteSweep) {
+            if let Some(sh) = self.shard {
+                fields.push(("shard", Json::Str(sh.to_string())));
+            }
+        }
+        json::obj(fields)
     }
 }
 
@@ -454,15 +531,31 @@ impl RunRequest {
         RunRequest { spec, options }
     }
 
-    /// `{"kind": ..., "spec": {...}, "options": {...}}` — the wire body
-    /// of `POST /v1/runs`. The `options` object is optional on parse.
+    /// The wire schema version this build speaks. Requests may omit `"v"`
+    /// (treated as version 1); a request declaring any other version is
+    /// rejected before parsing the spec — see docs/ARCHITECTURE.md
+    /// §"Unified run API" for the compatibility rule.
+    pub const WIRE_VERSION: u64 = 1;
+
+    /// `{"v": 1, "kind": ..., "spec": {...}, "options": {...}}` — the wire
+    /// body of `POST /v1/runs`. `v` and `options` are optional on parse.
     pub fn to_json(&self) -> Json {
         let Json::Obj(mut o) = self.spec.to_json() else { unreachable!("spec is an object") };
-        o.insert("options".to_string(), self.options.to_json());
+        o.insert("v".to_string(), Json::Num(Self::WIRE_VERSION as f64));
+        o.insert("options".to_string(), self.options.to_json(self.spec.kind()));
         Json::Obj(o)
     }
 
     pub fn from_json(v: &Json) -> Result<RunRequest> {
+        if let Some(x) = v.get_opt("v") {
+            let ver = x.as_usize()? as u64;
+            if ver != Self::WIRE_VERSION {
+                bail!(
+                    "unsupported RunRequest version {ver} (this build speaks v{})",
+                    Self::WIRE_VERSION
+                );
+            }
+        }
         let kind = RunKind::from_str(&v.str_field("kind")?)?;
         let spec = RunSpec::from_kind_json(kind, v.get("spec")?)?;
         let options = RunOptions::from_json(kind, v.get_opt("options"))?;
@@ -749,11 +842,89 @@ mod tests {
         // Unknown keys are rejected, not ignored.
         let v = json::parse(r#"{"dt": 0.5}"#).unwrap();
         assert!(RunOptions::from_json(RunKind::Sweep, Some(&v)).is_err());
-        // And the wire form round-trips through from_json.
+        // And the wire form round-trips through from_json, for every kind.
         let o = RunOptions::defaults_for(RunKind::Site).with_dt(2.0).with_max_batch(4);
-        let back = RunOptions::from_json(RunKind::Site, Some(&o.to_json())).unwrap();
+        let back = RunOptions::from_json(RunKind::Site, Some(&o.to_json(RunKind::Site))).unwrap();
         assert_eq!(back.dt_s, 2.0);
         assert_eq!(back.max_batch, 4);
+        for kind in [RunKind::Facility, RunKind::Sweep, RunKind::Site, RunKind::SiteSweep] {
+            let o = RunOptions::defaults_for(kind).with_max_retries(5);
+            let back = RunOptions::from_json(kind, Some(&o.to_json(kind))).unwrap();
+            assert_eq!(back.max_retries, 5);
+        }
+        // A sweep shard survives the round trip.
+        let sh = crate::shard::Shard::parse("1/3").unwrap();
+        let o = RunOptions::defaults_for(RunKind::Sweep).with_shard(Some(sh));
+        let back = RunOptions::from_json(RunKind::Sweep, Some(&o.to_json(RunKind::Sweep))).unwrap();
+        assert_eq!(back.shard, Some(sh));
+    }
+
+    /// Each kind-aware rejection path names the offending field AND the
+    /// kind — a typo and a kind-mismatched knob read differently.
+    #[test]
+    fn options_rejections_name_field_and_kind() {
+        let reject = |kind: RunKind, body: &str| -> String {
+            let v = json::parse(body).unwrap();
+            format!("{:#}", RunOptions::from_json(kind, Some(&v)).unwrap_err())
+        };
+        // Site-only knobs on sweep kinds.
+        let e = reject(RunKind::Sweep, r#"{"load_interval_s": 60}"#);
+        assert!(e.contains("'load_interval_s'") && e.contains("'sweep'"), "{e}");
+        let e = reject(RunKind::Facility, r#"{"collect_series": true}"#);
+        assert!(e.contains("'collect_series'") && e.contains("'facility'"), "{e}");
+        // Sweep-engine knobs on site kinds.
+        let e = reject(RunKind::Site, r#"{"server_workers": 2}"#);
+        assert!(e.contains("'server_workers'") && e.contains("'site'"), "{e}");
+        let e = reject(RunKind::SiteSweep, r#"{"scales": {}}"#);
+        assert!(e.contains("'scales'") && e.contains("'site_sweep'"), "{e}");
+        // Shards only make sense where there is a cell list to partition.
+        let e = reject(RunKind::Facility, r#"{"shard": "0/3"}"#);
+        assert!(e.contains("'shard'") && e.contains("'facility'"), "{e}");
+        let e = reject(RunKind::Site, r#"{"shard": "0/3"}"#);
+        assert!(e.contains("'shard'") && e.contains("'site'"), "{e}");
+        // Unknown fields name the kind too.
+        let e = reject(RunKind::Sweep, r#"{"dt": 0.5}"#);
+        assert!(e.contains("'dt'") && e.contains("'sweep'"), "{e}");
+        // Value validation: field + kind + offending value.
+        let e = reject(RunKind::Sweep, r#"{"dt_s": 0}"#);
+        assert!(e.contains("'dt_s'") && e.contains("'sweep'"), "{e}");
+        let e = reject(RunKind::Facility, r#"{"ramp_interval_s": -1}"#);
+        assert!(e.contains("'ramp_interval_s'") && e.contains("'facility'"), "{e}");
+        let e = reject(RunKind::Sweep, r#"{"window_s": -5}"#);
+        assert!(e.contains("'window_s'") && e.contains("'sweep'"), "{e}");
+        let e = reject(RunKind::Site, r#"{"load_interval_s": 0}"#);
+        assert!(e.contains("'load_interval_s'") && e.contains("'site'"), "{e}");
+        let e = reject(RunKind::SiteSweep, r#"{"cell_timeout_s": -1}"#);
+        assert!(e.contains("'cell_timeout_s'") && e.contains("'site_sweep'"), "{e}");
+        // Malformed shard strings name the field through the context chain.
+        let e = reject(RunKind::Sweep, r#"{"shard": "3/3"}"#);
+        assert!(e.contains("'shard'") && e.contains("'sweep'"), "{e}");
+        // The accepted forms still parse.
+        let v = json::parse(r#"{"shard": "2/3", "window_s": 0}"#).unwrap();
+        let o = RunOptions::from_json(RunKind::Sweep, Some(&v)).unwrap();
+        assert_eq!(o.shard, Some(crate::shard::Shard { index: 2, count: 3 }));
+    }
+
+    #[test]
+    fn runrequest_wire_version_gates_parsing() {
+        let req = RunRequest::new(RunSpec::Sweep(sweep_grid()));
+        let j = req.to_json();
+        assert_eq!(j.get("v").unwrap().as_usize().unwrap(), 1);
+        // v:1 and absent v both parse; any other version is rejected
+        // before the spec is even looked at.
+        RunRequest::from_json(&j).unwrap();
+        let Json::Obj(mut o) = j.clone() else { unreachable!() };
+        o.remove("v");
+        RunRequest::from_json(&Json::Obj(o.clone())).unwrap();
+        o.insert("v".to_string(), Json::Num(2.0));
+        let e = format!("{:#}", RunRequest::from_json(&Json::Obj(o)).unwrap_err());
+        assert!(e.contains("unsupported RunRequest version 2"), "{e}");
+
+        // A sharded request round-trips with its shard intact.
+        let mut req = RunRequest::new(RunSpec::Sweep(sweep_grid()));
+        req.options.shard = Some(crate::shard::Shard::parse("0/2").unwrap());
+        let back = RunRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.options.shard, req.options.shard);
     }
 
     #[test]
@@ -787,7 +958,9 @@ mod tests {
         let Json::Obj(m) = o.to_site().identity_json() else { panic!("identity is an object") };
         let keys: Vec<&str> = m.keys().map(String::as_str).collect();
         assert_eq!(keys, vec!["dt_s", "load_interval_s", "ramp_interval_s"]);
-        // Identity-irrelevant knobs move nothing.
+        // Identity-irrelevant knobs move nothing — including the shard, so
+        // every shard of a grid (and the merged result) shares one
+        // content hash with the unsharded run.
         let base = json::to_string(&o.to_sweep().identity_json());
         let tweaked = o
             .clone()
@@ -797,10 +970,18 @@ mod tests {
             .with_window(120.0)
             .with_executor(Executor::Sequential)
             .with_max_retries(9)
-            .with_cell_timeout(5.0);
+            .with_cell_timeout(5.0)
+            .with_shard(Some(crate::shard::Shard { index: 1, count: 3 }));
         assert_eq!(json::to_string(&tweaked.to_sweep().identity_json()), base);
         let site_base = json::to_string(&o.to_site().identity_json());
         assert_eq!(json::to_string(&tweaked.to_site().identity_json()), site_base);
+        // ...but the shard IS recorded in the manifest's launch options,
+        // so a bare `--resume` re-runs the same slice.
+        let rec = tweaked.to_sweep().record_json();
+        assert_eq!(rec.get("shard").unwrap().as_str().unwrap(), "1/3");
+        let rec = tweaked.to_site().record_json();
+        assert_eq!(rec.get("shard").unwrap().as_str().unwrap(), "1/3");
+        assert!(o.to_sweep().record_json().get_opt("shard").is_none());
         // Identity-relevant knobs do move it.
         assert_ne!(json::to_string(&o.clone().with_dt(0.5).to_sweep().identity_json()), base);
         assert_ne!(

@@ -39,6 +39,11 @@
 //! * the head logit is `(b + dot_fwd) + dot_bwd`, as in the sequential
 //!   head loop.
 //!
+//! With `--features simd` (and AVX2 detected at runtime) the lane loops of
+//! the GEMM, head-projection, and input-gate kernels execute as explicit
+//! f32x8 intrinsics — same schedule, eight lanes per instruction; see
+//! `classifier/simd.rs` for why this cannot change bits.
+//!
 //! ## Memory: checkpointed backward scan
 //!
 //! A naive batched BiGRU stores `[T, H, B]` backward hidden states — 1.4 GB
@@ -473,14 +478,7 @@ fn step_lanes(
     acc: &mut [f32],
     hid: &mut [f32],
 ) {
-    // gates_i[j, lane] = (w_x0[j]·x0 + w_x1[j]·x1) + b_ih[j]
-    for j in 0..3 * h {
-        let (w0, w1, bj) = (d.w_x0[j], d.w_x1[j], d.b_ih[j]);
-        let orow = &mut gates_i[j * b..(j + 1) * b];
-        for (o, (&a0, &a1)) in orow.iter_mut().zip(x0.iter().zip(x1)) {
-            *o = w0 * a0 + w1 * a1 + bj;
-        }
-    }
+    gates_input(d, h, b, x0, x1, gates_i);
     gemm_3h_lanes(&d.w_hh, &d.b_hh, hid, h, b, acc, gates_h);
     for j in 0..h {
         let gi_r = &gates_i[j * b..(j + 1) * b];
@@ -499,13 +497,55 @@ fn step_lanes(
     }
 }
 
+/// Batched input-gate pre-activations:
+/// `gates_i[j, lane] = (w_x0[j]·x0[lane] + w_x1[j]·x1[lane]) + b_ih[j]`.
+#[inline]
+fn gates_input(d: &PackedDir, h: usize, b: usize, x0: &[f32], x1: &[f32], gates_i: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd::avx2() {
+        // SAFETY: AVX2 presence checked; the kernel replays this scalar
+        // loop's exact per-lane arithmetic (see classifier/simd.rs).
+        unsafe { super::simd::gates_input_avx2(&d.w_x0, &d.w_x1, &d.b_ih, b, x0, x1, gates_i) };
+        return;
+    }
+    for j in 0..3 * h {
+        let (w0, w1, bj) = (d.w_x0[j], d.w_x1[j], d.b_ih[j]);
+        let orow = &mut gates_i[j * b..(j + 1) * b];
+        for (o, (&a0, &a1)) in orow.iter_mut().zip(x0.iter().zip(x1)) {
+            *o = w0 * a0 + w1 * a1 + bj;
+        }
+    }
+}
+
 /// Batched `out[j, lane] = dot(W_hh[j, :], hid[:, lane]) + b[j]` — the
 /// `[3H, H] × [H, B]` GEMM. Each lane's reduction replays the exact
 /// partial-sum schedule of the sequential `native::dot` (8 slots over
 /// chunks of 8, left fold from 0.0, remainder in order), so the result is
 /// bit-identical to the sequential GEMV while every weight element is
-/// loaded once per B lanes.
+/// loaded once per B lanes. With `--features simd` and AVX2 present the
+/// same schedule runs eight lanes per instruction (classifier/simd.rs).
+#[inline]
 fn gemm_3h_lanes(
+    w: &[f32],
+    bias: &[f32],
+    hid: &[f32],
+    h: usize,
+    b: usize,
+    acc: &mut [f32],
+    out: &mut [f32],
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd::avx2() {
+        // SAFETY: AVX2 presence checked; bit-identical by construction.
+        unsafe { super::simd::gemm_3h_lanes_avx2(w, bias, hid, h, b, acc, out) };
+        return;
+    }
+    gemm_3h_lanes_scalar(w, bias, hid, h, b, acc, out)
+}
+
+/// The portable scalar GEMM body (also the reference the SIMD parity test
+/// compares against).
+fn gemm_3h_lanes_scalar(
     w: &[f32],
     bias: &[f32],
     hid: &[f32],
@@ -549,7 +589,20 @@ fn gemm_3h_lanes(
 /// Batched `out[lane] = dot(row, mat[:, lane])` with the same partial-sum
 /// schedule as `native::dot` (used for the two halves of the head
 /// projection).
+#[inline]
 fn dot_lanes(row: &[f32], mat: &[f32], b: usize, acc: &mut [f32], out: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd::avx2() {
+        // SAFETY: AVX2 presence checked; bit-identical by construction.
+        unsafe { super::simd::dot_lanes_avx2(row, mat, b, acc, out) };
+        return;
+    }
+    dot_lanes_scalar(row, mat, b, acc, out)
+}
+
+/// The portable scalar head-projection body (also the SIMD parity
+/// reference).
+fn dot_lanes_scalar(row: &[f32], mat: &[f32], b: usize, acc: &mut [f32], out: &mut [f32]) {
     let h = row.len();
     let nchunks = h / 8;
     acc.fill(0.0);
@@ -812,6 +865,74 @@ mod tests {
         let short = vec![0.0f32; 4];
         let refs: Vec<&[f32]> = vec![&short];
         assert!(model.probs_batch_into(&refs, 10, &mut scratch, &mut out).is_err());
+    }
+
+    /// Kernel-level f32x8-vs-scalar bit identity over the parity matrix
+    /// (whole-model parity is already pinned by the tests above, which run
+    /// the dispatched path against the scalar sequential reference).
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[test]
+    fn avx2_kernels_match_scalar_bitwise() {
+        use crate::classifier::simd;
+        if !simd::avx2() {
+            eprintln!("avx2 unavailable on this machine; skipping kernel parity");
+            return;
+        }
+        fn fill_rand(v: &mut [f32], mut s: u64) {
+            for x in v.iter_mut() {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                *x = ((s >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0;
+            }
+        }
+        fn assert_bits(a: &[f32], b: &[f32], what: &str, h: usize, bw: usize) {
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{what}[{i}]: avx2 {x} != scalar {y} (H={h}, B={bw})"
+                );
+            }
+        }
+        for &h in &[8usize, 13, 16, 64] {
+            for &b in &[1usize, 3, 5, 8, 16] {
+                let seed = (h * 131 + b) as u64 | 1;
+                let mut w = vec![0.0f32; 3 * h * h];
+                let mut bias = vec![0.0f32; 3 * h];
+                let mut hid = vec![0.0f32; h * b];
+                let mut x0 = vec![0.0f32; b];
+                let mut x1 = vec![0.0f32; b];
+                fill_rand(&mut w, seed);
+                fill_rand(&mut bias, seed + 1);
+                fill_rand(&mut hid, seed + 2);
+                fill_rand(&mut x0, seed + 3);
+                fill_rand(&mut x1, seed + 4);
+                let mut acc = vec![0.0f32; 8 * b];
+                let mut got = vec![0.0f32; 3 * h * b];
+                let mut want = vec![0.0f32; 3 * h * b];
+                gemm_3h_lanes_scalar(&w, &bias, &hid, h, b, &mut acc, &mut want);
+                unsafe { simd::gemm_3h_lanes_avx2(&w, &bias, &hid, h, b, &mut acc, &mut got) };
+                assert_bits(&got, &want, "gemm", h, b);
+                let row = &w[..h];
+                let mut got_d = vec![0.0f32; b];
+                let mut want_d = vec![0.0f32; b];
+                dot_lanes_scalar(row, &hid, b, &mut acc, &mut want_d);
+                unsafe { simd::dot_lanes_avx2(row, &hid, b, &mut acc, &mut got_d) };
+                assert_bits(&got_d, &want_d, "dot", h, b);
+                let (w0, w1, bi) = (&bias[..3 * h], &w[..3 * h], &w[3 * h..6 * h]);
+                let mut got_g = vec![0.0f32; 3 * h * b];
+                let mut want_g = vec![0.0f32; 3 * h * b];
+                for j in 0..3 * h {
+                    let orow = &mut want_g[j * b..(j + 1) * b];
+                    for (o, (&a0, &a1)) in orow.iter_mut().zip(x0.iter().zip(&x1)) {
+                        *o = w0[j] * a0 + w1[j] * a1 + bi[j];
+                    }
+                }
+                unsafe { simd::gates_input_avx2(w0, w1, bi, b, &x0, &x1, &mut got_g) };
+                assert_bits(&got_g, &want_g, "gates", h, b);
+            }
+        }
     }
 
     #[test]

@@ -16,6 +16,8 @@ pub mod batch;
 pub mod chunk;
 pub mod native;
 pub mod pjrt;
+#[cfg(feature = "simd")]
+pub(crate) mod simd;
 
 pub use batch::{BatchScan, LaneFeatures, ScratchArena, SliceFeatures, BATCH_TILE};
 pub use chunk::{ChunkSpec, Chunked};

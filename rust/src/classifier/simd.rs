@@ -1,0 +1,226 @@
+//! Explicit f32x8 SIMD kernels for the batched scan (`--features simd`).
+//!
+//! The batched kernels in [`super::batch`] vectorize over the lane
+//! (server) dimension implicitly, through auto-vectorizable scalar loops.
+//! This module provides the same kernels as explicit AVX2 intrinsics:
+//! eight lanes per `ymm` register, one broadcast weight amortized across
+//! all eight, with a scalar tail for ragged batch widths.
+//!
+//! ## Bit-identity
+//!
+//! The fleet-fold contract requires batched posteriors to be bit-identical
+//! to the sequential path, which pins the *reduction order over H* (8
+//! partial-sum slots, left fold from 0.0, remainder in order — the
+//! `native::dot` schedule). The lane dimension carries no reduction at
+//! all: every lane is an independent scalar chain, and IEEE-754 vector
+//! `mul`/`add` are elementwise identical to their scalar counterparts.
+//! So these kernels replay the scalar kernels' exact per-lane arithmetic —
+//! same multiplies, same adds, same order — and differ only in how many
+//! lanes advance per instruction. Two deliberate consequences:
+//!
+//! * **no FMA**: `_mm256_fmadd_ps` would fuse `a·b + c` into one rounding
+//!   where the scalar path rounds twice, so every multiply-accumulate is
+//!   an explicit `_mm256_mul_ps` followed by `_mm256_add_ps`;
+//! * **scalar transcendentals**: the gate nonlinearities (`sigmoid`,
+//!   `tanh`) stay scalar in [`super::batch`]'s state update — a vector
+//!   polynomial approximation would change bits.
+//!
+//! Dispatch happens per kernel call at runtime ([`avx2`], cached by
+//! `std_detect`); builds without the feature, non-x86-64 targets, and
+//! machines without AVX2 all take the scalar path unchanged. The parity
+//! suite in `batch.rs` pins both paths to the sequential reference, and
+//! `avx2_kernels_match_scalar_bitwise` compares the two kernel families
+//! directly.
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) use x86::{avx2, dot_lanes_avx2, gates_input_avx2, gemm_3h_lanes_avx2};
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+
+    /// Is the AVX2 fast path usable on this machine? (Cached by the
+    /// standard library's feature-detection runtime.)
+    #[inline]
+    pub(crate) fn avx2() -> bool {
+        std::arch::is_x86_64_feature_detected!("avx2")
+    }
+
+    /// `a[lane] += w · x[lane]` — one broadcast weight against eight lanes
+    /// per step, scalar tail in lane order. Separate mul + add, never FMA.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support ([`avx2`]).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy(w: f32, x: &[f32], a: &mut [f32]) {
+        debug_assert_eq!(x.len(), a.len());
+        let n = a.len();
+        let wv = _mm256_set1_ps(w);
+        let mut i = 0;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            _mm256_storeu_ps(a.as_mut_ptr().add(i), _mm256_add_ps(av, _mm256_mul_ps(wv, xv)));
+            i += 8;
+        }
+        while i < n {
+            *a.get_unchecked_mut(i) += w * *x.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    /// `a[lane] += x[lane]` (no multiply — the slot fold adds raw partial
+    /// sums, and `x · 1.0` would not be the same operation).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support ([`avx2`]).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn vacc(x: &[f32], a: &mut [f32]) {
+        debug_assert_eq!(x.len(), a.len());
+        let n = a.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            _mm256_storeu_ps(a.as_mut_ptr().add(i), _mm256_add_ps(av, xv));
+            i += 8;
+        }
+        while i < n {
+            *a.get_unchecked_mut(i) += *x.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    /// `out[lane] = 0.0 + acc[0, lane] + … + acc[7, lane]` — the slot fold
+    /// of `batch::fold_acc`, including the 0.0 start (signed zeros).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support ([`avx2`]).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn fold8(acc: &[f32], b: usize, out: &mut [f32]) {
+        out.fill(0.0);
+        for l in 0..8 {
+            vacc(&acc[l * b..(l + 1) * b], out);
+        }
+    }
+
+    /// AVX2 twin of `batch::gemm_3h_lanes`: identical chunk/slot/remainder
+    /// schedule over `H`, bias added last, lanes advanced eight at a time.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support ([`avx2`]).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn gemm_3h_lanes_avx2(
+        w: &[f32],
+        bias: &[f32],
+        hid: &[f32],
+        h: usize,
+        b: usize,
+        acc: &mut [f32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(acc.len(), 8 * b);
+        let nchunks = h / 8;
+        for j in 0..3 * h {
+            let row = &w[j * h..(j + 1) * h];
+            acc.fill(0.0);
+            for c in 0..nchunks {
+                for l in 0..8 {
+                    let kk = 8 * c + l;
+                    axpy(row[kk], &hid[kk * b..(kk + 1) * b], &mut acc[l * b..(l + 1) * b]);
+                }
+            }
+            let out_row = &mut out[j * b..(j + 1) * b];
+            fold8(acc, b, out_row);
+            for kk in 8 * nchunks..h {
+                axpy(row[kk], &hid[kk * b..(kk + 1) * b], out_row);
+            }
+            let bj = bias[j];
+            let bjv = _mm256_set1_ps(bj);
+            let mut lane = 0;
+            while lane + 8 <= b {
+                let ov = _mm256_loadu_ps(out_row.as_ptr().add(lane));
+                _mm256_storeu_ps(out_row.as_mut_ptr().add(lane), _mm256_add_ps(ov, bjv));
+                lane += 8;
+            }
+            while lane < b {
+                *out_row.get_unchecked_mut(lane) += bj;
+                lane += 1;
+            }
+        }
+    }
+
+    /// AVX2 twin of `batch::dot_lanes` (the head projection halves): same
+    /// schedule as the GEMM rows, without the bias.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support ([`avx2`]).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn dot_lanes_avx2(
+        row: &[f32],
+        mat: &[f32],
+        b: usize,
+        acc: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let h = row.len();
+        let nchunks = h / 8;
+        acc.fill(0.0);
+        for c in 0..nchunks {
+            for l in 0..8 {
+                let kk = 8 * c + l;
+                axpy(row[kk], &mat[kk * b..(kk + 1) * b], &mut acc[l * b..(l + 1) * b]);
+            }
+        }
+        fold8(acc, b, out);
+        for kk in 8 * nchunks..h {
+            axpy(row[kk], &mat[kk * b..(kk + 1) * b], out);
+        }
+    }
+
+    /// AVX2 twin of the input-gate loop in `batch::step_lanes`:
+    /// `out[j, lane] = (w_x0[j]·x0[lane] + w_x1[j]·x1[lane]) + b_ih[j]`,
+    /// with the scalar expression's exact association.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support ([`avx2`]).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn gates_input_avx2(
+        w_x0: &[f32],
+        w_x1: &[f32],
+        b_ih: &[f32],
+        b: usize,
+        x0: &[f32],
+        x1: &[f32],
+        out: &mut [f32],
+    ) {
+        for j in 0..w_x0.len() {
+            let (w0, w1, bj) = (w_x0[j], w_x1[j], b_ih[j]);
+            let orow = &mut out[j * b..(j + 1) * b];
+            let w0v = _mm256_set1_ps(w0);
+            let w1v = _mm256_set1_ps(w1);
+            let bjv = _mm256_set1_ps(bj);
+            let mut lane = 0;
+            while lane + 8 <= b {
+                let a0 = _mm256_loadu_ps(x0.as_ptr().add(lane));
+                let a1 = _mm256_loadu_ps(x1.as_ptr().add(lane));
+                let v = _mm256_add_ps(
+                    _mm256_add_ps(_mm256_mul_ps(w0v, a0), _mm256_mul_ps(w1v, a1)),
+                    bjv,
+                );
+                _mm256_storeu_ps(orow.as_mut_ptr().add(lane), v);
+                lane += 8;
+            }
+            while lane < b {
+                *orow.get_unchecked_mut(lane) =
+                    w0 * *x0.get_unchecked(lane) + w1 * *x1.get_unchecked(lane) + bj;
+                lane += 1;
+            }
+        }
+    }
+}

@@ -103,6 +103,7 @@ pub mod runtime;
 pub mod scenarios;
 #[cfg(feature = "serve")]
 pub mod serve;
+pub mod shard;
 pub mod site;
 pub mod source;
 pub mod states;

@@ -5,6 +5,7 @@
 //!   facility   facility-scale run from a scenario JSON
 //!   site       compose N facilities into a utility-facing site profile
 //!   sweep      expand a scenario grid and run every cell (multi-scale export)
+//!   merge      assemble sharded partial sweeps into one summary + manifest
 //!   serve      live planning service: RunRequests over HTTP, NDJSON streams
 //!   diff       compare two summary CSVs cell-by-cell (regression gate)
 //!   repro      regenerate a paper table/figure (or `all`)
@@ -49,6 +50,7 @@ fn main() {
         "facility" => cmd_facility(&args),
         "site" => cmd_site(&args),
         "sweep" => cmd_sweep(&args),
+        "merge" => cmd_merge(&args),
         "serve" => cmd_serve(&args),
         "diff" => cmd_diff(&args),
         "repro" => cmd_repro(&args),
@@ -84,6 +86,8 @@ fn print_help() {
                       utility-facing load profile + interconnect summary\n\
            sweep      expand a scenario grid (JSON), run every cell in\n\
                       parallel, export multi-scale series + summary\n\
+           merge      assemble sharded sweep runs (--shard i/N) into the\n\
+                      summary an unsharded run would have written\n\
            serve      live planning service: POST RunRequest envelopes to\n\
                       /v1/runs, stream windows back as NDJSON (feature `serve`)\n\
            diff       compare two summary CSVs cell-by-cell; non-zero exit\n\
@@ -316,6 +320,7 @@ fn cmd_site(args: &Args) -> Result<()> {
             Opt { name: "site", help: "site spec JSON (facilities + phase offsets + nameplate)", default: None },
             Opt { name: "grid", help: "site sweep JSON (phase spreads × seeds over a base site); overrides --site", default: None },
             Opt { name: "resume", help: "resume a checkpointed site sweep from its manifest.json (or the directory holding it); done variants are restored, pending/failed ones re-run", default: None },
+            Opt { name: "shard", help: "with --grid: run only shard i of N (format i/N, 0-based); variants partition deterministically by id hash, partials assemble with 'powertrace merge'", default: None },
             Opt { name: "max-retries", help: "retries per failing variant before quarantine (checkpointed sweeps)", default: Some("1") },
             Opt { name: "cell-timeout", help: "soft wall-clock budget per variant attempt (s; 0 = unlimited, checked at window boundaries)", default: Some("0") },
             Opt { name: "overlay", help: "net-load overlay JSON: an ordered array of stages ({kind: cap|battery|pv, ...}) appended to the (base) site's site-level overlays", default: None },
@@ -346,6 +351,12 @@ fn cmd_site(args: &Args) -> Result<()> {
         None => Vec::new(),
     };
     let t0 = std::time::Instant::now();
+    // --shard i/N partitions a --grid sweep's variants by id hash; see
+    // `powertrace sweep --shard` and `powertrace merge`.
+    let shard = match args.str_opt("shard") {
+        Some(s) => Some(powertrace_sim::shard::Shard::parse(s)?),
+        None => None,
+    };
     if let Some(rpath) = args.str_opt("resume") {
         anyhow::ensure!(
             args.str_opt("grid").is_none() && args.str_opt("site").is_none(),
@@ -383,7 +394,19 @@ fn cmd_site(args: &Args) -> Result<()> {
                 args.f64_or("load-interval", mdefault)?
             })
             .with_max_retries(args.usize_or("max-retries", 1)? as u32)
-            .with_cell_timeout(args.f64_or("cell-timeout", 0.0)?);
+            .with_cell_timeout(args.f64_or("cell-timeout", 0.0)?)
+            // The manifest remembers the shard the run was launched with;
+            // an explicit --shard overrides (e.g. '0/1' finishes unsharded).
+            .with_shard(match shard {
+                Some(sh) => Some(sh),
+                None => m
+                    .options
+                    .str_field("shard")
+                    .ok()
+                    .map(|s| powertrace_sim::shard::Shard::parse(&s))
+                    .transpose()
+                    .context("--resume: manifest shard")?,
+            });
         let mut gen = site_generator(args, &grid.base.config_ids())?;
         return run_site_sweep_ckpt(&mut gen, &grid, &options, &dir, t0);
     }
@@ -398,6 +421,7 @@ fn cmd_site(args: &Args) -> Result<()> {
         .with_cell_timeout(args.f64_or("cell-timeout", 0.0)?);
     let out = args.str_opt("out").map(std::path::PathBuf::from);
     if let Some(gpath) = args.str_opt("grid") {
+        let options = options.with_shard(shard);
         let mut grid = SiteGrid::load(std::path::Path::new(gpath))?;
         grid.base.overlays.extend(extra_overlays);
         grid.validate()?;
@@ -425,6 +449,11 @@ fn cmd_site(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
+    anyhow::ensure!(
+        shard.is_none(),
+        "--shard partitions a sweep's variants; a single --site run has no grid to shard \
+         (use --grid <sweep.json>)"
+    );
     let spath = args.str_opt("site").ok_or_else(|| {
         anyhow::anyhow!("--site <spec.json> (or --grid <sweep.json>) is required; see 'powertrace site --help'")
     })?;
@@ -493,6 +522,12 @@ fn run_site_sweep_ckpt(
         print!("{}", r.summary_table());
     }
     println!("\nwrote site_sweep_summary.csv + manifest.json under {}", dir.display());
+    if let Some(sh) = options.shard {
+        println!(
+            "shard {sh}: site_sweep_summary.csv covers only this shard's variants; \
+             assemble all shards with 'powertrace merge <dir>... --out <merged>'"
+        );
+    }
     if outcome.interrupted > 0 {
         anyhow::bail!(
             "interrupted: {} variant(s) still pending (manifest is consistent); \
@@ -577,6 +612,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             Opt { name: "ramp", help: "ramp interval (s; clamped to horizon/2)", default: Some("900") },
             Opt { name: "out", help: "output directory for CSV/JSON export (runs checkpointed: a manifest.json records per-cell progress for --resume)", default: None },
             Opt { name: "resume", help: "resume a checkpointed sweep from its manifest.json (or the directory holding it); done cells are restored, pending/failed cells re-run", default: None },
+            Opt { name: "shard", help: "run only shard i of N (format i/N, 0-based): cells partition deterministically by id hash; partial outputs assemble with 'powertrace merge'", default: None },
             Opt { name: "max-retries", help: "retries per failing cell before quarantine (checkpointed runs)", default: Some("1") },
             Opt { name: "cell-timeout", help: "soft wall-clock budget per cell attempt (s; 0 = unlimited, checked at window boundaries)", default: Some("0") },
             Opt { name: "workers", help: "concurrent scenarios (0 = auto)", default: Some("0") },
@@ -674,6 +710,22 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ),
         None => (0.25, 900.0, 0.0),
     };
+    // --shard i/N runs only the cells this process owns (stable id hash);
+    // on --resume the manifest supplies the shard the run was launched
+    // with, and an explicit flag overrides it (e.g. to finish unsharded).
+    let shard = match args.str_opt("shard") {
+        Some(s) => Some(powertrace_sim::shard::Shard::parse(s)?),
+        None => match &resume {
+            Some((m, _)) => m
+                .options
+                .str_field("shard")
+                .ok()
+                .map(|s| powertrace_sim::shard::Shard::parse(&s))
+                .transpose()
+                .context("--resume: manifest shard")?,
+            None => None,
+        },
+    };
     let options = RunOptions::defaults_for(RunKind::Sweep)
         .with_dt(args.f64_or("dt", mdt)?)
         .with_ramp_interval(args.f64_or("ramp", mramp)?)
@@ -682,7 +734,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .with_max_batch(args.usize_or("max-batch", 0)?)
         .with_window(args.f64_or("window", mwindow)?)
         .with_max_retries(args.usize_or("max-retries", 1)? as u32)
-        .with_cell_timeout(args.f64_or("cell-timeout", 0.0)?);
+        .with_cell_timeout(args.f64_or("cell-timeout", 0.0)?)
+        .with_shard(shard);
     let t0 = std::time::Instant::now();
     let out_dir = match &resume {
         Some((_, mp)) => Some(mp.parent().unwrap_or(std::path::Path::new(".")).to_path_buf()),
@@ -713,6 +766,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         );
         print!("{}", outcome.report.summary_table());
         println!("\nwrote summary.csv + manifest.json under {}", dir.display());
+        if let Some(sh) = req.options.shard {
+            println!(
+                "shard {sh}: summary.csv covers only this shard's cells; \
+                 assemble all shards with 'powertrace merge <dir>... --out <merged>'"
+            );
+        }
         if outcome.interrupted > 0 {
             anyhow::bail!(
                 "interrupted: {} cell(s) still pending (manifest is consistent); \
@@ -746,6 +805,59 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         t0.elapsed().as_secs_f64()
     );
     print!("{}", report.summary_table());
+    Ok(())
+}
+
+/// `powertrace merge <dir|manifest>... --out <dir>` — assemble the partial
+/// outputs of sharded sweep runs (`--shard i/N`) into the summary an
+/// unsharded run would have written, byte for byte. See
+/// `robust::merge::merge_manifests` for the union rules.
+fn cmd_merge(args: &Args) -> Result<()> {
+    use powertrace_sim::robust::merge::merge_manifests;
+    if args.has("help") {
+        println!("{}", usage(
+            "merge <run-dir|manifest.json>...",
+            "assemble sharded sweep runs into one summary + resumable manifest",
+            &[
+                Opt { name: "out", help: "output directory (merged manifest.json + summary CSV + grid snapshot)", default: None },
+                Opt { name: "allow-partial", help: "write the merged summary even if some cells are failed or were never run", default: None },
+            ],
+        ));
+        return Ok(());
+    }
+    let inputs: Vec<std::path::PathBuf> =
+        args.positional.iter().map(std::path::PathBuf::from).collect();
+    anyhow::ensure!(
+        !inputs.is_empty(),
+        "usage: powertrace merge <run-dir|manifest.json>... --out <dir> [--allow-partial]"
+    );
+    let out = args
+        .str_opt("out")
+        .ok_or_else(|| anyhow::anyhow!("--out <dir> is required (the merged run directory)"))?;
+    let rep = merge_manifests(&inputs, std::path::Path::new(out), args.has("allow-partial"))?;
+    println!(
+        "merged {} input(s): {} run '{}' — {}/{} cells done",
+        rep.inputs,
+        rep.kind,
+        out,
+        rep.done,
+        rep.cells
+    );
+    println!("wrote {} + {}", rep.summary_path.display(), rep.manifest_path.display());
+    for id in &rep.failed {
+        eprintln!("quarantined in inputs: {id}");
+    }
+    if !rep.failed.is_empty() || !rep.pending.is_empty() {
+        println!(
+            "{} cell(s) outstanding ({} failed, {} pending); finish with \
+             'powertrace {} --resume {}'",
+            rep.failed.len() + rep.pending.len(),
+            rep.failed.len(),
+            rep.pending.len(),
+            if rep.kind == "sweep" { "sweep" } else { "site" },
+            rep.manifest_path.display()
+        );
+    }
     Ok(())
 }
 

@@ -31,14 +31,9 @@ use std::sync::Mutex;
 pub const MANIFEST_VERSION: usize = 1;
 
 /// 64-bit FNV-1a — dependency-free, stable across platforms and runs.
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
+/// Lives in the core [`crate::shard`] module (shard ownership hashes the
+/// same bytes); re-exported here for the manifest's historical callers.
+pub use crate::shard::fnv1a64;
 
 /// The identity hash binding a manifest to one `(kind, grid, options)`
 /// triple. `identity` holds only the options that change output bytes

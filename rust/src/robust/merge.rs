@@ -1,0 +1,321 @@
+//! `powertrace merge`: assemble sharded partial sweeps into the bytes an
+//! unsharded run would have written.
+//!
+//! Each shard of a grid (`powertrace sweep --shard i/N`) runs only the
+//! cells it owns but keeps a manifest over the **full** cell set — unowned
+//! cells simply stay `pending`. Because every shard binds to the same
+//! [`content_hash`](super::manifest::content_hash) (the shard is excluded
+//! from manifest identity, like worker counts), merging is a plain
+//! per-cell union: `done` beats `failed` beats `pending`, `done` rows are
+//! replayed **verbatim** in grid order under the recorded header — the
+//! same replay machinery `--resume` uses — so the assembled `summary.csv`
+//! is byte-identical to an unsharded run's by construction, in any merge
+//! order.
+//!
+//! The merged directory holds a full manifest (shard key stripped) and is
+//! itself resumable: point `--resume` at it to run any cells no shard
+//! covered. Per-cell export files are not copied — they stay under their
+//! shard directories; the merged manifest drops the export records so
+//! resume replays rows instead of demoting every cell over "missing"
+//! files.
+
+use super::fsx;
+use super::manifest::{CellStatus, RunManifest};
+use crate::scenarios::runner::summary_header;
+use crate::scenarios::SweepGrid;
+use crate::site::sweep::site_sweep_header;
+use crate::site::SiteGrid;
+use crate::util::json::{self, Json};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// What a completed merge wrote, plus the cells still outstanding.
+pub struct MergeReport {
+    /// `"sweep"` or `"site_sweep"`.
+    pub kind: String,
+    /// Manifests merged.
+    pub inputs: usize,
+    /// Total cells in the grid.
+    pub cells: usize,
+    /// Cells with a summary row in the merged output.
+    pub done: usize,
+    /// Quarantined cells (present only with `allow_partial`).
+    pub failed: Vec<String>,
+    /// Cells no input had run (present only with `allow_partial`).
+    pub pending: Vec<String>,
+    /// The merged `manifest.json` (resumable; shard key stripped).
+    pub manifest_path: PathBuf,
+    /// The assembled summary CSV.
+    pub summary_path: PathBuf,
+}
+
+/// A CLI input is either a run directory or a manifest path; both sweep
+/// kinds name their manifest `manifest.json`.
+fn resolve_manifest(p: &Path) -> PathBuf {
+    if p.is_dir() {
+        p.join("manifest.json")
+    } else {
+        p.to_path_buf()
+    }
+}
+
+/// Merge shard manifests into `out_dir`: the union manifest, the grid
+/// snapshot, and the grid-order summary CSV. Unless `allow_partial`, every
+/// cell must be `done` across the union — the whole point is byte-equality
+/// with the unsharded run, and a partial summary can't deliver that.
+pub fn merge_manifests(
+    inputs: &[PathBuf],
+    out_dir: &Path,
+    allow_partial: bool,
+) -> Result<MergeReport> {
+    ensure!(!inputs.is_empty(), "merge: need at least one run directory or manifest");
+    let mut manifests = Vec::with_capacity(inputs.len());
+    for p in inputs {
+        let mp = resolve_manifest(p);
+        manifests.push(
+            RunManifest::load(&mp).with_context(|| format!("loading {}", mp.display()))?,
+        );
+    }
+    let mut merged = manifests[0].clone();
+    for (i, m) in manifests.iter().enumerate().skip(1) {
+        let at = inputs[i].display();
+        ensure!(
+            m.kind == merged.kind,
+            "merge: {at} is a '{}' run but the first input is a '{}' run",
+            m.kind,
+            merged.kind
+        );
+        ensure!(
+            m.grid_hash == merged.grid_hash,
+            "merge: {at} has content hash {} but the first input has {} — \
+             the shards ran different grids or different dt/ramp/scale options",
+            m.grid_hash,
+            merged.grid_hash
+        );
+        ensure!(
+            m.cells.len() == merged.cells.len()
+                && m.cells.keys().all(|id| merged.cells.contains_key(id)),
+            "merge: {at} covers a different cell set than the first input"
+        );
+        for (id, st) in &m.cells {
+            let base = merged.cells.get_mut(id).expect("cell set verified above");
+            match (base.status, st.status) {
+                (CellStatus::Done, CellStatus::Done) => {
+                    // Same hash ⇒ same bytes; a mismatch means a shard's
+                    // output was edited or corrupted. Refuse to guess.
+                    ensure!(
+                        base.row == st.row,
+                        "merge: cell '{id}' has conflicting summary rows across inputs"
+                    );
+                }
+                // Done always wins; a failure beats never-attempted.
+                (_, CellStatus::Done) | (CellStatus::Pending, CellStatus::Failed) => {
+                    *base = st.clone();
+                }
+                _ => {}
+            }
+        }
+        if merged.header.is_none() {
+            merged.header = m.header.clone();
+        }
+    }
+    // The merged run is no one shard's run: drop the recorded shard so
+    // `--resume` on the merged directory runs every remaining cell.
+    if let Json::Obj(o) = &mut merged.options {
+        o.remove("shard");
+    }
+    // Rows replay from the manifest; export files stay in the shard
+    // directories (see module docs).
+    for st in merged.cells.values_mut() {
+        st.exports.clear();
+    }
+    // Grid-order assembly + per-kind artifact names, exactly as the
+    // checkpointed runners write them.
+    let (ids, header, summary_name, grid_name) = match merged.kind.as_str() {
+        "sweep" => {
+            let grid = SweepGrid::from_json(&merged.grid).context("merge: grid in manifest")?;
+            let ids: Vec<String> = grid.expand().iter().map(|c| c.id.clone()).collect();
+            let header = merged.header.clone().unwrap_or_else(|| summary_header().to_string());
+            (ids, header, "summary.csv", "grid.json")
+        }
+        "site_sweep" => {
+            let grid = SiteGrid::from_json(&merged.grid).context("merge: grid in manifest")?;
+            let variants = grid.expand();
+            // Same static table-shape rule as the checkpointed runner.
+            let with_overlay = variants.iter().any(|v| {
+                !v.spec.overlays.is_empty()
+                    || v.spec.facilities.iter().any(|f| !f.overlays.is_empty())
+            });
+            let ids: Vec<String> = variants.iter().map(|v| v.id.clone()).collect();
+            let header =
+                merged.header.clone().unwrap_or_else(|| site_sweep_header(None, with_overlay));
+            (ids, header, "site_sweep_summary.csv", "site_sweep.json")
+        }
+        other => bail!("merge: unsupported run kind '{other}' (sweep|site_sweep)"),
+    };
+    merged
+        .ensure_matches(&merged.kind.clone(), &merged.grid_hash.clone(), &ids)
+        .context("merge: manifest cells do not match the grid expansion")?;
+    let mut failed = Vec::new();
+    let mut pending = Vec::new();
+    for id in &ids {
+        match merged.cells[id].status {
+            CellStatus::Done => {}
+            CellStatus::Failed => failed.push(id.clone()),
+            CellStatus::Pending => pending.push(id.clone()),
+        }
+    }
+    if !allow_partial && !(failed.is_empty() && pending.is_empty()) {
+        bail!(
+            "merge: {} of {} cells incomplete (failed: [{}]; pending: [{}]) — \
+             run the missing shards, resume the failed ones, or pass --allow-partial",
+            failed.len() + pending.len(),
+            ids.len(),
+            failed.join(", "),
+            pending.join(", "),
+        );
+    }
+    let mut summary = header;
+    for id in &ids {
+        if let Some(row) = merged.row(id) {
+            summary.push_str(row);
+        }
+    }
+    std::fs::create_dir_all(out_dir)?;
+    let manifest_path = out_dir.join("manifest.json");
+    merged.save(&manifest_path)?;
+    json::write_file(&out_dir.join(grid_name), &merged.grid).map_err(anyhow::Error::from)?;
+    let summary_path = out_dir.join(summary_name);
+    fsx::atomic_write(&summary_path, summary.as_bytes())?;
+    Ok(MergeReport {
+        kind: merged.kind.clone(),
+        inputs: inputs.len(),
+        cells: ids.len(),
+        done: merged.done_count(),
+        failed,
+        pending,
+        manifest_path,
+        summary_path,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregate::Topology;
+    use crate::config::{ServerAssignment, WorkloadSpec};
+    use crate::robust::manifest::content_hash;
+    use crate::scenarios::grid::GridDefaults;
+    use crate::shard::Shard;
+
+    fn grid() -> SweepGrid {
+        SweepGrid {
+            name: "m".into(),
+            defaults: GridDefaults::default(),
+            workloads: vec![
+                WorkloadSpec::Poisson { rate: 0.25 },
+                WorkloadSpec::Mmpp { mean_rate: 0.5, burstiness: 4.0 },
+            ],
+            topologies: vec![Topology { rows: 1, racks_per_row: 1, servers_per_rack: 2 }],
+            fleets: vec![ServerAssignment::Uniform("a".into())],
+            seeds: vec![0, 7],
+        }
+    }
+
+    /// A shard's manifest: full cell set, owned cells `done` with a
+    /// synthetic row, everything else `pending`.
+    fn shard_manifest(g: &SweepGrid, shard: Shard) -> RunManifest {
+        let identity = json::obj([("dt_s", Json::Num(0.25))]);
+        let hash = content_hash("sweep", &g.to_json(), &identity);
+        let ids: Vec<String> = g.expand().iter().map(|c| c.id.clone()).collect();
+        let mut opts = json::obj([("dt_s", Json::Num(0.25))]);
+        if let Json::Obj(o) = &mut opts {
+            o.insert("shard".to_string(), Json::Str(shard.to_string()));
+        }
+        let mut m = RunManifest::new("sweep", &g.name, hash, g.to_json(), opts, &ids);
+        m.header = Some(summary_header().to_string());
+        for id in ids.iter().filter(|id| shard.owns(id)) {
+            m.mark_done(id, 1, format!("{id},row\n"), Vec::new());
+        }
+        m
+    }
+
+    fn write_dir(name: &str, m: &RunManifest) -> PathBuf {
+        let dir = std::env::temp_dir().join("powertrace_test_merge").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        m.save(&dir.join("manifest.json")).unwrap();
+        dir
+    }
+
+    #[test]
+    fn union_replays_rows_in_grid_order_and_strips_shard() {
+        let g = grid();
+        let dirs: Vec<PathBuf> = (0..3)
+            .map(|i| write_dir(&format!("u{i}"), &shard_manifest(&g, Shard::new(i, 3).unwrap())))
+            .collect();
+        let out = std::env::temp_dir().join("powertrace_test_merge/u_out");
+        let _ = std::fs::remove_dir_all(&out);
+        let rep = merge_manifests(&dirs, &out, false).unwrap();
+        assert_eq!((rep.cells, rep.done), (4, 4));
+        assert!(rep.failed.is_empty() && rep.pending.is_empty());
+        // Rows land in grid order regardless of which shard ran them.
+        let expect: String = summary_header().to_string()
+            + &g.expand().iter().map(|c| format!("{},row\n", c.id)).collect::<String>();
+        assert_eq!(std::fs::read_to_string(&rep.summary_path).unwrap(), expect);
+        // The merged manifest is whole-grid: same hash, no shard key.
+        let m = RunManifest::load(&rep.manifest_path).unwrap();
+        assert_eq!(m.grid_hash, shard_manifest(&g, Shard::new(0, 1).unwrap()).grid_hash);
+        assert!(m.options.get_opt("shard").is_none());
+        assert_eq!(m.done_count(), 4);
+        // Merge order doesn't matter: reversed inputs, same summary bytes.
+        let out2 = std::env::temp_dir().join("powertrace_test_merge/u_out2");
+        let _ = std::fs::remove_dir_all(&out2);
+        let rev: Vec<PathBuf> = dirs.iter().rev().cloned().collect();
+        let rep2 = merge_manifests(&rev, &out2, false).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&rep2.summary_path).unwrap(),
+            std::fs::read_to_string(&rep.summary_path).unwrap()
+        );
+    }
+
+    #[test]
+    fn incomplete_union_is_rejected_unless_allow_partial() {
+        let g = grid();
+        // Only shard 0/3 ran: the other cells are pending.
+        let d = write_dir("p0", &shard_manifest(&g, Shard::new(0, 3).unwrap()));
+        let out = std::env::temp_dir().join("powertrace_test_merge/p_out");
+        let _ = std::fs::remove_dir_all(&out);
+        let err = format!("{:#}", merge_manifests(&[d.clone()], &out, false).unwrap_err());
+        assert!(err.contains("incomplete"), "{err}");
+        let rep = merge_manifests(&[d], &out, true).unwrap();
+        assert!(rep.done < rep.cells);
+        assert!(!rep.pending.is_empty());
+        // The partial summary still replays its done rows in grid order.
+        let s = std::fs::read_to_string(&rep.summary_path).unwrap();
+        assert!(s.starts_with(summary_header()));
+    }
+
+    #[test]
+    fn mismatched_inputs_are_rejected() {
+        let g = grid();
+        let a = write_dir("m0", &shard_manifest(&g, Shard::new(0, 2).unwrap()));
+        // Different identity options → different hash.
+        let mut other = shard_manifest(&g, Shard::new(1, 2).unwrap());
+        other.grid_hash = "fnv1a:0000000000000000".into();
+        let b = write_dir("m1", &other);
+        let out = std::env::temp_dir().join("powertrace_test_merge/m_out");
+        let err = format!("{:#}", merge_manifests(&[a.clone(), b], &out, true).unwrap_err());
+        assert!(err.contains("content hash"), "{err}");
+        // Conflicting rows for the same done cell are refused.
+        let mut c = shard_manifest(&g, Shard::new(0, 2).unwrap());
+        for st in c.cells.values_mut() {
+            if st.status == CellStatus::Done {
+                st.row = Some("tampered\n".into());
+            }
+        }
+        let cdir = write_dir("m2", &c);
+        let err = format!("{:#}", merge_manifests(&[a, cdir], &out, true).unwrap_err());
+        assert!(err.contains("conflicting summary rows"), "{err}");
+    }
+}

@@ -34,6 +34,8 @@ pub mod fsx;
 pub mod isolate;
 #[cfg(feature = "host")]
 pub mod manifest;
+#[cfg(feature = "host")]
+pub mod merge;
 pub mod shutdown;
 
 pub use isolate::{run_isolated, Deadline, Isolated, RetryPolicy};

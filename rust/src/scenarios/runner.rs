@@ -105,6 +105,14 @@ pub struct SweepOptions {
     /// (host default) or sequential on the caller thread (the core-build
     /// default). Byte-invariant like the worker counts.
     pub executor: Executor,
+    /// Run only the cells this shard owns (`None` = the whole grid). A
+    /// deterministic partition by stable cell id — see [`crate::shard`] —
+    /// so N processes given shards `0/N .. N-1/N` cover a grid exactly
+    /// once, and `powertrace merge` reassembles their partial summaries.
+    /// Like the worker knobs this is an execution-layout choice: recorded
+    /// in the manifest (so `--resume` re-runs the same slice) but excluded
+    /// from the identity hash (so every shard shares one content hash).
+    pub shard: Option<crate::shard::Shard>,
 }
 
 impl Default for SweepOptions {
@@ -118,6 +126,7 @@ impl Default for SweepOptions {
             window_s: 0.0,
             scales: ScaleConfig::default(),
             executor: Executor::default(),
+            shard: None,
         }
     }
 }
@@ -142,11 +151,20 @@ impl SweepOptions {
     }
 
     /// What the manifest records as launch options: the identity fields
-    /// plus the window size — `--resume` reads its defaults from here.
+    /// plus the window size and shard — `--resume` reads its defaults from
+    /// here (an explicit `--shard` flag overrides the recorded one).
     pub(crate) fn record_json(&self) -> Json {
         let Json::Obj(mut o) = self.identity_json() else { unreachable!("identity is an object") };
         o.insert("window_s".to_string(), Json::Num(self.window_s));
+        if let Some(sh) = self.shard {
+            o.insert("shard".to_string(), Json::Str(sh.to_string()));
+        }
         Json::Obj(o)
+    }
+
+    /// Does this run own `id`? `None` (no shard) owns everything.
+    pub(crate) fn owns_cell(&self, id: &str) -> bool {
+        self.shard.map_or(true, |s| s.owns(id))
     }
 }
 
@@ -305,7 +323,10 @@ pub(crate) fn sweep_prepared_sink(
         "sweep: dt must be positive seconds (got {})",
         opts.dt_s
     );
-    let cells = grid.expand();
+    let mut cells = grid.expand();
+    if opts.shard.is_some() {
+        cells.retain(|c| opts.owns_cell(&c.id));
+    }
     let n = cells.len();
     let outer = match opts.scenario_workers {
         0 => default_workers().min(n).max(1),
@@ -531,7 +552,14 @@ pub(crate) fn sweep_checkpointed_prepared(
     manifest.reconcile_exports(dir);
     manifest.header = Some(summary_header().to_string());
     let restored = manifest.done_count();
-    let todo: Vec<usize> = (0..cells.len()).filter(|&i| !manifest.is_done(&cells[i].id)).collect();
+    // The manifest always covers the FULL cell set (so every shard of a
+    // grid shares one manifest shape and `merge` is a plain done-cell
+    // union); sharding only narrows which pending cells *this* process
+    // runs. Cells another shard owns stay `pending` here — that is their
+    // normal state, not an interruption.
+    let todo: Vec<usize> = (0..cells.len())
+        .filter(|&i| !manifest.is_done(&cells[i].id) && opts.owns_cell(&cells[i].id))
+        .collect();
     let keeper = ManifestKeeper::new(manifest, mpath.clone())?;
     let n = todo.len();
     let outer = match opts.scenario_workers {
@@ -603,7 +631,8 @@ pub(crate) fn sweep_checkpointed_prepared(
     let interrupted = cells
         .iter()
         .filter(|c| {
-            manifest.cells.get(&c.id).is_some_and(|st| st.status == CellStatus::Pending)
+            opts.owns_cell(&c.id)
+                && manifest.cells.get(&c.id).is_some_and(|st| st.status == CellStatus::Pending)
         })
         .count();
     Ok(SweepOutcome {

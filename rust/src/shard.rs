@@ -1,0 +1,138 @@
+//! Deterministic shard partitioning for cluster-scale sweeps.
+//!
+//! A [`Shard`] names one slice of a sweep's cell list: shard `i/N` owns
+//! exactly the cells whose stable id hashes to `i` modulo `N` under
+//! [`fnv1a64`]. Ownership depends only on the cell id — never on grid
+//! order, worker counts, or which process asks — so N processes (or
+//! machines) given shards `0/N .. N-1/N` partition any grid exactly, with
+//! no coordination and no overlap, and `powertrace merge` can reassemble
+//! their partial summaries into the bytes an unsharded run would have
+//! written.
+//!
+//! Sharding is an *execution-layout* knob, like worker counts: it is
+//! recorded in run manifests (`--resume` re-runs the same slice by
+//! default) but excluded from the manifest identity hash, so every shard
+//! of a grid — and the merged result — shares one content hash.
+
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// FNV-1a 64-bit over raw bytes. This is the crate's stable id hash: cell
+/// ownership ([`Shard::owns`]) and the manifest content hash
+/// (`robust::manifest::content_hash`) both ride on it, so its constants
+/// are part of the on-disk and cross-process contract.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    hash
+}
+
+/// One slice of a deterministic cell partition: shard `index` of `count`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    /// Which slice this process runs (`0 ..= count - 1`).
+    pub index: usize,
+    /// Total number of slices the grid is split into (≥ 1).
+    pub count: usize,
+}
+
+impl Shard {
+    pub fn new(index: usize, count: usize) -> Result<Shard> {
+        if count == 0 {
+            bail!("shard: count must be >= 1 (got {index}/{count})");
+        }
+        if index >= count {
+            bail!("shard: index must be < count (got {index}/{count})");
+        }
+        Ok(Shard { index, count })
+    }
+
+    /// Parse the CLI / wire form `"i/N"` (e.g. `"0/3"`).
+    pub fn parse(s: &str) -> Result<Shard> {
+        let Some((i, n)) = s.split_once('/') else {
+            bail!("shard: expected 'i/N' (e.g. '0/3'), got '{s}'");
+        };
+        let index: usize =
+            i.trim().parse().map_err(|_| anyhow::anyhow!("shard: bad index in '{s}'"))?;
+        let count: usize =
+            n.trim().parse().map_err(|_| anyhow::anyhow!("shard: bad count in '{s}'"))?;
+        Shard::new(index, count)
+    }
+
+    /// Does this shard own the cell with stable id `id`? Every id is owned
+    /// by exactly one shard of any `count`-way partition, and `0/1` owns
+    /// everything.
+    pub fn owns(&self, id: &str) -> bool {
+        fnv1a64(id.as_bytes()) % self.count as u64 == self.index as u64
+    }
+
+    /// `true` for the trivial whole-grid shard `0/1`.
+    pub fn is_whole(&self) -> bool {
+        self.count == 1
+    }
+}
+
+impl fmt::Display for Shard {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_is_pinned() {
+        // The FNV-1a reference vectors: these constants are a cross-process
+        // contract (shard ownership + manifest content hashes).
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"w0-t0-f0-s3"), fnv1a64(b"w0-t0-f0-s3"));
+        assert_ne!(fnv1a64(b"w0-t0-f0-s3"), fnv1a64(b"w0-t0-f0-s4"));
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for s in ["0/1", "0/3", "2/3", "11/12"] {
+            let sh = Shard::parse(s).unwrap();
+            assert_eq!(sh.to_string(), s);
+        }
+        assert_eq!(Shard::parse(" 1 / 4 ").unwrap(), Shard { index: 1, count: 4 });
+        assert!(Shard::parse("3").is_err());
+        assert!(Shard::parse("a/3").is_err());
+        assert!(Shard::parse("1/x").is_err());
+        assert!(Shard::parse("3/3").is_err(), "index must be < count");
+        assert!(Shard::parse("0/0").is_err(), "count must be >= 1");
+        assert!(Shard::new(2, 2).is_err());
+    }
+
+    #[test]
+    fn every_id_is_owned_by_exactly_one_shard() {
+        let ids: Vec<String> = (0..64)
+            .flat_map(|w| (0..3).map(move |s| format!("w{w}-t0-f1-s{s}")))
+            .collect();
+        for count in [1usize, 2, 3, 5, 8] {
+            let shards: Vec<Shard> = (0..count).map(|i| Shard::new(i, count).unwrap()).collect();
+            for id in &ids {
+                let owners = shards.iter().filter(|s| s.owns(id)).count();
+                assert_eq!(owners, 1, "id {id} owned by {owners} shards of {count}");
+            }
+        }
+        // 0/1 owns everything.
+        let whole = Shard::new(0, 1).unwrap();
+        assert!(whole.is_whole());
+        assert!(ids.iter().all(|id| whole.owns(id)));
+    }
+
+    #[test]
+    fn ownership_is_id_stable_not_order_dependent() {
+        let shard = Shard::parse("1/3").unwrap();
+        let a = shard.owns("p0-s7");
+        // Same id, asked again or in any order: same answer.
+        assert_eq!(shard.owns("p0-s7"), a);
+    }
+}

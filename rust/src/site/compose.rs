@@ -105,6 +105,11 @@ pub struct SiteOptions {
     /// fully sequential on the caller thread (the core-build default; a
     /// debugging choice on hosts). Byte-invariant — see the module docs.
     pub executor: Executor,
+    /// Site-sweep shard: run only the variants this shard owns (`None` =
+    /// all). Ignored by single-site runs. Same contract as
+    /// [`crate::scenarios::SweepOptions::shard`]: recorded in the
+    /// manifest, excluded from the identity hash.
+    pub shard: Option<crate::shard::Shard>,
 }
 
 impl Default for SiteOptions {
@@ -118,6 +123,7 @@ impl Default for SiteOptions {
             load_interval_s: 60.0,
             collect_series: false,
             executor: Executor::default(),
+            shard: None,
         }
     }
 }
@@ -137,12 +143,21 @@ impl SiteOptions {
     }
 
     /// What the manifest records as launch options: the identity fields
-    /// plus the window size — `--resume` reads its defaults from here.
+    /// plus the window size and shard — `--resume` reads its defaults from
+    /// here (an explicit `--shard` flag overrides the recorded one).
     pub(crate) fn record_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         let Json::Obj(mut o) = self.identity_json() else { unreachable!("identity is an object") };
         o.insert("window_s".to_string(), Json::Num(self.window_s));
+        if let Some(sh) = self.shard {
+            o.insert("shard".to_string(), Json::Str(sh.to_string()));
+        }
         Json::Obj(o)
+    }
+
+    /// Does this run own site-sweep variant `id`? `None` owns everything.
+    pub(crate) fn owns_cell(&self, id: &str) -> bool {
+        self.shard.map_or(true, |s| s.owns(id))
     }
 }
 

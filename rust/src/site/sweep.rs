@@ -317,7 +317,10 @@ pub(crate) fn site_sweep_prepared_sink(
     sink: Option<&dyn TraceSink>,
 ) -> Result<Vec<(SiteVariant, SiteReport)>> {
     grid.validate()?;
-    let variants = grid.expand();
+    let mut variants = grid.expand();
+    if opts.shard.is_some() {
+        variants.retain(|v| opts.owns_cell(&v.id));
+    }
     let results = parallel_map_results(variants.len(), 1, |i| {
         let variant = &variants[i];
         let scoped = sink.map(|s| ScopedSink::new(s, &variant.id));
@@ -471,8 +474,13 @@ pub(crate) fn site_sweep_checkpointed_prepared(
     let with_overlay = variants.iter().any(|v| {
         !v.spec.overlays.is_empty() || v.spec.facilities.iter().any(|f| !f.overlays.is_empty())
     });
-    let todo: Vec<usize> =
-        (0..variants.len()).filter(|&i| !manifest.is_done(&variants[i].id)).collect();
+    // The manifest always covers the FULL variant set (every shard of a
+    // grid shares one manifest shape; `merge` unions done cells); sharding
+    // only narrows which pending variants *this* process runs. Variants
+    // another shard owns stay `pending` — normal, not an interruption.
+    let todo: Vec<usize> = (0..variants.len())
+        .filter(|&i| !manifest.is_done(&variants[i].id) && opts.owns_cell(&variants[i].id))
+        .collect();
     let keeper = ManifestKeeper::new(manifest, mpath.clone())?;
     let gen_ro: &Generator = gen;
     let results = parallel_map_results(todo.len(), 1, |k| -> Result<Option<SiteReport>> {
@@ -542,7 +550,10 @@ pub(crate) fn site_sweep_checkpointed_prepared(
         .collect();
     let interrupted = variants
         .iter()
-        .filter(|v| manifest.cells.get(&v.id).is_some_and(|st| st.status == CellStatus::Pending))
+        .filter(|v| {
+            opts.owns_cell(&v.id)
+                && manifest.cells.get(&v.id).is_some_and(|st| st.status == CellStatus::Pending)
+        })
         .count();
     Ok(SiteSweepOutcome {
         executed,

@@ -9,22 +9,47 @@
 //! windows in memory (wasm, a service, a notebook) must see exactly the
 //! bytes the CLI writes to disk.
 
-// Deliberately still on the deprecated run_* wrappers: doubles as
-// compile-and-run coverage that they keep reaching the same engines the
-// unified `api` routes through.
-#![allow(deprecated)]
-
 use powertrace_sim::aggregate::Topology;
+use powertrace_sim::api::{self, RunKind, RunOptions, RunOutcome, RunRequest, RunSpec};
 use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
-use powertrace_sim::export::{MemSink, TraceSink};
-use powertrace_sim::scenarios::{
-    run_sweep_sink, run_sweep_to, GridDefaults, SweepGrid, SweepOptions,
-};
-use powertrace_sim::site::{run_site, run_site_sink, SiteOptions, SiteSpec};
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::export::{DirSink, MemSink, TraceSink};
+use powertrace_sim::scenarios::{GridDefaults, SweepGrid, SweepReport};
+use powertrace_sim::site::{SiteReport, SiteSpec};
 use powertrace_sim::testutil::synth_generator;
 use powertrace_sim::util::threadpool::Executor;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+
+/// `api::execute` a sweep against a sink. For sweep kinds the API writes
+/// the one-shot artifacts (grid.json, summary.csv, per-cell scenario.json)
+/// through the sink after streaming, so no separate write() call follows.
+fn run_sweep_sink(
+    gen: &mut Generator,
+    grid: &SweepGrid,
+    options: RunOptions,
+    sink: &dyn TraceSink,
+) -> SweepReport {
+    let req = RunRequest { spec: RunSpec::Sweep(grid.clone()), options };
+    match api::execute(gen, &req, Some(sink)).unwrap() {
+        RunOutcome::Sweep(r) => r,
+        _ => unreachable!(),
+    }
+}
+
+/// `api::execute` a site against a sink.
+fn run_site_sink(
+    gen: &mut Generator,
+    spec: &SiteSpec,
+    options: RunOptions,
+    sink: &dyn TraceSink,
+) -> SiteReport {
+    let req = RunRequest { spec: RunSpec::Site(spec.clone()), options };
+    match api::execute(gen, &req, Some(sink)).unwrap() {
+        RunOutcome::Site(r) => r,
+        _ => unreachable!(),
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Fixtures (mirroring the sweep/site integration suites)
@@ -115,15 +140,14 @@ fn assert_trees_equal(disk: &Tree, mem: &Tree, ctx: &str) {
 fn facility_cell_memsink_matches_dirsink_bytes() {
     let (mut gen, ids) = synth_generator("chs_cell", 8, 4, 1, 41).unwrap();
     let grid = one_cell_grid(&ids);
-    let opts = SweepOptions { window_s: 7.0, ..SweepOptions::default() };
+    let opts = RunOptions::defaults_for(RunKind::Sweep).with_window(7.0);
 
     let dir = temp_dir("cell");
-    let a = run_sweep_to(&mut gen, &grid, &opts, Some(&dir)).unwrap();
-    a.write(&dir).unwrap();
+    let disk = DirSink::new(&dir);
+    let a = run_sweep_sink(&mut gen, &grid, opts.clone(), &disk);
 
     let mem = MemSink::new();
-    let b = run_sweep_sink(&mut gen, &grid, &opts, Some(&mem as &dyn TraceSink)).unwrap();
-    b.write_sink(&mem).unwrap();
+    let b = run_sweep_sink(&mut gen, &grid, opts, &mem);
 
     assert_eq!(a.summary_csv(), b.summary_csv());
     assert_trees_equal(&read_tree(&dir), &mem.files(), "facility cell");
@@ -137,20 +161,17 @@ fn sweep_memsink_matches_dirsink_bytes_across_workers_and_windows() {
     for workers in [1usize, 4] {
         for window_s in [7.0f64, 60.0] {
             let ctx = format!("sweep workers={workers} window={window_s}");
-            let opts = SweepOptions {
-                window_s,
-                scenario_workers: workers,
-                server_workers: workers,
-                ..SweepOptions::default()
-            };
+            let opts = RunOptions::defaults_for(RunKind::Sweep)
+                .with_window(window_s)
+                .with_workers(workers)
+                .with_server_workers(workers);
 
             let dir = temp_dir(&format!("sweep_w{workers}_s{window_s}"));
-            let a = run_sweep_to(&mut gen, &grid, &opts, Some(&dir)).unwrap();
-            a.write(&dir).unwrap();
+            let disk = DirSink::new(&dir);
+            let a = run_sweep_sink(&mut gen, &grid, opts.clone(), &disk);
 
             let mem = MemSink::new();
-            let b = run_sweep_sink(&mut gen, &grid, &opts, Some(&mem as &dyn TraceSink)).unwrap();
-            b.write_sink(&mem).unwrap();
+            let b = run_sweep_sink(&mut gen, &grid, opts, &mem);
 
             assert_eq!(a.summary_csv(), b.summary_csv(), "{ctx}: summary");
             assert_trees_equal(&read_tree(&dir), &mem.files(), &ctx);
@@ -166,19 +187,18 @@ fn site_memsink_matches_dirsink_bytes_across_workers_and_windows() {
     for workers in [1usize, 4] {
         for window_s in [7.0f64, 60.0] {
             let ctx = format!("site workers={workers} window={window_s}");
-            let opts = SiteOptions {
-                dt_s: 0.25,
-                window_s,
-                workers,
-                load_interval_s: 1.0,
-                ..SiteOptions::default()
-            };
+            let opts = RunOptions::defaults_for(RunKind::Site)
+                .with_dt(0.25)
+                .with_window(window_s)
+                .with_workers(workers)
+                .with_load_interval(1.0);
 
             let dir = temp_dir(&format!("site_w{workers}_s{window_s}"));
-            let a = run_site(&mut gen, &spec, &opts, Some(&dir)).unwrap();
+            let disk = DirSink::new(&dir);
+            let a = run_site_sink(&mut gen, &spec, opts.clone(), &disk);
 
             let mem = MemSink::new();
-            let b = run_site_sink(&mut gen, &spec, &opts, Some(&mem as &dyn TraceSink)).unwrap();
+            let b = run_site_sink(&mut gen, &spec, opts, &mem);
 
             assert_eq!(a.site.stats, b.site.stats, "{ctx}: site stats");
             assert_trees_equal(&read_tree(&dir), &mem.files(), &ctx);
@@ -195,21 +215,17 @@ fn site_memsink_matches_dirsink_bytes_across_workers_and_windows() {
 fn sequential_executor_matches_threaded_sweep_bytes() {
     let (mut gen, ids) = synth_generator("chs_exec", 8, 4, 1, 53).unwrap();
     let grid = small_grid(&ids);
-    let threaded = SweepOptions {
-        window_s: 7.0,
-        scenario_workers: 4,
-        server_workers: 2,
-        ..SweepOptions::default()
-    };
+    let threaded = RunOptions::defaults_for(RunKind::Sweep)
+        .with_window(7.0)
+        .with_workers(4)
+        .with_server_workers(2);
 
     let mem_t = MemSink::new();
-    let a = run_sweep_sink(&mut gen, &grid, &threaded, Some(&mem_t as &dyn TraceSink)).unwrap();
-    a.write_sink(&mem_t).unwrap();
+    let a = run_sweep_sink(&mut gen, &grid, threaded.clone(), &mem_t);
 
-    let sequential = SweepOptions { executor: Executor::Sequential, ..threaded };
+    let sequential = threaded.with_executor(Executor::Sequential);
     let mem_s = MemSink::new();
-    let b = run_sweep_sink(&mut gen, &grid, &sequential, Some(&mem_s as &dyn TraceSink)).unwrap();
-    b.write_sink(&mem_s).unwrap();
+    let b = run_sweep_sink(&mut gen, &grid, sequential, &mem_s);
 
     assert_eq!(a.summary_csv(), b.summary_csv());
     assert_trees_equal(&mem_t.files(), &mem_s.files(), "sequential vs threaded sweep");
@@ -219,20 +235,18 @@ fn sequential_executor_matches_threaded_sweep_bytes() {
 fn sequential_executor_matches_threaded_site_bytes() {
     let (mut gen, ids) = synth_generator("chs_exec_site", 8, 4, 1, 59).unwrap();
     let spec = small_site(&ids[0], 2);
-    let threaded = SiteOptions {
-        dt_s: 0.25,
-        window_s: 7.0,
-        workers: 4,
-        load_interval_s: 1.0,
-        ..SiteOptions::default()
-    };
+    let threaded = RunOptions::defaults_for(RunKind::Site)
+        .with_dt(0.25)
+        .with_window(7.0)
+        .with_workers(4)
+        .with_load_interval(1.0);
 
     let mem_t = MemSink::new();
-    let a = run_site_sink(&mut gen, &spec, &threaded, Some(&mem_t as &dyn TraceSink)).unwrap();
+    let a = run_site_sink(&mut gen, &spec, threaded.clone(), &mem_t);
 
-    let sequential = SiteOptions { executor: Executor::Sequential, ..threaded };
+    let sequential = threaded.with_executor(Executor::Sequential);
     let mem_s = MemSink::new();
-    let b = run_site_sink(&mut gen, &spec, &sequential, Some(&mem_s as &dyn TraceSink)).unwrap();
+    let b = run_site_sink(&mut gen, &spec, sequential, &mem_s);
 
     assert_eq!(a.site.stats, b.site.stats);
     assert_trees_equal(&mem_t.files(), &mem_s.files(), "sequential vs threaded site");

@@ -1,0 +1,168 @@
+//! Compile coverage for the `#[deprecated]` `run_*` wrappers.
+//!
+//! Every example, bench, and integration test routes through
+//! `crate::api` now; this binary keeps exactly ONE call site per wrapper
+//! alive so a signature break is a compile error instead of silent rot.
+//! Each test is also a minimal smoke run — the wrappers must still
+//! execute, not just parse.
+#![allow(deprecated)]
+
+use powertrace_sim::aggregate::Topology;
+use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
+use powertrace_sim::export::MemSink;
+use powertrace_sim::robust::RetryPolicy;
+use powertrace_sim::scenarios::{
+    run_sweep, run_sweep_checkpointed, run_sweep_sink, run_sweep_to, GridDefaults, SweepGrid,
+    SweepOptions,
+};
+use powertrace_sim::site::{
+    prepare_site, run_site, run_site_prepared, run_site_prepared_sink, run_site_sink,
+    run_site_sweep, run_site_sweep_checkpointed, SiteGrid, SiteOptions, SiteSpec,
+};
+use powertrace_sim::testutil::synth_generator;
+use std::path::PathBuf;
+
+/// 1 workload × 1 topology × 1 fleet × 1 seed = a single 40 s cell.
+fn one_cell_grid(id: &str) -> SweepGrid {
+    SweepGrid {
+        name: "deprecated-compat".into(),
+        defaults: GridDefaults { horizon_s: 40.0, ..GridDefaults::default() },
+        workloads: vec![WorkloadSpec::Poisson { rate: 0.5 }],
+        topologies: vec![Topology { rows: 1, racks_per_row: 1, servers_per_rack: 2 }],
+        fleets: vec![ServerAssignment::Uniform(id.to_string())],
+        seeds: vec![3],
+    }
+}
+
+fn small_site(id: &str) -> SiteSpec {
+    let mut scenario = ScenarioSpec::default_poisson(id, 0.5);
+    scenario.topology = Topology { rows: 1, racks_per_row: 1, servers_per_rack: 2 };
+    scenario.horizon_s = 40.0;
+    scenario.seed = 5;
+    let mut spec = SiteSpec::staggered("deprecated-compat", &scenario, 2, 0.0);
+    spec.utility_intervals_s = vec![15.0, 30.0];
+    spec
+}
+
+fn site_grid(id: &str) -> SiteGrid {
+    SiteGrid {
+        name: "deprecated-compat-grid".into(),
+        base: small_site(id),
+        phase_spreads_h: vec![0.0],
+        seeds: vec![0],
+        battery_kwh: Vec::new(),
+        cap_w: Vec::new(),
+        battery: None,
+    }
+}
+
+fn site_opts() -> SiteOptions {
+    SiteOptions { dt_s: 1.0, window_s: 7.0, load_interval_s: 1.0, ..SiteOptions::default() }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("powertrace_test_deprecated_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn run_sweep_still_compiles_and_runs() {
+    let (mut gen, ids) = synth_generator("dep_sweep", 8, 4, 1, 11).unwrap();
+    let report = run_sweep(&mut gen, &one_cell_grid(&ids[0]), &SweepOptions::default()).unwrap();
+    assert_eq!(report.cells.len(), 1);
+}
+
+#[test]
+fn run_sweep_to_still_compiles_and_runs() {
+    let (mut gen, ids) = synth_generator("dep_sweep_to", 8, 4, 1, 13).unwrap();
+    let grid = one_cell_grid(&ids[0]);
+    let opts = SweepOptions { window_s: 7.0, ..SweepOptions::default() };
+    let dir = temp_dir("sweep_to");
+    let report = run_sweep_to(&mut gen, &grid, &opts, Some(&dir)).unwrap();
+    assert_eq!(report.cells.len(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_sweep_sink_still_compiles_and_runs() {
+    let (mut gen, ids) = synth_generator("dep_sweep_sink", 8, 4, 1, 17).unwrap();
+    let grid = one_cell_grid(&ids[0]);
+    let opts = SweepOptions { window_s: 7.0, ..SweepOptions::default() };
+    let mem = MemSink::new();
+    let report = run_sweep_sink(&mut gen, &grid, &opts, Some(&mem)).unwrap();
+    assert_eq!(report.cells.len(), 1);
+    assert!(!mem.files().is_empty(), "streamed series went through the sink");
+}
+
+#[test]
+fn run_sweep_checkpointed_still_compiles_and_runs() {
+    let (mut gen, ids) = synth_generator("dep_sweep_ckpt", 8, 4, 1, 19).unwrap();
+    let grid = one_cell_grid(&ids[0]);
+    let dir = temp_dir("sweep_ckpt");
+    let out = run_sweep_checkpointed(
+        &mut gen,
+        &grid,
+        &SweepOptions::default(),
+        &dir,
+        &RetryPolicy::default(),
+    )
+    .unwrap();
+    assert!(out.failed.is_empty());
+    assert_eq!(out.report.cells.len(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_site_still_compiles_and_runs() {
+    let (mut gen, ids) = synth_generator("dep_site", 8, 4, 1, 23).unwrap();
+    let report = run_site(&mut gen, &small_site(&ids[0]), &site_opts(), None).unwrap();
+    assert_eq!(report.facilities.len(), 2);
+}
+
+#[test]
+fn run_site_prepared_still_compiles_and_runs() {
+    let (mut gen, ids) = synth_generator("dep_site_prep", 8, 4, 1, 29).unwrap();
+    let spec = small_site(&ids[0]);
+    prepare_site(&mut gen, &spec).unwrap();
+    let report = run_site_prepared(&gen, &spec, &site_opts(), None).unwrap();
+    assert_eq!(report.facilities.len(), 2);
+}
+
+#[test]
+fn run_site_sink_still_compiles_and_runs() {
+    let (mut gen, ids) = synth_generator("dep_site_sink", 8, 4, 1, 31).unwrap();
+    let mem = MemSink::new();
+    let report = run_site_sink(&mut gen, &small_site(&ids[0]), &site_opts(), Some(&mem)).unwrap();
+    assert_eq!(report.facilities.len(), 2);
+    assert!(!mem.files().is_empty(), "site exports went through the sink");
+}
+
+#[test]
+fn run_site_prepared_sink_still_compiles_and_runs() {
+    let (mut gen, ids) = synth_generator("dep_site_prep_sink", 8, 4, 1, 37).unwrap();
+    let spec = small_site(&ids[0]);
+    prepare_site(&mut gen, &spec).unwrap();
+    let report = run_site_prepared_sink(&gen, &spec, &site_opts(), None).unwrap();
+    assert_eq!(report.facilities.len(), 2);
+}
+
+#[test]
+fn run_site_sweep_still_compiles_and_runs() {
+    let (mut gen, ids) = synth_generator("dep_site_sweep", 8, 4, 1, 41).unwrap();
+    let results = run_site_sweep(&mut gen, &site_grid(&ids[0]), &site_opts(), None).unwrap();
+    assert_eq!(results.len(), 1);
+}
+
+#[test]
+fn run_site_sweep_checkpointed_still_compiles_and_runs() {
+    let (mut gen, ids) = synth_generator("dep_site_sweep_ckpt", 8, 4, 1, 43).unwrap();
+    let grid = site_grid(&ids[0]);
+    let dir = temp_dir("site_sweep_ckpt");
+    let out =
+        run_site_sweep_checkpointed(&mut gen, &grid, &site_opts(), &dir, &RetryPolicy::default())
+            .unwrap();
+    assert!(out.failed.is_empty());
+    assert_eq!(out.executed.len(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}

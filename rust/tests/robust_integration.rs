@@ -8,24 +8,66 @@
 //! serializes on one lock — a failpoint armed for one test must never
 //! leak into a concurrently running sweep.
 
-// These tests deliberately stay on the deprecated run_* wrappers: they
-// double as compile-and-run coverage that the wrappers still reach the
-// same engines the unified `api` routes through.
-#![allow(deprecated)]
-
 use powertrace_sim::aggregate::Topology;
-use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
-use powertrace_sim::robust::{CellStatus, RetryPolicy, RunManifest};
-use powertrace_sim::scenarios::{
-    run_sweep, run_sweep_checkpointed, GridDefaults, SweepGrid, SweepOptions, SWEEP_MANIFEST,
+use powertrace_sim::api::{
+    self, CheckpointedOutcome, RunKind, RunOptions, RunOutcome, RunRequest, RunSpec,
 };
+use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::export::DirSink;
+use powertrace_sim::robust::{CellStatus, RunManifest};
+use powertrace_sim::scenarios::{GridDefaults, SweepGrid, SweepOutcome, SWEEP_MANIFEST};
 use powertrace_sim::site::{
-    run_site_sweep, run_site_sweep_checkpointed, sweep_summary_csv, SiteGrid, SiteOptions,
-    SiteSpec, SITE_SWEEP_MANIFEST,
+    sweep_summary_csv, SiteGrid, SiteReport, SiteSpec, SiteSweepOutcome, SiteVariant,
+    SITE_SWEEP_MANIFEST,
 };
 use powertrace_sim::testutil::{check_seeded, synth_generator};
 use std::path::{Path, PathBuf};
 use std::sync::{Mutex, MutexGuard};
+
+/// Checkpointed sweep through the unified API: the retry policy rides on
+/// [`RunOptions`] (`max_retries`, `cell_timeout_s`).
+fn run_sweep_checkpointed(
+    gen: &mut Generator,
+    grid: &SweepGrid,
+    options: RunOptions,
+    dir: &Path,
+) -> SweepOutcome {
+    let req = RunRequest { spec: RunSpec::Sweep(grid.clone()), options };
+    match api::execute_checkpointed(gen, &req, dir).unwrap() {
+        CheckpointedOutcome::Sweep(o) => o,
+        _ => unreachable!(),
+    }
+}
+
+/// Checkpointed site sweep through the unified API.
+fn run_site_sweep_checkpointed(
+    gen: &mut Generator,
+    grid: &SiteGrid,
+    options: RunOptions,
+    dir: &Path,
+) -> SiteSweepOutcome {
+    let req = RunRequest { spec: RunSpec::SiteSweep(grid.clone()), options };
+    match api::execute_checkpointed(gen, &req, dir).unwrap() {
+        CheckpointedOutcome::SiteSweep(o) => o,
+        _ => unreachable!(),
+    }
+}
+
+/// Plain (non-checkpointed) site sweep against a directory sink.
+fn run_site_sweep(
+    gen: &mut Generator,
+    grid: &SiteGrid,
+    options: RunOptions,
+    out_dir: &Path,
+) -> Vec<(SiteVariant, SiteReport)> {
+    let req = RunRequest { spec: RunSpec::SiteSweep(grid.clone()), options };
+    let sink = DirSink::new(out_dir);
+    match api::execute(gen, &req, Some(&sink)).unwrap() {
+        RunOutcome::SiteSweep(r) => r,
+        _ => unreachable!(),
+    }
+}
 
 static SERIAL: Mutex<()> = Mutex::new(());
 
@@ -78,8 +120,12 @@ fn site_grid(id: &str) -> SiteGrid {
     }
 }
 
-fn site_opts() -> SiteOptions {
-    SiteOptions { dt_s: 0.25, window_s: 7.0, load_interval_s: 1.0, ..SiteOptions::default() }
+fn sweep_opts() -> RunOptions {
+    RunOptions::defaults_for(RunKind::Sweep)
+}
+
+fn site_opts() -> RunOptions {
+    RunOptions::defaults_for(RunKind::Site).with_dt(0.25).with_window(7.0).with_load_interval(1.0)
 }
 
 fn load_manifest(dir: &Path) -> RunManifest {
@@ -115,12 +161,11 @@ fn checkpointed_run_matches_plain_run_and_completes_manifest() {
     let _guard = serial();
     let (mut gen, ids) = synth_generator("robust_ckpt_full", 8, 4, 1, 11).unwrap();
     let grid = small_grid(&ids[0]);
-    let opts = SweepOptions::default();
-    let reference = run_sweep(&mut gen, &grid, &opts).unwrap().summary_csv();
+    let req = RunRequest { spec: RunSpec::Sweep(grid.clone()), options: sweep_opts() };
+    let reference = api::execute(&mut gen, &req, None).unwrap().summary_csv();
 
     let dir = temp_dir("ckpt_full");
-    let policy = RetryPolicy::default();
-    let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+    let out = run_sweep_checkpointed(&mut gen, &grid, sweep_opts(), &dir);
     assert_eq!(out.summary_csv, reference, "checkpointed bytes == plain runner bytes");
     assert_eq!(out.restored, 0);
     assert!(out.failed.is_empty());
@@ -148,11 +193,9 @@ fn resume_reruns_demoted_cells_to_identical_bytes() {
     let _guard = serial();
     let (mut gen, ids) = synth_generator("robust_resume", 8, 4, 1, 19).unwrap();
     let grid = small_grid(&ids[0]);
-    let opts = SweepOptions { window_s: 7.0, ..SweepOptions::default() };
     let dir = temp_dir("resume");
-    let policy = RetryPolicy::default();
     let reference =
-        run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap().summary_csv;
+        run_sweep_checkpointed(&mut gen, &grid, sweep_opts().with_window(7.0), &dir).summary_csv;
 
     // Simulate a crash: one cell rewound in the manifest, one with its
     // export directory deleted (reconcile_exports must demote it), and
@@ -166,13 +209,8 @@ fn resume_reruns_demoted_cells_to_identical_bytes() {
 
     // Resume under a different byte-invariant layout: window size and
     // worker counts may change freely between runs of one manifest.
-    let opts2 = SweepOptions {
-        window_s: 16.0,
-        scenario_workers: 1,
-        server_workers: 2,
-        ..SweepOptions::default()
-    };
-    let out = run_sweep_checkpointed(&mut gen, &grid, &opts2, &dir, &policy).unwrap();
+    let opts2 = sweep_opts().with_window(16.0).with_workers(1).with_server_workers(2);
+    let out = run_sweep_checkpointed(&mut gen, &grid, opts2, &dir);
     assert_eq!(out.restored, 2);
     assert_eq!(out.report.cells.len(), 2, "only the demoted cells re-run");
     assert!(out.failed.is_empty());
@@ -201,11 +239,10 @@ fn failing_cell_is_quarantined_then_resumes_clean() {
         WorkloadSpec::Replay { path: replay_path.to_string_lossy().into_owned(), offset_s: 0.0 },
     ];
     grid.seeds = vec![3];
-    let opts = SweepOptions::default();
-    let policy = RetryPolicy { max_retries: 2, cell_timeout_s: 0.0 };
+    let opts = sweep_opts().with_max_retries(2);
 
     let dir = temp_dir("quarantine");
-    let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+    let out = run_sweep_checkpointed(&mut gen, &grid, opts.clone(), &dir);
     assert_eq!(out.report.cells.len(), 1, "the healthy cell still completes");
     assert_eq!(out.failed.len(), 1);
     assert_eq!(out.failed[0].id, "w1-t0-f0-s3");
@@ -216,7 +253,7 @@ fn failing_cell_is_quarantined_then_resumes_clean() {
     // Provide the missing trace and resume: only the quarantined cell
     // re-runs, and the summary completes.
     std::fs::copy("data/traces/sample_requests.csv", &replay_path).unwrap();
-    let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+    let out = run_sweep_checkpointed(&mut gen, &grid, opts.clone(), &dir);
     assert_eq!(out.restored, 1);
     assert!(out.failed.is_empty());
     let m = load_manifest(&dir);
@@ -225,7 +262,7 @@ fn failing_cell_is_quarantined_then_resumes_clean() {
 
     // A from-scratch run with the trace present produces the same bytes.
     let clean = temp_dir("quarantine_clean");
-    let fresh = run_sweep_checkpointed(&mut gen, &grid, &opts, &clean, &policy).unwrap();
+    let fresh = run_sweep_checkpointed(&mut gen, &grid, opts, &clean);
     assert_eq!(fresh.summary_csv, out.summary_csv);
 }
 
@@ -234,7 +271,8 @@ fn prop_resume_from_any_prefix_reproduces_summary_bytes() {
     let _guard = serial();
     let (mut gen, ids) = synth_generator("robust_prefix", 8, 4, 1, 41).unwrap();
     let grid = small_grid(&ids[0]);
-    let reference = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap().summary_csv();
+    let req = RunRequest { spec: RunSpec::Sweep(grid.clone()), options: sweep_opts() };
+    let reference = api::execute(&mut gen, &req, None).unwrap().summary_csv();
     let cell_ids: Vec<String> = grid.expand().iter().map(|c| c.id.clone()).collect();
 
     let gen = std::cell::RefCell::new(gen);
@@ -243,14 +281,11 @@ fn prop_resume_from_any_prefix_reproduces_summary_bytes() {
         let case = case_no.get();
         case_no.set(case + 1);
         let dir = temp_dir(&format!("prefix_{case}"));
-        let opts1 = SweepOptions {
-            window_s: if rng.f64() < 0.5 { 7.0 } else { 0.0 },
-            scenario_workers: 1 + (rng.f64() * 2.0) as usize,
-            ..SweepOptions::default()
-        };
+        let opts1 = sweep_opts()
+            .with_window(if rng.f64() < 0.5 { 7.0 } else { 0.0 })
+            .with_workers(1 + (rng.f64() * 2.0) as usize);
         let mut g = gen.borrow_mut();
-        let policy = RetryPolicy::default();
-        let out = run_sweep_checkpointed(&mut g, &grid, &opts1, &dir, &policy).unwrap();
+        let out = run_sweep_checkpointed(&mut g, &grid, opts1, &dir);
         assert_eq!(out.summary_csv, reference, "clean checkpointed run, case {case}");
 
         // Rewind a random subset to pending — a crash after an arbitrary
@@ -268,13 +303,11 @@ fn prop_resume_from_any_prefix_reproduces_summary_bytes() {
         m.save(&dir.join(SWEEP_MANIFEST)).unwrap();
         let _ = std::fs::remove_file(dir.join("summary.csv"));
 
-        let opts2 = SweepOptions {
-            window_s: if rng.f64() < 0.5 { 16.0 } else { 0.0 },
-            scenario_workers: 1 + (rng.f64() * 2.0) as usize,
-            server_workers: 1 + (rng.f64() * 2.0) as usize,
-            ..SweepOptions::default()
-        };
-        let out = run_sweep_checkpointed(&mut g, &grid, &opts2, &dir, &policy).unwrap();
+        let opts2 = sweep_opts()
+            .with_window(if rng.f64() < 0.5 { 16.0 } else { 0.0 })
+            .with_workers(1 + (rng.f64() * 2.0) as usize)
+            .with_server_workers(1 + (rng.f64() * 2.0) as usize);
+        let out = run_sweep_checkpointed(&mut g, &grid, opts2, &dir);
         assert_eq!(out.restored, cell_ids.len() - demoted, "case {case}");
         assert_eq!(out.summary_csv, reference, "resumed run, case {case}");
         let _ = std::fs::remove_dir_all(&dir);
@@ -287,10 +320,9 @@ fn site_sweep_checkpoint_and_resume_are_byte_identical() {
     let (mut gen, ids) = synth_generator("robust_site", 8, 4, 1, 23).unwrap();
     let grid = site_grid(&ids[0]);
     let opts = site_opts();
-    let policy = RetryPolicy::default();
 
     let dir = temp_dir("site_ckpt");
-    let out = run_site_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+    let out = run_site_sweep_checkpointed(&mut gen, &grid, opts.clone(), &dir);
     assert_eq!(out.executed.len(), 2);
     assert_eq!(out.restored, 0);
     assert!(out.failed.is_empty());
@@ -298,7 +330,7 @@ fn site_sweep_checkpoint_and_resume_are_byte_identical() {
     // The plain (non-checkpointed) sweep writes the same bytes — summary
     // and every per-variant export.
     let plain_dir = temp_dir("site_plain");
-    let results = run_site_sweep(&mut gen, &grid, &opts, Some(&plain_dir)).unwrap();
+    let results = run_site_sweep(&mut gen, &grid, opts.clone(), &plain_dir);
     let plain = std::fs::read_to_string(plain_dir.join("site_sweep_summary.csv")).unwrap();
     assert_eq!(plain, sweep_summary_csv(&results));
     assert_eq!(out.summary_csv, plain);
@@ -314,7 +346,7 @@ fn site_sweep_checkpoint_and_resume_are_byte_identical() {
     // re-runs exactly that variant, and the summary bytes are unchanged.
     std::fs::remove_file(dir.join("p0-s7").join("site_load.csv")).unwrap();
     std::fs::remove_file(dir.join("site_sweep_summary.csv")).unwrap();
-    let out = run_site_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+    let out = run_site_sweep_checkpointed(&mut gen, &grid, opts, &dir);
     assert_eq!(out.restored, 1);
     assert_eq!(out.executed.len(), 1);
     assert_eq!(out.executed[0].0.id, "p0-s7");
@@ -348,12 +380,11 @@ mod failpoints {
         clear_all();
         let (mut gen, ids) = synth_generator("robust_fp_panic", 8, 4, 1, 29).unwrap();
         let grid = small_grid(&ids[0]);
-        let opts = SweepOptions::default();
-        let policy = RetryPolicy { max_retries: 1, cell_timeout_s: 0.0 };
+        let opts = sweep_opts().with_max_retries(1);
 
         let dir = temp_dir("fp_panic");
         arm(always("sweep.cell", "w1-t0-f0-s3", FailAction::Panic));
-        let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        let out = run_sweep_checkpointed(&mut gen, &grid, opts.clone(), &dir);
         clear_all();
         assert_eq!(out.report.cells.len(), 3, "healthy cells complete despite the panic");
         assert_eq!(out.failed.len(), 1);
@@ -362,11 +393,11 @@ mod failpoints {
         assert!(out.failed[0].reason.contains("injected panic"), "{}", out.failed[0].reason);
 
         // Disarmed, the resume completes and matches a clean run.
-        let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        let out = run_sweep_checkpointed(&mut gen, &grid, opts.clone(), &dir);
         assert_eq!(out.restored, 3);
         assert!(out.failed.is_empty());
         let clean = temp_dir("fp_panic_clean");
-        let fresh = run_sweep_checkpointed(&mut gen, &grid, &opts, &clean, &policy).unwrap();
+        let fresh = run_sweep_checkpointed(&mut gen, &grid, opts, &clean);
         assert_eq!(fresh.summary_csv, out.summary_csv);
     }
 
@@ -376,11 +407,9 @@ mod failpoints {
         clear_all();
         let (mut gen, ids) = synth_generator("robust_fp_retry", 8, 4, 1, 31).unwrap();
         let grid = small_grid(&ids[0]);
-        let opts = SweepOptions::default();
-        let policy = RetryPolicy::default();
         let dir = temp_dir("fp_retry");
         arm(once("sweep.cell", "w0-t0-f0-s4", FailAction::Panic));
-        let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        let out = run_sweep_checkpointed(&mut gen, &grid, sweep_opts(), &dir);
         clear_all();
         assert!(out.failed.is_empty(), "one panic fits the default retry budget");
         assert_eq!(out.report.cells.len(), 4);
@@ -395,17 +424,16 @@ mod failpoints {
         clear_all();
         let (mut gen, ids) = synth_generator("robust_fp_export", 8, 4, 1, 37).unwrap();
         let grid = small_grid(&ids[0]);
-        let opts = SweepOptions { window_s: 7.0, ..SweepOptions::default() };
-        let policy = RetryPolicy::default();
+        let opts = sweep_opts().with_window(7.0);
 
         let clean = temp_dir("fp_export_clean");
-        let reference = run_sweep_checkpointed(&mut gen, &grid, &opts, &clean, &policy).unwrap();
+        let reference = run_sweep_checkpointed(&mut gen, &grid, opts.clone(), &clean);
 
         // One injected write failure on the first rack-series export the
         // pool reaches: that cell fails mid-stream and is retried.
         let dir = temp_dir("fp_export");
         arm(once("export.write", "racks", FailAction::Error));
-        let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        let out = run_sweep_checkpointed(&mut gen, &grid, opts, &dir);
         clear_all();
         assert!(out.failed.is_empty());
         assert_eq!(out.report.cells.len(), 4);
@@ -430,15 +458,15 @@ mod failpoints {
         clear_all();
         let (mut gen, ids) = synth_generator("robust_fp_stall", 8, 4, 1, 43).unwrap();
         let grid = small_grid(&ids[0]);
-        let opts = SweepOptions { window_s: 7.0, ..SweepOptions::default() };
+        let opts = sweep_opts().with_window(7.0);
 
         // The stalled cell sleeps 1.5 s at its first window boundary and
         // the 1 s soft budget trips at the next deadline check; healthy
         // cells never sleep and finish far inside the budget.
         let dir = temp_dir("fp_stall");
         arm(always("sweep.cell.window", "w1-t0-f0-s4", FailAction::SleepMs(1500)));
-        let policy = RetryPolicy { max_retries: 0, cell_timeout_s: 1.0 };
-        let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        let strict = opts.clone().with_max_retries(0).with_cell_timeout(1.0);
+        let out = run_sweep_checkpointed(&mut gen, &grid, strict, &dir);
         clear_all();
         assert_eq!(out.report.cells.len(), 3);
         assert_eq!(out.failed.len(), 1);
@@ -446,13 +474,13 @@ mod failpoints {
         assert_eq!(out.failed[0].attempts, 1, "max_retries = 0: a single attempt");
         assert!(out.failed[0].reason.contains("budget"), "{}", out.failed[0].reason);
 
-        // Disarmed, resume completes to the clean run's bytes.
-        let relaxed = RetryPolicy::default();
-        let out = run_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &relaxed).unwrap();
+        // Disarmed, resume completes to the clean run's bytes (default
+        // retry budget, no cell deadline).
+        let out = run_sweep_checkpointed(&mut gen, &grid, opts.clone(), &dir);
         assert_eq!(out.restored, 3);
         assert!(out.failed.is_empty());
         let clean = temp_dir("fp_stall_clean");
-        let fresh = run_sweep_checkpointed(&mut gen, &grid, &opts, &clean, &relaxed).unwrap();
+        let fresh = run_sweep_checkpointed(&mut gen, &grid, opts, &clean);
         assert_eq!(fresh.summary_csv, out.summary_csv);
     }
 
@@ -462,9 +490,6 @@ mod failpoints {
     /// the uninterrupted run's bytes.
     #[test]
     fn interrupt_mid_sweep_leaves_pending_cells_and_resume_converges() {
-        use powertrace_sim::api::{
-            self, CheckpointedOutcome, RunKind, RunOptions, RunRequest, RunSpec,
-        };
         use powertrace_sim::robust::shutdown;
         let _guard = serial();
         clear_all();
@@ -529,23 +554,22 @@ mod failpoints {
         clear_all();
         let (mut gen, ids) = synth_generator("robust_fp_site", 8, 4, 1, 47).unwrap();
         let grid = site_grid(&ids[0]);
-        let opts = site_opts();
-        let policy = RetryPolicy { max_retries: 0, cell_timeout_s: 0.0 };
+        let opts = site_opts().with_max_retries(0);
 
         let dir = temp_dir("fp_site");
         arm(always("site.variant", "p0-s7", FailAction::Panic));
-        let out = run_site_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        let out = run_site_sweep_checkpointed(&mut gen, &grid, opts.clone(), &dir);
         clear_all();
         assert_eq!(out.executed.len(), 1, "the healthy variant completes");
         assert_eq!(out.failed.len(), 1);
         assert_eq!(out.failed[0].id, "p0-s7");
         assert!(out.failed[0].reason.contains("injected panic"), "{}", out.failed[0].reason);
 
-        let out = run_site_sweep_checkpointed(&mut gen, &grid, &opts, &dir, &policy).unwrap();
+        let out = run_site_sweep_checkpointed(&mut gen, &grid, opts.clone(), &dir);
         assert_eq!(out.restored, 1);
         assert!(out.failed.is_empty());
         let clean = temp_dir("fp_site_clean");
-        let fresh = run_site_sweep_checkpointed(&mut gen, &grid, &opts, &clean, &policy).unwrap();
+        let fresh = run_site_sweep_checkpointed(&mut gen, &grid, opts, &clean);
         assert_eq!(fresh.summary_csv, out.summary_csv);
     }
 }

@@ -19,6 +19,7 @@ use powertrace_sim::export::DirSink;
 use powertrace_sim::scenarios::{GridDefaults, SweepGrid};
 use powertrace_sim::serve::sink::{reconstruct, SinkEvent};
 use powertrace_sim::serve::{ServeConfig, Server};
+use powertrace_sim::shard::Shard;
 use powertrace_sim::site::{SiteGrid, SiteSpec};
 use powertrace_sim::testutil::synth_artifact_store;
 use powertrace_sim::util::json::{self, Json};
@@ -411,6 +412,78 @@ fn runs_dir_executes_sweep_kinds_checkpointed_with_manifest_status() {
     assert_eq!(m.get("done").unwrap().as_usize().unwrap(), 1);
     assert_eq!(m.get("pending").unwrap().as_usize().unwrap(), 0);
     assert_eq!(m.get("failed").unwrap().as_usize().unwrap(), 0);
+
+    handle.stop().unwrap();
+}
+
+/// The wire-version contract ([`RunRequest::WIRE_VERSION`]): `"v": 1` (or
+/// an absent `v`) is accepted; any other declared version is a plain 400
+/// before any stream starts. And a sharded sweep RunRequest is honored
+/// over the wire — only the cells shard `0/2` owns appear in the streamed
+/// partial summary.
+#[test]
+fn wire_version_gates_requests_and_sharded_sweeps_run_their_slice() {
+    let (_gref, gsrv, _root, ids) = paired_generators("serve_version", 29);
+    let handle = serve(gsrv, None);
+    let addr = handle.addr();
+
+    // Explicit v:1 — the version this build speaks — is accepted.
+    let mut req_json = site_request(&ids[0]).to_json();
+    if let Json::Obj(o) = &mut req_json {
+        o.insert("v".to_string(), Json::Num(1.0));
+    }
+    let body = json::to_string(&req_json);
+    let (status, _, _) = send_request(addr, "POST", "/v1/runs", Some(&body));
+    assert_eq!(status, 200);
+
+    // A future version is refused up front, naming the version.
+    if let Json::Obj(o) = &mut req_json {
+        o.insert("v".to_string(), Json::Num(2.0));
+    }
+    let body = json::to_string(&req_json);
+    let (status, _, payload) = send_request(addr, "POST", "/v1/runs", Some(&body));
+    assert_eq!(status, 400);
+    let err = body_json(&payload).str_field("error").unwrap();
+    assert!(err.contains("unsupported RunRequest version 2"), "{err}");
+
+    // A sharded sweep over the wire: the partial summary.csv carries a
+    // header plus exactly the owned cells' rows.
+    let shard = Shard::parse("0/2").unwrap();
+    let grid = SweepGrid {
+        name: "served_shard".to_string(),
+        defaults: GridDefaults { horizon_s: 60.0, ..GridDefaults::default() },
+        workloads: vec![WorkloadSpec::Poisson { rate: 0.5 }],
+        topologies: vec![Topology { rows: 1, racks_per_row: 2, servers_per_rack: 2 }],
+        fleets: vec![ServerAssignment::Uniform(ids[0].clone())],
+        seeds: vec![5, 9],
+    };
+    let owned: Vec<String> = grid
+        .expand()
+        .iter()
+        .map(|c| c.id.clone())
+        .filter(|id| shard.owns(id))
+        .collect();
+    let req = RunRequest {
+        spec: RunSpec::Sweep(grid),
+        options: RunOptions::defaults_for(RunKind::Sweep).with_shard(Some(shard)),
+    };
+    let body = json::to_string(&req.to_json());
+    let (status, _, payload) = send_request(addr, "POST", "/v1/runs", Some(&body));
+    assert_eq!(status, 200);
+    let (_, events) = split_events(&payload);
+    let summary = events
+        .iter()
+        .find_map(|e| match e {
+            SinkEvent::File { path, data } if path == "summary.csv" => {
+                Some(String::from_utf8(data.clone()).unwrap())
+            }
+            _ => None,
+        })
+        .expect("sharded sweep still streams its partial summary.csv");
+    assert_eq!(summary.lines().count(), 1 + owned.len());
+    for id in &owned {
+        assert!(summary.contains(id), "owned cell {id} missing from partial summary");
+    }
 
     handle.stop().unwrap();
 }

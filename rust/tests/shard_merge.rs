@@ -1,0 +1,183 @@
+//! Integration: the cluster-scale shard/merge contract end-to-end.
+//!
+//! For shard counts N ∈ {1, 2, 3, 5}, running a grid as N independent
+//! sharded checkpointed runs and merging the partials — in any (seeded,
+//! shuffled) input order — must reproduce the unsharded run's
+//! `summary.csv` byte-for-byte and agree on the manifest content hash.
+//! N = 5 over a 4-cell grid covers the empty-shard case: a shard that
+//! owns nothing still writes a valid, mergeable manifest.
+
+use powertrace_sim::aggregate::Topology;
+use powertrace_sim::api::{
+    self, CheckpointedOutcome, RunKind, RunOptions, RunRequest, RunSpec,
+};
+use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::robust::merge::merge_manifests;
+use powertrace_sim::robust::RunManifest;
+use powertrace_sim::scenarios::{GridDefaults, SweepGrid, SWEEP_MANIFEST};
+use powertrace_sim::shard::Shard;
+use powertrace_sim::site::{SiteGrid, SiteSpec, SITE_SWEEP_MANIFEST};
+use powertrace_sim::testutil::{check_seeded, synth_generator};
+use std::path::PathBuf;
+
+/// 2 workloads × 1 topology × 1 fleet × 2 seeds = 4 cells, 40 s horizon.
+fn small_grid(id: &str) -> SweepGrid {
+    SweepGrid {
+        name: "shard-itest".into(),
+        defaults: GridDefaults { horizon_s: 40.0, ..GridDefaults::default() },
+        workloads: vec![
+            WorkloadSpec::Poisson { rate: 0.5 },
+            WorkloadSpec::Mmpp { mean_rate: 0.5, burstiness: 4.0 },
+        ],
+        topologies: vec![Topology { rows: 1, racks_per_row: 1, servers_per_rack: 2 }],
+        fleets: vec![ServerAssignment::Uniform(id.to_string())],
+        seeds: vec![3, 4],
+    }
+}
+
+/// 1 phase spread × 2 seeds = 2 variants over a 2-facility, 40 s site.
+fn site_grid(id: &str) -> SiteGrid {
+    let mut scenario = ScenarioSpec::default_poisson(id, 0.5);
+    scenario.topology = Topology { rows: 1, racks_per_row: 1, servers_per_rack: 2 };
+    scenario.horizon_s = 40.0;
+    let mut base = SiteSpec::staggered("shard", &scenario, 2, 0.0);
+    base.utility_intervals_s = vec![15.0, 30.0];
+    SiteGrid {
+        name: "shard-site".into(),
+        base,
+        phase_spreads_h: vec![0.0],
+        seeds: vec![0, 7],
+        battery_kwh: Vec::new(),
+        cap_w: Vec::new(),
+        battery: None,
+    }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("powertrace_test_shard_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn run_checkpointed(gen: &mut Generator, req: &RunRequest, dir: &std::path::Path) {
+    api::execute_checkpointed(gen, req, dir).unwrap();
+}
+
+/// Seeded Fisher–Yates over the input order — "merged in any order".
+fn shuffled(dirs: &[PathBuf], rng: &mut impl FnMut() -> f64) -> Vec<PathBuf> {
+    let mut order: Vec<PathBuf> = dirs.to_vec();
+    for i in (1..order.len()).rev() {
+        let j = (rng() * (i + 1) as f64) as usize;
+        order.swap(i, j.min(i));
+    }
+    order
+}
+
+#[test]
+fn sharded_sweeps_merge_to_unsharded_bytes_for_every_partition() {
+    let (mut gen, ids) = synth_generator("shard_sweep", 8, 4, 1, 61).unwrap();
+    let grid = small_grid(&ids[0]);
+    let options = RunOptions::defaults_for(RunKind::Sweep);
+
+    // The unsharded reference: summary bytes + manifest content hash.
+    let ref_dir = temp_dir("sweep_ref");
+    let req = RunRequest { spec: RunSpec::Sweep(grid.clone()), options: options.clone() };
+    run_checkpointed(&mut gen, &req, &ref_dir);
+    let reference = std::fs::read(ref_dir.join("summary.csv")).unwrap();
+    let ref_hash = RunManifest::load(&ref_dir.join(SWEEP_MANIFEST)).unwrap().grid_hash;
+
+    for count in [1usize, 2, 3, 5] {
+        let dirs: Vec<PathBuf> = (0..count)
+            .map(|i| {
+                let dir = temp_dir(&format!("sweep_{i}_of_{count}"));
+                let shard = Shard::new(i, count).unwrap();
+                let req = RunRequest {
+                    spec: RunSpec::Sweep(grid.clone()),
+                    options: options.clone().with_shard(Some(shard)),
+                };
+                run_checkpointed(&mut gen, &req, &dir);
+                // Every shard binds to the unsharded content hash.
+                let m = RunManifest::load(&dir.join(SWEEP_MANIFEST)).unwrap();
+                assert_eq!(m.grid_hash, ref_hash, "shard {i}/{count}");
+                dir
+            })
+            .collect();
+        if count == 5 {
+            // Pigeonhole: 4 cells over 5 shards leaves an empty shard,
+            // whose manifest must still be valid and mergeable.
+            let empty = dirs
+                .iter()
+                .filter(|d| {
+                    RunManifest::load(&d.join(SWEEP_MANIFEST)).unwrap().done_count() == 0
+                })
+                .count();
+            assert!(empty >= 1, "5 shards of 4 cells must include an empty shard");
+        }
+        check_seeded(&format!("merge order, {count} shards"), 0xD1CE, 4, |rng| {
+            let order = shuffled(&dirs, &mut || rng.f64());
+            let out = temp_dir(&format!("sweep_merged_{count}"));
+            let rep = merge_manifests(&order, &out, false).unwrap();
+            assert_eq!((rep.cells, rep.done), (4, 4));
+            assert_eq!(
+                std::fs::read(&rep.summary_path).unwrap(),
+                reference,
+                "{count} shards merged != unsharded bytes"
+            );
+            let merged = RunManifest::load(&rep.manifest_path).unwrap();
+            assert_eq!(merged.grid_hash, ref_hash);
+            assert!(merged.options.get_opt("shard").is_none(), "merged manifest keeps no shard");
+            let _ = std::fs::remove_dir_all(&out);
+        });
+        for d in &dirs {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&ref_dir);
+}
+
+#[test]
+fn sharded_site_sweep_merges_to_unsharded_bytes() {
+    let (mut gen, ids) = synth_generator("shard_site", 8, 4, 1, 67).unwrap();
+    let grid = site_grid(&ids[0]);
+    let options = RunOptions::defaults_for(RunKind::SiteSweep)
+        .with_dt(0.25)
+        .with_window(7.0)
+        .with_load_interval(1.0);
+
+    let ref_dir = temp_dir("site_ref");
+    let req = RunRequest { spec: RunSpec::SiteSweep(grid.clone()), options: options.clone() };
+    let CheckpointedOutcome::SiteSweep(out) =
+        api::execute_checkpointed(&mut gen, &req, &ref_dir).unwrap()
+    else {
+        unreachable!()
+    };
+    assert_eq!(out.executed.len(), 2);
+    let reference = std::fs::read(ref_dir.join("site_sweep_summary.csv")).unwrap();
+    let ref_hash = RunManifest::load(&ref_dir.join(SITE_SWEEP_MANIFEST)).unwrap().grid_hash;
+
+    let dirs: Vec<PathBuf> = (0..2usize)
+        .map(|i| {
+            let dir = temp_dir(&format!("site_{i}_of_2"));
+            let req = RunRequest {
+                spec: RunSpec::SiteSweep(grid.clone()),
+                options: options.clone().with_shard(Some(Shard::new(i, 2).unwrap())),
+            };
+            run_checkpointed(&mut gen, &req, &dir);
+            dir
+        })
+        .collect();
+
+    // Both input orders assemble the same bytes as the unsharded run.
+    for order in [vec![dirs[0].clone(), dirs[1].clone()], vec![dirs[1].clone(), dirs[0].clone()]] {
+        let out_dir = temp_dir("site_merged");
+        let rep = merge_manifests(&order, &out_dir, false).unwrap();
+        assert_eq!(rep.kind, "site_sweep");
+        assert_eq!(std::fs::read(&rep.summary_path).unwrap(), reference);
+        assert_eq!(RunManifest::load(&rep.manifest_path).unwrap().grid_hash, ref_hash);
+        let _ = std::fs::remove_dir_all(&out_dir);
+    }
+    for d in dirs.iter().chain([&ref_dir]) {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}

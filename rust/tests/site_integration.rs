@@ -4,20 +4,51 @@
 //! single-facility identity), and byte-stable exports across worker
 //! counts and window sizes.
 
-// Deliberately still on the deprecated run_* wrappers: doubles as
-// compile-and-run coverage that they keep reaching the same engines the
-// unified `api` routes through.
-#![allow(deprecated)]
-
 use powertrace_sim::aggregate::Topology;
+use powertrace_sim::api::{self, RunKind, RunOptions, RunOutcome, RunRequest, RunSpec};
 use powertrace_sim::config::{ScenarioSpec, WorkloadSpec};
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::export::{DirSink, TraceSink};
 use powertrace_sim::scenarios::diff_summary_files;
 use powertrace_sim::site::{
-    run_site, run_site_sweep, FacilitySpec, OverlaySpec, SiteGrid, SiteOptions, SiteReport,
-    SiteSpec, TrainingSpec,
+    FacilitySpec, OverlaySpec, SiteGrid, SiteReport, SiteSpec, SiteVariant, TrainingSpec,
 };
 use powertrace_sim::testutil::synth_generator;
 use powertrace_sim::workload::TrafficMode;
+use std::path::Path;
+
+/// `api::execute` a [`RunSpec::Site`], optionally against a directory sink.
+fn run_site(
+    gen: &mut Generator,
+    spec: &SiteSpec,
+    options: RunOptions,
+    out_dir: Option<&Path>,
+) -> SiteReport {
+    let req = RunRequest { spec: RunSpec::Site(spec.clone()), options };
+    let sink = out_dir.map(DirSink::new);
+    let sink_ref = sink.as_ref().map(|s| s as &dyn TraceSink);
+    match api::execute(gen, &req, sink_ref).unwrap() {
+        RunOutcome::Site(r) => r,
+        _ => unreachable!(),
+    }
+}
+
+/// `api::execute` a [`RunSpec::SiteSweep`], optionally against a directory
+/// sink.
+fn run_site_sweep(
+    gen: &mut Generator,
+    grid: &SiteGrid,
+    options: RunOptions,
+    out_dir: Option<&Path>,
+) -> Vec<(SiteVariant, SiteReport)> {
+    let req = RunRequest { spec: RunSpec::SiteSweep(grid.clone()), options };
+    let sink = out_dir.map(DirSink::new);
+    let sink_ref = sink.as_ref().map(|s| s as &dyn TraceSink);
+    match api::execute(gen, &req, sink_ref).unwrap() {
+        RunOutcome::SiteSweep(r) => r,
+        _ => unreachable!(),
+    }
+}
 
 /// A small facility scenario every test composes from: 1×2×2 = 4 servers,
 /// 60 s horizon.
@@ -31,14 +62,12 @@ fn base_scenario(id: &str) -> ScenarioSpec {
 
 /// Site options sized for the 60 s test horizon: ragged 7 s windows,
 /// utility intervals that actually complete, 1 s load export.
-fn test_opts() -> SiteOptions {
-    SiteOptions {
-        dt_s: 0.25,
-        window_s: 7.0,
-        load_interval_s: 1.0,
-        collect_series: true,
-        ..SiteOptions::default()
-    }
+fn test_opts() -> RunOptions {
+    RunOptions::defaults_for(RunKind::Site)
+        .with_dt(0.25)
+        .with_window(7.0)
+        .with_load_interval(1.0)
+        .with_collect_series(true)
 }
 
 /// The training archetype every mixed-class test composes: 60 s horizon
@@ -64,7 +93,7 @@ fn single_facility_site_reproduces_the_plain_facility_path() {
     let (mut gen, ids) = synth_generator("site_single", 8, 4, 1, 23).unwrap();
     let spec = small_site(&ids[0], 1);
     let opts = test_opts();
-    let report = run_site(&mut gen, &spec, &opts, None).unwrap();
+    let report = run_site(&mut gen, &spec, opts.clone(), None);
     let site_series = report.site_series.as_ref().expect("collect_series requested");
 
     // The buffered facility path on the identical scenario (phase 0 +
@@ -93,7 +122,7 @@ fn site_peak_bounded_by_sum_of_facility_peaks() {
     // Three facilities, distinct seeds (the staggered builder's seed
     // ladder), zero phase offsets.
     let spec = small_site(&ids[0], 3);
-    let report = run_site(&mut gen, &spec, &test_opts(), None).unwrap();
+    let report = run_site(&mut gen, &spec, test_opts(), None);
     assert_eq!(report.facilities.len(), 3);
     let sum: f64 = report.facilities.iter().map(|f| f.summary.stats.peak_w).sum();
     assert_eq!(sum.to_bits(), report.sum_facility_peaks_w.to_bits());
@@ -129,7 +158,7 @@ fn cloned_facilities_with_zero_offsets_are_fully_coincident() {
         facilities: vec![fac("a"), fac("b"), fac("c")],
         overlays: Vec::new(),
     };
-    let report = run_site(&mut gen, &spec, &test_opts(), None).unwrap();
+    let report = run_site(&mut gen, &spec, test_opts(), None);
     // Identical facilities peak together: coincidence 1 up to the f32
     // rounding of the composed series (half an ulp, ~6e-8 relative).
     assert!(
@@ -158,13 +187,9 @@ fn site_exports_byte_identical_across_workers_and_windows() {
     for (i, &(workers, window_s)) in layouts.iter().enumerate() {
         let dir = std::env::temp_dir().join(format!("powertrace_test_site_bytes_{i}"));
         let _ = std::fs::remove_dir_all(&dir);
-        let opts = SiteOptions {
-            workers,
-            window_s,
-            collect_series: false,
-            ..test_opts()
-        };
-        run_site(&mut gen, &spec, &opts, Some(&dir)).unwrap();
+        let opts =
+            test_opts().with_workers(workers).with_window(window_s).with_collect_series(false);
+        run_site(&mut gen, &spec, opts, Some(&dir));
         dirs.push(dir);
     }
     for name in ["site_load.csv", "site_summary.csv", "site_spec.json"] {
@@ -194,7 +219,7 @@ fn site_summary_feeds_the_diff_gate() {
     let spec = small_site(&ids[0], 2);
     let dir = std::env::temp_dir().join("powertrace_test_site_diff");
     let _ = std::fs::remove_dir_all(&dir);
-    run_site(&mut gen, &spec, &test_opts(), Some(&dir)).unwrap();
+    run_site(&mut gen, &spec, test_opts(), Some(&dir));
     let summary = dir.join("site_summary.csv");
     // Self-diff matches exactly.
     let r = diff_summary_files(&summary, &summary, 0.0).unwrap();
@@ -240,8 +265,8 @@ fn phase_offsets_change_diurnal_composition_deterministically() {
     };
     let dir = std::env::temp_dir().join("powertrace_test_site_sweep");
     let _ = std::fs::remove_dir_all(&dir);
-    let opts = SiteOptions { collect_series: false, ..test_opts() };
-    let results = run_site_sweep(&mut gen, &grid, &opts, Some(&dir)).unwrap();
+    let opts = test_opts().with_collect_series(false);
+    let results = run_site_sweep(&mut gen, &grid, opts.clone(), Some(&dir));
     assert_eq!(results.len(), 2);
     assert!(dir.join("site_sweep_summary.csv").exists());
     assert!(dir.join("p0-s5").join("site_load.csv").exists());
@@ -252,7 +277,7 @@ fn phase_offsets_change_diurnal_composition_deterministically() {
     // Re-running the sweep reproduces the summary byte-for-byte.
     let dir2 = std::env::temp_dir().join("powertrace_test_site_sweep_rerun");
     let _ = std::fs::remove_dir_all(&dir2);
-    run_site_sweep(&mut gen, &grid, &opts, Some(&dir2)).unwrap();
+    run_site_sweep(&mut gen, &grid, opts, Some(&dir2));
     assert_eq!(
         std::fs::read(dir.join("site_sweep_summary.csv")).unwrap(),
         std::fs::read(dir2.join("site_sweep_summary.csv")).unwrap()
@@ -297,9 +322,9 @@ fn empty_overlay_list_is_the_identity_surface() {
     let dir_b = std::env::temp_dir().join("powertrace_test_site_identity_b");
     let _ = std::fs::remove_dir_all(&dir_a);
     let _ = std::fs::remove_dir_all(&dir_b);
-    let opts = SiteOptions { collect_series: false, ..test_opts() };
-    run_site(&mut gen, &spec, &opts, Some(&dir_a)).unwrap();
-    run_site(&mut gen, &parsed, &opts, Some(&dir_b)).unwrap();
+    let opts = test_opts().with_collect_series(false);
+    run_site(&mut gen, &spec, opts.clone(), Some(&dir_a));
+    run_site(&mut gen, &parsed, opts, Some(&dir_b));
     for name in ["site_load.csv", "site_summary.csv", "site_spec.json"] {
         assert_eq!(
             std::fs::read(dir_a.join(name)).unwrap(),
@@ -316,14 +341,14 @@ fn cap_overlay_bounds_the_site_and_gains_delta_columns() {
     let (mut gen, ids) = synth_generator("site_cap_ov", 8, 4, 1, 59).unwrap();
     let mut spec = small_site(&ids[0], 3);
     // Baseline raw peak, to place the cap where it actually clips.
-    let baseline = run_site(&mut gen, &spec, &test_opts(), None).unwrap();
+    let baseline = run_site(&mut gen, &spec, test_opts(), None);
     let raw_peak = baseline.site.stats.peak_w;
     let cap_w = 0.9 * raw_peak;
     spec.overlays = vec![OverlaySpec::Cap { cap_w }];
 
     let dir = std::env::temp_dir().join("powertrace_test_site_cap_ov");
     let _ = std::fs::remove_dir_all(&dir);
-    let report = run_site(&mut gen, &spec, &test_opts(), Some(&dir)).unwrap();
+    let report = run_site(&mut gen, &spec, test_opts(), Some(&dir));
     let overlay = report.site.overlay.expect("site chain ran");
     // The tentpole properties: exact cap bound on the f64-tracked net
     // peak, raw peak unchanged, clip integral = shaved energy.
@@ -379,8 +404,9 @@ fn overlaid_exports_are_byte_identical_across_workers_and_windows() {
     for (i, &(workers, window_s)) in layouts.iter().enumerate() {
         let dir = std::env::temp_dir().join(format!("powertrace_test_site_ov_bytes_{i}"));
         let _ = std::fs::remove_dir_all(&dir);
-        let opts = SiteOptions { workers, window_s, collect_series: false, ..test_opts() };
-        run_site(&mut gen, &spec, &opts, Some(&dir)).unwrap();
+        let opts =
+            test_opts().with_workers(workers).with_window(window_s).with_collect_series(false);
+        run_site(&mut gen, &spec, opts, Some(&dir));
         dirs.push(dir);
     }
     for name in ["site_load.csv", "site_summary.csv", "site_spec.json"] {
@@ -397,12 +423,12 @@ fn facility_overlays_modulate_the_stream_the_site_composes() {
     let (mut gen, ids) = synth_generator("site_fac_ov", 8, 4, 1, 67).unwrap();
     let mut spec = small_site(&ids[0], 2);
     // Cap below the facility's raw peak, so the stage actually clips.
-    let baseline = run_site(&mut gen, &spec, &test_opts(), None).unwrap();
+    let baseline = run_site(&mut gen, &spec, test_opts(), None);
     let cap_w = 0.85 * baseline.facilities[0].summary.stats.peak_w;
     spec.facilities[0].overlays = vec![OverlaySpec::Cap { cap_w }];
     let dir = std::env::temp_dir().join("powertrace_test_site_fac_ov");
     let _ = std::fs::remove_dir_all(&dir);
-    let report = run_site(&mut gen, &spec, &test_opts(), Some(&dir)).unwrap();
+    let report = run_site(&mut gen, &spec, test_opts(), Some(&dir));
     // The capped facility carries its own delta summary; the site row has
     // none (no site-level chain) but the export still gains the columns.
     let o = report.facilities[0].summary.overlay.expect("facility chain ran");
@@ -436,7 +462,7 @@ fn training_only_site_is_the_exact_phase_shifted_step_function() {
     let opts = test_opts();
     let dir = std::env::temp_dir().join("powertrace_test_site_train_only");
     let _ = std::fs::remove_dir_all(&dir);
-    let report = run_site(&mut gen, &spec, &opts, Some(&dir)).unwrap();
+    let report = run_site(&mut gen, &spec, opts.clone(), Some(&dir));
     // The composed series IS the step function, shifted 5 s later,
     // bit-for-bit (the step levels are exactly representable in f32).
     let series = report.site_series.as_ref().expect("collect_series requested");
@@ -464,8 +490,9 @@ fn training_only_site_is_the_exact_phase_shifted_step_function() {
     for (i, &(workers, window_s)) in [(1usize, 7.0f64), (4, 13.0), (2, 60.0)].iter().enumerate() {
         let d = std::env::temp_dir().join(format!("powertrace_test_site_train_only_{i}"));
         let _ = std::fs::remove_dir_all(&d);
-        let opts = SiteOptions { workers, window_s, collect_series: false, ..test_opts() };
-        run_site(&mut gen, &spec, &opts, Some(&d)).unwrap();
+        let opts =
+            test_opts().with_workers(workers).with_window(window_s).with_collect_series(false);
+        run_site(&mut gen, &spec, opts, Some(&d));
         dirs.push(d);
     }
     for name in ["site_load.csv", "site_summary.csv"] {
@@ -490,9 +517,8 @@ fn mixed_site_strictly_smooths_relative_training_ramps() {
     let mut mixed = train_only.clone();
     mixed.name = "mixed".into();
     mixed.facilities.push(FacilitySpec::inference("inf0", 0.0, base_scenario(&ids[0])));
-    let opts = test_opts();
-    let a = run_site(&mut gen, &train_only, &opts, None).unwrap();
-    let b = run_site(&mut gen, &mixed, &opts, None).unwrap();
+    let a = run_site(&mut gen, &train_only, test_opts(), None);
+    let b = run_site(&mut gen, &mixed, test_opts(), None);
     assert_eq!(b.facilities.len(), 2);
     assert_eq!(b.facilities[1].role, "facility");
     // The inference class adds load between the training steps, so every
@@ -532,8 +558,8 @@ fn site_sweep_training_rows_ignore_the_seed_axis() {
     };
     let dir = std::env::temp_dir().join("powertrace_test_site_train_sweep");
     let _ = std::fs::remove_dir_all(&dir);
-    let opts = SiteOptions { collect_series: false, ..test_opts() };
-    let results = run_site_sweep(&mut gen, &grid, &opts, Some(&dir)).unwrap();
+    let opts = test_opts().with_collect_series(false);
+    let results = run_site_sweep(&mut gen, &grid, opts.clone(), Some(&dir));
     assert_eq!(results.len(), 2);
     let fac = |r: &SiteReport, role: &str| {
         r.facilities.iter().find(|f| f.role == role).map(|f| f.summary.stats).unwrap()
@@ -545,7 +571,7 @@ fn site_sweep_training_rows_ignore_the_seed_axis() {
     // The whole mixed sweep reruns byte-identically.
     let dir2 = std::env::temp_dir().join("powertrace_test_site_train_sweep_rerun");
     let _ = std::fs::remove_dir_all(&dir2);
-    run_site_sweep(&mut gen, &grid, &opts, Some(&dir2)).unwrap();
+    run_site_sweep(&mut gen, &grid, opts, Some(&dir2));
     assert_eq!(
         std::fs::read(dir.join("site_sweep_summary.csv")).unwrap(),
         std::fs::read(dir2.join("site_sweep_summary.csv")).unwrap()
@@ -559,7 +585,7 @@ fn battery_cap_sweep_axis_runs_and_orders_peaks() {
     site.name = "ovsweep".into();
     // Size the axes off the measured raw peak so the stages engage: the
     // battery shaves toward 80 %, the cap clips at 90 %.
-    let baseline = run_site(&mut gen, &site, &test_opts(), None).unwrap();
+    let baseline = run_site(&mut gen, &site, test_opts(), None);
     let raw_peak = baseline.site.stats.peak_w;
     let cap_w = 0.9 * raw_peak;
     let grid = SiteGrid {
@@ -579,8 +605,8 @@ fn battery_cap_sweep_axis_runs_and_orders_peaks() {
     };
     let dir = std::env::temp_dir().join("powertrace_test_site_ov_sweep");
     let _ = std::fs::remove_dir_all(&dir);
-    let opts = SiteOptions { collect_series: false, ..test_opts() };
-    let results = run_site_sweep(&mut gen, &grid, &opts, Some(&dir)).unwrap();
+    let opts = test_opts().with_collect_series(false);
+    let results = run_site_sweep(&mut gen, &grid, opts.clone(), Some(&dir));
     assert_eq!(results.len(), 4);
     // b0-c0 is the untouched baseline; every overlaid variant's peak is
     // bounded by it, and the capped variants respect their cap.
@@ -611,7 +637,7 @@ fn battery_cap_sweep_axis_runs_and_orders_peaks() {
     }
     let dir2 = std::env::temp_dir().join("powertrace_test_site_ov_sweep_rerun");
     let _ = std::fs::remove_dir_all(&dir2);
-    run_site_sweep(&mut gen, &grid, &opts, Some(&dir2)).unwrap();
+    run_site_sweep(&mut gen, &grid, opts, Some(&dir2));
     assert_eq!(
         std::fs::read(dir.join("site_sweep_summary.csv")).unwrap(),
         std::fs::read(dir2.join("site_sweep_summary.csv")).unwrap()

@@ -3,15 +3,12 @@
 //! and bit-exact reproducibility of the summary across runs and worker
 //! counts.
 
-// Deliberately still on the deprecated run_* wrappers: doubles as
-// compile-and-run coverage that they keep reaching the same engines the
-// unified `api` routes through.
-#![allow(deprecated)]
-
 use powertrace_sim::aggregate::Topology;
+use powertrace_sim::api::{self, RunKind, RunOptions, RunOutcome, RunRequest, RunSpec};
 use powertrace_sim::config::{ServerAssignment, WorkloadSpec};
 use powertrace_sim::coordinator::Generator;
-use powertrace_sim::scenarios::{run_sweep, run_sweep_to, GridDefaults, SweepGrid, SweepOptions};
+use powertrace_sim::export::DirSink;
+use powertrace_sim::scenarios::{GridDefaults, SweepGrid, SweepReport};
 use powertrace_sim::testutil::synth_generator;
 
 fn generator() -> Option<Generator> {
@@ -21,6 +18,18 @@ fn generator() -> Option<Generator> {
             eprintln!("skipping sweep integration tests: {e:#}");
             None
         }
+    }
+}
+
+fn sweep_defaults() -> RunOptions {
+    RunOptions::defaults_for(RunKind::Sweep)
+}
+
+fn run(gen: &mut Generator, grid: &SweepGrid, options: RunOptions) -> SweepReport {
+    let req = RunRequest { spec: RunSpec::Sweep(grid.clone()), options };
+    match api::execute(gen, &req, None).unwrap() {
+        RunOutcome::Sweep(r) => r,
+        _ => unreachable!(),
     }
 }
 
@@ -43,8 +52,7 @@ fn sweep_runs_and_exports_every_scale() {
     let Some(mut gen) = generator() else { return };
     let ids = gen.store.manifest.configs.clone();
     let grid = small_grid(&ids);
-    let opts = SweepOptions { dt_s: 0.25, ..SweepOptions::default() };
-    let report = run_sweep(&mut gen, &grid, &opts).unwrap();
+    let report = run(&mut gen, &grid, sweep_defaults().with_dt(0.25));
     assert_eq!(report.cells.len(), 4);
     for c in &report.cells {
         // 60 s horizon: 2 racks @1s → 60 pts, 1 row @15s → 4 pts,
@@ -68,11 +76,10 @@ fn sweep_summary_is_reproducible_across_runs_and_worker_counts() {
     let Some(mut gen) = generator() else { return };
     let ids = gen.store.manifest.configs.clone();
     let grid = small_grid(&ids);
-    let a = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    let a = run(&mut gen, &grid, sweep_defaults());
     // Different parallelism layout, fresh generator: same bytes.
     let mut gen2 = generator().unwrap();
-    let opts2 = SweepOptions { scenario_workers: 1, server_workers: 2, ..SweepOptions::default() };
-    let b = run_sweep(&mut gen2, &grid, &opts2).unwrap();
+    let b = run(&mut gen2, &grid, sweep_defaults().with_workers(1).with_server_workers(2));
     assert_eq!(a.summary_csv(), b.summary_csv());
     for (x, y) in a.cells.iter().zip(&b.cells) {
         let (xs, ys) = (x.scales.as_ref().unwrap(), y.scales.as_ref().unwrap());
@@ -99,9 +106,8 @@ fn sweep_batched_output_matches_sequential_bytes() {
         fleets: vec![ServerAssignment::Uniform(ids[0].clone())],
         seeds: vec![3, 4],
     };
-    let seq_opts = SweepOptions { max_batch: 1, ..SweepOptions::default() };
-    let a = run_sweep(&mut gen, &grid, &seq_opts).unwrap();
-    let b = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    let a = run(&mut gen, &grid, sweep_defaults().with_max_batch(1));
+    let b = run(&mut gen, &grid, sweep_defaults());
     assert_eq!(a.summary_csv(), b.summary_csv());
     for (x, y) in a.cells.iter().zip(&b.cells) {
         let (xs, ys) = (x.scales.as_ref().unwrap(), y.scales.as_ref().unwrap());
@@ -114,10 +120,10 @@ fn sweep_batched_output_matches_sequential_bytes() {
 #[test]
 fn streamed_sweep_export_is_byte_identical_to_buffered() {
     // The streaming-export acceptance invariant: for a horizon both paths
-    // can hold, `run_sweep_to` with a window must leave byte-identical
-    // files on disk — summary.csv (exact-quantile fallback ⇒ identical
-    // stats), grid.json, every scenario.json, and every incremental
-    // rack/row/facility series CSV.
+    // can hold, a windowed `api::execute` against a directory sink must
+    // leave byte-identical files on disk — summary.csv (exact-quantile
+    // fallback ⇒ identical stats), grid.json, every scenario.json, and
+    // every incremental rack/row/facility series CSV.
     let (mut gen, ids) = synth_generator("sweep_stream_parity", 8, 4, 1, 31).unwrap();
     let grid = SweepGrid {
         name: "stream-parity".into(),
@@ -135,13 +141,22 @@ fn streamed_sweep_export_is_byte_identical_to_buffered() {
     let _ = std::fs::remove_dir_all(&dir_buf);
     let _ = std::fs::remove_dir_all(&dir_str);
 
-    let buffered = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    let buffered = run(&mut gen, &grid, sweep_defaults());
     buffered.write(&dir_buf).unwrap();
 
     // 7 s windows: 60 s / 0.25 s = 240 steps = 8×28 + 16 → ragged tail.
-    let opts = SweepOptions { window_s: 7.0, ..SweepOptions::default() };
-    let streamed = run_sweep_to(&mut gen, &grid, &opts, Some(&dir_str)).unwrap();
-    streamed.write(&dir_str).unwrap();
+    // `api::execute` with a sink streams the incremental series through it
+    // and then writes the one-shot artifacts (grid.json, summary.csv,
+    // per-cell scenario.json) to the same sink — no separate write() call.
+    std::fs::create_dir_all(&dir_str).unwrap();
+    let req = RunRequest {
+        spec: RunSpec::Sweep(grid.clone()),
+        options: sweep_defaults().with_window(7.0),
+    };
+    let sink = DirSink::new(&dir_str);
+    let RunOutcome::Sweep(streamed) = api::execute(&mut gen, &req, Some(&sink)).unwrap() else {
+        unreachable!()
+    };
 
     for (b, s) in buffered.cells.iter().zip(&streamed.cells) {
         assert!(s.scales.is_none(), "streamed cells must not buffer series");
@@ -173,7 +188,7 @@ fn sweep_shares_prepared_configs_across_cells() {
     let Some(mut gen) = generator() else { return };
     let ids = gen.store.manifest.configs.clone();
     let grid = small_grid(&ids);
-    run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    run(&mut gen, &grid, sweep_defaults());
     // The one config the grid references is prepared, and re-preparing
     // returns the same shared instance (pointer equality on the Arc).
     let p1 = gen.get_prepared(&ids[0]).expect("prepared by the sweep");
@@ -186,7 +201,7 @@ fn sweep_report_write_creates_full_tree() {
     let Some(mut gen) = generator() else { return };
     let ids = gen.store.manifest.configs.clone();
     let grid = small_grid(&ids);
-    let report = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    let report = run(&mut gen, &grid, sweep_defaults());
     let dir = std::env::temp_dir().join("powertrace_test_sweep_report");
     let _ = std::fs::remove_dir_all(&dir);
     report.write(&dir).unwrap();

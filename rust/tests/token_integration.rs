@@ -15,14 +15,12 @@
 //!   sharing one trace path parse it exactly once, even under concurrent
 //!   facility runs.
 
-// Deliberately still on the deprecated run_* wrappers: doubles as
-// compile-and-run coverage that they keep reaching the same engines the
-// unified `api` routes through.
-#![allow(deprecated)]
-
 use powertrace_sim::aggregate::Topology;
+use powertrace_sim::api::{self, RunKind, RunOptions, RunOutcome, RunRequest, RunSpec};
 use powertrace_sim::config::{ScenarioSpec, ServerAssignment, WorkloadSpec};
-use powertrace_sim::scenarios::{run_sweep, run_sweep_to, GridDefaults, SweepGrid, SweepOptions};
+use powertrace_sim::coordinator::Generator;
+use powertrace_sim::export::DirSink;
+use powertrace_sim::scenarios::{GridDefaults, SweepGrid, SweepReport};
 use powertrace_sim::surrogate::features::{features_interleaved_into, OccupancyEvents};
 use powertrace_sim::surrogate::queue::max_concurrency;
 use powertrace_sim::surrogate::{
@@ -33,6 +31,18 @@ use powertrace_sim::util::rng::Rng;
 use powertrace_sim::workload::{
     poisson_arrivals, token_arrivals, total_tokens, LengthSampler, TokenLengths,
 };
+
+fn sweep_defaults() -> RunOptions {
+    RunOptions::defaults_for(RunKind::Sweep)
+}
+
+fn run(gen: &mut Generator, grid: &SweepGrid, options: RunOptions) -> SweepReport {
+    let req = RunRequest { spec: RunSpec::Sweep(grid.clone()), options };
+    match api::execute(gen, &req, None).unwrap() {
+        RunOutcome::Sweep(r) => r,
+        _ => unreachable!(),
+    }
+}
 
 /// Deterministic surrogate (σ = 0 everywhere): TTFT depends only on
 /// `n_in`, and decode time is exactly `n_out × 0.01 s` — so intervals
@@ -276,7 +286,7 @@ fn token_sweep_exports_are_byte_identical_across_windows_and_workers() {
     let grid = token_grid(&ids[0]);
     let dir_buf = std::env::temp_dir().join("powertrace_test_token_sweep_buffered");
     let _ = std::fs::remove_dir_all(&dir_buf);
-    let buffered = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    let buffered = run(&mut gen, &grid, sweep_defaults());
     buffered.write(&dir_buf).unwrap();
     let cell_files =
         ["scenario.json", "racks_1s.csv", "rows_15s.csv", "facility_300s.csv", "facility_900s.csv"];
@@ -288,14 +298,19 @@ fn token_sweep_exports_are_byte_identical_across_windows_and_workers() {
     {
         let dir = std::env::temp_dir().join(format!("powertrace_test_token_sweep_{li}"));
         let _ = std::fs::remove_dir_all(&dir);
-        let opts = SweepOptions {
-            window_s,
-            scenario_workers: 1,
-            server_workers: workers,
-            ..SweepOptions::default()
+        std::fs::create_dir_all(&dir).unwrap();
+        let req = RunRequest {
+            spec: RunSpec::Sweep(grid.clone()),
+            options: sweep_defaults()
+                .with_window(window_s)
+                .with_workers(1)
+                .with_server_workers(workers),
         };
-        let streamed = run_sweep_to(&mut gen, &grid, &opts, Some(&dir)).unwrap();
-        streamed.write(&dir).unwrap();
+        let sink = DirSink::new(&dir);
+        let RunOutcome::Sweep(streamed) = api::execute(&mut gen, &req, Some(&sink)).unwrap()
+        else {
+            unreachable!()
+        };
         assert_eq!(
             buffered.summary_csv(),
             streamed.summary_csv(),
@@ -402,10 +417,9 @@ fn replay_sweep_over_the_fixture_is_deterministic() {
         fleets: vec![ServerAssignment::Uniform(ids[0].clone())],
         seeds: vec![0, 1],
     };
-    let opts = SweepOptions { scenario_workers: 2, ..SweepOptions::default() };
-    let a = run_sweep(&mut gen, &grid, &opts).unwrap();
+    let a = run(&mut gen, &grid, sweep_defaults().with_workers(2));
     assert_eq!(a.cells.len(), 6);
     assert_eq!(gen.cached_replay_paths(), 1, "all six cells share one parsed trace");
-    let b = run_sweep(&mut gen, &grid, &SweepOptions::default()).unwrap();
+    let b = run(&mut gen, &grid, sweep_defaults());
     assert_eq!(a.summary_csv(), b.summary_csv(), "replay sweep must be reproducible");
 }
